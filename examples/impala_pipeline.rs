@@ -1,0 +1,26 @@
+//! IMPALA on CartPole: async rollouts feed a V-trace learner (the
+//! Pallas `vtrace` kernel inside the `impala_grad` artifact corrects
+//! for policy lag).
+//!
+//! ```bash
+//! cargo run --release --example impala_pipeline
+//! ```
+
+use flowrl::algorithms::{impala_plan, TrainerConfig};
+
+fn main() {
+    let config = TrainerConfig {
+        num_workers: 4,
+        lr: 2e-3,
+        num_async: 2,
+        ..TrainerConfig::default()
+    };
+
+    let mut train = impala_plan(&config);
+    for i in 0..100 {
+        let r = train.next().expect("stream ended");
+        if i % 10 == 0 {
+            println!("iter {i:3}  {r}");
+        }
+    }
+}

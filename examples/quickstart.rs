@@ -1,0 +1,31 @@
+//! Quickstart: train PPO on CartPole for a handful of iterations.
+//!
+//! ```bash
+//! make artifacts              # once: AOT-compile the JAX/Pallas model
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! The whole training program is a lazy dataflow plan; each `next()`
+//! drives one report's worth of the pipeline.
+
+use flowrl::algorithms::{ppo_plan, TrainerConfig};
+
+fn main() {
+    let config = TrainerConfig {
+        num_workers: 2,
+        num_envs_per_worker: 4,
+        rollout_fragment_length: 32,
+        train_batch_size: 256,
+        lr: 5e-3,
+        ..TrainerConfig::default()
+    };
+
+    // Build the plan (nothing runs yet — iterators are lazy)...
+    let mut train = ppo_plan(&config);
+
+    // ...then drive it.
+    for i in 0..20 {
+        let result = train.next().expect("training stream ended");
+        println!("iter {i:3}  {result}");
+    }
+}

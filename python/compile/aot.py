@@ -1,0 +1,210 @@
+"""AOT lowering: every L2 computation -> artifacts/*.hlo.txt + manifest.json.
+
+HLO *text* (not `.serialize()`): jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids which xla_extension 0.5.1 (the version the rust
+`xla` crate links) rejects; the text parser reassigns ids and round-trips
+cleanly.  See /opt/xla-example/README.md.
+
+Run once via `make artifacts`; python never runs on the training path.
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import config, model
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _dtype_name(dtype):
+    return {jnp.float32: "f32", jnp.int32: "i32"}[dtype]
+
+
+def build_entries():
+    """(name, fn, [(input_name, shape, dtype)], [output_name]) per artifact."""
+    p = config.PG_PARAM_SIZE
+    pd = config.DQN_PARAM_SIZE
+    o = config.OBS_DIM
+    bi = config.INF_BATCH
+    entries = []
+
+    entries.append((
+        "pg_fwd", model.pg_fwd,
+        [("params", (p,), F32), ("obs", (bi, o), F32)],
+        ["logits", "value"],
+    ))
+    entries.append((
+        "dqn_q_fwd", model.dqn_q,
+        [("params", (pd,), F32), ("obs", (bi, o), F32)],
+        ["qvalues"],
+    ))
+
+    def train_inputs(n, extra=()):
+        base = [("params", (p,), F32), ("obs", (n, o), F32),
+                ("actions", (n,), I32)]
+        base.extend(extra)
+        return base
+
+    n = config.A2C_TRAIN_BATCH
+    entries.append((
+        "a2c_grad", model.a2c_grad,
+        train_inputs(n, [("advantages", (n,), F32),
+                         ("value_targets", (n,), F32), ("mask", (n,), F32)]),
+        ["grads", "loss", "pi_loss", "vf_loss", "entropy"],
+    ))
+
+    # A3C computes gradients per worker fragment, not per concat batch.
+    nf = config.FRAGMENT
+    entries.append((
+        "a3c_grad", model.a2c_grad,
+        [("params", (p,), F32), ("obs", (nf, o), F32),
+         ("actions", (nf,), I32), ("advantages", (nf,), F32),
+         ("value_targets", (nf,), F32), ("mask", (nf,), F32)],
+        ["grads", "loss", "pi_loss", "vf_loss", "entropy"],
+    ))
+
+    n = config.PPO_MINIBATCH
+    entries.append((
+        "ppo_grad", model.ppo_grad,
+        [("params", (p,), F32), ("obs", (n, o), F32), ("actions", (n,), I32),
+         ("old_logp", (n,), F32), ("advantages", (n,), F32),
+         ("value_targets", (n,), F32), ("mask", (n,), F32)],
+        ["grads", "loss", "pi_loss", "vf_loss", "entropy", "kl"],
+    ))
+
+    n = config.DQN_MINIBATCH
+    entries.append((
+        "dqn_grad", model.dqn_grad,
+        [("params", (pd,), F32), ("target_params", (pd,), F32),
+         ("obs", (n, o), F32), ("actions", (n,), I32),
+         ("rewards", (n,), F32), ("next_obs", (n, o), F32),
+         ("dones", (n,), F32), ("weights", (n,), F32), ("mask", (n,), F32)],
+        ["grads", "loss", "td_abs"],
+    ))
+
+    t, b = config.IMPALA_T, config.IMPALA_B
+    entries.append((
+        "impala_grad", model.impala_grad,
+        [("params", (p,), F32), ("obs", (t, b, o), F32),
+         ("actions", (t, b), I32), ("behaviour_logp", (t, b), F32),
+         ("rewards", (t, b), F32), ("dones", (t, b), F32),
+         ("bootstrap_obs", (b, o), F32), ("mask", (t, b), F32)],
+        ["grads", "loss", "pi_loss", "vf_loss", "entropy"],
+    ))
+
+    for name, size in (("adam_pg", p), ("adam_dqn", pd)):
+        entries.append((
+            name, model.adam_apply,
+            [("params", (size,), F32), ("grads", (size,), F32),
+             ("m", (size,), F32), ("v", (size,), F32),
+             ("t", (), F32), ("lr", (), F32)],
+            ["params", "m", "v"],
+        ))
+
+    entries.append((
+        "sgd_pg", model.sgd_apply,
+        [("params", (p,), F32), ("grads", (p,), F32), ("lr", (), F32)],
+        ["params"],
+    ))
+    return entries
+
+
+def lower_all(out_dir, verbose=True):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "config": {
+            "obs_dim": config.OBS_DIM,
+            "num_actions": config.NUM_ACTIONS,
+            "hidden": list(config.HIDDEN),
+            "inf_batch": config.INF_BATCH,
+            "a2c_train_batch": config.A2C_TRAIN_BATCH,
+            "fragment": config.FRAGMENT,
+            "ppo_minibatch": config.PPO_MINIBATCH,
+            "dqn_minibatch": config.DQN_MINIBATCH,
+            "impala_t": config.IMPALA_T,
+            "impala_b": config.IMPALA_B,
+            "gamma": config.GAMMA,
+            "gae_lambda": config.GAE_LAMBDA,
+            "ppo_clip": config.PPO_CLIP,
+            "pg_param_size": config.PG_PARAM_SIZE,
+            "dqn_param_size": config.DQN_PARAM_SIZE,
+        },
+        "executables": {},
+    }
+
+    for name, fn, inputs, outputs in build_entries():
+        in_specs = [spec(shape, dtype) for _, shape, dtype in inputs]
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["executables"][name] = {
+            "file": fname,
+            "inputs": [
+                {"name": n, "shape": list(shape), "dtype": _dtype_name(d)}
+                for n, shape, d in inputs
+            ],
+            "outputs": outputs,
+        }
+        if verbose:
+            print(f"  lowered {name:12s} -> {fname} ({len(text)} chars)")
+
+    # Initial parameters (so rust matches the jax init exactly).
+    key = jax.random.PRNGKey(0)
+    k_pg, k_dqn = jax.random.split(key)
+    for name, flat in (
+        ("init_pg", model.init_flat(k_pg, config.PG_SHAPES)),
+        ("init_dqn", model.init_flat(k_dqn, config.DQN_SHAPES)),
+    ):
+        arr = np.asarray(flat, dtype=np.float32)
+        arr.tofile(os.path.join(out_dir, f"{name}.bin"))
+        manifest[name] = {"file": f"{name}.bin", "len": int(arr.size)}
+        if verbose:
+            print(f"  wrote {name}.bin ({arr.size} f32)")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    if verbose:
+        print(f"  wrote manifest.json ({len(manifest['executables'])} exes)")
+    return manifest
+
+
+def main():
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument("--obs-dim", type=int, default=None,
+                        help="override observation dim (default 4, CartPole)")
+    parser.add_argument("--num-actions", type=int, default=None,
+                        help="override action count (default 2)")
+    parser.add_argument("--hidden", type=int, nargs="*", default=None,
+                        help="override hidden widths (default 64 64)")
+    args = parser.parse_args()
+    if (args.obs_dim, args.num_actions, args.hidden) != (None, None, None):
+        config.apply_overrides(args.obs_dim, args.num_actions, args.hidden)
+    lower_all(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

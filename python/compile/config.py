@@ -1,0 +1,89 @@
+"""Build-time configuration for all AOT artifacts.
+
+Every shape and hyperparameter baked into the HLO artifacts is defined
+here and recorded into artifacts/manifest.json so the rust runtime can
+marshal tensors without guessing.  The rust side pads variable-length
+fragments up to these static shapes and passes an explicit `mask` input
+so padding never contributes to losses.
+"""
+
+# Environment interface (CartPole-v0/v1 physics port on the rust side).
+OBS_DIM = 4
+NUM_ACTIONS = 2
+
+# Policy/value trunk.
+HIDDEN = (64, 64)
+
+# Inference batch for rollout workers (vectorized env width; rust pads).
+INF_BATCH = 8
+
+# Training batch shapes, per algorithm family.
+A2C_TRAIN_BATCH = 256   # ConcatBatches target for A2C; A3C uses FRAGMENT
+FRAGMENT = 64           # rollout_fragment_length (per-worker sample size)
+PPO_MINIBATCH = 128
+DQN_MINIBATCH = 64
+IMPALA_T = 20           # time dimension of an IMPALA learner batch
+IMPALA_B = 8            # batch lanes of an IMPALA learner batch
+
+# Numerics baked into the losses.
+GAMMA = 0.99
+GAE_LAMBDA = 0.95       # used by the rust-side GAE; recorded for parity
+PPO_CLIP = 0.2
+VF_COEFF = 0.5
+ENT_COEFF = 0.01
+HUBER_DELTA = 1.0
+VTRACE_RHO_CLIP = 1.0
+VTRACE_C_CLIP = 1.0
+
+# Pallas block-shape targets (largest divisor of the dim <= target is used;
+# see kernels/fused_linear.py::pick_block).  128 targets the MXU tile edge.
+BLOCK_M = 128
+BLOCK_N = 128
+
+
+def mlp_layer_shapes(in_dim, hidden, head_dims):
+    """[(w_shape, b_shape), ...] for trunk layers followed by parallel heads.
+
+    Trunk: in_dim -> hidden[0] -> hidden[1] ...; each head maps the last
+    hidden width to one of head_dims.
+    """
+    shapes = []
+    d = in_dim
+    for h in hidden:
+        shapes.append(((d, h), (h,)))
+        d = h
+    for out in head_dims:
+        shapes.append(((d, out), (out,)))
+    return shapes
+
+
+def param_size(shapes):
+    n = 0
+    for w, b in shapes:
+        n += w[0] * w[1] + b[0]
+    return n
+
+
+PG_SHAPES = mlp_layer_shapes(OBS_DIM, HIDDEN, [NUM_ACTIONS, 1])
+PG_PARAM_SIZE = param_size(PG_SHAPES)
+
+DQN_SHAPES = mlp_layer_shapes(OBS_DIM, HIDDEN, [NUM_ACTIONS])
+DQN_PARAM_SIZE = param_size(DQN_SHAPES)
+
+
+def apply_overrides(obs_dim=None, num_actions=None, hidden=None):
+    """Re-derive the model geometry (aot.py --obs-dim/--num-actions/
+    --hidden): one artifact set serves one geometry, so alternative envs
+    (e.g. MountainCar: obs 2, actions 3) build into their own dir."""
+    global OBS_DIM, NUM_ACTIONS, HIDDEN
+    global PG_SHAPES, PG_PARAM_SIZE, DQN_SHAPES, DQN_PARAM_SIZE
+    if obs_dim is not None:
+        OBS_DIM = obs_dim
+    if num_actions is not None:
+        NUM_ACTIONS = num_actions
+    if hidden is not None:
+        HIDDEN = tuple(hidden)
+    PG_SHAPES = mlp_layer_shapes(OBS_DIM, HIDDEN, [NUM_ACTIONS, 1])
+    PG_PARAM_SIZE = param_size(PG_SHAPES)
+    DQN_SHAPES = mlp_layer_shapes(OBS_DIM, HIDDEN, [NUM_ACTIONS])
+    DQN_PARAM_SIZE = param_size(DQN_SHAPES)

@@ -1,0 +1,132 @@
+"""Pallas fused dense layer: act(x @ w + b) with a custom VJP.
+
+This is the L1 hot-spot of the policy networks: every trunk/head layer of
+every policy and every loss goes through this kernel, so it dominates the
+MACs of the whole system.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid tiles
+[B, IN] x [IN, OUT] into VMEM-resident blocks via BlockSpec; the matmul
+accumulates in f32 targeting the MXU; bias-add and the activation are
+fused into the epilogue while the output tile is still in VMEM, saving an
+HBM round-trip per layer.  K (=IN) is deliberately unsplit: policy nets
+have IN <= 64, so one MXU pass consumes the whole contraction.
+
+The backward pass reuses the same tiled-matmul structure (`matmul`) for
+dx = dz @ w^T and dw = x^T @ dz, with the activation derivative applied
+elementwise from the forward residual.
+
+interpret=True everywhere: real-TPU lowering emits a Mosaic custom-call
+the CPU PJRT plugin cannot execute (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def pick_block(dim, target):
+    """Largest divisor of `dim` that is <= target (so grids tile exactly)."""
+    if dim <= target:
+        return dim
+    for cand in range(target, 0, -1):
+        if dim % cand == 0:
+            return cand
+    return dim
+
+
+def _act(y, activation):
+    if activation == "tanh":
+        return jnp.tanh(y)
+    if activation == "relu":
+        return jnp.maximum(y, 0.0)
+    if activation == "linear":
+        return y
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def _fused_linear_kernel(x_ref, w_ref, b_ref, o_ref, *, activation):
+    # One (bm, bn) output tile: whole-K matmul + fused bias/activation
+    # epilogue while the tile lives in VMEM.
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...].astype(jnp.float32)[None, :]
+    o_ref[...] = _act(acc, activation).astype(o_ref.dtype)
+
+
+def _fused_linear_pallas(x, w, b, activation, block_m=128, block_n=128):
+    batch, in_dim = x.shape
+    in_dim2, out_dim = w.shape
+    assert in_dim == in_dim2 and b.shape == (out_dim,)
+    bm = pick_block(batch, block_m)
+    bn = pick_block(out_dim, block_n)
+    grid = (batch // bm, out_dim // bn)
+    return pl.pallas_call(
+        functools.partial(_fused_linear_kernel, activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, in_dim), lambda i, j: (i, 0)),
+            pl.BlockSpec((in_dim, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((batch, out_dim), x.dtype),
+        interpret=True,
+    )(x, w, b)
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def matmul(a, b, block_m=128, block_n=128):
+    """Tiled Pallas matmul (whole-K); used by the fused_linear backward."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    bm = pick_block(m, block_m)
+    bn = pick_block(n, block_n)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=True,
+    )(a, b)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def fused_linear(x, w, b, activation="tanh"):
+    """act(x @ w + b) as a Pallas kernel, differentiable via custom VJP."""
+    return _fused_linear_pallas(x, w, b, activation)
+
+
+def _fused_linear_fwd(x, w, b, activation):
+    y = _fused_linear_pallas(x, w, b, activation)
+    return y, (x, w, y)
+
+
+def _fused_linear_bwd(activation, residuals, dy):
+    x, w, y = residuals
+    if activation == "tanh":
+        dz = dy * (1.0 - y * y)
+    elif activation == "relu":
+        dz = dy * (y > 0).astype(dy.dtype)
+    elif activation == "linear":
+        dz = dy
+    else:  # pragma: no cover - guarded at fwd time
+        raise ValueError(activation)
+    dx = matmul(dz, w.T)
+    dw = matmul(x.T, dz)
+    db = jnp.sum(dz, axis=0)
+    return dx, dw, db
+
+
+fused_linear.defvjp(_fused_linear_fwd, _fused_linear_bwd)

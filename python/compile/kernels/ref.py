@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references: every Pallas kernel in this package
+must match its `*_ref` counterpart to numerical tolerance (pytest +
+hypothesis sweeps in python/tests/test_kernels.py).
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def apply_activation(y, activation):
+    if activation == "tanh":
+        return jnp.tanh(y)
+    if activation == "relu":
+        return jnp.maximum(y, 0.0)
+    if activation == "linear":
+        return y
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def fused_linear_ref(x, w, b, activation="tanh"):
+    """act(x @ w + b) — the oracle for kernels.fused_linear."""
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b
+    return apply_activation(y, activation).astype(x.dtype)
+
+
+def matmul_ref(a, b):
+    """a @ b — the oracle for kernels.matmul."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def vtrace_ref(log_rhos, discounts, rewards, values, bootstrap_value,
+               rho_clip=1.0, c_clip=1.0):
+    """V-trace targets and policy-gradient advantages (Espeholt et al. 2018).
+
+    Args (all [T, B] except bootstrap_value [B]):
+      log_rhos:  log(pi_target(a|s) / pi_behaviour(a|s))
+      discounts: gamma * (1 - done)
+      rewards, values: environment rewards, critic values under pi_target
+    Returns (vs [T, B], pg_advantages [T, B]).
+    """
+    rhos = jnp.minimum(jnp.exp(log_rhos), rho_clip)
+    cs = jnp.minimum(jnp.exp(log_rhos), c_clip)
+    values_tp1 = jnp.concatenate([values[1:], bootstrap_value[None]], axis=0)
+    deltas = rhos * (rewards + discounts * values_tp1 - values)
+
+    def scan_fn(acc, xs):
+        delta_t, discount_t, c_t = xs
+        acc = delta_t + discount_t * c_t * acc
+        return acc, acc
+
+    _, vs_minus_v = lax.scan(
+        scan_fn,
+        jnp.zeros_like(bootstrap_value),
+        (deltas, discounts, cs),
+        reverse=True,
+    )
+    vs = vs_minus_v + values
+    vs_tp1 = jnp.concatenate([vs[1:], bootstrap_value[None]], axis=0)
+    pg_advantages = rhos * (rewards + discounts * vs_tp1 - values)
+    return vs, pg_advantages

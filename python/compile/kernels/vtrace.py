@@ -1,0 +1,75 @@
+"""Pallas V-trace kernel: IMPALA's off-policy return correction.
+
+The recurrence vs_t = V(s_t) + delta_t + gamma_t * c_t * (vs_{t+1} -
+V(s_{t+1})) is sequential in T but embarrassingly parallel in B.  The
+kernel grid therefore tiles the batch dimension only; the T loop runs
+*inside* the kernel with the carry held in VMEM-resident values — the TPU
+analog of how the GPU reference keeps the recurrence in registers
+(DESIGN.md §Hardware-Adaptation).  T is static, so the loop unrolls into
+straight-line HLO.
+
+V-trace outputs are used as stop-gradient constants in the IMPALA loss
+(the paper's/IMPALA's convention), so no VJP is defined — callers wrap
+the results in lax.stop_gradient.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .fused_linear import pick_block
+
+
+def _vtrace_kernel(log_rhos_ref, discounts_ref, rewards_ref, values_ref,
+                   bootstrap_ref, vs_ref, pg_adv_ref, *, rho_clip, c_clip):
+    log_rhos = log_rhos_ref[...]
+    discounts = discounts_ref[...]
+    rewards = rewards_ref[...]
+    values = values_ref[...]
+    bootstrap = bootstrap_ref[...]
+
+    rhos = jnp.minimum(jnp.exp(log_rhos), rho_clip)
+    cs = jnp.minimum(jnp.exp(log_rhos), c_clip)
+
+    t_len = log_rhos.shape[0]
+    # Backward recurrence, carry in VMEM-resident values (unrolled: T static).
+    acc = jnp.zeros_like(bootstrap)
+    vs_minus_v = [None] * t_len
+    for t in reversed(range(t_len)):
+        v_tp1 = bootstrap if t == t_len - 1 else values[t + 1]
+        delta = rhos[t] * (rewards[t] + discounts[t] * v_tp1 - values[t])
+        acc = delta + discounts[t] * cs[t] * acc
+        vs_minus_v[t] = acc
+    vs = jnp.stack(vs_minus_v, axis=0) + values
+
+    # Forward pass for policy-gradient advantages against the vs targets.
+    vs_tp1 = jnp.concatenate([vs[1:], bootstrap[None]], axis=0)
+    pg_adv = rhos * (rewards + discounts * vs_tp1 - values)
+
+    vs_ref[...] = vs.astype(vs_ref.dtype)
+    pg_adv_ref[...] = pg_adv.astype(pg_adv_ref.dtype)
+
+
+def vtrace(log_rhos, discounts, rewards, values, bootstrap_value,
+           rho_clip=1.0, c_clip=1.0, block_b=128):
+    """V-trace targets vs[T,B] and pg_advantages[T,B] (Pallas kernel).
+
+    All inputs [T, B] except bootstrap_value [B].  Matches
+    ref.vtrace_ref to float tolerance.
+    """
+    t_len, batch = log_rhos.shape
+    bb = pick_block(batch, block_b)
+    grid = (batch // bb,)
+    tb_spec = pl.BlockSpec((t_len, bb), lambda i: (0, i))
+    b_spec = pl.BlockSpec((bb,), lambda i: (i,))
+    out_shape = jax.ShapeDtypeStruct((t_len, batch), values.dtype)
+    return pl.pallas_call(
+        functools.partial(_vtrace_kernel, rho_clip=rho_clip, c_clip=c_clip),
+        grid=grid,
+        in_specs=[tb_spec, tb_spec, tb_spec, tb_spec, b_spec],
+        out_specs=[tb_spec, tb_spec],
+        out_shape=[out_shape, out_shape],
+        interpret=True,
+    )(log_rhos, discounts, rewards, values, bootstrap_value)

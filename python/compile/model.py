@@ -1,0 +1,266 @@
+"""L2: policy/value networks and losses over flat parameter vectors.
+
+Every network is a function of a single flat f32[P] parameter vector (the
+rust side stores parameters as one contiguous buffer — `FlatParams`); the
+layer structure from config.mlp_layer_shapes is unflattened internally.
+All dense layers go through the L1 Pallas kernel `fused_linear`.
+
+Exported computations (lowered to HLO text by aot.py):
+  pg_fwd       (params, obs)                       -> (logits, value)
+  dqn_q        (params, obs)                       -> qvalues
+  a2c_grad     (params, batch...)                  -> (grads, stats...)
+  ppo_grad     (params, batch...)                  -> (grads, stats...)
+  dqn_grad     (params, target_params, batch...)   -> (grads, loss, |td|)
+  impala_grad  (params, T x B batch...)            -> (grads, stats...)
+  adam_apply_* (params, grads, m, v, t, lr)        -> (params, m, v)
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import config
+from .kernels.fused_linear import fused_linear
+from .kernels.vtrace import vtrace
+
+
+# ---------------------------------------------------------------------------
+# Flat-parameter plumbing
+# ---------------------------------------------------------------------------
+
+def unflatten(flat, shapes):
+    """Split a flat f32[P] vector into [(w, b), ...] per config shapes."""
+    layers = []
+    off = 0
+    for w_shape, b_shape in shapes:
+        w_n = w_shape[0] * w_shape[1]
+        w = flat[off:off + w_n].reshape(w_shape)
+        off += w_n
+        b = flat[off:off + b_shape[0]]
+        off += b_shape[0]
+        layers.append((w, b))
+    return layers
+
+
+def init_flat(key, shapes, scale=None):
+    """He-style init, returned already flattened."""
+    parts = []
+    for w_shape, b_shape in shapes:
+        key, sub = jax.random.split(key)
+        std = scale if scale is not None else (2.0 / w_shape[0]) ** 0.5
+        w = jax.random.normal(sub, w_shape, dtype=jnp.float32) * std
+        parts.append(w.reshape(-1))
+        parts.append(jnp.zeros(b_shape, dtype=jnp.float32))
+    return jnp.concatenate(parts)
+
+
+# ---------------------------------------------------------------------------
+# Networks
+# ---------------------------------------------------------------------------
+
+def pg_net(flat_params, obs):
+    """Shared-trunk actor-critic: obs -> (logits[B, A], value[B])."""
+    layers = unflatten(flat_params, config.PG_SHAPES)
+    n_trunk = len(config.HIDDEN)
+    h = obs
+    for w, b in layers[:n_trunk]:
+        h = fused_linear(h, w, b, "tanh")
+    logits_w, logits_b = layers[n_trunk]
+    value_w, value_b = layers[n_trunk + 1]
+    logits = fused_linear(h, logits_w, logits_b, "linear")
+    value = fused_linear(h, value_w, value_b, "linear")[:, 0]
+    return logits, value
+
+
+def dqn_net(flat_params, obs):
+    """Q-network: obs -> qvalues[B, A]."""
+    layers = unflatten(flat_params, config.DQN_SHAPES)
+    n_trunk = len(config.HIDDEN)
+    h = obs
+    for w, b in layers[:n_trunk]:
+        h = fused_linear(h, w, b, "tanh")
+    q_w, q_b = layers[n_trunk]
+    return fused_linear(h, q_w, q_b, "linear")
+
+
+def pg_fwd(params, obs):
+    logits, value = pg_net(params, obs)
+    return logits, value
+
+
+def dqn_q(params, obs):
+    return (dqn_net(params, obs),)
+
+
+# ---------------------------------------------------------------------------
+# Loss helpers
+# ---------------------------------------------------------------------------
+
+def _masked_mean(x, mask):
+    return jnp.sum(x * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def _logp_entropy(logits, actions):
+    logp_all = jax.nn.log_softmax(logits)
+    p_all = jax.nn.softmax(logits)
+    logp = jnp.take_along_axis(logp_all, actions[:, None], axis=1)[:, 0]
+    entropy = -jnp.sum(p_all * logp_all, axis=1)
+    return logp, entropy
+
+
+# ---------------------------------------------------------------------------
+# A2C / A3C
+# ---------------------------------------------------------------------------
+
+def a2c_loss(params, obs, actions, advantages, value_targets, mask):
+    logits, value = pg_net(params, obs)
+    logp, entropy = _logp_entropy(logits, actions)
+    pi_loss = -_masked_mean(logp * advantages, mask)
+    vf_loss = 0.5 * _masked_mean((value - value_targets) ** 2, mask)
+    ent = _masked_mean(entropy, mask)
+    loss = pi_loss + config.VF_COEFF * vf_loss - config.ENT_COEFF * ent
+    return loss, (pi_loss, vf_loss, ent)
+
+
+def a2c_grad(params, obs, actions, advantages, value_targets, mask):
+    (loss, (pi, vf, ent)), grads = jax.value_and_grad(a2c_loss, has_aux=True)(
+        params, obs, actions, advantages, value_targets, mask)
+    return grads, loss, pi, vf, ent
+
+
+# ---------------------------------------------------------------------------
+# PPO
+# ---------------------------------------------------------------------------
+
+def ppo_loss(params, obs, actions, old_logp, advantages, value_targets, mask):
+    logits, value = pg_net(params, obs)
+    logp, entropy = _logp_entropy(logits, actions)
+    ratio = jnp.exp(logp - old_logp)
+    clipped = jnp.clip(ratio, 1.0 - config.PPO_CLIP, 1.0 + config.PPO_CLIP)
+    surrogate = jnp.minimum(ratio * advantages, clipped * advantages)
+    pi_loss = -_masked_mean(surrogate, mask)
+    vf_loss = 0.5 * _masked_mean((value - value_targets) ** 2, mask)
+    ent = _masked_mean(entropy, mask)
+    kl = _masked_mean(old_logp - logp, mask)
+    loss = pi_loss + config.VF_COEFF * vf_loss - config.ENT_COEFF * ent
+    return loss, (pi_loss, vf_loss, ent, kl)
+
+
+def ppo_grad(params, obs, actions, old_logp, advantages, value_targets, mask):
+    (loss, (pi, vf, ent, kl)), grads = jax.value_and_grad(
+        ppo_loss, has_aux=True)(
+        params, obs, actions, old_logp, advantages, value_targets, mask)
+    return grads, loss, pi, vf, ent, kl
+
+
+# ---------------------------------------------------------------------------
+# DQN (double-Q with target network, huber TD, prioritized-replay weights)
+# ---------------------------------------------------------------------------
+
+def _huber(x, delta):
+    abs_x = jnp.abs(x)
+    quad = jnp.minimum(abs_x, delta)
+    return 0.5 * quad ** 2 + delta * (abs_x - quad)
+
+
+def dqn_loss(params, target_params, obs, actions, rewards, next_obs, dones,
+             weights, mask):
+    q = dqn_net(params, obs)
+    q_a = jnp.take_along_axis(q, actions[:, None], axis=1)[:, 0]
+    # Double DQN: argmax under online net, value under target net.
+    next_q_online = dqn_net(params, next_obs)
+    next_a = jnp.argmax(next_q_online, axis=1)
+    next_q_target = dqn_net(target_params, next_obs)
+    next_v = jnp.take_along_axis(next_q_target, next_a[:, None], axis=1)[:, 0]
+    target = rewards + config.GAMMA * (1.0 - dones) * next_v
+    td = q_a - lax.stop_gradient(target)
+    loss = _masked_mean(weights * _huber(td, config.HUBER_DELTA), mask)
+    return loss, jnp.abs(td)
+
+
+def dqn_grad(params, target_params, obs, actions, rewards, next_obs, dones,
+             weights, mask):
+    (loss, td_abs), grads = jax.value_and_grad(dqn_loss, has_aux=True)(
+        params, target_params, obs, actions, rewards, next_obs, dones,
+        weights, mask)
+    return grads, loss, td_abs
+
+
+# ---------------------------------------------------------------------------
+# IMPALA (V-trace actor-critic)
+# ---------------------------------------------------------------------------
+
+def impala_loss(params, obs, actions, behaviour_logp, rewards, dones,
+                bootstrap_obs, mask):
+    """obs[T,B,O] actions[T,B] behaviour_logp/rewards/dones/mask[T,B]."""
+    t_len, batch, obs_dim = obs.shape
+    flat_obs = obs.reshape(t_len * batch, obs_dim)
+    logits, values = pg_net(params, flat_obs)
+    logits = logits.reshape(t_len, batch, -1)
+    values = values.reshape(t_len, batch)
+
+    logp_all = jax.nn.log_softmax(logits)
+    p_all = jax.nn.softmax(logits)
+    target_logp = jnp.take_along_axis(
+        logp_all, actions[:, :, None], axis=2)[:, :, 0]
+    entropy = -jnp.sum(p_all * logp_all, axis=2)
+
+    log_rhos = target_logp - behaviour_logp
+    discounts = config.GAMMA * (1.0 - dones)
+    _, bootstrap_value = pg_net(params, bootstrap_obs)
+
+    vs, pg_adv = vtrace(
+        lax.stop_gradient(log_rhos), discounts, rewards,
+        lax.stop_gradient(values), lax.stop_gradient(bootstrap_value),
+        rho_clip=config.VTRACE_RHO_CLIP, c_clip=config.VTRACE_C_CLIP)
+    vs = lax.stop_gradient(vs)
+    pg_adv = lax.stop_gradient(pg_adv)
+
+    pi_loss = -_masked_mean(target_logp * pg_adv, mask)
+    vf_loss = 0.5 * _masked_mean((values - vs) ** 2, mask)
+    ent = _masked_mean(entropy, mask)
+    loss = pi_loss + config.VF_COEFF * vf_loss - config.ENT_COEFF * ent
+    return loss, (pi_loss, vf_loss, ent)
+
+
+def impala_grad(params, obs, actions, behaviour_logp, rewards, dones,
+                bootstrap_obs, mask):
+    (loss, (pi, vf, ent)), grads = jax.value_and_grad(
+        impala_loss, has_aux=True)(
+        params, obs, actions, behaviour_logp, rewards, dones,
+        bootstrap_obs, mask)
+    return grads, loss, pi, vf, ent
+
+
+# ---------------------------------------------------------------------------
+# Adam
+# ---------------------------------------------------------------------------
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+GRAD_CLIP = 40.0
+
+
+def adam_apply(params, grads, m, v, t, lr):
+    """One Adam step over flat vectors; t is the 1-based step count (f32).
+
+    Gradients are global-norm-clipped to GRAD_CLIP first (RLlib's default
+    for A3C/IMPALA-family algorithms).
+    """
+    gnorm = jnp.sqrt(jnp.sum(grads * grads))
+    scale = jnp.minimum(1.0, GRAD_CLIP / jnp.maximum(gnorm, 1e-12))
+    g = grads * scale
+    m = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+    v = ADAM_B2 * v + (1.0 - ADAM_B2) * g * g
+    m_hat = m / (1.0 - ADAM_B1 ** t)
+    v_hat = v / (1.0 - ADAM_B2 ** t)
+    new_params = params - lr * m_hat / (jnp.sqrt(v_hat) + ADAM_EPS)
+    return new_params, m, v
+
+
+def sgd_apply(params, grads, lr):
+    """Plain SGD step (used by the MAML inner-adaptation loop)."""
+    gnorm = jnp.sqrt(jnp.sum(grads * grads))
+    scale = jnp.minimum(1.0, GRAD_CLIP / jnp.maximum(gnorm, 1e-12))
+    return (params - lr * grads * scale,)

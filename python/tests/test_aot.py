@@ -1,0 +1,77 @@
+"""AOT pipeline: artifacts lower, manifest is consistent, HLO text parses."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, config
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    manifest = aot.lower_all(str(out), verbose=False)
+    return str(out), manifest
+
+
+def test_all_expected_executables_present(built):
+    _, manifest = built
+    expected = {
+        "pg_fwd", "dqn_q_fwd", "a2c_grad", "a3c_grad", "ppo_grad",
+        "dqn_grad", "impala_grad", "adam_pg", "adam_dqn", "sgd_pg",
+    }
+    assert set(manifest["executables"]) == expected
+
+
+def test_files_exist_and_nonempty(built):
+    out, manifest = built
+    for entry in manifest["executables"].values():
+        path = os.path.join(out, entry["file"])
+        assert os.path.getsize(path) > 100
+
+
+def test_hlo_text_has_entry_computation(built):
+    out, manifest = built
+    for entry in manifest["executables"].values():
+        with open(os.path.join(out, entry["file"])) as f:
+            text = f.read()
+        assert "HloModule" in text
+        assert "ENTRY" in text
+
+
+def test_manifest_input_shapes(built):
+    _, manifest = built
+    exe = manifest["executables"]["ppo_grad"]
+    names = [i["name"] for i in exe["inputs"]]
+    assert names == ["params", "obs", "actions", "old_logp", "advantages",
+                     "value_targets", "mask"]
+    assert exe["inputs"][0]["shape"] == [config.PG_PARAM_SIZE]
+    assert exe["inputs"][1]["shape"] == [config.PPO_MINIBATCH, config.OBS_DIM]
+    assert exe["inputs"][2]["dtype"] == "i32"
+
+
+def test_manifest_config_roundtrips(built):
+    out, manifest = built
+    with open(os.path.join(out, "manifest.json")) as f:
+        loaded = json.load(f)
+    assert loaded["config"] == json.loads(json.dumps(manifest["config"]))
+    assert loaded["config"]["pg_param_size"] == config.PG_PARAM_SIZE
+    assert loaded["config"]["gamma"] == config.GAMMA
+
+
+def test_init_params_written(built):
+    out, manifest = built
+    for name, size in (("init_pg", config.PG_PARAM_SIZE),
+                       ("init_dqn", config.DQN_PARAM_SIZE)):
+        assert manifest[name]["len"] == size
+        path = os.path.join(out, manifest[name]["file"])
+        assert os.path.getsize(path) == size * 4
+
+
+def test_parameter_count_order_is_stable(built):
+    """The rust runtime passes inputs positionally; the manifest order is
+    the ABI.  Guard it."""
+    _, manifest = built
+    for name, entry in manifest["executables"].items():
+        assert entry["inputs"][0]["name"] == "params", name

@@ -1,0 +1,194 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes; every case asserts allclose against
+kernels/ref.py.  This is the core correctness signal for the kernels that
+end up inside every AOT artifact.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.fused_linear import fused_linear, matmul, pick_block
+from compile.kernels.vtrace import vtrace
+
+jax.config.update("jax_platform_name", "cpu")
+
+ACTIVATIONS = ["tanh", "relu", "linear"]
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * scale).astype(
+        dtype)
+
+
+# ---------------------------------------------------------------------------
+# pick_block
+# ---------------------------------------------------------------------------
+
+@given(dim=st.integers(1, 4096), target=st.integers(1, 256))
+@settings(max_examples=200, deadline=None)
+def test_pick_block_divides_and_bounds(dim, target):
+    b = pick_block(dim, target)
+    assert dim % b == 0
+    assert b <= max(target, 1) or b == dim
+    if dim <= target:
+        assert b == dim
+
+
+# ---------------------------------------------------------------------------
+# fused_linear forward
+# ---------------------------------------------------------------------------
+
+@given(
+    batch=st.sampled_from([1, 3, 8, 16, 64, 100, 256]),
+    in_dim=st.sampled_from([1, 4, 7, 64]),
+    out_dim=st.sampled_from([1, 2, 64, 65, 128]),
+    activation=st.sampled_from(ACTIVATIONS),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=40, deadline=None)
+def test_fused_linear_matches_ref(batch, in_dim, out_dim, activation, seed):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = rand(k1, (batch, in_dim))
+    w = rand(k2, (in_dim, out_dim), scale=0.5)
+    b = rand(k3, (out_dim,), scale=0.1)
+    got = fused_linear(x, w, b, activation)
+    want = ref.fused_linear_ref(x, w, b, activation)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("activation", ACTIVATIONS)
+def test_fused_linear_bf16(activation):
+    k = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(k, 3)
+    x = rand(k1, (32, 16), jnp.bfloat16)
+    w = rand(k2, (16, 32), jnp.bfloat16, scale=0.3)
+    b = rand(k3, (32,), jnp.bfloat16, scale=0.1)
+    got = fused_linear(x, w, b, activation).astype(jnp.float32)
+    want = ref.fused_linear_ref(x, w, b, activation).astype(jnp.float32)
+    np.testing.assert_allclose(got, want, rtol=5e-2, atol=5e-2)
+
+
+def test_fused_linear_unknown_activation_raises():
+    x = jnp.zeros((2, 2))
+    with pytest.raises(ValueError):
+        fused_linear(x, x, jnp.zeros(2), "gelu!!")
+
+
+# ---------------------------------------------------------------------------
+# fused_linear backward (custom VJP vs autodiff of the oracle)
+# ---------------------------------------------------------------------------
+
+@given(
+    batch=st.sampled_from([2, 8, 33, 128]),
+    in_dim=st.sampled_from([4, 5, 64]),
+    out_dim=st.sampled_from([1, 2, 64]),
+    activation=st.sampled_from(ACTIVATIONS),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=25, deadline=None)
+def test_fused_linear_grad_matches_ref(batch, in_dim, out_dim, activation,
+                                       seed):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = rand(k1, (batch, in_dim))
+    w = rand(k2, (in_dim, out_dim), scale=0.5)
+    b = rand(k3, (out_dim,), scale=0.1)
+
+    def loss_kernel(x, w, b):
+        return jnp.sum(jnp.sin(fused_linear(x, w, b, activation)))
+
+    def loss_ref(x, w, b):
+        return jnp.sum(jnp.sin(ref.fused_linear_ref(x, w, b, activation)))
+
+    got = jax.grad(loss_kernel, argnums=(0, 1, 2))(x, w, b)
+    want = jax.grad(loss_ref, argnums=(0, 1, 2))(x, w, b)
+    for g, r in zip(got, want):
+        np.testing.assert_allclose(g, r, rtol=1e-4, atol=1e-4)
+
+
+def test_fused_linear_grad_under_jit():
+    k = jax.random.PRNGKey(1)
+    k1, k2, k3 = jax.random.split(k, 3)
+    x, w, b = rand(k1, (16, 4)), rand(k2, (4, 8)), rand(k3, (8,))
+    f = jax.jit(jax.grad(lambda x, w, b: jnp.sum(fused_linear(x, w, b)),
+                         argnums=1))
+    fr = jax.grad(lambda x, w, b: jnp.sum(ref.fused_linear_ref(x, w, b)),
+                  argnums=1)
+    np.testing.assert_allclose(f(x, w, b), fr(x, w, b), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+@given(
+    m=st.sampled_from([1, 2, 17, 64, 128, 200]),
+    k=st.sampled_from([1, 4, 64]),
+    n=st.sampled_from([1, 8, 64, 129]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=30, deadline=None)
+def test_matmul_matches_ref(m, k, n, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    a = rand(k1, (m, k))
+    b = rand(k2, (k, n))
+    np.testing.assert_allclose(
+        matmul(a, b), ref.matmul_ref(a, b), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# vtrace
+# ---------------------------------------------------------------------------
+
+@given(
+    t_len=st.sampled_from([1, 2, 5, 20, 50]),
+    batch=st.sampled_from([1, 3, 8, 32]),
+    rho_clip=st.sampled_from([0.5, 1.0, 2.0]),
+    c_clip=st.sampled_from([0.5, 1.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=30, deadline=None)
+def test_vtrace_matches_ref(t_len, batch, rho_clip, c_clip, seed):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 5)
+    log_rhos = rand(keys[0], (t_len, batch), scale=0.3)
+    dones = (jax.random.uniform(keys[1], (t_len, batch)) < 0.1).astype(
+        jnp.float32)
+    discounts = 0.99 * (1.0 - dones)
+    rewards = rand(keys[2], (t_len, batch))
+    values = rand(keys[3], (t_len, batch))
+    bootstrap = rand(keys[4], (batch,))
+    vs, adv = vtrace(log_rhos, discounts, rewards, values, bootstrap,
+                     rho_clip=rho_clip, c_clip=c_clip)
+    vs_r, adv_r = ref.vtrace_ref(log_rhos, discounts, rewards, values,
+                                 bootstrap, rho_clip=rho_clip, c_clip=c_clip)
+    np.testing.assert_allclose(vs, vs_r, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(adv, adv_r, rtol=1e-4, atol=1e-4)
+
+
+def test_vtrace_on_policy_reduces_to_discounted_returns():
+    """With rhos == 1 and no dones, vs is the n-step discounted return."""
+    t_len, batch = 5, 2
+    log_rhos = jnp.zeros((t_len, batch))
+    discounts = jnp.full((t_len, batch), 0.9)
+    rewards = jnp.ones((t_len, batch))
+    values = jnp.zeros((t_len, batch))
+    bootstrap = jnp.zeros((batch,))
+    vs, _ = vtrace(log_rhos, discounts, rewards, values, bootstrap)
+    expected_t0 = sum(0.9 ** i for i in range(t_len))
+    np.testing.assert_allclose(vs[0, 0], expected_t0, rtol=1e-5)
+
+
+def test_vtrace_terminal_cuts_bootstrap():
+    """A done at the last step must erase the bootstrap value."""
+    t_len, batch = 3, 1
+    log_rhos = jnp.zeros((t_len, batch))
+    discounts = jnp.zeros((t_len, batch))  # done everywhere
+    rewards = jnp.array([[1.0], [2.0], [3.0]])
+    values = jnp.zeros((t_len, batch))
+    bootstrap = jnp.full((batch,), 100.0)
+    vs, _ = vtrace(log_rhos, discounts, rewards, values, bootstrap)
+    np.testing.assert_allclose(vs, rewards, rtol=1e-6)

@@ -1,0 +1,259 @@
+"""L2 correctness: networks and losses, shapes and semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import config, model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def pg_params():
+    return model.init_flat(jax.random.PRNGKey(0), config.PG_SHAPES)
+
+
+@pytest.fixture(scope="module")
+def dqn_params():
+    return model.init_flat(jax.random.PRNGKey(1), config.DQN_SHAPES)
+
+
+def make_batch(key, n):
+    keys = jax.random.split(key, 4)
+    obs = jax.random.normal(keys[0], (n, config.OBS_DIM))
+    actions = jax.random.randint(keys[1], (n,), 0, config.NUM_ACTIONS)
+    adv = jax.random.normal(keys[2], (n,))
+    vtarg = jax.random.normal(keys[3], (n,))
+    mask = jnp.ones((n,))
+    return obs, actions, adv, vtarg, mask
+
+
+# ---------------------------------------------------------------------------
+# Flat-param plumbing
+# ---------------------------------------------------------------------------
+
+def test_param_sizes_match_config(pg_params, dqn_params):
+    assert pg_params.shape == (config.PG_PARAM_SIZE,)
+    assert dqn_params.shape == (config.DQN_PARAM_SIZE,)
+
+
+def test_unflatten_roundtrip(pg_params):
+    layers = model.unflatten(pg_params, config.PG_SHAPES)
+    assert len(layers) == len(config.PG_SHAPES)
+    refl = jnp.concatenate(
+        [jnp.concatenate([w.reshape(-1), b]) for w, b in layers])
+    np.testing.assert_array_equal(refl, pg_params)
+
+
+def test_unflatten_layer_shapes(pg_params):
+    layers = model.unflatten(pg_params, config.PG_SHAPES)
+    for (w, b), (w_shape, b_shape) in zip(layers, config.PG_SHAPES):
+        assert w.shape == w_shape
+        assert b.shape == b_shape
+
+
+# ---------------------------------------------------------------------------
+# Networks: shapes + parity with a pure-jnp (ref-kernel) forward
+# ---------------------------------------------------------------------------
+
+def _pg_net_ref(flat_params, obs):
+    layers = model.unflatten(flat_params, config.PG_SHAPES)
+    n_trunk = len(config.HIDDEN)
+    h = obs
+    for w, b in layers[:n_trunk]:
+        h = ref.fused_linear_ref(h, w, b, "tanh")
+    lw, lb = layers[n_trunk]
+    vw, vb = layers[n_trunk + 1]
+    return (ref.fused_linear_ref(h, lw, lb, "linear"),
+            ref.fused_linear_ref(h, vw, vb, "linear")[:, 0])
+
+
+def test_pg_net_shapes(pg_params):
+    obs = jnp.zeros((7, config.OBS_DIM))
+    logits, value = model.pg_net(pg_params, obs)
+    assert logits.shape == (7, config.NUM_ACTIONS)
+    assert value.shape == (7,)
+
+
+def test_pg_net_matches_pure_jnp(pg_params):
+    obs = jax.random.normal(jax.random.PRNGKey(2), (16, config.OBS_DIM))
+    logits, value = model.pg_net(pg_params, obs)
+    logits_r, value_r = _pg_net_ref(pg_params, obs)
+    np.testing.assert_allclose(logits, logits_r, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(value, value_r, rtol=1e-5, atol=1e-5)
+
+
+def test_dqn_net_shapes(dqn_params):
+    obs = jnp.zeros((5, config.OBS_DIM))
+    q = model.dqn_net(dqn_params, obs)
+    assert q.shape == (5, config.NUM_ACTIONS)
+
+
+def test_grad_through_pallas_matches_pure_jnp(pg_params):
+    """jax.grad of the a2c loss via kernels == via the pure-jnp net."""
+    obs, actions, adv, vtarg, mask = make_batch(jax.random.PRNGKey(3), 32)
+
+    def loss_ref(params):
+        logits, value = _pg_net_ref(params, obs)
+        logp_all = jax.nn.log_softmax(logits)
+        p_all = jax.nn.softmax(logits)
+        logp = jnp.take_along_axis(logp_all, actions[:, None], 1)[:, 0]
+        entropy = -jnp.sum(p_all * logp_all, axis=1)
+        pi = -jnp.mean(logp * adv)
+        vf = 0.5 * jnp.mean((value - vtarg) ** 2)
+        ent = jnp.mean(entropy)
+        return pi + config.VF_COEFF * vf - config.ENT_COEFF * ent
+
+    g_kernel, *_ = model.a2c_grad(pg_params, obs, actions, adv, vtarg, mask)
+    g_ref = jax.grad(loss_ref)(pg_params)
+    np.testing.assert_allclose(g_kernel, g_ref, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Loss semantics
+# ---------------------------------------------------------------------------
+
+def test_a2c_mask_zeroes_padding(pg_params):
+    """Padded rows (mask 0) must not change the loss or grads."""
+    key = jax.random.PRNGKey(4)
+    obs, actions, adv, vtarg, _ = make_batch(key, 16)
+    mask_full = jnp.ones((16,))
+    g1, l1, *_ = model.a2c_grad(pg_params, obs, actions, adv, vtarg,
+                                mask_full)
+
+    # Append garbage rows with mask 0.
+    obs2 = jnp.concatenate([obs, 100.0 * jnp.ones((4, config.OBS_DIM))])
+    actions2 = jnp.concatenate([actions, jnp.zeros(4, jnp.int32)])
+    adv2 = jnp.concatenate([adv, 1e6 * jnp.ones(4)])
+    vtarg2 = jnp.concatenate([vtarg, -1e6 * jnp.ones(4)])
+    mask2 = jnp.concatenate([mask_full, jnp.zeros(4)])
+    g2, l2, *_ = model.a2c_grad(pg_params, obs2, actions2, adv2, vtarg2,
+                                mask2)
+    np.testing.assert_allclose(l1, l2, rtol=1e-5)
+    np.testing.assert_allclose(g1, g2, rtol=1e-4, atol=1e-5)
+
+
+def test_ppo_surrogate_at_ratio_one(pg_params):
+    """old_logp == current logp: ratio==1, surrogate == -mean(adv), kl==0."""
+    obs, actions, adv, vtarg, mask = make_batch(jax.random.PRNGKey(5), 32)
+    logits, _ = model.pg_net(pg_params, obs)
+    logp_all = jax.nn.log_softmax(logits)
+    old_logp = jnp.take_along_axis(logp_all, actions[:, None], 1)[:, 0]
+    _, (pi_ppo, _, _, kl) = model.ppo_loss(
+        pg_params, obs, actions, old_logp, adv, vtarg, mask)
+    np.testing.assert_allclose(pi_ppo, -jnp.mean(adv), rtol=1e-4)
+    np.testing.assert_allclose(kl, 0.0, atol=1e-6)
+
+
+def test_ppo_clip_blocks_large_ratios(pg_params):
+    """With old_logp far below current, positive-adv surrogate is clipped."""
+    obs, actions, _, vtarg, mask = make_batch(jax.random.PRNGKey(6), 32)
+    logits, _ = model.pg_net(pg_params, obs)
+    logp_all = jax.nn.log_softmax(logits)
+    logp = jnp.take_along_axis(logp_all, actions[:, None], 1)[:, 0]
+    old_logp = logp - 5.0  # ratio = e^5 >> 1 + clip
+    adv = jnp.ones((32,))
+    _, (pi_loss, _, _, _) = model.ppo_loss(
+        pg_params, obs, actions, old_logp, adv, vtarg, mask)
+    np.testing.assert_allclose(pi_loss, -(1.0 + config.PPO_CLIP), rtol=1e-5)
+
+
+def test_dqn_target_uses_target_net(dqn_params):
+    """Zero reward, done=1 everywhere: target == 0, td == q(s,a)."""
+    n = 8
+    obs = jax.random.normal(jax.random.PRNGKey(7), (n, config.OBS_DIM))
+    actions = jnp.zeros((n,), jnp.int32)
+    rewards = jnp.zeros((n,))
+    dones = jnp.ones((n,))
+    weights = jnp.ones((n,))
+    mask = jnp.ones((n,))
+    _, td_abs = model.dqn_loss(dqn_params, dqn_params, obs, actions, rewards,
+                               obs, dones, weights, mask)
+    q = model.dqn_net(dqn_params, obs)[:, 0]
+    np.testing.assert_allclose(td_abs, jnp.abs(q), rtol=1e-5)
+
+
+def test_dqn_grad_td_shape(dqn_params):
+    n = config.DQN_MINIBATCH
+    obs = jnp.zeros((n, config.OBS_DIM))
+    grads, loss, td_abs = model.dqn_grad(
+        dqn_params, dqn_params, obs, jnp.zeros((n,), jnp.int32),
+        jnp.zeros((n,)), obs, jnp.zeros((n,)), jnp.ones((n,)),
+        jnp.ones((n,)))
+    assert grads.shape == (config.DQN_PARAM_SIZE,)
+    assert td_abs.shape == (n,)
+    assert jnp.isfinite(loss)
+
+
+def test_impala_grad_shapes(pg_params):
+    t, b = 4, 3
+    obs = jax.random.normal(jax.random.PRNGKey(8), (t, b, config.OBS_DIM))
+    actions = jnp.zeros((t, b), jnp.int32)
+    blogp = jnp.full((t, b), -0.7)
+    rewards = jnp.ones((t, b))
+    dones = jnp.zeros((t, b))
+    boot = jnp.zeros((b, config.OBS_DIM))
+    mask = jnp.ones((t, b))
+    grads, loss, pi, vf, ent = model.impala_grad(
+        pg_params, obs, actions, blogp, rewards, dones, boot, mask)
+    assert grads.shape == (config.PG_PARAM_SIZE,)
+    for s in (loss, pi, vf, ent):
+        assert jnp.isfinite(s)
+
+
+def test_impala_vtrace_targets_stop_gradient(pg_params):
+    """The vf part of the grad must treat vs as constant: perturbing the
+    reward path (which only enters via vtrace) changes the loss but the
+    policy-entropy part of the grad structure stays finite/sane."""
+    t, b = 3, 2
+    obs = jax.random.normal(jax.random.PRNGKey(9), (t, b, config.OBS_DIM))
+    actions = jnp.zeros((t, b), jnp.int32)
+    blogp = jnp.full((t, b), -0.7)
+    dones = jnp.zeros((t, b))
+    boot = jnp.zeros((b, config.OBS_DIM))
+    mask = jnp.ones((t, b))
+    g1, *_ = model.impala_grad(pg_params, obs, actions, blogp,
+                               jnp.zeros((t, b)), dones, boot, mask)
+    g2, *_ = model.impala_grad(pg_params, obs, actions, blogp,
+                               jnp.ones((t, b)), dones, boot, mask)
+    assert jnp.all(jnp.isfinite(g1)) and jnp.all(jnp.isfinite(g2))
+    assert not jnp.allclose(g1, g2)  # rewards do flow through targets
+
+
+# ---------------------------------------------------------------------------
+# Optimizers
+# ---------------------------------------------------------------------------
+
+def test_adam_first_step_is_lr_sized(pg_params):
+    grads = jnp.ones_like(pg_params)
+    m = jnp.zeros_like(pg_params)
+    v = jnp.zeros_like(pg_params)
+    new_params, m1, v1 = model.adam_apply(
+        pg_params, grads, m, v, jnp.float32(1.0), jnp.float32(1e-3))
+    # With bias correction at t=1, |step| == lr for unit gradients
+    # (up to the global-norm clip, which rescales uniformly).
+    step = pg_params - new_params
+    assert jnp.all(step > 0)
+    np.testing.assert_allclose(step, jnp.full_like(step, step[0]), rtol=1e-3)
+
+
+def test_adam_descends_quadratic():
+    params = jnp.array([5.0, -3.0])
+    m = jnp.zeros(2)
+    v = jnp.zeros(2)
+    for t in range(1, 200):
+        grads = 2.0 * params
+        params, m, v = model.adam_apply(
+            params, grads, m, v, jnp.float32(t), jnp.float32(0.1))
+    np.testing.assert_allclose(params, jnp.zeros(2), atol=1e-2)
+
+
+def test_sgd_clips_global_norm():
+    params = jnp.zeros(4)
+    grads = jnp.full(4, 1e9)
+    (new_params,) = model.sgd_apply(params, grads, jnp.float32(1.0))
+    gnorm = float(jnp.sqrt(jnp.sum((params - new_params) ** 2)))
+    np.testing.assert_allclose(gnorm, model.GRAD_CLIP, rtol=1e-4)

@@ -1,0 +1,84 @@
+//! Fig. 13b — IMPALA end-to-end throughput: the flow plan vs the
+//! low-level async-pipeline baseline, identical numerics (same
+//! artifacts, same workers).
+//!
+//! Paper expectation: similar or better throughput for the flow
+//! version.  Run: `cargo bench --bench fig13b_impala`
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use flowrl::algorithms::{impala_plan, EnvKind, TrainerConfig};
+use flowrl::baseline::AsyncPipelineOptimizer;
+use flowrl::policy::PgLossKind;
+use flowrl::rollout::CollectMode;
+
+const ITERS: usize = 40;
+
+fn artifacts() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn config(num_workers: usize) -> TrainerConfig {
+    TrainerConfig {
+        num_workers,
+        lr: 1e-3,
+        artifacts_dir: artifacts(),
+        seed: 3,
+        num_async: 2,
+        env: EnvKind::CartPole,
+        ..TrainerConfig::default()
+    }
+}
+
+fn flow_throughput(n: usize) -> f64 {
+    let mut plan = impala_plan(&config(n));
+    plan.next(); // warmup (includes compilation)
+    let start = Instant::now();
+    let mut steps = 0u64;
+    let mut last_trained = 0u64;
+    for _ in 0..ITERS {
+        let r = plan.next().unwrap();
+        steps += r.num_env_steps_trained - last_trained;
+        last_trained = r.num_env_steps_trained;
+    }
+    steps as f64 / start.elapsed().as_secs_f64()
+}
+
+fn baseline_throughput(n: usize) -> f64 {
+    let cfg = config(n);
+    let m = flowrl::runtime::Manifest::load(artifacts().join("manifest.json"))
+        .unwrap();
+    let mut cfg2 = cfg.clone();
+    cfg2.rollout_fragment_length = m.config.impala_t;
+    cfg2.num_envs_per_worker = m.config.impala_b;
+    let workers =
+        cfg2.pg_workers(PgLossKind::Impala, CollectMode::OnPolicyWithNextObs);
+    let mut opt = AsyncPipelineOptimizer::new(
+        workers,
+        m.config.impala_t,
+        m.config.impala_b,
+        2,
+    );
+    opt.step(); // warmup
+    let start = Instant::now();
+    let mut last = 0u64;
+    let mut steps = 0u64;
+    for _ in 0..ITERS {
+        let r = opt.step();
+        steps += r.num_env_steps_trained - last;
+        last = r.num_env_steps_trained;
+    }
+    steps as f64 / start.elapsed().as_secs_f64()
+}
+
+fn main() {
+    println!("# Fig. 13b — IMPALA throughput (train steps/s), {ITERS} learner iters");
+    println!("| workers | RLlib Flow | low-level baseline | ratio |");
+    println!("|---------|------------|--------------------|-------|");
+    for &n in &[1usize, 2, 4] {
+        let flow = flow_throughput(n);
+        let base = baseline_throughput(n);
+        println!("| {n} | {flow:.0} | {base:.0} | {:.2}x |", flow / base);
+    }
+}

@@ -1,0 +1,157 @@
+//! Fig. 14 — multi-agent multi-policy composition vs the Amdahl ideal.
+//!
+//! Measures sampled-step throughput of (a) the PPO trainer alone,
+//! (b) the DQN trainer alone, and (c) the PPO+DQN union, on the
+//! multi-agent CartPole with 4 agents per policy.  The "theoretical
+//! best" for the union follows the paper's Amdahl-style combination:
+//! the combined workload must process one PPO-half and one DQN-half
+//! per unit of work, so
+//!
+//!     ideal = 1 / (0.5 / R_ppo + 0.5 / R_dqn)
+//!
+//! (harmonic combination: the driver serializes the two trainers'
+//! driver-side work; overlap beyond that is a bonus).  Paper
+//! expectation: union throughput ≈ ideal.
+//!
+//! Run: `cargo bench --bench fig14_union`
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use flowrl::algorithms::multi_agent::{ma_workers, ma_metrics_reporting};
+use flowrl::algorithms::{
+    multi_agent_plan, DqnConfig, MultiAgentConfig, TrainerConfig,
+};
+use flowrl::iter::{LocalIter, ParIter};
+use flowrl::metrics::TrainResult;
+use flowrl::ops::{
+    concat_batches, create_replay_actors, replay, select_policy,
+    store_to_replay_buffer, TrainItem,
+};
+
+const ITERS: usize = 25;
+
+fn config() -> TrainerConfig {
+    TrainerConfig {
+        num_workers: 2,
+        rollout_fragment_length: 32,
+        train_batch_size: 128,
+        lr: 1e-3,
+        artifacts_dir: PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts"),
+        seed: 5,
+        ..TrainerConfig::default()
+    }
+}
+
+fn ma_cfg() -> MultiAgentConfig {
+    MultiAgentConfig {
+        agents_per_policy: 4,
+        dqn: DqnConfig {
+            buffer_capacity: 8192,
+            learning_starts: 128,
+            target_update_every: 500,
+            weight_sync_every: 4,
+        },
+        ppo_epochs: 1,
+    }
+}
+
+/// Sampled env-steps/s over ITERS reports of a plan.
+fn throughput(mut plan: LocalIter<TrainResult>) -> f64 {
+    plan.next(); // warmup/compile
+    let start = Instant::now();
+    let mut first = None;
+    let mut last = 0u64;
+    for _ in 0..ITERS {
+        let r = plan.next().unwrap();
+        first.get_or_insert(r.num_env_steps_sampled);
+        last = r.num_env_steps_sampled;
+    }
+    (last - first.unwrap()) as f64 / start.elapsed().as_secs_f64()
+}
+
+/// PPO-only trainer over the multi-agent env (all agents -> "ppo").
+fn ppo_alone() -> LocalIter<TrainResult> {
+    let cfg = config();
+    let ma = ma_cfg();
+    let (local, remotes) = ma_workers(&cfg, &ma, false, true);
+    let rollouts = ParIter::from_actors(remotes.clone(), |w| Some(w.sample()))
+        .gather_async(cfg.num_async);
+    let tbs = cfg.train_batch_size;
+    let l = local.clone();
+    let rs = remotes.clone();
+    let ppo_op = rollouts
+        .filter_map(select_policy("ppo"))
+        .combine(concat_batches(tbs))
+        .for_each(move |batch| {
+            let steps = batch.len();
+            let (stats, weights) = l.call(move |w| {
+                (w.learn_on_batch("ppo", &batch), w.get_weights("ppo"))
+            });
+            for r in &rs {
+                let wt = weights.clone();
+                r.cast(move |w| w.set_weights("ppo", &wt));
+            }
+            TrainItem::new(stats, steps)
+        });
+    ma_metrics_reporting(ppo_op, local, remotes)
+}
+
+/// DQN-only trainer over the multi-agent env (all agents -> "dqn").
+fn dqn_alone() -> LocalIter<TrainResult> {
+    let cfg = config();
+    let ma = ma_cfg();
+    let (local, remotes) = ma_workers(&cfg, &ma, true, false);
+    let rollouts = ParIter::from_actors(remotes.clone(), |w| Some(w.sample()))
+        .gather_async(cfg.num_async);
+    let replay_actors = create_replay_actors(
+        1,
+        ma.dqn.buffer_capacity,
+        ma.dqn.learning_starts,
+        64,
+    );
+    let mut store = store_to_replay_buffer(replay_actors.clone());
+    let store_op = rollouts.filter_map(select_policy("dqn")).for_each(
+        move |b| {
+            store(b);
+            TrainItem::default()
+        },
+    );
+    let l = local.clone();
+    let replay_op = replay(replay_actors, 1).for_each(move |item| {
+        let Some((sample, ra)) = item else {
+            return TrainItem::default();
+        };
+        let steps = sample.batch.len();
+        let indices = sample.indices;
+        let batch = sample.batch;
+        let (stats, td) = l.call(move |w| {
+            let stats = w.learn_on_batch("dqn", &batch);
+            (stats, w.policies["dqn"].td_abs().unwrap_or_default())
+        });
+        ra.cast(move |state| state.update_priorities(&indices, &td));
+        TrainItem::new(stats, steps)
+    });
+    let merged = flowrl::iter::concurrently(
+        vec![store_op, replay_op],
+        flowrl::iter::UnionMode::RoundRobin { weights: None },
+        Some(vec![1]),
+    );
+    ma_metrics_reporting(merged, local, remotes)
+}
+
+fn main() {
+    println!("# Fig. 14 — PPO+DQN union vs Amdahl ideal (sampled steps/s)");
+    let r_ppo = throughput(ppo_alone());
+    let r_dqn = throughput(dqn_alone());
+    let r_union = throughput(multi_agent_plan(&config(), &ma_cfg()));
+    let ideal = 1.0 / (0.5 / r_ppo + 0.5 / r_dqn);
+    println!("| trainer | steps/s |");
+    println!("|---------|---------|");
+    println!("| PPO alone | {r_ppo:.0} |");
+    println!("| DQN alone | {r_dqn:.0} |");
+    println!("| union (measured) | {r_union:.0} |");
+    println!("| union (Amdahl ideal) | {ideal:.0} |");
+    println!("| measured / ideal | {:.2} |", r_union / ideal);
+}

@@ -1,0 +1,122 @@
+//! Iterator/actor microbenchmarks — the overhead numbers behind the
+//! perf pass (EXPERIMENTS.md §Perf): actor call round-trip,
+//! gather_async/gather_sync item overhead, union modes.
+//!
+//! Run: `cargo bench --bench iter_ops`
+
+use std::time::Instant;
+
+use flowrl::actor::{spawn_group, ActorHandle};
+use flowrl::iter::{concurrently, LocalIter, ParIter, UnionMode};
+
+fn measure(name: &str, iters: usize, mut f: impl FnMut()) {
+    // Warmup.
+    for _ in 0..iters / 10 + 1 {
+        f();
+    }
+    let start = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = start.elapsed() / iters as u32;
+    println!("| {name} | {iters} | {per:?} |");
+}
+
+struct Counter(u64);
+
+fn actors(n: usize) -> Vec<ActorHandle<Counter>> {
+    spawn_group("bench", n, |_| Box::new(|| Counter(0)))
+}
+
+fn main() {
+    println!("# iterator/actor microbenchmarks");
+    println!("| op | iters | per-op |");
+    println!("|----|-------|--------|");
+
+    let a = actors(1).remove(0);
+    measure("actor call round-trip", 20_000, || {
+        a.call(|c| {
+            c.0 += 1;
+            c.0
+        });
+    });
+
+    let group = actors(4);
+    let mut it = ParIter::from_actors(group.clone(), |c| {
+        c.0 += 1;
+        Some(c.0)
+    })
+    .gather_async(2);
+    measure("gather_async(2) item, 4 shards", 40_000, || {
+        it.next().unwrap();
+    });
+
+    let mut it1 = ParIter::from_actors(group.clone(), |c| {
+        c.0 += 1;
+        Some(c.0)
+    })
+    .gather_async(1);
+    measure("gather_async(1) item, 4 shards", 40_000, || {
+        it1.next().unwrap();
+    });
+
+    let mut sync_it = ParIter::from_actors(group.clone(), |c| {
+        c.0 += 1;
+        Some(c.0)
+    })
+    .gather_sync();
+    measure("gather_sync round, 4 shards", 20_000, || {
+        sync_it.next().unwrap();
+    });
+
+    let mut n = 0u64;
+    let mut local = LocalIter::from_fn(move || {
+        n += 1;
+        Some(n)
+    })
+    .for_each(|x| x * 2)
+    .filter(|x| x % 2 == 0);
+    measure("LocalIter for_each+filter item", 1_000_000, || {
+        local.next().unwrap();
+    });
+
+    let mut k1 = 0u64;
+    let mut k2 = 0u64;
+    let mut rr = concurrently(
+        vec![
+            LocalIter::from_fn(move || {
+                k1 += 1;
+                Some(k1)
+            }),
+            LocalIter::from_fn(move || {
+                k2 += 1;
+                Some(k2)
+            }),
+        ],
+        UnionMode::RoundRobin { weights: None },
+        None,
+    );
+    measure("union round_robin item", 1_000_000, || {
+        rr.next().unwrap();
+    });
+
+    let mut k3 = 0u64;
+    let mut k4 = 0u64;
+    let mut au = concurrently(
+        vec![
+            LocalIter::from_fn(move || {
+                k3 += 1;
+                Some(k3)
+            }),
+            LocalIter::from_fn(move || {
+                k4 += 1;
+                Some(k4)
+            }),
+        ],
+        UnionMode::Async { buffer: 64 },
+        None,
+    );
+    measure("union async item", 200_000, || {
+        au.next().unwrap();
+    });
+}

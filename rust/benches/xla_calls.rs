@@ -1,0 +1,140 @@
+//! Raw PJRT executable-call latencies — the L2/runtime numbers behind
+//! the perf pass: how much of a training iteration is XLA dispatch vs
+//! coordination.
+//!
+//! Run: `cargo bench --bench xla_calls`
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use flowrl::runtime::{TensorArg, XlaRuntime};
+
+fn measure(name: &str, iters: usize, mut f: impl FnMut()) {
+    for _ in 0..iters / 10 + 1 {
+        f();
+    }
+    let start = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    println!("| {name} | {iters} | {:?} |", start.elapsed() / iters as u32);
+}
+
+fn main() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let rt = XlaRuntime::load(
+        &dir,
+        &["pg_fwd", "a3c_grad", "ppo_grad", "dqn_grad", "impala_grad",
+          "adam_pg", "dqn_q_fwd"],
+    )
+    .expect("artifacts");
+    let cfg = rt.manifest.config.clone();
+    let params = rt.load_init_params("init_pg").unwrap();
+    let dqn_params = rt.load_init_params("init_dqn").unwrap();
+
+    println!("# raw XLA call latencies (CPU PJRT, interpret-lowered Pallas)");
+    println!("| executable | iters | per-call |");
+    println!("|---|---|---|");
+
+    let obs8 = vec![0.1f32; cfg.inf_batch * cfg.obs_dim];
+    measure("pg_fwd (B=8)", 2000, || {
+        rt.exe("pg_fwd")
+            .run(&[TensorArg::F32(&params), TensorArg::F32(&obs8)])
+            .unwrap();
+    });
+    measure("dqn_q_fwd (B=8)", 2000, || {
+        rt.exe("dqn_q_fwd")
+            .run(&[TensorArg::F32(&dqn_params), TensorArg::F32(&obs8)])
+            .unwrap();
+    });
+
+    let n = cfg.fragment;
+    let obs = vec![0.1f32; n * cfg.obs_dim];
+    let act = vec![0i32; n];
+    let f = vec![0.5f32; n];
+    measure("a3c_grad (B=64)", 500, || {
+        rt.exe("a3c_grad")
+            .run(&[
+                TensorArg::F32(&params),
+                TensorArg::F32(&obs),
+                TensorArg::I32(&act),
+                TensorArg::F32(&f),
+                TensorArg::F32(&f),
+                TensorArg::F32(&f),
+            ])
+            .unwrap();
+    });
+
+    let n = cfg.ppo_minibatch;
+    let obs = vec![0.1f32; n * cfg.obs_dim];
+    let act = vec![0i32; n];
+    let f = vec![0.5f32; n];
+    measure("ppo_grad (B=128)", 500, || {
+        rt.exe("ppo_grad")
+            .run(&[
+                TensorArg::F32(&params),
+                TensorArg::F32(&obs),
+                TensorArg::I32(&act),
+                TensorArg::F32(&f),
+                TensorArg::F32(&f),
+                TensorArg::F32(&f),
+                TensorArg::F32(&f),
+            ])
+            .unwrap();
+    });
+
+    let n = cfg.dqn_minibatch;
+    let obs = vec![0.1f32; n * cfg.obs_dim];
+    let act = vec![0i32; n];
+    let f = vec![0.5f32; n];
+    measure("dqn_grad (B=64)", 500, || {
+        rt.exe("dqn_grad")
+            .run(&[
+                TensorArg::F32(&dqn_params),
+                TensorArg::F32(&dqn_params),
+                TensorArg::F32(&obs),
+                TensorArg::I32(&act),
+                TensorArg::F32(&f),
+                TensorArg::F32(&obs),
+                TensorArg::F32(&f),
+                TensorArg::F32(&f),
+                TensorArg::F32(&f),
+            ])
+            .unwrap();
+    });
+
+    let (t, b) = (cfg.impala_t, cfg.impala_b);
+    let obs = vec![0.1f32; t * b * cfg.obs_dim];
+    let boot = vec![0.1f32; b * cfg.obs_dim];
+    let act = vec![0i32; t * b];
+    let f = vec![0.1f32; t * b];
+    measure("impala_grad (T=20,B=8)", 300, || {
+        rt.exe("impala_grad")
+            .run(&[
+                TensorArg::F32(&params),
+                TensorArg::F32(&obs),
+                TensorArg::I32(&act),
+                TensorArg::F32(&f),
+                TensorArg::F32(&f),
+                TensorArg::F32(&f),
+                TensorArg::F32(&boot),
+                TensorArg::F32(&f),
+            ])
+            .unwrap();
+    });
+
+    let g = vec![0.001f32; params.len()];
+    let m = vec![0.0f32; params.len()];
+    measure("adam_pg (P=4675)", 2000, || {
+        rt.exe("adam_pg")
+            .run(&[
+                TensorArg::F32(&params),
+                TensorArg::F32(&g),
+                TensorArg::F32(&m),
+                TensorArg::F32(&m),
+                TensorArg::ScalarF32(1.0),
+                TensorArg::ScalarF32(1e-3),
+            ])
+            .unwrap();
+    });
+}

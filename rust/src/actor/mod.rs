@@ -1,0 +1,254 @@
+//! Actor runtime — the substrate the paper gets from Ray.
+//!
+//! Each actor owns mutable state on a dedicated OS thread; callers send
+//! closures ("method calls") through an unbounded mailbox and either
+//! block on a typed reply (`call`, Ray's `actor.method.remote()` +
+//! `ray.get`), hold a deferred reply handle (`call_deferred`, a Ray
+//! object ref — the building block for `ray.wait`-style pipelining), or
+//! fire-and-forget (`cast`).  Messages from one sender execute in send
+//! order — the ordering guarantee RLlib Flow's barrier semantics build
+//! on (paper §4, Creation and Message Passing).
+//!
+//! Actor state is constructed *inside* the actor thread from a factory
+//! closure: PJRT clients (`xla::PjRtClient` wraps an `Rc`) are not
+//! `Send`, so each rollout/learner actor creates its own client and
+//! compiles its own executables — mirroring the paper's process model,
+//! where each Ray actor holds its own TF session.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+
+static NEXT_ACTOR_ID: AtomicU64 = AtomicU64::new(0);
+
+type Envelope<A> = Box<dyn FnOnce(&mut A) + Send>;
+
+/// A handle to an actor with state type `A`.  Cloneable; the actor
+/// thread exits when every handle is dropped and the mailbox drains.
+pub struct ActorHandle<A> {
+    tx: mpsc::Sender<Envelope<A>>,
+    id: u64,
+    name: Arc<str>,
+}
+
+impl<A> Clone for ActorHandle<A> {
+    fn clone(&self) -> Self {
+        ActorHandle { tx: self.tx.clone(), id: self.id, name: self.name.clone() }
+    }
+}
+
+impl<A> std::fmt::Debug for ActorHandle<A> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "ActorHandle({}#{})", self.name, self.id)
+    }
+}
+
+/// A pending reply (Ray object ref).  `recv()` blocks until the actor
+/// has executed the call.
+pub struct Reply<R>(mpsc::Receiver<R>);
+
+impl<R> Reply<R> {
+    pub fn recv(self) -> R {
+        self.0.recv().expect("actor dropped reply (actor panicked?)")
+    }
+
+    pub fn try_recv(&self) -> Option<R> {
+        self.0.try_recv().ok()
+    }
+}
+
+impl<A: 'static> ActorHandle<A> {
+    /// Spawn an actor whose state is built by `init` on the actor thread.
+    pub fn spawn<F>(name: &str, init: F) -> Self
+    where
+        F: FnOnce() -> A + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Envelope<A>>();
+        let id = NEXT_ACTOR_ID.fetch_add(1, Ordering::Relaxed);
+        std::thread::Builder::new()
+            .name(format!("{name}#{id}"))
+            .spawn(move || {
+                let mut state = init();
+                while let Ok(msg) = rx.recv() {
+                    msg(&mut state);
+                }
+            })
+            .expect("failed to spawn actor thread");
+        ActorHandle { tx, id, name: Arc::from(name) }
+    }
+
+    /// Call a method and block for its result.
+    pub fn call<R, F>(&self, f: F) -> R
+    where
+        R: Send + 'static,
+        F: FnOnce(&mut A) -> R + Send + 'static,
+    {
+        self.call_deferred(f).recv()
+    }
+
+    /// Queue a call, returning a deferred reply handle.  Lets a caller
+    /// keep several requests in flight per actor (the paper's
+    /// `num_async` pipelining).
+    pub fn call_deferred<R, F>(&self, f: F) -> Reply<R>
+    where
+        R: Send + 'static,
+        F: FnOnce(&mut A) -> R + Send + 'static,
+    {
+        let (otx, orx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Box::new(move |state| {
+                let _ = otx.send(f(state));
+            }))
+            .unwrap_or_else(|_| panic!("actor {} died", self.name));
+        Reply(orx)
+    }
+
+    /// Queue a call whose result is delivered into a shared channel,
+    /// tagged with this submission's `tag` — the completion-queue
+    /// primitive behind `gather_async` (Ray's `ray.wait` analog).
+    pub fn call_into<R, F>(&self, tag: usize, out: mpsc::Sender<(usize, R)>, f: F)
+    where
+        R: Send + 'static,
+        F: FnOnce(&mut A) -> R + Send + 'static,
+    {
+        let _ = self.tx.send(Box::new(move |state| {
+            let _ = out.send((tag, f(state)));
+        }));
+    }
+
+    /// Fire-and-forget message (Ray `x.remote()` without `get`).
+    pub fn cast<F>(&self, f: F)
+    where
+        F: FnOnce(&mut A) + Send + 'static,
+    {
+        let _ = self.tx.send(Box::new(f));
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// Spawn a homogeneous group of actors ("create_rollout_workers").
+pub fn spawn_group<A: 'static, F>(
+    name: &str,
+    count: usize,
+    mut make_init: F,
+) -> Vec<ActorHandle<A>>
+where
+    F: FnMut(usize) -> Box<dyn FnOnce() -> A + Send>,
+{
+    (0..count)
+        .map(|i| {
+            let init = make_init(i);
+            ActorHandle::spawn(&format!("{name}-{i}"), move || init())
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Counter {
+        value: i64,
+    }
+
+    #[test]
+    fn call_returns_result() {
+        let h = ActorHandle::spawn("counter", || Counter { value: 0 });
+        let v = h.call(|c| {
+            c.value += 5;
+            c.value
+        });
+        assert_eq!(v, 5);
+    }
+
+    #[test]
+    fn messages_execute_in_send_order() {
+        let h = ActorHandle::spawn("counter", || Counter { value: 0 });
+        for _ in 0..100 {
+            h.cast(|c| c.value += 1);
+        }
+        h.cast(|c| c.value *= 2);
+        assert_eq!(h.call(|c| c.value), 200);
+    }
+
+    #[test]
+    fn state_initialized_on_actor_thread() {
+        let h = ActorHandle::spawn("t", || std::thread::current().id());
+        let init_tid = h.call(|tid| *tid);
+        let call_tid = h.call(|_| std::thread::current().id());
+        assert_eq!(init_tid, call_tid);
+        assert_ne!(init_tid, std::thread::current().id());
+    }
+
+    #[test]
+    fn call_deferred_pipelines() {
+        let h = ActorHandle::spawn("counter", || Counter { value: 0 });
+        let f1 = h.call_deferred(|c| {
+            c.value += 1;
+            c.value
+        });
+        let f2 = h.call_deferred(|c| {
+            c.value += 1;
+            c.value
+        });
+        assert_eq!(f1.recv(), 1);
+        assert_eq!(f2.recv(), 2);
+    }
+
+    #[test]
+    fn call_into_tags_completions() {
+        let h1 = ActorHandle::spawn("a", || Counter { value: 10 });
+        let h2 = ActorHandle::spawn("b", || Counter { value: 20 });
+        let (tx, rx) = mpsc::channel();
+        h1.call_into(0, tx.clone(), |c| c.value);
+        h2.call_into(1, tx.clone(), |c| c.value);
+        drop(tx);
+        let mut got: Vec<(usize, i64)> = rx.iter().collect();
+        got.sort();
+        assert_eq!(got, vec![(0, 10), (1, 20)]);
+    }
+
+    #[test]
+    fn group_spawns_distinct_actors() {
+        let group =
+            spawn_group("w", 4, |i| Box::new(move || Counter { value: i as i64 }));
+        let values: Vec<i64> =
+            group.iter().map(|h| h.call(|c| c.value)).collect();
+        assert_eq!(values, vec![0, 1, 2, 3]);
+        let ids: std::collections::HashSet<_> =
+            group.iter().map(|h| h.id()).collect();
+        assert_eq!(ids.len(), 4);
+    }
+
+    #[test]
+    fn clones_share_the_actor() {
+        let h = ActorHandle::spawn("counter", || Counter { value: 0 });
+        let h2 = h.clone();
+        h.cast(|c| c.value += 1);
+        h2.cast(|c| c.value += 1);
+        assert_eq!(h.call(|c| c.value), 2);
+    }
+
+    #[test]
+    fn actors_run_concurrently() {
+        // Two actors sleeping in parallel should take ~1x, not 2x.
+        let h1 = ActorHandle::spawn("s1", || ());
+        let h2 = ActorHandle::spawn("s2", || ());
+        let start = std::time::Instant::now();
+        let f1 = h1.call_deferred(|_| {
+            std::thread::sleep(std::time::Duration::from_millis(100))
+        });
+        let f2 = h2.call_deferred(|_| {
+            std::thread::sleep(std::time::Duration::from_millis(100))
+        });
+        f1.recv();
+        f2.recv();
+        assert!(start.elapsed() < std::time::Duration::from_millis(180));
+    }
+}

@@ -1,0 +1,44 @@
+//! A2C — the synchronous advantage actor-critic plan.
+//!
+//! ```text
+//! ParallelRollouts(bulk_sync) -> ConcatBatches(B) -> TrainOneStep
+//!   -> StandardMetricsReporting
+//! ```
+
+use crate::iter::LocalIter;
+use crate::metrics::TrainResult;
+use crate::ops::{
+    exact_batches, parallel_rollouts, standard_metrics_reporting,
+    train_one_step,
+};
+use crate::policy::PgLossKind;
+use crate::rollout::CollectMode;
+use crate::sample_batch::SampleBatch;
+
+use super::TrainerConfig;
+
+pub fn a2c_plan(config: &TrainerConfig) -> LocalIter<TrainResult> {
+    let workers = config.pg_workers(PgLossKind::A2c, CollectMode::OnPolicy);
+
+    // The a2c_grad artifact trains on a fixed batch shape; emit exactly
+    // that many rows per train step (remainder carried, nothing lost).
+    let grad_batch = crate::runtime::Manifest::load(
+        config.artifacts_dir.join("manifest.json"),
+    )
+    .map(|m| m.config.a2c_train_batch)
+    .unwrap_or(config.train_batch_size);
+
+    // Bulk-sync rollouts: one barrier round per item, concatenated, then
+    // chunked to the training shape.
+    let rollouts = parallel_rollouts(workers.remotes.clone())
+        .gather_sync()
+        .for_each(|round| SampleBatch::concat_all(&round))
+        .combine(exact_batches(grad_batch));
+
+    // TrainOneStep broadcasts fresh weights; the gather_sync barrier
+    // guarantees they land before the next round's fetches.
+    let train_op = rollouts
+        .for_each(train_one_step(workers.local.clone(), workers.remotes.clone()));
+
+    standard_metrics_reporting(train_op, &workers, 1)
+}

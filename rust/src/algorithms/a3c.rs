@@ -1,0 +1,43 @@
+//! A3C — the paper's running example (Fig. 4 / Fig. 9a / Listing A1).
+//!
+//! ```text
+//! workers = create_rollout_workers()
+//! grads = ParallelRollouts(workers)
+//!     .par_for_each(ComputeGradients())   # on the source actors
+//!     .gather_async()                     # pink arrow
+//! apply_op = grads.for_each(ApplyGradients(workers))
+//! return ReportMetrics(apply_op, workers)
+//! ```
+
+use crate::iter::LocalIter;
+use crate::metrics::TrainResult;
+use crate::ops::{
+    apply_gradients, compute_gradients, parallel_rollouts,
+    standard_metrics_reporting,
+};
+use crate::policy::PgLossKind;
+use crate::rollout::CollectMode;
+
+use super::TrainerConfig;
+
+pub fn a3c_plan(config: &TrainerConfig) -> LocalIter<TrainResult> {
+    // Workers compute gradients on their own fragments; size the
+    // fragment so fragment x envs == the a3c_grad artifact batch
+    // (otherwise rows beyond the artifact shape would be dropped).
+    let mut config = config.clone();
+    if let Ok(m) =
+        crate::runtime::Manifest::load(config.artifacts_dir.join("manifest.json"))
+    {
+        config.rollout_fragment_length =
+            (m.config.fragment / config.num_envs_per_worker).max(1);
+    }
+    let workers = config.pg_workers(PgLossKind::A3c, CollectMode::OnPolicy);
+
+    let grads = parallel_rollouts(workers.remotes.clone())
+        .for_each(|w, batch| compute_gradients()(w, batch))
+        .gather_async_with_source(config.num_async);
+
+    let apply_op = grads.for_each(apply_gradients(workers.local.clone()));
+
+    standard_metrics_reporting(apply_op, &workers, 1)
+}

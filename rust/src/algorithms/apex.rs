@@ -1,0 +1,108 @@
+//! Ape-X — high-throughput distributed prioritized replay (paper
+//! Fig. 10 / Listing A3).
+//!
+//! ```text
+//! rollouts  = ParallelRollouts(workers, mode="async", num_async=2)
+//! store_op  = rollouts.for_each(StoreToReplayBuffer(replay_actors))
+//!                     .zip_with_source_actor()
+//!                     .for_each(UpdateWorkerWeights(workers))
+//! replay_op = Replay(replay_actors, num_async=4)
+//!                     .for_each(learner)       # mailbox == Enqueue
+//!                     .for_each(UpdateReplayPriorities + TrainOneStep)
+//! merged    = Concurrently([store_op, replay_op], mode="async",
+//!                          output_indexes=[1])
+//! ```
+//! The paper's dedicated `LearnerThread` + `Enqueue`/`Dequeue` pair maps
+//! onto the local-worker actor: its mailbox *is* the in-queue, and
+//! `call` replies are the out-queue.
+
+use crate::iter::{concurrently, LocalIter, UnionMode};
+use crate::metrics::TrainResult;
+use crate::ops::{
+    create_replay_actors, parallel_rollouts, replay,
+    standard_metrics_reporting, store_to_replay_buffer,
+    update_target_network, TrainItem,
+};
+
+use super::dqn::{learn_dqn, DqnConfig};
+use super::TrainerConfig;
+
+/// Ape-X knobs on top of DQN's.
+#[derive(Debug, Clone)]
+pub struct ApexConfig {
+    pub dqn: DqnConfig,
+    pub num_replay_actors: usize,
+    /// Refresh a worker's weights after it contributed this many steps
+    /// (Listing A4's MAX_WEIGHT_SYNC_DELAY).
+    pub max_weight_sync_delay: usize,
+    /// In-flight replay requests per replay actor.
+    pub replay_queue_depth: usize,
+}
+
+impl Default for ApexConfig {
+    fn default() -> Self {
+        ApexConfig {
+            dqn: DqnConfig {
+                // Ape-X syncs weights through UpdateWorkerWeights in the
+                // store subflow, not the learner.
+                weight_sync_every: usize::MAX,
+                ..DqnConfig::default()
+            },
+            num_replay_actors: 2,
+            max_weight_sync_delay: 400,
+            replay_queue_depth: 4,
+        }
+    }
+}
+
+pub fn apex_plan(
+    config: &TrainerConfig,
+    apex: &ApexConfig,
+) -> LocalIter<TrainResult> {
+    let workers = config.dqn_workers();
+    let replay_actors = create_replay_actors(
+        apex.num_replay_actors,
+        apex.dqn.buffer_capacity,
+        apex.dqn.learning_starts,
+        64,
+    );
+
+    // (1) Async rollouts -> store -> refresh stale workers' weights.
+    let local = workers.local.clone();
+    let max_delay = apex.max_weight_sync_delay;
+    let mut store = store_to_replay_buffer(replay_actors.clone());
+    let mut steps_since_update =
+        std::collections::HashMap::<u64, usize>::new();
+    let store_op = parallel_rollouts(workers.remotes.clone())
+        .gather_async_with_source(config.num_async)
+        .for_each(move |(batch, worker)| {
+            let n = store(batch).len();
+            // UpdateWorkerWeights: per-worker staleness tracking
+            // (Listing A4 lines 96-118 collapse to this closure).
+            let entry = steps_since_update.entry(worker.id()).or_insert(0);
+            *entry += n;
+            if *entry >= max_delay {
+                *entry = 0;
+                let weights = local.call(|w| w.get_weights());
+                worker.cast(move |w| w.set_weights(&weights));
+            }
+            TrainItem::default()
+        });
+
+    // (2)+(3) Replay -> learner -> priorities, pipelined per actor.
+    let replay_op = replay(replay_actors, apex.replay_queue_depth)
+        .for_each(learn_dqn(&workers, usize::MAX))
+        .for_each(update_target_network(
+            workers.local.clone(),
+            apex.dqn.target_update_every,
+        ));
+
+    // Execute concurrently as fast as possible; only (2)+(3) surfaces.
+    let merged = concurrently(
+        vec![store_op, replay_op],
+        UnionMode::Async { buffer: 4 },
+        Some(vec![1]),
+    );
+
+    standard_metrics_reporting(merged, &workers, 1)
+}

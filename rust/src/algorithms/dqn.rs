@@ -1,0 +1,117 @@
+//! DQN — replay-buffer training with interleaved store/replay subflows
+//! (paper Fig. 12b):
+//!
+//! ```text
+//! store_op  = rollouts.for_each(StoreToReplayBuffer(buf))
+//! replay_op = Replay(buf).for_each(TrainOneStep)
+//!                        .for_each(UpdateTargetNetwork)
+//! dqn_op    = Union(store_op, replay_op)    # round-robin 1:1
+//! ```
+
+use crate::iter::{concurrently, LocalIter, UnionMode};
+use crate::metrics::TrainResult;
+use crate::ops::{
+    create_replay_actors, parallel_rollouts, replay,
+    standard_metrics_reporting, store_to_replay_buffer, update_target_network,
+    TrainItem,
+};
+use crate::rollout::WorkerSet;
+
+use super::TrainerConfig;
+
+/// DQN-specific knobs.
+#[derive(Debug, Clone)]
+pub struct DqnConfig {
+    pub buffer_capacity: usize,
+    pub learning_starts: usize,
+    pub target_update_every: usize,
+    /// Broadcast learner weights to workers every N train steps.
+    pub weight_sync_every: usize,
+}
+
+impl Default for DqnConfig {
+    fn default() -> Self {
+        DqnConfig {
+            buffer_capacity: 50_000,
+            learning_starts: 1_000,
+            target_update_every: 500,
+            weight_sync_every: 5,
+        }
+    }
+}
+
+pub fn dqn_plan(
+    config: &TrainerConfig,
+    dqn: &DqnConfig,
+) -> LocalIter<TrainResult> {
+    let workers = config.dqn_workers();
+    let replay_actors = create_replay_actors(
+        1,
+        dqn.buffer_capacity,
+        dqn.learning_starts,
+        64,
+    );
+
+    // (1) Collect and store transitions.
+    let store_op = parallel_rollouts(workers.remotes.clone())
+        .gather_async(config.num_async)
+        .for_each(store_to_replay_buffer(replay_actors.clone()))
+        .for_each(|_| TrainItem::default());
+
+    // (2) Replay, learn on the local worker, feed TD errors back as
+    // priorities, periodically sync target net + worker weights.
+    let replay_op = replay(replay_actors, 1)
+        .for_each(learn_dqn(&workers, dqn.weight_sync_every))
+        .for_each(update_target_network(
+            workers.local.clone(),
+            dqn.target_update_every,
+        ));
+
+    // Round-robin 1:1 keeps the classic DQN step ratio; only the
+    // training subflow's items surface.
+    let dqn_op = concurrently(
+        vec![store_op, replay_op],
+        UnionMode::RoundRobin { weights: None },
+        Some(vec![1]),
+    );
+
+    standard_metrics_reporting(dqn_op, &workers, 1)
+}
+
+/// The learner closure shared by DQN and Ape-X: learn on the local
+/// worker, push priorities back to the replay actor, occasionally
+/// broadcast weights.  Not-ready replay items (buffer below
+/// learning-starts) pass through as empty `TrainItem`s so concurrent
+/// subflows keep making progress.
+pub(crate) fn learn_dqn(
+    workers: &WorkerSet,
+    weight_sync_every: usize,
+) -> impl FnMut(
+    Option<(crate::replay::ReplaySample, crate::ops::ReplayActor)>,
+) -> TrainItem
+       + Send
+       + 'static {
+    let local = workers.local.clone();
+    let remotes = workers.remotes.clone();
+    let mut since_sync = 0usize;
+    move |item| {
+        let Some((sample, replay_actor)) = item else {
+            return TrainItem::default();
+        };
+        let steps = sample.batch.len();
+        let indices = sample.indices;
+        let batch = sample.batch;
+        let (stats, td) = local.call(move |w| w.learn_and_td(&batch));
+        replay_actor.cast(move |ra| ra.update_priorities(&indices, &td));
+        since_sync += 1;
+        if since_sync >= weight_sync_every {
+            since_sync = 0;
+            let weights = local.call(|w| w.get_weights());
+            for r in &remotes {
+                let w = weights.clone();
+                r.cast(move |worker| worker.set_weights(&w));
+            }
+        }
+        TrainItem::new(stats, steps)
+    }
+}

@@ -1,0 +1,138 @@
+//! IMPALA — async rollouts feeding a V-trace learner.
+//!
+//! ```text
+//! ParallelRollouts(async, num_async) -> assemble [T, B] time-major
+//!   -> learner (impala_grad: V-trace Pallas kernel)
+//!   -> broadcast weights -> StandardMetricsReporting
+//! ```
+//! Workers run `impala_b` env lanes for `impala_t` steps, so one worker
+//! fragment is exactly one learner batch; behaviour log-probs ride in
+//! the batch for the importance correction.
+
+use crate::iter::LocalIter;
+use crate::metrics::TrainResult;
+use crate::ops::{parallel_rollouts, standard_metrics_reporting, TrainItem};
+use crate::policy::{ImpalaBatch, PgLossKind};
+use crate::rollout::CollectMode;
+use crate::sample_batch::SampleBatch;
+
+use super::TrainerConfig;
+
+/// Convert an env-major worker fragment (lane-contiguous segments of
+/// length `t_len`) into the time-major [T, B] layout `impala_grad`
+/// expects.  The fragment must be exactly `t_len * b_lanes` rows with
+/// next_obs present.
+pub fn assemble_time_major(
+    batch: &SampleBatch,
+    t_len: usize,
+    b_lanes: usize,
+) -> ImpalaBatch {
+    assert_eq!(batch.len(), t_len * b_lanes, "fragment shape mismatch");
+    assert!(!batch.next_obs.is_empty(), "IMPALA needs next_obs");
+    let d = batch.obs_dim;
+    let mut out = ImpalaBatch {
+        t_len,
+        b_lanes,
+        obs: Vec::with_capacity(t_len * b_lanes * d),
+        actions: Vec::with_capacity(t_len * b_lanes),
+        behaviour_logp: Vec::with_capacity(t_len * b_lanes),
+        rewards: Vec::with_capacity(t_len * b_lanes),
+        dones: Vec::with_capacity(t_len * b_lanes),
+        bootstrap_obs: Vec::with_capacity(b_lanes * d),
+        mask: vec![1.0; t_len * b_lanes],
+    };
+    for t in 0..t_len {
+        for lane in 0..b_lanes {
+            let row = lane * t_len + t; // env-major -> time-major
+            out.obs.extend_from_slice(batch.obs_row(row));
+            out.actions.push(batch.actions[row]);
+            out.behaviour_logp.push(batch.action_logp[row]);
+            out.rewards.push(batch.rewards[row]);
+            out.dones.push(batch.dones[row]);
+        }
+    }
+    for lane in 0..b_lanes {
+        let last = lane * t_len + (t_len - 1);
+        out.bootstrap_obs.extend_from_slice(batch.next_obs_row(last));
+    }
+    out
+}
+
+pub fn impala_plan(config: &TrainerConfig) -> LocalIter<TrainResult> {
+    // Force the worker geometry the impala_grad artifact expects.
+    let mut config = config.clone();
+    let (t_len, b_lanes) = {
+        // Read the manifest once on the driver for shapes only.
+        let m = crate::runtime::Manifest::load(
+            config.artifacts_dir.join("manifest.json"),
+        )
+        .expect("manifest for impala geometry");
+        (m.config.impala_t, m.config.impala_b)
+    };
+    config.rollout_fragment_length = t_len;
+    config.num_envs_per_worker = b_lanes;
+
+    let workers = config
+        .pg_workers(PgLossKind::Impala, CollectMode::OnPolicyWithNextObs);
+
+    let local = workers.local.clone();
+    let remotes = workers.remotes.clone();
+    let train_op = parallel_rollouts(workers.remotes.clone())
+        .gather_async_with_source(config.num_async)
+        .for_each(move |(batch, source)| {
+            let steps = batch.len();
+            let tb = assemble_time_major(&batch, t_len, b_lanes);
+            let (stats, weights) = local.call(move |w| {
+                let stats = w.policy.learn_impala(&tb);
+                (stats, w.get_weights())
+            });
+            // Per-source weight refresh (fine-grained, like A3C) plus
+            // the learner keeps remotes loosely in sync.
+            source.cast(move |w| w.set_weights(&weights));
+            TrainItem::new(stats, steps)
+        });
+    let _ = remotes;
+
+    standard_metrics_reporting(train_op, &workers, 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sample_batch::SampleBatchBuilder;
+
+    #[test]
+    fn assemble_transposes_env_major_to_time_major() {
+        // 2 lanes x 3 steps; obs value encodes (lane, t) as lane*10+t.
+        let mut b = SampleBatchBuilder::new(1);
+        for lane in 0..2 {
+            for t in 0..3 {
+                b.add_step_with_next(
+                    &[(lane * 10 + t) as f32],
+                    t as i32,
+                    t as f32,
+                    &[(lane * 10 + t + 1) as f32],
+                    false,
+                    -0.5 * lane as f32,
+                    0.0,
+                );
+            }
+        }
+        let tb = assemble_time_major(&b.build(), 3, 2);
+        // Time-major: row index = t * B + lane.
+        assert_eq!(tb.obs, vec![0.0, 10.0, 1.0, 11.0, 2.0, 12.0]);
+        assert_eq!(tb.actions, vec![0, 0, 1, 1, 2, 2]);
+        assert_eq!(tb.behaviour_logp[1], -0.5);
+        // Bootstrap = next_obs of each lane's last row.
+        assert_eq!(tb.bootstrap_obs, vec![3.0, 13.0]);
+        assert_eq!(tb.mask, vec![1.0; 6]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn assemble_rejects_bad_shape() {
+        let mut b = SampleBatchBuilder::new(1);
+        b.add_step_with_next(&[0.0], 0, 0.0, &[1.0], false, 0.0, 0.0);
+        assemble_time_major(&b.build(), 3, 2);
+    }
+}

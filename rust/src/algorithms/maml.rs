@@ -1,0 +1,140 @@
+//! MAML — nested-loop meta-learning (paper §A.2.1, Fig. A2).
+//!
+//! ```text
+//! per meta-iteration (gather_sync barrier):
+//!   on every worker:  sample_task();
+//!                     k x { sample; inner-adapt (SGD) }   # inner loop
+//!                     post-adaptation gradient            # meta data
+//!   MetaUpdate: average post-adaptation grads, Adam step on the
+//!               learner, broadcast          # barrier orders this
+//! ```
+//! Substitution (DESIGN.md): first-order MAML — the meta-gradient is
+//! the post-adaptation gradient (no grad-through-grad), which preserves
+//! the *dataflow* the paper's case study is about.
+
+use crate::iter::LocalIter;
+use crate::metrics::TrainResult;
+use crate::ops::{standard_metrics_reporting, TrainItem};
+use crate::iter::ParIter;
+use crate::policy::{Gradients, PgLossKind};
+use crate::rollout::CollectMode;
+
+use super::{EnvKind, TrainerConfig};
+
+#[derive(Debug, Clone)]
+pub struct MamlConfig {
+    /// Inner-adaptation gradient steps per task.
+    pub inner_steps: usize,
+    /// Inner-loop SGD learning rate.
+    pub inner_lr: f32,
+}
+
+impl Default for MamlConfig {
+    fn default() -> Self {
+        MamlConfig { inner_steps: 1, inner_lr: 0.05 }
+    }
+}
+
+pub fn maml_plan(
+    config: &TrainerConfig,
+    maml: &MamlConfig,
+) -> LocalIter<TrainResult> {
+    let mut config = config.clone();
+    config.env = EnvKind::TaskCartPole;
+    // Size fragments to the a3c_grad artifact (see a3c_plan).
+    if let Ok(m) =
+        crate::runtime::Manifest::load(config.artifacts_dir.join("manifest.json"))
+    {
+        config.rollout_fragment_length =
+            (m.config.fragment / config.num_envs_per_worker).max(1);
+    }
+    let workers = config.pg_workers(PgLossKind::A3c, CollectMode::OnPolicy);
+
+    let inner_steps = maml.inner_steps;
+    let inner_lr = maml.inner_lr;
+
+    // Per-task work, scheduled on each worker: draw a task, adapt the
+    // *worker-local* policy copy, return the post-adaptation gradient.
+    let meta_grads = ParIter::from_actors(workers.remotes.clone(), move |w| {
+        w.sample_task();
+        for _ in 0..inner_steps {
+            let batch = w.sample();
+            let grads = w.policy.compute_gradients(&batch);
+            w.policy.sgd_apply(&grads.flat, inner_lr);
+        }
+        let post_batch = w.sample();
+        Some(w.policy.compute_gradients(&post_batch))
+    })
+    .gather_sync(); // barrier: all tasks finish before the meta step
+
+    let local = workers.local.clone();
+    let remotes = workers.remotes.clone();
+    let meta_update = meta_grads.for_each(move |grads_per_task| {
+        let steps: usize = grads_per_task.iter().map(|g| g.count).sum();
+        let avg = average_gradients(&grads_per_task);
+        let stats = avg.stats.clone();
+        let weights = local.call(move |w| {
+            w.apply_gradients(&avg);
+            w.get_weights()
+        });
+        // Broadcast the new meta-parameters; the gather_sync barrier
+        // orders these casts before the next meta-iteration's fetches.
+        for r in &remotes {
+            let wt = weights.clone();
+            r.cast(move |worker| worker.set_weights(&wt));
+        }
+        TrainItem::new(stats, steps)
+    });
+
+    standard_metrics_reporting(meta_update, &workers, 1)
+}
+
+/// Average flat gradients across tasks (stats averaged too).
+pub fn average_gradients(grads: &[Gradients]) -> Gradients {
+    assert!(!grads.is_empty());
+    let n = grads.len() as f32;
+    let dim = grads[0].flat.len();
+    let mut flat = vec![0.0f32; dim];
+    for g in grads {
+        assert_eq!(g.flat.len(), dim);
+        for (acc, v) in flat.iter_mut().zip(&g.flat) {
+            *acc += v / n;
+        }
+    }
+    let mut stats = std::collections::BTreeMap::new();
+    for g in grads {
+        for (k, v) in &g.stats {
+            *stats.entry(k.clone()).or_insert(0.0) += v / n as f64;
+        }
+    }
+    Gradients { flat, stats, count: grads.iter().map(|g| g.count).sum() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn average_gradients_means_components() {
+        let g1 = Gradients {
+            flat: vec![1.0, 2.0],
+            stats: [("loss".to_string(), 1.0)].into(),
+            count: 10,
+        };
+        let g2 = Gradients {
+            flat: vec![3.0, 4.0],
+            stats: [("loss".to_string(), 3.0)].into(),
+            count: 20,
+        };
+        let avg = average_gradients(&[g1, g2]);
+        assert_eq!(avg.flat, vec![2.0, 3.0]);
+        assert_eq!(avg.stats["loss"], 2.0);
+        assert_eq!(avg.count, 30);
+    }
+
+    #[test]
+    #[should_panic]
+    fn average_gradients_rejects_empty() {
+        average_gradients(&[]);
+    }
+}

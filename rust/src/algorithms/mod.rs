@@ -1,0 +1,162 @@
+//! The algorithm suite, each expressed as a short dataflow plan over the
+//! operators in `crate::ops` — the paper's §5 port of RLlib.
+//!
+//! Every `*_plan` function returns a lazy `LocalIter<TrainResult>`; one
+//! `next()` is one training report.  Compare each plan with its
+//! low-level twin in `crate::baseline` — the LoC ratio between the two
+//! is Table 2.
+
+pub mod a2c;
+pub mod a3c;
+pub mod apex;
+pub mod dqn;
+pub mod impala;
+pub mod maml;
+pub mod multi_agent;
+pub mod ppo;
+
+pub use a2c::a2c_plan;
+pub use a3c::a3c_plan;
+pub use apex::{apex_plan, ApexConfig};
+pub use dqn::{dqn_plan, DqnConfig};
+pub use impala::{assemble_time_major, impala_plan};
+pub use maml::{maml_plan, MamlConfig};
+pub use multi_agent::{ma_workers, multi_agent_plan, MultiAgentConfig};
+pub use ppo::{ppo_plan, ppo_plan_with_epochs};
+
+use std::path::PathBuf;
+
+use crate::env::{CartPole, DummyEnv, Env, MountainCar, TaskCartPole};
+use crate::policy::{DqnPolicy, DummyPolicy, PgLossKind, PgPolicy, Policy};
+use crate::rollout::{CollectMode, RolloutWorker, WorkerSet};
+
+/// Common trainer configuration (the subset of RLlib's config the
+/// ported algorithms use).
+#[derive(Debug, Clone)]
+pub struct TrainerConfig {
+    pub num_workers: usize,
+    pub num_envs_per_worker: usize,
+    /// Steps per worker fragment.  Must not exceed the artifact
+    /// `fragment` for gradient-on-worker algorithms.
+    pub rollout_fragment_length: usize,
+    /// ConcatBatches target for the sync algorithms.
+    pub train_batch_size: usize,
+    pub lr: f32,
+    pub artifacts_dir: PathBuf,
+    pub seed: u64,
+    /// gather_async in-flight requests per worker.
+    pub num_async: usize,
+    /// Which env the workers run.
+    pub env: EnvKind,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EnvKind {
+    CartPole,
+    /// Task-distribution CartPole (MAML).
+    TaskCartPole,
+    /// MountainCar-v0 — sparse-reward control; needs artifacts built
+    /// with `--obs-dim 2 --num-actions 3` (see aot.py).
+    MountainCar,
+    /// Trivial env + dummy policy (sampling microbenchmark, Fig. 13a).
+    Dummy,
+}
+
+impl Default for TrainerConfig {
+    fn default() -> Self {
+        TrainerConfig {
+            num_workers: 2,
+            // Matches the artifact inference batch (inf_batch = 8) so
+            // no forward-pass padding is wasted (perf O5).
+            num_envs_per_worker: 8,
+            rollout_fragment_length: 64,
+            train_batch_size: 256,
+            lr: 5e-3,
+            artifacts_dir: crate::runtime::XlaRuntime::default_dir(),
+            seed: 0,
+            num_async: 2,
+            env: EnvKind::CartPole,
+        }
+    }
+}
+
+impl TrainerConfig {
+    pub fn make_envs(&self, worker_idx: usize) -> Vec<Box<dyn Env>> {
+        (0..self.num_envs_per_worker)
+            .map(|e| {
+                let seed = self
+                    .seed
+                    .wrapping_add((worker_idx as u64) << 16)
+                    .wrapping_add(e as u64);
+                match self.env {
+                    EnvKind::CartPole => {
+                        Box::new(CartPole::new(seed)) as Box<dyn Env>
+                    }
+                    EnvKind::TaskCartPole => Box::new(TaskCartPole::new(seed)),
+                    EnvKind::MountainCar => Box::new(MountainCar::new(seed)),
+                    EnvKind::Dummy => Box::new(DummyEnv::new(4, 100)),
+                }
+            })
+            .collect()
+    }
+
+    /// A worker set whose policies are the policy-gradient family.
+    pub fn pg_workers(&self, kind: PgLossKind, mode: CollectMode) -> WorkerSet {
+        let cfg = self.clone();
+        WorkerSet::new(self.num_workers, move |i| {
+            let cfg = cfg.clone();
+            Box::new(move || {
+                let policy: Box<dyn Policy> = if cfg.env == EnvKind::Dummy {
+                    Box::new(DummyPolicy::new(cfg.lr))
+                } else {
+                    Box::new(PgPolicy::create(
+                        &cfg.artifacts_dir,
+                        kind,
+                        cfg.lr,
+                        cfg.seed.wrapping_add(i as u64),
+                    ))
+                };
+                RolloutWorker::new(
+                    cfg.make_envs(i),
+                    policy,
+                    cfg.rollout_fragment_length,
+                    mode,
+                )
+            })
+        })
+    }
+
+    /// A worker set with DQN policies (Ape-X-style per-worker epsilons).
+    pub fn dqn_workers(&self) -> WorkerSet {
+        let cfg = self.clone();
+        let n = self.num_workers.max(1);
+        WorkerSet::new(self.num_workers, move |i| {
+            let cfg = cfg.clone();
+            // Learner (i=0) acts greedily; workers get the Ape-X
+            // epsilon ladder 0.4^(1 + 7*i/(N-1)).
+            let epsilon = if i == 0 {
+                0.0
+            } else {
+                0.4f64.powf(1.0 + 7.0 * (i - 1) as f64 / (n.max(2) - 1) as f64)
+            };
+            Box::new(move || {
+                let policy: Box<dyn Policy> = if cfg.env == EnvKind::Dummy {
+                    Box::new(DummyPolicy::new(cfg.lr))
+                } else {
+                    Box::new(DqnPolicy::create(
+                        &cfg.artifacts_dir,
+                        cfg.lr,
+                        epsilon,
+                        cfg.seed.wrapping_add(i as u64),
+                    ))
+                };
+                RolloutWorker::new(
+                    cfg.make_envs(i),
+                    policy,
+                    cfg.rollout_fragment_length,
+                    CollectMode::Transitions,
+                )
+            })
+        })
+    }
+}

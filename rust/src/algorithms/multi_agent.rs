@@ -1,0 +1,268 @@
+//! Multi-agent PPO + DQN composition (paper §5.3, Fig. 11/12) — the
+//! workflow the paper says "end users could not compose before":
+//! two *different* training algorithms, with different distributed
+//! patterns (on-policy sync vs replay), drive disjoint policies in one
+//! environment, composed with `duplicate` + `Union`.
+//!
+//! ```text
+//! rollouts = ParallelRollouts(ma_workers).gather_async()
+//! (r1, r2) = rollouts.duplicate()
+//! ppo_op = r1.for_each(Select("ppo")).combine(ConcatBatches(B))
+//!            .for_each(TrainOneStep(ppo))
+//! dqn_op = Union(r2.for_each(Select("dqn")).for_each(StoreToReplay),
+//!                Replay(buf).for_each(TrainOneStep(dqn))
+//!                           .for_each(UpdateTargetNetwork))
+//! return Union(ppo_op, dqn_op)
+//! ```
+
+use std::collections::BTreeMap;
+
+use crate::actor::{spawn_group, ActorHandle};
+use crate::env::MultiAgentCartPole;
+use crate::iter::{concurrently, LocalIter, ParIter, UnionMode};
+use crate::metrics::{MetricsHub, TrainResult};
+use crate::ops::{
+    concat_batches, create_replay_actors, replay, select_policy,
+    store_to_replay_buffer, TrainItem,
+};
+use crate::policy::{DqnPolicy, PgLossKind, PgPolicy, Policy};
+use crate::rollout::MultiAgentRolloutWorker;
+
+use super::dqn::DqnConfig;
+use super::TrainerConfig;
+
+#[derive(Debug, Clone)]
+pub struct MultiAgentConfig {
+    /// Agents mapped to each policy (paper Fig. 14: 4 per policy).
+    pub agents_per_policy: usize,
+    pub dqn: DqnConfig,
+    pub ppo_epochs: usize,
+}
+
+impl Default for MultiAgentConfig {
+    fn default() -> Self {
+        MultiAgentConfig {
+            agents_per_policy: 4,
+            dqn: DqnConfig {
+                learning_starts: 500,
+                ..DqnConfig::default()
+            },
+            ppo_epochs: 2,
+        }
+    }
+}
+
+type MaWorker = ActorHandle<MultiAgentRolloutWorker>;
+
+/// Spawn multi-agent workers; index 0 is the learner (local).
+pub fn ma_workers(
+    config: &TrainerConfig,
+    ma: &MultiAgentConfig,
+    include_dqn: bool,
+    include_ppo: bool,
+) -> (MaWorker, Vec<MaWorker>) {
+    let make = {
+        let config = config.clone();
+        let ma = ma.clone();
+        move |i: usize| -> Box<dyn FnOnce() -> MultiAgentRolloutWorker + Send> {
+            let config = config.clone();
+            let ma = ma.clone();
+            Box::new(move || {
+                let num_agents = ma.agents_per_policy
+                    * (include_dqn as usize + include_ppo as usize);
+                let env = MultiAgentCartPole::new(
+                    num_agents,
+                    config.seed.wrapping_add((i as u64) << 16),
+                    move |agent| {
+                        if !include_dqn {
+                            "ppo".to_string()
+                        } else if !include_ppo {
+                            "dqn".to_string()
+                        } else if agent % 2 == 0 {
+                            "ppo".to_string()
+                        } else {
+                            "dqn".to_string()
+                        }
+                    },
+                );
+                let mut policies: BTreeMap<String, Box<dyn Policy>> =
+                    BTreeMap::new();
+                if include_ppo {
+                    policies.insert(
+                        "ppo".into(),
+                        Box::new(PgPolicy::create(
+                            &config.artifacts_dir,
+                            PgLossKind::Ppo { epochs: ma.ppo_epochs },
+                            config.lr,
+                            config.seed.wrapping_add(i as u64),
+                        )),
+                    );
+                }
+                if include_dqn {
+                    let epsilon = if i == 0 { 0.0 } else { 0.1 };
+                    policies.insert(
+                        "dqn".into(),
+                        Box::new(DqnPolicy::create(
+                            &config.artifacts_dir,
+                            config.lr,
+                            epsilon,
+                            config.seed.wrapping_add(1000 + i as u64),
+                        )),
+                    );
+                }
+                MultiAgentRolloutWorker::new(
+                    env,
+                    policies,
+                    config.rollout_fragment_length,
+                )
+            })
+        }
+    };
+    let local = {
+        let init = make(0);
+        ActorHandle::spawn("ma_local", move || init())
+    };
+    let remotes = spawn_group("ma_worker", config.num_workers, |i| make(i + 1));
+    (local, remotes)
+}
+
+/// The composed two-trainer plan (Fig. 11b).
+pub fn multi_agent_plan(
+    config: &TrainerConfig,
+    ma: &MultiAgentConfig,
+) -> LocalIter<TrainResult> {
+    let (local, remotes) = ma_workers(config, ma, true, true);
+
+    let rollouts =
+        ParIter::from_actors(remotes.clone(), |w| Some(w.sample()))
+            .gather_async(config.num_async);
+    let (r_ppo, r_dqn) = rollouts.duplicate();
+
+    // --- PPO subflow (Fig. 12a) ---
+    let ppo_local = local.clone();
+    let ppo_remotes = remotes.clone();
+    let ppo_op = r_ppo
+        .filter_map(select_policy("ppo"))
+        .combine(concat_batches(config.train_batch_size))
+        .for_each(move |batch| {
+            let steps = batch.len();
+            let (stats, weights) = ppo_local.call(move |w| {
+                let stats = w.learn_on_batch("ppo", &batch);
+                (stats, w.get_weights("ppo"))
+            });
+            for r in &ppo_remotes {
+                let wt = weights.clone();
+                r.cast(move |w| w.set_weights("ppo", &wt));
+            }
+            TrainItem::new(prefix_stats("ppo", stats), steps)
+        });
+
+    // --- DQN subflow (Fig. 12b) ---
+    let replay_actors = create_replay_actors(
+        1,
+        ma.dqn.buffer_capacity,
+        ma.dqn.learning_starts,
+        64,
+    );
+    let mut store = store_to_replay_buffer(replay_actors.clone());
+    let store_op = r_dqn
+        .filter_map(select_policy("dqn"))
+        .for_each(move |b| {
+            store(b);
+            TrainItem::default()
+        });
+    let dqn_local = local.clone();
+    let dqn_remotes = remotes.clone();
+    let target_every = ma.dqn.target_update_every;
+    let sync_every = ma.dqn.weight_sync_every;
+    let mut since_sync = 0usize;
+    let mut since_target = 0usize;
+    let replay_op = replay(replay_actors, 1).for_each(move |item| {
+        let Some((sample, ra)) = item else {
+            return TrainItem::default(); // buffer not ready yet
+        };
+        let steps = sample.batch.len();
+        let indices = sample.indices;
+        let batch = sample.batch;
+        let (stats, td) = dqn_local.call(move |w| {
+            let stats = w.learn_on_batch("dqn", &batch);
+            let td = w.policies["dqn"].td_abs().unwrap_or_default();
+            (stats, td)
+        });
+        ra.cast(move |state| state.update_priorities(&indices, &td));
+        since_sync += 1;
+        since_target += steps;
+        if since_sync >= sync_every {
+            since_sync = 0;
+            let weights = dqn_local.call(|w| w.get_weights("dqn"));
+            for r in &dqn_remotes {
+                let wt = weights.clone();
+                r.cast(move |w| w.set_weights("dqn", &wt));
+            }
+        }
+        if since_target >= target_every {
+            since_target = 0;
+            dqn_local.cast(|w| w.update_target("dqn"));
+        }
+        TrainItem::new(prefix_stats("dqn", stats), steps)
+    });
+    let dqn_op = concurrently(
+        vec![store_op, replay_op],
+        UnionMode::RoundRobin { weights: None },
+        Some(vec![1]),
+    );
+
+    // --- Union of the two trainers (Fig. 11b) ---
+    let merged = concurrently(
+        vec![ppo_op, dqn_op],
+        UnionMode::RoundRobin { weights: None },
+        None,
+    );
+
+    ma_metrics_reporting(merged, local, remotes)
+}
+
+fn prefix_stats(
+    prefix: &str,
+    stats: BTreeMap<String, f64>,
+) -> BTreeMap<String, f64> {
+    stats
+        .into_iter()
+        .map(|(k, v)| (format!("{prefix}/{k}"), v))
+        .collect()
+}
+
+/// Metrics reporting over multi-agent workers.
+pub fn ma_metrics_reporting(
+    inner: LocalIter<TrainItem>,
+    local: MaWorker,
+    remotes: Vec<MaWorker>,
+) -> LocalIter<TrainResult> {
+    let mut inner = inner;
+    let mut hub = MetricsHub::new(100);
+    LocalIter::from_fn(move || {
+        let item = inner.next()?;
+        hub.num_env_steps_trained += item.steps_trained as u64;
+        hub.num_grad_updates += 1;
+        for (k, v) in item.stats {
+            hub.record_learner_stat(&k, v);
+        }
+        let replies: Vec<_> = std::iter::once(&local)
+            .chain(remotes.iter())
+            .map(|h| {
+                h.call_deferred(|w| {
+                    let eps = w.pop_episodes();
+                    let steps = w.num_steps_sampled;
+                    w.num_steps_sampled = 0;
+                    (eps, steps)
+                })
+            })
+            .collect();
+        for r in replies {
+            let (eps, steps) = r.recv();
+            hub.record_episodes(&eps);
+            hub.num_env_steps_sampled += steps as u64;
+        }
+        Some(hub.snapshot())
+    })
+}

@@ -1,0 +1,43 @@
+//! PPO — bulk-sync collection, SGD epochs in the learner.
+//!
+//! ```text
+//! ParallelRollouts(bulk_sync) -> ConcatBatches(B)
+//!   -> TrainOneStep (SGD epochs over shuffled minibatches)
+//!   -> StandardMetricsReporting
+//! ```
+//! The SGD-epoch loop lives in `PgPolicy::learn_on_batch` (the paper
+//! keeps it inside `TrainOneStep`'s `sgd_minibatch` config likewise).
+
+use crate::iter::LocalIter;
+use crate::metrics::TrainResult;
+use crate::ops::{
+    concat_batches, parallel_rollouts, standard_metrics_reporting,
+    train_one_step,
+};
+use crate::policy::PgLossKind;
+use crate::rollout::CollectMode;
+use crate::sample_batch::SampleBatch;
+
+use super::TrainerConfig;
+
+pub fn ppo_plan(config: &TrainerConfig) -> LocalIter<TrainResult> {
+    ppo_plan_with_epochs(config, 4)
+}
+
+pub fn ppo_plan_with_epochs(
+    config: &TrainerConfig,
+    epochs: usize,
+) -> LocalIter<TrainResult> {
+    let workers =
+        config.pg_workers(PgLossKind::Ppo { epochs }, CollectMode::OnPolicy);
+
+    let rollouts = parallel_rollouts(workers.remotes.clone())
+        .gather_sync()
+        .for_each(|round| SampleBatch::concat_all(&round))
+        .combine(concat_batches(config.train_batch_size));
+
+    let train_op = rollouts
+        .for_each(train_one_step(workers.local.clone(), workers.remotes.clone()));
+
+    standard_metrics_reporting(train_op, &workers, 1)
+}

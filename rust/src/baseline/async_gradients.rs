@@ -1,0 +1,140 @@
+//! A3C the low-level way — a direct port of the paper's Listing A2
+//! ("a small portion of the RLlib A3C policy optimizer"): explicit
+//! pending-gradient map, wait-for-one completion loop, manual weight
+//! put/get, per-phase timers.  Compare with `algorithms::a3c_plan`
+//! (11 lines of plan) — this file is the Table 2 numerator.
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+
+use crate::actor::ActorHandle;
+use crate::metrics::{MetricsHub, TrainResult};
+use crate::policy::Gradients;
+use crate::rollout::{RolloutWorker, WorkerSet};
+use crate::util::TimerStat;
+
+pub struct AsyncGradientsOptimizer {
+    workers: WorkerSet,
+
+    // Timers, exactly like the original's TimerStat instrumentation.
+    wait_timer: TimerStat,
+    apply_timer: TimerStat,
+    dispatch_timer: TimerStat,
+
+    // Training information.
+    num_steps_sampled: usize,
+    num_steps_trained: usize,
+
+    // The completion queue + in-flight bookkeeping (ray.wait analog).
+    result_rx: mpsc::Receiver<(usize, Gradients)>,
+    result_tx: mpsc::Sender<(usize, Gradients)>,
+    pending_gradients: HashMap<usize, ActorHandle<RolloutWorker>>,
+    next_tag: usize,
+
+    hub: MetricsHub,
+    started: bool,
+}
+
+impl AsyncGradientsOptimizer {
+    pub fn new(workers: WorkerSet) -> Self {
+        let (result_tx, result_rx) = mpsc::channel();
+        AsyncGradientsOptimizer {
+            workers,
+            wait_timer: TimerStat::new(),
+            apply_timer: TimerStat::new(),
+            dispatch_timer: TimerStat::new(),
+            num_steps_sampled: 0,
+            num_steps_trained: 0,
+            result_rx,
+            result_tx,
+            pending_gradients: HashMap::new(),
+            next_tag: 0,
+            hub: MetricsHub::new(100),
+            started: false,
+        }
+    }
+
+    /// Kick off one sample+gradient task on `worker` (the original's
+    /// `worker.compute_gradients.remote(worker.sample.remote())`).
+    fn launch_gradient_task(&mut self, worker: ActorHandle<RolloutWorker>) {
+        let tag = self.next_tag;
+        self.next_tag += 1;
+        worker.call_into(tag, self.result_tx.clone(), |w| {
+            w.sample_and_compute_gradients()
+        });
+        self.pending_gradients.insert(tag, worker);
+    }
+
+    /// Initialization: put weights in the object store and broadcast,
+    /// then launch one gradient task per worker.
+    fn start(&mut self) {
+        // Get weights from the local rollout actor.
+        let weights = self.workers.local.call(|w| w.get_weights());
+        for worker in self.workers.remotes.clone() {
+            // Set weights on the remote rollout actor.
+            let w = weights.clone();
+            worker.cast(move |state| state.set_weights(&w));
+            // Kick off gradient computation.
+            self.launch_gradient_task(worker);
+        }
+        self.started = true;
+    }
+
+    /// One optimization step: wait for a single gradient, apply it on
+    /// the local worker, push fresh weights to the producing worker,
+    /// relaunch its task.  Mirrors Listing A2's training loop body.
+    pub fn step(&mut self) -> TrainResult {
+        if !self.started {
+            self.start();
+        }
+        assert!(!self.pending_gradients.is_empty());
+
+        // Wait for one gradient to complete.
+        let (tag, gradient) = self.wait_timer.time(|| {
+            self.result_rx.recv().expect("worker died")
+        });
+        let worker = self
+            .pending_gradients
+            .remove(&tag)
+            .expect("unknown completion tag");
+
+        // Apply the gradient on the local worker.
+        let stats = gradient.stats.clone();
+        let count = gradient.count;
+        let weights = self.apply_timer.time(|| {
+            self.workers.local.call(move |w| {
+                w.apply_gradients(&gradient);
+                w.get_weights()
+            })
+        });
+        self.num_steps_sampled += count;
+        self.num_steps_trained += count;
+
+        // Set new weights on the worker and launch the next task.
+        let dispatch_start = std::time::Instant::now();
+        let wt = weights;
+        worker.cast(move |w| w.set_weights(&wt));
+        self.launch_gradient_task(worker);
+        self.dispatch_timer.push(dispatch_start.elapsed());
+
+        // Collect metrics for reporting.
+        self.hub.num_env_steps_trained = self.num_steps_trained as u64;
+        self.hub.num_grad_updates += 1;
+        for (k, v) in stats {
+            self.hub.record_learner_stat(&k, v);
+        }
+        let (episodes, sampled) = self.workers.collect_metrics();
+        self.hub.record_episodes(&episodes);
+        self.hub.num_env_steps_sampled += sampled as u64;
+        self.hub.snapshot()
+    }
+
+    pub fn timer_report(&self) -> String {
+        format!(
+            "wait={:?} apply={:?} dispatch={:?}",
+            self.wait_timer.mean(),
+            self.apply_timer.mean(),
+            self.dispatch_timer.mean()
+        )
+    }
+}

@@ -1,0 +1,127 @@
+//! IMPALA the low-level way — an async sample/learn pipeline with an
+//! explicit completion queue and manual weight pushes (the structure of
+//! RLlib's original IMPALA implementation's aggregation path, minus the
+//! multi-level aggregation tree).  Baseline for Fig. 13b.
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+
+use crate::algorithms::assemble_time_major;
+use crate::metrics::{MetricsHub, TrainResult};
+use crate::rollout::WorkerSet;
+use crate::sample_batch::SampleBatch;
+use crate::util::TimerStat;
+
+pub struct AsyncPipelineOptimizer {
+    workers: WorkerSet,
+    t_len: usize,
+    b_lanes: usize,
+    queue_depth: usize,
+
+    sample_rx: mpsc::Receiver<(usize, SampleBatch)>,
+    sample_tx: mpsc::Sender<(usize, SampleBatch)>,
+    tags: HashMap<usize, usize>,
+    next_tag: usize,
+
+    wait_timer: TimerStat,
+    learn_timer: TimerStat,
+
+    num_steps_sampled: usize,
+    num_steps_trained: usize,
+    hub: MetricsHub,
+    started: bool,
+}
+
+impl AsyncPipelineOptimizer {
+    pub fn new(
+        workers: WorkerSet,
+        t_len: usize,
+        b_lanes: usize,
+        queue_depth: usize,
+    ) -> Self {
+        let (sample_tx, sample_rx) = mpsc::channel();
+        AsyncPipelineOptimizer {
+            workers,
+            t_len,
+            b_lanes,
+            queue_depth,
+            sample_rx,
+            sample_tx,
+            tags: HashMap::new(),
+            next_tag: 0,
+            wait_timer: TimerStat::new(),
+            learn_timer: TimerStat::new(),
+            num_steps_sampled: 0,
+            num_steps_trained: 0,
+            hub: MetricsHub::new(100),
+            started: false,
+        }
+    }
+
+    fn launch(&mut self, worker_idx: usize) {
+        let tag = self.next_tag;
+        self.next_tag += 1;
+        self.workers.remotes[worker_idx].call_into(
+            tag,
+            self.sample_tx.clone(),
+            |w| w.sample(),
+        );
+        self.tags.insert(tag, worker_idx);
+    }
+
+    fn start(&mut self) {
+        let weights = self.workers.local.call(|w| w.get_weights());
+        for idx in 0..self.workers.remotes.len() {
+            let w = weights.clone();
+            self.workers.remotes[idx].cast(move |state| state.set_weights(&w));
+            for _ in 0..self.queue_depth {
+                self.launch(idx);
+            }
+        }
+        self.started = true;
+    }
+
+    /// One learner step: wait for a fragment, V-trace learn, push
+    /// weights back to the producing worker, relaunch its task.
+    pub fn step(&mut self) -> TrainResult {
+        if !self.started {
+            self.start();
+        }
+        let (tag, batch) = self
+            .wait_timer
+            .time(|| self.sample_rx.recv().expect("worker died"));
+        let worker_idx = self.tags.remove(&tag).expect("unknown tag");
+        let steps = batch.len();
+        self.num_steps_sampled += steps;
+
+        let tb = assemble_time_major(&batch, self.t_len, self.b_lanes);
+        let (stats, weights) = self.learn_timer.time(|| {
+            self.workers.local.call(move |w| {
+                let stats = w.policy.learn_impala(&tb);
+                (stats, w.get_weights())
+            })
+        });
+        self.num_steps_trained += steps;
+
+        self.workers.remotes[worker_idx].cast(move |w| w.set_weights(&weights));
+        self.launch(worker_idx);
+
+        self.hub.num_env_steps_trained = self.num_steps_trained as u64;
+        self.hub.num_grad_updates += 1;
+        for (k, v) in stats {
+            self.hub.record_learner_stat(&k, v);
+        }
+        let (episodes, sampled) = self.workers.collect_metrics();
+        self.hub.record_episodes(&episodes);
+        self.hub.num_env_steps_sampled += sampled as u64;
+        self.hub.snapshot()
+    }
+
+    pub fn timer_report(&self) -> String {
+        format!(
+            "wait={:?} learn={:?}",
+            self.wait_timer.mean(),
+            self.learn_timer.mean()
+        )
+    }
+}

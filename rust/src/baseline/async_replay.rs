@@ -1,0 +1,260 @@
+//! Ape-X the low-level way — a direct port of the paper's Listing A4
+//! (`AsyncReplayOptimizer`): sample task pool, replay task pool,
+//! staleness-tracked weight syncs, priority round-trips, eight timers.
+//! Compare with `algorithms::apex_plan` — this file is what the flow
+//! version collapses into three subflows + one Concurrently.
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+
+use crate::metrics::{MetricsHub, TrainResult};
+use crate::ops::{create_replay_actors, ReplayActor};
+use crate::replay::ReplaySample;
+use crate::rollout::WorkerSet;
+use crate::sample_batch::SampleBatch;
+use crate::util::{Rng, TimerStat};
+
+const SAMPLE_QUEUE_DEPTH: usize = 2;
+const REPLAY_QUEUE_DEPTH: usize = 4;
+
+pub struct AsyncReplayOptimizer {
+    workers: WorkerSet,
+    replay_actors: Vec<ReplayActor>,
+    max_weight_sync_delay: usize,
+    target_update_every: usize,
+
+    // Timers, mirroring Listing A4's dict of TimerStats.
+    timers: HashMap<&'static str, TimerStat>,
+
+    // Sample task pool: completion queue + tag -> worker map.
+    sample_rx: mpsc::Receiver<(usize, SampleBatch)>,
+    sample_tx: mpsc::Sender<(usize, SampleBatch)>,
+    sample_tags: HashMap<usize, usize>, // tag -> worker index
+
+    // Replay task pool.
+    replay_rx: mpsc::Receiver<(usize, Option<ReplaySample>)>,
+    replay_tx: mpsc::Sender<(usize, Option<ReplaySample>)>,
+    replay_tags: HashMap<usize, usize>, // tag -> replay actor index
+
+    next_tag: usize,
+    steps_since_update: HashMap<usize, usize>,
+    steps_since_target: usize,
+    num_weight_syncs: usize,
+    num_steps_sampled: usize,
+    num_steps_trained: usize,
+    rng: Rng,
+    hub: MetricsHub,
+    started: bool,
+}
+
+impl AsyncReplayOptimizer {
+    pub fn new(
+        workers: WorkerSet,
+        num_replay_actors: usize,
+        buffer_capacity: usize,
+        learning_starts: usize,
+        replay_batch_size: usize,
+        max_weight_sync_delay: usize,
+        target_update_every: usize,
+    ) -> Self {
+        let replay_actors = create_replay_actors(
+            num_replay_actors,
+            buffer_capacity,
+            learning_starts,
+            replay_batch_size,
+        );
+        let (sample_tx, sample_rx) = mpsc::channel();
+        let (replay_tx, replay_rx) = mpsc::channel();
+        let timers = [
+            "put_weights",
+            "get_samples",
+            "sample_processing",
+            "replay_processing",
+            "update_priorities",
+            "train",
+        ]
+        .into_iter()
+        .map(|k| (k, TimerStat::new()))
+        .collect();
+        AsyncReplayOptimizer {
+            workers,
+            replay_actors,
+            max_weight_sync_delay,
+            target_update_every,
+            timers,
+            sample_rx,
+            sample_tx,
+            sample_tags: HashMap::new(),
+            replay_rx,
+            replay_tx,
+            replay_tags: HashMap::new(),
+            next_tag: 0,
+            steps_since_update: HashMap::new(),
+            steps_since_target: 0,
+            num_weight_syncs: 0,
+            num_steps_sampled: 0,
+            num_steps_trained: 0,
+            rng: Rng::new(0xA9E),
+            hub: MetricsHub::new(100),
+            started: false,
+        }
+    }
+
+    fn launch_sample_task(&mut self, worker_idx: usize) {
+        let tag = self.next_tag;
+        self.next_tag += 1;
+        self.workers.remotes[worker_idx].call_into(
+            tag,
+            self.sample_tx.clone(),
+            |w| w.sample(),
+        );
+        self.sample_tags.insert(tag, worker_idx);
+    }
+
+    fn launch_replay_task(&mut self, actor_idx: usize) {
+        let tag = self.next_tag;
+        self.next_tag += 1;
+        self.replay_actors[actor_idx].call_into(
+            tag,
+            self.replay_tx.clone(),
+            |ra| ra.replay(),
+        );
+        self.replay_tags.insert(tag, actor_idx);
+    }
+
+    fn start(&mut self) {
+        // Kick off replay tasks for local gradient updates.
+        for actor_idx in 0..self.replay_actors.len() {
+            for _ in 0..REPLAY_QUEUE_DEPTH {
+                self.launch_replay_task(actor_idx);
+            }
+        }
+        // Kick off async background sampling with fresh weights.
+        let weights = self.workers.local.call(|w| w.get_weights());
+        for worker_idx in 0..self.workers.remotes.len() {
+            let w = weights.clone();
+            self.workers.remotes[worker_idx]
+                .cast(move |state| state.set_weights(&w));
+            self.steps_since_update.insert(worker_idx, 0);
+            for _ in 0..SAMPLE_QUEUE_DEPTH {
+                self.launch_sample_task(worker_idx);
+            }
+        }
+        self.started = true;
+    }
+
+    /// One optimization step (Listing A4's `step`): drain completed
+    /// sample tasks into replay actors, drain completed replay tasks
+    /// into the learner, update priorities, manage weight staleness.
+    pub fn step(&mut self) -> TrainResult {
+        if !self.started {
+            self.start();
+        }
+
+        // --- Sample processing ---
+        let mut sample_timer = self.timers.remove("sample_processing").unwrap();
+        sample_timer.time(|| {
+            // Drain all completed sample tasks without blocking.
+            while let Ok((tag, batch)) = self.sample_rx.try_recv() {
+                let worker_idx =
+                    self.sample_tags.remove(&tag).expect("unknown tag");
+                let count = batch.len();
+                self.num_steps_sampled += count;
+
+                // Randomly choose one replay actor and send the data.
+                let ra =
+                    &self.replay_actors[self.rng.below(self.replay_actors.len())];
+                ra.cast(move |state| state.add_batch(&batch));
+
+                // Weight staleness accounting; sync when overdue.
+                let since =
+                    self.steps_since_update.entry(worker_idx).or_insert(0);
+                *since += count;
+                if *since >= self.max_weight_sync_delay {
+                    *since = 0;
+                    let mut put_timer =
+                        self.timers.remove("put_weights").unwrap();
+                    let weights = put_timer
+                        .time(|| self.workers.local.call(|w| w.get_weights()));
+                    self.timers.insert("put_weights", put_timer);
+                    self.workers.remotes[worker_idx]
+                        .cast(move |w| w.set_weights(&weights));
+                    self.num_weight_syncs += 1;
+                }
+                // Kick off another sample request.
+                self.launch_sample_task(worker_idx);
+            }
+        });
+        self.timers.insert("sample_processing", sample_timer);
+
+        // --- Replay processing: block for at least one replay result ---
+        let mut replay_timer = self.timers.remove("replay_processing").unwrap();
+        let mut learned = Vec::new();
+        replay_timer.time(|| {
+            let mut process = |this: &mut Self,
+                               tag: usize,
+                               maybe: Option<ReplaySample>| {
+                let actor_idx = this.replay_tags.remove(&tag).unwrap();
+                this.launch_replay_task(actor_idx);
+                if let Some(sample) = maybe {
+                    learned.push((actor_idx, sample));
+                }
+            };
+            // Block for one...
+            let (tag, maybe) = self.replay_rx.recv().expect("replay died");
+            process(self, tag, maybe);
+            // ...then drain whatever else is ready.
+            while let Ok((tag, maybe)) = self.replay_rx.try_recv() {
+                process(self, tag, maybe);
+            }
+        });
+        self.timers.insert("replay_processing", replay_timer);
+
+        // --- Train + update priorities ---
+        for (actor_idx, sample) in learned {
+            let steps = sample.batch.len();
+            let indices = sample.indices;
+            let batch = sample.batch;
+            let mut train_timer = self.timers.remove("train").unwrap();
+            let (stats, td) = train_timer
+                .time(|| self.workers.local.call(move |w| w.learn_and_td(&batch)));
+            train_timer.push_units_processed(steps as f64);
+            self.timers.insert("train", train_timer);
+
+            let mut prio_timer =
+                self.timers.remove("update_priorities").unwrap();
+            prio_timer.time(|| {
+                self.replay_actors[actor_idx]
+                    .cast(move |ra| ra.update_priorities(&indices, &td));
+            });
+            self.timers.insert("update_priorities", prio_timer);
+
+            self.num_steps_trained += steps;
+            self.steps_since_target += steps;
+            for (k, v) in stats {
+                self.hub.record_learner_stat(&k, v);
+            }
+            self.hub.num_grad_updates += 1;
+            if self.steps_since_target >= self.target_update_every {
+                self.steps_since_target = 0;
+                self.workers.local.cast(|w| w.policy.update_target());
+            }
+        }
+
+        self.hub.num_env_steps_trained = self.num_steps_trained as u64;
+        let (episodes, sampled) = self.workers.collect_metrics();
+        self.hub.record_episodes(&episodes);
+        self.hub.num_env_steps_sampled += sampled as u64;
+        self.hub.snapshot()
+    }
+
+    pub fn timer_report(&self) -> String {
+        let mut parts: Vec<String> = self
+            .timers
+            .iter()
+            .map(|(k, t)| format!("{k}={:?}", t.mean()))
+            .collect();
+        parts.sort();
+        format!("{} weight_syncs={}", parts.join(" "), self.num_weight_syncs)
+    }
+}

@@ -1,0 +1,206 @@
+//! The Spark-Streaming-style executor of Appendix A.1 — PPO implemented
+//! the way a stateless microbatch engine forces you to:
+//!
+//! 1. the driver *saves states to a file* in a watched directory and the
+//!    "stream engine" detects the change (loop-back through the
+//!    filesystem, A1 lines 11-12, 21-22);
+//! 2. transformation functions do not persist variables, so workers and
+//!    the trainer are **re-initialized from scratch every iteration**
+//!    (fresh actors, fresh PJRT compilation — the analog of restoring a
+//!    TF session per task);
+//! 3. `map` (parallel sample with restored state) -> `reduce` (concat)
+//!    -> `map` (train) -> `foreachRDD` (save states).
+//!
+//! The per-phase timings this records regenerate Fig. 15's breakdown:
+//! the init + I/O overheads are structural to the stateless-dataflow
+//! model and do not shrink as workers scale.
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use crate::actor::ActorHandle;
+use crate::metrics::EpisodeRecord;
+use crate::policy::{PgLossKind, PgPolicy, Policy};
+use crate::rollout::{CollectMode, RolloutWorker};
+use crate::sample_batch::SampleBatch;
+
+/// Per-iteration phase breakdown (Fig. 15's stacked bars).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MicrobatchTimings {
+    pub init: Duration,
+    pub io: Duration,
+    pub sample: Duration,
+    pub train: Duration,
+}
+
+impl MicrobatchTimings {
+    pub fn total(&self) -> Duration {
+        self.init + self.io + self.sample + self.train
+    }
+}
+
+pub struct MicrobatchPpo {
+    config: crate::algorithms::TrainerConfig,
+    epochs: usize,
+    workdir: PathBuf,
+    iteration: usize,
+    pub episodes: Vec<EpisodeRecord>,
+    pub num_steps_sampled: usize,
+}
+
+impl MicrobatchPpo {
+    /// `workdir` is the watched "states" directory (must be writable).
+    pub fn new(
+        config: crate::algorithms::TrainerConfig,
+        epochs: usize,
+        workdir: impl Into<PathBuf>,
+    ) -> Self {
+        let workdir = workdir.into();
+        std::fs::create_dir_all(&workdir).expect("create microbatch workdir");
+        // Bootstrap: materialize the initial states file.
+        let cfg = config.clone();
+        let init_weights = std::thread::spawn(move || {
+            let p = PgPolicy::create(
+                &cfg.artifacts_dir,
+                PgLossKind::Ppo { epochs: 1 },
+                cfg.lr,
+                cfg.seed,
+            );
+            p.get_weights()
+        })
+        .join()
+        .expect("init policy");
+        let me = MicrobatchPpo {
+            config,
+            epochs,
+            workdir,
+            iteration: 0,
+            episodes: Vec::new(),
+            num_steps_sampled: 0,
+        };
+        me.save_states(0, &init_weights);
+        me
+    }
+
+    fn states_path(&self, iteration: usize) -> PathBuf {
+        self.workdir.join(format!("states_{iteration:06}.bin"))
+    }
+
+    fn save_states(&self, iteration: usize, weights: &[f32]) {
+        let bytes: Vec<u8> =
+            weights.iter().flat_map(|w| w.to_le_bytes()).collect();
+        std::fs::write(self.states_path(iteration), bytes)
+            .expect("write states");
+    }
+
+    /// "Spark detects new states file in path": poll the watch dir until
+    /// the expected states file appears.
+    fn detect_states(&self, iteration: usize) -> Vec<f32> {
+        let path = self.states_path(iteration);
+        loop {
+            if path.exists() {
+                let bytes = std::fs::read(&path).expect("read states");
+                return bytes
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+            }
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+
+    /// One streaming microbatch == one PPO iteration.
+    pub fn step(&mut self) -> MicrobatchTimings {
+        let mut t = MicrobatchTimings::default();
+
+        // --- I/O: the engine detects + reads the looped-back states ---
+        let start = Instant::now();
+        let weights = self.detect_states(self.iteration);
+        t.io += start.elapsed();
+
+        // --- init: replicate states to *fresh* workers (stateless map
+        // tasks re-initialize their variables every iteration) ---
+        let start = Instant::now();
+        let cfg = self.config.clone();
+        let workers: Vec<ActorHandle<RolloutWorker>> = (0..cfg.num_workers)
+            .map(|i| {
+                let cfg = cfg.clone();
+                let w = weights.clone();
+                ActorHandle::spawn(&format!("mb_worker_{i}"), move || {
+                    let mut policy = PgPolicy::create(
+                        &cfg.artifacts_dir,
+                        PgLossKind::Ppo { epochs: 1 },
+                        cfg.lr,
+                        cfg.seed.wrapping_add(i as u64),
+                    );
+                    policy.set_weights(&w);
+                    RolloutWorker::new(
+                        cfg.make_envs(i),
+                        Box::new(policy),
+                        cfg.rollout_fragment_length,
+                        CollectMode::OnPolicy,
+                    )
+                })
+            })
+            .collect();
+        // Barrier on construction (compilation happens in the factory).
+        let replies: Vec<_> =
+            workers.iter().map(|w| w.call_deferred(|_| ())).collect();
+        for r in replies {
+            r.recv();
+        }
+        t.init += start.elapsed();
+
+        // --- sample: map in parallel, then reduce (concat) ---
+        let start = Instant::now();
+        let mut collected = Vec::new();
+        let mut count = 0usize;
+        while count < self.config.train_batch_size {
+            let replies: Vec<_> = workers
+                .iter()
+                .map(|w| w.call_deferred(|state| state.sample()))
+                .collect();
+            for r in replies {
+                let b = r.recv();
+                count += b.len();
+                collected.push(b);
+            }
+        }
+        let train_batch = SampleBatch::concat_all(&collected);
+        self.num_steps_sampled += train_batch.len();
+        for w in &workers {
+            self.episodes.extend(w.call(|state| state.pop_episodes()));
+        }
+        t.sample += start.elapsed();
+
+        // --- train: restore trainer from states and train ---
+        let start = Instant::now();
+        let cfg = self.config.clone();
+        let epochs = self.epochs;
+        let w = weights;
+        let new_weights = std::thread::spawn(move || {
+            let mut policy = PgPolicy::create(
+                &cfg.artifacts_dir,
+                PgLossKind::Ppo { epochs },
+                cfg.lr,
+                cfg.seed,
+            );
+            policy.set_weights(&w);
+            policy.learn_on_batch(&train_batch);
+            policy.get_weights()
+        })
+        .join()
+        .expect("trainer task");
+        t.train += start.elapsed();
+
+        // --- I/O: save states, triggering the next iteration ---
+        let start = Instant::now();
+        self.iteration += 1;
+        self.save_states(self.iteration, &new_weights);
+        t.io += start.elapsed();
+
+        // Workers are dropped here: stateless tasks do not outlive the
+        // microbatch.
+        t
+    }
+}

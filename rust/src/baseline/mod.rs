@@ -1,0 +1,29 @@
+//! Low-level baseline implementations — the "original RLlib" comparison
+//! points of the paper's evaluation.
+//!
+//! Each optimizer here re-implements one algorithm's distributed
+//! execution directly against actor/RPC primitives, in the style of the
+//! paper's Listing A2 (A3C) and Listing A4 (Ape-X): explicit pending-
+//! task maps, completion queues, per-phase timers, manual weight
+//! bookkeeping.  The *numerics are identical* to the dataflow plans in
+//! `crate::algorithms` (same workers, same policies, same artifacts) —
+//! only the coordination code differs, which is exactly what Table 2
+//! and Fig. 13 compare.
+//!
+//! `microbatch` is the Spark-Streaming-style executor of Appendix A.1:
+//! stateless per-iteration tasks, full state serialization through the
+//! filesystem, re-initialization every iteration.
+
+mod async_gradients;
+mod async_pipeline;
+mod async_replay;
+mod microbatch;
+mod sync_replay;
+mod sync_samples;
+
+pub use async_gradients::AsyncGradientsOptimizer;
+pub use async_pipeline::AsyncPipelineOptimizer;
+pub use async_replay::AsyncReplayOptimizer;
+pub use microbatch::{MicrobatchPpo, MicrobatchTimings};
+pub use sync_replay::SyncReplayOptimizer;
+pub use sync_samples::SyncSamplesOptimizer;

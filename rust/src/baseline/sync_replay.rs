@@ -1,0 +1,113 @@
+//! DQN the low-level way — RLlib's original `SyncReplayOptimizer`:
+//! sample, push to a driver-owned buffer, replay, learn, manual
+//! priority updates and target-network bookkeeping.
+
+use crate::metrics::{MetricsHub, TrainResult};
+use crate::replay::PrioritizedReplayBuffer;
+use crate::rollout::WorkerSet;
+use crate::util::TimerStat;
+
+pub struct SyncReplayOptimizer {
+    workers: WorkerSet,
+    buffer: PrioritizedReplayBuffer,
+    learning_starts: usize,
+    train_batch_size: usize,
+    target_update_every: usize,
+
+    sample_timer: TimerStat,
+    replay_timer: TimerStat,
+    grad_timer: TimerStat,
+
+    num_steps_sampled: usize,
+    num_steps_trained: usize,
+    steps_since_target: usize,
+    hub: MetricsHub,
+}
+
+impl SyncReplayOptimizer {
+    pub fn new(
+        workers: WorkerSet,
+        buffer_capacity: usize,
+        learning_starts: usize,
+        train_batch_size: usize,
+        target_update_every: usize,
+    ) -> Self {
+        SyncReplayOptimizer {
+            workers,
+            buffer: PrioritizedReplayBuffer::new(buffer_capacity, 0.6, 0.4, 1),
+            learning_starts,
+            train_batch_size,
+            target_update_every,
+            sample_timer: TimerStat::new(),
+            replay_timer: TimerStat::new(),
+            grad_timer: TimerStat::new(),
+            num_steps_sampled: 0,
+            num_steps_trained: 0,
+            steps_since_target: 0,
+            hub: MetricsHub::new(100),
+        }
+    }
+
+    pub fn step(&mut self) -> TrainResult {
+        // (1) Sample one round from every worker into the buffer.
+        let round = self.sample_timer.time(|| {
+            let replies: Vec<_> = self
+                .workers
+                .remotes
+                .iter()
+                .map(|w| w.call_deferred(|state| state.sample()))
+                .collect();
+            replies.into_iter().map(|r| r.recv()).collect::<Vec<_>>()
+        });
+        for batch in round {
+            self.num_steps_sampled += batch.len();
+            self.buffer.add_batch(&batch);
+        }
+
+        // (2) Replay + learn, once past learning_starts.
+        if self.num_steps_sampled >= self.learning_starts {
+            let sample = self.replay_timer.time(|| {
+                self.buffer.sample(self.train_batch_size)
+            });
+            if let Some(sample) = sample {
+                let steps = sample.batch.len();
+                let indices = sample.indices;
+                let batch = sample.batch;
+                let (stats, td) = self.grad_timer.time(|| {
+                    self.workers.local.call(move |w| w.learn_and_td(&batch))
+                });
+                self.buffer.update_priorities(&indices, &td);
+                self.num_steps_trained += steps;
+                self.steps_since_target += steps;
+                for (k, v) in stats {
+                    self.hub.record_learner_stat(&k, v);
+                }
+                self.hub.num_grad_updates += 1;
+
+                // (3) Push fresh weights to the exploration workers.
+                self.workers.sync_weights();
+
+                // (4) Periodic target-network sync.
+                if self.steps_since_target >= self.target_update_every {
+                    self.steps_since_target = 0;
+                    self.workers.local.cast(|w| w.policy.update_target());
+                }
+            }
+        }
+
+        self.hub.num_env_steps_trained = self.num_steps_trained as u64;
+        let (episodes, sampled) = self.workers.collect_metrics();
+        self.hub.record_episodes(&episodes);
+        self.hub.num_env_steps_sampled += sampled as u64;
+        self.hub.snapshot()
+    }
+
+    pub fn timer_report(&self) -> String {
+        format!(
+            "sample={:?} replay={:?} grad={:?}",
+            self.sample_timer.mean(),
+            self.replay_timer.mean(),
+            self.grad_timer.mean()
+        )
+    }
+}

@@ -1,0 +1,92 @@
+//! A2C/PPO the low-level way — RLlib's original `SyncSamplesOptimizer`:
+//! manual barrier rounds of `sample.remote()`, driver-side concat,
+//! learn on the local worker, manual weight broadcast.
+
+use crate::metrics::{MetricsHub, TrainResult};
+use crate::rollout::WorkerSet;
+use crate::sample_batch::SampleBatch;
+use crate::util::TimerStat;
+
+pub struct SyncSamplesOptimizer {
+    workers: WorkerSet,
+    train_batch_size: usize,
+
+    sample_timer: TimerStat,
+    grad_timer: TimerStat,
+    sync_timer: TimerStat,
+
+    num_steps_sampled: usize,
+    num_steps_trained: usize,
+    hub: MetricsHub,
+}
+
+impl SyncSamplesOptimizer {
+    pub fn new(workers: WorkerSet, train_batch_size: usize) -> Self {
+        SyncSamplesOptimizer {
+            workers,
+            train_batch_size,
+            sample_timer: TimerStat::new(),
+            grad_timer: TimerStat::new(),
+            sync_timer: TimerStat::new(),
+            num_steps_sampled: 0,
+            num_steps_trained: 0,
+            hub: MetricsHub::new(100),
+        }
+    }
+
+    pub fn step(&mut self) -> TrainResult {
+        // Broadcast current weights before sampling (sync semantics).
+        self.sync_timer.time(|| {
+            self.workers.sync_weights();
+        });
+
+        // Collect samples until the train batch size is reached.
+        let mut collected: Vec<SampleBatch> = Vec::new();
+        let mut count = 0usize;
+        while count < self.train_batch_size {
+            let round = self.sample_timer.time(|| {
+                let replies: Vec<_> = self
+                    .workers
+                    .remotes
+                    .iter()
+                    .map(|w| w.call_deferred(|state| state.sample()))
+                    .collect();
+                replies.into_iter().map(|r| r.recv()).collect::<Vec<_>>()
+            });
+            for b in round {
+                count += b.len();
+                collected.push(b);
+            }
+        }
+        let train_batch = SampleBatch::concat_all(&collected);
+        self.num_steps_sampled += train_batch.len();
+
+        // One (or, for PPO policies, several epochs of) sgd step(s).
+        let steps = train_batch.len();
+        let stats = self.grad_timer.time(|| {
+            self.workers
+                .local
+                .call(move |w| w.learn_on_batch(&train_batch))
+        });
+        self.num_steps_trained += steps;
+
+        self.hub.num_env_steps_trained = self.num_steps_trained as u64;
+        self.hub.num_grad_updates += 1;
+        for (k, v) in stats {
+            self.hub.record_learner_stat(&k, v);
+        }
+        let (episodes, sampled) = self.workers.collect_metrics();
+        self.hub.record_episodes(&episodes);
+        self.hub.num_env_steps_sampled += sampled as u64;
+        self.hub.snapshot()
+    }
+
+    pub fn timer_report(&self) -> String {
+        format!(
+            "sample={:?} grad={:?} sync={:?}",
+            self.sample_timer.mean(),
+            self.grad_timer.mean(),
+            self.sync_timer.mean()
+        )
+    }
+}

@@ -1,0 +1,261 @@
+//! Checkpointing — the paper's fault-tolerance model (§3 Consistency
+//! and Durability): RL tolerates message/data loss, so the *only*
+//! durable state is a periodic checkpoint of the learner's parameters
+//! and counters; on a fault the whole computation restarts from it and
+//! everything else (in-flight batches, replay contents, iterator
+//! positions) is discarded.  This is why the programming model can skip
+//! state serialization and logging on the hot path.
+//!
+//! Format (version-tagged, little-endian):
+//! ```text
+//! magic "FLRLCKPT" | u32 version | u64 steps_sampled | u64 steps_trained
+//! | u32 n_policies | n x { u32 name_len | name | u32 len | f32[len] }
+//! ```
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: &[u8; 8] = b"FLRLCKPT";
+const VERSION: u32 = 1;
+
+/// A point-in-time snapshot of trainable state.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Checkpoint {
+    pub steps_sampled: u64,
+    pub steps_trained: u64,
+    /// Flat parameter vectors by policy id ("default" for single-policy
+    /// trainers).
+    pub weights: BTreeMap<String, Vec<f32>>,
+}
+
+impl Checkpoint {
+    pub fn single(weights: Vec<f32>) -> Self {
+        let mut map = BTreeMap::new();
+        map.insert("default".to_string(), weights);
+        Checkpoint { steps_sampled: 0, steps_trained: 0, weights: map }
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        // Write-then-rename for atomicity: a fault mid-write must not
+        // destroy the previous checkpoint.
+        let tmp = path.with_extension("tmp");
+        {
+            let mut f = std::io::BufWriter::new(
+                std::fs::File::create(&tmp)
+                    .with_context(|| format!("creating {}", tmp.display()))?,
+            );
+            f.write_all(MAGIC)?;
+            f.write_all(&VERSION.to_le_bytes())?;
+            f.write_all(&self.steps_sampled.to_le_bytes())?;
+            f.write_all(&self.steps_trained.to_le_bytes())?;
+            f.write_all(&(self.weights.len() as u32).to_le_bytes())?;
+            for (name, w) in &self.weights {
+                f.write_all(&(name.len() as u32).to_le_bytes())?;
+                f.write_all(name.as_bytes())?;
+                f.write_all(&(w.len() as u32).to_le_bytes())?;
+                for v in w {
+                    f.write_all(&v.to_le_bytes())?;
+                }
+            }
+        }
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming into {}", path.display()))?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path.as_ref()).with_context(|| {
+                format!("opening checkpoint {}", path.as_ref().display())
+            })?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("not a flowrl checkpoint (bad magic)");
+        }
+        let version = read_u32(&mut f)?;
+        if version != VERSION {
+            bail!("unsupported checkpoint version {version}");
+        }
+        let steps_sampled = read_u64(&mut f)?;
+        let steps_trained = read_u64(&mut f)?;
+        let n = read_u32(&mut f)? as usize;
+        let mut weights = BTreeMap::new();
+        for _ in 0..n {
+            let name_len = read_u32(&mut f)? as usize;
+            if name_len > 4096 {
+                bail!("implausible policy-name length {name_len}");
+            }
+            let mut name = vec![0u8; name_len];
+            f.read_exact(&mut name)?;
+            let len = read_u32(&mut f)? as usize;
+            let mut buf = vec![0u8; len * 4];
+            f.read_exact(&mut buf)?;
+            let w = buf
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            weights.insert(String::from_utf8(name)?, w);
+        }
+        Ok(Checkpoint { steps_sampled, steps_trained, weights })
+    }
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+/// Checkpoint the single-policy learner of a `WorkerSet`.
+pub fn checkpoint_worker_set(
+    workers: &crate::rollout::WorkerSet,
+    steps_sampled: u64,
+    steps_trained: u64,
+) -> Checkpoint {
+    let weights = workers.local.call(|w| w.get_weights());
+    let mut ck = Checkpoint::single(weights);
+    ck.steps_sampled = steps_sampled;
+    ck.steps_trained = steps_trained;
+    ck
+}
+
+/// Restore a checkpoint into every worker of a set (learner + remotes).
+pub fn restore_worker_set(
+    workers: &crate::rollout::WorkerSet,
+    ck: &Checkpoint,
+) -> Result<()> {
+    let w = ck
+        .weights
+        .get("default")
+        .ok_or_else(|| anyhow::anyhow!("no 'default' policy in checkpoint"))?
+        .clone();
+    let wl = w.clone();
+    workers.local.call(move |state| state.set_weights(&wl));
+    for r in &workers.remotes {
+        let wr = w.clone();
+        r.cast(move |state| state.set_weights(&wr));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir()
+            .join(format!("flowrl_ckpt_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let mut ck = Checkpoint::single(vec![1.0, -2.5, 3.25]);
+        ck.steps_sampled = 12345;
+        ck.steps_trained = 678;
+        ck.weights.insert("dqn".into(), vec![0.5; 10]);
+        let path = tmp("roundtrip.ckpt");
+        ck.save(&path).unwrap();
+        let loaded = Checkpoint::load(&path).unwrap();
+        assert_eq!(loaded, ck);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn empty_weights_roundtrip() {
+        let ck = Checkpoint::default();
+        let path = tmp("empty.ckpt");
+        ck.save(&path).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap(), ck);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_garbage_and_wrong_magic() {
+        let path = tmp("garbage.ckpt");
+        std::fs::write(&path, b"not a checkpoint at all").unwrap();
+        let err = Checkpoint::load(&path).unwrap_err();
+        assert!(format!("{err}").contains("magic"));
+        std::fs::remove_file(&path).ok();
+        assert!(Checkpoint::load(tmp("missing.ckpt")).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_file() {
+        let ck = Checkpoint::single(vec![1.0; 100]);
+        let path = tmp("trunc.ckpt");
+        ck.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn save_is_atomic_under_existing_file() {
+        // Saving over an existing checkpoint leaves no .tmp and the new
+        // content wins.
+        let path = tmp("atomic.ckpt");
+        Checkpoint::single(vec![1.0]).save(&path).unwrap();
+        Checkpoint::single(vec![2.0]).save(&path).unwrap();
+        let loaded = Checkpoint::load(&path).unwrap();
+        assert_eq!(loaded.weights["default"], vec![2.0]);
+        assert!(!path.with_extension("tmp").exists());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn worker_set_checkpoint_restore() {
+        use crate::env::{DummyEnv, Env};
+        use crate::policy::DummyPolicy;
+        use crate::rollout::{CollectMode, RolloutWorker, WorkerSet};
+        let set = WorkerSet::new(2, |_| {
+            Box::new(|| {
+                let envs: Vec<Box<dyn Env>> =
+                    vec![Box::new(DummyEnv::new(4, 10))];
+                RolloutWorker::new(
+                    envs,
+                    Box::new(DummyPolicy::new(0.1)),
+                    8,
+                    CollectMode::OnPolicy,
+                )
+            })
+        });
+        set.local.call(|w| w.set_weights(&[0.875]));
+        let ck = checkpoint_worker_set(&set, 100, 50);
+        assert_eq!(ck.weights["default"], vec![0.875]);
+
+        // Simulate a restart: fresh workers, restore.
+        let set2 = WorkerSet::new(2, |_| {
+            Box::new(|| {
+                let envs: Vec<Box<dyn Env>> =
+                    vec![Box::new(DummyEnv::new(4, 10))];
+                RolloutWorker::new(
+                    envs,
+                    Box::new(DummyPolicy::new(0.1)),
+                    8,
+                    CollectMode::OnPolicy,
+                )
+            })
+        });
+        restore_worker_set(&set2, &ck).unwrap();
+        assert_eq!(set2.local.call(|w| w.get_weights()), vec![0.875]);
+        for r in &set2.remotes {
+            assert_eq!(r.call(|w| w.get_weights()), vec![0.875]);
+        }
+    }
+}

@@ -1,0 +1,273 @@
+//! CartPole physics, ported from the classic Gym implementation
+//! (Barto, Sutton & Anderson 1983 dynamics, Euler integration, the exact
+//! Gym constants and termination thresholds).
+
+use super::Env;
+use crate::util::Rng;
+
+/// Dynamics parameters; the defaults are Gym's CartPole-v0.
+/// `TaskCartPole` perturbs these to build the MAML task distribution.
+#[derive(Debug, Clone)]
+pub struct CartPoleParams {
+    pub gravity: f32,
+    pub masscart: f32,
+    pub masspole: f32,
+    pub pole_half_length: f32,
+    pub force_mag: f32,
+    pub tau: f32,
+    /// Episode step limit (v0: 200, v1: 500).
+    pub max_steps: usize,
+}
+
+impl Default for CartPoleParams {
+    fn default() -> Self {
+        CartPoleParams {
+            gravity: 9.8,
+            masscart: 1.0,
+            masspole: 0.1,
+            pole_half_length: 0.5,
+            force_mag: 10.0,
+            tau: 0.02,
+            max_steps: 200,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct CartPole {
+    params: CartPoleParams,
+    state: [f32; 4], // x, x_dot, theta, theta_dot
+    steps: usize,
+    done: bool,
+    rng: Rng,
+}
+
+const X_THRESHOLD: f32 = 2.4;
+const THETA_THRESHOLD: f32 = 12.0 * std::f32::consts::PI / 180.0;
+
+impl CartPole {
+    pub fn new(seed: u64) -> Self {
+        Self::with_params(CartPoleParams::default(), seed)
+    }
+
+    pub fn with_params(params: CartPoleParams, seed: u64) -> Self {
+        let mut env = CartPole {
+            params,
+            state: [0.0; 4],
+            steps: 0,
+            done: true,
+            rng: Rng::new(seed),
+        };
+        env.reset();
+        env
+    }
+
+    pub fn params(&self) -> &CartPoleParams {
+        &self.params
+    }
+
+    fn obs(&self) -> Vec<f32> {
+        self.state.to_vec()
+    }
+}
+
+impl Env for CartPole {
+    fn obs_dim(&self) -> usize {
+        4
+    }
+
+    fn num_actions(&self) -> usize {
+        2
+    }
+
+    fn reset(&mut self) -> Vec<f32> {
+        for s in &mut self.state {
+            *s = self.rng.uniform_range(-0.05, 0.05);
+        }
+        self.steps = 0;
+        self.done = false;
+        self.obs()
+    }
+
+    fn step(&mut self, action: i32) -> (Vec<f32>, f32, bool) {
+        assert!(!self.done, "step() called on a done episode; call reset()");
+        let p = &self.params;
+        let force = if action == 1 { p.force_mag } else { -p.force_mag };
+        let [x, x_dot, theta, theta_dot] = self.state;
+        let total_mass = p.masscart + p.masspole;
+        let polemass_length = p.masspole * p.pole_half_length;
+
+        let costheta = theta.cos();
+        let sintheta = theta.sin();
+        let temp =
+            (force + polemass_length * theta_dot * theta_dot * sintheta)
+                / total_mass;
+        let thetaacc = (p.gravity * sintheta - costheta * temp)
+            / (p.pole_half_length
+                * (4.0 / 3.0 - p.masspole * costheta * costheta / total_mass));
+        let xacc = temp - polemass_length * thetaacc * costheta / total_mass;
+
+        self.state = [
+            x + p.tau * x_dot,
+            x_dot + p.tau * xacc,
+            theta + p.tau * theta_dot,
+            theta_dot + p.tau * thetaacc,
+        ];
+        self.steps += 1;
+
+        let fell = self.state[0].abs() > X_THRESHOLD
+            || self.state[2].abs() > THETA_THRESHOLD;
+        let timeout = self.steps >= self.params.max_steps;
+        self.done = fell || timeout;
+        (self.obs(), 1.0, self.done)
+    }
+}
+
+/// CartPole with randomized dynamics — the MAML task distribution.
+/// Each `sample_task` draws new pole length / gravity / force scaling;
+/// the policy must adapt to the drawn dynamics from a few fragments.
+#[derive(Debug, Clone)]
+pub struct TaskCartPole {
+    inner: CartPole,
+    task_rng: Rng,
+    seed: u64,
+}
+
+impl TaskCartPole {
+    pub fn new(seed: u64) -> Self {
+        TaskCartPole {
+            inner: CartPole::new(seed),
+            task_rng: Rng::new(seed ^ 0xDEADBEEF),
+            seed,
+        }
+    }
+
+    /// Draw a new dynamics task; returns the task parameters used.
+    pub fn sample_task(&mut self) -> CartPoleParams {
+        let params = CartPoleParams {
+            pole_half_length: self.task_rng.uniform_range(0.25, 1.0),
+            gravity: self.task_rng.uniform_range(7.0, 12.0),
+            force_mag: self.task_rng.uniform_range(7.0, 13.0),
+            ..CartPoleParams::default()
+        };
+        self.set_task(params.clone());
+        params
+    }
+
+    pub fn set_task(&mut self, params: CartPoleParams) {
+        self.seed = self.seed.wrapping_add(1);
+        self.inner = CartPole::with_params(params, self.seed);
+    }
+}
+
+impl Env for TaskCartPole {
+    fn obs_dim(&self) -> usize {
+        self.inner.obs_dim()
+    }
+    fn num_actions(&self) -> usize {
+        self.inner.num_actions()
+    }
+    fn reset(&mut self) -> Vec<f32> {
+        self.inner.reset()
+    }
+    fn step(&mut self, action: i32) -> (Vec<f32>, f32, bool) {
+        self.inner.step(action)
+    }
+    fn sample_task(&mut self) {
+        TaskCartPole::sample_task(self);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reset_state_is_small() {
+        let mut env = CartPole::new(0);
+        let obs = env.reset();
+        assert_eq!(obs.len(), 4);
+        assert!(obs.iter().all(|v| v.abs() <= 0.05));
+    }
+
+    #[test]
+    fn episode_terminates() {
+        let mut env = CartPole::new(1);
+        env.reset();
+        // Always push right: pole must fall well before the step limit.
+        let mut steps = 0;
+        loop {
+            let (_, r, done) = env.step(1);
+            assert_eq!(r, 1.0);
+            steps += 1;
+            if done {
+                break;
+            }
+            assert!(steps < 200, "pole never fell under constant force");
+        }
+        assert!(steps < 60, "constant push should fall fast, took {steps}");
+    }
+
+    #[test]
+    fn step_limit_caps_episode() {
+        let mut env = CartPole::new(2);
+        env.reset();
+        // Alternate actions as a crude balance; count an upper bound.
+        let mut steps = 0;
+        let mut act = 0;
+        loop {
+            let (_, _, done) = env.step(act);
+            act = 1 - act;
+            steps += 1;
+            if done {
+                break;
+            }
+        }
+        assert!(steps <= 200);
+    }
+
+    #[test]
+    #[should_panic(expected = "done episode")]
+    fn step_after_done_panics() {
+        let mut env = CartPole::new(3);
+        env.reset();
+        loop {
+            let (_, _, done) = env.step(1);
+            if done {
+                break;
+            }
+        }
+        env.step(1);
+    }
+
+    #[test]
+    fn deterministic_given_seed_and_actions() {
+        let run = || {
+            let mut env = CartPole::new(42);
+            let mut trace = vec![env.reset()];
+            for i in 0..50 {
+                if env.done {
+                    trace.push(env.reset());
+                } else {
+                    let (o, _, _) = env.step((i % 2) as i32);
+                    trace.push(o);
+                }
+            }
+            trace
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn task_cartpole_samples_varied_dynamics() {
+        let mut env = TaskCartPole::new(0);
+        let a = env.sample_task();
+        let b = env.sample_task();
+        assert_ne!(a.pole_half_length, b.pole_half_length);
+        assert!((0.25..1.0).contains(&a.pole_half_length));
+        assert!((7.0..12.0).contains(&a.gravity));
+        // Env remains steppable after task switch.
+        env.reset();
+        env.step(0);
+    }
+}

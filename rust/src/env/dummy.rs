@@ -1,0 +1,57 @@
+//! Trivial environment for the sampling microbenchmark (paper Fig. 13a):
+//! fixed-length episodes, constant reward, negligible step cost — so the
+//! measured throughput is pure system overhead.
+
+use super::Env;
+
+#[derive(Debug, Clone)]
+pub struct DummyEnv {
+    obs_dim: usize,
+    episode_len: usize,
+    steps: usize,
+}
+
+impl DummyEnv {
+    pub fn new(obs_dim: usize, episode_len: usize) -> Self {
+        DummyEnv { obs_dim, episode_len, steps: 0 }
+    }
+}
+
+impl Env for DummyEnv {
+    fn obs_dim(&self) -> usize {
+        self.obs_dim
+    }
+
+    fn num_actions(&self) -> usize {
+        2
+    }
+
+    fn reset(&mut self) -> Vec<f32> {
+        self.steps = 0;
+        vec![0.0; self.obs_dim]
+    }
+
+    fn step(&mut self, _action: i32) -> (Vec<f32>, f32, bool) {
+        self.steps += 1;
+        (vec![0.0; self.obs_dim], 1.0, self.steps >= self.episode_len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_episode_length() {
+        let mut env = DummyEnv::new(4, 10);
+        env.reset();
+        for i in 1..=10 {
+            let (_, r, done) = env.step(0);
+            assert_eq!(r, 1.0);
+            assert_eq!(done, i == 10);
+        }
+        env.reset();
+        let (_, _, done) = env.step(1);
+        assert!(!done);
+    }
+}

@@ -1,0 +1,37 @@
+//! Environment substrate (the paper used OpenAI Gym / multi-agent Atari;
+//! see DESIGN.md §Substitutions).
+//!
+//! * [`CartPole`] — physics port of Gym CartPole-v0/v1.
+//! * [`MultiAgentCartPole`] — N agents, each its own CartPole instance,
+//!   mapped to policies via an agent→policy function (the multi-agent
+//!   composition workload of Fig. 11/14).
+//! * [`TaskCartPole`] — CartPole with perturbable dynamics (pole length /
+//!   gravity), the task distribution for the MAML case study.
+//! * [`DummyEnv`] — trivial env for the sampling microbenchmark
+//!   (Fig. 13a isolates system overhead with a dummy policy).
+
+mod cartpole;
+mod dummy;
+mod mountain_car;
+mod multi_agent;
+
+pub use cartpole::{CartPole, CartPoleParams, TaskCartPole};
+pub use dummy::DummyEnv;
+pub use mountain_car::MountainCar;
+pub use multi_agent::MultiAgentCartPole;
+
+/// A single-agent episodic environment with f32 vector observations and
+/// discrete actions.
+pub trait Env: Send {
+    /// Observation dimensionality.
+    fn obs_dim(&self) -> usize;
+    /// Number of discrete actions.
+    fn num_actions(&self) -> usize;
+    /// Reset and return the initial observation.
+    fn reset(&mut self) -> Vec<f32>;
+    /// Apply `action`; returns (next_obs, reward, done).
+    fn step(&mut self, action: i32) -> (Vec<f32>, f32, bool);
+    /// Draw a new task from the env's task distribution (meta-learning
+    /// envs only; default no-op).  Callers must `reset()` afterwards.
+    fn sample_task(&mut self) {}
+}

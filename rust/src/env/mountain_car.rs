@@ -1,0 +1,151 @@
+//! MountainCar-v0 physics, ported from the classic Gym implementation
+//! (Moore 1990 dynamics).  A second real control workload: sparse
+//! reward (-1 per step until the goal), 3 actions, 200-step limit —
+//! exercises the exploration-heavy DQN path far harder than CartPole.
+
+use super::Env;
+use crate::util::Rng;
+
+#[derive(Debug, Clone)]
+pub struct MountainCar {
+    position: f32,
+    velocity: f32,
+    steps: usize,
+    done: bool,
+    rng: Rng,
+    max_steps: usize,
+}
+
+const MIN_POSITION: f32 = -1.2;
+const MAX_POSITION: f32 = 0.6;
+const MAX_SPEED: f32 = 0.07;
+const GOAL_POSITION: f32 = 0.5;
+const FORCE: f32 = 0.001;
+const GRAVITY: f32 = 0.0025;
+
+impl MountainCar {
+    pub fn new(seed: u64) -> Self {
+        let mut env = MountainCar {
+            position: 0.0,
+            velocity: 0.0,
+            steps: 0,
+            done: true,
+            rng: Rng::new(seed),
+            max_steps: 200,
+        };
+        env.reset();
+        env
+    }
+}
+
+impl Env for MountainCar {
+    fn obs_dim(&self) -> usize {
+        2
+    }
+
+    fn num_actions(&self) -> usize {
+        3
+    }
+
+    fn reset(&mut self) -> Vec<f32> {
+        self.position = self.rng.uniform_range(-0.6, -0.4);
+        self.velocity = 0.0;
+        self.steps = 0;
+        self.done = false;
+        vec![self.position, self.velocity]
+    }
+
+    fn step(&mut self, action: i32) -> (Vec<f32>, f32, bool) {
+        assert!(!self.done, "step() on done episode");
+        assert!((0..3).contains(&action), "MountainCar action in 0..3");
+        self.velocity += (action - 1) as f32 * FORCE
+            - (3.0 * self.position).cos() * GRAVITY;
+        self.velocity = self.velocity.clamp(-MAX_SPEED, MAX_SPEED);
+        self.position = (self.position + self.velocity)
+            .clamp(MIN_POSITION, MAX_POSITION);
+        if self.position <= MIN_POSITION && self.velocity < 0.0 {
+            self.velocity = 0.0;
+        }
+        self.steps += 1;
+        let reached = self.position >= GOAL_POSITION;
+        self.done = reached || self.steps >= self.max_steps;
+        (vec![self.position, self.velocity], -1.0, self.done)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reset_in_start_band_with_zero_velocity() {
+        let mut env = MountainCar::new(0);
+        let obs = env.reset();
+        assert!((-0.6..-0.4).contains(&obs[0]));
+        assert_eq!(obs[1], 0.0);
+    }
+
+    #[test]
+    fn coasting_never_escapes_valley() {
+        // Action 1 (no force): gravity alone cannot reach the goal.
+        let mut env = MountainCar::new(1);
+        env.reset();
+        loop {
+            let (obs, r, done) = env.step(1);
+            assert_eq!(r, -1.0);
+            if done {
+                assert!(obs[0] < GOAL_POSITION);
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn oscillation_policy_reaches_goal() {
+        // Classic energy-pumping: push in the direction of motion.
+        let mut env = MountainCar::new(2);
+        let mut obs = env.reset();
+        for _ in 0..200 {
+            let action = if obs[1] >= 0.0 { 2 } else { 0 };
+            let (o, _, done) = env.step(action);
+            obs = o;
+            if done {
+                break;
+            }
+        }
+        assert!(
+            obs[0] >= GOAL_POSITION,
+            "energy pumping should solve it: pos={}",
+            obs[0]
+        );
+    }
+
+    #[test]
+    fn velocity_stays_clamped() {
+        let mut env = MountainCar::new(3);
+        env.reset();
+        for _ in 0..150 {
+            let (obs, _, done) = env.step(2);
+            assert!(obs[1].abs() <= MAX_SPEED + 1e-6);
+            assert!((MIN_POSITION..=MAX_POSITION).contains(&obs[0]));
+            if done {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn step_limit_truncates() {
+        let mut env = MountainCar::new(4);
+        env.reset();
+        let mut steps = 0;
+        loop {
+            let (_, _, done) = env.step(1);
+            steps += 1;
+            if done {
+                break;
+            }
+        }
+        assert_eq!(steps, 200);
+    }
+}

@@ -1,0 +1,276 @@
+//! `LocalIter<T>` — the sequential, driver-side iterator (`Iter[T]` in
+//! the paper).
+//!
+//! Pull-based and lazy (Volcano-style): a `LocalIter` is a boxed
+//! `FnMut() -> Option<T>` plan; nothing upstream executes until `next()`
+//! is called on the terminal iterator.  Parallelism lives in the actor
+//! threads upstream (see `ParIter`) — the driver side is deliberately a
+//! simple blocking pull, which is exactly RLlib Flow's execution model
+//! (the driver drives the plan; workers compute).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+type NextFn<T> = Box<dyn FnMut() -> Option<T> + Send>;
+
+pub struct LocalIter<T> {
+    next_fn: NextFn<T>,
+}
+
+impl<T: Send + 'static> LocalIter<T> {
+    /// A source driven by a closure (None ends the stream).
+    pub fn from_fn(f: impl FnMut() -> Option<T> + Send + 'static) -> Self {
+        LocalIter { next_fn: Box::new(f) }
+    }
+
+    /// A finite source from a vector.
+    pub fn from_items(items: Vec<T>) -> Self {
+        let mut q: VecDeque<T> = items.into();
+        Self::from_fn(move || q.pop_front())
+    }
+
+    /// Pull the next item, driving the whole upstream plan.
+    pub fn next(&mut self) -> Option<T> {
+        (self.next_fn)()
+    }
+
+    /// Drain the stream into a vector (tests/benches).
+    pub fn collect(mut self) -> Vec<T> {
+        let mut out = Vec::new();
+        while let Some(t) = self.next() {
+            out.push(t);
+        }
+        out
+    }
+
+    /// Transform each item with a (possibly stateful) closure — the
+    /// paper's sequential `for_each`.  Stateful ops hold their state in
+    /// the closure (paper §4 Transformation).
+    pub fn for_each<U: Send + 'static>(
+        self,
+        mut f: impl FnMut(T) -> U + Send + 'static,
+    ) -> LocalIter<U> {
+        let mut src = self;
+        LocalIter::from_fn(move || src.next().map(&mut f))
+    }
+
+    /// Keep items satisfying the predicate.
+    pub fn filter(
+        self,
+        mut pred: impl FnMut(&T) -> bool + Send + 'static,
+    ) -> LocalIter<T> {
+        let mut src = self;
+        LocalIter::from_fn(move || loop {
+            match src.next() {
+                Some(t) if pred(&t) => return Some(t),
+                Some(_) => continue,
+                None => return None,
+            }
+        })
+    }
+
+    /// Transform-and-drop: `None` results are skipped without ending
+    /// the stream (e.g. `Replay` before learning-starts).
+    pub fn filter_map<U: Send + 'static>(
+        self,
+        mut f: impl FnMut(T) -> Option<U> + Send + 'static,
+    ) -> LocalIter<U> {
+        let mut src = self;
+        LocalIter::from_fn(move || loop {
+            match src.next() {
+                Some(t) => {
+                    if let Some(u) = f(t) {
+                        return Some(u);
+                    }
+                }
+                None => return None,
+            }
+        })
+    }
+
+    /// A stateful accumulate-and-emit transform: `op` returns any number
+    /// of output items per input (the paper's `combine`, used by
+    /// `ConcatBatches`: buffer until the target size, then emit one).
+    pub fn combine<U: Send + 'static>(
+        self,
+        mut op: impl FnMut(T) -> Vec<U> + Send + 'static,
+    ) -> LocalIter<U> {
+        let mut src = self;
+        let mut pending: VecDeque<U> = VecDeque::new();
+        LocalIter::from_fn(move || loop {
+            if let Some(u) = pending.pop_front() {
+                return Some(u);
+            }
+            match src.next() {
+                Some(t) => pending.extend(op(t)),
+                None => return None,
+            }
+        })
+    }
+
+    /// End the stream after `n` items.
+    pub fn take(self, n: usize) -> LocalIter<T> {
+        let mut src = self;
+        let mut left = n;
+        LocalIter::from_fn(move || {
+            if left == 0 {
+                return None;
+            }
+            left -= 1;
+            src.next()
+        })
+    }
+
+    /// Duplicate into two consumers (the paper's `split`).  Items are
+    /// buffered per consumer until consumed; a pull happens on behalf of
+    /// whichever consumer runs dry first, so buffering grows only with
+    /// the consumption imbalance (the memory-bounding rule from §4
+    /// Concurrency).
+    pub fn duplicate(self) -> (LocalIter<T>, LocalIter<T>)
+    where
+        T: Clone,
+    {
+        let shared = Arc::new(Mutex::new(SplitState {
+            upstream: self,
+            buffers: [VecDeque::new(), VecDeque::new()],
+            done: false,
+        }));
+        let a = shared.clone();
+        (
+            LocalIter::from_fn(move || split_next(&a, 0)),
+            LocalIter::from_fn(move || split_next(&shared, 1)),
+        )
+    }
+}
+
+struct SplitState<T> {
+    upstream: LocalIter<T>,
+    buffers: [VecDeque<T>; 2],
+    done: bool,
+}
+
+fn split_next<T: Clone + Send + 'static>(
+    shared: &Arc<Mutex<SplitState<T>>>,
+    side: usize,
+) -> Option<T> {
+    let mut st = shared.lock().unwrap();
+    if let Some(item) = st.buffers[side].pop_front() {
+        return Some(item);
+    }
+    if st.done {
+        return None;
+    }
+    match st.upstream.next() {
+        Some(item) => {
+            st.buffers[1 - side].push_back(item.clone());
+            Some(item)
+        }
+        None => {
+            st.done = true;
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_items_yields_in_order() {
+        let mut it = LocalIter::from_items(vec![1, 2, 3]);
+        assert_eq!(it.next(), Some(1));
+        assert_eq!(it.next(), Some(2));
+        assert_eq!(it.next(), Some(3));
+        assert_eq!(it.next(), None);
+    }
+
+    #[test]
+    fn for_each_is_lazy_and_stateful() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let count = Arc::new(AtomicUsize::new(0));
+        let c = count.clone();
+        let mut sum = 0; // stateful closure
+        let mut it = LocalIter::from_items(vec![1, 2, 3]).for_each(move |x| {
+            c.fetch_add(1, Ordering::SeqCst);
+            sum += x;
+            sum
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 0); // laziness
+        assert_eq!(it.next(), Some(1));
+        assert_eq!(it.next(), Some(3));
+        assert_eq!(count.load(Ordering::SeqCst), 2);
+        assert_eq!(it.next(), Some(6));
+    }
+
+    #[test]
+    fn filter_drops_items() {
+        let it = LocalIter::from_items((0..10).collect()).filter(|x| x % 3 == 0);
+        assert_eq!(it.collect(), vec![0, 3, 6, 9]);
+    }
+
+    #[test]
+    fn filter_map_skips_none_without_ending() {
+        let it = LocalIter::from_items(vec![1, 2, 3, 4])
+            .filter_map(|x| if x % 2 == 0 { Some(x * 10) } else { None });
+        assert_eq!(it.collect(), vec![20, 40]);
+    }
+
+    #[test]
+    fn combine_accumulates_like_concat_batches() {
+        let mut buf = vec![];
+        let mut it = LocalIter::from_items((1..=7).collect()).combine(move |x| {
+            buf.push(x);
+            if buf.len() >= 3 {
+                vec![std::mem::take(&mut buf)]
+            } else {
+                vec![]
+            }
+        });
+        assert_eq!(it.next(), Some(vec![1, 2, 3]));
+        assert_eq!(it.next(), Some(vec![4, 5, 6]));
+        assert_eq!(it.next(), None); // tail never reached 3
+    }
+
+    #[test]
+    fn combine_can_fan_out() {
+        let it = LocalIter::from_items(vec![2, 3])
+            .combine(|x| (0..x).collect::<Vec<_>>());
+        assert_eq!(it.collect(), vec![0, 1, 0, 1, 2]);
+    }
+
+    #[test]
+    fn take_ends_stream() {
+        let mut n = 0;
+        let it = LocalIter::from_fn(move || {
+            n += 1;
+            Some(n)
+        })
+        .take(3);
+        assert_eq!(it.collect(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn duplicate_gives_both_consumers_all_items() {
+        let (mut a, mut b) = LocalIter::from_items(vec![1, 2, 3]).duplicate();
+        assert_eq!(a.next(), Some(1));
+        assert_eq!(b.next(), Some(1));
+        assert_eq!(b.next(), Some(2));
+        assert_eq!(b.next(), Some(3));
+        assert_eq!(b.next(), None);
+        assert_eq!(a.next(), Some(2));
+        assert_eq!(a.next(), Some(3));
+        assert_eq!(a.next(), None);
+    }
+
+    #[test]
+    fn duplicate_buffers_only_the_imbalance() {
+        let (mut a, mut b) = LocalIter::from_items((0..100).collect()).duplicate();
+        for _ in 0..10 {
+            a.next();
+        }
+        for i in 0..10 {
+            assert_eq!(b.next(), Some(i));
+        }
+    }
+}

@@ -1,0 +1,30 @@
+//! The parallel-iterator library — the general-purpose half of RLlib
+//! Flow (paper Figure 2: "parallel iterator library, 1241 LoC").
+//!
+//! Two iterator kinds, both *lazy* (nothing executes until `next()` is
+//! awaited on the terminal iterator, paper §4):
+//!
+//! * [`ParIter<W, T>`] — a parallel stream sharded across a set of actors
+//!   of state type `W`.  Transformations added with
+//!   [`ParIter::for_each`] execute **on the source actor** (the paper's
+//!   locality rule: `ComputeGradients` reads the worker-local policy
+//!   state), composing into a single per-shard plan closure.
+//! * [`LocalIter<T>`] — a sequential stream on the driver, produced by
+//!   the *sequencing operators* [`ParIter::gather_async`] (pink arrows:
+//!   items arrive as ready, `num_async` controls pipelining) and
+//!   [`ParIter::gather_sync`] (black arrows: barrier rounds — one item
+//!   per shard per round, upstream fully halted between fetches, so
+//!   actor messages sent between fetches are ordered w.r.t. dataflow).
+//!
+//! Concurrency across dataflow fragments is composed with
+//! [`concurrently`] (the paper's `Union`/`Concurrently` operator:
+//! round-robin, rate-limited round-robin via weights, or fully async),
+//! and [`LocalIter::duplicate`] (the `split` operator with buffering).
+
+mod local;
+mod par;
+mod union;
+
+pub use local::LocalIter;
+pub use par::ParIter;
+pub use union::{concurrently, UnionMode};

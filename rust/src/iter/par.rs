@@ -1,0 +1,335 @@
+//! `ParIter<W, T>` — the parallel iterator (`ParIter[T]`), sharded over a
+//! set of actors of state type `W`.
+//!
+//! A `ParIter` is a *plan*: a list of shard actors plus one composed
+//! closure that, when invoked **on the actor**, produces the next item.
+//! `for_each` extends the plan (still on-actor); the `gather_*`
+//! sequencing operators are the only places execution is driven.
+
+use std::sync::{mpsc, Arc};
+
+use crate::actor::ActorHandle;
+
+use super::LocalIter;
+
+type PlanFn<W, T> = Arc<dyn Fn(&mut W) -> Option<T> + Send + Sync>;
+
+pub struct ParIter<W: 'static, T> {
+    shards: Vec<ActorHandle<W>>,
+    plan: PlanFn<W, T>,
+}
+
+impl<W: 'static, T: Send + 'static> Clone for ParIter<W, T> {
+    fn clone(&self) -> Self {
+        ParIter { shards: self.shards.clone(), plan: self.plan.clone() }
+    }
+}
+
+impl<W: 'static, T: Send + 'static> ParIter<W, T> {
+    /// Create a parallel iterator from a set of source actors and a
+    /// source function (e.g. "sample a batch from this rollout worker").
+    /// Returning `None` ends that shard.
+    pub fn from_actors(
+        shards: Vec<ActorHandle<W>>,
+        source: impl Fn(&mut W) -> Option<T> + Send + Sync + 'static,
+    ) -> Self {
+        assert!(!shards.is_empty(), "ParIter needs at least one shard");
+        ParIter { shards, plan: Arc::new(source) }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn shards(&self) -> &[ActorHandle<W>] {
+        &self.shards
+    }
+
+    /// Parallel transformation, scheduled **onto the source actor** so
+    /// the op can read/write worker-local state (paper §4
+    /// Transformation; `ComputeGradients` relies on this locality).
+    pub fn for_each<U: Send + 'static>(
+        self,
+        op: impl Fn(&mut W, T) -> U + Send + Sync + 'static,
+    ) -> ParIter<W, U> {
+        let plan = self.plan;
+        ParIter {
+            shards: self.shards,
+            plan: Arc::new(move |w| plan(w).map(|t| op(w, t))),
+        }
+    }
+
+    /// Sequencing operator, async mode (pink arrow): items are merged
+    /// into the sequential iterator *as soon as they are ready*, in
+    /// nondeterministic order.  `num_async` requests are kept in flight
+    /// per shard (the pipeline-parallelism knob, paper §3) via a shared
+    /// completion queue — the analog of RLlib's batched `ray.wait`.
+    pub fn gather_async(self, num_async: usize) -> LocalIter<T> {
+        self.gather_async_with_source(num_async).for_each(|(t, _)| t)
+    }
+
+    /// `gather_async` + `zip_with_source_actor`: each item is paired
+    /// with the handle of the shard actor that produced it (used by
+    /// Ape-X's `UpdateWorkerWeights` to message the producing worker).
+    pub fn gather_async_with_source(
+        self,
+        num_async: usize,
+    ) -> LocalIter<(T, ActorHandle<W>)> {
+        assert!(num_async >= 1);
+        struct State<W: 'static, T> {
+            shards: Vec<ActorHandle<W>>,
+            plan: PlanFn<W, T>,
+            tx: mpsc::Sender<(usize, Option<T>)>,
+            rx: mpsc::Receiver<(usize, Option<T>)>,
+            outstanding: usize,
+            shard_done: Vec<bool>,
+            started: bool,
+        }
+        let (tx, rx) = mpsc::channel();
+        let n = self.shards.len();
+        let mut st = State {
+            shards: self.shards,
+            plan: self.plan,
+            tx,
+            rx,
+            outstanding: 0,
+            shard_done: vec![false; n],
+            started: false,
+        };
+        LocalIter::from_fn(move || {
+            if !st.started {
+                st.started = true;
+                // Prime the pipeline: num_async calls in flight per shard.
+                for (i, shard) in st.shards.iter().enumerate() {
+                    for _ in 0..num_async {
+                        let plan = st.plan.clone();
+                        shard.call_into(i, st.tx.clone(), move |w| plan(w));
+                        st.outstanding += 1;
+                    }
+                }
+            }
+            loop {
+                if st.outstanding == 0 {
+                    return None;
+                }
+                let (idx, item) = st.rx.recv().ok()?;
+                st.outstanding -= 1;
+                match item {
+                    Some(t) if !st.shard_done[idx] => {
+                        // Refill the shard's pipeline slot.
+                        let plan = st.plan.clone();
+                        st.shards[idx].call_into(idx, st.tx.clone(), move |w| {
+                            plan(w)
+                        });
+                        st.outstanding += 1;
+                        return Some((t, st.shards[idx].clone()));
+                    }
+                    Some(_) => {
+                        // Late result from a pipelined call issued before
+                        // the shard reported exhaustion: drop it.
+                    }
+                    None => st.shard_done[idx] = true,
+                }
+            }
+        })
+    }
+
+    /// Sequencing operator, sync mode (black arrow): each `next()`
+    /// issues one call to **every** shard, waits for all of them
+    /// (executing in parallel across actor threads), and yields the
+    /// round as a `Vec`.  Upstream is fully halted between fetches —
+    /// barrier semantics, so actor messages sent between fetches (e.g.
+    /// a weight broadcast) are ordered with respect to dataflow steps
+    /// (paper §4 Sequencing).  Ends when any shard is exhausted.
+    pub fn gather_sync(self) -> LocalIter<Vec<T>> {
+        let shards = self.shards;
+        let plan = self.plan;
+        let mut done = false;
+        LocalIter::from_fn(move || {
+            if done {
+                return None;
+            }
+            let replies: Vec<_> = shards
+                .iter()
+                .map(|h| {
+                    let plan = plan.clone();
+                    h.call_deferred(move |w| plan(w))
+                })
+                .collect();
+            let mut items = Vec::with_capacity(replies.len());
+            for r in replies {
+                match r.recv() {
+                    Some(t) => items.push(t),
+                    None => {
+                        done = true;
+                        return None;
+                    }
+                }
+            }
+            Some(items)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::actor::spawn_group;
+
+    struct Worker {
+        id: usize,
+        counter: i32,
+        weights: f32,
+    }
+
+    fn workers(n: usize) -> Vec<ActorHandle<Worker>> {
+        spawn_group("w", n, |i| {
+            Box::new(move || Worker { id: i, counter: 0, weights: 0.0 })
+        })
+    }
+
+    #[test]
+    fn for_each_runs_on_source_actor() {
+        let ws = workers(2);
+        let it = ParIter::from_actors(ws, |w| {
+            w.counter += 1;
+            Some(w.counter)
+        })
+        // The op reads actor-local state (w.id): proves on-actor exec.
+        .for_each(|w, c| (w.id, c));
+        let mut gathered = it.gather_sync();
+        let round = gathered.next().unwrap();
+        let mut ids: Vec<usize> = round.iter().map(|(id, _)| *id).collect();
+        ids.sort();
+        assert_eq!(ids, vec![0, 1]);
+        assert!(round.iter().all(|(_, c)| *c == 1));
+    }
+
+    #[test]
+    fn plan_is_lazy_until_gathered() {
+        let ws = workers(1);
+        let _plan = ParIter::from_actors(ws.clone(), |w: &mut Worker| {
+            w.counter += 1;
+            Some(w.counter)
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(ws[0].call(|w| w.counter), 0);
+    }
+
+    #[test]
+    fn gather_sync_barrier_rounds() {
+        let ws = workers(3);
+        let mut it = ParIter::from_actors(ws.clone(), |w| {
+            w.counter += 1;
+            Some(w.counter)
+        })
+        .gather_sync();
+        assert_eq!(it.next().unwrap(), vec![1, 1, 1]);
+        // Barrier: all shards advanced exactly once; messages sent now
+        // are ordered before round 2's fetches.
+        for w in &ws {
+            w.cast(|w| w.weights = 7.0);
+        }
+        let round2 = ParIter::from_actors(ws.clone(), |w| Some(w.weights))
+            .gather_sync()
+            .next()
+            .unwrap();
+        assert_eq!(round2, vec![7.0, 7.0, 7.0]);
+        assert_eq!(it.next().unwrap(), vec![2, 2, 2]);
+    }
+
+    #[test]
+    fn gather_sync_ends_when_shard_exhausts() {
+        let ws = workers(2);
+        let mut it = ParIter::from_actors(ws, |w| {
+            w.counter += 1;
+            if w.id == 1 && w.counter > 2 {
+                None
+            } else {
+                Some(w.counter)
+            }
+        })
+        .gather_sync();
+        assert!(it.next().is_some());
+        assert!(it.next().is_some());
+        assert!(it.next().is_none());
+    }
+
+    #[test]
+    fn gather_async_yields_all_items_any_order() {
+        let ws = workers(4);
+        let it = ParIter::from_actors(ws, |w| {
+            w.counter += 1;
+            if w.counter > 3 {
+                None
+            } else {
+                Some((w.id, w.counter))
+            }
+        })
+        .gather_async(1);
+        let mut got = it.collect();
+        assert_eq!(got.len(), 12);
+        got.sort();
+        let expected: Vec<(usize, i32)> =
+            (0..4).flat_map(|id| (1..=3).map(move |c| (id, c))).collect();
+        assert_eq!(got, expected);
+    }
+
+    #[test]
+    fn gather_async_pipelines_num_async() {
+        // With num_async=2, two calls are primed per shard: after the
+        // driver pulls 1 item, the actor has already computed (or is
+        // computing) the second.
+        let ws = workers(1);
+        let mut it = ParIter::from_actors(ws.clone(), |w| {
+            w.counter += 1;
+            Some(w.counter)
+        })
+        .gather_async(2);
+        assert_eq!(it.next(), Some(1));
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        let counter = ws[0].call(|w| w.counter);
+        assert!(counter >= 2, "pipelining should prefetch, counter={counter}");
+    }
+
+    #[test]
+    fn gather_async_multiple_inflight_interleaves_shards() {
+        let ws = workers(3);
+        let it = ParIter::from_actors(ws, |w| {
+            w.counter += 1;
+            if w.counter > 10 {
+                None
+            } else {
+                Some(w.id)
+            }
+        })
+        .gather_async(4);
+        let got = it.collect();
+        assert_eq!(got.len(), 30);
+        for id in 0..3 {
+            assert_eq!(got.iter().filter(|&&x| x == id).count(), 10);
+        }
+    }
+
+    #[test]
+    fn zip_with_source_actor_pairs_handles() {
+        let ws = workers(2);
+        let mut it = ParIter::from_actors(ws, |w| {
+            w.counter += 1;
+            if w.counter > 1 {
+                None
+            } else {
+                Some(w.id)
+            }
+        })
+        .gather_async_with_source(1);
+        let mut pairs = vec![];
+        while let Some((id, handle)) = it.next() {
+            // The paired handle must address the producing actor.
+            let actor_id = handle.call(|w| w.id);
+            pairs.push((id, actor_id));
+        }
+        assert_eq!(pairs.len(), 2);
+        assert!(pairs.iter().all(|(a, b)| a == b));
+    }
+}

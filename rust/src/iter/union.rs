@@ -1,0 +1,281 @@
+//! `Concurrently` / `Union` — composing concurrently executing dataflow
+//! fragments (paper §4 Concurrency, Figure 8; used by Ape-X and the
+//! multi-agent PPO+DQN composition).
+
+use std::sync::mpsc;
+
+use super::LocalIter;
+
+#[derive(Debug, Clone)]
+pub enum UnionMode {
+    /// Pull children in a fixed rotation on the driver.  `weights[i]`
+    /// pulls are taken from child i per cycle — the rate-limiting knob
+    /// (Acme-style fixed-ratio progress, paper §2.2/§4).  `None` = 1
+    /// pull each.  Deterministic and fully lazy.
+    RoundRobin { weights: Option<Vec<usize>> },
+    /// Drive every child from its own driver thread, yielding items as
+    /// they become ready (maximum pipeline overlap — Ape-X's
+    /// mode="async").  Each child is driven at most `buffer` items ahead
+    /// of consumption (bounded channels provide the backpressure the
+    /// paper's scheduler applies to concurrent fragments).
+    Async { buffer: usize },
+}
+
+/// Compose concurrent sub-flows into one iterator.
+///
+/// `output_indexes`: if set, items from children not listed are still
+/// *driven* (their side effects happen) but dropped from the output —
+/// e.g. Ape-X emits only sub-flow (3)'s items (`output_indexes=[2]`).
+pub fn concurrently<T: Send + 'static>(
+    children: Vec<LocalIter<T>>,
+    mode: UnionMode,
+    output_indexes: Option<Vec<usize>>,
+) -> LocalIter<T> {
+    let emit =
+        move |idx: usize| output_indexes.as_ref().is_none_or(|s| s.contains(&idx));
+    match mode {
+        UnionMode::RoundRobin { weights } => {
+            let weights = match weights {
+                Some(w) => {
+                    assert_eq!(w.len(), children.len(), "weights length");
+                    assert!(w.iter().all(|&x| x >= 1), "weights must be >= 1");
+                    w
+                }
+                None => vec![1; children.len()],
+            };
+            round_robin(children, weights, emit)
+        }
+        UnionMode::Async { buffer } => async_union(children, buffer, emit),
+    }
+}
+
+fn round_robin<T: Send + 'static>(
+    children: Vec<LocalIter<T>>,
+    weights: Vec<usize>,
+    emit: impl Fn(usize) -> bool + Send + 'static,
+) -> LocalIter<T> {
+    let mut children: Vec<Option<LocalIter<T>>> =
+        children.into_iter().map(Some).collect();
+    let mut cursor = 0usize;
+    let mut left_in_cycle = weights[0];
+    LocalIter::from_fn(move || loop {
+        if children.iter().all(|c| c.is_none()) {
+            return None;
+        }
+        if children[cursor].is_none() || left_in_cycle == 0 {
+            cursor = (cursor + 1) % children.len();
+            left_in_cycle = weights[cursor];
+            continue;
+        }
+        match children[cursor].as_mut().unwrap().next() {
+            Some(t) => {
+                left_in_cycle -= 1;
+                let idx = cursor;
+                if left_in_cycle == 0 {
+                    cursor = (cursor + 1) % children.len();
+                    left_in_cycle = weights[cursor];
+                }
+                if emit(idx) {
+                    return Some(t);
+                }
+                // Driven but dropped: keep pulling.
+            }
+            None => {
+                children[cursor] = None;
+                cursor = (cursor + 1) % children.len();
+                left_in_cycle = weights[cursor];
+            }
+        }
+    })
+}
+
+fn async_union<T: Send + 'static>(
+    children: Vec<LocalIter<T>>,
+    buffer: usize,
+    emit: impl Fn(usize) -> bool + Send + 'static,
+) -> LocalIter<T> {
+    assert!(buffer >= 1);
+    struct State<T> {
+        rx: mpsc::Receiver<(usize, Option<T>)>,
+        live: usize,
+    }
+    let mut lazy: Option<State<T>> = None;
+    let mut children = Some(children);
+    LocalIter::from_fn(move || {
+        let st = lazy.get_or_insert_with(|| {
+            // First pull: spawn one driver thread per child.  The
+            // bounded channel means each child runs at most `buffer`
+            // items ahead of the consumer.
+            let children = children.take().unwrap();
+            let (tx, rx) = mpsc::sync_channel(buffer);
+            let live = children.len();
+            for (i, mut child) in children.into_iter().enumerate() {
+                let tx = tx.clone();
+                std::thread::Builder::new()
+                    .name(format!("union-{i}"))
+                    .spawn(move || loop {
+                        let item = child.next();
+                        let end = item.is_none();
+                        if tx.send((i, item)).is_err() || end {
+                            return;
+                        }
+                    })
+                    .expect("spawn union driver");
+            }
+            State { rx: to_receiver(rx), live }
+        });
+        loop {
+            if st.live == 0 {
+                return None;
+            }
+            match st.rx.recv() {
+                Ok((idx, Some(t))) => {
+                    if emit(idx) {
+                        return Some(t);
+                    }
+                }
+                Ok((_, None)) => st.live -= 1,
+                Err(_) => return None,
+            }
+        }
+    })
+}
+
+/// `sync_channel` gives a `Receiver` already; helper for type clarity.
+fn to_receiver<T>(rx: mpsc::Receiver<T>) -> mpsc::Receiver<T> {
+    rx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_alternates() {
+        let a = LocalIter::from_items(vec![1, 3, 5]);
+        let b = LocalIter::from_items(vec![2, 4, 6]);
+        let got = concurrently(
+            vec![a, b],
+            UnionMode::RoundRobin { weights: None },
+            None,
+        )
+        .collect();
+        assert_eq!(got, vec![1, 2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn round_robin_weights_rate_limit() {
+        // 2 pulls from a per 1 from b — fixed 2:1 progress ratio.
+        let a = LocalIter::from_items(vec![10, 11, 12, 13]);
+        let b = LocalIter::from_items(vec![20, 21]);
+        let got = concurrently(
+            vec![a, b],
+            UnionMode::RoundRobin { weights: Some(vec![2, 1]) },
+            None,
+        )
+        .collect();
+        assert_eq!(got, vec![10, 11, 20, 12, 13, 21]);
+    }
+
+    #[test]
+    fn round_robin_continues_after_exhaustion() {
+        let a = LocalIter::from_items(vec![1]);
+        let b = LocalIter::from_items(vec![2, 3, 4]);
+        let got = concurrently(
+            vec![a, b],
+            UnionMode::RoundRobin { weights: None },
+            None,
+        )
+        .collect();
+        assert_eq!(got, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn output_indexes_drive_but_drop() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+        let driven = Arc::new(AtomicUsize::new(0));
+        let d = driven.clone();
+        let mut n = 0;
+        let store_op = LocalIter::from_fn(move || {
+            n += 1;
+            if n > 3 {
+                return None;
+            }
+            d.fetch_add(1, Ordering::SeqCst);
+            Some(0) // side-effecting subflow, output dropped
+        });
+        let update_op = LocalIter::from_items(vec![100, 200, 300]);
+        let got = concurrently(
+            vec![store_op, update_op],
+            UnionMode::RoundRobin { weights: None },
+            Some(vec![1]),
+        )
+        .collect();
+        assert_eq!(got, vec![100, 200, 300]);
+        assert_eq!(driven.load(Ordering::SeqCst), 3); // side effects ran
+    }
+
+    #[test]
+    fn async_mode_yields_everything() {
+        let a = LocalIter::from_items(vec![1, 2]);
+        let b = LocalIter::from_items(vec![3]);
+        let mut got =
+            concurrently(vec![a, b], UnionMode::Async { buffer: 4 }, None)
+                .collect();
+        got.sort();
+        assert_eq!(got, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn async_mode_with_output_indexes() {
+        let a = LocalIter::from_items(vec![1, 2, 3]);
+        let b = LocalIter::from_items(vec![10, 20]);
+        let got = concurrently(
+            vec![a, b],
+            UnionMode::Async { buffer: 2 },
+            Some(vec![0]),
+        )
+        .collect();
+        assert_eq!(got, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn async_mode_overlaps_slow_children() {
+        // One slow and one fast child: total wall-clock must be far
+        // below the serial sum (true concurrency).
+        let slow = LocalIter::from_items(vec![1, 2, 3, 4]).for_each(|x| {
+            std::thread::sleep(std::time::Duration::from_millis(25));
+            x
+        });
+        let fast = LocalIter::from_items(vec![10, 20, 30, 40]).for_each(|x| {
+            std::thread::sleep(std::time::Duration::from_millis(25));
+            x
+        });
+        let start = std::time::Instant::now();
+        let got = concurrently(
+            vec![slow, fast],
+            UnionMode::Async { buffer: 2 },
+            None,
+        )
+        .collect();
+        assert_eq!(got.len(), 8);
+        let elapsed = start.elapsed();
+        assert!(
+            elapsed < std::time::Duration::from_millis(190),
+            "children did not overlap: {elapsed:?}"
+        );
+    }
+
+    #[test]
+    fn empty_children_end_immediately() {
+        let a = LocalIter::from_items(Vec::<i32>::new());
+        let got = concurrently(
+            vec![a],
+            UnionMode::RoundRobin { weights: None },
+            None,
+        )
+        .collect();
+        assert!(got.is_empty());
+    }
+}

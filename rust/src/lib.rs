@@ -1,0 +1,43 @@
+//! # flowrl — RLlib Flow as a rust + JAX + Pallas stack
+//!
+//! A reproduction of *"RLlib Flow: Distributed Reinforcement Learning is a
+//! Dataflow Problem"* (Liang et al., NeurIPS 2021): a hybrid
+//! actor–dataflow programming model for distributed RL.
+//!
+//! The crate is organized as the paper's Figure 2:
+//!
+//! * [`iter`] — the general-purpose parallel-iterator library
+//!   (`LocalIter`, `ParIter`, gather/union/split operators);
+//! * [`ops`] — the RL-specific dataflow operators (`ParallelRollouts`,
+//!   `TrainOneStep`, `Replay`, `StoreToReplayBuffer`, …);
+//! * [`algorithms`] — the full algorithm suite expressed as dataflow
+//!   plans (A2C, A3C, PPO, DQN, Ape-X, IMPALA, MAML, multi-agent union);
+//! * [`baseline`] — low-level actor/RPC re-implementations (the paper's
+//!   "original RLlib" comparison points) plus a Spark-Streaming-style
+//!   microbatch executor for the Appendix A.1 comparison;
+//! * substrates: [`actor`] (tokio actor runtime), [`env`] (CartPole
+//!   family), [`replay`] (prioritized replay), [`sample_batch`],
+//!   [`runtime`] (PJRT loader for the JAX/Pallas AOT artifacts),
+//!   [`policy`] + [`rollout`] (XLA-backed policies and rollout workers),
+//!   [`metrics`].
+//!
+//! Numerics are JAX/Pallas programs lowered once to HLO text
+//! (`make artifacts`) and executed from rust via PJRT — python is never
+//! on the training path.
+
+pub mod actor;
+pub mod algorithms;
+pub mod baseline;
+pub mod checkpoint;
+pub mod env;
+pub mod iter;
+pub mod metrics;
+pub mod ops;
+pub mod policy;
+pub mod replay;
+pub mod rollout;
+pub mod runtime;
+pub mod sample_batch;
+pub mod util;
+
+pub use sample_batch::SampleBatch;

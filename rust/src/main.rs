@@ -1,0 +1,133 @@
+//! flowrl — CLI launcher for the ported algorithm suite.
+//!
+//! ```bash
+//! flowrl train ppo --workers 4 --iters 50 --batch 512
+//! flowrl train apex --workers 8 --iters 100
+//! flowrl list
+//! ```
+
+use std::process::exit;
+
+use flowrl::algorithms::{
+    a2c_plan, a3c_plan, apex_plan, dqn_plan, impala_plan, maml_plan,
+    multi_agent_plan, ppo_plan, ApexConfig, DqnConfig, MamlConfig,
+    MultiAgentConfig, TrainerConfig,
+};
+
+const ALGOS: &[&str] =
+    &["a2c", "a3c", "ppo", "dqn", "apex", "impala", "maml", "multi_agent"];
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: flowrl <command>\n\
+         \n\
+         commands:\n\
+         \x20 train <algo> [--workers N] [--envs N] [--iters N]\n\
+         \x20       [--batch N] [--fragment N] [--lr F] [--seed N]\n\
+         \x20       [--artifacts DIR] [--env cartpole|mountain_car] [--quiet]\n\
+         \x20 list                 list available algorithms\n\
+         \n\
+         algorithms: {}",
+        ALGOS.join(", ")
+    );
+    exit(2)
+}
+
+struct Args {
+    algo: String,
+    config: TrainerConfig,
+    iters: usize,
+    quiet: bool,
+}
+
+fn parse_args() -> Args {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match argv.first().map(String::as_str) {
+        Some("list") => {
+            for a in ALGOS {
+                println!("{a}");
+            }
+            exit(0)
+        }
+        Some("train") => {}
+        _ => usage(),
+    }
+    let algo = argv.get(1).cloned().unwrap_or_else(|| usage());
+    if !ALGOS.contains(&algo.as_str()) {
+        eprintln!("unknown algorithm '{algo}'");
+        usage();
+    }
+    let mut config = TrainerConfig::default();
+    let mut iters = 20usize;
+    let mut quiet = false;
+    let mut i = 2;
+    let next_val = |i: &mut usize| -> String {
+        *i += 1;
+        argv.get(*i).cloned().unwrap_or_else(|| usage())
+    };
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--workers" => config.num_workers = next_val(&mut i).parse().unwrap(),
+            "--envs" => {
+                config.num_envs_per_worker = next_val(&mut i).parse().unwrap()
+            }
+            "--iters" => iters = next_val(&mut i).parse().unwrap(),
+            "--batch" => {
+                config.train_batch_size = next_val(&mut i).parse().unwrap()
+            }
+            "--fragment" => {
+                config.rollout_fragment_length =
+                    next_val(&mut i).parse().unwrap()
+            }
+            "--lr" => config.lr = next_val(&mut i).parse().unwrap(),
+            "--seed" => config.seed = next_val(&mut i).parse().unwrap(),
+            "--artifacts" => {
+                config.artifacts_dir = next_val(&mut i).into()
+            }
+            "--env" => {
+                config.env = match next_val(&mut i).as_str() {
+                    "cartpole" => flowrl::algorithms::EnvKind::CartPole,
+                    "mountain_car" => {
+                        flowrl::algorithms::EnvKind::MountainCar
+                    }
+                    "dummy" => flowrl::algorithms::EnvKind::Dummy,
+                    other => {
+                        eprintln!("unknown env '{other}'");
+                        usage()
+                    }
+                }
+            }
+            "--quiet" => quiet = true,
+            other => {
+                eprintln!("unknown flag '{other}'");
+                usage()
+            }
+        }
+        i += 1;
+    }
+    Args { algo, config, iters, quiet }
+}
+
+fn main() {
+    let args = parse_args();
+    let cfg = &args.config;
+    let mut plan = match args.algo.as_str() {
+        "a2c" => a2c_plan(cfg),
+        "a3c" => a3c_plan(cfg),
+        "ppo" => ppo_plan(cfg),
+        "dqn" => dqn_plan(cfg, &DqnConfig::default()),
+        "apex" => apex_plan(cfg, &ApexConfig::default()),
+        "impala" => impala_plan(cfg),
+        "maml" => maml_plan(cfg, &MamlConfig::default()),
+        "multi_agent" => multi_agent_plan(cfg, &MultiAgentConfig::default()),
+        _ => unreachable!(),
+    };
+    let start = std::time::Instant::now();
+    for i in 1..=args.iters {
+        let r = plan.next().expect("training stream ended");
+        if !args.quiet || i == args.iters {
+            println!("iter {i:4}  {r}");
+        }
+    }
+    eprintln!("done in {:?}", start.elapsed());
+}

@@ -1,0 +1,145 @@
+//! Training metrics: per-episode stats collected by rollout workers and
+//! aggregated by the `StandardMetricsReporting` dataflow operator.
+
+use std::collections::BTreeMap;
+
+use crate::util::MovingStat;
+
+/// A finished episode, reported by the worker that ran it.
+#[derive(Debug, Clone, Copy)]
+pub struct EpisodeRecord {
+    pub reward: f64,
+    pub length: usize,
+}
+
+/// Rolling aggregation of episodes + counters, one per trainer.
+#[derive(Debug)]
+pub struct MetricsHub {
+    episode_rewards: MovingStat,
+    episode_lengths: MovingStat,
+    pub num_env_steps_sampled: u64,
+    pub num_env_steps_trained: u64,
+    pub num_grad_updates: u64,
+    start: std::time::Instant,
+    /// Last scalar training stats (loss etc.), merged per key.
+    pub learner_stats: BTreeMap<String, f64>,
+}
+
+impl Default for MetricsHub {
+    fn default() -> Self {
+        Self::new(100)
+    }
+}
+
+impl MetricsHub {
+    pub fn new(window: usize) -> Self {
+        MetricsHub {
+            episode_rewards: MovingStat::new(window),
+            episode_lengths: MovingStat::new(window),
+            num_env_steps_sampled: 0,
+            num_env_steps_trained: 0,
+            num_grad_updates: 0,
+            start: std::time::Instant::now(),
+            learner_stats: BTreeMap::new(),
+        }
+    }
+
+    pub fn record_episodes(&mut self, episodes: &[EpisodeRecord]) {
+        for e in episodes {
+            self.episode_rewards.push(e.reward);
+            self.episode_lengths.push(e.length as f64);
+        }
+    }
+
+    pub fn record_learner_stat(&mut self, key: &str, value: f64) {
+        self.learner_stats.insert(key.to_string(), value);
+    }
+
+    /// Snapshot for reporting (the item type of metric streams).
+    pub fn snapshot(&self) -> TrainResult {
+        TrainResult {
+            episode_reward_mean: self.episode_rewards.mean(),
+            episode_len_mean: self.episode_lengths.mean(),
+            episodes_total: self.episode_rewards.lifetime_count(),
+            num_env_steps_sampled: self.num_env_steps_sampled,
+            num_env_steps_trained: self.num_env_steps_trained,
+            num_grad_updates: self.num_grad_updates,
+            sampled_steps_per_s: self.num_env_steps_sampled as f64
+                / self.start.elapsed().as_secs_f64().max(1e-9),
+            learner_stats: self.learner_stats.clone(),
+        }
+    }
+}
+
+/// The item emitted by `StandardMetricsReporting` — RLlib's train result
+/// dict, typed.
+#[derive(Debug, Clone, Default)]
+pub struct TrainResult {
+    pub episode_reward_mean: f64,
+    pub episode_len_mean: f64,
+    pub episodes_total: u64,
+    pub num_env_steps_sampled: u64,
+    pub num_env_steps_trained: u64,
+    pub num_grad_updates: u64,
+    pub sampled_steps_per_s: f64,
+    pub learner_stats: BTreeMap<String, f64>,
+}
+
+impl std::fmt::Display for TrainResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "reward_mean={:8.2} len_mean={:6.1} episodes={:5} sampled={:8} \
+             trained={:8} updates={:6} steps/s={:9.0}",
+            self.episode_reward_mean,
+            self.episode_len_mean,
+            self.episodes_total,
+            self.num_env_steps_sampled,
+            self.num_env_steps_trained,
+            self.num_grad_updates,
+            self.sampled_steps_per_s,
+        )?;
+        if let Some(loss) = self.learner_stats.get("loss") {
+            write!(f, " loss={loss:9.4}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_aggregates_episodes() {
+        let mut hub = MetricsHub::new(10);
+        hub.record_episodes(&[
+            EpisodeRecord { reward: 10.0, length: 10 },
+            EpisodeRecord { reward: 20.0, length: 20 },
+        ]);
+        hub.num_env_steps_sampled = 30;
+        let snap = hub.snapshot();
+        assert_eq!(snap.episode_reward_mean, 15.0);
+        assert_eq!(snap.episode_len_mean, 15.0);
+        assert_eq!(snap.episodes_total, 2);
+        assert_eq!(snap.num_env_steps_sampled, 30);
+    }
+
+    #[test]
+    fn window_bounds_reward_mean() {
+        let mut hub = MetricsHub::new(2);
+        for r in [1.0, 2.0, 3.0, 4.0] {
+            hub.record_episodes(&[EpisodeRecord { reward: r, length: 1 }]);
+        }
+        assert_eq!(hub.snapshot().episode_reward_mean, 3.5);
+        assert_eq!(hub.snapshot().episodes_total, 4);
+    }
+
+    #[test]
+    fn learner_stats_merge_by_key() {
+        let mut hub = MetricsHub::new(4);
+        hub.record_learner_stat("loss", 1.0);
+        hub.record_learner_stat("loss", 0.5);
+        assert_eq!(hub.snapshot().learner_stats["loss"], 0.5);
+    }
+}

@@ -1,0 +1,101 @@
+//! `StandardMetricsReporting` — the terminal operator every algorithm
+//! plan returns: folds training items and worker episode stats into
+//! `TrainResult`s (RLlib's train-result dict).
+
+use crate::iter::LocalIter;
+use crate::metrics::{MetricsHub, TrainResult};
+use crate::rollout::WorkerSet;
+
+use super::TrainItem;
+
+/// Wrap a training stream: each output pulls `items_per_report` train
+/// items, drains episode metrics from all workers, and emits a
+/// `TrainResult` snapshot.
+pub fn standard_metrics_reporting(
+    inner: LocalIter<TrainItem>,
+    workers: &WorkerSet,
+    items_per_report: usize,
+) -> LocalIter<TrainResult> {
+    assert!(items_per_report >= 1);
+    let mut inner = inner;
+    let mut hub = MetricsHub::new(100);
+    let local = workers.local.clone();
+    let remotes = workers.remotes.clone();
+    LocalIter::from_fn(move || {
+        for _ in 0..items_per_report {
+            let item = inner.next()?;
+            hub.num_env_steps_trained += item.steps_trained as u64;
+            hub.num_grad_updates += 1;
+            for (k, v) in item.stats {
+                hub.record_learner_stat(&k, v);
+            }
+        }
+        // Drain episodes + sampled counters from every worker.
+        let replies: Vec<_> = std::iter::once(&local)
+            .chain(remotes.iter())
+            .map(|h| {
+                h.call_deferred(|w| {
+                    let eps = w.pop_episodes();
+                    let steps = w.num_steps_sampled;
+                    w.num_steps_sampled = 0;
+                    (eps, steps)
+                })
+            })
+            .collect();
+        for r in replies {
+            let (eps, steps) = r.recv();
+            hub.record_episodes(&eps);
+            hub.num_env_steps_sampled += steps as u64;
+        }
+        Some(hub.snapshot())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::{DummyEnv, Env};
+    use crate::ops::{parallel_rollouts, train_one_step};
+    use crate::policy::DummyPolicy;
+    use crate::rollout::{CollectMode, RolloutWorker};
+
+    fn worker_set(n_remote: usize) -> WorkerSet {
+        WorkerSet::new(n_remote, |_| {
+            Box::new(|| {
+                let envs: Vec<Box<dyn Env>> =
+                    vec![Box::new(DummyEnv::new(4, 10))];
+                RolloutWorker::new(
+                    envs,
+                    Box::new(DummyPolicy::new(0.1)),
+                    10,
+                    CollectMode::OnPolicy,
+                )
+            })
+        })
+    }
+
+    #[test]
+    fn reports_aggregate_training_and_episodes() {
+        let workers = worker_set(2);
+        let mut train = train_one_step(
+            workers.local.clone(),
+            workers.remotes.clone(),
+        );
+        let train_op = parallel_rollouts(workers.remotes.to_vec())
+            .gather_async(1)
+            .for_each(move |b| train(b));
+        let mut reports =
+            standard_metrics_reporting(train_op, &workers, 2).take(3);
+        let mut last = None;
+        while let Some(r) = reports.next() {
+            last = Some(r);
+        }
+        let r = last.unwrap();
+        // 3 reports x 2 items x 10 steps trained.
+        assert_eq!(r.num_env_steps_trained, 60);
+        assert_eq!(r.num_grad_updates, 6);
+        assert!(r.num_env_steps_sampled >= 60);
+        assert!(r.episodes_total >= 4); // 10-step episodes on DummyEnv
+        assert!(r.learner_stats.contains_key("loss"));
+    }
+}

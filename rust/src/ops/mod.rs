@@ -1,0 +1,40 @@
+//! RL-specific dataflow operators — the "RLlib Flow core" of Figure 2
+//! (1118 LoC in the paper's implementation).
+//!
+//! Each operator is a small composable piece: either a constructor for a
+//! `ParIter`/`LocalIter` source, or a closure factory meant to be handed
+//! to `for_each`/`combine`.  Algorithms (see `crate::algorithms`) are
+//! nothing but short compositions of these — which is the paper's whole
+//! point.
+
+mod metrics_ops;
+mod replay_ops;
+mod rollout_ops;
+mod train_ops;
+
+use std::collections::BTreeMap;
+
+pub use metrics_ops::standard_metrics_reporting;
+pub use replay_ops::{
+    create_replay_actors, replay, store_to_replay_buffer, ReplayActor,
+};
+pub use rollout_ops::{
+    concat_batches, exact_batches, parallel_rollouts, select_policy,
+};
+pub use train_ops::{
+    apply_gradients, compute_gradients, train_one_step, update_target_network,
+};
+
+/// The item type flowing between training operators: stats plus step
+/// counters (feeds `StandardMetricsReporting`).
+#[derive(Debug, Clone, Default)]
+pub struct TrainItem {
+    pub stats: BTreeMap<String, f64>,
+    pub steps_trained: usize,
+}
+
+impl TrainItem {
+    pub fn new(stats: BTreeMap<String, f64>, steps_trained: usize) -> Self {
+        TrainItem { stats, steps_trained }
+    }
+}

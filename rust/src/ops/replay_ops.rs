@@ -1,0 +1,154 @@
+//! Replay-side operators: replay actors, `StoreToReplayBuffer`,
+//! `Replay` (paper Fig. 10).
+
+use crate::actor::{spawn_group, ActorHandle};
+use crate::iter::{LocalIter, ParIter};
+use crate::replay::{ReplayActorState, ReplaySample};
+use crate::sample_batch::SampleBatch;
+use crate::util::Rng;
+
+/// The replay actor type (paper: `create_colocated(ReplayActor)`).
+pub type ReplayActor = ActorHandle<ReplayActorState>;
+
+/// Spawn `n` replay-buffer actors.
+pub fn create_replay_actors(
+    n: usize,
+    capacity: usize,
+    learning_starts: usize,
+    replay_batch_size: usize,
+) -> Vec<ReplayActor> {
+    spawn_group("replay", n, move |i| {
+        Box::new(move || {
+            ReplayActorState::new(
+                capacity,
+                learning_starts,
+                replay_batch_size,
+                0xC0FFEE + i as u64,
+            )
+        })
+    })
+}
+
+/// `StoreToReplayBuffer(actors)`: ship each incoming batch to a
+/// randomly chosen replay actor (fire-and-forget, like Ape-X's
+/// `random.choice(replay_actors).add_batch.remote(batch)`), passing the
+/// batch through for downstream ops (weight updates etc.).
+pub fn store_to_replay_buffer(
+    actors: Vec<ReplayActor>,
+) -> impl FnMut(SampleBatch) -> SampleBatch + Send + 'static {
+    let mut rng = Rng::new(0x5703E);
+    move |batch| {
+        let target = &actors[rng.below(actors.len())];
+        let clone = batch.clone();
+        target.cast(move |ra| ra.add_batch(&clone));
+        batch
+    }
+}
+
+/// `Replay(actors, num_async)`: an endless stream of prioritized
+/// samples drawn from the replay actors, paired with the producing
+/// actor's handle (for priority updates).
+///
+/// Before `learning_starts` the buffers are not ready: the stream
+/// yields `None` items (after a brief backoff) instead of blocking —
+/// critical under a round-robin `Concurrently`, where a blocking
+/// replay child would starve the very store child that must fill the
+/// buffer (classic composition deadlock; regression-tested in
+/// rust/tests/integration.rs).
+pub fn replay(
+    actors: Vec<ReplayActor>,
+    num_async: usize,
+) -> LocalIter<Option<(ReplaySample, ReplayActor)>> {
+    ParIter::from_actors(actors, |ra: &mut ReplayActorState| Some(ra.replay()))
+        .gather_async_with_source(num_async)
+        .for_each(|(maybe, actor)| match maybe {
+            Some(s) => Some((s, actor)),
+            None => {
+                // Empty buffer: back off so we don't spin the replay
+                // actor's mailbox, then report not-ready.
+                std::thread::sleep(std::time::Duration::from_micros(500));
+                None
+            }
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sample_batch::SampleBatchBuilder;
+
+    fn transitions(n: usize) -> SampleBatch {
+        let mut b = SampleBatchBuilder::new(2);
+        for i in 0..n {
+            b.add_transition(
+                &[i as f32, 0.0],
+                0,
+                1.0,
+                &[i as f32 + 1.0, 0.0],
+                false,
+            );
+        }
+        b.build()
+    }
+
+    #[test]
+    fn store_op_distributes_to_actors() {
+        let actors = create_replay_actors(2, 64, 0, 4);
+        let mut op = store_to_replay_buffer(actors.clone());
+        for _ in 0..10 {
+            let out = op(transitions(4));
+            assert_eq!(out.len(), 4); // pass-through
+        }
+        let totals: Vec<usize> =
+            actors.iter().map(|a| a.call(|ra| ra.num_added)).collect();
+        assert_eq!(totals.iter().sum::<usize>(), 40);
+        assert!(totals.iter().all(|&t| t > 0), "both actors used: {totals:?}");
+    }
+
+    #[test]
+    fn replay_stream_yields_after_learning_starts() {
+        let actors = create_replay_actors(2, 64, 8, 4);
+        let mut store = store_to_replay_buffer(actors.clone());
+        // Feed both actors past learning_starts.
+        for _ in 0..8 {
+            store(transitions(4));
+        }
+        let mut it = replay(actors, 2);
+        let mut n = 0;
+        while n < 5 {
+            let Some((sample, actor)) = it.next().unwrap() else {
+                continue; // store casts may still be in flight
+            };
+            assert_eq!(sample.batch.len(), 4);
+            assert_eq!(sample.indices.len(), 4);
+            // The handle can message the producing actor.
+            actor.cast(|ra| ra.num_sampled += 0);
+            n += 1;
+        }
+    }
+
+    #[test]
+    fn replay_before_learning_starts_yields_not_ready() {
+        let actors = create_replay_actors(1, 64, 1000, 4);
+        let mut it = replay(actors, 1);
+        // Stream must not block: it reports not-ready instead.
+        for _ in 0..3 {
+            assert!(it.next().unwrap().is_none());
+        }
+    }
+
+    #[test]
+    fn priority_update_roundtrip_through_actor() {
+        let actors = create_replay_actors(1, 64, 0, 4);
+        actors[0].call({
+            let batch = transitions(4);
+            move |ra| ra.add_batch(&batch)
+        });
+        let (sample, actor) = replay(actors, 1).next().unwrap().unwrap();
+        let indices = sample.indices.clone();
+        let tds = vec![9.0; indices.len()];
+        actor.call(move |ra| ra.update_priorities(&indices, &tds));
+        // Priorities applied: the buffer can still sample.
+        assert!(actor.call(|ra| ra.replay()).is_some());
+    }
+}

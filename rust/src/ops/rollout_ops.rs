@@ -1,0 +1,158 @@
+//! Rollout-side operators: `ParallelRollouts`, `ConcatBatches`,
+//! `SelectExperiences`.
+
+use crate::actor::ActorHandle;
+use crate::iter::ParIter;
+use crate::rollout::RolloutWorker;
+use crate::sample_batch::{MultiAgentBatch, SampleBatch};
+
+/// `ParallelRollouts(workers)`: a parallel stream of experience batches,
+/// one shard per rollout worker (paper Fig. 5).  Gather with
+/// `.gather_async(n)` (A3C/Ape-X/IMPALA) or `.gather_sync()` +
+/// `concat` (A2C/PPO's bulk-sync mode).
+pub fn parallel_rollouts(
+    workers: Vec<ActorHandle<RolloutWorker>>,
+) -> ParIter<RolloutWorker, SampleBatch> {
+    ParIter::from_actors(workers, |w| Some(w.sample()))
+}
+
+/// `ConcatBatches(min_batch_size)`: buffer incoming batches until the
+/// target step count, then emit one concatenated train batch.  Hand to
+/// `LocalIter::combine`.
+pub fn concat_batches(
+    min_batch_size: usize,
+) -> impl FnMut(SampleBatch) -> Vec<SampleBatch> + Send + 'static {
+    let mut pending: Vec<SampleBatch> = Vec::new();
+    let mut count = 0usize;
+    move |batch| {
+        count += batch.len();
+        pending.push(batch);
+        if count >= min_batch_size {
+            count = 0;
+            vec![SampleBatch::concat_all(&std::mem::take(&mut pending))]
+        } else {
+            vec![]
+        }
+    }
+}
+
+/// Like [`concat_batches`] but emits batches of *exactly* `size` rows,
+/// carrying any remainder into the next emission.  Static-shape HLO
+/// artifacts want exact row counts; this keeps every collected step
+/// (instead of pad_or_truncate silently dropping the surplus).
+pub fn exact_batches(
+    size: usize,
+) -> impl FnMut(SampleBatch) -> Vec<SampleBatch> + Send + 'static {
+    assert!(size > 0);
+    let mut pending: Option<SampleBatch> = None;
+    move |batch| {
+        let merged = match pending.take() {
+            Some(p) => SampleBatch::concat_all(&[p, batch]),
+            None => batch,
+        };
+        let mut out = Vec::new();
+        let mut start = 0;
+        while merged.len() - start >= size {
+            out.push(merged.slice(start, start + size));
+            start += size;
+        }
+        if start < merged.len() {
+            pending = Some(merged.slice(start, merged.len()));
+        }
+        out
+    }
+}
+
+/// `SelectExperiences(policy_id)`: extract one policy's sub-batch from a
+/// multi-agent batch (paper Fig. 12, `Select(policy="PPO")`).  Empty
+/// sub-batches are dropped (hand to `filter_map`).
+pub fn select_policy(
+    policy_id: &str,
+) -> impl FnMut(MultiAgentBatch) -> Option<SampleBatch> + Send + 'static {
+    let pid = policy_id.to_string();
+    move |ma| ma.select(&pid).filter(|b| !b.is_empty()).cloned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::{DummyEnv, Env};
+    use crate::policy::DummyPolicy;
+    use crate::rollout::CollectMode;
+
+    fn worker_group(n: usize, fragment: usize) -> Vec<ActorHandle<RolloutWorker>> {
+        crate::actor::spawn_group("w", n, move |_| {
+            Box::new(move || {
+                let envs: Vec<Box<dyn Env>> =
+                    vec![Box::new(DummyEnv::new(4, 10))];
+                RolloutWorker::new(
+                    envs,
+                    Box::new(DummyPolicy::new(0.1)),
+                    fragment,
+                    CollectMode::OnPolicy,
+                )
+            })
+        })
+    }
+
+    #[test]
+    fn parallel_rollouts_bulk_sync_round() {
+        let mut it = parallel_rollouts(worker_group(3, 8)).gather_sync();
+        let round = it.next().unwrap();
+        assert_eq!(round.len(), 3);
+        assert!(round.iter().all(|b| b.len() == 8));
+    }
+
+    #[test]
+    fn concat_batches_reaches_target() {
+        let mut op = concat_batches(20);
+        let mk = |n: usize| {
+            let mut b = SampleBatch::new(1);
+            b.obs = vec![0.0; n];
+            b.actions = vec![0; n];
+            b
+        };
+        assert!(op(mk(8)).is_empty());
+        assert!(op(mk(8)).is_empty());
+        let out = op(mk(8));
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].len(), 24);
+        // Buffer reset after emission.
+        assert!(op(mk(8)).is_empty());
+    }
+
+    #[test]
+    fn exact_batches_chunks_and_carries_remainder() {
+        let mut op = exact_batches(10);
+        let mk = |n: usize| {
+            let mut b = SampleBatch::new(1);
+            b.obs = (0..n).map(|i| i as f32).collect();
+            b.actions = vec![0; n];
+            b
+        };
+        assert!(op(mk(6)).is_empty());
+        let out = op(mk(7)); // 13 rows total -> one 10-row batch, 3 left
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].len(), 10);
+        let out2 = op(mk(27)); // 30 rows -> three 10-row batches
+        assert_eq!(out2.len(), 3);
+        assert!(out2.iter().all(|b| b.len() == 10));
+        // No rows lost or duplicated: obs values are per-input indices;
+        // total emitted = 40 rows from 40 fed.
+        let emitted: usize =
+            out.iter().chain(out2.iter()).map(|b| b.len()).sum();
+        assert_eq!(emitted, 40);
+    }
+
+    #[test]
+    fn select_policy_filters_and_extracts() {
+        let mut op = select_policy("ppo");
+        let mut b = SampleBatch::new(1);
+        b.obs = vec![0.0; 3];
+        b.actions = vec![0; 3];
+        let ma = MultiAgentBatch::from_single("ppo", b);
+        assert_eq!(op(ma).unwrap().len(), 3);
+        let other = MultiAgentBatch::from_single("dqn", SampleBatch::new(1));
+        assert!(op(other).is_none());
+    }
+}

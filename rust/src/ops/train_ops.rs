@@ -1,0 +1,219 @@
+//! Learner-side operators: `TrainOneStep`, `ComputeGradients`,
+//! `ApplyGradients`, `UpdateTargetNetwork`.
+
+use crate::actor::ActorHandle;
+use crate::policy::Gradients;
+use crate::rollout::RolloutWorker;
+use crate::sample_batch::SampleBatch;
+
+use super::TrainItem;
+
+/// `TrainOneStep(workers)`: learn on the local worker, then broadcast
+/// fresh weights to the remotes (fire-and-forget casts; with
+/// `gather_sync` upstream these land before the next round's fetches —
+/// barrier semantics).  Hand to `for_each`.
+pub fn train_one_step(
+    local: ActorHandle<RolloutWorker>,
+    remotes: Vec<ActorHandle<RolloutWorker>>,
+) -> impl FnMut(SampleBatch) -> TrainItem + Send + 'static {
+    move |batch| {
+        let steps = batch.len();
+        let (stats, weights) = local.call(move |w| {
+            let stats = w.learn_on_batch(&batch);
+            (stats, w.get_weights())
+        });
+        for r in &remotes {
+            let w = weights.clone();
+            r.cast(move |worker| worker.set_weights(&w));
+        }
+        TrainItem::new(stats, steps)
+    }
+}
+
+/// `ComputeGradients`: a parallel op (runs **on the rollout worker**, by
+/// `ParIter::for_each` scheduling) computing gradients against the
+/// worker's current policy snapshot.  Hand to `ParIter::for_each`.
+pub fn compute_gradients(
+) -> impl Fn(&mut RolloutWorker, SampleBatch) -> Gradients + Send + Sync + 'static
+{
+    |w, batch| w.compute_gradients(&batch)
+}
+
+/// `ApplyGradients(workers)`: apply a gathered gradient on the local
+/// (learner) worker, then push the new weights back to the worker that
+/// produced the gradient (A3C's fine-grained per-worker update — a
+/// dotted-arrow actor message, paper Fig. 4).  Hand to `for_each` after
+/// `gather_async_with_source`.
+pub fn apply_gradients(
+    local: ActorHandle<RolloutWorker>,
+) -> impl FnMut((Gradients, ActorHandle<RolloutWorker>)) -> TrainItem + Send + 'static
+{
+    move |(grads, source)| {
+        let steps = grads.count;
+        let stats = grads.stats.clone();
+        let weights = local.call(move |w| {
+            w.apply_gradients(&grads);
+            w.get_weights()
+        });
+        source.cast(move |w| w.set_weights(&weights));
+        TrainItem::new(stats, steps)
+    }
+}
+
+/// `UpdateTargetNetwork(workers, every)`: after every `every` trained
+/// steps, sync the learner's target network (DQN family).  Passes items
+/// through unchanged.
+pub fn update_target_network(
+    local: ActorHandle<RolloutWorker>,
+    every: usize,
+) -> impl FnMut(TrainItem) -> TrainItem + Send + 'static {
+    let mut since_update = 0usize;
+    move |item| {
+        since_update += item.steps_trained;
+        if since_update >= every {
+            since_update = 0;
+            local.cast(|w| w.policy.update_target());
+        }
+        item
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::actor::spawn_group;
+    use crate::env::{DummyEnv, Env};
+    use crate::iter::ParIter;
+    use crate::ops::parallel_rollouts;
+    use crate::policy::DummyPolicy;
+    use crate::rollout::{CollectMode, RolloutWorker};
+
+    fn workers(n: usize) -> Vec<ActorHandle<RolloutWorker>> {
+        spawn_group("w", n, move |_| {
+            Box::new(move || {
+                let envs: Vec<Box<dyn Env>> =
+                    vec![Box::new(DummyEnv::new(4, 10))];
+                RolloutWorker::new(
+                    envs,
+                    Box::new(DummyPolicy::new(0.1)),
+                    8,
+                    CollectMode::OnPolicy,
+                )
+            })
+        })
+    }
+
+    #[test]
+    fn train_one_step_updates_local_and_broadcasts() {
+        let mut ws = workers(3);
+        let local = ws.remove(0);
+        let mut op = train_one_step(local.clone(), ws.clone());
+        let batch = local.call(|w| w.sample());
+        let item = op(batch);
+        assert_eq!(item.steps_trained, 8);
+        assert!(item.stats.contains_key("loss"));
+        let local_w = local.call(|w| w.get_weights());
+        assert_ne!(local_w, vec![0.0]); // dummy policy moved
+        for r in &ws {
+            assert_eq!(r.call(|w| w.get_weights()), local_w);
+        }
+    }
+
+    #[test]
+    fn a3c_style_grads_flow_end_to_end() {
+        let mut all = workers(3);
+        let local = all.remove(0);
+        // The paper's A3C plan: rollouts -> ComputeGradients (on
+        // workers) -> gather_async -> ApplyGradients (on local).
+        let mut apply = apply_gradients(local.clone());
+        let mut it = parallel_rollouts(all.clone())
+            .for_each(|w, b| compute_gradients()(w, b))
+            .gather_async_with_source(1)
+            .for_each(move |pair| apply(pair))
+            .take(4);
+        let mut n = 0;
+        while let Some(item) = it.next() {
+            assert_eq!(item.steps_trained, 8);
+            n += 1;
+        }
+        assert_eq!(n, 4);
+        // Source workers got the updated weights pushed back.
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let local_w = local.call(|w| w.get_weights())[0];
+        assert_ne!(local_w, 0.0);
+        let w0 = all[0].call(|w| w.get_weights())[0];
+        assert_ne!(w0, 0.0);
+    }
+
+    #[test]
+    fn update_target_network_fires_on_threshold() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+        // Count target updates via a counting policy.
+        struct CountingPolicy(Arc<AtomicUsize>);
+        impl crate::policy::Policy for CountingPolicy {
+            fn compute_actions(
+                &mut self,
+                _obs: &[f32],
+                n: usize,
+            ) -> Vec<crate::policy::ActionOutput> {
+                vec![
+                    crate::policy::ActionOutput {
+                        action: 0,
+                        logp: 0.0,
+                        value: 0.0
+                    };
+                    n
+                ]
+            }
+            fn compute_gradients(
+                &mut self,
+                _b: &SampleBatch,
+            ) -> crate::policy::Gradients {
+                crate::policy::Gradients {
+                    flat: vec![],
+                    stats: Default::default(),
+                    count: 0,
+                }
+            }
+            fn apply_gradients(&mut self, _g: &crate::policy::Gradients) {}
+            fn get_weights(&self) -> Vec<f32> {
+                vec![]
+            }
+            fn set_weights(&mut self, _w: &[f32]) {}
+            fn update_target(&mut self) {
+                self.0.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        let count = Arc::new(AtomicUsize::new(0));
+        let c = count.clone();
+        let local = ActorHandle::spawn("local", move || {
+            let envs: Vec<Box<dyn Env>> = vec![Box::new(DummyEnv::new(4, 10))];
+            RolloutWorker::new(
+                envs,
+                Box::new(CountingPolicy(c)),
+                8,
+                CollectMode::OnPolicy,
+            )
+        });
+        let mut op = update_target_network(local.clone(), 100);
+        for _ in 0..4 {
+            // 4 x 30 steps -> fires at 120, then accumulates 0.
+            op(TrainItem::new(Default::default(), 30));
+        }
+        local.call(|_| ()); // drain mailbox
+        assert_eq!(count.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn compute_gradients_runs_on_worker_state() {
+        let ws = workers(1);
+        let mut it = ParIter::from_actors(ws, |w| Some(w.sample()))
+            .for_each(|w, b| compute_gradients()(w, b))
+            .gather_async(1)
+            .take(1);
+        let grads = it.next().unwrap();
+        assert_eq!(grads.count, 8);
+        assert_eq!(grads.flat.len(), 1);
+    }
+}

@@ -1,0 +1,184 @@
+//! DQN policy (double-Q, target network, prioritized-replay importance
+//! weights), backed by the `dqn_*` XLA artifacts.
+
+use std::collections::BTreeMap;
+
+use crate::runtime::{TensorArg, XlaRuntime};
+use crate::sample_batch::SampleBatch;
+use crate::util::Rng;
+
+use super::{ActionOutput, Gradients, Policy};
+
+pub struct DqnPolicy {
+    rt: XlaRuntime,
+    params: Vec<f32>,
+    target_params: Vec<f32>,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: f32,
+    lr: f32,
+    /// Exploration epsilon (fixed per worker, Ape-X style; learner uses
+    /// 0).
+    pub epsilon: f64,
+    rng: Rng,
+    /// |TD| of the last learn_on_batch (keyed to the replayed rows) —
+    /// picked up by `UpdateReplayPriorities`.
+    pub last_td_abs: Vec<f32>,
+}
+
+impl DqnPolicy {
+    pub const ARTIFACTS: &'static [&'static str] =
+        &["dqn_q_fwd", "dqn_grad", "adam_dqn"];
+
+    pub fn new(rt: XlaRuntime, lr: f32, epsilon: f64, seed: u64) -> Self {
+        let params = rt.load_init_params("init_dqn").expect("init_dqn.bin");
+        let n = params.len();
+        DqnPolicy {
+            rt,
+            target_params: params.clone(),
+            params,
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            t: 0.0,
+            lr,
+            epsilon,
+            rng: Rng::new(seed),
+            last_td_abs: Vec::new(),
+        }
+    }
+
+    /// Build inside the owning actor thread.
+    pub fn create(
+        artifacts_dir: &std::path::Path,
+        lr: f32,
+        epsilon: f64,
+        seed: u64,
+    ) -> Self {
+        let rt = XlaRuntime::load(artifacts_dir, Self::ARTIFACTS)
+            .expect("load dqn artifacts");
+        Self::new(rt, lr, epsilon, seed)
+    }
+
+    /// Q-values for `n` rows (padded/chunked to the artifact batch).
+    fn q_values(&self, obs: &[f32], n: usize) -> Vec<Vec<f32>> {
+        let cfg = &self.rt.manifest.config;
+        let (bi, od, na) = (cfg.inf_batch, cfg.obs_dim, cfg.num_actions);
+        let mut out_rows = Vec::with_capacity(n);
+        let mut padded = vec![0.0f32; bi * od];
+        for chunk_start in (0..n).step_by(bi) {
+            let rows = (n - chunk_start).min(bi);
+            padded[..rows * od]
+                .copy_from_slice(&obs[chunk_start * od..(chunk_start + rows) * od]);
+            padded[rows * od..].fill(0.0);
+            let out = self
+                .rt
+                .exe("dqn_q_fwd")
+                .run(&[TensorArg::F32(&self.params), TensorArg::F32(&padded)])
+                .expect("dqn_q_fwd");
+            for r in 0..rows {
+                out_rows.push(out[0][r * na..(r + 1) * na].to_vec());
+            }
+        }
+        out_rows
+    }
+}
+
+impl Policy for DqnPolicy {
+    fn compute_actions(&mut self, obs: &[f32], n: usize) -> Vec<ActionOutput> {
+        let q = self.q_values(obs, n);
+        q.into_iter()
+            .map(|row| {
+                let action = if self.rng.chance(self.epsilon) {
+                    self.rng.below(row.len()) as i32
+                } else {
+                    row.iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.total_cmp(b.1))
+                        .map(|(i, _)| i as i32)
+                        .unwrap()
+                };
+                ActionOutput { action, logp: 0.0, value: 0.0 }
+            })
+            .collect()
+    }
+
+    fn compute_gradients(&mut self, batch: &SampleBatch) -> Gradients {
+        let count = batch.len();
+        let cfg = &self.rt.manifest.config;
+        let mb = cfg.dqn_minibatch;
+        let (b, mask) = batch.pad_or_truncate(mb);
+        // Importance weights travel in the batch (prioritized replay);
+        // plain batches weight every row 1.
+        let mut weights = if b.weights.is_empty() {
+            vec![1.0; b.len()]
+        } else {
+            b.weights.clone()
+        };
+        weights.resize(mb, 0.0);
+        let out = self
+            .rt
+            .exe("dqn_grad")
+            .run(&[
+                TensorArg::F32(&self.params),
+                TensorArg::F32(&self.target_params),
+                TensorArg::F32(&b.obs),
+                TensorArg::I32(&b.actions),
+                TensorArg::F32(&b.rewards),
+                TensorArg::F32(&b.next_obs),
+                TensorArg::F32(&b.dones),
+                TensorArg::F32(&weights),
+                TensorArg::F32(&mask),
+            ])
+            .expect("dqn_grad");
+        let mut it = out.into_iter();
+        let flat = it.next().unwrap();
+        let loss = it.next().unwrap()[0];
+        self.last_td_abs = it.next().unwrap();
+        self.last_td_abs.truncate(count.min(mb));
+        let mut stats = BTreeMap::new();
+        stats.insert("loss".to_string(), loss as f64);
+        stats.insert(
+            "mean_td_abs".to_string(),
+            self.last_td_abs.iter().map(|t| *t as f64).sum::<f64>()
+                / self.last_td_abs.len().max(1) as f64,
+        );
+        Gradients { flat, stats, count }
+    }
+
+    fn apply_gradients(&mut self, grads: &Gradients) {
+        self.t += 1.0;
+        let out = self
+            .rt
+            .exe("adam_dqn")
+            .run(&[
+                TensorArg::F32(&self.params),
+                TensorArg::F32(&grads.flat),
+                TensorArg::F32(&self.m),
+                TensorArg::F32(&self.v),
+                TensorArg::ScalarF32(self.t),
+                TensorArg::ScalarF32(self.lr),
+            ])
+            .expect("adam_dqn");
+        let mut it = out.into_iter();
+        self.params = it.next().unwrap();
+        self.m = it.next().unwrap();
+        self.v = it.next().unwrap();
+    }
+
+    fn get_weights(&self) -> Vec<f32> {
+        self.params.clone()
+    }
+
+    fn set_weights(&mut self, weights: &[f32]) {
+        self.params.clear();
+        self.params.extend_from_slice(weights);
+    }
+
+    fn update_target(&mut self) {
+        self.target_params.clone_from(&self.params);
+    }
+
+    fn td_abs(&self) -> Option<Vec<f32>> {
+        Some(self.last_td_abs.clone())
+    }
+}

@@ -1,0 +1,87 @@
+//! The dummy policy of the paper's sampling microbenchmark (Fig. 13a):
+//! a single trainable scalar, random actions — so end-to-end throughput
+//! measures pure system overhead, not numerics.
+
+use std::collections::BTreeMap;
+
+use crate::sample_batch::SampleBatch;
+use crate::util::Rng;
+
+use super::{ActionOutput, Gradients, Policy};
+
+pub struct DummyPolicy {
+    weight: f32,
+    lr: f32,
+    rng: Rng,
+}
+
+impl DummyPolicy {
+    pub fn new(lr: f32) -> Self {
+        DummyPolicy { weight: 0.0, lr, rng: Rng::new(0) }
+    }
+}
+
+impl Policy for DummyPolicy {
+    fn compute_actions(&mut self, _obs: &[f32], n: usize) -> Vec<ActionOutput> {
+        (0..n)
+            .map(|_| ActionOutput {
+                action: self.rng.below(2) as i32,
+                logp: -std::f32::consts::LN_2,
+                value: 0.0,
+            })
+            .collect()
+    }
+
+    fn compute_gradients(&mut self, batch: &SampleBatch) -> Gradients {
+        // "Loss" = w * mean(reward): gradient is mean reward.
+        let n = batch.len().max(1);
+        let grad = batch.rewards.iter().sum::<f32>() / n as f32;
+        let mut stats = BTreeMap::new();
+        stats.insert("loss".to_string(), (self.weight * grad) as f64);
+        Gradients { flat: vec![grad], stats, count: batch.len() }
+    }
+
+    fn apply_gradients(&mut self, grads: &Gradients) {
+        self.weight -= self.lr * grads.flat[0];
+    }
+
+    fn get_weights(&self) -> Vec<f32> {
+        vec![self.weight]
+    }
+
+    fn set_weights(&mut self, weights: &[f32]) {
+        self.weight = weights[0];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn actions_are_valid() {
+        let mut p = DummyPolicy::new(0.1);
+        let acts = p.compute_actions(&[0.0; 8], 4);
+        assert_eq!(acts.len(), 4);
+        assert!(acts.iter().all(|a| a.action == 0 || a.action == 1));
+    }
+
+    #[test]
+    fn gradient_is_mean_reward() {
+        let mut p = DummyPolicy::new(1.0);
+        let mut b = SampleBatch::new(1);
+        b.obs = vec![0.0; 4];
+        b.rewards = vec![1.0, 2.0, 3.0, 6.0];
+        let g = p.compute_gradients(&b);
+        assert_eq!(g.flat, vec![3.0]);
+        p.apply_gradients(&g);
+        assert_eq!(p.get_weights(), vec![-3.0]);
+    }
+
+    #[test]
+    fn set_weights_roundtrip() {
+        let mut p = DummyPolicy::new(0.1);
+        p.set_weights(&[42.0]);
+        assert_eq!(p.get_weights(), vec![42.0]);
+    }
+}

@@ -1,0 +1,202 @@
+//! Policies — the numerical core, executed via AOT-compiled XLA
+//! artifacts (JAX/Pallas programs; see python/compile/).
+//!
+//! Every XLA-backed policy owns its own `XlaRuntime` (PJRT client +
+//! compiled executables), created inside the owning actor's thread.
+//! Parameters are a single flat f32 vector (the artifacts' ABI).
+
+mod dqn;
+mod dummy;
+mod pg;
+
+use std::collections::BTreeMap;
+
+pub use dqn::DqnPolicy;
+pub use dummy::DummyPolicy;
+pub use pg::{PgCore, PgLossKind, PgPolicy};
+
+use crate::sample_batch::SampleBatch;
+
+/// Per-row output of action computation.
+#[derive(Debug, Clone, Copy)]
+pub struct ActionOutput {
+    pub action: i32,
+    /// log pi(a|s) under the acting policy.
+    pub logp: f32,
+    /// Value-function prediction (0 for value-free policies).
+    pub value: f32,
+}
+
+/// A gradient update, flat like the parameters.
+#[derive(Debug, Clone)]
+pub struct Gradients {
+    pub flat: Vec<f32>,
+    pub stats: BTreeMap<String, f64>,
+    /// Env steps that produced this gradient (for counters).
+    pub count: usize,
+}
+
+/// The policy interface rollout workers and learners program against —
+/// RLlib's `Policy` surface, reduced to what the ported algorithms use.
+///
+/// Not `Send`: XLA-backed policies hold a PJRT client (`Rc` inside);
+/// they live and die on one actor thread.
+pub trait Policy {
+    /// Batched action computation for `n` observation rows.
+    fn compute_actions(&mut self, obs: &[f32], n: usize) -> Vec<ActionOutput>;
+
+    /// Gradients of the policy loss on `batch` (no apply).
+    fn compute_gradients(&mut self, batch: &SampleBatch) -> Gradients;
+
+    /// Apply previously computed gradients (optimizer step).
+    fn apply_gradients(&mut self, grads: &Gradients);
+
+    /// Fused compute+apply on one batch; PPO runs its SGD epochs here.
+    /// Returns training stats.
+    fn learn_on_batch(&mut self, batch: &SampleBatch) -> BTreeMap<String, f64> {
+        let grads = self.compute_gradients(batch);
+        let stats = grads.stats.clone();
+        self.apply_gradients(&grads);
+        stats
+    }
+
+    /// Post-collection processing on the rollout worker (GAE for the
+    /// policy-gradient family).  `last_value` bootstraps truncation.
+    fn postprocess(&mut self, _batch: &mut SampleBatch, _last_value: f32) {}
+
+    /// Value prediction for a single observation (bootstrap values).
+    fn value(&mut self, _obs: &[f32]) -> f32 {
+        0.0
+    }
+
+    /// Batched value predictions for `n` rows (one forward call for all
+    /// bootstrap values — perf, EXPERIMENTS.md §Perf O2).
+    fn values(&mut self, obs: &[f32], n: usize) -> Vec<f32> {
+        let obs_dim = obs.len() / n.max(1);
+        (0..n).map(|i| self.value(&obs[i * obs_dim..(i + 1) * obs_dim])).collect()
+    }
+
+    fn get_weights(&self) -> Vec<f32>;
+
+    fn set_weights(&mut self, weights: &[f32]);
+
+    /// Off-policy hooks (DQN family): sync the target network.
+    fn update_target(&mut self) {}
+
+    /// |TD| errors of the last gradient computation (DQN family) — used
+    /// by `UpdateReplayPriorities`.
+    fn td_abs(&self) -> Option<Vec<f32>> {
+        None
+    }
+
+    /// Plain-SGD apply (MAML's inner-adaptation step).  Only the
+    /// policy-gradient family implements this.
+    fn sgd_apply(&mut self, _flat_grads: &[f32], _lr: f32) {
+        unimplemented!("sgd_apply not supported by this policy")
+    }
+
+    /// IMPALA learner step on a time-major batch.  Only the IMPALA
+    /// policy implements this.
+    fn learn_impala(&mut self, _batch: &ImpalaBatch) -> BTreeMap<String, f64> {
+        unimplemented!("learn_impala not supported by this policy")
+    }
+}
+
+/// A time-major [T, B] learner batch for IMPALA's V-trace loss.
+/// All rows are laid out t-major: index = t * b_lanes + lane.
+#[derive(Debug, Clone, Default)]
+pub struct ImpalaBatch {
+    pub t_len: usize,
+    pub b_lanes: usize,
+    pub obs: Vec<f32>,
+    pub actions: Vec<i32>,
+    pub behaviour_logp: Vec<f32>,
+    pub rewards: Vec<f32>,
+    pub dones: Vec<f32>,
+    /// One trailing observation per lane ([B, obs_dim]).
+    pub bootstrap_obs: Vec<f32>,
+    pub mask: Vec<f32>,
+}
+
+/// Numerically stable log-softmax over one row of logits.
+pub(crate) fn log_softmax(logits: &[f32]) -> Vec<f32> {
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let log_sum: f32 =
+        logits.iter().map(|l| (l - max).exp()).sum::<f32>().ln() + max;
+    logits.iter().map(|l| l - log_sum).collect()
+}
+
+/// Sample an action index from logits; returns (action, logp).
+pub(crate) fn sample_categorical(
+    logits: &[f32],
+    rng: &mut crate::util::Rng,
+) -> (i32, f32) {
+    let logp = log_softmax(logits);
+    let u = rng.uniform();
+    let mut cum = 0.0f64;
+    for (i, lp) in logp.iter().enumerate() {
+        cum += (*lp as f64).exp();
+        if u < cum {
+            return (i as i32, logp[i]);
+        }
+    }
+    let last = logp.len() - 1;
+    (last as i32, logp[last])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn log_softmax_normalizes() {
+        let lp = log_softmax(&[1.0, 2.0, 3.0]);
+        let sum: f32 = lp.iter().map(|l| l.exp()).sum();
+        assert!((sum - 1.0).abs() < 1e-5);
+        assert!(lp.iter().all(|&l| l < 0.0));
+    }
+
+    #[test]
+    fn log_softmax_handles_large_logits() {
+        let lp = log_softmax(&[1000.0, 1000.0]);
+        // f32 carries ~1e-4 absolute error at this magnitude.
+        assert!((lp[0] - (-std::f32::consts::LN_2)).abs() < 1e-3);
+    }
+
+    #[test]
+    fn categorical_sampling_matches_distribution() {
+        let mut rng = Rng::new(0);
+        // logits -> probs [~0.09, ~0.24, ~0.67]
+        let logits = [0.0f32, 1.0, 2.0];
+        let mut counts = [0usize; 3];
+        let n = 50_000;
+        for _ in 0..n {
+            let (a, logp) = sample_categorical(&logits, &mut rng);
+            counts[a as usize] += 1;
+            assert!(logp < 0.0);
+        }
+        let probs: Vec<f64> = {
+            let lp = log_softmax(&logits);
+            lp.iter().map(|l| (*l as f64).exp()).collect()
+        };
+        for i in 0..3 {
+            let f = counts[i] as f64 / n as f64;
+            assert!((f - probs[i]).abs() < 0.01, "i={i} f={f} p={}", probs[i]);
+        }
+    }
+
+    #[test]
+    fn default_learn_on_batch_composes_grad_and_apply() {
+        let mut p = DummyPolicy::new(0.1);
+        let mut b = SampleBatch::new(1);
+        b.obs = vec![0.0; 4];
+        b.actions = vec![0; 4];
+        b.rewards = vec![1.0; 4];
+        b.dones = vec![0.0; 4];
+        let w0 = p.get_weights()[0];
+        let stats = p.learn_on_batch(&b);
+        assert!(stats.contains_key("loss"));
+        assert_ne!(p.get_weights()[0], w0);
+    }
+}

@@ -1,0 +1,330 @@
+//! The policy-gradient family (A2C / A3C / PPO / IMPALA), backed by the
+//! `pg_*` XLA artifacts: a shared-trunk actor-critic MLP whose layers
+//! are the Pallas `fused_linear` kernel.
+
+use std::collections::BTreeMap;
+
+use crate::runtime::{TensorArg, XlaRuntime};
+use crate::sample_batch::{
+    compute_gae, standardize_advantages, SampleBatch,
+};
+use crate::util::Rng;
+
+use super::{sample_categorical, ActionOutput, Gradients, Policy};
+
+/// Which loss artifact drives `compute_gradients` / `learn_on_batch`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PgLossKind {
+    /// `a2c_grad` on the concatenated train batch (A2C).
+    A2c,
+    /// `a3c_grad` on per-worker fragments (A3C computes grads on
+    /// workers).
+    A3c,
+    /// `ppo_grad` with SGD epochs over shuffled minibatches.
+    Ppo { epochs: usize },
+    /// `impala_grad` on [T, B] learner batches with V-trace.
+    Impala,
+}
+
+/// Shared state: runtime, flat parameters, Adam moments.
+pub struct PgCore {
+    pub rt: XlaRuntime,
+    pub params: Vec<f32>,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: f32,
+    pub lr: f32,
+    pub rng: Rng,
+}
+
+impl PgCore {
+    pub fn new(rt: XlaRuntime, lr: f32, seed: u64) -> Self {
+        let params = rt.load_init_params("init_pg").expect("init_pg.bin");
+        let n = params.len();
+        PgCore { rt, params, m: vec![0.0; n], v: vec![0.0; n], t: 0.0, lr, rng: Rng::new(seed) }
+    }
+
+    /// Artifact names a PG policy needs, by loss kind.  `sgd_pg` is
+    /// always loaded (MAML's inner-adaptation step reuses any PG loss).
+    pub fn artifact_names(kind: PgLossKind) -> Vec<&'static str> {
+        let grad = match kind {
+            PgLossKind::A2c => "a2c_grad",
+            PgLossKind::A3c => "a3c_grad",
+            PgLossKind::Ppo { .. } => "ppo_grad",
+            PgLossKind::Impala => "impala_grad",
+        };
+        vec!["pg_fwd", grad, "adam_pg", "sgd_pg"]
+    }
+
+    /// Forward pass: (row-major logits [n * num_actions], values [n]),
+    /// padded/chunked to the artifact's static batch.  Flat output, no
+    /// per-row allocation (perf O3).
+    pub fn forward(&self, obs: &[f32], n: usize) -> (Vec<f32>, Vec<f32>) {
+        let cfg = &self.rt.manifest.config;
+        let (bi, od, na) = (cfg.inf_batch, cfg.obs_dim, cfg.num_actions);
+        assert_eq!(obs.len(), n * od);
+        let mut logits = Vec::with_capacity(n * na);
+        let mut values = Vec::with_capacity(n);
+        let mut padded = vec![0.0f32; bi * od];
+        for chunk_start in (0..n).step_by(bi) {
+            let rows = (n - chunk_start).min(bi);
+            padded[..rows * od]
+                .copy_from_slice(&obs[chunk_start * od..(chunk_start + rows) * od]);
+            padded[rows * od..].fill(0.0);
+            let out = self
+                .rt
+                .exe("pg_fwd")
+                .run(&[
+                    TensorArg::F32(&self.params),
+                    TensorArg::F32(&padded),
+                ])
+                .expect("pg_fwd");
+            logits.extend_from_slice(&out[0][..rows * na]);
+            values.extend_from_slice(&out[1][..rows]);
+        }
+        (logits, values)
+    }
+
+    /// One Adam step (grad-clip + bias correction happen in the
+    /// artifact).
+    pub fn adam_step(&mut self, grads: &[f32]) {
+        self.t += 1.0;
+        let out = self
+            .rt
+            .exe("adam_pg")
+            .run(&[
+                TensorArg::F32(&self.params),
+                TensorArg::F32(grads),
+                TensorArg::F32(&self.m),
+                TensorArg::F32(&self.v),
+                TensorArg::ScalarF32(self.t),
+                TensorArg::ScalarF32(self.lr),
+            ])
+            .expect("adam_pg");
+        let mut it = out.into_iter();
+        self.params = it.next().unwrap();
+        self.m = it.next().unwrap();
+        self.v = it.next().unwrap();
+    }
+}
+
+/// A policy-gradient policy with a pluggable loss artifact.
+pub struct PgPolicy {
+    core: PgCore,
+    kind: PgLossKind,
+    minibatch: usize,
+}
+
+impl PgPolicy {
+    pub fn new(core: PgCore, kind: PgLossKind) -> Self {
+        let cfg = &core.rt.manifest.config;
+        let minibatch = match kind {
+            PgLossKind::A2c => cfg.a2c_train_batch,
+            PgLossKind::A3c => cfg.fragment,
+            PgLossKind::Ppo { .. } => cfg.ppo_minibatch,
+            PgLossKind::Impala => cfg.impala_t * cfg.impala_b,
+        };
+        PgPolicy { core, kind, minibatch }
+    }
+
+    /// Build inside the owning actor thread.
+    pub fn create(
+        artifacts_dir: &std::path::Path,
+        kind: PgLossKind,
+        lr: f32,
+        seed: u64,
+    ) -> Self {
+        let rt = XlaRuntime::load(artifacts_dir, &PgCore::artifact_names(kind))
+            .expect("load pg artifacts");
+        Self::new(PgCore::new(rt, lr, seed), kind)
+    }
+
+    pub fn loss_kind(&self) -> PgLossKind {
+        self.kind
+    }
+
+    fn grad_exe(&self) -> &'static str {
+        match self.kind {
+            PgLossKind::A2c => "a2c_grad",
+            PgLossKind::A3c => "a3c_grad",
+            PgLossKind::Ppo { .. } => "ppo_grad",
+            PgLossKind::Impala => "impala_grad",
+        }
+    }
+
+    /// a2c/a3c/ppo gradient over (a padded view of) `batch`.
+    fn grad_on(&mut self, batch: &SampleBatch) -> Gradients {
+        let count = batch.len();
+        // Fast path: exactly-sized batches (every PPO minibatch) go to
+        // the executable without the pad copy (perf O4).
+        let (owned, mask);
+        let b: &SampleBatch = if count == self.minibatch {
+            mask = vec![1.0f32; count];
+            batch
+        } else {
+            let (padded, m) = batch.pad_or_truncate(self.minibatch);
+            owned = padded;
+            mask = m;
+            &owned
+        };
+        let exe = self.core.rt.exe(self.grad_exe());
+        let out = match self.kind {
+            PgLossKind::Ppo { .. } => exe
+                .run(&[
+                    TensorArg::F32(&self.core.params),
+                    TensorArg::F32(&b.obs),
+                    TensorArg::I32(&b.actions),
+                    TensorArg::F32(&b.action_logp),
+                    TensorArg::F32(&b.advantages),
+                    TensorArg::F32(&b.value_targets),
+                    TensorArg::F32(&mask),
+                ])
+                .expect("ppo_grad"),
+            PgLossKind::A2c | PgLossKind::A3c => exe
+                .run(&[
+                    TensorArg::F32(&self.core.params),
+                    TensorArg::F32(&b.obs),
+                    TensorArg::I32(&b.actions),
+                    TensorArg::F32(&b.advantages),
+                    TensorArg::F32(&b.value_targets),
+                    TensorArg::F32(&mask),
+                ])
+                .expect("a2c/a3c_grad"),
+            PgLossKind::Impala => panic!("use learn_on_impala_batch"),
+        };
+        let mut stats = BTreeMap::new();
+        let names = &exe.spec().outputs;
+        for (i, name) in names.iter().enumerate().skip(1) {
+            stats.insert(name.clone(), out[i][0] as f64);
+        }
+        Gradients { flat: out.into_iter().next().unwrap(), stats, count }
+    }
+
+    pub fn config(&self) -> &crate::runtime::RunConfig {
+        &self.core.rt.manifest.config
+    }
+}
+
+impl Policy for PgPolicy {
+    fn compute_actions(&mut self, obs: &[f32], n: usize) -> Vec<ActionOutput> {
+        let na = self.core.rt.manifest.config.num_actions;
+        let (logits, values) = self.core.forward(obs, n);
+        (0..n)
+            .map(|i| {
+                let row = &logits[i * na..(i + 1) * na];
+                let (action, logp) = sample_categorical(row, &mut self.core.rng);
+                ActionOutput { action, logp, value: values[i] }
+            })
+            .collect()
+    }
+
+    fn compute_gradients(&mut self, batch: &SampleBatch) -> Gradients {
+        self.grad_on(batch)
+    }
+
+    fn apply_gradients(&mut self, grads: &Gradients) {
+        self.core.adam_step(&grads.flat);
+    }
+
+    fn learn_on_batch(&mut self, batch: &SampleBatch) -> BTreeMap<String, f64> {
+        match self.kind {
+            PgLossKind::Ppo { epochs } => {
+                // PPO: SGD epochs over shuffled fixed-size minibatches.
+                let mut stats = BTreeMap::new();
+                let mut working = batch.clone();
+                for _ in 0..epochs {
+                    working.shuffle(&mut self.core.rng);
+                    let minibatches = working.minibatches(self.minibatch);
+                    if minibatches.is_empty() {
+                        // Batch smaller than one minibatch: pad it.
+                        let g = self.grad_on(&working);
+                        stats = g.stats.clone();
+                        self.apply_gradients(&g);
+                        continue;
+                    }
+                    for mb in &minibatches {
+                        let g = self.grad_on(mb);
+                        stats = g.stats.clone();
+                        self.apply_gradients(&g);
+                    }
+                }
+                stats
+            }
+            _ => {
+                let g = self.grad_on(batch);
+                let stats = g.stats.clone();
+                self.apply_gradients(&g);
+                stats
+            }
+        }
+    }
+
+    fn postprocess(&mut self, batch: &mut SampleBatch, last_value: f32) {
+        let cfg = &self.core.rt.manifest.config;
+        compute_gae(batch, cfg.gamma, cfg.gae_lambda, last_value);
+        if matches!(self.kind, PgLossKind::Ppo { .. }) {
+            standardize_advantages(batch);
+        }
+    }
+
+    fn value(&mut self, obs: &[f32]) -> f32 {
+        let (_, values) = self.core.forward(obs, 1);
+        values[0]
+    }
+
+    fn values(&mut self, obs: &[f32], n: usize) -> Vec<f32> {
+        let (_, values) = self.core.forward(obs, n);
+        values
+    }
+
+    fn get_weights(&self) -> Vec<f32> {
+        self.core.params.clone()
+    }
+
+    fn set_weights(&mut self, weights: &[f32]) {
+        self.core.params.clear();
+        self.core.params.extend_from_slice(weights);
+    }
+
+    fn sgd_apply(&mut self, flat_grads: &[f32], lr: f32) {
+        let out = self
+            .core
+            .rt
+            .exe("sgd_pg")
+            .run(&[
+                TensorArg::F32(&self.core.params),
+                TensorArg::F32(flat_grads),
+                TensorArg::ScalarF32(lr),
+            ])
+            .expect("sgd_pg");
+        self.core.params = out.into_iter().next().unwrap();
+    }
+
+    fn learn_impala(
+        &mut self,
+        batch: &super::ImpalaBatch,
+    ) -> BTreeMap<String, f64> {
+        assert_eq!(self.kind, PgLossKind::Impala);
+        let cfg = &self.core.rt.manifest.config;
+        assert_eq!((batch.t_len, batch.b_lanes), (cfg.impala_t, cfg.impala_b));
+        let exe = self.core.rt.exe("impala_grad");
+        let out = exe
+            .run(&[
+                TensorArg::F32(&self.core.params),
+                TensorArg::F32(&batch.obs),
+                TensorArg::I32(&batch.actions),
+                TensorArg::F32(&batch.behaviour_logp),
+                TensorArg::F32(&batch.rewards),
+                TensorArg::F32(&batch.dones),
+                TensorArg::F32(&batch.bootstrap_obs),
+                TensorArg::F32(&batch.mask),
+            ])
+            .expect("impala_grad");
+        let mut stats = BTreeMap::new();
+        for (i, name) in exe.spec().outputs.iter().enumerate().skip(1) {
+            stats.insert(name.clone(), out[i][0] as f64);
+        }
+        self.core.adam_step(&out[0]);
+        stats
+    }
+}

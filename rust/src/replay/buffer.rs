@@ -1,0 +1,265 @@
+//! The prioritized replay buffer and the replay-actor state wrapper.
+
+use crate::sample_batch::SampleBatch;
+use crate::util::Rng;
+
+use super::SumTree;
+
+/// A replayed minibatch plus the bookkeeping needed to update priorities
+/// after the learner computes TD errors.
+#[derive(Debug, Clone)]
+pub struct ReplaySample {
+    /// The replayed rows; importance-sampling weights (normalized to
+    /// max 1) ride in `batch.weights`.
+    pub batch: SampleBatch,
+    /// Buffer slot of each sampled row (send back with new priorities).
+    pub indices: Vec<usize>,
+}
+
+/// Proportional prioritized replay over single transitions.
+///
+/// alpha exponentiates TD-error priorities; beta anneals the
+/// importance-correction (we keep it fixed per-buffer, as RLlib does for
+/// Ape-X's default config).
+pub struct PrioritizedReplayBuffer {
+    capacity: usize,
+    alpha: f64,
+    beta: f64,
+    tree: SumTree,
+    storage: Vec<Option<Transition>>,
+    next_slot: usize,
+    size: usize,
+    rng: Rng,
+    eps: f64,
+}
+
+#[derive(Debug, Clone)]
+struct Transition {
+    obs: Vec<f32>,
+    action: i32,
+    reward: f32,
+    next_obs: Vec<f32>,
+    done: f32,
+}
+
+impl PrioritizedReplayBuffer {
+    pub fn new(capacity: usize, alpha: f64, beta: f64, seed: u64) -> Self {
+        let capacity = capacity.next_power_of_two();
+        PrioritizedReplayBuffer {
+            capacity,
+            alpha,
+            beta,
+            tree: SumTree::new(capacity),
+            storage: vec![None; capacity],
+            next_slot: 0,
+            size: 0,
+            rng: Rng::new(seed),
+            eps: 1e-6,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.size
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.size == 0
+    }
+
+    /// Add every transition of `batch` (requires next_obs column), with
+    /// max priority so new experience is replayed at least once soon.
+    pub fn add_batch(&mut self, batch: &SampleBatch) {
+        assert!(!batch.next_obs.is_empty(), "replay needs next_obs");
+        let max_p = self.tree.max_priority().max(1.0);
+        for i in 0..batch.len() {
+            let t = Transition {
+                obs: batch.obs_row(i).to_vec(),
+                action: batch.actions[i],
+                reward: batch.rewards[i],
+                next_obs: batch.next_obs_row(i).to_vec(),
+                done: batch.dones[i],
+            };
+            self.storage[self.next_slot] = Some(t);
+            self.tree.set(self.next_slot, max_p);
+            self.next_slot = (self.next_slot + 1) % self.capacity;
+            self.size = (self.size + 1).min(self.capacity);
+        }
+    }
+
+    /// Sample `n` transitions proportional to priority.
+    pub fn sample(&mut self, n: usize) -> Option<ReplaySample> {
+        if self.size == 0 || self.tree.total() <= 0.0 {
+            return None;
+        }
+        let obs_dim = self.storage.iter().flatten().next()?.obs.len();
+        let mut batch = SampleBatch::new(obs_dim);
+        let mut indices = Vec::with_capacity(n);
+
+        let total = self.tree.total();
+        let min_prob = self.tree.min_priority(self.capacity) / total;
+        let max_weight = (min_prob * self.size as f64).powf(-self.beta);
+
+        for _ in 0..n {
+            let mass = self.rng.uniform() * total;
+            let idx = self.tree.find_prefix(mass);
+            let t = self.storage[idx].as_ref().expect("sampled empty slot");
+            batch.obs.extend_from_slice(&t.obs);
+            batch.actions.push(t.action);
+            batch.rewards.push(t.reward);
+            batch.next_obs.extend_from_slice(&t.next_obs);
+            batch.dones.push(t.done);
+            let prob = self.tree.get(idx) / total;
+            let w = (prob * self.size as f64).powf(-self.beta) / max_weight;
+            batch.weights.push(w as f32);
+            indices.push(idx);
+        }
+        Some(ReplaySample { batch, indices })
+    }
+
+    /// Update priorities after the learner reports |TD| errors.
+    pub fn update_priorities(&mut self, indices: &[usize], td_abs: &[f32]) {
+        for (&idx, &td) in indices.iter().zip(td_abs) {
+            if self.storage[idx].is_some() {
+                let p = (td.abs() as f64 + self.eps).powf(self.alpha);
+                self.tree.set(idx, p);
+            }
+        }
+    }
+}
+
+/// Replay actor state: a buffer plus counters, matching the paper's
+/// `ReplayActor` interface (`add_batch`, `replay`, `update_priorities`).
+pub struct ReplayActorState {
+    pub buffer: PrioritizedReplayBuffer,
+    /// Replay starts only after this many transitions are stored
+    /// (learning-starts threshold).
+    pub learning_starts: usize,
+    pub replay_batch_size: usize,
+    pub num_added: usize,
+    pub num_sampled: usize,
+}
+
+impl ReplayActorState {
+    pub fn new(
+        capacity: usize,
+        learning_starts: usize,
+        replay_batch_size: usize,
+        seed: u64,
+    ) -> Self {
+        ReplayActorState {
+            buffer: PrioritizedReplayBuffer::new(capacity, 0.6, 0.4, seed),
+            learning_starts,
+            replay_batch_size,
+            num_added: 0,
+            num_sampled: 0,
+        }
+    }
+
+    pub fn add_batch(&mut self, batch: &SampleBatch) {
+        self.num_added += batch.len();
+        self.buffer.add_batch(batch);
+    }
+
+    /// One replayed minibatch, or None before learning_starts.
+    pub fn replay(&mut self) -> Option<ReplaySample> {
+        if self.num_added < self.learning_starts {
+            return None;
+        }
+        let s = self.buffer.sample(self.replay_batch_size)?;
+        self.num_sampled += s.batch.len();
+        Some(s)
+    }
+
+    pub fn update_priorities(&mut self, indices: &[usize], td_abs: &[f32]) {
+        self.buffer.update_priorities(indices, td_abs);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sample_batch::SampleBatchBuilder;
+
+    fn transitions(n: usize, reward_base: f32) -> SampleBatch {
+        let mut b = SampleBatchBuilder::new(2);
+        for i in 0..n {
+            b.add_transition(
+                &[i as f32, 0.0],
+                (i % 2) as i32,
+                reward_base + i as f32,
+                &[i as f32 + 1.0, 0.0],
+                i == n - 1,
+            );
+        }
+        b.build()
+    }
+
+    #[test]
+    fn sample_before_any_add_is_none() {
+        let mut buf = PrioritizedReplayBuffer::new(16, 0.6, 0.4, 0);
+        assert!(buf.sample(4).is_none());
+    }
+
+    #[test]
+    fn sample_returns_requested_count() {
+        let mut buf = PrioritizedReplayBuffer::new(16, 0.6, 0.4, 0);
+        buf.add_batch(&transitions(5, 0.0));
+        let s = buf.sample(8).unwrap();
+        assert_eq!(s.batch.len(), 8);
+        assert_eq!(s.indices.len(), 8);
+        assert_eq!(s.batch.weights.len(), 8);
+        assert!(s.indices.iter().all(|&i| i < 5));
+        assert!(s.batch.weights.iter().all(|&w| w > 0.0 && w <= 1.0 + 1e-5));
+    }
+
+    #[test]
+    fn capacity_wraps_oldest_first() {
+        let mut buf = PrioritizedReplayBuffer::new(4, 0.6, 0.4, 0);
+        buf.add_batch(&transitions(6, 0.0)); // slots 0..3 then wrap 0,1
+        assert_eq!(buf.len(), 4);
+        // Rewards present must be from the last 4 transitions {2,3,4,5}.
+        let s = buf.sample(32).unwrap();
+        for r in s.batch.rewards {
+            assert!(r >= 2.0 && r <= 5.0, "stale transition {r}");
+        }
+    }
+
+    #[test]
+    fn high_priority_sampled_more() {
+        let mut buf = PrioritizedReplayBuffer::new(8, 1.0, 0.4, 1);
+        buf.add_batch(&transitions(4, 0.0));
+        // Make slot 0 dominate.
+        buf.update_priorities(&[0, 1, 2, 3], &[100.0, 0.01, 0.01, 0.01]);
+        let s = buf.sample(1000).unwrap();
+        let zero_frac = s.indices.iter().filter(|&&i| i == 0).count() as f64
+            / 1000.0;
+        assert!(zero_frac > 0.9, "zero_frac={zero_frac}");
+    }
+
+    #[test]
+    fn weights_correct_for_bias() {
+        let mut buf = PrioritizedReplayBuffer::new(8, 1.0, 1.0, 2);
+        buf.add_batch(&transitions(2, 0.0));
+        buf.update_priorities(&[0, 1], &[4.0, 1.0]);
+        let s = buf.sample(500).unwrap();
+        // With beta=1, w_i ∝ 1/p_i; idx 0 has 4x priority → 1/4 weight.
+        for (idx, w) in s.indices.iter().zip(&s.batch.weights) {
+            if *idx == 0 {
+                assert!((w - 0.25).abs() < 0.01, "w0={w}");
+            } else {
+                assert!((w - 1.0).abs() < 0.01, "w1={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn replay_actor_gates_on_learning_starts() {
+        let mut ra = ReplayActorState::new(64, 10, 4, 0);
+        ra.add_batch(&transitions(5, 0.0));
+        assert!(ra.replay().is_none());
+        ra.add_batch(&transitions(5, 0.0));
+        let s = ra.replay().unwrap();
+        assert_eq!(s.batch.len(), 4);
+        assert_eq!(ra.num_sampled, 4);
+    }
+}

@@ -1,0 +1,9 @@
+//! Prioritized experience replay (Schaul et al. 2016) — the replay-actor
+//! substrate for DQN and Ape-X (paper Fig. 10, `create_colocated
+//! (ReplayActor)`).
+
+mod buffer;
+mod sum_tree;
+
+pub use buffer::{PrioritizedReplayBuffer, ReplayActorState, ReplaySample};
+pub use sum_tree::SumTree;

@@ -1,0 +1,149 @@
+//! Segment tree over priorities: O(log n) update and prefix-sum sampling.
+
+/// A fixed-capacity binary sum tree.  Leaves hold priorities; internal
+/// nodes hold subtree sums, so sampling an index proportional to
+/// priority is a single root-to-leaf descent.
+#[derive(Debug, Clone)]
+pub struct SumTree {
+    capacity: usize,
+    /// 1-indexed heap layout: nodes[1] is the root, leaves start at
+    /// `capacity`.
+    nodes: Vec<f64>,
+}
+
+impl SumTree {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0 && capacity.is_power_of_two(),
+                "capacity must be a power of two, got {capacity}");
+        SumTree { capacity, nodes: vec![0.0; 2 * capacity] }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn total(&self) -> f64 {
+        self.nodes[1]
+    }
+
+    pub fn get(&self, idx: usize) -> f64 {
+        self.nodes[self.capacity + idx]
+    }
+
+    pub fn set(&mut self, idx: usize, priority: f64) {
+        assert!(idx < self.capacity);
+        assert!(priority >= 0.0 && priority.is_finite());
+        let mut i = self.capacity + idx;
+        self.nodes[i] = priority;
+        while i > 1 {
+            i /= 2;
+            self.nodes[i] = self.nodes[2 * i] + self.nodes[2 * i + 1];
+        }
+    }
+
+    /// Index of the leaf where the prefix sum reaches `mass`
+    /// (`mass` in [0, total)).
+    pub fn find_prefix(&self, mass: f64) -> usize {
+        debug_assert!(mass >= 0.0);
+        let mut i = 1;
+        let mut mass = mass.min(self.total() * (1.0 - 1e-12));
+        while i < self.capacity {
+            let left = self.nodes[2 * i];
+            if mass < left {
+                i = 2 * i;
+            } else {
+                mass -= left;
+                i = 2 * i + 1;
+            }
+        }
+        i - self.capacity
+    }
+
+    /// Maximum leaf priority (new items get max priority on insert).
+    pub fn max_priority(&self) -> f64 {
+        self.nodes[self.capacity..]
+            .iter()
+            .cloned()
+            .fold(0.0, f64::max)
+    }
+
+    /// Minimum non-zero leaf priority over the first `n` leaves (for the
+    /// importance-weight normalization term).
+    pub fn min_priority(&self, n: usize) -> f64 {
+        self.nodes[self.capacity..self.capacity + n]
+            .iter()
+            .cloned()
+            .filter(|p| *p > 0.0)
+            .fold(f64::INFINITY, f64::min)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn total_tracks_updates() {
+        let mut t = SumTree::new(8);
+        t.set(0, 1.0);
+        t.set(3, 2.0);
+        assert_eq!(t.total(), 3.0);
+        t.set(0, 0.5);
+        assert_eq!(t.total(), 2.5);
+    }
+
+    #[test]
+    fn find_prefix_picks_correct_leaf() {
+        let mut t = SumTree::new(4);
+        t.set(0, 1.0);
+        t.set(1, 2.0);
+        t.set(2, 3.0);
+        // Cumulative: [0,1), [1,3), [3,6)
+        assert_eq!(t.find_prefix(0.5), 0);
+        assert_eq!(t.find_prefix(1.0), 1);
+        assert_eq!(t.find_prefix(2.9), 1);
+        assert_eq!(t.find_prefix(3.0), 2);
+        assert_eq!(t.find_prefix(5.999), 2);
+    }
+
+    #[test]
+    fn find_prefix_at_total_stays_in_range() {
+        let mut t = SumTree::new(4);
+        t.set(1, 2.0);
+        let idx = t.find_prefix(t.total());
+        assert_eq!(idx, 1);
+    }
+
+    #[test]
+    fn max_and_min_priority() {
+        let mut t = SumTree::new(8);
+        assert_eq!(t.max_priority(), 0.0);
+        t.set(2, 4.0);
+        t.set(5, 0.25);
+        assert_eq!(t.max_priority(), 4.0);
+        assert_eq!(t.min_priority(8), 0.25);
+        assert_eq!(t.min_priority(3), 4.0); // leaf 5 out of range
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_power_of_two_capacity_rejected() {
+        SumTree::new(6);
+    }
+
+    #[test]
+    fn sampling_distribution_matches_priorities() {
+        let mut t = SumTree::new(4);
+        t.set(0, 1.0);
+        t.set(1, 3.0);
+        let mut rng = crate::util::Rng::new(0);
+        let mut counts = [0usize; 2];
+        let n = 40_000;
+        for _ in 0..n {
+            let mass = rng.uniform() * t.total();
+            counts[t.find_prefix(mass)] += 1;
+        }
+        let f0 = counts[0] as f64 / n as f64;
+        assert!((f0 - 0.25).abs() < 0.02, "f0={f0}");
+    }
+}

@@ -1,0 +1,9 @@
+//! Rollout workers — the actors that own envs + policies and produce
+//! experience batches (the paper's `RolloutActor`s from
+//! `create_rollout_workers()`).
+
+mod multi_agent;
+mod worker;
+
+pub use multi_agent::MultiAgentRolloutWorker;
+pub use worker::{CollectMode, RolloutWorker, WorkerSet};

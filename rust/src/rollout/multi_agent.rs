@@ -1,0 +1,210 @@
+//! Multi-agent rollout worker: one multi-agent env, several policies,
+//! per-policy sub-batch routing — the substrate for the PPO+DQN
+//! composition experiment (paper §5.3, Fig. 11/12/14).
+
+use std::collections::BTreeMap;
+
+use crate::env::MultiAgentCartPole;
+use crate::metrics::EpisodeRecord;
+use crate::policy::Policy;
+use crate::sample_batch::{MultiAgentBatch, SampleBatch, SampleBatchBuilder};
+
+pub struct MultiAgentRolloutWorker {
+    env: MultiAgentCartPole,
+    pub policies: BTreeMap<String, Box<dyn Policy>>,
+    fragment: usize,
+    obs: BTreeMap<usize, Vec<f32>>,
+    builders: BTreeMap<usize, SampleBatchBuilder>,
+    ep_reward: BTreeMap<usize, f64>,
+    ep_len: BTreeMap<usize, usize>,
+    episodes: Vec<EpisodeRecord>,
+    pub num_steps_sampled: usize,
+}
+
+impl MultiAgentRolloutWorker {
+    pub fn new(
+        mut env: MultiAgentCartPole,
+        policies: BTreeMap<String, Box<dyn Policy>>,
+        fragment: usize,
+    ) -> Self {
+        let obs = env.reset_all();
+        let obs_dim = env.obs_dim();
+        let n = env.num_agents();
+        for agent in 0..n {
+            let pid = env.policy_for(agent);
+            assert!(
+                policies.contains_key(&pid),
+                "no policy '{pid}' for agent {agent}"
+            );
+        }
+        MultiAgentRolloutWorker {
+            builders: (0..n)
+                .map(|a| (a, SampleBatchBuilder::with_capacity(obs_dim, fragment)))
+                .collect(),
+            ep_reward: (0..n).map(|a| (a, 0.0)).collect(),
+            ep_len: (0..n).map(|a| (a, 0)).collect(),
+            env,
+            policies,
+            fragment,
+            obs,
+            episodes: Vec::new(),
+            num_steps_sampled: 0,
+        }
+    }
+
+    /// Collect a fragment across all agents, grouped by policy id.
+    /// Every policy's `compute_actions` is batched over its agents per
+    /// step; sub-batches are postprocessed by their owning policy.
+    pub fn sample(&mut self) -> MultiAgentBatch {
+        let n = self.env.num_agents();
+        let obs_dim = self.env.obs_dim();
+        for _ in 0..self.fragment {
+            // Group agents by policy for batched inference.
+            let mut by_policy: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+            for agent in 0..n {
+                by_policy
+                    .entry(self.env.policy_for(agent))
+                    .or_default()
+                    .push(agent);
+            }
+            let mut actions: BTreeMap<usize, i32> = BTreeMap::new();
+            let mut outputs = BTreeMap::new();
+            for (pid, agents) in &by_policy {
+                let mut obs_flat = Vec::with_capacity(agents.len() * obs_dim);
+                for &a in agents {
+                    obs_flat.extend_from_slice(&self.obs[&a]);
+                }
+                let outs = self
+                    .policies
+                    .get_mut(pid)
+                    .unwrap()
+                    .compute_actions(&obs_flat, agents.len());
+                for (&a, out) in agents.iter().zip(outs) {
+                    actions.insert(a, out.action);
+                    outputs.insert(a, out);
+                }
+            }
+            let results = self.env.step_all(&actions);
+            for (agent, (next_obs, reward, done)) in results {
+                let out = outputs[&agent];
+                self.builders.get_mut(&agent).unwrap().add_step_with_next(
+                    &self.obs[&agent],
+                    out.action,
+                    reward,
+                    &next_obs,
+                    done,
+                    out.logp,
+                    out.value,
+                );
+                *self.ep_reward.get_mut(&agent).unwrap() += reward as f64;
+                *self.ep_len.get_mut(&agent).unwrap() += 1;
+                self.num_steps_sampled += 1;
+                if done {
+                    self.episodes.push(EpisodeRecord {
+                        reward: self.ep_reward[&agent],
+                        length: self.ep_len[&agent],
+                    });
+                    self.ep_reward.insert(agent, 0.0);
+                    self.ep_len.insert(agent, 0);
+                }
+                self.obs.insert(agent, next_obs);
+            }
+        }
+        // Build per-agent segments, postprocess with the owning policy,
+        // then group by policy id.
+        let mut grouped: BTreeMap<String, Vec<SampleBatch>> = BTreeMap::new();
+        for agent in 0..n {
+            let mut seg = self.builders.get_mut(&agent).unwrap().build();
+            let pid = self.env.policy_for(agent);
+            let policy = self.policies.get_mut(&pid).unwrap();
+            let last_value = policy.value(&self.obs[&agent]);
+            policy.postprocess(&mut seg, last_value);
+            grouped.entry(pid).or_default().push(seg);
+        }
+        MultiAgentBatch {
+            policy_batches: grouped
+                .into_iter()
+                .map(|(pid, segs)| (pid, SampleBatch::concat_all(&segs)))
+                .collect(),
+        }
+    }
+
+    pub fn learn_on_batch(
+        &mut self,
+        policy_id: &str,
+        batch: &SampleBatch,
+    ) -> BTreeMap<String, f64> {
+        self.policies
+            .get_mut(policy_id)
+            .unwrap_or_else(|| panic!("unknown policy '{policy_id}'"))
+            .learn_on_batch(batch)
+    }
+
+    pub fn update_target(&mut self, policy_id: &str) {
+        self.policies.get_mut(policy_id).unwrap().update_target();
+    }
+
+    pub fn get_weights(&self, policy_id: &str) -> Vec<f32> {
+        self.policies[policy_id].get_weights()
+    }
+
+    pub fn set_weights(&mut self, policy_id: &str, weights: &[f32]) {
+        self.policies.get_mut(policy_id).unwrap().set_weights(weights);
+    }
+
+    pub fn pop_episodes(&mut self) -> Vec<EpisodeRecord> {
+        std::mem::take(&mut self.episodes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::DummyPolicy;
+
+    fn make_worker(num_agents: usize, fragment: usize) -> MultiAgentRolloutWorker {
+        let env = MultiAgentCartPole::new(num_agents, 0, |i| {
+            if i % 2 == 0 { "even".into() } else { "odd".into() }
+        });
+        let mut policies: BTreeMap<String, Box<dyn Policy>> = BTreeMap::new();
+        policies.insert("even".into(), Box::new(DummyPolicy::new(0.1)));
+        policies.insert("odd".into(), Box::new(DummyPolicy::new(0.1)));
+        MultiAgentRolloutWorker::new(env, policies, fragment)
+    }
+
+    #[test]
+    fn sample_routes_agents_to_policies() {
+        let mut w = make_worker(4, 10);
+        let ma = w.sample();
+        // 2 agents per policy x 10 steps.
+        assert_eq!(ma.policy_count("even"), 20);
+        assert_eq!(ma.policy_count("odd"), 20);
+        assert_eq!(ma.count(), 40);
+        assert_eq!(w.num_steps_sampled, 40);
+    }
+
+    #[test]
+    fn sub_batches_have_full_columns() {
+        let mut w = make_worker(2, 5);
+        let ma = w.sample();
+        let b = ma.select("even").unwrap();
+        assert_eq!(b.len(), 5);
+        assert_eq!(b.next_obs.len(), 5 * 4);
+        assert_eq!(b.action_logp.len(), 5);
+    }
+
+    #[test]
+    fn learn_on_batch_dispatches() {
+        let mut w = make_worker(2, 5);
+        let ma = w.sample();
+        let stats = w.learn_on_batch("odd", ma.select("odd").unwrap());
+        assert!(stats.contains_key("loss"));
+    }
+
+    #[test]
+    #[should_panic(expected = "no policy")]
+    fn missing_policy_panics_at_construction() {
+        let env = MultiAgentCartPole::new(2, 0, |_| "nope".into());
+        MultiAgentRolloutWorker::new(env, BTreeMap::new(), 4);
+    }
+}

@@ -1,0 +1,340 @@
+//! Single-policy rollout worker + the local/remote `WorkerSet`.
+
+use crate::actor::{spawn_group, ActorHandle};
+use crate::env::Env;
+use crate::metrics::EpisodeRecord;
+use crate::policy::{Gradients, Policy};
+use crate::sample_batch::{SampleBatch, SampleBatchBuilder};
+
+/// What the worker records per transition.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CollectMode {
+    /// On-policy: logp + value predictions, postprocessed (GAE) at
+    /// fragment end (A2C/A3C/PPO).
+    OnPolicy,
+    /// On-policy + next_obs (IMPALA learner batches bootstrap from the
+    /// fragment's trailing observation).
+    OnPolicyWithNextObs,
+    /// Raw (s, a, r, s', done) transitions for replay (DQN/Ape-X).
+    Transitions,
+}
+
+/// A rollout worker: a vectorized set of env instances stepped in
+/// lockstep with one policy.  Lives on an actor thread; every public
+/// method is a "remote method" in the paper's sense.
+pub struct RolloutWorker {
+    envs: Vec<Box<dyn Env>>,
+    pub policy: Box<dyn Policy>,
+    mode: CollectMode,
+    fragment: usize,
+    obs: Vec<Vec<f32>>,
+    builders: Vec<SampleBatchBuilder>,
+    ep_reward: Vec<f64>,
+    ep_len: Vec<usize>,
+    episodes: Vec<EpisodeRecord>,
+    pub num_steps_sampled: usize,
+    obs_scratch: Vec<f32>,
+}
+
+impl RolloutWorker {
+    pub fn new(
+        envs: Vec<Box<dyn Env>>,
+        policy: Box<dyn Policy>,
+        fragment: usize,
+        mode: CollectMode,
+    ) -> Self {
+        assert!(!envs.is_empty());
+        let obs_dim = envs[0].obs_dim();
+        let mut envs = envs;
+        let obs: Vec<Vec<f32>> = envs.iter_mut().map(|e| e.reset()).collect();
+        let n = envs.len();
+        RolloutWorker {
+            builders: (0..n)
+                .map(|_| SampleBatchBuilder::with_capacity(obs_dim, fragment))
+                .collect(),
+            envs,
+            policy,
+            mode,
+            fragment,
+            obs,
+            ep_reward: vec![0.0; n],
+            ep_len: vec![0; n],
+            episodes: Vec::new(),
+            num_steps_sampled: 0,
+            obs_scratch: vec![0.0; n * obs_dim],
+        }
+    }
+
+    pub fn num_envs(&self) -> usize {
+        self.envs.len()
+    }
+
+    pub fn obs_dim(&self) -> usize {
+        self.envs[0].obs_dim()
+    }
+
+    /// Collect one fragment: `fragment` steps from every env, post-
+    /// processed per env segment (GAE bootstrap from the policy's value
+    /// of the trailing observation).  The paper's `worker.sample()`.
+    pub fn sample(&mut self) -> SampleBatch {
+        let n_envs = self.envs.len();
+        let obs_dim = self.obs_dim();
+        for _ in 0..self.fragment {
+            // Batched action computation over all env slots.
+            for (e, o) in self.obs.iter().enumerate() {
+                self.obs_scratch[e * obs_dim..(e + 1) * obs_dim]
+                    .copy_from_slice(o);
+            }
+            let actions =
+                self.policy.compute_actions(&self.obs_scratch, n_envs);
+            for e in 0..n_envs {
+                let a = actions[e];
+                let (next_obs, reward, done) = self.envs[e].step(a.action);
+                match self.mode {
+                    CollectMode::OnPolicy => self.builders[e].add_step(
+                        &self.obs[e], a.action, reward, done, a.logp, a.value,
+                    ),
+                    CollectMode::OnPolicyWithNextObs => {
+                        self.builders[e].add_step_with_next(
+                            &self.obs[e], a.action, reward, &next_obs, done,
+                            a.logp, a.value,
+                        )
+                    }
+                    CollectMode::Transitions => self.builders[e]
+                        .add_transition(
+                            &self.obs[e], a.action, reward, &next_obs, done,
+                        ),
+                }
+                self.ep_reward[e] += reward as f64;
+                self.ep_len[e] += 1;
+                self.num_steps_sampled += 1;
+                if done {
+                    self.episodes.push(EpisodeRecord {
+                        reward: self.ep_reward[e],
+                        length: self.ep_len[e],
+                    });
+                    self.ep_reward[e] = 0.0;
+                    self.ep_len[e] = 0;
+                    self.obs[e] = self.envs[e].reset();
+                } else {
+                    self.obs[e] = next_obs;
+                }
+            }
+        }
+        // Per-env segments: postprocess (GAE) with a bootstrap value of
+        // the trailing obs, then concatenate env-major.  All bootstrap
+        // values come from one batched forward (perf O2).
+        for (e, o) in self.obs.iter().enumerate() {
+            self.obs_scratch[e * obs_dim..(e + 1) * obs_dim].copy_from_slice(o);
+        }
+        let last_values = self.policy.values(&self.obs_scratch, n_envs);
+        let mut segments = Vec::with_capacity(n_envs);
+        for e in 0..n_envs {
+            let mut seg = self.builders[e].build();
+            self.policy.postprocess(&mut seg, last_values[e]);
+            segments.push(seg);
+        }
+        SampleBatch::concat_all(&segments)
+    }
+
+    /// The paper's `worker.compute_gradients(worker.sample.remote())`
+    /// fusion: sample a fragment and compute gradients locally (A3C).
+    pub fn sample_and_compute_gradients(&mut self) -> Gradients {
+        let batch = self.sample();
+        self.policy.compute_gradients(&batch)
+    }
+
+    pub fn compute_gradients(&mut self, batch: &SampleBatch) -> Gradients {
+        self.policy.compute_gradients(batch)
+    }
+
+    pub fn apply_gradients(&mut self, grads: &Gradients) {
+        self.policy.apply_gradients(grads);
+    }
+
+    pub fn learn_on_batch(
+        &mut self,
+        batch: &SampleBatch,
+    ) -> std::collections::BTreeMap<String, f64> {
+        self.policy.learn_on_batch(batch)
+    }
+
+    /// Learn and report per-row |TD| errors (DQN family; used by
+    /// `UpdateReplayPriorities`).
+    pub fn learn_and_td(
+        &mut self,
+        batch: &SampleBatch,
+    ) -> (std::collections::BTreeMap<String, f64>, Vec<f32>) {
+        let stats = self.policy.learn_on_batch(batch);
+        let td = self.policy.td_abs().unwrap_or_default();
+        (stats, td)
+    }
+
+    /// Resample the task of every env (meta-learning workers) and reset.
+    pub fn sample_task(&mut self) {
+        for (e, env) in self.envs.iter_mut().enumerate() {
+            env.sample_task();
+            self.obs[e] = env.reset();
+            self.ep_reward[e] = 0.0;
+            self.ep_len[e] = 0;
+        }
+    }
+
+    pub fn get_weights(&self) -> Vec<f32> {
+        self.policy.get_weights()
+    }
+
+    pub fn set_weights(&mut self, weights: &[f32]) {
+        self.policy.set_weights(weights);
+    }
+
+    /// Drain finished-episode records (for metrics reporting).
+    pub fn pop_episodes(&mut self) -> Vec<EpisodeRecord> {
+        std::mem::take(&mut self.episodes)
+    }
+}
+
+/// The local (learner) worker plus remote rollout workers — RLlib's
+/// `WorkerSet`.  All of them are actors; "local" only means "the one
+/// the trainer ops message for learning".
+pub struct WorkerSet {
+    pub local: ActorHandle<RolloutWorker>,
+    pub remotes: Vec<ActorHandle<RolloutWorker>>,
+}
+
+impl WorkerSet {
+    /// Spawn 1 local + `num_remote` remote workers.  `make(i)` builds
+    /// worker i on its actor thread (i = 0 is the local worker).
+    pub fn new(
+        num_remote: usize,
+        mut make: impl FnMut(usize) -> Box<dyn FnOnce() -> RolloutWorker + Send>,
+    ) -> Self {
+        let local = {
+            let init = make(0);
+            ActorHandle::spawn("local_worker", move || init())
+        };
+        let remotes = spawn_group("worker", num_remote, |i| make(i + 1));
+        WorkerSet { local, remotes }
+    }
+
+    /// Broadcast the local worker's weights to all remotes (blocking
+    /// until every remote applied them — used at sync barriers).
+    pub fn sync_weights(&self) {
+        let weights = self.local.call(|w| w.get_weights());
+        let replies: Vec<_> = self
+            .remotes
+            .iter()
+            .map(|r| {
+                let w = weights.clone();
+                r.call_deferred(move |worker| worker.set_weights(&w))
+            })
+            .collect();
+        for r in replies {
+            r.recv();
+        }
+    }
+
+    /// Total episodes + sampled-step counters drained from all workers.
+    pub fn collect_metrics(&self) -> (Vec<EpisodeRecord>, usize) {
+        let mut episodes = Vec::new();
+        let mut steps = 0;
+        let replies: Vec<_> = std::iter::once(&self.local)
+            .chain(self.remotes.iter())
+            .map(|h| {
+                h.call_deferred(|w| {
+                    let eps = w.pop_episodes();
+                    let steps = w.num_steps_sampled;
+                    w.num_steps_sampled = 0;
+                    (eps, steps)
+                })
+            })
+            .collect();
+        for r in replies {
+            let (eps, s) = r.recv();
+            episodes.extend(eps);
+            steps += s;
+        }
+        (episodes, steps)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::{CartPole, DummyEnv};
+    use crate::policy::DummyPolicy;
+
+    fn dummy_worker(num_envs: usize, fragment: usize) -> RolloutWorker {
+        let envs: Vec<Box<dyn Env>> = (0..num_envs)
+            .map(|_| Box::new(DummyEnv::new(4, 10)) as Box<dyn Env>)
+            .collect();
+        RolloutWorker::new(
+            envs,
+            Box::new(DummyPolicy::new(0.1)),
+            fragment,
+            CollectMode::OnPolicy,
+        )
+    }
+
+    #[test]
+    fn sample_returns_full_fragment() {
+        let mut w = dummy_worker(2, 16);
+        let batch = w.sample();
+        assert_eq!(batch.len(), 32); // fragment x num_envs
+        assert_eq!(w.num_steps_sampled, 32);
+    }
+
+    #[test]
+    fn episodes_recorded_with_rewards() {
+        let mut w = dummy_worker(1, 25); // DummyEnv episode length 10
+        w.sample();
+        let eps = w.pop_episodes();
+        assert_eq!(eps.len(), 2); // 25 steps -> 2 completed episodes
+        assert!(eps.iter().all(|e| e.length == 10 && e.reward == 10.0));
+        assert!(w.pop_episodes().is_empty()); // drained
+    }
+
+    #[test]
+    fn transitions_mode_fills_next_obs() {
+        let envs: Vec<Box<dyn Env>> =
+            vec![Box::new(CartPole::new(0)) as Box<dyn Env>];
+        let mut w = RolloutWorker::new(
+            envs,
+            Box::new(DummyPolicy::new(0.1)),
+            8,
+            CollectMode::Transitions,
+        );
+        let batch = w.sample();
+        assert_eq!(batch.len(), 8);
+        assert_eq!(batch.next_obs.len(), 8 * 4);
+        assert!(batch.action_logp.is_empty());
+    }
+
+    #[test]
+    fn worker_set_sync_weights() {
+        let set = WorkerSet::new(3, |_| {
+            Box::new(|| dummy_worker(1, 4))
+        });
+        set.local.call(|w| w.set_weights(&[0.75]));
+        set.sync_weights();
+        for r in &set.remotes {
+            assert_eq!(r.call(|w| w.get_weights()), vec![0.75]);
+        }
+    }
+
+    #[test]
+    fn worker_set_collect_metrics_drains() {
+        let set = WorkerSet::new(2, |_| Box::new(|| dummy_worker(1, 20)));
+        for r in &set.remotes {
+            r.cast(|w| {
+                w.sample();
+            });
+        }
+        let (eps, steps) = set.collect_metrics();
+        assert_eq!(steps, 40);
+        assert_eq!(eps.len(), 4); // 2 workers x 2 episodes each
+        let (eps2, steps2) = set.collect_metrics();
+        assert!(eps2.is_empty());
+        assert_eq!(steps2, 0);
+    }
+}

@@ -1,0 +1,195 @@
+//! artifacts/manifest.json — the ABI between aot.py and the rust runtime.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::Json;
+
+/// Build-time configuration baked into the artifacts (shapes and
+/// numerics the rust side must match — e.g. GAE gamma/lambda).
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub obs_dim: usize,
+    pub num_actions: usize,
+    pub hidden: Vec<usize>,
+    pub inf_batch: usize,
+    pub a2c_train_batch: usize,
+    pub fragment: usize,
+    pub ppo_minibatch: usize,
+    pub dqn_minibatch: usize,
+    pub impala_t: usize,
+    pub impala_b: usize,
+    pub gamma: f32,
+    pub gae_lambda: f32,
+    pub ppo_clip: f32,
+    pub pg_param_size: usize,
+    pub dqn_param_size: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<i64>,
+    pub dtype: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct ExeSpec {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct InitEntry {
+    pub file: String,
+    pub len: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub config: RunConfig,
+    pub executables: BTreeMap<String, ExeSpec>,
+    pub init_pg: InitEntry,
+    pub init_dqn: InitEntry,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(&text).context("parsing manifest.json")
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text)?;
+        let c = j.get("config")?;
+        let config = RunConfig {
+            obs_dim: c.get("obs_dim")?.as_usize()?,
+            num_actions: c.get("num_actions")?.as_usize()?,
+            hidden: c
+                .get("hidden")?
+                .as_arr()?
+                .iter()
+                .map(|h| h.as_usize())
+                .collect::<Result<_>>()?,
+            inf_batch: c.get("inf_batch")?.as_usize()?,
+            a2c_train_batch: c.get("a2c_train_batch")?.as_usize()?,
+            fragment: c.get("fragment")?.as_usize()?,
+            ppo_minibatch: c.get("ppo_minibatch")?.as_usize()?,
+            dqn_minibatch: c.get("dqn_minibatch")?.as_usize()?,
+            impala_t: c.get("impala_t")?.as_usize()?,
+            impala_b: c.get("impala_b")?.as_usize()?,
+            gamma: c.get("gamma")?.as_f32()?,
+            gae_lambda: c.get("gae_lambda")?.as_f32()?,
+            ppo_clip: c.get("ppo_clip")?.as_f32()?,
+            pg_param_size: c.get("pg_param_size")?.as_usize()?,
+            dqn_param_size: c.get("dqn_param_size")?.as_usize()?,
+        };
+        let mut executables = BTreeMap::new();
+        for (name, e) in j.get("executables")?.as_obj()? {
+            let inputs = e
+                .get("inputs")?
+                .as_arr()?
+                .iter()
+                .map(|i| {
+                    Ok(TensorSpec {
+                        name: i.get("name")?.as_str()?.to_string(),
+                        shape: i
+                            .get("shape")?
+                            .as_arr()?
+                            .iter()
+                            .map(|d| d.as_i64())
+                            .collect::<Result<_>>()?,
+                        dtype: i.get("dtype")?.as_str()?.to_string(),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = e
+                .get("outputs")?
+                .as_arr()?
+                .iter()
+                .map(|o| Ok(o.as_str()?.to_string()))
+                .collect::<Result<Vec<_>>>()?;
+            executables.insert(
+                name.clone(),
+                ExeSpec {
+                    file: e.get("file")?.as_str()?.to_string(),
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+        let init = |key: &str| -> Result<InitEntry> {
+            let e = j.get(key)?;
+            Ok(InitEntry {
+                file: e.get("file")?.as_str()?.to_string(),
+                len: e.get("len")?.as_usize()?,
+            })
+        };
+        Ok(Manifest {
+            config,
+            executables,
+            init_pg: init("init_pg")?,
+            init_dqn: init("init_dqn")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "config": {
+        "obs_dim": 4, "num_actions": 2, "hidden": [64, 64],
+        "inf_batch": 8, "a2c_train_batch": 256, "fragment": 64,
+        "ppo_minibatch": 128, "dqn_minibatch": 64,
+        "impala_t": 20, "impala_b": 8,
+        "gamma": 0.99, "gae_lambda": 0.95, "ppo_clip": 0.2,
+        "pg_param_size": 4675, "dqn_param_size": 4610
+      },
+      "executables": {
+        "pg_fwd": {
+          "file": "pg_fwd.hlo.txt",
+          "inputs": [
+            {"name": "params", "shape": [4675], "dtype": "f32"},
+            {"name": "obs", "shape": [8, 4], "dtype": "f32"}
+          ],
+          "outputs": ["logits", "value"]
+        }
+      },
+      "init_pg": {"file": "init_pg.bin", "len": 4675},
+      "init_dqn": {"file": "init_dqn.bin", "len": 4610}
+    }"#;
+
+    #[test]
+    fn parses_sample_manifest() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.config.obs_dim, 4);
+        assert_eq!(m.config.gamma, 0.99);
+        assert_eq!(m.config.hidden, vec![64, 64]);
+        let exe = &m.executables["pg_fwd"];
+        assert_eq!(exe.inputs[1].shape, vec![8, 4]);
+        assert_eq!(exe.inputs[1].name, "obs");
+        assert_eq!(exe.outputs, vec!["logits", "value"]);
+        assert_eq!(m.init_pg.len, 4675);
+        assert_eq!(m.init_dqn.file, "init_dqn.bin");
+    }
+
+    #[test]
+    fn unknown_extra_fields_tolerated() {
+        let with_extra =
+            SAMPLE.replace("\"init_dqn\"", "\"extra\": [1, 2], \"init_dqn\"");
+        assert!(Manifest::parse(&with_extra).is_ok());
+    }
+
+    #[test]
+    fn missing_config_key_is_error() {
+        let broken = SAMPLE.replace("\"gamma\"", "\"gamma_oops\"");
+        let err = Manifest::parse(&broken).unwrap_err();
+        assert!(format!("{err:#}").contains("gamma"));
+    }
+}

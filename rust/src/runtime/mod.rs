@@ -1,0 +1,238 @@
+//! PJRT runtime bridge: load the JAX/Pallas AOT artifacts (HLO text) and
+//! execute them from the rust hot path.
+//!
+//! `make artifacts` (python, build-time only) writes:
+//!   * `artifacts/<name>.hlo.txt` — HLO text per computation (text, not
+//!     serialized proto: xla_extension 0.5.1 rejects jax>=0.5's 64-bit
+//!     instruction ids; the text parser reassigns them);
+//!   * `artifacts/manifest.json` — input/output ABI per computation;
+//!   * `artifacts/init_{pg,dqn}.bin` — initial flat parameter vectors.
+//!
+//! `XlaRuntime` compiles a chosen subset of computations on a
+//! `PjRtClient::cpu()`.  PJRT client handles are not `Send` (the crate
+//! wraps an `Rc`), so each actor builds its own runtime inside its actor
+//! thread — see `actor::ActorHandle::spawn`.
+
+mod manifest;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+pub use manifest::{ExeSpec, Manifest, RunConfig, TensorSpec};
+
+/// An argument tensor for an executable call.
+pub enum TensorArg<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+    ScalarF32(f32),
+}
+
+impl TensorArg<'_> {
+    fn len(&self) -> usize {
+        match self {
+            TensorArg::F32(v) => v.len(),
+            TensorArg::I32(v) => v.len(),
+            TensorArg::ScalarF32(_) => 1,
+        }
+    }
+
+    fn dtype(&self) -> &'static str {
+        match self {
+            TensorArg::F32(_) | TensorArg::ScalarF32(_) => "f32",
+            TensorArg::I32(_) => "i32",
+        }
+    }
+}
+
+/// A compiled computation plus its manifest ABI.
+pub struct CompiledExe {
+    exe: xla::PjRtLoadedExecutable,
+    spec: ExeSpec,
+    name: String,
+}
+
+impl CompiledExe {
+    /// Execute with positional args; validates shape/dtype against the
+    /// manifest, returns the output tuple as f32 vectors (all artifact
+    /// outputs are f32).
+    pub fn run(&self, args: &[TensorArg]) -> Result<Vec<Vec<f32>>> {
+        if args.len() != self.spec.inputs.len() {
+            return Err(anyhow!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.spec.inputs.len(),
+                args.len()
+            ));
+        }
+        let mut literals = Vec::with_capacity(args.len());
+        for (arg, spec) in args.iter().zip(&self.spec.inputs) {
+            let expected: usize = spec.shape.iter().product::<i64>() as usize;
+            if arg.len() != expected {
+                return Err(anyhow!(
+                    "{}: input '{}' expected {} elements {:?}, got {}",
+                    self.name, spec.name, expected, spec.shape, arg.len()
+                ));
+            }
+            if arg.dtype() != spec.dtype {
+                return Err(anyhow!(
+                    "{}: input '{}' expected dtype {}, got {}",
+                    self.name, spec.name, spec.dtype, arg.dtype()
+                ));
+            }
+            // Single-copy literal creation (perf: `vec1().reshape()`
+            // copies twice — see EXPERIMENTS.md §Perf O1).
+            let dims: Vec<usize> =
+                spec.shape.iter().map(|d| *d as usize).collect();
+            let lit = match arg {
+                TensorArg::F32(v) => {
+                    xla::Literal::create_from_shape_and_untyped_data(
+                        xla::ElementType::F32,
+                        &dims,
+                        bytes_of_f32(v),
+                    )?
+                }
+                TensorArg::I32(v) => {
+                    xla::Literal::create_from_shape_and_untyped_data(
+                        xla::ElementType::S32,
+                        &dims,
+                        bytes_of_i32(v),
+                    )?
+                }
+                TensorArg::ScalarF32(v) => xla::Literal::scalar(*v),
+            };
+            literals.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let parts = result.to_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            return Err(anyhow!(
+                "{}: expected {} outputs, got {}",
+                self.name,
+                self.spec.outputs.len(),
+                parts.len()
+            ));
+        }
+        parts
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().map_err(Into::into))
+            .collect()
+    }
+
+    pub fn spec(&self) -> &ExeSpec {
+        &self.spec
+    }
+}
+
+fn bytes_of_f32(v: &[f32]) -> &[u8] {
+    // Safety: f32 has no invalid bit patterns and alignment of u8 is 1.
+    unsafe {
+        std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+    }
+}
+
+fn bytes_of_i32(v: &[i32]) -> &[u8] {
+    // Safety: as above.
+    unsafe {
+        std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+    }
+}
+
+/// A PJRT client plus a set of compiled computations, owned by one actor
+/// thread.
+pub struct XlaRuntime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    exes: BTreeMap<String, CompiledExe>,
+    pub manifest: Manifest,
+    dir: PathBuf,
+}
+
+impl XlaRuntime {
+    /// Load the manifest and compile the named computations.
+    pub fn load(artifacts_dir: impl AsRef<Path>, names: &[&str]) -> Result<Self> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.json"))
+            .context("loading artifacts manifest (run `make artifacts`)")?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut exes = BTreeMap::new();
+        for &name in names {
+            let spec = manifest
+                .executables
+                .get(name)
+                .ok_or_else(|| anyhow!("no executable '{name}' in manifest"))?
+                .clone();
+            let path = dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            exes.insert(
+                name.to_string(),
+                CompiledExe { exe, spec, name: name.to_string() },
+            );
+        }
+        Ok(XlaRuntime { client, exes, manifest, dir })
+    }
+
+    pub fn exe(&self, name: &str) -> &CompiledExe {
+        self.exes
+            .get(name)
+            .unwrap_or_else(|| panic!("executable '{name}' not loaded"))
+    }
+
+    /// Read an initial flat parameter vector (`init_pg` / `init_dqn`).
+    pub fn load_init_params(&self, which: &str) -> Result<Vec<f32>> {
+        let entry = match which {
+            "init_pg" => &self.manifest.init_pg,
+            "init_dqn" => &self.manifest.init_dqn,
+            other => return Err(anyhow!("unknown init params '{other}'")),
+        };
+        let bytes = std::fs::read(self.dir.join(&entry.file))?;
+        if bytes.len() != entry.len * 4 {
+            return Err(anyhow!(
+                "{}: expected {} bytes, got {}",
+                entry.file,
+                entry.len * 4,
+                bytes.len()
+            ));
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Default artifacts directory: $FLOWRL_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("FLOWRL_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_arg_reports_len_and_dtype() {
+        assert_eq!(TensorArg::F32(&[1.0, 2.0]).len(), 2);
+        assert_eq!(TensorArg::I32(&[1]).dtype(), "i32");
+        assert_eq!(TensorArg::ScalarF32(3.0).len(), 1);
+        assert_eq!(TensorArg::ScalarF32(3.0).dtype(), "f32");
+    }
+
+    #[test]
+    fn missing_artifacts_dir_errors() {
+        let err = match XlaRuntime::load("/nonexistent/nowhere", &[]) {
+            Err(e) => e,
+            Ok(_) => panic!("expected error"),
+        };
+        assert!(format!("{err:#}").contains("manifest"));
+    }
+}

@@ -1,0 +1,295 @@
+//! The core columnar batch.
+
+use crate::util::Rng;
+
+/// A batch of `len` experience rows stored column-wise.
+///
+/// Fixed RL columns (obs/actions/rewards/dones) are always present;
+/// algorithm-specific columns (action log-probs, value predictions,
+/// advantages, value targets) are optional and filled by the collecting
+/// worker or post-processing (`compute_gae`).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SampleBatch {
+    /// Row-major observations, `len * obs_dim` values.
+    pub obs: Vec<f32>,
+    pub obs_dim: usize,
+    pub actions: Vec<i32>,
+    pub rewards: Vec<f32>,
+    /// 1.0 where the episode terminated at this step.
+    pub dones: Vec<f32>,
+    /// log pi(a|s) under the behaviour policy at collection time.
+    pub action_logp: Vec<f32>,
+    /// Value-function predictions at collection time.
+    pub vf_preds: Vec<f32>,
+    /// GAE advantages (filled by post-processing).
+    pub advantages: Vec<f32>,
+    /// Value-function regression targets (filled by post-processing).
+    pub value_targets: Vec<f32>,
+    /// Next-step observations (filled for off-policy/DQN batches).
+    pub next_obs: Vec<f32>,
+    /// Per-row importance weights (prioritized replay); empty = all 1.
+    pub weights: Vec<f32>,
+}
+
+impl SampleBatch {
+    pub fn new(obs_dim: usize) -> Self {
+        SampleBatch { obs_dim, ..Default::default() }
+    }
+
+    pub fn len(&self) -> usize {
+        if self.obs_dim == 0 {
+            0
+        } else {
+            self.obs.len() / self.obs_dim
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Observation row `i` as a slice.
+    pub fn obs_row(&self, i: usize) -> &[f32] {
+        &self.obs[i * self.obs_dim..(i + 1) * self.obs_dim]
+    }
+
+    pub fn next_obs_row(&self, i: usize) -> &[f32] {
+        &self.next_obs[i * self.obs_dim..(i + 1) * self.obs_dim]
+    }
+
+    /// Concatenate batches (all must share obs_dim and column presence).
+    pub fn concat_all(batches: &[SampleBatch]) -> SampleBatch {
+        assert!(!batches.is_empty());
+        let mut out = SampleBatch::new(batches[0].obs_dim);
+        for b in batches {
+            assert_eq!(b.obs_dim, out.obs_dim, "obs_dim mismatch in concat");
+            out.obs.extend_from_slice(&b.obs);
+            out.actions.extend_from_slice(&b.actions);
+            out.rewards.extend_from_slice(&b.rewards);
+            out.dones.extend_from_slice(&b.dones);
+            out.action_logp.extend_from_slice(&b.action_logp);
+            out.vf_preds.extend_from_slice(&b.vf_preds);
+            out.advantages.extend_from_slice(&b.advantages);
+            out.value_targets.extend_from_slice(&b.value_targets);
+            out.next_obs.extend_from_slice(&b.next_obs);
+            out.weights.extend_from_slice(&b.weights);
+        }
+        out
+    }
+
+    /// Rows `[start, end)` as a new batch.
+    pub fn slice(&self, start: usize, end: usize) -> SampleBatch {
+        let d = self.obs_dim;
+        let col = |v: &Vec<f32>| {
+            if v.is_empty() { vec![] } else { v[start..end].to_vec() }
+        };
+        let coln = |v: &Vec<f32>| {
+            if v.is_empty() { vec![] } else { v[start * d..end * d].to_vec() }
+        };
+        SampleBatch {
+            obs: coln(&self.obs),
+            obs_dim: d,
+            actions: if self.actions.is_empty() {
+                vec![]
+            } else {
+                self.actions[start..end].to_vec()
+            },
+            rewards: col(&self.rewards),
+            dones: col(&self.dones),
+            action_logp: col(&self.action_logp),
+            vf_preds: col(&self.vf_preds),
+            advantages: col(&self.advantages),
+            value_targets: col(&self.value_targets),
+            next_obs: coln(&self.next_obs),
+            weights: col(&self.weights),
+        }
+    }
+
+    /// In-place Fisher–Yates row shuffle (used between PPO epochs).
+    pub fn shuffle(&mut self, rng: &mut Rng) {
+        let n = self.len();
+        for i in (1..n).rev() {
+            let j = rng.below(i + 1);
+            self.swap_rows(i, j);
+        }
+    }
+
+    fn swap_rows(&mut self, i: usize, j: usize) {
+        if i == j {
+            return;
+        }
+        let d = self.obs_dim;
+        for k in 0..d {
+            self.obs.swap(i * d + k, j * d + k);
+            if !self.next_obs.is_empty() {
+                self.next_obs.swap(i * d + k, j * d + k);
+            }
+        }
+        let swap1 = |v: &mut Vec<f32>| {
+            if !v.is_empty() {
+                v.swap(i, j)
+            }
+        };
+        self.actions.swap(i, j);
+        swap1(&mut self.rewards);
+        swap1(&mut self.dones);
+        swap1(&mut self.action_logp);
+        swap1(&mut self.vf_preds);
+        swap1(&mut self.advantages);
+        swap1(&mut self.value_targets);
+        swap1(&mut self.weights);
+    }
+
+    /// Fixed-size minibatch views for SGD epochs; the tail shorter than
+    /// `size` is dropped (standard PPO practice with shuffled rows).
+    pub fn minibatches(&self, size: usize) -> Vec<SampleBatch> {
+        let n = self.len() / size;
+        (0..n).map(|i| self.slice(i * size, (i + 1) * size)).collect()
+    }
+
+    /// Pad (repeat-last-row padding, mask 0) or truncate to exactly `n`
+    /// rows, returning the mask column.  Static-shape HLO artifacts
+    /// require exact row counts; the mask keeps padding out of losses.
+    pub fn pad_or_truncate(&self, n: usize) -> (SampleBatch, Vec<f32>) {
+        let len = self.len();
+        if len >= n {
+            return (self.slice(0, n), vec![1.0; n]);
+        }
+        if len == 0 {
+            // Nothing to repeat: pad fixed columns with zeros, mask all 0.
+            let mut out = SampleBatch::new(self.obs_dim);
+            out.obs = vec![0.0; n * self.obs_dim];
+            out.actions = vec![0; n];
+            out.rewards = vec![0.0; n];
+            out.dones = vec![0.0; n];
+            return (out, vec![0.0; n]);
+        }
+        let mut out = self.clone();
+        let mut mask = vec![1.0; len];
+        let last = len.saturating_sub(1);
+        for _ in len..n {
+            for k in 0..self.obs_dim {
+                out.obs.push(self.obs[last * self.obs_dim + k]);
+                if !self.next_obs.is_empty() {
+                    out.next_obs.push(self.next_obs[last * self.obs_dim + k]);
+                }
+            }
+            out.actions.push(*self.actions.get(last).unwrap_or(&0));
+            let push1 = |src: &Vec<f32>, dst: &mut Vec<f32>| {
+                if !src.is_empty() {
+                    dst.push(src[last]);
+                }
+            };
+            push1(&self.rewards, &mut out.rewards);
+            push1(&self.dones, &mut out.dones);
+            push1(&self.action_logp, &mut out.action_logp);
+            push1(&self.vf_preds, &mut out.vf_preds);
+            push1(&self.advantages, &mut out.advantages);
+            push1(&self.value_targets, &mut out.value_targets);
+            push1(&self.weights, &mut out.weights);
+            mask.push(0.0);
+        }
+        (out, mask)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sample_batch::SampleBatchBuilder;
+
+    fn mk(n: usize) -> SampleBatch {
+        let mut b = SampleBatchBuilder::new(2);
+        for i in 0..n {
+            b.add_step(
+                &[i as f32, -(i as f32)],
+                (i % 2) as i32,
+                i as f32,
+                i == n - 1,
+                -0.5,
+                0.1 * i as f32,
+            );
+        }
+        b.build()
+    }
+
+    #[test]
+    fn len_counts_rows() {
+        assert_eq!(mk(5).len(), 5);
+        assert!(SampleBatch::new(4).is_empty());
+    }
+
+    #[test]
+    fn concat_preserves_order_and_len() {
+        let a = mk(3);
+        let b = mk(2);
+        let c = SampleBatch::concat_all(&[a.clone(), b.clone()]);
+        assert_eq!(c.len(), 5);
+        assert_eq!(c.obs_row(0), a.obs_row(0));
+        assert_eq!(c.obs_row(3), b.obs_row(0));
+        assert_eq!(c.rewards[..3], a.rewards[..]);
+    }
+
+    #[test]
+    fn slice_extracts_rows() {
+        let b = mk(6);
+        let s = b.slice(2, 5);
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.obs_row(0), b.obs_row(2));
+        assert_eq!(s.actions[0], b.actions[2]);
+        assert_eq!(s.rewards, b.rewards[2..5].to_vec());
+    }
+
+    #[test]
+    fn minibatches_drop_tail() {
+        let b = mk(10);
+        let mbs = b.minibatches(4);
+        assert_eq!(mbs.len(), 2);
+        assert!(mbs.iter().all(|m| m.len() == 4));
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let b0 = mk(20);
+        let mut b = b0.clone();
+        b.shuffle(&mut Rng::new(1));
+        assert_eq!(b.len(), 20);
+        let mut r0 = b0.rewards.clone();
+        let mut r1 = b.rewards.clone();
+        r0.sort_by(f32::total_cmp);
+        r1.sort_by(f32::total_cmp);
+        assert_eq!(r0, r1);
+        assert_ne!(b.rewards, b0.rewards); // overwhelmingly likely
+        // Row integrity: obs[0] must equal i where rewards == i.
+        for i in 0..20 {
+            assert_eq!(b.obs_row(i)[0], b.rewards[i]);
+        }
+    }
+
+    #[test]
+    fn pad_extends_with_mask_zero() {
+        let b = mk(3);
+        let (p, mask) = b.pad_or_truncate(5);
+        assert_eq!(p.len(), 5);
+        assert_eq!(mask, vec![1.0, 1.0, 1.0, 0.0, 0.0]);
+        assert_eq!(p.obs_row(4), b.obs_row(2)); // repeat-last padding
+    }
+
+    #[test]
+    fn truncate_keeps_prefix() {
+        let b = mk(8);
+        let (p, mask) = b.pad_or_truncate(4);
+        assert_eq!(p.len(), 4);
+        assert_eq!(mask, vec![1.0; 4]);
+        assert_eq!(p.obs_row(3), b.obs_row(3));
+    }
+
+    #[test]
+    fn pad_empty_batch_is_all_masked_zeros() {
+        let b = SampleBatch::new(2);
+        let (p, mask) = b.pad_or_truncate(3);
+        assert_eq!(p.len(), 3);
+        assert_eq!(mask, vec![0.0; 3]);
+        assert!(p.obs.iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,128 @@
+//! Step-wise batch construction in the rollout hot loop.
+
+use super::SampleBatch;
+
+/// Appends one environment transition at a time; columns are preallocated
+/// to the expected fragment length so the hot loop never reallocates.
+#[derive(Debug)]
+pub struct SampleBatchBuilder {
+    batch: SampleBatch,
+    capacity: usize,
+}
+
+impl SampleBatchBuilder {
+    pub fn new(obs_dim: usize) -> Self {
+        Self::with_capacity(obs_dim, 64)
+    }
+
+    pub fn with_capacity(obs_dim: usize, capacity: usize) -> Self {
+        let mut batch = SampleBatch::new(obs_dim);
+        batch.obs.reserve(capacity * obs_dim);
+        batch.actions.reserve(capacity);
+        batch.rewards.reserve(capacity);
+        batch.dones.reserve(capacity);
+        batch.action_logp.reserve(capacity);
+        batch.vf_preds.reserve(capacity);
+        SampleBatchBuilder { batch, capacity }
+    }
+
+    /// Append an on-policy transition (policy-gradient family).
+    pub fn add_step(
+        &mut self,
+        obs: &[f32],
+        action: i32,
+        reward: f32,
+        done: bool,
+        action_logp: f32,
+        vf_pred: f32,
+    ) {
+        debug_assert_eq!(obs.len(), self.batch.obs_dim);
+        self.batch.obs.extend_from_slice(obs);
+        self.batch.actions.push(action);
+        self.batch.rewards.push(reward);
+        self.batch.dones.push(if done { 1.0 } else { 0.0 });
+        self.batch.action_logp.push(action_logp);
+        self.batch.vf_preds.push(vf_pred);
+    }
+
+    /// Append an on-policy transition that also records next_obs
+    /// (IMPALA fragments bootstrap from the trailing observation; the
+    /// multi-agent worker records full rows so any policy can consume
+    /// its sub-batch).
+    #[allow(clippy::too_many_arguments)]
+    pub fn add_step_with_next(
+        &mut self,
+        obs: &[f32],
+        action: i32,
+        reward: f32,
+        next_obs: &[f32],
+        done: bool,
+        action_logp: f32,
+        vf_pred: f32,
+    ) {
+        self.add_step(obs, action, reward, done, action_logp, vf_pred);
+        self.batch.next_obs.extend_from_slice(next_obs);
+    }
+
+    /// Append an off-policy transition (DQN family, with next_obs).
+    pub fn add_transition(
+        &mut self,
+        obs: &[f32],
+        action: i32,
+        reward: f32,
+        next_obs: &[f32],
+        done: bool,
+    ) {
+        debug_assert_eq!(obs.len(), self.batch.obs_dim);
+        self.batch.obs.extend_from_slice(obs);
+        self.batch.actions.push(action);
+        self.batch.rewards.push(reward);
+        self.batch.next_obs.extend_from_slice(next_obs);
+        self.batch.dones.push(if done { 1.0 } else { 0.0 });
+    }
+
+    pub fn len(&self) -> usize {
+        self.batch.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.batch.is_empty()
+    }
+
+    /// Finish the batch, leaving the builder reusable (columns cleared,
+    /// capacity retained).
+    pub fn build(&mut self) -> SampleBatch {
+        let obs_dim = self.batch.obs_dim;
+        let done = std::mem::replace(&mut self.batch, SampleBatch::new(obs_dim));
+        self.batch.obs.reserve(self.capacity * obs_dim);
+        done
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_resets_builder() {
+        let mut b = SampleBatchBuilder::new(2);
+        b.add_step(&[1.0, 2.0], 0, 1.0, false, -0.7, 0.5);
+        let first = b.build();
+        assert_eq!(first.len(), 1);
+        assert!(b.is_empty());
+        b.add_step(&[3.0, 4.0], 1, 2.0, true, -0.1, 0.2);
+        let second = b.build();
+        assert_eq!(second.len(), 1);
+        assert_eq!(second.obs_row(0), &[3.0, 4.0]);
+        assert_eq!(second.dones, vec![1.0]);
+    }
+
+    #[test]
+    fn add_transition_fills_next_obs() {
+        let mut b = SampleBatchBuilder::new(2);
+        b.add_transition(&[1.0, 2.0], 1, 0.5, &[3.0, 4.0], false);
+        let batch = b.build();
+        assert_eq!(batch.next_obs_row(0), &[3.0, 4.0]);
+        assert!(batch.action_logp.is_empty());
+    }
+}

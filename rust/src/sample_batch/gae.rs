@@ -1,0 +1,131 @@
+//! Generalized Advantage Estimation (Schulman et al. 2016) — the standard
+//! post-processing step for the policy-gradient family, run on the
+//! rollout worker right after collection (so advantages use the
+//! collecting policy's value predictions, matching RLlib).
+
+use super::SampleBatch;
+
+/// Fill `advantages` and `value_targets` in place.
+///
+/// `last_value` bootstraps the value beyond the fragment when the final
+/// step did not terminate (fragment truncation); it is ignored when
+/// `dones` ends the episode.  Advantages are left unnormalized — the
+/// per-algorithm plan decides whether to standardize (PPO does, A2C
+/// does not), mirroring RLlib's `Postprocessing` defaults.
+pub fn compute_gae(
+    batch: &mut SampleBatch,
+    gamma: f32,
+    lambda: f32,
+    last_value: f32,
+) {
+    let n = batch.len();
+    assert_eq!(batch.vf_preds.len(), n, "GAE needs vf_preds");
+    batch.advantages.resize(n, 0.0);
+    batch.value_targets.resize(n, 0.0);
+    let mut gae = 0.0f32;
+    for t in (0..n).rev() {
+        let nonterminal = 1.0 - batch.dones[t];
+        let next_value = if t + 1 < n {
+            batch.vf_preds[t + 1]
+        } else {
+            last_value
+        };
+        let delta = batch.rewards[t] + gamma * nonterminal * next_value
+            - batch.vf_preds[t];
+        gae = delta + gamma * lambda * nonterminal * gae;
+        batch.advantages[t] = gae;
+        batch.value_targets[t] = gae + batch.vf_preds[t];
+    }
+}
+
+/// Standardize advantages to zero mean / unit variance (PPO convention).
+pub fn standardize_advantages(batch: &mut SampleBatch) {
+    let n = batch.advantages.len();
+    if n == 0 {
+        return;
+    }
+    let mean: f32 = batch.advantages.iter().sum::<f32>() / n as f32;
+    let var: f32 = batch
+        .advantages
+        .iter()
+        .map(|a| (a - mean) * (a - mean))
+        .sum::<f32>()
+        / n as f32;
+    let std = var.sqrt().max(1e-6);
+    for a in &mut batch.advantages {
+        *a = (*a - mean) / std;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sample_batch::SampleBatchBuilder;
+
+    fn batch_with(rewards: &[f32], dones: &[f32], values: &[f32]) -> SampleBatch {
+        let mut b = SampleBatchBuilder::new(1);
+        for i in 0..rewards.len() {
+            b.add_step(&[0.0], 0, rewards[i], dones[i] > 0.5, 0.0, values[i]);
+        }
+        b.build()
+    }
+
+    #[test]
+    fn terminal_step_ignores_bootstrap() {
+        let mut b = batch_with(&[1.0], &[1.0], &[0.0]);
+        compute_gae(&mut b, 0.99, 0.95, 1000.0);
+        assert!((b.advantages[0] - 1.0).abs() < 1e-6);
+        assert!((b.value_targets[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn truncated_step_uses_bootstrap() {
+        let mut b = batch_with(&[1.0], &[0.0], &[0.0]);
+        compute_gae(&mut b, 0.5, 1.0, 10.0);
+        // delta = 1 + 0.5*10 - 0 = 6
+        assert!((b.advantages[0] - 6.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn lambda_zero_is_one_step_td() {
+        let mut b = batch_with(&[1.0, 1.0], &[0.0, 1.0], &[0.5, 0.25]);
+        compute_gae(&mut b, 0.9, 0.0, 0.0);
+        // t=1 terminal: delta = 1 - 0.25
+        assert!((b.advantages[1] - 0.75).abs() < 1e-6);
+        // t=0: delta = 1 + 0.9*0.25 - 0.5
+        assert!((b.advantages[0] - 0.725).abs() < 1e-6);
+    }
+
+    #[test]
+    fn lambda_one_is_discounted_return_minus_value() {
+        let mut b = batch_with(&[1.0, 2.0, 3.0], &[0.0, 0.0, 1.0], &[0.1, 0.2, 0.3]);
+        let g = 0.9f32;
+        compute_gae(&mut b, g, 1.0, 0.0);
+        let ret0 = 1.0 + g * 2.0 + g * g * 3.0;
+        assert!((b.advantages[0] - (ret0 - 0.1)).abs() < 1e-5);
+        assert!((b.value_targets[0] - ret0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn episode_boundary_resets_accumulator() {
+        // Two one-step episodes; the second's GAE must not leak into the
+        // first... and vice versa.
+        let mut b = batch_with(&[5.0, 7.0], &[1.0, 1.0], &[0.0, 0.0]);
+        compute_gae(&mut b, 0.99, 0.95, 0.0);
+        assert!((b.advantages[0] - 5.0).abs() < 1e-6);
+        assert!((b.advantages[1] - 7.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn standardize_zero_mean_unit_std() {
+        let mut b = batch_with(&[1.0, 2.0, 3.0, 4.0], &[0.0; 4], &[0.0; 4]);
+        compute_gae(&mut b, 0.99, 0.95, 0.0);
+        standardize_advantages(&mut b);
+        let n = b.advantages.len() as f32;
+        let mean: f32 = b.advantages.iter().sum::<f32>() / n;
+        let var: f32 =
+            b.advantages.iter().map(|a| (a - mean) * (a - mean)).sum::<f32>() / n;
+        assert!(mean.abs() < 1e-5);
+        assert!((var - 1.0).abs() < 1e-3);
+    }
+}

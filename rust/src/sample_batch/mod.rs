@@ -1,0 +1,16 @@
+//! Columnar experience batches — the data items flowing through every
+//! dataflow edge (the `T` in `ParIter[T]` / `Iter[T]`).
+//!
+//! Mirrors RLlib's `SampleBatch` / `MultiAgentBatch`: column-oriented so
+//! that concat/slice/shuffle and marshaling into XLA literals are flat
+//! `Vec<f32>` operations with no per-row allocation.
+
+mod batch;
+mod builder;
+mod gae;
+mod multi_agent;
+
+pub use batch::SampleBatch;
+pub use builder::SampleBatchBuilder;
+pub use gae::{compute_gae, standardize_advantages};
+pub use multi_agent::MultiAgentBatch;

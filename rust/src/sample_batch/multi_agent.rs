@@ -1,0 +1,101 @@
+//! Multi-agent batches: one `SampleBatch` per policy id.
+//!
+//! The multi-agent composition experiment (paper Fig. 11/12/14) routes
+//! per-policy sub-batches to different training subflows (`Select`).
+
+use std::collections::BTreeMap;
+
+use super::SampleBatch;
+
+pub type PolicyId = String;
+
+/// Experiences grouped by the policy that produced them.  BTreeMap keeps
+/// iteration deterministic across workers.
+#[derive(Debug, Clone, Default)]
+pub struct MultiAgentBatch {
+    pub policy_batches: BTreeMap<PolicyId, SampleBatch>,
+}
+
+impl MultiAgentBatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn from_single(policy_id: &str, batch: SampleBatch) -> Self {
+        let mut policy_batches = BTreeMap::new();
+        policy_batches.insert(policy_id.to_string(), batch);
+        MultiAgentBatch { policy_batches }
+    }
+
+    /// Total env steps across all policies.
+    pub fn count(&self) -> usize {
+        self.policy_batches.values().map(|b| b.len()).sum()
+    }
+
+    /// Steps collected for one policy (0 if absent).
+    pub fn policy_count(&self, policy_id: &str) -> usize {
+        self.policy_batches.get(policy_id).map_or(0, |b| b.len())
+    }
+
+    /// The sub-batch for one policy, if present.
+    pub fn select(&self, policy_id: &str) -> Option<&SampleBatch> {
+        self.policy_batches.get(policy_id)
+    }
+
+    /// Merge by concatenating per-policy batches.
+    pub fn concat_all(batches: &[MultiAgentBatch]) -> MultiAgentBatch {
+        let mut grouped: BTreeMap<PolicyId, Vec<SampleBatch>> = BTreeMap::new();
+        for ma in batches {
+            for (pid, b) in &ma.policy_batches {
+                grouped.entry(pid.clone()).or_default().push(b.clone());
+            }
+        }
+        MultiAgentBatch {
+            policy_batches: grouped
+                .into_iter()
+                .map(|(pid, bs)| (pid, SampleBatch::concat_all(&bs)))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sample_batch::SampleBatchBuilder;
+
+    fn mk(n: usize) -> SampleBatch {
+        let mut b = SampleBatchBuilder::new(1);
+        for i in 0..n {
+            b.add_step(&[i as f32], 0, 0.0, false, 0.0, 0.0);
+        }
+        b.build()
+    }
+
+    #[test]
+    fn count_sums_policies() {
+        let mut ma = MultiAgentBatch::new();
+        ma.policy_batches.insert("ppo".into(), mk(3));
+        ma.policy_batches.insert("dqn".into(), mk(2));
+        assert_eq!(ma.count(), 5);
+        assert_eq!(ma.policy_count("ppo"), 3);
+        assert_eq!(ma.policy_count("nope"), 0);
+    }
+
+    #[test]
+    fn concat_groups_by_policy() {
+        let a = MultiAgentBatch::from_single("ppo", mk(2));
+        let mut b = MultiAgentBatch::from_single("ppo", mk(1));
+        b.policy_batches.insert("dqn".into(), mk(4));
+        let c = MultiAgentBatch::concat_all(&[a, b]);
+        assert_eq!(c.policy_count("ppo"), 3);
+        assert_eq!(c.policy_count("dqn"), 4);
+    }
+
+    #[test]
+    fn select_returns_policy_view() {
+        let ma = MultiAgentBatch::from_single("dqn", mk(2));
+        assert_eq!(ma.select("dqn").unwrap().len(), 2);
+        assert!(ma.select("ppo").is_none());
+    }
+}

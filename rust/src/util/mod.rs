@@ -1,0 +1,11 @@
+//! Small shared utilities: deterministic RNG, timers, moving statistics.
+
+pub mod json;
+mod rng;
+mod stats;
+mod timer;
+
+pub use json::Json;
+pub use rng::Rng;
+pub use stats::MovingStat;
+pub use timer::TimerStat;

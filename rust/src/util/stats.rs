@@ -1,0 +1,91 @@
+//! Windowed moving statistics for episode metrics (mean reward / length
+//! over the last N episodes, RLlib-style `episode_reward_mean`).
+
+use std::collections::VecDeque;
+
+#[derive(Debug, Clone)]
+pub struct MovingStat {
+    window: usize,
+    values: VecDeque<f64>,
+    lifetime_count: u64,
+}
+
+impl MovingStat {
+    pub fn new(window: usize) -> Self {
+        assert!(window > 0);
+        MovingStat { window, values: VecDeque::new(), lifetime_count: 0 }
+    }
+
+    pub fn push(&mut self, v: f64) {
+        if self.values.len() == self.window {
+            self.values.pop_front();
+        }
+        self.values.push_back(v);
+        self.lifetime_count += 1;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.values.is_empty() {
+            return f64::NAN;
+        }
+        self.values.iter().sum::<f64>() / self.values.len() as f64
+    }
+
+    pub fn max(&self) -> f64 {
+        self.values.iter().cloned().fold(f64::NAN, f64::max)
+    }
+
+    pub fn min(&self) -> f64 {
+        self.values.iter().cloned().fold(f64::NAN, f64::min)
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    pub fn lifetime_count(&self) -> u64 {
+        self.lifetime_count
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_stat_is_nan() {
+        let s = MovingStat::new(4);
+        assert!(s.mean().is_nan());
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn mean_over_window_only() {
+        let mut s = MovingStat::new(2);
+        s.push(1.0);
+        s.push(3.0);
+        assert_eq!(s.mean(), 2.0);
+        s.push(5.0); // evicts 1.0
+        assert_eq!(s.mean(), 4.0);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.lifetime_count(), 3);
+    }
+
+    #[test]
+    fn min_max_track_window() {
+        let mut s = MovingStat::new(3);
+        for v in [5.0, 1.0, 9.0] {
+            s.push(v);
+        }
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 9.0);
+        s.push(2.0); // evicts 5.0
+        assert_eq!(s.max(), 9.0);
+        s.push(3.0); // evicts 1.0
+        assert_eq!(s.min(), 2.0);
+    }
+}

@@ -1,0 +1,96 @@
+//! `TimerStat` — the paper's timing primitive (Listing A2/A4 use it to
+//! instrument the low-level baselines; the flow implementations get the
+//! same numbers from `StandardMetricsReporting`).
+
+use std::time::{Duration, Instant};
+
+/// Accumulates wall-clock spans plus a units-processed counter, exposing
+/// mean span and throughput — a direct port of RLlib's `TimerStat`.
+#[derive(Debug, Default, Clone)]
+pub struct TimerStat {
+    total: Duration,
+    count: u64,
+    units: f64,
+}
+
+impl TimerStat {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure, accumulating its span.
+    pub fn time<R>(&mut self, f: impl FnOnce() -> R) -> R {
+        let start = Instant::now();
+        let r = f();
+        self.push(start.elapsed());
+        r
+    }
+
+    pub fn push(&mut self, span: Duration) {
+        self.total += span;
+        self.count += 1;
+    }
+
+    pub fn push_units_processed(&mut self, units: f64) {
+        self.units += units;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn total(&self) -> Duration {
+        self.total
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.count == 0 {
+            Duration::ZERO
+        } else {
+            self.total / self.count as u32
+        }
+    }
+
+    /// Units per second across all recorded spans.
+    pub fn throughput(&self) -> f64 {
+        let secs = self.total.as_secs_f64();
+        if secs <= 0.0 {
+            0.0
+        } else {
+            self.units / secs
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_timer_is_zero() {
+        let t = TimerStat::new();
+        assert_eq!(t.mean(), Duration::ZERO);
+        assert_eq!(t.throughput(), 0.0);
+        assert_eq!(t.count(), 0);
+    }
+
+    #[test]
+    fn accumulates_spans_and_units() {
+        let mut t = TimerStat::new();
+        t.push(Duration::from_millis(10));
+        t.push(Duration::from_millis(30));
+        t.push_units_processed(100.0);
+        assert_eq!(t.count(), 2);
+        assert_eq!(t.mean(), Duration::from_millis(20));
+        let tput = t.throughput();
+        assert!((tput - 2500.0).abs() < 1.0, "tput={tput}");
+    }
+
+    #[test]
+    fn time_closure_returns_value() {
+        let mut t = TimerStat::new();
+        let v = t.time(|| 42);
+        assert_eq!(v, 42);
+        assert_eq!(t.count(), 1);
+    }
+}

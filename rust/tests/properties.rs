@@ -1,0 +1,387 @@
+//! Property-based tests on coordinator invariants (routing, batching,
+//! sequencing, replay).  proptest is not vendorable in this offline
+//! environment, so this file uses a small randomized-cases harness over
+//! `flowrl::util::Rng`: each property is checked on many random
+//! instances with the failing seed printed for reproduction.
+
+use flowrl::actor::spawn_group;
+use flowrl::iter::{concurrently, LocalIter, ParIter, UnionMode};
+use flowrl::ops::concat_batches;
+use flowrl::replay::{PrioritizedReplayBuffer, SumTree};
+use flowrl::sample_batch::{compute_gae, SampleBatch, SampleBatchBuilder};
+use flowrl::util::Rng;
+
+/// Run `prop` on `cases` random instances, reporting the failing seed.
+fn check(name: &str, cases: u64, prop: impl Fn(&mut Rng)) {
+    for seed in 0..cases {
+        let mut rng = Rng::new(0x9E1513 ^ seed);
+        let result = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| prop(&mut rng)),
+        );
+        if let Err(e) = result {
+            panic!("property '{name}' failed at seed {seed}: {e:?}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Sequencing operators
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_gather_sync_yields_one_item_per_shard_per_round() {
+    check("gather_sync rounds", 20, |rng| {
+        let n_shards = 1 + rng.below(5);
+        let rounds = 1 + rng.below(6);
+        let limit = rounds as i32;
+        let ws = spawn_group("p", n_shards, |i| {
+            Box::new(move || (i, 0i32))
+        });
+        let mut it = ParIter::from_actors(ws, move |(id, count)| {
+            *count += 1;
+            if *count > limit {
+                None
+            } else {
+                Some((*id, *count))
+            }
+        })
+        .gather_sync();
+        for round in 1..=rounds {
+            let items = it.next().expect("round missing");
+            assert_eq!(items.len(), n_shards);
+            // One item from every shard, all at the same round index.
+            let mut ids: Vec<usize> = items.iter().map(|(id, _)| *id).collect();
+            ids.sort();
+            assert_eq!(ids, (0..n_shards).collect::<Vec<_>>());
+            assert!(items.iter().all(|(_, c)| *c == round as i32));
+        }
+        assert!(it.next().is_none());
+    });
+}
+
+#[test]
+fn prop_gather_async_preserves_multiset_and_shard_order() {
+    check("gather_async multiset", 20, |rng| {
+        let n_shards = 1 + rng.below(5);
+        let per_shard = 1 + rng.below(10);
+        let num_async = 1 + rng.below(3);
+        let ws = spawn_group("p", n_shards, |i| Box::new(move || (i, 0i32)));
+        let got = ParIter::from_actors(ws, move |(id, count)| {
+            *count += 1;
+            if *count > per_shard as i32 {
+                None
+            } else {
+                Some((*id, *count))
+            }
+        })
+        .gather_async(num_async)
+        .collect();
+        assert_eq!(got.len(), n_shards * per_shard);
+        // Per-shard: items arrive in-order (actor mailbox FIFO)...
+        for shard in 0..n_shards {
+            let seq: Vec<i32> = got
+                .iter()
+                .filter(|(id, _)| *id == shard)
+                .map(|(_, c)| *c)
+                .collect();
+            assert_eq!(seq, (1..=per_shard as i32).collect::<Vec<_>>());
+        }
+    });
+}
+
+#[test]
+fn prop_union_round_robin_emits_every_item_exactly_once() {
+    check("union round robin", 30, |rng| {
+        let n_children = 1 + rng.below(4);
+        let lens: Vec<usize> = (0..n_children).map(|_| rng.below(8)).collect();
+        let weights: Vec<usize> =
+            (0..n_children).map(|_| 1 + rng.below(3)).collect();
+        let children: Vec<LocalIter<(usize, usize)>> = lens
+            .iter()
+            .enumerate()
+            .map(|(c, &len)| {
+                LocalIter::from_items((0..len).map(|i| (c, i)).collect())
+            })
+            .collect();
+        let got = concurrently(
+            children,
+            UnionMode::RoundRobin { weights: Some(weights) },
+            None,
+        )
+        .collect();
+        assert_eq!(got.len(), lens.iter().sum::<usize>());
+        // Exactly once, in order per child.
+        for (c, &len) in lens.iter().enumerate() {
+            let seq: Vec<usize> = got
+                .iter()
+                .filter(|(child, _)| *child == c)
+                .map(|(_, i)| *i)
+                .collect();
+            assert_eq!(seq, (0..len).collect::<Vec<_>>());
+        }
+    });
+}
+
+#[test]
+fn prop_union_async_emits_every_item_exactly_once() {
+    check("union async", 15, |rng| {
+        let n_children = 1 + rng.below(4);
+        let lens: Vec<usize> =
+            (0..n_children).map(|_| rng.below(20)).collect();
+        let children: Vec<LocalIter<(usize, usize)>> = lens
+            .iter()
+            .enumerate()
+            .map(|(c, &len)| {
+                LocalIter::from_items((0..len).map(|i| (c, i)).collect())
+            })
+            .collect();
+        let buffer = 1 + rng.below(4);
+        let mut got = concurrently(
+            children,
+            UnionMode::Async { buffer },
+            None,
+        )
+        .collect();
+        got.sort();
+        let mut expected: Vec<(usize, usize)> = lens
+            .iter()
+            .enumerate()
+            .flat_map(|(c, &len)| (0..len).map(move |i| (c, i)))
+            .collect();
+        expected.sort();
+        assert_eq!(got, expected);
+    });
+}
+
+#[test]
+fn prop_duplicate_both_sides_see_identical_streams() {
+    check("duplicate equality", 25, |rng| {
+        let len = rng.below(50);
+        let items: Vec<u64> = (0..len).map(|_| rng.next_u64()).collect();
+        let (mut a, mut b) = LocalIter::from_items(items.clone()).duplicate();
+        let mut got_a = Vec::new();
+        let mut got_b = Vec::new();
+        // Random interleaving of consumers.
+        loop {
+            let pick_a = rng.chance(0.5);
+            let (side, got) =
+                if pick_a { (&mut a, &mut got_a) } else { (&mut b, &mut got_b) };
+            if let Some(x) = side.next() {
+                got.push(x);
+            }
+            if got_a.len() == len && got_b.len() == len {
+                break;
+            }
+            if got_a.len() > len || got_b.len() > len {
+                panic!("consumer overran");
+            }
+        }
+        assert_eq!(got_a, items);
+        assert_eq!(got_b, items);
+        assert!(a.next().is_none());
+        assert!(b.next().is_none());
+    });
+}
+
+// ---------------------------------------------------------------------
+// Batching
+// ---------------------------------------------------------------------
+
+fn random_batch(rng: &mut Rng, n: usize, obs_dim: usize) -> SampleBatch {
+    let mut b = SampleBatchBuilder::new(obs_dim);
+    for _ in 0..n {
+        let obs: Vec<f32> =
+            (0..obs_dim).map(|_| rng.uniform_range(-1.0, 1.0)).collect();
+        b.add_step(
+            &obs,
+            rng.below(2) as i32,
+            rng.uniform_range(-1.0, 1.0),
+            rng.chance(0.1),
+            rng.uniform_range(-2.0, 0.0),
+            rng.uniform_range(-1.0, 1.0),
+        );
+    }
+    b.build()
+}
+
+#[test]
+fn prop_concat_batches_conserves_steps_and_hits_target() {
+    check("concat_batches", 30, |rng| {
+        let target = 1 + rng.below(64);
+        let mut op = concat_batches(target);
+        let mut fed = 0usize;
+        let mut emitted = 0usize;
+        for _ in 0..rng.below(30) {
+            let n = 1 + rng.below(16);
+            fed += n;
+            for out in op(random_batch(rng, n, 2)) {
+                assert!(out.len() >= target, "undersized emission");
+                emitted += out.len();
+            }
+        }
+        // Everything emitted so far is a prefix of what was fed; the
+        // remainder (< target) is still buffered.
+        assert!(emitted <= fed);
+        assert!(fed - emitted < target + 16);
+    });
+}
+
+#[test]
+fn prop_shuffle_preserves_rows() {
+    check("shuffle rows", 25, |rng| {
+        let n = 2 + rng.below(40);
+        // Tag rows: obs[0] == rewards so integrity is checkable.
+        let mut b = SampleBatchBuilder::new(2);
+        for i in 0..n {
+            b.add_step(&[i as f32, 0.5], 0, i as f32, false, 0.0, 0.0);
+        }
+        let mut batch = b.build();
+        batch.shuffle(rng);
+        assert_eq!(batch.len(), n);
+        for i in 0..n {
+            assert_eq!(batch.obs_row(i)[0], batch.rewards[i]);
+        }
+        let mut rewards = batch.rewards.clone();
+        rewards.sort_by(f32::total_cmp);
+        assert_eq!(rewards, (0..n).map(|i| i as f32).collect::<Vec<_>>());
+    });
+}
+
+#[test]
+fn prop_pad_or_truncate_mask_matches_valid_rows() {
+    check("pad_or_truncate", 30, |rng| {
+        let n = rng.below(30);
+        let target = 1 + rng.below(30);
+        let batch = random_batch(rng, n, 3);
+        let (padded, mask) = batch.pad_or_truncate(target);
+        assert_eq!(padded.len(), target);
+        assert_eq!(mask.len(), target);
+        let valid = n.min(target);
+        assert_eq!(
+            mask.iter().filter(|&&m| m == 1.0).count(),
+            valid,
+            "mask valid-count"
+        );
+        // Valid prefix must be row-identical to the source.
+        for i in 0..valid {
+            assert_eq!(padded.obs_row(i), batch.obs_row(i));
+            assert_eq!(padded.rewards[i], batch.rewards[i]);
+        }
+    });
+}
+
+#[test]
+fn prop_gae_matches_quadratic_reference() {
+    check("gae reference", 30, |rng| {
+        let n = 1 + rng.below(20);
+        let gamma = rng.uniform_range(0.5, 1.0);
+        let lambda = rng.uniform_range(0.0, 1.0);
+        let last_value = rng.uniform_range(-1.0, 1.0);
+        let mut batch = random_batch(rng, n, 1);
+        compute_gae(&mut batch, gamma, lambda, last_value);
+
+        // O(n^2) reference: adv_t = sum_k (gamma*lambda)^k delta_{t+k},
+        // with the product cut at episode boundaries.
+        for t in 0..n {
+            let mut adv = 0.0f64;
+            let mut coeff = 1.0f64;
+            for k in t..n {
+                let nonterminal = 1.0 - batch.dones[k] as f64;
+                let next_v = if k + 1 < n {
+                    batch.vf_preds[k + 1] as f64
+                } else {
+                    last_value as f64
+                };
+                let delta = batch.rewards[k] as f64
+                    + gamma as f64 * nonterminal * next_v
+                    - batch.vf_preds[k] as f64;
+                adv += coeff * delta;
+                if nonterminal == 0.0 {
+                    break;
+                }
+                coeff *= gamma as f64 * lambda as f64;
+            }
+            assert!(
+                (batch.advantages[t] as f64 - adv).abs() < 1e-3,
+                "t={t}: {} vs {adv}",
+                batch.advantages[t]
+            );
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// Replay
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_sum_tree_matches_naive_prefix_sums() {
+    check("sum tree", 30, |rng| {
+        let capacity = 16usize;
+        let mut tree = SumTree::new(capacity);
+        let mut naive = vec![0.0f64; capacity];
+        for _ in 0..60 {
+            let idx = rng.below(capacity);
+            let p = rng.uniform() * 10.0;
+            tree.set(idx, p);
+            naive[idx] = p;
+            let total: f64 = naive.iter().sum();
+            assert!((tree.total() - total).abs() < 1e-9);
+            if total > 0.0 {
+                let mass = rng.uniform() * total;
+                let got = tree.find_prefix(mass);
+                // Naive prefix scan.
+                let mut acc = 0.0;
+                let mut want = capacity - 1;
+                for (i, &w) in naive.iter().enumerate() {
+                    acc += w;
+                    if mass < acc {
+                        want = i;
+                        break;
+                    }
+                }
+                assert_eq!(got, want, "mass={mass} naive={naive:?}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_replay_sample_indices_always_valid_and_weights_bounded() {
+    check("replay sampling", 20, |rng| {
+        let mut buf =
+            PrioritizedReplayBuffer::new(32, 0.6, 0.4, rng.next_u64());
+        let mut added = 0usize;
+        for _ in 0..1 + rng.below(5) {
+            let n = 1 + rng.below(10);
+            let mut b = SampleBatchBuilder::new(1);
+            for i in 0..n {
+                b.add_transition(
+                    &[i as f32],
+                    0,
+                    rng.uniform_range(-1.0, 1.0),
+                    &[i as f32 + 1.0],
+                    false,
+                );
+            }
+            buf.add_batch(&b.build());
+            added += n;
+            // Random priority updates.
+            let k = rng.below(4);
+            let idxs: Vec<usize> =
+                (0..k).map(|_| rng.below(added.min(32))).collect();
+            let tds: Vec<f32> =
+                (0..k).map(|_| rng.uniform_range(0.0, 5.0)).collect();
+            buf.update_priorities(&idxs, &tds);
+
+            let sample = buf.sample(8).expect("buffer non-empty");
+            assert_eq!(sample.batch.len(), 8);
+            for &idx in &sample.indices {
+                assert!(idx < added.min(32).next_power_of_two().max(32));
+            }
+            for &w in &sample.batch.weights {
+                assert!(w > 0.0 && w <= 1.0 + 1e-5, "weight {w}");
+            }
+        }
+    });
+}
