@@ -55,7 +55,8 @@ fn dqn_ratio(store_weight: usize, replay_weight: usize) -> (u64, u64) {
     cfg.rollout_fragment_length = 16;
     cfg.num_envs_per_worker = 2;
     let workers = cfg.dqn_workers();
-    let replay_actors = create_replay_actors(1, 8192, 64, 64);
+    let obs_dim = workers.local.call(|w| w.obs_dim());
+    let replay_actors = create_replay_actors(1, obs_dim, 8192, 64, 64);
     let store_op = parallel_rollouts(workers.remotes.clone())
         .gather_async(1)
         .for_each(store_to_replay_buffer(replay_actors.clone()))

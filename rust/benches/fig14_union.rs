@@ -105,8 +105,10 @@ fn dqn_alone() -> LocalIter<TrainResult> {
     let (local, remotes) = ma_workers(&cfg, &ma, true, false);
     let rollouts = ParIter::from_actors(remotes.clone(), |w| Some(w.sample()))
         .gather_async(cfg.num_async);
+    let obs_dim = local.call(|w| w.obs_dim());
     let replay_actors = create_replay_actors(
         1,
+        obs_dim,
         ma.dqn.buffer_capacity,
         ma.dqn.learning_starts,
         64,

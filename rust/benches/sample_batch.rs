@@ -1,0 +1,421 @@
+//! Experience-path microbench: view-based `SampleBatch` + SoA ring
+//! replay (this crate) versus the seed's copy-based implementations
+//! (vendored below as `reference`), at 1k–100k rows.
+//!
+//! Covers the ops the zero-copy refactor targets: `concat_all`,
+//! `slice`, `minibatches`, `shuffle`, and replay `add_batch`+`sample`.
+//! Both implementations run in the same process on identical data, so a
+//! single invocation yields the seed baseline and the post-refactor
+//! numbers side by side.
+//!
+//! Run: `cargo bench --bench sample_batch`
+//! Record: `cargo bench --bench sample_batch -- --write`
+//!         (rewrites BENCH_sample_batch.json at the repo root)
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+use flowrl::sample_batch::{SampleBatch, SampleBatchBuilder};
+use flowrl::util::Rng;
+
+const OBS_DIM: usize = 4;
+const SIZES: &[usize] = &[1_000, 10_000, 100_000];
+const REPLAY_BATCH: usize = 64;
+
+// ---------------------------------------------------------------------
+// reference: the seed's copy-based batch + Vec<Option<Transition>> replay
+// ---------------------------------------------------------------------
+
+mod reference {
+    use flowrl::util::Rng;
+
+    #[derive(Clone, Default)]
+    pub struct RefBatch {
+        pub obs_dim: usize,
+        pub obs: Vec<f32>,
+        pub actions: Vec<i32>,
+        pub rewards: Vec<f32>,
+        pub dones: Vec<f32>,
+        pub action_logp: Vec<f32>,
+        pub vf_preds: Vec<f32>,
+        pub next_obs: Vec<f32>,
+    }
+
+    impl RefBatch {
+        pub fn len(&self) -> usize {
+            if self.obs_dim == 0 { 0 } else { self.obs.len() / self.obs_dim }
+        }
+
+        pub fn concat_all(batches: &[RefBatch]) -> RefBatch {
+            let mut out = RefBatch { obs_dim: batches[0].obs_dim, ..Default::default() };
+            for b in batches {
+                out.obs.extend_from_slice(&b.obs);
+                out.actions.extend_from_slice(&b.actions);
+                out.rewards.extend_from_slice(&b.rewards);
+                out.dones.extend_from_slice(&b.dones);
+                out.action_logp.extend_from_slice(&b.action_logp);
+                out.vf_preds.extend_from_slice(&b.vf_preds);
+                out.next_obs.extend_from_slice(&b.next_obs);
+            }
+            out
+        }
+
+        pub fn slice(&self, start: usize, end: usize) -> RefBatch {
+            let d = self.obs_dim;
+            let col = |v: &Vec<f32>| {
+                if v.is_empty() { vec![] } else { v[start..end].to_vec() }
+            };
+            let coln = |v: &Vec<f32>| {
+                if v.is_empty() { vec![] } else { v[start * d..end * d].to_vec() }
+            };
+            RefBatch {
+                obs_dim: d,
+                obs: coln(&self.obs),
+                actions: self.actions[start..end].to_vec(),
+                rewards: col(&self.rewards),
+                dones: col(&self.dones),
+                action_logp: col(&self.action_logp),
+                vf_preds: col(&self.vf_preds),
+                next_obs: coln(&self.next_obs),
+            }
+        }
+
+        pub fn minibatches(&self, size: usize) -> Vec<RefBatch> {
+            let n = self.len() / size;
+            (0..n).map(|i| self.slice(i * size, (i + 1) * size)).collect()
+        }
+
+        pub fn shuffle(&mut self, rng: &mut Rng) {
+            let n = self.len();
+            for i in (1..n).rev() {
+                let j = rng.below(i + 1);
+                self.swap_rows(i, j);
+            }
+        }
+
+        fn swap_rows(&mut self, i: usize, j: usize) {
+            if i == j {
+                return;
+            }
+            let d = self.obs_dim;
+            for k in 0..d {
+                self.obs.swap(i * d + k, j * d + k);
+                if !self.next_obs.is_empty() {
+                    self.next_obs.swap(i * d + k, j * d + k);
+                }
+            }
+            let swap1 = |v: &mut Vec<f32>| {
+                if !v.is_empty() {
+                    v.swap(i, j)
+                }
+            };
+            self.actions.swap(i, j);
+            swap1(&mut self.rewards);
+            swap1(&mut self.dones);
+            swap1(&mut self.action_logp);
+            swap1(&mut self.vf_preds);
+        }
+    }
+
+    #[derive(Clone)]
+    struct Transition {
+        obs: Vec<f32>,
+        action: i32,
+        reward: f32,
+        next_obs: Vec<f32>,
+        done: f32,
+    }
+
+    /// The seed's replay storage: boxed rows, O(capacity) obs_dim
+    /// rediscovery per sample (priorities elided — both replay benches
+    /// exercise storage movement, uniform sampling keeps them comparable).
+    pub struct RefReplay {
+        capacity: usize,
+        storage: Vec<Option<Transition>>,
+        next_slot: usize,
+        size: usize,
+        rng: Rng,
+    }
+
+    impl RefReplay {
+        pub fn new(capacity: usize, seed: u64) -> Self {
+            RefReplay {
+                capacity,
+                storage: vec![None; capacity],
+                next_slot: 0,
+                size: 0,
+                rng: Rng::new(seed),
+            }
+        }
+
+        pub fn add_batch(&mut self, b: &RefBatch) {
+            let d = b.obs_dim;
+            for i in 0..b.len() {
+                let t = Transition {
+                    obs: b.obs[i * d..(i + 1) * d].to_vec(),
+                    action: b.actions[i],
+                    reward: b.rewards[i],
+                    next_obs: b.next_obs[i * d..(i + 1) * d].to_vec(),
+                    done: b.dones[i],
+                };
+                self.storage[self.next_slot] = Some(t);
+                self.next_slot = (self.next_slot + 1) % self.capacity;
+                self.size = (self.size + 1).min(self.capacity);
+            }
+        }
+
+        pub fn sample(&mut self, n: usize) -> RefBatch {
+            // The seed's obs_dim rediscovery scan.
+            let obs_dim = self
+                .storage
+                .iter()
+                .flatten()
+                .next()
+                .map(|t| t.obs.len())
+                .unwrap_or(0);
+            let mut out = RefBatch { obs_dim, ..Default::default() };
+            for _ in 0..n {
+                let idx = self.rng.below(self.size);
+                let t = self.storage[idx].as_ref().unwrap();
+                out.obs.extend_from_slice(&t.obs);
+                out.actions.push(t.action);
+                out.rewards.push(t.reward);
+                out.next_obs.extend_from_slice(&t.next_obs);
+                out.dones.push(t.done);
+            }
+            out
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// data + timing helpers
+// ---------------------------------------------------------------------
+
+fn view_batch(n: usize, with_next: bool) -> SampleBatch {
+    let mut rng = Rng::new(7);
+    let mut b = SampleBatchBuilder::with_capacity(OBS_DIM, n);
+    let mut obs = [0.0f32; OBS_DIM];
+    let mut next = [0.0f32; OBS_DIM];
+    for i in 0..n {
+        for k in 0..OBS_DIM {
+            obs[k] = rng.uniform_range(-1.0, 1.0);
+            next[k] = obs[k] + 1.0;
+        }
+        if with_next {
+            b.add_transition(&obs, (i % 2) as i32, i as f32, &next, false);
+        } else {
+            b.add_step(&obs, (i % 2) as i32, i as f32, false, -0.5, 0.1);
+        }
+    }
+    b.build()
+}
+
+fn ref_batch(n: usize, with_next: bool) -> reference::RefBatch {
+    let v = view_batch(n, with_next);
+    reference::RefBatch {
+        obs_dim: OBS_DIM,
+        obs: v.obs.to_vec(),
+        actions: v.actions.to_vec(),
+        rewards: v.rewards.to_vec(),
+        dones: v.dones.to_vec(),
+        action_logp: v.action_logp.to_vec(),
+        vf_preds: v.vf_preds.to_vec(),
+        next_obs: v.next_obs.to_vec(),
+    }
+}
+
+/// Time `f` adaptively: enough iterations to fill ~200ms, report ns/op.
+fn time_ns(mut f: impl FnMut()) -> f64 {
+    // Warmup + calibration.
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().max(Duration::from_nanos(50));
+    let iters = (Duration::from_millis(200).as_nanos() / once.as_nanos())
+        .clamp(3, 100_000) as usize;
+    let start = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    start.elapsed().as_nanos() as f64 / iters as f64
+}
+
+struct Row {
+    op: &'static str,
+    n: usize,
+    copy_ns: f64,
+    view_ns: f64,
+}
+
+impl Row {
+    fn speedup(&self) -> f64 {
+        self.copy_ns / self.view_ns.max(1.0)
+    }
+}
+
+fn bench_all() -> Vec<Row> {
+    let mut rows = Vec::new();
+    let mut seen_replay_sizes = std::collections::BTreeSet::new();
+    for &n in SIZES {
+        let vb = view_batch(n, false);
+        let rb = ref_batch(n, false);
+
+        // concat of 16 shards.
+        let shard = n / 16;
+        let v_shards: Vec<SampleBatch> =
+            (0..16).map(|i| vb.slice(i * shard, (i + 1) * shard)).collect();
+        let r_shards: Vec<reference::RefBatch> =
+            (0..16).map(|i| rb.slice(i * shard, (i + 1) * shard)).collect();
+        rows.push(Row {
+            op: "concat16",
+            n,
+            copy_ns: time_ns(|| {
+                black_box(reference::RefBatch::concat_all(black_box(&r_shards)));
+            }),
+            view_ns: time_ns(|| {
+                black_box(SampleBatch::concat_all(black_box(&v_shards)));
+            }),
+        });
+
+        // slice half.
+        rows.push(Row {
+            op: "slice_half",
+            n,
+            copy_ns: time_ns(|| {
+                black_box(black_box(&rb).slice(n / 4, n / 4 + n / 2));
+            }),
+            view_ns: time_ns(|| {
+                black_box(black_box(&vb).slice(n / 4, n / 4 + n / 2));
+            }),
+        });
+
+        // minibatches of 128 (the PPO epoch shape).
+        rows.push(Row {
+            op: "minibatches128",
+            n,
+            copy_ns: time_ns(|| {
+                black_box(black_box(&rb).minibatches(128));
+            }),
+            view_ns: time_ns(|| {
+                black_box(black_box(&vb).minibatches(128));
+            }),
+        });
+
+        // shuffle (clone once per call in both arms: PPO shuffles a
+        // working copy, and the copy is ~free on the view side).
+        rows.push(Row {
+            op: "shuffle",
+            n,
+            copy_ns: time_ns(|| {
+                let mut b = rb.clone();
+                b.shuffle(&mut Rng::new(3));
+                black_box(&b);
+            }),
+            view_ns: time_ns(|| {
+                let mut b = vb.clone();
+                b.shuffle(&mut Rng::new(3));
+                black_box(&b);
+            }),
+        });
+
+        // replay add + sample, ring sized to the workload (transition
+        // count capped so the per-iteration add stays timeable; the
+        // row is labeled with the actual count, and clamped duplicates
+        // are benchmarked only once).
+        let n_tr = n.min(4096);
+        if !seen_replay_sizes.insert(n_tr) {
+            continue;
+        }
+        let cap = (n_tr * 2).next_power_of_two();
+        let v_tr = view_batch(n_tr, true);
+        let r_tr = ref_batch(n_tr, true);
+        rows.push(Row {
+            op: "replay_add",
+            n: n_tr,
+            copy_ns: time_ns(|| {
+                let mut buf = reference::RefReplay::new(cap, 1);
+                buf.add_batch(black_box(&r_tr));
+                black_box(&buf);
+            }),
+            view_ns: time_ns(|| {
+                let mut buf =
+                    flowrl::replay::PrioritizedReplayBuffer::with_obs_dim(
+                        cap, OBS_DIM, 0.6, 0.4, 1,
+                    );
+                buf.add_batch(black_box(&v_tr));
+                black_box(&buf);
+            }),
+        });
+        {
+            let mut r_buf = reference::RefReplay::new(cap, 1);
+            r_buf.add_batch(&r_tr);
+            let mut v_buf = flowrl::replay::PrioritizedReplayBuffer::with_obs_dim(
+                cap, OBS_DIM, 0.6, 0.4, 1,
+            );
+            v_buf.add_batch(&v_tr);
+            rows.push(Row {
+                op: "replay_sample64",
+                n: n_tr,
+                copy_ns: time_ns(|| {
+                    black_box(r_buf.sample(REPLAY_BATCH));
+                }),
+                view_ns: time_ns(|| {
+                    black_box(v_buf.sample(REPLAY_BATCH));
+                }),
+            });
+        }
+    }
+    rows
+}
+
+fn json_report(rows: &[Row]) -> String {
+    let mut out = String::new();
+    out.push_str("{\n  \"bench\": \"sample_batch\",\n");
+    out.push_str("  \"units\": \"ns_per_op\",\n");
+    out.push_str(
+        "  \"note\": \"copy = seed implementation (vendored reference), \
+         view = Arc-view SampleBatch + SoA ring replay\",\n",
+    );
+    out.push_str("  \"obs_dim\": 4,\n  \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"op\": \"{}\", \"rows\": {}, \"copy_ns\": {:.0}, \
+             \"view_ns\": {:.0}, \"speedup\": {:.2}}}{}\n",
+            r.op,
+            r.n,
+            r.copy_ns,
+            r.view_ns,
+            r.speedup(),
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+fn main() {
+    let write = std::env::args().any(|a| a == "--write");
+    let rows = bench_all();
+    println!("# sample_batch microbench (ns/op; speedup = copy/view)");
+    println!("| op | rows | copy ns | view ns | speedup |");
+    println!("|----|------|---------|---------|---------|");
+    for r in &rows {
+        println!(
+            "| {} | {} | {:.0} | {:.0} | {:.2}x |",
+            r.op,
+            r.n,
+            r.copy_ns,
+            r.view_ns,
+            r.speedup()
+        );
+    }
+    let json = json_report(&rows);
+    if write {
+        let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("../BENCH_sample_batch.json");
+        std::fs::write(&path, &json).expect("write BENCH_sample_batch.json");
+        println!("\nwrote {}", path.display());
+    } else {
+        println!("\n{json}");
+    }
+}

@@ -60,8 +60,10 @@ pub fn apex_plan(
     apex: &ApexConfig,
 ) -> LocalIter<TrainResult> {
     let workers = config.dqn_workers();
+    let obs_dim = workers.local.call(|w| w.obs_dim());
     let replay_actors = create_replay_actors(
         apex.num_replay_actors,
+        obs_dim,
         apex.dqn.buffer_capacity,
         apex.dqn.learning_starts,
         64,

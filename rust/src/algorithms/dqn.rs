@@ -45,8 +45,10 @@ pub fn dqn_plan(
     dqn: &DqnConfig,
 ) -> LocalIter<TrainResult> {
     let workers = config.dqn_workers();
+    let obs_dim = workers.local.call(|w| w.obs_dim());
     let replay_actors = create_replay_actors(
         1,
+        obs_dim,
         dqn.buffer_capacity,
         dqn.learning_starts,
         64,
@@ -106,9 +108,10 @@ pub(crate) fn learn_dqn(
         since_sync += 1;
         if since_sync >= weight_sync_every {
             since_sync = 0;
-            let weights = local.call(|w| w.get_weights());
+            let weights: std::sync::Arc<[f32]> =
+                local.call(|w| w.get_weights()).into();
             for r in &remotes {
-                let w = weights.clone();
+                let w = std::sync::Arc::clone(&weights);
                 r.cast(move |worker| worker.set_weights(&w));
             }
         }

@@ -73,14 +73,16 @@ pub fn maml_plan(
         let steps: usize = grads_per_task.iter().map(|g| g.count).sum();
         let avg = average_gradients(&grads_per_task);
         let stats = avg.stats.clone();
-        let weights = local.call(move |w| {
-            w.apply_gradients(&avg);
-            w.get_weights()
-        });
+        let weights: std::sync::Arc<[f32]> = local
+            .call(move |w| {
+                w.apply_gradients(&avg);
+                w.get_weights()
+            })
+            .into();
         // Broadcast the new meta-parameters; the gather_sync barrier
         // orders these casts before the next meta-iteration's fetches.
         for r in &remotes {
-            let wt = weights.clone();
+            let wt = std::sync::Arc::clone(&weights);
             r.cast(move |worker| worker.set_weights(&wt));
         }
         TrainItem::new(stats, steps)

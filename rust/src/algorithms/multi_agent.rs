@@ -150,16 +150,19 @@ pub fn multi_agent_plan(
                 let stats = w.learn_on_batch("ppo", &batch);
                 (stats, w.get_weights("ppo"))
             });
+            let weights: std::sync::Arc<[f32]> = weights.into();
             for r in &ppo_remotes {
-                let wt = weights.clone();
+                let wt = std::sync::Arc::clone(&weights);
                 r.cast(move |w| w.set_weights("ppo", &wt));
             }
             TrainItem::new(prefix_stats("ppo", stats), steps)
         });
 
     // --- DQN subflow (Fig. 12b) ---
+    let obs_dim = local.call(|w| w.obs_dim());
     let replay_actors = create_replay_actors(
         1,
+        obs_dim,
         ma.dqn.buffer_capacity,
         ma.dqn.learning_starts,
         64,
@@ -194,9 +197,10 @@ pub fn multi_agent_plan(
         since_target += steps;
         if since_sync >= sync_every {
             since_sync = 0;
-            let weights = dqn_local.call(|w| w.get_weights("dqn"));
+            let weights: std::sync::Arc<[f32]> =
+                dqn_local.call(|w| w.get_weights("dqn")).into();
             for r in &dqn_remotes {
-                let wt = weights.clone();
+                let wt = std::sync::Arc::clone(&weights);
                 r.cast(move |w| w.set_weights("dqn", &wt));
             }
         }

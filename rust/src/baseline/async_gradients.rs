@@ -68,11 +68,13 @@ impl AsyncGradientsOptimizer {
     /// Initialization: put weights in the object store and broadcast,
     /// then launch one gradient task per worker.
     fn start(&mut self) {
-        // Get weights from the local rollout actor.
-        let weights = self.workers.local.call(|w| w.get_weights());
+        // Get weights from the local rollout actor; broadcast one
+        // shared Arc (the "object store put" of the original).
+        let weights: std::sync::Arc<[f32]> =
+            self.workers.local.call(|w| w.get_weights()).into();
         for worker in self.workers.remotes.clone() {
             // Set weights on the remote rollout actor.
-            let w = weights.clone();
+            let w = std::sync::Arc::clone(&weights);
             worker.cast(move |state| state.set_weights(&w));
             // Kick off gradient computation.
             self.launch_gradient_task(worker);

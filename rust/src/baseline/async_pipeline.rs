@@ -70,9 +70,10 @@ impl AsyncPipelineOptimizer {
     }
 
     fn start(&mut self) {
-        let weights = self.workers.local.call(|w| w.get_weights());
+        let weights: std::sync::Arc<[f32]> =
+            self.workers.local.call(|w| w.get_weights()).into();
         for idx in 0..self.workers.remotes.len() {
-            let w = weights.clone();
+            let w = std::sync::Arc::clone(&weights);
             self.workers.remotes[idx].cast(move |state| state.set_weights(&w));
             for _ in 0..self.queue_depth {
                 self.launch(idx);

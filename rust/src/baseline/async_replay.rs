@@ -57,8 +57,10 @@ impl AsyncReplayOptimizer {
         max_weight_sync_delay: usize,
         target_update_every: usize,
     ) -> Self {
+        let obs_dim = workers.local.call(|w| w.obs_dim());
         let replay_actors = create_replay_actors(
             num_replay_actors,
+            obs_dim,
             buffer_capacity,
             learning_starts,
             replay_batch_size,
@@ -129,10 +131,12 @@ impl AsyncReplayOptimizer {
                 self.launch_replay_task(actor_idx);
             }
         }
-        // Kick off async background sampling with fresh weights.
-        let weights = self.workers.local.call(|w| w.get_weights());
+        // Kick off async background sampling with fresh weights (one
+        // shared Arc across all workers).
+        let weights: std::sync::Arc<[f32]> =
+            self.workers.local.call(|w| w.get_weights()).into();
         for worker_idx in 0..self.workers.remotes.len() {
-            let w = weights.clone();
+            let w = std::sync::Arc::clone(&weights);
             self.workers.remotes[worker_idx]
                 .cast(move |state| state.set_weights(&w));
             self.steps_since_update.insert(worker_idx, 0);

@@ -32,9 +32,16 @@ impl SyncReplayOptimizer {
         train_batch_size: usize,
         target_update_every: usize,
     ) -> Self {
+        let obs_dim = workers.local.call(|w| w.obs_dim());
         SyncReplayOptimizer {
             workers,
-            buffer: PrioritizedReplayBuffer::new(buffer_capacity, 0.6, 0.4, 1),
+            buffer: PrioritizedReplayBuffer::with_obs_dim(
+                buffer_capacity,
+                obs_dim,
+                0.6,
+                0.4,
+                1,
+            ),
             learning_starts,
             train_batch_size,
             target_update_every,

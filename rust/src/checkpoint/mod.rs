@@ -16,7 +16,8 @@ use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use crate::util::error::{Context, Result};
+use crate::{anyhow, bail};
 
 const MAGIC: &[u8; 8] = b"FLRLCKPT";
 const VERSION: u32 = 1;
@@ -142,7 +143,7 @@ pub fn restore_worker_set(
     let w = ck
         .weights
         .get("default")
-        .ok_or_else(|| anyhow::anyhow!("no 'default' policy in checkpoint"))?
+        .ok_or_else(|| anyhow!("no 'default' policy in checkpoint"))?
         .clone();
     let wl = w.clone();
     workers.local.call(move |state| state.set_weights(&wl));

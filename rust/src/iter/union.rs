@@ -31,8 +31,9 @@ pub fn concurrently<T: Send + 'static>(
     mode: UnionMode,
     output_indexes: Option<Vec<usize>>,
 ) -> LocalIter<T> {
-    let emit =
-        move |idx: usize| output_indexes.as_ref().is_none_or(|s| s.contains(&idx));
+    let emit = move |idx: usize| {
+        output_indexes.as_ref().map_or(true, |s| s.contains(&idx))
+    };
     match mode {
         UnionMode::RoundRobin { weights } => {
             let weights = match weights {

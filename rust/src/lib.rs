@@ -15,15 +15,36 @@
 //! * [`baseline`] — low-level actor/RPC re-implementations (the paper's
 //!   "original RLlib" comparison points) plus a Spark-Streaming-style
 //!   microbatch executor for the Appendix A.1 comparison;
-//! * substrates: [`actor`] (tokio actor runtime), [`env`] (CartPole
-//!   family), [`replay`] (prioritized replay), [`sample_batch`],
-//!   [`runtime`] (PJRT loader for the JAX/Pallas AOT artifacts),
-//!   [`policy`] + [`rollout`] (XLA-backed policies and rollout workers),
-//!   [`metrics`].
+//! * substrates: [`actor`] (thread-per-actor runtime), [`env`] (CartPole
+//!   family), [`replay`] (prioritized replay over struct-of-arrays ring
+//!   columns), [`sample_batch`], [`runtime`] (PJRT loader for the
+//!   JAX/Pallas AOT artifacts), [`policy`] + [`rollout`] (XLA-backed
+//!   policies and rollout workers), [`metrics`].
+//!
+//! ## The zero-copy experience path
+//!
+//! Experience batches are the items on every dataflow edge, so the data
+//! layer is built for zero-copy steady-state operation:
+//!
+//! * [`sample_batch::SampleBatch`] columns are [`sample_batch::FCol`] /
+//!   [`sample_batch::ICol`] — `Arc`-shared flat storage plus an
+//!   (offset, len) window.  `slice` and `minibatches` return *views*
+//!   that alias the parent's storage; `clone` is a reference-count bump;
+//!   mutation is copy-on-write, so views never alias writes.
+//! * `concat_all` sizes every output column exactly once and copies each
+//!   input column once; `shuffle` builds a permutation index and gathers
+//!   one time instead of per-element row swaps.
+//! * The replay buffer stores transitions in preallocated
+//!   struct-of-arrays ring columns and gathers samples into a reusable
+//!   scratch batch (allocation-free once the learner keeps up).
+//! * Weight broadcasts ship one `Arc<[f32]>` to all remotes instead of
+//!   cloning the parameter vector per worker.
 //!
 //! Numerics are JAX/Pallas programs lowered once to HLO text
 //! (`make artifacts`) and executed from rust via PJRT — python is never
-//! on the training path.
+//! on the training path.  In offline builds the PJRT bindings are the
+//! gated stub in [`xla`]; the dataflow layer and all dummy-policy paths
+//! run without it.
 
 pub mod actor;
 pub mod algorithms;
@@ -39,5 +60,6 @@ pub mod rollout;
 pub mod runtime;
 pub mod sample_batch;
 pub mod util;
+pub mod xla;
 
 pub use sample_batch::SampleBatch;

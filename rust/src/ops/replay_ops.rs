@@ -10,9 +10,11 @@ use crate::util::Rng;
 /// The replay actor type (paper: `create_colocated(ReplayActor)`).
 pub type ReplayActor = ActorHandle<ReplayActorState>;
 
-/// Spawn `n` replay-buffer actors.
+/// Spawn `n` replay-buffer actors with ring columns preallocated for
+/// `obs_dim`-wide observation rows.
 pub fn create_replay_actors(
     n: usize,
+    obs_dim: usize,
     capacity: usize,
     learning_starts: usize,
     replay_batch_size: usize,
@@ -21,6 +23,7 @@ pub fn create_replay_actors(
         Box::new(move || {
             ReplayActorState::new(
                 capacity,
+                obs_dim,
                 learning_starts,
                 replay_batch_size,
                 0xC0FFEE + i as u64,
@@ -32,7 +35,9 @@ pub fn create_replay_actors(
 /// `StoreToReplayBuffer(actors)`: ship each incoming batch to a
 /// randomly chosen replay actor (fire-and-forget, like Ape-X's
 /// `random.choice(replay_actors).add_batch.remote(batch)`), passing the
-/// batch through for downstream ops (weight updates etc.).
+/// batch through for downstream ops (weight updates etc.).  The clone
+/// handed to the actor shares the batch's column storage (reference
+/// count bump, not a deep copy).
 pub fn store_to_replay_buffer(
     actors: Vec<ReplayActor>,
 ) -> impl FnMut(SampleBatch) -> SampleBatch + Send + 'static {
@@ -93,7 +98,7 @@ mod tests {
 
     #[test]
     fn store_op_distributes_to_actors() {
-        let actors = create_replay_actors(2, 64, 0, 4);
+        let actors = create_replay_actors(2, 2, 64, 0, 4);
         let mut op = store_to_replay_buffer(actors.clone());
         for _ in 0..10 {
             let out = op(transitions(4));
@@ -107,7 +112,7 @@ mod tests {
 
     #[test]
     fn replay_stream_yields_after_learning_starts() {
-        let actors = create_replay_actors(2, 64, 8, 4);
+        let actors = create_replay_actors(2, 2, 64, 8, 4);
         let mut store = store_to_replay_buffer(actors.clone());
         // Feed both actors past learning_starts.
         for _ in 0..8 {
@@ -129,7 +134,7 @@ mod tests {
 
     #[test]
     fn replay_before_learning_starts_yields_not_ready() {
-        let actors = create_replay_actors(1, 64, 1000, 4);
+        let actors = create_replay_actors(1, 2, 64, 1000, 4);
         let mut it = replay(actors, 1);
         // Stream must not block: it reports not-ready instead.
         for _ in 0..3 {
@@ -139,7 +144,7 @@ mod tests {
 
     #[test]
     fn priority_update_roundtrip_through_actor() {
-        let actors = create_replay_actors(1, 64, 0, 4);
+        let actors = create_replay_actors(1, 2, 64, 0, 4);
         actors[0].call({
             let batch = transitions(4);
             move |ra| ra.add_batch(&batch)

@@ -108,8 +108,8 @@ mod tests {
         let mut op = concat_batches(20);
         let mk = |n: usize| {
             let mut b = SampleBatch::new(1);
-            b.obs = vec![0.0; n];
-            b.actions = vec![0; n];
+            b.obs = vec![0.0; n].into();
+            b.actions = vec![0; n].into();
             b
         };
         assert!(op(mk(8)).is_empty());
@@ -127,7 +127,7 @@ mod tests {
         let mk = |n: usize| {
             let mut b = SampleBatch::new(1);
             b.obs = (0..n).map(|i| i as f32).collect();
-            b.actions = vec![0; n];
+            b.actions = vec![0; n].into();
             b
         };
         assert!(op(mk(6)).is_empty());
@@ -148,8 +148,8 @@ mod tests {
     fn select_policy_filters_and_extracts() {
         let mut op = select_policy("ppo");
         let mut b = SampleBatch::new(1);
-        b.obs = vec![0.0; 3];
-        b.actions = vec![0; 3];
+        b.obs = vec![0.0; 3].into();
+        b.actions = vec![0; 3].into();
         let ma = MultiAgentBatch::from_single("ppo", b);
         assert_eq!(op(ma).unwrap().len(), 3);
         let other = MultiAgentBatch::from_single("dqn", SampleBatch::new(1));

@@ -12,6 +12,9 @@ use super::TrainItem;
 /// fresh weights to the remotes (fire-and-forget casts; with
 /// `gather_sync` upstream these land before the next round's fetches —
 /// barrier semantics).  Hand to `for_each`.
+///
+/// The broadcast ships one shared `Arc<[f32]>`: every remote's cast
+/// clones a pointer, not the parameter vector.
 pub fn train_one_step(
     local: ActorHandle<RolloutWorker>,
     remotes: Vec<ActorHandle<RolloutWorker>>,
@@ -22,8 +25,9 @@ pub fn train_one_step(
             let stats = w.learn_on_batch(&batch);
             (stats, w.get_weights())
         });
+        let weights: std::sync::Arc<[f32]> = weights.into();
         for r in &remotes {
-            let w = weights.clone();
+            let w = std::sync::Arc::clone(&weights);
             r.cast(move |worker| worker.set_weights(&w));
         }
         TrainItem::new(stats, steps)

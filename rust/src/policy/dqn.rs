@@ -112,7 +112,7 @@ impl Policy for DqnPolicy {
         let mut weights = if b.weights.is_empty() {
             vec![1.0; b.len()]
         } else {
-            b.weights.clone()
+            b.weights.to_vec()
         };
         weights.resize(mb, 0.0);
         let out = self

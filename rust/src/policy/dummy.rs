@@ -70,8 +70,8 @@ mod tests {
     fn gradient_is_mean_reward() {
         let mut p = DummyPolicy::new(1.0);
         let mut b = SampleBatch::new(1);
-        b.obs = vec![0.0; 4];
-        b.rewards = vec![1.0, 2.0, 3.0, 6.0];
+        b.obs = vec![0.0; 4].into();
+        b.rewards = vec![1.0, 2.0, 3.0, 6.0].into();
         let g = p.compute_gradients(&b);
         assert_eq!(g.flat, vec![3.0]);
         p.apply_gradients(&g);

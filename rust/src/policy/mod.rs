@@ -190,10 +190,10 @@ mod tests {
     fn default_learn_on_batch_composes_grad_and_apply() {
         let mut p = DummyPolicy::new(0.1);
         let mut b = SampleBatch::new(1);
-        b.obs = vec![0.0; 4];
-        b.actions = vec![0; 4];
-        b.rewards = vec![1.0; 4];
-        b.dones = vec![0.0; 4];
+        b.obs = vec![0.0; 4].into();
+        b.actions = vec![0; 4].into();
+        b.rewards = vec![1.0; 4].into();
+        b.dones = vec![0.0; 4].into();
         let w0 = p.get_weights()[0];
         let stats = p.learn_on_batch(&b);
         assert!(stats.contains_key("loss"));

@@ -1,6 +1,6 @@
 //! The prioritized replay buffer and the replay-actor state wrapper.
 
-use crate::sample_batch::SampleBatch;
+use crate::sample_batch::{FCol, ICol, SampleBatch};
 use crate::util::Rng;
 
 use super::SumTree;
@@ -21,41 +21,81 @@ pub struct ReplaySample {
 /// alpha exponentiates TD-error priorities; beta anneals the
 /// importance-correction (we keep it fixed per-buffer, as RLlib does for
 /// Ape-X's default config).
+///
+/// Storage is struct-of-arrays ring columns preallocated to
+/// `capacity * obs_dim` (`obs`, `next_obs`) and `capacity` (scalars) —
+/// the former `Vec<Option<Transition>>` cost two heap vectors per stored
+/// transition and an O(capacity) scan per `sample()` call just to
+/// rediscover `obs_dim`.  Samples gather into a scratch batch whose
+/// storage is reclaimed from the previous sample once the learner drops
+/// it, so steady-state replay allocates nothing.
 pub struct PrioritizedReplayBuffer {
     capacity: usize,
+    /// Row width of `obs`/`next_obs`.  0 = not yet known (columns are
+    /// allocated lazily on the first `add_batch`); fixed thereafter.
+    obs_dim: usize,
     alpha: f64,
     beta: f64,
     tree: SumTree,
-    storage: Vec<Option<Transition>>,
+    obs: Vec<f32>,
+    next_obs: Vec<f32>,
+    actions: Vec<i32>,
+    rewards: Vec<f32>,
+    dones: Vec<f32>,
     next_slot: usize,
     size: usize,
     rng: Rng,
     eps: f64,
-}
-
-#[derive(Debug, Clone)]
-struct Transition {
-    obs: Vec<f32>,
-    action: i32,
-    reward: f32,
-    next_obs: Vec<f32>,
-    done: f32,
+    /// Column handles of the last emitted sample; its storage is reused
+    /// for the next sample once the learner has dropped its copy.
+    scratch: Option<SampleBatch>,
 }
 
 impl PrioritizedReplayBuffer {
+    /// A buffer that learns `obs_dim` from the first `add_batch`.
     pub fn new(capacity: usize, alpha: f64, beta: f64, seed: u64) -> Self {
         let capacity = capacity.next_power_of_two();
         PrioritizedReplayBuffer {
             capacity,
+            obs_dim: 0,
             alpha,
             beta,
             tree: SumTree::new(capacity),
-            storage: vec![None; capacity],
+            obs: Vec::new(),
+            next_obs: Vec::new(),
+            actions: Vec::new(),
+            rewards: Vec::new(),
+            dones: Vec::new(),
             next_slot: 0,
             size: 0,
             rng: Rng::new(seed),
             eps: 1e-6,
         }
+    }
+
+    /// A buffer with ring columns preallocated for `obs_dim`-wide rows
+    /// (the constructor the dataflow operators use; avoids the lazy
+    /// first-add allocation).
+    pub fn with_obs_dim(
+        capacity: usize,
+        obs_dim: usize,
+        alpha: f64,
+        beta: f64,
+        seed: u64,
+    ) -> Self {
+        assert!(obs_dim > 0, "obs_dim must be positive");
+        let mut buf = Self::new(capacity, alpha, beta, seed);
+        buf.allocate(obs_dim);
+        buf
+    }
+
+    fn allocate(&mut self, obs_dim: usize) {
+        self.obs_dim = obs_dim;
+        self.obs = vec![0.0; self.capacity * obs_dim];
+        self.next_obs = vec![0.0; self.capacity * obs_dim];
+        self.actions = vec![0; self.capacity];
+        self.rewards = vec![0.0; self.capacity];
+        self.dones = vec![0.0; self.capacity];
     }
 
     pub fn len(&self) -> usize {
@@ -66,23 +106,54 @@ impl PrioritizedReplayBuffer {
         self.size == 0
     }
 
+    /// The observation row width, 0 before anything is stored.
+    pub fn obs_dim(&self) -> usize {
+        self.obs_dim
+    }
+
     /// Add every transition of `batch` (requires next_obs column), with
     /// max priority so new experience is replayed at least once soon.
     pub fn add_batch(&mut self, batch: &SampleBatch) {
+        if batch.is_empty() {
+            return;
+        }
         assert!(!batch.next_obs.is_empty(), "replay needs next_obs");
+        if self.obs_dim == 0 {
+            self.allocate(batch.obs_dim);
+        }
+        assert_eq!(batch.obs_dim, self.obs_dim, "obs_dim mismatch");
+        let d = self.obs_dim;
         let max_p = self.tree.max_priority().max(1.0);
         for i in 0..batch.len() {
-            let t = Transition {
-                obs: batch.obs_row(i).to_vec(),
-                action: batch.actions[i],
-                reward: batch.rewards[i],
-                next_obs: batch.next_obs_row(i).to_vec(),
-                done: batch.dones[i],
-            };
-            self.storage[self.next_slot] = Some(t);
-            self.tree.set(self.next_slot, max_p);
-            self.next_slot = (self.next_slot + 1) % self.capacity;
+            let s = self.next_slot;
+            self.obs[s * d..(s + 1) * d].copy_from_slice(batch.obs_row(i));
+            self.next_obs[s * d..(s + 1) * d]
+                .copy_from_slice(batch.next_obs_row(i));
+            self.actions[s] = batch.actions[i];
+            self.rewards[s] = batch.rewards[i];
+            self.dones[s] = batch.dones[i];
+            self.tree.set(s, max_p);
+            self.next_slot = (s + 1) % self.capacity;
             self.size = (self.size + 1).min(self.capacity);
+        }
+    }
+
+    /// Reclaim the previous sample's column storage (empty vectors with
+    /// capacity intact in the steady state, fresh ones otherwise).
+    #[allow(clippy::type_complexity)]
+    fn take_scratch(
+        &mut self,
+    ) -> (Vec<f32>, Vec<i32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        match self.scratch.take() {
+            Some(mut prev) => (
+                prev.obs.take_vec(),
+                prev.actions.take_vec(),
+                prev.rewards.take_vec(),
+                prev.next_obs.take_vec(),
+                prev.dones.take_vec(),
+                prev.weights.take_vec(),
+            ),
+            None => Default::default(),
         }
     }
 
@@ -91,8 +162,15 @@ impl PrioritizedReplayBuffer {
         if self.size == 0 || self.tree.total() <= 0.0 {
             return None;
         }
-        let obs_dim = self.storage.iter().flatten().next()?.obs.len();
-        let mut batch = SampleBatch::new(obs_dim);
+        let d = self.obs_dim;
+        let (mut obs, mut actions, mut rewards, mut next_obs, mut dones, mut weights) =
+            self.take_scratch();
+        obs.reserve(n * d);
+        next_obs.reserve(n * d);
+        actions.reserve(n);
+        rewards.reserve(n);
+        dones.reserve(n);
+        weights.reserve(n);
         let mut indices = Vec::with_capacity(n);
 
         let total = self.tree.total();
@@ -102,24 +180,33 @@ impl PrioritizedReplayBuffer {
         for _ in 0..n {
             let mass = self.rng.uniform() * total;
             let idx = self.tree.find_prefix(mass);
-            let t = self.storage[idx].as_ref().expect("sampled empty slot");
-            batch.obs.extend_from_slice(&t.obs);
-            batch.actions.push(t.action);
-            batch.rewards.push(t.reward);
-            batch.next_obs.extend_from_slice(&t.next_obs);
-            batch.dones.push(t.done);
+            obs.extend_from_slice(&self.obs[idx * d..(idx + 1) * d]);
+            actions.push(self.actions[idx]);
+            rewards.push(self.rewards[idx]);
+            next_obs.extend_from_slice(&self.next_obs[idx * d..(idx + 1) * d]);
+            dones.push(self.dones[idx]);
             let prob = self.tree.get(idx) / total;
             let w = (prob * self.size as f64).powf(-self.beta) / max_weight;
-            batch.weights.push(w as f32);
+            weights.push(w as f32);
             indices.push(idx);
         }
+        let mut batch = SampleBatch::new(d);
+        batch.obs = FCol::from_vec(obs);
+        batch.actions = ICol::from_vec(actions);
+        batch.rewards = FCol::from_vec(rewards);
+        batch.next_obs = FCol::from_vec(next_obs);
+        batch.dones = FCol::from_vec(dones);
+        batch.weights = FCol::from_vec(weights);
+        self.scratch = Some(batch.clone());
         Some(ReplaySample { batch, indices })
     }
 
-    /// Update priorities after the learner reports |TD| errors.
+    /// Update priorities after the learner reports |TD| errors.  Slots
+    /// that were never filled (index beyond the current size) are
+    /// ignored, matching the old `Option`-storage guard.
     pub fn update_priorities(&mut self, indices: &[usize], td_abs: &[f32]) {
         for (&idx, &td) in indices.iter().zip(td_abs) {
-            if self.storage[idx].is_some() {
+            if idx < self.size {
                 let p = (td.abs() as f64 + self.eps).powf(self.alpha);
                 self.tree.set(idx, p);
             }
@@ -142,12 +229,15 @@ pub struct ReplayActorState {
 impl ReplayActorState {
     pub fn new(
         capacity: usize,
+        obs_dim: usize,
         learning_starts: usize,
         replay_batch_size: usize,
         seed: u64,
     ) -> Self {
         ReplayActorState {
-            buffer: PrioritizedReplayBuffer::new(capacity, 0.6, 0.4, seed),
+            buffer: PrioritizedReplayBuffer::with_obs_dim(
+                capacity, obs_dim, 0.6, 0.4, seed,
+            ),
             learning_starts,
             replay_batch_size,
             num_added: 0,
@@ -204,6 +294,7 @@ mod tests {
     fn sample_returns_requested_count() {
         let mut buf = PrioritizedReplayBuffer::new(16, 0.6, 0.4, 0);
         buf.add_batch(&transitions(5, 0.0));
+        assert_eq!(buf.obs_dim(), 2);
         let s = buf.sample(8).unwrap();
         assert_eq!(s.batch.len(), 8);
         assert_eq!(s.indices.len(), 8);
@@ -213,14 +304,26 @@ mod tests {
     }
 
     #[test]
+    fn sampled_rows_are_consistent_transitions() {
+        let mut buf = PrioritizedReplayBuffer::new(16, 0.6, 0.4, 1);
+        buf.add_batch(&transitions(6, 0.0));
+        let s = buf.sample(32).unwrap();
+        for i in 0..s.batch.len() {
+            // Row invariant from `transitions`: next_obs = obs + 1.
+            assert_eq!(s.batch.obs_row(i)[0] + 1.0, s.batch.next_obs_row(i)[0]);
+            assert_eq!(s.batch.rewards[i], s.batch.obs_row(i)[0]);
+        }
+    }
+
+    #[test]
     fn capacity_wraps_oldest_first() {
         let mut buf = PrioritizedReplayBuffer::new(4, 0.6, 0.4, 0);
         buf.add_batch(&transitions(6, 0.0)); // slots 0..3 then wrap 0,1
         assert_eq!(buf.len(), 4);
         // Rewards present must be from the last 4 transitions {2,3,4,5}.
         let s = buf.sample(32).unwrap();
-        for r in s.batch.rewards {
-            assert!(r >= 2.0 && r <= 5.0, "stale transition {r}");
+        for &r in &s.batch.rewards {
+            assert!((2.0..=5.0).contains(&r), "stale transition {r}");
         }
     }
 
@@ -253,8 +356,34 @@ mod tests {
     }
 
     #[test]
+    fn scratch_batch_is_reused_when_learner_drops_sample() {
+        let mut buf = PrioritizedReplayBuffer::with_obs_dim(16, 2, 0.6, 0.4, 3);
+        buf.add_batch(&transitions(8, 0.0));
+        let first = buf.sample(4).unwrap();
+        let ptr = first.batch.obs.as_slice().as_ptr();
+        drop(first); // learner done with it
+        let second = buf.sample(4).unwrap();
+        assert_eq!(
+            second.batch.obs.as_slice().as_ptr(),
+            ptr,
+            "steady-state sample should reuse the scratch allocation"
+        );
+    }
+
+    #[test]
+    fn scratch_falls_back_when_sample_still_held() {
+        let mut buf = PrioritizedReplayBuffer::with_obs_dim(16, 2, 0.6, 0.4, 4);
+        buf.add_batch(&transitions(8, 0.0));
+        let held = buf.sample(4).unwrap();
+        let snapshot = held.batch.rewards.to_vec();
+        let _second = buf.sample(4).unwrap();
+        // The held sample's rows were not overwritten by the next one.
+        assert_eq!(held.batch.rewards.to_vec(), snapshot);
+    }
+
+    #[test]
     fn replay_actor_gates_on_learning_starts() {
-        let mut ra = ReplayActorState::new(64, 10, 4, 0);
+        let mut ra = ReplayActorState::new(64, 2, 10, 4, 0);
         ra.add_batch(&transitions(5, 0.0));
         assert!(ra.replay().is_none());
         ra.add_batch(&transitions(5, 0.0));

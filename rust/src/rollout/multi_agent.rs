@@ -129,6 +129,10 @@ impl MultiAgentRolloutWorker {
         }
     }
 
+    pub fn obs_dim(&self) -> usize {
+        self.env.obs_dim()
+    }
+
     pub fn learn_on_batch(
         &mut self,
         policy_id: &str,

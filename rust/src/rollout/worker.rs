@@ -218,14 +218,17 @@ impl WorkerSet {
     }
 
     /// Broadcast the local worker's weights to all remotes (blocking
-    /// until every remote applied them — used at sync barriers).
+    /// until every remote applied them — used at sync barriers).  One
+    /// shared `Arc<[f32]>` travels to every remote; the per-remote cost
+    /// is a pointer clone, not a parameter-vector copy.
     pub fn sync_weights(&self) {
-        let weights = self.local.call(|w| w.get_weights());
+        let weights: std::sync::Arc<[f32]> =
+            self.local.call(|w| w.get_weights()).into();
         let replies: Vec<_> = self
             .remotes
             .iter()
             .map(|r| {
-                let w = weights.clone();
+                let w = std::sync::Arc::clone(&weights);
                 r.call_deferred(move |worker| worker.set_weights(&w))
             })
             .collect();

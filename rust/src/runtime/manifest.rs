@@ -3,8 +3,7 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use anyhow::{Context, Result};
-
+use crate::util::error::{Context, Result};
 use crate::util::Json;
 
 /// Build-time configuration baked into the artifacts (shapes and

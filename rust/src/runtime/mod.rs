@@ -18,7 +18,9 @@ mod manifest;
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, Context, Result};
+use crate::anyhow;
+use crate::util::error::{Context, Result};
+use crate::xla;
 
 pub use manifest::{ExeSpec, Manifest, RunConfig, TensorSpec};
 

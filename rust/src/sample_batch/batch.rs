@@ -1,34 +1,42 @@
 //! The core columnar batch.
 
+use super::column::{FCol, ICol};
 use crate::util::Rng;
 
-/// A batch of `len` experience rows stored column-wise.
+/// A batch of `len` experience rows stored column-wise in shared
+/// [`FCol`]/[`ICol`] storage.
 ///
 /// Fixed RL columns (obs/actions/rewards/dones) are always present;
 /// algorithm-specific columns (action log-probs, value predictions,
 /// advantages, value targets) are optional and filled by the collecting
 /// worker or post-processing (`compute_gae`).
+///
+/// `slice`/`minibatches` return **views** (offset+len windows over the
+/// same storage); `clone` bumps reference counts.  Mutation is
+/// copy-on-write per column, so views keep value semantics while the
+/// steady-state hot path (concat → slice → minibatch → learner) never
+/// copies a column more than once.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct SampleBatch {
     /// Row-major observations, `len * obs_dim` values.
-    pub obs: Vec<f32>,
+    pub obs: FCol,
     pub obs_dim: usize,
-    pub actions: Vec<i32>,
-    pub rewards: Vec<f32>,
+    pub actions: ICol,
+    pub rewards: FCol,
     /// 1.0 where the episode terminated at this step.
-    pub dones: Vec<f32>,
+    pub dones: FCol,
     /// log pi(a|s) under the behaviour policy at collection time.
-    pub action_logp: Vec<f32>,
+    pub action_logp: FCol,
     /// Value-function predictions at collection time.
-    pub vf_preds: Vec<f32>,
+    pub vf_preds: FCol,
     /// GAE advantages (filled by post-processing).
-    pub advantages: Vec<f32>,
+    pub advantages: FCol,
     /// Value-function regression targets (filled by post-processing).
-    pub value_targets: Vec<f32>,
+    pub value_targets: FCol,
     /// Next-step observations (filled for off-policy/DQN batches).
-    pub next_obs: Vec<f32>,
+    pub next_obs: FCol,
     /// Per-row importance weights (prioritized replay); empty = all 1.
-    pub weights: Vec<f32>,
+    pub weights: FCol,
 }
 
 impl SampleBatch {
@@ -58,41 +66,77 @@ impl SampleBatch {
     }
 
     /// Concatenate batches (all must share obs_dim and column presence).
+    ///
+    /// Every output column is sized exactly once and filled in a single
+    /// pass; a 1-batch concat is a pure reference-count bump.
     pub fn concat_all(batches: &[SampleBatch]) -> SampleBatch {
         assert!(!batches.is_empty());
-        let mut out = SampleBatch::new(batches[0].obs_dim);
-        for b in batches {
-            assert_eq!(b.obs_dim, out.obs_dim, "obs_dim mismatch in concat");
-            out.obs.extend_from_slice(&b.obs);
-            out.actions.extend_from_slice(&b.actions);
-            out.rewards.extend_from_slice(&b.rewards);
-            out.dones.extend_from_slice(&b.dones);
-            out.action_logp.extend_from_slice(&b.action_logp);
-            out.vf_preds.extend_from_slice(&b.vf_preds);
-            out.advantages.extend_from_slice(&b.advantages);
-            out.value_targets.extend_from_slice(&b.value_targets);
-            out.next_obs.extend_from_slice(&b.next_obs);
-            out.weights.extend_from_slice(&b.weights);
+        if batches.len() == 1 {
+            return batches[0].clone();
         }
-        out
+        let obs_dim = batches[0].obs_dim;
+        for b in batches {
+            assert_eq!(b.obs_dim, obs_dim, "obs_dim mismatch in concat");
+        }
+        fn cat_f(
+            batches: &[SampleBatch],
+            get: fn(&SampleBatch) -> &FCol,
+        ) -> FCol {
+            let total: usize = batches.iter().map(|b| get(b).len()).sum();
+            let mut v = Vec::with_capacity(total);
+            for b in batches {
+                v.extend_from_slice(get(b));
+            }
+            FCol::from_vec(v)
+        }
+        let actions = {
+            let total: usize = batches.iter().map(|b| b.actions.len()).sum();
+            let mut v = Vec::with_capacity(total);
+            for b in batches {
+                v.extend_from_slice(&b.actions);
+            }
+            ICol::from_vec(v)
+        };
+        SampleBatch {
+            obs: cat_f(batches, |b| &b.obs),
+            obs_dim,
+            actions,
+            rewards: cat_f(batches, |b| &b.rewards),
+            dones: cat_f(batches, |b| &b.dones),
+            action_logp: cat_f(batches, |b| &b.action_logp),
+            vf_preds: cat_f(batches, |b| &b.vf_preds),
+            advantages: cat_f(batches, |b| &b.advantages),
+            value_targets: cat_f(batches, |b| &b.value_targets),
+            next_obs: cat_f(batches, |b| &b.next_obs),
+            weights: cat_f(batches, |b| &b.weights),
+        }
     }
 
-    /// Rows `[start, end)` as a new batch.
+    /// Rows `[start, end)` as a **view** sharing this batch's storage
+    /// (O(1) per column; absent columns stay absent).
     pub fn slice(&self, start: usize, end: usize) -> SampleBatch {
         let d = self.obs_dim;
-        let col = |v: &Vec<f32>| {
-            if v.is_empty() { vec![] } else { v[start..end].to_vec() }
+        let col = |c: &FCol| {
+            if c.is_empty() {
+                FCol::new()
+            } else {
+                c.view(start, end)
+            }
         };
-        let coln = |v: &Vec<f32>| {
-            if v.is_empty() { vec![] } else { v[start * d..end * d].to_vec() }
+        let coln = |c: &FCol| {
+            if c.is_empty() {
+                FCol::new()
+            } else {
+                c.view(start * d, end * d)
+            }
         };
         SampleBatch {
             obs: coln(&self.obs),
             obs_dim: d,
             actions: if self.actions.is_empty() {
-                vec![]
+                ICol::new()
             } else {
-                self.actions[start..end].to_vec()
+                self.actions.view(start, end)
             },
             rewards: col(&self.rewards),
             dones: col(&self.dones),
@@ -105,43 +149,64 @@ impl SampleBatch {
         }
     }
 
-    /// In-place Fisher–Yates row shuffle (used between PPO epochs).
+    /// Fisher–Yates row shuffle (used between PPO epochs): builds the
+    /// permutation index first, then gathers every column in one pass —
+    /// instead of the O(n) per-element row swaps of the copy era.
+    ///
+    /// Consumes randomness identically to the former in-place version,
+    /// so seeded runs stay bit-reproducible.
     pub fn shuffle(&mut self, rng: &mut Rng) {
         let n = self.len();
-        for i in (1..n).rev() {
-            let j = rng.below(i + 1);
-            self.swap_rows(i, j);
-        }
-    }
-
-    fn swap_rows(&mut self, i: usize, j: usize) {
-        if i == j {
+        if n <= 1 {
             return;
         }
-        let d = self.obs_dim;
-        for k in 0..d {
-            self.obs.swap(i * d + k, j * d + k);
-            if !self.next_obs.is_empty() {
-                self.next_obs.swap(i * d + k, j * d + k);
-            }
+        let mut perm: Vec<usize> = (0..n).collect();
+        for i in (1..n).rev() {
+            let j = rng.below(i + 1);
+            perm.swap(i, j);
         }
-        let swap1 = |v: &mut Vec<f32>| {
-            if !v.is_empty() {
-                v.swap(i, j)
+        let d = self.obs_dim;
+        let gather = |c: &FCol| -> FCol {
+            if c.is_empty() {
+                return FCol::new();
             }
+            let mut v = Vec::with_capacity(n);
+            for &p in &perm {
+                v.push(c[p]);
+            }
+            FCol::from_vec(v)
         };
-        self.actions.swap(i, j);
-        swap1(&mut self.rewards);
-        swap1(&mut self.dones);
-        swap1(&mut self.action_logp);
-        swap1(&mut self.vf_preds);
-        swap1(&mut self.advantages);
-        swap1(&mut self.value_targets);
-        swap1(&mut self.weights);
+        let gather_rows = |c: &FCol| -> FCol {
+            if c.is_empty() {
+                return FCol::new();
+            }
+            let mut v = Vec::with_capacity(n * d);
+            for &p in &perm {
+                v.extend_from_slice(&c[p * d..(p + 1) * d]);
+            }
+            FCol::from_vec(v)
+        };
+        self.obs = gather_rows(&self.obs);
+        self.next_obs = gather_rows(&self.next_obs);
+        if !self.actions.is_empty() {
+            let mut v = Vec::with_capacity(n);
+            for &p in &perm {
+                v.push(self.actions[p]);
+            }
+            self.actions = ICol::from_vec(v);
+        }
+        self.rewards = gather(&self.rewards);
+        self.dones = gather(&self.dones);
+        self.action_logp = gather(&self.action_logp);
+        self.vf_preds = gather(&self.vf_preds);
+        self.advantages = gather(&self.advantages);
+        self.value_targets = gather(&self.value_targets);
+        self.weights = gather(&self.weights);
     }
 
     /// Fixed-size minibatch views for SGD epochs; the tail shorter than
     /// `size` is dropped (standard PPO practice with shuffled rows).
+    /// Each minibatch aliases this batch's storage — no copies.
     pub fn minibatches(&self, size: usize) -> Vec<SampleBatch> {
         let n = self.len() / size;
         (0..n).map(|i| self.slice(i * size, (i + 1) * size)).collect()
@@ -150,45 +215,71 @@ impl SampleBatch {
     /// Pad (repeat-last-row padding, mask 0) or truncate to exactly `n`
     /// rows, returning the mask column.  Static-shape HLO artifacts
     /// require exact row counts; the mask keeps padding out of losses.
+    ///
+    /// Truncation is a view; padding copies once into exactly-sized
+    /// columns.  Padding an *empty* batch zero-fills **every** column of
+    /// the schema (including the optional ones: logp, vf_preds,
+    /// advantages, value_targets, next_obs, weights) so column presence
+    /// never changes under padding — downstream consumers that expect
+    /// e.g. `weights` or `action_logp` see zeros, not a vanished column.
     pub fn pad_or_truncate(&self, n: usize) -> (SampleBatch, Vec<f32>) {
         let len = self.len();
         if len >= n {
             return (self.slice(0, n), vec![1.0; n]);
         }
+        let d = self.obs_dim;
         if len == 0 {
-            // Nothing to repeat: pad fixed columns with zeros, mask all 0.
-            let mut out = SampleBatch::new(self.obs_dim);
-            out.obs = vec![0.0; n * self.obs_dim];
-            out.actions = vec![0; n];
-            out.rewards = vec![0.0; n];
-            out.dones = vec![0.0; n];
+            let mut out = SampleBatch::new(d);
+            out.obs = FCol::from_vec(vec![0.0; n * d]);
+            out.actions = ICol::from_vec(vec![0; n]);
+            out.rewards = FCol::from_vec(vec![0.0; n]);
+            out.dones = FCol::from_vec(vec![0.0; n]);
+            out.action_logp = FCol::from_vec(vec![0.0; n]);
+            out.vf_preds = FCol::from_vec(vec![0.0; n]);
+            out.advantages = FCol::from_vec(vec![0.0; n]);
+            out.value_targets = FCol::from_vec(vec![0.0; n]);
+            out.next_obs = FCol::from_vec(vec![0.0; n * d]);
+            out.weights = FCol::from_vec(vec![0.0; n]);
             return (out, vec![0.0; n]);
         }
-        let mut out = self.clone();
-        let mut mask = vec![1.0; len];
-        let last = len.saturating_sub(1);
-        for _ in len..n {
-            for k in 0..self.obs_dim {
-                out.obs.push(self.obs[last * self.obs_dim + k]);
-                if !self.next_obs.is_empty() {
-                    out.next_obs.push(self.next_obs[last * self.obs_dim + k]);
-                }
+        let last = len - 1;
+        let pad_f = |src: &FCol, width: usize| -> FCol {
+            if src.is_empty() {
+                return FCol::new();
             }
-            out.actions.push(*self.actions.get(last).unwrap_or(&0));
-            let push1 = |src: &Vec<f32>, dst: &mut Vec<f32>| {
-                if !src.is_empty() {
-                    dst.push(src[last]);
-                }
-            };
-            push1(&self.rewards, &mut out.rewards);
-            push1(&self.dones, &mut out.dones);
-            push1(&self.action_logp, &mut out.action_logp);
-            push1(&self.vf_preds, &mut out.vf_preds);
-            push1(&self.advantages, &mut out.advantages);
-            push1(&self.value_targets, &mut out.value_targets);
-            push1(&self.weights, &mut out.weights);
-            mask.push(0.0);
-        }
+            let mut v = Vec::with_capacity(n * width);
+            v.extend_from_slice(src);
+            let tail = &src[last * width..len * width];
+            for _ in len..n {
+                v.extend_from_slice(tail);
+            }
+            FCol::from_vec(v)
+        };
+        let actions = if self.actions.is_empty() {
+            ICol::new()
+        } else {
+            let mut v = Vec::with_capacity(n);
+            v.extend_from_slice(&self.actions);
+            for _ in len..n {
+                v.push(self.actions[last]);
+            }
+            ICol::from_vec(v)
+        };
+        let out = SampleBatch {
+            obs: pad_f(&self.obs, d),
+            obs_dim: d,
+            actions,
+            rewards: pad_f(&self.rewards, 1),
+            dones: pad_f(&self.dones, 1),
+            action_logp: pad_f(&self.action_logp, 1),
+            vf_preds: pad_f(&self.vf_preds, 1),
+            advantages: pad_f(&self.advantages, 1),
+            value_targets: pad_f(&self.value_targets, 1),
+            next_obs: pad_f(&self.next_obs, d),
+            weights: pad_f(&self.weights, 1),
+        };
+        let mut mask = vec![1.0; len];
+        mask.resize(n, 0.0);
         (out, mask)
     }
 }
@@ -231,6 +322,13 @@ mod tests {
     }
 
     #[test]
+    fn concat_of_one_is_zero_copy() {
+        let a = mk(4);
+        let c = SampleBatch::concat_all(std::slice::from_ref(&a));
+        assert_eq!(c, a);
+    }
+
+    #[test]
     fn slice_extracts_rows() {
         let b = mk(6);
         let s = b.slice(2, 5);
@@ -238,6 +336,16 @@ mod tests {
         assert_eq!(s.obs_row(0), b.obs_row(2));
         assert_eq!(s.actions[0], b.actions[2]);
         assert_eq!(s.rewards, b.rewards[2..5].to_vec());
+    }
+
+    #[test]
+    fn slice_views_do_not_leak_writes() {
+        let b = mk(6);
+        let mut s = b.slice(1, 3);
+        s.rewards[0] = 1234.0;
+        assert_eq!(s.rewards[0], 1234.0);
+        assert_eq!(b.rewards[1], 1.0, "parent sees no write through view");
+        assert_eq!(b.rewards.len(), 6);
     }
 
     #[test]
@@ -249,13 +357,25 @@ mod tests {
     }
 
     #[test]
+    fn minibatches_are_views_row_identical_to_slices() {
+        let b = mk(9);
+        for (i, mb) in b.minibatches(3).iter().enumerate() {
+            for r in 0..3 {
+                assert_eq!(mb.obs_row(r), b.obs_row(i * 3 + r));
+                assert_eq!(mb.rewards[r], b.rewards[i * 3 + r]);
+                assert_eq!(mb.actions[r], b.actions[i * 3 + r]);
+            }
+        }
+    }
+
+    #[test]
     fn shuffle_is_permutation() {
         let b0 = mk(20);
         let mut b = b0.clone();
         b.shuffle(&mut Rng::new(1));
         assert_eq!(b.len(), 20);
-        let mut r0 = b0.rewards.clone();
-        let mut r1 = b.rewards.clone();
+        let mut r0 = b0.rewards.to_vec();
+        let mut r1 = b.rewards.to_vec();
         r0.sort_by(f32::total_cmp);
         r1.sort_by(f32::total_cmp);
         assert_eq!(r0, r1);
@@ -267,12 +387,28 @@ mod tests {
     }
 
     #[test]
+    fn shuffle_of_view_leaves_parent_intact() {
+        let b = mk(12);
+        let mut s = b.slice(2, 10);
+        s.shuffle(&mut Rng::new(3));
+        assert_eq!(s.len(), 8);
+        for i in 0..12 {
+            assert_eq!(b.obs_row(i)[0], i as f32, "parent reordered");
+        }
+        // The view still holds exactly rows 2..10, permuted.
+        let mut rows = s.rewards.to_vec();
+        rows.sort_by(f32::total_cmp);
+        assert_eq!(rows, (2..10).map(|i| i as f32).collect::<Vec<_>>());
+    }
+
+    #[test]
     fn pad_extends_with_mask_zero() {
         let b = mk(3);
         let (p, mask) = b.pad_or_truncate(5);
         assert_eq!(p.len(), 5);
         assert_eq!(mask, vec![1.0, 1.0, 1.0, 0.0, 0.0]);
         assert_eq!(p.obs_row(4), b.obs_row(2)); // repeat-last padding
+        assert_eq!(p.action_logp.len(), 5); // optional cols padded too
     }
 
     #[test]
@@ -291,5 +427,22 @@ mod tests {
         assert_eq!(p.len(), 3);
         assert_eq!(mask, vec![0.0; 3]);
         assert!(p.obs.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn pad_empty_batch_keeps_full_schema() {
+        // Regression (satellite fix): padding an empty batch used to
+        // zero-fill only the fixed columns, silently dropping optional
+        // columns a downstream consumer (dqn_grad's weights, ppo_grad's
+        // action_logp) expects.  All columns must be present and zero.
+        let b = SampleBatch::new(2);
+        let (p, _mask) = b.pad_or_truncate(4);
+        assert_eq!(p.action_logp.len(), 4);
+        assert_eq!(p.vf_preds.len(), 4);
+        assert_eq!(p.advantages.len(), 4);
+        assert_eq!(p.value_targets.len(), 4);
+        assert_eq!(p.weights.len(), 4);
+        assert_eq!(p.next_obs.len(), 4 * 2);
+        assert!(p.weights.iter().all(|&w| w == 0.0));
     }
 }

@@ -1,13 +1,32 @@
 //! Step-wise batch construction in the rollout hot loop.
 
+use super::column::{FCol, ICol};
 use super::SampleBatch;
 
 /// Appends one environment transition at a time; columns are preallocated
 /// to the expected fragment length so the hot loop never reallocates.
+///
+/// `build()` freezes the staged columns into a [`SampleBatch`]
+/// (zero-copy: the vectors move into shared storage) while keeping a
+/// handle to them.  Once every consumer of the previous fragment has
+/// dropped it — the steady state of `RolloutWorker::sample`, where
+/// per-env segments die right after `concat_all` — the next fragment
+/// reclaims the same allocations, so a long-running worker builds every
+/// fragment after the first without touching the allocator.
 #[derive(Debug)]
 pub struct SampleBatchBuilder {
-    batch: SampleBatch,
+    obs_dim: usize,
     capacity: usize,
+    obs: Vec<f32>,
+    actions: Vec<i32>,
+    rewards: Vec<f32>,
+    dones: Vec<f32>,
+    action_logp: Vec<f32>,
+    vf_preds: Vec<f32>,
+    next_obs: Vec<f32>,
+    /// Column handles of the last built batch, reclaimed (capacity and
+    /// all) by the next fragment once consumers dropped theirs.
+    retained: Option<SampleBatch>,
 }
 
 impl SampleBatchBuilder {
@@ -16,14 +35,47 @@ impl SampleBatchBuilder {
     }
 
     pub fn with_capacity(obs_dim: usize, capacity: usize) -> Self {
-        let mut batch = SampleBatch::new(obs_dim);
-        batch.obs.reserve(capacity * obs_dim);
-        batch.actions.reserve(capacity);
-        batch.rewards.reserve(capacity);
-        batch.dones.reserve(capacity);
-        batch.action_logp.reserve(capacity);
-        batch.vf_preds.reserve(capacity);
-        SampleBatchBuilder { batch, capacity }
+        SampleBatchBuilder {
+            obs_dim,
+            capacity,
+            obs: Vec::with_capacity(capacity * obs_dim),
+            actions: Vec::with_capacity(capacity),
+            rewards: Vec::with_capacity(capacity),
+            dones: Vec::with_capacity(capacity),
+            action_logp: Vec::with_capacity(capacity),
+            vf_preds: Vec::with_capacity(capacity),
+            next_obs: Vec::new(),
+            retained: None,
+        }
+    }
+
+    /// Recover the previous fragment's allocations if its consumers are
+    /// done with them (cheap no-op branch in the steady state).
+    fn reclaim(&mut self) {
+        let Some(mut prev) = self.retained.take() else {
+            return;
+        };
+        if self.obs.capacity() == 0 {
+            self.obs = prev.obs.take_vec();
+        }
+        if self.actions.capacity() == 0 {
+            self.actions = prev.actions.take_vec();
+        }
+        if self.rewards.capacity() == 0 {
+            self.rewards = prev.rewards.take_vec();
+        }
+        if self.dones.capacity() == 0 {
+            self.dones = prev.dones.take_vec();
+        }
+        if self.action_logp.capacity() == 0 {
+            self.action_logp = prev.action_logp.take_vec();
+        }
+        if self.vf_preds.capacity() == 0 {
+            self.vf_preds = prev.vf_preds.take_vec();
+        }
+        if self.next_obs.capacity() == 0 {
+            self.next_obs = prev.next_obs.take_vec();
+        }
     }
 
     /// Append an on-policy transition (policy-gradient family).
@@ -36,13 +88,14 @@ impl SampleBatchBuilder {
         action_logp: f32,
         vf_pred: f32,
     ) {
-        debug_assert_eq!(obs.len(), self.batch.obs_dim);
-        self.batch.obs.extend_from_slice(obs);
-        self.batch.actions.push(action);
-        self.batch.rewards.push(reward);
-        self.batch.dones.push(if done { 1.0 } else { 0.0 });
-        self.batch.action_logp.push(action_logp);
-        self.batch.vf_preds.push(vf_pred);
+        debug_assert_eq!(obs.len(), self.obs_dim);
+        self.reclaim();
+        self.obs.extend_from_slice(obs);
+        self.actions.push(action);
+        self.rewards.push(reward);
+        self.dones.push(if done { 1.0 } else { 0.0 });
+        self.action_logp.push(action_logp);
+        self.vf_preds.push(vf_pred);
     }
 
     /// Append an on-policy transition that also records next_obs
@@ -61,7 +114,7 @@ impl SampleBatchBuilder {
         vf_pred: f32,
     ) {
         self.add_step(obs, action, reward, done, action_logp, vf_pred);
-        self.batch.next_obs.extend_from_slice(next_obs);
+        self.next_obs.extend_from_slice(next_obs);
     }
 
     /// Append an off-policy transition (DQN family, with next_obs).
@@ -73,29 +126,42 @@ impl SampleBatchBuilder {
         next_obs: &[f32],
         done: bool,
     ) {
-        debug_assert_eq!(obs.len(), self.batch.obs_dim);
-        self.batch.obs.extend_from_slice(obs);
-        self.batch.actions.push(action);
-        self.batch.rewards.push(reward);
-        self.batch.next_obs.extend_from_slice(next_obs);
-        self.batch.dones.push(if done { 1.0 } else { 0.0 });
+        debug_assert_eq!(obs.len(), self.obs_dim);
+        self.reclaim();
+        self.obs.extend_from_slice(obs);
+        self.actions.push(action);
+        self.rewards.push(reward);
+        self.next_obs.extend_from_slice(next_obs);
+        self.dones.push(if done { 1.0 } else { 0.0 });
     }
 
     pub fn len(&self) -> usize {
-        self.batch.len()
+        if self.obs_dim == 0 {
+            0
+        } else {
+            self.obs.len() / self.obs_dim
+        }
     }
 
     pub fn is_empty(&self) -> bool {
-        self.batch.is_empty()
+        self.len() == 0
     }
 
-    /// Finish the batch, leaving the builder reusable (columns cleared,
-    /// capacity retained).
+    /// Finish the batch, leaving the builder reusable.  The staged
+    /// columns move into the batch without copying; their capacity
+    /// returns to the builder once the batch's consumers drop it.
     pub fn build(&mut self) -> SampleBatch {
-        let obs_dim = self.batch.obs_dim;
-        let done = std::mem::replace(&mut self.batch, SampleBatch::new(obs_dim));
-        self.batch.obs.reserve(self.capacity * obs_dim);
-        done
+        let mut b = SampleBatch::new(self.obs_dim);
+        b.obs = FCol::from_vec(std::mem::take(&mut self.obs));
+        b.actions = ICol::from_vec(std::mem::take(&mut self.actions));
+        b.rewards = FCol::from_vec(std::mem::take(&mut self.rewards));
+        b.dones = FCol::from_vec(std::mem::take(&mut self.dones));
+        b.action_logp =
+            FCol::from_vec(std::mem::take(&mut self.action_logp));
+        b.vf_preds = FCol::from_vec(std::mem::take(&mut self.vf_preds));
+        b.next_obs = FCol::from_vec(std::mem::take(&mut self.next_obs));
+        self.retained = Some(b.clone());
+        b
     }
 }
 
@@ -115,6 +181,8 @@ mod tests {
         assert_eq!(second.len(), 1);
         assert_eq!(second.obs_row(0), &[3.0, 4.0]);
         assert_eq!(second.dones, vec![1.0]);
+        // Earlier fragments are untouched by builder reuse.
+        assert_eq!(first.obs_row(0), &[1.0, 2.0]);
     }
 
     #[test]
@@ -124,5 +192,33 @@ mod tests {
         let batch = b.build();
         assert_eq!(batch.next_obs_row(0), &[3.0, 4.0]);
         assert!(batch.action_logp.is_empty());
+    }
+
+    #[test]
+    fn builder_reuses_capacity_when_fragment_dropped() {
+        let mut b = SampleBatchBuilder::with_capacity(2, 8);
+        b.add_step(&[1.0, 2.0], 0, 1.0, false, 0.0, 0.0);
+        let cap_before = {
+            drop(b.build()); // consumer finished with the fragment
+            // Trigger reclaim, then inspect staged capacity.
+            b.add_step(&[5.0, 6.0], 0, 1.0, false, 0.0, 0.0);
+            b.obs.capacity()
+        };
+        // The original 8x2 reservation came back instead of a fresh
+        // 1-element allocation.
+        assert!(cap_before >= 16, "capacity {cap_before} not reclaimed");
+        let batch = b.build();
+        assert_eq!(batch.obs_row(0), &[5.0, 6.0]);
+    }
+
+    #[test]
+    fn builder_allocates_fresh_when_fragment_still_live() {
+        let mut b = SampleBatchBuilder::new(1);
+        b.add_step(&[1.0], 0, 1.0, false, 0.0, 0.0);
+        let held = b.build(); // keep the fragment alive
+        b.add_step(&[2.0], 0, 2.0, false, 0.0, 0.0);
+        let next = b.build();
+        assert_eq!(held.obs_row(0), &[1.0]);
+        assert_eq!(next.obs_row(0), &[2.0]);
     }
 }

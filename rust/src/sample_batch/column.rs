@@ -1,0 +1,343 @@
+//! Shared-storage batch columns: `Arc`-backed flat buffers with
+//! (offset, len) windows and copy-on-write mutation.
+//!
+//! This is the zero-copy substrate of the experience path.  A
+//! [`Col<T>`] behaves like a `Vec<T>` at every call site (it derefs to
+//! `[T]`, supports `push`/`extend_from_slice`/`resize`/indexed writes,
+//! compares against `Vec<T>`), but:
+//!
+//! * `clone()` is a reference-count bump — batches crossing operator
+//!   boundaries (store-to-replay pass-through, `select_policy`,
+//!   `duplicate`) no longer deep-copy their columns;
+//! * [`Col::view`] produces a sub-range window over the *same* storage —
+//!   `SampleBatch::slice`/`minibatches` are O(1) per column;
+//! * any mutation first ensures unique, full-range ownership (copying
+//!   only when the storage is actually shared or windowed), so views can
+//!   never observe writes through a sibling — value semantics are
+//!   preserved exactly, only the copies are lazy;
+//! * [`Col::take_vec`] recovers the backing `Vec` (capacity included)
+//!   when this handle is the last one — the reuse hook behind the replay
+//!   scratch batch and the rollout builder's fragment recycling.
+
+use std::sync::Arc;
+
+/// An `f32` column ([`FCol`]) or `i32` column ([`ICol`]).
+pub struct Col<T> {
+    data: Arc<Vec<T>>,
+    off: usize,
+    len: usize,
+}
+
+pub type FCol = Col<f32>;
+pub type ICol = Col<i32>;
+
+impl<T> Clone for Col<T> {
+    fn clone(&self) -> Self {
+        Col { data: Arc::clone(&self.data), off: self.off, len: self.len }
+    }
+}
+
+impl<T> Default for Col<T> {
+    fn default() -> Self {
+        Col { data: Arc::new(Vec::new()), off: 0, len: 0 }
+    }
+}
+
+impl<T: Copy> Col<T> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Wrap an owned vector without copying.
+    pub fn from_vec(v: Vec<T>) -> Self {
+        let len = v.len();
+        Col { data: Arc::new(v), off: 0, len }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[T] {
+        &self.data[self.off..self.off + self.len]
+    }
+
+    /// An O(1) sub-range view sharing this column's storage.
+    pub fn view(&self, start: usize, end: usize) -> Self {
+        assert!(start <= end && end <= self.len, "view out of range");
+        Col {
+            data: Arc::clone(&self.data),
+            off: self.off + start,
+            len: end - start,
+        }
+    }
+
+    /// True when this handle aliases no other (unique, full-range).
+    fn is_owned(&mut self) -> bool {
+        self.off == 0
+            && self.len == self.data.len()
+            && Arc::get_mut(&mut self.data).is_some()
+    }
+
+    /// Copy-on-write: ensure unique, full-range ownership.
+    fn make_owned(&mut self) {
+        if self.is_owned() {
+            return;
+        }
+        let v: Vec<T> = self.as_slice().to_vec();
+        self.off = 0;
+        self.len = v.len();
+        self.data = Arc::new(v);
+    }
+
+    /// The owned backing vector (after copy-on-write).  Callers must
+    /// restore the `len` invariant — use the public mutators instead.
+    fn owned_vec(&mut self) -> &mut Vec<T> {
+        self.make_owned();
+        Arc::get_mut(&mut self.data).expect("unique after make_owned")
+    }
+
+    pub fn push(&mut self, value: T) {
+        self.owned_vec().push(value);
+        self.len += 1;
+    }
+
+    pub fn extend_from_slice(&mut self, other: &[T]) {
+        self.owned_vec().extend_from_slice(other);
+        self.len += other.len();
+    }
+
+    pub fn resize(&mut self, new_len: usize, value: T) {
+        self.owned_vec().resize(new_len, value);
+        self.len = new_len;
+    }
+
+    pub fn truncate(&mut self, new_len: usize) {
+        if new_len >= self.len {
+            return;
+        }
+        // A pure window shrink: no copy needed even when shared.
+        self.len = new_len;
+    }
+
+    pub fn clear(&mut self) {
+        self.truncate(0);
+    }
+
+    pub fn reserve(&mut self, additional: usize) {
+        self.owned_vec().reserve(additional);
+    }
+
+    /// Copy this column's window into a fresh `Vec`.
+    /// (Also reachable as the slice method via deref; kept inherent so
+    /// call sites read naturally.)
+    pub fn to_vec(&self) -> Vec<T> {
+        self.as_slice().to_vec()
+    }
+
+    /// Recover the backing vector for reuse, leaving this column empty.
+    ///
+    /// When this handle is the last reference the full backing `Vec`
+    /// comes back *cleared but with capacity intact* (the steady-state,
+    /// allocation-free path); otherwise a fresh empty `Vec` is returned
+    /// and the shared storage stays untouched.
+    pub fn take_vec(&mut self) -> Vec<T> {
+        let col = std::mem::take(self);
+        match Arc::try_unwrap(col.data) {
+            Ok(mut v) => {
+                v.clear();
+                v
+            }
+            Err(_) => Vec::new(),
+        }
+    }
+}
+
+impl<T: Copy> std::ops::Deref for Col<T> {
+    type Target = [T];
+
+    #[inline]
+    fn deref(&self) -> &[T] {
+        self.as_slice()
+    }
+}
+
+impl<T: Copy> std::ops::DerefMut for Col<T> {
+    #[inline]
+    fn deref_mut(&mut self) -> &mut [T] {
+        self.make_owned();
+        Arc::get_mut(&mut self.data)
+            .expect("unique after make_owned")
+            .as_mut_slice()
+    }
+}
+
+impl<T: Copy + std::fmt::Debug> std::fmt::Debug for Col<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.as_slice().fmt(f)
+    }
+}
+
+impl<T: Copy + PartialEq> PartialEq for Col<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl<T: Copy + PartialEq> PartialEq<Vec<T>> for Col<T> {
+    fn eq(&self, other: &Vec<T>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl<T: Copy + PartialEq> PartialEq<Col<T>> for Vec<T> {
+    fn eq(&self, other: &Col<T>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl<T: Copy + PartialEq> PartialEq<&[T]> for Col<T> {
+    fn eq(&self, other: &&[T]) -> bool {
+        self.as_slice() == *other
+    }
+}
+
+impl<T: Copy> From<Vec<T>> for Col<T> {
+    fn from(v: Vec<T>) -> Self {
+        Col::from_vec(v)
+    }
+}
+
+impl<T: Copy> FromIterator<T> for Col<T> {
+    fn from_iter<I: IntoIterator<Item = T>>(iter: I) -> Self {
+        Col::from_vec(iter.into_iter().collect())
+    }
+}
+
+impl<'a, T: Copy> IntoIterator for &'a Col<T> {
+    type Item = &'a T;
+    type IntoIter = std::slice::Iter<'a, T>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        self.as_slice().iter()
+    }
+}
+
+impl<'a, T: Copy> IntoIterator for &'a mut Col<T> {
+    type Item = &'a mut T;
+    type IntoIter = std::slice::IterMut<'a, T>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        use std::ops::DerefMut;
+        self.deref_mut().iter_mut()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn view_aliases_without_copy() {
+        let a = FCol::from_vec(vec![0.0, 1.0, 2.0, 3.0, 4.0]);
+        let v = a.view(1, 4);
+        assert_eq!(&v[..], &[1.0, 2.0, 3.0]);
+        // Shared storage: three handles (a, v) over one allocation.
+        assert_eq!(v.len(), 3);
+        let vv = v.view(1, 3);
+        assert_eq!(&vv[..], &[2.0, 3.0]);
+    }
+
+    #[test]
+    fn write_through_view_copies_not_aliases() {
+        let a = FCol::from_vec(vec![0.0, 1.0, 2.0, 3.0]);
+        let mut v = a.view(0, 2);
+        v[0] = 99.0;
+        assert_eq!(&v[..], &[99.0, 1.0]);
+        assert_eq!(&a[..], &[0.0, 1.0, 2.0, 3.0], "parent must not see write");
+    }
+
+    #[test]
+    fn push_after_clone_diverges() {
+        let mut a = FCol::from_vec(vec![1.0]);
+        let b = a.clone();
+        a.push(2.0);
+        assert_eq!(a, vec![1.0, 2.0]);
+        assert_eq!(b, vec![1.0]);
+    }
+
+    #[test]
+    fn unique_mutation_is_in_place() {
+        let mut a = FCol::from_vec(Vec::with_capacity(64));
+        let ptr = a.data.as_ptr();
+        for i in 0..32 {
+            a.push(i as f32);
+        }
+        // No reallocation happened: same backing Vec throughout.
+        assert_eq!(a.data.as_ptr(), ptr);
+        assert_eq!(a.len(), 32);
+    }
+
+    #[test]
+    fn take_vec_recovers_capacity_when_unique() {
+        let mut a = FCol::from_vec(Vec::with_capacity(128));
+        a.extend_from_slice(&[1.0, 2.0]);
+        let v = a.take_vec();
+        assert!(v.capacity() >= 128);
+        assert!(v.is_empty());
+        assert!(a.is_empty());
+    }
+
+    #[test]
+    fn take_vec_backs_off_when_shared() {
+        let mut a = FCol::from_vec(vec![1.0, 2.0]);
+        let keep = a.clone();
+        let v = a.take_vec();
+        assert!(v.is_empty());
+        assert_eq!(keep, vec![1.0, 2.0], "shared storage untouched");
+    }
+
+    #[test]
+    fn truncate_and_clear_are_window_ops() {
+        let mut a = FCol::from_vec(vec![1.0, 2.0, 3.0]);
+        let b = a.clone();
+        a.truncate(1);
+        assert_eq!(a, vec![1.0]);
+        assert_eq!(b, vec![1.0, 2.0, 3.0]);
+        a.clear();
+        assert!(a.is_empty());
+    }
+
+    #[test]
+    fn vec_like_traits() {
+        let a: FCol = (0..3).map(|i| i as f32).collect();
+        assert_eq!(a, vec![0.0, 1.0, 2.0]);
+        let from: FCol = vec![5.0].into();
+        assert_eq!(from[0], 5.0);
+        let mut m = a.clone();
+        for x in &mut m {
+            *x += 1.0;
+        }
+        assert_eq!(m, vec![1.0, 2.0, 3.0]);
+        assert_eq!(a.iter().sum::<f32>(), 3.0);
+        let mut sorted = m.clone();
+        sorted.sort_by(f32::total_cmp);
+        assert_eq!(sorted, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn icol_works_too() {
+        let mut a = ICol::from_vec(vec![1, 2, 3]);
+        let v = a.view(1, 3);
+        assert_eq!(&v[..], &[2, 3]);
+        a.push(4);
+        assert_eq!(a, vec![1, 2, 3, 4]);
+    }
+}

@@ -22,6 +22,10 @@ pub fn compute_gae(
     assert_eq!(batch.vf_preds.len(), n, "GAE needs vf_preds");
     batch.advantages.resize(n, 0.0);
     batch.value_targets.resize(n, 0.0);
+    // One copy-on-write/ownership check per column, not per element:
+    // grab the mutable slices once, then index plain slices in the loop.
+    let advantages = &mut batch.advantages[..];
+    let value_targets = &mut batch.value_targets[..];
     let mut gae = 0.0f32;
     for t in (0..n).rev() {
         let nonterminal = 1.0 - batch.dones[t];
@@ -33,8 +37,8 @@ pub fn compute_gae(
         let delta = batch.rewards[t] + gamma * nonterminal * next_value
             - batch.vf_preds[t];
         gae = delta + gamma * lambda * nonterminal * gae;
-        batch.advantages[t] = gae;
-        batch.value_targets[t] = gae + batch.vf_preds[t];
+        advantages[t] = gae;
+        value_targets[t] = gae + batch.vf_preds[t];
     }
 }
 

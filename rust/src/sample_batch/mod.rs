@@ -1,16 +1,23 @@
 //! Columnar experience batches — the data items flowing through every
 //! dataflow edge (the `T` in `ParIter[T]` / `Iter[T]`).
 //!
-//! Mirrors RLlib's `SampleBatch` / `MultiAgentBatch`: column-oriented so
-//! that concat/slice/shuffle and marshaling into XLA literals are flat
-//! `Vec<f32>` operations with no per-row allocation.
+//! Mirrors RLlib's `SampleBatch` / `MultiAgentBatch`, with a zero-copy
+//! twist: columns are [`FCol`]/[`ICol`] — `Arc`-shared flat storage plus
+//! an (offset, len) window — so `slice`/`minibatches` return views,
+//! `clone` is a reference-count bump, and marshaling into XLA literals
+//! stays a flat-slice operation with no per-row allocation.  Mutation is
+//! copy-on-write per column, which keeps value semantics at every
+//! operator boundary while making the steady-state experience path
+//! (concat → slice → minibatch → learner) allocation-free.
 
 mod batch;
 mod builder;
+mod column;
 mod gae;
 mod multi_agent;
 
 pub use batch::SampleBatch;
 pub use builder::SampleBatchBuilder;
+pub use column::{Col, FCol, ICol};
 pub use gae::{compute_gae, standardize_advantages};
 pub use multi_agent::MultiAgentBatch;

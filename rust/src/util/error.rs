@@ -1,0 +1,154 @@
+//! Minimal, dependency-free stand-in for the `anyhow` crate.
+//!
+//! The offline build environment cannot fetch crates, so the handful of
+//! fallible modules (manifest/JSON parsing, checkpointing, the PJRT
+//! runtime bridge) program against this ~100-line shim instead: a
+//! string-chained [`Error`], a [`Result`] alias, a [`Context`] extension
+//! trait, and the [`anyhow!`]/[`bail!`] macros.  The API subset matches
+//! `anyhow` closely enough that swapping the real crate back in is a
+//! one-line import change per module.
+//!
+//! [`anyhow!`]: crate::anyhow!
+//! [`bail!`]: crate::bail!
+
+use std::fmt;
+
+/// A boxed-string error with a flattened context chain.
+///
+/// `anyhow::Error` keeps sources as a linked chain; for our purposes the
+/// chain is only ever *displayed*, so contexts are folded eagerly into
+/// one message joined by `": "` — which is exactly what `{:#}` prints on
+/// the real thing.
+pub struct Error {
+    msg: String,
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Construct from anything displayable (the `anyhow::Error::msg`
+    /// entry point; the `anyhow!` macro routes here).
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prepend a context layer (`"{context}: {self}"`).
+    pub fn context(self, context: impl fmt::Display) -> Self {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{}` and `{:#}` both print the full chain (the shim flattens
+        // contexts at construction time).
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Any std error converts via `?` — mirrors anyhow's blanket From.
+// (Error itself deliberately does NOT implement std::error::Error, so
+// this impl cannot overlap with the reflexive `From<Error> for Error`.)
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Context` — attach context to the error arm of a `Result`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+/// `anyhow::anyhow!` — construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// `anyhow::bail!` — early-return an `Err(anyhow!(...))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/nonexistent/flowrl/nowhere")
+            .context("reading nowhere")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn macro_and_display() {
+        let e = anyhow!("bad {} at {}", "thing", 7);
+        assert_eq!(format!("{e}"), "bad thing at 7");
+        assert_eq!(format!("{e:#}"), "bad thing at 7");
+        assert_eq!(format!("{e:?}"), "bad thing at 7");
+    }
+
+    #[test]
+    fn bail_early_returns() {
+        fn f(x: i32) -> Result<i32> {
+            if x < 0 {
+                bail!("negative: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert!(format!("{}", f(-1).unwrap_err()).contains("negative"));
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let e = io_fail().unwrap_err();
+        let msg = format!("{e}");
+        assert!(msg.starts_with("reading nowhere: "), "{msg}");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<f32> {
+            let v: f32 = "not a number".parse()?;
+            Ok(v)
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn context_on_shim_errors_too() {
+        let r: Result<()> = Err(anyhow!("inner"));
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(format!("{e}"), "outer: inner");
+    }
+}

@@ -1,13 +1,14 @@
 //! Minimal JSON parser — just enough for `artifacts/manifest.json`.
 //!
-//! The build environment vendors only the `xla` crate's dependency
-//! closure (no serde), so the manifest ABI is parsed with this ~150-line
-//! recursive-descent parser.  Supports the full JSON grammar except
-//! exotic escapes (\uXXXX surrogate pairs are passed through verbatim).
+//! The build environment vendors no external crates (no serde), so the
+//! manifest ABI is parsed with this ~150-line recursive-descent parser.
+//! Supports the full JSON grammar except exotic escapes (\uXXXX
+//! surrogate pairs are passed through verbatim).
 
 use std::collections::BTreeMap;
 
-use anyhow::{anyhow, bail, Result};
+use crate::util::error::Result;
+use crate::{anyhow, bail};
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {

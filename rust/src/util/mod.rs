@@ -1,5 +1,7 @@
-//! Small shared utilities: deterministic RNG, timers, moving statistics.
+//! Small shared utilities: deterministic RNG, timers, moving statistics,
+//! and the vendored error type (`anyhow` stand-in for the offline build).
 
+pub mod error;
 pub mod json;
 mod rng;
 mod stats;

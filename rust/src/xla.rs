@@ -1,0 +1,154 @@
+//! Stubbed PJRT bindings — the API surface of the `xla` crate
+//! (xla_extension) that [`crate::runtime`] programs against, gated for
+//! builds without the native library.
+//!
+//! The offline build environment does not ship `libxla_extension`, so
+//! this module provides the same types and signatures with every entry
+//! point that would touch PJRT returning a "backend unavailable" error.
+//! Code that never reaches the runtime (the whole dataflow layer, the
+//! dummy-policy paths, all unit/property tests) is unaffected; XLA-backed
+//! policies fail fast at client construction with a clear message.
+//!
+//! Swapping the real crate back in is mechanical: delete this module,
+//! add the `xla` dependency, and drop the `use crate::xla;` imports in
+//! `runtime/mod.rs` (the call sites are identical by construction).
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Error type mirroring `xla::Error` closely enough for `?` conversion.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: PJRT backend unavailable (flowrl was built with the \
+         stub xla module; install libxla_extension and swap in the real \
+         `xla` crate to execute AOT artifacts)"
+    )))
+}
+
+/// Element dtypes used by the artifact ABI.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+/// Primitive types a [`Literal`] can be read back as.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for i32 {}
+
+/// A host-side tensor literal.
+pub struct Literal(());
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[usize],
+        _data: &[u8],
+    ) -> Result<Literal> {
+        unavailable("Literal::create_from_shape_and_untyped_data")
+    }
+
+    pub fn scalar(_v: f32) -> Literal {
+        Literal(())
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+}
+
+/// Parsed HLO module (text form).
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// A computation ready for compilation.
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// A device-side buffer returned by execution.
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// A compiled, loaded executable.
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// The PJRT client (CPU).  Not `Send` in the real crate; the stub keeps
+/// that property so the one-runtime-per-actor-thread discipline stays
+/// compiler-enforced.
+pub struct PjRtClient {
+    _not_send: std::marker::PhantomData<std::rc::Rc<()>>,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn compile(
+        &self,
+        _comp: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_errors_are_descriptive() {
+        let err = PjRtClient::cpu().err().expect("stub must error");
+        let msg = format!("{err}");
+        assert!(msg.contains("PJRT backend unavailable"), "{msg}");
+    }
+
+    #[test]
+    fn scalar_literal_constructs_without_backend() {
+        // Literal::scalar is infallible at the call site in runtime::run.
+        let lit = Literal::scalar(1.5);
+        assert!(lit.to_tuple().is_err());
+    }
+}

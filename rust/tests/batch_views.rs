@@ -1,0 +1,327 @@
+//! Property tests for the zero-copy experience path: view-based
+//! `slice`/`minibatches`/`shuffle` must be row-identical to a reference
+//! copy implementation (the pre-refactor semantics), and the
+//! struct-of-arrays replay ring must serve only live slots across
+//! wraparound.  Same randomized-cases harness as rust/tests/properties.rs
+//! (proptest is not vendorable offline).
+
+use flowrl::replay::PrioritizedReplayBuffer;
+use flowrl::sample_batch::{SampleBatch, SampleBatchBuilder};
+use flowrl::util::Rng;
+
+/// Run `prop` on `cases` random instances, reporting the failing seed.
+fn check(name: &str, cases: u64, prop: impl Fn(&mut Rng)) {
+    for seed in 0..cases {
+        let mut rng = Rng::new(0xB47C4 ^ seed);
+        let result = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| prop(&mut rng)),
+        );
+        if let Err(e) = result {
+            panic!("property '{name}' failed at seed {seed}: {e:?}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Reference implementation: plain-Vec columns with the seed's copy
+// semantics (slice copies ranges, shuffle swaps rows in place).
+// ---------------------------------------------------------------------
+
+#[derive(Clone, Debug, PartialEq)]
+struct RefBatch {
+    obs_dim: usize,
+    obs: Vec<f32>,
+    actions: Vec<i32>,
+    rewards: Vec<f32>,
+    dones: Vec<f32>,
+    action_logp: Vec<f32>,
+    vf_preds: Vec<f32>,
+    weights: Vec<f32>,
+    next_obs: Vec<f32>,
+}
+
+impl RefBatch {
+    fn len(&self) -> usize {
+        self.obs.len() / self.obs_dim
+    }
+
+    fn slice(&self, start: usize, end: usize) -> RefBatch {
+        let d = self.obs_dim;
+        let col = |v: &Vec<f32>| {
+            if v.is_empty() { vec![] } else { v[start..end].to_vec() }
+        };
+        let coln = |v: &Vec<f32>| {
+            if v.is_empty() { vec![] } else { v[start * d..end * d].to_vec() }
+        };
+        RefBatch {
+            obs_dim: d,
+            obs: coln(&self.obs),
+            actions: self.actions[start..end].to_vec(),
+            rewards: col(&self.rewards),
+            dones: col(&self.dones),
+            action_logp: col(&self.action_logp),
+            vf_preds: col(&self.vf_preds),
+            weights: col(&self.weights),
+            next_obs: coln(&self.next_obs),
+        }
+    }
+
+    fn minibatches(&self, size: usize) -> Vec<RefBatch> {
+        let n = self.len() / size;
+        (0..n).map(|i| self.slice(i * size, (i + 1) * size)).collect()
+    }
+
+    /// The seed's in-place Fisher–Yates (identical rng consumption to
+    /// the view implementation's permutation gather).
+    fn shuffle(&mut self, rng: &mut Rng) {
+        let n = self.len();
+        for i in (1..n).rev() {
+            let j = rng.below(i + 1);
+            self.swap_rows(i, j);
+        }
+    }
+
+    fn swap_rows(&mut self, i: usize, j: usize) {
+        if i == j {
+            return;
+        }
+        let d = self.obs_dim;
+        for k in 0..d {
+            self.obs.swap(i * d + k, j * d + k);
+            if !self.next_obs.is_empty() {
+                self.next_obs.swap(i * d + k, j * d + k);
+            }
+        }
+        let swap1 = |v: &mut Vec<f32>| {
+            if !v.is_empty() {
+                v.swap(i, j)
+            }
+        };
+        self.actions.swap(i, j);
+        swap1(&mut self.rewards);
+        swap1(&mut self.dones);
+        swap1(&mut self.action_logp);
+        swap1(&mut self.vf_preds);
+        swap1(&mut self.weights);
+    }
+}
+
+/// A random batch built through the public builder, mirrored into the
+/// reference representation.
+fn random_pair(rng: &mut Rng, n: usize, obs_dim: usize) -> (SampleBatch, RefBatch) {
+    let with_next = rng.chance(0.5);
+    let mut b = SampleBatchBuilder::new(obs_dim);
+    for _ in 0..n {
+        let obs: Vec<f32> =
+            (0..obs_dim).map(|_| rng.uniform_range(-1.0, 1.0)).collect();
+        let next: Vec<f32> =
+            (0..obs_dim).map(|_| rng.uniform_range(-1.0, 1.0)).collect();
+        let action = rng.below(3) as i32;
+        let reward = rng.uniform_range(-1.0, 1.0);
+        let done = rng.chance(0.1);
+        if with_next {
+            b.add_step_with_next(
+                &obs,
+                action,
+                reward,
+                &next,
+                done,
+                rng.uniform_range(-2.0, 0.0),
+                rng.uniform_range(-1.0, 1.0),
+            );
+        } else {
+            b.add_step(
+                &obs,
+                action,
+                reward,
+                done,
+                rng.uniform_range(-2.0, 0.0),
+                rng.uniform_range(-1.0, 1.0),
+            );
+        }
+    }
+    let batch = b.build();
+    let reference = RefBatch {
+        obs_dim,
+        obs: batch.obs.to_vec(),
+        actions: batch.actions.to_vec(),
+        rewards: batch.rewards.to_vec(),
+        dones: batch.dones.to_vec(),
+        action_logp: batch.action_logp.to_vec(),
+        vf_preds: batch.vf_preds.to_vec(),
+        weights: batch.weights.to_vec(),
+        next_obs: batch.next_obs.to_vec(),
+    };
+    (batch, reference)
+}
+
+fn assert_batches_equal(view: &SampleBatch, reference: &RefBatch, what: &str) {
+    assert_eq!(view.len(), reference.len(), "{what}: len");
+    assert_eq!(view.obs.to_vec(), reference.obs, "{what}: obs");
+    assert_eq!(view.actions.to_vec(), reference.actions, "{what}: actions");
+    assert_eq!(view.rewards.to_vec(), reference.rewards, "{what}: rewards");
+    assert_eq!(view.dones.to_vec(), reference.dones, "{what}: dones");
+    assert_eq!(
+        view.action_logp.to_vec(),
+        reference.action_logp,
+        "{what}: action_logp"
+    );
+    assert_eq!(view.vf_preds.to_vec(), reference.vf_preds, "{what}: vf_preds");
+    assert_eq!(view.weights.to_vec(), reference.weights, "{what}: weights");
+    assert_eq!(view.next_obs.to_vec(), reference.next_obs, "{what}: next_obs");
+}
+
+// ---------------------------------------------------------------------
+// View equivalence
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_slice_views_match_reference_copies() {
+    check("slice equivalence", 40, |rng| {
+        let n = 1 + rng.below(40);
+        let d = 1 + rng.below(4);
+        let (batch, reference) = random_pair(rng, n, d);
+        let start = rng.below(n);
+        let end = start + rng.below(n - start + 1);
+        assert_batches_equal(
+            &batch.slice(start, end),
+            &reference.slice(start, end),
+            "slice",
+        );
+        // Slicing a slice (the minibatch-of-concat path).
+        let s = batch.slice(start, end);
+        let rs = reference.slice(start, end);
+        if end - start >= 2 {
+            assert_batches_equal(&s.slice(1, end - start), &rs.slice(1, end - start), "nested slice");
+        }
+    });
+}
+
+#[test]
+fn prop_minibatch_views_match_reference_copies() {
+    check("minibatch equivalence", 30, |rng| {
+        let n = 1 + rng.below(60);
+        let d = 1 + rng.below(3);
+        let size = 1 + rng.below(12);
+        let (batch, reference) = random_pair(rng, n, d);
+        let got = batch.minibatches(size);
+        let want = reference.minibatches(size);
+        assert_eq!(got.len(), want.len(), "minibatch count");
+        for (g, w) in got.iter().zip(&want) {
+            assert_batches_equal(g, w, "minibatch");
+        }
+    });
+}
+
+#[test]
+fn prop_shuffle_matches_reference_swaps_exactly() {
+    // The permutation-gather shuffle consumes the rng exactly like the
+    // seed's in-place Fisher–Yates, so same seed => same row order.
+    check("shuffle equivalence", 30, |rng| {
+        let n = 2 + rng.below(50);
+        let d = 1 + rng.below(3);
+        let (mut batch, mut reference) = random_pair(rng, n, d);
+        let seed = rng.next_u64();
+        batch.shuffle(&mut Rng::new(seed));
+        reference.shuffle(&mut Rng::new(seed));
+        assert_batches_equal(&batch, &reference, "shuffle");
+    });
+}
+
+#[test]
+fn prop_views_are_copy_isolated() {
+    // Writing through a view (or the parent) must never be visible on
+    // the other side — value semantics survive the sharing.
+    check("copy isolation", 25, |rng| {
+        let n = 2 + rng.below(30);
+        let (batch, reference) = random_pair(rng, n, 2);
+        let mut view = batch.slice(0, n / 2 + 1);
+        for x in &mut view.rewards {
+            *x += 100.0;
+        }
+        // Parent unchanged.
+        assert_eq!(batch.rewards.to_vec(), reference.rewards);
+        // View changed.
+        assert!(view.rewards.iter().zip(&reference.rewards).all(
+            |(v, r)| (v - (r + 100.0)).abs() < 1e-5
+        ));
+    });
+}
+
+// ---------------------------------------------------------------------
+// Replay ring wraparound
+// ---------------------------------------------------------------------
+
+/// Transitions whose obs encodes a global sequence id, so liveness is
+/// checkable after wraparound.
+fn transitions(start_id: usize, n: usize) -> SampleBatch {
+    let mut b = SampleBatchBuilder::new(2);
+    for i in 0..n {
+        let id = (start_id + i) as f32;
+        b.add_transition(&[id, 0.5], (i % 2) as i32, id, &[id + 1.0, 0.5], false);
+    }
+    b.build()
+}
+
+#[test]
+fn prop_replay_ring_serves_only_live_slots_after_wraparound() {
+    check("ring wraparound", 20, |rng| {
+        let capacity = 16usize; // power of two
+        let mut buf =
+            PrioritizedReplayBuffer::with_obs_dim(capacity, 2, 0.6, 0.4, rng.next_u64());
+        let mut pushed = 0usize;
+        // Fill well past capacity in random-sized chunks.
+        while pushed < capacity * 3 {
+            let n = 1 + rng.below(7);
+            buf.add_batch(&transitions(pushed, n));
+            pushed += n;
+        }
+        assert_eq!(buf.len(), capacity);
+        let live_min = (pushed - capacity) as f32;
+        let live_max = (pushed - 1) as f32;
+        let s = buf.sample(64).unwrap();
+        assert_eq!(s.batch.len(), 64);
+        for i in 0..s.batch.len() {
+            let id = s.batch.obs_row(i)[0];
+            assert!(
+                (live_min..=live_max).contains(&id),
+                "sampled stale row id {id}, live range [{live_min}, {live_max}]"
+            );
+            // Row consistency across the SoA columns.
+            assert_eq!(s.batch.rewards[i], id);
+            assert_eq!(s.batch.next_obs_row(i)[0], id + 1.0);
+        }
+        for &idx in &s.indices {
+            assert!(idx < capacity, "slot index out of ring bounds");
+        }
+    });
+}
+
+#[test]
+fn prop_replay_priorities_apply_to_live_slots_after_wraparound() {
+    check("ring priorities", 15, |rng| {
+        let capacity = 8usize;
+        let mut buf =
+            PrioritizedReplayBuffer::with_obs_dim(capacity, 2, 1.0, 0.4, rng.next_u64());
+        // Two full generations: ids 0..8 overwritten by ids 8..16.
+        buf.add_batch(&transitions(0, capacity));
+        buf.add_batch(&transitions(capacity, capacity));
+        // Make one slot dominate; it must map to the *new* generation.
+        let hot = rng.below(capacity);
+        let mut tds = vec![0.001f32; capacity];
+        tds[hot] = 1000.0;
+        let indices: Vec<usize> = (0..capacity).collect();
+        buf.update_priorities(&indices, &tds);
+        let s = buf.sample(200).unwrap();
+        let hot_frac = s.indices.iter().filter(|&&i| i == hot).count() as f64
+            / s.indices.len() as f64;
+        assert!(hot_frac > 0.8, "hot slot underrepresented: {hot_frac}");
+        // Every sampled hot row carries the overwritten (live) content.
+        for i in 0..s.batch.len() {
+            if s.indices[i] == hot {
+                let id = s.batch.obs_row(i)[0];
+                assert_eq!(id, (capacity + hot) as f32, "stale content in slot");
+            }
+        }
+    });
+}
