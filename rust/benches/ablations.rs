@@ -55,7 +55,8 @@ fn dqn_ratio(store_weight: usize, replay_weight: usize) -> (u64, u64) {
     cfg.rollout_fragment_length = 16;
     cfg.num_envs_per_worker = 2;
     let workers = cfg.dqn_workers();
-    let obs_dim = workers.local.call(|w| w.obs_dim());
+    let obs_dim =
+        workers.local.call(|w| w.obs_dim()).expect("learner died");
     let replay_actors = create_replay_actors(1, obs_dim, 8192, 64, 64);
     let store_op = parallel_rollouts(workers.remotes.clone())
         .gather_async(1)
@@ -70,7 +71,9 @@ fn dqn_ratio(store_weight: usize, replay_weight: usize) -> (u64, u64) {
             let steps = sample.batch.len();
             let indices = sample.indices;
             let batch = sample.batch;
-            let (stats, td) = local.call(move |w| w.learn_and_td(&batch));
+            let (stats, td) = local
+                .call(move |w| w.learn_and_td(&batch))
+                .expect("learner died");
             ra.cast(move |state| state.update_priorities(&indices, &td));
             TrainItem::new(stats, steps)
         }

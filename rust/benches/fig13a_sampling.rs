@@ -75,7 +75,8 @@ fn strict_order_throughput(n_workers: usize) -> f64 {
             &mut pending[cursor],
             ws[cursor].call_deferred(|state| state.sample()),
         )
-        .recv();
+        .recv()
+        .expect("worker died");
         cursor = (cursor + 1) % ws.len();
         batch.len()
     })

@@ -86,9 +86,11 @@ fn ppo_alone() -> LocalIter<TrainResult> {
         .combine(concat_batches(tbs))
         .for_each(move |batch| {
             let steps = batch.len();
-            let (stats, weights) = l.call(move |w| {
-                (w.learn_on_batch("ppo", &batch), w.get_weights("ppo"))
-            });
+            let (stats, weights) = l
+                .call(move |w| {
+                    (w.learn_on_batch("ppo", &batch), w.get_weights("ppo"))
+                })
+                .expect("learner died");
             for r in &rs {
                 let wt = weights.clone();
                 r.cast(move |w| w.set_weights("ppo", &wt));
@@ -105,7 +107,7 @@ fn dqn_alone() -> LocalIter<TrainResult> {
     let (local, remotes) = ma_workers(&cfg, &ma, true, false);
     let rollouts = ParIter::from_actors(remotes.clone(), |w| Some(w.sample()))
         .gather_async(cfg.num_async);
-    let obs_dim = local.call(|w| w.obs_dim());
+    let obs_dim = local.call(|w| w.obs_dim()).expect("learner died");
     let replay_actors = create_replay_actors(
         1,
         obs_dim,
@@ -128,10 +130,12 @@ fn dqn_alone() -> LocalIter<TrainResult> {
         let steps = sample.batch.len();
         let indices = sample.indices;
         let batch = sample.batch;
-        let (stats, td) = l.call(move |w| {
-            let stats = w.learn_on_batch("dqn", &batch);
-            (stats, w.policies["dqn"].td_abs().unwrap_or_default())
-        });
+        let (stats, td) = l
+            .call(move |w| {
+                let stats = w.learn_on_batch("dqn", &batch);
+                (stats, w.policies["dqn"].td_abs().unwrap_or_default())
+            })
+            .expect("learner died");
         ra.cast(move |state| state.update_priorities(&indices, &td));
         TrainItem::new(stats, steps)
     });

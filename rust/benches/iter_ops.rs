@@ -38,7 +38,8 @@ fn main() {
         a.call(|c| {
             c.0 += 1;
             c.0
-        });
+        })
+        .unwrap();
     });
 
     let group = actors(4);

@@ -1,0 +1,392 @@
+//! The bounded ring mailbox — the typed message substrate under every
+//! actor.
+//!
+//! A message is an [`Envelope`]: two function pointers plus a 256-byte
+//! inline payload the sender's closure is written into directly.  The
+//! ring preallocates `capacity` envelope slots at spawn, so a
+//! steady-state send is *one slot write* — no per-message `Box`, no
+//! allocator traffic (the seed runtime boxed a `dyn FnOnce` per call
+//! through an unbounded `mpsc`; see `benches/actor_mailbox.rs` for the
+//! before/after).  Closures larger than the inline payload fall back to
+//! a boxed thunk whose (16-byte) fat pointer is stored inline — a cold
+//! path no hot-loop message in this crate takes.
+//!
+//! The ring is guarded by one mutex and two condvars (`not_empty`,
+//! `not_full`): senders block when the ring is full (the backpressure
+//! half of the control plane) and fail fast once the actor is poisoned.
+//! All envelope reads/writes happen under the lock; executing a message
+//! never does.
+
+use std::mem::{align_of, size_of, ManuallyDrop, MaybeUninit};
+use std::sync::{Arc, Condvar, Mutex};
+
+use super::telemetry::ActorTelemetry;
+
+/// Inline payload bytes per envelope.  Large enough for every
+/// steady-state message the dataflow layer sends (a plan `Arc`, a queue
+/// handle, tags/guards, a recycled `ImpalaBatch` riding to the
+/// learner); closures that exceed it are boxed — a cold path (e.g. a
+/// whole `SampleBatch` moved by value into a train call, once per
+/// train batch, not per item).
+pub(crate) const INLINE_PAYLOAD: usize = 256;
+
+/// Default mailbox capacity for [`super::ActorHandle::spawn`].
+pub const DEFAULT_MAILBOX_CAPACITY: usize = 256;
+
+#[repr(align(16))]
+struct PayloadBuf(MaybeUninit<[u8; INLINE_PAYLOAD]>);
+
+type BoxedMsg<A> = Box<dyn FnOnce(&mut A) + Send>;
+
+/// A type-erased `FnOnce(&mut A)` stored inline (or, oversized, as a
+/// boxed thunk whose pointer is stored inline).
+pub(crate) struct Envelope<A> {
+    call: unsafe fn(*mut u8, &mut A),
+    drop: unsafe fn(*mut u8),
+    payload: PayloadBuf,
+}
+
+unsafe fn call_inline<A, F: FnOnce(&mut A)>(p: *mut u8, state: &mut A) {
+    // Moves the closure out of the slot and consumes it.
+    (p as *mut F).read()(state)
+}
+
+unsafe fn drop_inline<F>(p: *mut u8) {
+    drop((p as *mut F).read())
+}
+
+unsafe fn call_boxed<A>(p: *mut u8, state: &mut A) {
+    ((p as *mut BoxedMsg<A>).read())(state)
+}
+
+unsafe fn drop_boxed<A>(p: *mut u8) {
+    drop((p as *mut BoxedMsg<A>).read())
+}
+
+impl<A> Envelope<A> {
+    pub(crate) fn new<F>(f: F) -> Self
+    where
+        F: FnOnce(&mut A) + Send + 'static,
+    {
+        let mut payload = PayloadBuf(MaybeUninit::uninit());
+        let base = payload.0.as_mut_ptr() as *mut u8;
+        if size_of::<F>() <= INLINE_PAYLOAD
+            && align_of::<F>() <= align_of::<PayloadBuf>()
+        {
+            // Safety: the buffer is large and aligned enough for F, and
+            // ownership of `f` transfers into the slot (tracked by the
+            // call/drop fn pair).
+            unsafe { std::ptr::write(base as *mut F, f) };
+            Envelope {
+                call: call_inline::<A, F>,
+                drop: drop_inline::<F>,
+                payload,
+            }
+        } else {
+            let boxed: BoxedMsg<A> = Box::new(f);
+            unsafe { std::ptr::write(base as *mut BoxedMsg<A>, boxed) };
+            Envelope {
+                call: call_boxed::<A>,
+                drop: drop_boxed::<A>,
+                payload,
+            }
+        }
+    }
+
+    /// Execute the message, consuming the payload.
+    pub(crate) fn invoke(self, state: &mut A) {
+        let mut this = ManuallyDrop::new(self);
+        let base = this.payload.0.as_mut_ptr() as *mut u8;
+        // Safety: `self` is ManuallyDrop'd, so the payload is consumed
+        // exactly once (by the call fn's ptr::read).
+        unsafe { (this.call)(base, state) }
+    }
+}
+
+impl<A> Drop for Envelope<A> {
+    fn drop(&mut self) {
+        // A dropped-without-invoke envelope (poison drain, dead-actor
+        // send) still runs the closure's destructor, which fires any
+        // reply/completion guards captured inside it.
+        let base = self.payload.0.as_mut_ptr() as *mut u8;
+        unsafe { (self.drop)(base) }
+    }
+}
+
+/// The ring itself; lives inside `Shared::ring` and is only touched
+/// under that mutex.
+pub(crate) struct Ring<A> {
+    slots: Box<[MaybeUninit<Envelope<A>>]>,
+    head: usize,
+    len: usize,
+    /// Set (under the lock) when the actor panicked; no further sends
+    /// are accepted.
+    pub(crate) poisoned: bool,
+    /// Live `ActorHandle` count; the actor thread exits when this hits
+    /// zero and the ring drains.
+    pub(crate) senders: usize,
+}
+
+impl<A> Ring<A> {
+    fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1, "mailbox capacity must be >= 1");
+        let slots: Box<[MaybeUninit<Envelope<A>>]> =
+            (0..capacity).map(|_| MaybeUninit::uninit()).collect();
+        Ring { slots, head: 0, len: 0, poisoned: false, senders: 0 }
+    }
+
+    fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    fn is_full(&self) -> bool {
+        self.len == self.slots.len()
+    }
+
+    fn push(&mut self, env: Envelope<A>) {
+        debug_assert!(!self.is_full());
+        let idx = (self.head + self.len) % self.slots.len();
+        self.slots[idx] = MaybeUninit::new(env);
+        self.len += 1;
+    }
+
+    fn pop(&mut self) -> Option<Envelope<A>> {
+        if self.len == 0 {
+            return None;
+        }
+        // Safety: slots in [head, head+len) are initialized; the slot is
+        // logically vacated before the read value escapes.
+        let env = unsafe { self.slots[self.head].assume_init_read() };
+        self.head = (self.head + 1) % self.slots.len();
+        self.len -= 1;
+        Some(env)
+    }
+}
+
+impl<A> Drop for Ring<A> {
+    fn drop(&mut self) {
+        while let Some(env) = self.pop() {
+            drop(env);
+        }
+    }
+}
+
+/// Why a non-blocking send did not enqueue.  The message is dropped in
+/// both cases (firing any guards it captured).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TryCastError {
+    /// The mailbox is at capacity — backpressure.
+    Full,
+    /// The actor is poisoned (its thread panicked).
+    Dead,
+}
+
+/// State shared between every handle and the actor thread.
+pub(crate) struct Shared<A> {
+    ring: Mutex<Ring<A>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    pub(crate) telemetry: Arc<ActorTelemetry>,
+}
+
+impl<A> Shared<A> {
+    pub(crate) fn new(capacity: usize, telemetry: Arc<ActorTelemetry>) -> Self {
+        Shared {
+            ring: Mutex::new(Ring::new(capacity)),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            telemetry,
+        }
+    }
+
+    pub(crate) fn capacity(&self) -> usize {
+        self.ring.lock().unwrap().capacity()
+    }
+
+    /// Blocking send: parks while the ring is full.  `Err` returns the
+    /// envelope (actor poisoned) so the caller decides how to dispose of
+    /// it — dropping it fires its guards.
+    pub(crate) fn send(&self, env: Envelope<A>) -> Result<(), Envelope<A>> {
+        let mut ring = self.ring.lock().unwrap();
+        loop {
+            if ring.poisoned {
+                drop(ring);
+                return Err(env);
+            }
+            if !ring.is_full() {
+                ring.push(env);
+                self.telemetry.note_enqueue(ring.len);
+                drop(ring);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            ring = self.not_full.wait(ring).unwrap();
+        }
+    }
+
+    /// Non-blocking send.
+    pub(crate) fn try_send(
+        &self,
+        env: Envelope<A>,
+    ) -> Result<(), (Envelope<A>, TryCastError)> {
+        let mut ring = self.ring.lock().unwrap();
+        if ring.poisoned {
+            drop(ring);
+            return Err((env, TryCastError::Dead));
+        }
+        if ring.is_full() {
+            drop(ring);
+            return Err((env, TryCastError::Full));
+        }
+        ring.push(env);
+        self.telemetry.note_enqueue(ring.len);
+        drop(ring);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Consumer side: next message, or `None` when every handle is gone
+    /// and the ring has drained (clean shutdown).
+    pub(crate) fn recv(&self) -> Option<Envelope<A>> {
+        let mut ring = self.ring.lock().unwrap();
+        loop {
+            if let Some(env) = ring.pop() {
+                self.telemetry.note_dequeue(ring.len);
+                drop(ring);
+                self.not_full.notify_one();
+                return Some(env);
+            }
+            if ring.senders == 0 {
+                return None;
+            }
+            ring = self.not_empty.wait(ring).unwrap();
+        }
+    }
+
+    /// Mark the actor poisoned, reject all future sends, and drop every
+    /// queued envelope (firing their guards, which is how pending
+    /// callers learn of the death).  Called by the actor thread after a
+    /// message or init panic.
+    pub(crate) fn poison(&self) {
+        let drained: Vec<Envelope<A>> = {
+            let mut ring = self.ring.lock().unwrap();
+            ring.poisoned = true;
+            let mut v = Vec::with_capacity(ring.len);
+            while let Some(env) = ring.pop() {
+                v.push(env);
+            }
+            v
+        };
+        self.telemetry.note_poisoned();
+        self.not_full.notify_all();
+        self.not_empty.notify_all();
+        // Guards run outside the ring lock: they take reply/queue locks
+        // of their own.
+        drop(drained);
+    }
+
+    pub(crate) fn is_poisoned(&self) -> bool {
+        self.ring.lock().unwrap().poisoned
+    }
+
+    pub(crate) fn add_sender(&self) {
+        self.ring.lock().unwrap().senders += 1;
+    }
+
+    pub(crate) fn remove_sender(&self) {
+        let mut ring = self.ring.lock().unwrap();
+        ring.senders -= 1;
+        let last = ring.senders == 0;
+        drop(ring);
+        if last {
+            // Wake the consumer so it can observe shutdown.
+            self.not_empty.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn telemetry() -> Arc<ActorTelemetry> {
+        Arc::new(ActorTelemetry::new("t", 0))
+    }
+
+    #[test]
+    fn envelope_roundtrips_inline_closure() {
+        let mut x = 10i32;
+        let env = Envelope::new(|state: &mut i32| *state += 5);
+        env.invoke(&mut x);
+        assert_eq!(x, 15);
+    }
+
+    #[test]
+    fn envelope_boxes_oversized_closures() {
+        // Capture > INLINE_PAYLOAD bytes to force the boxed path.
+        let big = [7u8; INLINE_PAYLOAD + 64];
+        let env = Envelope::new(move |state: &mut u64| {
+            *state = big.iter().map(|&b| b as u64).sum();
+        });
+        let mut x = 0u64;
+        env.invoke(&mut x);
+        assert_eq!(x, 7 * (INLINE_PAYLOAD as u64 + 64));
+    }
+
+    #[test]
+    fn dropped_envelope_runs_closure_destructor() {
+        struct Bomb(Arc<AtomicUsize>);
+        impl Drop for Bomb {
+            fn drop(&mut self) {
+                self.0.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        let hits = Arc::new(AtomicUsize::new(0));
+        let bomb = Bomb(hits.clone());
+        let env = Envelope::new(move |_: &mut i32| {
+            let _keep = &bomb;
+        });
+        drop(env);
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn ring_is_fifo_and_bounded() {
+        let shared: Shared<Vec<i32>> = Shared::new(4, telemetry());
+        for i in 0..4 {
+            shared
+                .send(Envelope::new(move |v: &mut Vec<i32>| v.push(i)))
+                .ok()
+                .unwrap();
+        }
+        // Full now.
+        let env = Envelope::new(|v: &mut Vec<i32>| v.push(99));
+        assert!(matches!(
+            shared.try_send(env),
+            Err((_, TryCastError::Full))
+        ));
+        let mut state = Vec::new();
+        {
+            let mut ring = shared.ring.lock().unwrap();
+            ring.senders = 0;
+        }
+        while let Some(env) = shared.recv() {
+            env.invoke(&mut state);
+        }
+        assert_eq!(state, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn poison_rejects_sends_and_drains() {
+        let shared: Shared<i32> = Shared::new(8, telemetry());
+        shared.send(Envelope::new(|x: &mut i32| *x += 1)).ok().unwrap();
+        shared.poison();
+        assert!(shared.is_poisoned());
+        assert!(shared.send(Envelope::new(|x: &mut i32| *x += 1)).is_err());
+        assert!(matches!(
+            shared.try_send(Envelope::new(|x: &mut i32| *x += 1)),
+            Err((_, TryCastError::Dead))
+        ));
+    }
+}

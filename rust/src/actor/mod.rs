@@ -1,13 +1,33 @@
 //! Actor runtime — the substrate the paper gets from Ray.
 //!
 //! Each actor owns mutable state on a dedicated OS thread; callers send
-//! closures ("method calls") through an unbounded mailbox and either
-//! block on a typed reply (`call`, Ray's `actor.method.remote()` +
-//! `ray.get`), hold a deferred reply handle (`call_deferred`, a Ray
-//! object ref — the building block for `ray.wait`-style pipelining), or
-//! fire-and-forget (`cast`).  Messages from one sender execute in send
-//! order — the ordering guarantee RLlib Flow's barrier semantics build
-//! on (paper §4, Creation and Message Passing).
+//! closures ("method calls") through a **bounded ring mailbox** and
+//! either block on a typed reply (`call`, Ray's `actor.method.remote()`
+//! + `ray.get`), hold a deferred reply handle (`call_deferred`, a Ray
+//! object ref), deliver into a shared [`CompletionQueue`] (`call_into`,
+//! the batched-`ray.wait` primitive behind `gather_async`), or
+//! fire-and-forget (`cast` / `try_cast`).  Messages from one sender
+//! execute in send order — the ordering guarantee RLlib Flow's barrier
+//! semantics build on (paper §4, Creation and Message Passing).
+//!
+//! Three properties distinguish this runtime from the seed version:
+//!
+//! * **Zero-allocation steady state** — a send writes the closure into a
+//!   preallocated envelope slot (see [`mailbox`]); no per-message `Box`,
+//!   no channel node.  `call` parks on a stack-held reply cell.  The
+//!   mailbox is bounded, so a producer that outruns its consumer blocks
+//!   (`cast`) or observes `Full` (`try_cast`) instead of growing a heap
+//!   queue without limit.
+//! * **Supervision** — a panic in an actor's init or in any message
+//!   poisons the actor instead of tearing down the driver: queued and
+//!   future messages are dropped, every pending reply resolves to
+//!   [`ActorDied`], and the handle reports [`ActorHandle::is_poisoned`]
+//!   so owners (e.g. `WorkerSet::restart_dead`) can respawn it.
+//! * **Telemetry** — every actor exports queue depth (current/high
+//!   water), messages processed, and busy/idle time through a global
+//!   registry ([`all_actor_stats`]); `StandardMetricsReporting` folds
+//!   these into each train result so a starved pipeline stage is
+//!   visible, not inferred.
 //!
 //! Actor state is constructed *inside* the actor thread from a factory
 //! closure: PJRT clients (`xla::PjRtClient` wraps an `Rc`) are not
@@ -15,24 +35,201 @@
 //! compiles its own executables — mirroring the paper's process model,
 //! where each Ray actor holds its own TF session.
 
+mod mailbox;
+mod queue;
+mod telemetry;
+
+pub use mailbox::{TryCastError, DEFAULT_MAILBOX_CAPACITY};
+pub use queue::{Completion, CompletionQueue};
+pub use telemetry::{all_actor_stats, ActorStatsSnapshot, ActorTelemetry};
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use mailbox::{Envelope, Shared};
+use queue::CqGuard;
 
 static NEXT_ACTOR_ID: AtomicU64 = AtomicU64::new(0);
 
-type Envelope<A> = Box<dyn FnOnce(&mut A) + Send>;
+/// The error every blocking interaction with a poisoned actor resolves
+/// to: the actor's thread panicked (or its init did) and the message
+/// did not run to completion.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ActorDied {
+    /// `name#id` of the dead actor.
+    pub actor: String,
+}
+
+impl std::fmt::Display for ActorDied {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "actor {} died (panicked)", self.actor)
+    }
+}
+
+impl std::error::Error for ActorDied {}
+
+// ---------------------------------------------------------------------
+// Reply plumbing
+// ---------------------------------------------------------------------
+
+enum ReplyState<R> {
+    Waiting,
+    Done(R),
+    Dropped,
+}
+
+/// A one-shot rendezvous cell.  Used on the caller's stack by `call`
+/// (zero allocation) and behind an `Arc` by `call_deferred`.
+struct ReplyCell<R> {
+    state: Mutex<ReplyState<R>>,
+    cv: Condvar,
+}
+
+impl<R> ReplyCell<R> {
+    fn new() -> Self {
+        ReplyCell { state: Mutex::new(ReplyState::Waiting), cv: Condvar::new() }
+    }
+
+    /// First terminal write wins; wakes all waiters.
+    fn fulfill(&self, terminal: ReplyState<R>) {
+        let mut st = self.state.lock().unwrap();
+        if matches!(*st, ReplyState::Waiting) {
+            *st = terminal;
+            self.cv.notify_all();
+        }
+    }
+
+    /// Block until terminal; `None` means the message died unexecuted.
+    fn wait_take(&self) -> Option<R> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            match &*st {
+                ReplyState::Waiting => st = self.cv.wait(st).unwrap(),
+                ReplyState::Dropped => return None,
+                ReplyState::Done(_) => {
+                    match std::mem::replace(&mut *st, ReplyState::Dropped) {
+                        ReplyState::Done(r) => return Some(r),
+                        _ => unreachable!(),
+                    }
+                }
+            }
+        }
+    }
+
+    fn try_take(&self) -> Option<Option<R>> {
+        let mut st = self.state.lock().unwrap();
+        match &*st {
+            ReplyState::Waiting => None,
+            ReplyState::Dropped => Some(None),
+            ReplyState::Done(_) => {
+                match std::mem::replace(&mut *st, ReplyState::Dropped) {
+                    ReplyState::Done(r) => Some(Some(r)),
+                    _ => unreachable!(),
+                }
+            }
+        }
+    }
+}
+
+/// Travels inside a `call` message; points at the caller's stack cell.
+///
+/// Safety contract: `call` does not return (so the cell stays alive)
+/// until the cell reaches a terminal state, and both paths out of this
+/// guard (`complete`, `Drop`) write a terminal state exactly once and
+/// never touch the cell afterwards.
+struct StackReplyGuard<R: Send> {
+    cell: *const ReplyCell<R>,
+    armed: bool,
+}
+
+unsafe impl<R: Send> Send for StackReplyGuard<R> {}
+
+impl<R: Send> StackReplyGuard<R> {
+    fn complete(mut self, value: R) {
+        self.armed = false;
+        unsafe { (*self.cell).fulfill(ReplyState::Done(value)) };
+    }
+}
+
+impl<R: Send> Drop for StackReplyGuard<R> {
+    fn drop(&mut self) {
+        if self.armed {
+            unsafe { (*self.cell).fulfill(ReplyState::Dropped) };
+        }
+    }
+}
+
+/// Travels inside a `call_deferred` message; owns a share of the cell.
+struct ArcReplyGuard<R> {
+    cell: Arc<ReplyCell<R>>,
+    armed: bool,
+}
+
+impl<R> ArcReplyGuard<R> {
+    fn complete(mut self, value: R) {
+        self.armed = false;
+        self.cell.fulfill(ReplyState::Done(value));
+    }
+}
+
+impl<R> Drop for ArcReplyGuard<R> {
+    fn drop(&mut self) {
+        if self.armed {
+            self.cell.fulfill(ReplyState::Dropped);
+        }
+    }
+}
+
+/// A pending reply (Ray object ref).  `recv()` blocks until the actor
+/// has executed the call — or reports [`ActorDied`] if it never will.
+pub struct Reply<R> {
+    cell: Arc<ReplyCell<R>>,
+    actor: Arc<str>,
+}
+
+impl<R> Reply<R> {
+    pub fn recv(self) -> Result<R, ActorDied> {
+        self.cell
+            .wait_take()
+            .ok_or_else(|| ActorDied { actor: self.actor.to_string() })
+    }
+
+    /// `None` while pending; `Some(Err)` once the actor is known dead.
+    pub fn try_recv(&self) -> Option<Result<R, ActorDied>> {
+        self.cell.try_take().map(|opt| {
+            opt.ok_or_else(|| ActorDied { actor: self.actor.to_string() })
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// The handle
+// ---------------------------------------------------------------------
 
 /// A handle to an actor with state type `A`.  Cloneable; the actor
 /// thread exits when every handle is dropped and the mailbox drains.
 pub struct ActorHandle<A> {
-    tx: mpsc::Sender<Envelope<A>>,
+    shared: Arc<Shared<A>>,
     id: u64,
     name: Arc<str>,
 }
 
 impl<A> Clone for ActorHandle<A> {
     fn clone(&self) -> Self {
-        ActorHandle { tx: self.tx.clone(), id: self.id, name: self.name.clone() }
+        self.shared.add_sender();
+        ActorHandle {
+            shared: self.shared.clone(),
+            id: self.id,
+            name: self.name.clone(),
+        }
+    }
+}
+
+impl<A> Drop for ActorHandle<A> {
+    fn drop(&mut self) {
+        self.shared.remove_sender();
     }
 }
 
@@ -42,85 +239,136 @@ impl<A> std::fmt::Debug for ActorHandle<A> {
     }
 }
 
-/// A pending reply (Ray object ref).  `recv()` blocks until the actor
-/// has executed the call.
-pub struct Reply<R>(mpsc::Receiver<R>);
-
-impl<R> Reply<R> {
-    pub fn recv(self) -> R {
-        self.0.recv().expect("actor dropped reply (actor panicked?)")
-    }
-
-    pub fn try_recv(&self) -> Option<R> {
-        self.0.try_recv().ok()
-    }
-}
-
 impl<A: 'static> ActorHandle<A> {
-    /// Spawn an actor whose state is built by `init` on the actor thread.
+    /// Spawn an actor whose state is built by `init` on the actor
+    /// thread, with the default mailbox capacity.
     pub fn spawn<F>(name: &str, init: F) -> Self
     where
         F: FnOnce() -> A + Send + 'static,
     {
-        let (tx, rx) = mpsc::channel::<Envelope<A>>();
-        let id = NEXT_ACTOR_ID.fetch_add(1, Ordering::Relaxed);
-        std::thread::Builder::new()
-            .name(format!("{name}#{id}"))
-            .spawn(move || {
-                let mut state = init();
-                while let Ok(msg) = rx.recv() {
-                    msg(&mut state);
-                }
-            })
-            .expect("failed to spawn actor thread");
-        ActorHandle { tx, id, name: Arc::from(name) }
+        Self::spawn_with_capacity(name, DEFAULT_MAILBOX_CAPACITY, init)
     }
 
-    /// Call a method and block for its result.
-    pub fn call<R, F>(&self, f: F) -> R
+    /// Spawn with an explicit mailbox capacity (the backpressure bound:
+    /// senders block once `capacity` messages are queued).
+    pub fn spawn_with_capacity<F>(name: &str, capacity: usize, init: F) -> Self
+    where
+        F: FnOnce() -> A + Send + 'static,
+    {
+        let id = NEXT_ACTOR_ID.fetch_add(1, Ordering::Relaxed);
+        let telemetry = Arc::new(ActorTelemetry::new(name, id));
+        telemetry::register(&telemetry);
+        let shared = Arc::new(Shared::new(capacity, telemetry));
+        shared.add_sender(); // the handle returned below
+        let thread_shared = shared.clone();
+        std::thread::Builder::new()
+            .name(format!("{name}#{id}"))
+            .spawn(move || run_actor(thread_shared, init))
+            .expect("failed to spawn actor thread");
+        ActorHandle { shared, id, name: Arc::from(name) }
+    }
+
+    fn died(&self) -> ActorDied {
+        ActorDied { actor: format!("{}#{}", self.name, self.id) }
+    }
+
+    /// Call a method and block for its result.  The reply cell lives on
+    /// this stack frame — no allocation on the steady-state path.
+    pub fn call<R, F>(&self, f: F) -> Result<R, ActorDied>
     where
         R: Send + 'static,
         F: FnOnce(&mut A) -> R + Send + 'static,
     {
-        self.call_deferred(f).recv()
+        let cell = ReplyCell::new();
+        let guard = StackReplyGuard { cell: &cell, armed: true };
+        let env = Envelope::new(move |state: &mut A| {
+            let guard = guard;
+            let r = f(state);
+            guard.complete(r);
+        });
+        if let Err(env) = self.shared.send(env) {
+            // Dead actor: dropping the envelope fires the guard, which
+            // resolves the cell to Dropped below.
+            drop(env);
+        }
+        cell.wait_take().ok_or_else(|| self.died())
     }
 
     /// Queue a call, returning a deferred reply handle.  Lets a caller
     /// keep several requests in flight per actor (the paper's
-    /// `num_async` pipelining).
+    /// `num_async` pipelining).  Allocates the shared reply cell; hot
+    /// per-item paths use `call`/`call_into` instead.
     pub fn call_deferred<R, F>(&self, f: F) -> Reply<R>
     where
         R: Send + 'static,
         F: FnOnce(&mut A) -> R + Send + 'static,
     {
-        let (otx, orx) = mpsc::sync_channel(1);
-        self.tx
-            .send(Box::new(move |state| {
-                let _ = otx.send(f(state));
-            }))
-            .unwrap_or_else(|_| panic!("actor {} died", self.name));
-        Reply(orx)
+        let cell = Arc::new(ReplyCell::new());
+        let guard = ArcReplyGuard { cell: cell.clone(), armed: true };
+        let env = Envelope::new(move |state: &mut A| {
+            let guard = guard;
+            let r = f(state);
+            guard.complete(r);
+        });
+        if let Err(env) = self.shared.send(env) {
+            drop(env);
+        }
+        Reply {
+            cell,
+            actor: Arc::from(format!("{}#{}", self.name, self.id)),
+        }
     }
 
-    /// Queue a call whose result is delivered into a shared channel,
-    /// tagged with this submission's `tag` — the completion-queue
+    /// Queue a call whose result is delivered into a shared
+    /// [`CompletionQueue`], tagged with `tag` — the completion-queue
     /// primitive behind `gather_async` (Ray's `ray.wait` analog).
-    pub fn call_into<R, F>(&self, tag: usize, out: mpsc::Sender<(usize, R)>, f: F)
+    ///
+    /// Exactly one completion is guaranteed per submission: the value,
+    /// or a [`Completion::Dropped`] death notice if the actor dies
+    /// before (or while) executing it.  The delivery push respects the
+    /// queue's bound, so a slow consumer backpressures the actor.
+    pub fn call_into<R, F>(&self, tag: usize, out: &CompletionQueue<R>, f: F)
     where
         R: Send + 'static,
         F: FnOnce(&mut A) -> R + Send + 'static,
     {
-        let _ = self.tx.send(Box::new(move |state| {
-            let _ = out.send((tag, f(state)));
-        }));
+        let guard = CqGuard::new(out.clone(), tag);
+        let env = Envelope::new(move |state: &mut A| {
+            let guard = guard;
+            let r = f(state);
+            guard.complete(r);
+        });
+        if let Err(env) = self.shared.send(env) {
+            drop(env); // fires the guard -> Dropped notice
+        }
     }
 
     /// Fire-and-forget message (Ray `x.remote()` without `get`).
+    /// Blocks while the mailbox is full; silently dropped if the actor
+    /// is dead.
     pub fn cast<F>(&self, f: F)
     where
         F: FnOnce(&mut A) + Send + 'static,
     {
-        let _ = self.tx.send(Box::new(f));
+        if let Err(env) = self.shared.send(Envelope::new(f)) {
+            drop(env);
+        }
+    }
+
+    /// Non-blocking fire-and-forget.  On `Err` the message is dropped:
+    /// [`TryCastError::Full`] is the backpressure signal, `Dead` means
+    /// the actor is poisoned.
+    pub fn try_cast<F>(&self, f: F) -> Result<(), TryCastError>
+    where
+        F: FnOnce(&mut A) + Send + 'static,
+    {
+        match self.shared.try_send(Envelope::new(f)) {
+            Ok(()) => Ok(()),
+            Err((env, e)) => {
+                drop(env);
+                Err(e)
+            }
+        }
     }
 
     pub fn id(&self) -> u64 {
@@ -129,6 +377,75 @@ impl<A: 'static> ActorHandle<A> {
 
     pub fn name(&self) -> &str {
         &self.name
+    }
+
+    /// True once the actor's thread has panicked; pending/future
+    /// messages resolve to [`ActorDied`].
+    ///
+    /// Poisoning is published by the actor thread *after* the failing
+    /// message unwinds, so a caller that just received [`ActorDied`]
+    /// from the panicking call itself may observe `false` for a brief
+    /// moment; use [`ActorHandle::await_poisoned`] when acting on a
+    /// just-observed death (e.g. before `WorkerSet::restart_dead`).
+    pub fn is_poisoned(&self) -> bool {
+        self.shared.telemetry.is_poisoned()
+    }
+
+    /// Block (polling) until the poisoned flag is visible or `timeout`
+    /// elapses; returns the final `is_poisoned()` state.
+    pub fn await_poisoned(&self, timeout: std::time::Duration) -> bool {
+        let start = Instant::now();
+        loop {
+            if self.is_poisoned() {
+                return true;
+            }
+            if start.elapsed() >= timeout {
+                return false;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+    }
+
+    /// Point-in-time telemetry for this actor.
+    pub fn stats(&self) -> ActorStatsSnapshot {
+        self.shared.telemetry.snapshot()
+    }
+
+    pub fn mailbox_capacity(&self) -> usize {
+        self.shared.capacity()
+    }
+}
+
+/// The supervised actor loop: build state, execute messages, and on any
+/// panic poison the mailbox instead of unwinding into `abort`/driver.
+fn run_actor<A, F>(shared: Arc<Shared<A>>, init: F)
+where
+    F: FnOnce() -> A,
+{
+    let mut state = match catch_unwind(AssertUnwindSafe(init)) {
+        Ok(s) => s,
+        Err(_) => {
+            shared.poison();
+            return;
+        }
+    };
+    loop {
+        let idle_start = Instant::now();
+        let Some(env) = shared.recv() else { break };
+        shared
+            .telemetry
+            .note_idle(idle_start.elapsed().as_nanos() as u64);
+        let busy_start = Instant::now();
+        let outcome = catch_unwind(AssertUnwindSafe(|| env.invoke(&mut state)));
+        if outcome.is_err() {
+            // Publish the death before anything else; the panicking
+            // message's own reply already resolved during unwind.
+            shared.poison();
+            return;
+        }
+        shared
+            .telemetry
+            .note_busy(busy_start.elapsed().as_nanos() as u64);
     }
 }
 
@@ -160,10 +477,12 @@ mod tests {
     #[test]
     fn call_returns_result() {
         let h = ActorHandle::spawn("counter", || Counter { value: 0 });
-        let v = h.call(|c| {
-            c.value += 5;
-            c.value
-        });
+        let v = h
+            .call(|c| {
+                c.value += 5;
+                c.value
+            })
+            .unwrap();
         assert_eq!(v, 5);
     }
 
@@ -174,14 +493,14 @@ mod tests {
             h.cast(|c| c.value += 1);
         }
         h.cast(|c| c.value *= 2);
-        assert_eq!(h.call(|c| c.value), 200);
+        assert_eq!(h.call(|c| c.value).unwrap(), 200);
     }
 
     #[test]
     fn state_initialized_on_actor_thread() {
         let h = ActorHandle::spawn("t", || std::thread::current().id());
-        let init_tid = h.call(|tid| *tid);
-        let call_tid = h.call(|_| std::thread::current().id());
+        let init_tid = h.call(|tid| *tid).unwrap();
+        let call_tid = h.call(|_| std::thread::current().id()).unwrap();
         assert_eq!(init_tid, call_tid);
         assert_ne!(init_tid, std::thread::current().id());
     }
@@ -197,19 +516,23 @@ mod tests {
             c.value += 1;
             c.value
         });
-        assert_eq!(f1.recv(), 1);
-        assert_eq!(f2.recv(), 2);
+        assert_eq!(f1.recv().unwrap(), 1);
+        assert_eq!(f2.recv().unwrap(), 2);
     }
 
     #[test]
     fn call_into_tags_completions() {
         let h1 = ActorHandle::spawn("a", || Counter { value: 10 });
         let h2 = ActorHandle::spawn("b", || Counter { value: 20 });
-        let (tx, rx) = mpsc::channel();
-        h1.call_into(0, tx.clone(), |c| c.value);
-        h2.call_into(1, tx.clone(), |c| c.value);
-        drop(tx);
-        let mut got: Vec<(usize, i64)> = rx.iter().collect();
+        let q = CompletionQueue::bounded(4);
+        h1.call_into(0, &q, |c| c.value);
+        h2.call_into(1, &q, |c| c.value);
+        let mut got: Vec<(usize, i64)> = (0..2)
+            .map(|_| match q.pop() {
+                Completion::Item { tag, value } => (tag, value),
+                Completion::Dropped { tag } => panic!("dropped {tag}"),
+            })
+            .collect();
         got.sort();
         assert_eq!(got, vec![(0, 10), (1, 20)]);
     }
@@ -219,7 +542,7 @@ mod tests {
         let group =
             spawn_group("w", 4, |i| Box::new(move || Counter { value: i as i64 }));
         let values: Vec<i64> =
-            group.iter().map(|h| h.call(|c| c.value)).collect();
+            group.iter().map(|h| h.call(|c| c.value).unwrap()).collect();
         assert_eq!(values, vec![0, 1, 2, 3]);
         let ids: std::collections::HashSet<_> =
             group.iter().map(|h| h.id()).collect();
@@ -232,7 +555,7 @@ mod tests {
         let h2 = h.clone();
         h.cast(|c| c.value += 1);
         h2.cast(|c| c.value += 1);
-        assert_eq!(h.call(|c| c.value), 2);
+        assert_eq!(h.call(|c| c.value).unwrap(), 2);
     }
 
     #[test]
@@ -247,8 +570,136 @@ mod tests {
         let f2 = h2.call_deferred(|_| {
             std::thread::sleep(std::time::Duration::from_millis(100))
         });
-        f1.recv();
-        f2.recv();
+        f1.recv().unwrap();
+        f2.recv().unwrap();
         assert!(start.elapsed() < std::time::Duration::from_millis(180));
+    }
+
+    // -----------------------------------------------------------------
+    // Supervision
+    // -----------------------------------------------------------------
+
+    #[test]
+    fn panic_poisons_instead_of_crashing() {
+        let h = ActorHandle::spawn("doomed", || Counter { value: 0 });
+        assert!(!h.is_poisoned());
+        let r = h.call(|_c| -> i64 { panic!("worker exploded") });
+        assert!(r.is_err());
+        // The poisoned flag is published by the actor thread right
+        // after the failing reply; wait for it rather than racing it.
+        assert!(h.await_poisoned(std::time::Duration::from_secs(2)));
+        // Subsequent interactions surface the death, not a panic.
+        let err = h.call(|c| c.value).unwrap_err();
+        assert!(err.actor.starts_with("doomed#"), "{err}");
+        h.cast(|c| c.value += 1); // silently dropped
+        assert!(h.call_deferred(|c| c.value).recv().is_err());
+        assert_eq!(h.try_cast(|_| {}), Err(TryCastError::Dead));
+    }
+
+    #[test]
+    fn init_panic_poisons() {
+        let h: ActorHandle<Counter> =
+            ActorHandle::spawn("stillborn", || panic!("bad init"));
+        assert!(h.call(|c| c.value).is_err());
+        assert!(h.await_poisoned(std::time::Duration::from_secs(2)));
+    }
+
+    #[test]
+    fn pending_messages_resolve_on_death() {
+        // Queue several deferred calls behind a panicking one: all of
+        // them must resolve to Err, none may hang.
+        let h = ActorHandle::spawn("chain", || Counter { value: 0 });
+        let slow = h.call_deferred(|_| {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+        });
+        let boom = h.call_deferred(|_| -> i64 { panic!("boom") });
+        let after1 = h.call_deferred(|c| c.value);
+        let after2 = h.call_deferred(|c| c.value);
+        assert!(slow.recv().is_ok());
+        assert!(boom.recv().is_err());
+        assert!(after1.recv().is_err());
+        assert!(after2.recv().is_err());
+    }
+
+    #[test]
+    fn call_into_delivers_death_notice() {
+        let h = ActorHandle::spawn("cq-doomed", || Counter { value: 0 });
+        let q: CompletionQueue<i64> = CompletionQueue::bounded(4);
+        h.call_into(3, &q, |_| -> i64 { panic!("die mid-call") });
+        h.call_into(4, &q, |c| c.value); // behind the panic -> dropped
+        let mut tags: Vec<usize> = (0..2)
+            .map(|_| match q.pop() {
+                Completion::Dropped { tag } => tag,
+                Completion::Item { tag, .. } => {
+                    panic!("unexpected item from tag {tag}")
+                }
+            })
+            .collect();
+        tags.sort();
+        assert_eq!(tags, vec![3, 4]);
+    }
+
+    // -----------------------------------------------------------------
+    // Backpressure
+    // -----------------------------------------------------------------
+
+    #[test]
+    fn try_cast_reports_full_mailbox() {
+        let h = ActorHandle::spawn_with_capacity("tiny", 2, || {
+            Counter { value: 0 }
+        });
+        // Occupy the actor so the mailbox can fill.
+        let gate = h.call_deferred(|_| {
+            std::thread::sleep(std::time::Duration::from_millis(50));
+        });
+        // The actor may or may not have dequeued the gate yet; fill
+        // until Full is observed.
+        let mut saw_full = false;
+        for _ in 0..8 {
+            if h.try_cast(|c| c.value += 1) == Err(TryCastError::Full) {
+                saw_full = true;
+                break;
+            }
+        }
+        assert!(saw_full, "bounded mailbox never reported Full");
+        gate.recv().unwrap();
+        assert_eq!(h.mailbox_capacity(), 2);
+    }
+
+    #[test]
+    fn blocking_cast_applies_backpressure_not_loss() {
+        let h = ActorHandle::spawn_with_capacity("slowbox", 4, || {
+            Counter { value: 0 }
+        });
+        for _ in 0..64 {
+            h.cast(|c| c.value += 1); // blocks rather than drops
+        }
+        assert_eq!(h.call(|c| c.value).unwrap(), 64);
+    }
+
+    // -----------------------------------------------------------------
+    // Telemetry
+    // -----------------------------------------------------------------
+
+    #[test]
+    fn stats_count_messages_and_depth() {
+        let h = ActorHandle::spawn("metered", || Counter { value: 0 });
+        let gate = h.call_deferred(|_| {
+            std::thread::sleep(std::time::Duration::from_millis(30));
+        });
+        for _ in 0..5 {
+            h.cast(|c| c.value += 1);
+        }
+        gate.recv().unwrap();
+        let final_v = h.call(|c| c.value).unwrap();
+        assert_eq!(final_v, 5);
+        let s = h.stats();
+        // gate + 5 casts + 1 call.
+        assert_eq!(s.messages_processed, 7);
+        assert!(s.queue_hwm >= 1, "casts queued behind the gate");
+        assert!(s.busy_ns > 0);
+        assert!(!s.poisoned);
+        // The global registry sees this actor too.
+        assert!(all_actor_stats().iter().any(|a| a.id == h.id()));
     }
 }

@@ -1,0 +1,315 @@
+//! The shared completion queue — the `ray.wait` analog every sequencing
+//! operator rides.
+//!
+//! Producers (actor threads executing `call_into` messages, or `union`
+//! driver threads) push tagged values; one consumer pops them in
+//! completion order.  The queue is **bounded**: a push blocks while the
+//! queue is at capacity (or, in per-tag mode, while that tag's credit is
+//! exhausted), which is what turns `num_async` and `Union::buffer` from
+//! best-effort hints into real flow-control knobs — a producer that gets
+//! ahead of the consumer parks on its own thread and its mailbox fills
+//! behind it.
+//!
+//! Every submission is guaranteed **exactly one** completion: either an
+//! [`Completion::Item`] (the value) or a [`Completion::Dropped`] death
+//! notice, delivered by the [`CqGuard`] captured in the message when the
+//! closure is destroyed without completing (actor poisoned before or
+//! during execution, or the message was never accepted).  Consumers that
+//! count submissions against completions can therefore never hang on a
+//! dead producer.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// One completion popped from the queue.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Completion<T> {
+    /// A produced value.
+    Item { tag: usize, value: T },
+    /// The producer's message was destroyed without producing: the actor
+    /// died (panicked) or the queue's submission never ran.
+    Dropped { tag: usize },
+}
+
+struct PerTag {
+    credit: usize,
+    counts: Vec<usize>,
+}
+
+struct CqState<T> {
+    items: VecDeque<(usize, T)>,
+    /// Death notices; kept out-of-band and unbounded so a guard firing
+    /// during unwind can never block.
+    dropped: Vec<usize>,
+    cap: usize,
+    per_tag: Option<PerTag>,
+    closed: bool,
+}
+
+struct CqInner<T> {
+    state: Mutex<CqState<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+/// A cloneable handle to a shared bounded completion queue.
+pub struct CompletionQueue<T> {
+    inner: Arc<CqInner<T>>,
+}
+
+impl<T> Clone for CompletionQueue<T> {
+    fn clone(&self) -> Self {
+        CompletionQueue { inner: self.inner.clone() }
+    }
+}
+
+impl<T: Send + 'static> CompletionQueue<T> {
+    /// A queue holding at most `cap` buffered items (any tag mix).
+    pub fn bounded(cap: usize) -> Self {
+        assert!(cap >= 1);
+        CompletionQueue {
+            inner: Arc::new(CqInner {
+                state: Mutex::new(CqState {
+                    items: VecDeque::with_capacity(cap),
+                    dropped: Vec::new(),
+                    cap,
+                    per_tag: None,
+                    closed: false,
+                }),
+                not_empty: Condvar::new(),
+                not_full: Condvar::new(),
+            }),
+        }
+    }
+
+    /// A queue where each tag in `0..tags` may buffer at most `credit`
+    /// items — `union`'s per-child backpressure.
+    pub fn per_tag(tags: usize, credit: usize) -> Self {
+        assert!(tags >= 1 && credit >= 1);
+        let cap = tags * credit;
+        CompletionQueue {
+            inner: Arc::new(CqInner {
+                state: Mutex::new(CqState {
+                    items: VecDeque::with_capacity(cap),
+                    dropped: Vec::new(),
+                    cap,
+                    per_tag: Some(PerTag { credit, counts: vec![0; tags] }),
+                    closed: false,
+                }),
+                not_empty: Condvar::new(),
+                not_full: Condvar::new(),
+            }),
+        }
+    }
+
+    /// Blocking push; parks while the queue (or this tag's credit) is
+    /// full.  Returns `false` — and drops `value` — if the queue was
+    /// closed by the consumer.
+    pub fn push(&self, tag: usize, value: T) -> bool {
+        let mut st = self.inner.state.lock().unwrap();
+        loop {
+            if st.closed {
+                return false;
+            }
+            let full = st.items.len() >= st.cap
+                || st
+                    .per_tag
+                    .as_ref()
+                    .map_or(false, |p| p.counts[tag] >= p.credit);
+            if !full {
+                st.items.push_back((tag, value));
+                if let Some(p) = st.per_tag.as_mut() {
+                    p.counts[tag] += 1;
+                }
+                drop(st);
+                self.inner.not_empty.notify_one();
+                return true;
+            }
+            st = self.inner.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking death notice; never parks (unwind-safe).
+    pub fn push_dropped(&self, tag: usize) {
+        let mut st = self.inner.state.lock().unwrap();
+        if st.closed {
+            return;
+        }
+        st.dropped.push(tag);
+        drop(st);
+        self.inner.not_empty.notify_one();
+    }
+
+    /// Blocking pop.  Buffered **items drain before death notices**: a
+    /// value completed before its producer died must not be masked by
+    /// the (out-of-band, unordered) notice — a poisoned producer can
+    /// never enqueue again, so every buffered item predates its notice.
+    /// The caller is responsible for knowing a completion is
+    /// outstanding; popping with nothing in flight parks forever.
+    pub fn pop(&self) -> Completion<T> {
+        let mut st = self.inner.state.lock().unwrap();
+        loop {
+            if let Some((tag, value)) = st.items.pop_front() {
+                if let Some(p) = st.per_tag.as_mut() {
+                    p.counts[tag] -= 1;
+                }
+                drop(st);
+                self.inner.not_full.notify_all();
+                return Completion::Item { tag, value };
+            }
+            if let Some(tag) = st.dropped.pop() {
+                return Completion::Dropped { tag };
+            }
+            st = self.inner.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking pop (same items-before-notices order as [`pop`]).
+    pub fn try_pop(&self) -> Option<Completion<T>> {
+        let mut st = self.inner.state.lock().unwrap();
+        if let Some((tag, value)) = st.items.pop_front() {
+            if let Some(p) = st.per_tag.as_mut() {
+                p.counts[tag] -= 1;
+            }
+            drop(st);
+            self.inner.not_full.notify_all();
+            return Some(Completion::Item { tag, value });
+        }
+        if let Some(tag) = st.dropped.pop() {
+            return Some(Completion::Dropped { tag });
+        }
+        None
+    }
+
+    /// Close the queue: pending and future pushes return `false` so
+    /// detached producers can exit when the consumer abandons the
+    /// stream.
+    pub fn close(&self) {
+        let mut st = self.inner.state.lock().unwrap();
+        st.closed = true;
+        drop(st);
+        self.inner.not_full.notify_all();
+        self.inner.not_empty.notify_all();
+    }
+
+    /// Buffered item count (excluding death notices).
+    pub fn len(&self) -> usize {
+        self.inner.state.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Captured inside a `call_into` message: guarantees the exactly-one-
+/// completion contract.  `complete` delivers the value; destruction
+/// without completion (actor death, message dropped, panic mid-call)
+/// delivers a death notice instead.
+pub(crate) struct CqGuard<T: Send + 'static> {
+    q: CompletionQueue<T>,
+    tag: usize,
+    armed: bool,
+}
+
+impl<T: Send + 'static> CqGuard<T> {
+    pub(crate) fn new(q: CompletionQueue<T>, tag: usize) -> Self {
+        CqGuard { q, tag, armed: true }
+    }
+
+    pub(crate) fn complete(mut self, value: T) {
+        self.armed = false;
+        self.q.push(self.tag, value);
+    }
+}
+
+impl<T: Send + 'static> Drop for CqGuard<T> {
+    fn drop(&mut self) {
+        if self.armed {
+            self.q.push_dropped(self.tag);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_per_queue() {
+        let q: CompletionQueue<i32> = CompletionQueue::bounded(8);
+        q.push(0, 1);
+        q.push(1, 2);
+        assert_eq!(q.pop(), Completion::Item { tag: 0, value: 1 });
+        assert_eq!(q.pop(), Completion::Item { tag: 1, value: 2 });
+        assert!(q.try_pop().is_none());
+    }
+
+    #[test]
+    fn bounded_push_blocks_until_pop() {
+        let q: CompletionQueue<i32> = CompletionQueue::bounded(1);
+        q.push(0, 1);
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || {
+            q2.push(0, 2); // blocks until the main thread pops
+            true
+        });
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        assert!(!t.is_finished(), "push did not block at capacity");
+        assert_eq!(q.pop(), Completion::Item { tag: 0, value: 1 });
+        assert!(t.join().unwrap());
+        assert_eq!(q.pop(), Completion::Item { tag: 0, value: 2 });
+    }
+
+    #[test]
+    fn per_tag_credit_blocks_only_that_tag() {
+        let q: CompletionQueue<i32> = CompletionQueue::per_tag(2, 1);
+        q.push(0, 10);
+        // Tag 0's credit is spent; tag 1 still goes through.
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || {
+            q2.push(0, 11);
+        });
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        assert!(!t.is_finished(), "tag-0 push should block");
+        q.push(1, 20);
+        assert_eq!(q.pop(), Completion::Item { tag: 0, value: 10 });
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn guard_drop_emits_death_notice() {
+        let q: CompletionQueue<i32> = CompletionQueue::bounded(4);
+        let g = CqGuard::new(q.clone(), 7);
+        drop(g);
+        assert_eq!(q.pop(), Completion::Dropped { tag: 7 });
+        let g = CqGuard::new(q.clone(), 8);
+        g.complete(42);
+        assert_eq!(q.pop(), Completion::Item { tag: 8, value: 42 });
+        assert!(q.try_pop().is_none());
+    }
+
+    #[test]
+    fn completed_items_drain_before_death_notices() {
+        // A value completed before the producer died must surface, not
+        // be masked by the notice.
+        let q: CompletionQueue<i32> = CompletionQueue::bounded(4);
+        let g_ok = CqGuard::new(q.clone(), 0);
+        g_ok.complete(41);
+        let g_dead = CqGuard::new(q.clone(), 0);
+        drop(g_dead); // death notice for the same tag
+        assert_eq!(q.pop(), Completion::Item { tag: 0, value: 41 });
+        assert_eq!(q.pop(), Completion::Dropped { tag: 0 });
+    }
+
+    #[test]
+    fn close_unblocks_producers() {
+        let q: CompletionQueue<i32> = CompletionQueue::bounded(1);
+        q.push(0, 1);
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || q2.push(0, 2));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        assert!(!t.join().unwrap(), "push must fail after close");
+    }
+}

@@ -1,0 +1,183 @@
+//! Per-actor telemetry: queue depth (current + high-water), messages
+//! processed, busy/idle time, and supervision state — the observability
+//! half of the control plane.  Counters are plain atomics updated on the
+//! send/receive/execute paths (no locks, no allocation), and every
+//! spawned actor registers its counters in a process-wide registry so
+//! `StandardMetricsReporting` can report pipeline health without any
+//! per-plan plumbing.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, Weak};
+
+/// Live counters for one actor; shared between its handles, its thread,
+/// and the registry.
+pub struct ActorTelemetry {
+    name: Arc<str>,
+    id: u64,
+    messages: AtomicU64,
+    queue_len: AtomicUsize,
+    queue_hwm: AtomicUsize,
+    busy_ns: AtomicU64,
+    idle_ns: AtomicU64,
+    poisoned: AtomicBool,
+}
+
+impl ActorTelemetry {
+    pub(crate) fn new(name: &str, id: u64) -> Self {
+        ActorTelemetry {
+            name: Arc::from(name),
+            id,
+            messages: AtomicU64::new(0),
+            queue_len: AtomicUsize::new(0),
+            queue_hwm: AtomicUsize::new(0),
+            busy_ns: AtomicU64::new(0),
+            idle_ns: AtomicU64::new(0),
+            poisoned: AtomicBool::new(false),
+        }
+    }
+
+    pub(crate) fn note_enqueue(&self, depth_now: usize) {
+        self.queue_len.store(depth_now, Ordering::Relaxed);
+        self.queue_hwm.fetch_max(depth_now, Ordering::Relaxed);
+    }
+
+    /// A message left the queue for execution.  The processed counter
+    /// increments HERE (not after execution) so that by the time a
+    /// caller observes a message's reply, the counter already covers
+    /// it.
+    pub(crate) fn note_dequeue(&self, depth_now: usize) {
+        self.queue_len.store(depth_now, Ordering::Relaxed);
+        self.messages.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn note_busy(&self, busy_ns: u64) {
+        self.busy_ns.fetch_add(busy_ns, Ordering::Relaxed);
+    }
+
+    pub(crate) fn note_idle(&self, idle_ns: u64) {
+        self.idle_ns.fetch_add(idle_ns, Ordering::Relaxed);
+    }
+
+    pub(crate) fn note_poisoned(&self) {
+        self.poisoned.store(true, Ordering::SeqCst);
+        self.queue_len.store(0, Ordering::Relaxed);
+    }
+
+    pub(crate) fn is_poisoned(&self) -> bool {
+        self.poisoned.load(Ordering::SeqCst)
+    }
+
+    pub fn snapshot(&self) -> ActorStatsSnapshot {
+        ActorStatsSnapshot {
+            name: self.name.to_string(),
+            id: self.id,
+            messages_processed: self.messages.load(Ordering::Relaxed),
+            queue_len: self.queue_len.load(Ordering::Relaxed),
+            queue_hwm: self.queue_hwm.load(Ordering::Relaxed),
+            busy_ns: self.busy_ns.load(Ordering::Relaxed),
+            idle_ns: self.idle_ns.load(Ordering::Relaxed),
+            poisoned: self.poisoned.load(Ordering::SeqCst),
+        }
+    }
+}
+
+/// A point-in-time copy of one actor's counters (the item type carried
+/// by `TrainResult::actor_stats`).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ActorStatsSnapshot {
+    pub name: String,
+    pub id: u64,
+    pub messages_processed: u64,
+    /// Mailbox depth at snapshot time.
+    pub queue_len: usize,
+    /// Mailbox depth high-water mark since spawn.
+    pub queue_hwm: usize,
+    /// Nanoseconds spent executing messages.
+    pub busy_ns: u64,
+    /// Nanoseconds spent waiting for messages.
+    pub idle_ns: u64,
+    pub poisoned: bool,
+}
+
+impl ActorStatsSnapshot {
+    /// Fraction of observed time spent executing messages (0 when the
+    /// actor has not run yet).  A starved pipeline stage shows up as a
+    /// low-utilization learner behind a high-utilization sampler (or
+    /// vice versa).
+    pub fn utilization(&self) -> f64 {
+        let total = self.busy_ns + self.idle_ns;
+        if total == 0 {
+            0.0
+        } else {
+            self.busy_ns as f64 / total as f64
+        }
+    }
+}
+
+fn registry() -> &'static Mutex<Vec<Weak<ActorTelemetry>>> {
+    static REGISTRY: OnceLock<Mutex<Vec<Weak<ActorTelemetry>>>> =
+        OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+pub(crate) fn register(t: &Arc<ActorTelemetry>) {
+    let mut reg = registry().lock().unwrap();
+    // Opportunistic compaction so the registry does not grow without
+    // bound across many short-lived actors.
+    reg.retain(|w| w.strong_count() > 0);
+    reg.push(Arc::downgrade(t));
+}
+
+/// Snapshot every live actor's counters (dead actors' entries are
+/// dropped once their last handle and thread are gone).
+pub fn all_actor_stats() -> Vec<ActorStatsSnapshot> {
+    let reg = registry().lock().unwrap();
+    reg.iter()
+        .filter_map(|w| w.upgrade())
+        .map(|t| t.snapshot())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_reflects_counters() {
+        let t = ActorTelemetry::new("worker", 3);
+        t.note_enqueue(2);
+        t.note_enqueue(5);
+        t.note_dequeue(4);
+        t.note_busy(1_000);
+        t.note_idle(3_000);
+        let s = t.snapshot();
+        assert_eq!(s.name, "worker");
+        assert_eq!(s.id, 3);
+        assert_eq!(s.messages_processed, 1);
+        assert_eq!(s.queue_len, 4);
+        assert_eq!(s.queue_hwm, 5);
+        assert_eq!(s.busy_ns, 1_000);
+        assert_eq!(s.idle_ns, 3_000);
+        assert!(!s.poisoned);
+        assert!((s.utilization() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn utilization_of_fresh_actor_is_zero() {
+        let t = ActorTelemetry::new("fresh", 0);
+        assert_eq!(t.snapshot().utilization(), 0.0);
+    }
+
+    #[test]
+    fn registry_serves_live_actors_only() {
+        let t = Arc::new(ActorTelemetry::new("reg-test-live", 77));
+        register(&t);
+        {
+            let gone = Arc::new(ActorTelemetry::new("reg-test-gone", 78));
+            register(&gone);
+        }
+        let stats = all_actor_stats();
+        assert!(stats.iter().any(|s| s.name == "reg-test-live"));
+        assert!(!stats.iter().any(|s| s.name == "reg-test-gone"));
+    }
+}

@@ -60,7 +60,8 @@ pub fn apex_plan(
     apex: &ApexConfig,
 ) -> LocalIter<TrainResult> {
     let workers = config.dqn_workers();
-    let obs_dim = workers.local.call(|w| w.obs_dim());
+    let obs_dim =
+        workers.local.call(|w| w.obs_dim()).expect("local worker died");
     let replay_actors = create_replay_actors(
         apex.num_replay_actors,
         obs_dim,
@@ -85,7 +86,12 @@ pub fn apex_plan(
             *entry += n;
             if *entry >= max_delay {
                 *entry = 0;
-                let weights = local.call(|w| w.get_weights());
+                // Single recipient: move the fetched Vec straight into
+                // the cast (an Arc<[f32]> conversion would add a full
+                // parameter-vector copy with nothing to amortize it).
+                let weights = local
+                    .call(|w| w.get_weights())
+                    .expect("Ape-X learner (local worker) actor died");
                 worker.cast(move |w| w.set_weights(&weights));
             }
             TrainItem::default()

@@ -45,7 +45,8 @@ pub fn dqn_plan(
     dqn: &DqnConfig,
 ) -> LocalIter<TrainResult> {
     let workers = config.dqn_workers();
-    let obs_dim = workers.local.call(|w| w.obs_dim());
+    let obs_dim =
+        workers.local.call(|w| w.obs_dim()).expect("local worker died");
     let replay_actors = create_replay_actors(
         1,
         obs_dim,
@@ -103,13 +104,17 @@ pub(crate) fn learn_dqn(
         let steps = sample.batch.len();
         let indices = sample.indices;
         let batch = sample.batch;
-        let (stats, td) = local.call(move |w| w.learn_and_td(&batch));
+        let (stats, td) = local
+            .call(move |w| w.learn_and_td(&batch))
+            .expect("DQN learner (local worker) actor died");
         replay_actor.cast(move |ra| ra.update_priorities(&indices, &td));
         since_sync += 1;
         if since_sync >= weight_sync_every {
             since_sync = 0;
-            let weights: std::sync::Arc<[f32]> =
-                local.call(|w| w.get_weights()).into();
+            let weights: std::sync::Arc<[f32]> = local
+                .call(|w| w.get_weights())
+                .expect("DQN learner (local worker) actor died")
+                .into();
             for r in &remotes {
                 let w = std::sync::Arc::clone(&weights);
                 r.cast(move |worker| worker.set_weights(&w));

@@ -20,27 +20,34 @@ use super::TrainerConfig;
 
 /// Convert an env-major worker fragment (lane-contiguous segments of
 /// length `t_len`) into the time-major [T, B] layout `impala_grad`
-/// expects.  The fragment must be exactly `t_len * b_lanes` rows with
-/// next_obs present.
-pub fn assemble_time_major(
+/// expects, writing into `out`'s recycled storage (no allocation once
+/// `out` has reached steady-state capacity).  The fragment must be
+/// exactly `t_len * b_lanes` rows with next_obs present.
+pub fn assemble_time_major_into(
     batch: &SampleBatch,
     t_len: usize,
     b_lanes: usize,
-) -> ImpalaBatch {
+    out: &mut ImpalaBatch,
+) {
     assert_eq!(batch.len(), t_len * b_lanes, "fragment shape mismatch");
     assert!(!batch.next_obs.is_empty(), "IMPALA needs next_obs");
-    let d = batch.obs_dim;
-    let mut out = ImpalaBatch {
-        t_len,
-        b_lanes,
-        obs: Vec::with_capacity(t_len * b_lanes * d),
-        actions: Vec::with_capacity(t_len * b_lanes),
-        behaviour_logp: Vec::with_capacity(t_len * b_lanes),
-        rewards: Vec::with_capacity(t_len * b_lanes),
-        dones: Vec::with_capacity(t_len * b_lanes),
-        bootstrap_obs: Vec::with_capacity(b_lanes * d),
-        mask: vec![1.0; t_len * b_lanes],
-    };
+    let rows = t_len * b_lanes;
+    out.t_len = t_len;
+    out.b_lanes = b_lanes;
+    out.obs.clear();
+    out.obs.reserve(rows * batch.obs_dim);
+    out.actions.clear();
+    out.actions.reserve(rows);
+    out.behaviour_logp.clear();
+    out.behaviour_logp.reserve(rows);
+    out.rewards.clear();
+    out.rewards.reserve(rows);
+    out.dones.clear();
+    out.dones.reserve(rows);
+    out.bootstrap_obs.clear();
+    out.bootstrap_obs.reserve(b_lanes * batch.obs_dim);
+    out.mask.clear();
+    out.mask.resize(rows, 1.0);
     for t in 0..t_len {
         for lane in 0..b_lanes {
             let row = lane * t_len + t; // env-major -> time-major
@@ -55,6 +62,17 @@ pub fn assemble_time_major(
         let last = lane * t_len + (t_len - 1);
         out.bootstrap_obs.extend_from_slice(batch.next_obs_row(last));
     }
+}
+
+/// [`assemble_time_major_into`] into a fresh batch (tests/benches and
+/// one-shot callers).
+pub fn assemble_time_major(
+    batch: &SampleBatch,
+    t_len: usize,
+    b_lanes: usize,
+) -> ImpalaBatch {
+    let mut out = ImpalaBatch::default();
+    assemble_time_major_into(batch, t_len, b_lanes, &mut out);
     out
 }
 
@@ -77,15 +95,23 @@ pub fn impala_plan(config: &TrainerConfig) -> LocalIter<TrainResult> {
 
     let local = workers.local.clone();
     let remotes = workers.remotes.clone();
+    // The time-major learner batch's storage is recycled: it rides to
+    // the learner actor inside the call and comes back with the reply,
+    // so steady state reassembles with zero allocation.
+    let mut scratch = ImpalaBatch::default();
     let train_op = parallel_rollouts(workers.remotes.clone())
         .gather_async_with_source(config.num_async)
         .for_each(move |(batch, source)| {
             let steps = batch.len();
-            let tb = assemble_time_major(&batch, t_len, b_lanes);
-            let (stats, weights) = local.call(move |w| {
-                let stats = w.policy.learn_impala(&tb);
-                (stats, w.get_weights())
-            });
+            let mut tb = std::mem::take(&mut scratch);
+            assemble_time_major_into(&batch, t_len, b_lanes, &mut tb);
+            let (stats, weights, tb_back) = local
+                .call(move |w| {
+                    let stats = w.policy.learn_impala(&tb);
+                    (stats, w.get_weights(), tb)
+                })
+                .expect("IMPALA learner (local worker) actor died");
+            scratch = tb_back;
             // Per-source weight refresh (fine-grained, like A3C) plus
             // the learner keeps remotes loosely in sync.
             source.cast(move |w| w.set_weights(&weights));
@@ -126,6 +152,38 @@ mod tests {
         // Bootstrap = next_obs of each lane's last row.
         assert_eq!(tb.bootstrap_obs, vec![3.0, 13.0]);
         assert_eq!(tb.mask, vec![1.0; 6]);
+    }
+
+    #[test]
+    fn assemble_into_recycles_storage() {
+        let mk = |base: f32| {
+            let mut b = SampleBatchBuilder::new(1);
+            for lane in 0..2 {
+                for t in 0..3 {
+                    let v = base + (lane * 10 + t) as f32;
+                    b.add_step_with_next(
+                        &[v],
+                        t as i32,
+                        v,
+                        &[v + 1.0],
+                        false,
+                        0.0,
+                        0.0,
+                    );
+                }
+            }
+            b.build()
+        };
+        let mut scratch = ImpalaBatch::default();
+        assemble_time_major_into(&mk(0.0), 3, 2, &mut scratch);
+        let ptr = scratch.obs.as_ptr();
+        let cap = scratch.obs.capacity();
+        assemble_time_major_into(&mk(100.0), 3, 2, &mut scratch);
+        // Same shape -> same storage, fresh contents.
+        assert_eq!(scratch.obs.as_ptr(), ptr, "obs storage reallocated");
+        assert_eq!(scratch.obs.capacity(), cap);
+        assert_eq!(scratch.obs, assemble_time_major(&mk(100.0), 3, 2).obs);
+        assert_eq!(scratch.mask, vec![1.0; 6]);
     }
 
     #[test]

@@ -78,6 +78,7 @@ pub fn maml_plan(
                 w.apply_gradients(&avg);
                 w.get_weights()
             })
+            .expect("MAML meta-learner (local worker) actor died")
             .into();
         // Broadcast the new meta-parameters; the gather_sync barrier
         // orders these casts before the next meta-iteration's fetches.

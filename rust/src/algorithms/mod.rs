@@ -19,7 +19,7 @@ pub use a2c::a2c_plan;
 pub use a3c::a3c_plan;
 pub use apex::{apex_plan, ApexConfig};
 pub use dqn::{dqn_plan, DqnConfig};
-pub use impala::{assemble_time_major, impala_plan};
+pub use impala::{assemble_time_major, assemble_time_major_into, impala_plan};
 pub use maml::{maml_plan, MamlConfig};
 pub use multi_agent::{ma_workers, multi_agent_plan, MultiAgentConfig};
 pub use ppo::{ppo_plan, ppo_plan_with_epochs};

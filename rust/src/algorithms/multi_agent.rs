@@ -146,10 +146,12 @@ pub fn multi_agent_plan(
         .combine(concat_batches(config.train_batch_size))
         .for_each(move |batch| {
             let steps = batch.len();
-            let (stats, weights) = ppo_local.call(move |w| {
-                let stats = w.learn_on_batch("ppo", &batch);
-                (stats, w.get_weights("ppo"))
-            });
+            let (stats, weights) = ppo_local
+                .call(move |w| {
+                    let stats = w.learn_on_batch("ppo", &batch);
+                    (stats, w.get_weights("ppo"))
+                })
+                .expect("PPO learner (local worker) actor died");
             let weights: std::sync::Arc<[f32]> = weights.into();
             for r in &ppo_remotes {
                 let wt = std::sync::Arc::clone(&weights);
@@ -159,7 +161,7 @@ pub fn multi_agent_plan(
         });
 
     // --- DQN subflow (Fig. 12b) ---
-    let obs_dim = local.call(|w| w.obs_dim());
+    let obs_dim = local.call(|w| w.obs_dim()).expect("local worker died");
     let replay_actors = create_replay_actors(
         1,
         obs_dim,
@@ -187,18 +189,22 @@ pub fn multi_agent_plan(
         let steps = sample.batch.len();
         let indices = sample.indices;
         let batch = sample.batch;
-        let (stats, td) = dqn_local.call(move |w| {
-            let stats = w.learn_on_batch("dqn", &batch);
-            let td = w.policies["dqn"].td_abs().unwrap_or_default();
-            (stats, td)
-        });
+        let (stats, td) = dqn_local
+            .call(move |w| {
+                let stats = w.learn_on_batch("dqn", &batch);
+                let td = w.policies["dqn"].td_abs().unwrap_or_default();
+                (stats, td)
+            })
+            .expect("DQN learner (local worker) actor died");
         ra.cast(move |state| state.update_priorities(&indices, &td));
         since_sync += 1;
         since_target += steps;
         if since_sync >= sync_every {
             since_sync = 0;
-            let weights: std::sync::Arc<[f32]> =
-                dqn_local.call(|w| w.get_weights("dqn")).into();
+            let weights: std::sync::Arc<[f32]> = dqn_local
+                .call(|w| w.get_weights("dqn"))
+                .expect("DQN learner (local worker) actor died")
+                .into();
             for r in &dqn_remotes {
                 let wt = std::sync::Arc::clone(&weights);
                 r.cast(move |w| w.set_weights("dqn", &wt));
@@ -236,7 +242,10 @@ fn prefix_stats(
         .collect()
 }
 
-/// Metrics reporting over multi-agent workers.
+/// Metrics reporting over multi-agent workers — the same reporting
+/// tail as `standard_metrics_reporting` (shared via
+/// `ops::drain_and_snapshot`, so dead-worker handling and telemetry
+/// attachment cannot drift), minus the items-per-report batching.
 pub fn ma_metrics_reporting(
     inner: LocalIter<TrainItem>,
     local: MaWorker,
@@ -251,22 +260,11 @@ pub fn ma_metrics_reporting(
         for (k, v) in item.stats {
             hub.record_learner_stat(&k, v);
         }
-        let replies: Vec<_> = std::iter::once(&local)
-            .chain(remotes.iter())
-            .map(|h| {
-                h.call_deferred(|w| {
-                    let eps = w.pop_episodes();
-                    let steps = w.num_steps_sampled;
-                    w.num_steps_sampled = 0;
-                    (eps, steps)
-                })
-            })
-            .collect();
-        for r in replies {
-            let (eps, steps) = r.recv();
-            hub.record_episodes(&eps);
-            hub.num_env_steps_sampled += steps as u64;
-        }
-        Some(hub.snapshot())
+        Some(crate::ops::drain_and_snapshot(&mut hub, &local, &remotes, |w| {
+            let eps = w.pop_episodes();
+            let steps = w.num_steps_sampled;
+            w.num_steps_sampled = 0;
+            (eps, steps)
+        }))
     })
 }

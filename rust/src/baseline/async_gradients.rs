@@ -5,9 +5,8 @@
 //! (11 lines of plan) — this file is the Table 2 numerator.
 
 use std::collections::HashMap;
-use std::sync::mpsc;
 
-use crate::actor::ActorHandle;
+use crate::actor::{ActorHandle, Completion, CompletionQueue};
 use crate::metrics::{MetricsHub, TrainResult};
 use crate::policy::Gradients;
 use crate::rollout::{RolloutWorker, WorkerSet};
@@ -26,8 +25,7 @@ pub struct AsyncGradientsOptimizer {
     num_steps_trained: usize,
 
     // The completion queue + in-flight bookkeeping (ray.wait analog).
-    result_rx: mpsc::Receiver<(usize, Gradients)>,
-    result_tx: mpsc::Sender<(usize, Gradients)>,
+    results: CompletionQueue<Gradients>,
     pending_gradients: HashMap<usize, ActorHandle<RolloutWorker>>,
     next_tag: usize,
 
@@ -37,7 +35,10 @@ pub struct AsyncGradientsOptimizer {
 
 impl AsyncGradientsOptimizer {
     pub fn new(workers: WorkerSet) -> Self {
-        let (result_tx, result_rx) = mpsc::channel();
+        // One task in flight per worker -> the queue bound is the
+        // worker count.
+        let results =
+            CompletionQueue::bounded(workers.remotes.len().max(1));
         AsyncGradientsOptimizer {
             workers,
             wait_timer: TimerStat::new(),
@@ -45,8 +46,7 @@ impl AsyncGradientsOptimizer {
             dispatch_timer: TimerStat::new(),
             num_steps_sampled: 0,
             num_steps_trained: 0,
-            result_rx,
-            result_tx,
+            results,
             pending_gradients: HashMap::new(),
             next_tag: 0,
             hub: MetricsHub::new(100),
@@ -59,7 +59,7 @@ impl AsyncGradientsOptimizer {
     fn launch_gradient_task(&mut self, worker: ActorHandle<RolloutWorker>) {
         let tag = self.next_tag;
         self.next_tag += 1;
-        worker.call_into(tag, self.result_tx.clone(), |w| {
+        worker.call_into(tag, &self.results, |w| {
             w.sample_and_compute_gradients()
         });
         self.pending_gradients.insert(tag, worker);
@@ -70,8 +70,12 @@ impl AsyncGradientsOptimizer {
     fn start(&mut self) {
         // Get weights from the local rollout actor; broadcast one
         // shared Arc (the "object store put" of the original).
-        let weights: std::sync::Arc<[f32]> =
-            self.workers.local.call(|w| w.get_weights()).into();
+        let weights: std::sync::Arc<[f32]> = self
+            .workers
+            .local
+            .call(|w| w.get_weights())
+            .expect("learner died")
+            .into();
         for worker in self.workers.remotes.clone() {
             // Set weights on the remote rollout actor.
             let w = std::sync::Arc::clone(&weights);
@@ -91,9 +95,17 @@ impl AsyncGradientsOptimizer {
         }
         assert!(!self.pending_gradients.is_empty());
 
-        // Wait for one gradient to complete.
+        // Wait for one gradient to complete.  This baseline keeps the
+        // original's brittleness on purpose (Table 2's comparison
+        // point): a worker death is fatal here, where the dataflow
+        // version retires the shard and keeps going.
         let (tag, gradient) = self.wait_timer.time(|| {
-            self.result_rx.recv().expect("worker died")
+            match self.results.pop() {
+                Completion::Item { tag, value } => (tag, value),
+                Completion::Dropped { tag } => {
+                    panic!("worker for task {tag} died")
+                }
+            }
         });
         let worker = self
             .pending_gradients
@@ -104,10 +116,13 @@ impl AsyncGradientsOptimizer {
         let stats = gradient.stats.clone();
         let count = gradient.count;
         let weights = self.apply_timer.time(|| {
-            self.workers.local.call(move |w| {
-                w.apply_gradients(&gradient);
-                w.get_weights()
-            })
+            self.workers
+                .local
+                .call(move |w| {
+                    w.apply_gradients(&gradient);
+                    w.get_weights()
+                })
+                .expect("learner died")
         });
         self.num_steps_sampled += count;
         self.num_steps_trained += count;

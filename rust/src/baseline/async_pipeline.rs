@@ -4,10 +4,11 @@
 //! multi-level aggregation tree).  Baseline for Fig. 13b.
 
 use std::collections::HashMap;
-use std::sync::mpsc;
 
-use crate::algorithms::assemble_time_major;
+use crate::actor::{Completion, CompletionQueue};
+use crate::algorithms::assemble_time_major_into;
 use crate::metrics::{MetricsHub, TrainResult};
+use crate::policy::ImpalaBatch;
 use crate::rollout::WorkerSet;
 use crate::sample_batch::SampleBatch;
 use crate::util::TimerStat;
@@ -18,10 +19,12 @@ pub struct AsyncPipelineOptimizer {
     b_lanes: usize,
     queue_depth: usize,
 
-    sample_rx: mpsc::Receiver<(usize, SampleBatch)>,
-    sample_tx: mpsc::Sender<(usize, SampleBatch)>,
+    samples: CompletionQueue<SampleBatch>,
     tags: HashMap<usize, usize>,
     next_tag: usize,
+    /// Recycled time-major learner batch (rides to the learner actor
+    /// and back with each call).
+    tb_scratch: ImpalaBatch,
 
     wait_timer: TimerStat,
     learn_timer: TimerStat,
@@ -39,16 +42,18 @@ impl AsyncPipelineOptimizer {
         b_lanes: usize,
         queue_depth: usize,
     ) -> Self {
-        let (sample_tx, sample_rx) = mpsc::channel();
+        let samples = CompletionQueue::bounded(
+            (workers.remotes.len() * queue_depth).max(1),
+        );
         AsyncPipelineOptimizer {
             workers,
             t_len,
             b_lanes,
             queue_depth,
-            sample_rx,
-            sample_tx,
+            samples,
             tags: HashMap::new(),
             next_tag: 0,
+            tb_scratch: ImpalaBatch::default(),
             wait_timer: TimerStat::new(),
             learn_timer: TimerStat::new(),
             num_steps_sampled: 0,
@@ -63,15 +68,19 @@ impl AsyncPipelineOptimizer {
         self.next_tag += 1;
         self.workers.remotes[worker_idx].call_into(
             tag,
-            self.sample_tx.clone(),
+            &self.samples,
             |w| w.sample(),
         );
         self.tags.insert(tag, worker_idx);
     }
 
     fn start(&mut self) {
-        let weights: std::sync::Arc<[f32]> =
-            self.workers.local.call(|w| w.get_weights()).into();
+        let weights: std::sync::Arc<[f32]> = self
+            .workers
+            .local
+            .call(|w| w.get_weights())
+            .expect("learner died")
+            .into();
         for idx in 0..self.workers.remotes.len() {
             let w = std::sync::Arc::clone(&weights);
             self.workers.remotes[idx].cast(move |state| state.set_weights(&w));
@@ -88,20 +97,27 @@ impl AsyncPipelineOptimizer {
         if !self.started {
             self.start();
         }
-        let (tag, batch) = self
-            .wait_timer
-            .time(|| self.sample_rx.recv().expect("worker died"));
+        let samples = self.samples.clone();
+        let (tag, batch) = self.wait_timer.time(|| match samples.pop() {
+            Completion::Item { tag, value } => (tag, value),
+            Completion::Dropped { tag } => panic!("worker for {tag} died"),
+        });
         let worker_idx = self.tags.remove(&tag).expect("unknown tag");
         let steps = batch.len();
         self.num_steps_sampled += steps;
 
-        let tb = assemble_time_major(&batch, self.t_len, self.b_lanes);
-        let (stats, weights) = self.learn_timer.time(|| {
-            self.workers.local.call(move |w| {
-                let stats = w.policy.learn_impala(&tb);
-                (stats, w.get_weights())
-            })
+        let mut tb = std::mem::take(&mut self.tb_scratch);
+        assemble_time_major_into(&batch, self.t_len, self.b_lanes, &mut tb);
+        let (stats, weights, tb_back) = self.learn_timer.time(|| {
+            self.workers
+                .local
+                .call(move |w| {
+                    let stats = w.policy.learn_impala(&tb);
+                    (stats, w.get_weights(), tb)
+                })
+                .expect("learner died")
         });
+        self.tb_scratch = tb_back;
         self.num_steps_trained += steps;
 
         self.workers.remotes[worker_idx].cast(move |w| w.set_weights(&weights));

@@ -5,8 +5,8 @@
 //! version collapses into three subflows + one Concurrently.
 
 use std::collections::HashMap;
-use std::sync::mpsc;
 
+use crate::actor::{Completion, CompletionQueue};
 use crate::metrics::{MetricsHub, TrainResult};
 use crate::ops::{create_replay_actors, ReplayActor};
 use crate::replay::ReplaySample;
@@ -27,13 +27,11 @@ pub struct AsyncReplayOptimizer {
     timers: HashMap<&'static str, TimerStat>,
 
     // Sample task pool: completion queue + tag -> worker map.
-    sample_rx: mpsc::Receiver<(usize, SampleBatch)>,
-    sample_tx: mpsc::Sender<(usize, SampleBatch)>,
+    samples: CompletionQueue<SampleBatch>,
     sample_tags: HashMap<usize, usize>, // tag -> worker index
 
     // Replay task pool.
-    replay_rx: mpsc::Receiver<(usize, Option<ReplaySample>)>,
-    replay_tx: mpsc::Sender<(usize, Option<ReplaySample>)>,
+    replays: CompletionQueue<Option<ReplaySample>>,
     replay_tags: HashMap<usize, usize>, // tag -> replay actor index
 
     next_tag: usize,
@@ -57,7 +55,8 @@ impl AsyncReplayOptimizer {
         max_weight_sync_delay: usize,
         target_update_every: usize,
     ) -> Self {
-        let obs_dim = workers.local.call(|w| w.obs_dim());
+        let obs_dim =
+            workers.local.call(|w| w.obs_dim()).expect("learner died");
         let replay_actors = create_replay_actors(
             num_replay_actors,
             obs_dim,
@@ -65,8 +64,12 @@ impl AsyncReplayOptimizer {
             learning_starts,
             replay_batch_size,
         );
-        let (sample_tx, sample_rx) = mpsc::channel();
-        let (replay_tx, replay_rx) = mpsc::channel();
+        let samples = CompletionQueue::bounded(
+            (workers.remotes.len() * SAMPLE_QUEUE_DEPTH).max(1),
+        );
+        let replays = CompletionQueue::bounded(
+            (replay_actors.len() * REPLAY_QUEUE_DEPTH).max(1),
+        );
         let timers = [
             "put_weights",
             "get_samples",
@@ -84,11 +87,9 @@ impl AsyncReplayOptimizer {
             max_weight_sync_delay,
             target_update_every,
             timers,
-            sample_rx,
-            sample_tx,
+            samples,
             sample_tags: HashMap::new(),
-            replay_rx,
-            replay_tx,
+            replays,
             replay_tags: HashMap::new(),
             next_tag: 0,
             steps_since_update: HashMap::new(),
@@ -107,7 +108,7 @@ impl AsyncReplayOptimizer {
         self.next_tag += 1;
         self.workers.remotes[worker_idx].call_into(
             tag,
-            self.sample_tx.clone(),
+            &self.samples,
             |w| w.sample(),
         );
         self.sample_tags.insert(tag, worker_idx);
@@ -118,7 +119,7 @@ impl AsyncReplayOptimizer {
         self.next_tag += 1;
         self.replay_actors[actor_idx].call_into(
             tag,
-            self.replay_tx.clone(),
+            &self.replays,
             |ra| ra.replay(),
         );
         self.replay_tags.insert(tag, actor_idx);
@@ -133,8 +134,12 @@ impl AsyncReplayOptimizer {
         }
         // Kick off async background sampling with fresh weights (one
         // shared Arc across all workers).
-        let weights: std::sync::Arc<[f32]> =
-            self.workers.local.call(|w| w.get_weights()).into();
+        let weights: std::sync::Arc<[f32]> = self
+            .workers
+            .local
+            .call(|w| w.get_weights())
+            .expect("learner died")
+            .into();
         for worker_idx in 0..self.workers.remotes.len() {
             let w = std::sync::Arc::clone(&weights);
             self.workers.remotes[worker_idx]
@@ -159,7 +164,13 @@ impl AsyncReplayOptimizer {
         let mut sample_timer = self.timers.remove("sample_processing").unwrap();
         sample_timer.time(|| {
             // Drain all completed sample tasks without blocking.
-            while let Ok((tag, batch)) = self.sample_rx.try_recv() {
+            while let Some(done) = self.samples.try_pop() {
+                let (tag, batch) = match done {
+                    Completion::Item { tag, value } => (tag, value),
+                    Completion::Dropped { tag } => {
+                        panic!("sample worker for task {tag} died")
+                    }
+                };
                 let worker_idx =
                     self.sample_tags.remove(&tag).expect("unknown tag");
                 let count = batch.len();
@@ -178,8 +189,12 @@ impl AsyncReplayOptimizer {
                     *since = 0;
                     let mut put_timer =
                         self.timers.remove("put_weights").unwrap();
-                    let weights = put_timer
-                        .time(|| self.workers.local.call(|w| w.get_weights()));
+                    let weights = put_timer.time(|| {
+                        self.workers
+                            .local
+                            .call(|w| w.get_weights())
+                            .expect("learner died")
+                    });
                     self.timers.insert("put_weights", put_timer);
                     self.workers.remotes[worker_idx]
                         .cast(move |w| w.set_weights(&weights));
@@ -204,11 +219,19 @@ impl AsyncReplayOptimizer {
                     learned.push((actor_idx, sample));
                 }
             };
+            let unpack = |c: Completion<Option<ReplaySample>>| match c {
+                Completion::Item { tag, value } => (tag, value),
+                Completion::Dropped { tag } => {
+                    panic!("replay actor for task {tag} died")
+                }
+            };
             // Block for one...
-            let (tag, maybe) = self.replay_rx.recv().expect("replay died");
+            let replays = self.replays.clone();
+            let (tag, maybe) = unpack(replays.pop());
             process(self, tag, maybe);
             // ...then drain whatever else is ready.
-            while let Ok((tag, maybe)) = self.replay_rx.try_recv() {
+            while let Some(c) = replays.try_pop() {
+                let (tag, maybe) = unpack(c);
                 process(self, tag, maybe);
             }
         });
@@ -220,8 +243,12 @@ impl AsyncReplayOptimizer {
             let indices = sample.indices;
             let batch = sample.batch;
             let mut train_timer = self.timers.remove("train").unwrap();
-            let (stats, td) = train_timer
-                .time(|| self.workers.local.call(move |w| w.learn_and_td(&batch)));
+            let (stats, td) = train_timer.time(|| {
+                self.workers
+                    .local
+                    .call(move |w| w.learn_and_td(&batch))
+                    .expect("learner died")
+            });
             train_timer.push_units_processed(steps as f64);
             self.timers.insert("train", train_timer);
 

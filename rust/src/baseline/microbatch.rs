@@ -147,7 +147,7 @@ impl MicrobatchPpo {
         let replies: Vec<_> =
             workers.iter().map(|w| w.call_deferred(|_| ())).collect();
         for r in replies {
-            r.recv();
+            r.recv().expect("worker died");
         }
         t.init += start.elapsed();
 
@@ -161,7 +161,7 @@ impl MicrobatchPpo {
                 .map(|w| w.call_deferred(|state| state.sample()))
                 .collect();
             for r in replies {
-                let b = r.recv();
+                let b = r.recv().expect("worker died");
                 count += b.len();
                 collected.push(b);
             }
@@ -169,7 +169,8 @@ impl MicrobatchPpo {
         let train_batch = SampleBatch::concat_all(&collected);
         self.num_steps_sampled += train_batch.len();
         for w in &workers {
-            self.episodes.extend(w.call(|state| state.pop_episodes()));
+            self.episodes
+                .extend(w.call(|state| state.pop_episodes()).expect("worker died"));
         }
         t.sample += start.elapsed();
 

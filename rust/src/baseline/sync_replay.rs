@@ -32,7 +32,8 @@ impl SyncReplayOptimizer {
         train_batch_size: usize,
         target_update_every: usize,
     ) -> Self {
-        let obs_dim = workers.local.call(|w| w.obs_dim());
+        let obs_dim =
+            workers.local.call(|w| w.obs_dim()).expect("learner died");
         SyncReplayOptimizer {
             workers,
             buffer: PrioritizedReplayBuffer::with_obs_dim(
@@ -64,7 +65,10 @@ impl SyncReplayOptimizer {
                 .iter()
                 .map(|w| w.call_deferred(|state| state.sample()))
                 .collect();
-            replies.into_iter().map(|r| r.recv()).collect::<Vec<_>>()
+            replies
+                .into_iter()
+                .map(|r| r.recv().expect("worker died"))
+                .collect::<Vec<_>>()
         });
         for batch in round {
             self.num_steps_sampled += batch.len();
@@ -81,7 +85,10 @@ impl SyncReplayOptimizer {
                 let indices = sample.indices;
                 let batch = sample.batch;
                 let (stats, td) = self.grad_timer.time(|| {
-                    self.workers.local.call(move |w| w.learn_and_td(&batch))
+                    self.workers
+                        .local
+                        .call(move |w| w.learn_and_td(&batch))
+                        .expect("learner died")
                 });
                 self.buffer.update_priorities(&indices, &td);
                 self.num_steps_trained += steps;

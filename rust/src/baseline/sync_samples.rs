@@ -51,7 +51,10 @@ impl SyncSamplesOptimizer {
                     .iter()
                     .map(|w| w.call_deferred(|state| state.sample()))
                     .collect();
-                replies.into_iter().map(|r| r.recv()).collect::<Vec<_>>()
+                replies
+                .into_iter()
+                .map(|r| r.recv().expect("worker died"))
+                .collect::<Vec<_>>()
             });
             for b in round {
                 count += b.len();
@@ -67,6 +70,7 @@ impl SyncSamplesOptimizer {
             self.workers
                 .local
                 .call(move |w| w.learn_on_batch(&train_batch))
+                .expect("learner died")
         });
         self.num_steps_trained += steps;
 

@@ -57,13 +57,21 @@ impl Checkpoint {
             f.write_all(&self.steps_sampled.to_le_bytes())?;
             f.write_all(&self.steps_trained.to_le_bytes())?;
             f.write_all(&(self.weights.len() as u32).to_le_bytes())?;
+            // Each weight tensor is serialized as ONE contiguous
+            // byte-slice (little-endian f32s assembled in a reused
+            // buffer) instead of one write_all per element — a learner
+            // checkpoint is a single buffered write per policy.
+            let mut bytes: Vec<u8> = Vec::new();
             for (name, w) in &self.weights {
                 f.write_all(&(name.len() as u32).to_le_bytes())?;
                 f.write_all(name.as_bytes())?;
                 f.write_all(&(w.len() as u32).to_le_bytes())?;
+                bytes.clear();
+                bytes.reserve(w.len() * 4);
                 for v in w {
-                    f.write_all(&v.to_le_bytes())?;
+                    bytes.extend_from_slice(&v.to_le_bytes());
                 }
+                f.write_all(&bytes)?;
             }
         }
         std::fs::rename(&tmp, path)
@@ -128,7 +136,10 @@ pub fn checkpoint_worker_set(
     steps_sampled: u64,
     steps_trained: u64,
 ) -> Checkpoint {
-    let weights = workers.local.call(|w| w.get_weights());
+    let weights = workers
+        .local
+        .call(|w| w.get_weights())
+        .expect("local (learner) worker died");
     let mut ck = Checkpoint::single(weights);
     ck.steps_sampled = steps_sampled;
     ck.steps_trained = steps_trained;
@@ -146,7 +157,10 @@ pub fn restore_worker_set(
         .ok_or_else(|| anyhow!("no 'default' policy in checkpoint"))?
         .clone();
     let wl = w.clone();
-    workers.local.call(move |state| state.set_weights(&wl));
+    workers
+        .local
+        .call(move |state| state.set_weights(&wl))
+        .map_err(|e| anyhow!("restoring into local worker: {e}"))?;
     for r in &workers.remotes {
         let wr = w.clone();
         r.cast(move |state| state.set_weights(&wr));
@@ -173,6 +187,27 @@ mod tests {
         ck.save(&path).unwrap();
         let loaded = Checkpoint::load(&path).unwrap();
         assert_eq!(loaded, ck);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn large_tensor_contiguous_write_roundtrip() {
+        // The contiguous-slice serialization must be bit-exact for a
+        // realistically sized parameter vector (and stay in the v1
+        // format: header unchanged, payload = packed LE f32s).
+        let n = 200_000;
+        let w: Vec<f32> = (0..n).map(|i| (i as f32).sin() * 1e3).collect();
+        let mut ck = Checkpoint::single(w.clone());
+        ck.steps_sampled = 9;
+        let path = tmp("large.ckpt");
+        ck.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // magic(8) + version(4) + counters(16) + n_policies(4)
+        //   + name_len(4) + "default"(7) + len(4) + payload.
+        assert_eq!(bytes.len(), 8 + 4 + 16 + 4 + 4 + 7 + 4 + n * 4);
+        let loaded = Checkpoint::load(&path).unwrap();
+        assert_eq!(loaded.weights["default"], w);
+        assert_eq!(loaded.steps_sampled, 9);
         std::fs::remove_file(&path).ok();
     }
 
@@ -236,7 +271,7 @@ mod tests {
                 )
             })
         });
-        set.local.call(|w| w.set_weights(&[0.875]));
+        set.local.call(|w| w.set_weights(&[0.875])).unwrap();
         let ck = checkpoint_worker_set(&set, 100, 50);
         assert_eq!(ck.weights["default"], vec![0.875]);
 
@@ -254,9 +289,9 @@ mod tests {
             })
         });
         restore_worker_set(&set2, &ck).unwrap();
-        assert_eq!(set2.local.call(|w| w.get_weights()), vec![0.875]);
+        assert_eq!(set2.local.call(|w| w.get_weights()).unwrap(), vec![0.875]);
         for r in &set2.remotes {
-            assert_eq!(r.call(|w| w.get_weights()), vec![0.875]);
+            assert_eq!(r.call(|w| w.get_weights()).unwrap(), vec![0.875]);
         }
     }
 }

@@ -5,10 +5,20 @@
 //! closure that, when invoked **on the actor**, produces the next item.
 //! `for_each` extends the plan (still on-actor); the `gather_*`
 //! sequencing operators are the only places execution is driven.
+//!
+//! Both gather modes ride one shared bounded [`CompletionQueue`] (the
+//! batched-`ray.wait` analog): shards deliver results into it with
+//! `call_into`, and its bound — `shards x num_async` for `gather_async`,
+//! `shards` for `gather_sync` — is exactly the in-flight budget, so
+//! `num_async` is a real flow-control knob, not a hint.  A shard whose
+//! actor dies (panics) delivers a death notice instead of a value; the
+//! gather marks it exhausted and the stream continues off the surviving
+//! shards rather than panicking the driver (restart policy lives with
+//! the owner, e.g. `WorkerSet::restart_dead`).
 
-use std::sync::{mpsc, Arc};
+use std::sync::Arc;
 
-use crate::actor::ActorHandle;
+use crate::actor::{ActorHandle, Completion, CompletionQueue};
 
 use super::LocalIter;
 
@@ -62,8 +72,8 @@ impl<W: 'static, T: Send + 'static> ParIter<W, T> {
     /// Sequencing operator, async mode (pink arrow): items are merged
     /// into the sequential iterator *as soon as they are ready*, in
     /// nondeterministic order.  `num_async` requests are kept in flight
-    /// per shard (the pipeline-parallelism knob, paper §3) via a shared
-    /// completion queue — the analog of RLlib's batched `ray.wait`.
+    /// per shard (the pipeline-parallelism knob, paper §3) via the
+    /// shared completion queue.
     pub fn gather_async(self, num_async: usize) -> LocalIter<T> {
         self.gather_async_with_source(num_async).for_each(|(t, _)| t)
     }
@@ -76,22 +86,29 @@ impl<W: 'static, T: Send + 'static> ParIter<W, T> {
         num_async: usize,
     ) -> LocalIter<(T, ActorHandle<W>)> {
         assert!(num_async >= 1);
-        struct State<W: 'static, T> {
+        struct State<W: 'static, T: Send + 'static> {
             shards: Vec<ActorHandle<W>>,
             plan: PlanFn<W, T>,
-            tx: mpsc::Sender<(usize, Option<T>)>,
-            rx: mpsc::Receiver<(usize, Option<T>)>,
+            queue: CompletionQueue<Option<T>>,
             outstanding: usize,
             shard_done: Vec<bool>,
             started: bool,
         }
-        let (tx, rx) = mpsc::channel();
+        impl<W: 'static, T: Send + 'static> State<W, T> {
+            /// Submit one plan invocation to shard `idx`.  Every
+            /// submission yields exactly one completion (value or death
+            /// notice), so `outstanding` can never leak.
+            fn submit(&mut self, idx: usize) {
+                let plan = self.plan.clone();
+                self.shards[idx].call_into(idx, &self.queue, move |w| plan(w));
+                self.outstanding += 1;
+            }
+        }
         let n = self.shards.len();
         let mut st = State {
+            queue: CompletionQueue::bounded((n * num_async).max(1)),
             shards: self.shards,
             plan: self.plan,
-            tx,
-            rx,
             outstanding: 0,
             shard_done: vec![false; n],
             started: false,
@@ -100,11 +117,9 @@ impl<W: 'static, T: Send + 'static> ParIter<W, T> {
             if !st.started {
                 st.started = true;
                 // Prime the pipeline: num_async calls in flight per shard.
-                for (i, shard) in st.shards.iter().enumerate() {
+                for i in 0..st.shards.len() {
                     for _ in 0..num_async {
-                        let plan = st.plan.clone();
-                        shard.call_into(i, st.tx.clone(), move |w| plan(w));
-                        st.outstanding += 1;
+                        st.submit(i);
                     }
                 }
             }
@@ -112,61 +127,87 @@ impl<W: 'static, T: Send + 'static> ParIter<W, T> {
                 if st.outstanding == 0 {
                     return None;
                 }
-                let (idx, item) = st.rx.recv().ok()?;
+                let completion = st.queue.pop();
                 st.outstanding -= 1;
-                match item {
-                    Some(t) if !st.shard_done[idx] => {
+                match completion {
+                    Completion::Item { tag, value: Some(t) }
+                        if !st.shard_done[tag] =>
+                    {
                         // Refill the shard's pipeline slot.
-                        let plan = st.plan.clone();
-                        st.shards[idx].call_into(idx, st.tx.clone(), move |w| {
-                            plan(w)
-                        });
-                        st.outstanding += 1;
-                        return Some((t, st.shards[idx].clone()));
+                        st.submit(tag);
+                        return Some((t, st.shards[tag].clone()));
                     }
-                    Some(_) => {
+                    Completion::Item { value: Some(_), .. } => {
                         // Late result from a pipelined call issued before
                         // the shard reported exhaustion: drop it.
                     }
-                    None => st.shard_done[idx] = true,
+                    Completion::Item { tag, value: None } => {
+                        st.shard_done[tag] = true;
+                    }
+                    Completion::Dropped { tag } => {
+                        // Shard actor died; retire it and keep pulling
+                        // from the survivors.
+                        st.shard_done[tag] = true;
+                    }
                 }
             }
         })
     }
 
     /// Sequencing operator, sync mode (black arrow): each `next()`
-    /// issues one call to **every** shard, waits for all of them
+    /// issues one call to **every** live shard, waits for all of them
     /// (executing in parallel across actor threads), and yields the
-    /// round as a `Vec`.  Upstream is fully halted between fetches —
-    /// barrier semantics, so actor messages sent between fetches (e.g.
-    /// a weight broadcast) are ordered with respect to dataflow steps
-    /// (paper §4 Sequencing).  Ends when any shard is exhausted.
+    /// round as a `Vec` in shard order.  Upstream is fully halted
+    /// between fetches — barrier semantics, so actor messages sent
+    /// between fetches (e.g. a weight broadcast) are ordered with
+    /// respect to dataflow steps (paper §4 Sequencing).  Ends when any
+    /// shard is exhausted; a shard whose actor *died* is dropped from
+    /// subsequent rounds instead (the stream ends when none survive).
     pub fn gather_sync(self) -> LocalIter<Vec<T>> {
+        let n = self.shards.len();
         let shards = self.shards;
         let plan = self.plan;
+        let queue: CompletionQueue<Option<T>> =
+            CompletionQueue::bounded(n.max(1));
+        let mut alive = vec![true; n];
         let mut done = false;
         LocalIter::from_fn(move || {
             if done {
                 return None;
             }
-            let replies: Vec<_> = shards
-                .iter()
-                .map(|h| {
+            let mut issued = 0usize;
+            for (i, shard) in shards.iter().enumerate() {
+                if alive[i] {
                     let plan = plan.clone();
-                    h.call_deferred(move |w| plan(w))
-                })
-                .collect();
-            let mut items = Vec::with_capacity(replies.len());
-            for r in replies {
-                match r.recv() {
-                    Some(t) => items.push(t),
-                    None => {
-                        done = true;
-                        return None;
-                    }
+                    shard.call_into(i, &queue, move |w| plan(w));
+                    issued += 1;
                 }
             }
-            Some(items)
+            if issued == 0 {
+                done = true;
+                return None;
+            }
+            // Collect the whole round (reassembled into shard order so
+            // barrier plans stay deterministic) before deciding.
+            let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+            for _ in 0..issued {
+                match queue.pop() {
+                    Completion::Item { tag, value: Some(t) } => {
+                        slots[tag] = Some(t);
+                    }
+                    Completion::Item { value: None, .. } => done = true,
+                    Completion::Dropped { tag } => alive[tag] = false,
+                }
+            }
+            if done {
+                return None;
+            }
+            let round: Vec<T> = slots.into_iter().flatten().collect();
+            if round.is_empty() {
+                done = true;
+                return None;
+            }
+            Some(round)
         })
     }
 }
@@ -213,7 +254,7 @@ mod tests {
             Some(w.counter)
         });
         std::thread::sleep(std::time::Duration::from_millis(20));
-        assert_eq!(ws[0].call(|w| w.counter), 0);
+        assert_eq!(ws[0].call(|w| w.counter).unwrap(), 0);
     }
 
     #[test]
@@ -288,7 +329,7 @@ mod tests {
         .gather_async(2);
         assert_eq!(it.next(), Some(1));
         std::thread::sleep(std::time::Duration::from_millis(30));
-        let counter = ws[0].call(|w| w.counter);
+        let counter = ws[0].call(|w| w.counter).unwrap();
         assert!(counter >= 2, "pipelining should prefetch, counter={counter}");
     }
 
@@ -326,10 +367,56 @@ mod tests {
         let mut pairs = vec![];
         while let Some((id, handle)) = it.next() {
             // The paired handle must address the producing actor.
-            let actor_id = handle.call(|w| w.id);
+            let actor_id = handle.call(|w| w.id).unwrap();
             pairs.push((id, actor_id));
         }
         assert_eq!(pairs.len(), 2);
         assert!(pairs.iter().all(|(a, b)| a == b));
+    }
+
+    // -----------------------------------------------------------------
+    // Supervision: shard death mid-stream
+    // -----------------------------------------------------------------
+
+    #[test]
+    fn gather_async_survives_a_dying_shard() {
+        let ws = workers(3);
+        let it = ParIter::from_actors(ws.clone(), |w| {
+            w.counter += 1;
+            if w.id == 1 && w.counter == 2 {
+                panic!("shard 1 exploded");
+            }
+            if w.counter > 5 {
+                None
+            } else {
+                Some(w.id)
+            }
+        })
+        .gather_async(1);
+        let got = it.collect();
+        // Shards 0 and 2 deliver all 5 items; shard 1 dies after 1.
+        assert_eq!(got.iter().filter(|&&x| x == 0).count(), 5);
+        assert_eq!(got.iter().filter(|&&x| x == 2).count(), 5);
+        assert!(got.iter().filter(|&&x| x == 1).count() <= 1);
+        assert!(ws[1].await_poisoned(std::time::Duration::from_secs(2)));
+        assert!(!ws[0].is_poisoned());
+    }
+
+    #[test]
+    fn gather_sync_drops_dead_shard_and_continues() {
+        let ws = workers(3);
+        let mut it = ParIter::from_actors(ws.clone(), |w| {
+            w.counter += 1;
+            if w.id == 2 && w.counter == 2 {
+                panic!("shard 2 exploded");
+            }
+            Some(w.counter)
+        })
+        .gather_sync();
+        assert_eq!(it.next().unwrap(), vec![1, 1, 1]);
+        // Round 2: shard 2 dies; the barrier completes off survivors.
+        assert_eq!(it.next().unwrap(), vec![2, 2]);
+        assert_eq!(it.next().unwrap(), vec![3, 3]);
+        assert!(ws[2].await_poisoned(std::time::Duration::from_secs(2)));
     }
 }

@@ -2,7 +2,7 @@
 //! fragments (paper §4 Concurrency, Figure 8; used by Ape-X and the
 //! multi-agent PPO+DQN composition).
 
-use std::sync::mpsc;
+use crate::actor::{Completion, CompletionQueue};
 
 use super::LocalIter;
 
@@ -15,9 +15,11 @@ pub enum UnionMode {
     RoundRobin { weights: Option<Vec<usize>> },
     /// Drive every child from its own driver thread, yielding items as
     /// they become ready (maximum pipeline overlap — Ape-X's
-    /// mode="async").  Each child is driven at most `buffer` items ahead
-    /// of consumption (bounded channels provide the backpressure the
-    /// paper's scheduler applies to concurrent fragments).
+    /// mode="async").  Each child's completions flow through one shared
+    /// [`CompletionQueue`] with a **per-child credit of `buffer`**: a
+    /// child may run at most `buffer` items ahead of consumption (plus
+    /// the one item in its hands), then parks — real backpressure, per
+    /// fragment, not a shared-channel approximation.
     Async { buffer: usize },
 }
 
@@ -90,66 +92,107 @@ fn round_robin<T: Send + 'static>(
     })
 }
 
+/// Driver-side state; closing the queue on drop releases child threads
+/// parked in `push` when the consumer abandons the stream mid-way.
+struct AsyncUnionState<T: Send + 'static> {
+    queue: CompletionQueue<Option<T>>,
+    live: usize,
+}
+
+impl<T: Send + 'static> Drop for AsyncUnionState<T> {
+    fn drop(&mut self) {
+        self.queue.close();
+    }
+}
+
+/// Rides each child driver thread: if the child unwinds (a panic inside
+/// the fragment, e.g. a dead-learner `expect`), a death notice still
+/// reaches the consumer so the union terminates instead of parking
+/// forever — the disconnect semantics the old per-child mpsc sender
+/// gave for free.
+struct UnionChildGuard<T: Send + 'static> {
+    queue: CompletionQueue<Option<T>>,
+    tag: usize,
+    done: bool,
+}
+
+impl<T: Send + 'static> Drop for UnionChildGuard<T> {
+    fn drop(&mut self) {
+        if !self.done {
+            self.queue.push_dropped(self.tag);
+        }
+    }
+}
+
 fn async_union<T: Send + 'static>(
     children: Vec<LocalIter<T>>,
     buffer: usize,
     emit: impl Fn(usize) -> bool + Send + 'static,
 ) -> LocalIter<T> {
     assert!(buffer >= 1);
-    struct State<T> {
-        rx: mpsc::Receiver<(usize, Option<T>)>,
-        live: usize,
-    }
-    let mut lazy: Option<State<T>> = None;
+    let mut lazy: Option<AsyncUnionState<T>> = None;
     let mut children = Some(children);
     LocalIter::from_fn(move || {
         let st = lazy.get_or_insert_with(|| {
             // First pull: spawn one driver thread per child.  The
-            // bounded channel means each child runs at most `buffer`
+            // per-child credit means each child runs at most `buffer`
             // items ahead of the consumer.
             let children = children.take().unwrap();
-            let (tx, rx) = mpsc::sync_channel(buffer);
+            let queue: CompletionQueue<Option<T>> =
+                CompletionQueue::per_tag(children.len().max(1), buffer);
             let live = children.len();
             for (i, mut child) in children.into_iter().enumerate() {
-                let tx = tx.clone();
+                let q = queue.clone();
                 std::thread::Builder::new()
                     .name(format!("union-{i}"))
-                    .spawn(move || loop {
-                        let item = child.next();
-                        let end = item.is_none();
-                        if tx.send((i, item)).is_err() || end {
-                            return;
+                    .spawn(move || {
+                        let mut guard = UnionChildGuard {
+                            queue: q.clone(),
+                            tag: i,
+                            done: false,
+                        };
+                        loop {
+                            // child.next() may panic (a subflow's
+                            // dead-learner expect): the guard then
+                            // delivers the death notice.
+                            let item = child.next();
+                            let end = item.is_none();
+                            // push returns false once the consumer
+                            // closed the queue — stop driving.
+                            if !q.push(i, item) || end {
+                                guard.done = true;
+                                return;
+                            }
                         }
                     })
                     .expect("spawn union driver");
             }
-            State { rx: to_receiver(rx), live }
+            AsyncUnionState { queue, live }
         });
         loop {
             if st.live == 0 {
                 return None;
             }
-            match st.rx.recv() {
-                Ok((idx, Some(t))) => {
-                    if emit(idx) {
+            match st.queue.pop() {
+                Completion::Item { tag, value: Some(t) } => {
+                    if emit(tag) {
                         return Some(t);
                     }
                 }
-                Ok((_, None)) => st.live -= 1,
-                Err(_) => return None,
+                // None = clean child end; Dropped = the child driver
+                // panicked (its guard delivered the notice).
+                Completion::Item { value: None, .. }
+                | Completion::Dropped { .. } => st.live -= 1,
             }
         }
     })
 }
 
-/// `sync_channel` gives a `Receiver` already; helper for type clarity.
-fn to_receiver<T>(rx: mpsc::Receiver<T>) -> mpsc::Receiver<T> {
-    rx
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
 
     #[test]
     fn round_robin_alternates() {
@@ -193,8 +236,6 @@ mod tests {
 
     #[test]
     fn output_indexes_drive_but_drop() {
-        use std::sync::atomic::{AtomicUsize, Ordering};
-        use std::sync::Arc;
         let driven = Arc::new(AtomicUsize::new(0));
         let d = driven.clone();
         let mut n = 0;
@@ -278,5 +319,149 @@ mod tests {
         )
         .collect();
         assert!(got.is_empty());
+    }
+
+    // -----------------------------------------------------------------
+    // Weighted fairness: the RoundRobin ratio is exact at every cycle
+    // boundary, not just in aggregate.
+    // -----------------------------------------------------------------
+
+    #[test]
+    fn round_robin_weighted_fairness_ratios() {
+        // Infinite children tagged by id, weights 3:1:2.
+        let mk = |id: usize| {
+            let mut n = 0usize;
+            LocalIter::from_fn(move || {
+                n += 1;
+                Some((id, n))
+            })
+        };
+        let weights = vec![3usize, 1, 2];
+        let cycle: usize = weights.iter().sum();
+        let it = concurrently(
+            vec![mk(0), mk(1), mk(2)],
+            UnionMode::RoundRobin { weights: Some(weights.clone()) },
+            None,
+        );
+        let mut it = it;
+        let cycles = 50;
+        let mut got = Vec::new();
+        for _ in 0..cycles * cycle {
+            got.push(it.next().unwrap());
+        }
+        // At every cycle boundary each child has been driven exactly
+        // weight[i] * cycles_so_far times: a fixed progress ratio, the
+        // Acme-style rate limiting the paper's Union(weights) models.
+        for k in 1..=cycles {
+            let prefix = &got[..k * cycle];
+            for (id, &w) in weights.iter().enumerate() {
+                let pulls = prefix.iter().filter(|(c, _)| *c == id).count();
+                assert_eq!(
+                    pulls,
+                    w * k,
+                    "child {id} off-ratio after {k} cycles"
+                );
+            }
+        }
+        // Per-child items arrive in order.
+        for id in 0..3 {
+            let seq: Vec<usize> =
+                got.iter().filter(|(c, _)| *c == id).map(|(_, n)| *n).collect();
+            assert_eq!(seq, (1..=seq.len()).collect::<Vec<_>>());
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // Async-mode backpressure: a child is driven at most `buffer` items
+    // ahead of consumption (plus the single item in its hands).
+    // -----------------------------------------------------------------
+
+    #[test]
+    fn async_mode_buffer_bounds_runahead() {
+        let buffer = 3usize;
+        let driven = Arc::new(AtomicUsize::new(0));
+        let d = driven.clone();
+        let child = LocalIter::from_fn(move || {
+            Some(d.fetch_add(1, Ordering::SeqCst) + 1) // items 1, 2, 3, ...
+        });
+        let mut it = concurrently(
+            vec![child],
+            UnionMode::Async { buffer },
+            None,
+        );
+        let mut consumed = 0usize;
+        for _ in 0..5 {
+            // Let the child run as far ahead as the credit allows.
+            assert!(it.next().is_some());
+            consumed += 1;
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            let produced = driven.load(Ordering::SeqCst);
+            assert!(
+                produced <= consumed + buffer + 1,
+                "child ran {produced} ahead of {consumed} (buffer {buffer})"
+            );
+        }
+        // And it does pipeline: with consumption stalled the child still
+        // fills its whole credit.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let produced = driven.load(Ordering::SeqCst);
+        assert!(
+            produced >= consumed + buffer,
+            "child failed to prefetch: {produced} vs {consumed}+{buffer}"
+        );
+        drop(it); // close() releases the parked child thread
+    }
+
+    #[test]
+    fn async_mode_terminates_when_a_child_panics() {
+        // A child fragment that panics (e.g. a dead-learner expect in a
+        // subflow closure) must end the union, not hang the driver.
+        let mut n = 0;
+        let doomed = LocalIter::from_fn(move || {
+            n += 1;
+            if n >= 2 {
+                panic!("child fragment exploded");
+            }
+            Some(100)
+        });
+        let healthy = LocalIter::from_items(vec![1, 2, 3]);
+        let got = concurrently(
+            vec![doomed, healthy],
+            UnionMode::Async { buffer: 2 },
+            None,
+        )
+        .collect();
+        // Everything the healthy child produced arrives, plus at most
+        // the doomed child's first item; then the stream ENDS.
+        let healthy_items: Vec<i32> =
+            got.iter().copied().filter(|&x| x < 100).collect();
+        let mut sorted = healthy_items.clone();
+        sorted.sort();
+        assert_eq!(sorted, vec![1, 2, 3]);
+        assert!(got.iter().filter(|&&x| x == 100).count() <= 1);
+    }
+
+    #[test]
+    fn async_mode_dropping_stream_releases_children() {
+        // A consumer that abandons the stream must not leave child
+        // threads parked forever: close() fails their next push.
+        let alive = Arc::new(AtomicUsize::new(0));
+        let a = alive.clone();
+        let child = LocalIter::from_fn(move || {
+            a.fetch_add(1, Ordering::SeqCst);
+            Some(1)
+        });
+        let mut it =
+            concurrently(vec![child], UnionMode::Async { buffer: 1 }, None);
+        assert_eq!(it.next(), Some(1));
+        drop(it);
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        let settled = alive.load(Ordering::SeqCst);
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        assert_eq!(
+            alive.load(Ordering::SeqCst),
+            settled,
+            "child kept being driven after the stream was dropped"
+        );
     }
 }

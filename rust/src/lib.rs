@@ -40,6 +40,31 @@
 //! * Weight broadcasts ship one `Arc<[f32]>` to all remotes instead of
 //!   cloning the parameter vector per worker.
 //!
+//! ## The control plane
+//!
+//! Every dataflow edge is also at least one actor message, so the
+//! control plane is built to disappear from the per-item path (see
+//! `docs/actor_runtime.md`):
+//!
+//! * Actors run on **bounded ring mailboxes** with 256-byte inline
+//!   envelopes: a steady-state `cast`/`call`/`call_into` is a slot
+//!   write — zero per-message heap allocation (asserted by
+//!   `tests/actor_alloc.rs`), with blocking-send/`try_cast`
+//!   backpressure instead of unbounded queue growth.
+//! * The sequencing operators (`gather_async`, `gather_sync`) and
+//!   `union`'s async mode share one bounded [`actor::CompletionQueue`]
+//!   (the batched-`ray.wait` analog), making `num_async` and
+//!   `Union::buffer` real flow-control knobs.
+//! * Actors are **supervised**: a panic poisons the actor instead of
+//!   tearing down the driver — pending replies resolve to
+//!   [`actor::ActorDied`], gathers retire the dead shard and keep
+//!   streaming, and `WorkerSet::restart_dead` respawns poisoned rollout
+//!   workers from the retained factory.
+//! * Per-actor telemetry (queue depth/high-water, messages, busy/idle
+//!   time) flows through a global registry into every
+//!   `TrainResult::actor_stats`, so each report can say *where* the
+//!   pipeline is starved (`TrainResult::pipeline_summary`).
+//!
 //! Numerics are JAX/Pallas programs lowered once to HLO text
 //! (`make artifacts`) and executed from rust via PJRT — python is never
 //! on the training path.  In offline builds the PJRT bindings are the

@@ -3,6 +3,7 @@
 
 use std::collections::BTreeMap;
 
+use crate::actor::ActorStatsSnapshot;
 use crate::util::MovingStat;
 
 /// A finished episode, reported by the worker that ran it.
@@ -67,6 +68,8 @@ impl MetricsHub {
             sampled_steps_per_s: self.num_env_steps_sampled as f64
                 / self.start.elapsed().as_secs_f64().max(1e-9),
             learner_stats: self.learner_stats.clone(),
+            // Filled by the reporting operator from the actor registry.
+            actor_stats: Vec::new(),
         }
     }
 }
@@ -83,6 +86,47 @@ pub struct TrainResult {
     pub num_grad_updates: u64,
     pub sampled_steps_per_s: f64,
     pub learner_stats: BTreeMap<String, f64>,
+    /// Runtime telemetry for every live actor at report time (queue
+    /// depth + high water, messages, busy/idle ns, supervision state) —
+    /// filled by the metrics-reporting operators from the actor
+    /// registry.  `utilization()` per entry locates the starved stage.
+    pub actor_stats: Vec<ActorStatsSnapshot>,
+}
+
+impl TrainResult {
+    /// One-line pipeline-health summary: busiest and idlest actor by
+    /// utilization, plus the deepest mailbox high-water mark.
+    pub fn pipeline_summary(&self) -> String {
+        let mut live: Vec<&ActorStatsSnapshot> = self
+            .actor_stats
+            .iter()
+            .filter(|s| s.busy_ns + s.idle_ns > 0)
+            .collect();
+        if live.is_empty() {
+            return "no actor telemetry".to_string();
+        }
+        live.sort_by(|a, b| {
+            a.utilization().total_cmp(&b.utilization())
+        });
+        let idle = live.first().unwrap();
+        let busy = live.last().unwrap();
+        let hwm = self
+            .actor_stats
+            .iter()
+            .max_by_key(|s| s.queue_hwm)
+            .unwrap();
+        let dead = self.actor_stats.iter().filter(|s| s.poisoned).count();
+        format!(
+            "busiest={}({:.0}%) idlest={}({:.0}%) deepest_queue={}({}) dead={}",
+            busy.name,
+            busy.utilization() * 100.0,
+            idle.name,
+            idle.utilization() * 100.0,
+            hwm.name,
+            hwm.queue_hwm,
+            dead,
+        )
+    }
 }
 
 impl std::fmt::Display for TrainResult {
@@ -133,6 +177,34 @@ mod tests {
         }
         assert_eq!(hub.snapshot().episode_reward_mean, 3.5);
         assert_eq!(hub.snapshot().episodes_total, 4);
+    }
+
+    #[test]
+    fn pipeline_summary_names_extremes() {
+        let mut r = TrainResult::default();
+        assert_eq!(r.pipeline_summary(), "no actor telemetry");
+        r.actor_stats = vec![
+            ActorStatsSnapshot {
+                name: "sampler".into(),
+                busy_ns: 90,
+                idle_ns: 10,
+                queue_hwm: 3,
+                ..Default::default()
+            },
+            ActorStatsSnapshot {
+                name: "learner".into(),
+                busy_ns: 10,
+                idle_ns: 90,
+                queue_hwm: 17,
+                poisoned: false,
+                ..Default::default()
+            },
+        ];
+        let s = r.pipeline_summary();
+        assert!(s.contains("busiest=sampler(90%)"), "{s}");
+        assert!(s.contains("idlest=learner(10%)"), "{s}");
+        assert!(s.contains("deepest_queue=learner(17)"), "{s}");
+        assert!(s.contains("dead=0"), "{s}");
     }
 
     #[test]

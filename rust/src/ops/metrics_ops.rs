@@ -1,16 +1,48 @@
 //! `StandardMetricsReporting` — the terminal operator every algorithm
 //! plan returns: folds training items and worker episode stats into
-//! `TrainResult`s (RLlib's train-result dict).
+//! `TrainResult`s (RLlib's train-result dict), and attaches a snapshot
+//! of every live actor's runtime telemetry (queue depth, utilization,
+//! supervision state) so each report shows *where* the pipeline is
+//! starved, not just how fast it moved.
 
+use crate::actor::ActorHandle;
 use crate::iter::LocalIter;
-use crate::metrics::{MetricsHub, TrainResult};
+use crate::metrics::{EpisodeRecord, MetricsHub, TrainResult};
 use crate::rollout::WorkerSet;
 
 use super::TrainItem;
 
+/// The shared reporting tail: drain episode/step counters from every
+/// worker actor in parallel (a poisoned worker's reply resolves to Err
+/// and is skipped — a worker fault must not panic the driver), then
+/// snapshot the hub with the actor-telemetry registry attached.  Used
+/// by [`standard_metrics_reporting`] and the multi-agent variant so the
+/// two cannot drift.
+pub(crate) fn drain_and_snapshot<A: 'static>(
+    hub: &mut MetricsHub,
+    local: &ActorHandle<A>,
+    remotes: &[ActorHandle<A>],
+    drain: fn(&mut A) -> (Vec<EpisodeRecord>, usize),
+) -> TrainResult {
+    let replies: Vec<_> = std::iter::once(local)
+        .chain(remotes.iter())
+        .map(|h| h.call_deferred(move |w| drain(w)))
+        .collect();
+    for r in replies {
+        if let Ok((eps, steps)) = r.recv() {
+            hub.record_episodes(&eps);
+            hub.num_env_steps_sampled += steps as u64;
+        }
+    }
+    let mut snap = hub.snapshot();
+    snap.actor_stats = crate::actor::all_actor_stats();
+    snap
+}
+
 /// Wrap a training stream: each output pulls `items_per_report` train
-/// items, drains episode metrics from all workers, and emits a
-/// `TrainResult` snapshot.
+/// items, drains episode metrics from all workers (dead workers are
+/// skipped, not fatal), and emits a `TrainResult` snapshot carrying
+/// per-actor utilization/queue-depth stats.
 pub fn standard_metrics_reporting(
     inner: LocalIter<TrainItem>,
     workers: &WorkerSet,
@@ -30,24 +62,12 @@ pub fn standard_metrics_reporting(
                 hub.record_learner_stat(&k, v);
             }
         }
-        // Drain episodes + sampled counters from every worker.
-        let replies: Vec<_> = std::iter::once(&local)
-            .chain(remotes.iter())
-            .map(|h| {
-                h.call_deferred(|w| {
-                    let eps = w.pop_episodes();
-                    let steps = w.num_steps_sampled;
-                    w.num_steps_sampled = 0;
-                    (eps, steps)
-                })
-            })
-            .collect();
-        for r in replies {
-            let (eps, steps) = r.recv();
-            hub.record_episodes(&eps);
-            hub.num_env_steps_sampled += steps as u64;
-        }
-        Some(hub.snapshot())
+        Some(drain_and_snapshot(&mut hub, &local, &remotes, |w| {
+            let eps = w.pop_episodes();
+            let steps = w.num_steps_sampled;
+            w.num_steps_sampled = 0;
+            (eps, steps)
+        }))
     })
 }
 
@@ -97,5 +117,58 @@ mod tests {
         assert!(r.num_env_steps_sampled >= 60);
         assert!(r.episodes_total >= 4); // 10-step episodes on DummyEnv
         assert!(r.learner_stats.contains_key("loss"));
+        // Pipeline telemetry rides along: exactly this plan's worker
+        // actors appear (matched by id — the registry is global), with
+        // work accounted to them.
+        assert!(!r.actor_stats.is_empty());
+        for h in workers.remotes.iter().chain([&workers.local]) {
+            let s = r
+                .actor_stats
+                .iter()
+                .find(|s| s.id == h.id())
+                .unwrap_or_else(|| panic!("no stats for {h:?}"));
+            assert!(s.messages_processed > 0, "{s:?}");
+            assert!(s.busy_ns > 0, "{s:?}");
+            assert!(!s.poisoned);
+        }
+    }
+
+    #[test]
+    fn reports_survive_worker_death_mid_plan() {
+        // Kill a rollout worker while the plan is running: the driver
+        // must keep producing reports off the survivors (the gather
+        // retires the dead shard; metrics draining skips it) and the
+        // report must expose the death through actor_stats.
+        let workers = worker_set(2);
+        let mut train = train_one_step(
+            workers.local.clone(),
+            workers.remotes.clone(),
+        );
+        let train_op = parallel_rollouts(workers.remotes.to_vec())
+            .gather_async(1)
+            .for_each(move |b| train(b));
+        let mut reports = standard_metrics_reporting(train_op, &workers, 1);
+        assert!(reports.next().is_some());
+
+        let victim = &workers.remotes[0];
+        assert!(victim.call(|_| -> () { panic!("fault injection") }).is_err());
+        assert!(victim.await_poisoned(std::time::Duration::from_secs(2)));
+
+        let mut last = None;
+        for _ in 0..3 {
+            last = reports.next();
+            assert!(last.is_some(), "driver stopped reporting after a fault");
+        }
+        let r = last.unwrap();
+        let dead = r
+            .actor_stats
+            .iter()
+            .find(|s| s.id == victim.id())
+            .expect("victim still registered");
+        assert!(dead.poisoned);
+        assert!(r.pipeline_summary().contains("dead="));
+        // The surviving worker keeps sampling.
+        let alive = &workers.remotes[1];
+        assert!(!alive.is_poisoned());
     }
 }

@@ -15,6 +15,7 @@ mod train_ops;
 use std::collections::BTreeMap;
 
 pub use metrics_ops::standard_metrics_reporting;
+pub(crate) use metrics_ops::drain_and_snapshot;
 pub use replay_ops::{
     create_replay_actors, replay, store_to_replay_buffer, ReplayActor,
 };

@@ -105,7 +105,7 @@ mod tests {
             assert_eq!(out.len(), 4); // pass-through
         }
         let totals: Vec<usize> =
-            actors.iter().map(|a| a.call(|ra| ra.num_added)).collect();
+            actors.iter().map(|a| a.call(|ra| ra.num_added).unwrap()).collect();
         assert_eq!(totals.iter().sum::<usize>(), 40);
         assert!(totals.iter().all(|&t| t > 0), "both actors used: {totals:?}");
     }
@@ -145,15 +145,17 @@ mod tests {
     #[test]
     fn priority_update_roundtrip_through_actor() {
         let actors = create_replay_actors(1, 2, 64, 0, 4);
-        actors[0].call({
-            let batch = transitions(4);
-            move |ra| ra.add_batch(&batch)
-        });
+        actors[0]
+            .call({
+                let batch = transitions(4);
+                move |ra| ra.add_batch(&batch)
+            })
+            .unwrap();
         let (sample, actor) = replay(actors, 1).next().unwrap().unwrap();
         let indices = sample.indices.clone();
         let tds = vec![9.0; indices.len()];
-        actor.call(move |ra| ra.update_priorities(&indices, &tds));
+        actor.call(move |ra| ra.update_priorities(&indices, &tds)).unwrap();
         // Priorities applied: the buffer can still sample.
-        assert!(actor.call(|ra| ra.replay()).is_some());
+        assert!(actor.call(|ra| ra.replay()).unwrap().is_some());
     }
 }

@@ -21,10 +21,12 @@ pub fn train_one_step(
 ) -> impl FnMut(SampleBatch) -> TrainItem + Send + 'static {
     move |batch| {
         let steps = batch.len();
-        let (stats, weights) = local.call(move |w| {
-            let stats = w.learn_on_batch(&batch);
-            (stats, w.get_weights())
-        });
+        let (stats, weights) = local
+            .call(move |w| {
+                let stats = w.learn_on_batch(&batch);
+                (stats, w.get_weights())
+            })
+            .expect("learner (local worker) actor died");
         let weights: std::sync::Arc<[f32]> = weights.into();
         for r in &remotes {
             let w = std::sync::Arc::clone(&weights);
@@ -55,10 +57,12 @@ pub fn apply_gradients(
     move |(grads, source)| {
         let steps = grads.count;
         let stats = grads.stats.clone();
-        let weights = local.call(move |w| {
-            w.apply_gradients(&grads);
-            w.get_weights()
-        });
+        let weights = local
+            .call(move |w| {
+                w.apply_gradients(&grads);
+                w.get_weights()
+            })
+            .expect("learner (local worker) actor died");
         source.cast(move |w| w.set_weights(&weights));
         TrainItem::new(stats, steps)
     }
@@ -112,14 +116,14 @@ mod tests {
         let mut ws = workers(3);
         let local = ws.remove(0);
         let mut op = train_one_step(local.clone(), ws.clone());
-        let batch = local.call(|w| w.sample());
+        let batch = local.call(|w| w.sample()).unwrap();
         let item = op(batch);
         assert_eq!(item.steps_trained, 8);
         assert!(item.stats.contains_key("loss"));
-        let local_w = local.call(|w| w.get_weights());
+        let local_w = local.call(|w| w.get_weights()).unwrap();
         assert_ne!(local_w, vec![0.0]); // dummy policy moved
         for r in &ws {
-            assert_eq!(r.call(|w| w.get_weights()), local_w);
+            assert_eq!(r.call(|w| w.get_weights()).unwrap(), local_w);
         }
     }
 
@@ -143,9 +147,9 @@ mod tests {
         assert_eq!(n, 4);
         // Source workers got the updated weights pushed back.
         std::thread::sleep(std::time::Duration::from_millis(50));
-        let local_w = local.call(|w| w.get_weights())[0];
+        let local_w = local.call(|w| w.get_weights()).unwrap()[0];
         assert_ne!(local_w, 0.0);
-        let w0 = all[0].call(|w| w.get_weights())[0];
+        let w0 = all[0].call(|w| w.get_weights()).unwrap()[0];
         assert_ne!(w0, 0.0);
     }
 
@@ -205,7 +209,7 @@ mod tests {
             // 4 x 30 steps -> fires at 120, then accumulates 0.
             op(TrainItem::new(Default::default(), 30));
         }
-        local.call(|_| ()); // drain mailbox
+        local.call(|_| ()).unwrap(); // drain mailbox
         assert_eq!(count.load(Ordering::SeqCst), 1);
     }
 

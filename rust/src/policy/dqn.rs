@@ -24,6 +24,13 @@ pub struct DqnPolicy {
     /// |TD| of the last learn_on_batch (keyed to the replayed rows) —
     /// picked up by `UpdateReplayPriorities`.
     pub last_td_abs: Vec<f32>,
+    /// Reused padded-observation buffer for `q_values` (one inference
+    /// batch wide).
+    pad_scratch: Vec<f32>,
+    /// All-ones loss mask for exactly-sized batches.
+    ones: Vec<f32>,
+    /// Reused importance-weight buffer for `compute_gradients`.
+    weights_scratch: Vec<f32>,
 }
 
 impl DqnPolicy {
@@ -33,6 +40,8 @@ impl DqnPolicy {
     pub fn new(rt: XlaRuntime, lr: f32, epsilon: f64, seed: u64) -> Self {
         let params = rt.load_init_params("init_dqn").expect("init_dqn.bin");
         let n = params.len();
+        let pad = rt.manifest.config.inf_batch * rt.manifest.config.obs_dim;
+        let mb = rt.manifest.config.dqn_minibatch;
         DqnPolicy {
             rt,
             target_params: params.clone(),
@@ -44,6 +53,9 @@ impl DqnPolicy {
             epsilon,
             rng: Rng::new(seed),
             last_td_abs: Vec::new(),
+            pad_scratch: vec![0.0; pad],
+            ones: vec![1.0; mb],
+            weights_scratch: Vec::with_capacity(mb),
         }
     }
 
@@ -59,42 +71,50 @@ impl DqnPolicy {
         Self::new(rt, lr, epsilon, seed)
     }
 
-    /// Q-values for `n` rows (padded/chunked to the artifact batch).
-    fn q_values(&self, obs: &[f32], n: usize) -> Vec<Vec<f32>> {
-        let cfg = &self.rt.manifest.config;
-        let (bi, od, na) = (cfg.inf_batch, cfg.obs_dim, cfg.num_actions);
-        let mut out_rows = Vec::with_capacity(n);
-        let mut padded = vec![0.0f32; bi * od];
+    /// Q-values for `n` rows, flat row-major `[n * num_actions]`
+    /// (padded/chunked to the artifact batch; the pad buffer is a
+    /// reused scratch — one output allocation, no per-row Vecs).
+    fn q_values(&mut self, obs: &[f32], n: usize) -> Vec<f32> {
+        let (bi, od, na) = {
+            let cfg = &self.rt.manifest.config;
+            (cfg.inf_batch, cfg.obs_dim, cfg.num_actions)
+        };
+        let mut out_flat = Vec::with_capacity(n * na);
         for chunk_start in (0..n).step_by(bi) {
             let rows = (n - chunk_start).min(bi);
-            padded[..rows * od]
+            self.pad_scratch[..rows * od]
                 .copy_from_slice(&obs[chunk_start * od..(chunk_start + rows) * od]);
-            padded[rows * od..].fill(0.0);
+            self.pad_scratch[rows * od..].fill(0.0);
             let out = self
                 .rt
                 .exe("dqn_q_fwd")
-                .run(&[TensorArg::F32(&self.params), TensorArg::F32(&padded)])
+                .run(&[
+                    TensorArg::F32(&self.params),
+                    TensorArg::F32(&self.pad_scratch),
+                ])
                 .expect("dqn_q_fwd");
-            for r in 0..rows {
-                out_rows.push(out[0][r * na..(r + 1) * na].to_vec());
-            }
+            out_flat.extend_from_slice(&out[0][..rows * na]);
         }
-        out_rows
+        out_flat
     }
 }
 
 impl Policy for DqnPolicy {
     fn compute_actions(&mut self, obs: &[f32], n: usize) -> Vec<ActionOutput> {
+        let na = self.rt.manifest.config.num_actions;
         let q = self.q_values(obs, n);
-        q.into_iter()
-            .map(|row| {
-                let action = if self.rng.chance(self.epsilon) {
-                    self.rng.below(row.len()) as i32
+        let epsilon = self.epsilon;
+        let rng = &mut self.rng;
+        (0..n)
+            .map(|i| {
+                let row = &q[i * na..(i + 1) * na];
+                let action = if rng.chance(epsilon) {
+                    rng.below(na) as i32
                 } else {
                     row.iter()
                         .enumerate()
                         .max_by(|a, b| a.1.total_cmp(b.1))
-                        .map(|(i, _)| i as i32)
+                        .map(|(j, _)| j as i32)
                         .unwrap()
                 };
                 ActionOutput { action, logp: 0.0, value: 0.0 }
@@ -104,17 +124,28 @@ impl Policy for DqnPolicy {
 
     fn compute_gradients(&mut self, batch: &SampleBatch) -> Gradients {
         let count = batch.len();
-        let cfg = &self.rt.manifest.config;
-        let mb = cfg.dqn_minibatch;
-        let (b, mask) = batch.pad_or_truncate(mb);
-        // Importance weights travel in the batch (prioritized replay);
-        // plain batches weight every row 1.
-        let mut weights = if b.weights.is_empty() {
-            vec![1.0; b.len()]
+        let mb = self.rt.manifest.config.dqn_minibatch;
+        // Fast path: exactly-sized batches (every replay sample) skip
+        // the pad copy, and the all-ones mask is a reused buffer.
+        let (owned, mask_owned);
+        let (b, mask): (&SampleBatch, &[f32]) = if count == mb {
+            (batch, self.ones.as_slice())
         } else {
-            b.weights.to_vec()
+            let (padded, m) = batch.pad_or_truncate(mb);
+            owned = padded;
+            mask_owned = m;
+            (&owned, mask_owned.as_slice())
         };
-        weights.resize(mb, 0.0);
+        // Importance weights travel in the batch (prioritized replay);
+        // plain batches weight every row 1.  The staging buffer is
+        // reused across calls.
+        self.weights_scratch.clear();
+        if b.weights.is_empty() {
+            self.weights_scratch.resize(b.len(), 1.0);
+        } else {
+            self.weights_scratch.extend_from_slice(&b.weights);
+        }
+        self.weights_scratch.resize(mb, 0.0);
         let out = self
             .rt
             .exe("dqn_grad")
@@ -126,8 +157,8 @@ impl Policy for DqnPolicy {
                 TensorArg::F32(&b.rewards),
                 TensorArg::F32(&b.next_obs),
                 TensorArg::F32(&b.dones),
-                TensorArg::F32(&weights),
-                TensorArg::F32(&mask),
+                TensorArg::F32(&self.weights_scratch),
+                TensorArg::F32(mask),
             ])
             .expect("dqn_grad");
         let mut it = out.into_iter();

@@ -35,13 +35,26 @@ pub struct PgCore {
     t: f32,
     pub lr: f32,
     pub rng: Rng,
+    /// Reused padded-observation buffer for `forward` (one inference
+    /// batch wide) — no per-forward allocation on the rollout hot loop.
+    pad_scratch: Vec<f32>,
 }
 
 impl PgCore {
     pub fn new(rt: XlaRuntime, lr: f32, seed: u64) -> Self {
         let params = rt.load_init_params("init_pg").expect("init_pg.bin");
         let n = params.len();
-        PgCore { rt, params, m: vec![0.0; n], v: vec![0.0; n], t: 0.0, lr, rng: Rng::new(seed) }
+        let pad = rt.manifest.config.inf_batch * rt.manifest.config.obs_dim;
+        PgCore {
+            rt,
+            params,
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            t: 0.0,
+            lr,
+            rng: Rng::new(seed),
+            pad_scratch: vec![0.0; pad],
+        }
     }
 
     /// Artifact names a PG policy needs, by loss kind.  `sgd_pg` is
@@ -58,25 +71,26 @@ impl PgCore {
 
     /// Forward pass: (row-major logits [n * num_actions], values [n]),
     /// padded/chunked to the artifact's static batch.  Flat output, no
-    /// per-row allocation (perf O3).
-    pub fn forward(&self, obs: &[f32], n: usize) -> (Vec<f32>, Vec<f32>) {
-        let cfg = &self.rt.manifest.config;
-        let (bi, od, na) = (cfg.inf_batch, cfg.obs_dim, cfg.num_actions);
+    /// per-row allocation; the pad buffer is a reused scratch (perf O3).
+    pub fn forward(&mut self, obs: &[f32], n: usize) -> (Vec<f32>, Vec<f32>) {
+        let (bi, od, na) = {
+            let cfg = &self.rt.manifest.config;
+            (cfg.inf_batch, cfg.obs_dim, cfg.num_actions)
+        };
         assert_eq!(obs.len(), n * od);
         let mut logits = Vec::with_capacity(n * na);
         let mut values = Vec::with_capacity(n);
-        let mut padded = vec![0.0f32; bi * od];
         for chunk_start in (0..n).step_by(bi) {
             let rows = (n - chunk_start).min(bi);
-            padded[..rows * od]
+            self.pad_scratch[..rows * od]
                 .copy_from_slice(&obs[chunk_start * od..(chunk_start + rows) * od]);
-            padded[rows * od..].fill(0.0);
+            self.pad_scratch[rows * od..].fill(0.0);
             let out = self
                 .rt
                 .exe("pg_fwd")
                 .run(&[
                     TensorArg::F32(&self.params),
-                    TensorArg::F32(&padded),
+                    TensorArg::F32(&self.pad_scratch),
                 ])
                 .expect("pg_fwd");
             logits.extend_from_slice(&out[0][..rows * na]);
@@ -113,6 +127,9 @@ pub struct PgPolicy {
     core: PgCore,
     kind: PgLossKind,
     minibatch: usize,
+    /// All-ones loss mask for exactly-sized batches — reused across
+    /// every minibatch instead of a `vec![1.0; n]` per gradient call.
+    ones: Vec<f32>,
 }
 
 impl PgPolicy {
@@ -124,7 +141,7 @@ impl PgPolicy {
             PgLossKind::Ppo { .. } => cfg.ppo_minibatch,
             PgLossKind::Impala => cfg.impala_t * cfg.impala_b,
         };
-        PgPolicy { core, kind, minibatch }
+        PgPolicy { core, kind, minibatch, ones: vec![1.0; minibatch] }
     }
 
     /// Build inside the owning actor thread.
@@ -156,16 +173,17 @@ impl PgPolicy {
     fn grad_on(&mut self, batch: &SampleBatch) -> Gradients {
         let count = batch.len();
         // Fast path: exactly-sized batches (every PPO minibatch) go to
-        // the executable without the pad copy (perf O4).
-        let (owned, mask);
-        let b: &SampleBatch = if count == self.minibatch {
-            mask = vec![1.0f32; count];
-            batch
+        // the executable without the pad copy (perf O4), and the
+        // all-ones mask is the policy's reused buffer — the hot learner
+        // loop allocates nothing here.
+        let (owned, mask_owned);
+        let (b, mask): (&SampleBatch, &[f32]) = if count == self.minibatch {
+            (batch, self.ones.as_slice())
         } else {
             let (padded, m) = batch.pad_or_truncate(self.minibatch);
             owned = padded;
-            mask = m;
-            &owned
+            mask_owned = m;
+            (&owned, mask_owned.as_slice())
         };
         let exe = self.core.rt.exe(self.grad_exe());
         let out = match self.kind {
@@ -177,7 +195,7 @@ impl PgPolicy {
                     TensorArg::F32(&b.action_logp),
                     TensorArg::F32(&b.advantages),
                     TensorArg::F32(&b.value_targets),
-                    TensorArg::F32(&mask),
+                    TensorArg::F32(mask),
                 ])
                 .expect("ppo_grad"),
             PgLossKind::A2c | PgLossKind::A3c => exe
@@ -187,7 +205,7 @@ impl PgPolicy {
                     TensorArg::I32(&b.actions),
                     TensorArg::F32(&b.advantages),
                     TensorArg::F32(&b.value_targets),
-                    TensorArg::F32(&mask),
+                    TensorArg::F32(mask),
                 ])
                 .expect("a2c/a3c_grad"),
             PgLossKind::Impala => panic!("use learn_on_impala_batch"),

@@ -194,12 +194,24 @@ impl RolloutWorker {
     }
 }
 
+/// The worker factory a [`WorkerSet`] retains so dead workers can be
+/// respawned in place.
+type WorkerFactory =
+    Box<dyn FnMut(usize) -> Box<dyn FnOnce() -> RolloutWorker + Send> + Send>;
+
 /// The local (learner) worker plus remote rollout workers — RLlib's
 /// `WorkerSet`.  All of them are actors; "local" only means "the one
 /// the trainer ops message for learning".
+///
+/// The set keeps the construction factory, so a remote whose actor
+/// thread panicked (poisoned) can be respawned in place with
+/// [`WorkerSet::restart_dead`] — the paper's fault-tolerance model (§3):
+/// rollout workers hold no durable state, so recovery is "make a new
+/// one and hand it the learner's weights".
 pub struct WorkerSet {
     pub local: ActorHandle<RolloutWorker>,
     pub remotes: Vec<ActorHandle<RolloutWorker>>,
+    factory: std::sync::Mutex<WorkerFactory>,
 }
 
 impl WorkerSet {
@@ -207,23 +219,30 @@ impl WorkerSet {
     /// worker i on its actor thread (i = 0 is the local worker).
     pub fn new(
         num_remote: usize,
-        mut make: impl FnMut(usize) -> Box<dyn FnOnce() -> RolloutWorker + Send>,
+        make: impl FnMut(usize) -> Box<dyn FnOnce() -> RolloutWorker + Send>
+            + Send
+            + 'static,
     ) -> Self {
+        let mut make: WorkerFactory = Box::new(make);
         let local = {
             let init = make(0);
             ActorHandle::spawn("local_worker", move || init())
         };
         let remotes = spawn_group("worker", num_remote, |i| make(i + 1));
-        WorkerSet { local, remotes }
+        WorkerSet { local, remotes, factory: std::sync::Mutex::new(make) }
     }
 
     /// Broadcast the local worker's weights to all remotes (blocking
     /// until every remote applied them — used at sync barriers).  One
     /// shared `Arc<[f32]>` travels to every remote; the per-remote cost
-    /// is a pointer clone, not a parameter-vector copy.
+    /// is a pointer clone, not a parameter-vector copy.  Dead remotes
+    /// are skipped (they resync on restart).
     pub fn sync_weights(&self) {
-        let weights: std::sync::Arc<[f32]> =
-            self.local.call(|w| w.get_weights()).into();
+        let weights: std::sync::Arc<[f32]> = self
+            .local
+            .call(|w| w.get_weights())
+            .expect("local (learner) worker died")
+            .into();
         let replies: Vec<_> = self
             .remotes
             .iter()
@@ -233,11 +252,12 @@ impl WorkerSet {
             })
             .collect();
         for r in replies {
-            r.recv();
+            let _ = r.recv();
         }
     }
 
     /// Total episodes + sampled-step counters drained from all workers.
+    /// Dead workers contribute nothing instead of panicking the driver.
     pub fn collect_metrics(&self) -> (Vec<EpisodeRecord>, usize) {
         let mut episodes = Vec::new();
         let mut steps = 0;
@@ -253,11 +273,58 @@ impl WorkerSet {
             })
             .collect();
         for r in replies {
-            let (eps, s) = r.recv();
-            episodes.extend(eps);
-            steps += s;
+            if let Ok((eps, s)) = r.recv() {
+                episodes.extend(eps);
+                steps += s;
+            }
         }
         (episodes, steps)
+    }
+
+    /// Indices of remotes whose actor thread has panicked.
+    pub fn poisoned_indices(&self) -> Vec<usize> {
+        self.remotes
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.is_poisoned())
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Respawn every poisoned remote from the retained factory, push
+    /// the learner's current weights to the replacements, and return
+    /// the restarted indices.  Handles previously cloned out of
+    /// `remotes` (e.g. into a running gather) still address the dead
+    /// actor — rebuild the plan from the set after a restart.
+    ///
+    /// If the **learner** (local) worker is itself dead, nothing is
+    /// restarted and an empty list is returned: replacements without
+    /// the learner's weights would sample garbage, and learner recovery
+    /// is the checkpoint layer's job, not respawn-blank.  (Note that a
+    /// just-killed worker publishes its poisoned flag asynchronously —
+    /// see `ActorHandle::await_poisoned`.)
+    pub fn restart_dead(&mut self) -> Vec<usize> {
+        let dead = self.poisoned_indices();
+        if dead.is_empty() {
+            return dead;
+        }
+        let weights: std::sync::Arc<[f32]> =
+            match self.local.call(|w| w.get_weights()) {
+                Ok(w) => w.into(),
+                // Learner dead: don't respawn samplers with blank
+                // weights; surface "nothing restarted" instead.
+                Err(_) => return Vec::new(),
+            };
+        let mut factory = self.factory.lock().unwrap();
+        for &i in &dead {
+            let init = (&mut **factory)(i + 1);
+            let fresh =
+                ActorHandle::spawn(&format!("worker-{i}"), move || init());
+            let w = std::sync::Arc::clone(&weights);
+            fresh.cast(move |worker| worker.set_weights(&w));
+            self.remotes[i] = fresh;
+        }
+        dead
     }
 }
 
@@ -318,11 +385,49 @@ mod tests {
         let set = WorkerSet::new(3, |_| {
             Box::new(|| dummy_worker(1, 4))
         });
-        set.local.call(|w| w.set_weights(&[0.75]));
+        set.local.call(|w| w.set_weights(&[0.75])).unwrap();
         set.sync_weights();
         for r in &set.remotes {
-            assert_eq!(r.call(|w| w.get_weights()), vec![0.75]);
+            assert_eq!(r.call(|w| w.get_weights()).unwrap(), vec![0.75]);
         }
+    }
+
+    #[test]
+    fn worker_set_restarts_poisoned_remotes() {
+        let mut set = WorkerSet::new(3, |_| Box::new(|| dummy_worker(1, 4)));
+        set.local.call(|w| w.set_weights(&[0.5])).unwrap();
+        // Kill remote 1 (the poisoned flag publishes asynchronously).
+        let _ = set.remotes[1].call(|_| -> () { panic!("sim fault") });
+        assert!(set.remotes[1]
+            .await_poisoned(std::time::Duration::from_secs(2)));
+        assert_eq!(set.poisoned_indices(), vec![1]);
+        // Metrics collection and weight sync survive the dead worker.
+        set.sync_weights();
+        let (_eps, _steps) = set.collect_metrics();
+
+        let restarted = set.restart_dead();
+        assert_eq!(restarted, vec![1]);
+        assert!(!set.remotes[1].is_poisoned());
+        // The replacement runs and carries the learner's weights.
+        assert_eq!(
+            set.remotes[1].call(|w| w.get_weights()).unwrap(),
+            vec![0.5]
+        );
+        assert_eq!(set.remotes[1].call(|w| w.sample().len()).unwrap(), 4);
+        assert!(set.restart_dead().is_empty());
+    }
+
+    #[test]
+    fn restart_dead_refuses_when_learner_is_dead() {
+        let mut set = WorkerSet::new(2, |_| Box::new(|| dummy_worker(1, 4)));
+        let _ = set.remotes[0].call(|_| -> () { panic!("worker fault") });
+        let _ = set.local.call(|_| -> () { panic!("learner fault") });
+        assert!(set.remotes[0]
+            .await_poisoned(std::time::Duration::from_secs(2)));
+        assert!(set.local.await_poisoned(std::time::Duration::from_secs(2)));
+        // No blank-weight respawns: learner recovery is checkpoint-level.
+        assert!(set.restart_dead().is_empty());
+        assert_eq!(set.poisoned_indices(), vec![0]);
     }
 
     #[test]

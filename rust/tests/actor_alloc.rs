@@ -1,0 +1,106 @@
+//! Allocation-freedom test for the actor control plane (acceptance
+//! criterion of the control-plane v2 PR): once an actor and a
+//! completion queue are warm, `cast`, `call`, and `call_into` perform
+//! **zero** heap allocations on the sending thread per message.
+//!
+//! The seed runtime boxed a `dyn FnOnce` per message and allocated an
+//! mpsc node + a reply channel per call; the ring mailbox writes the
+//! closure into a preallocated envelope slot, `call` parks on a
+//! stack-held reply cell, and `call_into` delivers through the
+//! preallocated completion-queue ring.
+//!
+//! The counting allocator counts per-thread (a thread-local counter),
+//! so allocator traffic from actor threads or the test harness cannot
+//! produce false positives/negatives; this file holds a single test for
+//! the same reason.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use flowrl::actor::{ActorHandle, Completion, CompletionQueue};
+
+struct CountingAlloc;
+
+thread_local! {
+    static TL_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let _ = TL_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        let _ = TL_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn allocs_here() -> u64 {
+    TL_ALLOCS.with(|c| c.get())
+}
+
+#[test]
+fn steady_state_control_plane_is_allocation_free() {
+    let h = ActorHandle::spawn("alloc-probe", || 0u64);
+    let q: CompletionQueue<u64> = CompletionQueue::bounded(8);
+
+    // Warm up every lazy path: thread, ring, queue storage, TLS.
+    for i in 0..64u64 {
+        h.cast(move |s| *s += i);
+    }
+    assert!(h.call(|s| *s).unwrap() > 0);
+    for k in 0..8 {
+        h.call_into(k, &q, |s| *s);
+    }
+    for _ in 0..8 {
+        let _ = q.pop();
+    }
+
+    const N: u64 = 1_000;
+
+    // cast: envelope slot write + condvar signal, nothing else.
+    let before = allocs_here();
+    for i in 0..N {
+        h.cast(move |s| *s += i);
+    }
+    let cast_allocs = allocs_here() - before;
+
+    // call: stack reply cell; also drains the casts above.
+    let before = allocs_here();
+    for _ in 0..N {
+        h.call(|s| *s).unwrap();
+    }
+    let call_allocs = allocs_here() - before;
+
+    // call_into + pop: completion-queue ring roundtrip.
+    let before = allocs_here();
+    for k in 0..N as usize {
+        h.call_into(k % 4, &q, |s| *s);
+        match q.pop() {
+            Completion::Item { .. } => {}
+            Completion::Dropped { tag } => panic!("actor died on {tag}"),
+        }
+    }
+    let call_into_allocs = allocs_here() - before;
+
+    assert_eq!(cast_allocs, 0, "cast allocated {cast_allocs}x per {N} msgs");
+    assert_eq!(call_allocs, 0, "call allocated {call_allocs}x per {N} msgs");
+    assert_eq!(
+        call_into_allocs, 0,
+        "call_into allocated {call_into_allocs}x per {N} msgs"
+    );
+}

@@ -299,10 +299,13 @@ fn checkpoint_roundtrip_through_xla_policy() {
     let cfg = test_config(1);
     let workers = cfg.pg_workers(PgLossKind::A2c, CollectMode::OnPolicy);
     // Train a little so weights differ from init.
-    workers.local.call(|w| {
-        let batch = w.sample();
-        w.learn_on_batch(&batch);
-    });
+    workers
+        .local
+        .call(|w| {
+            let batch = w.sample();
+            w.learn_on_batch(&batch);
+        })
+        .unwrap();
     let ck = checkpoint_worker_set(&workers, 16, 16);
     let path = std::env::temp_dir()
         .join(format!("flowrl_it_ckpt_{}.bin", std::process::id()));
@@ -313,13 +316,13 @@ fn checkpoint_roundtrip_through_xla_policy() {
     // A fresh worker set restored from disk must carry the weights.
     let workers2 = cfg.pg_workers(PgLossKind::A2c, CollectMode::OnPolicy);
     assert_ne!(
-        workers2.local.call(|w| w.get_weights()),
+        workers2.local.call(|w| w.get_weights()).unwrap(),
         ck.weights["default"],
         "fresh init should differ from trained weights"
     );
     restore_worker_set(&workers2, &loaded).unwrap();
     assert_eq!(
-        workers2.local.call(|w| w.get_weights()),
+        workers2.local.call(|w| w.get_weights()).unwrap(),
         ck.weights["default"]
     );
     assert_eq!(loaded.steps_sampled, 16);

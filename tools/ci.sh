@@ -1,0 +1,41 @@
+#!/usr/bin/env bash
+# CI entry point: format, lint, build, test.
+#
+#   tools/ci.sh           # run everything
+#   tools/ci.sh --quick   # skip the release build (fmt + clippy + tests)
+#
+# Benches are built but not run (they are plain `fn main()` reporters;
+# run them explicitly, e.g. `cargo bench --bench actor_mailbox -- --write`
+# to refresh BENCH_actor_mailbox.json on a real machine).
+
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+quick=0
+for arg in "$@"; do
+  case "$arg" in
+    --quick) quick=1 ;;
+    *) echo "unknown argument: $arg" >&2; exit 2 ;;
+  esac
+done
+
+echo "==> cargo fmt --check"
+cargo fmt --check
+
+echo "==> cargo clippy (warnings are errors)"
+cargo clippy --all-targets -- -D warnings
+
+if [ "$quick" -eq 0 ]; then
+  echo "==> cargo build --release"
+  cargo build --release
+fi
+
+echo "==> cargo test -q"
+cargo test -q
+
+if [ "$quick" -eq 0 ]; then
+  echo "==> cargo build --benches --release"
+  cargo build --benches --release
+fi
+
+echo "CI OK"
