@@ -8,6 +8,8 @@
 //!     shift the trained:sampled balance.
 //!
 //! Run: `cargo bench --bench ablations`
+//! Smoke: `cargo bench --bench ablations -- --smoke` (tiny iteration
+//! counts; skips cleanly when the AOT artifacts are absent).
 
 use std::path::PathBuf;
 use std::time::Instant;
@@ -16,7 +18,7 @@ use flowrl::algorithms::{EnvKind, TrainerConfig};
 use flowrl::iter::{concurrently, UnionMode};
 use flowrl::metrics::TrainResult;
 use flowrl::ops::{
-    create_replay_actors, parallel_rollouts, replay,
+    create_replay_actors, parallel_rollouts_from, replay,
     standard_metrics_reporting, store_to_replay_buffer, TrainItem,
 };
 
@@ -32,7 +34,11 @@ fn config() -> TrainerConfig {
     }
 }
 
-fn impala_throughput(num_async: usize) -> f64 {
+fn smoke() -> bool {
+    std::env::args().any(|a| a == "--smoke")
+}
+
+fn impala_throughput(num_async: usize, iters: usize) -> f64 {
     let mut cfg = config();
     cfg.num_async = num_async;
     let mut plan = flowrl::algorithms::impala_plan(&cfg);
@@ -40,7 +46,7 @@ fn impala_throughput(num_async: usize) -> f64 {
     let start = Instant::now();
     let mut first = None;
     let mut last = 0u64;
-    for _ in 0..30 {
+    for _ in 0..iters {
         let r = plan.next().unwrap();
         first.get_or_insert(r.num_env_steps_trained);
         last = r.num_env_steps_trained;
@@ -50,7 +56,11 @@ fn impala_throughput(num_async: usize) -> f64 {
 
 /// DQN store:replay with a weighted union; returns (sampled, trained)
 /// after a fixed number of union pulls.
-fn dqn_ratio(store_weight: usize, replay_weight: usize) -> (u64, u64) {
+fn dqn_ratio(
+    store_weight: usize,
+    replay_weight: usize,
+    reports: usize,
+) -> (u64, u64) {
     let mut cfg = config();
     cfg.rollout_fragment_length = 16;
     cfg.num_envs_per_worker = 2;
@@ -58,7 +68,7 @@ fn dqn_ratio(store_weight: usize, replay_weight: usize) -> (u64, u64) {
     let obs_dim =
         workers.local.call(|w| w.obs_dim()).expect("learner died");
     let replay_actors = create_replay_actors(1, obs_dim, 8192, 64, 64);
-    let store_op = parallel_rollouts(workers.remotes.clone())
+    let store_op = parallel_rollouts_from(&workers)
         .gather_async(1)
         .for_each(store_to_replay_buffer(replay_actors.clone()))
         .for_each(|_| TrainItem::default());
@@ -85,28 +95,38 @@ fn dqn_ratio(store_weight: usize, replay_weight: usize) -> (u64, u64) {
         },
         None,
     );
-    let mut reports = standard_metrics_reporting(merged, &workers, 1);
+    let mut stream = standard_metrics_reporting(merged, &workers, 1);
     let mut last = TrainResult::default();
-    for _ in 0..150 {
-        last = reports.next().unwrap();
+    for _ in 0..reports {
+        last = stream.next().unwrap();
     }
     (last.num_env_steps_sampled, last.num_env_steps_trained)
 }
 
 fn main() {
-    println!("# Ablation 1 — gather_async pipelining depth (IMPALA, 30 iters)");
+    if !config().artifacts_dir.join("manifest.json").exists() {
+        println!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let (iters, reports) = if smoke() { (2, 5) } else { (30, 150) };
+    let depths: &[usize] = if smoke() { &[1] } else { &[1, 2, 4] };
+    let ratios: &[(usize, usize)] =
+        if smoke() { &[(1, 1)] } else { &[(1, 1), (1, 4), (4, 1)] };
+    println!(
+        "# Ablation 1 — gather_async pipelining depth (IMPALA, {iters} iters)"
+    );
     println!("| num_async | train steps/s |");
     println!("|-----------|---------------|");
-    for &n in &[1usize, 2, 4] {
-        println!("| {n} | {:.0} |", impala_throughput(n));
+    for &n in depths {
+        println!("| {n} | {:.0} |", impala_throughput(n, iters));
     }
 
     println!();
     println!("# Ablation 2 — round_robin_weights rate limiting (DQN store:replay)");
     println!("| store:replay weights | sampled | trained | trained/sampled |");
     println!("|----------------------|---------|---------|-----------------|");
-    for &(s, r) in &[(1usize, 1usize), (1, 4), (4, 1)] {
-        let (sampled, trained) = dqn_ratio(s, r);
+    for &(s, r) in ratios {
+        let (sampled, trained) = dqn_ratio(s, r, reports);
         println!(
             "| {s}:{r} | {sampled} | {trained} | {:.2} |",
             trained as f64 / sampled.max(1) as f64

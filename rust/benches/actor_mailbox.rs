@@ -8,6 +8,8 @@
 //! criterion; also asserted by rust/tests/actor_alloc.rs).
 //!
 //! Run: `cargo bench --bench actor_mailbox`
+//! Smoke: `cargo bench --bench actor_mailbox -- --smoke` (tiny
+//!        iteration counts; the zero-allocation assertion still holds)
 //! Record: `cargo bench --bench actor_mailbox -- --write`
 //!         (rewrites BENCH_actor_mailbox.json at the repo root)
 
@@ -146,15 +148,15 @@ fn measure(iters: u64, mut f: impl FnMut()) -> (f64, f64) {
     (ns, allocs)
 }
 
-fn bench_all() -> Vec<Row> {
-    const CALL_ITERS: u64 = 50_000;
-    const CAST_ITERS: u64 = 100_000;
+fn bench_all(smoke: bool) -> Vec<Row> {
+    let call_iters: u64 = if smoke { 5_000 } else { 50_000 };
+    let cast_iters: u64 = if smoke { 20_000 } else { 100_000 };
     let mut rows = Vec::new();
 
     // --- call roundtrip ---
     let (boxed_ns, boxed_allocs) = {
         let a = reference::RefActor::spawn(|| 0u64);
-        measure(CALL_ITERS, || {
+        measure(call_iters, || {
             black_box(a.call(|s| {
                 *s += 1;
                 *s
@@ -163,7 +165,7 @@ fn bench_all() -> Vec<Row> {
     };
     let (ring_ns, ring_allocs) = {
         let a = ActorHandle::spawn("bench-call", || 0u64);
-        measure(CALL_ITERS, || {
+        measure(call_iters, || {
             black_box(
                 a.call(|s| {
                     *s += 1;
@@ -188,39 +190,39 @@ fn bench_all() -> Vec<Row> {
     // barrier before and after the timed loop, outside the clock.
     let (boxed_ns, boxed_allocs) = {
         let a = reference::RefActor::spawn(|| 0u64);
-        for _ in 0..CAST_ITERS / 10 {
+        for _ in 0..cast_iters / 10 {
             a.cast(|s| *s += 1); // warmup
         }
         black_box(a.call(|s| *s)); // drain barrier
         let a0 = ALLOCS.load(Ordering::Relaxed);
         let start = Instant::now();
-        for _ in 0..CAST_ITERS {
+        for _ in 0..cast_iters {
             a.cast(|s| *s += 1);
         }
-        let ns = start.elapsed().as_nanos() as f64 / CAST_ITERS as f64;
+        let ns = start.elapsed().as_nanos() as f64 / cast_iters as f64;
         let al = (ALLOCS.load(Ordering::Relaxed) - a0) as f64
-            / CAST_ITERS as f64;
+            / cast_iters as f64;
         black_box(a.call(|s| *s)); // drain
         (ns, al)
     };
     let (ring_ns, ring_allocs) = {
         let a = ActorHandle::spawn_with_capacity(
             "bench-cast",
-            CAST_ITERS as usize + 16,
+            cast_iters as usize + 16,
             || 0u64,
         );
-        for _ in 0..CAST_ITERS / 10 {
+        for _ in 0..cast_iters / 10 {
             a.cast(|s| *s += 1); // warmup
         }
         black_box(a.call(|s| *s).unwrap()); // drain barrier
         let a0 = ALLOCS.load(Ordering::Relaxed);
         let start = Instant::now();
-        for _ in 0..CAST_ITERS {
+        for _ in 0..cast_iters {
             a.cast(|s| *s += 1);
         }
-        let ns = start.elapsed().as_nanos() as f64 / CAST_ITERS as f64;
+        let ns = start.elapsed().as_nanos() as f64 / cast_iters as f64;
         let al = (ALLOCS.load(Ordering::Relaxed) - a0) as f64
-            / CAST_ITERS as f64;
+            / cast_iters as f64;
         black_box(a.call(|s| *s).unwrap()); // drain
         (ns, al)
     };
@@ -236,7 +238,7 @@ fn bench_all() -> Vec<Row> {
     let (boxed_ns, boxed_allocs) = {
         let a = reference::RefActor::spawn(|| 0u64);
         let (tx, rx) = std::sync::mpsc::channel::<(usize, u64)>();
-        measure(CALL_ITERS, || {
+        measure(call_iters, || {
             a.call_into(0, tx.clone(), |s| {
                 *s += 1;
                 *s
@@ -247,7 +249,7 @@ fn bench_all() -> Vec<Row> {
     let (ring_ns, ring_allocs) = {
         let a = ActorHandle::spawn("bench-cq", || 0u64);
         let q: CompletionQueue<u64> = CompletionQueue::bounded(8);
-        measure(CALL_ITERS, || {
+        measure(call_iters, || {
             a.call_into(0, &q, |s| {
                 *s += 1;
                 *s
@@ -322,7 +324,8 @@ fn json_report(rows: &[Row]) -> String {
 
 fn main() {
     let write = std::env::args().any(|a| a == "--write");
-    let rows = bench_all();
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let rows = bench_all(smoke);
     println!("# actor_mailbox microbench (ns/op; speedup = boxed/ring)");
     println!(
         "| op | boxed ns | boxed allocs/msg | ring ns | ring allocs/msg | speedup |"

@@ -11,6 +11,8 @@
 //!
 //! Paper expectation: flow >= baseline, with a small edge from the
 //! pipelined wait.  Run: `cargo bench --bench fig13a_sampling`
+//! Smoke: `cargo bench --bench fig13a_sampling -- --smoke` (short
+//! windows, 2 worker counts — the CI liveness pass).
 
 use std::time::{Duration, Instant};
 
@@ -22,7 +24,26 @@ use flowrl::rollout::{CollectMode, RolloutWorker};
 
 const FRAGMENT: usize = 200;
 const EPISODE_LEN: usize = 100;
-const MEASURE: Duration = Duration::from_millis(1500);
+
+fn smoke() -> bool {
+    std::env::args().any(|a| a == "--smoke")
+}
+
+fn measure_window() -> Duration {
+    if smoke() {
+        Duration::from_millis(80)
+    } else {
+        Duration::from_millis(1500)
+    }
+}
+
+fn warmup_window() -> Duration {
+    if smoke() {
+        Duration::from_millis(10)
+    } else {
+        Duration::from_millis(200)
+    }
+}
 
 fn workers(n: usize) -> Vec<ActorHandle<RolloutWorker>> {
     spawn_group("w", n, move |i| {
@@ -40,16 +61,17 @@ fn workers(n: usize) -> Vec<ActorHandle<RolloutWorker>> {
     })
 }
 
-/// Drive an iterator for MEASURE, returning env-steps/s.
+/// Drive an iterator for the measure window, returning env-steps/s.
 fn drive(mut next: impl FnMut() -> usize) -> f64 {
     // Warmup.
     let warm = Instant::now();
-    while warm.elapsed() < Duration::from_millis(200) {
+    while warm.elapsed() < warmup_window() {
         next();
     }
+    let measure = measure_window();
     let start = Instant::now();
     let mut steps = 0usize;
-    while start.elapsed() < MEASURE {
+    while start.elapsed() < measure {
         steps += next();
     }
     steps as f64 / start.elapsed().as_secs_f64()
@@ -86,7 +108,9 @@ fn main() {
     println!("# Fig. 13a — sampling microbenchmark (dummy policy)");
     println!("| workers | flow async=2 (steps/s) | flow async=1 | strict-order baseline | flow/baseline |");
     println!("|---------|------------------------|--------------|-----------------------|---------------|");
-    for &n in &[1usize, 2, 4, 8, 16] {
+    let worker_counts: &[usize] =
+        if smoke() { &[1, 2] } else { &[1, 2, 4, 8, 16] };
+    for &n in worker_counts {
         let flow2 = flow_throughput(n, 2);
         let flow1 = flow_throughput(n, 1);
         let strict = strict_order_throughput(n);

@@ -4,6 +4,7 @@
 //!
 //! Paper expectation: similar or better throughput for the flow
 //! version.  Run: `cargo bench --bench fig13b_impala`
+//! Smoke: `-- --smoke` (3 iters, 1 worker count; artifact-gated skip).
 
 use std::path::PathBuf;
 use std::time::Instant;
@@ -13,7 +14,17 @@ use flowrl::baseline::AsyncPipelineOptimizer;
 use flowrl::policy::PgLossKind;
 use flowrl::rollout::CollectMode;
 
-const ITERS: usize = 40;
+fn smoke() -> bool {
+    std::env::args().any(|a| a == "--smoke")
+}
+
+fn iters() -> usize {
+    if smoke() {
+        3
+    } else {
+        40
+    }
+}
 
 fn artifacts() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
@@ -37,7 +48,7 @@ fn flow_throughput(n: usize) -> f64 {
     let start = Instant::now();
     let mut steps = 0u64;
     let mut last_trained = 0u64;
-    for _ in 0..ITERS {
+    for _ in 0..iters() {
         let r = plan.next().unwrap();
         steps += r.num_env_steps_trained - last_trained;
         last_trained = r.num_env_steps_trained;
@@ -64,7 +75,7 @@ fn baseline_throughput(n: usize) -> f64 {
     let start = Instant::now();
     let mut last = 0u64;
     let mut steps = 0u64;
-    for _ in 0..ITERS {
+    for _ in 0..iters() {
         let r = opt.step();
         steps += r.num_env_steps_trained - last;
         last = r.num_env_steps_trained;
@@ -73,10 +84,18 @@ fn baseline_throughput(n: usize) -> f64 {
 }
 
 fn main() {
-    println!("# Fig. 13b — IMPALA throughput (train steps/s), {ITERS} learner iters");
+    if !artifacts().join("manifest.json").exists() {
+        println!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    println!(
+        "# Fig. 13b — IMPALA throughput (train steps/s), {} learner iters",
+        iters()
+    );
     println!("| workers | RLlib Flow | low-level baseline | ratio |");
     println!("|---------|------------|--------------------|-------|");
-    for &n in &[1usize, 2, 4] {
+    let worker_counts: &[usize] = if smoke() { &[1] } else { &[1, 2, 4] };
+    for &n in worker_counts {
         let flow = flow_throughput(n);
         let base = baseline_throughput(n);
         println!("| {n} | {flow:.0} | {base:.0} | {:.2}x |", flow / base);

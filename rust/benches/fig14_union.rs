@@ -14,6 +14,7 @@
 //! expectation: union throughput ≈ ideal.
 //!
 //! Run: `cargo bench --bench fig14_union`
+//! Smoke: `-- --smoke` (3 reports per trainer; artifact-gated skip).
 
 use std::path::PathBuf;
 use std::time::Instant;
@@ -29,7 +30,17 @@ use flowrl::ops::{
     store_to_replay_buffer, TrainItem,
 };
 
-const ITERS: usize = 25;
+fn smoke() -> bool {
+    std::env::args().any(|a| a == "--smoke")
+}
+
+fn iters() -> usize {
+    if smoke() {
+        3
+    } else {
+        25
+    }
+}
 
 fn config() -> TrainerConfig {
     TrainerConfig {
@@ -57,13 +68,13 @@ fn ma_cfg() -> MultiAgentConfig {
     }
 }
 
-/// Sampled env-steps/s over ITERS reports of a plan.
+/// Sampled env-steps/s over `iters()` reports of a plan.
 fn throughput(mut plan: LocalIter<TrainResult>) -> f64 {
     plan.next(); // warmup/compile
     let start = Instant::now();
     let mut first = None;
     let mut last = 0u64;
-    for _ in 0..ITERS {
+    for _ in 0..iters() {
         let r = plan.next().unwrap();
         first.get_or_insert(r.num_env_steps_sampled);
         last = r.num_env_steps_sampled;
@@ -148,6 +159,10 @@ fn dqn_alone() -> LocalIter<TrainResult> {
 }
 
 fn main() {
+    if !config().artifacts_dir.join("manifest.json").exists() {
+        println!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    }
     println!("# Fig. 14 — PPO+DQN union vs Amdahl ideal (sampled steps/s)");
     let r_ppo = throughput(ppo_alone());
     let r_dqn = throughput(dqn_alone());

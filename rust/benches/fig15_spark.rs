@@ -8,6 +8,7 @@
 //! workers scale, so Spark scales worse) is the claim under test.
 //!
 //! Run: `cargo bench --bench fig15_spark`
+//! Smoke: `-- --smoke` (1 iter, 1 worker count; artifact-gated skip).
 
 use std::path::PathBuf;
 use std::time::{Duration, Instant};
@@ -15,8 +16,19 @@ use std::time::{Duration, Instant};
 use flowrl::algorithms::{ppo_plan_with_epochs, EnvKind, TrainerConfig};
 use flowrl::baseline::{MicrobatchPpo, MicrobatchTimings};
 
-const ITERS: usize = 5;
 const BATCH: usize = 2048; // paper: 100K on a cluster; scaled down
+
+fn smoke() -> bool {
+    std::env::args().any(|a| a == "--smoke")
+}
+
+fn iters() -> usize {
+    if smoke() {
+        1
+    } else {
+        5
+    }
+}
 
 fn config(num_workers: usize) -> TrainerConfig {
     TrainerConfig {
@@ -37,10 +49,10 @@ fn flow_time_per_iter(n: usize) -> Duration {
     let mut plan = ppo_plan_with_epochs(&config(n), 1);
     plan.next(); // warmup + compile
     let start = Instant::now();
-    for _ in 0..ITERS {
+    for _ in 0..iters() {
         plan.next().unwrap();
     }
-    start.elapsed() / ITERS as u32
+    start.elapsed() / iters() as u32
 }
 
 fn spark_style(n: usize) -> MicrobatchTimings {
@@ -48,7 +60,7 @@ fn spark_style(n: usize) -> MicrobatchTimings {
         .join(format!("flowrl_fig15_{}_{n}", std::process::id()));
     let mut mb = MicrobatchPpo::new(config(n), 1, &dir);
     let mut acc = MicrobatchTimings::default();
-    for _ in 0..ITERS {
+    for _ in 0..iters() {
         let t = mb.step();
         acc.init += t.init;
         acc.io += t.io;
@@ -57,24 +69,30 @@ fn spark_style(n: usize) -> MicrobatchTimings {
     }
     std::fs::remove_dir_all(&dir).ok();
     MicrobatchTimings {
-        init: acc.init / ITERS as u32,
-        io: acc.io / ITERS as u32,
-        sample: acc.sample / ITERS as u32,
-        train: acc.train / ITERS as u32,
+        init: acc.init / iters() as u32,
+        io: acc.io / iters() as u32,
+        sample: acc.sample / iters() as u32,
+        train: acc.train / iters() as u32,
     }
 }
 
 fn main() {
+    if !config(1).artifacts_dir.join("manifest.json").exists() {
+        println!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    }
     println!(
         "# Fig. 15 — PPO throughput: RLlib Flow vs Spark-Streaming-style \
-         (B={BATCH}, {ITERS} iters/cell)"
+         (B={BATCH}, {} iters/cell)",
+        iters()
     );
     println!(
         "| workers | flow s/iter | spark s/iter | speedup | spark init | \
          spark io | spark sample | spark train |"
     );
     println!("|---|---|---|---|---|---|---|---|");
-    for &n in &[1usize, 2, 4, 8] {
+    let worker_counts: &[usize] = if smoke() { &[1] } else { &[1, 2, 4, 8] };
+    for &n in worker_counts {
         let flow = flow_time_per_iter(n);
         let sp = spark_style(n);
         let spark_total = sp.total();

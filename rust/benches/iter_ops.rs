@@ -3,13 +3,19 @@
 //! gather_async/gather_sync item overhead, union modes.
 //!
 //! Run: `cargo bench --bench iter_ops`
+//! Smoke: `cargo bench --bench iter_ops -- --smoke` (iterations / 100).
 
 use std::time::Instant;
 
 use flowrl::actor::{spawn_group, ActorHandle};
 use flowrl::iter::{concurrently, LocalIter, ParIter, UnionMode};
 
-fn measure(name: &str, iters: usize, mut f: impl FnMut()) {
+fn measure(name: &str, base_iters: usize, mut f: impl FnMut()) {
+    let iters = if std::env::args().any(|a| a == "--smoke") {
+        (base_iters / 100).max(10)
+    } else {
+        base_iters
+    };
     // Warmup.
     for _ in 0..iters / 10 + 1 {
         f();

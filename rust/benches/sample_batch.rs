@@ -9,6 +9,8 @@
 //! numbers side by side.
 //!
 //! Run: `cargo bench --bench sample_batch`
+//! Smoke: `cargo bench --bench sample_batch -- --smoke` (tiny sizes and
+//!        timing windows — the CI path that keeps this reporter alive)
 //! Record: `cargo bench --bench sample_batch -- --write`
 //!         (rewrites BENCH_sample_batch.json at the repo root)
 
@@ -20,7 +22,14 @@ use flowrl::util::Rng;
 
 const OBS_DIM: usize = 4;
 const SIZES: &[usize] = &[1_000, 10_000, 100_000];
+const SMOKE_SIZES: &[usize] = &[1_000];
 const REPLAY_BATCH: usize = 64;
+
+/// `-- --smoke`: tiny run that exercises every code path (CI executes
+/// all benches this way so reporter mains cannot bit-rot).
+fn smoke() -> bool {
+    std::env::args().any(|a| a == "--smoke")
+}
 
 // ---------------------------------------------------------------------
 // reference: the seed's copy-based batch + Vec<Option<Transition>> replay
@@ -225,14 +234,20 @@ fn ref_batch(n: usize, with_next: bool) -> reference::RefBatch {
     }
 }
 
-/// Time `f` adaptively: enough iterations to fill ~200ms, report ns/op.
+/// Time `f` adaptively: enough iterations to fill the timing window
+/// (~200ms, ~10ms under `--smoke`), report ns/op.
 fn time_ns(mut f: impl FnMut()) -> f64 {
     // Warmup + calibration.
     let t0 = Instant::now();
     f();
     let once = t0.elapsed().max(Duration::from_nanos(50));
-    let iters = (Duration::from_millis(200).as_nanos() / once.as_nanos())
-        .clamp(3, 100_000) as usize;
+    let window = if smoke() {
+        Duration::from_millis(10)
+    } else {
+        Duration::from_millis(200)
+    };
+    let iters =
+        (window.as_nanos() / once.as_nanos()).clamp(3, 100_000) as usize;
     let start = Instant::now();
     for _ in 0..iters {
         f();
@@ -254,9 +269,10 @@ impl Row {
 }
 
 fn bench_all() -> Vec<Row> {
+    let sizes = if smoke() { SMOKE_SIZES } else { SIZES };
     let mut rows = Vec::new();
     let mut seen_replay_sizes = std::collections::BTreeSet::new();
-    for &n in SIZES {
+    for &n in sizes {
         let vb = view_batch(n, false);
         let rb = ref_batch(n, false);
 
@@ -373,8 +389,16 @@ fn json_report(rows: &[Row]) -> String {
     out.push_str("{\n  \"bench\": \"sample_batch\",\n");
     out.push_str("  \"units\": \"ns_per_op\",\n");
     out.push_str(
+        "  \"how_to_regenerate\": \"cd rust && cargo bench --bench \
+         sample_batch -- --write\",\n",
+    );
+    out.push_str(
         "  \"note\": \"copy = seed implementation (vendored reference), \
          view = Arc-view SampleBatch + SoA ring replay\",\n",
+    );
+    out.push_str(
+        "  \"ops\": [\"concat16\", \"slice_half\", \"minibatches128\", \
+         \"shuffle\", \"replay_add\", \"replay_sample64\"],\n",
     );
     out.push_str("  \"obs_dim\": 4,\n  \"results\": [\n");
     for (i, r) in rows.iter().enumerate() {

@@ -3,13 +3,19 @@
 //! coordination.
 //!
 //! Run: `cargo bench --bench xla_calls`
+//! Smoke: `-- --smoke` (iteration counts / 20; artifact-gated skip).
 
 use std::path::PathBuf;
 use std::time::Instant;
 
 use flowrl::runtime::{TensorArg, XlaRuntime};
 
-fn measure(name: &str, iters: usize, mut f: impl FnMut()) {
+fn measure(name: &str, base_iters: usize, mut f: impl FnMut()) {
+    let iters = if std::env::args().any(|a| a == "--smoke") {
+        (base_iters / 20).max(3)
+    } else {
+        base_iters
+    };
     for _ in 0..iters / 10 + 1 {
         f();
     }
@@ -22,6 +28,10 @@ fn measure(name: &str, iters: usize, mut f: impl FnMut()) {
 
 fn main() {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    }
     let rt = XlaRuntime::load(
         &dir,
         &["pg_fwd", "a3c_grad", "ppo_grad", "dqn_grad", "impala_grad",

@@ -135,10 +135,6 @@ impl<A> Ring<A> {
         Ring { slots, head: 0, len: 0, poisoned: false, senders: 0 }
     }
 
-    fn capacity(&self) -> usize {
-        self.slots.len()
-    }
-
     fn is_full(&self) -> bool {
         self.len == self.slots.len()
     }
@@ -186,6 +182,10 @@ pub(crate) struct Shared<A> {
     ring: Mutex<Ring<A>>,
     not_empty: Condvar,
     not_full: Condvar,
+    /// Slot count, immutable after spawn — readable without the ring
+    /// lock (the weight-cast eviction policy compares depth gauges
+    /// against it on every broadcast).
+    capacity: usize,
     pub(crate) telemetry: Arc<ActorTelemetry>,
 }
 
@@ -195,12 +195,13 @@ impl<A> Shared<A> {
             ring: Mutex::new(Ring::new(capacity)),
             not_empty: Condvar::new(),
             not_full: Condvar::new(),
+            capacity,
             telemetry,
         }
     }
 
     pub(crate) fn capacity(&self) -> usize {
-        self.ring.lock().unwrap().capacity()
+        self.capacity
     }
 
     /// Blocking send: parks while the ring is full.  `Err` returns the

@@ -37,10 +37,14 @@
 
 mod mailbox;
 mod queue;
+mod registry;
 mod telemetry;
 
 pub use mailbox::{TryCastError, DEFAULT_MAILBOX_CAPACITY};
 pub use queue::{Completion, CompletionQueue};
+pub use registry::{
+    ShardRegistry, WeightCastStats, WeightCaster, DEFAULT_CAST_WATERMARK,
+};
 pub use telemetry::{all_actor_stats, ActorStatsSnapshot, ActorTelemetry};
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -409,6 +413,12 @@ impl<A: 'static> ActorHandle<A> {
     /// Point-in-time telemetry for this actor.
     pub fn stats(&self) -> ActorStatsSnapshot {
         self.shared.telemetry.snapshot()
+    }
+
+    /// Current mailbox depth — one relaxed atomic load, cheap enough
+    /// for per-broadcast policy decisions (`WeightCaster`'s watermark).
+    pub fn queue_len(&self) -> usize {
+        self.shared.telemetry.queue_len()
     }
 
     pub fn mailbox_capacity(&self) -> usize {

@@ -31,6 +31,17 @@ pub enum Completion<T> {
     Dropped { tag: usize },
 }
 
+impl<T> Completion<T> {
+    /// The submission tag, value or death notice alike.  Epoch-aware
+    /// consumers (the shard-registry gathers) pack (shard, incarnation)
+    /// into it and decode before attributing the completion.
+    pub fn tag(&self) -> usize {
+        match self {
+            Completion::Item { tag, .. } | Completion::Dropped { tag } => *tag,
+        }
+    }
+}
+
 struct PerTag {
     credit: usize,
     counts: Vec<usize>,

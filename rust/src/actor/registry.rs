@@ -1,0 +1,632 @@
+//! The elastic shard registry + versioned weight casts — the two pieces
+//! that make the control plane *elastic* instead of restart-on-rebuild.
+//!
+//! [`ShardRegistry`] is a versioned shard-index -> handle indirection.
+//! A dataflow plan built over a registry (see `ParIter::from_registry`)
+//! resolves each dispatch through the registry instead of cloning actor
+//! handles at plan-build time, so an owner that replaces a dead actor
+//! (`WorkerSet::restart_dead`) can [`ShardRegistry::publish`] the
+//! replacement and **running** gathers pick it up on their next dispatch
+//! — no plan rebuild.  Every slot carries an **epoch** (incarnation
+//! number) so a gather can tell a completion of the dead incarnation
+//! from one of its replacement: stale death notices must not retire the
+//! fresh actor, and stale items must not be attributed to it.
+//!
+//! [`WeightCaster`] turns weight broadcasts into *versioned casts* with
+//! a drop-oldest eviction policy driven by the per-actor queue-depth
+//! telemetry: the newest parameter vector lives in one shared slot, each
+//! recipient holds at most one queued "apply latest" envelope
+//! (superseded broadcasts coalesce into it), and a recipient whose
+//! mailbox depth exceeds the watermark is never blocked on — the cast is
+//! shed and the worker catches up on the next broadcast.  The learner
+//! therefore never stalls behind an overloaded or dying rollout worker.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::ActorHandle;
+
+// ---------------------------------------------------------------------
+// ShardRegistry
+// ---------------------------------------------------------------------
+
+struct Slot<A> {
+    handle: ActorHandle<A>,
+    epoch: u64,
+}
+
+struct RegistryInner<A> {
+    slots: Mutex<Vec<Slot<A>>>,
+    /// Bumped on every publish — a cheap "anything changed?" gate so
+    /// gathers only rescan their dead shards when a replacement could
+    /// actually have appeared.
+    version: AtomicU64,
+}
+
+/// A cloneable, versioned shard-index -> actor-handle table.  All clones
+/// share the same slots: a `publish` through one is visible to every
+/// holder (the running gathers) on their next `get`.
+pub struct ShardRegistry<A: 'static> {
+    inner: Arc<RegistryInner<A>>,
+    len: usize,
+}
+
+impl<A: 'static> Clone for ShardRegistry<A> {
+    fn clone(&self) -> Self {
+        ShardRegistry { inner: self.inner.clone(), len: self.len }
+    }
+}
+
+impl<A: 'static> std::fmt::Debug for ShardRegistry<A> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "ShardRegistry(len={}, version={})",
+            self.len,
+            self.version()
+        )
+    }
+}
+
+impl<A: 'static> ShardRegistry<A> {
+    /// Wrap a fixed-size set of shard actors (epoch 0 each).  The shard
+    /// *count* is immutable; the handle behind each index is not.
+    pub fn new(handles: Vec<ActorHandle<A>>) -> Self {
+        let len = handles.len();
+        let slots = handles
+            .into_iter()
+            .map(|handle| Slot { handle, epoch: 0 })
+            .collect();
+        ShardRegistry {
+            inner: Arc::new(RegistryInner {
+                slots: Mutex::new(slots),
+                version: AtomicU64::new(0),
+            }),
+            len,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The current incarnation behind `idx`: (handle clone, epoch).
+    pub fn get(&self, idx: usize) -> (ActorHandle<A>, u64) {
+        let slots = self.inner.slots.lock().unwrap();
+        let s = &slots[idx];
+        (s.handle.clone(), s.epoch)
+    }
+
+    /// The current epoch of `idx` without cloning the handle.
+    pub fn epoch(&self, idx: usize) -> u64 {
+        self.inner.slots.lock().unwrap()[idx].epoch
+    }
+
+    /// Replace the incarnation behind `idx`, bumping its epoch and the
+    /// registry version.  Returns the new epoch.  In-flight work on the
+    /// old incarnation resolves under the old epoch and is discarded by
+    /// epoch-aware consumers.
+    pub fn publish(&self, idx: usize, handle: ActorHandle<A>) -> u64 {
+        let epoch = {
+            let mut slots = self.inner.slots.lock().unwrap();
+            let s = &mut slots[idx];
+            s.handle = handle;
+            s.epoch += 1;
+            s.epoch
+        };
+        self.inner.version.fetch_add(1, Ordering::Release);
+        epoch
+    }
+
+    /// Publish counter (any index).  Consumers cache the last value they
+    /// acted on and rescan only when it moves.
+    pub fn version(&self) -> u64 {
+        self.inner.version.load(Ordering::Acquire)
+    }
+
+    /// Snapshot of the current handle behind every index.
+    pub fn handles(&self) -> Vec<ActorHandle<A>> {
+        let slots = self.inner.slots.lock().unwrap();
+        slots.iter().map(|s| s.handle.clone()).collect()
+    }
+
+    /// Indices whose *current* incarnation is poisoned.
+    pub fn poisoned_indices(&self) -> Vec<usize> {
+        let slots = self.inner.slots.lock().unwrap();
+        slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.handle.is_poisoned())
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------
+// WeightCaster
+// ---------------------------------------------------------------------
+
+/// Mailbox depth beyond which a broadcast refuses to block on a
+/// recipient: above it the cast is non-blocking and sheds on `Full`
+/// (the worker is overloaded; it will pick up the newest weights from
+/// the shared slot whenever its queued apply — or the next broadcast —
+/// runs).
+pub const DEFAULT_CAST_WATERMARK: usize = 8;
+
+/// The per-incarnation cells an apply closure captures.  A republished
+/// slot gets **fresh** cells (not a reset): envelopes still queued on
+/// the previous incarnation hold clones of the old `Arc`s, so whatever
+/// they do after the swap can never mark the replacement as pending or
+/// as having applied a version it did not.
+#[derive(Clone)]
+struct LaneCells {
+    /// True while an "apply latest weights" envelope is queued in (or
+    /// executing on) this recipient's mailbox.  While set, broadcasts
+    /// coalesce: the queued envelope reads the newest slot anyway.
+    pending: Arc<AtomicBool>,
+    /// Highest weight version this recipient has applied.
+    applied: Arc<AtomicU64>,
+}
+
+impl LaneCells {
+    fn fresh() -> Self {
+        LaneCells {
+            pending: Arc::new(AtomicBool::new(false)),
+            applied: Arc::new(AtomicU64::new(0)),
+        }
+    }
+}
+
+/// Per-recipient broadcast lane: the current incarnation's cells plus
+/// the registry epoch they belong to.
+struct Lane {
+    cells: Mutex<LaneCells>,
+    epoch: AtomicU64,
+}
+
+/// Point-in-time counters for one caster (attached to `TrainResult` by
+/// the metrics operators).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WeightCastStats {
+    /// Newest published weight version.
+    pub version: u64,
+    /// Apply envelopes actually enqueued.
+    pub enqueued: u64,
+    /// Broadcasts absorbed by an already-queued apply (drop-oldest:
+    /// the queued apply delivers the newer version instead).
+    pub coalesced: u64,
+    /// Broadcasts dropped entirely because the recipient was over the
+    /// watermark *and* its mailbox was full (load shedding).
+    pub shed: u64,
+}
+
+/// Versioned weight broadcasts over a [`ShardRegistry`], with
+/// drop-oldest coalescing and watermark-gated load shedding.
+///
+/// Invariants:
+/// * at most **one** apply envelope is queued per recipient at a time —
+///   a weight storm can never fill a worker's mailbox;
+/// * an apply envelope always installs the **newest** slot contents at
+///   execution time, and skips entirely if the recipient has already
+///   applied that version (monotonic, idempotent);
+/// * `broadcast` never blocks on a recipient whose queue depth exceeds
+///   the watermark — overloaded workers shed superseded versions
+///   instead of backpressuring the learner.
+pub struct WeightCaster<A: 'static> {
+    registry: ShardRegistry<A>,
+    /// (version, weights) — the newest published parameters.
+    slot: Arc<Mutex<(u64, Arc<[f32]>)>>,
+    version: AtomicU64,
+    lanes: Vec<Lane>,
+    watermark: usize,
+    apply: Arc<dyn Fn(&mut A, &[f32]) + Send + Sync>,
+    enqueued: AtomicU64,
+    coalesced: AtomicU64,
+    shed: AtomicU64,
+}
+
+impl<A: 'static> WeightCaster<A> {
+    /// `apply` installs a parameter vector into a recipient's state
+    /// (e.g. `|w, p| w.set_weights(p)`); it runs on the actor thread.
+    pub fn new(
+        registry: ShardRegistry<A>,
+        watermark: usize,
+        apply: impl Fn(&mut A, &[f32]) + Send + Sync + 'static,
+    ) -> Self {
+        let lanes = (0..registry.len())
+            .map(|_| Lane {
+                cells: Mutex::new(LaneCells::fresh()),
+                epoch: AtomicU64::new(0),
+            })
+            .collect();
+        WeightCaster {
+            registry,
+            slot: Arc::new(Mutex::new((0, Arc::from(Vec::<f32>::new())))),
+            version: AtomicU64::new(0),
+            lanes,
+            watermark,
+            apply: Arc::new(apply),
+            enqueued: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+        }
+    }
+
+    pub fn registry(&self) -> &ShardRegistry<A> {
+        &self.registry
+    }
+
+    pub fn watermark(&self) -> usize {
+        self.watermark
+    }
+
+    pub fn stats(&self) -> WeightCastStats {
+        WeightCastStats {
+            version: self.version.load(Ordering::Relaxed),
+            enqueued: self.enqueued.load(Ordering::Relaxed),
+            coalesced: self.coalesced.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Publish `weights` as the newest version.  The slot write happens
+    /// *before* any lane is examined, so a concurrent apply that clears
+    /// its pending flag either reads this version or a newer one.
+    fn publish_version(&self, weights: Arc<[f32]>) -> u64 {
+        let v = self.version.fetch_add(1, Ordering::SeqCst) + 1;
+        let mut slot = self.slot.lock().unwrap();
+        // Versions are monotone per caster, but under concurrent
+        // broadcasts only the newest may stay in the slot.
+        if v > slot.0 {
+            *slot = (v, weights);
+        }
+        v
+    }
+
+    /// The envelope body queued on a recipient: clear the pending flag
+    /// *first* (so a broadcast racing with us enqueues a fresh apply
+    /// rather than losing its version), then install the newest slot
+    /// contents unless this recipient already has them.
+    fn apply_closure(
+        &self,
+        cells: &LaneCells,
+    ) -> impl FnOnce(&mut A) + Send + 'static {
+        let pending = cells.pending.clone();
+        let applied = cells.applied.clone();
+        let slot = self.slot.clone();
+        let apply = self.apply.clone();
+        move |state: &mut A| {
+            pending.store(false, Ordering::SeqCst);
+            let (v, weights) = {
+                let s = slot.lock().unwrap();
+                (s.0, s.1.clone())
+            };
+            if applied.fetch_max(v, Ordering::SeqCst) < v {
+                apply(state, &weights);
+            }
+        }
+    }
+
+    /// The lane's cells for registry epoch `epoch`, swapping in
+    /// **fresh** cells if the slot was republished since we last
+    /// looked: envelopes still queued on the previous incarnation hold
+    /// the old `Arc`s and can no longer touch this lane's state.  The
+    /// lane epoch is monotone (`fetch_max`), so a broadcast that read
+    /// the registry just before a publish can never regress the lane
+    /// and wipe a newer incarnation's cells.  Callers that must keep
+    /// the cells stable across their enqueue decision hold `guard`.
+    fn refresh_cells(
+        &self,
+        guard: &mut LaneCells,
+        lane: &Lane,
+        epoch: u64,
+    ) {
+        if lane.epoch.fetch_max(epoch, Ordering::SeqCst) < epoch {
+            *guard = LaneCells::fresh();
+        }
+    }
+
+    fn lane_cells(&self, idx: usize, epoch: u64) -> LaneCells {
+        let lane = &self.lanes[idx];
+        let mut cells = lane.cells.lock().unwrap();
+        self.refresh_cells(&mut cells, lane, epoch);
+        cells.clone()
+    }
+
+    /// The effective depth threshold for `recipient`: the configured
+    /// watermark, but never at-or-above the mailbox capacity — a
+    /// recipient whose mailbox is *full* must always take the
+    /// non-blocking path, or a tiny mailbox (capacity <= watermark)
+    /// could park the learner.
+    fn effective_watermark(&self, capacity: usize) -> usize {
+        self.watermark.min(capacity.saturating_sub(1))
+    }
+
+    /// Fire-and-forget broadcast of a new weight version to every
+    /// current incarnation.  Returns the published version.
+    ///
+    /// Per-lane delivery runs under that lane's lock, serializing
+    /// concurrent broadcasters: a broadcast that coalesces on an
+    /// already-pending lane can never race a shed that clears the flag
+    /// with no apply queued (the coalesce waits until the shed — and
+    /// its flag clear — is complete, then enqueues its own apply).
+    /// The apply envelopes themselves never take the lane lock.
+    pub fn broadcast(&self, weights: Arc<[f32]>) -> u64 {
+        let v = self.publish_version(weights);
+        for idx in 0..self.lanes.len() {
+            let (handle, epoch) = self.registry.get(idx);
+            let lane = &self.lanes[idx];
+            let mut cells = lane.cells.lock().unwrap();
+            self.refresh_cells(&mut cells, lane, epoch);
+            if handle.is_poisoned() {
+                // Dead recipient: nothing to deliver to, and not an
+                // overload signal — `shed` stays untouched (deaths are
+                // reported via actor_stats/`dead=`).  The replacement
+                // resyncs via the lane's fresh cells.
+                continue;
+            }
+            if cells.pending.swap(true, Ordering::SeqCst) {
+                // An apply is already queued; it reads the slot (>= v)
+                // when it runs.  The superseded broadcast is dropped —
+                // drop-oldest by construction.
+                self.coalesced.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+            let body = self.apply_closure(&cells);
+            let threshold =
+                self.effective_watermark(handle.mailbox_capacity());
+            if handle.queue_len() > threshold {
+                // Overloaded (or full) mailbox: never block the
+                // learner on it.
+                match handle.try_cast(body) {
+                    Ok(()) => {
+                        self.enqueued.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(_) => {
+                        cells.pending.store(false, Ordering::SeqCst);
+                        self.shed.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            } else {
+                // Shallow mailbox: a (briefly) blocking cast preserves
+                // the barrier plans' send-order guarantee.  Blocks at
+                // most other broadcasters of this same lane, never the
+                // recipient (applies don't take the lane lock).
+                handle.cast(body);
+                self.enqueued.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        v
+    }
+
+    /// Broadcast and **block until every live recipient has applied**
+    /// the published version (the `sync_weights` barrier).  Dead
+    /// recipients are skipped; shedding does not apply — this path is
+    /// the explicit synchronization point, so it queues a dedicated
+    /// apply per recipient and waits on the replies.
+    pub fn broadcast_sync(&self, weights: Arc<[f32]>) -> u64 {
+        let v = self.publish_version(weights);
+        let replies: Vec<_> = (0..self.lanes.len())
+            .map(|idx| {
+                let (handle, epoch) = self.registry.get(idx);
+                let cells = self.lane_cells(idx, epoch);
+                let applied = cells.applied.clone();
+                let slot = self.slot.clone();
+                let apply = self.apply.clone();
+                handle.call_deferred(move |state: &mut A| {
+                    let (sv, w) = {
+                        let s = slot.lock().unwrap();
+                        (s.0, s.1.clone())
+                    };
+                    if applied.fetch_max(sv, Ordering::SeqCst) < sv {
+                        apply(state, &w);
+                    }
+                })
+            })
+            .collect();
+        for r in replies {
+            // Err = recipient died mid-sync; skipped, like sync_weights
+            // always skipped dead remotes.
+            let _ = r.recv();
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::actor::spawn_group;
+
+    struct W {
+        weights: Vec<f32>,
+        applies: usize,
+    }
+
+    fn group(n: usize) -> Vec<ActorHandle<W>> {
+        spawn_group("reg-w", n, |_| {
+            Box::new(|| W { weights: vec![], applies: 0 })
+        })
+    }
+
+    #[test]
+    fn publish_bumps_epoch_and_version() {
+        let reg = ShardRegistry::new(group(2));
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.version(), 0);
+        assert_eq!(reg.epoch(0), 0);
+        let (h0, e0) = reg.get(0);
+        assert_eq!(e0, 0);
+        let fresh = group(1).remove(0);
+        let fresh_id = fresh.id();
+        let e1 = reg.publish(0, fresh);
+        assert_eq!(e1, 1);
+        assert_eq!(reg.version(), 1);
+        assert_eq!(reg.epoch(0), 1);
+        let (h0b, e) = reg.get(0);
+        assert_eq!(e, 1);
+        assert_eq!(h0b.id(), fresh_id);
+        assert_ne!(h0b.id(), h0.id());
+        // Index 1 untouched.
+        assert_eq!(reg.epoch(1), 0);
+    }
+
+    #[test]
+    fn clones_share_publishes() {
+        let reg = ShardRegistry::new(group(1));
+        let view = reg.clone();
+        let fresh = group(1).remove(0);
+        let id = fresh.id();
+        reg.publish(0, fresh);
+        assert_eq!(view.version(), 1);
+        assert_eq!(view.get(0).0.id(), id);
+    }
+
+    #[test]
+    fn poisoned_indices_track_current_incarnation() {
+        let reg = ShardRegistry::new(group(2));
+        let (h1, _) = reg.get(1);
+        let _ = h1.call(|_| -> () { panic!("die") });
+        assert!(h1.await_poisoned(std::time::Duration::from_secs(2)));
+        assert_eq!(reg.poisoned_indices(), vec![1]);
+        reg.publish(1, group(1).remove(0));
+        assert!(reg.poisoned_indices().is_empty());
+    }
+
+    #[test]
+    fn broadcast_applies_newest_version() {
+        let reg = ShardRegistry::new(group(3));
+        let caster = WeightCaster::new(
+            reg.clone(),
+            DEFAULT_CAST_WATERMARK,
+            |w: &mut W, p| {
+                w.weights.clear();
+                w.weights.extend_from_slice(p);
+                w.applies += 1;
+            },
+        );
+        let v1 = caster.broadcast(vec![1.0].into());
+        assert_eq!(v1, 1);
+        let v2 = caster.broadcast(vec![2.0].into());
+        assert_eq!(v2, 2);
+        for i in 0..3 {
+            let (h, _) = reg.get(i);
+            // Drain: by the time a call returns, queued applies ran.
+            let w = h.call(|w| w.weights.clone()).unwrap();
+            assert_eq!(w, vec![2.0], "worker {i} missed the newest cast");
+        }
+        let s = caster.stats();
+        assert_eq!(s.version, 2);
+        assert!(s.enqueued >= 3, "{s:?}");
+        assert_eq!(s.enqueued + s.coalesced + s.shed, 6, "{s:?}");
+    }
+
+    #[test]
+    fn storm_coalesces_to_one_pending_apply_per_recipient() {
+        // Park the single recipient so applies cannot run, then storm
+        // broadcasts: all but the first must coalesce (or shed), and
+        // when the recipient wakes it applies only the newest version.
+        let reg = ShardRegistry::new(group(1));
+        let caster = WeightCaster::new(reg.clone(), 4, |w: &mut W, p| {
+            w.weights.clear();
+            w.weights.extend_from_slice(p);
+            w.applies += 1;
+        });
+        let (h, _) = reg.get(0);
+        let gate = h.call_deferred(|_| {
+            std::thread::sleep(std::time::Duration::from_millis(60));
+        });
+        for k in 1..=50 {
+            caster.broadcast(vec![k as f32].into());
+        }
+        gate.recv().unwrap();
+        let (weights, applies) =
+            h.call(|w| (w.weights.clone(), w.applies)).unwrap();
+        assert_eq!(weights, vec![50.0], "stale version survived");
+        assert!(applies <= 3, "applies={applies}: storm was not coalesced");
+        let s = caster.stats();
+        assert!(s.coalesced + s.shed >= 47, "{s:?}");
+    }
+
+    #[test]
+    fn broadcast_never_blocks_on_overloaded_recipient() {
+        // A recipient with a tiny mailbox, parked so it drains nothing:
+        // broadcasts beyond the watermark must return promptly (shed),
+        // not park the broadcaster.
+        let slow = ActorHandle::spawn_with_capacity("reg-slow", 2, || W {
+            weights: vec![],
+            applies: 0,
+        });
+        let reg = ShardRegistry::new(vec![slow.clone()]);
+        let caster = WeightCaster::new(reg, 1, |w: &mut W, p| {
+            w.weights.clear();
+            w.weights.extend_from_slice(p);
+        });
+        let gate = slow.call_deferred(|_| {
+            std::thread::sleep(std::time::Duration::from_millis(80));
+        });
+        // Fill the mailbox past the watermark with unrelated casts.
+        while slow.try_cast(|_| {}).is_ok() {}
+        let start = std::time::Instant::now();
+        for k in 1..=20 {
+            caster.broadcast(vec![k as f32].into());
+        }
+        assert!(
+            start.elapsed() < std::time::Duration::from_millis(50),
+            "broadcast blocked on an overloaded recipient"
+        );
+        assert!(caster.stats().shed + caster.stats().coalesced >= 19);
+        gate.recv().unwrap();
+    }
+
+    #[test]
+    fn republished_lane_resyncs_replacement() {
+        let reg = ShardRegistry::new(group(1));
+        let caster = WeightCaster::new(
+            reg.clone(),
+            DEFAULT_CAST_WATERMARK,
+            |w: &mut W, p| {
+                w.weights.clear();
+                w.weights.extend_from_slice(p);
+            },
+        );
+        caster.broadcast(vec![1.0].into());
+        let (old, _) = reg.get(0);
+        let _ = old.call(|_| -> () { panic!("die") });
+        assert!(old.await_poisoned(std::time::Duration::from_secs(2)));
+        // Replacement arrives with blank weights.
+        reg.publish(0, group(1).remove(0));
+        caster.broadcast(vec![2.0].into());
+        let (fresh, _) = reg.get(0);
+        assert_eq!(
+            fresh.call(|w| w.weights.clone()).unwrap(),
+            vec![2.0],
+            "replacement did not receive the post-publish broadcast"
+        );
+    }
+
+    #[test]
+    fn broadcast_sync_blocks_until_applied() {
+        let reg = ShardRegistry::new(group(2));
+        let caster = WeightCaster::new(
+            reg.clone(),
+            DEFAULT_CAST_WATERMARK,
+            |w: &mut W, p| {
+                w.weights.clear();
+                w.weights.extend_from_slice(p);
+            },
+        );
+        caster.broadcast_sync(vec![7.5].into());
+        for i in 0..2 {
+            // No drain call needed: sync already waited.
+            let (h, _) = reg.get(i);
+            let snap = h.try_cast(|_| {});
+            assert!(snap.is_ok());
+            assert_eq!(h.call(|w| w.weights.clone()).unwrap(), vec![7.5]);
+        }
+    }
+}

@@ -67,6 +67,12 @@ impl ActorTelemetry {
         self.poisoned.load(Ordering::SeqCst)
     }
 
+    /// Current mailbox depth (relaxed): the gauge the weight-cast
+    /// eviction policy reads per broadcast, without snapshotting.
+    pub(crate) fn queue_len(&self) -> usize {
+        self.queue_len.load(Ordering::Relaxed)
+    }
+
     pub fn snapshot(&self) -> ActorStatsSnapshot {
         ActorStatsSnapshot {
             name: self.name.to_string(),

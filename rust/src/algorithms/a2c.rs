@@ -8,7 +8,7 @@
 use crate::iter::LocalIter;
 use crate::metrics::TrainResult;
 use crate::ops::{
-    exact_batches, parallel_rollouts, standard_metrics_reporting,
+    exact_batches, parallel_rollouts_from, standard_metrics_reporting,
     train_one_step,
 };
 use crate::policy::PgLossKind;
@@ -28,17 +28,18 @@ pub fn a2c_plan(config: &TrainerConfig) -> LocalIter<TrainResult> {
     .map(|m| m.config.a2c_train_batch)
     .unwrap_or(config.train_batch_size);
 
-    // Bulk-sync rollouts: one barrier round per item, concatenated, then
-    // chunked to the training shape.
-    let rollouts = parallel_rollouts(workers.remotes.clone())
+    // Bulk-sync rollouts through the shard registry: one barrier round
+    // per item, concatenated, then chunked to the training shape; a
+    // restarted worker rejoins at the next round boundary.
+    let rollouts = parallel_rollouts_from(&workers)
         .gather_sync()
         .for_each(|round| SampleBatch::concat_all(&round))
         .combine(exact_batches(grad_batch));
 
-    // TrainOneStep broadcasts fresh weights; the gather_sync barrier
-    // guarantees they land before the next round's fetches.
-    let train_op = rollouts
-        .for_each(train_one_step(workers.local.clone(), workers.remotes.clone()));
+    // TrainOneStep publishes a versioned weight cast; the gather_sync
+    // barrier guarantees the applies land before the next round's
+    // fetches.
+    let train_op = rollouts.for_each(train_one_step(&workers));
 
     standard_metrics_reporting(train_op, &workers, 1)
 }

@@ -12,7 +12,7 @@
 use crate::iter::LocalIter;
 use crate::metrics::TrainResult;
 use crate::ops::{
-    apply_gradients, compute_gradients, parallel_rollouts,
+    apply_gradients, compute_gradients, parallel_rollouts_from,
     standard_metrics_reporting,
 };
 use crate::policy::PgLossKind;
@@ -33,7 +33,9 @@ pub fn a3c_plan(config: &TrainerConfig) -> LocalIter<TrainResult> {
     }
     let workers = config.pg_workers(PgLossKind::A3c, CollectMode::OnPolicy);
 
-    let grads = parallel_rollouts(workers.remotes.clone())
+    // Registry-backed async gathers: a restarted worker's gradients
+    // flow into the running stream on its next dispatch.
+    let grads = parallel_rollouts_from(&workers)
         .for_each(|w, batch| compute_gradients()(w, batch))
         .gather_async_with_source(config.num_async);
 

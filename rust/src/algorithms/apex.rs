@@ -19,7 +19,7 @@
 use crate::iter::{concurrently, LocalIter, UnionMode};
 use crate::metrics::TrainResult;
 use crate::ops::{
-    create_replay_actors, parallel_rollouts, replay,
+    create_replay_actors, parallel_rollouts_from, replay,
     standard_metrics_reporting, store_to_replay_buffer,
     update_target_network, TrainItem,
 };
@@ -71,17 +71,24 @@ pub fn apex_plan(
     );
 
     // (1) Async rollouts -> store -> refresh stale workers' weights.
+    // Registry-backed: a restarted worker rejoins this stream live, and
+    // the paired source handle is always the current incarnation (a
+    // weight push can never target a corpse).
     let local = workers.local.clone();
+    let registry = workers.registry().clone();
     let max_delay = apex.max_weight_sync_delay;
     let mut store = store_to_replay_buffer(replay_actors.clone());
     let mut steps_since_update =
         std::collections::HashMap::<u64, usize>::new();
-    let store_op = parallel_rollouts(workers.remotes.clone())
+    let store_op = parallel_rollouts_from(&workers)
         .gather_async_with_source(config.num_async)
         .for_each(move |(batch, worker)| {
             let n = store(batch).len();
             // UpdateWorkerWeights: per-worker staleness tracking
             // (Listing A4 lines 96-118 collapse to this closure).
+            // Keyed by incarnation id — a replacement starts a fresh
+            // countdown (it was just handed the learner's weights by
+            // restart_dead).
             let entry = steps_since_update.entry(worker.id()).or_insert(0);
             *entry += n;
             if *entry >= max_delay {
@@ -93,6 +100,14 @@ pub fn apex_plan(
                     .call(|w| w.get_weights())
                     .expect("Ape-X learner (local worker) actor died");
                 worker.cast(move |w| w.set_weights(&weights));
+            }
+            // Under worker churn dead incarnations' counters would pile
+            // up; prune to the registry's live set once the map
+            // outgrows it.
+            if steps_since_update.len() > registry.len() {
+                let live: std::collections::HashSet<u64> =
+                    registry.handles().iter().map(|h| h.id()).collect();
+                steps_since_update.retain(|id, _| live.contains(id));
             }
             TrainItem::default()
         });

@@ -11,7 +11,7 @@
 use crate::iter::{concurrently, LocalIter, UnionMode};
 use crate::metrics::TrainResult;
 use crate::ops::{
-    create_replay_actors, parallel_rollouts, replay,
+    create_replay_actors, parallel_rollouts_from, replay,
     standard_metrics_reporting, store_to_replay_buffer, update_target_network,
     TrainItem,
 };
@@ -55,8 +55,9 @@ pub fn dqn_plan(
         64,
     );
 
-    // (1) Collect and store transitions.
-    let store_op = parallel_rollouts(workers.remotes.clone())
+    // (1) Collect and store transitions (registry-backed: restarted
+    // workers rejoin the running stream).
+    let store_op = parallel_rollouts_from(&workers)
         .gather_async(config.num_async)
         .for_each(store_to_replay_buffer(replay_actors.clone()))
         .for_each(|_| TrainItem::default());
@@ -83,9 +84,11 @@ pub fn dqn_plan(
 
 /// The learner closure shared by DQN and Ape-X: learn on the local
 /// worker, push priorities back to the replay actor, occasionally
-/// broadcast weights.  Not-ready replay items (buffer below
-/// learning-starts) pass through as empty `TrainItem`s so concurrent
-/// subflows keep making progress.
+/// broadcast weights (as a versioned cast through the set's
+/// `WeightCaster` — superseded versions coalesce, overloaded workers
+/// shed instead of stalling the learner).  Not-ready replay items
+/// (buffer below learning-starts) pass through as empty `TrainItem`s so
+/// concurrent subflows keep making progress.
 pub(crate) fn learn_dqn(
     workers: &WorkerSet,
     weight_sync_every: usize,
@@ -95,7 +98,7 @@ pub(crate) fn learn_dqn(
        + Send
        + 'static {
     let local = workers.local.clone();
-    let remotes = workers.remotes.clone();
+    let caster = workers.caster();
     let mut since_sync = 0usize;
     move |item| {
         let Some((sample, replay_actor)) = item else {
@@ -115,10 +118,7 @@ pub(crate) fn learn_dqn(
                 .call(|w| w.get_weights())
                 .expect("DQN learner (local worker) actor died")
                 .into();
-            for r in &remotes {
-                let w = std::sync::Arc::clone(&weights);
-                r.cast(move |worker| worker.set_weights(&w));
-            }
+            caster.broadcast(weights);
         }
         TrainItem::new(stats, steps)
     }

@@ -11,7 +11,9 @@
 
 use crate::iter::LocalIter;
 use crate::metrics::TrainResult;
-use crate::ops::{parallel_rollouts, standard_metrics_reporting, TrainItem};
+use crate::ops::{
+    parallel_rollouts_from, standard_metrics_reporting, TrainItem,
+};
 use crate::policy::{ImpalaBatch, PgLossKind};
 use crate::rollout::CollectMode;
 use crate::sample_batch::SampleBatch;
@@ -94,12 +96,13 @@ pub fn impala_plan(config: &TrainerConfig) -> LocalIter<TrainResult> {
         .pg_workers(PgLossKind::Impala, CollectMode::OnPolicyWithNextObs);
 
     let local = workers.local.clone();
-    let remotes = workers.remotes.clone();
     // The time-major learner batch's storage is recycled: it rides to
     // the learner actor inside the call and comes back with the reply,
-    // so steady state reassembles with zero allocation.
+    // so steady state reassembles with zero allocation.  Rollouts are
+    // registry-backed (restarted workers rejoin live), and the paired
+    // source handle is always the current incarnation.
     let mut scratch = ImpalaBatch::default();
-    let train_op = parallel_rollouts(workers.remotes.clone())
+    let train_op = parallel_rollouts_from(&workers)
         .gather_async_with_source(config.num_async)
         .for_each(move |(batch, source)| {
             let steps = batch.len();
@@ -117,7 +120,6 @@ pub fn impala_plan(config: &TrainerConfig) -> LocalIter<TrainResult> {
             source.cast(move |w| w.set_weights(&weights));
             TrainItem::new(stats, steps)
         });
-    let _ = remotes;
 
     standard_metrics_reporting(train_op, &workers, 1)
 }

@@ -55,20 +55,23 @@ pub fn maml_plan(
 
     // Per-task work, scheduled on each worker: draw a task, adapt the
     // *worker-local* policy copy, return the post-adaptation gradient.
-    let meta_grads = ParIter::from_actors(workers.remotes.clone(), move |w| {
-        w.sample_task();
-        for _ in 0..inner_steps {
-            let batch = w.sample();
-            let grads = w.policy.compute_gradients(&batch);
-            w.policy.sgd_apply(&grads.flat, inner_lr);
-        }
-        let post_batch = w.sample();
-        Some(w.policy.compute_gradients(&post_batch))
-    })
-    .gather_sync(); // barrier: all tasks finish before the meta step
+    // Gathering through the registry lets a restarted worker pick up
+    // tasks again at the next meta-iteration boundary.
+    let meta_grads =
+        ParIter::from_registry(workers.registry().clone(), move |w| {
+            w.sample_task();
+            for _ in 0..inner_steps {
+                let batch = w.sample();
+                let grads = w.policy.compute_gradients(&batch);
+                w.policy.sgd_apply(&grads.flat, inner_lr);
+            }
+            let post_batch = w.sample();
+            Some(w.policy.compute_gradients(&post_batch))
+        })
+        .gather_sync(); // barrier: all tasks finish before the meta step
 
     let local = workers.local.clone();
-    let remotes = workers.remotes.clone();
+    let caster = workers.caster();
     let meta_update = meta_grads.for_each(move |grads_per_task| {
         let steps: usize = grads_per_task.iter().map(|g| g.count).sum();
         let avg = average_gradients(&grads_per_task);
@@ -80,12 +83,10 @@ pub fn maml_plan(
             })
             .expect("MAML meta-learner (local worker) actor died")
             .into();
-        // Broadcast the new meta-parameters; the gather_sync barrier
-        // orders these casts before the next meta-iteration's fetches.
-        for r in &remotes {
-            let wt = std::sync::Arc::clone(&weights);
-            r.cast(move |worker| worker.set_weights(&wt));
-        }
+        // Broadcast the new meta-parameters as a versioned cast; the
+        // gather_sync barrier orders the applies before the next
+        // meta-iteration's fetches.
+        caster.broadcast(weights);
         TrainItem::new(stats, steps)
     });
 

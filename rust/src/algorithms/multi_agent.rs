@@ -17,7 +17,10 @@
 
 use std::collections::BTreeMap;
 
-use crate::actor::{spawn_group, ActorHandle};
+use crate::actor::{
+    spawn_group, ActorHandle, ShardRegistry, WeightCaster,
+    DEFAULT_CAST_WATERMARK,
+};
 use crate::env::MultiAgentCartPole;
 use crate::iter::{concurrently, LocalIter, ParIter, UnionMode};
 use crate::metrics::{MetricsHub, TrainResult};
@@ -132,15 +135,33 @@ pub fn multi_agent_plan(
     ma: &MultiAgentConfig,
 ) -> LocalIter<TrainResult> {
     let (local, remotes) = ma_workers(config, ma, true, true);
+    // One shared shard registry for both subflows, plus a versioned
+    // weight caster per policy (each policy's broadcast coalesces and
+    // sheds independently — a worker drowning in DQN syncs still gets
+    // the newest PPO parameters in one apply).
+    let registry = ShardRegistry::new(remotes.clone());
+    let ppo_caster = WeightCaster::new(
+        registry.clone(),
+        DEFAULT_CAST_WATERMARK,
+        |w: &mut MultiAgentRolloutWorker, p: &[f32]| {
+            w.set_weights("ppo", p)
+        },
+    );
+    let dqn_caster = WeightCaster::new(
+        registry.clone(),
+        DEFAULT_CAST_WATERMARK,
+        |w: &mut MultiAgentRolloutWorker, p: &[f32]| {
+            w.set_weights("dqn", p)
+        },
+    );
 
     let rollouts =
-        ParIter::from_actors(remotes.clone(), |w| Some(w.sample()))
+        ParIter::from_registry(registry, |w| Some(w.sample()))
             .gather_async(config.num_async);
     let (r_ppo, r_dqn) = rollouts.duplicate();
 
     // --- PPO subflow (Fig. 12a) ---
     let ppo_local = local.clone();
-    let ppo_remotes = remotes.clone();
     let ppo_op = r_ppo
         .filter_map(select_policy("ppo"))
         .combine(concat_batches(config.train_batch_size))
@@ -152,11 +173,7 @@ pub fn multi_agent_plan(
                     (stats, w.get_weights("ppo"))
                 })
                 .expect("PPO learner (local worker) actor died");
-            let weights: std::sync::Arc<[f32]> = weights.into();
-            for r in &ppo_remotes {
-                let wt = std::sync::Arc::clone(&weights);
-                r.cast(move |w| w.set_weights("ppo", &wt));
-            }
+            ppo_caster.broadcast(weights.into());
             TrainItem::new(prefix_stats("ppo", stats), steps)
         });
 
@@ -177,7 +194,6 @@ pub fn multi_agent_plan(
             TrainItem::default()
         });
     let dqn_local = local.clone();
-    let dqn_remotes = remotes.clone();
     let target_every = ma.dqn.target_update_every;
     let sync_every = ma.dqn.weight_sync_every;
     let mut since_sync = 0usize;
@@ -205,10 +221,7 @@ pub fn multi_agent_plan(
                 .call(|w| w.get_weights("dqn"))
                 .expect("DQN learner (local worker) actor died")
                 .into();
-            for r in &dqn_remotes {
-                let wt = std::sync::Arc::clone(&weights);
-                r.cast(move |w| w.set_weights("dqn", &wt));
-            }
+            dqn_caster.broadcast(weights);
         }
         if since_target >= target_every {
             since_target = 0;

@@ -11,7 +11,7 @@
 use crate::iter::LocalIter;
 use crate::metrics::TrainResult;
 use crate::ops::{
-    concat_batches, parallel_rollouts, standard_metrics_reporting,
+    concat_batches, parallel_rollouts_from, standard_metrics_reporting,
     train_one_step,
 };
 use crate::policy::PgLossKind;
@@ -31,13 +31,14 @@ pub fn ppo_plan_with_epochs(
     let workers =
         config.pg_workers(PgLossKind::Ppo { epochs }, CollectMode::OnPolicy);
 
-    let rollouts = parallel_rollouts(workers.remotes.clone())
+    // Registry-backed bulk-sync rollouts: restarted workers rejoin at
+    // the next round boundary.
+    let rollouts = parallel_rollouts_from(&workers)
         .gather_sync()
         .for_each(|round| SampleBatch::concat_all(&round))
         .combine(concat_batches(config.train_batch_size));
 
-    let train_op = rollouts
-        .for_each(train_one_step(workers.local.clone(), workers.remotes.clone()));
+    let train_op = rollouts.for_each(train_one_step(&workers));
 
     standard_metrics_reporting(train_op, &workers, 1)
 }

@@ -38,7 +38,7 @@ impl AsyncGradientsOptimizer {
         // One task in flight per worker -> the queue bound is the
         // worker count.
         let results =
-            CompletionQueue::bounded(workers.remotes.len().max(1));
+            CompletionQueue::bounded(workers.num_remotes().max(1));
         AsyncGradientsOptimizer {
             workers,
             wait_timer: TimerStat::new(),
@@ -76,7 +76,7 @@ impl AsyncGradientsOptimizer {
             .call(|w| w.get_weights())
             .expect("learner died")
             .into();
-        for worker in self.workers.remotes.clone() {
+        for worker in self.workers.remotes() {
             // Set weights on the remote rollout actor.
             let w = std::sync::Arc::clone(&weights);
             worker.cast(move |state| state.set_weights(&w));

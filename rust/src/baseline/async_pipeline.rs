@@ -43,7 +43,7 @@ impl AsyncPipelineOptimizer {
         queue_depth: usize,
     ) -> Self {
         let samples = CompletionQueue::bounded(
-            (workers.remotes.len() * queue_depth).max(1),
+            (workers.num_remotes() * queue_depth).max(1),
         );
         AsyncPipelineOptimizer {
             workers,
@@ -66,7 +66,7 @@ impl AsyncPipelineOptimizer {
     fn launch(&mut self, worker_idx: usize) {
         let tag = self.next_tag;
         self.next_tag += 1;
-        self.workers.remotes[worker_idx].call_into(
+        self.workers.remote(worker_idx).call_into(
             tag,
             &self.samples,
             |w| w.sample(),
@@ -81,9 +81,9 @@ impl AsyncPipelineOptimizer {
             .call(|w| w.get_weights())
             .expect("learner died")
             .into();
-        for idx in 0..self.workers.remotes.len() {
+        for idx in 0..self.workers.num_remotes() {
             let w = std::sync::Arc::clone(&weights);
-            self.workers.remotes[idx].cast(move |state| state.set_weights(&w));
+            self.workers.remote(idx).cast(move |state| state.set_weights(&w));
             for _ in 0..self.queue_depth {
                 self.launch(idx);
             }
@@ -120,7 +120,9 @@ impl AsyncPipelineOptimizer {
         self.tb_scratch = tb_back;
         self.num_steps_trained += steps;
 
-        self.workers.remotes[worker_idx].cast(move |w| w.set_weights(&weights));
+        self.workers
+            .remote(worker_idx)
+            .cast(move |w| w.set_weights(&weights));
         self.launch(worker_idx);
 
         self.hub.num_env_steps_trained = self.num_steps_trained as u64;

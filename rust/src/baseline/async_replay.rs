@@ -65,7 +65,7 @@ impl AsyncReplayOptimizer {
             replay_batch_size,
         );
         let samples = CompletionQueue::bounded(
-            (workers.remotes.len() * SAMPLE_QUEUE_DEPTH).max(1),
+            (workers.num_remotes() * SAMPLE_QUEUE_DEPTH).max(1),
         );
         let replays = CompletionQueue::bounded(
             (replay_actors.len() * REPLAY_QUEUE_DEPTH).max(1),
@@ -106,7 +106,7 @@ impl AsyncReplayOptimizer {
     fn launch_sample_task(&mut self, worker_idx: usize) {
         let tag = self.next_tag;
         self.next_tag += 1;
-        self.workers.remotes[worker_idx].call_into(
+        self.workers.remote(worker_idx).call_into(
             tag,
             &self.samples,
             |w| w.sample(),
@@ -140,9 +140,10 @@ impl AsyncReplayOptimizer {
             .call(|w| w.get_weights())
             .expect("learner died")
             .into();
-        for worker_idx in 0..self.workers.remotes.len() {
+        for worker_idx in 0..self.workers.num_remotes() {
             let w = std::sync::Arc::clone(&weights);
-            self.workers.remotes[worker_idx]
+            self.workers
+                .remote(worker_idx)
                 .cast(move |state| state.set_weights(&w));
             self.steps_since_update.insert(worker_idx, 0);
             for _ in 0..SAMPLE_QUEUE_DEPTH {
@@ -196,7 +197,8 @@ impl AsyncReplayOptimizer {
                             .expect("learner died")
                     });
                     self.timers.insert("put_weights", put_timer);
-                    self.workers.remotes[worker_idx]
+                    self.workers
+                        .remote(worker_idx)
                         .cast(move |w| w.set_weights(&weights));
                     self.num_weight_syncs += 1;
                 }

@@ -47,7 +47,7 @@ impl SyncSamplesOptimizer {
             let round = self.sample_timer.time(|| {
                 let replies: Vec<_> = self
                     .workers
-                    .remotes
+                    .remotes()
                     .iter()
                     .map(|w| w.call_deferred(|state| state.sample()))
                     .collect();

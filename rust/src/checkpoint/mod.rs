@@ -161,7 +161,7 @@ pub fn restore_worker_set(
         .local
         .call(move |state| state.set_weights(&wl))
         .map_err(|e| anyhow!("restoring into local worker: {e}"))?;
-    for r in &workers.remotes {
+    for r in workers.remotes() {
         let wr = w.clone();
         r.cast(move |state| state.set_weights(&wr));
     }
@@ -290,7 +290,7 @@ mod tests {
         });
         restore_worker_set(&set2, &ck).unwrap();
         assert_eq!(set2.local.call(|w| w.get_weights()).unwrap(), vec![0.875]);
-        for r in &set2.remotes {
+        for r in set2.remotes() {
             assert_eq!(r.call(|w| w.get_weights()).unwrap(), vec![0.875]);
         }
     }

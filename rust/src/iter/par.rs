@@ -1,58 +1,115 @@
 //! `ParIter<W, T>` — the parallel iterator (`ParIter[T]`), sharded over a
 //! set of actors of state type `W`.
 //!
-//! A `ParIter` is a *plan*: a list of shard actors plus one composed
-//! closure that, when invoked **on the actor**, produces the next item.
-//! `for_each` extends the plan (still on-actor); the `gather_*`
-//! sequencing operators are the only places execution is driven.
+//! A `ParIter` is a *plan*: a [`ShardRegistry`] of shard actors plus one
+//! composed closure that, when invoked **on the actor**, produces the
+//! next item.  `for_each` extends the plan (still on-actor); the
+//! `gather_*` sequencing operators are the only places execution is
+//! driven.
 //!
 //! Both gather modes ride one shared bounded [`CompletionQueue`] (the
 //! batched-`ray.wait` analog): shards deliver results into it with
 //! `call_into`, and its bound — `shards x num_async` for `gather_async`,
 //! `shards` for `gather_sync` — is exactly the in-flight budget, so
-//! `num_async` is a real flow-control knob, not a hint.  A shard whose
-//! actor dies (panics) delivers a death notice instead of a value; the
-//! gather marks it exhausted and the stream continues off the surviving
-//! shards rather than panicking the driver (restart policy lives with
-//! the owner, e.g. `WorkerSet::restart_dead`).
+//! `num_async` is a real flow-control knob, not a hint.
+//!
+//! **Elasticity.** Gathers do not capture handles at plan-build time:
+//! every dispatch resolves shard index -> handle through the registry.
+//! A shard whose actor dies (panics) delivers a death notice instead of
+//! a value; the gather parks the shard and keeps streaming off the
+//! survivors — and if the owner publishes a replacement
+//! (`WorkerSet::restart_dead` -> `ShardRegistry::publish`), the
+//! *running* gather adopts it on its next dispatch, no plan rebuild.
+//! Completion tags encode `(shard, epoch)` so late completions of a
+//! dead incarnation — above all its death notices — are discarded
+//! instead of being attributed to (and retiring) the replacement.
 
 use std::sync::Arc;
 
-use crate::actor::{ActorHandle, Completion, CompletionQueue};
+use crate::actor::{
+    ActorHandle, Completion, CompletionQueue, ShardRegistry,
+};
 
 use super::LocalIter;
 
 type PlanFn<W, T> = Arc<dyn Fn(&mut W) -> Option<T> + Send + Sync>;
 
+/// Completion tags pack `(epoch << EPOCH_SHIFT) | shard_idx` so a death
+/// notice (which carries only the tag) still identifies the incarnation
+/// it belongs to.  16 bits of shard index bounds a registry at 65536
+/// shards; the remaining bits hold ~2^47 incarnations per shard.
+const EPOCH_SHIFT: u32 = 16;
+const SHARD_MASK: usize = (1 << EPOCH_SHIFT) - 1;
+
+fn encode_tag(idx: usize, epoch: u64) -> usize {
+    debug_assert!(idx <= SHARD_MASK);
+    ((epoch as usize) << EPOCH_SHIFT) | idx
+}
+
+fn decode_tag(tag: usize) -> (usize, u64) {
+    (tag & SHARD_MASK, (tag >> EPOCH_SHIFT) as u64)
+}
+
+/// Per-shard gather state: streaming, cleanly finished, or dead and
+/// waiting for the registry to publish a replacement.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum ShardMode {
+    Active,
+    /// The plan returned `None` on this shard — a terminal condition
+    /// (restarting the *actor* does not restart an exhausted stream).
+    Exhausted,
+    /// The current incarnation died; the shard rejoins if a newer epoch
+    /// is published.
+    Dead,
+}
+
 pub struct ParIter<W: 'static, T> {
-    shards: Vec<ActorHandle<W>>,
+    registry: ShardRegistry<W>,
     plan: PlanFn<W, T>,
 }
 
 impl<W: 'static, T: Send + 'static> Clone for ParIter<W, T> {
     fn clone(&self) -> Self {
-        ParIter { shards: self.shards.clone(), plan: self.plan.clone() }
+        ParIter { registry: self.registry.clone(), plan: self.plan.clone() }
     }
 }
 
 impl<W: 'static, T: Send + 'static> ParIter<W, T> {
-    /// Create a parallel iterator from a set of source actors and a
-    /// source function (e.g. "sample a batch from this rollout worker").
-    /// Returning `None` ends that shard.
+    /// Create a parallel iterator from a fixed set of source actors and
+    /// a source function (e.g. "sample a batch from this rollout
+    /// worker").  Returning `None` ends that shard.  The actors are
+    /// wrapped in a private single-incarnation registry; use
+    /// [`ParIter::from_registry`] to share an elastic one.
     pub fn from_actors(
         shards: Vec<ActorHandle<W>>,
         source: impl Fn(&mut W) -> Option<T> + Send + Sync + 'static,
     ) -> Self {
-        assert!(!shards.is_empty(), "ParIter needs at least one shard");
-        ParIter { shards, plan: Arc::new(source) }
+        Self::from_registry(ShardRegistry::new(shards), source)
+    }
+
+    /// Create a parallel iterator over a shared [`ShardRegistry`]: the
+    /// owner of the registry (e.g. a `WorkerSet`) can publish
+    /// replacement actors and running gathers built from this plan will
+    /// adopt them live.
+    pub fn from_registry(
+        registry: ShardRegistry<W>,
+        source: impl Fn(&mut W) -> Option<T> + Send + Sync + 'static,
+    ) -> Self {
+        assert!(!registry.is_empty(), "ParIter needs at least one shard");
+        assert!(
+            registry.len() <= SHARD_MASK + 1,
+            "shard index must fit the tag encoding"
+        );
+        ParIter { registry, plan: Arc::new(source) }
     }
 
     pub fn num_shards(&self) -> usize {
-        self.shards.len()
+        self.registry.len()
     }
 
-    pub fn shards(&self) -> &[ActorHandle<W>] {
-        &self.shards
+    /// The registry behind this plan (current incarnations).
+    pub fn registry(&self) -> &ShardRegistry<W> {
+        &self.registry
     }
 
     /// Parallel transformation, scheduled **onto the source actor** so
@@ -64,7 +121,7 @@ impl<W: 'static, T: Send + 'static> ParIter<W, T> {
     ) -> ParIter<W, U> {
         let plan = self.plan;
         ParIter {
-            shards: self.shards,
+            registry: self.registry,
             plan: Arc::new(move |w| plan(w).map(|t| op(w, t))),
         }
     }
@@ -81,73 +138,165 @@ impl<W: 'static, T: Send + 'static> ParIter<W, T> {
     /// `gather_async` + `zip_with_source_actor`: each item is paired
     /// with the handle of the shard actor that produced it (used by
     /// Ape-X's `UpdateWorkerWeights` to message the producing worker).
+    /// With an elastic registry the paired handle is always the live
+    /// incarnation — items of a replaced incarnation are discarded, so
+    /// a weight push can never target a corpse.
     pub fn gather_async_with_source(
         self,
         num_async: usize,
     ) -> LocalIter<(T, ActorHandle<W>)> {
         assert!(num_async >= 1);
         struct State<W: 'static, T: Send + 'static> {
-            shards: Vec<ActorHandle<W>>,
+            registry: ShardRegistry<W>,
             plan: PlanFn<W, T>,
             queue: CompletionQueue<Option<T>>,
+            /// Completions still expected, across *all* epochs.
             outstanding: usize,
-            shard_done: Vec<bool>,
+            mode: Vec<ShardMode>,
+            /// Epoch each shard's current submissions carry.
+            epoch: Vec<u64>,
+            /// Registry version last scanned for replacements.
+            reg_version: u64,
             started: bool,
+            /// Set once the stream has returned `None`: end-of-stream
+            /// is terminal — a later publish must not resurrect a
+            /// finished iterator (matching the Exhausted contract).
+            finished: bool,
         }
         impl<W: 'static, T: Send + 'static> State<W, T> {
-            /// Submit one plan invocation to shard `idx`.  Every
-            /// submission yields exactly one completion (value or death
-            /// notice), so `outstanding` can never leak.
-            fn submit(&mut self, idx: usize) {
+            /// Submit one plan invocation to a pre-resolved incarnation
+            /// of shard `idx`.  Every submission yields exactly one
+            /// completion (value or death notice), so `outstanding` can
+            /// never leak.
+            fn submit_to(&mut self, idx: usize, handle: &ActorHandle<W>, ep: u64) {
+                self.epoch[idx] = ep;
                 let plan = self.plan.clone();
-                self.shards[idx].call_into(idx, &self.queue, move |w| plan(w));
+                handle.call_into(
+                    encode_tag(idx, ep),
+                    &self.queue,
+                    move |w| plan(w),
+                );
                 self.outstanding += 1;
             }
-        }
-        let n = self.shards.len();
-        let mut st = State {
-            queue: CompletionQueue::bounded((n * num_async).max(1)),
-            shards: self.shards,
-            plan: self.plan,
-            outstanding: 0,
-            shard_done: vec![false; n],
-            started: false,
-        };
-        LocalIter::from_fn(move || {
-            if !st.started {
-                st.started = true;
-                // Prime the pipeline: num_async calls in flight per shard.
-                for i in 0..st.shards.len() {
-                    for _ in 0..num_async {
-                        st.submit(i);
+
+            /// [`Self::submit_to`] the registry's current incarnation.
+            fn submit(&mut self, idx: usize) {
+                let (handle, ep) = self.registry.get(idx);
+                self.submit_to(idx, &handle, ep);
+            }
+
+            /// Start (or restart) streaming shard `idx`: mark it active
+            /// and prime its full `num_async` pipeline.
+            fn prime(&mut self, idx: usize, num_async: usize) {
+                self.mode[idx] = ShardMode::Active;
+                for _ in 0..num_async {
+                    self.submit(idx);
+                }
+            }
+
+            /// Rejoin any dead shard whose registry slot was
+            /// republished since we last looked (cheap: gated on the
+            /// registry's publish counter).
+            fn adopt_replacements(&mut self, num_async: usize) {
+                let v = self.registry.version();
+                if v == self.reg_version {
+                    return;
+                }
+                self.reg_version = v;
+                for idx in 0..self.mode.len() {
+                    if self.mode[idx] == ShardMode::Dead
+                        && self.registry.epoch(idx) > self.epoch[idx]
+                    {
+                        self.prime(idx, num_async);
                     }
                 }
             }
+        }
+        let n = self.registry.len();
+        let mut st = State {
+            queue: CompletionQueue::bounded((n * num_async).max(1)),
+            reg_version: self.registry.version(),
+            registry: self.registry,
+            plan: self.plan,
+            outstanding: 0,
+            mode: vec![ShardMode::Active; n],
+            epoch: vec![0; n],
+            started: false,
+            finished: false,
+        };
+        LocalIter::from_fn(move || {
+            if st.finished {
+                return None;
+            }
+            if !st.started {
+                st.started = true;
+                // Prime the pipeline: num_async calls in flight per shard.
+                for i in 0..n {
+                    st.prime(i, num_async);
+                }
+            }
             loop {
+                st.adopt_replacements(num_async);
                 if st.outstanding == 0 {
+                    // Every submission resolved and no shard is active:
+                    // the stream ends (dead shards with no published
+                    // replacement do not block it — same semantics as
+                    // the pre-registry gather), and stays ended.
+                    st.finished = true;
                     return None;
                 }
                 let completion = st.queue.pop();
                 st.outstanding -= 1;
+                let (idx, ep) = decode_tag(completion.tag());
+                let current =
+                    ep == st.epoch[idx] && st.mode[idx] == ShardMode::Active;
                 match completion {
-                    Completion::Item { tag, value: Some(t) }
-                        if !st.shard_done[tag] =>
-                    {
-                        // Refill the shard's pipeline slot.
-                        st.submit(tag);
-                        return Some((t, st.shards[tag].clone()));
+                    Completion::Item { value: Some(t), .. } if current => {
+                        // One registry resolution serves the staleness
+                        // check, the refill, and the paired handle.
+                        let (handle, ep_now) = st.registry.get(idx);
+                        if ep_now > st.epoch[idx] {
+                            // The producer was replaced while this item
+                            // sat in the queue (publish raced ahead of
+                            // the death notices): discard the corpse's
+                            // item and adopt the replacement at full
+                            // pipeline depth — the pending stale
+                            // notices re-prime nothing.
+                            st.prime(idx, num_async);
+                        } else {
+                            // Refill the shard's pipeline slot and pair
+                            // the item with its (live) producer.
+                            st.submit_to(idx, &handle, ep_now);
+                            return Some((t, handle));
+                        }
                     }
                     Completion::Item { value: Some(_), .. } => {
-                        // Late result from a pipelined call issued before
-                        // the shard reported exhaustion: drop it.
+                        // Late result from a pipelined call issued
+                        // before the shard exhausted, died, or was
+                        // replaced: drop it.
                     }
-                    Completion::Item { tag, value: None } => {
-                        st.shard_done[tag] = true;
+                    Completion::Item { value: None, .. } => {
+                        if current {
+                            st.mode[idx] = ShardMode::Exhausted;
+                        }
                     }
-                    Completion::Dropped { tag } => {
-                        // Shard actor died; retire it and keep pulling
-                        // from the survivors.
-                        st.shard_done[tag] = true;
+                    Completion::Dropped { .. } => {
+                        if current {
+                            // The incarnation we were streaming died.
+                            // If a replacement is already published,
+                            // adopt it now; otherwise park the shard —
+                            // `adopt_replacements` rejoins it when the
+                            // owner publishes.  A stale notice (ep <
+                            // epoch, e.g. the 2nd..num_async-th notice
+                            // of an incarnation we already replaced)
+                            // falls through and must NOT retire the
+                            // fresh incarnation.
+                            if st.registry.epoch(idx) > st.epoch[idx] {
+                                st.prime(idx, num_async);
+                            } else {
+                                st.mode[idx] = ShardMode::Dead;
+                            }
+                        }
                     }
                 }
             }
@@ -162,41 +311,85 @@ impl<W: 'static, T: Send + 'static> ParIter<W, T> {
     /// between fetches (e.g. a weight broadcast) are ordered with
     /// respect to dataflow steps (paper §4 Sequencing).  Ends when any
     /// shard is exhausted; a shard whose actor *died* is dropped from
-    /// subsequent rounds instead (the stream ends when none survive).
+    /// subsequent rounds — and rejoins at the next round boundary once
+    /// a replacement is published (mid-round, if the death notice
+    /// arrives while the barrier is still collecting).
     pub fn gather_sync(self) -> LocalIter<Vec<T>> {
-        let n = self.shards.len();
-        let shards = self.shards;
+        let n = self.registry.len();
+        let registry = self.registry;
         let plan = self.plan;
         let queue: CompletionQueue<Option<T>> =
             CompletionQueue::bounded(n.max(1));
-        let mut alive = vec![true; n];
+        let mut mode = vec![ShardMode::Active; n];
+        let mut epoch = vec![0u64; n];
         let mut done = false;
         LocalIter::from_fn(move || {
             if done {
                 return None;
             }
-            let mut issued = 0usize;
-            for (i, shard) in shards.iter().enumerate() {
-                if alive[i] {
-                    let plan = plan.clone();
-                    shard.call_into(i, &queue, move |w| plan(w));
-                    issued += 1;
+            // Round boundary: rejoin dead shards whose slot was
+            // republished since they died.
+            for i in 0..n {
+                if mode[i] == ShardMode::Dead
+                    && registry.epoch(i) > epoch[i]
+                {
+                    mode[i] = ShardMode::Active;
                 }
             }
-            if issued == 0 {
+            let mut expected = 0usize;
+            for (i, m) in mode.iter().enumerate() {
+                if *m == ShardMode::Active {
+                    let (handle, ep) = registry.get(i);
+                    epoch[i] = ep;
+                    let plan = plan.clone();
+                    handle.call_into(
+                        encode_tag(i, ep),
+                        &queue,
+                        move |w| plan(w),
+                    );
+                    expected += 1;
+                }
+            }
+            if expected == 0 {
                 done = true;
                 return None;
             }
             // Collect the whole round (reassembled into shard order so
             // barrier plans stay deterministic) before deciding.
             let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
-            for _ in 0..issued {
-                match queue.pop() {
-                    Completion::Item { tag, value: Some(t) } => {
-                        slots[tag] = Some(t);
+            while expected > 0 {
+                let completion = queue.pop();
+                expected -= 1;
+                let (i, ep) = decode_tag(completion.tag());
+                match completion {
+                    Completion::Item { value: Some(t), .. } => {
+                        if ep == epoch[i] {
+                            slots[i] = Some(t);
+                        }
                     }
                     Completion::Item { value: None, .. } => done = true,
-                    Completion::Dropped { tag } => alive[tag] = false,
+                    Completion::Dropped { .. } => {
+                        if ep == epoch[i] {
+                            // This round's submission died.  If a
+                            // replacement is already live, re-issue the
+                            // call so the barrier completes with the
+                            // replacement's item; else drop the shard
+                            // from this and subsequent rounds.
+                            let (handle, ep2) = registry.get(i);
+                            if ep2 > ep {
+                                epoch[i] = ep2;
+                                let plan = plan.clone();
+                                handle.call_into(
+                                    encode_tag(i, ep2),
+                                    &queue,
+                                    move |w| plan(w),
+                                );
+                                expected += 1;
+                            } else {
+                                mode[i] = ShardMode::Dead;
+                            }
+                        }
+                    }
                 }
             }
             if done {
@@ -227,6 +420,13 @@ mod tests {
         spawn_group("w", n, |i| {
             Box::new(move || Worker { id: i, counter: 0, weights: 0.0 })
         })
+    }
+
+    #[test]
+    fn tag_roundtrip() {
+        for (idx, ep) in [(0usize, 0u64), (17, 3), (SHARD_MASK, 1 << 40)] {
+            assert_eq!(decode_tag(encode_tag(idx, ep)), (idx, ep));
+        }
     }
 
     #[test]
@@ -418,5 +618,139 @@ mod tests {
         assert_eq!(it.next().unwrap(), vec![2, 2]);
         assert_eq!(it.next().unwrap(), vec![3, 3]);
         assert!(ws[2].await_poisoned(std::time::Duration::from_secs(2)));
+    }
+
+    // -----------------------------------------------------------------
+    // Elasticity: published replacements rejoin running gathers
+    // -----------------------------------------------------------------
+
+    fn replacement(id: usize) -> ActorHandle<Worker> {
+        ActorHandle::spawn("w-replacement", move || Worker {
+            id,
+            counter: 1000,
+            weights: 0.0,
+        })
+    }
+
+    #[test]
+    fn gather_async_adopts_published_replacement_live() {
+        let ws = workers(2);
+        let registry = ShardRegistry::new(ws.clone());
+        let mut it = ParIter::from_registry(registry.clone(), |w| {
+            w.counter += 1;
+            if w.id == 1 && w.counter == 3 {
+                panic!("shard 1 exploded");
+            }
+            Some((w.id, w.counter))
+        })
+        .gather_async(1);
+        // Drain until shard 1's death notice has retired it (shard 0
+        // keeps streaming).
+        let mut seen_shard1 = 0;
+        for _ in 0..32 {
+            let (id, _) = it.next().unwrap();
+            if id == 1 {
+                seen_shard1 += 1;
+            }
+        }
+        assert!(seen_shard1 <= 2);
+        assert!(ws[1].await_poisoned(std::time::Duration::from_secs(2)));
+        // Publish a replacement into the registry: the SAME running
+        // gather must start yielding its items (counter starts at 1000).
+        registry.publish(1, replacement(1));
+        let mut replacement_items = 0;
+        for _ in 0..64 {
+            let (id, c) = it.next().unwrap();
+            if id == 1 {
+                assert!(c > 1000, "item from the dead incarnation: {c}");
+                replacement_items += 1;
+            }
+        }
+        assert!(
+            replacement_items > 0,
+            "replacement never joined the running gather"
+        );
+    }
+
+    #[test]
+    fn gather_sync_readmits_replacement_at_round_boundary() {
+        let ws = workers(2);
+        let registry = ShardRegistry::new(ws.clone());
+        let mut it = ParIter::from_registry(registry.clone(), |w| {
+            w.counter += 1;
+            if w.id == 0 && w.counter == 2 {
+                panic!("shard 0 exploded");
+            }
+            Some(w.counter)
+        })
+        .gather_sync();
+        assert_eq!(it.next().unwrap(), vec![1, 1]);
+        // Shard 0 dies in round 2; the barrier completes off shard 1.
+        assert_eq!(it.next().unwrap(), vec![2]);
+        assert!(ws[0].await_poisoned(std::time::Duration::from_secs(2)));
+        registry.publish(0, replacement(0));
+        // Round 3 includes the replacement again (counter 1001).
+        assert_eq!(it.next().unwrap(), vec![1001, 3]);
+        assert_eq!(it.next().unwrap(), vec![1002, 4]);
+    }
+
+    #[test]
+    fn stale_death_notices_do_not_retire_the_replacement() {
+        // num_async=2: the dying incarnation leaves multiple in-flight
+        // submissions -> multiple death notices, all tagged with epoch
+        // 0.  The replacement is published before the gather observes
+        // any of them; the first notice adopts it, and every later
+        // stale notice must be discarded — not counted against the
+        // fresh incarnation (which a tag without the epoch would
+        // wrongly retire).
+        let ws = workers(1);
+        let registry = ShardRegistry::new(ws.clone());
+        let mut it = ParIter::from_registry(registry.clone(), |w| {
+            w.counter += 1;
+            if w.counter >= 1000 {
+                // Replacement incarnation: finite stream 1001..=1004.
+                if w.counter >= 1005 {
+                    return None;
+                }
+                return Some(w.counter);
+            }
+            if w.counter == 1 {
+                return Some(w.counter); // first call survives
+            }
+            panic!("first incarnation dies on its second call");
+        })
+        .gather_async(2);
+        // Prime the pipeline; the first call's item arrives, the second
+        // call panics, and the refill lands on a dying/dead actor —
+        // leaving >= 2 epoch-0 death notices queued behind the item.
+        assert_eq!(it.next(), Some(1));
+        assert!(ws[0].await_poisoned(std::time::Duration::from_secs(2)));
+        registry.publish(0, replacement(0));
+        // The epoch guard lets exactly one notice trigger adoption and
+        // discards the rest; the replacement's items then flow into the
+        // same gather until it exhausts cleanly.
+        let got = it.collect();
+        assert_eq!(got, vec![1001, 1002, 1003, 1004]);
+    }
+
+    #[test]
+    fn exhausted_shard_is_not_resurrected_by_publish() {
+        let ws = workers(1);
+        let registry = ShardRegistry::new(ws);
+        let mut it = ParIter::from_registry(registry.clone(), |w| {
+            w.counter += 1;
+            if w.counter > 2 {
+                None
+            } else {
+                Some(w.counter)
+            }
+        })
+        .gather_async(1);
+        assert_eq!(it.next(), Some(1));
+        assert_eq!(it.next(), Some(2));
+        assert_eq!(it.next(), None);
+        // A publish after clean exhaustion must not reopen the stream.
+        registry.publish(0, replacement(0));
+        assert_eq!(it.next(), None);
     }
 }

@@ -1,6 +1,13 @@
 //! `Concurrently` / `Union` — composing concurrently executing dataflow
 //! fragments (paper §4 Concurrency, Figure 8; used by Ape-X and the
 //! multi-agent PPO+DQN composition).
+//!
+//! Union tags are plain child indices (no epoch encoding): children are
+//! driver-side iterators, not actor incarnations, so there is nothing
+//! to replace live.  Elasticity composes through the *children*: a
+//! fragment built over a `ShardRegistry` keeps streaming (and adopts
+//! replacement workers) inside a running union — see the
+//! `async_union_child_adopts_replacement_worker` test.
 
 use crate::actor::{Completion, CompletionQueue};
 
@@ -439,6 +446,69 @@ mod tests {
         sorted.sort();
         assert_eq!(sorted, vec![1, 2, 3]);
         assert!(got.iter().filter(|&&x| x == 100).count() <= 1);
+    }
+
+    #[test]
+    fn async_union_child_adopts_replacement_worker() {
+        // The Ape-X topology: a registry-backed gather fragment runs as
+        // one child of an async union.  Kill its worker mid-stream,
+        // publish a replacement into the registry, and the *running*
+        // union must start emitting the replacement's items — the child
+        // fragment never ends, no plan rebuild.
+        use crate::actor::{ActorHandle, ShardRegistry};
+        use crate::iter::ParIter;
+
+        struct W {
+            base: i32,
+            n: i32,
+        }
+        // Shard 0 streams forever (keeps the fragment alive across the
+        // fault); shard 1 dies after two items.
+        let healthy = ActorHandle::spawn("union-healthy", || W {
+            base: 0,
+            n: 0,
+        });
+        let doomed = ActorHandle::spawn("union-doomed", || W {
+            base: 1000,
+            n: 0,
+        });
+        let registry =
+            ShardRegistry::new(vec![healthy.clone(), doomed.clone()]);
+        let gather_child = ParIter::from_registry(registry.clone(), |w| {
+            w.n += 1;
+            if w.base == 1000 && w.n >= 3 {
+                panic!("worker dies after two items");
+            }
+            Some(w.base + w.n)
+        })
+        .gather_async(1);
+        let steady = LocalIter::from_items(vec![-1; 50]);
+        let mut it = concurrently(
+            vec![gather_child, steady],
+            UnionMode::Async { buffer: 2 },
+            None,
+        );
+        for _ in 0..20 {
+            let x = it.next().expect("fragment must keep streaming");
+            assert!(x < 2000, "nothing above the doomed incarnation yet");
+        }
+        assert!(doomed.await_poisoned(std::time::Duration::from_secs(2)));
+        registry.publish(
+            1,
+            ActorHandle::spawn("union-fresh", || W { base: 2000, n: 0 }),
+        );
+        let mut replacement_items = 0;
+        for _ in 0..300 {
+            let x = it.next().expect("fragment must keep streaming");
+            if x > 2000 {
+                replacement_items += 1;
+            }
+        }
+        assert!(
+            replacement_items > 0,
+            "replacement items never surfaced through the running union"
+        );
+        drop(it);
     }
 
     #[test]

@@ -60,6 +60,17 @@
 //!   [`actor::ActorDied`], gathers retire the dead shard and keep
 //!   streaming, and `WorkerSet::restart_dead` respawns poisoned rollout
 //!   workers from the retained factory.
+//! * The control plane is **elastic**: gathers resolve shard index ->
+//!   handle through a versioned [`actor::ShardRegistry`] on every
+//!   dispatch, so a restarted worker rejoins *running* plans live (no
+//!   rebuild), with epoch-tagged completions keeping dead incarnations'
+//!   late results and death notices from touching their replacements
+//!   (`tests/elastic.rs`).
+//! * Weight broadcasts are **versioned casts** with a drop-oldest
+//!   eviction policy ([`actor::WeightCaster`]): at most one queued
+//!   apply per worker, superseded versions coalesce into it, and a
+//!   worker whose mailbox depth exceeds the watermark is shed instead
+//!   of stalling the learner.
 //! * Per-actor telemetry (queue depth/high-water, messages, busy/idle
 //!   time) flows through a global registry into every
 //!   `TrainResult::actor_stats`, so each report can say *where* the

@@ -3,7 +3,7 @@
 
 use std::collections::BTreeMap;
 
-use crate::actor::ActorStatsSnapshot;
+use crate::actor::{ActorStatsSnapshot, WeightCastStats};
 use crate::util::MovingStat;
 
 /// A finished episode, reported by the worker that ran it.
@@ -70,6 +70,7 @@ impl MetricsHub {
             learner_stats: self.learner_stats.clone(),
             // Filled by the reporting operator from the actor registry.
             actor_stats: Vec::new(),
+            weight_casts: None,
         }
     }
 }
@@ -91,6 +92,11 @@ pub struct TrainResult {
     /// filled by the metrics-reporting operators from the actor
     /// registry.  `utilization()` per entry locates the starved stage.
     pub actor_stats: Vec<ActorStatsSnapshot>,
+    /// Weight-broadcast eviction counters (versions published, applies
+    /// enqueued, superseded casts coalesced, overloaded casts shed) —
+    /// filled by `standard_metrics_reporting` from the `WorkerSet`'s
+    /// `WeightCaster`.  `None` for reporting paths without one.
+    pub weight_casts: Option<WeightCastStats>,
 }
 
 impl TrainResult {
@@ -116,7 +122,7 @@ impl TrainResult {
             .max_by_key(|s| s.queue_hwm)
             .unwrap();
         let dead = self.actor_stats.iter().filter(|s| s.poisoned).count();
-        format!(
+        let mut out = format!(
             "busiest={}({:.0}%) idlest={}({:.0}%) deepest_queue={}({}) dead={}",
             busy.name,
             busy.utilization() * 100.0,
@@ -125,7 +131,14 @@ impl TrainResult {
             hwm.name,
             hwm.queue_hwm,
             dead,
-        )
+        );
+        if let Some(wc) = &self.weight_casts {
+            out.push_str(&format!(
+                " weight_casts=v{}(enq={} coalesced={} shed={})",
+                wc.version, wc.enqueued, wc.coalesced, wc.shed
+            ));
+        }
+        out
     }
 }
 

@@ -42,7 +42,13 @@ pub(crate) fn drain_and_snapshot<A: 'static>(
 /// Wrap a training stream: each output pulls `items_per_report` train
 /// items, drains episode metrics from all workers (dead workers are
 /// skipped, not fatal), and emits a `TrainResult` snapshot carrying
-/// per-actor utilization/queue-depth stats.
+/// per-actor utilization/queue-depth stats plus the weight-cast
+/// eviction counters.
+///
+/// Workers are resolved through the set's **shard registry** at every
+/// report, not captured at build time — a worker restarted by
+/// `WorkerSet::restart_dead` mid-training has its episodes drained
+/// from the first report after the restart.
 pub fn standard_metrics_reporting(
     inner: LocalIter<TrainItem>,
     workers: &WorkerSet,
@@ -52,7 +58,8 @@ pub fn standard_metrics_reporting(
     let mut inner = inner;
     let mut hub = MetricsHub::new(100);
     let local = workers.local.clone();
-    let remotes = workers.remotes.clone();
+    let registry = workers.registry().clone();
+    let caster = workers.caster();
     LocalIter::from_fn(move || {
         for _ in 0..items_per_report {
             let item = inner.next()?;
@@ -62,12 +69,15 @@ pub fn standard_metrics_reporting(
                 hub.record_learner_stat(&k, v);
             }
         }
-        Some(drain_and_snapshot(&mut hub, &local, &remotes, |w| {
-            let eps = w.pop_episodes();
-            let steps = w.num_steps_sampled;
-            w.num_steps_sampled = 0;
-            (eps, steps)
-        }))
+        let mut snap =
+            drain_and_snapshot(&mut hub, &local, &registry.handles(), |w| {
+                let eps = w.pop_episodes();
+                let steps = w.num_steps_sampled;
+                w.num_steps_sampled = 0;
+                (eps, steps)
+            });
+        snap.weight_casts = Some(caster.stats());
+        Some(snap)
     })
 }
 
@@ -75,7 +85,7 @@ pub fn standard_metrics_reporting(
 mod tests {
     use super::*;
     use crate::env::{DummyEnv, Env};
-    use crate::ops::{parallel_rollouts, train_one_step};
+    use crate::ops::{parallel_rollouts_from, train_one_step};
     use crate::policy::DummyPolicy;
     use crate::rollout::{CollectMode, RolloutWorker};
 
@@ -97,11 +107,8 @@ mod tests {
     #[test]
     fn reports_aggregate_training_and_episodes() {
         let workers = worker_set(2);
-        let mut train = train_one_step(
-            workers.local.clone(),
-            workers.remotes.clone(),
-        );
-        let train_op = parallel_rollouts(workers.remotes.to_vec())
+        let mut train = train_one_step(&workers);
+        let train_op = parallel_rollouts_from(&workers)
             .gather_async(1)
             .for_each(move |b| train(b));
         let mut reports =
@@ -121,7 +128,8 @@ mod tests {
         // actors appear (matched by id — the registry is global), with
         // work accounted to them.
         assert!(!r.actor_stats.is_empty());
-        for h in workers.remotes.iter().chain([&workers.local]) {
+        let remotes = workers.remotes();
+        for h in remotes.iter().chain([&workers.local]) {
             let s = r
                 .actor_stats
                 .iter()
@@ -131,6 +139,10 @@ mod tests {
             assert!(s.busy_ns > 0, "{s:?}");
             assert!(!s.poisoned);
         }
+        // Weight-cast counters ride along too: one version per item.
+        let wc = r.weight_casts.expect("weight-cast stats attached");
+        assert_eq!(wc.version, 6);
+        assert!(r.pipeline_summary().contains("weight_casts=v6"));
     }
 
     #[test]
@@ -140,17 +152,14 @@ mod tests {
         // retires the dead shard; metrics draining skips it) and the
         // report must expose the death through actor_stats.
         let workers = worker_set(2);
-        let mut train = train_one_step(
-            workers.local.clone(),
-            workers.remotes.clone(),
-        );
-        let train_op = parallel_rollouts(workers.remotes.to_vec())
+        let mut train = train_one_step(&workers);
+        let train_op = parallel_rollouts_from(&workers)
             .gather_async(1)
             .for_each(move |b| train(b));
         let mut reports = standard_metrics_reporting(train_op, &workers, 1);
         assert!(reports.next().is_some());
 
-        let victim = &workers.remotes[0];
+        let victim = workers.remote(0);
         assert!(victim.call(|_| -> () { panic!("fault injection") }).is_err());
         assert!(victim.await_poisoned(std::time::Duration::from_secs(2)));
 
@@ -168,7 +177,6 @@ mod tests {
         assert!(dead.poisoned);
         assert!(r.pipeline_summary().contains("dead="));
         // The surviving worker keeps sampling.
-        let alive = &workers.remotes[1];
-        assert!(!alive.is_poisoned());
+        assert!(!workers.remote(1).is_poisoned());
     }
 }

@@ -20,7 +20,8 @@ pub use replay_ops::{
     create_replay_actors, replay, store_to_replay_buffer, ReplayActor,
 };
 pub use rollout_ops::{
-    concat_batches, exact_batches, parallel_rollouts, select_policy,
+    concat_batches, exact_batches, parallel_rollouts,
+    parallel_rollouts_from, select_policy,
 };
 pub use train_ops::{
     apply_gradients, compute_gradients, train_one_step, update_target_network,

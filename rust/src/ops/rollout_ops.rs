@@ -3,17 +3,30 @@
 
 use crate::actor::ActorHandle;
 use crate::iter::ParIter;
-use crate::rollout::RolloutWorker;
+use crate::rollout::{RolloutWorker, WorkerSet};
 use crate::sample_batch::{MultiAgentBatch, SampleBatch};
 
 /// `ParallelRollouts(workers)`: a parallel stream of experience batches,
 /// one shard per rollout worker (paper Fig. 5).  Gather with
 /// `.gather_async(n)` (A3C/Ape-X/IMPALA) or `.gather_sync()` +
-/// `concat` (A2C/PPO's bulk-sync mode).
+/// `concat` (A2C/PPO's bulk-sync mode).  The handles are captured at
+/// build time; prefer [`parallel_rollouts_from`] over a `WorkerSet` so
+/// restarted workers rejoin the running gather.
 pub fn parallel_rollouts(
     workers: Vec<ActorHandle<RolloutWorker>>,
 ) -> ParIter<RolloutWorker, SampleBatch> {
     ParIter::from_actors(workers, |w| Some(w.sample()))
+}
+
+/// [`parallel_rollouts`] over a `WorkerSet`'s **shard registry**: every
+/// dispatch resolves worker index -> handle through the set, so a
+/// worker replaced by `WorkerSet::restart_dead` joins the *running*
+/// stream on its next dispatch — no plan rebuild (ROADMAP "dynamic
+/// plan re-binding").
+pub fn parallel_rollouts_from(
+    workers: &WorkerSet,
+) -> ParIter<RolloutWorker, SampleBatch> {
+    ParIter::from_registry(workers.registry().clone(), |w| Some(w.sample()))
 }
 
 /// `ConcatBatches(min_batch_size)`: buffer incoming batches until the

@@ -3,22 +3,24 @@
 
 use crate::actor::ActorHandle;
 use crate::policy::Gradients;
-use crate::rollout::RolloutWorker;
+use crate::rollout::{RolloutWorker, WorkerSet};
 use crate::sample_batch::SampleBatch;
 
 use super::TrainItem;
 
 /// `TrainOneStep(workers)`: learn on the local worker, then broadcast
-/// fresh weights to the remotes (fire-and-forget casts; with
-/// `gather_sync` upstream these land before the next round's fetches —
-/// barrier semantics).  Hand to `for_each`.
-///
-/// The broadcast ships one shared `Arc<[f32]>`: every remote's cast
-/// clones a pointer, not the parameter vector.
+/// fresh weights to the remotes as a **versioned weight cast** through
+/// the set's `WeightCaster`: one shared `Arc<[f32]>` (a pointer clone
+/// per remote, not a parameter-vector copy), at most one queued apply
+/// per remote (superseded versions coalesce), and overloaded remotes
+/// are shed instead of blocking the learner.  With `gather_sync`
+/// upstream the apply envelopes land before the next round's fetches —
+/// barrier semantics.  Hand to `for_each`.
 pub fn train_one_step(
-    local: ActorHandle<RolloutWorker>,
-    remotes: Vec<ActorHandle<RolloutWorker>>,
+    workers: &WorkerSet,
 ) -> impl FnMut(SampleBatch) -> TrainItem + Send + 'static {
+    let local = workers.local.clone();
+    let caster = workers.caster();
     move |batch| {
         let steps = batch.len();
         let (stats, weights) = local
@@ -27,11 +29,7 @@ pub fn train_one_step(
                 (stats, w.get_weights())
             })
             .expect("learner (local worker) actor died");
-        let weights: std::sync::Arc<[f32]> = weights.into();
-        for r in &remotes {
-            let w = std::sync::Arc::clone(&weights);
-            r.cast(move |worker| worker.set_weights(&w));
-        }
+        caster.broadcast(weights.into());
         TrainItem::new(stats, steps)
     }
 }
@@ -111,20 +109,37 @@ mod tests {
         })
     }
 
+    fn worker_set(n_remote: usize) -> WorkerSet {
+        WorkerSet::new(n_remote, |_| {
+            Box::new(|| {
+                let envs: Vec<Box<dyn Env>> =
+                    vec![Box::new(DummyEnv::new(4, 10))];
+                RolloutWorker::new(
+                    envs,
+                    Box::new(DummyPolicy::new(0.1)),
+                    8,
+                    CollectMode::OnPolicy,
+                )
+            })
+        })
+    }
+
     #[test]
     fn train_one_step_updates_local_and_broadcasts() {
-        let mut ws = workers(3);
-        let local = ws.remove(0);
-        let mut op = train_one_step(local.clone(), ws.clone());
-        let batch = local.call(|w| w.sample()).unwrap();
+        let set = worker_set(2);
+        let mut op = train_one_step(&set);
+        let batch = set.local.call(|w| w.sample()).unwrap();
         let item = op(batch);
         assert_eq!(item.steps_trained, 8);
         assert!(item.stats.contains_key("loss"));
-        let local_w = local.call(|w| w.get_weights()).unwrap();
+        let local_w = set.local.call(|w| w.get_weights()).unwrap();
         assert_ne!(local_w, vec![0.0]); // dummy policy moved
-        for r in &ws {
+        // The versioned cast is queued before these calls (FIFO per
+        // mailbox), so by the time a call returns the apply has run.
+        for r in set.remotes() {
             assert_eq!(r.call(|w| w.get_weights()).unwrap(), local_w);
         }
+        assert_eq!(set.weight_cast_stats().version, 1);
     }
 
     #[test]

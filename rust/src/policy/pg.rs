@@ -69,17 +69,28 @@ impl PgCore {
         vec!["pg_fwd", grad, "adam_pg", "sgd_pg"]
     }
 
-    /// Forward pass: (row-major logits [n * num_actions], values [n]),
-    /// padded/chunked to the artifact's static batch.  Flat output, no
-    /// per-row allocation; the pad buffer is a reused scratch (perf O3).
-    pub fn forward(&mut self, obs: &[f32], n: usize) -> (Vec<f32>, Vec<f32>) {
+    /// Forward pass into **caller-provided output scratch**: row-major
+    /// logits `[n * num_actions]` and values `[n]` are written into
+    /// `logits`/`values` (cleared first; their storage is reused once
+    /// warm), padded/chunked to the artifact's static batch.  With the
+    /// pad buffer already a reused scratch (perf O3), the policy's hot
+    /// inference loop allocates nothing per forward at steady state.
+    pub fn forward(
+        &mut self,
+        obs: &[f32],
+        n: usize,
+        logits: &mut Vec<f32>,
+        values: &mut Vec<f32>,
+    ) {
         let (bi, od, na) = {
             let cfg = &self.rt.manifest.config;
             (cfg.inf_batch, cfg.obs_dim, cfg.num_actions)
         };
         assert_eq!(obs.len(), n * od);
-        let mut logits = Vec::with_capacity(n * na);
-        let mut values = Vec::with_capacity(n);
+        logits.clear();
+        logits.reserve(n * na);
+        values.clear();
+        values.reserve(n);
         for chunk_start in (0..n).step_by(bi) {
             let rows = (n - chunk_start).min(bi);
             self.pad_scratch[..rows * od]
@@ -96,7 +107,6 @@ impl PgCore {
             logits.extend_from_slice(&out[0][..rows * na]);
             values.extend_from_slice(&out[1][..rows]);
         }
-        (logits, values)
     }
 
     /// One Adam step (grad-clip + bias correction happen in the
@@ -130,6 +140,11 @@ pub struct PgPolicy {
     /// All-ones loss mask for exactly-sized batches — reused across
     /// every minibatch instead of a `vec![1.0; n]` per gradient call.
     ones: Vec<f32>,
+    /// Reused forward-pass output buffers (`PgCore::forward` writes
+    /// into caller scratch): the action-sampling hot loop allocates no
+    /// logits/values vectors once these are warm.
+    logits_scratch: Vec<f32>,
+    values_scratch: Vec<f32>,
 }
 
 impl PgPolicy {
@@ -141,7 +156,14 @@ impl PgPolicy {
             PgLossKind::Ppo { .. } => cfg.ppo_minibatch,
             PgLossKind::Impala => cfg.impala_t * cfg.impala_b,
         };
-        PgPolicy { core, kind, minibatch, ones: vec![1.0; minibatch] }
+        PgPolicy {
+            core,
+            kind,
+            minibatch,
+            ones: vec![1.0; minibatch],
+            logits_scratch: Vec::new(),
+            values_scratch: Vec::new(),
+        }
     }
 
     /// Build inside the owning actor thread.
@@ -226,14 +248,21 @@ impl PgPolicy {
 impl Policy for PgPolicy {
     fn compute_actions(&mut self, obs: &[f32], n: usize) -> Vec<ActionOutput> {
         let na = self.core.rt.manifest.config.num_actions;
-        let (logits, values) = self.core.forward(obs, n);
-        (0..n)
+        // Forward into the policy-owned scratches (taken locally so the
+        // sampling loop can borrow the rng mutably).
+        let mut logits = std::mem::take(&mut self.logits_scratch);
+        let mut values = std::mem::take(&mut self.values_scratch);
+        self.core.forward(obs, n, &mut logits, &mut values);
+        let out = (0..n)
             .map(|i| {
                 let row = &logits[i * na..(i + 1) * na];
                 let (action, logp) = sample_categorical(row, &mut self.core.rng);
                 ActionOutput { action, logp, value: values[i] }
             })
-            .collect()
+            .collect();
+        self.logits_scratch = logits;
+        self.values_scratch = values;
+        out
     }
 
     fn compute_gradients(&mut self, batch: &SampleBatch) -> Gradients {
@@ -286,12 +315,22 @@ impl Policy for PgPolicy {
     }
 
     fn value(&mut self, obs: &[f32]) -> f32 {
-        let (_, values) = self.core.forward(obs, 1);
-        values[0]
+        let mut logits = std::mem::take(&mut self.logits_scratch);
+        let mut values = std::mem::take(&mut self.values_scratch);
+        self.core.forward(obs, 1, &mut logits, &mut values);
+        let v = values[0];
+        self.logits_scratch = logits;
+        self.values_scratch = values;
+        v
     }
 
     fn values(&mut self, obs: &[f32], n: usize) -> Vec<f32> {
-        let (_, values) = self.core.forward(obs, n);
+        // The trait returns an owned Vec (called once per fragment for
+        // GAE bootstraps); only the logits buffer is recycled here.
+        let mut logits = std::mem::take(&mut self.logits_scratch);
+        let mut values = Vec::with_capacity(n);
+        self.core.forward(obs, n, &mut logits, &mut values);
+        self.logits_scratch = logits;
         values
     }
 

@@ -1,6 +1,9 @@
 //! Single-policy rollout worker + the local/remote `WorkerSet`.
 
-use crate::actor::{spawn_group, ActorHandle};
+use crate::actor::{
+    spawn_group, ActorHandle, ShardRegistry, WeightCastStats, WeightCaster,
+    DEFAULT_CAST_WATERMARK,
+};
 use crate::env::Env;
 use crate::metrics::EpisodeRecord;
 use crate::policy::{Gradients, Policy};
@@ -203,14 +206,23 @@ type WorkerFactory =
 /// `WorkerSet`.  All of them are actors; "local" only means "the one
 /// the trainer ops message for learning".
 ///
-/// The set keeps the construction factory, so a remote whose actor
-/// thread panicked (poisoned) can be respawned in place with
-/// [`WorkerSet::restart_dead`] — the paper's fault-tolerance model (§3):
-/// rollout workers hold no durable state, so recovery is "make a new
-/// one and hand it the learner's weights".
+/// The remotes live behind a [`ShardRegistry`]: dataflow plans built
+/// over the set (`ops::parallel_rollouts_from`, or any
+/// `ParIter::from_registry(set.registry().clone(), ..)`) resolve shard
+/// index -> handle through it on every dispatch, so a remote replaced
+/// by [`WorkerSet::restart_dead`] rejoins **running** gathers live —
+/// the paper's fault-tolerance model (§3) without a plan rebuild:
+/// rollout workers hold no durable state, recovery is "make a new one,
+/// hand it the learner's weights, publish it".
+///
+/// Weight broadcasts go through a shared [`WeightCaster`]: versioned
+/// casts with drop-oldest coalescing and watermark-gated load shedding,
+/// so a slow or dying remote can never stall the learner behind a
+/// mailbox full of superseded parameter vectors.
 pub struct WorkerSet {
     pub local: ActorHandle<RolloutWorker>,
-    pub remotes: Vec<ActorHandle<RolloutWorker>>,
+    registry: ShardRegistry<RolloutWorker>,
+    caster: std::sync::Arc<WeightCaster<RolloutWorker>>,
     factory: std::sync::Mutex<WorkerFactory>,
 }
 
@@ -229,31 +241,67 @@ impl WorkerSet {
             ActorHandle::spawn("local_worker", move || init())
         };
         let remotes = spawn_group("worker", num_remote, |i| make(i + 1));
-        WorkerSet { local, remotes, factory: std::sync::Mutex::new(make) }
+        let registry = ShardRegistry::new(remotes);
+        let caster = std::sync::Arc::new(WeightCaster::new(
+            registry.clone(),
+            DEFAULT_CAST_WATERMARK,
+            |w: &mut RolloutWorker, p: &[f32]| w.set_weights(p),
+        ));
+        WorkerSet {
+            local,
+            registry,
+            caster,
+            factory: std::sync::Mutex::new(make),
+        }
     }
 
-    /// Broadcast the local worker's weights to all remotes (blocking
-    /// until every remote applied them — used at sync barriers).  One
-    /// shared `Arc<[f32]>` travels to every remote; the per-remote cost
-    /// is a pointer clone, not a parameter-vector copy.  Dead remotes
-    /// are skipped (they resync on restart).
+    /// The elastic shard table behind the remotes.  Plans that gather
+    /// through a clone of it adopt restarted workers live.
+    pub fn registry(&self) -> &ShardRegistry<RolloutWorker> {
+        &self.registry
+    }
+
+    /// The versioned weight-broadcast channel to the remotes (shared by
+    /// `sync_weights`, `TrainOneStep`, and the DQN-family plans, so the
+    /// weight version is monotone across all of them).
+    pub fn caster(&self) -> std::sync::Arc<WeightCaster<RolloutWorker>> {
+        self.caster.clone()
+    }
+
+    /// Broadcast-policy counters (versions published, casts enqueued /
+    /// coalesced / shed).
+    pub fn weight_cast_stats(&self) -> WeightCastStats {
+        self.caster.stats()
+    }
+
+    pub fn num_remotes(&self) -> usize {
+        self.registry.len()
+    }
+
+    /// Snapshot of the current incarnation behind every remote index.
+    /// For plan-building prefer gathering through [`Self::registry`] —
+    /// a snapshot goes stale at the next `restart_dead`.
+    pub fn remotes(&self) -> Vec<ActorHandle<RolloutWorker>> {
+        self.registry.handles()
+    }
+
+    /// The current incarnation behind remote index `i`.
+    pub fn remote(&self, i: usize) -> ActorHandle<RolloutWorker> {
+        self.registry.get(i).0
+    }
+
+    /// Broadcast the local worker's weights to all remotes, blocking
+    /// until every live remote applied them — the sync-barrier path.
+    /// One shared `Arc<[f32]>` travels to every remote; the per-remote
+    /// cost is a pointer clone, not a parameter-vector copy.  Dead
+    /// remotes are skipped (they resync on restart).
     pub fn sync_weights(&self) {
         let weights: std::sync::Arc<[f32]> = self
             .local
             .call(|w| w.get_weights())
             .expect("local (learner) worker died")
             .into();
-        let replies: Vec<_> = self
-            .remotes
-            .iter()
-            .map(|r| {
-                let w = std::sync::Arc::clone(&weights);
-                r.call_deferred(move |worker| worker.set_weights(&w))
-            })
-            .collect();
-        for r in replies {
-            let _ = r.recv();
-        }
+        self.caster.broadcast_sync(weights);
     }
 
     /// Total episodes + sampled-step counters drained from all workers.
@@ -261,8 +309,8 @@ impl WorkerSet {
     pub fn collect_metrics(&self) -> (Vec<EpisodeRecord>, usize) {
         let mut episodes = Vec::new();
         let mut steps = 0;
-        let replies: Vec<_> = std::iter::once(&self.local)
-            .chain(self.remotes.iter())
+        let replies: Vec<_> = std::iter::once(self.local.clone())
+            .chain(self.registry.handles())
             .map(|h| {
                 h.call_deferred(|w| {
                     let eps = w.pop_episodes();
@@ -281,21 +329,16 @@ impl WorkerSet {
         (episodes, steps)
     }
 
-    /// Indices of remotes whose actor thread has panicked.
+    /// Indices of remotes whose current incarnation has panicked.
     pub fn poisoned_indices(&self) -> Vec<usize> {
-        self.remotes
-            .iter()
-            .enumerate()
-            .filter(|(_, r)| r.is_poisoned())
-            .map(|(i, _)| i)
-            .collect()
+        self.registry.poisoned_indices()
     }
 
     /// Respawn every poisoned remote from the retained factory, push
-    /// the learner's current weights to the replacements, and return
-    /// the restarted indices.  Handles previously cloned out of
-    /// `remotes` (e.g. into a running gather) still address the dead
-    /// actor — rebuild the plan from the set after a restart.
+    /// the learner's current weights to the replacement, **publish it
+    /// into the registry** — running gathers adopt it on their next
+    /// dispatch (credits held by the dead incarnation retire via its
+    /// epoch-tagged death notices) — and return the restarted indices.
     ///
     /// If the **learner** (local) worker is itself dead, nothing is
     /// restarted and an empty list is returned: replacements without
@@ -303,7 +346,7 @@ impl WorkerSet {
     /// is the checkpoint layer's job, not respawn-blank.  (Note that a
     /// just-killed worker publishes its poisoned flag asynchronously —
     /// see `ActorHandle::await_poisoned`.)
-    pub fn restart_dead(&mut self) -> Vec<usize> {
+    pub fn restart_dead(&self) -> Vec<usize> {
         let dead = self.poisoned_indices();
         if dead.is_empty() {
             return dead;
@@ -322,7 +365,7 @@ impl WorkerSet {
                 ActorHandle::spawn(&format!("worker-{i}"), move || init());
             let w = std::sync::Arc::clone(&weights);
             fresh.cast(move |worker| worker.set_weights(&w));
-            self.remotes[i] = fresh;
+            self.registry.publish(i, fresh);
         }
         dead
     }
@@ -387,19 +430,20 @@ mod tests {
         });
         set.local.call(|w| w.set_weights(&[0.75])).unwrap();
         set.sync_weights();
-        for r in &set.remotes {
+        for r in set.remotes() {
             assert_eq!(r.call(|w| w.get_weights()).unwrap(), vec![0.75]);
         }
+        assert_eq!(set.weight_cast_stats().version, 1);
     }
 
     #[test]
     fn worker_set_restarts_poisoned_remotes() {
-        let mut set = WorkerSet::new(3, |_| Box::new(|| dummy_worker(1, 4)));
+        let set = WorkerSet::new(3, |_| Box::new(|| dummy_worker(1, 4)));
         set.local.call(|w| w.set_weights(&[0.5])).unwrap();
         // Kill remote 1 (the poisoned flag publishes asynchronously).
-        let _ = set.remotes[1].call(|_| -> () { panic!("sim fault") });
-        assert!(set.remotes[1]
-            .await_poisoned(std::time::Duration::from_secs(2)));
+        let victim = set.remote(1);
+        let _ = victim.call(|_| -> () { panic!("sim fault") });
+        assert!(victim.await_poisoned(std::time::Duration::from_secs(2)));
         assert_eq!(set.poisoned_indices(), vec![1]);
         // Metrics collection and weight sync survive the dead worker.
         set.sync_weights();
@@ -407,23 +451,24 @@ mod tests {
 
         let restarted = set.restart_dead();
         assert_eq!(restarted, vec![1]);
-        assert!(!set.remotes[1].is_poisoned());
+        // The registry now serves the replacement incarnation.
+        assert_eq!(set.registry().epoch(1), 1);
+        let fresh = set.remote(1);
+        assert_ne!(fresh.id(), victim.id());
+        assert!(!fresh.is_poisoned());
         // The replacement runs and carries the learner's weights.
-        assert_eq!(
-            set.remotes[1].call(|w| w.get_weights()).unwrap(),
-            vec![0.5]
-        );
-        assert_eq!(set.remotes[1].call(|w| w.sample().len()).unwrap(), 4);
+        assert_eq!(fresh.call(|w| w.get_weights()).unwrap(), vec![0.5]);
+        assert_eq!(fresh.call(|w| w.sample().len()).unwrap(), 4);
         assert!(set.restart_dead().is_empty());
     }
 
     #[test]
     fn restart_dead_refuses_when_learner_is_dead() {
-        let mut set = WorkerSet::new(2, |_| Box::new(|| dummy_worker(1, 4)));
-        let _ = set.remotes[0].call(|_| -> () { panic!("worker fault") });
+        let set = WorkerSet::new(2, |_| Box::new(|| dummy_worker(1, 4)));
+        let w0 = set.remote(0);
+        let _ = w0.call(|_| -> () { panic!("worker fault") });
         let _ = set.local.call(|_| -> () { panic!("learner fault") });
-        assert!(set.remotes[0]
-            .await_poisoned(std::time::Duration::from_secs(2)));
+        assert!(w0.await_poisoned(std::time::Duration::from_secs(2)));
         assert!(set.local.await_poisoned(std::time::Duration::from_secs(2)));
         // No blank-weight respawns: learner recovery is checkpoint-level.
         assert!(set.restart_dead().is_empty());
@@ -433,7 +478,7 @@ mod tests {
     #[test]
     fn worker_set_collect_metrics_drains() {
         let set = WorkerSet::new(2, |_| Box::new(|| dummy_worker(1, 20)));
-        for r in &set.remotes {
+        for r in set.remotes() {
             r.cast(|w| {
                 w.sample();
             });

@@ -74,12 +74,25 @@ impl SampleBatch {
         if batches.len() == 1 {
             return batches[0].clone();
         }
+        let refs: Vec<&SampleBatch> = batches.iter().collect();
+        Self::concat_all_refs(&refs)
+    }
+
+    /// [`SampleBatch::concat_all`] over borrowed batches — callers that
+    /// group batches (e.g. `MultiAgentBatch::concat_all` bucketing by
+    /// policy id) collect `&SampleBatch`s instead of cloning every
+    /// batch struct into intermediate grouping vectors.
+    pub fn concat_all_refs(batches: &[&SampleBatch]) -> SampleBatch {
+        assert!(!batches.is_empty());
+        if batches.len() == 1 {
+            return batches[0].clone();
+        }
         let obs_dim = batches[0].obs_dim;
         for b in batches {
             assert_eq!(b.obs_dim, obs_dim, "obs_dim mismatch in concat");
         }
         fn cat_f(
-            batches: &[SampleBatch],
+            batches: &[&SampleBatch],
             get: fn(&SampleBatch) -> &FCol,
         ) -> FCol {
             let total: usize = batches.iter().map(|b| get(b).len()).sum();

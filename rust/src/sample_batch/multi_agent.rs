@@ -42,18 +42,23 @@ impl MultiAgentBatch {
         self.policy_batches.get(policy_id)
     }
 
-    /// Merge by concatenating per-policy batches.
+    /// Merge by concatenating per-policy batches.  Groups by *borrowed*
+    /// policy id and collects `&SampleBatch`s, so the only allocations
+    /// are the per-policy ref vectors and the output columns — no
+    /// cloned batch structs, and one id `String` per output key.
     pub fn concat_all(batches: &[MultiAgentBatch]) -> MultiAgentBatch {
-        let mut grouped: BTreeMap<PolicyId, Vec<SampleBatch>> = BTreeMap::new();
+        let mut grouped: BTreeMap<&str, Vec<&SampleBatch>> = BTreeMap::new();
         for ma in batches {
             for (pid, b) in &ma.policy_batches {
-                grouped.entry(pid.clone()).or_default().push(b.clone());
+                grouped.entry(pid.as_str()).or_default().push(b);
             }
         }
         MultiAgentBatch {
             policy_batches: grouped
                 .into_iter()
-                .map(|(pid, bs)| (pid, SampleBatch::concat_all(&bs)))
+                .map(|(pid, bs)| {
+                    (pid.to_string(), SampleBatch::concat_all_refs(&bs))
+                })
                 .collect(),
         }
     }

@@ -1,0 +1,162 @@
+//! Elastic control-plane acceptance tests: a worker killed during a
+//! *running* gather rejoins after `WorkerSet::restart_dead` without a
+//! plan rebuild — the live re-binding the shard registry exists for —
+//! and the epoch protocol keeps completions of dead incarnations from
+//! being attributed to their replacements.
+//!
+//! These run on the Dummy env/policy, so they need no AOT artifacts.
+
+use std::time::Duration;
+
+use flowrl::env::{DummyEnv, Env};
+use flowrl::ops::parallel_rollouts_from;
+use flowrl::policy::DummyPolicy;
+use flowrl::rollout::{CollectMode, RolloutWorker, WorkerSet};
+
+fn worker_set(n_remote: usize) -> WorkerSet {
+    WorkerSet::new(n_remote, |_| {
+        Box::new(|| {
+            let envs: Vec<Box<dyn Env>> =
+                vec![Box::new(DummyEnv::new(4, 10))];
+            RolloutWorker::new(
+                envs,
+                Box::new(DummyPolicy::new(0.1)),
+                4,
+                CollectMode::OnPolicy,
+            )
+        })
+    })
+}
+
+#[test]
+fn killed_worker_rejoins_running_gather_async() {
+    let set = worker_set(2);
+    set.local.call(|w| w.set_weights(&[0.25])).unwrap();
+    let mut it = parallel_rollouts_from(&set).gather_async_with_source(1);
+    let w0 = set.remote(0);
+    let w1 = set.remote(1);
+
+    // The stream is live off both workers.
+    for _ in 0..4 {
+        assert!(it.next().is_some());
+    }
+
+    // Kill worker 1 while its gather submissions are in flight.
+    assert!(w1.call(|_| -> () { panic!("fault injection") }).is_err());
+    assert!(w1.await_poisoned(Duration::from_secs(2)));
+
+    // The same gather keeps streaming off the survivor (at most one
+    // already-buffered item from the dead incarnation may surface).
+    let mut dead_items = 0;
+    for _ in 0..6 {
+        let (_batch, src) = it.next().expect("stream must survive the fault");
+        if src.id() == w1.id() {
+            dead_items += 1;
+        } else {
+            assert_eq!(src.id(), w0.id());
+        }
+    }
+    assert!(dead_items <= 1, "dead worker kept producing: {dead_items}");
+
+    // Restart: the replacement is published into the set's registry.
+    assert_eq!(set.restart_dead(), vec![1]);
+    let fresh = set.remote(1);
+    assert_ne!(fresh.id(), w1.id());
+
+    // The SAME running gather — no rebuild — now yields the
+    // replacement's batches, paired with the replacement's handle.
+    let mut fresh_items = 0;
+    for _ in 0..64 {
+        let (_batch, src) = it.next().expect("stream must keep flowing");
+        assert_ne!(src.id(), w1.id(), "item attributed to the corpse");
+        if src.id() == fresh.id() {
+            fresh_items += 1;
+        }
+    }
+    assert!(
+        fresh_items > 0,
+        "replacement never rejoined the running gather"
+    );
+    // The replacement sampled with the learner's weights, not blanks.
+    assert_eq!(fresh.call(|w| w.get_weights()).unwrap(), vec![0.25]);
+}
+
+#[test]
+fn restart_before_notices_drain_discards_stale_epoch() {
+    // Kill a worker with num_async=2 (multiple in-flight submissions ->
+    // multiple epoch-0 death notices) and restart it BEFORE the gather
+    // has consumed any of them.  The first notice makes the running
+    // gather adopt the replacement; the later stale notices must be
+    // discarded — without the epoch tag they would retire the fresh
+    // incarnation and shard 1 would fall silent.
+    let set = worker_set(2);
+    let mut it = parallel_rollouts_from(&set).gather_async_with_source(2);
+    let w1 = set.remote(1);
+
+    for _ in 0..4 {
+        assert!(it.next().is_some());
+    }
+    assert!(w1.call(|_| -> () { panic!("fault injection") }).is_err());
+    assert!(w1.await_poisoned(Duration::from_secs(2)));
+    // Restart immediately: the dead incarnation's notices are still
+    // queued (or in flight) when the replacement is published.
+    assert_eq!(set.restart_dead(), vec![1]);
+    let fresh = set.remote(1);
+
+    let mut fresh_items = 0;
+    for _ in 0..96 {
+        let (_batch, src) = it.next().expect("stream must keep flowing");
+        if src.id() == fresh.id() {
+            fresh_items += 1;
+        }
+    }
+    assert!(
+        fresh_items > 0,
+        "stale death notice retired the replacement (double-counted)"
+    );
+    // Exactly one restart happened; the replacement is healthy.
+    assert!(set.poisoned_indices().is_empty());
+    assert!(set.restart_dead().is_empty());
+}
+
+#[test]
+fn killed_worker_rejoins_gather_sync_at_round_boundary() {
+    let set = worker_set(2);
+    let mut it = parallel_rollouts_from(&set).gather_sync();
+    assert_eq!(it.next().unwrap().len(), 2);
+
+    let w0 = set.remote(0);
+    assert!(w0.call(|_| -> () { panic!("fault injection") }).is_err());
+    assert!(w0.await_poisoned(Duration::from_secs(2)));
+
+    // Barrier rounds complete off the survivor while the shard is dead.
+    let survivors_round = it.next().unwrap();
+    assert_eq!(survivors_round.len(), 1);
+
+    assert_eq!(set.restart_dead(), vec![0]);
+    // The replacement joins at the next round boundary: full rounds
+    // again, through the same running iterator.
+    assert_eq!(it.next().unwrap().len(), 2);
+    assert_eq!(it.next().unwrap().len(), 2);
+}
+
+#[test]
+fn sync_weights_reaches_restarted_workers() {
+    let set = worker_set(2);
+    let w1 = set.remote(1);
+    assert!(w1.call(|_| -> () { panic!("fault injection") }).is_err());
+    assert!(w1.await_poisoned(Duration::from_secs(2)));
+    // sync_weights with a dead remote: skipped, not fatal.
+    set.local.call(|w| w.set_weights(&[0.125])).unwrap();
+    set.sync_weights();
+
+    assert_eq!(set.restart_dead(), vec![1]);
+    // A later barrier sync must reach the replacement through the
+    // registry (a build-time handle snapshot would miss it).
+    set.local.call(|w| w.set_weights(&[0.5])).unwrap();
+    set.sync_weights();
+    assert_eq!(set.remote(1).call(|w| w.get_weights()).unwrap(), vec![0.5]);
+    assert_eq!(set.remote(0).call(|w| w.get_weights()).unwrap(), vec![0.5]);
+    // Versions are monotone across the restart.
+    assert!(set.weight_cast_stats().version >= 2);
+}

@@ -1,23 +1,38 @@
 #!/usr/bin/env bash
-# CI entry point: format, lint, build, test.
+# CI entry point: format, lint, build, test, bench smoke-run, bench
+# schema validation.
 #
-#   tools/ci.sh           # run everything
-#   tools/ci.sh --quick   # skip the release build (fmt + clippy + tests)
+#   tools/ci.sh           # run everything (includes --smoke + validator)
+#   tools/ci.sh --quick   # skip release build, bench build/run (fmt +
+#                         # clippy + tests + validator)
+#   tools/ci.sh --smoke   # also *execute* every bench binary with tiny
+#                         # iteration counts (implied by the full run)
 #
-# Benches are built but not run (they are plain `fn main()` reporters;
-# run them explicitly, e.g. `cargo bench --bench actor_mailbox -- --write`
-# to refresh BENCH_actor_mailbox.json on a real machine).
+# Benches are plain `fn main()` reporters; the smoke run executes each
+# of them with `-- --smoke` so their mains cannot bit-rot silently.
+# Benches that need the AOT artifacts skip themselves cleanly when
+# `rust/artifacts/manifest.json` is absent.  Full measured runs stay
+# manual, e.g. `cargo bench --bench actor_mailbox -- --write` to
+# refresh BENCH_actor_mailbox.json on a real machine.
 
 set -euo pipefail
-cd "$(dirname "$0")/../rust"
+cd "$(dirname "$0")/.."
+repo_root="$(pwd)"
+cd rust
 
 quick=0
+smoke=0
 for arg in "$@"; do
   case "$arg" in
     --quick) quick=1 ;;
+    --smoke) smoke=1 ;;
     *) echo "unknown argument: $arg" >&2; exit 2 ;;
   esac
 done
+# The default full run includes the smoke pass.
+if [ "$quick" -eq 0 ]; then
+  smoke=1
+fi
 
 echo "==> cargo fmt --check"
 cargo fmt --check
@@ -37,5 +52,18 @@ if [ "$quick" -eq 0 ]; then
   echo "==> cargo build --benches --release"
   cargo build --benches --release
 fi
+
+if [ "$smoke" -eq 1 ]; then
+  # Derived from the bench sources so a newly added reporter can never
+  # be silently excluded from the smoke gate.
+  for f in benches/*.rs; do
+    b="$(basename "$f" .rs)"
+    echo "==> bench smoke: $b"
+    cargo bench --bench "$b" -- --smoke
+  done
+fi
+
+echo "==> validate BENCH_*.json schemas"
+python3 "$repo_root/tools/validate_bench.py" "$repo_root"/BENCH_*.json
 
 echo "CI OK"

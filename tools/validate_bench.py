@@ -1,0 +1,121 @@
+#!/usr/bin/env python3
+"""Schema-check the committed BENCH_*.json reports.
+
+The bench reporters regenerate these files with `-- --write`; nothing
+else checks that a hand-edit (or a reporter refactor) kept them sane.
+Rules enforced per file:
+
+  * top-level required keys: bench, units, how_to_regenerate, results;
+  * "bench" matches the filename (BENCH_<bench>.json);
+  * "units" is a known unit string;
+  * "results" is a list of objects; every numeric field is finite and
+    non-negative; every entry carries an "op" string;
+  * if entries carry timestamps ("recorded_at_unix_ms"), they must be
+    non-negative and monotonically non-decreasing in file order;
+  * if an "ops" allowlist is present, every result's "op" is in it.
+
+Exit code 0 = all files pass; 1 = any violation (listed on stderr).
+
+Usage: tools/validate_bench.py BENCH_a.json [BENCH_b.json ...]
+"""
+
+import json
+import math
+import pathlib
+import sys
+
+KNOWN_UNITS = {"ns_per_op", "us_per_op", "ms_per_op", "steps_per_s"}
+REQUIRED_KEYS = ("bench", "units", "how_to_regenerate", "results")
+
+
+def check_file(path: pathlib.Path) -> list:
+    errors = []
+
+    def err(msg):
+        errors.append(f"{path.name}: {msg}")
+
+    try:
+        doc = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path.name}: unreadable/unparsable: {e}"]
+
+    if not isinstance(doc, dict):
+        return [f"{path.name}: top level must be an object"]
+
+    for key in REQUIRED_KEYS:
+        if key not in doc:
+            err(f"missing required key {key!r}")
+    if errors:
+        return errors
+
+    expected_bench = path.stem.removeprefix("BENCH_")
+    if doc["bench"] != expected_bench:
+        err(f'"bench" is {doc["bench"]!r}, filename says {expected_bench!r}')
+    if doc["units"] not in KNOWN_UNITS:
+        err(f'unknown "units" {doc["units"]!r} (known: {sorted(KNOWN_UNITS)})')
+
+    results = doc["results"]
+    if not isinstance(results, list):
+        err('"results" must be a list')
+        return errors
+
+    allowed_ops = doc.get("ops")
+    if allowed_ops is not None and not isinstance(allowed_ops, list):
+        err('"ops" must be a list when present')
+        allowed_ops = None
+
+    last_ts = None
+    for i, row in enumerate(results):
+        where = f"results[{i}]"
+        if not isinstance(row, dict):
+            err(f"{where}: must be an object")
+            continue
+        op = row.get("op")
+        if not isinstance(op, str) or not op:
+            err(f"{where}: missing/empty 'op'")
+        elif allowed_ops is not None and op not in allowed_ops:
+            err(f"{where}: op {op!r} not in the file's 'ops' allowlist")
+        for key, value in row.items():
+            if isinstance(value, bool):
+                continue
+            if isinstance(value, (int, float)):
+                if not math.isfinite(value):
+                    err(f"{where}.{key}: non-finite number {value!r}")
+                elif value < 0:
+                    err(f"{where}.{key}: negative number {value!r}")
+        ts = row.get("recorded_at_unix_ms")
+        if ts is not None:
+            if not isinstance(ts, (int, float)) or ts < 0:
+                err(f"{where}.recorded_at_unix_ms: invalid {ts!r}")
+            elif last_ts is not None and ts < last_ts:
+                err(
+                    f"{where}.recorded_at_unix_ms: went backwards "
+                    f"({ts} after {last_ts})"
+                )
+            else:
+                last_ts = ts
+
+    return errors
+
+
+def main(argv):
+    if len(argv) < 2:
+        print(__doc__.strip(), file=sys.stderr)
+        return 2
+    all_errors = []
+    for arg in argv[1:]:
+        path = pathlib.Path(arg)
+        if not path.name.startswith("BENCH_") or path.suffix != ".json":
+            all_errors.append(f"{path.name}: not a BENCH_*.json file")
+            continue
+        file_errors = check_file(path)
+        all_errors.extend(file_errors)
+        status = "FAIL" if file_errors else "ok"
+        print(f"{path.name}: {status}")
+    for e in all_errors:
+        print(f"error: {e}", file=sys.stderr)
+    return 1 if all_errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
