@@ -1,0 +1,219 @@
+//! Elastic scale-out bench: what does growing a `WorkerSet` under a
+//! running `gather_async` cost, and what does the stream deliver while
+//! the set is growing?
+//!
+//! Three reported ops:
+//!
+//! * `scale_up_latency` — ms from the `scale_to` call until the running
+//!   gather yields the first completion produced by a newly added
+//!   worker (registry publish -> discovery scan -> credit priming ->
+//!   first sample), averaged over fresh sets;
+//! * `growth_throughput` — completions/s observed by the driver over a
+//!   window that spans the scale-up (the stream must not stall while
+//!   membership changes);
+//! * `steady_throughput` — the same window at fixed membership, as the
+//!   baseline the growth window is compared against.
+//!
+//! Runs on the Dummy env/policy — no AOT artifacts needed, so this
+//! bench always executes (including under `tools/ci.sh --smoke`).
+//!
+//! Run: `cargo bench --bench elastic_scale`
+//! Smoke: `cargo bench --bench elastic_scale -- --smoke`
+//! Record: `cargo bench --bench elastic_scale -- --write`
+//!         (rewrites BENCH_elastic.json at the repo root)
+
+use std::collections::HashSet;
+use std::time::Instant;
+
+use flowrl::env::{DummyEnv, Env};
+use flowrl::ops::parallel_rollouts_from;
+use flowrl::policy::DummyPolicy;
+use flowrl::rollout::{CollectMode, RolloutWorker, WorkerSet};
+
+fn worker_set(n_remote: usize) -> WorkerSet {
+    WorkerSet::new(n_remote, |_| {
+        Box::new(|| {
+            let envs: Vec<Box<dyn Env>> =
+                vec![Box::new(DummyEnv::new(4, 10))];
+            RolloutWorker::new(
+                envs,
+                Box::new(DummyPolicy::new(0.1)),
+                4,
+                CollectMode::OnPolicy,
+            )
+        })
+    })
+}
+
+struct Report {
+    scale_up_latency_ms: f64,
+    workers_before: usize,
+    workers_after: usize,
+    growth_items_per_s: f64,
+    steady_items_per_s: f64,
+    window_items: usize,
+}
+
+fn measure(smoke: bool) -> Report {
+    let reps = if smoke { 1 } else { 5 };
+    let window_items = if smoke { 64 } else { 512 };
+    let (before, after) = (2usize, 6usize);
+
+    // --- scale_up_latency: scale_to -> first completion from a new
+    // worker, fresh set per rep so discovery always starts cold.
+    let mut latency_ms = 0.0;
+    for _ in 0..reps {
+        let set = worker_set(before);
+        let mut it = parallel_rollouts_from(&set).gather_async_with_source(2);
+        for _ in 0..8 {
+            it.next().expect("warmup item");
+        }
+        let t0 = Instant::now();
+        let (added, _) = set.scale_to(after).expect("scale_to");
+        let new_ids: HashSet<u64> =
+            added.iter().map(|&i| set.remote(i).id()).collect();
+        // Bounded: a discovery regression must fail the bench with a
+        // diagnostic, not hang the smoke sweep until the CI job
+        // timeout (the smoke run has no external `timeout` wrapper).
+        let mut pulled = 0usize;
+        loop {
+            let (_b, src) = it.next().expect("stream under growth");
+            if new_ids.contains(&src.id()) {
+                break;
+            }
+            pulled += 1;
+            assert!(
+                pulled < 10_000 && t0.elapsed().as_secs() < 30,
+                "grown workers never joined the stream \
+                 ({pulled} items pulled without a new-worker completion)"
+            );
+        }
+        latency_ms += t0.elapsed().as_secs_f64() * 1e3;
+    }
+    latency_ms /= reps as f64;
+
+    // --- growth_throughput: completions/s over a window that spans the
+    // scale-up (set keeps growing while the driver pulls).
+    let growth_items_per_s = {
+        let set = worker_set(before);
+        let mut it = parallel_rollouts_from(&set).gather_async_with_source(2);
+        for _ in 0..8 {
+            it.next().expect("warmup item");
+        }
+        let t0 = Instant::now();
+        set.scale_to(after).expect("scale_to");
+        for _ in 0..window_items {
+            it.next().expect("stream under growth");
+        }
+        window_items as f64 / t0.elapsed().as_secs_f64()
+    };
+
+    // --- steady_throughput: same window, fixed membership.
+    let steady_items_per_s = {
+        let set = worker_set(before);
+        let mut it = parallel_rollouts_from(&set).gather_async_with_source(2);
+        for _ in 0..8 {
+            it.next().expect("warmup item");
+        }
+        let t0 = Instant::now();
+        for _ in 0..window_items {
+            it.next().expect("steady stream");
+        }
+        window_items as f64 / t0.elapsed().as_secs_f64()
+    };
+
+    Report {
+        scale_up_latency_ms: latency_ms,
+        workers_before: before,
+        workers_after: after,
+        growth_items_per_s,
+        steady_items_per_s,
+        window_items,
+    }
+}
+
+fn json_report(r: &Report) -> String {
+    // Mirrors the committed BENCH_elastic.json schema so `-- --write`
+    // preserves the regeneration command and acceptance targets.
+    let mut out = String::new();
+    out.push_str("{\n  \"bench\": \"elastic\",\n");
+    out.push_str("  \"units\": \"mixed\",\n");
+    out.push_str(
+        "  \"how_to_regenerate\": \"cd rust && cargo bench --bench \
+         elastic_scale -- --write\",\n",
+    );
+    out.push_str(
+        "  \"note\": \"scale_up_latency = ms from WorkerSet::scale_to \
+         until the running gather_async yields the first completion \
+         from a newly added worker (registry publish -> discovery scan \
+         -> credit priming -> first sample); growth_throughput = \
+         completions/s observed while the set grows from \
+         workers_before to workers_after; steady_throughput = the same \
+         pull window at fixed membership.  Dummy env/policy, fragment \
+         4, num_async 2.\",\n",
+    );
+    out.push_str(
+        "  \"acceptance_targets\": {\n    \"scale_up_latency\": \"< 250 \
+         ms from scale_to to first new-worker completion\",\n    \
+         \"growth_throughput\": \">= 0.8x steady_throughput (growth \
+         must not stall the stream)\"\n  },\n",
+    );
+    out.push_str(
+        "  \"ops\": [\"scale_up_latency\", \"growth_throughput\", \
+         \"steady_throughput\"],\n",
+    );
+    out.push_str("  \"results\": [\n");
+    out.push_str(&format!(
+        "    {{\"op\": \"scale_up_latency\", \"units\": \"ms_per_op\", \
+         \"ms_per_op\": {:.3}, \"workers_before\": {}, \
+         \"workers_after\": {}}},\n",
+        r.scale_up_latency_ms, r.workers_before, r.workers_after
+    ));
+    out.push_str(&format!(
+        "    {{\"op\": \"growth_throughput\", \"units\": \
+         \"items_per_s\", \"items_per_s\": {:.0}, \"window_items\": {}, \
+         \"workers_before\": {}, \"workers_after\": {}}},\n",
+        r.growth_items_per_s, r.window_items, r.workers_before,
+        r.workers_after
+    ));
+    out.push_str(&format!(
+        "    {{\"op\": \"steady_throughput\", \"units\": \
+         \"items_per_s\", \"items_per_s\": {:.0}, \"window_items\": {}, \
+         \"workers\": {}}}\n",
+        r.steady_items_per_s, r.window_items, r.workers_before
+    ));
+    out.push_str("  ]\n}\n");
+    out
+}
+
+fn main() {
+    let write = std::env::args().any(|a| a == "--write");
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let r = measure(smoke);
+    println!("# elastic_scale bench");
+    println!(
+        "scale_up_latency ({} -> {} workers): {:.2} ms",
+        r.workers_before, r.workers_after, r.scale_up_latency_ms
+    );
+    println!(
+        "growth_throughput: {:.0} items/s over {} items",
+        r.growth_items_per_s, r.window_items
+    );
+    println!(
+        "steady_throughput: {:.0} items/s over {} items",
+        r.steady_items_per_s, r.window_items
+    );
+    // Hard floor even in smoke mode: growth must have been observed at
+    // all (a gather that never discovers new shards would hang the
+    // latency loop instead — bounded by the ci.sh timeout).
+    assert!(r.scale_up_latency_ms.is_finite() && r.scale_up_latency_ms > 0.0);
+    let json = json_report(&r);
+    if write {
+        let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("../BENCH_elastic.json");
+        std::fs::write(&path, &json).expect("write BENCH_elastic.json");
+        println!("\nwrote {}", path.display());
+    } else {
+        println!("\n{json}");
+    }
+}

@@ -43,7 +43,8 @@ mod telemetry;
 pub use mailbox::{TryCastError, DEFAULT_MAILBOX_CAPACITY};
 pub use queue::{Completion, CompletionQueue};
 pub use registry::{
-    ShardRegistry, WeightCastStats, WeightCaster, DEFAULT_CAST_WATERMARK,
+    RegistryFull, ShardRegistry, WeightCastStats, WeightCaster,
+    DEFAULT_CAST_WATERMARK, DEFAULT_STALE_VERSIONS, MAX_SHARDS,
 };
 pub use telemetry::{all_actor_stats, ActorStatsSnapshot, ActorTelemetry};
 

@@ -192,6 +192,20 @@ impl<T: Send + 'static> CompletionQueue<T> {
         None
     }
 
+    /// Raise the queue bound by `extra` slots, waking producers parked
+    /// on the old bound.  Used by the elastic gathers to extend the
+    /// in-flight budget when the shard registry grows mid-stream (the
+    /// bound never shrinks — tombstoned shards simply stop refilling
+    /// their credits).  Only meaningful for [`CompletionQueue::bounded`]
+    /// queues; per-tag credits are per *tag*, not total, and are
+    /// unaffected.
+    pub fn add_capacity(&self, extra: usize) {
+        let mut st = self.inner.state.lock().unwrap();
+        st.cap += extra;
+        drop(st);
+        self.inner.not_full.notify_all();
+    }
+
     /// Close the queue: pending and future pushes return `false` so
     /// detached producers can exit when the consumer abandons the
     /// stream.

@@ -12,14 +12,33 @@
 //! from one of its replacement: stale death notices must not retire the
 //! fresh actor, and stale items must not be attributed to it.
 //!
+//! Membership is **growable and shrinkable under live traffic**:
+//!
+//! * [`ShardRegistry::grow`] appends a fresh slot (epoch 0) with an
+//!   atomic len bump, guarded so shard indices never overflow the
+//!   16-bit shard field of the `(epoch << 16) | shard` completion tag
+//!   ([`MAX_SHARDS`]).  Running gathers discover the new index through
+//!   the publish counter and prime credits for it mid-stream (async) or
+//!   admit it at the next round boundary (sync).
+//! * [`ShardRegistry::retire`] tombstones a slot: the registry drops its
+//!   handle (so the actor thread can exit once in-flight work drains),
+//!   gathers stop dispatching to the index and discard its in-flight
+//!   completions through the same epoch/mode machinery that discards a
+//!   dead incarnation's.  A later `publish` into the slot (epoch bump)
+//!   rejoins it.
+//!
 //! [`WeightCaster`] turns weight broadcasts into *versioned casts* with
 //! a drop-oldest eviction policy driven by the per-actor queue-depth
 //! telemetry: the newest parameter vector lives in one shared slot, each
 //! recipient holds at most one queued "apply latest" envelope
 //! (superseded broadcasts coalesce into it), and a recipient whose
-//! mailbox depth exceeds the watermark is never blocked on — the cast is
-//! shed and the worker catches up on the next broadcast.  The learner
-//! therefore never stalls behind an overloaded or dying rollout worker.
+//! mailbox depth exceeds the watermark — or whose applied version lags
+//! the published one by more than [`WeightCaster::stale_after`] — is
+//! never blocked on: the cast is shed and the worker catches up on the
+//! next broadcast.  The learner therefore never stalls behind an
+//! overloaded, stale, or dying rollout worker.  Lanes grow with the
+//! registry, so freshly added shards receive broadcasts without caster
+//! reconstruction.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -30,30 +49,63 @@ use super::ActorHandle;
 // ShardRegistry
 // ---------------------------------------------------------------------
 
+/// Hard bound on registry size: gather completion tags pack the shard
+/// index into 16 bits (`(epoch << 16) | shard`), so index `MAX_SHARDS`
+/// would alias epoch bits and corrupt completion attribution.
+/// [`ShardRegistry::grow`] refuses to cross it.
+pub const MAX_SHARDS: usize = 1 << 16;
+
+/// The error [`ShardRegistry::grow`] returns at the tag-space bound.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RegistryFull {
+    /// The registry's configured shard cap (<= [`MAX_SHARDS`]).
+    pub max_shards: usize,
+}
+
+impl std::fmt::Display for RegistryFull {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "shard registry is full: {} slots would overflow the 16-bit \
+             shard tag space",
+            self.max_shards
+        )
+    }
+}
+
+impl std::error::Error for RegistryFull {}
+
 struct Slot<A> {
-    handle: ActorHandle<A>,
+    /// `None` = tombstoned ([`ShardRegistry::retire`]): the registry
+    /// holds no handle, so the retired actor's thread can exit once its
+    /// remaining senders drop and its mailbox drains.
+    handle: Option<ActorHandle<A>>,
     epoch: u64,
 }
 
 struct RegistryInner<A> {
     slots: Mutex<Vec<Slot<A>>>,
-    /// Bumped on every publish — a cheap "anything changed?" gate so
-    /// gathers only rescan their dead shards when a replacement could
-    /// actually have appeared.
+    /// Bumped on every publish/grow/retire — a cheap "anything
+    /// changed?" gate so gathers only rescan membership when it could
+    /// actually have moved.
     version: AtomicU64,
+    max_shards: usize,
+    /// Lifetime membership counters (for `TrainResult` scale events).
+    grown: AtomicU64,
+    retired: AtomicU64,
 }
 
 /// A cloneable, versioned shard-index -> actor-handle table.  All clones
-/// share the same slots: a `publish` through one is visible to every
-/// holder (the running gathers) on their next `get`.
+/// share the same slots: a `publish`/`grow`/`retire` through one is
+/// visible to every holder (the running gathers) on their next `get` /
+/// membership scan.
 pub struct ShardRegistry<A: 'static> {
     inner: Arc<RegistryInner<A>>,
-    len: usize,
 }
 
 impl<A: 'static> Clone for ShardRegistry<A> {
     fn clone(&self) -> Self {
-        ShardRegistry { inner: self.inner.clone(), len: self.len }
+        ShardRegistry { inner: self.inner.clone() }
     }
 }
 
@@ -61,60 +113,125 @@ impl<A: 'static> std::fmt::Debug for ShardRegistry<A> {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "ShardRegistry(len={}, version={})",
-            self.len,
+            "ShardRegistry(len={}, live={}, version={})",
+            self.len(),
+            self.num_live(),
             self.version()
         )
     }
 }
 
 impl<A: 'static> ShardRegistry<A> {
-    /// Wrap a fixed-size set of shard actors (epoch 0 each).  The shard
-    /// *count* is immutable; the handle behind each index is not.
+    /// Wrap an initial set of shard actors (epoch 0 each).  The shard
+    /// count can later [`ShardRegistry::grow`] up to [`MAX_SHARDS`].
     pub fn new(handles: Vec<ActorHandle<A>>) -> Self {
-        let len = handles.len();
+        Self::with_max_shards(handles, MAX_SHARDS)
+    }
+
+    /// [`ShardRegistry::new`] with a lower growth cap — the guard path
+    /// is identical to the production [`MAX_SHARDS`] one, so tests can
+    /// exercise tag-space exhaustion without 65k actor threads.
+    pub fn with_max_shards(
+        handles: Vec<ActorHandle<A>>,
+        max_shards: usize,
+    ) -> Self {
+        let max_shards = max_shards.min(MAX_SHARDS);
+        assert!(
+            handles.len() <= max_shards,
+            "initial shard count {} exceeds the {max_shards}-slot cap",
+            handles.len()
+        );
         let slots = handles
             .into_iter()
-            .map(|handle| Slot { handle, epoch: 0 })
+            .map(|handle| Slot { handle: Some(handle), epoch: 0 })
             .collect();
         ShardRegistry {
             inner: Arc::new(RegistryInner {
                 slots: Mutex::new(slots),
                 version: AtomicU64::new(0),
+                max_shards,
+                grown: AtomicU64::new(0),
+                retired: AtomicU64::new(0),
             }),
-            len,
         }
     }
 
+    /// Total slot count, tombstoned slots included — the bound on shard
+    /// indices (and therefore on tag space consumed).  Monotone.
     pub fn len(&self) -> usize {
-        self.len
+        self.inner.slots.lock().unwrap().len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.len == 0
+        self.len() == 0
+    }
+
+    /// Slots currently holding an incarnation (not tombstoned).
+    pub fn num_live(&self) -> usize {
+        let slots = self.inner.slots.lock().unwrap();
+        slots.iter().filter(|s| s.handle.is_some()).count()
+    }
+
+    /// Indices of live (non-tombstoned) slots, ascending.
+    pub fn live_indices(&self) -> Vec<usize> {
+        let slots = self.inner.slots.lock().unwrap();
+        slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.handle.is_some())
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Indices of tombstoned slots, ascending (reusable by `publish`).
+    pub fn retired_indices(&self) -> Vec<usize> {
+        let slots = self.inner.slots.lock().unwrap();
+        slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.handle.is_none())
+            .map(|(i, _)| i)
+            .collect()
     }
 
     /// The current incarnation behind `idx`: (handle clone, epoch).
+    /// Panics on a tombstoned slot — callers that race membership
+    /// changes use [`ShardRegistry::get_live`].
     pub fn get(&self, idx: usize) -> (ActorHandle<A>, u64) {
-        let slots = self.inner.slots.lock().unwrap();
-        let s = &slots[idx];
-        (s.handle.clone(), s.epoch)
+        self.get_live(idx)
+            .unwrap_or_else(|| panic!("shard slot {idx} is retired"))
     }
 
-    /// The current epoch of `idx` without cloning the handle.
+    /// The current incarnation behind `idx`, or `None` if the slot is
+    /// tombstoned.
+    pub fn get_live(&self, idx: usize) -> Option<(ActorHandle<A>, u64)> {
+        let slots = self.inner.slots.lock().unwrap();
+        let s = &slots[idx];
+        s.handle.as_ref().map(|h| (h.clone(), s.epoch))
+    }
+
+    /// The current epoch of `idx` without cloning the handle (epochs
+    /// survive tombstoning; only `publish` moves them).
     pub fn epoch(&self, idx: usize) -> u64 {
         self.inner.slots.lock().unwrap()[idx].epoch
     }
 
-    /// Replace the incarnation behind `idx`, bumping its epoch and the
-    /// registry version.  Returns the new epoch.  In-flight work on the
-    /// old incarnation resolves under the old epoch and is discarded by
-    /// epoch-aware consumers.
+    /// True if `idx` is currently tombstoned ([`ShardRegistry::retire`]).
+    pub fn is_retired(&self, idx: usize) -> bool {
+        self.inner.slots.lock().unwrap()[idx].handle.is_none()
+    }
+
+    /// Replace (or revive) the incarnation behind `idx`, bumping its
+    /// epoch and the registry version.  Returns the new epoch.
+    /// In-flight work on the old incarnation resolves under the old
+    /// epoch and is discarded by epoch-aware consumers.  Publishing
+    /// into a tombstoned slot rejoins it (the scale-up slot-reuse
+    /// path).
     pub fn publish(&self, idx: usize, handle: ActorHandle<A>) -> u64 {
         let epoch = {
             let mut slots = self.inner.slots.lock().unwrap();
             let s = &mut slots[idx];
-            s.handle = handle;
+            s.handle = Some(handle);
             s.epoch += 1;
             s.epoch
         };
@@ -122,25 +239,80 @@ impl<A: 'static> ShardRegistry<A> {
         epoch
     }
 
+    /// Append a fresh slot (epoch 0) for `handle`, returning its shard
+    /// index — the atomic len bump + epoch-0 publish behind
+    /// `WorkerSet::add_worker`.  Fails with [`RegistryFull`] instead of
+    /// handing out an index that would overflow the 16-bit shard field
+    /// of gather completion tags.
+    pub fn grow(
+        &self,
+        handle: ActorHandle<A>,
+    ) -> Result<usize, RegistryFull> {
+        let idx = {
+            let mut slots = self.inner.slots.lock().unwrap();
+            if slots.len() >= self.inner.max_shards {
+                return Err(RegistryFull {
+                    max_shards: self.inner.max_shards,
+                });
+            }
+            slots.push(Slot { handle: Some(handle), epoch: 0 });
+            slots.len() - 1
+        };
+        self.inner.grown.fetch_add(1, Ordering::Relaxed);
+        self.inner.version.fetch_add(1, Ordering::Release);
+        Ok(idx)
+    }
+
+    /// Tombstone slot `idx`, returning the handle it held (`None` if it
+    /// was already tombstoned).  The epoch is untouched: in-flight
+    /// submissions to the retired incarnation stay attributable and are
+    /// drained/discarded by the gathers' existing epoch machinery.  The
+    /// returned handle is the registry's only reference — once the
+    /// caller drops it (and any in-flight messages execute) the actor
+    /// thread exits.
+    pub fn retire(&self, idx: usize) -> Option<ActorHandle<A>> {
+        let handle = {
+            let mut slots = self.inner.slots.lock().unwrap();
+            slots[idx].handle.take()
+        };
+        if handle.is_some() {
+            self.inner.retired.fetch_add(1, Ordering::Relaxed);
+            self.inner.version.fetch_add(1, Ordering::Release);
+        }
+        handle
+    }
+
+    /// Lifetime membership counters: slots grown and incarnations
+    /// retired (tombstoned) since construction.
+    pub fn membership_counters(&self) -> (u64, u64) {
+        (
+            self.inner.grown.load(Ordering::Relaxed),
+            self.inner.retired.load(Ordering::Relaxed),
+        )
+    }
+
     /// Publish counter (any index).  Consumers cache the last value they
-    /// acted on and rescan only when it moves.
+    /// acted on and rescan membership only when it moves.
     pub fn version(&self) -> u64 {
         self.inner.version.load(Ordering::Acquire)
     }
 
-    /// Snapshot of the current handle behind every index.
+    /// Snapshot of the current handle behind every **live** index.
     pub fn handles(&self) -> Vec<ActorHandle<A>> {
         let slots = self.inner.slots.lock().unwrap();
-        slots.iter().map(|s| s.handle.clone()).collect()
+        slots.iter().filter_map(|s| s.handle.clone()).collect()
     }
 
-    /// Indices whose *current* incarnation is poisoned.
+    /// Indices whose *current* incarnation is poisoned (tombstoned
+    /// slots excluded — a removed worker is not restartable).
     pub fn poisoned_indices(&self) -> Vec<usize> {
         let slots = self.inner.slots.lock().unwrap();
         slots
             .iter()
             .enumerate()
-            .filter(|(_, s)| s.handle.is_poisoned())
+            .filter(|(_, s)| {
+                s.handle.as_ref().is_some_and(|h| h.is_poisoned())
+            })
             .map(|(i, _)| i)
             .collect()
     }
@@ -156,6 +328,12 @@ impl<A: 'static> ShardRegistry<A> {
 /// the shared slot whenever its queued apply — or the next broadcast —
 /// runs).
 pub const DEFAULT_CAST_WATERMARK: usize = 8;
+
+/// Default staleness bound: a recipient whose applied weight version
+/// lags the published one by more than this many versions is treated
+/// like an overloaded one — casts to it never block the learner and
+/// shed on `Full` (counted separately as `shed_stale`).
+pub const DEFAULT_STALE_VERSIONS: u64 = 8;
 
 /// The per-incarnation cells an apply closure captures.  A republished
 /// slot gets **fresh** cells (not a reset): envelopes still queued on
@@ -188,6 +366,15 @@ struct Lane {
     epoch: AtomicU64,
 }
 
+impl Lane {
+    fn fresh() -> Self {
+        Lane {
+            cells: Mutex::new(LaneCells::fresh()),
+            epoch: AtomicU64::new(0),
+        }
+    }
+}
+
 /// Point-in-time counters for one caster (attached to `TrainResult` by
 /// the metrics operators).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -200,12 +387,20 @@ pub struct WeightCastStats {
     /// the queued apply delivers the newer version instead).
     pub coalesced: u64,
     /// Broadcasts dropped entirely because the recipient was over the
-    /// watermark *and* its mailbox was full (load shedding).
+    /// watermark (or too stale) *and* its mailbox was full (load
+    /// shedding).
     pub shed: u64,
+    /// The subset of `shed` that hit a recipient already lagging the
+    /// published version by more than `stale_after` — the "this worker
+    /// is falling behind, not just momentarily busy" alarm.
+    pub shed_stale: u64,
+    /// The caster's configured staleness bound (versions of lag beyond
+    /// which casts never block).
+    pub stale_after: u64,
 }
 
 /// Versioned weight broadcasts over a [`ShardRegistry`], with
-/// drop-oldest coalescing and watermark-gated load shedding.
+/// drop-oldest coalescing and watermark/staleness-gated load shedding.
 ///
 /// Invariants:
 /// * at most **one** apply envelope is queued per recipient at a time —
@@ -214,45 +409,67 @@ pub struct WeightCastStats {
 ///   execution time, and skips entirely if the recipient has already
 ///   applied that version (monotonic, idempotent);
 /// * `broadcast` never blocks on a recipient whose queue depth exceeds
-///   the watermark — overloaded workers shed superseded versions
-///   instead of backpressuring the learner.
+///   the watermark **or** whose applied version lags the published one
+///   by more than `stale_after` — overloaded/lagging workers shed
+///   superseded versions instead of backpressuring the learner;
+/// * lanes grow lazily with the registry, so shards added by
+///   `ShardRegistry::grow` receive broadcasts without caster rebuild,
+///   and tombstoned slots are skipped.
 pub struct WeightCaster<A: 'static> {
     registry: ShardRegistry<A>,
     /// (version, weights) — the newest published parameters.
     slot: Arc<Mutex<(u64, Arc<[f32]>)>>,
     version: AtomicU64,
-    lanes: Vec<Lane>,
+    /// Grow-only; index-aligned with the registry's slots.
+    lanes: Mutex<Vec<Arc<Lane>>>,
     watermark: usize,
+    stale_after: u64,
     apply: Arc<dyn Fn(&mut A, &[f32]) + Send + Sync>,
     enqueued: AtomicU64,
     coalesced: AtomicU64,
     shed: AtomicU64,
+    shed_stale: AtomicU64,
 }
 
 impl<A: 'static> WeightCaster<A> {
     /// `apply` installs a parameter vector into a recipient's state
     /// (e.g. `|w, p| w.set_weights(p)`); it runs on the actor thread.
+    /// Staleness shedding defaults to [`DEFAULT_STALE_VERSIONS`].
     pub fn new(
         registry: ShardRegistry<A>,
         watermark: usize,
         apply: impl Fn(&mut A, &[f32]) + Send + Sync + 'static,
     ) -> Self {
-        let lanes = (0..registry.len())
-            .map(|_| Lane {
-                cells: Mutex::new(LaneCells::fresh()),
-                epoch: AtomicU64::new(0),
-            })
-            .collect();
+        Self::with_staleness(
+            registry,
+            watermark,
+            DEFAULT_STALE_VERSIONS,
+            apply,
+        )
+    }
+
+    /// [`WeightCaster::new`] with an explicit staleness bound: casts to
+    /// a recipient lagging more than `stale_after` versions never block
+    /// the broadcaster (and shed on `Full`).
+    pub fn with_staleness(
+        registry: ShardRegistry<A>,
+        watermark: usize,
+        stale_after: u64,
+        apply: impl Fn(&mut A, &[f32]) + Send + Sync + 'static,
+    ) -> Self {
+        let lanes = (0..registry.len()).map(|_| Arc::new(Lane::fresh()));
         WeightCaster {
+            lanes: Mutex::new(lanes.collect()),
             registry,
             slot: Arc::new(Mutex::new((0, Arc::from(Vec::<f32>::new())))),
             version: AtomicU64::new(0),
-            lanes,
             watermark,
+            stale_after,
             apply: Arc::new(apply),
             enqueued: AtomicU64::new(0),
             coalesced: AtomicU64::new(0),
             shed: AtomicU64::new(0),
+            shed_stale: AtomicU64::new(0),
         }
     }
 
@@ -264,13 +481,64 @@ impl<A: 'static> WeightCaster<A> {
         self.watermark
     }
 
+    /// The configured staleness bound (versions of lag beyond which
+    /// casts to a recipient never block).
+    pub fn stale_after(&self) -> u64 {
+        self.stale_after
+    }
+
     pub fn stats(&self) -> WeightCastStats {
         WeightCastStats {
             version: self.version.load(Ordering::Relaxed),
             enqueued: self.enqueued.load(Ordering::Relaxed),
             coalesced: self.coalesced.load(Ordering::Relaxed),
             shed: self.shed.load(Ordering::Relaxed),
+            shed_stale: self.shed_stale.load(Ordering::Relaxed),
+            stale_after: self.stale_after,
         }
+    }
+
+    /// The lane behind `idx`, growing the lane table to the registry's
+    /// current width on demand (shards added by `grow` get lanes the
+    /// first time anyone addresses them).
+    fn lane(&self, idx: usize) -> Arc<Lane> {
+        let mut lanes = self.lanes.lock().unwrap();
+        while lanes.len() <= idx {
+            lanes.push(Arc::new(Lane::fresh()));
+        }
+        lanes[idx].clone()
+    }
+
+    /// Register incarnation `epoch` of shard `idx` as already carrying
+    /// the weights of version `up_to` (the owner synced it out-of-band,
+    /// e.g. `WorkerSet::add_worker` pushing the learner's parameters
+    /// before the first dispatch): ensures the lane exists, refreshes
+    /// it to `epoch`, and marks `up_to` applied so the next broadcast
+    /// of that version does not redundantly re-deliver.
+    ///
+    /// `up_to` must be a version the caller read **before** fetching
+    /// the weights it pushed — marking the *current* version here would
+    /// race a broadcast published between the fetch and this call and
+    /// leave the recipient silently one version stale.  Conservative
+    /// (older) values only cost one redundant redelivery.
+    pub fn attach(&self, idx: usize, epoch: u64, up_to: u64) {
+        let lane = self.lane(idx);
+        let mut cells = lane.cells.lock().unwrap();
+        self.refresh_cells(&mut cells, &lane, epoch);
+        cells.applied.fetch_max(up_to, Ordering::SeqCst);
+    }
+
+    /// The applied weight version of every lane, index-aligned with the
+    /// registry (the scale-out soak asserts convergence through this).
+    pub fn applied_versions(&self) -> Vec<u64> {
+        let width = self.registry.len();
+        (0..width)
+            .map(|idx| {
+                let lane = self.lane(idx);
+                let cells = lane.cells.lock().unwrap();
+                cells.applied.load(Ordering::SeqCst)
+            })
+            .collect()
     }
 
     /// Publish `weights` as the newest version.  The slot write happens
@@ -319,21 +587,16 @@ impl<A: 'static> WeightCaster<A> {
     /// the registry just before a publish can never regress the lane
     /// and wipe a newer incarnation's cells.  Callers that must keep
     /// the cells stable across their enqueue decision hold `guard`.
-    fn refresh_cells(
-        &self,
-        guard: &mut LaneCells,
-        lane: &Lane,
-        epoch: u64,
-    ) {
+    fn refresh_cells(&self, guard: &mut LaneCells, lane: &Lane, epoch: u64) {
         if lane.epoch.fetch_max(epoch, Ordering::SeqCst) < epoch {
             *guard = LaneCells::fresh();
         }
     }
 
     fn lane_cells(&self, idx: usize, epoch: u64) -> LaneCells {
-        let lane = &self.lanes[idx];
+        let lane = self.lane(idx);
         let mut cells = lane.cells.lock().unwrap();
-        self.refresh_cells(&mut cells, lane, epoch);
+        self.refresh_cells(&mut cells, &lane, epoch);
         cells.clone()
     }
 
@@ -347,7 +610,9 @@ impl<A: 'static> WeightCaster<A> {
     }
 
     /// Fire-and-forget broadcast of a new weight version to every
-    /// current incarnation.  Returns the published version.
+    /// current live incarnation (tombstoned slots are skipped; shards
+    /// grown since the last broadcast get lanes on the fly).  Returns
+    /// the published version.
     ///
     /// Per-lane delivery runs under that lane's lock, serializing
     /// concurrent broadcasters: a broadcast that coalesces on an
@@ -357,11 +622,15 @@ impl<A: 'static> WeightCaster<A> {
     /// The apply envelopes themselves never take the lane lock.
     pub fn broadcast(&self, weights: Arc<[f32]>) -> u64 {
         let v = self.publish_version(weights);
-        for idx in 0..self.lanes.len() {
-            let (handle, epoch) = self.registry.get(idx);
-            let lane = &self.lanes[idx];
+        for idx in 0..self.registry.len() {
+            let Some((handle, epoch)) = self.registry.get_live(idx) else {
+                // Tombstoned slot: the worker was removed; nothing to
+                // deliver and nothing to count.
+                continue;
+            };
+            let lane = self.lane(idx);
             let mut cells = lane.cells.lock().unwrap();
-            self.refresh_cells(&mut cells, lane, epoch);
+            self.refresh_cells(&mut cells, &lane, epoch);
             if handle.is_poisoned() {
                 // Dead recipient: nothing to deliver to, and not an
                 // overload signal — `shed` stays untouched (deaths are
@@ -369,6 +638,11 @@ impl<A: 'static> WeightCaster<A> {
                 // resyncs via the lane's fresh cells.
                 continue;
             }
+            // Staleness gate: a recipient already lagging more than
+            // `stale_after` versions is falling behind — treat it like
+            // an overloaded one and never block the learner on it.
+            let lag = v.saturating_sub(cells.applied.load(Ordering::SeqCst));
+            let stale = lag > self.stale_after;
             if cells.pending.swap(true, Ordering::SeqCst) {
                 // An apply is already queued; it reads the slot (>= v)
                 // when it runs.  The superseded broadcast is dropped —
@@ -379,8 +653,8 @@ impl<A: 'static> WeightCaster<A> {
             let body = self.apply_closure(&cells);
             let threshold =
                 self.effective_watermark(handle.mailbox_capacity());
-            if handle.queue_len() > threshold {
-                // Overloaded (or full) mailbox: never block the
+            if stale || handle.queue_len() > threshold {
+                // Overloaded, stale, or full mailbox: never block the
                 // learner on it.
                 match handle.try_cast(body) {
                     Ok(()) => {
@@ -389,6 +663,9 @@ impl<A: 'static> WeightCaster<A> {
                     Err(_) => {
                         cells.pending.store(false, Ordering::SeqCst);
                         self.shed.fetch_add(1, Ordering::Relaxed);
+                        if stale {
+                            self.shed_stale.fetch_add(1, Ordering::Relaxed);
+                        }
                     }
                 }
             } else {
@@ -404,20 +681,20 @@ impl<A: 'static> WeightCaster<A> {
     }
 
     /// Broadcast and **block until every live recipient has applied**
-    /// the published version (the `sync_weights` barrier).  Dead
-    /// recipients are skipped; shedding does not apply — this path is
-    /// the explicit synchronization point, so it queues a dedicated
-    /// apply per recipient and waits on the replies.
+    /// the published version (the `sync_weights` barrier).  Dead and
+    /// tombstoned recipients are skipped; shedding does not apply —
+    /// this path is the explicit synchronization point, so it queues a
+    /// dedicated apply per recipient and waits on the replies.
     pub fn broadcast_sync(&self, weights: Arc<[f32]>) -> u64 {
         let v = self.publish_version(weights);
-        let replies: Vec<_> = (0..self.lanes.len())
-            .map(|idx| {
-                let (handle, epoch) = self.registry.get(idx);
+        let replies: Vec<_> = (0..self.registry.len())
+            .filter_map(|idx| {
+                let (handle, epoch) = self.registry.get_live(idx)?;
                 let cells = self.lane_cells(idx, epoch);
                 let applied = cells.applied.clone();
                 let slot = self.slot.clone();
                 let apply = self.apply.clone();
-                handle.call_deferred(move |state: &mut A| {
+                Some(handle.call_deferred(move |state: &mut A| {
                     let (sv, w) = {
                         let s = slot.lock().unwrap();
                         (s.0, s.1.clone())
@@ -425,7 +702,7 @@ impl<A: 'static> WeightCaster<A> {
                     if applied.fetch_max(sv, Ordering::SeqCst) < sv {
                         apply(state, &w);
                     }
-                })
+                }))
             })
             .collect();
         for r in replies {
@@ -487,6 +764,66 @@ mod tests {
     }
 
     #[test]
+    fn grow_appends_epoch_zero_slots() {
+        let reg = ShardRegistry::new(group(2));
+        let view = reg.clone();
+        let fresh = group(1).remove(0);
+        let id = fresh.id();
+        let idx = reg.grow(fresh).unwrap();
+        assert_eq!(idx, 2);
+        assert_eq!(reg.len(), 3);
+        assert_eq!(reg.num_live(), 3);
+        assert_eq!(reg.epoch(2), 0);
+        assert_eq!(reg.version(), 1, "grow must move the publish counter");
+        // Clones share growth (that is how running gathers discover it).
+        assert_eq!(view.len(), 3);
+        assert_eq!(view.get(2).0.id(), id);
+        assert_eq!(reg.membership_counters(), (1, 0));
+    }
+
+    #[test]
+    fn grow_refuses_beyond_tag_space() {
+        let reg = ShardRegistry::with_max_shards(group(2), 3);
+        assert_eq!(reg.grow(group(1).remove(0)).unwrap(), 2);
+        // A 4th slot would exceed the cap: error out, nothing corrupted.
+        let err = reg.grow(group(1).remove(0)).unwrap_err();
+        assert_eq!(err, RegistryFull { max_shards: 3 });
+        assert_eq!(reg.len(), 3);
+        assert_eq!(reg.num_live(), 3);
+        assert!(err.to_string().contains("16-bit"));
+        // Existing slots unharmed.
+        assert_eq!(reg.epoch(2), 0);
+        assert!(reg.get_live(2).is_some());
+    }
+
+    #[test]
+    fn retire_tombstones_and_publish_revives() {
+        let reg = ShardRegistry::new(group(3));
+        let (h1, _) = reg.get(1);
+        let taken = reg.retire(1).expect("slot 1 was live");
+        assert_eq!(taken.id(), h1.id());
+        assert_eq!(reg.version(), 1);
+        assert!(reg.is_retired(1));
+        assert_eq!(reg.num_live(), 2);
+        assert_eq!(reg.len(), 3, "tombstones keep their index");
+        assert_eq!(reg.live_indices(), vec![0, 2]);
+        assert_eq!(reg.retired_indices(), vec![1]);
+        assert!(reg.get_live(1).is_none());
+        assert_eq!(reg.handles().len(), 2);
+        // Double-retire is a no-op.
+        assert!(reg.retire(1).is_none());
+        assert_eq!(reg.version(), 1);
+        assert_eq!(reg.membership_counters(), (0, 1));
+        // Epoch survives the tombstone; publish into the slot revives
+        // it with a bumped epoch (the rejoin signal gathers watch).
+        assert_eq!(reg.epoch(1), 0);
+        let ep = reg.publish(1, group(1).remove(0));
+        assert_eq!(ep, 1);
+        assert!(!reg.is_retired(1));
+        assert_eq!(reg.num_live(), 3);
+    }
+
+    #[test]
     fn poisoned_indices_track_current_incarnation() {
         let reg = ShardRegistry::new(group(2));
         let (h1, _) = reg.get(1);
@@ -494,6 +831,17 @@ mod tests {
         assert!(h1.await_poisoned(std::time::Duration::from_secs(2)));
         assert_eq!(reg.poisoned_indices(), vec![1]);
         reg.publish(1, group(1).remove(0));
+        assert!(reg.poisoned_indices().is_empty());
+    }
+
+    #[test]
+    fn retired_slot_is_not_poisoned() {
+        let reg = ShardRegistry::new(group(2));
+        let (h0, _) = reg.get(0);
+        let _ = h0.call(|_| -> () { panic!("die") });
+        assert!(h0.await_poisoned(std::time::Duration::from_secs(2)));
+        // Removing the dead worker clears it from the restartable set.
+        reg.retire(0);
         assert!(reg.poisoned_indices().is_empty());
     }
 
@@ -523,6 +871,70 @@ mod tests {
         assert_eq!(s.version, 2);
         assert!(s.enqueued >= 3, "{s:?}");
         assert_eq!(s.enqueued + s.coalesced + s.shed, 6, "{s:?}");
+    }
+
+    #[test]
+    fn broadcast_reaches_grown_shards_without_rebuild() {
+        let reg = ShardRegistry::new(group(1));
+        let caster = WeightCaster::new(
+            reg.clone(),
+            DEFAULT_CAST_WATERMARK,
+            |w: &mut W, p| {
+                w.weights.clear();
+                w.weights.extend_from_slice(p);
+            },
+        );
+        caster.broadcast(vec![1.0].into());
+        let idx = reg.grow(group(1).remove(0)).unwrap();
+        // The next broadcast must cover the new lane.
+        caster.broadcast(vec![2.0].into());
+        let (h, _) = reg.get(idx);
+        assert_eq!(h.call(|w| w.weights.clone()).unwrap(), vec![2.0]);
+        assert_eq!(caster.applied_versions().len(), 2);
+    }
+
+    #[test]
+    fn broadcast_skips_tombstoned_slots() {
+        let reg = ShardRegistry::new(group(2));
+        let caster = WeightCaster::new(
+            reg.clone(),
+            DEFAULT_CAST_WATERMARK,
+            |w: &mut W, p| {
+                w.weights.clear();
+                w.weights.extend_from_slice(p);
+            },
+        );
+        reg.retire(0);
+        caster.broadcast_sync(vec![3.0].into());
+        let (h, _) = reg.get(1);
+        assert_eq!(h.call(|w| w.weights.clone()).unwrap(), vec![3.0]);
+        let s = caster.stats();
+        // The tombstoned slot neither received nor counted as shed.
+        assert_eq!(s.shed, 0);
+    }
+
+    #[test]
+    fn attach_marks_synced_version_applied() {
+        let reg = ShardRegistry::new(group(1));
+        let caster = WeightCaster::new(
+            reg.clone(),
+            DEFAULT_CAST_WATERMARK,
+            |w: &mut W, p| {
+                w.weights.clear();
+                w.weights.extend_from_slice(p);
+                w.applies += 1;
+            },
+        );
+        caster.broadcast_sync(vec![1.0].into());
+        // A replacement synced out-of-band registers as carrying v1...
+        let v = caster.stats().version;
+        let ep = reg.publish(0, group(1).remove(0));
+        caster.attach(0, ep, v);
+        assert_eq!(caster.applied_versions(), vec![1]);
+        // ...and a same-version broadcast does not re-apply on it.
+        caster.broadcast_sync(vec![2.0].into());
+        let (h, _) = reg.get(0);
+        assert_eq!(h.call(|w| w.applies).unwrap(), 1, "v2 applies once");
     }
 
     #[test]
@@ -581,6 +993,62 @@ mod tests {
         );
         assert!(caster.stats().shed + caster.stats().coalesced >= 19);
         gate.recv().unwrap();
+    }
+
+    #[test]
+    fn sheds_count_staleness_once_lag_exceeds_bound() {
+        // A parked recipient with a full tiny mailbox: every broadcast
+        // beyond the first sheds.  With stale_after = 3, sheds that
+        // land while the recipient lags > 3 versions count as
+        // shed_stale — the "worker is falling behind" alarm.
+        let slow = ActorHandle::spawn_with_capacity("reg-stale", 2, || W {
+            weights: vec![],
+            applies: 0,
+        });
+        let reg = ShardRegistry::new(vec![slow.clone()]);
+        let caster =
+            WeightCaster::with_staleness(reg, 1, 3, |w: &mut W, p| {
+                w.weights.clear();
+                w.weights.extend_from_slice(p);
+            });
+        let gate = slow.call_deferred(|_| {
+            std::thread::sleep(std::time::Duration::from_millis(200));
+        });
+        // Wait until the actor has dequeued the gate (it is now parked
+        // inside it), so the fill below reaches a *full* mailbox and
+        // every broadcast deterministically sheds.
+        while slow.queue_len() > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        while slow.try_cast(|_| {}).is_ok() {}
+        for k in 1..=20 {
+            caster.broadcast(vec![k as f32].into());
+        }
+        let s = caster.stats();
+        assert_eq!(s.stale_after, 3);
+        assert!(s.shed >= 10, "{s:?}");
+        // Sheds at versions 1..=4 had lag <= stale_after (applied = 0);
+        // later ones are stale.  Coalesced broadcasts never reach the
+        // stale accounting, so bound loosely from below.
+        assert!(s.shed_stale >= s.shed.saturating_sub(4), "{s:?}");
+        assert!(s.shed_stale <= s.shed, "{s:?}");
+        gate.recv().unwrap();
+    }
+
+    #[test]
+    fn fresh_recipients_do_not_count_as_stale() {
+        // Recipients that apply promptly keep lag <= 1: shed_stale must
+        // stay zero no matter how many versions are broadcast.
+        let reg = ShardRegistry::new(group(2));
+        let caster =
+            WeightCaster::with_staleness(reg.clone(), 8, 3, |w: &mut W, p| {
+                w.weights.clear();
+                w.weights.extend_from_slice(p);
+            });
+        for k in 1..=10 {
+            caster.broadcast_sync(vec![k as f32].into());
+        }
+        assert_eq!(caster.stats().shed_stale, 0);
     }
 
     #[test]

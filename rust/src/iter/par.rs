@@ -23,11 +23,24 @@
 //! Completion tags encode `(shard, epoch)` so late completions of a
 //! dead incarnation — above all its death notices — are discarded
 //! instead of being attributed to (and retiring) the replacement.
+//!
+//! **Scale-out.** Membership itself is dynamic: gathers rescan the
+//! registry whenever its publish counter moves, so shards appended by
+//! `ShardRegistry::grow` (-> `WorkerSet::scale_to`/`add_worker`) join a
+//! *running* stream — `gather_async` primes a fresh `num_async` credit
+//! pipeline for each new index mid-stream (growing the shared
+//! completion queue's bound to match), while `gather_sync` admits new
+//! shards only at round boundaries (a barrier round's membership is
+//! frozen at dispatch).  Shards tombstoned by `ShardRegistry::retire`
+//! (-> `WorkerSet::remove_worker`) stop being dispatched to and their
+//! in-flight completions drain through the same epoch/mode discard
+//! machinery that handles a dead incarnation's; a later publish into
+//! the slot rejoins it.
 
 use std::sync::Arc;
 
 use crate::actor::{
-    ActorHandle, Completion, CompletionQueue, ShardRegistry,
+    ActorHandle, Completion, CompletionQueue, ShardRegistry, MAX_SHARDS,
 };
 
 use super::LocalIter;
@@ -37,9 +50,12 @@ type PlanFn<W, T> = Arc<dyn Fn(&mut W) -> Option<T> + Send + Sync>;
 /// Completion tags pack `(epoch << EPOCH_SHIFT) | shard_idx` so a death
 /// notice (which carries only the tag) still identifies the incarnation
 /// it belongs to.  16 bits of shard index bounds a registry at 65536
-/// shards; the remaining bits hold ~2^47 incarnations per shard.
+/// shards (`actor::MAX_SHARDS` — `ShardRegistry::grow` enforces it);
+/// the remaining bits hold ~2^47 incarnations per shard.
 const EPOCH_SHIFT: u32 = 16;
 const SHARD_MASK: usize = (1 << EPOCH_SHIFT) - 1;
+// The registry's growth guard and the tag encoding must agree.
+const _: () = assert!(SHARD_MASK + 1 == MAX_SHARDS);
 
 fn encode_tag(idx: usize, epoch: u64) -> usize {
     debug_assert!(idx <= SHARD_MASK);
@@ -50,8 +66,9 @@ fn decode_tag(tag: usize) -> (usize, u64) {
     (tag & SHARD_MASK, (tag >> EPOCH_SHIFT) as u64)
 }
 
-/// Per-shard gather state: streaming, cleanly finished, or dead and
-/// waiting for the registry to publish a replacement.
+/// Per-shard gather state: streaming, cleanly finished, dead, or
+/// tombstoned — the latter two rejoin when the registry publishes a
+/// newer epoch into the slot.
 #[derive(Clone, Copy, PartialEq, Eq)]
 enum ShardMode {
     Active,
@@ -61,6 +78,10 @@ enum ShardMode {
     /// The current incarnation died; the shard rejoins if a newer epoch
     /// is published.
     Dead,
+    /// The slot was tombstoned (`ShardRegistry::retire`): no further
+    /// dispatches, in-flight completions are drained and discarded by
+    /// epoch/mode, and a later publish (epoch bump) rejoins the shard.
+    Retired,
 }
 
 pub struct ParIter<W: 'static, T> {
@@ -180,9 +201,19 @@ impl<W: 'static, T: Send + 'static> ParIter<W, T> {
             }
 
             /// [`Self::submit_to`] the registry's current incarnation.
-            fn submit(&mut self, idx: usize) {
-                let (handle, ep) = self.registry.get(idx);
-                self.submit_to(idx, &handle, ep);
+            /// `false` (nothing submitted, shard parked as retired) if
+            /// the slot was tombstoned since the caller looked.
+            fn submit(&mut self, idx: usize) -> bool {
+                match self.registry.get_live(idx) {
+                    Some((handle, ep)) => {
+                        self.submit_to(idx, &handle, ep);
+                        true
+                    }
+                    None => {
+                        self.mode[idx] = ShardMode::Retired;
+                        false
+                    }
+                }
             }
 
             /// Start (or restart) streaming shard `idx`: mark it active
@@ -190,32 +221,59 @@ impl<W: 'static, T: Send + 'static> ParIter<W, T> {
             fn prime(&mut self, idx: usize, num_async: usize) {
                 self.mode[idx] = ShardMode::Active;
                 for _ in 0..num_async {
-                    self.submit(idx);
+                    if !self.submit(idx) {
+                        break;
+                    }
                 }
             }
 
-            /// Rejoin any dead shard whose registry slot was
-            /// republished since we last looked (cheap: gated on the
-            /// registry's publish counter).
-            fn adopt_replacements(&mut self, num_async: usize) {
+            /// Reconcile with the registry when its publish counter
+            /// moved (cheap: one atomic load per pass otherwise):
+            /// tombstoned slots stop streaming, dead/retired slots with
+            /// a newer published epoch rejoin, and indices appended by
+            /// `grow` are admitted mid-stream with a full credit
+            /// pipeline (the queue bound grows to match).
+            fn sync_membership(&mut self, num_async: usize) {
                 let v = self.registry.version();
                 if v == self.reg_version {
                     return;
                 }
                 self.reg_version = v;
                 for idx in 0..self.mode.len() {
-                    if self.mode[idx] == ShardMode::Dead
-                        && self.registry.epoch(idx) > self.epoch[idx]
-                    {
-                        self.prime(idx, num_async);
+                    match self.mode[idx] {
+                        ShardMode::Active => {
+                            if self.registry.is_retired(idx) {
+                                self.mode[idx] = ShardMode::Retired;
+                            }
+                        }
+                        ShardMode::Dead | ShardMode::Retired => {
+                            if self.registry.epoch(idx) > self.epoch[idx] {
+                                self.prime(idx, num_async);
+                            }
+                        }
+                        ShardMode::Exhausted => {}
                     }
+                }
+                let reg_len = self.registry.len();
+                while self.mode.len() < reg_len {
+                    let idx = self.mode.len();
+                    self.mode.push(ShardMode::Dead); // prime() activates
+                    self.epoch.push(0);
+                    self.queue.add_capacity(num_async);
+                    self.prime(idx, num_async);
                 }
             }
         }
+        // Version BEFORE len: a grow landing between the two reads is
+        // then either covered by `mode` (len already included it) or by
+        // the first `sync_membership` rescan (version read is older
+        // than the grow's bump).  The reverse order could cache a
+        // version that already covers a shard `mode` missed.
+        let reg_version = self.registry.version();
         let n = self.registry.len();
         let mut st = State {
             queue: CompletionQueue::bounded((n * num_async).max(1)),
-            reg_version: self.registry.version(),
+            reg_version,
             registry: self.registry,
             plan: self.plan,
             outstanding: 0,
@@ -236,7 +294,7 @@ impl<W: 'static, T: Send + 'static> ParIter<W, T> {
                 }
             }
             loop {
-                st.adopt_replacements(num_async);
+                st.sync_membership(num_async);
                 if st.outstanding == 0 {
                     // Every submission resolved and no shard is active:
                     // the stream ends (dead shards with no published
@@ -254,26 +312,36 @@ impl<W: 'static, T: Send + 'static> ParIter<W, T> {
                     Completion::Item { value: Some(t), .. } if current => {
                         // One registry resolution serves the staleness
                         // check, the refill, and the paired handle.
-                        let (handle, ep_now) = st.registry.get(idx);
-                        if ep_now > st.epoch[idx] {
-                            // The producer was replaced while this item
-                            // sat in the queue (publish raced ahead of
-                            // the death notices): discard the corpse's
-                            // item and adopt the replacement at full
-                            // pipeline depth — the pending stale
-                            // notices re-prime nothing.
-                            st.prime(idx, num_async);
-                        } else {
-                            // Refill the shard's pipeline slot and pair
-                            // the item with its (live) producer.
-                            st.submit_to(idx, &handle, ep_now);
-                            return Some((t, handle));
+                        match st.registry.get_live(idx) {
+                            None => {
+                                // The slot was tombstoned while this
+                                // item sat in the queue: drain-discard
+                                // (no refill, nothing to pair with).
+                                st.mode[idx] = ShardMode::Retired;
+                            }
+                            Some((_, ep_now)) if ep_now > st.epoch[idx] => {
+                                // The producer was replaced while this
+                                // item sat in the queue (publish raced
+                                // ahead of the death notices): discard
+                                // the corpse's item and adopt the
+                                // replacement at full pipeline depth —
+                                // the pending stale notices re-prime
+                                // nothing.
+                                st.prime(idx, num_async);
+                            }
+                            Some((handle, ep_now)) => {
+                                // Refill the shard's pipeline slot and
+                                // pair the item with its (live)
+                                // producer.
+                                st.submit_to(idx, &handle, ep_now);
+                                return Some((t, handle));
+                            }
                         }
                     }
                     Completion::Item { value: Some(_), .. } => {
                         // Late result from a pipelined call issued
-                        // before the shard exhausted, died, or was
-                        // replaced: drop it.
+                        // before the shard exhausted, died, was
+                        // replaced, or was tombstoned: drop it.
                     }
                     Completion::Item { value: None, .. } => {
                         if current {
@@ -285,7 +353,7 @@ impl<W: 'static, T: Send + 'static> ParIter<W, T> {
                             // The incarnation we were streaming died.
                             // If a replacement is already published,
                             // adopt it now; otherwise park the shard —
-                            // `adopt_replacements` rejoins it when the
+                            // `sync_membership` rejoins it when the
                             // owner publishes.  A stale notice (ep <
                             // epoch, e.g. the 2nd..num_async-th notice
                             // of an incarnation we already replaced)
@@ -293,6 +361,8 @@ impl<W: 'static, T: Send + 'static> ParIter<W, T> {
                             // fresh incarnation.
                             if st.registry.epoch(idx) > st.epoch[idx] {
                                 st.prime(idx, num_async);
+                            } else if st.registry.is_retired(idx) {
+                                st.mode[idx] = ShardMode::Retired;
                             } else {
                                 st.mode[idx] = ShardMode::Dead;
                             }
@@ -314,40 +384,69 @@ impl<W: 'static, T: Send + 'static> ParIter<W, T> {
     /// subsequent rounds — and rejoins at the next round boundary once
     /// a replacement is published (mid-round, if the death notice
     /// arrives while the barrier is still collecting).
+    ///
+    /// Membership changes are admitted **only at round boundaries**:
+    /// shards appended by `grow` mid-round join the *next* round (a
+    /// barrier round's membership is frozen at dispatch, so round
+    /// vectors stay coherent), and tombstoned shards stop being
+    /// dispatched from the next boundary on.
     pub fn gather_sync(self) -> LocalIter<Vec<T>> {
-        let n = self.registry.len();
         let registry = self.registry;
         let plan = self.plan;
+        let mut cap = registry.len().max(1);
         let queue: CompletionQueue<Option<T>> =
-            CompletionQueue::bounded(n.max(1));
-        let mut mode = vec![ShardMode::Active; n];
-        let mut epoch = vec![0u64; n];
+            CompletionQueue::bounded(cap);
+        let mut mode = vec![ShardMode::Active; registry.len()];
+        let mut epoch = vec![0u64; mode.len()];
         let mut done = false;
         LocalIter::from_fn(move || {
             if done {
                 return None;
             }
-            // Round boundary: rejoin dead shards whose slot was
-            // republished since they died.
-            for i in 0..n {
-                if mode[i] == ShardMode::Dead
-                    && registry.epoch(i) > epoch[i]
-                {
-                    mode[i] = ShardMode::Active;
+            // Round boundary — the sole membership admission point:
+            // append shards grown since the last round, tombstone
+            // retired ones, rejoin dead/retired slots republished
+            // since they left.
+            while mode.len() < registry.len() {
+                mode.push(ShardMode::Active);
+                epoch.push(0);
+                if mode.len() > cap {
+                    queue.add_capacity(1);
+                    cap += 1;
                 }
             }
+            for i in 0..mode.len() {
+                match mode[i] {
+                    ShardMode::Active => {
+                        if registry.is_retired(i) {
+                            mode[i] = ShardMode::Retired;
+                        }
+                    }
+                    ShardMode::Dead | ShardMode::Retired => {
+                        if registry.epoch(i) > epoch[i] {
+                            mode[i] = ShardMode::Active;
+                        }
+                    }
+                    ShardMode::Exhausted => {}
+                }
+            }
+            let n = mode.len();
             let mut expected = 0usize;
-            for (i, m) in mode.iter().enumerate() {
-                if *m == ShardMode::Active {
-                    let (handle, ep) = registry.get(i);
-                    epoch[i] = ep;
-                    let plan = plan.clone();
-                    handle.call_into(
-                        encode_tag(i, ep),
-                        &queue,
-                        move |w| plan(w),
-                    );
-                    expected += 1;
+            for i in 0..n {
+                if mode[i] == ShardMode::Active {
+                    match registry.get_live(i) {
+                        Some((handle, ep)) => {
+                            epoch[i] = ep;
+                            let plan = plan.clone();
+                            handle.call_into(
+                                encode_tag(i, ep),
+                                &queue,
+                                move |w| plan(w),
+                            );
+                            expected += 1;
+                        }
+                        None => mode[i] = ShardMode::Retired,
+                    }
                 }
             }
             if expected == 0 {
@@ -374,19 +473,21 @@ impl<W: 'static, T: Send + 'static> ParIter<W, T> {
                             // replacement is already live, re-issue the
                             // call so the barrier completes with the
                             // replacement's item; else drop the shard
-                            // from this and subsequent rounds.
-                            let (handle, ep2) = registry.get(i);
-                            if ep2 > ep {
-                                epoch[i] = ep2;
-                                let plan = plan.clone();
-                                handle.call_into(
-                                    encode_tag(i, ep2),
-                                    &queue,
-                                    move |w| plan(w),
-                                );
-                                expected += 1;
-                            } else {
-                                mode[i] = ShardMode::Dead;
+                            // from this and subsequent rounds (as
+                            // retired if it was tombstoned mid-round).
+                            match registry.get_live(i) {
+                                Some((handle, ep2)) if ep2 > ep => {
+                                    epoch[i] = ep2;
+                                    let plan = plan.clone();
+                                    handle.call_into(
+                                        encode_tag(i, ep2),
+                                        &queue,
+                                        move |w| plan(w),
+                                    );
+                                    expected += 1;
+                                }
+                                Some(_) => mode[i] = ShardMode::Dead,
+                                None => mode[i] = ShardMode::Retired,
                             }
                         }
                     }
@@ -731,6 +832,149 @@ mod tests {
         // same gather until it exhausts cleanly.
         let got = it.collect();
         assert_eq!(got, vec![1001, 1002, 1003, 1004]);
+    }
+
+    // -----------------------------------------------------------------
+    // Scale-out: grown shards join, tombstoned shards drain out
+    // -----------------------------------------------------------------
+
+    #[test]
+    fn gather_async_admits_grown_shard_mid_stream() {
+        let ws = workers(1);
+        let registry = ShardRegistry::new(ws);
+        let mut it = ParIter::from_registry(registry.clone(), |w| {
+            w.counter += 1;
+            Some((w.id, w.counter))
+        })
+        .gather_async(2);
+        for _ in 0..4 {
+            assert_eq!(it.next().unwrap().0, 0);
+        }
+        // Grow while the gather is live: the new index must start
+        // yielding without a plan rebuild.
+        let idx = registry.grow(replacement(7)).unwrap();
+        assert_eq!(idx, 1);
+        let mut from_new = 0;
+        for _ in 0..32 {
+            let (id, c) = it.next().unwrap();
+            if id == 7 {
+                assert!(c > 1000, "grown shard items start at its state");
+                from_new += 1;
+            }
+        }
+        assert!(from_new > 0, "grown shard never joined the stream");
+    }
+
+    #[test]
+    fn gather_async_drains_tombstoned_shard() {
+        let ws = workers(2);
+        let registry = ShardRegistry::new(ws);
+        let mut it = ParIter::from_registry(registry.clone(), |w| {
+            w.counter += 1;
+            Some((w.id, w.counter))
+        })
+        .gather_async(2);
+        for _ in 0..6 {
+            assert!(it.next().is_some());
+        }
+        registry.retire(1);
+        // The membership scan runs before the next pop, so the retired
+        // shard's in-flight items (num_async = 2) are discarded by the
+        // drain path — none may surface.  The stream keeps flowing off
+        // the survivor.
+        let mut retired_items = 0;
+        for _ in 0..24 {
+            let (id, _) = it.next().expect("stream survives scale-down");
+            if id == 1 {
+                retired_items += 1;
+            }
+        }
+        assert_eq!(
+            retired_items, 0,
+            "tombstoned shard's in-flight items must be drained, not \
+             yielded"
+        );
+        // Publishing into the slot rejoins it (scale back up).
+        registry.publish(1, replacement(9));
+        let mut rejoined = 0;
+        for _ in 0..32 {
+            if it.next().unwrap().0 == 9 {
+                rejoined += 1;
+            }
+        }
+        assert!(rejoined > 0, "revived slot never rejoined");
+    }
+
+    #[test]
+    fn gather_sync_admits_growth_at_round_boundary_only() {
+        let ws = workers(2);
+        let registry = ShardRegistry::new(ws);
+        let reg2 = registry.clone();
+        let grown = std::sync::atomic::AtomicBool::new(false);
+        // Worker 0 grows the registry from inside its round-2 plan
+        // call — i.e. strictly mid-round.  The barrier that is
+        // collecting must NOT admit the new shard; the next round must.
+        let mut it = ParIter::from_registry(registry.clone(), move |w| {
+            w.counter += 1;
+            if w.id == 0
+                && w.counter == 2
+                && !grown.swap(true, std::sync::atomic::Ordering::SeqCst)
+            {
+                reg2.grow(replacement(5)).unwrap();
+            }
+            Some(w.counter)
+        })
+        .gather_sync();
+        assert_eq!(it.next().unwrap(), vec![1, 1]);
+        // Round 2: the grow happens while this barrier is in flight.
+        assert_eq!(
+            it.next().unwrap(),
+            vec![2, 2],
+            "sync gather admitted a shard mid-round"
+        );
+        // Round 3: boundary reached after the grow -> admitted.
+        assert_eq!(it.next().unwrap(), vec![3, 3, 1001]);
+        assert_eq!(it.next().unwrap(), vec![4, 4, 1002]);
+    }
+
+    #[test]
+    fn gather_sync_drops_tombstoned_shard_at_next_boundary() {
+        let ws = workers(3);
+        let registry = ShardRegistry::new(ws);
+        let mut it = ParIter::from_registry(registry.clone(), |w| {
+            w.counter += 1;
+            Some(w.counter)
+        })
+        .gather_sync();
+        assert_eq!(it.next().unwrap(), vec![1, 1, 1]);
+        registry.retire(2);
+        assert_eq!(it.next().unwrap(), vec![2, 2]);
+        assert_eq!(it.next().unwrap(), vec![3, 3]);
+        // Revive the slot: rejoins at the next boundary.
+        registry.publish(2, replacement(4));
+        assert_eq!(it.next().unwrap(), vec![4, 4, 1001]);
+    }
+
+    #[test]
+    fn gather_async_ends_when_every_shard_is_tombstoned() {
+        let ws = workers(2);
+        let registry = ShardRegistry::new(ws);
+        let mut it = ParIter::from_registry(registry.clone(), |w| {
+            w.counter += 1;
+            Some(w.counter)
+        })
+        .gather_async(1);
+        assert!(it.next().is_some());
+        registry.retire(0);
+        registry.retire(1);
+        // In-flight completions drain, then the stream ends cleanly
+        // (and stays ended) instead of parking forever.
+        let mut remaining = 0;
+        while it.next().is_some() {
+            remaining += 1;
+            assert!(remaining < 8, "stream did not end after full retire");
+        }
+        assert_eq!(it.next(), None);
     }
 
     #[test]

@@ -4,6 +4,7 @@
 use std::collections::BTreeMap;
 
 use crate::actor::{ActorStatsSnapshot, WeightCastStats};
+use crate::rollout::ScaleStats;
 use crate::util::MovingStat;
 
 /// A finished episode, reported by the worker that ran it.
@@ -71,6 +72,7 @@ impl MetricsHub {
             // Filled by the reporting operator from the actor registry.
             actor_stats: Vec::new(),
             weight_casts: None,
+            scale: None,
         }
     }
 }
@@ -93,10 +95,16 @@ pub struct TrainResult {
     /// registry.  `utilization()` per entry locates the starved stage.
     pub actor_stats: Vec<ActorStatsSnapshot>,
     /// Weight-broadcast eviction counters (versions published, applies
-    /// enqueued, superseded casts coalesced, overloaded casts shed) —
-    /// filled by `standard_metrics_reporting` from the `WorkerSet`'s
-    /// `WeightCaster`.  `None` for reporting paths without one.
+    /// enqueued, superseded casts coalesced, overloaded/stale casts
+    /// shed) — filled by `standard_metrics_reporting` from the
+    /// `WorkerSet`'s `WeightCaster`.  `None` for reporting paths
+    /// without one.
     pub weight_casts: Option<WeightCastStats>,
+    /// Elastic scale events (workers added/removed over the set's
+    /// lifetime, current live membership vs registry slots) — filled by
+    /// `standard_metrics_reporting` from the `WorkerSet`.  `None` for
+    /// reporting paths without one.
+    pub scale: Option<ScaleStats>,
 }
 
 impl TrainResult {
@@ -134,8 +142,14 @@ impl TrainResult {
         );
         if let Some(wc) = &self.weight_casts {
             out.push_str(&format!(
-                " weight_casts=v{}(enq={} coalesced={} shed={})",
-                wc.version, wc.enqueued, wc.coalesced, wc.shed
+                " weight_casts=v{}(enq={} coalesced={} shed={} stale={})",
+                wc.version, wc.enqueued, wc.coalesced, wc.shed, wc.shed_stale
+            ));
+        }
+        if let Some(sc) = &self.scale {
+            out.push_str(&format!(
+                " scale={}/{}slots(+{} -{})",
+                sc.live, sc.slots, sc.added, sc.removed
             ));
         }
         out
@@ -218,6 +232,10 @@ mod tests {
         assert!(s.contains("idlest=learner(10%)"), "{s}");
         assert!(s.contains("deepest_queue=learner(17)"), "{s}");
         assert!(s.contains("dead=0"), "{s}");
+        assert!(!s.contains("scale="), "no scale section without stats");
+        r.scale = Some(ScaleStats { added: 3, removed: 1, live: 4, slots: 5 });
+        let s = r.pipeline_summary();
+        assert!(s.contains("scale=4/5slots(+3 -1)"), "{s}");
     }
 
     #[test]

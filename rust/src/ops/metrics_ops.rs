@@ -43,7 +43,8 @@ pub(crate) fn drain_and_snapshot<A: 'static>(
 /// items, drains episode metrics from all workers (dead workers are
 /// skipped, not fatal), and emits a `TrainResult` snapshot carrying
 /// per-actor utilization/queue-depth stats plus the weight-cast
-/// eviction counters.
+/// eviction counters and the set's elastic scale events
+/// (`TrainResult::scale`, rendered by `pipeline_summary()`).
 ///
 /// Workers are resolved through the set's **shard registry** at every
 /// report, not captured at build time — a worker restarted by
@@ -60,6 +61,7 @@ pub fn standard_metrics_reporting(
     let local = workers.local.clone();
     let registry = workers.registry().clone();
     let caster = workers.caster();
+    let scale = workers.scale_counters();
     LocalIter::from_fn(move || {
         for _ in 0..items_per_report {
             let item = inner.next()?;
@@ -77,6 +79,7 @@ pub fn standard_metrics_reporting(
                 (eps, steps)
             });
         snap.weight_casts = Some(caster.stats());
+        snap.scale = Some(scale.stats(registry.num_live(), registry.len()));
         Some(snap)
     })
 }
@@ -143,6 +146,10 @@ mod tests {
         let wc = r.weight_casts.expect("weight-cast stats attached");
         assert_eq!(wc.version, 6);
         assert!(r.pipeline_summary().contains("weight_casts=v6"));
+        // Scale events ride along (no events yet: 2 live, 2 slots).
+        let sc = r.scale.expect("scale stats attached");
+        assert_eq!((sc.added, sc.removed, sc.live, sc.slots), (0, 0, 2, 2));
+        assert!(r.pipeline_summary().contains("scale=2/2slots"));
     }
 
     #[test]

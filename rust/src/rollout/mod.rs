@@ -6,4 +6,6 @@ mod multi_agent;
 mod worker;
 
 pub use multi_agent::MultiAgentRolloutWorker;
-pub use worker::{CollectMode, RolloutWorker, WorkerSet};
+pub use worker::{
+    CollectMode, RolloutWorker, ScaleCounters, ScaleStats, WorkerSet,
+};

@@ -198,9 +198,73 @@ impl RolloutWorker {
 }
 
 /// The worker factory a [`WorkerSet`] retains so dead workers can be
-/// respawned in place.
+/// respawned in place (and new capacity spawned by `add_worker`).
 type WorkerFactory =
     Box<dyn FnMut(usize) -> Box<dyn FnOnce() -> RolloutWorker + Send> + Send>;
+
+/// The one spawn-and-sync protocol both recovery (`restart_dead`) and
+/// scale-up (`add_worker`) use: build incarnation state for slot `idx`
+/// from the retained factory (factory index `idx + 1`; 0 is the local
+/// worker) and cast `weights` into the fresh mailbox **before anything
+/// else** — FIFO per mailbox guarantees the apply runs before any
+/// gather dispatch reaches the worker.
+fn spawn_synced(
+    factory: &mut WorkerFactory,
+    idx: usize,
+    weights: &std::sync::Arc<[f32]>,
+) -> ActorHandle<RolloutWorker> {
+    let init = (&mut **factory)(idx + 1);
+    let fresh = ActorHandle::spawn(&format!("worker-{idx}"), move || init());
+    let w = std::sync::Arc::clone(weights);
+    fresh.cast(move |worker| worker.set_weights(&w));
+    fresh
+}
+
+/// Lifetime scale-event counters for one [`WorkerSet`], shared with the
+/// metrics-reporting operators (an `Arc` of these rides into the
+/// reporting closure, so scale events taken after plan build still show
+/// up in every `TrainResult`).
+#[derive(Debug, Default)]
+pub struct ScaleCounters {
+    added: std::sync::atomic::AtomicU64,
+    removed: std::sync::atomic::AtomicU64,
+}
+
+impl ScaleCounters {
+    fn note_added(&self) {
+        self.added.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    fn note_removed(&self) {
+        self.removed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    /// Snapshot against the registry's current membership.
+    pub fn stats(&self, live: usize, slots: usize) -> ScaleStats {
+        ScaleStats {
+            added: self.added.load(std::sync::atomic::Ordering::Relaxed),
+            removed: self.removed.load(std::sync::atomic::Ordering::Relaxed),
+            live,
+            slots,
+        }
+    }
+}
+
+/// Point-in-time scale summary attached to `TrainResult::scale`:
+/// workers added/removed over the set's lifetime plus the registry's
+/// current live membership and total slot (tag-space) usage.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ScaleStats {
+    /// Workers added (`add_worker`/`scale_to` upward), lifetime.
+    pub added: u64,
+    /// Workers removed (`remove_worker`/`scale_to` downward), lifetime.
+    pub removed: u64,
+    /// Live (non-tombstoned) remote workers right now.
+    pub live: usize,
+    /// Registry slots consumed (monotone; tombstones are reused before
+    /// new slots are grown).
+    pub slots: usize,
+}
 
 /// The local (learner) worker plus remote rollout workers — RLlib's
 /// `WorkerSet`.  All of them are actors; "local" only means "the one
@@ -224,6 +288,7 @@ pub struct WorkerSet {
     registry: ShardRegistry<RolloutWorker>,
     caster: std::sync::Arc<WeightCaster<RolloutWorker>>,
     factory: std::sync::Mutex<WorkerFactory>,
+    scale: std::sync::Arc<ScaleCounters>,
 }
 
 impl WorkerSet {
@@ -252,6 +317,7 @@ impl WorkerSet {
             registry,
             caster,
             factory: std::sync::Mutex::new(make),
+            scale: std::sync::Arc::new(ScaleCounters::default()),
         }
     }
 
@@ -274,20 +340,44 @@ impl WorkerSet {
         self.caster.stats()
     }
 
+    /// Registry slots consumed (tombstoned slots included) — the bound
+    /// on remote indices.  See [`Self::num_live_remotes`] for current
+    /// live capacity.
     pub fn num_remotes(&self) -> usize {
         self.registry.len()
     }
 
-    /// Snapshot of the current incarnation behind every remote index.
-    /// For plan-building prefer gathering through [`Self::registry`] —
-    /// a snapshot goes stale at the next `restart_dead`.
+    /// Live (non-tombstoned) remote workers — the number `scale_to`
+    /// targets.
+    pub fn num_live_remotes(&self) -> usize {
+        self.registry.num_live()
+    }
+
+    /// Snapshot of the current incarnation behind every **live** remote
+    /// index.  For plan-building prefer gathering through
+    /// [`Self::registry`] — a snapshot goes stale at the next
+    /// `restart_dead`/`scale_to`.
     pub fn remotes(&self) -> Vec<ActorHandle<RolloutWorker>> {
         self.registry.handles()
     }
 
-    /// The current incarnation behind remote index `i`.
+    /// The current incarnation behind remote index `i` (panics on a
+    /// slot tombstoned by [`Self::remove_worker`]).
     pub fn remote(&self, i: usize) -> ActorHandle<RolloutWorker> {
         self.registry.get(i).0
+    }
+
+    /// The shared lifetime scale counters (cloned into the metrics
+    /// reporting closure so `TrainResult::scale` reflects events taken
+    /// after plan build).
+    pub fn scale_counters(&self) -> std::sync::Arc<ScaleCounters> {
+        self.scale.clone()
+    }
+
+    /// Current scale summary: lifetime add/remove counts + live/slot
+    /// membership.
+    pub fn scale_stats(&self) -> ScaleStats {
+        self.scale.stats(self.registry.num_live(), self.registry.len())
     }
 
     /// Broadcast the local worker's weights to all remotes, blocking
@@ -351,6 +441,11 @@ impl WorkerSet {
         if dead.is_empty() {
             return dead;
         }
+        // Caster version BEFORE the weights read: the replacements get
+        // at least this version's content, so marking it applied can
+        // never hide a broadcast published after the read (see
+        // `WeightCaster::attach`).
+        let attach_v = self.caster.stats().version;
         let weights: std::sync::Arc<[f32]> =
             match self.local.call(|w| w.get_weights()) {
                 Ok(w) => w.into(),
@@ -360,14 +455,107 @@ impl WorkerSet {
             };
         let mut factory = self.factory.lock().unwrap();
         for &i in &dead {
-            let init = (&mut **factory)(i + 1);
-            let fresh =
-                ActorHandle::spawn(&format!("worker-{i}"), move || init());
-            let w = std::sync::Arc::clone(&weights);
-            fresh.cast(move |worker| worker.set_weights(&w));
-            self.registry.publish(i, fresh);
+            let fresh = spawn_synced(&mut factory, i, &weights);
+            let ep = self.registry.publish(i, fresh);
+            self.caster.attach(i, ep, attach_v);
         }
         dead
+    }
+
+    /// Add one remote worker under live traffic: spawn it from the
+    /// retained factory, push the learner's **current** weights into
+    /// its mailbox before it is published (FIFO per mailbox, so the
+    /// weights apply before any gather dispatch reaches it), register
+    /// its lane with the [`WeightCaster`], and publish it into the
+    /// registry — running `gather_async` streams prime credits for it
+    /// mid-stream, `gather_sync` admits it at the next round boundary.
+    ///
+    /// Tombstoned slots (earlier `remove_worker`s) are reused before
+    /// new tag space is grown.  Returns the worker's shard index.
+    /// Fails if the learner is dead (a blank-weight worker would sample
+    /// garbage) or the registry hit the 16-bit shard-tag bound.
+    pub fn add_worker(&self) -> crate::util::error::Result<usize> {
+        // Caster version BEFORE the weights read (see restart_dead).
+        let attach_v = self.caster.stats().version;
+        let weights: std::sync::Arc<[f32]> = self
+            .local
+            .call(|w| w.get_weights())
+            .map_err(|e| {
+                crate::util::error::Error::msg(format!(
+                    "add_worker: learner is dead ({e})"
+                ))
+            })?
+            .into();
+        // The factory lock serializes the set's own scale operations;
+        // the registry index is still taken from publish/grow itself
+        // (authoritative even if another holder of the shared registry
+        // grew it concurrently).
+        let mut factory = self.factory.lock().unwrap();
+        let reuse = self.registry.retired_indices().first().copied();
+        let slot_hint = reuse.unwrap_or_else(|| self.registry.len());
+        let fresh = spawn_synced(&mut factory, slot_hint, &weights);
+        let (idx, epoch) = match reuse {
+            Some(i) => (i, self.registry.publish(i, fresh)),
+            None => {
+                let i = self.registry.grow(fresh).map_err(|e| {
+                    crate::util::error::Error::msg(format!("add_worker: {e}"))
+                })?;
+                (i, 0)
+            }
+        };
+        self.caster.attach(idx, epoch, attach_v);
+        self.scale.note_added();
+        Ok(idx)
+    }
+
+    /// Remove remote `i` under live traffic (the tombstone path): the
+    /// registry drops its handle, running gathers stop dispatching to
+    /// the index and drain its in-flight completions by epoch/mode
+    /// (reusing the dead-incarnation discard machinery), weight casts
+    /// skip the slot, and the worker's actor thread exits once its
+    /// mailbox drains.  Returns `false` if the slot was already
+    /// tombstoned.  The slot is reused by a later [`Self::add_worker`].
+    pub fn remove_worker(&self, i: usize) -> bool {
+        // Serialize with add_worker's slot choice.
+        let _factory = self.factory.lock().unwrap();
+        match self.registry.retire(i) {
+            Some(_handle) => {
+                // Dropping `_handle` releases the registry's (last
+                // long-lived) reference; in-flight messages still
+                // execute because their envelopes are already queued.
+                self.scale.note_removed();
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Scale the live remote count to exactly `n` (>= 1), adding
+    /// workers ([`Self::add_worker`]) or tombstoning the highest live
+    /// indices ([`Self::remove_worker`]) as needed — all without
+    /// rebuilding any running plan.  Returns the indices added and
+    /// removed.
+    pub fn scale_to(
+        &self,
+        n: usize,
+    ) -> crate::util::error::Result<(Vec<usize>, Vec<usize>)> {
+        assert!(n >= 1, "scale_to(0) would end every stream");
+        let mut added = Vec::new();
+        let mut removed = Vec::new();
+        while self.registry.num_live() < n {
+            added.push(self.add_worker()?);
+        }
+        while self.registry.num_live() > n {
+            let idx = *self
+                .registry
+                .live_indices()
+                .last()
+                .expect("num_live > n >= 1 implies a live index");
+            if self.remove_worker(idx) {
+                removed.push(idx);
+            }
+        }
+        Ok((added, removed))
     }
 }
 
@@ -473,6 +661,71 @@ mod tests {
         // No blank-weight respawns: learner recovery is checkpoint-level.
         assert!(set.restart_dead().is_empty());
         assert_eq!(set.poisoned_indices(), vec![0]);
+    }
+
+    #[test]
+    fn add_worker_spawns_with_learner_weights() {
+        let set = WorkerSet::new(1, |_| Box::new(|| dummy_worker(1, 4)));
+        set.local.call(|w| w.set_weights(&[0.375])).unwrap();
+        let idx = set.add_worker().unwrap();
+        assert_eq!(idx, 1);
+        assert_eq!(set.num_remotes(), 2);
+        assert_eq!(set.num_live_remotes(), 2);
+        // The weights landed before any other message could.
+        let fresh = set.remote(1);
+        assert_eq!(fresh.call(|w| w.get_weights()).unwrap(), vec![0.375]);
+        assert_eq!(fresh.call(|w| w.sample().len()).unwrap(), 4);
+        let sc = set.scale_stats();
+        assert_eq!((sc.added, sc.removed, sc.live, sc.slots), (1, 0, 2, 2));
+    }
+
+    #[test]
+    fn remove_worker_tombstones_and_slot_is_reused() {
+        let set = WorkerSet::new(3, |_| Box::new(|| dummy_worker(1, 4)));
+        assert!(set.remove_worker(1));
+        assert!(!set.remove_worker(1), "double-remove is a no-op");
+        assert_eq!(set.num_live_remotes(), 2);
+        assert_eq!(set.num_remotes(), 3, "tombstones keep the slot");
+        // Weight syncs and metrics skip the tombstone.
+        set.sync_weights();
+        let (_eps, _steps) = set.collect_metrics();
+        // The next add reuses slot 1 instead of growing tag space,
+        // bumping its epoch so running gathers rejoin it.
+        let idx = set.add_worker().unwrap();
+        assert_eq!(idx, 1);
+        assert_eq!(set.num_remotes(), 3);
+        assert_eq!(set.registry().epoch(1), 1);
+        let sc = set.scale_stats();
+        assert_eq!((sc.added, sc.removed, sc.live, sc.slots), (1, 1, 3, 3));
+    }
+
+    #[test]
+    fn scale_to_reaches_target_in_both_directions() {
+        let set = WorkerSet::new(2, |_| Box::new(|| dummy_worker(1, 4)));
+        let (added, removed) = set.scale_to(5).unwrap();
+        assert_eq!(added, vec![2, 3, 4]);
+        assert!(removed.is_empty());
+        assert_eq!(set.num_live_remotes(), 5);
+        let (added, removed) = set.scale_to(2).unwrap();
+        assert!(added.is_empty());
+        assert_eq!(removed, vec![4, 3, 2]);
+        assert_eq!(set.num_live_remotes(), 2);
+        // Idempotent at target.
+        assert_eq!(set.scale_to(2).unwrap(), (vec![], vec![]));
+        let sc = set.scale_stats();
+        assert_eq!((sc.added, sc.removed, sc.live, sc.slots), (3, 3, 2, 5));
+    }
+
+    #[test]
+    fn add_worker_refuses_when_learner_is_dead() {
+        let set = WorkerSet::new(1, |_| Box::new(|| dummy_worker(1, 4)));
+        let _ = set.local.call(|_| -> () { panic!("learner fault") });
+        assert!(set
+            .local
+            .await_poisoned(std::time::Duration::from_secs(2)));
+        let err = set.add_worker().unwrap_err();
+        assert!(err.to_string().contains("learner is dead"), "{err}");
+        assert_eq!(set.num_live_remotes(), 1);
     }
 
     #[test]

@@ -1,0 +1,345 @@
+//! Elastic scale-out acceptance tests: a `WorkerSet` grows and shrinks
+//! under a *running* dataflow plan — gathers discover shards appended
+//! by `scale_to`/`add_worker` through the registry's publish counter,
+//! tombstoned shards drain out, and the whole protocol survives a
+//! chaos soak (grow 2 -> 8 while killing one worker per round) with no
+//! duplicated completions and final weight-version convergence.
+//!
+//! The soak (`chaos_soak_grow_kill_converge`) is `#[ignore]`d from the
+//! default `cargo test` run and executed by `tools/ci.sh --chaos`
+//! (a dedicated job in `.github/workflows/ci.yml`).
+//!
+//! These run on the Dummy env/policy, so they need no AOT artifacts.
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use flowrl::actor::{ActorHandle, ShardRegistry};
+use flowrl::env::{DummyEnv, Env};
+use flowrl::iter::ParIter;
+use flowrl::ops::parallel_rollouts_from;
+use flowrl::policy::DummyPolicy;
+use flowrl::rollout::{CollectMode, RolloutWorker, WorkerSet};
+
+fn worker_set(n_remote: usize) -> WorkerSet {
+    WorkerSet::new(n_remote, |_| {
+        Box::new(|| {
+            let envs: Vec<Box<dyn Env>> =
+                vec![Box::new(DummyEnv::new(4, 10))];
+            RolloutWorker::new(
+                envs,
+                Box::new(DummyPolicy::new(0.1)),
+                4,
+                CollectMode::OnPolicy,
+            )
+        })
+    })
+}
+
+/// The PR's acceptance criterion: a `gather_async` stream started on a
+/// 2-worker set observes completions from workers added via
+/// `scale_to(4)` — same iterator, no plan rebuild.
+#[test]
+fn gather_async_observes_workers_added_by_scale_to() {
+    let set = worker_set(2);
+    set.local.call(|w| w.set_weights(&[0.625])).unwrap();
+    let mut it = parallel_rollouts_from(&set).gather_async_with_source(1);
+
+    // Live off the original pair.
+    for _ in 0..4 {
+        assert!(it.next().is_some());
+    }
+
+    let (added, removed) = set.scale_to(4).unwrap();
+    assert_eq!(added, vec![2, 3]);
+    assert!(removed.is_empty());
+    let new_ids: HashSet<u64> =
+        added.iter().map(|&i| set.remote(i).id()).collect();
+
+    // The SAME running gather must start yielding the new workers'
+    // batches.
+    let mut seen_new = HashSet::new();
+    for _ in 0..64 {
+        let (batch, src) = it.next().expect("stream must keep flowing");
+        assert_eq!(batch.len(), 4);
+        if new_ids.contains(&src.id()) {
+            seen_new.insert(src.id());
+        }
+        if seen_new.len() == new_ids.len() {
+            break;
+        }
+    }
+    assert_eq!(
+        seen_new.len(),
+        new_ids.len(),
+        "grown workers never joined the running gather"
+    );
+    // The additions sampled with the learner's weights, not blanks.
+    for &i in &added {
+        assert_eq!(
+            set.remote(i).call(|w| w.get_weights()).unwrap(),
+            vec![0.625]
+        );
+    }
+}
+
+#[test]
+fn stream_survives_scale_down_then_back_up() {
+    let set = worker_set(4);
+    let mut it = parallel_rollouts_from(&set).gather_async_with_source(2);
+    for _ in 0..8 {
+        assert!(it.next().is_some());
+    }
+    let removed_ids: HashSet<u64> =
+        [set.remote(2).id(), set.remote(3).id()].into();
+    let (added, removed) = set.scale_to(2).unwrap();
+    assert!(added.is_empty());
+    assert_eq!(removed, vec![3, 2]);
+    assert_eq!(set.num_live_remotes(), 2);
+
+    // Tombstoned workers' in-flight items are drained (discarded by
+    // the gather), never yielded: the stream continues off survivors.
+    for _ in 0..24 {
+        let (_b, src) = it.next().expect("stream must survive scale-down");
+        assert!(
+            !removed_ids.contains(&src.id()),
+            "item attributed to a removed worker"
+        );
+    }
+
+    // Scale back up: the tombstoned slots are reused (epoch bump) and
+    // rejoin the same stream.
+    let (added, _) = set.scale_to(3).unwrap();
+    assert_eq!(added, vec![2]);
+    let revived = set.remote(2).id();
+    let mut seen_revived = false;
+    for _ in 0..48 {
+        let (_b, src) = it.next().unwrap();
+        if src.id() == revived {
+            seen_revived = true;
+            break;
+        }
+    }
+    assert!(seen_revived, "reused slot never rejoined the stream");
+}
+
+#[test]
+fn gather_sync_admits_scale_up_at_round_boundary() {
+    let set = worker_set(2);
+    let mut it = parallel_rollouts_from(&set).gather_sync();
+    assert_eq!(it.next().unwrap().len(), 2);
+    set.scale_to(3).unwrap();
+    // Next boundary: the grown worker is part of the barrier round.
+    assert_eq!(it.next().unwrap().len(), 3);
+    set.scale_to(2).unwrap();
+    assert_eq!(it.next().unwrap().len(), 2);
+}
+
+/// A full training plan (rollouts -> TrainOneStep -> metrics) keeps
+/// reporting while the set scales, and the scale events surface in
+/// `TrainResult::scale` / `pipeline_summary()`.
+#[test]
+fn train_plan_streams_across_scaling_and_reports_events() {
+    use flowrl::ops::{standard_metrics_reporting, train_one_step};
+
+    let set = worker_set(2);
+    let mut train = train_one_step(&set);
+    let train_op = parallel_rollouts_from(&set)
+        .gather_async(1)
+        .for_each(move |b| train(b));
+    let mut reports = standard_metrics_reporting(train_op, &set, 2);
+
+    assert!(reports.next().is_some());
+    set.scale_to(4).unwrap();
+    set.remove_worker(0);
+    let mut last = None;
+    for _ in 0..4 {
+        last = reports.next();
+        assert!(last.is_some(), "reporting stopped across a scale event");
+    }
+    let r = last.unwrap();
+    let sc = r.scale.expect("scale stats attached");
+    assert_eq!((sc.added, sc.removed, sc.live, sc.slots), (2, 1, 3, 4));
+    let summary = r.pipeline_summary();
+    assert!(summary.contains("scale=3/4slots(+2 -1)"), "{summary}");
+    // Weight versions kept broadcasting throughout (one per train item).
+    assert!(r.weight_casts.unwrap().version >= 5);
+}
+
+/// Grow-then-kill-then-restart on the same shard: epochs stay monotone
+/// (0 at grow, +1 per restart) and the stream keeps flowing through
+/// each incarnation.
+#[test]
+fn grow_kill_restart_keeps_epochs_monotone() {
+    let set = worker_set(1);
+    let mut it = parallel_rollouts_from(&set).gather_async_with_source(1);
+    assert!(it.next().is_some());
+
+    let (added, _) = set.scale_to(2).unwrap();
+    assert_eq!(added, vec![1]);
+    assert_eq!(set.registry().epoch(1), 0, "grown shards start at epoch 0");
+
+    for round in 1..=2u64 {
+        let victim = set.remote(1);
+        let _ = victim.call(|_| -> () { panic!("fault injection") });
+        assert!(victim.await_poisoned(Duration::from_secs(5)));
+        assert_eq!(set.restart_dead(), vec![1]);
+        assert_eq!(
+            set.registry().epoch(1),
+            round,
+            "epoch must advance monotonically across restarts"
+        );
+        // The replacement incarnation feeds the same running gather.
+        let fresh = set.remote(1).id();
+        let mut seen_fresh = false;
+        for _ in 0..48 {
+            let (_b, src) = it.next().expect("stream must keep flowing");
+            if src.id() == fresh {
+                seen_fresh = true;
+                break;
+            }
+        }
+        assert!(seen_fresh, "incarnation {round} never rejoined");
+    }
+}
+
+/// The 16-bit tag-space guard: `grow` beyond the cap errors out instead
+/// of handing out an index that would corrupt `(epoch << 16) | shard`
+/// tags, and the running gather is unaffected.
+#[test]
+fn grow_beyond_tag_space_errors_cleanly() {
+    struct Src {
+        id: usize,
+        n: u64,
+    }
+    let spawn = |id: usize| {
+        ActorHandle::spawn("scale-src", move || Src { id, n: 0 })
+    };
+    // Production cap is 65536; the guard path is identical at 3.
+    let registry = ShardRegistry::with_max_shards(vec![spawn(0), spawn(1)], 3);
+    let mut it = ParIter::from_registry(registry.clone(), |s: &mut Src| {
+        s.n += 1;
+        Some((s.id, s.n))
+    })
+    .gather_async(1);
+    assert!(it.next().is_some());
+
+    assert_eq!(registry.grow(spawn(2)).unwrap(), 2);
+    let err = registry.grow(spawn(3)).unwrap_err();
+    assert!(err.to_string().contains("16-bit"), "{err}");
+    assert_eq!(registry.len(), 3, "failed grow must not consume a slot");
+
+    // All three admitted shards stream; no tag corruption, no phantom
+    // fourth shard.
+    let mut ids = HashSet::new();
+    for _ in 0..24 {
+        let (id, _) = it.next().unwrap();
+        assert!(id < 3);
+        ids.insert(id);
+    }
+    assert_eq!(ids.len(), 3);
+}
+
+/// The chaos soak behind `tools/ci.sh --chaos`: grow the set 2 -> 8
+/// while killing (and restarting) one worker per round under a running
+/// `gather_async`, with weight broadcasts in flight.  Asserts:
+///
+/// * no completion is ever yielded twice (per-item sequence numbers
+///   are handed out on the worker actors and collected exactly once);
+/// * after the churn stops, every live shard contributes (nothing fell
+///   silent, nothing streams from a corpse incarnation);
+/// * weight versions converge: the final barrier broadcast reaches all
+///   8 workers and every live caster lane reports the newest version.
+///
+/// Bounded well under 60s; `ci.sh --chaos` adds a hard timeout on top.
+#[test]
+#[ignore = "chaos soak: executed by tools/ci.sh --chaos"]
+fn chaos_soak_grow_kill_converge() {
+    let set = worker_set(2);
+    set.local.call(|w| w.set_weights(&[0.0])).unwrap();
+    let caster = set.caster();
+
+    // Per-completion sequence numbers, assigned on the worker actors:
+    // a duplicated completion would insert twice below.
+    let seq = Arc::new(AtomicU64::new(0));
+    let plan_seq = seq.clone();
+    let mut it =
+        ParIter::from_registry(set.registry().clone(), move |w| {
+            let batch = w.sample();
+            assert_eq!(batch.len(), 4);
+            Some(plan_seq.fetch_add(1, Ordering::SeqCst))
+        })
+        .gather_async_with_source(2);
+
+    let mut seen = HashSet::new();
+    for round in 0..7usize {
+        // Grow one step toward 8 workers.
+        let target = 2 + round + 1;
+        set.scale_to(target).unwrap();
+
+        // A new weight version under live traffic.
+        let v = round as f32 + 1.0;
+        set.local.call(move |w| w.set_weights(&[v])).unwrap();
+        caster.broadcast(vec![v].into());
+
+        // Kill one live worker and restart it into the same stream.
+        let live = set.registry().live_indices();
+        let victim_idx = live[round % live.len()];
+        let victim = set.remote(victim_idx);
+        let _ = victim.call(|_| -> () { panic!("chaos kill") });
+        assert!(victim.await_poisoned(Duration::from_secs(5)));
+        assert_eq!(set.restart_dead(), vec![victim_idx]);
+
+        // Stream through the churn; every completion exactly once.
+        for _ in 0..20 {
+            let (s, _src) = it.next().expect("stream died under chaos");
+            assert!(seen.insert(s), "completion {s} yielded twice");
+        }
+    }
+
+    // Quiesce at 8 workers: every live shard contributes and nothing
+    // streams from a dead incarnation.
+    assert_eq!(set.num_live_remotes(), 8);
+    let live_ids: HashSet<u64> =
+        set.remotes().iter().map(|h| h.id()).collect();
+    let mut contributors = HashSet::new();
+    for _ in 0..96 {
+        let (s, src) = it.next().unwrap();
+        assert!(seen.insert(s), "completion {s} yielded twice");
+        assert!(
+            live_ids.contains(&src.id()),
+            "item attributed to a corpse incarnation"
+        );
+        contributors.insert(src.id());
+    }
+    assert_eq!(
+        contributors.len(),
+        8,
+        "a shard fell silent after the soak: {contributors:?}"
+    );
+
+    // Weight-version convergence: the final barrier reaches all 8 and
+    // every live lane reports the newest version.
+    set.local.call(|w| w.set_weights(&[42.0])).unwrap();
+    set.sync_weights();
+    for h in set.remotes() {
+        assert_eq!(h.call(|w| w.get_weights()).unwrap(), vec![42.0]);
+    }
+    let newest = caster.stats().version;
+    let applied = caster.applied_versions();
+    for i in set.registry().live_indices() {
+        assert!(
+            applied[i] >= newest,
+            "lane {i} applied v{} < newest v{newest}",
+            applied[i]
+        );
+    }
+    println!(
+        "chaos soak: {} unique completions, {} weight versions, 7 kills, \
+         2 -> 8 workers",
+        seen.len(),
+        newest
+    );
+}

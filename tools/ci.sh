@@ -1,12 +1,22 @@
 #!/usr/bin/env bash
 # CI entry point: format, lint, build, test, bench smoke-run, bench
-# schema validation.
+# schema validation, chaos soak.
 #
 #   tools/ci.sh           # run everything (includes --smoke + validator)
 #   tools/ci.sh --quick   # skip release build, bench build/run (fmt +
-#                         # clippy + tests + validator)
+#                         # clippy + tests + validator).  Fails if the
+#                         # run exceeds ${CI_QUICK_BUDGET_SECS:-1200}
+#                         # wall-clock seconds, so the per-PR gate stays
+#                         # fast as the crate grows.
 #   tools/ci.sh --smoke   # also *execute* every bench binary with tiny
 #                         # iteration counts (implied by the full run)
+#   tools/ci.sh --chaos   # run ONLY the elastic scale-out chaos soak
+#                         # (rust/tests/scale_out.rs, the #[ignore]d
+#                         # grow-2->8-while-killing-one-per-round test)
+#                         # in release mode under a hard timeout
+#
+# Every step prints its own wall-clock seconds (==> ... [Ns]) so a slow
+# gate names the stage that slowed down.
 #
 # Benches are plain `fn main()` reporters; the smoke run executes each
 # of them with `-- --smoke` so their mains cannot bit-rot silently.
@@ -22,35 +32,58 @@ cd rust
 
 quick=0
 smoke=0
+chaos=0
 for arg in "$@"; do
   case "$arg" in
     --quick) quick=1 ;;
     --smoke) smoke=1 ;;
+    --chaos) chaos=1 ;;
     *) echo "unknown argument: $arg" >&2; exit 2 ;;
   esac
 done
 # The default full run includes the smoke pass.
-if [ "$quick" -eq 0 ]; then
+if [ "$quick" -eq 0 ] && [ "$chaos" -eq 0 ]; then
   smoke=1
 fi
 
-echo "==> cargo fmt --check"
-cargo fmt --check
+ci_start=$SECONDS
 
-echo "==> cargo clippy (warnings are errors)"
-cargo clippy --all-targets -- -D warnings
+# step <label> <cmd...>: run a stage and report its wall-clock cost.
+step() {
+  local label="$1"
+  shift
+  echo "==> $label"
+  local t0=$SECONDS
+  "$@"
+  echo "==> $label [$((SECONDS - t0))s]"
+}
 
-if [ "$quick" -eq 0 ]; then
-  echo "==> cargo build --release"
-  cargo build --release
+if [ "$chaos" -eq 1 ]; then
+  # The chaos gate: build untimed (cache-dependent), then run the
+  # #[ignore]d soak under a hard timeout — the test itself is designed
+  # to finish well under 60s, so a hang is a failure, not a wait.
+  step "cargo build --release --tests (chaos prebuild)" \
+    cargo build --release --tests
+  step "chaos soak: scale_out (grow 2->8 under kills, <60s)" \
+    timeout 120 cargo test --release --test scale_out -- \
+    --ignored --nocapture
+  echo "CI OK (chaos) [$((SECONDS - ci_start))s]"
+  exit 0
 fi
 
-echo "==> cargo test -q"
-cargo test -q
+step "cargo fmt --check" cargo fmt --check
+
+step "cargo clippy (warnings are errors)" \
+  cargo clippy --all-targets -- -D warnings
 
 if [ "$quick" -eq 0 ]; then
-  echo "==> cargo build --benches --release"
-  cargo build --benches --release
+  step "cargo build --release" cargo build --release
+fi
+
+step "cargo test -q" cargo test -q
+
+if [ "$quick" -eq 0 ]; then
+  step "cargo build --benches --release" cargo build --benches --release
 fi
 
 if [ "$smoke" -eq 1 ]; then
@@ -58,12 +91,22 @@ if [ "$smoke" -eq 1 ]; then
   # be silently excluded from the smoke gate.
   for f in benches/*.rs; do
     b="$(basename "$f" .rs)"
-    echo "==> bench smoke: $b"
-    cargo bench --bench "$b" -- --smoke
+    step "bench smoke: $b" cargo bench --bench "$b" -- --smoke
   done
 fi
 
-echo "==> validate BENCH_*.json schemas"
-python3 "$repo_root/tools/validate_bench.py" "$repo_root"/BENCH_*.json
+step "validate BENCH_*.json schemas" \
+  python3 "$repo_root/tools/validate_bench.py" "$repo_root"/BENCH_*.json
 
-echo "CI OK"
+elapsed=$((SECONDS - ci_start))
+if [ "$quick" -eq 1 ]; then
+  budget="${CI_QUICK_BUDGET_SECS:-1200}"
+  if [ "$elapsed" -gt "$budget" ]; then
+    echo "CI FAIL: --quick took ${elapsed}s, over the ${budget}s budget" \
+      "(raise CI_QUICK_BUDGET_SECS only with a reason)" >&2
+    exit 1
+  fi
+  echo "quick budget: ${elapsed}s of ${budget}s"
+fi
+
+echo "CI OK [${elapsed}s]"

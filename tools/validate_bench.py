@@ -7,12 +7,17 @@ Rules enforced per file:
 
   * top-level required keys: bench, units, how_to_regenerate, results;
   * "bench" matches the filename (BENCH_<bench>.json);
-  * "units" is a known unit string;
+  * "units" is a known unit string, or "mixed" — in which case every
+    result row must carry its own "units" key (a known unit string);
   * "results" is a list of objects; every numeric field is finite and
     non-negative; every entry carries an "op" string;
   * if entries carry timestamps ("recorded_at_unix_ms"), they must be
     non-negative and monotonically non-decreasing in file order;
-  * if an "ops" allowlist is present, every result's "op" is in it.
+  * if an "ops" allowlist is present, every result's "op" is in it;
+  * BENCH_elastic.json additionally must allowlist (and, once results
+    are recorded, cover) the scale-out ops "scale_up_latency" and
+    "growth_throughput" — the schema rust/benches/elastic_scale.rs
+    emits.
 
 Exit code 0 = all files pass; 1 = any violation (listed on stderr).
 
@@ -24,8 +29,20 @@ import math
 import pathlib
 import sys
 
-KNOWN_UNITS = {"ns_per_op", "us_per_op", "ms_per_op", "steps_per_s"}
+KNOWN_UNITS = {
+    "ns_per_op",
+    "us_per_op",
+    "ms_per_op",
+    "steps_per_s",
+    "items_per_s",
+}
 REQUIRED_KEYS = ("bench", "units", "how_to_regenerate", "results")
+
+# Per-bench schema extensions: ops the named bench's allowlist must
+# contain (and, once results exist, cover with at least one row each).
+REQUIRED_OPS = {
+    "elastic": ("scale_up_latency", "growth_throughput"),
+}
 
 
 def check_file(path: pathlib.Path) -> list:
@@ -51,8 +68,12 @@ def check_file(path: pathlib.Path) -> list:
     expected_bench = path.stem.removeprefix("BENCH_")
     if doc["bench"] != expected_bench:
         err(f'"bench" is {doc["bench"]!r}, filename says {expected_bench!r}')
-    if doc["units"] not in KNOWN_UNITS:
-        err(f'unknown "units" {doc["units"]!r} (known: {sorted(KNOWN_UNITS)})')
+    mixed_units = doc["units"] == "mixed"
+    if not mixed_units and doc["units"] not in KNOWN_UNITS:
+        err(
+            f'unknown "units" {doc["units"]!r} '
+            f'(known: {sorted(KNOWN_UNITS)} or "mixed")'
+        )
 
     results = doc["results"]
     if not isinstance(results, list):
@@ -64,6 +85,16 @@ def check_file(path: pathlib.Path) -> list:
         err('"ops" must be a list when present')
         allowed_ops = None
 
+    required_ops = REQUIRED_OPS.get(expected_bench, ())
+    if required_ops:
+        if allowed_ops is None:
+            err(f'bench {expected_bench!r} must declare an "ops" allowlist')
+        else:
+            for op in required_ops:
+                if op not in allowed_ops:
+                    err(f'"ops" allowlist is missing required op {op!r}')
+
+    seen_ops = set()
     last_ts = None
     for i, row in enumerate(results):
         where = f"results[{i}]"
@@ -75,6 +106,15 @@ def check_file(path: pathlib.Path) -> list:
             err(f"{where}: missing/empty 'op'")
         elif allowed_ops is not None and op not in allowed_ops:
             err(f"{where}: op {op!r} not in the file's 'ops' allowlist")
+        else:
+            seen_ops.add(op)
+        if mixed_units:
+            row_units = row.get("units")
+            if row_units not in KNOWN_UNITS:
+                err(
+                    f'{where}: file units are "mixed", so the row needs '
+                    f"its own known 'units' (got {row_units!r})"
+                )
         for key, value in row.items():
             if isinstance(value, bool):
                 continue
@@ -94,6 +134,14 @@ def check_file(path: pathlib.Path) -> list:
                 )
             else:
                 last_ts = ts
+
+    # Schema coverage: once a required-ops bench has recorded results,
+    # every required op must appear (an empty `results` is the
+    # committed numbers-pending state and passes).
+    if results and required_ops:
+        for op in required_ops:
+            if op not in seen_ops:
+                err(f"results cover no {op!r} row (required for this bench)")
 
     return errors
 
