@@ -1,0 +1,266 @@
+//! Autoscaler bench: what does closing the elasticity loop buy?
+//!
+//! An idle-learner workload (samplers burn ~2ms per env step, the
+//! learner's update is microseconds) runs twice:
+//!
+//! * **autoscaled** — the pool starts at 1 sampler with an
+//!   `actor::Autoscaler` driving `WorkerSet::scale_to` through
+//!   `autoscaled_metrics_reporting`; reported ops:
+//!   `time_to_converge` (ms from the first report until the live pool
+//!   reaches `max_workers`) and the post-convergence learner
+//!   utilization (`steady_utilization`, mode "autoscaled");
+//! * **fixed** — the same workload pinned at 1 sampler, same
+//!   measurement window: `steady_utilization`, mode "fixed" — the
+//!   baseline the autoscaled number is compared against (an idle
+//!   learner is exactly what the controller exists to fix).
+//!
+//! Runs on the Dummy env + a sleep-knob policy — no AOT artifacts, so
+//! this bench always executes (including `tools/ci.sh --smoke`).
+//!
+//! Run: `cargo bench --bench autoscale`
+//! Smoke: `cargo bench --bench autoscale -- --smoke`
+//! Record: `cargo bench --bench autoscale -- --write`
+//!         (rewrites BENCH_autoscale.json at the repo root)
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use flowrl::actor::{Autoscaler, AutoscalerConfig};
+use flowrl::env::{DummyEnv, Env};
+use flowrl::ops::{
+    autoscaled_metrics_reporting, parallel_rollouts_from,
+    standard_metrics_reporting, train_one_step,
+};
+use flowrl::policy::{ActionOutput, Gradients, Policy};
+use flowrl::rollout::{CollectMode, RolloutWorker, WorkerSet};
+use flowrl::sample_batch::SampleBatch;
+
+/// Sampler-side busy-work policy: `compute_actions` sleeps, the learner
+/// update is effectively free — the idle-learner workload shape.
+struct SlowSampler {
+    step_sleep: Duration,
+    weights: Vec<f32>,
+}
+
+impl Policy for SlowSampler {
+    fn compute_actions(&mut self, _obs: &[f32], n: usize) -> Vec<ActionOutput> {
+        std::thread::sleep(self.step_sleep);
+        vec![ActionOutput { action: 0, logp: 0.0, value: 0.0 }; n]
+    }
+
+    fn compute_gradients(&mut self, batch: &SampleBatch) -> Gradients {
+        let mut stats = BTreeMap::new();
+        stats.insert("loss".to_string(), 0.5);
+        Gradients { flat: vec![0.0], stats, count: batch.len() }
+    }
+
+    fn apply_gradients(&mut self, _grads: &Gradients) {}
+
+    fn get_weights(&self) -> Vec<f32> {
+        self.weights.clone()
+    }
+
+    fn set_weights(&mut self, weights: &[f32]) {
+        self.weights = weights.to_vec();
+    }
+}
+
+fn worker_set(n_remote: usize, step_sleep_us: u64) -> WorkerSet {
+    WorkerSet::new(n_remote, move |_| {
+        Box::new(move || {
+            let envs: Vec<Box<dyn Env>> =
+                vec![Box::new(DummyEnv::new(4, 10))];
+            RolloutWorker::new(
+                envs,
+                Box::new(SlowSampler {
+                    step_sleep: Duration::from_micros(step_sleep_us),
+                    weights: vec![0.0],
+                }),
+                4,
+                CollectMode::OnPolicy,
+            )
+        })
+    })
+}
+
+/// Learner busy fraction over `window` reports, measured from the local
+/// actor's cumulative telemetry deltas.
+fn learner_utilization_over(
+    set: &WorkerSet,
+    reports: &mut flowrl::iter::LocalIter<flowrl::metrics::TrainResult>,
+    window: usize,
+) -> f64 {
+    let before = set.local.stats();
+    for _ in 0..window {
+        reports.next().expect("report stream ended early");
+    }
+    let after = set.local.stats();
+    let busy = after.busy_ns.saturating_sub(before.busy_ns);
+    let idle = after.idle_ns.saturating_sub(before.idle_ns);
+    if busy + idle == 0 {
+        0.0
+    } else {
+        busy as f64 / (busy + idle) as f64
+    }
+}
+
+struct Report {
+    time_to_converge_ms: f64,
+    reports_to_converge: usize,
+    workers_from: usize,
+    workers_to: usize,
+    util_autoscaled: f64,
+    util_fixed: f64,
+}
+
+fn measure(smoke: bool) -> Report {
+    let step_sleep_us = if smoke { 1_000 } else { 2_000 };
+    let target = if smoke { 3 } else { 4 };
+    let window = if smoke { 8 } else { 48 };
+    let report_cap = if smoke { 60 } else { 300 };
+
+    // --- autoscaled: converge 1 -> target, then measure steady state.
+    let set = worker_set(1, step_sleep_us);
+    let mut train = train_one_step(&set);
+    let train_op = parallel_rollouts_from(&set)
+        .gather_async(1)
+        .for_each(move |b| train(b));
+    let controller = Autoscaler::new(AutoscalerConfig {
+        min_workers: 1,
+        max_workers: target,
+        learner_idle_below: 0.3,
+        learner_busy_above: 0.9,
+        sampler_queue_pressure: 1_000,
+        shed_tolerance: u64::MAX / 2,
+        cooldown_reports: 0,
+        confirm_reports: 1,
+        step: 1,
+    });
+    let mut reports =
+        autoscaled_metrics_reporting(train_op, &set, 1, controller);
+    let t0 = Instant::now();
+    let mut reports_to_converge = 0usize;
+    while set.num_live_remotes() < target {
+        reports.next().expect("autoscaled stream ended early");
+        reports_to_converge += 1;
+        assert!(
+            reports_to_converge < report_cap,
+            "autoscaler never converged to {target} workers \
+             ({reports_to_converge} reports)"
+        );
+    }
+    let time_to_converge_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let util_autoscaled =
+        learner_utilization_over(&set, &mut reports, window);
+
+    // --- fixed baseline: same workload pinned at 1 sampler.
+    let fixed = worker_set(1, step_sleep_us);
+    let mut train = train_one_step(&fixed);
+    let train_op = parallel_rollouts_from(&fixed)
+        .gather_async(1)
+        .for_each(move |b| train(b));
+    let mut fixed_reports = standard_metrics_reporting(train_op, &fixed, 1);
+    // Warm up the same number of reports the autoscaled run spent
+    // converging, so both windows start past cold-start effects.
+    for _ in 0..reports_to_converge.max(1) {
+        fixed_reports.next().expect("fixed stream ended early");
+    }
+    let util_fixed =
+        learner_utilization_over(&fixed, &mut fixed_reports, window);
+
+    Report {
+        time_to_converge_ms,
+        reports_to_converge,
+        workers_from: 1,
+        workers_to: target,
+        util_autoscaled,
+        util_fixed,
+    }
+}
+
+fn json_report(r: &Report) -> String {
+    // Mirrors the committed BENCH_autoscale.json schema so `-- --write`
+    // preserves the regeneration command and acceptance targets.
+    let mut out = String::new();
+    out.push_str("{\n  \"bench\": \"autoscale\",\n");
+    out.push_str("  \"units\": \"mixed\",\n");
+    out.push_str(
+        "  \"how_to_regenerate\": \"cd rust && cargo bench --bench \
+         autoscale -- --write\",\n",
+    );
+    out.push_str(
+        "  \"note\": \"idle-learner workload (samplers sleep ~2ms/step, \
+         learner update ~us).  time_to_converge = ms from the first \
+         report until the Autoscaler has grown the live pool from \
+         workers_from to workers_to through the running plan; \
+         steady_utilization = learner busy fraction (percent) over the \
+         post-convergence window, reported for the autoscaled pool and \
+         for a fixed pool pinned at workers_from — the gap is what \
+         closing the elasticity loop buys.  Dummy env, fragment 4, \
+         num_async 1.\",\n",
+    );
+    out.push_str(
+        "  \"acceptance_targets\": {\n    \"time_to_converge\": \"< 5000 \
+         ms from first report to full pool\",\n    \
+         \"steady_utilization\": \"autoscaled >= 2x fixed on the \
+         idle-learner workload\"\n  },\n",
+    );
+    out.push_str(
+        "  \"ops\": [\"time_to_converge\", \"steady_utilization\"],\n",
+    );
+    out.push_str("  \"results\": [\n");
+    out.push_str(&format!(
+        "    {{\"op\": \"time_to_converge\", \"units\": \"ms_per_op\", \
+         \"ms_per_op\": {:.1}, \"reports\": {}, \"workers_from\": {}, \
+         \"workers_to\": {}}},\n",
+        r.time_to_converge_ms,
+        r.reports_to_converge,
+        r.workers_from,
+        r.workers_to
+    ));
+    out.push_str(&format!(
+        "    {{\"op\": \"steady_utilization\", \"units\": \"percent\", \
+         \"percent\": {:.1}, \"mode\": \"autoscaled\", \"workers\": {}}},\n",
+        r.util_autoscaled * 100.0,
+        r.workers_to
+    ));
+    out.push_str(&format!(
+        "    {{\"op\": \"steady_utilization\", \"units\": \"percent\", \
+         \"percent\": {:.1}, \"mode\": \"fixed\", \"workers\": {}}}\n",
+        r.util_fixed * 100.0,
+        r.workers_from
+    ));
+    out.push_str("  ]\n}\n");
+    out
+}
+
+fn main() {
+    let write = std::env::args().any(|a| a == "--write");
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let r = measure(smoke);
+    println!("# autoscale bench");
+    println!(
+        "time_to_converge ({} -> {} workers): {:.1} ms over {} reports",
+        r.workers_from, r.workers_to, r.time_to_converge_ms,
+        r.reports_to_converge
+    );
+    println!(
+        "steady learner utilization: autoscaled {:.1}% vs fixed {:.1}%",
+        r.util_autoscaled * 100.0,
+        r.util_fixed * 100.0
+    );
+    // Hard floors even in smoke mode: convergence happened, the
+    // utilizations are sane fractions.
+    assert!(r.time_to_converge_ms.is_finite() && r.time_to_converge_ms > 0.0);
+    assert!((0.0..=1.0).contains(&r.util_autoscaled));
+    assert!((0.0..=1.0).contains(&r.util_fixed));
+    let json = json_report(&r);
+    if write {
+        let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("../BENCH_autoscale.json");
+        std::fs::write(&path, &json).expect("write BENCH_autoscale.json");
+        println!("\nwrote {}", path.display());
+    } else {
+        println!("\n{json}");
+    }
+}

@@ -70,8 +70,10 @@ fn measure(smoke: bool) -> Report {
         }
         let t0 = Instant::now();
         let (added, _) = set.scale_to(after).expect("scale_to");
-        let new_ids: HashSet<u64> =
-            added.iter().map(|&i| set.remote(i).id()).collect();
+        let new_ids: HashSet<u64> = added
+            .iter()
+            .map(|&i| set.remote(i).expect("live remote").id())
+            .collect();
         // Bounded: a discovery regression must fail the bench with a
         // diagnostic, not hang the smoke sweep until the CI job
         // timeout (the smoke run has no external `timeout` wrapper).

@@ -19,15 +19,15 @@
 use std::path::PathBuf;
 use std::time::Instant;
 
-use flowrl::algorithms::multi_agent::{ma_workers, ma_metrics_reporting};
+use flowrl::algorithms::multi_agent::{ma_metrics_reporting, ma_worker_set};
 use flowrl::algorithms::{
     multi_agent_plan, DqnConfig, MultiAgentConfig, TrainerConfig,
 };
-use flowrl::iter::{LocalIter, ParIter};
+use flowrl::iter::LocalIter;
 use flowrl::metrics::TrainResult;
 use flowrl::ops::{
-    concat_batches, create_replay_actors, replay, select_policy,
-    store_to_replay_buffer, TrainItem,
+    concat_batches, create_replay_actors, parallel_ma_rollouts_from, replay,
+    select_policy, store_to_replay_buffer, TrainItem,
 };
 
 fn smoke() -> bool {
@@ -86,12 +86,12 @@ fn throughput(mut plan: LocalIter<TrainResult>) -> f64 {
 fn ppo_alone() -> LocalIter<TrainResult> {
     let cfg = config();
     let ma = ma_cfg();
-    let (local, remotes) = ma_workers(&cfg, &ma, false, true);
-    let rollouts = ParIter::from_actors(remotes.clone(), |w| Some(w.sample()))
-        .gather_async(cfg.num_async);
+    let set = ma_worker_set(&cfg, &ma, false, true);
+    let rollouts =
+        parallel_ma_rollouts_from(&set).gather_async(cfg.num_async);
     let tbs = cfg.train_batch_size;
-    let l = local.clone();
-    let rs = remotes.clone();
+    let l = set.local.clone();
+    let rs = set.remotes();
     let ppo_op = rollouts
         .filter_map(select_policy("ppo"))
         .combine(concat_batches(tbs))
@@ -108,16 +108,17 @@ fn ppo_alone() -> LocalIter<TrainResult> {
             }
             TrainItem::new(stats, steps)
         });
-    ma_metrics_reporting(ppo_op, local, remotes)
+    ma_metrics_reporting(ppo_op, &set, None)
 }
 
 /// DQN-only trainer over the multi-agent env (all agents -> "dqn").
 fn dqn_alone() -> LocalIter<TrainResult> {
     let cfg = config();
     let ma = ma_cfg();
-    let (local, remotes) = ma_workers(&cfg, &ma, true, false);
-    let rollouts = ParIter::from_actors(remotes.clone(), |w| Some(w.sample()))
-        .gather_async(cfg.num_async);
+    let set = ma_worker_set(&cfg, &ma, true, false);
+    let local = set.local.clone();
+    let rollouts =
+        parallel_ma_rollouts_from(&set).gather_async(cfg.num_async);
     let obs_dim = local.call(|w| w.obs_dim()).expect("learner died");
     let replay_actors = create_replay_actors(
         1,
@@ -155,7 +156,7 @@ fn dqn_alone() -> LocalIter<TrainResult> {
         flowrl::iter::UnionMode::RoundRobin { weights: None },
         Some(vec![1]),
     );
-    ma_metrics_reporting(merged, local, remotes)
+    ma_metrics_reporting(merged, &set, None)
 }
 
 fn main() {

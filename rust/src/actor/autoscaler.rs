@@ -1,0 +1,589 @@
+//! The autoscaling policy controller — the piece that closes the
+//! elasticity loop.
+//!
+//! PR 4 built the *mechanism* (`ShardRegistry::grow`/`retire`,
+//! `WorkerSet::scale_to`, mid-stream gather discovery) but nothing
+//! decided *when* to scale.  [`Autoscaler`] is that decision: a small
+//! feedback controller that samples the per-actor telemetry every
+//! report interval ([`super::ActorStatsSnapshot`] — learner busy/idle
+//! ratio, sampler queue depth — plus the weight caster's shed
+//! counters) and emits [`ScaleDirective`]s with **hysteresis**, so the
+//! pool converges instead of flapping:
+//!
+//! * **deadband** — scale up only below `learner_idle_below`
+//!   utilization, down only above `learner_busy_above`; the gap between
+//!   them is a hold region where no action is taken;
+//! * **confirmation streak** — a direction must be observed
+//!   `confirm_reports` consecutive reports before it is acted on, so a
+//!   one-report blip (or a load oscillating around a threshold) never
+//!   moves the pool;
+//! * **cooldown** — after an action the controller holds for
+//!   `cooldown_reports` reports, giving the grown/shrunk pool time to
+//!   show up in the telemetry before the next decision.
+//!
+//! The controller is deliberately **pure policy**: it owns no actors
+//! and performs no scaling itself.  Callers (the metrics-reporting
+//! operators in `ops`, which see every report anyway) feed it snapshots
+//! via [`Autoscaler::signals`] + [`Autoscaler::decide`] and apply the
+//! returned target with `WorkerSet::scale_to` — the same separation
+//! MSRL draws between its fragment scheduler and its execution plane.
+//! That also makes the hysteresis behavior fully deterministic and
+//! unit-testable: feed synthetic signals, observe directives.
+//!
+//! Control direction, for the standard rollout/learn pipeline (samplers
+//! produce, one learner consumes):
+//!
+//! * learner mostly **idle** → the samplers cannot feed it → grow the
+//!   sampler pool;
+//! * learner **saturated** → extra samplers are pure overhead (their
+//!   batches queue, their weight casts shed) → shrink;
+//! * samplers **overloaded** (deep mailboxes, weight casts shedding
+//!   beyond `shed_tolerance`) → the pool is over-driven relative to
+//!   the consumer → treated as down-pressure regardless of the
+//!   learner gauge.
+
+use std::collections::HashMap;
+
+use super::{ActorStatsSnapshot, WeightCastStats};
+
+/// Tuning knobs for one [`Autoscaler`].  Defaults are conservative:
+/// symmetric deadband, two-report confirmation, two-report cooldown,
+/// one worker per step.  See `docs/actor_runtime.md` ("Autoscaling")
+/// for how each knob shapes the response.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AutoscalerConfig {
+    /// Never scale below this many live workers (>= 1 — `scale_to(0)`
+    /// would end every stream).
+    pub min_workers: usize,
+    /// Never scale above this many live workers.
+    pub max_workers: usize,
+    /// Up-pressure threshold: learner interval utilization below this
+    /// means the samplers are starving it.
+    pub learner_idle_below: f64,
+    /// Down-pressure threshold: learner interval utilization above
+    /// this means the samplers are over-driving it.  Must be >
+    /// `learner_idle_below`; the gap is the deadband.
+    pub learner_busy_above: f64,
+    /// A sampler interval queue-depth high-water mark at or above this
+    /// counts as overload (down-pressure).
+    pub sampler_queue_pressure: usize,
+    /// Weight-cast sheds per interval beyond this count as overload
+    /// (down-pressure): the pool cannot even absorb its parameter
+    /// refreshes.
+    pub shed_tolerance: u64,
+    /// Reports to hold after an action before the next one.
+    pub cooldown_reports: u32,
+    /// Consecutive same-direction reports required before acting.
+    pub confirm_reports: u32,
+    /// Workers added/removed per action.
+    pub step: usize,
+}
+
+impl Default for AutoscalerConfig {
+    fn default() -> Self {
+        AutoscalerConfig {
+            min_workers: 1,
+            max_workers: 8,
+            learner_idle_below: 0.25,
+            learner_busy_above: 0.75,
+            sampler_queue_pressure: 16,
+            shed_tolerance: 4,
+            cooldown_reports: 2,
+            confirm_reports: 2,
+            step: 1,
+        }
+    }
+}
+
+impl AutoscalerConfig {
+    fn validate(&self) {
+        assert!(self.min_workers >= 1, "min_workers must be >= 1");
+        assert!(self.max_workers >= self.min_workers);
+        assert!(
+            self.learner_idle_below < self.learner_busy_above,
+            "thresholds must leave a deadband \
+             (idle_below {} >= busy_above {})",
+            self.learner_idle_below,
+            self.learner_busy_above
+        );
+        assert!(self.step >= 1);
+        assert!(self.confirm_reports >= 1);
+    }
+}
+
+/// One report interval's worth of control inputs, already reduced to
+/// interval deltas (see [`Autoscaler::signals`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AutoscaleSignals {
+    /// Learner busy fraction over the interval (0 when it did nothing).
+    pub learner_utilization: f64,
+    /// Aggregate sampler busy fraction over the interval.
+    pub sampler_utilization: f64,
+    /// Deepest sampler mailbox observed this interval (high-water if it
+    /// moved, current depth otherwise).
+    pub sampler_queue_hwm: usize,
+    /// Weight-cast sheds this interval (0 without a caster).
+    pub shed_delta: u64,
+    /// Live workers at sampling time — the base the target is computed
+    /// from.
+    pub live_workers: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleDirection {
+    Up,
+    Down,
+}
+
+/// An action the caller should apply (`WorkerSet::scale_to(target)`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ScaleDirective {
+    pub target: usize,
+    pub direction: ScaleDirection,
+}
+
+/// Lifetime decision counters, attached to `TrainResult::autoscale` and
+/// rendered by `pipeline_summary()`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AutoscaleStats {
+    /// Reports observed (one `decide` each).
+    pub reports: u64,
+    pub decisions_up: u64,
+    pub decisions_down: u64,
+    /// Reports with no directional pressure (inside the deadband, or
+    /// already at a pool bound).
+    pub held_deadband: u64,
+    /// Reports with pressure still inside the confirmation streak.
+    pub held_confirm: u64,
+    /// Reports with confirmed pressure held by the post-action cooldown.
+    pub held_cooldown: u64,
+    /// `scale_to` attempts the caller reported as failed
+    /// ([`Autoscaler::note_failed`]).
+    pub failed: u64,
+    /// The most recent directive's target (0 before the first one).
+    pub last_target: usize,
+}
+
+/// The feedback controller.  One instance per worker pool; not shared
+/// across pools (its interval tracking is keyed by actor id).
+pub struct Autoscaler {
+    cfg: AutoscalerConfig,
+    /// Last cumulative (busy_ns, idle_ns) per actor id, for interval
+    /// deltas.
+    prev_busy_idle: HashMap<u64, (u64, u64)>,
+    /// Last queue high-water mark per actor id, for the interval HWM
+    /// estimate.
+    prev_hwm: HashMap<u64, usize>,
+    prev_shed: u64,
+    reports_since_action: u32,
+    streak_dir: Option<ScaleDirection>,
+    streak: u32,
+    stats: AutoscaleStats,
+}
+
+fn utilization(busy: u64, idle: u64) -> f64 {
+    let total = busy + idle;
+    if total == 0 {
+        0.0
+    } else {
+        busy as f64 / total as f64
+    }
+}
+
+impl Autoscaler {
+    pub fn new(cfg: AutoscalerConfig) -> Self {
+        cfg.validate();
+        Autoscaler {
+            // First confirmed decision is never cooldown-held.
+            reports_since_action: cfg.cooldown_reports.saturating_add(1),
+            cfg,
+            prev_busy_idle: HashMap::new(),
+            prev_hwm: HashMap::new(),
+            prev_shed: 0,
+            streak_dir: None,
+            streak: 0,
+            stats: AutoscaleStats::default(),
+        }
+    }
+
+    pub fn config(&self) -> &AutoscalerConfig {
+        &self.cfg
+    }
+
+    pub fn stats(&self) -> AutoscaleStats {
+        self.stats
+    }
+
+    /// Record that the caller's `scale_to` for the last directive
+    /// failed (learner dead, registry full) — surfaced in
+    /// [`AutoscaleStats::failed`] instead of being silently swallowed.
+    pub fn note_failed(&mut self) {
+        self.stats.failed += 1;
+    }
+
+    /// Reduce a telemetry snapshot to this interval's control signals.
+    ///
+    /// Counters in [`ActorStatsSnapshot`] are cumulative since spawn;
+    /// the controller must react to the *recent* interval, so this
+    /// keeps the previous per-actor readings and diffs (a restarted
+    /// worker gets a fresh actor id, so its first interval is its
+    /// lifetime — correct).  `sampler_ids` selects which actors count
+    /// as the scaled pool; everything else in `stats` is ignored.
+    pub fn signals(
+        &mut self,
+        stats: &[ActorStatsSnapshot],
+        learner_id: u64,
+        sampler_ids: &[u64],
+        casts: Option<WeightCastStats>,
+        live_workers: usize,
+    ) -> AutoscaleSignals {
+        let mut learner_utilization = 0.0;
+        let mut sampler_busy = 0u64;
+        let mut sampler_idle = 0u64;
+        let mut sampler_queue_hwm = 0usize;
+        for s in stats {
+            if s.id != learner_id && !sampler_ids.contains(&s.id) {
+                continue;
+            }
+            let (prev_busy, prev_idle) = self
+                .prev_busy_idle
+                .insert(s.id, (s.busy_ns, s.idle_ns))
+                .unwrap_or((0, 0));
+            let busy = s.busy_ns.saturating_sub(prev_busy);
+            let idle = s.idle_ns.saturating_sub(prev_idle);
+            if s.id == learner_id {
+                learner_utilization = utilization(busy, idle);
+            } else {
+                sampler_busy += busy;
+                sampler_idle += idle;
+                // Interval HWM estimate: if the lifetime HWM moved,
+                // the interval saw that depth; otherwise the current
+                // depth bounds it.
+                let prev_hwm =
+                    self.prev_hwm.insert(s.id, s.queue_hwm).unwrap_or(0);
+                let interval_hwm = if s.queue_hwm > prev_hwm {
+                    s.queue_hwm
+                } else {
+                    s.queue_len
+                };
+                sampler_queue_hwm = sampler_queue_hwm.max(interval_hwm);
+            }
+        }
+        // Drop tracking for actors that disappeared (dead incarnations
+        // fall out of the registry snapshot eventually).
+        let live_now = |id: &u64| {
+            *id == learner_id || sampler_ids.contains(id)
+        };
+        self.prev_busy_idle.retain(|id, _| live_now(id));
+        self.prev_hwm.retain(|id, _| live_now(id));
+        let shed_delta = casts
+            .map(|c| {
+                let total = c.shed;
+                let delta = total.saturating_sub(self.prev_shed);
+                self.prev_shed = total;
+                delta
+            })
+            .unwrap_or(0);
+        AutoscaleSignals {
+            learner_utilization,
+            sampler_utilization: utilization(sampler_busy, sampler_idle),
+            sampler_queue_hwm,
+            shed_delta,
+            live_workers,
+        }
+    }
+
+    /// One control step: map this interval's signals to an optional
+    /// directive, applying deadband, confirmation streak, and cooldown
+    /// (in that order).  Pure and deterministic — the hysteresis tests
+    /// drive this directly with synthetic signals.
+    pub fn decide(&mut self, s: &AutoscaleSignals) -> Option<ScaleDirective> {
+        self.stats.reports += 1;
+        self.reports_since_action =
+            self.reports_since_action.saturating_add(1);
+        let overloaded = s.sampler_queue_hwm
+            >= self.cfg.sampler_queue_pressure
+            || s.shed_delta > self.cfg.shed_tolerance;
+        let direction = if (s.learner_utilization
+            > self.cfg.learner_busy_above
+            || overloaded)
+            && s.live_workers > self.cfg.min_workers
+        {
+            Some(ScaleDirection::Down)
+        } else if s.learner_utilization < self.cfg.learner_idle_below
+            && !overloaded
+            && s.live_workers < self.cfg.max_workers
+        {
+            Some(ScaleDirection::Up)
+        } else {
+            None
+        };
+        let Some(direction) = direction else {
+            self.streak_dir = None;
+            self.streak = 0;
+            self.stats.held_deadband += 1;
+            return None;
+        };
+        if self.streak_dir == Some(direction) {
+            self.streak += 1;
+        } else {
+            self.streak_dir = Some(direction);
+            self.streak = 1;
+        }
+        if self.streak < self.cfg.confirm_reports {
+            self.stats.held_confirm += 1;
+            return None;
+        }
+        if self.reports_since_action <= self.cfg.cooldown_reports {
+            self.stats.held_cooldown += 1;
+            return None;
+        }
+        self.reports_since_action = 0;
+        self.streak_dir = None;
+        self.streak = 0;
+        let target = match direction {
+            ScaleDirection::Up => {
+                self.stats.decisions_up += 1;
+                (s.live_workers + self.cfg.step).min(self.cfg.max_workers)
+            }
+            ScaleDirection::Down => {
+                self.stats.decisions_down += 1;
+                s.live_workers
+                    .saturating_sub(self.cfg.step)
+                    .max(self.cfg.min_workers)
+            }
+        };
+        self.stats.last_target = target;
+        Some(ScaleDirective { target, direction })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AutoscalerConfig {
+        AutoscalerConfig {
+            min_workers: 1,
+            max_workers: 4,
+            learner_idle_below: 0.3,
+            learner_busy_above: 0.7,
+            sampler_queue_pressure: 16,
+            shed_tolerance: 4,
+            cooldown_reports: 0,
+            confirm_reports: 1,
+            step: 1,
+        }
+    }
+
+    fn sig(learner_util: f64, live: usize) -> AutoscaleSignals {
+        AutoscaleSignals {
+            learner_utilization: learner_util,
+            sampler_utilization: 0.5,
+            sampler_queue_hwm: 0,
+            shed_delta: 0,
+            live_workers: live,
+        }
+    }
+
+    #[test]
+    fn idle_learner_grows_until_max_then_holds() {
+        let mut a = Autoscaler::new(cfg());
+        let mut live = 1;
+        for _ in 0..8 {
+            if let Some(d) = a.decide(&sig(0.05, live)) {
+                assert_eq!(d.direction, ScaleDirection::Up);
+                assert_eq!(d.target, live + 1);
+                live = d.target;
+            }
+        }
+        assert_eq!(live, 4, "pool must converge to max_workers");
+        // At the bound: no further directives, counted as held.
+        assert!(a.decide(&sig(0.05, live)).is_none());
+        let s = a.stats();
+        assert_eq!(s.decisions_up, 3);
+        assert_eq!(s.decisions_down, 0);
+        assert_eq!(s.last_target, 4);
+        assert!(s.held_deadband >= 1);
+    }
+
+    #[test]
+    fn saturated_learner_shrinks_to_min() {
+        let mut a = Autoscaler::new(cfg());
+        let mut live = 4;
+        for _ in 0..8 {
+            if let Some(d) = a.decide(&sig(0.95, live)) {
+                assert_eq!(d.direction, ScaleDirection::Down);
+                live = d.target;
+            }
+        }
+        assert_eq!(live, 1);
+        assert!(a.decide(&sig(0.95, live)).is_none(), "min bound holds");
+        assert_eq!(a.stats().decisions_down, 3);
+    }
+
+    #[test]
+    fn deadband_holds_between_thresholds() {
+        let mut a = Autoscaler::new(cfg());
+        for _ in 0..10 {
+            assert_eq!(a.decide(&sig(0.5, 2)), None);
+        }
+        let s = a.stats();
+        assert_eq!(s.held_deadband, 10);
+        assert_eq!(s.decisions_up + s.decisions_down, 0);
+    }
+
+    #[test]
+    fn oscillating_load_does_not_flap() {
+        // Alternating up/down pressure every report: with a 2-report
+        // confirmation streak the controller must never act — the
+        // no-flap guarantee the chaos soak leans on.
+        let mut a = Autoscaler::new(AutoscalerConfig {
+            confirm_reports: 2,
+            ..cfg()
+        });
+        for k in 0..40 {
+            let util = if k % 2 == 0 { 0.05 } else { 0.95 };
+            assert_eq!(
+                a.decide(&sig(util, 2)),
+                None,
+                "oscillation produced an action at report {k}"
+            );
+        }
+        let s = a.stats();
+        assert_eq!(s.decisions_up + s.decisions_down, 0);
+        assert_eq!(s.held_confirm, 40);
+    }
+
+    #[test]
+    fn cooldown_spaces_consecutive_actions() {
+        // Constant up-pressure with a 3-report cooldown: actions land
+        // on reports 1, 5, 9 (the first is never cooldown-held).
+        let mut a = Autoscaler::new(AutoscalerConfig {
+            cooldown_reports: 3,
+            max_workers: 8,
+            ..cfg()
+        });
+        let mut acted_at = Vec::new();
+        for k in 1..=9 {
+            if a.decide(&sig(0.05, 1)).is_some() {
+                acted_at.push(k);
+            }
+        }
+        assert_eq!(acted_at, vec![1, 5, 9]);
+        assert_eq!(a.stats().held_cooldown, 6);
+    }
+
+    #[test]
+    fn confirmation_streak_delays_first_action() {
+        let mut a = Autoscaler::new(AutoscalerConfig {
+            confirm_reports: 3,
+            ..cfg()
+        });
+        assert_eq!(a.decide(&sig(0.05, 1)), None);
+        assert_eq!(a.decide(&sig(0.05, 1)), None);
+        let d = a.decide(&sig(0.05, 1)).expect("3rd confirmation acts");
+        assert_eq!(d.target, 2);
+        // A deadband report resets the streak.
+        assert_eq!(a.decide(&sig(0.5, 2)), None);
+        assert_eq!(a.decide(&sig(0.05, 2)), None, "streak restarted");
+    }
+
+    #[test]
+    fn overload_forces_down_even_when_learner_is_idle() {
+        let mut a = Autoscaler::new(cfg());
+        // Deep sampler mailboxes: overload wins over the idle gauge.
+        let mut s = sig(0.05, 3);
+        s.sampler_queue_hwm = 20;
+        let d = a.decide(&s).expect("overload must act");
+        assert_eq!(d.direction, ScaleDirection::Down);
+        // Shed storms count the same way.
+        let mut a = Autoscaler::new(cfg());
+        let mut s = sig(0.05, 3);
+        s.shed_delta = 9;
+        assert_eq!(
+            a.decide(&s).unwrap().direction,
+            ScaleDirection::Down
+        );
+    }
+
+    #[test]
+    fn step_and_bounds_clamp_targets() {
+        let mut a = Autoscaler::new(AutoscalerConfig {
+            step: 3,
+            max_workers: 4,
+            ..cfg()
+        });
+        assert_eq!(a.decide(&sig(0.05, 3)).unwrap().target, 4, "clamped");
+        let mut a = Autoscaler::new(AutoscalerConfig { step: 5, ..cfg() });
+        assert_eq!(a.decide(&sig(0.95, 3)).unwrap().target, 1, "floored");
+    }
+
+    #[test]
+    fn signals_diff_cumulative_counters_per_interval() {
+        let mut a = Autoscaler::new(cfg());
+        let snap = |id: u64, busy: u64, idle: u64, hwm: usize, len: usize| {
+            ActorStatsSnapshot {
+                id,
+                busy_ns: busy,
+                idle_ns: idle,
+                queue_hwm: hwm,
+                queue_len: len,
+                ..Default::default()
+            }
+        };
+        // Interval 1: learner 25% busy lifetime, sampler hwm 5.
+        let s1 = a.signals(
+            &[snap(0, 25, 75, 0, 0), snap(1, 50, 50, 5, 0)],
+            0,
+            &[1],
+            None,
+            1,
+        );
+        assert!((s1.learner_utilization - 0.25).abs() < 1e-12);
+        assert_eq!(s1.sampler_queue_hwm, 5, "first interval = lifetime");
+        // Interval 2: learner went 100% busy in the delta (25+75 busy,
+        // idle unchanged); sampler hwm unmoved -> current depth (2)
+        // bounds the interval.
+        let s2 = a.signals(
+            &[snap(0, 100, 75, 0, 0), snap(1, 60, 90, 5, 2)],
+            0,
+            &[1],
+            None,
+            1,
+        );
+        assert!((s2.learner_utilization - 1.0).abs() < 1e-12);
+        assert_eq!(s2.sampler_queue_hwm, 2);
+        assert!((s2.sampler_utilization - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn signals_diff_shed_counters() {
+        let mut a = Autoscaler::new(cfg());
+        let casts = |shed: u64| WeightCastStats { shed, ..Default::default() };
+        let s = a.signals(&[], 0, &[], Some(casts(3)), 1);
+        assert_eq!(s.shed_delta, 3);
+        let s = a.signals(&[], 0, &[], Some(casts(10)), 1);
+        assert_eq!(s.shed_delta, 7);
+        let s = a.signals(&[], 0, &[], Some(casts(10)), 1);
+        assert_eq!(s.shed_delta, 0);
+    }
+
+    #[test]
+    fn note_failed_surfaces_in_stats() {
+        let mut a = Autoscaler::new(cfg());
+        a.note_failed();
+        a.note_failed();
+        assert_eq!(a.stats().failed, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "deadband")]
+    fn inverted_thresholds_are_rejected() {
+        Autoscaler::new(AutoscalerConfig {
+            learner_idle_below: 0.8,
+            learner_busy_above: 0.2,
+            ..AutoscalerConfig::default()
+        });
+    }
+}

@@ -35,11 +35,16 @@
 //! compiles its own executables — mirroring the paper's process model,
 //! where each Ray actor holds its own TF session.
 
+mod autoscaler;
 mod mailbox;
 mod queue;
 mod registry;
 mod telemetry;
 
+pub use autoscaler::{
+    Autoscaler, AutoscalerConfig, AutoscaleSignals, AutoscaleStats,
+    ScaleDirection, ScaleDirective,
+};
 pub use mailbox::{TryCastError, DEFAULT_MAILBOX_CAPACITY};
 pub use queue::{Completion, CompletionQueue};
 pub use registry::{
@@ -116,6 +121,35 @@ impl<R> ReplyCell<R> {
                 ReplyState::Done(_) => {
                     match std::mem::replace(&mut *st, ReplyState::Dropped) {
                         ReplyState::Done(r) => return Some(r),
+                        _ => unreachable!(),
+                    }
+                }
+            }
+        }
+    }
+
+    /// [`Self::wait_take`] with a deadline: `None` while still pending
+    /// after `timeout`; a condvar wait, so a fulfillment wakes the
+    /// caller immediately instead of at the next poll tick.
+    fn wait_take_timeout(
+        &self,
+        timeout: std::time::Duration,
+    ) -> Option<Option<R>> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.state.lock().unwrap();
+        loop {
+            match &*st {
+                ReplyState::Waiting => {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        return None;
+                    }
+                    st = self.cv.wait_timeout(st, deadline - now).unwrap().0;
+                }
+                ReplyState::Dropped => return Some(None),
+                ReplyState::Done(_) => {
+                    match std::mem::replace(&mut *st, ReplyState::Dropped) {
+                        ReplyState::Done(r) => return Some(Some(r)),
                         _ => unreachable!(),
                     }
                 }
@@ -204,6 +238,19 @@ impl<R> Reply<R> {
     /// `None` while pending; `Some(Err)` once the actor is known dead.
     pub fn try_recv(&self) -> Option<Result<R, ActorDied>> {
         self.cell.try_take().map(|opt| {
+            opt.ok_or_else(|| ActorDied { actor: self.actor.to_string() })
+        })
+    }
+
+    /// Block up to `timeout` for the reply; `None` while still pending.
+    /// A fulfillment wakes the waiter immediately (condvar), so a poll
+    /// loop built on this (the `WeightCaster` barrier) neither spins
+    /// nor adds a full tick of latency to the common prompt-apply case.
+    pub fn recv_timeout(
+        &self,
+        timeout: std::time::Duration,
+    ) -> Option<Result<R, ActorDied>> {
+        self.cell.wait_take_timeout(timeout).map(|opt| {
             opt.ok_or_else(|| ActorDied { actor: self.actor.to_string() })
         })
     }
@@ -321,6 +368,39 @@ impl<A: 'static> ActorHandle<A> {
         Reply {
             cell,
             actor: Arc::from(format!("{}#{}", self.name, self.id)),
+        }
+    }
+
+    /// Non-blocking [`Self::call_deferred`]: queue the call only if the
+    /// mailbox has room *right now* — the check and the enqueue are one
+    /// atomic ring operation, so the caller can never park in a
+    /// blocking send on a full mailbox (the `WeightCaster` barrier
+    /// relies on this).  `Err(Full)` means nothing was queued
+    /// (backpressure); `Err(Dead)` means the actor is poisoned.
+    pub fn try_call_deferred<R, F>(
+        &self,
+        f: F,
+    ) -> Result<Reply<R>, TryCastError>
+    where
+        R: Send + 'static,
+        F: FnOnce(&mut A) -> R + Send + 'static,
+    {
+        let cell = Arc::new(ReplyCell::new());
+        let guard = ArcReplyGuard { cell: cell.clone(), armed: true };
+        let env = Envelope::new(move |state: &mut A| {
+            let guard = guard;
+            let r = f(state);
+            guard.complete(r);
+        });
+        match self.shared.try_send(env) {
+            Ok(()) => Ok(Reply {
+                cell,
+                actor: Arc::from(format!("{}#{}", self.name, self.id)),
+            }),
+            Err((env, e)) => {
+                drop(env);
+                Err(e)
+            }
         }
     }
 

@@ -194,16 +194,32 @@ impl<T: Send + 'static> CompletionQueue<T> {
 
     /// Raise the queue bound by `extra` slots, waking producers parked
     /// on the old bound.  Used by the elastic gathers to extend the
-    /// in-flight budget when the shard registry grows mid-stream (the
-    /// bound never shrinks — tombstoned shards simply stop refilling
-    /// their credits).  Only meaningful for [`CompletionQueue::bounded`]
-    /// queues; per-tag credits are per *tag*, not total, and are
-    /// unaffected.
+    /// in-flight budget when the shard registry grows mid-stream.
+    /// Only meaningful for [`CompletionQueue::bounded`] queues; per-tag
+    /// credits are per *tag*, not total, and are unaffected.
     pub fn add_capacity(&self, extra: usize) {
         let mut st = self.inner.state.lock().unwrap();
         st.cap += extra;
         drop(st);
         self.inner.not_full.notify_all();
+    }
+
+    /// Lower the queue bound by `extra` slots (never below 1) — the
+    /// reverse of [`CompletionQueue::add_capacity`].  The elastic
+    /// gathers return a tombstoned shard's in-flight budget once its
+    /// last epoch completion drains, so repeated grow/retire cycles no
+    /// longer inflate the bound without limit.  Items already buffered
+    /// above the new bound are unaffected; producers simply block until
+    /// the queue drains back under it.
+    pub fn remove_capacity(&self, extra: usize) {
+        let mut st = self.inner.state.lock().unwrap();
+        st.cap = st.cap.saturating_sub(extra).max(1);
+    }
+
+    /// The current bound on buffered items (the in-flight budget the
+    /// elastic gathers grow and reclaim).
+    pub fn capacity(&self) -> usize {
+        self.inner.state.lock().unwrap().cap
     }
 
     /// Close the queue: pending and future pushes return `false` so
@@ -325,6 +341,42 @@ mod tests {
         drop(g_dead); // death notice for the same tag
         assert_eq!(q.pop(), Completion::Item { tag: 0, value: 41 });
         assert_eq!(q.pop(), Completion::Dropped { tag: 0 });
+    }
+
+    #[test]
+    fn capacity_grows_and_reclaims() {
+        let q: CompletionQueue<i32> = CompletionQueue::bounded(1);
+        assert_eq!(q.capacity(), 1);
+        q.add_capacity(2);
+        assert_eq!(q.capacity(), 3);
+        q.push(0, 1);
+        q.push(0, 2);
+        q.push(0, 3);
+        // Reclaim under buffered items: the bound drops, the items stay.
+        q.remove_capacity(2);
+        assert_eq!(q.capacity(), 1);
+        assert_eq!(q.len(), 3);
+        // A push at the reclaimed bound blocks again until drained under
+        // it — the grow/retire cycle restored the original backpressure.
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || q2.push(0, 4));
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        assert!(!t.is_finished(), "push ignored the reclaimed bound");
+        for want in [1, 2, 3] {
+            assert_eq!(q.pop(), Completion::Item { tag: 0, value: want });
+        }
+        assert!(t.join().unwrap());
+        assert_eq!(q.pop(), Completion::Item { tag: 0, value: 4 });
+    }
+
+    #[test]
+    fn remove_capacity_floors_at_one() {
+        let q: CompletionQueue<i32> = CompletionQueue::bounded(2);
+        q.remove_capacity(100);
+        assert_eq!(q.capacity(), 1);
+        // Still a working single-slot queue.
+        q.push(0, 9);
+        assert_eq!(q.pop(), Completion::Item { tag: 0, value: 9 });
     }
 
     #[test]

@@ -43,7 +43,7 @@
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-use super::ActorHandle;
+use super::{ActorHandle, Reply};
 
 // ---------------------------------------------------------------------
 // ShardRegistry
@@ -680,35 +680,113 @@ impl<A: 'static> WeightCaster<A> {
         v
     }
 
-    /// Broadcast and **block until every live recipient has applied**
-    /// the published version (the `sync_weights` barrier).  Dead and
-    /// tombstoned recipients are skipped; shedding does not apply —
-    /// this path is the explicit synchronization point, so it queues a
-    /// dedicated apply per recipient and waits on the replies.
+    /// Broadcast and **block until every waited-on live recipient has
+    /// applied** the published version (the `sync_weights` barrier).
+    /// Dead and tombstoned recipients are skipped at dispatch, and —
+    /// the part the first version got wrong — the **wait set is not
+    /// frozen at entry**: a recipient that is killed, removed
+    /// (`ShardRegistry::retire`), or replaced (`publish`) *mid-barrier*
+    /// is dropped from the wait set instead of wedging `sync_weights`
+    /// forever behind a worker that will never drain its mailbox.
+    /// Likewise a recipient whose mailbox is already **full** at
+    /// dispatch gets the coalescing non-blocking apply (and no wait)
+    /// rather than parking the broadcaster in a blocking send.
+    ///
+    /// Applies are versioned and idempotent, so an apply that still
+    /// executes after its recipient left the wait set (e.g. a retired
+    /// worker draining its mailbox on the way out) is harmless.
     pub fn broadcast_sync(&self, weights: Arc<[f32]>) -> u64 {
+        struct Pending<A: 'static> {
+            idx: usize,
+            epoch: u64,
+            handle: ActorHandle<A>,
+            reply: Reply<()>,
+        }
         let v = self.publish_version(weights);
-        let replies: Vec<_> = (0..self.registry.len())
-            .filter_map(|idx| {
-                let (handle, epoch) = self.registry.get_live(idx)?;
-                let cells = self.lane_cells(idx, epoch);
-                let applied = cells.applied.clone();
-                let slot = self.slot.clone();
-                let apply = self.apply.clone();
-                Some(handle.call_deferred(move |state: &mut A| {
-                    let (sv, w) = {
-                        let s = slot.lock().unwrap();
-                        (s.0, s.1.clone())
-                    };
-                    if applied.fetch_max(sv, Ordering::SeqCst) < sv {
-                        apply(state, &w);
+        let mut pending: Vec<Pending<A>> = Vec::new();
+        for idx in 0..self.registry.len() {
+            let Some((handle, epoch)) = self.registry.get_live(idx) else {
+                continue; // tombstoned
+            };
+            if handle.is_poisoned() {
+                continue; // dead: skipped, like sync_weights always did
+            }
+            let cells = self.lane_cells(idx, epoch);
+            let applied = cells.applied.clone();
+            let slot = self.slot.clone();
+            let apply = self.apply.clone();
+            // Non-blocking enqueue: the room check and the ring write
+            // are one atomic operation, so a producer racing us can
+            // never leave the barrier parked in a blocking send that
+            // mid-barrier removal cannot unwedge.
+            match handle.try_call_deferred(move |state: &mut A| {
+                let (sv, w) = {
+                    let s = slot.lock().unwrap();
+                    (s.0, s.1.clone())
+                };
+                if applied.fetch_max(sv, Ordering::SeqCst) < sv {
+                    apply(state, &w);
+                }
+            }) {
+                Ok(reply) => {
+                    pending.push(Pending { idx, epoch, handle, reply });
+                }
+                Err(_) => {
+                    // Full mailbox (or a just-died recipient): fall
+                    // back to the coalescing one-pending-apply path
+                    // (under the lane lock, same discipline as
+                    // `broadcast`) and do not wait on this recipient —
+                    // it catches up when it drains.
+                    let lane = self.lane(idx);
+                    let mut cells = lane.cells.lock().unwrap();
+                    self.refresh_cells(&mut cells, &lane, epoch);
+                    if cells.pending.swap(true, Ordering::SeqCst) {
+                        self.coalesced.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        let body = self.apply_closure(&cells);
+                        match handle.try_cast(body) {
+                            Ok(()) => {
+                                self.enqueued
+                                    .fetch_add(1, Ordering::Relaxed);
+                            }
+                            Err(_) => {
+                                cells
+                                    .pending
+                                    .store(false, Ordering::SeqCst);
+                                self.shed.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
                     }
-                }))
-            })
-            .collect();
-        for r in replies {
-            // Err = recipient died mid-sync; skipped, like sync_weights
-            // always skipped dead remotes.
-            let _ = r.recv();
+                }
+            }
+        }
+        // Sweep the wait set instead of blocking on each reply in turn:
+        // membership can move under the barrier, and a removed slot's
+        // apply may legitimately never run (its actor exits with the
+        // envelope still queued behind a stalled message).  Each pass
+        // parks (condvar, 1ms bound) on the first pending reply, so a
+        // prompt apply wakes the barrier immediately — no spin, no
+        // poll-tick latency on the healthy path.
+        while !pending.is_empty() {
+            let _ = pending[0]
+                .reply
+                .recv_timeout(std::time::Duration::from_millis(1));
+            pending.retain(|p| {
+                if p.reply.try_recv().is_some() {
+                    return false; // applied (or resolved via death guard)
+                }
+                if p.handle.is_poisoned() {
+                    return false; // killed mid-barrier
+                }
+                match self.registry.get_live(p.idx) {
+                    // Removed mid-barrier: stop waiting on it.
+                    None => false,
+                    // Replaced mid-barrier: the old incarnation's apply
+                    // no longer gates anything.
+                    Some((_, ep)) if ep != p.epoch => false,
+                    Some(_) => true,
+                }
+            });
         }
         v
     }
@@ -1075,6 +1153,86 @@ mod tests {
             vec![2.0],
             "replacement did not receive the post-publish broadcast"
         );
+    }
+
+    #[test]
+    fn broadcast_sync_survives_removal_mid_barrier() {
+        // Recipient 0 is parked inside a gate message that blocks on a
+        // channel, so the barrier's apply queues behind it and cannot
+        // run.  Retiring the slot mid-barrier must release
+        // `broadcast_sync`: the gate only opens AFTER the barrier
+        // returns, so the old frozen-wait-set behavior deadlocks here
+        // instead of passing by luck.
+        let reg = ShardRegistry::new(group(2));
+        let caster = Arc::new(WeightCaster::new(
+            reg.clone(),
+            DEFAULT_CAST_WATERMARK,
+            |w: &mut W, p: &[f32]| {
+                w.weights.clear();
+                w.weights.extend_from_slice(p);
+            },
+        ));
+        let (gate_tx, gate_rx) = std::sync::mpsc::channel::<()>();
+        let (h0, _) = reg.get(0);
+        let parked = h0.call_deferred(move |_| {
+            let _ = gate_rx.recv();
+        });
+        // Wait until the actor has dequeued the gate (it is now parked
+        // inside it) so the barrier apply lands *behind* it.
+        while h0.queue_len() > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        let c2 = caster.clone();
+        let barrier =
+            std::thread::spawn(move || c2.broadcast_sync(vec![4.0].into()));
+        // Let the barrier dispatch, then remove the wedged slot.
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        reg.retire(0);
+        let v = barrier.join().expect("barrier wedged on a removed worker");
+        assert_eq!(v, 1);
+        // The surviving recipient applied synchronously.
+        let (h1, _) = reg.get(1);
+        assert_eq!(h1.call(|w| w.weights.clone()).unwrap(), vec![4.0]);
+        // Open the gate; the retired actor drains and exits (its late,
+        // idempotent apply is harmless).
+        gate_tx.send(()).unwrap();
+        parked.recv().unwrap();
+    }
+
+    #[test]
+    fn broadcast_sync_skips_full_mailboxes_instead_of_blocking() {
+        // A recipient with a tiny, already-full mailbox whose actor is
+        // parked: broadcast_sync must fall back to the non-blocking
+        // coalescing path for it (no barrier wait), not park the
+        // broadcaster inside a blocking send.
+        let slow = ActorHandle::spawn_with_capacity("reg-sync-full", 2, || {
+            W { weights: vec![], applies: 0 }
+        });
+        let reg = ShardRegistry::new(vec![slow.clone()]);
+        let caster = WeightCaster::new(
+            reg,
+            DEFAULT_CAST_WATERMARK,
+            |w: &mut W, p: &[f32]| {
+                w.weights.clear();
+                w.weights.extend_from_slice(p);
+            },
+        );
+        let gate = slow.call_deferred(|_| {
+            std::thread::sleep(std::time::Duration::from_millis(120));
+        });
+        while slow.queue_len() > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        while slow.try_cast(|_| {}).is_ok() {}
+        let start = std::time::Instant::now();
+        caster.broadcast_sync(vec![5.0].into());
+        assert!(
+            start.elapsed() < std::time::Duration::from_millis(80),
+            "broadcast_sync blocked on a full mailbox"
+        );
+        let s = caster.stats();
+        assert_eq!(s.coalesced + s.shed, 1, "{s:?}");
+        gate.recv().unwrap();
     }
 
     #[test]

@@ -21,7 +21,10 @@ pub use apex::{apex_plan, ApexConfig};
 pub use dqn::{dqn_plan, DqnConfig};
 pub use impala::{assemble_time_major, assemble_time_major_into, impala_plan};
 pub use maml::{maml_plan, MamlConfig};
-pub use multi_agent::{ma_workers, multi_agent_plan, MultiAgentConfig};
+pub use multi_agent::{
+    ma_sync_protocol, ma_worker_set, multi_agent_plan, multi_agent_plan_on,
+    MultiAgentConfig,
+};
 pub use ppo::{ppo_plan, ppo_plan_with_epochs};
 
 use std::path::PathBuf;

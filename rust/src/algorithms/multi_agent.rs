@@ -14,22 +14,31 @@
 //!                           .for_each(UpdateTargetNetwork))
 //! return Union(ppo_op, dqn_op)
 //! ```
+//!
+//! The multi-agent workers live on a full [`WorkerSet`] (the
+//! `MultiAgentRolloutWorker` instantiation of the generic elastic
+//! owner): one shared shard registry, a versioned [`WeightCaster`] per
+//! policy registered on the set, and a spawn-and-sync protocol that
+//! pushes **every** policy's learner weights into a fresh worker before
+//! it is published.  Multi-agent plans therefore share the whole scale
+//! machinery — `restart_dead` rejoin, `scale_to` under live traffic,
+//! and the autoscaling controller — with the single-agent path.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use crate::actor::{
-    spawn_group, ActorHandle, ShardRegistry, WeightCaster,
-    DEFAULT_CAST_WATERMARK,
+    ActorHandle, Autoscaler, WeightCaster, DEFAULT_CAST_WATERMARK,
 };
 use crate::env::MultiAgentCartPole;
-use crate::iter::{concurrently, LocalIter, ParIter, UnionMode};
+use crate::iter::{concurrently, LocalIter, UnionMode};
 use crate::metrics::{MetricsHub, TrainResult};
 use crate::ops::{
-    concat_batches, create_replay_actors, replay, select_policy,
-    store_to_replay_buffer, TrainItem,
+    concat_batches, create_replay_actors, parallel_ma_rollouts_from, replay,
+    select_policy, store_to_replay_buffer, TrainItem,
 };
 use crate::policy::{DqnPolicy, PgLossKind, PgPolicy, Policy};
-use crate::rollout::MultiAgentRolloutWorker;
+use crate::rollout::{MultiAgentRolloutWorker, WorkerMetrics, WorkerSet};
 
 use super::dqn::DqnConfig;
 use super::TrainerConfig;
@@ -55,15 +64,55 @@ impl Default for MultiAgentConfig {
     }
 }
 
-type MaWorker = ActorHandle<MultiAgentRolloutWorker>;
+/// The per-policy spawn-and-sync protocol every multi-agent
+/// [`WorkerSet`] runs on `restart_dead`/`add_worker`: fetch **each**
+/// policy's learner weights and cast them into the fresh worker's
+/// mailbox before it is published (FIFO per mailbox, so the applies
+/// land before any gather dispatch).  Public so tests exercising
+/// Dummy-backed multi-agent sets drive the *shipped* protocol instead
+/// of a drifting copy.
+pub fn ma_sync_protocol() -> impl Fn(
+    &ActorHandle<MultiAgentRolloutWorker>,
+    &ActorHandle<MultiAgentRolloutWorker>,
+) -> crate::util::error::Result<()>
+       + Send
+       + Sync
+       + 'static {
+    |local, fresh| {
+        // One round-trip for the whole per-policy snapshot (atomic
+        // across policies, and the factory lock held by the caller
+        // isn't stretched over P learner-mailbox waits).
+        let snapshot: Vec<(String, Vec<f32>)> = local
+            .call(|w| {
+                w.policies
+                    .iter()
+                    .map(|(pid, p)| (pid.clone(), p.get_weights()))
+                    .collect()
+            })
+            .map_err(|e| {
+                crate::util::error::Error::msg(format!(
+                    "learner is dead ({e})"
+                ))
+            })?;
+        for (pid, weights) in snapshot {
+            let weights: Arc<[f32]> = weights.into();
+            fresh.cast(move |w| w.set_weights(&pid, &weights));
+        }
+        Ok(())
+    }
+}
 
-/// Spawn multi-agent workers; index 0 is the learner (local).
-pub fn ma_workers(
+/// Build the multi-agent [`WorkerSet`]: 1 local (learner) +
+/// `config.num_workers` remote workers, with a sync protocol that
+/// fetches and pushes **each** policy's weights (so a worker added by
+/// `scale_to`/`restart_dead` starts with every policy's learner state,
+/// not just one).
+pub fn ma_worker_set(
     config: &TrainerConfig,
     ma: &MultiAgentConfig,
     include_dqn: bool,
     include_ppo: bool,
-) -> (MaWorker, Vec<MaWorker>) {
+) -> WorkerSet<MultiAgentRolloutWorker> {
     let make = {
         let config = config.clone();
         let ma = ma.clone();
@@ -121,43 +170,58 @@ pub fn ma_workers(
             })
         }
     };
-    let local = {
-        let init = make(0);
-        ActorHandle::spawn("ma_local", move || init())
-    };
-    let remotes = spawn_group("ma_worker", config.num_workers, |i| make(i + 1));
-    (local, remotes)
+    WorkerSet::with_protocol(
+        "ma_local",
+        "ma_worker",
+        config.num_workers,
+        make,
+        ma_sync_protocol(),
+    )
 }
 
-/// The composed two-trainer plan (Fig. 11b).
+/// The composed two-trainer plan (Fig. 11b) over a fresh worker set.
+/// To scale (or autoscale) the set mid-plan, build it with
+/// [`ma_worker_set`] and use [`multi_agent_plan_on`] so you keep the
+/// set handle.
 pub fn multi_agent_plan(
     config: &TrainerConfig,
     ma: &MultiAgentConfig,
 ) -> LocalIter<TrainResult> {
-    let (local, remotes) = ma_workers(config, ma, true, true);
-    // One shared shard registry for both subflows, plus a versioned
-    // weight caster per policy (each policy's broadcast coalesces and
-    // sheds independently — a worker drowning in DQN syncs still gets
-    // the newest PPO parameters in one apply).
-    let registry = ShardRegistry::new(remotes.clone());
-    let ppo_caster = WeightCaster::new(
-        registry.clone(),
+    let set = ma_worker_set(config, ma, true, true);
+    multi_agent_plan_on(&set, config, ma)
+}
+
+/// [`multi_agent_plan`] over a caller-owned [`WorkerSet`] (built with
+/// [`ma_worker_set`]).  Registers one [`WeightCaster`] per policy on
+/// the set (each policy's broadcast coalesces and sheds independently —
+/// a worker drowning in DQN syncs still gets the newest PPO parameters
+/// in one apply), so workers added by `scale_to` pick up both lanes.
+/// Call once per set: each call registers its own casters.
+pub fn multi_agent_plan_on(
+    set: &WorkerSet<MultiAgentRolloutWorker>,
+    config: &TrainerConfig,
+    ma: &MultiAgentConfig,
+) -> LocalIter<TrainResult> {
+    let local = set.local.clone();
+    let ppo_caster = Arc::new(WeightCaster::new(
+        set.registry().clone(),
         DEFAULT_CAST_WATERMARK,
         |w: &mut MultiAgentRolloutWorker, p: &[f32]| {
             w.set_weights("ppo", p)
         },
-    );
-    let dqn_caster = WeightCaster::new(
-        registry.clone(),
+    ));
+    let dqn_caster = Arc::new(WeightCaster::new(
+        set.registry().clone(),
         DEFAULT_CAST_WATERMARK,
         |w: &mut MultiAgentRolloutWorker, p: &[f32]| {
             w.set_weights("dqn", p)
         },
-    );
+    ));
+    set.register_caster(ppo_caster.clone());
+    set.register_caster(dqn_caster.clone());
 
     let rollouts =
-        ParIter::from_registry(registry, |w| Some(w.sample()))
-            .gather_async(config.num_async);
+        parallel_ma_rollouts_from(set).gather_async(config.num_async);
     let (r_ppo, r_dqn) = rollouts.duplicate();
 
     // --- PPO subflow (Fig. 12a) ---
@@ -217,7 +281,7 @@ pub fn multi_agent_plan(
         since_target += steps;
         if since_sync >= sync_every {
             since_sync = 0;
-            let weights: std::sync::Arc<[f32]> = dqn_local
+            let weights: Arc<[f32]> = dqn_local
                 .call(|w| w.get_weights("dqn"))
                 .expect("DQN learner (local worker) actor died")
                 .into();
@@ -242,7 +306,7 @@ pub fn multi_agent_plan(
         None,
     );
 
-    ma_metrics_reporting(merged, local, remotes)
+    ma_metrics_reporting(merged, set, None)
 }
 
 fn prefix_stats(
@@ -255,17 +319,28 @@ fn prefix_stats(
         .collect()
 }
 
-/// Metrics reporting over multi-agent workers — the same reporting
-/// tail as `standard_metrics_reporting` (shared via
+/// Metrics reporting over a multi-agent [`WorkerSet`] — the same
+/// reporting tail as `standard_metrics_reporting` (shared via
 /// `ops::drain_and_snapshot`, so dead-worker handling and telemetry
 /// attachment cannot drift), minus the items-per-report batching.
+/// Workers are resolved through the set's shard registry at every
+/// report, so restarted/added workers are drained from the first report
+/// after they join.  Pass an [`Autoscaler`] to close the elasticity
+/// loop (the controller's directives drive `WorkerSet::scale_to`; no
+/// weight-cast shed signal is fed, since multi-agent sets broadcast
+/// through per-policy casters).
 pub fn ma_metrics_reporting(
     inner: LocalIter<TrainItem>,
-    local: MaWorker,
-    remotes: Vec<MaWorker>,
+    set: &WorkerSet<MultiAgentRolloutWorker>,
+    autoscaler: Option<Autoscaler>,
 ) -> LocalIter<TrainResult> {
     let mut inner = inner;
     let mut hub = MetricsHub::new(100);
+    let local = set.local.clone();
+    let registry = set.registry().clone();
+    let scale = set.scale_counters();
+    let set = set.clone();
+    let mut autoscaler = autoscaler;
     LocalIter::from_fn(move || {
         let item = inner.next()?;
         hub.num_env_steps_trained += item.steps_trained as u64;
@@ -273,11 +348,25 @@ pub fn ma_metrics_reporting(
         for (k, v) in item.stats {
             hub.record_learner_stat(&k, v);
         }
-        Some(crate::ops::drain_and_snapshot(&mut hub, &local, &remotes, |w| {
-            let eps = w.pop_episodes();
-            let steps = w.num_steps_sampled;
-            w.num_steps_sampled = 0;
-            (eps, steps)
-        }))
+        let handles = registry.handles();
+        let mut snap = crate::ops::drain_and_snapshot(
+            &mut hub,
+            &local,
+            &handles,
+            |w| w.drain_metrics(),
+        );
+        if let Some(a) = autoscaler.as_mut() {
+            // snap.weight_casts is None on this path (per-policy
+            // casters), so the controller's shed gauge stays idle.
+            crate::ops::drive_autoscaler(
+                a,
+                &mut snap,
+                &set,
+                local.id(),
+                &handles,
+            );
+        }
+        snap.scale = Some(scale.stats(registry.num_live(), registry.len()));
+        Some(snap)
     })
 }

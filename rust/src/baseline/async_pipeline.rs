@@ -64,13 +64,13 @@ impl AsyncPipelineOptimizer {
     }
 
     fn launch(&mut self, worker_idx: usize) {
+        // Tombstoned slot (scale-down): nothing to relaunch, no panic.
+        let Some(worker) = self.workers.remote(worker_idx) else {
+            return;
+        };
         let tag = self.next_tag;
         self.next_tag += 1;
-        self.workers.remote(worker_idx).call_into(
-            tag,
-            &self.samples,
-            |w| w.sample(),
-        );
+        worker.call_into(tag, &self.samples, |w| w.sample());
         self.tags.insert(tag, worker_idx);
     }
 
@@ -82,8 +82,11 @@ impl AsyncPipelineOptimizer {
             .expect("learner died")
             .into();
         for idx in 0..self.workers.num_remotes() {
+            let Some(worker) = self.workers.remote(idx) else {
+                continue; // tombstoned slot
+            };
             let w = std::sync::Arc::clone(&weights);
-            self.workers.remote(idx).cast(move |state| state.set_weights(&w));
+            worker.cast(move |state| state.set_weights(&w));
             for _ in 0..self.queue_depth {
                 self.launch(idx);
             }
@@ -120,9 +123,9 @@ impl AsyncPipelineOptimizer {
         self.tb_scratch = tb_back;
         self.num_steps_trained += steps;
 
-        self.workers
-            .remote(worker_idx)
-            .cast(move |w| w.set_weights(&weights));
+        if let Some(worker) = self.workers.remote(worker_idx) {
+            worker.cast(move |w| w.set_weights(&weights));
+        }
         self.launch(worker_idx);
 
         self.hub.num_env_steps_trained = self.num_steps_trained as u64;

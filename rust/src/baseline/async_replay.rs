@@ -104,13 +104,14 @@ impl AsyncReplayOptimizer {
     }
 
     fn launch_sample_task(&mut self, worker_idx: usize) {
+        // A slot tombstoned by a scale-down has nothing to relaunch —
+        // skipping it must not crash the optimizer.
+        let Some(worker) = self.workers.remote(worker_idx) else {
+            return;
+        };
         let tag = self.next_tag;
         self.next_tag += 1;
-        self.workers.remote(worker_idx).call_into(
-            tag,
-            &self.samples,
-            |w| w.sample(),
-        );
+        worker.call_into(tag, &self.samples, |w| w.sample());
         self.sample_tags.insert(tag, worker_idx);
     }
 
@@ -141,10 +142,11 @@ impl AsyncReplayOptimizer {
             .expect("learner died")
             .into();
         for worker_idx in 0..self.workers.num_remotes() {
+            let Some(worker) = self.workers.remote(worker_idx) else {
+                continue; // tombstoned slot
+            };
             let w = std::sync::Arc::clone(&weights);
-            self.workers
-                .remote(worker_idx)
-                .cast(move |state| state.set_weights(&w));
+            worker.cast(move |state| state.set_weights(&w));
             self.steps_since_update.insert(worker_idx, 0);
             for _ in 0..SAMPLE_QUEUE_DEPTH {
                 self.launch_sample_task(worker_idx);
@@ -197,9 +199,9 @@ impl AsyncReplayOptimizer {
                             .expect("learner died")
                     });
                     self.timers.insert("put_weights", put_timer);
-                    self.workers
-                        .remote(worker_idx)
-                        .cast(move |w| w.set_weights(&weights));
+                    if let Some(worker) = self.workers.remote(worker_idx) {
+                        worker.cast(move |w| w.set_weights(&weights));
+                    }
                     self.num_weight_syncs += 1;
                 }
                 // Kick off another sample request.

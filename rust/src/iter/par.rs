@@ -176,6 +176,15 @@ impl<W: 'static, T: Send + 'static> ParIter<W, T> {
             mode: Vec<ShardMode>,
             /// Epoch each shard's current submissions carry.
             epoch: Vec<u64>,
+            /// Per-shard completions still expected (any epoch) — the
+            /// drain gauge behind capacity reclaim.
+            inflight: Vec<usize>,
+            /// True while the shard's `num_async` slice of the queue
+            /// bound is held.  Granted on (re)prime, released once a
+            /// tombstoned shard's last in-flight completion drains —
+            /// without the release, repeated grow/retire cycles would
+            /// inflate the bound without limit.
+            cap_held: Vec<bool>,
             /// Registry version last scanned for replacements.
             reg_version: u64,
             started: bool,
@@ -198,12 +207,13 @@ impl<W: 'static, T: Send + 'static> ParIter<W, T> {
                     move |w| plan(w),
                 );
                 self.outstanding += 1;
+                self.inflight[idx] += 1;
             }
 
             /// [`Self::submit_to`] the registry's current incarnation.
             /// `false` (nothing submitted, shard parked as retired) if
             /// the slot was tombstoned since the caller looked.
-            fn submit(&mut self, idx: usize) -> bool {
+            fn submit(&mut self, idx: usize, num_async: usize) -> bool {
                 match self.registry.get_live(idx) {
                     Some((handle, ep)) => {
                         self.submit_to(idx, &handle, ep);
@@ -211,19 +221,38 @@ impl<W: 'static, T: Send + 'static> ParIter<W, T> {
                     }
                     None => {
                         self.mode[idx] = ShardMode::Retired;
+                        self.maybe_release(idx, num_async);
                         false
                     }
                 }
             }
 
-            /// Start (or restart) streaming shard `idx`: mark it active
-            /// and prime its full `num_async` pipeline.
+            /// Start (or restart) streaming shard `idx`: mark it
+            /// active, re-grant its slice of the queue bound if it was
+            /// reclaimed, and prime its full `num_async` pipeline.
             fn prime(&mut self, idx: usize, num_async: usize) {
                 self.mode[idx] = ShardMode::Active;
+                if !self.cap_held[idx] {
+                    self.cap_held[idx] = true;
+                    self.queue.add_capacity(num_async);
+                }
                 for _ in 0..num_async {
-                    if !self.submit(idx) {
+                    if !self.submit(idx, num_async) {
                         break;
                     }
+                }
+            }
+
+            /// Release a tombstoned shard's slice of the queue bound
+            /// once its last in-flight completion has drained (a later
+            /// `prime` re-grants it).
+            fn maybe_release(&mut self, idx: usize, num_async: usize) {
+                if self.mode[idx] == ShardMode::Retired
+                    && self.inflight[idx] == 0
+                    && self.cap_held[idx]
+                {
+                    self.cap_held[idx] = false;
+                    self.queue.remove_capacity(num_async);
                 }
             }
 
@@ -244,11 +273,20 @@ impl<W: 'static, T: Send + 'static> ParIter<W, T> {
                         ShardMode::Active => {
                             if self.registry.is_retired(idx) {
                                 self.mode[idx] = ShardMode::Retired;
+                                self.maybe_release(idx, num_async);
                             }
                         }
                         ShardMode::Dead | ShardMode::Retired => {
                             if self.registry.epoch(idx) > self.epoch[idx] {
                                 self.prime(idx, num_async);
+                            } else if self.mode[idx] == ShardMode::Dead
+                                && self.registry.is_retired(idx)
+                            {
+                                // A dead shard tombstoned afterwards:
+                                // it will never be restarted in place,
+                                // so its budget is reclaimable too.
+                                self.mode[idx] = ShardMode::Retired;
+                                self.maybe_release(idx, num_async);
                             }
                         }
                         ShardMode::Exhausted => {}
@@ -259,7 +297,8 @@ impl<W: 'static, T: Send + 'static> ParIter<W, T> {
                     let idx = self.mode.len();
                     self.mode.push(ShardMode::Dead); // prime() activates
                     self.epoch.push(0);
-                    self.queue.add_capacity(num_async);
+                    self.inflight.push(0);
+                    self.cap_held.push(false); // prime() grants the slice
                     self.prime(idx, num_async);
                 }
             }
@@ -279,6 +318,9 @@ impl<W: 'static, T: Send + 'static> ParIter<W, T> {
             outstanding: 0,
             mode: vec![ShardMode::Active; n],
             epoch: vec![0; n],
+            inflight: vec![0; n],
+            // The initial bound already covers the starting shards.
+            cap_held: vec![true; n],
             started: false,
             finished: false,
         };
@@ -306,6 +348,7 @@ impl<W: 'static, T: Send + 'static> ParIter<W, T> {
                 let completion = st.queue.pop();
                 st.outstanding -= 1;
                 let (idx, ep) = decode_tag(completion.tag());
+                st.inflight[idx] -= 1;
                 let current =
                     ep == st.epoch[idx] && st.mode[idx] == ShardMode::Active;
                 match completion {
@@ -369,6 +412,10 @@ impl<W: 'static, T: Send + 'static> ParIter<W, T> {
                         }
                     }
                 }
+                // Every completion path above may have been shard
+                // `idx`'s last in-flight one: reclaim its slice of the
+                // queue bound if it is tombstoned and drained.
+                st.maybe_release(idx, num_async);
             }
         })
     }
@@ -393,11 +440,16 @@ impl<W: 'static, T: Send + 'static> ParIter<W, T> {
     pub fn gather_sync(self) -> LocalIter<Vec<T>> {
         let registry = self.registry;
         let plan = self.plan;
-        let mut cap = registry.len().max(1);
         let queue: CompletionQueue<Option<T>> =
-            CompletionQueue::bounded(cap);
+            CompletionQueue::bounded(registry.len().max(1));
         let mut mode = vec![ShardMode::Active; registry.len()];
         let mut epoch = vec![0u64; mode.len()];
+        // One queue slot held per admitted shard; a tombstoned shard's
+        // slot is reclaimed at the next round boundary (rounds drain
+        // fully, so nothing of its can be in flight there) and
+        // re-granted if the slot is revived — grow/retire cycles do not
+        // inflate the round bound without limit.
+        let mut cap_held = vec![true; mode.len()];
         let mut done = false;
         LocalIter::from_fn(move || {
             if done {
@@ -410,10 +462,7 @@ impl<W: 'static, T: Send + 'static> ParIter<W, T> {
             while mode.len() < registry.len() {
                 mode.push(ShardMode::Active);
                 epoch.push(0);
-                if mode.len() > cap {
-                    queue.add_capacity(1);
-                    cap += 1;
-                }
+                cap_held.push(false); // granted below
             }
             for i in 0..mode.len() {
                 match mode[i] {
@@ -425,9 +474,29 @@ impl<W: 'static, T: Send + 'static> ParIter<W, T> {
                     ShardMode::Dead | ShardMode::Retired => {
                         if registry.epoch(i) > epoch[i] {
                             mode[i] = ShardMode::Active;
+                        } else if mode[i] == ShardMode::Dead
+                            && registry.is_retired(i)
+                        {
+                            // Dead-then-tombstoned: reclaimable below.
+                            mode[i] = ShardMode::Retired;
                         }
                     }
                     ShardMode::Exhausted => {}
+                }
+            }
+            for i in 0..mode.len() {
+                match mode[i] {
+                    ShardMode::Active if !cap_held[i] => {
+                        cap_held[i] = true;
+                        queue.add_capacity(1);
+                    }
+                    ShardMode::Retired if cap_held[i] => {
+                        cap_held[i] = false;
+                        queue.remove_capacity(1);
+                    }
+                    // Dead shards keep their slot: they may be
+                    // republished, and their budget is already idle.
+                    _ => {}
                 }
             }
             let n = mode.len();
@@ -903,6 +972,68 @@ mod tests {
             }
         }
         assert!(rejoined > 0, "revived slot never rejoined");
+    }
+
+    #[test]
+    fn grow_retire_cycles_keep_streaming() {
+        // Raw-registry grow/retire cycles (fresh slot per cycle, no
+        // WorkerSet tombstone reuse): each retire must hand the
+        // shard's queue budget back once its in-flight completions
+        // drain.  An over-release starves the survivor (the gather
+        // deadlocks — caught by the harness timeout); an under-release
+        // is the unbounded-inflation bug this guards against.
+        let ws = workers(1);
+        let registry = ShardRegistry::new(ws);
+        let mut it = ParIter::from_registry(registry.clone(), |w| {
+            w.counter += 1;
+            Some((w.id, w.counter))
+        })
+        .gather_async(2);
+        for cycle in 0..5 {
+            let id = 100 + cycle;
+            let idx = registry.grow(replacement(id)).unwrap();
+            assert_eq!(idx, 1 + cycle);
+            let mut from_new = 0;
+            for _ in 0..48 {
+                if it.next().unwrap().0 == id {
+                    from_new += 1;
+                }
+            }
+            assert!(from_new > 0, "cycle {cycle}: grown shard never joined");
+            registry.retire(idx);
+            // Tombstone drains; the survivor keeps the stream alive.
+            for _ in 0..16 {
+                let (sid, _) =
+                    it.next().expect("stream stalled after retire");
+                assert_ne!(sid, id, "cycle {cycle}: tombstoned item leaked");
+            }
+        }
+    }
+
+    #[test]
+    fn gather_sync_grow_retire_cycles_keep_round_sizes() {
+        let ws = workers(1);
+        let registry = ShardRegistry::new(ws);
+        let mut it = ParIter::from_registry(registry.clone(), |w| {
+            w.counter += 1;
+            Some(w.counter)
+        })
+        .gather_sync();
+        assert_eq!(it.next().unwrap().len(), 1);
+        for cycle in 0..4usize {
+            let idx = registry.grow(replacement(cycle)).unwrap();
+            assert_eq!(
+                it.next().unwrap().len(),
+                2,
+                "cycle {cycle}: grown shard missing from the round"
+            );
+            registry.retire(idx);
+            assert_eq!(
+                it.next().unwrap().len(),
+                1,
+                "cycle {cycle}: tombstone still in the round"
+            );
+        }
     }
 
     #[test]

@@ -75,6 +75,13 @@
 //!   time) flows through a global registry into every
 //!   `TrainResult::actor_stats`, so each report can say *where* the
 //!   pipeline is starved (`TrainResult::pipeline_summary`).
+//! * The elasticity loop is **closed**: membership is dynamic
+//!   (`WorkerSet::scale_to` grows/shrinks a *running* plan, single- and
+//!   multi-agent alike) and an [`actor::Autoscaler`] feedback
+//!   controller decides *when* — sampling the telemetry each report
+//!   and driving `scale_to` with deadband/confirmation/cooldown
+//!   hysteresis (`ops::autoscaled_metrics_reporting`,
+//!   `tests/autoscale.rs`).
 //!
 //! Numerics are JAX/Pallas programs lowered once to HLO text
 //! (`make artifacts`) and executed from rust via PJRT — python is never

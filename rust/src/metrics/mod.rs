@@ -3,7 +3,7 @@
 
 use std::collections::BTreeMap;
 
-use crate::actor::{ActorStatsSnapshot, WeightCastStats};
+use crate::actor::{ActorStatsSnapshot, AutoscaleStats, WeightCastStats};
 use crate::rollout::ScaleStats;
 use crate::util::MovingStat;
 
@@ -73,6 +73,7 @@ impl MetricsHub {
             actor_stats: Vec::new(),
             weight_casts: None,
             scale: None,
+            autoscale: None,
         }
     }
 }
@@ -105,6 +106,12 @@ pub struct TrainResult {
     /// `standard_metrics_reporting` from the `WorkerSet`.  `None` for
     /// reporting paths without one.
     pub scale: Option<ScaleStats>,
+    /// Autoscaling-controller decision counters (directives issued,
+    /// holds by deadband/confirmation/cooldown, failed applies, last
+    /// target) — filled by `autoscaled_metrics_reporting` when an
+    /// `actor::Autoscaler` drives the set.  `None` on manually scaled
+    /// plans.
+    pub autoscale: Option<AutoscaleStats>,
 }
 
 impl TrainResult {
@@ -150,6 +157,16 @@ impl TrainResult {
             out.push_str(&format!(
                 " scale={}/{}slots(+{} -{})",
                 sc.live, sc.slots, sc.added, sc.removed
+            ));
+        }
+        if let Some(a) = &self.autoscale {
+            out.push_str(&format!(
+                " autoscale=t{}(up={} down={} hold={} fail={})",
+                a.last_target,
+                a.decisions_up,
+                a.decisions_down,
+                a.held_deadband + a.held_confirm + a.held_cooldown,
+                a.failed,
             ));
         }
         out
@@ -236,6 +253,22 @@ mod tests {
         r.scale = Some(ScaleStats { added: 3, removed: 1, live: 4, slots: 5 });
         let s = r.pipeline_summary();
         assert!(s.contains("scale=4/5slots(+3 -1)"), "{s}");
+        assert!(!s.contains("autoscale="), "no section without a controller");
+        r.autoscale = Some(AutoscaleStats {
+            reports: 9,
+            decisions_up: 2,
+            decisions_down: 1,
+            held_deadband: 3,
+            held_confirm: 2,
+            held_cooldown: 1,
+            failed: 0,
+            last_target: 4,
+        });
+        let s = r.pipeline_summary();
+        assert!(
+            s.contains("autoscale=t4(up=2 down=1 hold=6 fail=0)"),
+            "{s}"
+        );
     }
 
     #[test]

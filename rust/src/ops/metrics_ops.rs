@@ -5,10 +5,10 @@
 //! supervision state) so each report shows *where* the pipeline is
 //! starved, not just how fast it moved.
 
-use crate::actor::ActorHandle;
+use crate::actor::{ActorHandle, Autoscaler};
 use crate::iter::LocalIter;
 use crate::metrics::{EpisodeRecord, MetricsHub, TrainResult};
-use crate::rollout::WorkerSet;
+use crate::rollout::{WorkerMetrics, WorkerSet};
 
 use super::TrainItem;
 
@@ -39,6 +39,37 @@ pub(crate) fn drain_and_snapshot<A: 'static>(
     snap
 }
 
+/// One controller step against a set — shared by the single- and
+/// multi-agent reporting operators so the decide/apply protocol cannot
+/// drift: the pool is `handles` (the registry snapshot this report
+/// already drained through), the report's snapshot is reduced to
+/// interval signals (`snap.weight_casts` feeds the shed gauge when
+/// present), the directive is applied with `WorkerSet::scale_to`
+/// (failures are counted, never fatal), and the decision counters are
+/// attached to the snapshot.
+pub(crate) fn drive_autoscaler<W: 'static>(
+    a: &mut Autoscaler,
+    snap: &mut TrainResult,
+    set: &WorkerSet<W>,
+    local_id: u64,
+    handles: &[ActorHandle<W>],
+) {
+    let sampler_ids: Vec<u64> = handles.iter().map(|h| h.id()).collect();
+    let signals = a.signals(
+        &snap.actor_stats,
+        local_id,
+        &sampler_ids,
+        snap.weight_casts,
+        set.registry().num_live(),
+    );
+    if let Some(d) = a.decide(&signals) {
+        if set.scale_to(d.target).is_err() {
+            a.note_failed();
+        }
+    }
+    snap.autoscale = Some(a.stats());
+}
+
 /// Wrap a training stream: each output pulls `items_per_report` train
 /// items, drains episode metrics from all workers (dead workers are
 /// skipped, not fatal), and emits a `TrainResult` snapshot carrying
@@ -55,6 +86,38 @@ pub fn standard_metrics_reporting(
     workers: &WorkerSet,
     items_per_report: usize,
 ) -> LocalIter<TrainResult> {
+    reporting_with_controller(inner, workers, items_per_report, None)
+}
+
+/// [`standard_metrics_reporting`] with the elasticity loop **closed**:
+/// an [`Autoscaler`] samples each report's telemetry (learner busy/idle
+/// interval ratio, sampler queue depth, weight-cast shed counters) and
+/// its directives are applied with `WorkerSet::scale_to` — an
+/// idle-learner workload converges to a larger sampler pool and a
+/// saturated one scales back down, with no manual `scale_to` calls.
+/// Decision counters ride every `TrainResult::autoscale`
+/// (`autoscale=t<target>(up/down/hold/fail)` in `pipeline_summary()`);
+/// a failed apply (learner dead, registry full) is counted, not fatal.
+pub fn autoscaled_metrics_reporting(
+    inner: LocalIter<TrainItem>,
+    workers: &WorkerSet,
+    items_per_report: usize,
+    autoscaler: Autoscaler,
+) -> LocalIter<TrainResult> {
+    reporting_with_controller(
+        inner,
+        workers,
+        items_per_report,
+        Some(autoscaler),
+    )
+}
+
+fn reporting_with_controller(
+    inner: LocalIter<TrainItem>,
+    workers: &WorkerSet,
+    items_per_report: usize,
+    mut autoscaler: Option<Autoscaler>,
+) -> LocalIter<TrainResult> {
     assert!(items_per_report >= 1);
     let mut inner = inner;
     let mut hub = MetricsHub::new(100);
@@ -62,6 +125,7 @@ pub fn standard_metrics_reporting(
     let registry = workers.registry().clone();
     let caster = workers.caster();
     let scale = workers.scale_counters();
+    let set = workers.clone();
     LocalIter::from_fn(move || {
         for _ in 0..items_per_report {
             let item = inner.next()?;
@@ -71,14 +135,14 @@ pub fn standard_metrics_reporting(
                 hub.record_learner_stat(&k, v);
             }
         }
-        let mut snap =
-            drain_and_snapshot(&mut hub, &local, &registry.handles(), |w| {
-                let eps = w.pop_episodes();
-                let steps = w.num_steps_sampled;
-                w.num_steps_sampled = 0;
-                (eps, steps)
-            });
+        let handles = registry.handles();
+        let mut snap = drain_and_snapshot(&mut hub, &local, &handles, |w| {
+            w.drain_metrics()
+        });
         snap.weight_casts = Some(caster.stats());
+        if let Some(a) = autoscaler.as_mut() {
+            drive_autoscaler(a, &mut snap, &set, local.id(), &handles);
+        }
         snap.scale = Some(scale.stats(registry.num_live(), registry.len()));
         Some(snap)
     })
@@ -166,7 +230,7 @@ mod tests {
         let mut reports = standard_metrics_reporting(train_op, &workers, 1);
         assert!(reports.next().is_some());
 
-        let victim = workers.remote(0);
+        let victim = workers.remote(0).expect("live remote");
         assert!(victim.call(|_| -> () { panic!("fault injection") }).is_err());
         assert!(victim.await_poisoned(std::time::Duration::from_secs(2)));
 
@@ -184,6 +248,6 @@ mod tests {
         assert!(dead.poisoned);
         assert!(r.pipeline_summary().contains("dead="));
         // The surviving worker keeps sampling.
-        assert!(!workers.remote(1).is_poisoned());
+        assert!(!workers.remote(1).expect("live remote").is_poisoned());
     }
 }

@@ -14,14 +14,16 @@ mod train_ops;
 
 use std::collections::BTreeMap;
 
-pub use metrics_ops::standard_metrics_reporting;
-pub(crate) use metrics_ops::drain_and_snapshot;
+pub use metrics_ops::{
+    autoscaled_metrics_reporting, standard_metrics_reporting,
+};
+pub(crate) use metrics_ops::{drain_and_snapshot, drive_autoscaler};
 pub use replay_ops::{
     create_replay_actors, replay, store_to_replay_buffer, ReplayActor,
 };
 pub use rollout_ops::{
-    concat_batches, exact_batches, parallel_rollouts,
-    parallel_rollouts_from, select_policy,
+    concat_batches, exact_batches, parallel_ma_rollouts_from,
+    parallel_rollouts, parallel_rollouts_from, select_policy,
 };
 pub use train_ops::{
     apply_gradients, compute_gradients, train_one_step, update_target_network,

@@ -3,7 +3,7 @@
 
 use crate::actor::ActorHandle;
 use crate::iter::ParIter;
-use crate::rollout::{RolloutWorker, WorkerSet};
+use crate::rollout::{MultiAgentRolloutWorker, RolloutWorker, WorkerSet};
 use crate::sample_batch::{MultiAgentBatch, SampleBatch};
 
 /// `ParallelRollouts(workers)`: a parallel stream of experience batches,
@@ -26,6 +26,16 @@ pub fn parallel_rollouts(
 pub fn parallel_rollouts_from(
     workers: &WorkerSet,
 ) -> ParIter<RolloutWorker, SampleBatch> {
+    ParIter::from_registry(workers.registry().clone(), |w| Some(w.sample()))
+}
+
+/// [`parallel_rollouts_from`] for a multi-agent `WorkerSet`: a parallel
+/// stream of [`MultiAgentBatch`]es over the set's shard registry, so
+/// multi-agent plans ride the same elastic machinery (restart rejoin,
+/// `scale_to`, autoscaling) as the single-agent path.
+pub fn parallel_ma_rollouts_from(
+    workers: &WorkerSet<MultiAgentRolloutWorker>,
+) -> ParIter<MultiAgentRolloutWorker, MultiAgentBatch> {
     ParIter::from_registry(workers.registry().clone(), |w| Some(w.sample()))
 }
 

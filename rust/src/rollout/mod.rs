@@ -9,3 +9,32 @@ pub use multi_agent::MultiAgentRolloutWorker;
 pub use worker::{
     CollectMode, RolloutWorker, ScaleCounters, ScaleStats, WorkerSet,
 };
+
+use crate::metrics::EpisodeRecord;
+
+/// What every worker type a [`WorkerSet`] can own exposes to the
+/// metrics layer: drain finished-episode records + the sampled-step
+/// counter (resetting it).  Lets `WorkerSet::collect_metrics` and the
+/// reporting operators stay generic over single- and multi-agent
+/// workers.
+pub trait WorkerMetrics {
+    fn drain_metrics(&mut self) -> (Vec<EpisodeRecord>, usize);
+}
+
+impl WorkerMetrics for RolloutWorker {
+    fn drain_metrics(&mut self) -> (Vec<EpisodeRecord>, usize) {
+        let eps = self.pop_episodes();
+        let steps = self.num_steps_sampled;
+        self.num_steps_sampled = 0;
+        (eps, steps)
+    }
+}
+
+impl WorkerMetrics for MultiAgentRolloutWorker {
+    fn drain_metrics(&mut self) -> (Vec<EpisodeRecord>, usize) {
+        let eps = self.pop_episodes();
+        let steps = self.num_steps_sampled;
+        self.num_steps_sampled = 0;
+        (eps, steps)
+    }
+}

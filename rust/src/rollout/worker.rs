@@ -199,26 +199,23 @@ impl RolloutWorker {
 
 /// The worker factory a [`WorkerSet`] retains so dead workers can be
 /// respawned in place (and new capacity spawned by `add_worker`).
-type WorkerFactory =
-    Box<dyn FnMut(usize) -> Box<dyn FnOnce() -> RolloutWorker + Send> + Send>;
+type WorkerFactory<W> =
+    Box<dyn FnMut(usize) -> Box<dyn FnOnce() -> W + Send> + Send>;
 
-/// The one spawn-and-sync protocol both recovery (`restart_dead`) and
-/// scale-up (`add_worker`) use: build incarnation state for slot `idx`
-/// from the retained factory (factory index `idx + 1`; 0 is the local
-/// worker) and cast `weights` into the fresh mailbox **before anything
-/// else** — FIFO per mailbox guarantees the apply runs before any
-/// gather dispatch reaches the worker.
-fn spawn_synced(
-    factory: &mut WorkerFactory,
-    idx: usize,
-    weights: &std::sync::Arc<[f32]>,
-) -> ActorHandle<RolloutWorker> {
-    let init = (&mut **factory)(idx + 1);
-    let fresh = ActorHandle::spawn(&format!("worker-{idx}"), move || init());
-    let w = std::sync::Arc::clone(weights);
-    fresh.cast(move |worker| worker.set_weights(&w));
-    fresh
-}
+/// The spawn-and-sync protocol of a [`WorkerSet`]: push the learner's
+/// current state (its policy weights) into a freshly spawned worker's
+/// mailbox **before the worker is published** — FIFO per mailbox
+/// guarantees the applies run before any gather dispatch reaches it.
+/// `(local, fresh)`; errors when the learner is unavailable (a worker
+/// spawned with blank weights would sample garbage).
+type SyncFn<W> = Box<
+    dyn Fn(
+            &ActorHandle<W>,
+            &ActorHandle<W>,
+        ) -> crate::util::error::Result<()>
+        + Send
+        + Sync,
+>;
 
 /// Lifetime scale-event counters for one [`WorkerSet`], shared with the
 /// metrics-reporting operators (an `Arc` of these rides into the
@@ -279,156 +276,217 @@ pub struct ScaleStats {
 /// rollout workers hold no durable state, recovery is "make a new one,
 /// hand it the learner's weights, publish it".
 ///
-/// Weight broadcasts go through a shared [`WeightCaster`]: versioned
+/// Weight broadcasts go through shared [`WeightCaster`]s: versioned
 /// casts with drop-oldest coalescing and watermark-gated load shedding,
 /// so a slow or dying remote can never stall the learner behind a
 /// mailbox full of superseded parameter vectors.
-pub struct WorkerSet {
-    pub local: ActorHandle<RolloutWorker>,
-    registry: ShardRegistry<RolloutWorker>,
-    caster: std::sync::Arc<WeightCaster<RolloutWorker>>,
-    factory: std::sync::Mutex<WorkerFactory>,
+///
+/// **Genericity.** The scale machinery (registry, factory respawn,
+/// spawn-and-sync, caster lane attach, scale counters) is generic over
+/// the worker state type `W`: [`WorkerSet::with_protocol`] builds a set
+/// for any actor type given a *sync protocol* (how to push the
+/// learner's state into a fresh worker before it is published).
+/// [`WorkerSet::new`] is the single-policy `RolloutWorker`
+/// instantiation; `algorithms::ma_worker_set` builds the
+/// [`MultiAgentRolloutWorker`](crate::rollout::MultiAgentRolloutWorker)
+/// one (per-policy weight pushes, per-policy casters) — multi-agent
+/// plans get the same `scale_to`/restart/autoscale machinery.
+///
+/// **Cloning.** A `WorkerSet` clone shares all state (registry,
+/// factory, casters, counters) — the handle semantics of
+/// [`ActorHandle`], so reporting operators and autoscaler drivers can
+/// hold the set inside a plan closure.
+pub struct WorkerSet<W: 'static = RolloutWorker> {
+    pub local: ActorHandle<W>,
+    inner: std::sync::Arc<SetInner<W>>,
+}
+
+struct SetInner<W: 'static> {
+    local: ActorHandle<W>,
+    /// Actor-name prefix for respawned/added remotes ("worker" ->
+    /// "worker-3").
+    remote_prefix: String,
+    registry: ShardRegistry<W>,
+    /// Casters whose lanes must be attached when a worker is spawned
+    /// into a slot (the single default caster for `RolloutWorker` sets;
+    /// one per policy for multi-agent sets — see
+    /// [`WorkerSet::register_caster`]).
+    casters: std::sync::Mutex<Vec<std::sync::Arc<WeightCaster<W>>>>,
+    sync: SyncFn<W>,
+    factory: std::sync::Mutex<WorkerFactory<W>>,
     scale: std::sync::Arc<ScaleCounters>,
 }
 
-impl WorkerSet {
-    /// Spawn 1 local + `num_remote` remote workers.  `make(i)` builds
-    /// worker i on its actor thread (i = 0 is the local worker).
-    pub fn new(
+impl<W: 'static> Clone for WorkerSet<W> {
+    fn clone(&self) -> Self {
+        WorkerSet { local: self.local.clone(), inner: self.inner.clone() }
+    }
+}
+
+impl<W: 'static> WorkerSet<W> {
+    /// Spawn 1 local + `num_remote` remote workers of any actor type.
+    /// `make(i)` builds worker `i` on its actor thread (i = 0 is the
+    /// local/learner worker); `sync(local, fresh)` pushes the learner's
+    /// current state into a fresh worker's mailbox (before publication)
+    /// and is what `restart_dead`/`add_worker` run on every spawn.
+    /// Actors are named `{local_name}` and `{remote_prefix}-{i}`.
+    ///
+    /// No caster is registered; callers that broadcast weights register
+    /// theirs with [`WorkerSet::register_caster`] so replacements'
+    /// lanes are attached on spawn.
+    pub fn with_protocol(
+        local_name: &str,
+        remote_prefix: &str,
         num_remote: usize,
-        make: impl FnMut(usize) -> Box<dyn FnOnce() -> RolloutWorker + Send>
+        make: impl FnMut(usize) -> Box<dyn FnOnce() -> W + Send>
             + Send
             + 'static,
+        sync: impl Fn(
+                &ActorHandle<W>,
+                &ActorHandle<W>,
+            ) -> crate::util::error::Result<()>
+            + Send
+            + Sync
+            + 'static,
     ) -> Self {
-        let mut make: WorkerFactory = Box::new(make);
+        let mut make: WorkerFactory<W> = Box::new(make);
         let local = {
             let init = make(0);
-            ActorHandle::spawn("local_worker", move || init())
+            ActorHandle::spawn(local_name, move || init())
         };
-        let remotes = spawn_group("worker", num_remote, |i| make(i + 1));
+        let remotes = spawn_group(remote_prefix, num_remote, |i| make(i + 1));
         let registry = ShardRegistry::new(remotes);
-        let caster = std::sync::Arc::new(WeightCaster::new(
-            registry.clone(),
-            DEFAULT_CAST_WATERMARK,
-            |w: &mut RolloutWorker, p: &[f32]| w.set_weights(p),
-        ));
         WorkerSet {
-            local,
-            registry,
-            caster,
-            factory: std::sync::Mutex::new(make),
-            scale: std::sync::Arc::new(ScaleCounters::default()),
+            local: local.clone(),
+            inner: std::sync::Arc::new(SetInner {
+                local,
+                remote_prefix: remote_prefix.to_string(),
+                registry,
+                casters: std::sync::Mutex::new(Vec::new()),
+                sync: Box::new(sync),
+                factory: std::sync::Mutex::new(make),
+                scale: std::sync::Arc::new(ScaleCounters::default()),
+            }),
         }
+    }
+
+    /// Register a weight caster whose lane should be attached whenever
+    /// this set spawns a worker into a slot (`restart_dead` /
+    /// `add_worker`): the caster version read *before* the sync
+    /// protocol fetches the learner's state is marked applied, so a
+    /// broadcast racing the fetch is redelivered rather than silently
+    /// skipped.
+    pub fn register_caster(
+        &self,
+        caster: std::sync::Arc<WeightCaster<W>>,
+    ) {
+        self.inner.casters.lock().unwrap().push(caster);
     }
 
     /// The elastic shard table behind the remotes.  Plans that gather
     /// through a clone of it adopt restarted workers live.
-    pub fn registry(&self) -> &ShardRegistry<RolloutWorker> {
-        &self.registry
-    }
-
-    /// The versioned weight-broadcast channel to the remotes (shared by
-    /// `sync_weights`, `TrainOneStep`, and the DQN-family plans, so the
-    /// weight version is monotone across all of them).
-    pub fn caster(&self) -> std::sync::Arc<WeightCaster<RolloutWorker>> {
-        self.caster.clone()
-    }
-
-    /// Broadcast-policy counters (versions published, casts enqueued /
-    /// coalesced / shed).
-    pub fn weight_cast_stats(&self) -> WeightCastStats {
-        self.caster.stats()
+    pub fn registry(&self) -> &ShardRegistry<W> {
+        &self.inner.registry
     }
 
     /// Registry slots consumed (tombstoned slots included) — the bound
     /// on remote indices.  See [`Self::num_live_remotes`] for current
     /// live capacity.
     pub fn num_remotes(&self) -> usize {
-        self.registry.len()
+        self.inner.registry.len()
     }
 
     /// Live (non-tombstoned) remote workers — the number `scale_to`
     /// targets.
     pub fn num_live_remotes(&self) -> usize {
-        self.registry.num_live()
+        self.inner.registry.num_live()
     }
 
     /// Snapshot of the current incarnation behind every **live** remote
     /// index.  For plan-building prefer gathering through
     /// [`Self::registry`] — a snapshot goes stale at the next
     /// `restart_dead`/`scale_to`.
-    pub fn remotes(&self) -> Vec<ActorHandle<RolloutWorker>> {
-        self.registry.handles()
+    pub fn remotes(&self) -> Vec<ActorHandle<W>> {
+        self.inner.registry.handles()
     }
 
-    /// The current incarnation behind remote index `i` (panics on a
-    /// slot tombstoned by [`Self::remove_worker`]).
-    pub fn remote(&self, i: usize) -> ActorHandle<RolloutWorker> {
-        self.registry.get(i).0
+    /// The current incarnation behind remote index `i`, or `None` if
+    /// the slot was tombstoned by [`Self::remove_worker`] — a
+    /// scaled-down set must never panic its driver for asking.
+    pub fn remote(&self, i: usize) -> Option<ActorHandle<W>> {
+        self.inner.registry.get_live(i).map(|(h, _)| h)
     }
 
     /// The shared lifetime scale counters (cloned into the metrics
     /// reporting closure so `TrainResult::scale` reflects events taken
     /// after plan build).
     pub fn scale_counters(&self) -> std::sync::Arc<ScaleCounters> {
-        self.scale.clone()
+        self.inner.scale.clone()
     }
 
     /// Current scale summary: lifetime add/remove counts + live/slot
     /// membership.
     pub fn scale_stats(&self) -> ScaleStats {
-        self.scale.stats(self.registry.num_live(), self.registry.len())
-    }
-
-    /// Broadcast the local worker's weights to all remotes, blocking
-    /// until every live remote applied them — the sync-barrier path.
-    /// One shared `Arc<[f32]>` travels to every remote; the per-remote
-    /// cost is a pointer clone, not a parameter-vector copy.  Dead
-    /// remotes are skipped (they resync on restart).
-    pub fn sync_weights(&self) {
-        let weights: std::sync::Arc<[f32]> = self
-            .local
-            .call(|w| w.get_weights())
-            .expect("local (learner) worker died")
-            .into();
-        self.caster.broadcast_sync(weights);
-    }
-
-    /// Total episodes + sampled-step counters drained from all workers.
-    /// Dead workers contribute nothing instead of panicking the driver.
-    pub fn collect_metrics(&self) -> (Vec<EpisodeRecord>, usize) {
-        let mut episodes = Vec::new();
-        let mut steps = 0;
-        let replies: Vec<_> = std::iter::once(self.local.clone())
-            .chain(self.registry.handles())
-            .map(|h| {
-                h.call_deferred(|w| {
-                    let eps = w.pop_episodes();
-                    let steps = w.num_steps_sampled;
-                    w.num_steps_sampled = 0;
-                    (eps, steps)
-                })
-            })
-            .collect();
-        for r in replies {
-            if let Ok((eps, s)) = r.recv() {
-                episodes.extend(eps);
-                steps += s;
-            }
-        }
-        (episodes, steps)
+        self.inner
+            .scale
+            .stats(self.inner.registry.num_live(), self.inner.registry.len())
     }
 
     /// Indices of remotes whose current incarnation has panicked.
     pub fn poisoned_indices(&self) -> Vec<usize> {
-        self.registry.poisoned_indices()
+        self.inner.registry.poisoned_indices()
     }
 
-    /// Respawn every poisoned remote from the retained factory, push
-    /// the learner's current weights to the replacement, **publish it
-    /// into the registry** — running gathers adopt it on their next
-    /// dispatch (credits held by the dead incarnation retire via its
-    /// epoch-tagged death notices) — and return the restarted indices.
+    /// The one spawn-and-sync step both recovery (`restart_dead`) and
+    /// scale-up (`add_worker`) share: read every registered caster's
+    /// version (BEFORE the sync protocol fetches learner state — see
+    /// `WeightCaster::attach`), spawn slot `idx`'s incarnation from the
+    /// retained factory (factory index `idx + 1`; 0 is the local
+    /// worker), and run the sync protocol so the learner's state is in
+    /// the fresh mailbox before anything else.  Returns the handle plus
+    /// the (caster, version) attach list for after publication.
+    #[allow(clippy::type_complexity)]
+    fn spawn_synced(
+        &self,
+        factory: &mut WorkerFactory<W>,
+        idx: usize,
+    ) -> crate::util::error::Result<(
+        ActorHandle<W>,
+        Vec<(std::sync::Arc<WeightCaster<W>>, u64)>,
+    )> {
+        // Probe the learner BEFORE invoking the factory: spawning (and
+        // immediately discarding) a full worker per call just to learn
+        // the learner is gone would waste an actor thread + init every
+        // retry.  The sync protocol below remains the authoritative
+        // check for the probe-then-die race.
+        if self.inner.local.is_poisoned() {
+            return Err(crate::util::error::Error::msg(
+                "learner is dead (poisoned)",
+            ));
+        }
+        let attach: Vec<_> = self
+            .inner
+            .casters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|c| (c.clone(), c.stats().version))
+            .collect();
+        let init = (&mut **factory)(idx + 1);
+        let fresh = ActorHandle::spawn(
+            &format!("{}-{idx}", self.inner.remote_prefix),
+            move || init(),
+        );
+        (self.inner.sync)(&self.inner.local, &fresh)?;
+        Ok((fresh, attach))
+    }
+
+    /// Respawn every poisoned remote from the retained factory, run the
+    /// sync protocol (the learner's current state lands in the fresh
+    /// mailbox first), **publish it into the registry** — running
+    /// gathers adopt it on their next dispatch (credits held by the
+    /// dead incarnation retire via its epoch-tagged death notices) —
+    /// and return the restarted indices.
     ///
     /// If the **learner** (local) worker is itself dead, nothing is
     /// restarted and an empty list is returned: replacements without
@@ -441,70 +499,64 @@ impl WorkerSet {
         if dead.is_empty() {
             return dead;
         }
-        // Caster version BEFORE the weights read: the replacements get
-        // at least this version's content, so marking it applied can
-        // never hide a broadcast published after the read (see
-        // `WeightCaster::attach`).
-        let attach_v = self.caster.stats().version;
-        let weights: std::sync::Arc<[f32]> =
-            match self.local.call(|w| w.get_weights()) {
-                Ok(w) => w.into(),
-                // Learner dead: don't respawn samplers with blank
-                // weights; surface "nothing restarted" instead.
-                Err(_) => return Vec::new(),
-            };
-        let mut factory = self.factory.lock().unwrap();
+        let mut factory = self.inner.factory.lock().unwrap();
+        let mut restarted = Vec::new();
         for &i in &dead {
-            let fresh = spawn_synced(&mut factory, i, &weights);
-            let ep = self.registry.publish(i, fresh);
-            self.caster.attach(i, ep, attach_v);
+            match self.spawn_synced(&mut factory, i) {
+                Ok((fresh, attach)) => {
+                    let ep = self.inner.registry.publish(i, fresh);
+                    for (caster, v) in attach {
+                        caster.attach(i, ep, v);
+                    }
+                    restarted.push(i);
+                }
+                // Learner dead: don't respawn samplers with blank
+                // weights; surface "nothing (more) restarted" instead.
+                Err(_) => break,
+            }
         }
-        dead
+        restarted
     }
 
     /// Add one remote worker under live traffic: spawn it from the
-    /// retained factory, push the learner's **current** weights into
-    /// its mailbox before it is published (FIFO per mailbox, so the
-    /// weights apply before any gather dispatch reaches it), register
-    /// its lane with the [`WeightCaster`], and publish it into the
-    /// registry — running `gather_async` streams prime credits for it
-    /// mid-stream, `gather_sync` admits it at the next round boundary.
+    /// retained factory, run the sync protocol (the learner's
+    /// **current** state lands in its mailbox before it is published —
+    /// FIFO per mailbox, so the applies run before any gather dispatch
+    /// reaches it), attach its lane on every registered
+    /// [`WeightCaster`], and publish it into the registry — running
+    /// `gather_async` streams prime credits for it mid-stream,
+    /// `gather_sync` admits it at the next round boundary.
     ///
     /// Tombstoned slots (earlier `remove_worker`s) are reused before
     /// new tag space is grown.  Returns the worker's shard index.
     /// Fails if the learner is dead (a blank-weight worker would sample
     /// garbage) or the registry hit the 16-bit shard-tag bound.
     pub fn add_worker(&self) -> crate::util::error::Result<usize> {
-        // Caster version BEFORE the weights read (see restart_dead).
-        let attach_v = self.caster.stats().version;
-        let weights: std::sync::Arc<[f32]> = self
-            .local
-            .call(|w| w.get_weights())
-            .map_err(|e| {
-                crate::util::error::Error::msg(format!(
-                    "add_worker: learner is dead ({e})"
-                ))
-            })?
-            .into();
         // The factory lock serializes the set's own scale operations;
         // the registry index is still taken from publish/grow itself
         // (authoritative even if another holder of the shared registry
         // grew it concurrently).
-        let mut factory = self.factory.lock().unwrap();
-        let reuse = self.registry.retired_indices().first().copied();
-        let slot_hint = reuse.unwrap_or_else(|| self.registry.len());
-        let fresh = spawn_synced(&mut factory, slot_hint, &weights);
+        let mut factory = self.inner.factory.lock().unwrap();
+        let reuse = self.inner.registry.retired_indices().first().copied();
+        let slot_hint = reuse.unwrap_or_else(|| self.inner.registry.len());
+        let (fresh, attach) = self
+            .spawn_synced(&mut factory, slot_hint)
+            .map_err(|e| {
+                crate::util::error::Error::msg(format!("add_worker: {e}"))
+            })?;
         let (idx, epoch) = match reuse {
-            Some(i) => (i, self.registry.publish(i, fresh)),
+            Some(i) => (i, self.inner.registry.publish(i, fresh)),
             None => {
-                let i = self.registry.grow(fresh).map_err(|e| {
+                let i = self.inner.registry.grow(fresh).map_err(|e| {
                     crate::util::error::Error::msg(format!("add_worker: {e}"))
                 })?;
                 (i, 0)
             }
         };
-        self.caster.attach(idx, epoch, attach_v);
-        self.scale.note_added();
+        for (caster, v) in attach {
+            caster.attach(idx, epoch, v);
+        }
+        self.inner.scale.note_added();
         Ok(idx)
     }
 
@@ -517,13 +569,13 @@ impl WorkerSet {
     /// tombstoned.  The slot is reused by a later [`Self::add_worker`].
     pub fn remove_worker(&self, i: usize) -> bool {
         // Serialize with add_worker's slot choice.
-        let _factory = self.factory.lock().unwrap();
-        match self.registry.retire(i) {
+        let _factory = self.inner.factory.lock().unwrap();
+        match self.inner.registry.retire(i) {
             Some(_handle) => {
                 // Dropping `_handle` releases the registry's (last
                 // long-lived) reference; in-flight messages still
                 // execute because their envelopes are already queued.
-                self.scale.note_removed();
+                self.inner.scale.note_removed();
                 true
             }
             None => false,
@@ -534,7 +586,9 @@ impl WorkerSet {
     /// workers ([`Self::add_worker`]) or tombstoning the highest live
     /// indices ([`Self::remove_worker`]) as needed — all without
     /// rebuilding any running plan.  Returns the indices added and
-    /// removed.
+    /// removed.  Driven manually, or automatically by an
+    /// [`Autoscaler`](crate::actor::Autoscaler) through the metrics
+    /// reporting operators.
     pub fn scale_to(
         &self,
         n: usize,
@@ -542,11 +596,12 @@ impl WorkerSet {
         assert!(n >= 1, "scale_to(0) would end every stream");
         let mut added = Vec::new();
         let mut removed = Vec::new();
-        while self.registry.num_live() < n {
+        while self.inner.registry.num_live() < n {
             added.push(self.add_worker()?);
         }
-        while self.registry.num_live() > n {
+        while self.inner.registry.num_live() > n {
             let idx = *self
+                .inner
                 .registry
                 .live_indices()
                 .last()
@@ -556,6 +611,110 @@ impl WorkerSet {
             }
         }
         Ok((added, removed))
+    }
+}
+
+impl<W: super::WorkerMetrics + 'static> WorkerSet<W> {
+    /// Total episodes + sampled-step counters drained from all workers.
+    /// Dead workers contribute nothing instead of panicking the driver.
+    pub fn collect_metrics(&self) -> (Vec<EpisodeRecord>, usize) {
+        let mut episodes = Vec::new();
+        let mut steps = 0;
+        let replies: Vec<_> = std::iter::once(self.local.clone())
+            .chain(self.inner.registry.handles())
+            .map(|h| h.call_deferred(|w| w.drain_metrics()))
+            .collect();
+        for r in replies {
+            if let Ok((eps, s)) = r.recv() {
+                episodes.extend(eps);
+                steps += s;
+            }
+        }
+        (episodes, steps)
+    }
+}
+
+impl WorkerSet<RolloutWorker> {
+    /// Spawn 1 local + `num_remote` remote single-policy rollout
+    /// workers.  `make(i)` builds worker i on its actor thread (i = 0
+    /// is the local worker).  The sync protocol pushes the learner's
+    /// full weight vector; one default [`WeightCaster`] is registered
+    /// and shared by `sync_weights`, `TrainOneStep`, and the DQN-family
+    /// plans, so the weight version is monotone across all of them.
+    pub fn new(
+        num_remote: usize,
+        make: impl FnMut(usize) -> Box<dyn FnOnce() -> RolloutWorker + Send>
+            + Send
+            + 'static,
+    ) -> Self {
+        let set = WorkerSet::with_protocol(
+            "local_worker",
+            "worker",
+            num_remote,
+            make,
+            |local: &ActorHandle<RolloutWorker>,
+             fresh: &ActorHandle<RolloutWorker>| {
+                let weights: std::sync::Arc<[f32]> = local
+                    .call(|w| w.get_weights())
+                    .map_err(|e| {
+                        crate::util::error::Error::msg(format!(
+                            "learner is dead ({e})"
+                        ))
+                    })?
+                    .into();
+                fresh.cast(move |w| w.set_weights(&weights));
+                Ok(())
+            },
+        );
+        set.register_caster(std::sync::Arc::new(WeightCaster::new(
+            set.registry().clone(),
+            DEFAULT_CAST_WATERMARK,
+            |w: &mut RolloutWorker, p: &[f32]| w.set_weights(p),
+        )));
+        set
+    }
+
+    /// The default versioned weight-broadcast channel to the remotes
+    /// (the caster [`WorkerSet::new`] registered).  Panics with a
+    /// diagnostic on a set built through [`WorkerSet::with_protocol`]
+    /// without one.
+    pub fn caster(&self) -> std::sync::Arc<WeightCaster<RolloutWorker>> {
+        self.inner
+            .casters
+            .lock()
+            .unwrap()
+            .first()
+            .cloned()
+            .expect(
+                "no WeightCaster registered on this WorkerSet \
+                 (with_protocol registers none — use WorkerSet::new, or \
+                 register_caster before the reporting operators run)",
+            )
+    }
+
+    /// Broadcast-policy counters (versions published, casts enqueued /
+    /// coalesced / shed).
+    pub fn weight_cast_stats(&self) -> WeightCastStats {
+        self.caster().stats()
+    }
+
+    /// Broadcast the local worker's weights to all remotes, blocking
+    /// until every **responsive** live remote applied them — the
+    /// sync-barrier path.  One shared `Arc<[f32]>` travels to every
+    /// remote; the per-remote cost is a pointer clone, not a
+    /// parameter-vector copy.  Dead remotes are skipped, a remote
+    /// removed or killed mid-barrier is dropped from the wait set, and
+    /// a remote whose mailbox is **full** at dispatch gets the
+    /// coalescing non-blocking apply and is not waited on (it catches
+    /// up when it drains) — the barrier never wedges behind a stalled
+    /// worker (see `WeightCaster::broadcast_sync`).
+    pub fn sync_weights(&self) {
+        let weights: std::sync::Arc<[f32]> = self
+            .local
+            .call(|w| w.get_weights())
+            .expect("local (learner) worker died")
+            .into();
+        self.caster().broadcast_sync(weights);
     }
 }
 
@@ -629,7 +788,7 @@ mod tests {
         let set = WorkerSet::new(3, |_| Box::new(|| dummy_worker(1, 4)));
         set.local.call(|w| w.set_weights(&[0.5])).unwrap();
         // Kill remote 1 (the poisoned flag publishes asynchronously).
-        let victim = set.remote(1);
+        let victim = set.remote(1).expect("live remote");
         let _ = victim.call(|_| -> () { panic!("sim fault") });
         assert!(victim.await_poisoned(std::time::Duration::from_secs(2)));
         assert_eq!(set.poisoned_indices(), vec![1]);
@@ -641,7 +800,7 @@ mod tests {
         assert_eq!(restarted, vec![1]);
         // The registry now serves the replacement incarnation.
         assert_eq!(set.registry().epoch(1), 1);
-        let fresh = set.remote(1);
+        let fresh = set.remote(1).expect("live remote");
         assert_ne!(fresh.id(), victim.id());
         assert!(!fresh.is_poisoned());
         // The replacement runs and carries the learner's weights.
@@ -653,7 +812,7 @@ mod tests {
     #[test]
     fn restart_dead_refuses_when_learner_is_dead() {
         let set = WorkerSet::new(2, |_| Box::new(|| dummy_worker(1, 4)));
-        let w0 = set.remote(0);
+        let w0 = set.remote(0).expect("live remote");
         let _ = w0.call(|_| -> () { panic!("worker fault") });
         let _ = set.local.call(|_| -> () { panic!("learner fault") });
         assert!(w0.await_poisoned(std::time::Duration::from_secs(2)));
@@ -672,7 +831,7 @@ mod tests {
         assert_eq!(set.num_remotes(), 2);
         assert_eq!(set.num_live_remotes(), 2);
         // The weights landed before any other message could.
-        let fresh = set.remote(1);
+        let fresh = set.remote(1).expect("live remote");
         assert_eq!(fresh.call(|w| w.get_weights()).unwrap(), vec![0.375]);
         assert_eq!(fresh.call(|w| w.sample().len()).unwrap(), 4);
         let sc = set.scale_stats();

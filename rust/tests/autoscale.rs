@@ -1,0 +1,346 @@
+//! Autoscaling acceptance tests — the closed elasticity loop.
+//!
+//! The controller's hysteresis logic (deadband / confirmation streak /
+//! cooldown, the no-flap guarantees) is unit-tested deterministically
+//! with synthetic signals in `rust/src/actor/autoscaler.rs`.  The tests
+//! here drive the **whole loop** end-to-end: real worker actors, a real
+//! dataflow plan, real telemetry — an idle-learner workload converges
+//! to a larger sampler pool and a saturated one scales back down, with
+//! no manual `scale_to` calls.  Workload skew is deliberately extreme
+//! (milliseconds of sleep vs microseconds of work) so the utilization
+//! signals are unambiguous on any CI machine.
+//!
+//! The phase-flipping soak (`autoscale_soak_idle_grow_busy_shrink`) is
+//! `#[ignore]`d from plain `cargo test` and executed by
+//! `tools/ci.sh --chaos` alongside the scale-out soak.
+//!
+//! These run on the Dummy env + a local sleep-knob policy, so they need
+//! no AOT artifacts.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use flowrl::actor::{Autoscaler, AutoscalerConfig};
+use flowrl::env::{DummyEnv, Env, MultiAgentCartPole};
+use flowrl::iter::ParIter;
+use flowrl::metrics::TrainResult;
+use flowrl::ops::{
+    autoscaled_metrics_reporting, parallel_rollouts_from, train_one_step,
+    TrainItem,
+};
+use flowrl::policy::{ActionOutput, Gradients, Policy};
+use flowrl::rollout::{
+    CollectMode, MultiAgentRolloutWorker, RolloutWorker, WorkerSet,
+};
+use flowrl::sample_batch::SampleBatch;
+
+/// A policy with two shared sleep knobs: `sample_us` burns time in
+/// `compute_actions` (per env step, on the sampler actors) and
+/// `learn_us` in `compute_gradients` (per train batch, on the learner).
+/// Flipping the atomics mid-run flips which side of the pipeline is the
+/// bottleneck — the workload the autoscaler must chase.
+struct PhasedPolicy {
+    sample_us: Arc<AtomicU64>,
+    learn_us: Arc<AtomicU64>,
+    weights: Vec<f32>,
+}
+
+impl Policy for PhasedPolicy {
+    fn compute_actions(&mut self, _obs: &[f32], n: usize) -> Vec<ActionOutput> {
+        let us = self.sample_us.load(Ordering::Relaxed);
+        if us > 0 {
+            std::thread::sleep(Duration::from_micros(us));
+        }
+        vec![ActionOutput { action: 0, logp: 0.0, value: 0.0 }; n]
+    }
+
+    fn compute_gradients(&mut self, batch: &SampleBatch) -> Gradients {
+        let us = self.learn_us.load(Ordering::Relaxed);
+        if us > 0 {
+            std::thread::sleep(Duration::from_micros(us));
+        }
+        let mut stats = BTreeMap::new();
+        stats.insert("loss".to_string(), 0.5);
+        Gradients { flat: vec![0.0], stats, count: batch.len() }
+    }
+
+    fn apply_gradients(&mut self, _grads: &Gradients) {}
+
+    fn get_weights(&self) -> Vec<f32> {
+        self.weights.clone()
+    }
+
+    fn set_weights(&mut self, weights: &[f32]) {
+        self.weights = weights.to_vec();
+    }
+}
+
+struct Knobs {
+    sample_us: Arc<AtomicU64>,
+    learn_us: Arc<AtomicU64>,
+}
+
+fn phased_set(n_remote: usize, sample_us: u64, learn_us: u64) -> (WorkerSet, Knobs) {
+    let knobs = Knobs {
+        sample_us: Arc::new(AtomicU64::new(sample_us)),
+        learn_us: Arc::new(AtomicU64::new(learn_us)),
+    };
+    let (s, l) = (knobs.sample_us.clone(), knobs.learn_us.clone());
+    let set = WorkerSet::new(n_remote, move |_| {
+        let (s, l) = (s.clone(), l.clone());
+        Box::new(move || {
+            let envs: Vec<Box<dyn Env>> =
+                vec![Box::new(DummyEnv::new(4, 10))];
+            RolloutWorker::new(
+                envs,
+                Box::new(PhasedPolicy {
+                    sample_us: s,
+                    learn_us: l,
+                    weights: vec![0.0],
+                }),
+                4,
+                CollectMode::OnPolicy,
+            )
+        })
+    });
+    (set, knobs)
+}
+
+fn controller(min: usize, max: usize) -> Autoscaler {
+    Autoscaler::new(AutoscalerConfig {
+        min_workers: min,
+        max_workers: max,
+        learner_idle_below: 0.3,
+        learner_busy_above: 0.8,
+        // Secondary gauges neutralized: these tests pin the learner
+        // utilization signal; the soak exercises the composite.
+        sampler_queue_pressure: 1_000,
+        shed_tolerance: u64::MAX / 2,
+        cooldown_reports: 0,
+        confirm_reports: 1,
+        step: 1,
+    })
+}
+
+/// The PR's acceptance criterion, grow direction: samplers sleep ~8ms
+/// per fragment while the learner's step is microseconds — the learner
+/// is idle, and the controller must grow the pool to `max_workers`
+/// through the *running* plan, no manual `scale_to`.
+#[test]
+fn idle_learner_workload_converges_to_larger_pool() {
+    let (set, _knobs) = phased_set(1, 2_000, 0);
+    let mut train = train_one_step(&set);
+    let train_op = parallel_rollouts_from(&set)
+        .gather_async(1)
+        .for_each(move |b| train(b));
+    let mut reports =
+        autoscaled_metrics_reporting(train_op, &set, 1, controller(1, 3));
+
+    let mut last: Option<TrainResult> = None;
+    for _ in 0..60 {
+        last = reports.next();
+        assert!(last.is_some(), "reporting stopped during autoscale");
+        if set.num_live_remotes() == 3 {
+            break;
+        }
+    }
+    assert_eq!(
+        set.num_live_remotes(),
+        3,
+        "idle-learner pool failed to converge to max_workers"
+    );
+    let r = last.unwrap();
+    let a = r.autoscale.expect("autoscale stats attached");
+    assert!(a.decisions_up >= 2, "{a:?}");
+    assert_eq!(a.decisions_down, 0, "{a:?}");
+    assert_eq!(a.last_target, 3, "{a:?}");
+    assert!(r.pipeline_summary().contains("autoscale=t3("));
+    // The grown workers joined the running gather with real weights —
+    // keep streaming to prove the plan survived its own scaling.
+    for _ in 0..6 {
+        assert!(reports.next().is_some());
+    }
+    let sc = set.scale_stats();
+    assert_eq!((sc.added, sc.live), (2, 3));
+}
+
+/// The shrink direction: the learner burns ~4ms per train item while
+/// sampling is instant — the learner saturates, and the controller must
+/// scale the over-provisioned pool back down to `min_workers`.
+#[test]
+fn saturated_learner_workload_scales_back_down() {
+    let (set, _knobs) = phased_set(3, 0, 4_000);
+    let mut train = train_one_step(&set);
+    let train_op = parallel_rollouts_from(&set)
+        .gather_async(1)
+        .for_each(move |b| train(b));
+    let mut reports =
+        autoscaled_metrics_reporting(train_op, &set, 1, controller(1, 4));
+
+    let mut last: Option<TrainResult> = None;
+    for _ in 0..60 {
+        last = reports.next();
+        assert!(last.is_some(), "reporting stopped during autoscale");
+        if set.num_live_remotes() == 1 {
+            break;
+        }
+    }
+    assert_eq!(
+        set.num_live_remotes(),
+        1,
+        "saturated-learner pool failed to scale back down"
+    );
+    let a = last.unwrap().autoscale.expect("autoscale stats attached");
+    assert!(a.decisions_down >= 2, "{a:?}");
+    assert_eq!(a.decisions_up, 0, "{a:?}");
+    // Tombstoned slots answer None; the stream keeps flowing off the
+    // survivor.
+    assert!(set.remote(2).is_none());
+    for _ in 0..4 {
+        assert!(reports.next().is_some());
+    }
+}
+
+/// The multi-agent path rides the same loop: a multi-agent `WorkerSet`
+/// under `ma_metrics_reporting` with a controller grows its pool when
+/// the (idle) learner signal says so — the satellite's "autoscaler
+/// works there too" criterion.
+#[test]
+fn ma_autoscaler_grows_idle_pool_mid_plan() {
+    use flowrl::algorithms::multi_agent::ma_metrics_reporting;
+
+    let sample_us = Arc::new(AtomicU64::new(2_000));
+    let s_outer = sample_us.clone();
+    let set: WorkerSet<MultiAgentRolloutWorker> = WorkerSet::with_protocol(
+        "ma_local",
+        "ma_worker",
+        1,
+        move |i| {
+            let s = s_outer.clone();
+            Box::new(move || {
+                let env = MultiAgentCartPole::new(2, i as u64, |a| {
+                    if a % 2 == 0 { "even".into() } else { "odd".into() }
+                });
+                let mut policies: BTreeMap<String, Box<dyn Policy>> =
+                    BTreeMap::new();
+                for pid in ["even", "odd"] {
+                    policies.insert(
+                        pid.into(),
+                        Box::new(PhasedPolicy {
+                            sample_us: s.clone(),
+                            learn_us: Arc::new(AtomicU64::new(0)),
+                            weights: vec![0.0],
+                        }),
+                    );
+                }
+                MultiAgentRolloutWorker::new(env, policies, 4)
+            })
+        },
+        flowrl::algorithms::ma_sync_protocol(),
+    );
+    let registry = set.registry().clone();
+    let inner = ParIter::from_registry(registry, |w| Some(w.sample()))
+        .gather_async(1)
+        .for_each(|ma| TrainItem::new(BTreeMap::new(), ma.count()));
+    let mut reports =
+        ma_metrics_reporting(inner, &set, Some(controller(1, 3)));
+    for _ in 0..60 {
+        assert!(reports.next().is_some(), "ma reporting stopped");
+        if set.num_live_remotes() == 3 {
+            break;
+        }
+    }
+    assert_eq!(
+        set.num_live_remotes(),
+        3,
+        "multi-agent pool failed to autoscale"
+    );
+    // Streaming continues across the growth.
+    for _ in 0..4 {
+        assert!(reports.next().is_some());
+    }
+}
+
+/// The autoscale soak behind `tools/ci.sh --chaos`: phase A starves
+/// the learner (slow samplers) until the controller grows 1 -> 4, then
+/// the knobs flip (instant sampling, slow learner) and it must shrink
+/// back to 1 — asserting convergence in both directions, a live stream
+/// throughout, and a bounded number of direction changes (no flap).
+#[test]
+#[ignore = "autoscale soak: executed by tools/ci.sh --chaos"]
+fn autoscale_soak_idle_grow_busy_shrink() {
+    let (set, knobs) = phased_set(1, 3_000, 0);
+    let mut train = train_one_step(&set);
+    let train_op = parallel_rollouts_from(&set)
+        .gather_async(1)
+        .for_each(move |b| train(b));
+    // Production-shaped hysteresis: confirmation + cooldown on.
+    let controller = Autoscaler::new(AutoscalerConfig {
+        min_workers: 1,
+        max_workers: 4,
+        learner_idle_below: 0.3,
+        learner_busy_above: 0.8,
+        sampler_queue_pressure: 1_000,
+        shed_tolerance: u64::MAX / 2,
+        cooldown_reports: 1,
+        confirm_reports: 2,
+        step: 1,
+    });
+    let mut reports =
+        autoscaled_metrics_reporting(train_op, &set, 1, controller);
+
+    // Phase A: idle learner -> grow to 4.
+    let mut phase_a_reports = 0;
+    while set.num_live_remotes() < 4 {
+        assert!(reports.next().is_some(), "stream died in phase A");
+        phase_a_reports += 1;
+        assert!(
+            phase_a_reports < 150,
+            "phase A never converged to 4 workers"
+        );
+    }
+
+    // Phase flip: sampling instant, learning slow.
+    knobs.sample_us.store(0, Ordering::Relaxed);
+    knobs.learn_us.store(3_000, Ordering::Relaxed);
+
+    // Phase B: saturated learner -> shrink to 1.
+    let mut last: Option<TrainResult> = None;
+    let mut phase_b_reports = 0;
+    while set.num_live_remotes() > 1 {
+        last = reports.next();
+        assert!(last.is_some(), "stream died in phase B");
+        phase_b_reports += 1;
+        assert!(
+            phase_b_reports < 150,
+            "phase B never converged back to 1 worker"
+        );
+    }
+
+    // No flap: exactly the decisions the two phases require, within a
+    // small tolerance for boundary jitter.
+    let a = last
+        .or_else(|| reports.next())
+        .unwrap()
+        .autoscale
+        .expect("autoscale stats attached");
+    assert!(a.decisions_up >= 3, "{a:?}");
+    assert!(a.decisions_down >= 3, "{a:?}");
+    assert!(
+        a.decisions_up + a.decisions_down <= 10,
+        "controller flapped: {a:?}"
+    );
+    assert_eq!(a.failed, 0, "{a:?}");
+
+    // The stream is still healthy at the end of the churn.
+    for _ in 0..4 {
+        assert!(reports.next().is_some());
+    }
+    println!(
+        "autoscale soak: {} reports up-phase, {} reports down-phase, \
+         decisions +{} -{}",
+        phase_a_reports, phase_b_reports, a.decisions_up, a.decisions_down
+    );
+}

@@ -13,6 +13,36 @@ use flowrl::ops::parallel_rollouts_from;
 use flowrl::policy::DummyPolicy;
 use flowrl::rollout::{CollectMode, RolloutWorker, WorkerSet};
 
+/// The `broadcast_sync` wedge bugfix at the WorkerSet level: a worker
+/// removed while `sync_weights` is mid-barrier (its apply stuck behind
+/// a blocked message) must be dropped from the wait set — the barrier
+/// returns instead of wedging the driver forever.  The blocked message
+/// is only released AFTER the barrier returns, so the old behavior
+/// deadlocks this test rather than passing by timing luck.
+#[test]
+fn sync_weights_survives_worker_removed_mid_barrier() {
+    let set = worker_set(2);
+    set.local.call(|w| w.set_weights(&[0.875])).unwrap();
+    let (gate_tx, gate_rx) = std::sync::mpsc::channel::<()>();
+    let w0 = set.remote(0).expect("live remote");
+    let parked = w0.call_deferred(move |_| {
+        let _ = gate_rx.recv();
+    });
+    while w0.queue_len() > 0 {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let set2 = set.clone();
+    let barrier = std::thread::spawn(move || set2.sync_weights());
+    std::thread::sleep(Duration::from_millis(30));
+    assert!(set.remove_worker(0));
+    barrier.join().expect("sync_weights wedged on a removed worker");
+    // The surviving remote applied the barrier version.
+    let w1 = set.remote(1).expect("live remote");
+    assert_eq!(w1.call(|w| w.get_weights()).unwrap(), vec![0.875]);
+    gate_tx.send(()).unwrap();
+    parked.recv().unwrap();
+}
+
 fn worker_set(n_remote: usize) -> WorkerSet {
     WorkerSet::new(n_remote, |_| {
         Box::new(|| {
@@ -33,8 +63,8 @@ fn killed_worker_rejoins_running_gather_async() {
     let set = worker_set(2);
     set.local.call(|w| w.set_weights(&[0.25])).unwrap();
     let mut it = parallel_rollouts_from(&set).gather_async_with_source(1);
-    let w0 = set.remote(0);
-    let w1 = set.remote(1);
+    let w0 = set.remote(0).expect("live remote");
+    let w1 = set.remote(1).expect("live remote");
 
     // The stream is live off both workers.
     for _ in 0..4 {
@@ -60,7 +90,7 @@ fn killed_worker_rejoins_running_gather_async() {
 
     // Restart: the replacement is published into the set's registry.
     assert_eq!(set.restart_dead(), vec![1]);
-    let fresh = set.remote(1);
+    let fresh = set.remote(1).expect("live remote");
     assert_ne!(fresh.id(), w1.id());
 
     // The SAME running gather — no rebuild — now yields the
@@ -91,7 +121,7 @@ fn restart_before_notices_drain_discards_stale_epoch() {
     // incarnation and shard 1 would fall silent.
     let set = worker_set(2);
     let mut it = parallel_rollouts_from(&set).gather_async_with_source(2);
-    let w1 = set.remote(1);
+    let w1 = set.remote(1).expect("live remote");
 
     for _ in 0..4 {
         assert!(it.next().is_some());
@@ -101,7 +131,7 @@ fn restart_before_notices_drain_discards_stale_epoch() {
     // Restart immediately: the dead incarnation's notices are still
     // queued (or in flight) when the replacement is published.
     assert_eq!(set.restart_dead(), vec![1]);
-    let fresh = set.remote(1);
+    let fresh = set.remote(1).expect("live remote");
 
     let mut fresh_items = 0;
     for _ in 0..96 {
@@ -125,7 +155,7 @@ fn killed_worker_rejoins_gather_sync_at_round_boundary() {
     let mut it = parallel_rollouts_from(&set).gather_sync();
     assert_eq!(it.next().unwrap().len(), 2);
 
-    let w0 = set.remote(0);
+    let w0 = set.remote(0).expect("live remote");
     assert!(w0.call(|_| -> () { panic!("fault injection") }).is_err());
     assert!(w0.await_poisoned(Duration::from_secs(2)));
 
@@ -143,7 +173,7 @@ fn killed_worker_rejoins_gather_sync_at_round_boundary() {
 #[test]
 fn sync_weights_reaches_restarted_workers() {
     let set = worker_set(2);
-    let w1 = set.remote(1);
+    let w1 = set.remote(1).expect("live remote");
     assert!(w1.call(|_| -> () { panic!("fault injection") }).is_err());
     assert!(w1.await_poisoned(Duration::from_secs(2)));
     // sync_weights with a dead remote: skipped, not fatal.
@@ -155,8 +185,10 @@ fn sync_weights_reaches_restarted_workers() {
     // registry (a build-time handle snapshot would miss it).
     set.local.call(|w| w.set_weights(&[0.5])).unwrap();
     set.sync_weights();
-    assert_eq!(set.remote(1).call(|w| w.get_weights()).unwrap(), vec![0.5]);
-    assert_eq!(set.remote(0).call(|w| w.get_weights()).unwrap(), vec![0.5]);
+    for i in [0, 1] {
+        let h = set.remote(i).expect("live remote");
+        assert_eq!(h.call(|w| w.get_weights()).unwrap(), vec![0.5]);
+    }
     // Versions are monotone across the restart.
     assert!(set.weight_cast_stats().version >= 2);
 }

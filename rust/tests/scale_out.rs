@@ -11,17 +11,19 @@
 //!
 //! These run on the Dummy env/policy, so they need no AOT artifacts.
 
-use std::collections::HashSet;
+use std::collections::{BTreeMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
 use flowrl::actor::{ActorHandle, ShardRegistry};
-use flowrl::env::{DummyEnv, Env};
+use flowrl::env::{DummyEnv, Env, MultiAgentCartPole};
 use flowrl::iter::ParIter;
 use flowrl::ops::parallel_rollouts_from;
-use flowrl::policy::DummyPolicy;
-use flowrl::rollout::{CollectMode, RolloutWorker, WorkerSet};
+use flowrl::policy::{DummyPolicy, Policy};
+use flowrl::rollout::{
+    CollectMode, MultiAgentRolloutWorker, RolloutWorker, WorkerSet,
+};
 
 fn worker_set(n_remote: usize) -> WorkerSet {
     WorkerSet::new(n_remote, |_| {
@@ -55,8 +57,10 @@ fn gather_async_observes_workers_added_by_scale_to() {
     let (added, removed) = set.scale_to(4).unwrap();
     assert_eq!(added, vec![2, 3]);
     assert!(removed.is_empty());
-    let new_ids: HashSet<u64> =
-        added.iter().map(|&i| set.remote(i).id()).collect();
+    let new_ids: HashSet<u64> = added
+        .iter()
+        .map(|&i| set.remote(i).expect("live remote").id())
+        .collect();
 
     // The SAME running gather must start yielding the new workers'
     // batches.
@@ -78,10 +82,8 @@ fn gather_async_observes_workers_added_by_scale_to() {
     );
     // The additions sampled with the learner's weights, not blanks.
     for &i in &added {
-        assert_eq!(
-            set.remote(i).call(|w| w.get_weights()).unwrap(),
-            vec![0.625]
-        );
+        let h = set.remote(i).expect("live remote");
+        assert_eq!(h.call(|w| w.get_weights()).unwrap(), vec![0.625]);
     }
 }
 
@@ -92,8 +94,9 @@ fn stream_survives_scale_down_then_back_up() {
     for _ in 0..8 {
         assert!(it.next().is_some());
     }
-    let removed_ids: HashSet<u64> =
-        [set.remote(2).id(), set.remote(3).id()].into();
+    let removed_ids: HashSet<u64> = [2, 3]
+        .map(|i| set.remote(i).expect("live remote").id())
+        .into();
     let (added, removed) = set.scale_to(2).unwrap();
     assert!(added.is_empty());
     assert_eq!(removed, vec![3, 2]);
@@ -113,7 +116,7 @@ fn stream_survives_scale_down_then_back_up() {
     // rejoin the same stream.
     let (added, _) = set.scale_to(3).unwrap();
     assert_eq!(added, vec![2]);
-    let revived = set.remote(2).id();
+    let revived = set.remote(2).expect("live remote").id();
     let mut seen_revived = false;
     for _ in 0..48 {
         let (_b, src) = it.next().unwrap();
@@ -182,7 +185,7 @@ fn grow_kill_restart_keeps_epochs_monotone() {
     assert_eq!(set.registry().epoch(1), 0, "grown shards start at epoch 0");
 
     for round in 1..=2u64 {
-        let victim = set.remote(1);
+        let victim = set.remote(1).expect("live remote");
         let _ = victim.call(|_| -> () { panic!("fault injection") });
         assert!(victim.await_poisoned(Duration::from_secs(5)));
         assert_eq!(set.restart_dead(), vec![1]);
@@ -192,7 +195,7 @@ fn grow_kill_restart_keeps_epochs_monotone() {
             "epoch must advance monotonically across restarts"
         );
         // The replacement incarnation feeds the same running gather.
-        let fresh = set.remote(1).id();
+        let fresh = set.remote(1).expect("live remote").id();
         let mut seen_fresh = false;
         for _ in 0..48 {
             let (_b, src) = it.next().expect("stream must keep flowing");
@@ -242,6 +245,220 @@ fn grow_beyond_tag_space_errors_cleanly() {
     assert_eq!(ids.len(), 3);
 }
 
+/// The `remote(i)` tombstone bugfix: a scaled-down set answers `None`
+/// for the hole instead of panicking the driver, and the audited
+/// post-scale-down paths (weight sync, metrics draining) keep working.
+#[test]
+fn remote_on_tombstoned_slot_returns_none() {
+    let set = worker_set(3);
+    assert!(set.remove_worker(1));
+    assert!(set.remote(1).is_none(), "tombstone must not panic");
+    assert!(set.remote(0).is_some());
+    assert!(set.remote(2).is_some());
+    // Audited callers survive the hole.
+    set.sync_weights();
+    let (_eps, _steps) = set.collect_metrics();
+    // The slot revives on the next add and answers again.
+    assert_eq!(set.add_worker().unwrap(), 1);
+    assert!(set.remote(1).is_some());
+}
+
+/// The capacity-reclaim bugfix at the WorkerSet level: many scale
+/// up/down cycles under one running gather keep the stream healthy —
+/// an unreclaimed (or over-reclaimed) in-flight bound would eventually
+/// stall or deadlock the gather.
+#[test]
+fn scale_cycles_keep_stream_healthy() {
+    let set = worker_set(1);
+    let mut it = parallel_rollouts_from(&set).gather_async_with_source(2);
+    for _ in 0..4 {
+        assert!(it.next().is_some());
+    }
+    for cycle in 0..6 {
+        set.scale_to(3).unwrap();
+        for _ in 0..12 {
+            assert!(it.next().is_some(), "cycle {cycle}: stalled after up");
+        }
+        set.scale_to(1).unwrap();
+        for _ in 0..12 {
+            assert!(
+                it.next().is_some(),
+                "cycle {cycle}: stalled after down"
+            );
+        }
+    }
+    let sc = set.scale_stats();
+    assert_eq!((sc.added, sc.removed, sc.live), (12, 12, 1));
+    assert_eq!(sc.slots, 3, "tombstones reused, no slot growth");
+}
+
+// ---------------------------------------------------------------------
+// Multi-agent WorkerSet: the same scale-out acceptance as above, on the
+// MultiAgentRolloutWorker instantiation of the generic elastic owner.
+// ---------------------------------------------------------------------
+
+/// A Dummy-backed multi-agent set (no AOT artifacts): 2 policies
+/// ("even"/"odd"), running the **shipped** per-policy spawn-and-sync
+/// protocol (`algorithms::ma_sync_protocol`) so these tests cover what
+/// `ma_worker_set` actually does.
+fn ma_set(n_remote: usize) -> WorkerSet<MultiAgentRolloutWorker> {
+    WorkerSet::with_protocol(
+        "ma_local",
+        "ma_worker",
+        n_remote,
+        |i| {
+            Box::new(move || {
+                let env = MultiAgentCartPole::new(2, i as u64, |a| {
+                    if a % 2 == 0 { "even".into() } else { "odd".into() }
+                });
+                let mut policies: BTreeMap<String, Box<dyn Policy>> =
+                    BTreeMap::new();
+                policies.insert("even".into(), Box::new(DummyPolicy::new(0.1)));
+                policies.insert("odd".into(), Box::new(DummyPolicy::new(0.1)));
+                MultiAgentRolloutWorker::new(env, policies, 4)
+            })
+        },
+        flowrl::algorithms::ma_sync_protocol(),
+    )
+}
+
+/// Multi-agent mirror of the single-agent acceptance criterion: a
+/// running `gather_async` over a multi-agent set observes completions
+/// from workers added by `scale_to` — and every added worker starts
+/// with **both** policies' learner weights.
+#[test]
+fn ma_gather_async_observes_workers_added_by_scale_to() {
+    let set = ma_set(2);
+    set.local
+        .call(|w| {
+            w.set_weights("even", &[0.25]);
+            w.set_weights("odd", &[0.75]);
+        })
+        .unwrap();
+    let registry = set.registry().clone();
+    let mut it = ParIter::from_registry(registry, |w| Some(w.sample()))
+        .gather_async_with_source(1);
+    for _ in 0..4 {
+        let (ma, _src) = it.next().expect("stream must flow");
+        assert_eq!(ma.count(), 8); // 2 agents x fragment 4
+    }
+
+    let (added, removed) = set.scale_to(4).unwrap();
+    assert_eq!(added, vec![2, 3]);
+    assert!(removed.is_empty());
+    let new_ids: HashSet<u64> = added
+        .iter()
+        .map(|&i| set.remote(i).expect("live remote").id())
+        .collect();
+
+    let mut seen_new = HashSet::new();
+    for _ in 0..64 {
+        let (_ma, src) = it.next().expect("stream must keep flowing");
+        if new_ids.contains(&src.id()) {
+            seen_new.insert(src.id());
+        }
+        if seen_new.len() == new_ids.len() {
+            break;
+        }
+    }
+    assert_eq!(
+        seen_new.len(),
+        new_ids.len(),
+        "grown multi-agent workers never joined the running gather"
+    );
+    // The per-policy spawn-and-sync delivered BOTH policies' weights.
+    for &i in &added {
+        let h = set.remote(i).expect("live remote");
+        let (even, odd) = h
+            .call(|w| (w.get_weights("even"), w.get_weights("odd")))
+            .unwrap();
+        assert_eq!(even, vec![0.25]);
+        assert_eq!(odd, vec![0.75]);
+    }
+}
+
+/// Multi-agent scale-down mid-plan: tombstoned workers drain out of the
+/// running stream (never attributed), and the reused slot rejoins.
+#[test]
+fn ma_stream_survives_scale_down_then_back_up() {
+    let set = ma_set(4);
+    let registry = set.registry().clone();
+    let mut it = ParIter::from_registry(registry, |w| Some(w.sample()))
+        .gather_async_with_source(2);
+    for _ in 0..8 {
+        assert!(it.next().is_some());
+    }
+    let removed_ids: HashSet<u64> = [2, 3]
+        .map(|i| set.remote(i).expect("live remote").id())
+        .into();
+    let (added, removed) = set.scale_to(2).unwrap();
+    assert!(added.is_empty());
+    assert_eq!(removed, vec![3, 2]);
+    assert_eq!(set.num_live_remotes(), 2);
+    // A tombstoned slot answers None instead of panicking the driver.
+    assert!(set.remote(2).is_none());
+
+    for _ in 0..24 {
+        let (_ma, src) = it.next().expect("stream must survive scale-down");
+        assert!(
+            !removed_ids.contains(&src.id()),
+            "item attributed to a removed multi-agent worker"
+        );
+    }
+
+    let (added, _) = set.scale_to(3).unwrap();
+    assert_eq!(added, vec![2]);
+    let revived = set.remote(2).expect("live remote").id();
+    let mut seen_revived = false;
+    for _ in 0..48 {
+        if it.next().unwrap().1.id() == revived {
+            seen_revived = true;
+            break;
+        }
+    }
+    assert!(seen_revived, "reused multi-agent slot never rejoined");
+}
+
+/// Multi-agent restart: kill a worker mid-stream, `restart_dead`
+/// publishes a replacement carrying both policies' weights into the
+/// SAME running gather.
+#[test]
+fn ma_killed_worker_rejoins_running_gather() {
+    let set = ma_set(2);
+    set.local
+        .call(|w| {
+            w.set_weights("even", &[0.5]);
+            w.set_weights("odd", &[1.5]);
+        })
+        .unwrap();
+    let registry = set.registry().clone();
+    let mut it = ParIter::from_registry(registry, |w| Some(w.sample()))
+        .gather_async_with_source(1);
+    for _ in 0..4 {
+        assert!(it.next().is_some());
+    }
+    let victim = set.remote(1).expect("live remote");
+    let _ = victim.call(|_| -> () { panic!("fault injection") });
+    assert!(victim.await_poisoned(Duration::from_secs(5)));
+    assert_eq!(set.restart_dead(), vec![1]);
+    let fresh = set.remote(1).expect("live remote");
+    assert_ne!(fresh.id(), victim.id());
+    let mut fresh_items = 0;
+    for _ in 0..64 {
+        let (_ma, src) = it.next().expect("stream must keep flowing");
+        assert_ne!(src.id(), victim.id(), "item attributed to the corpse");
+        if src.id() == fresh.id() {
+            fresh_items += 1;
+        }
+    }
+    assert!(fresh_items > 0, "ma replacement never rejoined");
+    let (even, odd) = fresh
+        .call(|w| (w.get_weights("even"), w.get_weights("odd")))
+        .unwrap();
+    assert_eq!(even, vec![0.5]);
+    assert_eq!(odd, vec![1.5]);
+}
+
 /// The chaos soak behind `tools/ci.sh --chaos`: grow the set 2 -> 8
 /// while killing (and restarting) one worker per round under a running
 /// `gather_async`, with weight broadcasts in flight.  Asserts:
@@ -287,7 +504,7 @@ fn chaos_soak_grow_kill_converge() {
         // Kill one live worker and restart it into the same stream.
         let live = set.registry().live_indices();
         let victim_idx = live[round % live.len()];
-        let victim = set.remote(victim_idx);
+        let victim = set.remote(victim_idx).expect("live remote");
         let _ = victim.call(|_| -> () { panic!("chaos kill") });
         assert!(victim.await_poisoned(Duration::from_secs(5)));
         assert_eq!(set.restart_dead(), vec![victim_idx]);

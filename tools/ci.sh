@@ -10,10 +10,13 @@
 #                         # fast as the crate grows.
 #   tools/ci.sh --smoke   # also *execute* every bench binary with tiny
 #                         # iteration counts (implied by the full run)
-#   tools/ci.sh --chaos   # run ONLY the elastic scale-out chaos soak
-#                         # (rust/tests/scale_out.rs, the #[ignore]d
-#                         # grow-2->8-while-killing-one-per-round test)
-#                         # in release mode under a hard timeout
+#   tools/ci.sh --chaos   # run ONLY the chaos soaks in release mode
+#                         # under hard timeouts: the elastic scale-out
+#                         # soak (rust/tests/scale_out.rs, #[ignore]d
+#                         # grow-2->8-while-killing-one-per-round) and
+#                         # the autoscale soak (rust/tests/autoscale.rs,
+#                         # #[ignore]d idle->grow / busy->shrink
+#                         # controller convergence)
 #
 # Every step prints its own wall-clock seconds (==> ... [Ns]) so a slow
 # gate names the stage that slowed down.
@@ -60,12 +63,15 @@ step() {
 
 if [ "$chaos" -eq 1 ]; then
   # The chaos gate: build untimed (cache-dependent), then run the
-  # #[ignore]d soak under a hard timeout — the test itself is designed
-  # to finish well under 60s, so a hang is a failure, not a wait.
+  # #[ignore]d soaks under hard timeouts — each is designed to finish
+  # well under 60s, so a hang is a failure, not a wait.
   step "cargo build --release --tests (chaos prebuild)" \
     cargo build --release --tests
   step "chaos soak: scale_out (grow 2->8 under kills, <60s)" \
     timeout 120 cargo test --release --test scale_out -- \
+    --ignored --nocapture
+  step "autoscale soak: controller converges (idle->grow, busy->shrink)" \
+    timeout 120 cargo test --release --test autoscale -- \
     --ignored --nocapture
   echo "CI OK (chaos) [$((SECONDS - ci_start))s]"
   exit 0

@@ -17,7 +17,11 @@ Rules enforced per file:
   * BENCH_elastic.json additionally must allowlist (and, once results
     are recorded, cover) the scale-out ops "scale_up_latency" and
     "growth_throughput" — the schema rust/benches/elastic_scale.rs
-    emits.
+    emits;
+  * BENCH_autoscale.json must allowlist (and, once results are
+    recorded, cover) "time_to_converge" and "steady_utilization" — the
+    schema rust/benches/autoscale.rs emits ("percent" rows are the
+    learner busy fraction x 100 and must stay within [0, 100]).
 
 Exit code 0 = all files pass; 1 = any violation (listed on stderr).
 
@@ -35,6 +39,7 @@ KNOWN_UNITS = {
     "ms_per_op",
     "steps_per_s",
     "items_per_s",
+    "percent",
 }
 REQUIRED_KEYS = ("bench", "units", "how_to_regenerate", "results")
 
@@ -42,6 +47,7 @@ REQUIRED_KEYS = ("bench", "units", "how_to_regenerate", "results")
 # contain (and, once results exist, cover with at least one row each).
 REQUIRED_OPS = {
     "elastic": ("scale_up_latency", "growth_throughput"),
+    "autoscale": ("time_to_converge", "steady_utilization"),
 }
 
 
@@ -108,13 +114,17 @@ def check_file(path: pathlib.Path) -> list:
             err(f"{where}: op {op!r} not in the file's 'ops' allowlist")
         else:
             seen_ops.add(op)
-        if mixed_units:
-            row_units = row.get("units")
-            if row_units not in KNOWN_UNITS:
-                err(
-                    f'{where}: file units are "mixed", so the row needs '
-                    f"its own known 'units' (got {row_units!r})"
-                )
+        row_units = row.get("units") if mixed_units else doc["units"]
+        if mixed_units and row_units not in KNOWN_UNITS:
+            err(
+                f'{where}: file units are "mixed", so the row needs '
+                f"its own known 'units' (got {row_units!r})"
+            )
+        if row_units == "percent":
+            val = row.get("percent")
+            if not isinstance(val, (int, float)) or isinstance(val, bool) \
+                    or not 0 <= val <= 100:
+                err(f"{where}.percent: must be in [0, 100] (got {val!r})")
         for key, value in row.items():
             if isinstance(value, bool):
                 continue
