@@ -1,0 +1,745 @@
+//! The fault-injection plane: process-global, seeded, deterministic
+//! failpoints threaded through the control plane's hot sites.
+//!
+//! Chaos testing this runtime used to mean "kill a thread and hope the
+//! schedule cooperates".  A failpoint turns a failure into a *scripted*
+//! event: a rule keyed by site name (see the `SITE_*` constants) and an
+//! optional actor-name substring, armed with a probability, an
+//! `nth`-occurrence trigger, and a fire budget, executing one of five
+//! actions:
+//!
+//! * [`FaultAction::Delay`] — sleep N ms at the site (a slow shard);
+//! * [`FaultAction::Hang`] — block at the site until the rule is
+//!   [`clear`]ed or the actor is killed ([`ActorHandle::kill`]), in
+//!   which case the hang panics and the normal poison/supervision
+//!   machinery takes over (a wedged shard, *recoverable* by deadline
+//!   supervision);
+//! * [`FaultAction::PanicOnce`] — panic at the site (a crash; the rule
+//!   disarms after firing so the replacement comes up clean — re-inject
+//!   it to script a crash *loop*);
+//! * [`FaultAction::DropReply`] — at a send site, silently drop the
+//!   envelope: a `call`'s guard resolves to `ActorDied`, a cast
+//!   vanishes (a lost message);
+//! * [`FaultAction::FullMailbox`] — at a send site, behave as if the
+//!   recipient's mailbox were full: `try_*` paths return `Full`,
+//!   fire-and-forget paths shed (backpressure without the load).
+//!
+//! **Cost when disarmed: one relaxed atomic load per site.**  The
+//! registry arms a global counter; every site checks it before touching
+//! any lock, so the plane is compiled in permanently (no cfg flag — the
+//! code you test is the code you ship) without showing up in the
+//! mailbox fast path (`tests/actor_alloc.rs` holds with it enabled).
+//!
+//! Rules come from [`inject`]/[`inject_with`] (tests, tools) or from
+//! the environment at first use: `FLOWRL_FAULTS` holds a `;`-separated
+//! schedule, e.g.
+//!
+//! ```text
+//! FLOWRL_FAULTS="actor::loop@rollout-2=hang;mailbox::cast=delay:5:p0.1:n3"
+//! ```
+//!
+//! (site `[@actor-substring]` `=` action, with `delay:<ms>`, and
+//! optional `p<prob>`, `n<nth>`, `x<max_fires>` suffix tokens), and
+//! `FLOWRL_FAULT_SEED` seeds the probability draws so a stochastic
+//! schedule replays identically.
+//!
+//! [`ActorHandle::kill`]: super::ActorHandle::kill
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+use crate::util::Rng;
+
+// ---------------------------------------------------------------------
+// Site names
+// ---------------------------------------------------------------------
+
+/// `ActorHandle::cast` / `try_cast`, evaluated on the sending thread
+/// before the envelope reaches the ring.
+pub const SITE_CAST: &str = "mailbox::cast";
+/// `ActorHandle::call` / `call_deferred`, sending side.
+pub const SITE_CALL: &str = "mailbox::call";
+/// `ActorHandle::try_call_deferred`, sending side.
+pub const SITE_TRY_CALL_DEFERRED: &str = "mailbox::try_call_deferred";
+/// The supervised actor loop, on the actor thread, once per message,
+/// *inside* the supervision `catch_unwind` (a `PanicOnce` here poisons
+/// the actor exactly like a panicking message body).
+pub const SITE_ACTOR_LOOP: &str = "actor::loop";
+/// `WeightCaster::broadcast`/`broadcast_sync`, once per recipient lane,
+/// on the broadcasting thread.
+pub const SITE_CASTER_LANE: &str = "caster::lane";
+/// `RolloutWorker::sample`, on the worker's actor thread.
+pub const SITE_ROLLOUT_SAMPLE: &str = "rollout::sample";
+
+/// Default seed for the registry's probability draws
+/// (`FLOWRL_FAULT_SEED` overrides).
+pub const DEFAULT_FAULT_SEED: u64 = 0x5EED;
+
+// ---------------------------------------------------------------------
+// Actions + rules
+// ---------------------------------------------------------------------
+
+/// What a fired failpoint does at its site (see the module docs for
+/// per-site semantics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Sleep this many milliseconds at the site.
+    Delay(u64),
+    /// Block at the site until the rule is [`clear`]ed (resumes
+    /// normally) or the actor is killed (panics into supervision).
+    Hang,
+    /// Panic at the site; the rule disarms after firing.
+    PanicOnce,
+    /// Send sites: drop the envelope silently.
+    DropReply,
+    /// Send sites: behave as if the recipient's mailbox were full.
+    FullMailbox,
+}
+
+struct Rule {
+    id: u64,
+    site: String,
+    /// Substring match against the actor name; `None` matches any.
+    actor: Option<String>,
+    action: FaultAction,
+    probability: f64,
+    /// Fire only on exactly the `nth` matching hit (1-based).
+    nth: Option<u64>,
+    /// Disarm after this many fires (`PanicOnce` defaults to 1).
+    max_fires: Option<u64>,
+    hits: u64,
+    fired: u64,
+    /// Disarmed rules stay resident (a hanging occurrence polls its
+    /// rule until [`clear`]) but never fire again.
+    disarmed: bool,
+}
+
+struct FaultState {
+    rules: Vec<Rule>,
+    rng: Rng,
+    next_id: u64,
+}
+
+/// Count of *armed* rules; `u64::MAX` = registry not yet initialized
+/// (the sentinel routes the very first check through init, so an
+/// env-var schedule arms without any `inject` call while the disarmed
+/// steady state stays a single relaxed load).
+static ARMED: AtomicU64 = AtomicU64::new(u64::MAX);
+
+static STATE: OnceLock<Mutex<FaultState>> = OnceLock::new();
+
+/// True if any failpoint rule is currently armed.  This is the whole
+/// fast path: sites return immediately when it is false.
+#[inline]
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed) != 0
+}
+
+fn state() -> &'static Mutex<FaultState> {
+    STATE.get_or_init(|| {
+        let seed = std::env::var("FLOWRL_FAULT_SEED")
+            .ok()
+            .and_then(|s| s.trim().parse().ok())
+            .unwrap_or(DEFAULT_FAULT_SEED);
+        let mut st = FaultState {
+            rules: Vec::new(),
+            rng: Rng::new(seed),
+            next_id: 1,
+        };
+        if let Ok(sched) = std::env::var("FLOWRL_FAULTS") {
+            match parse_schedule(&sched) {
+                Ok(parsed) => {
+                    for p in parsed {
+                        push_rule(&mut st, p);
+                    }
+                }
+                Err(e) => {
+                    eprintln!("flowrl: ignoring bad FLOWRL_FAULTS: {e}");
+                }
+            }
+        }
+        sync_armed(&st);
+        Mutex::new(st)
+    })
+}
+
+fn sync_armed(st: &FaultState) {
+    let n = st.rules.iter().filter(|r| !r.disarmed).count() as u64;
+    ARMED.store(n, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------
+// Schedule parsing (FLOWRL_FAULTS)
+// ---------------------------------------------------------------------
+
+struct ParsedRule {
+    site: String,
+    actor: Option<String>,
+    action: FaultAction,
+    probability: f64,
+    nth: Option<u64>,
+    max_fires: Option<u64>,
+}
+
+/// Grammar per `;`-separated entry: `site[@actor]=action[:opts...]`.
+/// Actions: `delay:<ms>`, `hang`, `panic_once`, `drop_reply`,
+/// `full_mailbox`.  Option tokens: `p<float>` (probability),
+/// `n<u64>` (nth hit), `x<u64>` (max fires).
+fn parse_schedule(s: &str) -> Result<Vec<ParsedRule>, String> {
+    let mut out = Vec::new();
+    for entry in s.split(';') {
+        let entry = entry.trim();
+        if entry.is_empty() {
+            continue;
+        }
+        let (lhs, rhs) = entry
+            .split_once('=')
+            .ok_or_else(|| format!("{entry:?}: missing '='"))?;
+        let (site, actor) = match lhs.split_once('@') {
+            Some((s, a)) => (s.trim(), Some(a.trim().to_string())),
+            None => (lhs.trim(), None),
+        };
+        if site.is_empty() {
+            return Err(format!("{entry:?}: empty site"));
+        }
+        let mut tokens = rhs.split(':');
+        let name = tokens.next().unwrap_or("").trim();
+        let action = match name {
+            "hang" => FaultAction::Hang,
+            "panic_once" => FaultAction::PanicOnce,
+            "drop_reply" => FaultAction::DropReply,
+            "full_mailbox" => FaultAction::FullMailbox,
+            "delay" => {
+                let ms = tokens
+                    .next()
+                    .and_then(|t| t.trim().parse().ok())
+                    .ok_or_else(|| {
+                        format!("{entry:?}: delay needs delay:<ms>")
+                    })?;
+                FaultAction::Delay(ms)
+            }
+            other => return Err(format!("{entry:?}: unknown action {other:?}")),
+        };
+        let mut probability = 1.0;
+        let mut nth = None;
+        let mut max_fires = None;
+        for tok in tokens {
+            let tok = tok.trim();
+            if let Some(p) = tok.strip_prefix('p') {
+                probability = p
+                    .parse()
+                    .map_err(|_| format!("{entry:?}: bad probability {tok:?}"))?;
+            } else if let Some(n) = tok.strip_prefix('n') {
+                nth = Some(n.parse().map_err(|_| {
+                    format!("{entry:?}: bad nth {tok:?}")
+                })?);
+            } else if let Some(x) = tok.strip_prefix('x') {
+                max_fires = Some(x.parse().map_err(|_| {
+                    format!("{entry:?}: bad max_fires {tok:?}")
+                })?);
+            } else {
+                return Err(format!("{entry:?}: unknown option {tok:?}"));
+            }
+        }
+        if !(0.0..=1.0).contains(&probability) {
+            return Err(format!("{entry:?}: probability out of [0,1]"));
+        }
+        out.push(ParsedRule {
+            site: site.to_string(),
+            actor,
+            action,
+            probability,
+            nth,
+            max_fires,
+        });
+    }
+    Ok(out)
+}
+
+fn push_rule(st: &mut FaultState, p: ParsedRule) -> u64 {
+    let id = st.next_id;
+    st.next_id += 1;
+    // PanicOnce disarms after one fire unless the caller widened it.
+    let max_fires = match (p.action, p.max_fires) {
+        (FaultAction::PanicOnce, None) => Some(1),
+        (_, m) => m,
+    };
+    st.rules.push(Rule {
+        id,
+        site: p.site,
+        actor: p.actor,
+        action: p.action,
+        probability: p.probability,
+        nth: p.nth,
+        max_fires,
+        hits: 0,
+        fired: 0,
+        disarmed: false,
+    });
+    id
+}
+
+// ---------------------------------------------------------------------
+// Public arming API
+// ---------------------------------------------------------------------
+
+/// Arm a rule that always fires at `site` for actors whose name
+/// contains `actor` (`None` = any actor).  Returns the rule id for
+/// [`clear`].  `PanicOnce` rules disarm themselves after one fire.
+pub fn inject(site: &str, actor: Option<&str>, action: FaultAction) -> u64 {
+    inject_with(site, actor, action, 1.0, None, None)
+}
+
+/// [`inject`] with full arming control: `probability` gates each hit
+/// through the registry's seeded RNG, `nth` fires only on exactly the
+/// nth matching hit, `max_fires` disarms the rule after that many
+/// fires (disarmed rules stay resident until [`clear`]ed, so a hanging
+/// occurrence can still be released).
+pub fn inject_with(
+    site: &str,
+    actor: Option<&str>,
+    action: FaultAction,
+    probability: f64,
+    nth: Option<u64>,
+    max_fires: Option<u64>,
+) -> u64 {
+    let mut st = state().lock().unwrap();
+    let id = push_rule(
+        &mut st,
+        ParsedRule {
+            site: site.to_string(),
+            actor: actor.map(|a| a.to_string()),
+            action,
+            probability: probability.clamp(0.0, 1.0),
+            nth,
+            max_fires,
+        },
+    );
+    sync_armed(&st);
+    id
+}
+
+/// Remove a rule entirely (releases any occurrence currently hanging
+/// on it).  Returns false if the id is unknown (already cleared).
+///
+/// Prefer this over a global wipe: tests in one binary run
+/// concurrently, and rules are process-global.
+pub fn clear(id: u64) -> bool {
+    let mut st = state().lock().unwrap();
+    let before = st.rules.len();
+    st.rules.retain(|r| r.id != id);
+    sync_armed(&st);
+    st.rules.len() != before
+}
+
+/// Number of resident rules (armed + disarmed-but-unclicked).
+pub fn active_rules() -> usize {
+    state().lock().unwrap().rules.len()
+}
+
+/// Counters a rule has accumulated: `(hits, fired)`.  `None` if the
+/// rule was cleared.
+pub fn rule_counters(id: u64) -> Option<(u64, u64)> {
+    let st = state().lock().unwrap();
+    st.rules.iter().find(|r| r.id == id).map(|r| (r.hits, r.fired))
+}
+
+fn rule_resident(id: u64) -> bool {
+    let st = state().lock().unwrap();
+    st.rules.iter().any(|r| r.id == id)
+}
+
+// ---------------------------------------------------------------------
+// Per-thread actor context (set by the supervised loop)
+// ---------------------------------------------------------------------
+
+/// What a failpoint on an actor thread knows about its host: the name
+/// rules match against, and the cooperative kill flag a `Hang` polls.
+#[derive(Clone)]
+pub(crate) struct ActorCtx {
+    pub(crate) name: Arc<str>,
+    pub(crate) killed: Arc<AtomicBool>,
+}
+
+thread_local! {
+    static ACTOR_CTX: std::cell::RefCell<Option<ActorCtx>> =
+        const { std::cell::RefCell::new(None) };
+}
+
+/// Install the actor context on the current thread (the supervised
+/// loop calls this once at thread start).
+pub(crate) fn set_actor_ctx(ctx: ActorCtx) {
+    ACTOR_CTX.with(|c| *c.borrow_mut() = Some(ctx));
+}
+
+fn current_ctx() -> Option<ActorCtx> {
+    ACTOR_CTX.with(|c| c.borrow().clone())
+}
+
+// ---------------------------------------------------------------------
+// Evaluation
+// ---------------------------------------------------------------------
+
+/// Decide (under the registry lock) whether any rule fires for
+/// `site`/`actor`; the action executes *after* the lock is released so
+/// a panic can never poison the registry mutex.
+fn fire(site: &str, actor: &str) -> Option<(u64, FaultAction)> {
+    let mut st = state().lock().unwrap();
+    let st = &mut *st;
+    for r in st.rules.iter_mut() {
+        if r.disarmed || r.site != site {
+            continue;
+        }
+        if let Some(a) = &r.actor {
+            if !actor.contains(a.as_str()) {
+                continue;
+            }
+        }
+        r.hits += 1;
+        if let Some(n) = r.nth {
+            if r.hits != n {
+                if r.hits > n {
+                    // Can never fire again: restore the fast path.
+                    r.disarmed = true;
+                    sync_armed(st);
+                }
+                continue;
+            }
+        }
+        if r.probability < 1.0 && !st.rng.chance(r.probability) {
+            continue;
+        }
+        r.fired += 1;
+        let done = r.max_fires.is_some_and(|m| r.fired >= m)
+            || (r.nth.is_some() && r.max_fires.is_none());
+        let out = (r.id, r.action);
+        if done {
+            r.disarmed = true;
+            sync_armed(st);
+        }
+        return Some(out);
+    }
+    None
+}
+
+/// Block until the rule is cleared or `killed` flips; a kill panics so
+/// the hang resolves through the normal supervision path (poison,
+/// death notices, restart).
+fn hang(id: u64, killed: Option<Arc<AtomicBool>>) {
+    loop {
+        if !rule_resident(id) {
+            return; // released: resume as if the site never fired
+        }
+        if let Some(k) = &killed {
+            if k.load(Ordering::Relaxed) {
+                panic!("flowrl fault plane: hung actor killed (rule {id})");
+            }
+        }
+        std::thread::sleep(Duration::from_micros(100));
+    }
+}
+
+/// Actor-thread failpoint (sites [`SITE_ACTOR_LOOP`],
+/// [`SITE_ROLLOUT_SAMPLE`], or any site user code plants on an actor
+/// thread).  Executes `Delay`/`Hang`/`PanicOnce` in place; the
+/// send-only actions (`DropReply`, `FullMailbox`) are ignored here.
+/// One relaxed atomic load when no rule is armed.
+#[inline]
+pub fn failpoint(site: &str) {
+    if !armed() {
+        return;
+    }
+    failpoint_slow(site);
+}
+
+#[cold]
+fn failpoint_slow(site: &str) {
+    let ctx = current_ctx();
+    let name = ctx.as_ref().map(|c| c.name.as_ref()).unwrap_or("");
+    let Some((id, action)) = fire(site, name) else { return };
+    match action {
+        FaultAction::Delay(ms) => {
+            std::thread::sleep(Duration::from_millis(ms));
+        }
+        FaultAction::Hang => {
+            hang(id, ctx.map(|c| c.killed));
+        }
+        FaultAction::PanicOnce => {
+            panic!("flowrl fault plane: panic_once at {site} (rule {id})");
+        }
+        FaultAction::DropReply | FaultAction::FullMailbox => {}
+    }
+}
+
+/// What a *send* site does when its failpoint fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum SendFault {
+    /// Drop the envelope silently (guards resolve as a death would).
+    Drop,
+    /// Pretend the recipient's mailbox is full.
+    Full,
+}
+
+/// Send-side failpoint (sites [`SITE_CAST`], [`SITE_CALL`],
+/// [`SITE_TRY_CALL_DEFERRED`], [`SITE_CASTER_LANE`]); `actor` is the
+/// *recipient's* name.  `Delay`/`Hang`/`PanicOnce` execute on the
+/// sending thread right here (a hang at a send site wedges the sender
+/// until [`clear`] — there is no kill flag to poll); `DropReply` and
+/// `FullMailbox` are returned for the caller to enact on its envelope.
+/// One relaxed atomic load when no rule is armed.
+#[inline]
+pub(crate) fn send_failpoint(site: &str, actor: &str) -> Option<SendFault> {
+    if !armed() {
+        return None;
+    }
+    send_failpoint_slow(site, actor)
+}
+
+#[cold]
+fn send_failpoint_slow(site: &str, actor: &str) -> Option<SendFault> {
+    let (id, action) = fire(site, actor)?;
+    match action {
+        FaultAction::Delay(ms) => {
+            std::thread::sleep(Duration::from_millis(ms));
+            None
+        }
+        FaultAction::Hang => {
+            hang(id, None);
+            None
+        }
+        FaultAction::PanicOnce => {
+            panic!("flowrl fault plane: panic_once at {site} (rule {id})");
+        }
+        FaultAction::DropReply => Some(SendFault::Drop),
+        FaultAction::FullMailbox => Some(SendFault::Full),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fault counters (deadline supervision -> TrainResult)
+// ---------------------------------------------------------------------
+
+/// Shared counters the deadline-supervision layer increments and the
+/// metrics operators snapshot into `TrainResult::faults` — same Arc
+/// pattern as `ScaleCounters`.
+#[derive(Debug, Default)]
+pub struct FaultCounters {
+    suspects: AtomicU64,
+    forced_restarts: AtomicU64,
+    breaker_trips: AtomicU64,
+}
+
+impl FaultCounters {
+    /// A shard blew its dispatch deadline and was declared suspect.
+    pub fn note_suspect(&self) {
+        self.suspects.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A suspect (or crashed) worker was force-restarted under the
+    /// `RestartPolicy`.
+    pub fn note_forced_restart(&self) {
+        self.forced_restarts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A slot exhausted its restart budget and was breaker-retired.
+    pub fn note_breaker_trip(&self) {
+        self.breaker_trips.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> FaultStats {
+        FaultStats {
+            suspects: self.suspects.load(Ordering::Relaxed),
+            forced_restarts: self.forced_restarts.load(Ordering::Relaxed),
+            breaker_trips: self.breaker_trips.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time fault-supervision counters (attached to
+/// `TrainResult::faults`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Deadline expiries: a dispatched shard went silent past its
+    /// deadline and was written off + force-killed.
+    pub suspects: u64,
+    /// Restarts performed by the `RestartPolicy` (budgeted, backed
+    /// off).
+    pub forced_restarts: u64,
+    /// Slots permanently retired by the restart circuit breaker.
+    pub breaker_trips: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Rules are process-global and unit tests share one binary, so
+    // every test uses its own site/actor names and clears its rules.
+
+    #[test]
+    fn parse_schedule_full_grammar() {
+        let rules = parse_schedule(
+            "actor::loop@rollout-2=hang; mailbox::cast=delay:5:p0.25:n3 ;\
+             rollout::sample=panic_once:x2;;caster::lane@w=full_mailbox",
+        )
+        .unwrap();
+        assert_eq!(rules.len(), 4);
+        assert_eq!(rules[0].site, "actor::loop");
+        assert_eq!(rules[0].actor.as_deref(), Some("rollout-2"));
+        assert_eq!(rules[0].action, FaultAction::Hang);
+        assert_eq!(rules[1].action, FaultAction::Delay(5));
+        assert_eq!(rules[1].probability, 0.25);
+        assert_eq!(rules[1].nth, Some(3));
+        assert_eq!(rules[2].action, FaultAction::PanicOnce);
+        assert_eq!(rules[2].max_fires, Some(2));
+        assert_eq!(rules[3].action, FaultAction::FullMailbox);
+    }
+
+    #[test]
+    fn parse_schedule_rejects_garbage() {
+        assert!(parse_schedule("no_equals_sign").is_err());
+        assert!(parse_schedule("site=warp_core_breach").is_err());
+        assert!(parse_schedule("site=delay").is_err());
+        assert!(parse_schedule("site=hang:p1.5").is_err());
+        assert!(parse_schedule("site=hang:q9").is_err());
+        assert!(parse_schedule("=hang").is_err());
+    }
+
+    #[test]
+    fn inject_fire_clear_roundtrip() {
+        let site = "test::ifc";
+        assert_eq!(fire(site, "anyone"), None);
+        let id = inject(site, None, FaultAction::Delay(0));
+        assert!(armed());
+        assert_eq!(fire(site, "anyone"), Some((id, FaultAction::Delay(0))));
+        assert_eq!(rule_counters(id), Some((1, 1)));
+        assert!(clear(id));
+        assert!(!clear(id));
+        assert_eq!(fire(site, "anyone"), None);
+    }
+
+    #[test]
+    fn actor_substring_gates_matching() {
+        let site = "test::sub";
+        let id = inject(site, Some("worker-7"), FaultAction::DropReply);
+        assert_eq!(fire(site, "rollout-worker-3"), None);
+        assert_eq!(
+            fire(site, "rollout-worker-7"),
+            Some((id, FaultAction::DropReply))
+        );
+        clear(id);
+    }
+
+    #[test]
+    fn nth_fires_exactly_once_then_disarms() {
+        let site = "test::nth";
+        let id = inject_with(
+            site,
+            None,
+            FaultAction::Delay(0),
+            1.0,
+            Some(3),
+            None,
+        );
+        assert_eq!(fire(site, "a"), None);
+        assert_eq!(fire(site, "a"), None);
+        assert_eq!(fire(site, "a"), Some((id, FaultAction::Delay(0))));
+        // Disarmed after its nth fire, but still resident for clear().
+        assert_eq!(fire(site, "a"), None);
+        assert_eq!(rule_counters(id), Some((3, 1)));
+        clear(id);
+    }
+
+    #[test]
+    fn panic_once_disarms_after_one_fire() {
+        let site = "test::po";
+        let id = inject(site, None, FaultAction::PanicOnce);
+        assert_eq!(fire(site, "x"), Some((id, FaultAction::PanicOnce)));
+        // Second occurrence does not fire (the replacement comes up
+        // clean), but the rule is resident until cleared.
+        assert_eq!(fire(site, "x"), None);
+        assert!(rule_resident(id));
+        clear(id);
+    }
+
+    #[test]
+    fn max_fires_budget_is_respected() {
+        let site = "test::mf";
+        let id = inject_with(
+            site,
+            None,
+            FaultAction::FullMailbox,
+            1.0,
+            None,
+            Some(2),
+        );
+        assert!(fire(site, "a").is_some());
+        assert!(fire(site, "a").is_some());
+        assert_eq!(fire(site, "a"), None);
+        assert_eq!(rule_counters(id), Some((2, 2)));
+        clear(id);
+    }
+
+    #[test]
+    fn probability_draws_are_seeded_and_partial() {
+        let site = "test::prob";
+        let id = inject_with(
+            site,
+            None,
+            FaultAction::Delay(0),
+            0.5,
+            None,
+            None,
+        );
+        let fires = (0..200).filter(|_| fire(site, "a").is_some()).count();
+        // Seeded draw: stable across runs, strictly partial.
+        assert!(fires > 50 && fires < 150, "fires={fires}");
+        clear(id);
+    }
+
+    #[test]
+    fn hang_releases_on_clear() {
+        let site = "test::hangrel";
+        let id = inject(site, None, FaultAction::Hang);
+        let t = std::thread::spawn(move || {
+            // No actor ctx on this thread: clear() is the only release.
+            failpoint(site);
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(!t.is_finished(), "hang failpoint did not block");
+        clear(id);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn hang_panics_when_killed() {
+        let site = "test::hangkill";
+        let killed = Arc::new(AtomicBool::new(false));
+        let id = inject(site, Some("hk-actor"), FaultAction::Hang);
+        let k = killed.clone();
+        let t = std::thread::spawn(move || {
+            set_actor_ctx(ActorCtx { name: Arc::from("hk-actor"), killed: k });
+            let r = std::panic::catch_unwind(|| failpoint(site));
+            assert!(r.is_err(), "kill must panic the hang into supervision");
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(!t.is_finished());
+        killed.store(true, Ordering::Relaxed);
+        t.join().unwrap();
+        clear(id);
+    }
+
+    #[test]
+    fn fault_counters_snapshot() {
+        let c = FaultCounters::default();
+        c.note_suspect();
+        c.note_forced_restart();
+        c.note_forced_restart();
+        c.note_breaker_trip();
+        assert_eq!(
+            c.snapshot(),
+            FaultStats { suspects: 1, forced_restarts: 2, breaker_trips: 1 }
+        );
+    }
+}

@@ -18,6 +18,7 @@
 //! never does.
 
 use std::mem::{align_of, size_of, ManuallyDrop, MaybeUninit};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 use super::telemetry::ActorTelemetry;
@@ -186,6 +187,11 @@ pub(crate) struct Shared<A> {
     /// lock (the weight-cast eviction policy compares depth gauges
     /// against it on every broadcast).
     capacity: usize,
+    /// The cooperative kill flag (`ActorHandle::kill`): an `Arc` so the
+    /// fault plane's per-thread context can hold it independently of
+    /// the `Shared` — a `Hang` failpoint polls it and panics into
+    /// supervision when it flips.
+    killed: Arc<AtomicBool>,
     pub(crate) telemetry: Arc<ActorTelemetry>,
 }
 
@@ -196,12 +202,26 @@ impl<A> Shared<A> {
             not_empty: Condvar::new(),
             not_full: Condvar::new(),
             capacity,
+            killed: Arc::new(AtomicBool::new(false)),
             telemetry,
         }
     }
 
     pub(crate) fn capacity(&self) -> usize {
         self.capacity
+    }
+
+    /// A clone of the cooperative kill flag (for the fault plane's
+    /// actor-thread context).
+    pub(crate) fn kill_flag(&self) -> Arc<AtomicBool> {
+        self.killed.clone()
+    }
+
+    /// Request a cooperative kill: cooperating long-running sites (the
+    /// `Hang` failpoint, `RolloutWorker::sample`'s failpoint) observe
+    /// the flag and panic into the normal supervision path.
+    pub(crate) fn request_kill(&self) {
+        self.killed.store(true, Ordering::SeqCst);
     }
 
     /// Blocking send: parks while the ring is full.  `Err` returns the
@@ -247,7 +267,10 @@ impl<A> Shared<A> {
     }
 
     /// Consumer side: next message, or `None` when every handle is gone
-    /// and the ring has drained (clean shutdown).
+    /// and the ring has drained (clean shutdown) — or when the actor
+    /// was poisoned *externally* (`ActorHandle::kill` on an idle actor:
+    /// the queue is already drained, so the thread exits rather than
+    /// parking forever on a mailbox that rejects all sends).
     pub(crate) fn recv(&self) -> Option<Envelope<A>> {
         let mut ring = self.ring.lock().unwrap();
         loop {
@@ -257,7 +280,7 @@ impl<A> Shared<A> {
                 self.not_full.notify_one();
                 return Some(env);
             }
-            if ring.senders == 0 {
+            if ring.senders == 0 || ring.poisoned {
                 return None;
             }
             ring = self.not_empty.wait(ring).unwrap();

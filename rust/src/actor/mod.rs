@@ -36,6 +36,7 @@
 //! where each Ray actor holds its own TF session.
 
 mod autoscaler;
+pub mod faults;
 mod mailbox;
 mod queue;
 mod registry;
@@ -45,6 +46,7 @@ pub use autoscaler::{
     Autoscaler, AutoscalerConfig, AutoscaleSignals, AutoscaleStats,
     ScaleDirection, ScaleDirective,
 };
+pub use faults::{FaultAction, FaultCounters, FaultStats};
 pub use mailbox::{TryCastError, DEFAULT_MAILBOX_CAPACITY};
 pub use queue::{Completion, CompletionQueue};
 pub use registry::{
@@ -325,12 +327,15 @@ impl<A: 'static> ActorHandle<A> {
     }
 
     /// Call a method and block for its result.  The reply cell lives on
-    /// this stack frame — no allocation on the steady-state path.
+    /// this stack frame — no allocation on the steady-state path (the
+    /// [`faults::SITE_CALL`] failpoint is one relaxed load when
+    /// disarmed).
     pub fn call<R, F>(&self, f: F) -> Result<R, ActorDied>
     where
         R: Send + 'static,
         F: FnOnce(&mut A) -> R + Send + 'static,
     {
+        let fault = faults::send_failpoint(faults::SITE_CALL, &self.name);
         let cell = ReplyCell::new();
         let guard = StackReplyGuard { cell: &cell, armed: true };
         let env = Envelope::new(move |state: &mut A| {
@@ -338,7 +343,12 @@ impl<A: 'static> ActorHandle<A> {
             let r = f(state);
             guard.complete(r);
         });
-        if let Err(env) = self.shared.send(env) {
+        if fault.is_some() {
+            // Injected Drop/FullMailbox: the envelope never reaches the
+            // ring; its guard resolves the cell below, so the caller
+            // sees the same ActorDied a real loss produces.
+            drop(env);
+        } else if let Err(env) = self.shared.send(env) {
             // Dead actor: dropping the envelope fires the guard, which
             // resolves the cell to Dropped below.
             drop(env);
@@ -355,6 +365,7 @@ impl<A: 'static> ActorHandle<A> {
         R: Send + 'static,
         F: FnOnce(&mut A) -> R + Send + 'static,
     {
+        let fault = faults::send_failpoint(faults::SITE_CALL, &self.name);
         let cell = Arc::new(ReplyCell::new());
         let guard = ArcReplyGuard { cell: cell.clone(), armed: true };
         let env = Envelope::new(move |state: &mut A| {
@@ -362,7 +373,9 @@ impl<A: 'static> ActorHandle<A> {
             let r = f(state);
             guard.complete(r);
         });
-        if let Err(env) = self.shared.send(env) {
+        if fault.is_some() {
+            drop(env); // injected loss: the reply resolves to ActorDied
+        } else if let Err(env) = self.shared.send(env) {
             drop(env);
         }
         Reply {
@@ -385,6 +398,8 @@ impl<A: 'static> ActorHandle<A> {
         R: Send + 'static,
         F: FnOnce(&mut A) -> R + Send + 'static,
     {
+        let fault =
+            faults::send_failpoint(faults::SITE_TRY_CALL_DEFERRED, &self.name);
         let cell = Arc::new(ReplyCell::new());
         let guard = ArcReplyGuard { cell: cell.clone(), armed: true };
         let env = Envelope::new(move |state: &mut A| {
@@ -392,6 +407,22 @@ impl<A: 'static> ActorHandle<A> {
             let r = f(state);
             guard.complete(r);
         });
+        match fault {
+            // Injected backpressure: nothing queued, caller sees Full.
+            Some(faults::SendFault::Full) => {
+                drop(env);
+                return Err(TryCastError::Full);
+            }
+            // Injected loss: the reply resolves to ActorDied.
+            Some(faults::SendFault::Drop) => {
+                drop(env);
+                return Ok(Reply {
+                    cell,
+                    actor: Arc::from(format!("{}#{}", self.name, self.id)),
+                });
+            }
+            None => {}
+        }
         match self.shared.try_send(env) {
             Ok(()) => Ok(Reply {
                 cell,
@@ -430,11 +461,17 @@ impl<A: 'static> ActorHandle<A> {
 
     /// Fire-and-forget message (Ray `x.remote()` without `get`).
     /// Blocks while the mailbox is full; silently dropped if the actor
-    /// is dead.
+    /// is dead (the [`faults::SITE_CAST`] failpoint is one relaxed load
+    /// when disarmed; an injected Drop/FullMailbox loses the message
+    /// silently — exactly what a lost cast looks like).
     pub fn cast<F>(&self, f: F)
     where
         F: FnOnce(&mut A) + Send + 'static,
     {
+        if faults::send_failpoint(faults::SITE_CAST, &self.name).is_some() {
+            drop(f); // injected loss; destructors (guards) still run
+            return;
+        }
         if let Err(env) = self.shared.send(Envelope::new(f)) {
             drop(env);
         }
@@ -476,19 +513,34 @@ impl<A: 'static> ActorHandle<A> {
         self.shared.telemetry.is_poisoned()
     }
 
-    /// Block (polling) until the poisoned flag is visible or `timeout`
-    /// elapses; returns the final `is_poisoned()` state.
+    /// Block until the poisoned flag is visible or `timeout` elapses;
+    /// returns the final `is_poisoned()` state.  A condvar wait (same
+    /// mechanism as [`Reply::recv_timeout`]): the supervised loop's
+    /// poison signals it, so the caller wakes immediately instead of on
+    /// a 1ms poll tick.
     pub fn await_poisoned(&self, timeout: std::time::Duration) -> bool {
-        let start = Instant::now();
-        loop {
-            if self.is_poisoned() {
-                return true;
-            }
-            if start.elapsed() >= timeout {
-                return false;
-            }
-            std::thread::sleep(std::time::Duration::from_millis(1));
-        }
+        self.shared.telemetry.await_poisoned(timeout)
+    }
+
+    /// Cooperative force-kill — the recovery path deadline supervision
+    /// uses on a *suspect* (hung or wedged) shard, where a panic will
+    /// never arrive on its own:
+    ///
+    /// * the mailbox is poisoned immediately: queued envelopes drain
+    ///   (their guards deliver death notices), future sends are
+    ///   rejected, and an idle actor thread exits;
+    /// * the kill flag flips: cooperating long-running sites (the
+    ///   `Hang` failpoint, `RolloutWorker::sample`) observe it and
+    ///   panic into the normal supervision path, resolving whatever
+    ///   message the actor is wedged inside.
+    ///
+    /// A message that never checks the flag cannot be interrupted (this
+    /// is cooperative, not `pthread_cancel`); its completion — if it
+    /// ever arrives — is discarded by the gathers' epoch/write-off
+    /// accounting.  Idempotent; safe from any thread.
+    pub fn kill(&self) {
+        self.shared.request_kill();
+        self.shared.poison();
     }
 
     /// Point-in-time telemetry for this actor.
@@ -513,6 +565,13 @@ fn run_actor<A, F>(shared: Arc<Shared<A>>, init: F)
 where
     F: FnOnce() -> A,
 {
+    // Install the fault plane's per-thread context before anything can
+    // fail: failpoints on this thread match by actor name, and a Hang
+    // polls this kill flag.
+    faults::set_actor_ctx(faults::ActorCtx {
+        name: shared.telemetry.name_arc(),
+        killed: shared.kill_flag(),
+    });
     let mut state = match catch_unwind(AssertUnwindSafe(init)) {
         Ok(s) => s,
         Err(_) => {
@@ -527,7 +586,15 @@ where
             .telemetry
             .note_idle(idle_start.elapsed().as_nanos() as u64);
         let busy_start = Instant::now();
-        let outcome = catch_unwind(AssertUnwindSafe(|| env.invoke(&mut state)));
+        // The failpoint runs INSIDE the supervision catch_unwind with
+        // the envelope already moved into the closure: a PanicOnce (or
+        // a killed Hang) here unwinds, dropping the envelope — its
+        // guards deliver death notices — and poisons the actor exactly
+        // like a panicking message body.
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            faults::failpoint(faults::SITE_ACTOR_LOOP);
+            env.invoke(&mut state)
+        }));
         if outcome.is_err() {
             // Publish the death before anything else; the panicking
             // message's own reply already resolved during unwind.
@@ -792,5 +859,111 @@ mod tests {
         assert!(!s.poisoned);
         // The global registry sees this actor too.
         assert!(all_actor_stats().iter().any(|a| a.id == h.id()));
+    }
+
+    // -----------------------------------------------------------------
+    // Fault plane + cooperative kill
+    //
+    // Fault rules are process-global and unit tests share one binary,
+    // so every rule here is scoped to a unique actor name and cleared
+    // on the way out.
+    // -----------------------------------------------------------------
+
+    #[test]
+    fn kill_poisons_an_idle_actor() {
+        let h = ActorHandle::spawn("kill-idle", || Counter { value: 0 });
+        assert_eq!(h.call(|c| c.value).unwrap(), 0);
+        h.kill();
+        assert!(h.await_poisoned(std::time::Duration::from_secs(2)));
+        assert!(h.call(|c| c.value).is_err());
+        assert_eq!(h.try_cast(|_| {}), Err(TryCastError::Dead));
+    }
+
+    #[test]
+    fn kill_unwedges_a_hung_actor() {
+        let h = ActorHandle::spawn("kill-hung-w", || Counter { value: 0 });
+        let id = faults::inject(
+            faults::SITE_ACTOR_LOOP,
+            Some("kill-hung-w"),
+            FaultAction::Hang,
+        );
+        let pending = h.call_deferred(|c| c.value);
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        assert!(pending.try_recv().is_none(), "hang failpoint did not wedge");
+        // The cooperative kill panics the hang into supervision: the
+        // wedged message's reply resolves as a death, not a hang.
+        h.kill();
+        assert!(pending.recv().is_err());
+        assert!(h.await_poisoned(std::time::Duration::from_secs(2)));
+        faults::clear(id);
+    }
+
+    #[test]
+    fn injected_loop_panic_poisons_like_a_real_crash() {
+        let h = ActorHandle::spawn("po-loop-w", || Counter { value: 0 });
+        let id = faults::inject(
+            faults::SITE_ACTOR_LOOP,
+            Some("po-loop-w"),
+            FaultAction::PanicOnce,
+        );
+        assert!(h.call(|c| c.value).is_err());
+        assert!(h.await_poisoned(std::time::Duration::from_secs(2)));
+        faults::clear(id);
+    }
+
+    #[test]
+    fn injected_drop_reply_resolves_call_to_actor_died() {
+        let h = ActorHandle::spawn("droprep-w", || Counter { value: 0 });
+        let id = faults::inject_with(
+            faults::SITE_CALL,
+            Some("droprep-w"),
+            FaultAction::DropReply,
+            1.0,
+            None,
+            Some(1),
+        );
+        assert!(h.call(|c| c.value).is_err());
+        // The actor itself is healthy — only the message was lost.
+        assert!(!h.is_poisoned());
+        assert_eq!(h.call(|c| c.value).unwrap(), 0);
+        faults::clear(id);
+    }
+
+    #[test]
+    fn injected_full_mailbox_backpressures_try_call_deferred() {
+        let h = ActorHandle::spawn("fullmb-w", || Counter { value: 0 });
+        let id = faults::inject_with(
+            faults::SITE_TRY_CALL_DEFERRED,
+            Some("fullmb-w"),
+            FaultAction::FullMailbox,
+            1.0,
+            None,
+            Some(1),
+        );
+        assert_eq!(
+            h.try_call_deferred(|c| c.value).err(),
+            Some(TryCastError::Full)
+        );
+        // Budget spent: the next attempt goes through.
+        let r = h.try_call_deferred(|c| c.value).unwrap();
+        assert_eq!(r.recv().unwrap(), 0);
+        faults::clear(id);
+    }
+
+    #[test]
+    fn injected_cast_loss_is_silent() {
+        let h = ActorHandle::spawn("castloss-w", || Counter { value: 0 });
+        let id = faults::inject_with(
+            faults::SITE_CAST,
+            Some("castloss-w"),
+            FaultAction::DropReply,
+            1.0,
+            None,
+            Some(1),
+        );
+        h.cast(|c| c.value += 10); // lost
+        h.cast(|c| c.value += 1); // delivered
+        assert_eq!(h.call(|c| c.value).unwrap(), 1);
+        faults::clear(id);
     }
 }

@@ -175,6 +175,43 @@ impl<T: Send + 'static> CompletionQueue<T> {
         }
     }
 
+    /// [`Self::pop`] with a deadline: `None` if nothing completed
+    /// within `timeout` — the wait primitive under the gathers'
+    /// deadline supervision (a shard that answers wakes the consumer
+    /// immediately; a wedged one lets the timeout fire so the consumer
+    /// can declare it suspect instead of parking forever).  Same
+    /// items-before-notices drain order as [`Self::pop`].
+    pub fn pop_timeout(
+        &self,
+        timeout: std::time::Duration,
+    ) -> Option<Completion<T>> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut st = self.inner.state.lock().unwrap();
+        loop {
+            if let Some((tag, value)) = st.items.pop_front() {
+                if let Some(p) = st.per_tag.as_mut() {
+                    p.counts[tag] -= 1;
+                }
+                drop(st);
+                self.inner.not_full.notify_all();
+                return Some(Completion::Item { tag, value });
+            }
+            if let Some(tag) = st.dropped.pop() {
+                return Some(Completion::Dropped { tag });
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            st = self
+                .inner
+                .not_empty
+                .wait_timeout(st, deadline - now)
+                .unwrap()
+                .0;
+        }
+    }
+
     /// Non-blocking pop (same items-before-notices order as [`pop`]).
     pub fn try_pop(&self) -> Option<Completion<T>> {
         let mut st = self.inner.state.lock().unwrap();
@@ -377,6 +414,31 @@ mod tests {
         // Still a working single-slot queue.
         q.push(0, 9);
         assert_eq!(q.pop(), Completion::Item { tag: 0, value: 9 });
+    }
+
+    #[test]
+    fn pop_timeout_expires_on_empty_and_wakes_on_push() {
+        let q: CompletionQueue<i32> = CompletionQueue::bounded(4);
+        let start = std::time::Instant::now();
+        assert!(q.pop_timeout(std::time::Duration::from_millis(30)).is_none());
+        assert!(start.elapsed() >= std::time::Duration::from_millis(30));
+        // A push mid-wait wakes the consumer well before the deadline.
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            q2.push(3, 99);
+        });
+        assert_eq!(
+            q.pop_timeout(std::time::Duration::from_secs(5)),
+            Some(Completion::Item { tag: 3, value: 99 })
+        );
+        t.join().unwrap();
+        // Death notices surface through the timed pop too.
+        q.push_dropped(5);
+        assert_eq!(
+            q.pop_timeout(std::time::Duration::from_secs(5)),
+            Some(Completion::Dropped { tag: 5 })
+        );
     }
 
     #[test]

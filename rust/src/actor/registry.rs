@@ -43,7 +43,7 @@
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-use super::{ActorHandle, Reply};
+use super::{faults, ActorHandle, Reply};
 
 // ---------------------------------------------------------------------
 // ShardRegistry
@@ -628,6 +628,16 @@ impl<A: 'static> WeightCaster<A> {
                 // deliver and nothing to count.
                 continue;
             };
+            if faults::send_failpoint(faults::SITE_CASTER_LANE, handle.name())
+                .is_some()
+            {
+                // Injected lane loss (drop or artificial full-mailbox):
+                // the cast to this recipient is shed, exactly like a
+                // real overload — the worker catches up on the next
+                // broadcast.
+                self.shed.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
             let lane = self.lane(idx);
             let mut cells = lane.cells.lock().unwrap();
             self.refresh_cells(&mut cells, &lane, epoch);
@@ -710,6 +720,15 @@ impl<A: 'static> WeightCaster<A> {
             };
             if handle.is_poisoned() {
                 continue; // dead: skipped, like sync_weights always did
+            }
+            if faults::send_failpoint(faults::SITE_CASTER_LANE, handle.name())
+                .is_some()
+            {
+                // Injected lane loss: shed the cast and do not wait on
+                // this recipient — the barrier must not wedge behind an
+                // injected fault any more than behind a real one.
+                self.shed.fetch_add(1, Ordering::Relaxed);
+                continue;
             }
             let cells = self.lane_cells(idx, epoch);
             let applied = cells.applied.clone();
@@ -921,6 +940,40 @@ mod tests {
         // Removing the dead worker clears it from the restartable set.
         reg.retire(0);
         assert!(reg.poisoned_indices().is_empty());
+    }
+
+    #[test]
+    fn injected_lane_fault_sheds_cast_without_stalling() {
+        let remotes = spawn_group("cast-flt-w", 2, |_| {
+            Box::new(|| W { weights: vec![], applies: 0 })
+        });
+        let reg = ShardRegistry::new(remotes);
+        let caster = WeightCaster::new(
+            reg.clone(),
+            DEFAULT_CAST_WATERMARK,
+            |w: &mut W, p| {
+                w.weights.clear();
+                w.weights.extend_from_slice(p);
+                w.applies += 1;
+            },
+        );
+        let id = faults::inject(
+            faults::SITE_CASTER_LANE,
+            Some("cast-flt-w-1"),
+            faults::FaultAction::DropReply,
+        );
+        // The barrier must complete off the healthy lane instead of
+        // wedging behind the injected loss.
+        caster.broadcast_sync(vec![1.0].into());
+        let (h0, _) = reg.get(0);
+        assert_eq!(h0.call(|w| w.weights.clone()).unwrap(), vec![1.0]);
+        let (h1, _) = reg.get(1);
+        assert!(h1.call(|w| w.weights.clone()).unwrap().is_empty());
+        assert_eq!(caster.stats().shed, 1, "injected loss counts as shed");
+        faults::clear(id);
+        // The next broadcast heals the lane.
+        caster.broadcast_sync(vec![2.0].into());
+        assert_eq!(h1.call(|w| w.weights.clone()).unwrap(), vec![2.0]);
     }
 
     #[test]

@@ -7,7 +7,8 @@
 //! per-plan plumbing.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex, OnceLock, Weak};
+use std::sync::{Arc, Condvar, Mutex, OnceLock, Weak};
+use std::time::{Duration, Instant};
 
 /// Live counters for one actor; shared between its handles, its thread,
 /// and the registry.
@@ -20,6 +21,12 @@ pub struct ActorTelemetry {
     busy_ns: AtomicU64,
     idle_ns: AtomicU64,
     poisoned: AtomicBool,
+    /// Condvar gate behind `ActorHandle::await_poisoned`: `poisoned` is
+    /// the lock-free gauge, this pair is the *wakeup* — waiters park on
+    /// the condvar and `note_poisoned` releases them immediately
+    /// instead of leaving them on a 1ms poll loop.
+    poison_gate: Mutex<bool>,
+    poison_cv: Condvar,
 }
 
 impl ActorTelemetry {
@@ -33,7 +40,15 @@ impl ActorTelemetry {
             busy_ns: AtomicU64::new(0),
             idle_ns: AtomicU64::new(0),
             poisoned: AtomicBool::new(false),
+            poison_gate: Mutex::new(false),
+            poison_cv: Condvar::new(),
         }
+    }
+
+    /// The actor's name as the shared `Arc` (the fault plane's
+    /// per-thread context holds one).
+    pub(crate) fn name_arc(&self) -> Arc<str> {
+        self.name.clone()
     }
 
     pub(crate) fn note_enqueue(&self, depth_now: usize) {
@@ -61,10 +76,35 @@ impl ActorTelemetry {
     pub(crate) fn note_poisoned(&self) {
         self.poisoned.store(true, Ordering::SeqCst);
         self.queue_len.store(0, Ordering::Relaxed);
+        *self.poison_gate.lock().unwrap() = true;
+        self.poison_cv.notify_all();
     }
 
     pub(crate) fn is_poisoned(&self) -> bool {
         self.poisoned.load(Ordering::SeqCst)
+    }
+
+    /// Condvar-backed timed wait for the poison flag: returns true as
+    /// soon as `note_poisoned` fires (no poll tick), false if `timeout`
+    /// elapses first.
+    pub(crate) fn await_poisoned(&self, timeout: Duration) -> bool {
+        if self.is_poisoned() {
+            return true;
+        }
+        let deadline = Instant::now() + timeout;
+        let mut gate = self.poison_gate.lock().unwrap();
+        while !*gate {
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            gate = self
+                .poison_cv
+                .wait_timeout(gate, deadline - now)
+                .unwrap()
+                .0;
+        }
+        true
     }
 
     /// Current mailbox depth (relaxed): the gauge the weight-cast
@@ -172,6 +212,28 @@ mod tests {
     fn utilization_of_fresh_actor_is_zero() {
         let t = ActorTelemetry::new("fresh", 0);
         assert_eq!(t.snapshot().utilization(), 0.0);
+    }
+
+    #[test]
+    fn await_poisoned_wakes_on_note_not_on_a_poll_tick() {
+        let t = Arc::new(ActorTelemetry::new("gate", 9));
+        let t2 = t.clone();
+        let waiter = std::thread::spawn(move || {
+            assert!(t2.await_poisoned(Duration::from_secs(5)));
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        t.note_poisoned();
+        waiter.join().unwrap();
+        // Already-poisoned short-circuits.
+        assert!(t.await_poisoned(Duration::ZERO));
+    }
+
+    #[test]
+    fn await_poisoned_times_out_when_healthy() {
+        let t = ActorTelemetry::new("gate-timeout", 10);
+        let start = Instant::now();
+        assert!(!t.await_poisoned(Duration::from_millis(30)));
+        assert!(start.elapsed() >= Duration::from_millis(30));
     }
 
     #[test]

@@ -26,5 +26,5 @@ mod par;
 mod union;
 
 pub use local::LocalIter;
-pub use par::ParIter;
+pub use par::{DeadlineSupervision, ParIter};
 pub use union::{concurrently, UnionMode};

@@ -37,10 +37,13 @@
 //! machinery that handles a dead incarnation's; a later publish into
 //! the slot rejoins it.
 
+use std::collections::HashMap;
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use crate::actor::{
-    ActorHandle, Completion, CompletionQueue, ShardRegistry, MAX_SHARDS,
+    ActorHandle, Completion, CompletionQueue, FaultCounters, ShardRegistry,
+    MAX_SHARDS,
 };
 
 use super::LocalIter;
@@ -64,6 +67,56 @@ fn encode_tag(idx: usize, epoch: u64) -> usize {
 
 fn decode_tag(tag: usize) -> (usize, u64) {
     (tag & SHARD_MASK, (tag >> EPOCH_SHIFT) as u64)
+}
+
+/// Deadline supervision for the gathers: a per-dispatch liveness bound.
+///
+/// A completion queue pop can park forever behind a *wedged* shard — an
+/// actor that neither answers nor dies, so its `call_into` guard never
+/// fires.  With supervision attached
+/// ([`ParIter::gather_async_deadline`] /
+/// [`ParIter::gather_sync_deadline`]), a shard whose in-flight
+/// completions have all been silent for `deadline` is declared
+/// **suspect**: its outstanding completions are written off the
+/// gather's ledger (and remembered per epoch, so the corpse's late
+/// completions are discarded against the write-off instead of
+/// corrupting the exactly-one-completion accounting), the incarnation
+/// is force-poisoned via [`ActorHandle::kill`], and the shard parks as
+/// dead — rejoining when the owner publishes a replacement, exactly
+/// like a shard that crashed honestly.  Streams therefore degrade to
+/// the surviving quorum instead of hanging the whole plan.
+///
+/// A slow-but-healthy shard written off by a too-tight deadline is a
+/// tolerable false positive: it is killed (so it cannot complete twice)
+/// and the owner's restart policy brings up a replacement.
+#[derive(Clone)]
+pub struct DeadlineSupervision {
+    /// Maximum silence tolerated per shard while it has completions in
+    /// flight; the clock rearms on every dispatch to the shard.
+    pub deadline: Duration,
+    /// Shared fault ledger suspects are reported into.  Share the
+    /// owning `WorkerSet`'s counters (via
+    /// [`DeadlineSupervision::with_counters`]) so suspects, forced
+    /// restarts, and breaker trips land in one snapshot.
+    pub counters: Arc<FaultCounters>,
+}
+
+impl DeadlineSupervision {
+    /// Supervision with a fresh ledger.
+    pub fn new(deadline: Duration) -> Self {
+        DeadlineSupervision {
+            deadline,
+            counters: Arc::new(FaultCounters::default()),
+        }
+    }
+
+    /// Supervision reporting into an existing ledger.
+    pub fn with_counters(
+        deadline: Duration,
+        counters: Arc<FaultCounters>,
+    ) -> Self {
+        DeadlineSupervision { deadline, counters }
+    }
 }
 
 /// Per-shard gather state: streaming, cleanly finished, dead, or
@@ -156,6 +209,19 @@ impl<W: 'static, T: Send + 'static> ParIter<W, T> {
         self.gather_async_with_source(num_async).for_each(|(t, _)| t)
     }
 
+    /// [`ParIter::gather_async`] under [`DeadlineSupervision`]: a shard
+    /// whose in-flight completions go silent past the deadline is
+    /// written off (suspect), force-poisoned, and the stream keeps
+    /// flowing off the surviving quorum — a wedged actor can no longer
+    /// park the consumer forever.
+    pub fn gather_async_deadline(
+        self,
+        num_async: usize,
+        sup: DeadlineSupervision,
+    ) -> LocalIter<T> {
+        self.gather_async_opts(num_async, Some(sup)).for_each(|(t, _)| t)
+    }
+
     /// `gather_async` + `zip_with_source_actor`: each item is paired
     /// with the handle of the shard actor that produced it (used by
     /// Ape-X's `UpdateWorkerWeights` to message the producing worker).
@@ -165,6 +231,24 @@ impl<W: 'static, T: Send + 'static> ParIter<W, T> {
     pub fn gather_async_with_source(
         self,
         num_async: usize,
+    ) -> LocalIter<(T, ActorHandle<W>)> {
+        self.gather_async_opts(num_async, None)
+    }
+
+    /// [`ParIter::gather_async_with_source`] under
+    /// [`DeadlineSupervision`] — see [`ParIter::gather_async_deadline`].
+    pub fn gather_async_with_source_deadline(
+        self,
+        num_async: usize,
+        sup: DeadlineSupervision,
+    ) -> LocalIter<(T, ActorHandle<W>)> {
+        self.gather_async_opts(num_async, Some(sup))
+    }
+
+    fn gather_async_opts(
+        self,
+        num_async: usize,
+        sup: Option<DeadlineSupervision>,
     ) -> LocalIter<(T, ActorHandle<W>)> {
         assert!(num_async >= 1);
         struct State<W: 'static, T: Send + 'static> {
@@ -187,6 +271,18 @@ impl<W: 'static, T: Send + 'static> ParIter<W, T> {
             cap_held: Vec<bool>,
             /// Registry version last scanned for replacements.
             reg_version: u64,
+            /// Deadline supervision, if attached.
+            sup: Option<DeadlineSupervision>,
+            /// Per shard: instant of the last dispatch to it — the
+            /// liveness clock deadline supervision reads.
+            last_activity: Vec<Instant>,
+            /// Per shard, per epoch: completions written off by
+            /// deadline supervision that have not yet surfaced.  A
+            /// completion matching an entry was already deducted from
+            /// `outstanding`/`inflight` at write-off time and is
+            /// discarded against the entry instead of being accounted
+            /// twice.
+            forgiven: Vec<HashMap<u64, usize>>,
             started: bool,
             /// Set once the stream has returned `None`: end-of-stream
             /// is terminal — a later publish must not resurrect a
@@ -200,6 +296,7 @@ impl<W: 'static, T: Send + 'static> ParIter<W, T> {
             /// never leak.
             fn submit_to(&mut self, idx: usize, handle: &ActorHandle<W>, ep: u64) {
                 self.epoch[idx] = ep;
+                self.last_activity[idx] = Instant::now();
                 let plan = self.plan.clone();
                 handle.call_into(
                     encode_tag(idx, ep),
@@ -299,7 +396,68 @@ impl<W: 'static, T: Send + 'static> ParIter<W, T> {
                     self.epoch.push(0);
                     self.inflight.push(0);
                     self.cap_held.push(false); // prime() grants the slice
+                    self.last_activity.push(Instant::now());
+                    self.forgiven.push(HashMap::new());
                     self.prime(idx, num_async);
+                }
+            }
+
+            /// Time until the soonest per-shard deadline among shards
+            /// with completions in flight (zero if one is already
+            /// overdue; `deadline` if, impossibly, none is in flight).
+            fn next_deadline_wait(&self, deadline: Duration) -> Duration {
+                let now = Instant::now();
+                let mut wait = deadline;
+                for idx in 0..self.mode.len() {
+                    if self.inflight[idx] == 0 {
+                        continue;
+                    }
+                    let due = self.last_activity[idx] + deadline;
+                    wait = wait.min(due.saturating_duration_since(now));
+                }
+                wait
+            }
+
+            /// Declare every shard silent past the deadline *suspect*:
+            /// write its in-flight completions off the ledger
+            /// (remembered per epoch in `forgiven` so the late
+            /// completions are discarded when they finally surface),
+            /// force-poison the incarnation the gather dispatched to,
+            /// and park the shard as dead — a published replacement
+            /// rejoins it exactly like after an honest crash.
+            fn write_off_overdue(
+                &mut self,
+                sup: &DeadlineSupervision,
+                num_async: usize,
+            ) {
+                let now = Instant::now();
+                for idx in 0..self.mode.len() {
+                    if self.inflight[idx] == 0
+                        || now.duration_since(self.last_activity[idx])
+                            < sup.deadline
+                    {
+                        continue;
+                    }
+                    sup.counters.note_suspect();
+                    let ep = self.epoch[idx];
+                    *self.forgiven[idx].entry(ep).or_insert(0) +=
+                        self.inflight[idx];
+                    self.outstanding -= self.inflight[idx];
+                    self.inflight[idx] = 0;
+                    if self.mode[idx] == ShardMode::Active {
+                        // Kill only the incarnation we dispatched to:
+                        // if the registry already holds a replacement,
+                        // the corpse is the owner's to reap.
+                        if let Some((handle, ep_now)) =
+                            self.registry.get_live(idx)
+                        {
+                            if ep_now == ep {
+                                handle.kill();
+                            }
+                        }
+                        self.mode[idx] = ShardMode::Dead;
+                    }
+                    self.maybe_release(idx, num_async);
                 }
             }
         }
@@ -321,6 +479,9 @@ impl<W: 'static, T: Send + 'static> ParIter<W, T> {
             inflight: vec![0; n],
             // The initial bound already covers the starting shards.
             cap_held: vec![true; n],
+            sup,
+            last_activity: vec![Instant::now(); n],
+            forgiven: vec![HashMap::new(); n],
             started: false,
             finished: false,
         };
@@ -345,9 +506,39 @@ impl<W: 'static, T: Send + 'static> ParIter<W, T> {
                     st.finished = true;
                     return None;
                 }
-                let completion = st.queue.pop();
-                st.outstanding -= 1;
+                let completion = match st.sup.clone() {
+                    None => st.queue.pop(),
+                    Some(sup) => {
+                        let wait = st.next_deadline_wait(sup.deadline);
+                        match st.queue.pop_timeout(wait) {
+                            Some(c) => c,
+                            None => {
+                                // Nothing surfaced before the soonest
+                                // deadline: write off the overdue
+                                // shard(s) and re-enter the loop (the
+                                // membership scan may rejoin a
+                                // replacement; `outstanding == 0` ends
+                                // the stream if nothing survived).
+                                st.write_off_overdue(&sup, num_async);
+                                continue;
+                            }
+                        }
+                    }
+                };
                 let (idx, ep) = decode_tag(completion.tag());
+                if let Some(cnt) = st.forgiven[idx].get_mut(&ep) {
+                    // A written-off shard's completion finally
+                    // surfaced.  It was deducted from the ledger at
+                    // write-off time: consume the forgiveness credit
+                    // and discard, touching neither `outstanding` nor
+                    // `inflight`.
+                    *cnt -= 1;
+                    if *cnt == 0 {
+                        st.forgiven[idx].remove(&ep);
+                    }
+                    continue;
+                }
+                st.outstanding -= 1;
                 st.inflight[idx] -= 1;
                 let current =
                     ep == st.epoch[idx] && st.mode[idx] == ShardMode::Active;
@@ -438,12 +629,37 @@ impl<W: 'static, T: Send + 'static> ParIter<W, T> {
     /// vectors stay coherent), and tombstoned shards stop being
     /// dispatched from the next boundary on.
     pub fn gather_sync(self) -> LocalIter<Vec<T>> {
+        self.gather_sync_opts(None)
+    }
+
+    /// [`ParIter::gather_sync`] under [`DeadlineSupervision`]: a
+    /// barrier round stops waiting on a shard whose call has been
+    /// silent past the deadline — the shard is written off (suspect),
+    /// force-poisoned, and the round completes off the surviving
+    /// quorum.  It rejoins at a later round boundary once the owner
+    /// publishes a replacement.
+    pub fn gather_sync_deadline(
+        self,
+        sup: DeadlineSupervision,
+    ) -> LocalIter<Vec<T>> {
+        self.gather_sync_opts(Some(sup))
+    }
+
+    fn gather_sync_opts(
+        self,
+        sup: Option<DeadlineSupervision>,
+    ) -> LocalIter<Vec<T>> {
         let registry = self.registry;
         let plan = self.plan;
         let queue: CompletionQueue<Option<T>> =
             CompletionQueue::bounded(registry.len().max(1));
         let mut mode = vec![ShardMode::Active; registry.len()];
         let mut epoch = vec![0u64; mode.len()];
+        // Submissions written off by deadline supervision, keyed by
+        // (shard, epoch): the corpse's completion may surface rounds
+        // later and must be discarded against this ledger instead of
+        // being counted toward whichever round is then collecting.
+        let mut forgiven: HashMap<(usize, u64), usize> = HashMap::new();
         // One queue slot held per admitted shard; a tombstoned shard's
         // slot is reclaimed at the next round boundary (rounds drain
         // fully, so nothing of its can be in flight there) and
@@ -501,6 +717,11 @@ impl<W: 'static, T: Send + 'static> ParIter<W, T> {
             }
             let n = mode.len();
             let mut expected = 0usize;
+            // Per-shard dispatch clocks for deadline supervision: a
+            // round's membership is frozen here, so one issue instant
+            // per admitted shard is the whole liveness state.
+            let mut pending = vec![false; n];
+            let mut issued_at = vec![Instant::now(); n];
             for i in 0..n {
                 if mode[i] == ShardMode::Active {
                     match registry.get_live(i) {
@@ -512,6 +733,8 @@ impl<W: 'static, T: Send + 'static> ParIter<W, T> {
                                 &queue,
                                 move |w| plan(w),
                             );
+                            pending[i] = true;
+                            issued_at[i] = Instant::now();
                             expected += 1;
                         }
                         None => mode[i] = ShardMode::Retired,
@@ -526,18 +749,87 @@ impl<W: 'static, T: Send + 'static> ParIter<W, T> {
             // barrier plans stay deterministic) before deciding.
             let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
             while expected > 0 {
-                let completion = queue.pop();
-                expected -= 1;
+                let completion = match &sup {
+                    None => queue.pop(),
+                    Some(s) => {
+                        let now = Instant::now();
+                        let mut wait = s.deadline;
+                        for i in 0..n {
+                            if pending[i] {
+                                let due = issued_at[i] + s.deadline;
+                                wait = wait
+                                    .min(due.saturating_duration_since(now));
+                            }
+                        }
+                        match queue.pop_timeout(wait) {
+                            Some(c) => c,
+                            None => {
+                                // The barrier stops waiting on overdue
+                                // shards: write them off, force-poison
+                                // the incarnation dispatched to, and
+                                // complete the round off the surviving
+                                // quorum.  A replacement rejoins at a
+                                // later round boundary.
+                                let now = Instant::now();
+                                for i in 0..n {
+                                    if !pending[i]
+                                        || now.duration_since(issued_at[i])
+                                            < s.deadline
+                                    {
+                                        continue;
+                                    }
+                                    s.counters.note_suspect();
+                                    *forgiven
+                                        .entry((i, epoch[i]))
+                                        .or_insert(0) += 1;
+                                    pending[i] = false;
+                                    expected -= 1;
+                                    match registry.get_live(i) {
+                                        Some((handle, ep_now)) => {
+                                            if ep_now == epoch[i] {
+                                                handle.kill();
+                                            }
+                                            mode[i] = ShardMode::Dead;
+                                        }
+                                        None => {
+                                            mode[i] = ShardMode::Retired;
+                                        }
+                                    }
+                                }
+                                continue;
+                            }
+                        }
+                    }
+                };
                 let (i, ep) = decode_tag(completion.tag());
+                if let Some(cnt) = forgiven.get_mut(&(i, ep)) {
+                    // A written-off submission's completion surfaced
+                    // (possibly rounds later): it is already off the
+                    // round ledger — consume the forgiveness credit
+                    // and discard.
+                    *cnt -= 1;
+                    if *cnt == 0 {
+                        forgiven.remove(&(i, ep));
+                    }
+                    continue;
+                }
+                expected -= 1;
                 match completion {
                     Completion::Item { value: Some(t), .. } => {
                         if ep == epoch[i] {
                             slots[i] = Some(t);
+                            pending[i] = false;
                         }
                     }
-                    Completion::Item { value: None, .. } => done = true,
+                    Completion::Item { value: None, .. } => {
+                        done = true;
+                        if ep == epoch[i] {
+                            pending[i] = false;
+                        }
+                    }
                     Completion::Dropped { .. } => {
                         if ep == epoch[i] {
+                            pending[i] = false;
                             // This round's submission died.  If a
                             // replacement is already live, re-issue the
                             // call so the barrier completes with the
@@ -553,6 +845,8 @@ impl<W: 'static, T: Send + 'static> ParIter<W, T> {
                                         &queue,
                                         move |w| plan(w),
                                     );
+                                    pending[i] = true;
+                                    issued_at[i] = Instant::now();
                                     expected += 1;
                                 }
                                 Some(_) => mode[i] = ShardMode::Dead,
@@ -1106,6 +1400,118 @@ mod tests {
             assert!(remaining < 8, "stream did not end after full retire");
         }
         assert_eq!(it.next(), None);
+    }
+
+    // -----------------------------------------------------------------
+    // Deadline supervision: wedged shards are written off, not waited on
+    // -----------------------------------------------------------------
+
+    #[test]
+    fn gather_async_deadline_writes_off_hung_shard() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let ws = workers(2);
+        let registry = ShardRegistry::new(ws.clone());
+        let release = Arc::new(AtomicBool::new(false));
+        let r2 = release.clone();
+        let sup = DeadlineSupervision::new(Duration::from_millis(80));
+        let counters = sup.counters.clone();
+        let mut it = ParIter::from_registry(registry.clone(), move |w| {
+            w.counter += 1;
+            if w.id == 1 && w.counter == 2 {
+                // Wedge: no reply, no panic — the guard never fires.
+                while !r2.load(Ordering::SeqCst) {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+            Some((w.id, w.counter))
+        })
+        .gather_async_deadline(1, sup);
+        // The stream keeps flowing off shard 0 until the deadline
+        // declares the wedged shard suspect (the timed pop clamps to
+        // zero once shard 1 is overdue, so the survivor's items never
+        // postpone the write-off).
+        let mut pulls = 0;
+        let mut from_wedged = 0;
+        while counters.snapshot().suspects == 0 {
+            let (id, _) =
+                it.next().expect("stream parked behind a wedged shard");
+            if id == 1 {
+                from_wedged += 1;
+            }
+            pulls += 1;
+            assert!(pulls < 100_000, "suspect never declared");
+        }
+        // Only the wedged shard's pre-wedge item (counter 1) may have
+        // surfaced.
+        assert!(from_wedged <= 1, "wedged shard kept yielding");
+        assert_eq!(counters.snapshot().suspects, 1);
+        // The suspect was force-poisoned (cooperative kill)...
+        assert!(ws[1].await_poisoned(Duration::from_secs(2)));
+        // ...and a published replacement rejoins the same live stream.
+        registry.publish(1, replacement(1));
+        let mut rejoined = 0;
+        for _ in 0..64 {
+            let (id, c) = it.next().unwrap();
+            if id == 1 {
+                assert!(c > 1000, "item from the wedged incarnation: {c}");
+                rejoined += 1;
+            }
+        }
+        assert!(rejoined > 0, "replacement never rejoined after write-off");
+        release.store(true, Ordering::SeqCst);
+    }
+
+    #[test]
+    fn gather_sync_deadline_degrades_round_to_quorum() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let ws = workers(3);
+        let registry = ShardRegistry::new(ws.clone());
+        let release = Arc::new(AtomicBool::new(false));
+        let r2 = release.clone();
+        let sup = DeadlineSupervision::new(Duration::from_millis(60));
+        let counters = sup.counters.clone();
+        let mut it = ParIter::from_registry(registry.clone(), move |w| {
+            w.counter += 1;
+            if w.id == 2 && w.counter == 2 {
+                while !r2.load(Ordering::SeqCst) {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+            Some(w.counter)
+        })
+        .gather_sync_deadline(sup);
+        assert_eq!(it.next().unwrap(), vec![1, 1, 1]);
+        // Round 2: shard 2 wedges; the barrier times out and completes
+        // off the survivors instead of parking forever.
+        assert_eq!(it.next().unwrap(), vec![2, 2]);
+        assert_eq!(counters.snapshot().suspects, 1);
+        assert!(ws[2].await_poisoned(Duration::from_secs(2)));
+        assert_eq!(it.next().unwrap(), vec![3, 3]);
+        // A published replacement rejoins at the next round boundary.
+        registry.publish(2, replacement(2));
+        assert_eq!(it.next().unwrap(), vec![4, 4, 1001]);
+        release.store(true, Ordering::SeqCst);
+    }
+
+    #[test]
+    fn deadline_tolerates_slow_but_live_shards() {
+        let ws = workers(2);
+        let sup = DeadlineSupervision::new(Duration::from_secs(5));
+        let counters = sup.counters.clone();
+        let mut it = ParIter::from_actors(ws, |w| {
+            w.counter += 1;
+            std::thread::sleep(Duration::from_millis(5));
+            Some(w.counter)
+        })
+        .gather_sync_deadline(sup);
+        for round in 1..=3 {
+            assert_eq!(it.next().unwrap(), vec![round, round]);
+        }
+        assert_eq!(
+            counters.snapshot(),
+            crate::actor::FaultStats::default(),
+            "healthy-but-slow shards must not be declared suspect"
+        );
     }
 
     #[test]

@@ -75,6 +75,18 @@
 //!   time) flows through a global registry into every
 //!   `TrainResult::actor_stats`, so each report can say *where* the
 //!   pipeline is starved (`TrainResult::pipeline_summary`).
+//! * Failure handling is **scripted and supervised**: a process-global
+//!   fault-injection plane ([`actor::faults`] — seeded, deterministic
+//!   failpoints at the control plane's hot sites, one relaxed atomic
+//!   load when disarmed) turns crashes, hangs, delays, and lost
+//!   messages into scripted events; *deadline supervision*
+//!   (`gather_*_deadline`) writes off a shard whose dispatches go
+//!   silent, force-kills the wedge into the normal poison path, and
+//!   degrades to the surviving quorum; and
+//!   `WorkerSet::restart_dead_with_policy` recovers corpses under
+//!   exponential backoff with a per-slot budget and a circuit breaker
+//!   that tombstones crash-looping slots (`tests/faults.rs`,
+//!   `TrainResult::faults`).
 //! * The elasticity loop is **closed**: membership is dynamic
 //!   (`WorkerSet::scale_to` grows/shrinks a *running* plan, single- and
 //!   multi-agent alike) and an [`actor::Autoscaler`] feedback

@@ -3,7 +3,9 @@
 
 use std::collections::BTreeMap;
 
-use crate::actor::{ActorStatsSnapshot, AutoscaleStats, WeightCastStats};
+use crate::actor::{
+    ActorStatsSnapshot, AutoscaleStats, FaultStats, WeightCastStats,
+};
 use crate::rollout::ScaleStats;
 use crate::util::MovingStat;
 
@@ -74,6 +76,7 @@ impl MetricsHub {
             weight_casts: None,
             scale: None,
             autoscale: None,
+            faults: None,
         }
     }
 }
@@ -112,6 +115,12 @@ pub struct TrainResult {
     /// `actor::Autoscaler` drives the set.  `None` on manually scaled
     /// plans.
     pub autoscale: Option<AutoscaleStats>,
+    /// Fault-supervision counters (shards declared suspect by deadline
+    /// supervision, forced restarts applied by the restart policy,
+    /// circuit-breaker trips that tombstoned a crash-looping slot) —
+    /// filled by the metrics-reporting operators from the `WorkerSet`'s
+    /// `FaultCounters`.  `None` for reporting paths without one.
+    pub faults: Option<FaultStats>,
 }
 
 impl TrainResult {
@@ -168,6 +177,14 @@ impl TrainResult {
                 a.held_deadband + a.held_confirm + a.held_cooldown,
                 a.failed,
             ));
+        }
+        if let Some(ft) = &self.faults {
+            if *ft != FaultStats::default() {
+                out.push_str(&format!(
+                    " faults=s{}/r{}/b{}",
+                    ft.suspects, ft.forced_restarts, ft.breaker_trips
+                ));
+            }
         }
         out
     }
@@ -269,6 +286,16 @@ mod tests {
             s.contains("autoscale=t4(up=2 down=1 hold=6 fail=0)"),
             "{s}"
         );
+        // All-zero fault stats stay silent; nonzero ones render.
+        r.faults = Some(FaultStats::default());
+        assert!(!r.pipeline_summary().contains("faults="));
+        r.faults = Some(FaultStats {
+            suspects: 2,
+            forced_restarts: 3,
+            breaker_trips: 1,
+        });
+        let s = r.pipeline_summary();
+        assert!(s.contains("faults=s2/r3/b1"), "{s}");
     }
 
     #[test]

@@ -125,6 +125,7 @@ fn reporting_with_controller(
     let registry = workers.registry().clone();
     let caster = workers.caster();
     let scale = workers.scale_counters();
+    let fault_counters = workers.fault_counters();
     let set = workers.clone();
     LocalIter::from_fn(move || {
         for _ in 0..items_per_report {
@@ -144,6 +145,7 @@ fn reporting_with_controller(
             drive_autoscaler(a, &mut snap, &set, local.id(), &handles);
         }
         snap.scale = Some(scale.stats(registry.num_live(), registry.len()));
+        snap.faults = Some(fault_counters.snapshot());
         Some(snap)
     })
 }
@@ -214,6 +216,10 @@ mod tests {
         let sc = r.scale.expect("scale stats attached");
         assert_eq!((sc.added, sc.removed, sc.live, sc.slots), (0, 0, 2, 2));
         assert!(r.pipeline_summary().contains("scale=2/2slots"));
+        // Fault counters ride along; a healthy run renders no section.
+        let ft = r.faults.expect("fault stats attached");
+        assert_eq!(ft, crate::actor::FaultStats::default());
+        assert!(!r.pipeline_summary().contains("faults="));
     }
 
     #[test]

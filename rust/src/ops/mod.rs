@@ -19,7 +19,9 @@ pub use metrics_ops::{
 };
 pub(crate) use metrics_ops::{drain_and_snapshot, drive_autoscaler};
 pub use replay_ops::{
-    create_replay_actors, replay, store_to_replay_buffer, ReplayActor,
+    create_replay_actors, replay, replay_with_backoff,
+    store_to_replay_buffer, ReplayActor, DEFAULT_REPLAY_BACKOFF_BASE,
+    DEFAULT_REPLAY_BACKOFF_CAP,
 };
 pub use rollout_ops::{
     concat_batches, exact_batches, parallel_ma_rollouts_from,

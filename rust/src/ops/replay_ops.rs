@@ -1,11 +1,22 @@
 //! Replay-side operators: replay actors, `StoreToReplayBuffer`,
 //! `Replay` (paper Fig. 10).
 
+use std::time::Duration;
+
 use crate::actor::{spawn_group, ActorHandle};
 use crate::iter::{LocalIter, ParIter};
 use crate::replay::{ReplayActorState, ReplaySample};
 use crate::sample_batch::SampleBatch;
-use crate::util::Rng;
+use crate::util::{Backoff, Rng};
+
+/// First not-ready backoff of [`replay`] (doubles per consecutive
+/// not-ready poll, resetting on the first real sample).
+pub const DEFAULT_REPLAY_BACKOFF_BASE: Duration = Duration::from_micros(100);
+
+/// Cap on [`replay`]'s not-ready backoff: long warmups poll at this
+/// cadence instead of hammering the replay actors' mailboxes, while the
+/// first polls after a drain stay sub-millisecond.
+pub const DEFAULT_REPLAY_BACKOFF_CAP: Duration = Duration::from_millis(10);
 
 /// The replay actor type (paper: `create_colocated(ReplayActor)`).
 pub type ReplayActor = ActorHandle<ReplayActorState>;
@@ -55,23 +66,50 @@ pub fn store_to_replay_buffer(
 /// actor's handle (for priority updates).
 ///
 /// Before `learning_starts` the buffers are not ready: the stream
-/// yields `None` items (after a brief backoff) instead of blocking —
-/// critical under a round-robin `Concurrently`, where a blocking
-/// replay child would starve the very store child that must fill the
-/// buffer (classic composition deadlock; regression-tested in
-/// rust/tests/integration.rs).
+/// yields `None` items (after an exponential backoff, base
+/// [`DEFAULT_REPLAY_BACKOFF_BASE`] capped at
+/// [`DEFAULT_REPLAY_BACKOFF_CAP`]) instead of blocking — critical under
+/// a round-robin `Concurrently`, where a blocking replay child would
+/// starve the very store child that must fill the buffer (classic
+/// composition deadlock; regression-tested in rust/tests/
+/// integration.rs).  Use [`replay_with_backoff`] to tune the cadence.
 pub fn replay(
     actors: Vec<ReplayActor>,
     num_async: usize,
 ) -> LocalIter<Option<(ReplaySample, ReplayActor)>> {
+    replay_with_backoff(
+        actors,
+        num_async,
+        DEFAULT_REPLAY_BACKOFF_BASE,
+        DEFAULT_REPLAY_BACKOFF_CAP,
+    )
+}
+
+/// [`replay`] with a configurable not-ready backoff: consecutive
+/// not-ready polls sleep `base`, `2*base`, `4*base`, ... capped at
+/// `cap`; the first real sample resets the ladder.  A fixed short sleep
+/// burns a driver core polling an empty buffer through a long warmup; a
+/// fixed long one adds latency to the first samples after a drain —
+/// the ladder gives both ends.
+pub fn replay_with_backoff(
+    actors: Vec<ReplayActor>,
+    num_async: usize,
+    base: Duration,
+    cap: Duration,
+) -> LocalIter<Option<(ReplaySample, ReplayActor)>> {
+    let mut backoff = Backoff::new(base, cap);
     ParIter::from_actors(actors, |ra: &mut ReplayActorState| Some(ra.replay()))
         .gather_async_with_source(num_async)
-        .for_each(|(maybe, actor)| match maybe {
-            Some(s) => Some((s, actor)),
+        .for_each(move |(maybe, actor)| match maybe {
+            Some(s) => {
+                backoff.reset();
+                Some((s, actor))
+            }
             None => {
-                // Empty buffer: back off so we don't spin the replay
-                // actor's mailbox, then report not-ready.
-                std::thread::sleep(std::time::Duration::from_micros(500));
+                // Empty buffer: back off (exponentially, capped) so we
+                // don't spin the replay actor's mailbox, then report
+                // not-ready.
+                std::thread::sleep(backoff.next_delay());
                 None
             }
         })
@@ -140,6 +178,28 @@ mod tests {
         for _ in 0..3 {
             assert!(it.next().unwrap().is_none());
         }
+    }
+
+    #[test]
+    fn replay_backoff_grows_while_not_ready() {
+        let actors = create_replay_actors(1, 2, 64, 1000, 4);
+        let mut it = replay_with_backoff(
+            actors,
+            1,
+            Duration::from_millis(2),
+            Duration::from_millis(8),
+        );
+        let start = std::time::Instant::now();
+        for _ in 0..3 {
+            assert!(it.next().unwrap().is_none());
+        }
+        // The ladder slept at least 2 + 4 + 8 ms across the three
+        // not-ready polls (a fixed 500us sleep would pass ~1.5ms).
+        assert!(
+            start.elapsed() >= Duration::from_millis(14),
+            "backoff ladder did not grow: {:?}",
+            start.elapsed()
+        );
     }
 
     #[test]

@@ -7,7 +7,8 @@ mod worker;
 
 pub use multi_agent::MultiAgentRolloutWorker;
 pub use worker::{
-    CollectMode, RolloutWorker, ScaleCounters, ScaleStats, WorkerSet,
+    CollectMode, RestartPolicy, RestartReport, RolloutWorker, ScaleCounters,
+    ScaleStats, WorkerSet,
 };
 
 use crate::metrics::EpisodeRecord;

@@ -1,13 +1,17 @@
 //! Single-policy rollout worker + the local/remote `WorkerSet`.
 
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
 use crate::actor::{
-    spawn_group, ActorHandle, ShardRegistry, WeightCastStats, WeightCaster,
-    DEFAULT_CAST_WATERMARK,
+    faults, spawn_group, ActorHandle, FaultCounters, FaultStats,
+    ShardRegistry, WeightCastStats, WeightCaster, DEFAULT_CAST_WATERMARK,
 };
 use crate::env::Env;
 use crate::metrics::EpisodeRecord;
 use crate::policy::{Gradients, Policy};
 use crate::sample_batch::{SampleBatch, SampleBatchBuilder};
+use crate::util::Backoff;
 
 /// What the worker records per transition.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -80,6 +84,7 @@ impl RolloutWorker {
     /// processed per env segment (GAE bootstrap from the policy's value
     /// of the trailing observation).  The paper's `worker.sample()`.
     pub fn sample(&mut self) -> SampleBatch {
+        faults::failpoint(faults::SITE_ROLLOUT_SAMPLE);
         let n_envs = self.envs.len();
         let obs_dim = self.obs_dim();
         for _ in 0..self.fragment {
@@ -263,6 +268,90 @@ pub struct ScaleStats {
     pub slots: usize,
 }
 
+/// Bounded-backoff restart policy for [`WorkerSet::restart_dead_with_policy`].
+///
+/// Unbounded in-place respawn turns a crash-looping worker (bad env
+/// seed, poisoned weights, injected fault) into an infinite
+/// spawn-crash-spawn cycle that burns an actor thread's setup cost per
+/// iteration and floods the registry with epoch bumps.  The policy
+/// bounds it three ways:
+///
+/// * **Backoff** — restart `k` of a slot waits `backoff_base * 2^k`
+///   (capped at `backoff_cap`) after restart `k-1`; a death inside the
+///   window is *deferred*, not serviced, so the caller's supervision
+///   loop stays non-blocking.
+/// * **Budget + breaker** — after `max_restarts` restarts without a
+///   quiet period, the breaker trips: the slot is tombstoned (exactly
+///   like [`WorkerSet::remove_worker`], so gathers drain it and its
+///   queue budget is reclaimed) and the lost capacity is left to the
+///   autoscaler / a later `add_worker` to backfill with a fresh budget.
+/// * **Amnesty** — a slot that stayed healthy for `reset_after` since
+///   its last restart gets its budget and backoff refunded: rare
+///   unrelated crashes never accumulate into a breaker trip.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RestartPolicy {
+    /// Restarts allowed per slot before the breaker trips.
+    pub max_restarts: u32,
+    /// Delay before the first re-restart; doubles per restart.
+    pub backoff_base: Duration,
+    /// Upper bound on the per-restart delay.
+    pub backoff_cap: Duration,
+    /// Healthy time since the last restart that refunds the budget.
+    pub reset_after: Duration,
+}
+
+impl Default for RestartPolicy {
+    fn default() -> Self {
+        RestartPolicy {
+            max_restarts: 3,
+            backoff_base: Duration::from_millis(10),
+            backoff_cap: Duration::from_secs(2),
+            reset_after: Duration::from_secs(30),
+        }
+    }
+}
+
+/// What one [`WorkerSet::restart_dead_with_policy`] pass did, per slot.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct RestartReport {
+    /// Slots respawned and republished this pass.
+    pub restarted: Vec<usize>,
+    /// Dead slots inside their backoff window — call again later.
+    pub deferred: Vec<usize>,
+    /// Slots whose breaker tripped this pass: tombstoned, not respawned.
+    pub tripped: Vec<usize>,
+}
+
+impl RestartReport {
+    /// True when the pass neither acted nor left anything pending.
+    pub fn is_empty(&self) -> bool {
+        self.restarted.is_empty()
+            && self.deferred.is_empty()
+            && self.tripped.is_empty()
+    }
+}
+
+/// Per-slot restart ledger behind [`RestartPolicy`].
+struct SlotRestart {
+    backoff: Backoff,
+    restarts: u32,
+    last_restart: Instant,
+    next_attempt: Instant,
+}
+
+impl SlotRestart {
+    fn new(policy: &RestartPolicy) -> Self {
+        let now = Instant::now();
+        SlotRestart {
+            backoff: Backoff::new(policy.backoff_base, policy.backoff_cap),
+            restarts: 0,
+            last_restart: now,
+            // The first restart of a slot is immediate.
+            next_attempt: now,
+        }
+    }
+}
+
 /// The local (learner) worker plus remote rollout workers — RLlib's
 /// `WorkerSet`.  All of them are actors; "local" only means "the one
 /// the trainer ops message for learning".
@@ -315,6 +404,13 @@ struct SetInner<W: 'static> {
     sync: SyncFn<W>,
     factory: std::sync::Mutex<WorkerFactory<W>>,
     scale: std::sync::Arc<ScaleCounters>,
+    /// Suspect/forced-restart/breaker-trip totals, shared with deadline
+    /// supervision (`DeadlineSupervision::with_counters`) and the
+    /// metrics reporting operators.
+    faults: std::sync::Arc<FaultCounters>,
+    /// Per-slot [`RestartPolicy`] ledgers (guarded by `factory`'s lock
+    /// discipline: only taken while serialized on a scale operation).
+    restart_state: std::sync::Mutex<HashMap<usize, SlotRestart>>,
 }
 
 impl<W: 'static> Clone for WorkerSet<W> {
@@ -366,6 +462,8 @@ impl<W: 'static> WorkerSet<W> {
                 sync: Box::new(sync),
                 factory: std::sync::Mutex::new(make),
                 scale: std::sync::Arc::new(ScaleCounters::default()),
+                faults: std::sync::Arc::new(FaultCounters::default()),
+                restart_state: std::sync::Mutex::new(HashMap::new()),
             }),
         }
     }
@@ -516,6 +614,94 @@ impl<W: 'static> WorkerSet<W> {
             }
         }
         restarted
+    }
+
+    /// The shared fault ledger: suspects noted by deadline supervision
+    /// built over this set's counters
+    /// ([`crate::iter::DeadlineSupervision::with_counters`]), plus the
+    /// forced restarts and breaker trips taken by
+    /// [`Self::restart_dead_with_policy`].  Cloned into the metrics
+    /// reporting closure so `TrainResult::faults` reflects events taken
+    /// after plan build.
+    pub fn fault_counters(&self) -> std::sync::Arc<FaultCounters> {
+        self.inner.faults.clone()
+    }
+
+    /// Point-in-time copy of [`Self::fault_counters`].
+    pub fn fault_stats(&self) -> FaultStats {
+        self.inner.faults.snapshot()
+    }
+
+    /// [`Self::restart_dead`] under a [`RestartPolicy`]: respawn dead
+    /// remotes with exponential backoff and a per-slot budget, tripping
+    /// a circuit breaker — tombstone the slot instead of respawning —
+    /// on a crash loop.  Non-blocking: a death inside its backoff
+    /// window is reported as *deferred*; drive this from a supervision
+    /// loop (e.g. each `TrainResult` tick) and the deferred slots are
+    /// serviced once their window closes.
+    ///
+    /// Stops early (remaining dead slots unreported) if the learner is
+    /// dead, matching [`Self::restart_dead`]: blank-weight respawns are
+    /// never correct.
+    pub fn restart_dead_with_policy(
+        &self,
+        policy: &RestartPolicy,
+    ) -> RestartReport {
+        let dead = self.poisoned_indices();
+        let mut report = RestartReport::default();
+        if dead.is_empty() {
+            return report;
+        }
+        let mut factory = self.inner.factory.lock().unwrap();
+        let mut states = self.inner.restart_state.lock().unwrap();
+        let now = Instant::now();
+        for &i in &dead {
+            let st = states
+                .entry(i)
+                .or_insert_with(|| SlotRestart::new(policy));
+            // Amnesty: a long healthy run since the last restart
+            // refunds the budget and the backoff.
+            if st.restarts > 0
+                && now.duration_since(st.last_restart) >= policy.reset_after
+            {
+                st.backoff.reset();
+                st.restarts = 0;
+            }
+            if st.restarts >= policy.max_restarts {
+                // Circuit breaker: the slot is crash-looping — retire
+                // it (inline: `remove_worker` would re-take the factory
+                // lock) so gathers drain it and its queue budget is
+                // reclaimed; the autoscaler or a later `add_worker`
+                // backfills with a fresh budget.
+                states.remove(&i);
+                if self.inner.registry.retire(i).is_some() {
+                    self.inner.scale.note_removed();
+                    self.inner.faults.note_breaker_trip();
+                    report.tripped.push(i);
+                }
+                continue;
+            }
+            if now < st.next_attempt {
+                report.deferred.push(i);
+                continue;
+            }
+            match self.spawn_synced(&mut factory, i) {
+                Ok((fresh, attach)) => {
+                    let ep = self.inner.registry.publish(i, fresh);
+                    for (caster, v) in attach {
+                        caster.attach(i, ep, v);
+                    }
+                    st.restarts += 1;
+                    st.last_restart = now;
+                    st.next_attempt = now + st.backoff.next_delay();
+                    self.inner.faults.note_forced_restart();
+                    report.restarted.push(i);
+                }
+                // Learner dead: stop, exactly like `restart_dead`.
+                Err(_) => break,
+            }
+        }
+        report
     }
 
     /// Add one remote worker under live traffic: spawn it from the
@@ -885,6 +1071,97 @@ mod tests {
         let err = set.add_worker().unwrap_err();
         assert!(err.to_string().contains("learner is dead"), "{err}");
         assert_eq!(set.num_live_remotes(), 1);
+    }
+
+    #[test]
+    fn restart_policy_backs_off_and_trips_breaker() {
+        let set = WorkerSet::new(2, |_| Box::new(|| dummy_worker(1, 4)));
+        let policy = RestartPolicy {
+            max_restarts: 2,
+            backoff_base: Duration::from_millis(1),
+            backoff_cap: Duration::from_millis(4),
+            reset_after: Duration::from_secs(3600),
+        };
+        let mut restarts = 0;
+        let mut trips = 0;
+        let mut deferrals = 0;
+        for _round in 0..16 {
+            let Some(h) = set.remote(0) else { break };
+            let _ = h.call(|_| -> () { panic!("crash loop") });
+            assert!(h.await_poisoned(Duration::from_secs(2)));
+            // Drive the policy until it acts on this death: deferred
+            // while the backoff window is open (non-blocking), then
+            // restarted — or breaker-tripped once the budget is spent.
+            loop {
+                let r = set.restart_dead_with_policy(&policy);
+                restarts += r.restarted.len();
+                trips += r.tripped.len();
+                deferrals += r.deferred.len();
+                if !r.restarted.is_empty() || !r.tripped.is_empty() {
+                    break;
+                }
+                assert!(
+                    !r.deferred.is_empty(),
+                    "death neither restarted, deferred, nor tripped"
+                );
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            if trips > 0 {
+                break;
+            }
+        }
+        assert_eq!(restarts, 2, "restart budget");
+        assert_eq!(trips, 1, "breaker trips exactly once");
+        assert!(deferrals >= 1, "backoff never deferred a restart");
+        assert!(set.remote(0).is_none(), "tripped slot must be tombstoned");
+        assert_eq!(set.num_live_remotes(), 1);
+        let fs = set.fault_stats();
+        assert_eq!(fs.forced_restarts, 2);
+        assert_eq!(fs.breaker_trips, 1);
+        // Nothing left to service: the pass is a clean no-op.
+        assert!(set.restart_dead_with_policy(&policy).is_empty());
+        // The tombstone is backfillable with a fresh budget.
+        assert_eq!(set.add_worker().unwrap(), 0);
+        assert_eq!(set.num_live_remotes(), 2);
+        assert!(set.remote(0).unwrap().call(|w| w.sample().len()).is_ok());
+    }
+
+    #[test]
+    fn restart_policy_amnesties_after_quiet_period() {
+        let set = WorkerSet::new(1, |_| Box::new(|| dummy_worker(1, 4)));
+        let policy = RestartPolicy {
+            max_restarts: 1,
+            backoff_base: Duration::from_millis(1),
+            backoff_cap: Duration::from_millis(1),
+            reset_after: Duration::from_millis(50),
+        };
+        // Three rare crashes separated by healthy runs longer than
+        // `reset_after`: each refunds the one-restart budget, so the
+        // breaker never trips.
+        for round in 0..3 {
+            let h = set.remote(0).expect("slot must stay live");
+            let _ = h.call(|_| -> () { panic!("rare crash") });
+            assert!(h.await_poisoned(Duration::from_secs(2)));
+            let r = set.restart_dead_with_policy(&policy);
+            assert_eq!(r.restarted, vec![0], "round {round}");
+            std::thread::sleep(Duration::from_millis(60));
+        }
+        let fs = set.fault_stats();
+        assert_eq!(fs.forced_restarts, 3);
+        assert_eq!(fs.breaker_trips, 0);
+    }
+
+    #[test]
+    fn injected_sample_fault_poisons_like_a_crash() {
+        let id = faults::inject(
+            faults::SITE_ROLLOUT_SAMPLE,
+            Some("flt-sample-w"),
+            crate::actor::FaultAction::PanicOnce,
+        );
+        let h = ActorHandle::spawn("flt-sample-w", || dummy_worker(1, 4));
+        assert!(h.call(|w| w.sample().len()).is_err());
+        assert!(h.await_poisoned(Duration::from_secs(2)));
+        faults::clear(id);
     }
 
     #[test]

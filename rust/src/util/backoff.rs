@@ -1,0 +1,110 @@
+//! Bounded exponential backoff — the shared retry-pacing helper.
+//!
+//! Two very different consumers share this: the `RestartPolicy` on
+//! `WorkerSet` paces *restart attempts* of a crash-looping slot with it
+//! (non-blocking: the policy records the next-eligible instant and skips
+//! the slot until then), and the replay-read operator paces its
+//! not-ready polls with it (blocking: the driver sleeps the returned
+//! delay).  Keeping one implementation means the breaker tests and the
+//! replay tests exercise the same arithmetic.
+
+use std::time::Duration;
+
+/// Exponential backoff with a cap: delays run `base, 2*base, 4*base, …`
+/// saturating at `cap`.  `reset()` returns to `base` (call it on
+/// success so one transient stall does not leave the consumer slow).
+#[derive(Debug, Clone)]
+pub struct Backoff {
+    base: Duration,
+    cap: Duration,
+    attempt: u32,
+}
+
+impl Backoff {
+    /// `base` is the first delay, `cap` the saturation bound.  A zero
+    /// `base` is clamped to 1µs so doubling makes progress.
+    pub fn new(base: Duration, cap: Duration) -> Self {
+        let base = base.max(Duration::from_micros(1));
+        Backoff { base, cap: cap.max(base), attempt: 0 }
+    }
+
+    /// The next delay in the schedule (advances the attempt counter).
+    pub fn next_delay(&mut self) -> Duration {
+        let delay = self.peek();
+        self.attempt = self.attempt.saturating_add(1);
+        delay
+    }
+
+    /// The delay `next_delay` would return, without advancing.
+    pub fn peek(&self) -> Duration {
+        // base * 2^attempt, saturating at cap without overflow: once
+        // the shift alone exceeds cap/base, further doubling is moot.
+        let factor = 1u32.checked_shl(self.attempt).unwrap_or(u32::MAX);
+        self.base.saturating_mul(factor).min(self.cap)
+    }
+
+    /// Attempts taken since construction or the last `reset`.
+    pub fn attempts(&self) -> u32 {
+        self.attempt
+    }
+
+    /// Back to the base delay (the consumer made progress).
+    pub fn reset(&mut self) {
+        self.attempt = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn doubles_until_cap() {
+        let mut b = Backoff::new(
+            Duration::from_millis(10),
+            Duration::from_millis(55),
+        );
+        assert_eq!(b.next_delay(), Duration::from_millis(10));
+        assert_eq!(b.next_delay(), Duration::from_millis(20));
+        assert_eq!(b.next_delay(), Duration::from_millis(40));
+        // 80ms would exceed the cap: saturate.
+        assert_eq!(b.next_delay(), Duration::from_millis(55));
+        assert_eq!(b.next_delay(), Duration::from_millis(55));
+        assert_eq!(b.attempts(), 5);
+    }
+
+    #[test]
+    fn reset_returns_to_base() {
+        let mut b =
+            Backoff::new(Duration::from_millis(5), Duration::from_secs(1));
+        b.next_delay();
+        b.next_delay();
+        b.reset();
+        assert_eq!(b.attempts(), 0);
+        assert_eq!(b.next_delay(), Duration::from_millis(5));
+    }
+
+    #[test]
+    fn zero_base_is_clamped() {
+        let mut b = Backoff::new(Duration::ZERO, Duration::from_millis(1));
+        assert!(b.next_delay() > Duration::ZERO);
+    }
+
+    #[test]
+    fn huge_attempt_counts_do_not_overflow() {
+        let mut b =
+            Backoff::new(Duration::from_millis(1), Duration::from_secs(2));
+        for _ in 0..100 {
+            assert!(b.next_delay() <= Duration::from_secs(2));
+        }
+        assert_eq!(b.peek(), Duration::from_secs(2));
+    }
+
+    #[test]
+    fn peek_does_not_advance() {
+        let b = Backoff::new(Duration::from_millis(3), Duration::from_secs(1));
+        assert_eq!(b.peek(), Duration::from_millis(3));
+        assert_eq!(b.peek(), Duration::from_millis(3));
+        assert_eq!(b.attempts(), 0);
+    }
+}

@@ -1,12 +1,14 @@
 //! Small shared utilities: deterministic RNG, timers, moving statistics,
 //! and the vendored error type (`anyhow` stand-in for the offline build).
 
+mod backoff;
 pub mod error;
 pub mod json;
 mod rng;
 mod stats;
 mod timer;
 
+pub use backoff::Backoff;
 pub use json::Json;
 pub use rng::Rng;
 pub use stats::MovingStat;

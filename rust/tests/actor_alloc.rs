@@ -13,6 +13,13 @@
 //! so allocator traffic from actor threads or the test harness cannot
 //! produce false positives/negatives; this file holds a single test for
 //! the same reason.
+//!
+//! The fault-injection plane (`actor::faults`) is compiled into every
+//! send/loop site permanently — no cfg gate — so this test also pins
+//! its disarmed cost: one relaxed atomic load per site, no allocation.
+//! The warmup covers the registry's one-time `OnceLock` init; no rule
+//! is armed here, so if these assertions trip after touching the fault
+//! plane, a failpoint grew onto the steady-state path.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;

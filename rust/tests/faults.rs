@@ -1,0 +1,350 @@
+//! Fault-plane acceptance tests: a scripted permanent Hang wedges a
+//! rollout shard mid-plan, deadline supervision declares it suspect,
+//! force-poisons it through `ActorHandle::kill`, and the `RestartPolicy`
+//! either brings up a replacement that rejoins the *running* gather or
+//! — on a crash loop — trips the circuit breaker and tombstones the
+//! slot.  The driver never wedges and never double-counts a completion.
+//!
+//! Fault rules are process-global and tests in one binary run
+//! concurrently, so every test scopes its rules with a unique actor-name
+//! prefix and clears them on exit.
+//!
+//! These run on the Dummy env/policy, so they need no AOT artifacts.
+
+use std::time::{Duration, Instant};
+
+use flowrl::actor::faults::{
+    self, SITE_CASTER_LANE, SITE_ROLLOUT_SAMPLE,
+};
+use flowrl::actor::{
+    FaultAction, FaultStats, WeightCaster, DEFAULT_CAST_WATERMARK,
+};
+use flowrl::env::{DummyEnv, Env};
+use flowrl::iter::DeadlineSupervision;
+use flowrl::ops::parallel_rollouts_from;
+use flowrl::policy::DummyPolicy;
+use flowrl::rollout::{
+    CollectMode, RestartPolicy, RolloutWorker, WorkerSet,
+};
+
+/// A `WorkerSet` with caller-chosen actor names, so each test's fault
+/// rules match only its own actors (mirrors `WorkerSet::new`, which
+/// hard-codes `worker-{i}` — too broad for a shared binary).
+fn worker_set(local: &str, prefix: &str, n_remote: usize) -> WorkerSet {
+    let set = WorkerSet::with_protocol(
+        local,
+        prefix,
+        n_remote,
+        |_| {
+            Box::new(|| {
+                let envs: Vec<Box<dyn Env>> =
+                    vec![Box::new(DummyEnv::new(4, 10))];
+                RolloutWorker::new(
+                    envs,
+                    Box::new(DummyPolicy::new(0.1)),
+                    4,
+                    CollectMode::OnPolicy,
+                )
+            })
+        },
+        |local, fresh| {
+            let weights: std::sync::Arc<[f32]> = local
+                .call(|w| w.get_weights())
+                .map_err(|e| {
+                    flowrl::util::error::Error::msg(format!(
+                        "learner is dead ({e})"
+                    ))
+                })?
+                .into();
+            fresh.cast(move |w| w.set_weights(&weights));
+            Ok(())
+        },
+    );
+    set.register_caster(std::sync::Arc::new(WeightCaster::new(
+        set.registry().clone(),
+        DEFAULT_CAST_WATERMARK,
+        |w: &mut RolloutWorker, p: &[f32]| w.set_weights(p),
+    )));
+    set
+}
+
+/// Tentpole acceptance, async side: a shard wedged by a permanent
+/// `Hang` is detected by the dispatch deadline, written off, killed
+/// into the poison path, and its restarted replacement rejoins the SAME
+/// running gather — with no item lost, duplicated, or attributed to the
+/// corpse.
+#[test]
+fn gather_async_survives_permanent_hang() {
+    let set = worker_set("fia-learner", "fia-w", 2);
+    // Shard 1 wedges inside sample() on its very first dispatch.
+    let rule = faults::inject(
+        SITE_ROLLOUT_SAMPLE,
+        Some("fia-w-1"),
+        FaultAction::Hang,
+    );
+    let victim = set.remote(1).expect("live remote");
+    let sup = DeadlineSupervision::with_counters(
+        Duration::from_millis(150),
+        set.fault_counters(),
+    );
+    let mut it = parallel_rollouts_from(&set)
+        .gather_async_with_source_deadline(1, sup);
+
+    // The stream keeps flowing off the healthy shard while the wedged
+    // one counts down to its deadline; the hung shard never completed a
+    // dispatch, so every item comes from shard 0.
+    let mut pulls = 0u32;
+    while set.fault_stats().suspects == 0 {
+        let (_batch, src) =
+            it.next().expect("stream wedged behind the hung shard");
+        assert_ne!(src.id(), victim.id(), "hung shard produced an item");
+        pulls += 1;
+        assert!(pulls < 100_000, "deadline never fired");
+    }
+
+    // Write-off force-killed the corpse: the hang panics into the
+    // normal supervision path (poison + death notice).
+    assert!(victim.await_poisoned(Duration::from_secs(2)));
+    assert_eq!(set.poisoned_indices(), vec![1]);
+
+    // Release the rule so the replacement comes up clean, then recover
+    // under the default policy (first restart is immediate).
+    assert!(faults::clear(rule));
+    let report = set.restart_dead_with_policy(&RestartPolicy::default());
+    assert_eq!(report.restarted, vec![1]);
+    assert!(report.tripped.is_empty());
+    let fresh = set.remote(1).expect("replacement published");
+    assert_ne!(fresh.id(), victim.id());
+
+    // The SAME running gather streams off the replacement; the corpse's
+    // written-off completion (its death notice) is consumed by the
+    // forgiveness ledger, never surfacing as an item.
+    let mut fresh_items = 0;
+    for _ in 0..64 {
+        let (_batch, src) = it.next().expect("stream must keep flowing");
+        assert_ne!(src.id(), victim.id(), "item attributed to the corpse");
+        if src.id() == fresh.id() {
+            fresh_items += 1;
+        }
+    }
+    assert!(fresh_items > 0, "replacement never rejoined the gather");
+    assert_eq!(
+        set.fault_stats(),
+        FaultStats { suspects: 1, forced_restarts: 1, breaker_trips: 0 }
+    );
+}
+
+/// Tentpole acceptance, sync side: a barrier round degrades to the
+/// surviving quorum when a shard hangs past the deadline, and returns
+/// to full rounds once the replacement is published.
+#[test]
+fn gather_sync_survives_permanent_hang() {
+    let set = worker_set("fis-learner", "fis-w", 2);
+    let rule = faults::inject(
+        SITE_ROLLOUT_SAMPLE,
+        Some("fis-w-0"),
+        FaultAction::Hang,
+    );
+    let victim = set.remote(0).expect("live remote");
+    let sup = DeadlineSupervision::with_counters(
+        Duration::from_millis(150),
+        set.fault_counters(),
+    );
+    let mut it = parallel_rollouts_from(&set).gather_sync_deadline(sup);
+
+    // Round 1: shard 0 hangs, the deadline fires, and the round
+    // completes off the survivor instead of wedging the driver.
+    let round = it.next().expect("round must complete");
+    assert_eq!(round.len(), 1, "round did not degrade to the quorum");
+    assert_eq!(set.fault_stats().suspects, 1);
+
+    assert!(victim.await_poisoned(Duration::from_secs(2)));
+    assert!(faults::clear(rule));
+    let report = set.restart_dead_with_policy(&RestartPolicy::default());
+    assert_eq!(report.restarted, vec![0]);
+
+    // The replacement joins at the next round boundary: full rounds
+    // again, through the same running iterator, and the corpse's
+    // written-off completion never corrupts a later round's count.
+    assert_eq!(it.next().expect("stream must keep flowing").len(), 2);
+    assert_eq!(it.next().expect("stream must keep flowing").len(), 2);
+    assert_eq!(
+        set.fault_stats(),
+        FaultStats { suspects: 1, forced_restarts: 1, breaker_trips: 0 }
+    );
+}
+
+/// Satellite: a crash-looping worker — `PanicOnce` re-injected at every
+/// restart — burns its per-slot budget and trips the circuit breaker:
+/// the slot is tombstoned exactly once, the set keeps serving off the
+/// survivor, and `add_worker` reclaims the retired slot with a fresh
+/// budget.
+#[test]
+fn breaker_trips_within_budget_and_slot_is_reclaimed() {
+    let set = worker_set("fib-learner", "fib-w", 2);
+    let policy = RestartPolicy {
+        max_restarts: 2,
+        backoff_base: Duration::from_millis(1),
+        backoff_cap: Duration::from_millis(4),
+        reset_after: Duration::from_secs(3600),
+    };
+
+    let crash = |set: &WorkerSet| {
+        let rule = faults::inject(
+            SITE_ROLLOUT_SAMPLE,
+            Some("fib-w-0"),
+            FaultAction::PanicOnce,
+        );
+        let h = set.remote(0).expect("live remote");
+        assert!(h.call(|w| { w.sample(); }).is_err());
+        assert!(h.await_poisoned(Duration::from_secs(2)));
+        faults::clear(rule);
+    };
+
+    crash(&set);
+    let mut restarts = 0;
+    let mut tripped = false;
+    let start = Instant::now();
+    while !tripped {
+        assert!(
+            start.elapsed() < Duration::from_secs(10),
+            "breaker never tripped"
+        );
+        let report = set.restart_dead_with_policy(&policy);
+        if report.restarted == vec![0] {
+            restarts += 1;
+            crash(&set); // the replacement crash-loops too
+        } else if report.tripped == vec![0] {
+            tripped = true;
+        } else {
+            // Inside the backoff window: deferred, not dropped.
+            assert_eq!(report.deferred, vec![0]);
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+    assert_eq!(restarts, policy.max_restarts);
+    assert_eq!(
+        set.fault_stats(),
+        FaultStats { suspects: 0, forced_restarts: 2, breaker_trips: 1 }
+    );
+
+    // Tombstoned exactly once: the slot is gone (not dead), the
+    // survivor serves, and another policy pass is a no-op.
+    assert!(set.remote(0).is_none());
+    assert!(set.poisoned_indices().is_empty());
+    assert_eq!(set.num_live_remotes(), 1);
+    assert!(set.restart_dead_with_policy(&policy).is_empty());
+    assert_eq!(set.fault_stats().breaker_trips, 1);
+
+    // Queue capacity was reclaimed: backfill reuses the retired slot
+    // (fresh budget, clean worker) instead of growing tag space.
+    assert_eq!(set.add_worker().expect("backfill"), 0);
+    let fresh = set.remote(0).expect("backfilled slot is live");
+    assert!(fresh.call(|w| w.sample().len()).expect("samples") > 0);
+    assert_eq!(set.num_live_remotes(), 2);
+}
+
+/// Fault-matrix soak (run by `tools/ci.sh --chaos`): a seeded mixture
+/// of slow shards, shed cast lanes, a crash, and a deterministic wedge,
+/// all against one live supervised plan.  The driver must keep
+/// streaming, the restart policy must recover or retire every failure,
+/// and the run must end with a live quorum.
+#[test]
+#[ignore = "fault soak: executed by tools/ci.sh --chaos"]
+fn fault_matrix_soak() {
+    let set = worker_set("soak-learner", "soak-w", 4);
+    set.local.call(|w| w.set_weights(&[0.5])).unwrap();
+    let rules = [
+        // Every soak shard is sometimes slow (seeded draw).
+        faults::inject_with(
+            SITE_ROLLOUT_SAMPLE,
+            Some("soak-w"),
+            FaultAction::Delay(2),
+            0.2,
+            None,
+            None,
+        ),
+        // Cast lanes drop a fraction of weight broadcasts: the caster
+        // must shed, never wedge the barrier.
+        faults::inject_with(
+            SITE_CASTER_LANE,
+            Some("soak-w"),
+            FaultAction::DropReply,
+            0.1,
+            None,
+            None,
+        ),
+        // One crash: shard 2 panics on its first sample.
+        faults::inject(
+            SITE_ROLLOUT_SAMPLE,
+            Some("soak-w-2"),
+            FaultAction::PanicOnce,
+        ),
+        // One wedge: shard 1 hangs on its 40th sample (the rule disarms
+        // after firing, so the replacement comes up clean).
+        faults::inject_with(
+            SITE_ROLLOUT_SAMPLE,
+            Some("soak-w-1"),
+            FaultAction::Hang,
+            1.0,
+            Some(40),
+            None,
+        ),
+    ];
+
+    let sup = DeadlineSupervision::with_counters(
+        Duration::from_millis(250),
+        set.fault_counters(),
+    );
+    let mut it = parallel_rollouts_from(&set)
+        .gather_async_with_source_deadline(2, sup);
+    let policy = RestartPolicy {
+        max_restarts: 3,
+        backoff_base: Duration::from_millis(1),
+        backoff_cap: Duration::from_millis(8),
+        reset_after: Duration::from_secs(3600),
+    };
+
+    let start = Instant::now();
+    let mut items: u64 = 0;
+    while start.elapsed() < Duration::from_secs(8) {
+        assert!(
+            it.next().is_some(),
+            "supervised stream ended under faults"
+        );
+        items += 1;
+        if items % 64 == 0 {
+            set.restart_dead_with_policy(&policy);
+            set.sync_weights(); // exercises the faulted cast lanes
+        }
+    }
+    // Final recovery drive: every remaining corpse is restarted or
+    // breaker-retired within a bounded number of policy passes.
+    let drain = Instant::now();
+    while !set.poisoned_indices().is_empty() {
+        assert!(
+            drain.elapsed() < Duration::from_secs(10),
+            "policy never drained the dead set: {:?}",
+            set.poisoned_indices()
+        );
+        set.restart_dead_with_policy(&policy);
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    for id in rules {
+        faults::clear(id);
+    }
+    let stats = set.fault_stats();
+    assert!(items > 100, "soak barely streamed: {items} items");
+    assert!(stats.suspects >= 1, "the wedge was never detected: {stats:?}");
+    assert!(
+        stats.forced_restarts >= 1,
+        "no fault was ever recovered: {stats:?}"
+    );
+    assert!(
+        set.num_live_remotes() >= 2,
+        "soak ended below quorum: {} live",
+        set.num_live_remotes()
+    );
+    assert!(set.weight_cast_stats().shed >= 1, "no cast was ever shed");
+}

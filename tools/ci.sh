@@ -13,10 +13,13 @@
 #   tools/ci.sh --chaos   # run ONLY the chaos soaks in release mode
 #                         # under hard timeouts: the elastic scale-out
 #                         # soak (rust/tests/scale_out.rs, #[ignore]d
-#                         # grow-2->8-while-killing-one-per-round) and
-#                         # the autoscale soak (rust/tests/autoscale.rs,
+#                         # grow-2->8-while-killing-one-per-round), the
+#                         # autoscale soak (rust/tests/autoscale.rs,
 #                         # #[ignore]d idle->grow / busy->shrink
-#                         # controller convergence)
+#                         # controller convergence), and the fault-matrix
+#                         # soak (rust/tests/faults.rs, #[ignore]d
+#                         # scripted delay/drop/crash/hang mix under
+#                         # deadline supervision + RestartPolicy)
 #
 # Every step prints its own wall-clock seconds (==> ... [Ns]) so a slow
 # gate names the stage that slowed down.
@@ -72,6 +75,9 @@ if [ "$chaos" -eq 1 ]; then
     --ignored --nocapture
   step "autoscale soak: controller converges (idle->grow, busy->shrink)" \
     timeout 120 cargo test --release --test autoscale -- \
+    --ignored --nocapture
+  step "fault-matrix soak: delay/drop/crash/hang under supervision" \
+    timeout 120 cargo test --release --test faults -- \
     --ignored --nocapture
   echo "CI OK (chaos) [$((SECONDS - ci_start))s]"
   exit 0

@@ -21,7 +21,10 @@ Rules enforced per file:
   * BENCH_autoscale.json must allowlist (and, once results are
     recorded, cover) "time_to_converge" and "steady_utilization" — the
     schema rust/benches/autoscale.rs emits ("percent" rows are the
-    learner busy fraction x 100 and must stay within [0, 100]).
+    learner busy fraction x 100 and must stay within [0, 100]);
+  * BENCH_faults.json must allowlist (and, once results are recorded,
+    cover) "hang_detection_latency" and "disarmed_overhead" — the
+    schema rust/benches/fault_detection.rs emits.
 
 Exit code 0 = all files pass; 1 = any violation (listed on stderr).
 
@@ -48,6 +51,7 @@ REQUIRED_KEYS = ("bench", "units", "how_to_regenerate", "results")
 REQUIRED_OPS = {
     "elastic": ("scale_up_latency", "growth_throughput"),
     "autoscale": ("time_to_converge", "steady_utilization"),
+    "faults": ("hang_detection_latency", "disarmed_overhead"),
 }
 
 
