@@ -18,7 +18,7 @@ use flowrl::algorithms::{EnvKind, TrainerConfig};
 use flowrl::iter::{concurrently, UnionMode};
 use flowrl::metrics::TrainResult;
 use flowrl::ops::{
-    create_replay_actors, parallel_rollouts_from, replay,
+    create_replay_shards, parallel_rollouts_from, replay,
     standard_metrics_reporting, store_to_replay_buffer, TrainItem,
 };
 
@@ -67,15 +67,15 @@ fn dqn_ratio(
     let workers = cfg.dqn_workers();
     let obs_dim =
         workers.local.call(|w| w.obs_dim()).expect("learner died");
-    let replay_actors = create_replay_actors(1, obs_dim, 8192, 64, 64);
+    let service = create_replay_shards(1, obs_dim, 8192, 64, 64);
     let store_op = parallel_rollouts_from(&workers)
         .gather_async(1)
-        .for_each(store_to_replay_buffer(replay_actors.clone()))
+        .for_each(store_to_replay_buffer(&service))
         .for_each(|_| TrainItem::default());
-    let replay_op = replay(replay_actors, 1).for_each({
+    let replay_op = replay(&service, 1).for_each({
         let local = workers.local.clone();
         move |item| {
-            let Some((sample, ra)) = item else {
+            let Some((sample, lease)) = item else {
                 return TrainItem::default();
             };
             let steps = sample.batch.len();
@@ -84,7 +84,7 @@ fn dqn_ratio(
             let (stats, td) = local
                 .call(move |w| w.learn_and_td(&batch))
                 .expect("learner died");
-            ra.cast(move |state| state.update_priorities(&indices, &td));
+            lease.update_priorities(indices, td);
             TrainItem::new(stats, steps)
         }
     });

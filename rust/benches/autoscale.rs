@@ -135,6 +135,7 @@ fn measure(smoke: bool) -> Report {
         cooldown_reports: 0,
         confirm_reports: 1,
         step: 1,
+        ..AutoscalerConfig::default()
     });
     let mut reports =
         autoscaled_metrics_reporting(train_op, &set, 1, controller);

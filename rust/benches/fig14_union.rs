@@ -26,7 +26,7 @@ use flowrl::algorithms::{
 use flowrl::iter::LocalIter;
 use flowrl::metrics::TrainResult;
 use flowrl::ops::{
-    concat_batches, create_replay_actors, parallel_ma_rollouts_from, replay,
+    concat_batches, create_replay_shards, parallel_ma_rollouts_from, replay,
     select_policy, store_to_replay_buffer, TrainItem,
 };
 
@@ -120,14 +120,14 @@ fn dqn_alone() -> LocalIter<TrainResult> {
     let rollouts =
         parallel_ma_rollouts_from(&set).gather_async(cfg.num_async);
     let obs_dim = local.call(|w| w.obs_dim()).expect("learner died");
-    let replay_actors = create_replay_actors(
+    let service = create_replay_shards(
         1,
         obs_dim,
         ma.dqn.buffer_capacity,
         ma.dqn.learning_starts,
         64,
     );
-    let mut store = store_to_replay_buffer(replay_actors.clone());
+    let mut store = store_to_replay_buffer(&service);
     let store_op = rollouts.filter_map(select_policy("dqn")).for_each(
         move |b| {
             store(b);
@@ -135,8 +135,8 @@ fn dqn_alone() -> LocalIter<TrainResult> {
         },
     );
     let l = local.clone();
-    let replay_op = replay(replay_actors, 1).for_each(move |item| {
-        let Some((sample, ra)) = item else {
+    let replay_op = replay(&service, 1).for_each(move |item| {
+        let Some((sample, lease)) = item else {
             return TrainItem::default();
         };
         let steps = sample.batch.len();
@@ -148,7 +148,7 @@ fn dqn_alone() -> LocalIter<TrainResult> {
                 (stats, w.policies["dqn"].td_abs().unwrap_or_default())
             })
             .expect("learner died");
-        ra.cast(move |state| state.update_priorities(&indices, &td));
+        lease.update_priorities(indices, td);
         TrainItem::new(stats, steps)
     });
     let merged = flowrl::iter::concurrently(

@@ -42,6 +42,7 @@ fn config(num_workers: usize) -> TrainerConfig {
         seed: 9,
         num_async: 1,
         env: EnvKind::CartPole,
+        ..TrainerConfig::default()
     }
 }
 

@@ -1,0 +1,194 @@
+//! Sharded replay service bench: add and sample throughput of the
+//! registry-backed `ops::ReplayService` across shard counts.
+//!
+//! Two reported ops, each measured at every shard count in the sweep
+//! (1/2/4; smoke runs 1/2):
+//!
+//! * `add_throughput` — transitions/s through `store_to_replay_buffer`'s
+//!   hash-routed store path, from the first `store` call until every
+//!   routed transition is visible in the pool's add gauges (driver-side
+//!   routing + mailbox transfer + per-shard ring insert);
+//! * `sample_throughput` — transitions/s delivered by the `replay`
+//!   stream with the learner's priority round-trip included (each drawn
+//!   sample's TD feedback goes back through its `ReplayLease`), pulled
+//!   with two in-flight requests per shard.
+//!
+//! The interesting read is the *scaling shape*: add throughput should
+//! grow with shards (independent rings, one mailbox each) until the
+//! driver-side routing loop saturates; sample throughput bounds how
+//! fast an Ape-X learner tier can be fed.
+//!
+//! Runs on synthetic batches — no env, no policy, no AOT artifacts, so
+//! this bench always executes (including under `tools/ci.sh --smoke`).
+//!
+//! Run: `cargo bench --bench replay_shard`
+//! Smoke: `cargo bench --bench replay_shard -- --smoke`
+//! Record: `cargo bench --bench replay_shard -- --write`
+//!         (rewrites BENCH_replay_shard.json at the repo root)
+
+use std::time::{Duration, Instant};
+
+use flowrl::ops::{create_replay_shards, replay, store_to_replay_buffer};
+use flowrl::sample_batch::SampleBatchBuilder;
+
+const OBS_DIM: usize = 8;
+const FRAGMENT: usize = 32;
+
+fn fragment_batch() -> flowrl::sample_batch::SampleBatch {
+    let mut b = SampleBatchBuilder::new(OBS_DIM);
+    let obs = [0.5f32; OBS_DIM];
+    for i in 0..FRAGMENT {
+        b.add_transition(&obs, (i % 4) as i32, 1.0, &obs, false);
+    }
+    b.build()
+}
+
+struct ShardPoint {
+    shards: usize,
+    add_items_per_s: f64,
+    sample_items_per_s: f64,
+    transitions: usize,
+}
+
+fn measure(shards: usize, smoke: bool) -> ShardPoint {
+    let batches = if smoke { 64 } else { 2048 };
+    let pulls = if smoke { 64 } else { 2048 };
+    let service =
+        create_replay_shards(shards, OBS_DIM, 1 << 15, 0, FRAGMENT);
+    let mut store = store_to_replay_buffer(&service);
+    let batch = fragment_batch();
+
+    // --- add_throughput: route `batches` fragments across the live
+    // shard set, then wait for the last cast to land in a ring (the
+    // gauges make the landed count observable without a per-shard
+    // call).  Column storage is shared, so the clone per store is the
+    // same cheap Arc bump the rollout path does.
+    let want = (batches * FRAGMENT) as u64;
+    let t0 = Instant::now();
+    for _ in 0..batches {
+        store(batch.clone());
+    }
+    loop {
+        let added = service.backlog_stats().added;
+        if added >= want {
+            break;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(60),
+            "store path stalled: {added}/{want} transitions landed"
+        );
+        std::thread::yield_now();
+    }
+    let add_items_per_s = want as f64 / t0.elapsed().as_secs_f64();
+
+    // --- sample_throughput: drain the replay stream with the learner's
+    // priority round-trip, 2 in-flight per shard (Ape-X's default
+    // pipelining shape).
+    let mut it = replay(&service, 2);
+    for _ in 0..8 {
+        it.next().expect("warmup pull");
+    }
+    let mut sampled = 0usize;
+    let mut drawn = 0usize;
+    let t0 = Instant::now();
+    while drawn < pulls {
+        assert!(
+            t0.elapsed() < Duration::from_secs(120),
+            "replay stream stalled after {drawn}/{pulls} samples"
+        );
+        if let Some((sample, lease)) = it.next().expect("replay stream") {
+            sampled += sample.batch.len();
+            drawn += 1;
+            let tds = vec![1.0f32; sample.indices.len()];
+            lease.update_priorities(sample.indices, tds);
+        }
+    }
+    let sample_items_per_s = sampled as f64 / t0.elapsed().as_secs_f64();
+
+    ShardPoint {
+        shards,
+        add_items_per_s,
+        sample_items_per_s,
+        transitions: want as usize,
+    }
+}
+
+fn json_report(points: &[ShardPoint]) -> String {
+    // Mirrors the committed BENCH_replay_shard.json schema so
+    // `-- --write` preserves the regeneration command and targets.
+    let mut out = String::new();
+    out.push_str("{\n  \"bench\": \"replay_shard\",\n");
+    out.push_str("  \"units\": \"items_per_s\",\n");
+    out.push_str(
+        "  \"how_to_regenerate\": \"cd rust && cargo bench --bench \
+         replay_shard -- --write\",\n",
+    );
+    out.push_str(
+        "  \"note\": \"add_throughput = transitions/s through \
+         store_to_replay_buffer's hash-routed store path until the \
+         last routed transition is visible in the pool gauges; \
+         sample_throughput = transitions/s delivered by the replay \
+         stream including the ReplayLease priority round-trip, 2 \
+         in-flight per shard.  Synthetic 32-transition fragments, \
+         obs_dim 8, 32k-slot rings, learning_starts 0.\",\n",
+    );
+    out.push_str(
+        "  \"acceptance_targets\": {\n    \"add_throughput\": \
+         \"monotone non-decreasing in shard count up to the routing \
+         loop's saturation point\",\n    \"sample_throughput\": \">= \
+         1.5x single-shard rate at 4 shards (independent rings must \
+         parallelize)\"\n  },\n",
+    );
+    out.push_str(
+        "  \"ops\": [\"add_throughput\", \"sample_throughput\"],\n",
+    );
+    out.push_str("  \"results\": [\n");
+    for (i, p) in points.iter().enumerate() {
+        let tail = if i + 1 == points.len() { "" } else { "," };
+        out.push_str(&format!(
+            "    {{\"op\": \"add_throughput\", \"items_per_s\": {:.0}, \
+             \"shards\": {}, \"transitions\": {}}},\n",
+            p.add_items_per_s, p.shards, p.transitions
+        ));
+        out.push_str(&format!(
+            "    {{\"op\": \"sample_throughput\", \"items_per_s\": \
+             {:.0}, \"shards\": {}}}{tail}\n",
+            p.sample_items_per_s, p.shards
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+fn main() {
+    let write = std::env::args().any(|a| a == "--write");
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let sweep: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4] };
+    let mut points = Vec::new();
+    println!("# replay_shard bench");
+    println!("| shards | add items/s | sample items/s |");
+    println!("|--------|-------------|----------------|");
+    for &n in sweep {
+        let p = measure(n, smoke);
+        println!(
+            "| {} | {:.0} | {:.0} |",
+            p.shards, p.add_items_per_s, p.sample_items_per_s
+        );
+        points.push(p);
+    }
+    for p in &points {
+        assert!(p.add_items_per_s.is_finite() && p.add_items_per_s > 0.0);
+        assert!(
+            p.sample_items_per_s.is_finite() && p.sample_items_per_s > 0.0
+        );
+    }
+    let json = json_report(&points);
+    if write {
+        let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("../BENCH_replay_shard.json");
+        std::fs::write(&path, &json).expect("write BENCH_replay_shard.json");
+        println!("\nwrote {}", path.display());
+    } else {
+        println!("\n{json}");
+    }
+}

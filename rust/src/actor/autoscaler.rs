@@ -41,10 +41,30 @@
 //!   beyond `shed_tolerance`) → the pool is over-driven relative to
 //!   the consumer → treated as down-pressure regardless of the
 //!   learner gauge.
+//!
+//! The same controller core also drives the **replay-shard pool**
+//! (sharded prioritized replay behind `ops::ReplayService`), with the
+//! control direction flipped — there the scaled pool is the *consumer*
+//! of the store stream:
+//!
+//! * shard mailboxes backing up (`replay_queue_pressure`) or rings
+//!   filling (`replay_fill_above`) → the shards cannot absorb the
+//!   store/sample traffic → grow, with a step **proportional** to how
+//!   far the backlog overshoots the pressure threshold;
+//! * sustained not-ready polls with empty mailboxes
+//!   (`replay_idle_polls`) → the inflow is spread too thin for shards
+//!   to even reach `learning_starts` → shrink.
+//!
+//! Both loops share one hysteresis gate (deadband → confirmation
+//! streak → cooldown), so the no-flap guarantees proved for the
+//! sampler pool hold for the replay pool too.  Use one [`Autoscaler`]
+//! instance per pool: the interval tracking is keyed per pool, not per
+//! signal kind.
 
 use std::collections::HashMap;
 
 use super::{ActorStatsSnapshot, WeightCastStats};
+use crate::replay::ReplayBacklogStats;
 
 /// Tuning knobs for one [`Autoscaler`].  Defaults are conservative:
 /// symmetric deadband, two-report confirmation, two-report cooldown,
@@ -75,8 +95,19 @@ pub struct AutoscalerConfig {
     pub cooldown_reports: u32,
     /// Consecutive same-direction reports required before acting.
     pub confirm_reports: u32,
-    /// Workers added/removed per action.
+    /// Workers added/removed per action.  For the replay loop this is
+    /// the *base* step; backlog overshoot multiplies it (see
+    /// [`Autoscaler::decide_replay`]).
     pub step: usize,
+    /// Replay loop: a shard interval mailbox high-water mark at or
+    /// above this counts as backlog (up-pressure).
+    pub replay_queue_pressure: usize,
+    /// Replay loop: a ring fill fraction at or above this counts as
+    /// capacity pressure (up-pressure).
+    pub replay_fill_above: f64,
+    /// Replay loop: this many not-ready polls per interval, with empty
+    /// shard mailboxes, counts as idleness (down-pressure).
+    pub replay_idle_polls: u64,
 }
 
 impl Default for AutoscalerConfig {
@@ -91,11 +122,27 @@ impl Default for AutoscalerConfig {
             cooldown_reports: 2,
             confirm_reports: 2,
             step: 1,
+            replay_queue_pressure: 8,
+            replay_fill_above: 0.85,
+            replay_idle_polls: 8,
         }
     }
 }
 
 impl AutoscalerConfig {
+    /// Defaults for a **replay-shard pool** controller with the given
+    /// bounds (`TrainerConfig::{min,max}_replay_shards`).  Only the
+    /// pool bounds differ from [`Default`]; the replay gauges and the
+    /// shared hysteresis knobs keep their defaults.
+    pub fn replay_defaults(min_shards: usize, max_shards: usize) -> Self {
+        let min = min_shards.max(1);
+        AutoscalerConfig {
+            min_workers: min,
+            max_workers: max_shards.max(min),
+            ..AutoscalerConfig::default()
+        }
+    }
+
     fn validate(&self) {
         assert!(self.min_workers >= 1, "min_workers must be >= 1");
         assert!(self.max_workers >= self.min_workers);
@@ -108,6 +155,12 @@ impl AutoscalerConfig {
         );
         assert!(self.step >= 1);
         assert!(self.confirm_reports >= 1);
+        assert!(self.replay_queue_pressure >= 1);
+        assert!(
+            self.replay_fill_above > 0.0 && self.replay_fill_above <= 1.0,
+            "replay_fill_above must be in (0, 1], got {}",
+            self.replay_fill_above
+        );
     }
 }
 
@@ -127,6 +180,24 @@ pub struct AutoscaleSignals {
     /// Live workers at sampling time — the base the target is computed
     /// from.
     pub live_workers: usize,
+}
+
+/// One report interval's replay-pool control inputs, reduced from
+/// [`ReplayBacklogStats`] by [`Autoscaler::replay_signals`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReplaySignals {
+    /// Deepest shard mailbox observed this interval (high-water if it
+    /// moved, current depth otherwise).
+    pub queue_hwm: usize,
+    /// Highest ring fill fraction across live shards (point-in-time —
+    /// ring contents don't reset between reports).
+    pub ring_fill: f64,
+    /// Not-ready replay polls this interval.
+    pub not_ready_delta: u64,
+    /// Samples yielded this interval.
+    pub sample_delta: u64,
+    /// Live shards at sampling time.
+    pub live_shards: usize,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -175,6 +246,11 @@ pub struct Autoscaler {
     /// estimate.
     prev_hwm: HashMap<u64, usize>,
     prev_shed: u64,
+    /// Replay loop interval tracking (pool-aggregate, not per actor:
+    /// [`ReplayBacklogStats`] already reduces over the live shards).
+    prev_replay_hwm: usize,
+    prev_replay_not_ready: u64,
+    prev_replay_samples: u64,
     reports_since_action: u32,
     streak_dir: Option<ScaleDirection>,
     streak: u32,
@@ -200,6 +276,9 @@ impl Autoscaler {
             prev_busy_idle: HashMap::new(),
             prev_hwm: HashMap::new(),
             prev_shed: 0,
+            prev_replay_hwm: 0,
+            prev_replay_not_ready: 0,
+            prev_replay_samples: 0,
             streak_dir: None,
             streak: 0,
             stats: AutoscaleStats::default(),
@@ -298,9 +377,6 @@ impl Autoscaler {
     /// (in that order).  Pure and deterministic — the hysteresis tests
     /// drive this directly with synthetic signals.
     pub fn decide(&mut self, s: &AutoscaleSignals) -> Option<ScaleDirective> {
-        self.stats.reports += 1;
-        self.reports_since_action =
-            self.reports_since_action.saturating_add(1);
         let overloaded = s.sampler_queue_hwm
             >= self.cfg.sampler_queue_pressure
             || s.shed_delta > self.cfg.shed_tolerance;
@@ -318,6 +394,95 @@ impl Autoscaler {
         } else {
             None
         };
+        self.gate(direction, s.live_workers, self.cfg.step)
+    }
+
+    /// Reduce replay backlog telemetry to this interval's control
+    /// signals (the replay-pool analogue of [`Autoscaler::signals`]).
+    /// The stats are already pool-aggregate, so the interval diffing is
+    /// scalar: the same lifetime-HWM trick as the sampler loop for the
+    /// mailbox gauge, `saturating_sub` deltas for the monotone traffic
+    /// counters.
+    pub fn replay_signals(
+        &mut self,
+        stats: &ReplayBacklogStats,
+    ) -> ReplaySignals {
+        let queue_hwm = if stats.max_queue_hwm > self.prev_replay_hwm {
+            stats.max_queue_hwm
+        } else {
+            stats.max_queue_len
+        };
+        // Straight assignment, not a running max: shard churn can drop
+        // the pool-wide lifetime HWM (a high-water shard retires), and
+        // tracking the lower value keeps later increases detectable.
+        self.prev_replay_hwm = stats.max_queue_hwm;
+        let not_ready_delta = stats
+            .not_ready
+            .saturating_sub(self.prev_replay_not_ready);
+        self.prev_replay_not_ready = stats.not_ready;
+        let sample_delta =
+            stats.samples.saturating_sub(self.prev_replay_samples);
+        self.prev_replay_samples = stats.samples;
+        ReplaySignals {
+            queue_hwm,
+            ring_fill: stats.max_ring_fill,
+            not_ready_delta,
+            sample_delta,
+            live_shards: stats.live_shards,
+        }
+    }
+
+    /// One control step for the replay-shard pool.  Up-pressure is
+    /// backlog (shard mailboxes at or past `replay_queue_pressure`) or
+    /// capacity pressure (ring fill at or past `replay_fill_above`);
+    /// down-pressure is sustained idleness (`replay_idle_polls`
+    /// not-ready polls with empty mailboxes and unfilled rings).  The
+    /// up step is **proportional** to the backlog overshoot — a
+    /// mailbox 3x past the pressure threshold adds `3 * step` shards in
+    /// one action instead of crawling there through three cooldown
+    /// cycles — and shares [`gate`](Self::decide)'s hysteresis, so
+    /// proportional sizing never bypasses confirmation or cooldown.
+    pub fn decide_replay(
+        &mut self,
+        s: &ReplaySignals,
+    ) -> Option<ScaleDirective> {
+        let backlogged = s.queue_hwm >= self.cfg.replay_queue_pressure;
+        let full = s.ring_fill >= self.cfg.replay_fill_above;
+        let idle = s.not_ready_delta >= self.cfg.replay_idle_polls
+            && s.queue_hwm == 0
+            && !full;
+        let direction = if (backlogged || full)
+            && s.live_shards < self.cfg.max_workers
+        {
+            Some(ScaleDirection::Up)
+        } else if idle && s.live_shards > self.cfg.min_workers {
+            Some(ScaleDirection::Down)
+        } else {
+            None
+        };
+        let step = if backlogged {
+            self.cfg.step
+                * (s.queue_hwm / self.cfg.replay_queue_pressure).max(1)
+        } else {
+            self.cfg.step
+        };
+        self.gate(direction, s.live_shards, step)
+    }
+
+    /// The shared hysteresis gate: deadband reset, confirmation
+    /// streak, post-action cooldown, then bound-clamped target — the
+    /// tail every control loop funnels through, so each `decide*`
+    /// flavor only differs in how it maps signals to a direction and a
+    /// step.
+    fn gate(
+        &mut self,
+        direction: Option<ScaleDirection>,
+        live: usize,
+        step: usize,
+    ) -> Option<ScaleDirective> {
+        self.stats.reports += 1;
+        self.reports_since_action =
+            self.reports_since_action.saturating_add(1);
         let Some(direction) = direction else {
             self.streak_dir = None;
             self.streak = 0;
@@ -344,13 +509,11 @@ impl Autoscaler {
         let target = match direction {
             ScaleDirection::Up => {
                 self.stats.decisions_up += 1;
-                (s.live_workers + self.cfg.step).min(self.cfg.max_workers)
+                (live + step).min(self.cfg.max_workers)
             }
             ScaleDirection::Down => {
                 self.stats.decisions_down += 1;
-                s.live_workers
-                    .saturating_sub(self.cfg.step)
-                    .max(self.cfg.min_workers)
+                live.saturating_sub(step).max(self.cfg.min_workers)
             }
         };
         self.stats.last_target = target;
@@ -373,6 +536,9 @@ mod tests {
             cooldown_reports: 0,
             confirm_reports: 1,
             step: 1,
+            replay_queue_pressure: 8,
+            replay_fill_above: 0.85,
+            replay_idle_polls: 8,
         }
     }
 
@@ -567,6 +733,127 @@ mod tests {
         assert_eq!(s.shed_delta, 7);
         let s = a.signals(&[], 0, &[], Some(casts(10)), 1);
         assert_eq!(s.shed_delta, 0);
+    }
+
+    fn rsig(queue_hwm: usize, live: usize) -> ReplaySignals {
+        ReplaySignals {
+            queue_hwm,
+            ring_fill: 0.0,
+            not_ready_delta: 0,
+            sample_delta: 16,
+            live_shards: live,
+        }
+    }
+
+    #[test]
+    fn replay_backlog_grows_shard_pool() {
+        let mut a = Autoscaler::new(cfg());
+        let d = a.decide_replay(&rsig(8, 2)).expect("backlog must act");
+        assert_eq!(d.direction, ScaleDirection::Up);
+        assert_eq!(d.target, 3);
+    }
+
+    #[test]
+    fn replay_backlog_overshoot_scales_step_proportionally() {
+        // Mailbox 3x past the pressure threshold: one action adds 3
+        // shards (clamped by max_workers), not 1.
+        let mut a = Autoscaler::new(AutoscalerConfig {
+            max_workers: 8,
+            ..cfg()
+        });
+        let d = a.decide_replay(&rsig(24, 2)).unwrap();
+        assert_eq!(d.target, 5);
+        // Clamp still applies.
+        let mut a = Autoscaler::new(cfg());
+        assert_eq!(a.decide_replay(&rsig(100, 2)).unwrap().target, 4);
+    }
+
+    #[test]
+    fn replay_ring_fill_grows_even_with_empty_mailboxes() {
+        let mut a = Autoscaler::new(cfg());
+        let mut s = rsig(0, 2);
+        s.ring_fill = 0.9;
+        let d = a.decide_replay(&s).expect("capacity pressure must act");
+        assert_eq!(d.direction, ScaleDirection::Up);
+        assert_eq!(d.target, 3, "fill pressure uses the base step");
+    }
+
+    #[test]
+    fn replay_idleness_shrinks_and_bounds_hold() {
+        let mut a = Autoscaler::new(cfg());
+        let mut s = rsig(0, 2);
+        s.not_ready_delta = 20;
+        s.sample_delta = 0;
+        let d = a.decide_replay(&s).expect("idle pool must shrink");
+        assert_eq!(d.direction, ScaleDirection::Down);
+        assert_eq!(d.target, 1);
+        // At min_workers idleness holds instead of acting.
+        s.live_shards = 1;
+        assert_eq!(a.decide_replay(&s), None);
+        // A full ring vetoes the idle signal (warmup of a huge buffer).
+        let mut a = Autoscaler::new(cfg());
+        s.live_shards = 2;
+        s.ring_fill = 0.9;
+        assert_eq!(
+            a.decide_replay(&s).unwrap().direction,
+            ScaleDirection::Up
+        );
+    }
+
+    #[test]
+    fn replay_oscillation_does_not_flap() {
+        // Backlog and idleness alternating every report with a
+        // 2-report confirmation streak: no action, ever — the same
+        // no-flap guarantee as the sampler loop, through the same gate.
+        let mut a = Autoscaler::new(AutoscalerConfig {
+            confirm_reports: 2,
+            ..cfg()
+        });
+        for k in 0..40 {
+            let s = if k % 2 == 0 {
+                rsig(20, 2)
+            } else {
+                let mut s = rsig(0, 2);
+                s.not_ready_delta = 20;
+                s
+            };
+            assert_eq!(
+                a.decide_replay(&s),
+                None,
+                "replay oscillation acted at report {k}"
+            );
+        }
+        assert_eq!(a.stats().decisions_up + a.stats().decisions_down, 0);
+    }
+
+    #[test]
+    fn replay_signals_diff_backlog_stats_per_interval() {
+        let mut a = Autoscaler::new(cfg());
+        let stats1 = ReplayBacklogStats {
+            live_shards: 2,
+            max_queue_len: 1,
+            max_queue_hwm: 6,
+            max_ring_fill: 0.5,
+            samples: 10,
+            not_ready: 3,
+            ..Default::default()
+        };
+        let s1 = a.replay_signals(&stats1);
+        assert_eq!(s1.queue_hwm, 6, "first interval = lifetime HWM");
+        assert_eq!(s1.sample_delta, 10);
+        assert_eq!(s1.not_ready_delta, 3);
+        // HWM unmoved next interval: current depth bounds it; traffic
+        // counters reduce to deltas.
+        let stats2 = ReplayBacklogStats {
+            max_queue_len: 2,
+            samples: 25,
+            not_ready: 3,
+            ..stats1
+        };
+        let s2 = a.replay_signals(&stats2);
+        assert_eq!(s2.queue_hwm, 2);
+        assert_eq!(s2.sample_delta, 15);
+        assert_eq!(s2.not_ready_delta, 0);
     }
 
     #[test]

@@ -3,10 +3,10 @@
 //!
 //! ```text
 //! rollouts  = ParallelRollouts(workers, mode="async", num_async=2)
-//! store_op  = rollouts.for_each(StoreToReplayBuffer(replay_actors))
+//! store_op  = rollouts.for_each(StoreToReplayBuffer(service))
 //!                     .zip_with_source_actor()
 //!                     .for_each(UpdateWorkerWeights(workers))
-//! replay_op = Replay(replay_actors, num_async=4)
+//! replay_op = Replay(service, num_async=4)
 //!                     .for_each(learner)       # mailbox == Enqueue
 //!                     .for_each(UpdateReplayPriorities + TrainOneStep)
 //! merged    = Concurrently([store_op, replay_op], mode="async",
@@ -15,13 +15,20 @@
 //! The paper's dedicated `LearnerThread` + `Enqueue`/`Dequeue` pair maps
 //! onto the local-worker actor: its mailbox *is* the in-queue, and
 //! `call` replies are the out-queue.
+//!
+//! The replay tier is the elastic `ops::ReplayService`: shards live in
+//! a registry like rollout workers, the store subflow hash-routes over
+//! the live slot set, and a backlog-driven `actor::Autoscaler` (bounds
+//! from `TrainerConfig::{min,max}_replay_shards`) grows/retires shards
+//! mid-plan from each report's `ReplayBacklogStats`.
 
+use crate::actor::{Autoscaler, AutoscalerConfig};
 use crate::iter::{concurrently, LocalIter, UnionMode};
 use crate::metrics::TrainResult;
 use crate::ops::{
-    create_replay_actors, parallel_rollouts_from, replay,
-    standard_metrics_reporting, store_to_replay_buffer,
-    update_target_network, TrainItem,
+    create_replay_shards, parallel_rollouts_from, replay,
+    replay_metrics_reporting, store_to_replay_buffer, update_target_network,
+    TrainItem,
 };
 
 use super::dqn::{learn_dqn, DqnConfig};
@@ -31,12 +38,17 @@ use super::TrainerConfig;
 #[derive(Debug, Clone)]
 pub struct ApexConfig {
     pub dqn: DqnConfig,
+    /// Replay shards spawned at plan build; the backlog autoscaler then
+    /// moves the pool within `TrainerConfig::{min,max}_replay_shards`.
     pub num_replay_actors: usize,
     /// Refresh a worker's weights after it contributed this many steps
     /// (Listing A4's MAX_WEIGHT_SYNC_DELAY).
     pub max_weight_sync_delay: usize,
-    /// In-flight replay requests per replay actor.
+    /// In-flight replay requests per replay shard.
     pub replay_queue_depth: usize,
+    /// Drive the replay-shard pool with a backlog autoscaler (one
+    /// replay control step per report).  Off = fixed pool.
+    pub autoscale_replay: bool,
 }
 
 impl Default for ApexConfig {
@@ -51,6 +63,7 @@ impl Default for ApexConfig {
             num_replay_actors: 2,
             max_weight_sync_delay: 400,
             replay_queue_depth: 4,
+            autoscale_replay: true,
         }
     }
 }
@@ -62,7 +75,7 @@ pub fn apex_plan(
     let workers = config.dqn_workers();
     let obs_dim =
         workers.local.call(|w| w.obs_dim()).expect("local worker died");
-    let replay_actors = create_replay_actors(
+    let service = create_replay_shards(
         apex.num_replay_actors,
         obs_dim,
         apex.dqn.buffer_capacity,
@@ -77,7 +90,7 @@ pub fn apex_plan(
     let local = workers.local.clone();
     let registry = workers.registry().clone();
     let max_delay = apex.max_weight_sync_delay;
-    let mut store = store_to_replay_buffer(replay_actors.clone());
+    let mut store = store_to_replay_buffer(&service);
     let mut steps_since_update =
         std::collections::HashMap::<u64, usize>::new();
     let store_op = parallel_rollouts_from(&workers)
@@ -112,8 +125,10 @@ pub fn apex_plan(
             TrainItem::default()
         });
 
-    // (2)+(3) Replay -> learner -> priorities, pipelined per actor.
-    let replay_op = replay(replay_actors, apex.replay_queue_depth)
+    // (2)+(3) Replay -> learner -> priorities, pipelined per shard; the
+    // lease inside each item drops TD feedback addressed to a shard
+    // incarnation that died or retired while the learner held it.
+    let replay_op = replay(&service, apex.replay_queue_depth)
         .for_each(learn_dqn(&workers, usize::MAX))
         .for_each(update_target_network(
             workers.local.clone(),
@@ -127,5 +142,14 @@ pub fn apex_plan(
         Some(vec![1]),
     );
 
-    standard_metrics_reporting(merged, &workers, 1)
+    // Every report carries the replay tier's backlog telemetry; with
+    // autoscaling on, a controller bounded by the TrainerConfig shard
+    // limits applies one replay control step per report.
+    let controller = apex.autoscale_replay.then(|| {
+        Autoscaler::new(AutoscalerConfig::replay_defaults(
+            config.min_replay_shards,
+            config.max_replay_shards,
+        ))
+    });
+    replay_metrics_reporting(merged, &workers, 1, None, &service, controller)
 }

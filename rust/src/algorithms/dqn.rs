@@ -2,18 +2,22 @@
 //! (paper Fig. 12b):
 //!
 //! ```text
-//! store_op  = rollouts.for_each(StoreToReplayBuffer(buf))
-//! replay_op = Replay(buf).for_each(TrainOneStep)
-//!                        .for_each(UpdateTargetNetwork)
+//! store_op  = rollouts.for_each(StoreToReplayBuffer(service))
+//! replay_op = Replay(service).for_each(TrainOneStep)
+//!                            .for_each(UpdateTargetNetwork)
 //! dqn_op    = Union(store_op, replay_op)    # round-robin 1:1
 //! ```
+//!
+//! The replay tier is the elastic [`crate::ops::ReplayService`] even in this
+//! single-shard configuration — same registry machinery as Ape-X, just
+//! with one shard and no autoscaler.
 
 use crate::iter::{concurrently, LocalIter, UnionMode};
 use crate::metrics::TrainResult;
 use crate::ops::{
-    create_replay_actors, parallel_rollouts_from, replay,
+    create_replay_shards, parallel_rollouts_from, replay,
     standard_metrics_reporting, store_to_replay_buffer, update_target_network,
-    TrainItem,
+    ReplayLease, TrainItem,
 };
 use crate::rollout::WorkerSet;
 
@@ -47,7 +51,7 @@ pub fn dqn_plan(
     let workers = config.dqn_workers();
     let obs_dim =
         workers.local.call(|w| w.obs_dim()).expect("local worker died");
-    let replay_actors = create_replay_actors(
+    let service = create_replay_shards(
         1,
         obs_dim,
         dqn.buffer_capacity,
@@ -59,12 +63,13 @@ pub fn dqn_plan(
     // workers rejoin the running stream).
     let store_op = parallel_rollouts_from(&workers)
         .gather_async(config.num_async)
-        .for_each(store_to_replay_buffer(replay_actors.clone()))
+        .for_each(store_to_replay_buffer(&service))
         .for_each(|_| TrainItem::default());
 
     // (2) Replay, learn on the local worker, feed TD errors back as
-    // priorities, periodically sync target net + worker weights.
-    let replay_op = replay(replay_actors, 1)
+    // priorities through the lease, periodically sync target net +
+    // worker weights.
+    let replay_op = replay(&service, 1)
         .for_each(learn_dqn(&workers, dqn.weight_sync_every))
         .for_each(update_target_network(
             workers.local.clone(),
@@ -83,17 +88,19 @@ pub fn dqn_plan(
 }
 
 /// The learner closure shared by DQN and Ape-X: learn on the local
-/// worker, push priorities back to the replay actor, occasionally
-/// broadcast weights (as a versioned cast through the set's
-/// `WeightCaster` — superseded versions coalesce, overloaded workers
-/// shed instead of stalling the learner).  Not-ready replay items
-/// (buffer below learning-starts) pass through as empty `TrainItem`s so
-/// concurrent subflows keep making progress.
+/// worker, push priorities back through the sample's [`ReplayLease`]
+/// (updates addressed to a restarted or retired shard incarnation are
+/// discarded by the lease, not misapplied), occasionally broadcast
+/// weights (as a versioned cast through the set's `WeightCaster` —
+/// superseded versions coalesce, overloaded workers shed instead of
+/// stalling the learner).  Not-ready replay items (buffer below
+/// learning-starts) pass through as empty `TrainItem`s so concurrent
+/// subflows keep making progress.
 pub(crate) fn learn_dqn(
     workers: &WorkerSet,
     weight_sync_every: usize,
 ) -> impl FnMut(
-    Option<(crate::replay::ReplaySample, crate::ops::ReplayActor)>,
+    Option<(crate::replay::ReplaySample, ReplayLease)>,
 ) -> TrainItem
        + Send
        + 'static {
@@ -101,7 +108,7 @@ pub(crate) fn learn_dqn(
     let caster = workers.caster();
     let mut since_sync = 0usize;
     move |item| {
-        let Some((sample, replay_actor)) = item else {
+        let Some((sample, lease)) = item else {
             return TrainItem::default();
         };
         let steps = sample.batch.len();
@@ -110,7 +117,7 @@ pub(crate) fn learn_dqn(
         let (stats, td) = local
             .call(move |w| w.learn_and_td(&batch))
             .expect("DQN learner (local worker) actor died");
-        replay_actor.cast(move |ra| ra.update_priorities(&indices, &td));
+        lease.update_priorities(indices, td);
         since_sync += 1;
         if since_sync >= weight_sync_every {
             since_sync = 0;

@@ -51,6 +51,11 @@ pub struct TrainerConfig {
     pub num_async: usize,
     /// Which env the workers run.
     pub env: EnvKind,
+    /// Floor for the replay-shard pool when a backlog autoscaler drives
+    /// it (Ape-X): the controller never shrinks below this.
+    pub min_replay_shards: usize,
+    /// Ceiling for the replay-shard pool under backlog autoscaling.
+    pub max_replay_shards: usize,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -79,6 +84,8 @@ impl Default for TrainerConfig {
             seed: 0,
             num_async: 2,
             env: EnvKind::CartPole,
+            min_replay_shards: 1,
+            max_replay_shards: 4,
         }
     }
 }

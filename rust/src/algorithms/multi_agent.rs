@@ -34,7 +34,7 @@ use crate::env::MultiAgentCartPole;
 use crate::iter::{concurrently, LocalIter, UnionMode};
 use crate::metrics::{MetricsHub, TrainResult};
 use crate::ops::{
-    concat_batches, create_replay_actors, parallel_ma_rollouts_from, replay,
+    concat_batches, create_replay_shards, parallel_ma_rollouts_from, replay,
     select_policy, store_to_replay_buffer, TrainItem,
 };
 use crate::policy::{DqnPolicy, PgLossKind, PgPolicy, Policy};
@@ -243,14 +243,14 @@ pub fn multi_agent_plan_on(
 
     // --- DQN subflow (Fig. 12b) ---
     let obs_dim = local.call(|w| w.obs_dim()).expect("local worker died");
-    let replay_actors = create_replay_actors(
+    let service = create_replay_shards(
         1,
         obs_dim,
         ma.dqn.buffer_capacity,
         ma.dqn.learning_starts,
         64,
     );
-    let mut store = store_to_replay_buffer(replay_actors.clone());
+    let mut store = store_to_replay_buffer(&service);
     let store_op = r_dqn
         .filter_map(select_policy("dqn"))
         .for_each(move |b| {
@@ -262,8 +262,8 @@ pub fn multi_agent_plan_on(
     let sync_every = ma.dqn.weight_sync_every;
     let mut since_sync = 0usize;
     let mut since_target = 0usize;
-    let replay_op = replay(replay_actors, 1).for_each(move |item| {
-        let Some((sample, ra)) = item else {
+    let replay_op = replay(&service, 1).for_each(move |item| {
+        let Some((sample, lease)) = item else {
             return TrainItem::default(); // buffer not ready yet
         };
         let steps = sample.batch.len();
@@ -276,7 +276,7 @@ pub fn multi_agent_plan_on(
                 (stats, td)
             })
             .expect("DQN learner (local worker) actor died");
-        ra.cast(move |state| state.update_priorities(&indices, &td));
+        lease.update_priorities(indices, td);
         since_sync += 1;
         since_target += steps;
         if since_sync >= sync_every {

@@ -69,27 +69,10 @@ impl CartPole {
     fn obs(&self) -> Vec<f32> {
         self.state.to_vec()
     }
-}
 
-impl Env for CartPole {
-    fn obs_dim(&self) -> usize {
-        4
-    }
-
-    fn num_actions(&self) -> usize {
-        2
-    }
-
-    fn reset(&mut self) -> Vec<f32> {
-        for s in &mut self.state {
-            *s = self.rng.uniform_range(-0.05, 0.05);
-        }
-        self.steps = 0;
-        self.done = false;
-        self.obs()
-    }
-
-    fn step(&mut self, action: i32) -> (Vec<f32>, f32, bool) {
+    /// Advance the physics one step; returns (reward, done).  Shared by
+    /// the allocating [`Env::step`] and in-place [`Env::step_into`].
+    fn advance(&mut self, action: i32) -> (f32, bool) {
         assert!(!self.done, "step() called on a done episode; call reset()");
         let p = &self.params;
         let force = if action == 1 { p.force_mag } else { -p.force_mag };
@@ -119,7 +102,46 @@ impl Env for CartPole {
             || self.state[2].abs() > THETA_THRESHOLD;
         let timeout = self.steps >= self.params.max_steps;
         self.done = fell || timeout;
-        (self.obs(), 1.0, self.done)
+        (1.0, self.done)
+    }
+}
+
+impl Env for CartPole {
+    fn obs_dim(&self) -> usize {
+        4
+    }
+
+    fn num_actions(&self) -> usize {
+        2
+    }
+
+    fn reset(&mut self) -> Vec<f32> {
+        for s in &mut self.state {
+            *s = self.rng.uniform_range(-0.05, 0.05);
+        }
+        self.steps = 0;
+        self.done = false;
+        self.obs()
+    }
+
+    fn step(&mut self, action: i32) -> (Vec<f32>, f32, bool) {
+        let (reward, done) = self.advance(action);
+        (self.obs(), reward, done)
+    }
+
+    fn reset_into(&mut self, obs_out: &mut [f32]) {
+        for s in &mut self.state {
+            *s = self.rng.uniform_range(-0.05, 0.05);
+        }
+        self.steps = 0;
+        self.done = false;
+        obs_out.copy_from_slice(&self.state);
+    }
+
+    fn step_into(&mut self, action: i32, obs_out: &mut [f32]) -> (f32, bool) {
+        let out = self.advance(action);
+        obs_out.copy_from_slice(&self.state);
+        out
     }
 }
 
@@ -172,6 +194,12 @@ impl Env for TaskCartPole {
     }
     fn step(&mut self, action: i32) -> (Vec<f32>, f32, bool) {
         self.inner.step(action)
+    }
+    fn reset_into(&mut self, obs_out: &mut [f32]) {
+        self.inner.reset_into(obs_out)
+    }
+    fn step_into(&mut self, action: i32, obs_out: &mut [f32]) -> (f32, bool) {
+        self.inner.step_into(action, obs_out)
     }
     fn sample_task(&mut self) {
         TaskCartPole::sample_task(self);

@@ -35,6 +35,17 @@ impl Env for DummyEnv {
         self.steps += 1;
         (vec![0.0; self.obs_dim], 1.0, self.steps >= self.episode_len)
     }
+
+    fn reset_into(&mut self, obs_out: &mut [f32]) {
+        self.steps = 0;
+        obs_out.fill(0.0);
+    }
+
+    fn step_into(&mut self, _action: i32, obs_out: &mut [f32]) -> (f32, bool) {
+        self.steps += 1;
+        obs_out.fill(0.0);
+        (1.0, self.steps >= self.episode_len)
+    }
 }
 
 #[cfg(test)]

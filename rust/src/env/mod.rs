@@ -31,6 +31,22 @@ pub trait Env: Send {
     fn reset(&mut self) -> Vec<f32>;
     /// Apply `action`; returns (next_obs, reward, done).
     fn step(&mut self, action: i32) -> (Vec<f32>, f32, bool);
+    /// Reset, writing the initial observation into `obs_out`
+    /// (`obs_out.len() == obs_dim()`).  The default delegates to
+    /// [`Env::reset`] and copies; concrete envs override to write in
+    /// place so the rollout hot loop stays allocation-free.
+    fn reset_into(&mut self, obs_out: &mut [f32]) {
+        let obs = self.reset();
+        obs_out.copy_from_slice(&obs);
+    }
+    /// Apply `action`, writing the next observation into `obs_out`;
+    /// returns (reward, done).  Default delegates to [`Env::step`] and
+    /// copies; concrete envs override to avoid the per-step `Vec<f32>`.
+    fn step_into(&mut self, action: i32, obs_out: &mut [f32]) -> (f32, bool) {
+        let (obs, reward, done) = self.step(action);
+        obs_out.copy_from_slice(&obs);
+        (reward, done)
+    }
     /// Draw a new task from the env's task distribution (meta-learning
     /// envs only; default no-op).  Callers must `reset()` afterwards.
     fn sample_task(&mut self) {}

@@ -36,6 +36,25 @@ impl MountainCar {
         env.reset();
         env
     }
+
+    /// Advance the physics one step; returns (reward, done).  Shared by
+    /// the allocating [`Env::step`] and in-place [`Env::step_into`].
+    fn advance(&mut self, action: i32) -> (f32, bool) {
+        assert!(!self.done, "step() on done episode");
+        assert!((0..3).contains(&action), "MountainCar action in 0..3");
+        self.velocity += (action - 1) as f32 * FORCE
+            - (3.0 * self.position).cos() * GRAVITY;
+        self.velocity = self.velocity.clamp(-MAX_SPEED, MAX_SPEED);
+        self.position = (self.position + self.velocity)
+            .clamp(MIN_POSITION, MAX_POSITION);
+        if self.position <= MIN_POSITION && self.velocity < 0.0 {
+            self.velocity = 0.0;
+        }
+        self.steps += 1;
+        let reached = self.position >= GOAL_POSITION;
+        self.done = reached || self.steps >= self.max_steps;
+        (-1.0, self.done)
+    }
 }
 
 impl Env for MountainCar {
@@ -56,20 +75,24 @@ impl Env for MountainCar {
     }
 
     fn step(&mut self, action: i32) -> (Vec<f32>, f32, bool) {
-        assert!(!self.done, "step() on done episode");
-        assert!((0..3).contains(&action), "MountainCar action in 0..3");
-        self.velocity += (action - 1) as f32 * FORCE
-            - (3.0 * self.position).cos() * GRAVITY;
-        self.velocity = self.velocity.clamp(-MAX_SPEED, MAX_SPEED);
-        self.position = (self.position + self.velocity)
-            .clamp(MIN_POSITION, MAX_POSITION);
-        if self.position <= MIN_POSITION && self.velocity < 0.0 {
-            self.velocity = 0.0;
-        }
-        self.steps += 1;
-        let reached = self.position >= GOAL_POSITION;
-        self.done = reached || self.steps >= self.max_steps;
-        (vec![self.position, self.velocity], -1.0, self.done)
+        let (reward, done) = self.advance(action);
+        (vec![self.position, self.velocity], reward, done)
+    }
+
+    fn reset_into(&mut self, obs_out: &mut [f32]) {
+        self.position = self.rng.uniform_range(-0.6, -0.4);
+        self.velocity = 0.0;
+        self.steps = 0;
+        self.done = false;
+        obs_out[0] = self.position;
+        obs_out[1] = self.velocity;
+    }
+
+    fn step_into(&mut self, action: i32, obs_out: &mut [f32]) -> (f32, bool) {
+        let out = self.advance(action);
+        obs_out[0] = self.position;
+        obs_out[1] = self.velocity;
+        out
     }
 }
 

@@ -6,6 +6,7 @@ use std::collections::BTreeMap;
 use crate::actor::{
     ActorStatsSnapshot, AutoscaleStats, FaultStats, WeightCastStats,
 };
+use crate::replay::ReplayBacklogStats;
 use crate::rollout::ScaleStats;
 use crate::util::MovingStat;
 
@@ -77,6 +78,8 @@ impl MetricsHub {
             scale: None,
             autoscale: None,
             faults: None,
+            replay: None,
+            replay_autoscale: None,
         }
     }
 }
@@ -121,6 +124,17 @@ pub struct TrainResult {
     /// filled by the metrics-reporting operators from the `WorkerSet`'s
     /// `FaultCounters`.  `None` for reporting paths without one.
     pub faults: Option<FaultStats>,
+    /// Replay-tier backlog telemetry (live shards, deepest mailbox,
+    /// ring fill, store/sample/not-ready traffic, priority-update
+    /// applies vs discards) — filled by `replay_metrics_reporting` from
+    /// the plan's `ops::ReplayService`.  `None` on plans without a
+    /// replay tier.
+    pub replay: Option<ReplayBacklogStats>,
+    /// Decision counters of the autoscaler driving the **replay-shard
+    /// pool** (distinct from `autoscale`, which describes the sampler
+    /// pool's controller).  `None` when replay shards are manually
+    /// scaled.
+    pub replay_autoscale: Option<AutoscaleStats>,
 }
 
 impl TrainResult {
@@ -185,6 +199,29 @@ impl TrainResult {
                     ft.suspects, ft.forced_restarts, ft.breaker_trips
                 ));
             }
+        }
+        if let Some(rp) = &self.replay {
+            out.push_str(&format!(
+                " replay={}shards(fill={:.0}% q={} store={} sample={} \
+                 prio={}+{}-)",
+                rp.live_shards,
+                rp.max_ring_fill * 100.0,
+                rp.max_queue_hwm,
+                rp.stores,
+                rp.samples,
+                rp.priority_applied,
+                rp.priority_discarded,
+            ));
+        }
+        if let Some(a) = &self.replay_autoscale {
+            out.push_str(&format!(
+                " replay_autoscale=t{}(up={} down={} hold={} fail={})",
+                a.last_target,
+                a.decisions_up,
+                a.decisions_down,
+                a.held_deadband + a.held_confirm + a.held_cooldown,
+                a.failed,
+            ));
         }
         out
     }
@@ -296,6 +333,35 @@ mod tests {
         });
         let s = r.pipeline_summary();
         assert!(s.contains("faults=s2/r3/b1"), "{s}");
+        // Replay tier sections.
+        assert!(!s.contains("replay="), "no replay section without stats");
+        r.replay = Some(ReplayBacklogStats {
+            live_shards: 3,
+            max_ring_fill: 0.5,
+            max_queue_hwm: 7,
+            stores: 40,
+            samples: 25,
+            priority_applied: 24,
+            priority_discarded: 1,
+            ..Default::default()
+        });
+        r.replay_autoscale = Some(AutoscaleStats {
+            decisions_up: 1,
+            held_deadband: 5,
+            last_target: 3,
+            ..Default::default()
+        });
+        let s = r.pipeline_summary();
+        assert!(
+            s.contains(
+                "replay=3shards(fill=50% q=7 store=40 sample=25 prio=24+1-)"
+            ),
+            "{s}"
+        );
+        assert!(
+            s.contains("replay_autoscale=t3(up=1 down=0 hold=5 fail=0)"),
+            "{s}"
+        );
     }
 
     #[test]

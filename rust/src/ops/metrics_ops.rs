@@ -10,6 +10,7 @@ use crate::iter::LocalIter;
 use crate::metrics::{EpisodeRecord, MetricsHub, TrainResult};
 use crate::rollout::{WorkerMetrics, WorkerSet};
 
+use super::replay_ops::ReplayService;
 use super::TrainItem;
 
 /// The shared reporting tail: drain episode/step counters from every
@@ -86,7 +87,7 @@ pub fn standard_metrics_reporting(
     workers: &WorkerSet,
     items_per_report: usize,
 ) -> LocalIter<TrainResult> {
-    reporting_with_controller(inner, workers, items_per_report, None)
+    reporting_with_controller(inner, workers, items_per_report, None, None)
 }
 
 /// [`standard_metrics_reporting`] with the elasticity loop **closed**:
@@ -109,6 +110,36 @@ pub fn autoscaled_metrics_reporting(
         workers,
         items_per_report,
         Some(autoscaler),
+        None,
+    )
+}
+
+/// [`standard_metrics_reporting`] for plans with a replay tier: every
+/// report additionally snapshots the [`ReplayService`]'s backlog
+/// telemetry into `TrainResult::replay`, and — when `replay_autoscaler`
+/// is given — runs one replay control step per report
+/// (`Autoscaler::replay_signals` + `decide_replay`) and applies its
+/// directive with `ReplayService::scale_to`, closing the elasticity
+/// loop over the **replay-shard pool** the way
+/// [`autoscaled_metrics_reporting`] closes it over the sampler pool.
+/// `sampler_autoscaler` optionally drives the sampler pool at the same
+/// time; the two controllers are independent instances (decision
+/// counters land in `TrainResult::autoscale` vs
+/// `TrainResult::replay_autoscale`).
+pub fn replay_metrics_reporting(
+    inner: LocalIter<TrainItem>,
+    workers: &WorkerSet,
+    items_per_report: usize,
+    sampler_autoscaler: Option<Autoscaler>,
+    replay: &ReplayService,
+    replay_autoscaler: Option<Autoscaler>,
+) -> LocalIter<TrainResult> {
+    reporting_with_controller(
+        inner,
+        workers,
+        items_per_report,
+        sampler_autoscaler,
+        Some((replay.clone(), replay_autoscaler)),
     )
 }
 
@@ -117,6 +148,7 @@ fn reporting_with_controller(
     workers: &WorkerSet,
     items_per_report: usize,
     mut autoscaler: Option<Autoscaler>,
+    mut replay: Option<(ReplayService, Option<Autoscaler>)>,
 ) -> LocalIter<TrainResult> {
     assert!(items_per_report >= 1);
     let mut inner = inner;
@@ -143,6 +175,19 @@ fn reporting_with_controller(
         snap.weight_casts = Some(caster.stats());
         if let Some(a) = autoscaler.as_mut() {
             drive_autoscaler(a, &mut snap, &set, local.id(), &handles);
+        }
+        if let Some((service, controller)) = replay.as_mut() {
+            let backlog = service.backlog_stats();
+            snap.replay = Some(backlog);
+            if let Some(a) = controller.as_mut() {
+                let signals = a.replay_signals(&backlog);
+                if let Some(d) = a.decide_replay(&signals) {
+                    if service.scale_to(d.target).is_err() {
+                        a.note_failed();
+                    }
+                }
+                snap.replay_autoscale = Some(a.stats());
+            }
         }
         snap.scale = Some(scale.stats(registry.num_live(), registry.len()));
         snap.faults = Some(fault_counters.snapshot());
@@ -220,6 +265,67 @@ mod tests {
         let ft = r.faults.expect("fault stats attached");
         assert_eq!(ft, crate::actor::FaultStats::default());
         assert!(!r.pipeline_summary().contains("faults="));
+    }
+
+    #[test]
+    fn replay_reports_attach_backlog_and_drive_shard_autoscaler() {
+        use crate::actor::AutoscalerConfig;
+        use crate::ops::create_replay_shards;
+        use std::sync::atomic::Ordering::Relaxed;
+
+        let workers = worker_set(1);
+        let service = create_replay_shards(2, 4, 64, 16, 8);
+        let controller = Autoscaler::new(AutoscalerConfig {
+            min_workers: 1,
+            max_workers: 4,
+            cooldown_reports: 0,
+            confirm_reports: 1,
+            replay_idle_polls: 8,
+            ..AutoscalerConfig::default()
+        });
+        let mut train = train_one_step(&workers);
+        let train_op = parallel_rollouts_from(&workers)
+            .gather_async(1)
+            .for_each(move |b| train(b));
+        let mut reports = replay_metrics_reporting(
+            train_op,
+            &workers,
+            1,
+            None,
+            &service,
+            Some(controller),
+        );
+
+        // Report 1: a quiet tier — backlog telemetry attached, no
+        // directive (empty mailboxes, no idle pressure yet).
+        let r = reports.next().unwrap();
+        let backlog = r.replay.expect("backlog stats attached");
+        assert_eq!(backlog.live_shards, 2);
+        let a = r.replay_autoscale.expect("controller stats attached");
+        assert_eq!(a.decisions_up + a.decisions_down, 0);
+        assert!(r.pipeline_summary().contains("replay=2shards"), "{r:?}");
+
+        // Sustained not-ready pressure (the replay stream starving
+        // below learning_starts across the whole pool): the controller
+        // must emit a Down directive and the reporting operator must
+        // apply it to the shard set.
+        service.counters().not_ready.fetch_add(50, Relaxed);
+        let r = reports.next().unwrap();
+        let a = r.replay_autoscale.unwrap();
+        assert_eq!(a.decisions_down, 1);
+        assert_eq!(a.last_target, 1);
+        assert_eq!(service.num_live_shards(), 1);
+        assert_eq!(a.failed, 0);
+        assert!(
+            r.pipeline_summary().contains("replay_autoscale=t1"),
+            "{}",
+            r.pipeline_summary()
+        );
+
+        // Quiet again: the pool holds at the new size (no flapping).
+        let r = reports.next().unwrap();
+        assert_eq!(r.replay_autoscale.unwrap().decisions_down, 1);
+        assert_eq!(service.num_live_shards(), 1);
     }
 
     #[test]

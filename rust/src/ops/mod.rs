@@ -15,13 +15,14 @@ mod train_ops;
 use std::collections::BTreeMap;
 
 pub use metrics_ops::{
-    autoscaled_metrics_reporting, standard_metrics_reporting,
+    autoscaled_metrics_reporting, replay_metrics_reporting,
+    standard_metrics_reporting,
 };
 pub(crate) use metrics_ops::{drain_and_snapshot, drive_autoscaler};
 pub use replay_ops::{
-    create_replay_actors, replay, replay_with_backoff,
-    store_to_replay_buffer, ReplayActor, DEFAULT_REPLAY_BACKOFF_BASE,
-    DEFAULT_REPLAY_BACKOFF_CAP,
+    create_replay_actors, create_replay_shards, replay, replay_with_backoff,
+    store_to_replay_buffer, ReplayActor, ReplayCounters, ReplayLease,
+    ReplayService, DEFAULT_REPLAY_BACKOFF_BASE, DEFAULT_REPLAY_BACKOFF_CAP,
 };
 pub use rollout_ops::{
     concat_batches, exact_batches, parallel_ma_rollouts_from,

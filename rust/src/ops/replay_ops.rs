@@ -1,28 +1,51 @@
-//! Replay-side operators: replay actors, `StoreToReplayBuffer`,
-//! `Replay` (paper Fig. 10).
+//! Replay-side operators: the elastic replay-shard service,
+//! `StoreToReplayBuffer`, `Replay` (paper Fig. 10).
+//!
+//! Replay is a first-class elastic service here, not a fixed actor
+//! list: shards live in a [`ShardRegistry`] behind a
+//! [`WorkerSet`](crate::rollout::WorkerSet) exactly like rollout
+//! workers, so the same machinery that grows/retires/restarts samplers
+//! mid-plan applies to the replay tier — [`store_to_replay_buffer`]
+//! routes over the live slot set, [`replay`] gathers through the
+//! registry (new shards are adopted by running streams; a replaced
+//! incarnation's in-flight samples are discarded by epoch), and
+//! priority updates travel through a [`ReplayLease`] that re-resolves
+//! the slot and drops updates addressed to a dead incarnation.
 
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use crate::actor::{spawn_group, ActorHandle};
+use crate::actor::{spawn_group, ActorHandle, ShardRegistry};
 use crate::iter::{LocalIter, ParIter};
-use crate::replay::{ReplayActorState, ReplaySample};
+use crate::replay::{
+    ReplayActorState, ReplayBacklogStats, ReplaySample, ReplayShardGauge,
+};
+use crate::rollout::{RestartPolicy, RestartReport, WorkerSet};
 use crate::sample_batch::SampleBatch;
-use crate::util::{Backoff, Rng};
+use crate::util::Backoff;
 
 /// First not-ready backoff of [`replay`] (doubles per consecutive
 /// not-ready poll, resetting on the first real sample).
 pub const DEFAULT_REPLAY_BACKOFF_BASE: Duration = Duration::from_micros(100);
 
 /// Cap on [`replay`]'s not-ready backoff: long warmups poll at this
-/// cadence instead of hammering the replay actors' mailboxes, while the
+/// cadence instead of hammering the replay shards' mailboxes, while the
 /// first polls after a drain stay sub-millisecond.
 pub const DEFAULT_REPLAY_BACKOFF_CAP: Duration = Duration::from_millis(10);
 
 /// The replay actor type (paper: `create_colocated(ReplayActor)`).
 pub type ReplayActor = ActorHandle<ReplayActorState>;
 
-/// Spawn `n` replay-buffer actors with ring columns preallocated for
-/// `obs_dim`-wide observation rows.
+/// Seed base for replay shards, kept stable across incarnations of a
+/// slot so a restarted shard samples reproducibly.
+const REPLAY_SEED_BASE: u64 = 0xC0FFEE;
+
+/// Spawn `n` standalone replay-buffer actors (a plain `Vec`, no
+/// registry).  This is the **non-elastic** substrate the low-level
+/// baseline twin (`baseline::AsyncReplayOptimizer`, the paper's Listing
+/// A4) programs against; the dataflow operators use
+/// [`create_replay_shards`] instead.
 pub fn create_replay_actors(
     n: usize,
     obs_dim: usize,
@@ -37,35 +60,357 @@ pub fn create_replay_actors(
                 obs_dim,
                 learning_starts,
                 replay_batch_size,
-                0xC0FFEE + i as u64,
+                REPLAY_SEED_BASE + i as u64,
             )
         })
     })
 }
 
-/// `StoreToReplayBuffer(actors)`: ship each incoming batch to a
-/// randomly chosen replay actor (fire-and-forget, like Ape-X's
-/// `random.choice(replay_actors).add_batch.remote(batch)`), passing the
-/// batch through for downstream ops (weight updates etc.).  The clone
-/// handed to the actor shares the batch's column storage (reference
-/// count bump, not a deep copy).
+/// Lifetime traffic counters of one [`ReplayService`], shared by its
+/// store/replay operators and leases.  Service-scoped (not per shard):
+/// they survive shard restarts and retires, so the backlog telemetry's
+/// rates stay monotone under churn.
+#[derive(Debug, Default)]
+pub struct ReplayCounters {
+    /// Batches routed to a shard by [`store_to_replay_buffer`].
+    pub stores: AtomicU64,
+    /// Samples yielded by the [`replay`] stream.
+    pub samples: AtomicU64,
+    /// Not-ready polls (shard below its learning-starts threshold).
+    pub not_ready: AtomicU64,
+    /// Priority updates applied to the producing incarnation.
+    pub priority_applied: AtomicU64,
+    /// Priority updates discarded: the producing incarnation was
+    /// restarted (epoch moved) or its slot retired before the learner's
+    /// TD errors came back.
+    pub priority_discarded: AtomicU64,
+}
+
+/// The elastic replay tier: prioritized replay shards in a
+/// [`ShardRegistry`]-backed [`WorkerSet`], plus shared traffic counters
+/// and per-slot backlog gauges.
+///
+/// * **Sharding** — [`store_to_replay_buffer`] hashes each incoming
+///   batch's arrival id over the live slot set; shards added by
+///   [`ReplayService::scale_to`] start receiving their share on the
+///   next batch, retired slots drop out of rotation.
+/// * **Epochs** — a shard restarted by
+///   [`ReplayService::restart_dead_with_policy`] is published under a
+///   bumped registry epoch.  In-flight samples of the dead incarnation
+///   are discarded by the gather's epoch machinery, and priority
+///   updates still referencing it are dropped by the [`ReplayLease`]
+///   (buffer slot indices are meaningless across incarnations).
+/// * **Recovery semantics** — the sync protocol is a no-op: a restarted
+///   shard rejoins *empty*.  Replay contents are lost on a crash by
+///   design (they are re-derivable experience, not model state), which
+///   is also what keeps restart cheap and double-count-free.
+///
+/// Cloning shares all state (the underlying `WorkerSet` handle
+/// semantics), so plan closures and reporting operators can hold the
+/// service cheaply.
+#[derive(Clone)]
+pub struct ReplayService {
+    set: WorkerSet<ReplayActorState>,
+    counters: Arc<ReplayCounters>,
+    /// Per-slot backlog gauges, index-aligned with the registry.  The
+    /// factory re-attaches slot `i`'s gauge to every incarnation
+    /// spawned into `i`, so a reading always describes the current one.
+    gauges: Arc<Mutex<Vec<Arc<ReplayShardGauge>>>>,
+}
+
+impl ReplayService {
+    /// Spawn `num_shards` replay shards (named `replay-{i}`, seeded
+    /// `0xC0FFEE + i`) behind a fresh registry.  The set's local slot
+    /// is a 1-transition sentinel that never sees traffic — store
+    /// routes and replay gathers touch only the remote shards.
+    pub fn new(
+        num_shards: usize,
+        obs_dim: usize,
+        capacity: usize,
+        learning_starts: usize,
+        replay_batch_size: usize,
+    ) -> Self {
+        assert!(num_shards >= 1, "replay service needs at least one shard");
+        let gauges: Arc<Mutex<Vec<Arc<ReplayShardGauge>>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        let factory_gauges = gauges.clone();
+        let set = WorkerSet::with_protocol(
+            "replay-local",
+            "replay",
+            num_shards,
+            move |i| {
+                if i == 0 {
+                    // Local sentinel: with_protocol's learner slot.  It
+                    // only serves liveness probes for spawn_synced.
+                    return Box::new(move || {
+                        ReplayActorState::new(
+                            1,
+                            obs_dim,
+                            usize::MAX,
+                            replay_batch_size,
+                            REPLAY_SEED_BASE,
+                        )
+                    });
+                }
+                let slot = i - 1;
+                let gauge = {
+                    let mut g = factory_gauges.lock().unwrap();
+                    while g.len() <= slot {
+                        g.push(Arc::new(ReplayShardGauge::default()));
+                    }
+                    g[slot].clone()
+                };
+                Box::new(move || {
+                    ReplayActorState::new(
+                        capacity,
+                        obs_dim,
+                        learning_starts,
+                        replay_batch_size,
+                        REPLAY_SEED_BASE + slot as u64,
+                    )
+                    .with_gauge(gauge)
+                })
+            },
+            // No sync protocol: replay shards carry no model state and
+            // restart empty (see the type-level docs).
+            |_local, _fresh| Ok(()),
+        );
+        ReplayService {
+            set,
+            counters: Arc::new(ReplayCounters::default()),
+            gauges,
+        }
+    }
+
+    /// The underlying elastic set (registry, scale/fault counters,
+    /// restart machinery).
+    pub fn set(&self) -> &WorkerSet<ReplayActorState> {
+        &self.set
+    }
+
+    /// The shard table — gathers built from a clone adopt membership
+    /// changes live.
+    pub fn registry(&self) -> &ShardRegistry<ReplayActorState> {
+        self.set.registry()
+    }
+
+    pub fn counters(&self) -> Arc<ReplayCounters> {
+        self.counters.clone()
+    }
+
+    pub fn num_live_shards(&self) -> usize {
+        self.registry().num_live()
+    }
+
+    /// Scale the live shard count to exactly `n` under running store +
+    /// replay traffic (delegates to `WorkerSet::scale_to`).
+    pub fn scale_to(
+        &self,
+        n: usize,
+    ) -> crate::util::error::Result<(Vec<usize>, Vec<usize>)> {
+        self.set.scale_to(n)
+    }
+
+    /// Respawn crashed shards under a [`RestartPolicy`] (bounded
+    /// backoff, circuit breaker).  Replacements rejoin empty under a
+    /// new epoch; see the type-level docs for why that is correct.
+    pub fn restart_dead_with_policy(
+        &self,
+        policy: &RestartPolicy,
+    ) -> RestartReport {
+        self.set.restart_dead_with_policy(policy)
+    }
+
+    /// Point-in-time backlog telemetry over the live shards — mailbox
+    /// depths from actor telemetry, ring fill from the slot gauges
+    /// (lock-free; a blocking `call` would queue the reporter behind
+    /// the very backlog being measured), lifetime traffic from the
+    /// service counters.  Attached to `TrainResult::replay` and fed to
+    /// `Autoscaler::replay_signals`.
+    pub fn backlog_stats(&self) -> ReplayBacklogStats {
+        let registry = self.registry();
+        let gauges = self.gauges.lock().unwrap();
+        let mut out = ReplayBacklogStats {
+            slots: registry.len(),
+            ..Default::default()
+        };
+        for i in registry.live_indices() {
+            let Some((handle, _epoch)) = registry.get_live(i) else {
+                continue;
+            };
+            out.live_shards += 1;
+            let s = handle.stats();
+            out.max_queue_len = out.max_queue_len.max(s.queue_len);
+            out.max_queue_hwm = out.max_queue_hwm.max(s.queue_hwm);
+            if let Some(g) = gauges.get(i) {
+                out.max_ring_fill = out.max_ring_fill.max(g.ring_fill());
+                out.added += g.num_added.load(Relaxed);
+                out.sampled += g.num_sampled.load(Relaxed);
+            }
+        }
+        out.stores = self.counters.stores.load(Relaxed);
+        out.samples = self.counters.samples.load(Relaxed);
+        out.not_ready = self.counters.not_ready.load(Relaxed);
+        out.priority_applied = self.counters.priority_applied.load(Relaxed);
+        out.priority_discarded =
+            self.counters.priority_discarded.load(Relaxed);
+        out
+    }
+}
+
+/// Spawn an elastic replay tier — the dataflow-facing constructor
+/// (paper: `create_colocated(ReplayActor)`, upgraded to a registry).
+pub fn create_replay_shards(
+    num_shards: usize,
+    obs_dim: usize,
+    capacity: usize,
+    learning_starts: usize,
+    replay_batch_size: usize,
+) -> ReplayService {
+    ReplayService::new(
+        num_shards,
+        obs_dim,
+        capacity,
+        learning_starts,
+        replay_batch_size,
+    )
+}
+
+/// SplitMix64 — the batch-id hash behind the store op's shard routing.
+fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// `StoreToReplayBuffer(service)`: ship each incoming batch to the
+/// shard selected by hashing the batch's arrival id over the **live**
+/// slot set (fire-and-forget, like Ape-X's
+/// `random.choice(replay_actors).add_batch.remote(batch)` but
+/// registry-backed), passing the batch through for downstream ops
+/// (weight updates etc.).  The clone handed to the shard shares the
+/// batch's column storage (reference-count bump, not a deep copy).
+///
+/// Routing re-reads the registry per batch: shards grown mid-plan join
+/// the rotation on the next batch, retired slots leave it, and a
+/// restarted slot receives under its new incarnation.  With no live
+/// shard (all crashed, none restarted yet) the batch passes through
+/// unstored rather than panicking the store subflow.
 pub fn store_to_replay_buffer(
-    actors: Vec<ReplayActor>,
+    service: &ReplayService,
 ) -> impl FnMut(SampleBatch) -> SampleBatch + Send + 'static {
-    let mut rng = Rng::new(0x5703E);
+    let registry = service.registry().clone();
+    let counters = service.counters();
+    let mut batch_seq: u64 = 0;
     move |batch| {
-        let target = &actors[rng.below(actors.len())];
-        let clone = batch.clone();
-        target.cast(move |ra| ra.add_batch(&clone));
+        let live = registry.live_indices();
+        if !live.is_empty() {
+            let slot =
+                live[(splitmix64(batch_seq) % live.len() as u64) as usize];
+            if let Some((shard, _epoch)) = registry.get_live(slot) {
+                let clone = batch.clone();
+                shard.cast(move |ra| ra.add_batch(&clone));
+                counters.stores.fetch_add(1, Relaxed);
+            }
+        }
+        batch_seq = batch_seq.wrapping_add(1);
         batch
     }
 }
 
-/// `Replay(actors, num_async)`: an endless stream of prioritized
-/// samples drawn from the replay actors, paired with the producing
-/// actor's handle (for priority updates).
+/// A lease on the shard incarnation that produced a [`ReplaySample`]:
+/// the learner's priority feedback goes back through the registry, not
+/// a raw handle, so an update addressed to a dead incarnation —
+/// restarted (epoch bumped) or retired since the sample was drawn — is
+/// **discarded** instead of poking a fresh buffer whose slot indices
+/// mean something else entirely.
+#[derive(Clone)]
+pub struct ReplayLease {
+    registry: ShardRegistry<ReplayActorState>,
+    /// `usize::MAX` when the producer had already left the registry at
+    /// yield time (its slot retired mid-flight).
+    shard_idx: usize,
+    epoch: u64,
+    /// Actor id of the producing incarnation — belt over the epoch
+    /// check (ids are globally unique; epochs are per-slot).
+    incarnation: u64,
+    counters: Arc<ReplayCounters>,
+}
+
+impl ReplayLease {
+    fn locate(
+        registry: &ShardRegistry<ReplayActorState>,
+        shard: &ReplayActor,
+        counters: &Arc<ReplayCounters>,
+    ) -> Self {
+        let mut shard_idx = usize::MAX;
+        let mut epoch = 0;
+        for i in registry.live_indices() {
+            if let Some((h, e)) = registry.get_live(i) {
+                if h.id() == shard.id() {
+                    shard_idx = i;
+                    epoch = e;
+                    break;
+                }
+            }
+        }
+        ReplayLease {
+            registry: registry.clone(),
+            shard_idx,
+            epoch,
+            incarnation: shard.id(),
+            counters: counters.clone(),
+        }
+    }
+
+    /// The producing slot, if it was still live at yield time.
+    pub fn shard_idx(&self) -> Option<usize> {
+        (self.shard_idx != usize::MAX).then_some(self.shard_idx)
+    }
+
+    /// The producing incarnation's registry epoch at yield time.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Send `|TD|`-error priorities back to the producing shard.
+    /// Returns `false` (and counts a discard) if the incarnation is
+    /// gone — slot retired, or restarted under a newer epoch.
+    pub fn update_priorities(
+        &self,
+        indices: Vec<usize>,
+        td_abs: Vec<f32>,
+    ) -> bool {
+        let live = (self.shard_idx != usize::MAX)
+            .then(|| self.registry.get_live(self.shard_idx))
+            .flatten();
+        match live {
+            Some((handle, epoch))
+                if epoch == self.epoch
+                    && handle.id() == self.incarnation =>
+            {
+                self.counters.priority_applied.fetch_add(1, Relaxed);
+                handle.cast(move |ra| {
+                    ra.update_priorities(&indices, &td_abs)
+                });
+                true
+            }
+            _ => {
+                self.counters.priority_discarded.fetch_add(1, Relaxed);
+                false
+            }
+        }
+    }
+}
+
+/// `Replay(service, num_async)`: an endless stream of prioritized
+/// samples gathered **through the shard registry** — shards grown by
+/// `scale_to` are adopted mid-stream, retired/replaced incarnations'
+/// in-flight samples are discarded by epoch — each paired with a
+/// [`ReplayLease`] for the priority round-trip.
 ///
-/// Before `learning_starts` the buffers are not ready: the stream
+/// Before `learning_starts` the shards are not ready: the stream
 /// yields `None` items (after an exponential backoff, base
 /// [`DEFAULT_REPLAY_BACKOFF_BASE`] capped at
 /// [`DEFAULT_REPLAY_BACKOFF_CAP`]) instead of blocking — critical under
@@ -74,11 +419,11 @@ pub fn store_to_replay_buffer(
 /// composition deadlock; regression-tested in rust/tests/
 /// integration.rs).  Use [`replay_with_backoff`] to tune the cadence.
 pub fn replay(
-    actors: Vec<ReplayActor>,
+    service: &ReplayService,
     num_async: usize,
-) -> LocalIter<Option<(ReplaySample, ReplayActor)>> {
+) -> LocalIter<Option<(ReplaySample, ReplayLease)>> {
     replay_with_backoff(
-        actors,
+        service,
         num_async,
         DEFAULT_REPLAY_BACKOFF_BASE,
         DEFAULT_REPLAY_BACKOFF_CAP,
@@ -92,27 +437,33 @@ pub fn replay(
 /// fixed long one adds latency to the first samples after a drain —
 /// the ladder gives both ends.
 pub fn replay_with_backoff(
-    actors: Vec<ReplayActor>,
+    service: &ReplayService,
     num_async: usize,
     base: Duration,
     cap: Duration,
-) -> LocalIter<Option<(ReplaySample, ReplayActor)>> {
+) -> LocalIter<Option<(ReplaySample, ReplayLease)>> {
+    let registry = service.registry().clone();
+    let counters = service.counters();
     let mut backoff = Backoff::new(base, cap);
-    ParIter::from_actors(actors, |ra: &mut ReplayActorState| Some(ra.replay()))
-        .gather_async_with_source(num_async)
-        .for_each(move |(maybe, actor)| match maybe {
-            Some(s) => {
-                backoff.reset();
-                Some((s, actor))
-            }
-            None => {
-                // Empty buffer: back off (exponentially, capped) so we
-                // don't spin the replay actor's mailbox, then report
-                // not-ready.
-                std::thread::sleep(backoff.next_delay());
-                None
-            }
-        })
+    ParIter::from_registry(registry.clone(), |ra: &mut ReplayActorState| {
+        Some(ra.replay())
+    })
+    .gather_async_with_source(num_async)
+    .for_each(move |(maybe, shard)| match maybe {
+        Some(s) => {
+            backoff.reset();
+            counters.samples.fetch_add(1, Relaxed);
+            let lease = ReplayLease::locate(&registry, &shard, &counters);
+            Some((s, lease))
+        }
+        None => {
+            // Empty buffer: back off (exponentially, capped) so we
+            // don't spin the shard's mailbox, then report not-ready.
+            counters.not_ready.fetch_add(1, Relaxed);
+            std::thread::sleep(backoff.next_delay());
+            None
+        }
+    })
 }
 
 #[cfg(test)]
@@ -134,57 +485,83 @@ mod tests {
         b.build()
     }
 
+    /// Sum of `num_added` over the live shards, via the slot gauges
+    /// (waiting out in-flight store casts with a bounded retry).
+    fn total_added(service: &ReplayService, expect: usize) -> usize {
+        for _ in 0..200 {
+            let added = service.backlog_stats().added as usize;
+            if added >= expect {
+                return added;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        service.backlog_stats().added as usize
+    }
+
     #[test]
-    fn store_op_distributes_to_actors() {
-        let actors = create_replay_actors(2, 2, 64, 0, 4);
-        let mut op = store_to_replay_buffer(actors.clone());
+    fn store_op_distributes_across_shards() {
+        let service = create_replay_shards(2, 2, 64, 0, 4);
+        let mut op = store_to_replay_buffer(&service);
         for _ in 0..10 {
             let out = op(transitions(4));
             assert_eq!(out.len(), 4); // pass-through
         }
-        let totals: Vec<usize> =
-            actors.iter().map(|a| a.call(|ra| ra.num_added).unwrap()).collect();
-        assert_eq!(totals.iter().sum::<usize>(), 40);
-        assert!(totals.iter().all(|&t| t > 0), "both actors used: {totals:?}");
+        assert_eq!(total_added(&service, 40), 40);
+        let per_shard: Vec<usize> = service
+            .registry()
+            .handles()
+            .iter()
+            .map(|a| a.call(|ra| ra.num_added).unwrap())
+            .collect();
+        assert!(
+            per_shard.iter().all(|&t| t > 0),
+            "hash routing must use both shards: {per_shard:?}"
+        );
+        assert_eq!(service.backlog_stats().stores, 10);
     }
 
     #[test]
-    fn replay_stream_yields_after_learning_starts() {
-        let actors = create_replay_actors(2, 2, 64, 8, 4);
-        let mut store = store_to_replay_buffer(actors.clone());
-        // Feed both actors past learning_starts.
-        for _ in 0..8 {
+    fn replay_stream_yields_leases_after_learning_starts() {
+        let service = create_replay_shards(2, 2, 64, 8, 4);
+        let mut store = store_to_replay_buffer(&service);
+        // Feed both shards past learning_starts.
+        for _ in 0..10 {
             store(transitions(4));
         }
-        let mut it = replay(actors, 2);
+        let mut it = replay(&service, 2);
         let mut n = 0;
         while n < 5 {
-            let Some((sample, actor)) = it.next().unwrap() else {
+            let Some((sample, lease)) = it.next().unwrap() else {
                 continue; // store casts may still be in flight
             };
             assert_eq!(sample.batch.len(), 4);
             assert_eq!(sample.indices.len(), 4);
-            // The handle can message the producing actor.
-            actor.cast(|ra| ra.num_sampled += 0);
+            // The lease resolved the producing slot and its updates
+            // reach the live incarnation.
+            assert!(lease.shard_idx().is_some());
+            let tds = vec![1.0; sample.indices.len()];
+            assert!(lease.update_priorities(sample.indices, tds));
             n += 1;
         }
+        assert!(service.backlog_stats().priority_applied >= 5);
     }
 
     #[test]
     fn replay_before_learning_starts_yields_not_ready() {
-        let actors = create_replay_actors(1, 2, 64, 1000, 4);
-        let mut it = replay(actors, 1);
+        let service = create_replay_shards(1, 2, 64, 1000, 4);
+        let mut it = replay(&service, 1);
         // Stream must not block: it reports not-ready instead.
         for _ in 0..3 {
             assert!(it.next().unwrap().is_none());
         }
+        assert!(service.backlog_stats().not_ready >= 3);
     }
 
     #[test]
     fn replay_backoff_grows_while_not_ready() {
-        let actors = create_replay_actors(1, 2, 64, 1000, 4);
+        let service = create_replay_shards(1, 2, 64, 1000, 4);
         let mut it = replay_with_backoff(
-            actors,
+            &service,
             1,
             Duration::from_millis(2),
             Duration::from_millis(8),
@@ -203,19 +580,102 @@ mod tests {
     }
 
     #[test]
-    fn priority_update_roundtrip_through_actor() {
-        let actors = create_replay_actors(1, 2, 64, 0, 4);
-        actors[0]
+    fn priority_update_to_restarted_shard_is_discarded_by_epoch() {
+        let service = create_replay_shards(1, 2, 64, 0, 4);
+        let (shard, epoch0) = service.registry().get_live(0).unwrap();
+        shard
             .call({
                 let batch = transitions(4);
                 move |ra| ra.add_batch(&batch)
             })
             .unwrap();
-        let (sample, actor) = replay(actors, 1).next().unwrap().unwrap();
-        let indices = sample.indices.clone();
-        let tds = vec![9.0; indices.len()];
-        actor.call(move |ra| ra.update_priorities(&indices, &tds)).unwrap();
-        // Priorities applied: the buffer can still sample.
-        assert!(actor.call(|ra| ra.replay()).unwrap().is_some());
+        let (sample, lease) = replay(&service, 1).next().unwrap().unwrap();
+        assert_eq!(lease.epoch(), epoch0);
+
+        // Kill the shard and restart it: new incarnation, bumped epoch.
+        assert!(shard.call(|_| -> () { panic!("fault injection") }).is_err());
+        assert!(shard.await_poisoned(Duration::from_secs(2)));
+        assert_eq!(service.set().restart_dead(), vec![0]);
+        assert!(service.registry().epoch(0) > epoch0);
+
+        // The lease's priorities reference the dead incarnation's ring
+        // slots — they must be dropped, not applied to the fresh one.
+        let tds = vec![9.0; sample.indices.len()];
+        assert!(!lease.update_priorities(sample.indices, tds));
+        let stats = service.backlog_stats();
+        assert_eq!(stats.priority_discarded, 1);
+        assert_eq!(stats.priority_applied, 0);
+    }
+
+    #[test]
+    fn priority_update_to_retired_slot_is_discarded() {
+        let service = create_replay_shards(2, 2, 64, 0, 4);
+        let mut store = store_to_replay_buffer(&service);
+        for _ in 0..6 {
+            store(transitions(4));
+        }
+        total_added(&service, 24);
+        let (sample, lease) = replay(&service, 1).next().unwrap().unwrap();
+        let idx = lease.shard_idx().unwrap();
+        // Retire the producing slot under the lease's feet.
+        assert!(service.set().remove_worker(idx));
+        let tds = vec![9.0; sample.indices.len()];
+        assert!(!lease.update_priorities(sample.indices, tds));
+        assert_eq!(service.backlog_stats().priority_discarded, 1);
+    }
+
+    #[test]
+    fn store_routes_around_scale_events() {
+        let service = create_replay_shards(2, 2, 64, 0, 4);
+        let mut store = store_to_replay_buffer(&service);
+        for _ in 0..4 {
+            store(transitions(4));
+        }
+        assert_eq!(total_added(&service, 16), 16);
+        // Grow to 3: the new shard joins the rotation on later batches.
+        service.scale_to(3).unwrap();
+        for _ in 0..12 {
+            store(transitions(4));
+        }
+        assert_eq!(total_added(&service, 64), 64);
+        let third = service
+            .registry()
+            .get_live(2)
+            .expect("grown shard live")
+            .0
+            .call(|ra| ra.num_added)
+            .unwrap();
+        assert!(third > 0, "grown shard never received a batch");
+        // Shrink back to 1: routing must not panic and the survivor
+        // takes all subsequent batches.
+        service.scale_to(1).unwrap();
+        let before = service.backlog_stats().added;
+        for _ in 0..4 {
+            store(transitions(4));
+        }
+        assert_eq!(
+            total_added(&service, before as usize + 16) as u64,
+            before + 16
+        );
+    }
+
+    #[test]
+    fn backlog_stats_see_queue_and_fill() {
+        let service = create_replay_shards(1, 2, 32, 0, 4);
+        let mut store = store_to_replay_buffer(&service);
+        for _ in 0..8 {
+            store(transitions(4));
+        }
+        total_added(&service, 32);
+        let stats = service.backlog_stats();
+        assert_eq!(stats.live_shards, 1);
+        assert_eq!(stats.slots, 1);
+        assert!(
+            (stats.max_ring_fill - 1.0).abs() < 1e-12,
+            "32 adds into a 32-ring: fill={}",
+            stats.max_ring_fill
+        );
+        assert_eq!(stats.added, 32);
+        assert_eq!(stats.stores, 8);
     }
 }

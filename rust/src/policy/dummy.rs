@@ -32,6 +32,22 @@ impl Policy for DummyPolicy {
             .collect()
     }
 
+    fn compute_actions_into(
+        &mut self,
+        _obs: &[f32],
+        n: usize,
+        out: &mut Vec<ActionOutput>,
+    ) {
+        out.clear();
+        for _ in 0..n {
+            out.push(ActionOutput {
+                action: self.rng.below(2) as i32,
+                logp: -std::f32::consts::LN_2,
+                value: 0.0,
+            });
+        }
+    }
+
     fn compute_gradients(&mut self, batch: &SampleBatch) -> Gradients {
         // "Loss" = w * mean(reward): gradient is mean reward.
         let n = batch.len().max(1);

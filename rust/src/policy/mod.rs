@@ -45,6 +45,20 @@ pub trait Policy {
     /// Batched action computation for `n` observation rows.
     fn compute_actions(&mut self, obs: &[f32], n: usize) -> Vec<ActionOutput>;
 
+    /// Batched action computation into a caller-owned buffer (cleared
+    /// first).  The default delegates to [`Policy::compute_actions`];
+    /// policies on the rollout hot path override to reuse `out`'s
+    /// capacity so the steady-state sampling loop never allocates.
+    fn compute_actions_into(
+        &mut self,
+        obs: &[f32],
+        n: usize,
+        out: &mut Vec<ActionOutput>,
+    ) {
+        out.clear();
+        out.extend(self.compute_actions(obs, n));
+    }
+
     /// Gradients of the policy loss on `batch` (no apply).
     fn compute_gradients(&mut self, batch: &SampleBatch) -> Gradients;
 

@@ -70,6 +70,7 @@ impl PrioritizedReplayBuffer {
             size: 0,
             rng: Rng::new(seed),
             eps: 1e-6,
+            scratch: None,
         }
     }
 
@@ -109,6 +110,13 @@ impl PrioritizedReplayBuffer {
     /// The observation row width, 0 before anything is stored.
     pub fn obs_dim(&self) -> usize {
         self.obs_dim
+    }
+
+    /// Ring capacity in transitions (rounded up to a power of two by the
+    /// constructors) — the denominator of the backlog gauge's ring-fill
+    /// fraction.
+    pub fn capacity(&self) -> usize {
+        self.capacity
     }
 
     /// Add every transition of `batch` (requires next_obs column), with
@@ -214,6 +222,37 @@ impl PrioritizedReplayBuffer {
     }
 }
 
+/// Lock-free backlog gauge of one replay-shard *slot*, shared between
+/// the shard incarnation (which publishes after every `add_batch` /
+/// `replay`) and the service's backlog aggregation.  Reading through
+/// the gauge instead of a blocking `call` matters precisely when it
+/// matters most: a backlogged shard would queue the telemetry request
+/// behind the very backlog being measured.
+///
+/// A restarted incarnation re-publishes from its own (empty) state, so
+/// the gauge always describes the slot's **current** incarnation.
+#[derive(Debug, Default)]
+pub struct ReplayShardGauge {
+    pub num_added: std::sync::atomic::AtomicU64,
+    pub num_sampled: std::sync::atomic::AtomicU64,
+    /// Transitions currently resident in the ring.
+    pub len: std::sync::atomic::AtomicU64,
+    pub capacity: std::sync::atomic::AtomicU64,
+}
+
+impl ReplayShardGauge {
+    /// Ring occupancy fraction (0..=1; 0 before the first publish).
+    pub fn ring_fill(&self) -> f64 {
+        use std::sync::atomic::Ordering::Relaxed;
+        let cap = self.capacity.load(Relaxed);
+        if cap == 0 {
+            0.0
+        } else {
+            self.len.load(Relaxed) as f64 / cap as f64
+        }
+    }
+}
+
 /// Replay actor state: a buffer plus counters, matching the paper's
 /// `ReplayActor` interface (`add_batch`, `replay`, `update_priorities`).
 pub struct ReplayActorState {
@@ -224,6 +263,9 @@ pub struct ReplayActorState {
     pub replay_batch_size: usize,
     pub num_added: usize,
     pub num_sampled: usize,
+    /// Slot gauge published after every mutation (None for standalone
+    /// actors outside a `ReplayService`).
+    gauge: Option<std::sync::Arc<ReplayShardGauge>>,
 }
 
 impl ReplayActorState {
@@ -242,12 +284,37 @@ impl ReplayActorState {
             replay_batch_size,
             num_added: 0,
             num_sampled: 0,
+            gauge: None,
+        }
+    }
+
+    /// Attach a slot gauge (builder style, used by the replay-shard
+    /// factory).  Publishes immediately so the gauge reflects this
+    /// incarnation — on a restart that resets the slot's reading to an
+    /// empty ring rather than leaving the dead incarnation's numbers up.
+    pub fn with_gauge(
+        mut self,
+        gauge: std::sync::Arc<ReplayShardGauge>,
+    ) -> Self {
+        self.gauge = Some(gauge);
+        self.publish_gauge();
+        self
+    }
+
+    fn publish_gauge(&self) {
+        use std::sync::atomic::Ordering::Relaxed;
+        if let Some(g) = &self.gauge {
+            g.num_added.store(self.num_added as u64, Relaxed);
+            g.num_sampled.store(self.num_sampled as u64, Relaxed);
+            g.len.store(self.buffer.len() as u64, Relaxed);
+            g.capacity.store(self.buffer.capacity() as u64, Relaxed);
         }
     }
 
     pub fn add_batch(&mut self, batch: &SampleBatch) {
         self.num_added += batch.len();
         self.buffer.add_batch(batch);
+        self.publish_gauge();
     }
 
     /// One replayed minibatch, or None before learning_starts.
@@ -257,6 +324,7 @@ impl ReplayActorState {
         }
         let s = self.buffer.sample(self.replay_batch_size)?;
         self.num_sampled += s.batch.len();
+        self.publish_gauge();
         Some(s)
     }
 
@@ -379,6 +447,26 @@ mod tests {
         let _second = buf.sample(4).unwrap();
         // The held sample's rows were not overwritten by the next one.
         assert_eq!(held.batch.rewards.to_vec(), snapshot);
+    }
+
+    #[test]
+    fn gauge_tracks_ring_fill_and_counters() {
+        use std::sync::atomic::Ordering::Relaxed;
+        let g = std::sync::Arc::new(ReplayShardGauge::default());
+        let mut ra =
+            ReplayActorState::new(8, 2, 0, 4, 0).with_gauge(g.clone());
+        assert_eq!(g.capacity.load(Relaxed), 8);
+        assert_eq!(g.ring_fill(), 0.0, "fresh incarnation publishes empty");
+        ra.add_batch(&transitions(4, 0.0));
+        assert_eq!(g.num_added.load(Relaxed), 4);
+        assert_eq!(g.len.load(Relaxed), 4);
+        assert!((g.ring_fill() - 0.5).abs() < 1e-12);
+        ra.replay().unwrap();
+        assert_eq!(g.num_sampled.load(Relaxed), 4);
+        // A fresh incarnation attached to the same gauge resets it.
+        let _ra2 = ReplayActorState::new(8, 2, 0, 4, 1).with_gauge(g.clone());
+        assert_eq!(g.num_added.load(Relaxed), 0);
+        assert_eq!(g.ring_fill(), 0.0);
     }
 
     #[test]

@@ -5,5 +5,46 @@
 mod buffer;
 mod sum_tree;
 
-pub use buffer::{PrioritizedReplayBuffer, ReplayActorState, ReplaySample};
+pub use buffer::{
+    PrioritizedReplayBuffer, ReplayActorState, ReplaySample, ReplayShardGauge,
+};
 pub use sum_tree::SumTree;
+
+/// Aggregated backlog telemetry over a replay-shard pool, computed each
+/// report by `ops::ReplayService::backlog_stats` and attached to
+/// `TrainResult::replay`.  This is the autoscaler's control input for
+/// the replay pool: mailbox depth (add/sample traffic the shards cannot
+/// drain), ring fill (capacity pressure), and the not-ready poll rate
+/// (shards idling below `learning_starts` — the inflow is spread too
+/// thin).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ReplayBacklogStats {
+    /// Live shards at snapshot time.
+    pub live_shards: usize,
+    /// Registry slots consumed (tombstones included).
+    pub slots: usize,
+    /// Deepest current mailbox across live shards.
+    pub max_queue_len: usize,
+    /// Highest lifetime mailbox high-water mark across live shards.
+    pub max_queue_hwm: usize,
+    /// Highest ring fill fraction (len / capacity, 0..=1) across live
+    /// shards.
+    pub max_ring_fill: f64,
+    /// Transitions stored across shard incarnations (gauge sum — a
+    /// restarted shard restarts its contribution from zero).
+    pub added: u64,
+    /// Transitions replayed across shard incarnations (gauge sum).
+    pub sampled: u64,
+    /// Lifetime batches routed by `store_to_replay_buffer` (service
+    /// counter — survives shard restarts).
+    pub stores: u64,
+    /// Lifetime samples yielded by the `replay` stream.
+    pub samples: u64,
+    /// Lifetime not-ready polls (buffer below learning-starts).
+    pub not_ready: u64,
+    /// Priority updates applied to the producing shard incarnation.
+    pub priority_applied: u64,
+    /// Priority updates discarded because the producing incarnation was
+    /// restarted (epoch moved) or its slot retired.
+    pub priority_discarded: u64,
+}

@@ -9,7 +9,7 @@ use crate::actor::{
 };
 use crate::env::Env;
 use crate::metrics::EpisodeRecord;
-use crate::policy::{Gradients, Policy};
+use crate::policy::{ActionOutput, Gradients, Policy};
 use crate::sample_batch::{SampleBatch, SampleBatchBuilder};
 use crate::util::Backoff;
 
@@ -34,13 +34,21 @@ pub struct RolloutWorker {
     pub policy: Box<dyn Policy>,
     mode: CollectMode,
     fragment: usize,
-    obs: Vec<Vec<f32>>,
+    /// Flat `[n_envs, obs_dim]` SoA buffer of current observations —
+    /// fed to `compute_actions` directly and updated in place by
+    /// `Env::step_into` / `reset_into`, so the steady-state sampling
+    /// loop performs no per-env-per-step heap allocation.
+    obs: Vec<f32>,
     builders: Vec<SampleBatchBuilder>,
     ep_reward: Vec<f64>,
     ep_len: Vec<usize>,
     episodes: Vec<EpisodeRecord>,
     pub num_steps_sampled: usize,
-    obs_scratch: Vec<f32>,
+    /// One-row staging for an env's next observation: the builder needs
+    /// the env's *current* row intact while recording the transition.
+    next_obs_scratch: Vec<f32>,
+    /// Reused output buffer for batched action computation.
+    actions_scratch: Vec<ActionOutput>,
 }
 
 impl RolloutWorker {
@@ -53,8 +61,11 @@ impl RolloutWorker {
         assert!(!envs.is_empty());
         let obs_dim = envs[0].obs_dim();
         let mut envs = envs;
-        let obs: Vec<Vec<f32>> = envs.iter_mut().map(|e| e.reset()).collect();
         let n = envs.len();
+        let mut obs = vec![0.0; n * obs_dim];
+        for (e, env) in envs.iter_mut().enumerate() {
+            env.reset_into(&mut obs[e * obs_dim..(e + 1) * obs_dim]);
+        }
         RolloutWorker {
             builders: (0..n)
                 .map(|_| SampleBatchBuilder::with_capacity(obs_dim, fragment))
@@ -68,7 +79,8 @@ impl RolloutWorker {
             ep_len: vec![0; n],
             episodes: Vec::new(),
             num_steps_sampled: 0,
-            obs_scratch: vec![0.0; n * obs_dim],
+            next_obs_scratch: vec![0.0; obs_dim],
+            actions_scratch: Vec::with_capacity(n),
         }
     }
 
@@ -87,30 +99,31 @@ impl RolloutWorker {
         faults::failpoint(faults::SITE_ROLLOUT_SAMPLE);
         let n_envs = self.envs.len();
         let obs_dim = self.obs_dim();
+        let mut actions = std::mem::take(&mut self.actions_scratch);
         for _ in 0..self.fragment {
-            // Batched action computation over all env slots.
-            for (e, o) in self.obs.iter().enumerate() {
-                self.obs_scratch[e * obs_dim..(e + 1) * obs_dim]
-                    .copy_from_slice(o);
-            }
-            let actions =
-                self.policy.compute_actions(&self.obs_scratch, n_envs);
+            // Batched action computation straight off the flat obs
+            // buffer; the action buffer's capacity is reused per step.
+            self.policy.compute_actions_into(&self.obs, n_envs, &mut actions);
             for e in 0..n_envs {
                 let a = actions[e];
-                let (next_obs, reward, done) = self.envs[e].step(a.action);
+                let row = e * obs_dim..(e + 1) * obs_dim;
+                let (reward, done) = self.envs[e]
+                    .step_into(a.action, &mut self.next_obs_scratch);
+                let cur = &self.obs[row.clone()];
                 match self.mode {
                     CollectMode::OnPolicy => self.builders[e].add_step(
-                        &self.obs[e], a.action, reward, done, a.logp, a.value,
+                        cur, a.action, reward, done, a.logp, a.value,
                     ),
                     CollectMode::OnPolicyWithNextObs => {
                         self.builders[e].add_step_with_next(
-                            &self.obs[e], a.action, reward, &next_obs, done,
-                            a.logp, a.value,
+                            cur, a.action, reward, &self.next_obs_scratch,
+                            done, a.logp, a.value,
                         )
                     }
                     CollectMode::Transitions => self.builders[e]
                         .add_transition(
-                            &self.obs[e], a.action, reward, &next_obs, done,
+                            cur, a.action, reward, &self.next_obs_scratch,
+                            done,
                         ),
                 }
                 self.ep_reward[e] += reward as f64;
@@ -123,19 +136,18 @@ impl RolloutWorker {
                     });
                     self.ep_reward[e] = 0.0;
                     self.ep_len[e] = 0;
-                    self.obs[e] = self.envs[e].reset();
+                    self.envs[e].reset_into(&mut self.obs[row]);
                 } else {
-                    self.obs[e] = next_obs;
+                    self.obs[row].copy_from_slice(&self.next_obs_scratch);
                 }
             }
         }
+        self.actions_scratch = actions;
         // Per-env segments: postprocess (GAE) with a bootstrap value of
         // the trailing obs, then concatenate env-major.  All bootstrap
-        // values come from one batched forward (perf O2).
-        for (e, o) in self.obs.iter().enumerate() {
-            self.obs_scratch[e * obs_dim..(e + 1) * obs_dim].copy_from_slice(o);
-        }
-        let last_values = self.policy.values(&self.obs_scratch, n_envs);
+        // values come from one batched forward (perf O2) straight off
+        // the flat obs buffer.
+        let last_values = self.policy.values(&self.obs, n_envs);
         let mut segments = Vec::with_capacity(n_envs);
         for e in 0..n_envs {
             let mut seg = self.builders[e].build();
@@ -180,9 +192,10 @@ impl RolloutWorker {
 
     /// Resample the task of every env (meta-learning workers) and reset.
     pub fn sample_task(&mut self) {
+        let obs_dim = self.obs_dim();
         for (e, env) in self.envs.iter_mut().enumerate() {
             env.sample_task();
-            self.obs[e] = env.reset();
+            env.reset_into(&mut self.obs[e * obs_dim..(e + 1) * obs_dim]);
             self.ep_reward[e] = 0.0;
             self.ep_len[e] = 0;
         }

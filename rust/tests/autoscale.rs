@@ -121,6 +121,7 @@ fn controller(min: usize, max: usize) -> Autoscaler {
         cooldown_reports: 0,
         confirm_reports: 1,
         step: 1,
+        ..AutoscalerConfig::default()
     })
 }
 
@@ -287,6 +288,7 @@ fn autoscale_soak_idle_grow_busy_shrink() {
         cooldown_reports: 1,
         confirm_reports: 2,
         step: 1,
+        ..AutoscalerConfig::default()
     });
     let mut reports =
         autoscaled_metrics_reporting(train_op, &set, 1, controller);

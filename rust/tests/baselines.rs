@@ -45,6 +45,7 @@ fn test_config(num_workers: usize) -> TrainerConfig {
         seed: 11,
         num_async: 1,
         env: EnvKind::CartPole,
+        ..TrainerConfig::default()
     }
 }
 

@@ -48,6 +48,7 @@ fn test_config(num_workers: usize) -> TrainerConfig {
         seed: 7,
         num_async: 1,
         env: EnvKind::CartPole,
+        ..TrainerConfig::default()
     }
 }
 
@@ -255,6 +256,7 @@ fn apex_trains_and_reports() {
         num_replay_actors: 2,
         max_weight_sync_delay: 64,
         replay_queue_depth: 2,
+        ..algos::apex::ApexConfig::default()
     };
     // Replay items are not-ready until learning_starts, so poll until
     // the learner has actually trained.

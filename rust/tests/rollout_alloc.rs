@@ -1,0 +1,107 @@
+//! Allocation-freedom test for the rollout hot loop (acceptance
+//! criterion of the sharded-replay PR's zero-alloc satellite): in
+//! steady state, `RolloutWorker::sample` performs **zero** heap
+//! allocations per environment step.
+//!
+//! The seed-era loop allocated a fresh `Vec<f32>` per env per step
+//! (`Env::step` returning the next observation by value) plus a
+//! `Vec<ActionOutput>` per vector-step; `Env::step_into`/`reset_into`
+//! now write observations straight into the worker's flat SoA buffer
+//! and `Policy::compute_actions_into` reuses one action buffer.
+//!
+//! Per-step freedom is asserted *differentially*: two workers identical
+//! except for fragment length must spend exactly the same number of
+//! allocations per `sample()` call once warm.  Whatever constant
+//! per-fragment cost remains (the concat, the bootstrap-value vector,
+//! Arc control blocks) cancels out; any per-step allocation would show
+//! up multiplied by the fragment-length difference.
+//!
+//! The counting allocator counts per-thread (a thread-local counter),
+//! so the worker is driven directly on the test thread — not through an
+//! actor — and this file holds a single test for the same reason
+//! `tests/actor_alloc.rs` does.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use flowrl::env::{DummyEnv, Env};
+use flowrl::policy::DummyPolicy;
+use flowrl::rollout::{CollectMode, RolloutWorker};
+
+struct CountingAlloc;
+
+thread_local! {
+    static TL_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let _ = TL_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        let _ = TL_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn allocs_here() -> u64 {
+    TL_ALLOCS.with(|c| c.get())
+}
+
+const N_ENVS: usize = 4;
+const OBS_DIM: usize = 8;
+const WARMUP: usize = 4;
+const MEASURED: usize = 8;
+
+fn make_worker(fragment: usize, mode: CollectMode) -> RolloutWorker {
+    // Episodes effectively never terminate, so the measurement sees the
+    // pure step loop (episode-record pushes are per-episode, amortized,
+    // and not the subject of this pin).
+    let envs: Vec<Box<dyn Env>> = (0..N_ENVS)
+        .map(|_| Box::new(DummyEnv::new(OBS_DIM, usize::MAX)) as Box<dyn Env>)
+        .collect();
+    RolloutWorker::new(envs, Box::new(DummyPolicy::new(0.1)), fragment, mode)
+}
+
+/// Allocations per `sample()` call once capacities are warm.
+fn steady_allocs_per_sample(fragment: usize, mode: CollectMode) -> u64 {
+    let mut w = make_worker(fragment, mode);
+    for _ in 0..WARMUP {
+        let b = w.sample();
+        assert_eq!(b.len(), fragment * N_ENVS);
+    }
+    let before = allocs_here();
+    for _ in 0..MEASURED {
+        let b = w.sample();
+        assert_eq!(b.len(), fragment * N_ENVS);
+    }
+    (allocs_here() - before) / MEASURED as u64
+}
+
+#[test]
+fn rollout_hot_loop_is_allocation_free_per_step() {
+    for mode in [CollectMode::Transitions, CollectMode::OnPolicy] {
+        let short = steady_allocs_per_sample(32, mode);
+        let long = steady_allocs_per_sample(256, mode);
+        assert_eq!(
+            short, long,
+            "per-sample allocations scale with fragment length in \
+             {mode:?} (32 steps: {short}, 256 steps: {long}) — \
+             something allocates per step in the hot loop"
+        );
+    }
+}

@@ -560,3 +560,108 @@ fn chaos_soak_grow_kill_converge() {
         newest
     );
 }
+
+// ---------------------------------------------------------------------
+// Replay tier: registry-backed shards under live store+replay traffic
+// ---------------------------------------------------------------------
+
+/// The sharded-replay PR's acceptance criterion: the replay tier is the
+/// same elastic registry machinery as the rollout workers.  A `replay`
+/// stream started on 2 shards (a) keeps yielding while `scale_to(4)`
+/// grows the pool — the store op hash-routes new batches onto the added
+/// shards and the SAME running gather adopts them — and (b) survives
+/// `scale_to(1)` retiring three live shards mid-stream, with every
+/// subsequent lease resolving to the survivor.  No plan rebuild at any
+/// point.
+#[test]
+fn replay_stream_adopts_shards_added_and_retired_by_scale_to() {
+    use flowrl::ops::{create_replay_shards, replay, store_to_replay_buffer};
+    use flowrl::sample_batch::{SampleBatch, SampleBatchBuilder};
+
+    fn transitions(n: usize) -> SampleBatch {
+        let mut b = SampleBatchBuilder::new(2);
+        for i in 0..n {
+            b.add_transition(
+                &[i as f32, 0.0],
+                0,
+                1.0,
+                &[i as f32 + 1.0, 0.0],
+                false,
+            );
+        }
+        b.build()
+    }
+
+    let service = create_replay_shards(2, 2, 256, 8, 4);
+    let mut store = store_to_replay_buffer(&service);
+    let mut it = replay(&service, 2);
+
+    // Warm both shards past learning_starts and draw off the pair.
+    for _ in 0..10 {
+        store(transitions(4));
+    }
+    let mut drawn = 0;
+    while drawn < 4 {
+        if let Some((sample, lease)) = it.next().unwrap() {
+            assert_eq!(sample.batch.len(), 4);
+            assert!(lease.shard_idx().unwrap() < 2);
+            drawn += 1;
+        }
+    }
+
+    // Grow mid-stream: the store op routes onto the new slots on later
+    // batches, and the running gather must start yielding their samples.
+    let (added, removed) = service.scale_to(4).unwrap();
+    assert_eq!(added, vec![2, 3]);
+    assert!(removed.is_empty());
+    let mut seen_new = HashSet::new();
+    for _ in 0..4096 {
+        store(transitions(4));
+        if let Some((_, lease)) = it.next().unwrap() {
+            let idx = lease.shard_idx().expect("live producer");
+            if idx >= 2 {
+                seen_new.insert(idx);
+            }
+        }
+        if seen_new.len() == 2 {
+            break;
+        }
+    }
+    assert_eq!(
+        seen_new,
+        HashSet::from([2, 3]),
+        "running replay stream never adopted the grown shards"
+    );
+
+    // Shrink to 1 under the same stream: the three highest live slots
+    // retire; the stream keeps yielding and every lease resolves to the
+    // survivor.
+    let (added, removed) = service.scale_to(1).unwrap();
+    assert!(added.is_empty());
+    assert_eq!(removed, vec![3, 2, 1]);
+    assert_eq!(service.num_live_shards(), 1);
+    let mut survivor_draws = 0;
+    for _ in 0..4096 {
+        store(transitions(4));
+        if let Some((_, lease)) = it.next().unwrap() {
+            // In-flight samples of just-retired shards may still drain
+            // out with an unresolvable lease; fresh draws must all come
+            // from slot 0.
+            if let Some(idx) = lease.shard_idx() {
+                assert_eq!(idx, 0, "lease resolved to a retired slot");
+                survivor_draws += 1;
+            }
+        }
+        if survivor_draws >= 8 {
+            break;
+        }
+    }
+    assert!(
+        survivor_draws >= 8,
+        "stream starved after retiring shards: {survivor_draws} draws"
+    );
+    let stats = service.backlog_stats();
+    assert_eq!(stats.live_shards, 1);
+    assert_eq!(stats.slots, 4);
+    assert!(stats.samples >= 12);
+}

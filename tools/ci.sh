@@ -17,9 +17,11 @@
 #                         # autoscale soak (rust/tests/autoscale.rs,
 #                         # #[ignore]d idle->grow / busy->shrink
 #                         # controller convergence), and the fault-matrix
-#                         # soak (rust/tests/faults.rs, #[ignore]d
+#                         # soaks (rust/tests/faults.rs, #[ignore]d
 #                         # scripted delay/drop/crash/hang mix under
-#                         # deadline supervision + RestartPolicy)
+#                         # deadline supervision + RestartPolicy, plus
+#                         # rotating replay-shard kills under live
+#                         # store+replay traffic)
 #
 # Every step prints its own wall-clock seconds (==> ... [Ns]) so a slow
 # gate names the stage that slowed down.
@@ -76,7 +78,7 @@ if [ "$chaos" -eq 1 ]; then
   step "autoscale soak: controller converges (idle->grow, busy->shrink)" \
     timeout 120 cargo test --release --test autoscale -- \
     --ignored --nocapture
-  step "fault-matrix soak: delay/drop/crash/hang under supervision" \
+  step "fault-matrix soaks: delay/drop/crash/hang + replay-shard kills" \
     timeout 120 cargo test --release --test faults -- \
     --ignored --nocapture
   echo "CI OK (chaos) [$((SECONDS - ci_start))s]"

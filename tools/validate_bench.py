@@ -24,7 +24,10 @@ Rules enforced per file:
     learner busy fraction x 100 and must stay within [0, 100]);
   * BENCH_faults.json must allowlist (and, once results are recorded,
     cover) "hang_detection_latency" and "disarmed_overhead" — the
-    schema rust/benches/fault_detection.rs emits.
+    schema rust/benches/fault_detection.rs emits;
+  * BENCH_replay_shard.json must allowlist (and, once results are
+    recorded, cover) "add_throughput" and "sample_throughput" — the
+    per-shard-count sweep rust/benches/replay_shard.rs emits.
 
 Exit code 0 = all files pass; 1 = any violation (listed on stderr).
 
@@ -52,6 +55,7 @@ REQUIRED_OPS = {
     "elastic": ("scale_up_latency", "growth_throughput"),
     "autoscale": ("time_to_converge", "steady_utilization"),
     "faults": ("hang_detection_latency", "disarmed_overhead"),
+    "replay_shard": ("add_throughput", "sample_throughput"),
 }
 
 
