@@ -19,7 +19,7 @@ use flowrl::iter::{concurrently, UnionMode};
 use flowrl::metrics::TrainResult;
 use flowrl::ops::{
     create_replay_shards, parallel_rollouts_from, replay,
-    standard_metrics_reporting, store_to_replay_buffer, TrainItem,
+    store_to_replay_buffer, Reporting, TrainItem,
 };
 
 fn config() -> TrainerConfig {
@@ -95,7 +95,7 @@ fn dqn_ratio(
         },
         None,
     );
-    let mut stream = standard_metrics_reporting(merged, &workers, 1);
+    let mut stream = Reporting::new(merged, &workers, 1).build();
     let mut last = TrainResult::default();
     for _ in 0..reports {
         last = stream.next().unwrap();

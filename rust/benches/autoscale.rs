@@ -5,7 +5,7 @@
 //!
 //! * **autoscaled** — the pool starts at 1 sampler with an
 //!   `actor::Autoscaler` driving `WorkerSet::scale_to` through
-//!   `autoscaled_metrics_reporting`; reported ops:
+//!   `ops::Reporting::autoscale`; reported ops:
 //!   `time_to_converge` (ms from the first report until the live pool
 //!   reaches `max_workers`) and the post-convergence learner
 //!   utilization (`steady_utilization`, mode "autoscaled");
@@ -27,10 +27,7 @@ use std::time::{Duration, Instant};
 
 use flowrl::actor::{Autoscaler, AutoscalerConfig};
 use flowrl::env::{DummyEnv, Env};
-use flowrl::ops::{
-    autoscaled_metrics_reporting, parallel_rollouts_from,
-    standard_metrics_reporting, train_one_step,
-};
+use flowrl::ops::{parallel_rollouts_from, train_one_step, Reporting};
 use flowrl::policy::{ActionOutput, Gradients, Policy};
 use flowrl::rollout::{CollectMode, RolloutWorker, WorkerSet};
 use flowrl::sample_batch::SampleBatch;
@@ -43,9 +40,15 @@ struct SlowSampler {
 }
 
 impl Policy for SlowSampler {
-    fn compute_actions(&mut self, _obs: &[f32], n: usize) -> Vec<ActionOutput> {
+    fn compute_actions_into(
+        &mut self,
+        _obs: &[f32],
+        n: usize,
+        out: &mut Vec<ActionOutput>,
+    ) {
         std::thread::sleep(self.step_sleep);
-        vec![ActionOutput { action: 0, logp: 0.0, value: 0.0 }; n]
+        out.clear();
+        out.resize(n, ActionOutput { action: 0, logp: 0.0, value: 0.0 });
     }
 
     fn compute_gradients(&mut self, batch: &SampleBatch) -> Gradients {
@@ -138,7 +141,7 @@ fn measure(smoke: bool) -> Report {
         ..AutoscalerConfig::default()
     });
     let mut reports =
-        autoscaled_metrics_reporting(train_op, &set, 1, controller);
+        Reporting::new(train_op, &set, 1).autoscale(controller).build();
     let t0 = Instant::now();
     let mut reports_to_converge = 0usize;
     while set.num_live_remotes() < target {
@@ -160,7 +163,7 @@ fn measure(smoke: bool) -> Report {
     let train_op = parallel_rollouts_from(&fixed)
         .gather_async(1)
         .for_each(move |b| train(b));
-    let mut fixed_reports = standard_metrics_reporting(train_op, &fixed, 1);
+    let mut fixed_reports = Reporting::new(train_op, &fixed, 1).build();
     // Warm up the same number of reports the autoscaled run spent
     // converging, so both windows start past cold-start effects.
     for _ in 0..reports_to_converge.max(1) {

@@ -19,7 +19,7 @@
 use std::path::PathBuf;
 use std::time::Instant;
 
-use flowrl::algorithms::multi_agent::{ma_metrics_reporting, ma_worker_set};
+use flowrl::algorithms::multi_agent::ma_worker_set;
 use flowrl::algorithms::{
     multi_agent_plan, DqnConfig, MultiAgentConfig, TrainerConfig,
 };
@@ -27,7 +27,7 @@ use flowrl::iter::LocalIter;
 use flowrl::metrics::TrainResult;
 use flowrl::ops::{
     concat_batches, create_replay_shards, parallel_ma_rollouts_from, replay,
-    select_policy, store_to_replay_buffer, TrainItem,
+    select_policy, store_to_replay_buffer, Reporting, TrainItem,
 };
 
 fn smoke() -> bool {
@@ -108,7 +108,7 @@ fn ppo_alone() -> LocalIter<TrainResult> {
             }
             TrainItem::new(stats, steps)
         });
-    ma_metrics_reporting(ppo_op, &set, None)
+    Reporting::new(ppo_op, &set, 1).build()
 }
 
 /// DQN-only trainer over the multi-agent env (all agents -> "dqn").
@@ -156,7 +156,7 @@ fn dqn_alone() -> LocalIter<TrainResult> {
         flowrl::iter::UnionMode::RoundRobin { weights: None },
         Some(vec![1]),
     );
-    ma_metrics_reporting(merged, &set, None)
+    Reporting::new(merged, &set, 1).build()
 }
 
 fn main() {

@@ -1,0 +1,202 @@
+//! External-episode gateway bench: a synthetic client swarm serving
+//! its episodes through the `ops::GatewayService`, across shard counts.
+//!
+//! Two reported ops, each measured at every shard count in the sweep
+//! (1/2/4; smoke runs 1/2), with 4 client threads per shard:
+//!
+//! * `sessions_held` — peak concurrent sessions observed across the
+//!   live shards while the swarm runs (the serving tier must actually
+//!   hold the swarm, not shed it);
+//! * `p99_action_latency` — p99 of the submit→serve latency per
+//!   action, measured inside the shard tick (the time an observation
+//!   waits before its batched forward), from the shard gauges.
+//!
+//! The interesting read: p99 latency must stay bounded as the swarm
+//! and shard count grow together (per-shard batching absorbs the
+//! load), and `max_batch_fill > 1` (printed) confirms concurrent
+//! clients actually coalesce into shared forwards.
+//!
+//! Runs the dummy policy — no env, no AOT artifacts, so this bench
+//! always executes (including under `tools/ci.sh --smoke`).
+//!
+//! Run: `cargo bench --bench gateway`
+//! Smoke: `cargo bench --bench gateway -- --smoke`
+//! Record: `cargo bench --bench gateway -- --write`
+//!         (rewrites BENCH_gateway.json at the repo root)
+
+use std::sync::atomic::{AtomicBool, Ordering::Relaxed};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use flowrl::env::GatewayConfig;
+use flowrl::ops::GatewayService;
+use flowrl::policy::DummyPolicy;
+
+const OBS_DIM: usize = 8;
+const CLIENTS_PER_SHARD: usize = 4;
+const EPISODE_LEN: usize = 32;
+
+struct SwarmPoint {
+    shards: usize,
+    clients: usize,
+    peak_sessions: usize,
+    p99_us: f64,
+    actions_per_s: f64,
+    max_batch_fill: u64,
+}
+
+fn measure(shards: usize, smoke: bool) -> SwarmPoint {
+    let episodes_per_client = if smoke { 8 } else { 64 };
+    let clients = CLIENTS_PER_SHARD * shards;
+    let svc = GatewayService::new(
+        shards,
+        GatewayConfig {
+            obs_dim: OBS_DIM,
+            max_sessions: 4 * clients,
+            ..GatewayConfig::default()
+        },
+        |_slot| Box::new(DummyPolicy::new(0.01)),
+    );
+
+    let done = Arc::new(AtomicBool::new(false));
+    let t0 = Instant::now();
+    let workers: Vec<_> = (0..clients)
+        .map(|t| {
+            let svc = svc.clone();
+            std::thread::spawn(move || {
+                let obs = vec![t as f32; OBS_DIM];
+                let mut served = 0u64;
+                for _ in 0..episodes_per_client {
+                    let session = loop {
+                        match svc.connect() {
+                            Ok(s) => break s,
+                            Err(_) => std::thread::sleep(
+                                Duration::from_micros(100),
+                            ),
+                        }
+                    };
+                    for _ in 0..EPISODE_LEN {
+                        session.request_action(&obs).expect("serve");
+                        session.log_reward(1.0).expect("reward");
+                        served += 1;
+                    }
+                    session.end(Some(&obs)).expect("end");
+                }
+                served
+            })
+        })
+        .collect();
+
+    // Sample peak concurrent sessions while the swarm runs.
+    let sampler = {
+        let svc = svc.clone();
+        let done = done.clone();
+        std::thread::spawn(move || {
+            let mut peak = 0usize;
+            while !done.load(Relaxed) {
+                peak = peak.max(svc.backlog_stats().sessions);
+                std::thread::sleep(Duration::from_micros(200));
+            }
+            peak
+        })
+    };
+
+    let served: u64 = workers.into_iter().map(|h| h.join().unwrap()).sum();
+    let elapsed = t0.elapsed().as_secs_f64();
+    done.store(true, Relaxed);
+    let peak_sessions = sampler.join().unwrap();
+
+    let stats = svc.backlog_stats();
+    SwarmPoint {
+        shards,
+        clients,
+        peak_sessions,
+        p99_us: stats.p99_action_latency_us,
+        actions_per_s: served as f64 / elapsed,
+        max_batch_fill: stats.max_batch_fill,
+    }
+}
+
+fn json_report(points: &[SwarmPoint]) -> String {
+    // Mirrors the committed BENCH_gateway.json schema so `-- --write`
+    // preserves the regeneration command and targets.
+    let mut out = String::new();
+    out.push_str("{\n  \"bench\": \"gateway\",\n");
+    out.push_str("  \"units\": \"mixed\",\n");
+    out.push_str(
+        "  \"how_to_regenerate\": \"cd rust && cargo bench --bench \
+         gateway -- --write\",\n",
+    );
+    out.push_str(
+        "  \"note\": \"Synthetic client swarm (4 threads per shard, \
+         32-step episodes, dummy policy, obs_dim 8) serving through \
+         GatewayService.  sessions_held = peak concurrent sessions \
+         observed across live shards during the run; \
+         p99_action_latency = p99 submit-to-serve wait per action from \
+         the shard gauges (time queued before the batched forward).\",\n",
+    );
+    out.push_str(
+        "  \"acceptance_targets\": {\n    \"sessions_held\": \"within \
+         2x of the client-thread count at every shard count (the tier \
+         holds the swarm instead of shedding it)\",\n    \
+         \"p99_action_latency\": \"bounded as clients and shards grow \
+         together; no super-linear blowup at 4 shards vs 1\"\n  },\n",
+    );
+    out.push_str(
+        "  \"ops\": [\"sessions_held\", \"p99_action_latency\"],\n",
+    );
+    out.push_str("  \"results\": [\n");
+    for (i, p) in points.iter().enumerate() {
+        let tail = if i + 1 == points.len() { "" } else { "," };
+        out.push_str(&format!(
+            "    {{\"op\": \"sessions_held\", \"units\": \"count\", \
+             \"count\": {}, \"shards\": {}, \"clients\": {}}},\n",
+            p.peak_sessions, p.shards, p.clients
+        ));
+        out.push_str(&format!(
+            "    {{\"op\": \"p99_action_latency\", \"units\": \
+             \"us_per_op\", \"us_per_op\": {:.1}, \"shards\": {}, \
+             \"max_batch_fill\": {}}}{tail}\n",
+            p.p99_us, p.shards, p.max_batch_fill
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+fn main() {
+    let write = std::env::args().any(|a| a == "--write");
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let sweep: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4] };
+    let mut points = Vec::new();
+    println!("# gateway bench — client swarm vs serving tier");
+    println!("| shards | clients | peak sessions | p99 us | actions/s | max fill |");
+    println!("|--------|---------|---------------|--------|-----------|----------|");
+    for &n in sweep {
+        let p = measure(n, smoke);
+        println!(
+            "| {} | {} | {} | {:.1} | {:.0} | {} |",
+            p.shards,
+            p.clients,
+            p.peak_sessions,
+            p.p99_us,
+            p.actions_per_s,
+            p.max_batch_fill
+        );
+        points.push(p);
+    }
+    for p in &points {
+        assert!(p.peak_sessions >= 1, "swarm never held a session");
+        assert!(p.p99_us.is_finite() && p.p99_us >= 0.0);
+        assert!(p.actions_per_s.is_finite() && p.actions_per_s > 0.0);
+    }
+    let json = json_report(&points);
+    if write {
+        let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("../BENCH_gateway.json");
+        std::fs::write(&path, &json).expect("write BENCH_gateway.json");
+        println!("\nwrote {}", path.display());
+    } else {
+        println!("\n{json}");
+    }
+}

@@ -55,15 +55,30 @@
 //!   (`replay_idle_polls`) → the inflow is spread too thin for shards
 //!   to even reach `learning_starts` → shrink.
 //!
-//! Both loops share one hysteresis gate (deadband → confirmation
+//! A third loop drives the **gateway-shard pool** (external-episode
+//! serving behind `ops::GatewayService`), where the scaled pool is the
+//! *server* of client-owned traffic — note the shed polarity flip:
+//!
+//! * sessions per shard past `gateway_sessions_per_shard`, shard
+//!   mailboxes backing up (`gateway_queue_pressure`), or clients being
+//!   **shed** beyond `gateway_shed_tolerance` → the tier cannot admit
+//!   the offered load → grow (shed traffic is demand the pool turned
+//!   away, the opposite of the sampler loop where sheds mean the pool
+//!   over-drives its consumer), with a step proportional to the
+//!   session overshoot;
+//! * a near-empty session table with quiet mailboxes and zero sheds
+//!   (`gateway_idle_sessions`) → shrink.
+//!
+//! All loops share one hysteresis gate (deadband → confirmation
 //! streak → cooldown), so the no-flap guarantees proved for the
-//! sampler pool hold for the replay pool too.  Use one [`Autoscaler`]
-//! instance per pool: the interval tracking is keyed per pool, not per
-//! signal kind.
+//! sampler pool hold for the replay and gateway pools too.  Use one
+//! [`Autoscaler`] instance per pool: the interval tracking is keyed
+//! per pool, not per signal kind.
 
 use std::collections::HashMap;
 
 use super::{ActorStatsSnapshot, WeightCastStats};
+use crate::env::GatewayBacklogStats;
 use crate::replay::ReplayBacklogStats;
 
 /// Tuning knobs for one [`Autoscaler`].  Defaults are conservative:
@@ -108,6 +123,21 @@ pub struct AutoscalerConfig {
     /// Replay loop: this many not-ready polls per interval, with empty
     /// shard mailboxes, counts as idleness (down-pressure).
     pub replay_idle_polls: u64,
+    /// Gateway loop: live client sessions per live shard at or above
+    /// this counts as load pressure (up-pressure).
+    pub gateway_sessions_per_shard: usize,
+    /// Gateway loop: a shard interval mailbox high-water mark at or
+    /// above this counts as backlog (up-pressure).
+    pub gateway_queue_pressure: usize,
+    /// Gateway loop: admission/cast sheds per interval beyond this
+    /// count as turned-away demand (up-pressure — the polarity flip of
+    /// `shed_tolerance`: the gateway *serves* the shed party instead of
+    /// driving it).
+    pub gateway_shed_tolerance: u64,
+    /// Gateway loop: total live sessions at or below this, with quiet
+    /// mailboxes, zero sheds, and zero new connects, counts as
+    /// idleness (down-pressure).
+    pub gateway_idle_sessions: usize,
 }
 
 impl Default for AutoscalerConfig {
@@ -125,6 +155,10 @@ impl Default for AutoscalerConfig {
             replay_queue_pressure: 8,
             replay_fill_above: 0.85,
             replay_idle_polls: 8,
+            gateway_sessions_per_shard: 16,
+            gateway_queue_pressure: 8,
+            gateway_shed_tolerance: 4,
+            gateway_idle_sessions: 2,
         }
     }
 }
@@ -135,6 +169,19 @@ impl AutoscalerConfig {
     /// pool bounds differ from [`Default`]; the replay gauges and the
     /// shared hysteresis knobs keep their defaults.
     pub fn replay_defaults(min_shards: usize, max_shards: usize) -> Self {
+        let min = min_shards.max(1);
+        AutoscalerConfig {
+            min_workers: min,
+            max_workers: max_shards.max(min),
+            ..AutoscalerConfig::default()
+        }
+    }
+
+    /// Defaults for a **gateway-shard pool** controller with the given
+    /// bounds.  As with [`replay_defaults`](Self::replay_defaults),
+    /// only the pool bounds differ from [`Default`]; the gateway
+    /// gauges and the shared hysteresis knobs keep their defaults.
+    pub fn gateway_defaults(min_shards: usize, max_shards: usize) -> Self {
         let min = min_shards.max(1);
         AutoscalerConfig {
             min_workers: min,
@@ -161,6 +208,8 @@ impl AutoscalerConfig {
             "replay_fill_above must be in (0, 1], got {}",
             self.replay_fill_above
         );
+        assert!(self.gateway_sessions_per_shard >= 1);
+        assert!(self.gateway_queue_pressure >= 1);
     }
 }
 
@@ -196,6 +245,26 @@ pub struct ReplaySignals {
     pub not_ready_delta: u64,
     /// Samples yielded this interval.
     pub sample_delta: u64,
+    /// Live shards at sampling time.
+    pub live_shards: usize,
+}
+
+/// One report interval's gateway-pool control inputs, reduced from
+/// [`GatewayBacklogStats`] by [`Autoscaler::gateway_signals`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GatewaySignals {
+    /// Live client sessions across the pool (point-in-time — sessions
+    /// persist between reports).
+    pub sessions: usize,
+    /// Deepest shard mailbox observed this interval (high-water if it
+    /// moved, current depth otherwise).
+    pub queue_hwm: usize,
+    /// Clients shed this interval (admission watermark + cast
+    /// backpressure) — turned-away demand, so *up*-pressure here.
+    pub shed_delta: u64,
+    /// Sessions started this interval — a churn gauge: a near-empty
+    /// table that is still admitting clients is not idle.
+    pub started_delta: u64,
     /// Live shards at sampling time.
     pub live_shards: usize,
 }
@@ -251,6 +320,10 @@ pub struct Autoscaler {
     prev_replay_hwm: usize,
     prev_replay_not_ready: u64,
     prev_replay_samples: u64,
+    /// Gateway loop interval tracking (pool-aggregate, like replay).
+    prev_gateway_hwm: usize,
+    prev_gateway_shed: u64,
+    prev_gateway_started: u64,
     reports_since_action: u32,
     streak_dir: Option<ScaleDirection>,
     streak: u32,
@@ -279,6 +352,9 @@ impl Autoscaler {
             prev_replay_hwm: 0,
             prev_replay_not_ready: 0,
             prev_replay_samples: 0,
+            prev_gateway_hwm: 0,
+            prev_gateway_shed: 0,
+            prev_gateway_started: 0,
             streak_dir: None,
             streak: 0,
             stats: AutoscaleStats::default(),
@@ -469,6 +545,78 @@ impl Autoscaler {
         self.gate(direction, s.live_shards, step)
     }
 
+    /// Reduce gateway backlog telemetry to this interval's control
+    /// signals (the gateway-pool analogue of
+    /// [`Autoscaler::replay_signals`]): the lifetime-HWM trick for the
+    /// mailbox gauge, `saturating_sub` deltas for the monotone shed and
+    /// started counters, point-in-time session count passed through.
+    pub fn gateway_signals(
+        &mut self,
+        stats: &GatewayBacklogStats,
+    ) -> GatewaySignals {
+        let queue_hwm = if stats.max_queue_hwm > self.prev_gateway_hwm {
+            stats.max_queue_hwm
+        } else {
+            stats.max_queue_len
+        };
+        // Straight assignment for the same reason as the replay loop:
+        // shard churn can lower the pool-wide lifetime HWM.
+        self.prev_gateway_hwm = stats.max_queue_hwm;
+        let shed_delta =
+            stats.shed.saturating_sub(self.prev_gateway_shed);
+        self.prev_gateway_shed = stats.shed;
+        let started_delta =
+            stats.started.saturating_sub(self.prev_gateway_started);
+        self.prev_gateway_started = stats.started;
+        GatewaySignals {
+            sessions: stats.sessions,
+            queue_hwm,
+            shed_delta,
+            started_delta,
+            live_shards: stats.live_shards,
+        }
+    }
+
+    /// One control step for the gateway-shard pool.  Up-pressure is
+    /// session load (`gateway_sessions_per_shard` live sessions per
+    /// shard), mailbox backlog (`gateway_queue_pressure`), or clients
+    /// being shed past `gateway_shed_tolerance` — shed traffic is
+    /// demand the tier turned away, so unlike the sampler loop it
+    /// argues for *more* capacity.  Down-pressure is a near-empty
+    /// session table (`gateway_idle_sessions`) with quiet mailboxes,
+    /// zero sheds, and zero new connects.  The up step is proportional
+    /// to the session overshoot and funnels through
+    /// [`gate`](Self::decide)'s shared hysteresis.
+    pub fn decide_gateway(
+        &mut self,
+        s: &GatewaySignals,
+    ) -> Option<ScaleDirective> {
+        let capacity =
+            self.cfg.gateway_sessions_per_shard * s.live_shards.max(1);
+        let loaded = s.sessions >= capacity;
+        let backlogged = s.queue_hwm >= self.cfg.gateway_queue_pressure;
+        let shedding = s.shed_delta > self.cfg.gateway_shed_tolerance;
+        let idle = s.sessions <= self.cfg.gateway_idle_sessions
+            && s.queue_hwm == 0
+            && s.shed_delta == 0
+            && s.started_delta == 0;
+        let direction = if (loaded || backlogged || shedding)
+            && s.live_shards < self.cfg.max_workers
+        {
+            Some(ScaleDirection::Up)
+        } else if idle && s.live_shards > self.cfg.min_workers {
+            Some(ScaleDirection::Down)
+        } else {
+            None
+        };
+        let step = if loaded {
+            self.cfg.step * (s.sessions / capacity).max(1)
+        } else {
+            self.cfg.step
+        };
+        self.gate(direction, s.live_shards, step)
+    }
+
     /// The shared hysteresis gate: deadband reset, confirmation
     /// streak, post-action cooldown, then bound-clamped target — the
     /// tail every control loop funnels through, so each `decide*`
@@ -539,6 +687,10 @@ mod tests {
             replay_queue_pressure: 8,
             replay_fill_above: 0.85,
             replay_idle_polls: 8,
+            gateway_sessions_per_shard: 16,
+            gateway_queue_pressure: 8,
+            gateway_shed_tolerance: 4,
+            gateway_idle_sessions: 2,
         }
     }
 
@@ -854,6 +1006,133 @@ mod tests {
         assert_eq!(s2.queue_hwm, 2);
         assert_eq!(s2.sample_delta, 15);
         assert_eq!(s2.not_ready_delta, 0);
+    }
+
+    fn gsig(sessions: usize, live: usize) -> GatewaySignals {
+        GatewaySignals {
+            sessions,
+            queue_hwm: 0,
+            shed_delta: 0,
+            started_delta: 1,
+            live_shards: live,
+        }
+    }
+
+    #[test]
+    fn gateway_session_load_grows_pool() {
+        // 16 sessions/shard capacity, 2 shards: 32 live sessions hit
+        // the watermark exactly.
+        let mut a = Autoscaler::new(cfg());
+        let d = a.decide_gateway(&gsig(32, 2)).expect("load must act");
+        assert_eq!(d.direction, ScaleDirection::Up);
+        assert_eq!(d.target, 3);
+    }
+
+    #[test]
+    fn gateway_session_overshoot_scales_step_proportionally() {
+        // 96 sessions on 2 shards = 3x the 32-session capacity: one
+        // action adds 3 shards instead of crawling through cooldowns.
+        let mut a = Autoscaler::new(AutoscalerConfig {
+            max_workers: 8,
+            ..cfg()
+        });
+        assert_eq!(a.decide_gateway(&gsig(96, 2)).unwrap().target, 5);
+        // Clamp still applies.
+        let mut a = Autoscaler::new(cfg());
+        assert_eq!(a.decide_gateway(&gsig(500, 2)).unwrap().target, 4);
+    }
+
+    #[test]
+    fn gateway_shed_storm_grows_pool() {
+        // Shed polarity flip: turned-away clients grow the gateway
+        // tier (the sampler loop shrinks on sheds).
+        let mut a = Autoscaler::new(cfg());
+        let mut s = gsig(4, 2);
+        s.shed_delta = 9;
+        let d = a.decide_gateway(&s).expect("shed storm must act");
+        assert_eq!(d.direction, ScaleDirection::Up);
+        // Mailbox backlog counts the same way.
+        let mut a = Autoscaler::new(cfg());
+        let mut s = gsig(4, 2);
+        s.queue_hwm = 8;
+        assert_eq!(
+            a.decide_gateway(&s).unwrap().direction,
+            ScaleDirection::Up
+        );
+    }
+
+    #[test]
+    fn gateway_idleness_shrinks_and_churn_vetoes() {
+        let mut a = Autoscaler::new(cfg());
+        let mut s = gsig(1, 3);
+        s.started_delta = 0;
+        let d = a.decide_gateway(&s).expect("idle pool must shrink");
+        assert_eq!(d.direction, ScaleDirection::Down);
+        assert_eq!(d.target, 2);
+        // At min_workers idleness holds instead of acting.
+        s.live_shards = 1;
+        assert_eq!(a.decide_gateway(&s), None);
+        // A table still admitting clients is not idle, however empty.
+        let mut a = Autoscaler::new(cfg());
+        assert_eq!(a.decide_gateway(&gsig(1, 3)), None);
+        assert_eq!(a.stats().held_deadband, 1);
+    }
+
+    #[test]
+    fn gateway_oscillation_does_not_flap() {
+        // Load and idleness alternating every report with a 2-report
+        // confirmation streak: no action, ever — same gate, same
+        // no-flap guarantee as the other two loops.
+        let mut a = Autoscaler::new(AutoscalerConfig {
+            confirm_reports: 2,
+            ..cfg()
+        });
+        for k in 0..40 {
+            let s = if k % 2 == 0 {
+                gsig(64, 2)
+            } else {
+                let mut s = gsig(0, 2);
+                s.started_delta = 0;
+                s
+            };
+            assert_eq!(
+                a.decide_gateway(&s),
+                None,
+                "gateway oscillation acted at report {k}"
+            );
+        }
+        assert_eq!(a.stats().decisions_up + a.stats().decisions_down, 0);
+    }
+
+    #[test]
+    fn gateway_signals_diff_backlog_stats_per_interval() {
+        let mut a = Autoscaler::new(cfg());
+        let stats1 = GatewayBacklogStats {
+            live_shards: 2,
+            sessions: 5,
+            max_queue_len: 1,
+            max_queue_hwm: 6,
+            started: 10,
+            shed: 3,
+            ..Default::default()
+        };
+        let s1 = a.gateway_signals(&stats1);
+        assert_eq!(s1.queue_hwm, 6, "first interval = lifetime HWM");
+        assert_eq!(s1.sessions, 5);
+        assert_eq!(s1.shed_delta, 3);
+        assert_eq!(s1.started_delta, 10);
+        // HWM unmoved next interval: current depth bounds it; the
+        // monotone counters reduce to deltas.
+        let stats2 = GatewayBacklogStats {
+            max_queue_len: 2,
+            started: 14,
+            shed: 3,
+            ..stats1
+        };
+        let s2 = a.gateway_signals(&stats2);
+        assert_eq!(s2.queue_hwm, 2);
+        assert_eq!(s2.started_delta, 4);
+        assert_eq!(s2.shed_delta, 0);
     }
 
     #[test]

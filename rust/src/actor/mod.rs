@@ -44,7 +44,7 @@ mod telemetry;
 
 pub use autoscaler::{
     Autoscaler, AutoscalerConfig, AutoscaleSignals, AutoscaleStats,
-    ReplaySignals, ScaleDirection, ScaleDirective,
+    GatewaySignals, ReplaySignals, ScaleDirection, ScaleDirective,
 };
 pub use faults::{FaultAction, FaultCounters, FaultStats};
 pub use mailbox::{TryCastError, DEFAULT_MAILBOX_CAPACITY};

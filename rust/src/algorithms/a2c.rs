@@ -8,7 +8,7 @@
 use crate::iter::LocalIter;
 use crate::metrics::TrainResult;
 use crate::ops::{
-    exact_batches, parallel_rollouts_from, standard_metrics_reporting,
+    exact_batches, parallel_rollouts_from, Reporting,
     train_one_step,
 };
 use crate::policy::PgLossKind;
@@ -41,5 +41,5 @@ pub fn a2c_plan(config: &TrainerConfig) -> LocalIter<TrainResult> {
     // fetches.
     let train_op = rollouts.for_each(train_one_step(&workers));
 
-    standard_metrics_reporting(train_op, &workers, 1)
+    Reporting::new(train_op, &workers, 1).build()
 }

@@ -13,7 +13,7 @@ use crate::iter::LocalIter;
 use crate::metrics::TrainResult;
 use crate::ops::{
     apply_gradients, compute_gradients, parallel_rollouts_from,
-    standard_metrics_reporting,
+    Reporting,
 };
 use crate::policy::PgLossKind;
 use crate::rollout::CollectMode;
@@ -41,5 +41,5 @@ pub fn a3c_plan(config: &TrainerConfig) -> LocalIter<TrainResult> {
 
     let apply_op = grads.for_each(apply_gradients(workers.local.clone()));
 
-    standard_metrics_reporting(apply_op, &workers, 1)
+    Reporting::new(apply_op, &workers, 1).build()
 }

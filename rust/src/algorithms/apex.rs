@@ -27,7 +27,7 @@ use crate::iter::{concurrently, LocalIter, UnionMode};
 use crate::metrics::TrainResult;
 use crate::ops::{
     create_replay_shards, parallel_rollouts_from, replay,
-    replay_metrics_reporting, store_to_replay_buffer, update_target_network,
+    store_to_replay_buffer, update_target_network, Reporting,
     TrainItem,
 };
 
@@ -151,5 +151,7 @@ pub fn apex_plan(
             config.max_replay_shards,
         ))
     });
-    replay_metrics_reporting(merged, &workers, 1, None, &service, controller)
+    Reporting::new(merged, &workers, 1)
+        .replay(&service, controller)
+        .build()
 }

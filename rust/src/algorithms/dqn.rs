@@ -16,7 +16,7 @@ use crate::iter::{concurrently, LocalIter, UnionMode};
 use crate::metrics::TrainResult;
 use crate::ops::{
     create_replay_shards, parallel_rollouts_from, replay,
-    standard_metrics_reporting, store_to_replay_buffer, update_target_network,
+    store_to_replay_buffer, update_target_network, Reporting,
     ReplayLease, TrainItem,
 };
 use crate::rollout::WorkerSet;
@@ -84,7 +84,7 @@ pub fn dqn_plan(
         Some(vec![1]),
     );
 
-    standard_metrics_reporting(dqn_op, &workers, 1)
+    Reporting::new(dqn_op, &workers, 1).build()
 }
 
 /// The learner closure shared by DQN and Ape-X: learn on the local

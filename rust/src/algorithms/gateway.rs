@@ -1,0 +1,341 @@
+//! Train-from-gateway — DQN fed by **client-owned** environments.
+//!
+//! The inversion of every other plan in this module: instead of the
+//! trainer stepping its own envs through `ParallelRollouts`, external
+//! clients run their episodes through an elastic
+//! [`GatewayService`](crate::ops::GatewayService) and the trainer
+//! consumes whatever experience those served episodes leave behind:
+//!
+//! ```text
+//! clients -> GatewayService (batched serving, ε-ladder shards)
+//! store_op  = GatewayExperience(gw).for_each(StoreToReplayBuffer)
+//! replay_op = Replay(service).for_each(learn + push_weights(gw))
+//!                            .for_each(UpdateTargetNetwork)
+//! plan      = Union(store_op, replay_op)   # async union
+//! ```
+//!
+//! Differences from [`dqn_plan`](super::dqn_plan) / Ape-X that fall
+//! out of the client-owned-env topology:
+//!
+//! * **The learner is a standalone actor**, not a `WorkerSet` local
+//!   slot: there is no rollout pool at all.  Reporting runs over the
+//!   *gateway* set instead, so episode metrics are the episodes real
+//!   clients completed.
+//! * **Weight sync is [`GatewayService::push_weights`]**, not a
+//!   `WeightCaster` broadcast: pushes are staleness-keyed (every
+//!   [`GatewayDqnConfig::max_weight_staleness`] *trained* steps) and
+//!   non-blocking — a busy shard keeps serving on its current weights
+//!   and catches the next push.
+//! * **Exploration lives at the serving edge**: gateway shards get the
+//!   Ape-X epsilon ladder, so the experience mix is exploration-graded
+//!   across shards while the learner stays greedy.
+//! * Both elastic tiers close their loops through one
+//!   [`Reporting`] tail: the replay pool on backlog signals and the
+//!   gateway pool on session/queue/shed pressure
+//!   (`AutoscalerConfig::gateway_defaults`).
+
+use std::sync::Arc;
+
+use crate::actor::{ActorHandle, Autoscaler, AutoscalerConfig};
+use crate::env::GatewayConfig;
+use crate::iter::{concurrently, LocalIter, UnionMode};
+use crate::metrics::TrainResult;
+use crate::ops::{
+    create_replay_shards, gateway_experience, replay,
+    store_to_replay_buffer, update_target_network, GatewayService,
+    Reporting, TrainItem,
+};
+use crate::policy::{DqnPolicy, DummyPolicy, Policy};
+use crate::rollout::{CollectMode, RolloutWorker};
+
+use super::{DqnConfig, EnvKind, TrainerConfig};
+
+/// Knobs for the train-from-gateway plan.
+#[derive(Debug, Clone)]
+pub struct GatewayDqnConfig {
+    pub dqn: DqnConfig,
+    /// Gateway shards to start with.
+    pub num_gateway_shards: usize,
+    /// Autoscaler floor for the gateway pool.
+    pub min_gateway_shards: usize,
+    /// Autoscaler ceiling for the gateway pool.
+    pub max_gateway_shards: usize,
+    /// Per-shard session-table knobs.  `obs_dim` is overridden from
+    /// the learner's env — clients must submit observations of that
+    /// width.
+    pub gateway: GatewayConfig,
+    /// Push fresh weights to the gateway shards once the learner has
+    /// trained this many steps since the last push (the serving-side
+    /// staleness bound).
+    pub max_weight_staleness: usize,
+    /// `Replay` in-flight depth per replay shard.
+    pub replay_queue_depth: usize,
+    /// Drive the gateway pool with a backlog autoscaler.
+    pub autoscale_gateway: bool,
+    /// Drive the replay pool with a backlog autoscaler.
+    pub autoscale_replay: bool,
+}
+
+impl Default for GatewayDqnConfig {
+    fn default() -> Self {
+        GatewayDqnConfig {
+            dqn: DqnConfig::default(),
+            num_gateway_shards: 2,
+            min_gateway_shards: 1,
+            max_gateway_shards: 4,
+            gateway: GatewayConfig::default(),
+            max_weight_staleness: 400,
+            replay_queue_depth: 2,
+            autoscale_gateway: true,
+            autoscale_replay: false,
+        }
+    }
+}
+
+/// Build the train-from-gateway plan.  Returns the [`GatewayService`]
+/// handle — clients `connect()` on it to serve their episodes — plus
+/// the report stream; the plan only makes learning progress while
+/// clients actually play.
+pub fn gateway_dqn_plan(
+    config: &TrainerConfig,
+    gcfg: &GatewayDqnConfig,
+) -> (GatewayService, LocalIter<TrainResult>) {
+    // Greedy learner on its own actor (no rollout pool exists here;
+    // its envs only define the observation space).
+    let learner = {
+        let cfg = config.clone();
+        ActorHandle::spawn("gateway-learner", move || {
+            let policy: Box<dyn Policy> = if cfg.env == EnvKind::Dummy {
+                Box::new(DummyPolicy::new(cfg.lr))
+            } else {
+                Box::new(DqnPolicy::create(
+                    &cfg.artifacts_dir,
+                    cfg.lr,
+                    0.0,
+                    cfg.seed,
+                ))
+            };
+            RolloutWorker::new(
+                cfg.make_envs(0),
+                policy,
+                cfg.rollout_fragment_length,
+                CollectMode::Transitions,
+            )
+        })
+    };
+    let obs_dim =
+        learner.call(|w| w.obs_dim()).expect("gateway learner died");
+
+    // Serving tier: epsilon-ladder shards (slot `usize::MAX` is the
+    // set's zero-traffic sentinel — greedy, never routed to).
+    let n_shards = gcfg.num_gateway_shards.max(1);
+    let service = {
+        let cfg = config.clone();
+        GatewayService::new(
+            n_shards,
+            GatewayConfig { obs_dim, ..gcfg.gateway.clone() },
+            move |slot| -> Box<dyn Policy> {
+                if cfg.env == EnvKind::Dummy {
+                    return Box::new(DummyPolicy::new(cfg.lr));
+                }
+                let epsilon = if slot == usize::MAX {
+                    0.0
+                } else {
+                    0.4f64.powf(
+                        1.0 + 7.0 * slot as f64
+                            / (n_shards.max(2) - 1) as f64,
+                    )
+                };
+                let seed = cfg
+                    .seed
+                    .wrapping_add((slot as u64).wrapping_add(1_000));
+                Box::new(DqnPolicy::create(
+                    &cfg.artifacts_dir,
+                    cfg.lr,
+                    epsilon,
+                    seed,
+                ))
+            },
+        )
+    };
+
+    let replay_service = create_replay_shards(
+        config.min_replay_shards.max(1),
+        obs_dim,
+        gcfg.dqn.buffer_capacity,
+        gcfg.dqn.learning_starts,
+        64,
+    );
+
+    // (1) Drain served-episode fragments off the gateway shards into
+    // the replay tier.  Quiet gateways yield `None` after a backoff,
+    // so the union never deadlocks on an idle serving edge.
+    let store_op = {
+        let mut store = store_to_replay_buffer(&replay_service);
+        gateway_experience(&service, config.num_async).for_each(
+            move |maybe| {
+                if let Some(batch) = maybe {
+                    store(batch);
+                }
+                TrainItem::default()
+            },
+        )
+    };
+
+    // (2) Replay -> learn -> priorities back through the lease ->
+    // staleness-keyed weight pushes to the serving edge.
+    let replay_op = {
+        let local = learner.clone();
+        let push_to = service.clone();
+        let staleness = gcfg.max_weight_staleness.max(1);
+        let mut stale_steps = 0usize;
+        replay(&replay_service, gcfg.replay_queue_depth)
+            .for_each(move |item| {
+                let Some((sample, lease)) = item else {
+                    return TrainItem::default();
+                };
+                let steps = sample.batch.len();
+                let indices = sample.indices;
+                let batch = sample.batch;
+                let (stats, td) = local
+                    .call(move |w| w.learn_and_td(&batch))
+                    .expect("gateway learner actor died");
+                lease.update_priorities(indices, td);
+                stale_steps += steps;
+                if stale_steps >= staleness {
+                    stale_steps = 0;
+                    let weights: Arc<[f32]> = local
+                        .call(|w| w.get_weights())
+                        .expect("gateway learner actor died")
+                        .into();
+                    push_to.push_weights(weights);
+                }
+                TrainItem::new(stats, steps)
+            })
+            .for_each(update_target_network(
+                learner.clone(),
+                gcfg.dqn.target_update_every,
+            ))
+    };
+
+    // Async union: storing never waits on learning and vice versa;
+    // only the training subflow's items surface.
+    let merged = concurrently(
+        vec![store_op, replay_op],
+        UnionMode::Async { buffer: 4 },
+        Some(vec![1]),
+    );
+
+    let gateway_ctl = gcfg.autoscale_gateway.then(|| {
+        Autoscaler::new(AutoscalerConfig::gateway_defaults(
+            gcfg.min_gateway_shards,
+            gcfg.max_gateway_shards,
+        ))
+    });
+    let replay_ctl = gcfg.autoscale_replay.then(|| {
+        Autoscaler::new(AutoscalerConfig::replay_defaults(
+            config.min_replay_shards,
+            config.max_replay_shards,
+        ))
+    });
+
+    // Report over the *gateway* set: episode metrics are the episodes
+    // clients completed through the serving edge.
+    let reports = Reporting::new(merged, service.set(), 1)
+        .replay(&replay_service, replay_ctl)
+        .gateway(&service, gateway_ctl)
+        .build();
+    (service, reports)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dummy_config() -> TrainerConfig {
+        TrainerConfig {
+            num_workers: 1,
+            num_envs_per_worker: 2,
+            rollout_fragment_length: 8,
+            env: EnvKind::Dummy,
+            ..TrainerConfig::default()
+        }
+    }
+
+    /// Clients play through the gateway; the plan stores their
+    /// experience, learns, and reports gateway telemetry.
+    #[test]
+    fn trains_from_client_episodes() {
+        let cfg = dummy_config();
+        let gcfg = GatewayDqnConfig {
+            dqn: DqnConfig {
+                buffer_capacity: 4096,
+                learning_starts: 32,
+                ..DqnConfig::default()
+            },
+            num_gateway_shards: 2,
+            gateway: GatewayConfig {
+                fragment: 16,
+                ..GatewayConfig::default()
+            },
+            max_weight_staleness: 64,
+            autoscale_gateway: false,
+            ..GatewayDqnConfig::default()
+        };
+        let (service, mut plan) = gateway_dqn_plan(&cfg, &gcfg);
+
+        // A background client swarm: 4 threads, episodes of 20 steps.
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                let svc = service.clone();
+                let stop = stop.clone();
+                std::thread::spawn(move || {
+                    let obs = vec![0.25f32 * t as f32; 4];
+                    while !stop.load(std::sync::atomic::Ordering::Relaxed)
+                    {
+                        let Ok(session) = svc.connect() else {
+                            std::thread::sleep(
+                                std::time::Duration::from_millis(1),
+                            );
+                            continue;
+                        };
+                        for _ in 0..20 {
+                            if session.request_action(&obs).is_err() {
+                                break;
+                            }
+                            let _ = session.log_reward(1.0);
+                        }
+                        let _ = session.end(Some(&obs));
+                    }
+                })
+            })
+            .collect();
+
+        let mut saw_gateway = false;
+        let mut steps_trained = 0u64;
+        for _ in 0..40 {
+            let r = plan.next().expect("plan ended");
+            if let Some(gw) = &r.gateway {
+                saw_gateway = true;
+                assert!(gw.live_shards >= 1);
+            }
+            steps_trained = r.num_env_steps_trained;
+            if steps_trained > 0 {
+                break;
+            }
+        }
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(saw_gateway, "reports never carried gateway telemetry");
+        assert!(
+            steps_trained > 0,
+            "learner never trained on client experience"
+        );
+        let stats = service.backlog_stats();
+        assert!(stats.completed > 0, "no client episode completed");
+        assert!(stats.transitions > 0, "no transitions drained");
+    }
+}

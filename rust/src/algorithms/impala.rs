@@ -12,7 +12,7 @@
 use crate::iter::LocalIter;
 use crate::metrics::TrainResult;
 use crate::ops::{
-    parallel_rollouts_from, standard_metrics_reporting, TrainItem,
+    parallel_rollouts_from, Reporting, TrainItem,
 };
 use crate::policy::{ImpalaBatch, PgLossKind};
 use crate::rollout::CollectMode;
@@ -121,7 +121,7 @@ pub fn impala_plan(config: &TrainerConfig) -> LocalIter<TrainResult> {
             TrainItem::new(stats, steps)
         });
 
-    standard_metrics_reporting(train_op, &workers, 1)
+    Reporting::new(train_op, &workers, 1).build()
 }
 
 #[cfg(test)]

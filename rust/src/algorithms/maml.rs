@@ -14,7 +14,7 @@
 
 use crate::iter::LocalIter;
 use crate::metrics::TrainResult;
-use crate::ops::{standard_metrics_reporting, TrainItem};
+use crate::ops::{Reporting, TrainItem};
 use crate::iter::ParIter;
 use crate::policy::{Gradients, PgLossKind};
 use crate::rollout::CollectMode;
@@ -90,7 +90,7 @@ pub fn maml_plan(
         TrainItem::new(stats, steps)
     });
 
-    standard_metrics_reporting(meta_update, &workers, 1)
+    Reporting::new(meta_update, &workers, 1).build()
 }
 
 /// Average flat gradients across tasks (stats averaged too).

@@ -10,6 +10,7 @@ pub mod a2c;
 pub mod a3c;
 pub mod apex;
 pub mod dqn;
+pub mod gateway;
 pub mod impala;
 pub mod maml;
 pub mod multi_agent;
@@ -19,6 +20,7 @@ pub use a2c::a2c_plan;
 pub use a3c::a3c_plan;
 pub use apex::{apex_plan, ApexConfig};
 pub use dqn::{dqn_plan, DqnConfig};
+pub use gateway::{gateway_dqn_plan, GatewayDqnConfig};
 pub use impala::{assemble_time_major, assemble_time_major_into, impala_plan};
 pub use maml::{maml_plan, MamlConfig};
 pub use multi_agent::{

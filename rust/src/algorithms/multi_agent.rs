@@ -32,13 +32,13 @@ use crate::actor::{
 };
 use crate::env::MultiAgentCartPole;
 use crate::iter::{concurrently, LocalIter, UnionMode};
-use crate::metrics::{MetricsHub, TrainResult};
+use crate::metrics::TrainResult;
 use crate::ops::{
     concat_batches, create_replay_shards, parallel_ma_rollouts_from, replay,
-    select_policy, store_to_replay_buffer, TrainItem,
+    select_policy, store_to_replay_buffer, Reporting, TrainItem,
 };
 use crate::policy::{DqnPolicy, PgLossKind, PgPolicy, Policy};
-use crate::rollout::{MultiAgentRolloutWorker, WorkerMetrics, WorkerSet};
+use crate::rollout::{MultiAgentRolloutWorker, WorkerSet};
 
 use super::dqn::DqnConfig;
 use super::TrainerConfig;
@@ -306,7 +306,7 @@ pub fn multi_agent_plan_on(
         None,
     );
 
-    ma_metrics_reporting(merged, set, None)
+    Reporting::new(merged, set, 1).build()
 }
 
 fn prefix_stats(
@@ -319,54 +319,25 @@ fn prefix_stats(
         .collect()
 }
 
-/// Metrics reporting over a multi-agent [`WorkerSet`] — the same
-/// reporting tail as `standard_metrics_reporting` (shared via
-/// `ops::drain_and_snapshot`, so dead-worker handling and telemetry
-/// attachment cannot drift), minus the items-per-report batching.
-/// Workers are resolved through the set's shard registry at every
-/// report, so restarted/added workers are drained from the first report
-/// after they join.  Pass an [`Autoscaler`] to close the elasticity
-/// loop (the controller's directives drive `WorkerSet::scale_to`; no
-/// weight-cast shed signal is fed, since multi-agent sets broadcast
-/// through per-policy casters).
+/// Deprecated shim over [`ops::Reporting`](crate::ops::Reporting),
+/// which is generic over the worker type and reports a multi-agent
+/// [`WorkerSet`] through the exact same tail as a single-agent one
+/// (per-policy caster sets attach no `weight_casts` section — a sole
+/// `WeightCastStats` would misattribute independent lanes — so a
+/// controller's shed gauge stays idle, as before).
+#[deprecated(
+    since = "0.8.0",
+    note = "use ops::Reporting::new(inner, set, 1) (+ .autoscale(..)) \
+            .build()"
+)]
 pub fn ma_metrics_reporting(
     inner: LocalIter<TrainItem>,
     set: &WorkerSet<MultiAgentRolloutWorker>,
     autoscaler: Option<Autoscaler>,
 ) -> LocalIter<TrainResult> {
-    let mut inner = inner;
-    let mut hub = MetricsHub::new(100);
-    let local = set.local.clone();
-    let registry = set.registry().clone();
-    let scale = set.scale_counters();
-    let set = set.clone();
-    let mut autoscaler = autoscaler;
-    LocalIter::from_fn(move || {
-        let item = inner.next()?;
-        hub.num_env_steps_trained += item.steps_trained as u64;
-        hub.num_grad_updates += 1;
-        for (k, v) in item.stats {
-            hub.record_learner_stat(&k, v);
-        }
-        let handles = registry.handles();
-        let mut snap = crate::ops::drain_and_snapshot(
-            &mut hub,
-            &local,
-            &handles,
-            |w| w.drain_metrics(),
-        );
-        if let Some(a) = autoscaler.as_mut() {
-            // snap.weight_casts is None on this path (per-policy
-            // casters), so the controller's shed gauge stays idle.
-            crate::ops::drive_autoscaler(
-                a,
-                &mut snap,
-                &set,
-                local.id(),
-                &handles,
-            );
-        }
-        snap.scale = Some(scale.stats(registry.num_live(), registry.len()));
-        Some(snap)
-    })
+    let mut r = Reporting::new(inner, set, 1);
+    if let Some(a) = autoscaler {
+        r = r.autoscale(a);
+    }
+    r.build()
 }

@@ -11,7 +11,7 @@
 use crate::iter::LocalIter;
 use crate::metrics::TrainResult;
 use crate::ops::{
-    concat_batches, parallel_rollouts_from, standard_metrics_reporting,
+    concat_batches, parallel_rollouts_from, Reporting,
     train_one_step,
 };
 use crate::policy::PgLossKind;
@@ -40,5 +40,5 @@ pub fn ppo_plan_with_epochs(
 
     let train_op = rollouts.for_each(train_one_step(&workers));
 
-    standard_metrics_reporting(train_op, &workers, 1)
+    Reporting::new(train_op, &workers, 1).build()
 }

@@ -66,12 +66,7 @@ impl CartPole {
         &self.params
     }
 
-    fn obs(&self) -> Vec<f32> {
-        self.state.to_vec()
-    }
-
-    /// Advance the physics one step; returns (reward, done).  Shared by
-    /// the allocating [`Env::step`] and in-place [`Env::step_into`].
+    /// Advance the physics one step; returns (reward, done).
     fn advance(&mut self, action: i32) -> (f32, bool) {
         assert!(!self.done, "step() called on a done episode; call reset()");
         let p = &self.params;
@@ -113,20 +108,6 @@ impl Env for CartPole {
 
     fn num_actions(&self) -> usize {
         2
-    }
-
-    fn reset(&mut self) -> Vec<f32> {
-        for s in &mut self.state {
-            *s = self.rng.uniform_range(-0.05, 0.05);
-        }
-        self.steps = 0;
-        self.done = false;
-        self.obs()
-    }
-
-    fn step(&mut self, action: i32) -> (Vec<f32>, f32, bool) {
-        let (reward, done) = self.advance(action);
-        (self.obs(), reward, done)
     }
 
     fn reset_into(&mut self, obs_out: &mut [f32]) {
@@ -188,12 +169,6 @@ impl Env for TaskCartPole {
     }
     fn num_actions(&self) -> usize {
         self.inner.num_actions()
-    }
-    fn reset(&mut self) -> Vec<f32> {
-        self.inner.reset()
-    }
-    fn step(&mut self, action: i32) -> (Vec<f32>, f32, bool) {
-        self.inner.step(action)
     }
     fn reset_into(&mut self, obs_out: &mut [f32]) {
         self.inner.reset_into(obs_out)

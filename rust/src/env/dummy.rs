@@ -26,16 +26,6 @@ impl Env for DummyEnv {
         2
     }
 
-    fn reset(&mut self) -> Vec<f32> {
-        self.steps = 0;
-        vec![0.0; self.obs_dim]
-    }
-
-    fn step(&mut self, _action: i32) -> (Vec<f32>, f32, bool) {
-        self.steps += 1;
-        (vec![0.0; self.obs_dim], 1.0, self.steps >= self.episode_len)
-    }
-
     fn reset_into(&mut self, obs_out: &mut [f32]) {
         self.steps = 0;
         obs_out.fill(0.0);

@@ -1,0 +1,768 @@
+//! External-episode gateway: serve policies to **client-owned envs**.
+//!
+//! RLlib's production deployment mode is "externally connected
+//! simulators": the environment lives outside the trainer (a game
+//! client, a web service, a robot), and calls in for actions.  The
+//! [`EpisodeGateway`] is the session table at the heart of that front
+//! end — a fixed-capacity table of concurrent client episodes, each
+//! driven by the protocol
+//!
+//! ```text
+//! start_episode -> (submit_obs -> take_action -> log_reward)* -> end_episode
+//! ```
+//!
+//! The gateway's job is **multiplexing onto the batched-inference
+//! path**: pending action requests from many sessions are coalesced
+//! into one flat `[N, obs_dim]` buffer and served by a single
+//! [`Policy::compute_actions_into`] forward per [`EpisodeGateway::tick`]
+//! — one forward per *tick*, not one per client.  That is the same
+//! amortization the vectorized rollout loop gets, applied to traffic
+//! the trainer does not control.
+//!
+//! Three pieces of load discipline live here (the actor/service layer
+//! in `ops::gateway_ops` adds mailbox backpressure on top):
+//!
+//! * **Admission control** — `start_episode` sheds new sessions once
+//!   the table holds `max_sessions` live episodes (counted, so the
+//!   autoscaler can react to sustained shedding).
+//! * **Deadline reaping** — every session carries an idle deadline;
+//!   [`EpisodeGateway::reap_idle`] writes off clients silent past it
+//!   through a per-session forgiveness ledger (the deadline-supervision
+//!   idiom): one missed deadline earns a strike, `forgiveness + 1`
+//!   strikes reap the session and free its slot.  Any client activity
+//!   clears the ledger.
+//! * **Stale-session fencing** — a [`SessionId`] embeds a nonce, so a
+//!   client holding a reaped (and possibly reused) slot gets
+//!   [`SessionError::Expired`], never another client's episode.
+//!
+//! Completed episodes surface as [`crate::metrics::EpisodeRecord`]s,
+//! and — because the gateway sees (obs, action, reward, next_obs)
+//! per transition — every served episode is also *experience*:
+//! transitions accumulate in a fragment builder drained by the
+//! train-from-gateway plan (`algorithms::external`) into the replay
+//! service.
+
+use crate::metrics::EpisodeRecord;
+use crate::policy::{ActionOutput, Policy};
+use crate::sample_batch::{SampleBatch, SampleBatchBuilder};
+
+/// Knobs of one gateway shard's session table.
+#[derive(Debug, Clone)]
+pub struct GatewayConfig {
+    /// Observation dimensionality every session must submit.
+    pub obs_dim: usize,
+    /// Admission watermark: live sessions at or above this shed new
+    /// `start_episode` calls.
+    pub max_sessions: usize,
+    /// Idle deadline in nanoseconds: a session with no client activity
+    /// for this long earns a strike on each `reap_idle` pass.
+    pub idle_deadline_ns: u64,
+    /// Missed deadlines forgiven before a session is reaped.  0 = reap
+    /// on the first strike.
+    pub forgiveness: u32,
+    /// Transitions per experience fragment drained to the trainer.
+    pub fragment: usize,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> Self {
+        GatewayConfig {
+            obs_dim: 4,
+            max_sessions: 1024,
+            idle_deadline_ns: 5_000_000_000, // 5s
+            forgiveness: 1,
+            fragment: 64,
+        }
+    }
+}
+
+/// Handle to one live episode: table slot + a nonce fencing reuse.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SessionId {
+    pub slot: u32,
+    pub nonce: u32,
+}
+
+/// Why a gateway call failed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SessionError {
+    /// Admission control: the table is at its watermark.
+    Shed,
+    /// The session was reaped (idle past deadline) or already ended —
+    /// or the slot was since reused by another client (nonce mismatch).
+    Expired,
+    /// Protocol misuse: e.g. `submit_obs` while an action is already
+    /// pending, or `take_action` before any obs was submitted.
+    Protocol(&'static str),
+}
+
+impl std::fmt::Display for SessionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SessionError::Shed => write!(f, "session shed by admission control"),
+            SessionError::Expired => write!(f, "session expired"),
+            SessionError::Protocol(what) => {
+                write!(f, "session protocol violation: {what}")
+            }
+        }
+    }
+}
+
+/// Where one session sits in the request/serve cycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    /// Waiting for the client's (first or next) observation.
+    AwaitingObs,
+    /// Observation queued for the next batched forward.
+    Pending,
+    /// Action computed; waiting for the client to take it.
+    ActionReady,
+}
+
+struct Session {
+    nonce: u32,
+    phase: Phase,
+    /// The observation submitted for the pending/served forward; after
+    /// the action is taken it becomes the transition's "current obs".
+    obs: Vec<f32>,
+    /// The action served for `obs` (valid in ActionReady/AwaitingObs
+    /// with `has_prev` set).
+    action: ActionOutput,
+    /// A transition (obs, action) is outstanding: the next submitted
+    /// obs (or episode end) completes it.
+    has_prev: bool,
+    /// Reward logged since the last served action.
+    reward_acc: f32,
+    episode_reward: f64,
+    episode_len: usize,
+    /// Nanos of the last client activity (admission/obs/take/reward).
+    last_activity_ns: u64,
+    /// Nanos when the pending obs was submitted (action latency start).
+    submitted_ns: u64,
+    /// Forgiveness ledger: missed idle deadlines so far.
+    strikes: u32,
+}
+
+/// Counters one gateway shard accumulates (monotone, lifetime).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct GatewayShardStats {
+    pub live_sessions: usize,
+    pub pending_requests: usize,
+    pub started: u64,
+    pub shed: u64,
+    pub reaped: u64,
+    pub completed: u64,
+    pub expired_calls: u64,
+    pub ticks: u64,
+    pub batched_rows: u64,
+    pub max_batch_fill: u64,
+    /// p99 action latency over the recent-sample window, microseconds.
+    pub p99_action_latency_us: f64,
+    pub transitions: u64,
+}
+
+/// Service-level backlog snapshot: every gateway shard's session table
+/// + mailbox pressure folded together (the gateway analogue of
+/// `replay::ReplayBacklogStats`).  Attached to `TrainResult::gateway`
+/// and consumed by `Autoscaler::gateway_signals`.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct GatewayBacklogStats {
+    /// Live (non-tombstoned) gateway shards.
+    pub live_shards: usize,
+    /// Total registry slots (incl. tombstones).
+    pub slots: usize,
+    /// Sessions currently held across all live shards.
+    pub sessions: usize,
+    /// Action requests waiting for a batched forward.
+    pub pending: usize,
+    /// Deepest live shard mailbox (current).
+    pub max_queue_len: usize,
+    /// Deepest live shard mailbox (lifetime high water).
+    pub max_queue_hwm: usize,
+    pub started: u64,
+    /// Sessions shed by admission control (watermark) plus client casts
+    /// shed by mailbox backpressure.
+    pub shed: u64,
+    pub reaped: u64,
+    pub completed: u64,
+    pub ticks: u64,
+    pub batched_rows: u64,
+    /// Largest single-forward coalesced batch any shard served.
+    pub max_batch_fill: u64,
+    /// Worst per-shard p99 action latency, microseconds.
+    pub p99_action_latency_us: f64,
+    pub transitions: u64,
+}
+
+/// Latency window size for the p99 estimate (recent samples, ring).
+const LAT_WINDOW: usize = 512;
+
+/// The session table of one gateway shard.  Single-threaded by design:
+/// it lives inside a gateway actor (`ops::gateway_ops`), which provides
+/// the mailbox, supervision, and elasticity around it.
+pub struct EpisodeGateway {
+    cfg: GatewayConfig,
+    sessions: Vec<Option<Session>>,
+    free: Vec<u32>,
+    next_nonce: u32,
+    /// Slots with a queued observation, in submission order.
+    pending: Vec<u32>,
+    /// Flat `[N, obs_dim]` scratch the tick coalesces into.
+    obs_scratch: Vec<f32>,
+    /// Action outputs of the last tick (parallel to its batch rows).
+    actions_scratch: Vec<ActionOutput>,
+    /// Recent action latencies (ns), ring-buffered for the p99.
+    lat_ring: Vec<u64>,
+    lat_next: usize,
+    lat_sort_scratch: Vec<u64>,
+    /// Completed-episode records, drained by metrics reporting.
+    episodes: Vec<EpisodeRecord>,
+    /// Experience fragments under construction / ready to drain.
+    builder: SampleBatchBuilder,
+    stats: GatewayShardStats,
+}
+
+impl EpisodeGateway {
+    pub fn new(cfg: GatewayConfig) -> Self {
+        assert!(cfg.obs_dim > 0, "gateway obs_dim must be positive");
+        assert!(cfg.max_sessions > 0, "gateway max_sessions must be positive");
+        let fragment = cfg.fragment.max(1);
+        EpisodeGateway {
+            sessions: Vec::new(),
+            free: Vec::new(),
+            next_nonce: 1,
+            pending: Vec::new(),
+            obs_scratch: Vec::new(),
+            actions_scratch: Vec::new(),
+            lat_ring: Vec::with_capacity(LAT_WINDOW),
+            lat_next: 0,
+            lat_sort_scratch: Vec::with_capacity(LAT_WINDOW),
+            episodes: Vec::new(),
+            builder: SampleBatchBuilder::with_capacity(cfg.obs_dim, fragment),
+            stats: GatewayShardStats::default(),
+            cfg,
+        }
+    }
+
+    pub fn config(&self) -> &GatewayConfig {
+        &self.cfg
+    }
+
+    /// Live sessions currently held.
+    pub fn live_sessions(&self) -> usize {
+        self.stats.live_sessions
+    }
+
+    /// Action requests queued for the next tick.
+    pub fn pending_requests(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Snapshot of this shard's counters (p99 computed on demand).
+    pub fn stats(&mut self) -> GatewayShardStats {
+        let mut s = self.stats;
+        s.pending_requests = self.pending.len();
+        s.p99_action_latency_us = self.p99_latency_us();
+        s
+    }
+
+    fn p99_latency_us(&mut self) -> f64 {
+        if self.lat_ring.is_empty() {
+            return 0.0;
+        }
+        self.lat_sort_scratch.clear();
+        self.lat_sort_scratch.extend_from_slice(&self.lat_ring);
+        self.lat_sort_scratch.sort_unstable();
+        let n = self.lat_sort_scratch.len();
+        let idx = ((n as f64 * 0.99).ceil() as usize).clamp(1, n) - 1;
+        self.lat_sort_scratch[idx] as f64 / 1_000.0
+    }
+
+    fn record_latency(&mut self, ns: u64) {
+        if self.lat_ring.len() < LAT_WINDOW {
+            self.lat_ring.push(ns);
+        } else {
+            self.lat_ring[self.lat_next] = ns;
+        }
+        self.lat_next = (self.lat_next + 1) % LAT_WINDOW;
+    }
+
+    fn session_mut(
+        &mut self,
+        id: SessionId,
+    ) -> Result<&mut Session, SessionError> {
+        let live = matches!(
+            self.sessions.get(id.slot as usize).and_then(|s| s.as_ref()),
+            Some(s) if s.nonce == id.nonce
+        );
+        if live {
+            Ok(self.sessions[id.slot as usize].as_mut().unwrap())
+        } else {
+            self.stats.expired_calls += 1;
+            Err(SessionError::Expired)
+        }
+    }
+
+    /// Open a new episode.  Sheds (counts + errors) at the admission
+    /// watermark.
+    pub fn start_episode(
+        &mut self,
+        now_ns: u64,
+    ) -> Result<SessionId, SessionError> {
+        if self.stats.live_sessions >= self.cfg.max_sessions {
+            self.stats.shed += 1;
+            return Err(SessionError::Shed);
+        }
+        let nonce = self.next_nonce;
+        self.next_nonce = self.next_nonce.wrapping_add(1).max(1);
+        let session = Session {
+            nonce,
+            phase: Phase::AwaitingObs,
+            obs: vec![0.0; self.cfg.obs_dim],
+            action: ActionOutput { action: 0, logp: 0.0, value: 0.0 },
+            has_prev: false,
+            reward_acc: 0.0,
+            episode_reward: 0.0,
+            episode_len: 0,
+            last_activity_ns: now_ns,
+            submitted_ns: now_ns,
+            strikes: 0,
+        };
+        let slot = match self.free.pop() {
+            Some(slot) => {
+                self.sessions[slot as usize] = Some(session);
+                slot
+            }
+            None => {
+                self.sessions.push(Some(session));
+                (self.sessions.len() - 1) as u32
+            }
+        };
+        self.stats.live_sessions += 1;
+        self.stats.started += 1;
+        Ok(SessionId { slot, nonce })
+    }
+
+    /// Submit the episode's next observation, queueing an action
+    /// request for the coming tick.  Completes the previous transition
+    /// (if an action was outstanding) into the experience fragment.
+    pub fn submit_obs(
+        &mut self,
+        id: SessionId,
+        obs: &[f32],
+        now_ns: u64,
+    ) -> Result<(), SessionError> {
+        let obs_dim = self.cfg.obs_dim;
+        assert_eq!(obs.len(), obs_dim, "gateway obs_dim mismatch");
+        let s = self.session_mut(id)?;
+        if s.phase != Phase::AwaitingObs {
+            return Err(SessionError::Protocol(
+                "submit_obs while an action request is outstanding",
+            ));
+        }
+        s.last_activity_ns = now_ns;
+        s.submitted_ns = now_ns;
+        s.strikes = 0;
+        s.phase = Phase::Pending;
+        let (prev_done, action, reward) = if s.has_prev {
+            s.has_prev = false;
+            (true, s.action.action, std::mem::take(&mut s.reward_acc))
+        } else {
+            (false, 0, 0.0)
+        };
+        if prev_done {
+            // Borrow dance: the builder and the session both live in
+            // self, so stage through a local copy of the previous obs.
+            let prev = std::mem::take(&mut s.obs);
+            self.builder.add_transition(&prev, action, reward, obs, false);
+            self.stats.transitions += 1;
+            let s = self.sessions[id.slot as usize].as_mut().unwrap();
+            s.obs = prev;
+        }
+        let s = self.sessions[id.slot as usize].as_mut().unwrap();
+        s.obs.clear();
+        s.obs.extend_from_slice(obs);
+        self.pending.push(id.slot);
+        Ok(())
+    }
+
+    /// Run one batched forward over every pending request: coalesce the
+    /// queued observations into one flat `[N, obs_dim]` buffer, call
+    /// `compute_actions_into` once, and mark each session's action
+    /// ready.  Returns the batch fill (0 = nothing pending).
+    pub fn tick(&mut self, policy: &mut dyn Policy, _now_ns: u64) -> usize {
+        if self.pending.is_empty() {
+            return 0;
+        }
+        let obs_dim = self.cfg.obs_dim;
+        let mut batch = std::mem::take(&mut self.pending);
+        // A session can be reaped between submit and tick: drop its row.
+        batch.retain(|&slot| {
+            matches!(
+                self.sessions.get(slot as usize).and_then(|s| s.as_ref()),
+                Some(s) if s.phase == Phase::Pending
+            )
+        });
+        if batch.is_empty() {
+            self.pending = batch;
+            return 0;
+        }
+        let n = batch.len();
+        self.obs_scratch.clear();
+        self.obs_scratch.reserve(n * obs_dim);
+        for &slot in &batch {
+            let s = self.sessions[slot as usize].as_ref().unwrap();
+            self.obs_scratch.extend_from_slice(&s.obs);
+        }
+        let mut actions = std::mem::take(&mut self.actions_scratch);
+        policy.compute_actions_into(&self.obs_scratch, n, &mut actions);
+        assert_eq!(actions.len(), n, "policy returned wrong action count");
+        for (i, &slot) in batch.iter().enumerate() {
+            let s = self.sessions[slot as usize].as_mut().unwrap();
+            s.action = actions[i];
+            s.phase = Phase::ActionReady;
+        }
+        self.actions_scratch = actions;
+        batch.clear();
+        self.pending = batch;
+        self.stats.ticks += 1;
+        self.stats.batched_rows += n as u64;
+        self.stats.max_batch_fill = self.stats.max_batch_fill.max(n as u64);
+        n
+    }
+
+    /// Take the served action for `id`.  `Ok(None)` means the request
+    /// is still waiting for a tick.
+    pub fn take_action(
+        &mut self,
+        id: SessionId,
+        now_ns: u64,
+    ) -> Result<Option<ActionOutput>, SessionError> {
+        let s = self.session_mut(id)?;
+        match s.phase {
+            Phase::Pending => Ok(None),
+            Phase::ActionReady => {
+                s.phase = Phase::AwaitingObs;
+                s.has_prev = true;
+                s.episode_len += 1;
+                s.last_activity_ns = now_ns;
+                s.strikes = 0;
+                let latency = now_ns.saturating_sub(s.submitted_ns);
+                let action = s.action;
+                self.record_latency(latency);
+                Ok(Some(action))
+            }
+            Phase::AwaitingObs => Err(SessionError::Protocol(
+                "take_action before submit_obs",
+            )),
+        }
+    }
+
+    /// Log reward earned since the last action.
+    pub fn log_reward(
+        &mut self,
+        id: SessionId,
+        reward: f32,
+        now_ns: u64,
+    ) -> Result<(), SessionError> {
+        let s = self.session_mut(id)?;
+        s.reward_acc += reward;
+        s.episode_reward += reward as f64;
+        s.last_activity_ns = now_ns;
+        s.strikes = 0;
+        Ok(())
+    }
+
+    /// Close the episode.  `final_obs` (when the client has one) becomes
+    /// the terminal transition's next-observation; otherwise the last
+    /// served observation is reused.  Returns the episode record.
+    pub fn end_episode(
+        &mut self,
+        id: SessionId,
+        final_obs: Option<&[f32]>,
+        _now_ns: u64,
+    ) -> Result<EpisodeRecord, SessionError> {
+        let slot = id.slot as usize;
+        // Validate before removing.
+        self.session_mut(id)?;
+        let mut s = self.sessions[slot].take().unwrap();
+        if s.has_prev {
+            let next = final_obs.unwrap_or(&s.obs);
+            assert_eq!(next.len(), self.cfg.obs_dim, "gateway obs_dim mismatch");
+            self.builder.add_transition(
+                &s.obs,
+                s.action.action,
+                std::mem::take(&mut s.reward_acc),
+                next,
+                true,
+            );
+            self.stats.transitions += 1;
+        }
+        self.free.push(id.slot);
+        self.stats.live_sessions -= 1;
+        self.stats.completed += 1;
+        let record =
+            EpisodeRecord { reward: s.episode_reward, length: s.episode_len };
+        self.episodes.push(record);
+        Ok(record)
+    }
+
+    /// Write off idle clients: every live session silent past the idle
+    /// deadline earns a strike; sessions past the forgiveness budget
+    /// are reaped (slot freed, episode abandoned).  Returns the number
+    /// reaped this pass.
+    pub fn reap_idle(&mut self, now_ns: u64) -> usize {
+        let deadline = self.cfg.idle_deadline_ns;
+        let forgiveness = self.cfg.forgiveness;
+        let mut reaped = 0;
+        for slot in 0..self.sessions.len() {
+            let reap = match &mut self.sessions[slot] {
+                Some(s)
+                    if now_ns.saturating_sub(s.last_activity_ns)
+                        > deadline =>
+                {
+                    s.strikes += 1;
+                    // Re-arm: a forgiven session gets a full deadline
+                    // before its next strike, so "forgiveness" measures
+                    // whole silent periods, not reap-pass frequency.
+                    s.last_activity_ns = now_ns;
+                    s.strikes > forgiveness
+                }
+                _ => false,
+            };
+            if reap {
+                self.sessions[slot] = None;
+                self.free.push(slot as u32);
+                self.stats.live_sessions -= 1;
+                self.stats.reaped += 1;
+                reaped += 1;
+            }
+        }
+        if reaped > 0 {
+            // Drop reaped sessions' queued requests eagerly.
+            self.pending.retain(|&slot| {
+                matches!(
+                    self.sessions.get(slot as usize).and_then(|s| s.as_ref()),
+                    Some(s) if s.phase == Phase::Pending
+                )
+            });
+        }
+        reaped
+    }
+
+    /// Drain completed-episode records (metrics reporting).
+    pub fn drain_episodes(&mut self) -> Vec<EpisodeRecord> {
+        std::mem::take(&mut self.episodes)
+    }
+
+    /// Drain one experience fragment once at least `cfg.fragment`
+    /// transitions have accumulated (None until then) — the source the
+    /// train-from-gateway plan feeds to the replay service.
+    pub fn drain_fragment(&mut self) -> Option<SampleBatch> {
+        if self.builder.len() >= self.cfg.fragment.max(1) {
+            Some(self.builder.build())
+        } else {
+            None
+        }
+    }
+
+    /// Transitions buffered toward the next fragment.
+    pub fn fragment_fill(&self) -> usize {
+        self.builder.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::DummyPolicy;
+
+    fn gw(max_sessions: usize) -> EpisodeGateway {
+        EpisodeGateway::new(GatewayConfig {
+            obs_dim: 4,
+            max_sessions,
+            idle_deadline_ns: 1_000,
+            forgiveness: 1,
+            fragment: 8,
+        })
+    }
+
+    fn serve(g: &mut EpisodeGateway, p: &mut DummyPolicy, id: SessionId) -> i32 {
+        g.submit_obs(id, &[0.5; 4], 10).unwrap();
+        assert!(g.take_action(id, 11).unwrap().is_none(), "no tick yet");
+        assert!(g.tick(p, 12) >= 1);
+        g.take_action(id, 13).unwrap().expect("action ready").action
+    }
+
+    #[test]
+    fn episode_protocol_round_trip() {
+        let mut g = gw(8);
+        let mut p = DummyPolicy::new(0.1);
+        let id = g.start_episode(0).unwrap();
+        for step in 0..5 {
+            let a = serve(&mut g, &mut p, id);
+            assert!(a == 0 || a == 1);
+            g.log_reward(id, 1.0, 14 + step).unwrap();
+        }
+        let rec = g.end_episode(id, Some(&[0.0; 4]), 100).unwrap();
+        assert_eq!(rec.length, 5);
+        assert!((rec.reward - 5.0).abs() < 1e-9);
+        assert_eq!(g.live_sessions(), 0);
+        let eps = g.drain_episodes();
+        assert_eq!(eps.len(), 1);
+        assert_eq!(eps[0].length, 5);
+    }
+
+    #[test]
+    fn tick_coalesces_pending_requests_into_one_batch() {
+        let mut g = gw(8);
+        let mut p = DummyPolicy::new(0.1);
+        let ids: Vec<SessionId> =
+            (0..5).map(|_| g.start_episode(0).unwrap()).collect();
+        for (i, id) in ids.iter().enumerate() {
+            g.submit_obs(*id, &[i as f32; 4], 10).unwrap();
+        }
+        assert_eq!(g.pending_requests(), 5);
+        let fill = g.tick(&mut p, 20);
+        assert_eq!(fill, 5, "all pending requests served by one forward");
+        for id in &ids {
+            assert!(g.take_action(*id, 30).unwrap().is_some());
+        }
+        let stats = g.stats();
+        assert_eq!(stats.ticks, 1);
+        assert_eq!(stats.batched_rows, 5);
+        assert_eq!(stats.max_batch_fill, 5);
+    }
+
+    #[test]
+    fn admission_watermark_sheds() {
+        let mut g = gw(2);
+        let a = g.start_episode(0).unwrap();
+        let _b = g.start_episode(0).unwrap();
+        assert_eq!(g.start_episode(0), Err(SessionError::Shed));
+        assert_eq!(g.stats().shed, 1);
+        // Ending one readmits.
+        g.end_episode(a, None, 1).unwrap();
+        assert!(g.start_episode(2).is_ok());
+    }
+
+    #[test]
+    fn idle_sessions_reaped_through_forgiveness_ledger() {
+        let mut g = gw(8);
+        let id = g.start_episode(0).unwrap();
+        // First pass past the deadline: strike, forgiven (ledger = 1).
+        assert_eq!(g.reap_idle(2_000), 0);
+        assert_eq!(g.live_sessions(), 1);
+        // Second full silent period: past forgiveness, reaped.
+        assert_eq!(g.reap_idle(4_000), 1);
+        assert_eq!(g.live_sessions(), 0);
+        assert_eq!(g.stats().reaped, 1);
+        // The reaped session's id is fenced off.
+        assert_eq!(
+            g.submit_obs(id, &[0.0; 4], 5_000),
+            Err(SessionError::Expired)
+        );
+    }
+
+    #[test]
+    fn activity_clears_the_ledger() {
+        let mut g = gw(8);
+        let id = g.start_episode(0).unwrap();
+        assert_eq!(g.reap_idle(2_000), 0); // strike 1
+        g.log_reward(id, 0.0, 2_500).unwrap(); // activity: ledger reset
+        assert_eq!(g.reap_idle(4_000), 0); // strike 1 again, forgiven
+        assert_eq!(g.live_sessions(), 1);
+    }
+
+    #[test]
+    fn slot_reuse_fences_stale_ids() {
+        let mut g = gw(2);
+        let old = g.start_episode(0).unwrap();
+        g.end_episode(old, None, 1).unwrap();
+        let new = g.start_episode(2).unwrap();
+        assert_eq!(old.slot, new.slot, "slot is reused");
+        assert_ne!(old.nonce, new.nonce, "nonce is fresh");
+        assert!(
+            matches!(g.take_action(old, 3), Err(SessionError::Expired)),
+            "stale id must not reach the new session"
+        );
+    }
+
+    #[test]
+    fn transitions_accumulate_and_drain_as_fragments() {
+        let mut g = gw(8);
+        let mut p = DummyPolicy::new(0.1);
+        let id = g.start_episode(0).unwrap();
+        // 8 served actions + rewards -> 7 intermediate transitions;
+        // end_episode adds the terminal one -> fragment of 8.
+        for _ in 0..8 {
+            serve(&mut g, &mut p, id);
+            g.log_reward(id, 2.0, 20).unwrap();
+        }
+        assert!(g.drain_fragment().is_none(), "7 < fragment while open");
+        g.end_episode(id, None, 30).unwrap();
+        let frag = g.drain_fragment().expect("terminal transition filled it");
+        assert_eq!(frag.len(), 8);
+        // Every transition carries the logged reward.
+        assert!(frag.rewards.iter().all(|&r| (r - 2.0).abs() < 1e-6));
+        assert_eq!(frag.dones.last().copied(), Some(1.0));
+        assert_eq!(g.stats().transitions, 8);
+    }
+
+    #[test]
+    fn protocol_violations_are_reported() {
+        let mut g = gw(8);
+        let mut p = DummyPolicy::new(0.1);
+        let id = g.start_episode(0).unwrap();
+        assert!(matches!(
+            g.take_action(id, 1),
+            Err(SessionError::Protocol(_))
+        ));
+        g.submit_obs(id, &[0.0; 4], 2).unwrap();
+        assert!(matches!(
+            g.submit_obs(id, &[0.0; 4], 3),
+            Err(SessionError::Protocol(_))
+        ));
+        g.tick(&mut p, 4);
+        g.take_action(id, 5).unwrap().unwrap();
+    }
+
+    #[test]
+    fn p99_latency_tracks_slow_requests() {
+        let mut g = gw(8);
+        let mut p = DummyPolicy::new(0.1);
+        let id = g.start_episode(0).unwrap();
+        // 99 fast requests (1us), one slow (1ms).
+        for i in 0..100u64 {
+            g.submit_obs(id, &[0.0; 4], i * 10_000_000).unwrap();
+            g.tick(&mut p, 0);
+            let take_at = i * 10_000_000
+                + if i == 50 { 1_000_000 } else { 1_000 };
+            g.take_action(id, take_at).unwrap().unwrap();
+        }
+        let p99 = g.stats().p99_action_latency_us;
+        assert!(p99 >= 999.0, "p99 should surface the slow request: {p99}");
+    }
+
+    #[test]
+    fn reaped_pending_request_is_dropped_from_the_tick() {
+        let mut g = gw(8);
+        let mut p = DummyPolicy::new(0.1);
+        let a = g.start_episode(0).unwrap();
+        let b = g.start_episode(0).unwrap();
+        g.submit_obs(a, &[0.0; 4], 10).unwrap();
+        g.submit_obs(b, &[0.0; 4], 10).unwrap();
+        // Session a goes silent past two deadlines; b stays active via
+        // reward logging.
+        g.log_reward(b, 0.0, 2_000).unwrap();
+        g.reap_idle(2_000);
+        g.log_reward(b, 0.0, 4_000).unwrap();
+        assert_eq!(g.reap_idle(4_000), 1);
+        assert_eq!(g.tick(&mut p, 5_000), 1, "only b's request survives");
+        assert!(g.take_action(b, 6_000).unwrap().is_some());
+        assert!(matches!(
+            g.take_action(a, 6_000),
+            Err(SessionError::Expired)
+        ));
+    }
+}

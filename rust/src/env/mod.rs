@@ -9,43 +9,60 @@
 //!   gravity), the task distribution for the MAML case study.
 //! * [`DummyEnv`] — trivial env for the sampling microbenchmark
 //!   (Fig. 13a isolates system overhead with a dummy policy).
+//! * [`EpisodeGateway`] — the *external*-env front end: a session table
+//!   serving actions to client-owned envs over a
+//!   start/submit/take/reward/end protocol, with batched inference,
+//!   admission control, and idle-deadline reaping (see
+//!   `ops::gateway_ops` for the actor/service layer).
 
 mod cartpole;
 mod dummy;
+pub mod external;
 mod mountain_car;
 mod multi_agent;
 
 pub use cartpole::{CartPole, CartPoleParams, TaskCartPole};
 pub use dummy::DummyEnv;
+pub use external::{
+    EpisodeGateway, GatewayBacklogStats, GatewayConfig, GatewayShardStats,
+    SessionError, SessionId,
+};
 pub use mountain_car::MountainCar;
 pub use multi_agent::MultiAgentCartPole;
 
 /// A single-agent episodic environment with f32 vector observations and
 /// discrete actions.
+///
+/// The *buffer-writing* forms are the canonical interface: the rollout
+/// hot loop steps N envs per worker through preallocated flat buffers,
+/// so `reset_into`/`step_into` are what every env must implement.  The
+/// allocating `reset`/`step` are convenience wrappers (tests, one-off
+/// probes) provided for free on top of them.
 pub trait Env: Send {
     /// Observation dimensionality.
     fn obs_dim(&self) -> usize;
     /// Number of discrete actions.
     fn num_actions(&self) -> usize;
-    /// Reset and return the initial observation.
-    fn reset(&mut self) -> Vec<f32>;
-    /// Apply `action`; returns (next_obs, reward, done).
-    fn step(&mut self, action: i32) -> (Vec<f32>, f32, bool);
     /// Reset, writing the initial observation into `obs_out`
-    /// (`obs_out.len() == obs_dim()`).  The default delegates to
-    /// [`Env::reset`] and copies; concrete envs override to write in
-    /// place so the rollout hot loop stays allocation-free.
-    fn reset_into(&mut self, obs_out: &mut [f32]) {
-        let obs = self.reset();
-        obs_out.copy_from_slice(&obs);
-    }
+    /// (`obs_out.len() == obs_dim()`).
+    fn reset_into(&mut self, obs_out: &mut [f32]);
     /// Apply `action`, writing the next observation into `obs_out`;
-    /// returns (reward, done).  Default delegates to [`Env::step`] and
-    /// copies; concrete envs override to avoid the per-step `Vec<f32>`.
-    fn step_into(&mut self, action: i32, obs_out: &mut [f32]) -> (f32, bool) {
-        let (obs, reward, done) = self.step(action);
-        obs_out.copy_from_slice(&obs);
-        (reward, done)
+    /// returns (reward, done).
+    fn step_into(&mut self, action: i32, obs_out: &mut [f32]) -> (f32, bool);
+    /// Reset and return the initial observation.  Convenience wrapper
+    /// over [`Env::reset_into`] — allocates one `Vec` per call, so keep
+    /// it off hot paths.
+    fn reset(&mut self) -> Vec<f32> {
+        let mut obs = vec![0.0; self.obs_dim()];
+        self.reset_into(&mut obs);
+        obs
+    }
+    /// Apply `action`; returns (next_obs, reward, done).  Convenience
+    /// wrapper over [`Env::step_into`].
+    fn step(&mut self, action: i32) -> (Vec<f32>, f32, bool) {
+        let mut obs = vec![0.0; self.obs_dim()];
+        let (reward, done) = self.step_into(action, &mut obs);
+        (obs, reward, done)
     }
     /// Draw a new task from the env's task distribution (meta-learning
     /// envs only; default no-op).  Callers must `reset()` afterwards.

@@ -37,8 +37,7 @@ impl MountainCar {
         env
     }
 
-    /// Advance the physics one step; returns (reward, done).  Shared by
-    /// the allocating [`Env::step`] and in-place [`Env::step_into`].
+    /// Advance the physics one step; returns (reward, done).
     fn advance(&mut self, action: i32) -> (f32, bool) {
         assert!(!self.done, "step() on done episode");
         assert!((0..3).contains(&action), "MountainCar action in 0..3");
@@ -64,19 +63,6 @@ impl Env for MountainCar {
 
     fn num_actions(&self) -> usize {
         3
-    }
-
-    fn reset(&mut self) -> Vec<f32> {
-        self.position = self.rng.uniform_range(-0.6, -0.4);
-        self.velocity = 0.0;
-        self.steps = 0;
-        self.done = false;
-        vec![self.position, self.velocity]
-    }
-
-    fn step(&mut self, action: i32) -> (Vec<f32>, f32, bool) {
-        let (reward, done) = self.advance(action);
-        (vec![self.position, self.velocity], reward, done)
     }
 
     fn reset_into(&mut self, obs_out: &mut [f32]) {

@@ -16,7 +16,8 @@
 //!   "original RLlib" comparison points) plus a Spark-Streaming-style
 //!   microbatch executor for the Appendix A.1 comparison;
 //! * substrates: [`actor`] (thread-per-actor runtime), [`env`] (CartPole
-//!   family), [`replay`] (prioritized replay over struct-of-arrays ring
+//!   family + the external-episode gateway),
+//!   [`replay`] (prioritized replay over struct-of-arrays ring
 //!   columns), [`sample_batch`], [`runtime`] (PJRT loader for the
 //!   JAX/Pallas AOT artifacts), [`policy`] + [`rollout`] (XLA-backed
 //!   policies and rollout workers), [`metrics`].
@@ -92,8 +93,15 @@
 //!   multi-agent alike) and an [`actor::Autoscaler`] feedback
 //!   controller decides *when* — sampling the telemetry each report
 //!   and driving `scale_to` with deadband/confirmation/cooldown
-//!   hysteresis (`ops::autoscaled_metrics_reporting`,
-//!   `tests/autoscale.rs`).
+//!   hysteresis (`ops::Reporting::autoscale`, `tests/autoscale.rs`).
+//! * The env boundary is **invertible**: [`env::EpisodeGateway`] +
+//!   [`ops::GatewayService`] serve policies to *client-owned* envs —
+//!   concurrent external episodes live in elastic session-table shards
+//!   (admission watermarks, idle-deadline reaping, lease-fenced
+//!   sessions), pending requests coalesce into one batched forward per
+//!   tick, and gateway backlog is the third autoscaled axis;
+//!   `algorithms::gateway_dqn_plan` trains from the experience served
+//!   episodes leave behind (`docs/gateway.md`, `tests/gateway.rs`).
 //!
 //! Numerics are JAX/Pallas programs lowered once to HLO text
 //! (`make artifacts`) and executed from rust via PJRT — python is never

@@ -6,6 +6,7 @@ use std::collections::BTreeMap;
 use crate::actor::{
     ActorStatsSnapshot, AutoscaleStats, FaultStats, WeightCastStats,
 };
+use crate::env::GatewayBacklogStats;
 use crate::replay::ReplayBacklogStats;
 use crate::rollout::ScaleStats;
 use crate::util::MovingStat;
@@ -80,6 +81,8 @@ impl MetricsHub {
             faults: None,
             replay: None,
             replay_autoscale: None,
+            gateway: None,
+            gateway_autoscale: None,
         }
     }
 }
@@ -103,18 +106,18 @@ pub struct TrainResult {
     pub actor_stats: Vec<ActorStatsSnapshot>,
     /// Weight-broadcast eviction counters (versions published, applies
     /// enqueued, superseded casts coalesced, overloaded/stale casts
-    /// shed) — filled by `standard_metrics_reporting` from the
+    /// shed) — filled by `ops::Reporting` from the
     /// `WorkerSet`'s `WeightCaster`.  `None` for reporting paths
     /// without one.
     pub weight_casts: Option<WeightCastStats>,
     /// Elastic scale events (workers added/removed over the set's
     /// lifetime, current live membership vs registry slots) — filled by
-    /// `standard_metrics_reporting` from the `WorkerSet`.  `None` for
+    /// `ops::Reporting` from the `WorkerSet`.  `None` for
     /// reporting paths without one.
     pub scale: Option<ScaleStats>,
     /// Autoscaling-controller decision counters (directives issued,
     /// holds by deadband/confirmation/cooldown, failed applies, last
-    /// target) — filled by `autoscaled_metrics_reporting` when an
+    /// target) — filled by `ops::Reporting::autoscale` when an
     /// `actor::Autoscaler` drives the set.  `None` on manually scaled
     /// plans.
     pub autoscale: Option<AutoscaleStats>,
@@ -126,7 +129,7 @@ pub struct TrainResult {
     pub faults: Option<FaultStats>,
     /// Replay-tier backlog telemetry (live shards, deepest mailbox,
     /// ring fill, store/sample/not-ready traffic, priority-update
-    /// applies vs discards) — filled by `replay_metrics_reporting` from
+    /// applies vs discards) — filled by `ops::Reporting::replay` from
     /// the plan's `ops::ReplayService`.  `None` on plans without a
     /// replay tier.
     pub replay: Option<ReplayBacklogStats>,
@@ -135,6 +138,15 @@ pub struct TrainResult {
     /// pool's controller).  `None` when replay shards are manually
     /// scaled.
     pub replay_autoscale: Option<AutoscaleStats>,
+    /// External-episode gateway telemetry (live shards, sessions held,
+    /// pending action requests, p99 action latency, admission sheds,
+    /// batch fill) — filled by reporting paths wired to an
+    /// `ops::GatewayService`.  `None` on plans without a gateway tier.
+    pub gateway: Option<GatewayBacklogStats>,
+    /// Decision counters of the autoscaler driving the
+    /// **gateway-shard pool**.  `None` when gateway shards are
+    /// manually scaled.
+    pub gateway_autoscale: Option<AutoscaleStats>,
 }
 
 impl TrainResult {
@@ -216,6 +228,28 @@ impl TrainResult {
         if let Some(a) = &self.replay_autoscale {
             out.push_str(&format!(
                 " replay_autoscale=t{}(up={} down={} hold={} fail={})",
+                a.last_target,
+                a.decisions_up,
+                a.decisions_down,
+                a.held_deadband + a.held_confirm + a.held_cooldown,
+                a.failed,
+            ));
+        }
+        if let Some(gw) = &self.gateway {
+            out.push_str(&format!(
+                " gateway={}shards(sess={} pend={} p99={:.0}us shed={} \
+                 fill={})",
+                gw.live_shards,
+                gw.sessions,
+                gw.pending,
+                gw.p99_action_latency_us,
+                gw.shed,
+                gw.max_batch_fill,
+            ));
+        }
+        if let Some(a) = &self.gateway_autoscale {
+            out.push_str(&format!(
+                " gateway_autoscale=t{}(up={} down={} hold={} fail={})",
                 a.last_target,
                 a.decisions_up,
                 a.decisions_down,
@@ -360,6 +394,34 @@ mod tests {
         );
         assert!(
             s.contains("replay_autoscale=t3(up=1 down=0 hold=5 fail=0)"),
+            "{s}"
+        );
+        // Gateway tier sections.
+        assert!(!s.contains("gateway="), "no gateway section without stats");
+        r.gateway = Some(GatewayBacklogStats {
+            live_shards: 2,
+            sessions: 12,
+            pending: 3,
+            p99_action_latency_us: 250.4,
+            shed: 5,
+            max_batch_fill: 6,
+            ..Default::default()
+        });
+        r.gateway_autoscale = Some(AutoscaleStats {
+            decisions_up: 2,
+            held_confirm: 4,
+            last_target: 2,
+            ..Default::default()
+        });
+        let s = r.pipeline_summary();
+        assert!(
+            s.contains(
+                "gateway=2shards(sess=12 pend=3 p99=250us shed=5 fill=6)"
+            ),
+            "{s}"
+        );
+        assert!(
+            s.contains("gateway_autoscale=t2(up=2 down=0 hold=4 fail=0)"),
             "{s}"
         );
     }

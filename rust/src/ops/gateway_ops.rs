@@ -1,0 +1,786 @@
+//! Gateway-side operators: the elastic external-episode service.
+//!
+//! [`GatewayService`] runs [`EpisodeGateway`] session tables as
+//! registry-backed actors behind a
+//! [`WorkerSet`](crate::rollout::WorkerSet) — the same machinery that
+//! grows/retires/restarts rollout workers and replay shards applies to
+//! the serving tier.  Clients hold a [`GatewaySession`]: a slot lease
+//! (shard index + epoch + incarnation id, the `ReplayLease` idiom) plus
+//! their [`SessionId`] inside that shard's table, so a request issued
+//! against a shard that was restarted or retired under the client's
+//! feet resolves to [`SessionError::Expired`] instead of reaching a
+//! fresh incarnation whose session slots mean something else.
+//!
+//! **Batching without a clock.**  A client's `request_action` is a
+//! non-blocking `try_cast` of the observation followed by a blocking
+//! poll `call`.  The shard's mailbox is FIFO: every observation cast
+//! that arrived before the first poll is already queued ahead of it, so
+//! the poll's [`EpisodeGateway::tick`] coalesces *all* of them into one
+//! flat `[N, obs_dim]` `compute_actions_into` forward.  Under
+//! concurrent clients the batch fills itself — no timer, no minimum
+//! batch delay, and a lone client still gets served in one round trip.
+//!
+//! **Load discipline.**  `try_cast` returning `Full` is the mailbox
+//! watermark — the request is shed at the client (counted, reported
+//! through [`GatewayBacklogStats`]) rather than queued into a stall.
+//! Admission sheds and idle-deadline reaping live one layer down in
+//! [`EpisodeGateway`]; reaping is driven opportunistically from the
+//! serving path, so an idle shard with no traffic reaps on its next
+//! experience pump instead.
+//!
+//! **Serving is sampling.**  Every served episode leaves transitions in
+//! the shard's fragment builder; [`gateway_experience`] gathers those
+//! fragments through the registry — the experience source the
+//! train-from-gateway plan (`algorithms::external_plan`) stores into
+//! the replay tier.
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::actor::{ShardRegistry, TryCastError};
+use crate::env::{
+    EpisodeGateway, GatewayBacklogStats, GatewayConfig, GatewayShardStats,
+    SessionError, SessionId,
+};
+use crate::iter::{LocalIter, ParIter};
+use crate::metrics::EpisodeRecord;
+use crate::policy::{ActionOutput, Policy};
+use crate::rollout::{
+    RestartPolicy, RestartReport, WorkerMetrics, WorkerSet,
+};
+use crate::sample_batch::SampleBatch;
+use crate::util::Backoff;
+
+/// First delay of the client's action-poll backoff (doubles per empty
+/// poll; the first poll almost always succeeds, see the module docs).
+pub const DEFAULT_GATEWAY_POLL_BACKOFF_BASE: Duration =
+    Duration::from_micros(20);
+
+/// Cap on the client's action-poll backoff.
+pub const DEFAULT_GATEWAY_POLL_BACKOFF_CAP: Duration =
+    Duration::from_millis(2);
+
+/// First not-ready backoff of [`gateway_experience`].
+pub const DEFAULT_GATEWAY_EXPERIENCE_BACKOFF_BASE: Duration =
+    Duration::from_micros(200);
+
+/// Cap on [`gateway_experience`]'s not-ready backoff.
+pub const DEFAULT_GATEWAY_EXPERIENCE_BACKOFF_CAP: Duration =
+    Duration::from_millis(20);
+
+/// Observation casts a client re-issues when its submit was lost (a
+/// dropped cast under fault injection) before giving up on the request.
+const MAX_SUBMIT_ATTEMPTS: usize = 4;
+
+/// One gateway shard: a session table plus the policy it serves,
+/// wrapped for actor residency.  The policy is built *on the actor
+/// thread* by the service's factory (policies are deliberately not
+/// `Send` — XLA-backed ones hold thread-local runtime state).
+pub struct GatewayActorState {
+    gateway: EpisodeGateway,
+    policy: Box<dyn Policy>,
+    gauge: Arc<GatewayShardGauge>,
+    /// Shard-local time origin; all deadlines are nanos since spawn.
+    start: Instant,
+    last_reap_ns: u64,
+    /// Actions served since the last metrics drain.
+    steps_served: usize,
+}
+
+impl GatewayActorState {
+    pub fn new(
+        cfg: GatewayConfig,
+        policy: Box<dyn Policy>,
+        gauge: Arc<GatewayShardGauge>,
+    ) -> Self {
+        GatewayActorState {
+            gateway: EpisodeGateway::new(cfg),
+            policy,
+            gauge,
+            start: Instant::now(),
+            last_reap_ns: 0,
+            steps_served: 0,
+        }
+    }
+
+    fn now_ns(&self) -> u64 {
+        self.start.elapsed().as_nanos() as u64
+    }
+
+    /// Opportunistic maintenance on the serving path: batch-serve any
+    /// queued requests, and run the idle reaper at half-deadline
+    /// cadence (strikes are re-armed per pass, so a faster cadence
+    /// would not reap earlier — this just bounds the table scans).
+    fn maintain(&mut self) {
+        let now = self.now_ns();
+        if self.gateway.pending_requests() > 0 {
+            self.gateway.tick(&mut *self.policy, now);
+        }
+        let cadence = self.gateway.config().idle_deadline_ns / 2;
+        if now.saturating_sub(self.last_reap_ns) >= cadence {
+            self.last_reap_ns = now;
+            self.gateway.reap_idle(now);
+        }
+    }
+
+    fn publish(&mut self) {
+        let s = self.gateway.stats();
+        self.gauge.publish(&s);
+    }
+
+    pub fn start_episode(&mut self) -> Result<SessionId, SessionError> {
+        let now = self.now_ns();
+        let r = self.gateway.start_episode(now);
+        self.publish();
+        r
+    }
+
+    /// Queue an observation (cast target — errors surface at the next
+    /// poll: a shed/expired session answers `Expired` there).
+    pub fn submit_obs(&mut self, id: SessionId, obs: &[f32]) {
+        let now = self.now_ns();
+        let _ = self.gateway.submit_obs(id, obs, now);
+    }
+
+    /// Serve queued requests (one batched forward) and report `id`'s
+    /// action.  `Ok(None)` = the request is queued but not yet served —
+    /// in practice only when the submit cast itself was lost.
+    pub fn poll(
+        &mut self,
+        id: SessionId,
+    ) -> Result<Option<ActionOutput>, SessionError> {
+        self.maintain();
+        let now = self.now_ns();
+        let r = self.gateway.take_action(id, now);
+        if matches!(r, Ok(Some(_))) {
+            self.steps_served += 1;
+        }
+        self.publish();
+        r
+    }
+
+    pub fn log_reward(&mut self, id: SessionId, reward: f32) {
+        let now = self.now_ns();
+        let _ = self.gateway.log_reward(id, reward, now);
+    }
+
+    pub fn end_episode(
+        &mut self,
+        id: SessionId,
+        final_obs: Option<Vec<f32>>,
+    ) -> Result<EpisodeRecord, SessionError> {
+        let now = self.now_ns();
+        let r = self.gateway.end_episode(id, final_obs.as_deref(), now);
+        self.publish();
+        r
+    }
+
+    pub fn set_weights(&mut self, weights: &[f32]) {
+        self.policy.set_weights(weights);
+    }
+
+    /// Maintenance + fragment drain — the experience pump's per-shard
+    /// step.  Ticking here also serves requests whose client died
+    /// between submit and poll, so they cannot pin the pending queue.
+    pub fn pump_fragment(&mut self) -> Option<SampleBatch> {
+        self.maintain();
+        let frag = self.gateway.drain_fragment();
+        self.publish();
+        frag
+    }
+
+    /// Direct table access for tests.
+    pub fn gateway_mut(&mut self) -> &mut EpisodeGateway {
+        &mut self.gateway
+    }
+}
+
+impl WorkerMetrics for GatewayActorState {
+    fn drain_metrics(&mut self) -> (Vec<EpisodeRecord>, usize) {
+        let eps = self.gateway.drain_episodes();
+        let steps = std::mem::take(&mut self.steps_served);
+        (eps, steps)
+    }
+}
+
+/// Lock-free per-slot gauge the shard publishes its table stats into —
+/// read by [`GatewayService::backlog_stats`] without queueing a call
+/// behind the very backlog being measured (the `ReplayShardGauge`
+/// idiom).  Re-attached to every incarnation spawned into the slot.
+#[derive(Debug, Default)]
+pub struct GatewayShardGauge {
+    pub sessions: AtomicU64,
+    pub pending: AtomicU64,
+    pub started: AtomicU64,
+    pub shed: AtomicU64,
+    pub reaped: AtomicU64,
+    pub completed: AtomicU64,
+    pub ticks: AtomicU64,
+    pub batched_rows: AtomicU64,
+    pub max_batch_fill: AtomicU64,
+    /// p99 action latency in microseconds, stored as `f64` bits.
+    pub p99_us_bits: AtomicU64,
+    pub transitions: AtomicU64,
+}
+
+impl GatewayShardGauge {
+    fn publish(&self, s: &GatewayShardStats) {
+        self.sessions.store(s.live_sessions as u64, Relaxed);
+        self.pending.store(s.pending_requests as u64, Relaxed);
+        self.started.store(s.started, Relaxed);
+        self.shed.store(s.shed, Relaxed);
+        self.reaped.store(s.reaped, Relaxed);
+        self.completed.store(s.completed, Relaxed);
+        self.ticks.store(s.ticks, Relaxed);
+        self.batched_rows.store(s.batched_rows, Relaxed);
+        self.max_batch_fill.store(s.max_batch_fill, Relaxed);
+        self.p99_us_bits
+            .store(s.p99_action_latency_us.to_bits(), Relaxed);
+        self.transitions.store(s.transitions, Relaxed);
+    }
+
+    pub fn p99_us(&self) -> f64 {
+        f64::from_bits(self.p99_us_bits.load(Relaxed))
+    }
+}
+
+/// Service-scoped lifetime counters (survive shard churn, so backlog
+/// rates stay monotone — the `ReplayCounters` idiom).
+#[derive(Debug, Default)]
+pub struct GatewayCounters {
+    /// Sessions opened through [`GatewayService::connect`].
+    pub connects: AtomicU64,
+    /// Connect attempts shed: every live shard at its admission
+    /// watermark, or no live shard at all.
+    pub connect_shed: AtomicU64,
+    /// Observation casts shed by mailbox backpressure (`try_cast` Full).
+    pub casts_shed: AtomicU64,
+    /// Actions delivered to clients.
+    pub actions: AtomicU64,
+    /// Requests that found their shard restarted/retired (lease epoch
+    /// or incarnation mismatch) — the session is gone with it.
+    pub sessions_lost: AtomicU64,
+    /// Experience fragments yielded by [`gateway_experience`].
+    pub fragments: AtomicU64,
+}
+
+/// The elastic serving tier: [`EpisodeGateway`] shards in a
+/// [`ShardRegistry`]-backed [`WorkerSet`], shared traffic counters, and
+/// per-slot gauges.  Cloning shares all state.
+#[derive(Clone)]
+pub struct GatewayService {
+    set: WorkerSet<GatewayActorState>,
+    counters: Arc<GatewayCounters>,
+    gauges: Arc<Mutex<Vec<Arc<GatewayShardGauge>>>>,
+    /// Round-robin cursor for connect routing.
+    session_seq: Arc<AtomicU64>,
+}
+
+impl GatewayService {
+    /// Spawn `num_shards` gateway shards (named `gateway-{i}`), each
+    /// serving a policy built by `make_policy(slot)` **on the shard's
+    /// thread**.  The set's local slot is a zero-traffic sentinel (the
+    /// `with_protocol` learner slot).  The sync protocol is a no-op: a
+    /// restarted shard rejoins with a factory-fresh policy and an empty
+    /// table — its sessions are gone by design (clients hold leases and
+    /// observe `Expired`), and its weights catch up on the next
+    /// [`GatewayService::push_weights`].
+    pub fn new(
+        num_shards: usize,
+        cfg: GatewayConfig,
+        make_policy: impl Fn(usize) -> Box<dyn Policy> + Send + Sync + 'static,
+    ) -> Self {
+        assert!(num_shards >= 1, "gateway service needs at least one shard");
+        let make_policy: Arc<
+            dyn Fn(usize) -> Box<dyn Policy> + Send + Sync,
+        > = Arc::new(make_policy);
+        let gauges: Arc<Mutex<Vec<Arc<GatewayShardGauge>>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        let factory_gauges = gauges.clone();
+        let set = WorkerSet::with_protocol(
+            "gateway-local",
+            "gateway",
+            num_shards,
+            move |i| {
+                let cfg = cfg.clone();
+                let make_policy = make_policy.clone();
+                if i == 0 {
+                    // Local sentinel: liveness probes only.
+                    return Box::new(move || {
+                        GatewayActorState::new(
+                            GatewayConfig { max_sessions: 1, ..cfg },
+                            make_policy(usize::MAX),
+                            Arc::new(GatewayShardGauge::default()),
+                        )
+                    });
+                }
+                let slot = i - 1;
+                let gauge = {
+                    let mut g = factory_gauges.lock().unwrap();
+                    while g.len() <= slot {
+                        g.push(Arc::new(GatewayShardGauge::default()));
+                    }
+                    g[slot].clone()
+                };
+                Box::new(move || {
+                    GatewayActorState::new(cfg, make_policy(slot), gauge)
+                })
+            },
+            // No sync protocol — see the constructor docs.
+            |_local, _fresh| Ok(()),
+        );
+        GatewayService {
+            set,
+            counters: Arc::new(GatewayCounters::default()),
+            gauges,
+            session_seq: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// The underlying elastic set (registry, scale/fault counters,
+    /// restart machinery, metrics drain).
+    pub fn set(&self) -> &WorkerSet<GatewayActorState> {
+        &self.set
+    }
+
+    pub fn registry(&self) -> &ShardRegistry<GatewayActorState> {
+        self.set.registry()
+    }
+
+    pub fn counters(&self) -> Arc<GatewayCounters> {
+        self.counters.clone()
+    }
+
+    pub fn num_live_shards(&self) -> usize {
+        self.registry().num_live()
+    }
+
+    /// Scale the live shard count to exactly `n` under live client
+    /// traffic (delegates to `WorkerSet::scale_to`).  Sessions on a
+    /// retired shard observe `Expired` through their leases.
+    pub fn scale_to(
+        &self,
+        n: usize,
+    ) -> crate::util::error::Result<(Vec<usize>, Vec<usize>)> {
+        self.set.scale_to(n)
+    }
+
+    /// Respawn crashed shards under a [`RestartPolicy`].  Replacements
+    /// rejoin with empty tables under a new epoch; stale sessions are
+    /// fenced by their leases.
+    pub fn restart_dead_with_policy(
+        &self,
+        policy: &RestartPolicy,
+    ) -> RestartReport {
+        self.set.restart_dead_with_policy(policy)
+    }
+
+    /// Open an episode on a live shard, round-robin over the live slot
+    /// set.  A shard at its admission watermark is skipped; when every
+    /// live shard sheds (or none is live), the connect itself is shed.
+    pub fn connect(&self) -> Result<GatewaySession, SessionError> {
+        let registry = self.registry();
+        let live = registry.live_indices();
+        if live.is_empty() {
+            self.counters.connect_shed.fetch_add(1, Relaxed);
+            return Err(SessionError::Shed);
+        }
+        let cursor = self.session_seq.fetch_add(1, Relaxed) as usize;
+        for k in 0..live.len() {
+            let slot = live[(cursor + k) % live.len()];
+            let Some((handle, epoch)) = registry.get_live(slot) else {
+                continue;
+            };
+            match handle.call(|ga| ga.start_episode()) {
+                Ok(Ok(id)) => {
+                    self.counters.connects.fetch_add(1, Relaxed);
+                    return Ok(GatewaySession {
+                        registry: registry.clone(),
+                        shard_idx: slot,
+                        epoch,
+                        incarnation: handle.id(),
+                        id,
+                        counters: self.counters.clone(),
+                    });
+                }
+                // Shed or (rare) expired table state: try the next
+                // shard.  A dead shard likewise.
+                Ok(Err(_)) | Err(_) => continue,
+            }
+        }
+        self.counters.connect_shed.fetch_add(1, Relaxed);
+        Err(SessionError::Shed)
+    }
+
+    /// Broadcast fresh policy weights to every live shard,
+    /// non-blocking: a shard whose mailbox is full keeps serving on its
+    /// current weights and catches the next push (weight freshness must
+    /// never stall the serving path).
+    pub fn push_weights(&self, weights: Arc<[f32]>) {
+        let registry = self.registry();
+        for i in registry.live_indices() {
+            if let Some((handle, _)) = registry.get_live(i) {
+                let w = weights.clone();
+                let _ = handle.try_cast(move |ga| ga.set_weights(&w));
+            }
+        }
+    }
+
+    /// Point-in-time backlog telemetry over the live shards — session
+    /// and pending-request load from the slot gauges (lock-free),
+    /// mailbox depths from actor telemetry, lifetime traffic from the
+    /// service counters.  Attached to `TrainResult::gateway` and fed to
+    /// `Autoscaler::gateway_signals`.
+    pub fn backlog_stats(&self) -> GatewayBacklogStats {
+        let registry = self.registry();
+        let gauges = self.gauges.lock().unwrap();
+        let mut out = GatewayBacklogStats {
+            slots: registry.len(),
+            ..Default::default()
+        };
+        for i in registry.live_indices() {
+            let Some((handle, _epoch)) = registry.get_live(i) else {
+                continue;
+            };
+            out.live_shards += 1;
+            let s = handle.stats();
+            out.max_queue_len = out.max_queue_len.max(s.queue_len);
+            out.max_queue_hwm = out.max_queue_hwm.max(s.queue_hwm);
+            if let Some(g) = gauges.get(i) {
+                out.sessions += g.sessions.load(Relaxed) as usize;
+                out.pending += g.pending.load(Relaxed) as usize;
+                out.started += g.started.load(Relaxed);
+                out.shed += g.shed.load(Relaxed);
+                out.reaped += g.reaped.load(Relaxed);
+                out.completed += g.completed.load(Relaxed);
+                out.ticks += g.ticks.load(Relaxed);
+                out.batched_rows += g.batched_rows.load(Relaxed);
+                out.max_batch_fill =
+                    out.max_batch_fill.max(g.max_batch_fill.load(Relaxed));
+                out.p99_action_latency_us =
+                    out.p99_action_latency_us.max(g.p99_us());
+                out.transitions += g.transitions.load(Relaxed);
+            }
+        }
+        // Mailbox backpressure and failed connects are sheds too: the
+        // autoscaler must see load the shards never admitted.
+        out.shed += self.counters.casts_shed.load(Relaxed)
+            + self.counters.connect_shed.load(Relaxed);
+        out
+    }
+}
+
+/// Spawn an elastic gateway tier — the dataflow-facing constructor
+/// (the serving twin of `create_replay_shards`).
+pub fn create_gateway_shards(
+    num_shards: usize,
+    cfg: GatewayConfig,
+    make_policy: impl Fn(usize) -> Box<dyn Policy> + Send + Sync + 'static,
+) -> GatewayService {
+    GatewayService::new(num_shards, cfg, make_policy)
+}
+
+/// A client's handle to one live episode: the shard lease (slot +
+/// epoch + incarnation) plus the session id inside that shard's table.
+/// Requests re-resolve the slot through the registry per call, so a
+/// shard restarted or retired since connect answers
+/// [`SessionError::Expired`] — the client reconnects rather than
+/// talking to a stranger's session table.
+pub struct GatewaySession {
+    registry: ShardRegistry<GatewayActorState>,
+    shard_idx: usize,
+    epoch: u64,
+    incarnation: u64,
+    id: SessionId,
+    counters: Arc<GatewayCounters>,
+}
+
+impl GatewaySession {
+    pub fn id(&self) -> SessionId {
+        self.id
+    }
+
+    pub fn shard_idx(&self) -> usize {
+        self.shard_idx
+    }
+
+    /// The producing incarnation, if still live under the lease.
+    fn resolve(
+        &self,
+    ) -> Result<crate::actor::ActorHandle<GatewayActorState>, SessionError>
+    {
+        match self.registry.get_live(self.shard_idx) {
+            Some((handle, epoch))
+                if epoch == self.epoch
+                    && handle.id() == self.incarnation =>
+            {
+                Ok(handle)
+            }
+            _ => {
+                self.counters.sessions_lost.fetch_add(1, Relaxed);
+                Err(SessionError::Expired)
+            }
+        }
+    }
+
+    /// Submit `obs` and block for the served action.  The submit is a
+    /// non-blocking cast — a full shard mailbox sheds the request here
+    /// ([`SessionError::Shed`], counted) instead of queueing into a
+    /// stall.  The poll that follows rides the mailbox-FIFO batching
+    /// described in the module docs.
+    pub fn request_action(
+        &self,
+        obs: &[f32],
+    ) -> Result<ActionOutput, SessionError> {
+        let handle = self.resolve()?;
+        let id = self.id;
+        for _attempt in 0..MAX_SUBMIT_ATTEMPTS {
+            let o = obs.to_vec();
+            match handle.try_cast(move |ga| ga.submit_obs(id, &o)) {
+                Ok(()) => {}
+                Err(TryCastError::Full) => {
+                    self.counters.casts_shed.fetch_add(1, Relaxed);
+                    return Err(SessionError::Shed);
+                }
+                Err(TryCastError::Dead) => {
+                    self.counters.sessions_lost.fetch_add(1, Relaxed);
+                    return Err(SessionError::Expired);
+                }
+            }
+            let mut backoff = Backoff::new(
+                DEFAULT_GATEWAY_POLL_BACKOFF_BASE,
+                DEFAULT_GATEWAY_POLL_BACKOFF_CAP,
+            );
+            loop {
+                match handle.call(move |ga| ga.poll(id)) {
+                    Ok(Ok(Some(action))) => {
+                        self.counters.actions.fetch_add(1, Relaxed);
+                        return Ok(action);
+                    }
+                    // Queued but unserved — only possible when another
+                    // client's poll raced ours out of the tick; the
+                    // next poll serves it.
+                    Ok(Ok(None)) => {
+                        std::thread::sleep(backoff.next_delay())
+                    }
+                    // "take before submit": our submit cast was lost
+                    // (fault injection / mailbox drop) — re-submit.
+                    Ok(Err(SessionError::Protocol(_))) => break,
+                    Ok(Err(e)) => return Err(e),
+                    Err(_) => {
+                        self.counters.sessions_lost.fetch_add(1, Relaxed);
+                        return Err(SessionError::Expired);
+                    }
+                }
+            }
+        }
+        Err(SessionError::Expired)
+    }
+
+    /// Log reward earned since the last action (fire-and-forget).
+    pub fn log_reward(&self, reward: f32) -> Result<(), SessionError> {
+        let handle = self.resolve()?;
+        let id = self.id;
+        handle.cast(move |ga| ga.log_reward(id, reward));
+        Ok(())
+    }
+
+    /// Close the episode, consuming the handle.
+    pub fn end(
+        self,
+        final_obs: Option<&[f32]>,
+    ) -> Result<EpisodeRecord, SessionError> {
+        let handle = self.resolve()?;
+        let id = self.id;
+        let obs = final_obs.map(|o| o.to_vec());
+        match handle.call(move |ga| ga.end_episode(id, obs)) {
+            Ok(r) => r,
+            Err(_) => {
+                self.counters.sessions_lost.fetch_add(1, Relaxed);
+                Err(SessionError::Expired)
+            }
+        }
+    }
+}
+
+/// `GatewayExperience(service, num_async)`: an endless stream of
+/// experience fragments gathered through the shard registry — the
+/// transitions served episodes left behind, ready to store into the
+/// replay tier.  Shards without a full fragment yield `None` after an
+/// exponential backoff (never blocking, so a `Concurrently` composition
+/// cannot deadlock on a quiet gateway).
+pub fn gateway_experience(
+    service: &GatewayService,
+    num_async: usize,
+) -> LocalIter<Option<SampleBatch>> {
+    let counters = service.counters();
+    let mut backoff = Backoff::new(
+        DEFAULT_GATEWAY_EXPERIENCE_BACKOFF_BASE,
+        DEFAULT_GATEWAY_EXPERIENCE_BACKOFF_CAP,
+    );
+    ParIter::from_registry(
+        service.registry().clone(),
+        |ga: &mut GatewayActorState| Some(ga.pump_fragment()),
+    )
+    .gather_async(num_async)
+    .for_each(move |maybe| match maybe {
+        Some(batch) => {
+            backoff.reset();
+            counters.fragments.fetch_add(1, Relaxed);
+            Some(batch)
+        }
+        None => {
+            std::thread::sleep(backoff.next_delay());
+            None
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::DummyPolicy;
+
+    fn service(shards: usize, max_sessions: usize) -> GatewayService {
+        create_gateway_shards(
+            shards,
+            GatewayConfig {
+                obs_dim: 4,
+                max_sessions,
+                idle_deadline_ns: 200_000_000, // 200ms
+                forgiveness: 1,
+                fragment: 4,
+            },
+            |_slot| Box::new(DummyPolicy::new(0.1)),
+        )
+    }
+
+    #[test]
+    fn session_round_trip_through_the_service() {
+        let svc = service(2, 8);
+        let session = svc.connect().unwrap();
+        for _ in 0..3 {
+            let a = session.request_action(&[0.25; 4]).unwrap();
+            assert!(a.action == 0 || a.action == 1);
+            session.log_reward(1.0).unwrap();
+        }
+        let rec = session.end(Some(&[0.0; 4])).unwrap();
+        assert_eq!(rec.length, 3);
+        assert!((rec.reward - 3.0).abs() < 1e-6);
+        let stats = svc.backlog_stats();
+        assert_eq!(stats.completed, 1);
+        assert_eq!(stats.sessions, 0);
+        assert!(svc.counters().actions.load(Relaxed) >= 3);
+    }
+
+    #[test]
+    fn connect_round_robins_live_shards() {
+        let svc = service(2, 8);
+        let sessions: Vec<GatewaySession> =
+            (0..4).map(|_| svc.connect().unwrap()).collect();
+        let shards: std::collections::BTreeSet<usize> =
+            sessions.iter().map(|s| s.shard_idx()).collect();
+        assert_eq!(shards.len(), 2, "connects must spread over shards");
+        for s in sessions {
+            s.end(None).unwrap();
+        }
+    }
+
+    #[test]
+    fn connect_sheds_when_every_shard_is_full() {
+        let svc = service(2, 1);
+        let held: Vec<GatewaySession> =
+            (0..2).map(|_| svc.connect().unwrap()).collect();
+        assert!(matches!(svc.connect(), Err(SessionError::Shed)));
+        assert!(svc.counters().connect_shed.load(Relaxed) >= 1);
+        assert!(svc.backlog_stats().shed >= 1);
+        drop(held);
+    }
+
+    #[test]
+    fn push_weights_reaches_live_shards() {
+        let svc = service(2, 8);
+        svc.push_weights(vec![42.0].into());
+        // try_cast is async — wait for the applies via a barrier call.
+        for i in svc.registry().live_indices() {
+            let (h, _) = svc.registry().get_live(i).unwrap();
+            let w = h.call(|ga| ga.policy.get_weights()).unwrap();
+            assert_eq!(w, vec![42.0]);
+        }
+    }
+
+    #[test]
+    fn lease_fences_a_restarted_shard() {
+        let svc = service(1, 8);
+        let session = svc.connect().unwrap();
+        let (shard, epoch0) = svc.registry().get_live(0).unwrap();
+        // Kill and restart: new incarnation, bumped epoch.
+        assert!(shard.call(|_| -> () { panic!("fault injection") }).is_err());
+        assert!(shard.await_poisoned(Duration::from_secs(2)));
+        assert_eq!(svc.set().restart_dead(), vec![0]);
+        assert!(svc.registry().epoch(0) > epoch0);
+        assert!(matches!(
+            session.request_action(&[0.0; 4]),
+            Err(SessionError::Expired)
+        ));
+        assert!(svc.counters().sessions_lost.load(Relaxed) >= 1);
+        // Fresh connects reach the new incarnation.
+        let s2 = svc.connect().unwrap();
+        assert!(s2.request_action(&[0.0; 4]).is_ok());
+        s2.end(None).unwrap();
+    }
+
+    #[test]
+    fn experience_stream_yields_serving_transitions() {
+        let svc = service(1, 8);
+        let session = svc.connect().unwrap();
+        // 5 actions + terminal = 5 transitions >= fragment of 4.
+        for _ in 0..5 {
+            session.request_action(&[0.5; 4]).unwrap();
+            session.log_reward(1.0).unwrap();
+        }
+        session.end(None).unwrap();
+        let mut stream = gateway_experience(&svc, 1);
+        let batch = loop {
+            if let Some(b) = stream.next().unwrap() {
+                break b;
+            }
+        };
+        assert!(batch.len() >= 4);
+        assert_eq!(svc.counters().fragments.load(Relaxed), 1);
+        assert!(svc.backlog_stats().transitions >= 4);
+    }
+
+    #[test]
+    fn metrics_drain_reports_gateway_episodes() {
+        let svc = service(2, 8);
+        for _ in 0..3 {
+            let s = svc.connect().unwrap();
+            s.request_action(&[0.1; 4]).unwrap();
+            s.log_reward(2.0).unwrap();
+            s.end(None).unwrap();
+        }
+        let (episodes, steps) = svc.set().collect_metrics();
+        assert_eq!(episodes.len(), 3);
+        assert_eq!(steps, 3);
+        assert!(episodes.iter().all(|e| (e.reward - 2.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn scale_up_spreads_new_connects() {
+        let svc = service(1, 64);
+        assert_eq!(svc.num_live_shards(), 1);
+        svc.scale_to(3).unwrap();
+        assert_eq!(svc.num_live_shards(), 3);
+        let shards: std::collections::BTreeSet<usize> = (0..6)
+            .map(|_| {
+                let s = svc.connect().unwrap();
+                let idx = s.shard_idx();
+                s.end(None).unwrap();
+                idx
+            })
+            .collect();
+        assert!(shards.len() >= 2, "grown shards must receive connects");
+    }
+}

@@ -4,12 +4,22 @@
 //! of every live actor's runtime telemetry (queue depth, utilization,
 //! supervision state) so each report shows *where* the pipeline is
 //! starved, not just how fast it moved.
+//!
+//! One builder, [`Reporting`], is the single entry point: start from
+//! the training stream and the worker set, then opt sections in —
+//! [`Reporting::autoscale`] closes the sampler elasticity loop,
+//! [`Reporting::replay`] attaches (and optionally autoscales) a replay
+//! tier, [`Reporting::gateway`] an external-episode gateway tier.  The
+//! four historical free functions (`standard_metrics_reporting`,
+//! `autoscaled_metrics_reporting`, `replay_metrics_reporting`, and
+//! `algorithms::ma_metrics_reporting`) are deprecated shims over it.
 
 use crate::actor::{ActorHandle, Autoscaler};
 use crate::iter::LocalIter;
 use crate::metrics::{EpisodeRecord, MetricsHub, TrainResult};
-use crate::rollout::{WorkerMetrics, WorkerSet};
+use crate::rollout::{RolloutWorker, WorkerMetrics, WorkerSet};
 
+use super::gateway_ops::GatewayService;
 use super::replay_ops::ReplayService;
 use super::TrainItem;
 
@@ -17,8 +27,8 @@ use super::TrainItem;
 /// worker actor in parallel (a poisoned worker's reply resolves to Err
 /// and is skipped — a worker fault must not panic the driver), then
 /// snapshot the hub with the actor-telemetry registry attached.  Used
-/// by [`standard_metrics_reporting`] and the multi-agent variant so the
-/// two cannot drift.
+/// by [`Reporting`] (and therefore every worker flavor) so the reports
+/// cannot drift.
 pub(crate) fn drain_and_snapshot<A: 'static>(
     hub: &mut MetricsHub,
     local: &ActorHandle<A>,
@@ -71,61 +81,210 @@ pub(crate) fn drive_autoscaler<W: 'static>(
     snap.autoscale = Some(a.stats());
 }
 
-/// Wrap a training stream: each output pulls `items_per_report` train
-/// items, drains episode metrics from all workers (dead workers are
-/// skipped, not fatal), and emits a `TrainResult` snapshot carrying
-/// per-actor utilization/queue-depth stats plus the weight-cast
-/// eviction counters and the set's elastic scale events
-/// (`TrainResult::scale`, rendered by `pipeline_summary()`).
+/// The one metrics-reporting entry point: a builder from a training
+/// stream + worker set to the terminal `TrainResult` stream, with the
+/// optional telemetry/elasticity sections opted in per plan:
 ///
-/// Workers are resolved through the set's **shard registry** at every
-/// report, not captured at build time — a worker restarted by
-/// `WorkerSet::restart_dead` mid-training has its episodes drained
-/// from the first report after the restart.
+/// ```ignore
+/// Reporting::new(train_op, &workers, 2)
+///     .autoscale(sampler_controller)             // sampler pool loop
+///     .replay(&replay_service, Some(replay_ctl)) // replay tier
+///     .gateway(&gateway_service, Some(gw_ctl))   // gateway tier
+///     .build()
+/// ```
+///
+/// Each output pulls `items_per_report` train items, drains episode
+/// metrics from all workers (dead workers are skipped, not fatal — a
+/// worker restarted by `WorkerSet::restart_dead` mid-training is
+/// drained from the first report after the restart, since workers are
+/// resolved through the set's shard registry at every report), and
+/// emits a `TrainResult` carrying per-actor utilization/queue-depth
+/// stats, the set's elastic scale events, fault-supervision counters,
+/// and — iff the set has a sole broadcast lane
+/// ([`WorkerSet::sole_caster_stats`]) — the weight-cast eviction
+/// counters.  Works over any `WorkerSet<W: WorkerMetrics>`: rollout
+/// workers, multi-agent workers, and gateway shards all report through
+/// the same tail, so dead-worker handling cannot drift between them.
+pub struct Reporting<W: 'static = RolloutWorker> {
+    inner: LocalIter<TrainItem>,
+    workers: WorkerSet<W>,
+    items_per_report: usize,
+    autoscaler: Option<Autoscaler>,
+    replay: Option<(ReplayService, Option<Autoscaler>)>,
+    gateway: Option<(GatewayService, Option<Autoscaler>)>,
+}
+
+impl<W: WorkerMetrics + 'static> Reporting<W> {
+    pub fn new(
+        inner: LocalIter<TrainItem>,
+        workers: &WorkerSet<W>,
+        items_per_report: usize,
+    ) -> Self {
+        assert!(items_per_report >= 1);
+        Reporting {
+            inner,
+            workers: workers.clone(),
+            items_per_report,
+            autoscaler: None,
+            replay: None,
+            gateway: None,
+        }
+    }
+
+    /// Close the elasticity loop over the **worker pool**: the
+    /// controller samples each report's telemetry (learner busy/idle
+    /// interval ratio, sampler queue depth, weight-cast shed counters
+    /// when a sole lane exists) and its directives are applied with
+    /// `WorkerSet::scale_to` — an idle-learner workload converges to a
+    /// larger sampler pool and a saturated one scales back down, with
+    /// no manual `scale_to` calls.  Decision counters ride every
+    /// `TrainResult::autoscale`; a failed apply (learner dead,
+    /// registry full) is counted, not fatal.
+    pub fn autoscale(mut self, controller: Autoscaler) -> Self {
+        self.autoscaler = Some(controller);
+        self
+    }
+
+    /// Attach a replay tier: every report snapshots the
+    /// [`ReplayService`]'s backlog telemetry into
+    /// `TrainResult::replay`, and — when `controller` is given — runs
+    /// one replay control step per report (`Autoscaler::replay_signals`
+    /// + `decide_replay`) and applies its directive with
+    /// `ReplayService::scale_to`, closing the elasticity loop over the
+    /// **replay-shard pool**.  The controller is an independent
+    /// instance from [`Reporting::autoscale`]'s (counters land in
+    /// `TrainResult::replay_autoscale` vs `TrainResult::autoscale`).
+    pub fn replay(
+        mut self,
+        service: &ReplayService,
+        controller: Option<Autoscaler>,
+    ) -> Self {
+        self.replay = Some((service.clone(), controller));
+        self
+    }
+
+    /// Attach an external-episode gateway tier: every report snapshots
+    /// the [`GatewayService`]'s backlog telemetry (sessions held,
+    /// pending requests, p99 action latency, admission sheds, batch
+    /// fill) into `TrainResult::gateway`, and — when `controller` is
+    /// given — runs one gateway control step per report
+    /// (`Autoscaler::gateway_signals` + `decide_gateway`) and applies
+    /// its directive with `GatewayService::scale_to`, making gateway
+    /// backlog the third autoscaled axis next to the sampler and
+    /// replay pools.
+    pub fn gateway(
+        mut self,
+        service: &GatewayService,
+        controller: Option<Autoscaler>,
+    ) -> Self {
+        self.gateway = Some((service.clone(), controller));
+        self
+    }
+
+    /// Finish the plan: the terminal `TrainResult` stream.
+    pub fn build(self) -> LocalIter<TrainResult> {
+        let Reporting {
+            mut inner,
+            workers,
+            items_per_report,
+            mut autoscaler,
+            mut replay,
+            mut gateway,
+        } = self;
+        let mut hub = MetricsHub::new(100);
+        let local = workers.local.clone();
+        let registry = workers.registry().clone();
+        let scale = workers.scale_counters();
+        let fault_counters = workers.fault_counters();
+        let set = workers;
+        LocalIter::from_fn(move || {
+            for _ in 0..items_per_report {
+                let item = inner.next()?;
+                hub.num_env_steps_trained += item.steps_trained as u64;
+                hub.num_grad_updates += 1;
+                for (k, v) in item.stats {
+                    hub.record_learner_stat(&k, v);
+                }
+            }
+            let handles = registry.handles();
+            let mut snap =
+                drain_and_snapshot(&mut hub, &local, &handles, |w| {
+                    w.drain_metrics()
+                });
+            snap.weight_casts = set.sole_caster_stats();
+            if let Some(a) = autoscaler.as_mut() {
+                drive_autoscaler(a, &mut snap, &set, local.id(), &handles);
+            }
+            if let Some((service, controller)) = replay.as_mut() {
+                let backlog = service.backlog_stats();
+                snap.replay = Some(backlog);
+                if let Some(a) = controller.as_mut() {
+                    let signals = a.replay_signals(&backlog);
+                    if let Some(d) = a.decide_replay(&signals) {
+                        if service.scale_to(d.target).is_err() {
+                            a.note_failed();
+                        }
+                    }
+                    snap.replay_autoscale = Some(a.stats());
+                }
+            }
+            if let Some((service, controller)) = gateway.as_mut() {
+                let backlog = service.backlog_stats();
+                snap.gateway = Some(backlog);
+                if let Some(a) = controller.as_mut() {
+                    let signals = a.gateway_signals(&backlog);
+                    if let Some(d) = a.decide_gateway(&signals) {
+                        if service.scale_to(d.target).is_err() {
+                            a.note_failed();
+                        }
+                    }
+                    snap.gateway_autoscale = Some(a.stats());
+                }
+            }
+            snap.scale =
+                Some(scale.stats(registry.num_live(), registry.len()));
+            snap.faults = Some(fault_counters.snapshot());
+            Some(snap)
+        })
+    }
+}
+
+/// Deprecated shim over [`Reporting`].
+#[deprecated(
+    since = "0.8.0",
+    note = "use ops::Reporting::new(inner, workers, items_per_report)\
+            .build()"
+)]
 pub fn standard_metrics_reporting(
     inner: LocalIter<TrainItem>,
     workers: &WorkerSet,
     items_per_report: usize,
 ) -> LocalIter<TrainResult> {
-    reporting_with_controller(inner, workers, items_per_report, None, None)
+    Reporting::new(inner, workers, items_per_report).build()
 }
 
-/// [`standard_metrics_reporting`] with the elasticity loop **closed**:
-/// an [`Autoscaler`] samples each report's telemetry (learner busy/idle
-/// interval ratio, sampler queue depth, weight-cast shed counters) and
-/// its directives are applied with `WorkerSet::scale_to` — an
-/// idle-learner workload converges to a larger sampler pool and a
-/// saturated one scales back down, with no manual `scale_to` calls.
-/// Decision counters ride every `TrainResult::autoscale`
-/// (`autoscale=t<target>(up/down/hold/fail)` in `pipeline_summary()`);
-/// a failed apply (learner dead, registry full) is counted, not fatal.
+/// Deprecated shim over [`Reporting`].
+#[deprecated(
+    since = "0.8.0",
+    note = "use ops::Reporting::new(..).autoscale(controller).build()"
+)]
 pub fn autoscaled_metrics_reporting(
     inner: LocalIter<TrainItem>,
     workers: &WorkerSet,
     items_per_report: usize,
     autoscaler: Autoscaler,
 ) -> LocalIter<TrainResult> {
-    reporting_with_controller(
-        inner,
-        workers,
-        items_per_report,
-        Some(autoscaler),
-        None,
-    )
+    Reporting::new(inner, workers, items_per_report)
+        .autoscale(autoscaler)
+        .build()
 }
 
-/// [`standard_metrics_reporting`] for plans with a replay tier: every
-/// report additionally snapshots the [`ReplayService`]'s backlog
-/// telemetry into `TrainResult::replay`, and — when `replay_autoscaler`
-/// is given — runs one replay control step per report
-/// (`Autoscaler::replay_signals` + `decide_replay`) and applies its
-/// directive with `ReplayService::scale_to`, closing the elasticity
-/// loop over the **replay-shard pool** the way
-/// [`autoscaled_metrics_reporting`] closes it over the sampler pool.
-/// `sampler_autoscaler` optionally drives the sampler pool at the same
-/// time; the two controllers are independent instances (decision
-/// counters land in `TrainResult::autoscale` vs
-/// `TrainResult::replay_autoscale`).
+/// Deprecated shim over [`Reporting`].
+#[deprecated(
+    since = "0.8.0",
+    note = "use ops::Reporting::new(..).replay(service, controller)\
+            .build(), with .autoscale(..) for the sampler loop"
+)]
 pub fn replay_metrics_reporting(
     inner: LocalIter<TrainItem>,
     workers: &WorkerSet,
@@ -134,65 +293,12 @@ pub fn replay_metrics_reporting(
     replay: &ReplayService,
     replay_autoscaler: Option<Autoscaler>,
 ) -> LocalIter<TrainResult> {
-    reporting_with_controller(
-        inner,
-        workers,
-        items_per_report,
-        sampler_autoscaler,
-        Some((replay.clone(), replay_autoscaler)),
-    )
-}
-
-fn reporting_with_controller(
-    inner: LocalIter<TrainItem>,
-    workers: &WorkerSet,
-    items_per_report: usize,
-    mut autoscaler: Option<Autoscaler>,
-    mut replay: Option<(ReplayService, Option<Autoscaler>)>,
-) -> LocalIter<TrainResult> {
-    assert!(items_per_report >= 1);
-    let mut inner = inner;
-    let mut hub = MetricsHub::new(100);
-    let local = workers.local.clone();
-    let registry = workers.registry().clone();
-    let caster = workers.caster();
-    let scale = workers.scale_counters();
-    let fault_counters = workers.fault_counters();
-    let set = workers.clone();
-    LocalIter::from_fn(move || {
-        for _ in 0..items_per_report {
-            let item = inner.next()?;
-            hub.num_env_steps_trained += item.steps_trained as u64;
-            hub.num_grad_updates += 1;
-            for (k, v) in item.stats {
-                hub.record_learner_stat(&k, v);
-            }
-        }
-        let handles = registry.handles();
-        let mut snap = drain_and_snapshot(&mut hub, &local, &handles, |w| {
-            w.drain_metrics()
-        });
-        snap.weight_casts = Some(caster.stats());
-        if let Some(a) = autoscaler.as_mut() {
-            drive_autoscaler(a, &mut snap, &set, local.id(), &handles);
-        }
-        if let Some((service, controller)) = replay.as_mut() {
-            let backlog = service.backlog_stats();
-            snap.replay = Some(backlog);
-            if let Some(a) = controller.as_mut() {
-                let signals = a.replay_signals(&backlog);
-                if let Some(d) = a.decide_replay(&signals) {
-                    if service.scale_to(d.target).is_err() {
-                        a.note_failed();
-                    }
-                }
-                snap.replay_autoscale = Some(a.stats());
-            }
-        }
-        snap.scale = Some(scale.stats(registry.num_live(), registry.len()));
-        snap.faults = Some(fault_counters.snapshot());
-        Some(snap)
-    })
+    let mut r = Reporting::new(inner, workers, items_per_report)
+        .replay(replay, replay_autoscaler);
+    if let Some(a) = sampler_autoscaler {
+        r = r.autoscale(a);
+    }
+    r.build()
 }
 
 #[cfg(test)]
@@ -226,7 +332,7 @@ mod tests {
             .gather_async(1)
             .for_each(move |b| train(b));
         let mut reports =
-            standard_metrics_reporting(train_op, &workers, 2).take(3);
+            Reporting::new(train_op, &workers, 2).build().take(3);
         let mut last = None;
         while let Some(r) = reports.next() {
             last = Some(r);
@@ -287,14 +393,9 @@ mod tests {
         let train_op = parallel_rollouts_from(&workers)
             .gather_async(1)
             .for_each(move |b| train(b));
-        let mut reports = replay_metrics_reporting(
-            train_op,
-            &workers,
-            1,
-            None,
-            &service,
-            Some(controller),
-        );
+        let mut reports = Reporting::new(train_op, &workers, 1)
+            .replay(&service, Some(controller))
+            .build();
 
         // Report 1: a quiet tier — backlog telemetry attached, no
         // directive (empty mailboxes, no idle pressure yet).
@@ -339,7 +440,7 @@ mod tests {
         let train_op = parallel_rollouts_from(&workers)
             .gather_async(1)
             .for_each(move |b| train(b));
-        let mut reports = standard_metrics_reporting(train_op, &workers, 1);
+        let mut reports = Reporting::new(train_op, &workers, 1).build();
         assert!(reports.next().is_some());
 
         let victim = workers.remote(0).expect("live remote");

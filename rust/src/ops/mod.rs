@@ -7,6 +7,7 @@
 //! nothing but short compositions of these — which is the paper's whole
 //! point.
 
+mod gateway_ops;
 mod metrics_ops;
 mod replay_ops;
 mod rollout_ops;
@@ -14,6 +15,15 @@ mod train_ops;
 
 use std::collections::BTreeMap;
 
+pub use gateway_ops::{
+    create_gateway_shards, gateway_experience, GatewayActorState,
+    GatewayCounters, GatewayService, GatewaySession, GatewayShardGauge,
+    DEFAULT_GATEWAY_EXPERIENCE_BACKOFF_BASE,
+    DEFAULT_GATEWAY_EXPERIENCE_BACKOFF_CAP,
+    DEFAULT_GATEWAY_POLL_BACKOFF_BASE, DEFAULT_GATEWAY_POLL_BACKOFF_CAP,
+};
+pub use metrics_ops::Reporting;
+#[allow(deprecated)]
 pub use metrics_ops::{
     autoscaled_metrics_reporting, replay_metrics_reporting,
     standard_metrics_reporting,

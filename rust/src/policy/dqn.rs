@@ -31,6 +31,9 @@ pub struct DqnPolicy {
     ones: Vec<f32>,
     /// Reused importance-weight buffer for `compute_gradients`.
     weights_scratch: Vec<f32>,
+    /// Reused flat Q-value output buffer for `q_values` — the greedy
+    /// action loop allocates nothing once this is warm.
+    q_scratch: Vec<f32>,
 }
 
 impl DqnPolicy {
@@ -56,6 +59,7 @@ impl DqnPolicy {
             pad_scratch: vec![0.0; pad],
             ones: vec![1.0; mb],
             weights_scratch: Vec::with_capacity(mb),
+            q_scratch: Vec::new(),
         }
     }
 
@@ -71,21 +75,23 @@ impl DqnPolicy {
         Self::new(rt, lr, epsilon, seed)
     }
 
-    /// Q-values for `n` rows, flat row-major `[n * num_actions]`
-    /// (padded/chunked to the artifact batch; the pad buffer is a
-    /// reused scratch — one output allocation, no per-row Vecs).
-    fn q_values(&mut self, obs: &[f32], n: usize) -> Vec<f32> {
+    /// Q-values for `n` rows, written flat row-major
+    /// `[n * num_actions]` into `out` (cleared first; padded/chunked to
+    /// the artifact batch; the pad buffer is a reused scratch — no
+    /// per-row Vecs, no per-call output allocation once `out` is warm).
+    fn q_values_into(&mut self, obs: &[f32], n: usize, out: &mut Vec<f32>) {
         let (bi, od, na) = {
             let cfg = &self.rt.manifest.config;
             (cfg.inf_batch, cfg.obs_dim, cfg.num_actions)
         };
-        let mut out_flat = Vec::with_capacity(n * na);
+        out.clear();
+        out.reserve(n * na);
         for chunk_start in (0..n).step_by(bi) {
             let rows = (n - chunk_start).min(bi);
             self.pad_scratch[..rows * od]
                 .copy_from_slice(&obs[chunk_start * od..(chunk_start + rows) * od]);
             self.pad_scratch[rows * od..].fill(0.0);
-            let out = self
+            let chunk = self
                 .rt
                 .exe("dqn_q_fwd")
                 .run(&[
@@ -93,33 +99,39 @@ impl DqnPolicy {
                     TensorArg::F32(&self.pad_scratch),
                 ])
                 .expect("dqn_q_fwd");
-            out_flat.extend_from_slice(&out[0][..rows * na]);
+            out.extend_from_slice(&chunk[0][..rows * na]);
         }
-        out_flat
     }
 }
 
 impl Policy for DqnPolicy {
-    fn compute_actions(&mut self, obs: &[f32], n: usize) -> Vec<ActionOutput> {
+    fn compute_actions_into(
+        &mut self,
+        obs: &[f32],
+        n: usize,
+        out: &mut Vec<ActionOutput>,
+    ) {
         let na = self.rt.manifest.config.num_actions;
-        let q = self.q_values(obs, n);
+        let mut q = std::mem::take(&mut self.q_scratch);
+        self.q_values_into(obs, n, &mut q);
         let epsilon = self.epsilon;
         let rng = &mut self.rng;
-        (0..n)
-            .map(|i| {
-                let row = &q[i * na..(i + 1) * na];
-                let action = if rng.chance(epsilon) {
-                    rng.below(na) as i32
-                } else {
-                    row.iter()
-                        .enumerate()
-                        .max_by(|a, b| a.1.total_cmp(b.1))
-                        .map(|(j, _)| j as i32)
-                        .unwrap()
-                };
-                ActionOutput { action, logp: 0.0, value: 0.0 }
-            })
-            .collect()
+        out.clear();
+        out.reserve(n);
+        for i in 0..n {
+            let row = &q[i * na..(i + 1) * na];
+            let action = if rng.chance(epsilon) {
+                rng.below(na) as i32
+            } else {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .map(|(j, _)| j as i32)
+                    .unwrap()
+            };
+            out.push(ActionOutput { action, logp: 0.0, value: 0.0 });
+        }
+        self.q_scratch = q;
     }
 
     fn compute_gradients(&mut self, batch: &SampleBatch) -> Gradients {

@@ -22,16 +22,6 @@ impl DummyPolicy {
 }
 
 impl Policy for DummyPolicy {
-    fn compute_actions(&mut self, _obs: &[f32], n: usize) -> Vec<ActionOutput> {
-        (0..n)
-            .map(|_| ActionOutput {
-                action: self.rng.below(2) as i32,
-                logp: -std::f32::consts::LN_2,
-                value: 0.0,
-            })
-            .collect()
-    }
-
     fn compute_actions_into(
         &mut self,
         _obs: &[f32],

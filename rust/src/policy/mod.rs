@@ -41,22 +41,30 @@ pub struct Gradients {
 ///
 /// Not `Send`: XLA-backed policies hold a PJRT client (`Rc` inside);
 /// they live and die on one actor thread.
+/// The buffer-writing `*_into` forms are the canonical interface: the
+/// rollout and gateway hot paths reuse caller-owned buffers, so
+/// [`Policy::compute_actions_into`] is what every policy must
+/// implement.  The allocating [`Policy::compute_actions`] is a default
+/// convenience wrapper on top of it.
 pub trait Policy {
-    /// Batched action computation for `n` observation rows.
-    fn compute_actions(&mut self, obs: &[f32], n: usize) -> Vec<ActionOutput>;
-
-    /// Batched action computation into a caller-owned buffer (cleared
-    /// first).  The default delegates to [`Policy::compute_actions`];
-    /// policies on the rollout hot path override to reuse `out`'s
-    /// capacity so the steady-state sampling loop never allocates.
+    /// Batched action computation for `n` observation rows, written
+    /// into a caller-owned buffer (cleared first).  Implementations
+    /// reuse `out`'s capacity so the steady-state sampling loop never
+    /// allocates.
     fn compute_actions_into(
         &mut self,
         obs: &[f32],
         n: usize,
         out: &mut Vec<ActionOutput>,
-    ) {
-        out.clear();
-        out.extend(self.compute_actions(obs, n));
+    );
+
+    /// Batched action computation for `n` observation rows.
+    /// Convenience wrapper over [`Policy::compute_actions_into`] —
+    /// allocates one `Vec` per call, so keep it off hot paths.
+    fn compute_actions(&mut self, obs: &[f32], n: usize) -> Vec<ActionOutput> {
+        let mut out = Vec::with_capacity(n);
+        self.compute_actions_into(obs, n, &mut out);
+        out
     }
 
     /// Gradients of the policy loss on `batch` (no apply).
@@ -83,11 +91,26 @@ pub trait Policy {
         0.0
     }
 
-    /// Batched value predictions for `n` rows (one forward call for all
-    /// bootstrap values — perf, EXPERIMENTS.md §Perf O2).
-    fn values(&mut self, obs: &[f32], n: usize) -> Vec<f32> {
+    /// Batched value predictions for `n` rows, written into a
+    /// caller-owned buffer (cleared first) — the GAE bootstrap forward
+    /// reuses one scratch `Vec` across fragments instead of allocating
+    /// per call.  The default loops [`Policy::value`]; batched-forward
+    /// policies override to run one `[n, obs_dim]` forward.
+    fn values_into(&mut self, obs: &[f32], n: usize, out: &mut Vec<f32>) {
+        out.clear();
         let obs_dim = obs.len() / n.max(1);
-        (0..n).map(|i| self.value(&obs[i * obs_dim..(i + 1) * obs_dim])).collect()
+        for i in 0..n {
+            out.push(self.value(&obs[i * obs_dim..(i + 1) * obs_dim]));
+        }
+    }
+
+    /// Batched value predictions for `n` rows (one forward call for all
+    /// bootstrap values — perf, EXPERIMENTS.md §Perf O2).  Convenience
+    /// wrapper over [`Policy::values_into`].
+    fn values(&mut self, obs: &[f32], n: usize) -> Vec<f32> {
+        let mut out = Vec::with_capacity(n);
+        self.values_into(obs, n, &mut out);
+        out
     }
 
     fn get_weights(&self) -> Vec<f32>;

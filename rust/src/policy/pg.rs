@@ -246,23 +246,27 @@ impl PgPolicy {
 }
 
 impl Policy for PgPolicy {
-    fn compute_actions(&mut self, obs: &[f32], n: usize) -> Vec<ActionOutput> {
+    fn compute_actions_into(
+        &mut self,
+        obs: &[f32],
+        n: usize,
+        out: &mut Vec<ActionOutput>,
+    ) {
         let na = self.core.rt.manifest.config.num_actions;
         // Forward into the policy-owned scratches (taken locally so the
         // sampling loop can borrow the rng mutably).
         let mut logits = std::mem::take(&mut self.logits_scratch);
         let mut values = std::mem::take(&mut self.values_scratch);
         self.core.forward(obs, n, &mut logits, &mut values);
-        let out = (0..n)
-            .map(|i| {
-                let row = &logits[i * na..(i + 1) * na];
-                let (action, logp) = sample_categorical(row, &mut self.core.rng);
-                ActionOutput { action, logp, value: values[i] }
-            })
-            .collect();
+        out.clear();
+        out.reserve(n);
+        for i in 0..n {
+            let row = &logits[i * na..(i + 1) * na];
+            let (action, logp) = sample_categorical(row, &mut self.core.rng);
+            out.push(ActionOutput { action, logp, value: values[i] });
+        }
         self.logits_scratch = logits;
         self.values_scratch = values;
-        out
     }
 
     fn compute_gradients(&mut self, batch: &SampleBatch) -> Gradients {
@@ -324,14 +328,13 @@ impl Policy for PgPolicy {
         v
     }
 
-    fn values(&mut self, obs: &[f32], n: usize) -> Vec<f32> {
-        // The trait returns an owned Vec (called once per fragment for
-        // GAE bootstraps); only the logits buffer is recycled here.
+    fn values_into(&mut self, obs: &[f32], n: usize, out: &mut Vec<f32>) {
+        // One [n, obs_dim] forward; values land straight in the caller's
+        // buffer (the GAE bootstrap reuses one scratch per fragment) and
+        // only the logits buffer is recycled here.
         let mut logits = std::mem::take(&mut self.logits_scratch);
-        let mut values = Vec::with_capacity(n);
-        self.core.forward(obs, n, &mut logits, &mut values);
+        self.core.forward(obs, n, &mut logits, out);
         self.logits_scratch = logits;
-        values
     }
 
     fn get_weights(&self) -> Vec<f32> {

@@ -6,7 +6,7 @@ use std::collections::BTreeMap;
 
 use crate::env::MultiAgentCartPole;
 use crate::metrics::EpisodeRecord;
-use crate::policy::Policy;
+use crate::policy::{ActionOutput, Policy};
 use crate::sample_batch::{MultiAgentBatch, SampleBatch, SampleBatchBuilder};
 
 pub struct MultiAgentRolloutWorker {
@@ -19,6 +19,16 @@ pub struct MultiAgentRolloutWorker {
     ep_len: BTreeMap<usize, usize>,
     episodes: Vec<EpisodeRecord>,
     pub num_steps_sampled: usize,
+    /// Agent→policy grouping, computed once: the mapping is fixed at
+    /// env construction, so rebuilding it per step was pure churn.
+    by_policy: BTreeMap<String, Vec<usize>>,
+    /// Per-policy reusable scratches for the batched per-step forward:
+    /// flattened `[agents, obs_dim]` observations and the action
+    /// outputs — no per-policy-per-step heap allocation.
+    obs_scratch: BTreeMap<String, Vec<f32>>,
+    actions_scratch: BTreeMap<String, Vec<ActionOutput>>,
+    /// Per-agent action outputs of the current step, indexed by agent.
+    outputs: Vec<ActionOutput>,
 }
 
 impl MultiAgentRolloutWorker {
@@ -30,13 +40,27 @@ impl MultiAgentRolloutWorker {
         let obs = env.reset_all();
         let obs_dim = env.obs_dim();
         let n = env.num_agents();
+        let mut by_policy: BTreeMap<String, Vec<usize>> = BTreeMap::new();
         for agent in 0..n {
             let pid = env.policy_for(agent);
             assert!(
                 policies.contains_key(&pid),
                 "no policy '{pid}' for agent {agent}"
             );
+            by_policy.entry(pid).or_default().push(agent);
         }
+        let obs_scratch = by_policy
+            .iter()
+            .map(|(pid, agents)| {
+                (pid.clone(), Vec::with_capacity(agents.len() * obs_dim))
+            })
+            .collect();
+        let actions_scratch = by_policy
+            .iter()
+            .map(|(pid, agents)| {
+                (pid.clone(), Vec::with_capacity(agents.len()))
+            })
+            .collect();
         MultiAgentRolloutWorker {
             builders: (0..n)
                 .map(|a| (a, SampleBatchBuilder::with_capacity(obs_dim, fragment)))
@@ -49,44 +73,43 @@ impl MultiAgentRolloutWorker {
             obs,
             episodes: Vec::new(),
             num_steps_sampled: 0,
+            by_policy,
+            obs_scratch,
+            actions_scratch,
+            outputs: vec![
+                ActionOutput { action: 0, logp: 0.0, value: 0.0 };
+                n
+            ],
         }
     }
 
     /// Collect a fragment across all agents, grouped by policy id.
-    /// Every policy's `compute_actions` is batched over its agents per
-    /// step; sub-batches are postprocessed by their owning policy.
+    /// Every policy's `compute_actions_into` is batched over its agents
+    /// per step through reusable per-policy scratches; sub-batches are
+    /// postprocessed by their owning policy.
     pub fn sample(&mut self) -> MultiAgentBatch {
         let n = self.env.num_agents();
-        let obs_dim = self.env.obs_dim();
         for _ in 0..self.fragment {
-            // Group agents by policy for batched inference.
-            let mut by_policy: BTreeMap<String, Vec<usize>> = BTreeMap::new();
-            for agent in 0..n {
-                by_policy
-                    .entry(self.env.policy_for(agent))
-                    .or_default()
-                    .push(agent);
-            }
             let mut actions: BTreeMap<usize, i32> = BTreeMap::new();
-            let mut outputs = BTreeMap::new();
-            for (pid, agents) in &by_policy {
-                let mut obs_flat = Vec::with_capacity(agents.len() * obs_dim);
+            for (pid, agents) in &self.by_policy {
+                let obs_flat = self.obs_scratch.get_mut(pid).unwrap();
+                obs_flat.clear();
                 for &a in agents {
                     obs_flat.extend_from_slice(&self.obs[&a]);
                 }
-                let outs = self
-                    .policies
+                let outs = self.actions_scratch.get_mut(pid).unwrap();
+                self.policies
                     .get_mut(pid)
                     .unwrap()
-                    .compute_actions(&obs_flat, agents.len());
-                for (&a, out) in agents.iter().zip(outs) {
+                    .compute_actions_into(obs_flat, agents.len(), outs);
+                for (&a, out) in agents.iter().zip(outs.iter()) {
                     actions.insert(a, out.action);
-                    outputs.insert(a, out);
+                    self.outputs[a] = *out;
                 }
             }
             let results = self.env.step_all(&actions);
             for (agent, (next_obs, reward, done)) in results {
-                let out = outputs[&agent];
+                let out = self.outputs[agent];
                 self.builders.get_mut(&agent).unwrap().add_step_with_next(
                     &self.obs[&agent],
                     out.action,

@@ -49,6 +49,8 @@ pub struct RolloutWorker {
     next_obs_scratch: Vec<f32>,
     /// Reused output buffer for batched action computation.
     actions_scratch: Vec<ActionOutput>,
+    /// Reused output buffer for the per-fragment GAE bootstrap forward.
+    values_scratch: Vec<f32>,
 }
 
 impl RolloutWorker {
@@ -81,6 +83,7 @@ impl RolloutWorker {
             num_steps_sampled: 0,
             next_obs_scratch: vec![0.0; obs_dim],
             actions_scratch: Vec::with_capacity(n),
+            values_scratch: Vec::with_capacity(n),
         }
     }
 
@@ -146,14 +149,16 @@ impl RolloutWorker {
         // Per-env segments: postprocess (GAE) with a bootstrap value of
         // the trailing obs, then concatenate env-major.  All bootstrap
         // values come from one batched forward (perf O2) straight off
-        // the flat obs buffer.
-        let last_values = self.policy.values(&self.obs, n_envs);
+        // the flat obs buffer, into a scratch reused across fragments.
+        let mut last_values = std::mem::take(&mut self.values_scratch);
+        self.policy.values_into(&self.obs, n_envs, &mut last_values);
         let mut segments = Vec::with_capacity(n_envs);
         for e in 0..n_envs {
             let mut seg = self.builders[e].build();
             self.policy.postprocess(&mut seg, last_values[e]);
             segments.push(seg);
         }
+        self.values_scratch = last_values;
         SampleBatch::concat_all(&segments)
     }
 
@@ -492,6 +497,22 @@ impl<W: 'static> WorkerSet<W> {
         caster: std::sync::Arc<WeightCaster<W>>,
     ) {
         self.inner.casters.lock().unwrap().push(caster);
+    }
+
+    /// Counters of the set's **sole** broadcast lane, when it has
+    /// exactly one registered caster (the default lane of
+    /// [`WorkerSet::new`]).  `None` on caster-less protocol sets and on
+    /// multi-caster (per-policy) sets, whose lanes version and shed
+    /// independently — a single `WeightCastStats` would misattribute
+    /// them.  The non-panicking gauge `ops::Reporting` attaches to
+    /// `TrainResult::weight_casts`.
+    pub fn sole_caster_stats(&self) -> Option<WeightCastStats> {
+        let casters = self.inner.casters.lock().unwrap();
+        if casters.len() == 1 {
+            Some(casters[0].stats())
+        } else {
+            None
+        }
     }
 
     /// The elastic shard table behind the remotes.  Plans that gather

@@ -27,8 +27,7 @@ use flowrl::env::{DummyEnv, Env, MultiAgentCartPole};
 use flowrl::iter::ParIter;
 use flowrl::metrics::TrainResult;
 use flowrl::ops::{
-    autoscaled_metrics_reporting, parallel_rollouts_from, train_one_step,
-    TrainItem,
+    parallel_rollouts_from, train_one_step, Reporting, TrainItem,
 };
 use flowrl::policy::{ActionOutput, Gradients, Policy};
 use flowrl::rollout::{
@@ -48,12 +47,18 @@ struct PhasedPolicy {
 }
 
 impl Policy for PhasedPolicy {
-    fn compute_actions(&mut self, _obs: &[f32], n: usize) -> Vec<ActionOutput> {
+    fn compute_actions_into(
+        &mut self,
+        _obs: &[f32],
+        n: usize,
+        out: &mut Vec<ActionOutput>,
+    ) {
         let us = self.sample_us.load(Ordering::Relaxed);
         if us > 0 {
             std::thread::sleep(Duration::from_micros(us));
         }
-        vec![ActionOutput { action: 0, logp: 0.0, value: 0.0 }; n]
+        out.clear();
+        out.resize(n, ActionOutput { action: 0, logp: 0.0, value: 0.0 });
     }
 
     fn compute_gradients(&mut self, batch: &SampleBatch) -> Gradients {
@@ -136,8 +141,9 @@ fn idle_learner_workload_converges_to_larger_pool() {
     let train_op = parallel_rollouts_from(&set)
         .gather_async(1)
         .for_each(move |b| train(b));
-    let mut reports =
-        autoscaled_metrics_reporting(train_op, &set, 1, controller(1, 3));
+    let mut reports = Reporting::new(train_op, &set, 1)
+        .autoscale(controller(1, 3))
+        .build();
 
     let mut last: Option<TrainResult> = None;
     for _ in 0..60 {
@@ -177,8 +183,9 @@ fn saturated_learner_workload_scales_back_down() {
     let train_op = parallel_rollouts_from(&set)
         .gather_async(1)
         .for_each(move |b| train(b));
-    let mut reports =
-        autoscaled_metrics_reporting(train_op, &set, 1, controller(1, 4));
+    let mut reports = Reporting::new(train_op, &set, 1)
+        .autoscale(controller(1, 4))
+        .build();
 
     let mut last: Option<TrainResult> = None;
     for _ in 0..60 {
@@ -205,13 +212,12 @@ fn saturated_learner_workload_scales_back_down() {
 }
 
 /// The multi-agent path rides the same loop: a multi-agent `WorkerSet`
-/// under `ma_metrics_reporting` with a controller grows its pool when
+/// under the generic `ops::Reporting` with a controller grows its pool
+/// when
 /// the (idle) learner signal says so — the satellite's "autoscaler
 /// works there too" criterion.
 #[test]
 fn ma_autoscaler_grows_idle_pool_mid_plan() {
-    use flowrl::algorithms::multi_agent::ma_metrics_reporting;
-
     let sample_us = Arc::new(AtomicU64::new(2_000));
     let s_outer = sample_us.clone();
     let set: WorkerSet<MultiAgentRolloutWorker> = WorkerSet::with_protocol(
@@ -245,8 +251,9 @@ fn ma_autoscaler_grows_idle_pool_mid_plan() {
     let inner = ParIter::from_registry(registry, |w| Some(w.sample()))
         .gather_async(1)
         .for_each(|ma| TrainItem::new(BTreeMap::new(), ma.count()));
-    let mut reports =
-        ma_metrics_reporting(inner, &set, Some(controller(1, 3)));
+    let mut reports = Reporting::new(inner, &set, 1)
+        .autoscale(controller(1, 3))
+        .build();
     for _ in 0..60 {
         assert!(reports.next().is_some(), "ma reporting stopped");
         if set.num_live_remotes() == 3 {
@@ -291,7 +298,7 @@ fn autoscale_soak_idle_grow_busy_shrink() {
         ..AutoscalerConfig::default()
     });
     let mut reports =
-        autoscaled_metrics_reporting(train_op, &set, 1, controller);
+        Reporting::new(train_op, &set, 1).autoscale(controller).build();
 
     // Phase A: idle learner -> grow to 4.
     let mut phase_a_reports = 0;

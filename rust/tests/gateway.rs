@@ -1,0 +1,283 @@
+//! Gateway e2e — concurrent client swarms against the elastic serving
+//! tier: batched-inference coalescing, idle-deadline reaping, admission
+//! control, and (`--ignored`) a connect/disconnect/timeout-mid-episode
+//! churn soak under live shard kill/grow/retire.
+//!
+//! All tests run the dummy policy (no artifacts needed).
+
+use std::sync::atomic::{AtomicBool, Ordering::Relaxed};
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+use flowrl::env::GatewayConfig;
+use flowrl::ops::GatewayService;
+use flowrl::policy::DummyPolicy;
+use flowrl::rollout::RestartPolicy;
+
+fn service(num_shards: usize, cfg: GatewayConfig) -> GatewayService {
+    GatewayService::new(num_shards, cfg, |_slot| {
+        Box::new(DummyPolicy::new(0.01))
+    })
+}
+
+/// Cheap per-thread generator for the soak's behavior rolls.
+struct Lcg(u64);
+
+impl Lcg {
+    fn next(&mut self) -> u64 {
+        self.0 = self
+            .0
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        self.0 >> 33
+    }
+}
+
+/// N clients hammering one shard in lockstep: their concurrent action
+/// requests must coalesce into shared batched forwards (fill > 1), the
+/// whole point of the gateway's serving path.
+#[test]
+fn concurrent_clients_coalesce_into_batched_forwards() {
+    const CLIENTS: usize = 8;
+    const ROUNDS: usize = 40;
+    let svc = service(1, GatewayConfig::default());
+    let barrier = Arc::new(Barrier::new(CLIENTS));
+
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|t| {
+            let svc = svc.clone();
+            let barrier = barrier.clone();
+            std::thread::spawn(move || {
+                let obs = vec![t as f32; 4];
+                let session = svc.connect().expect("connect");
+                for _ in 0..ROUNDS {
+                    barrier.wait();
+                    session.request_action(&obs).expect("serve");
+                    session.log_reward(1.0).expect("reward");
+                }
+                session.end(Some(&obs)).expect("end");
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    let stats = svc.backlog_stats();
+    assert_eq!(stats.completed, CLIENTS as u64);
+    assert_eq!(stats.batched_rows, (CLIENTS * ROUNDS) as u64);
+    assert!(
+        stats.max_batch_fill > 1,
+        "{CLIENTS} lockstep clients never shared a forward \
+         (max fill {})",
+        stats.max_batch_fill
+    );
+    assert!(stats.p99_action_latency_us > 0.0);
+}
+
+/// A client that goes quiet past the idle deadline is reaped (its slot
+/// freed, its lease dead) while an active client on the same shard is
+/// untouched.
+#[test]
+fn idle_client_is_reaped_active_client_is_not() {
+    let cfg = GatewayConfig {
+        idle_deadline_ns: 20_000_000, // 20ms
+        forgiveness: 0,
+        ..GatewayConfig::default()
+    };
+    let svc = service(1, cfg);
+    let obs = [0.0f32; 4];
+
+    let idler = svc.connect().expect("connect idler");
+    idler.request_action(&obs).expect("idler first step");
+    let keeper = svc.connect().expect("connect keeper");
+
+    // The keeper's traffic drives the shard's reap cadence while the
+    // idler sits past its deadline.
+    let deadline = Instant::now() + Duration::from_millis(500);
+    loop {
+        keeper.request_action(&obs).expect("keeper step");
+        std::thread::sleep(Duration::from_millis(5));
+        if svc.backlog_stats().reaped >= 1 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "idle session never reaped: {:?}",
+            svc.backlog_stats()
+        );
+    }
+
+    assert!(
+        idler.request_action(&obs).is_err(),
+        "reaped session still served"
+    );
+    keeper.request_action(&obs).expect("active session reaped");
+    keeper.end(None).expect("keeper end");
+}
+
+/// A shard at its admission watermark sheds new connects instead of
+/// queueing them; ending an episode frees the slot for the next client.
+#[test]
+fn admission_watermark_sheds_connects() {
+    let cfg = GatewayConfig { max_sessions: 2, ..GatewayConfig::default() };
+    let svc = service(1, cfg);
+    let obs = [0.0f32; 4];
+
+    let s1 = svc.connect().expect("first admit");
+    let s2 = svc.connect().expect("second admit");
+    assert!(svc.connect().is_err(), "watermark connect not shed");
+    assert!(svc.backlog_stats().shed >= 1);
+
+    s1.end(None).expect("end");
+    let s3 = svc.connect().expect("freed slot re-admits");
+    s3.request_action(&obs).expect("serve on freed slot");
+    s3.end(Some(&obs)).expect("end");
+    s2.end(None).expect("end");
+}
+
+/// Churn soak (CI `--chaos` gate): a client swarm that connects,
+/// disconnects mid-episode, and times out mid-episode, under a chaos
+/// thread growing/retiring/killing shards the whole time.  Passes if
+/// nothing deadlocks or panics and the service still serves full
+/// episodes afterwards.
+#[test]
+#[ignore]
+fn churn_soak_under_shard_chaos() {
+    const CLIENTS: usize = 8;
+    const SOAK: Duration = Duration::from_secs(8);
+    let cfg = GatewayConfig {
+        max_sessions: 64,
+        idle_deadline_ns: 50_000_000, // 50ms
+        forgiveness: 0,
+        ..GatewayConfig::default()
+    };
+    let svc = service(2, cfg);
+    let stop = Arc::new(AtomicBool::new(false));
+
+    // Clients: mostly clean episodes; some abandon the session without
+    // ending it (reaper's problem), some stall past the idle deadline
+    // mid-episode and must observe an error, never a hang.
+    let clients: Vec<_> = (0..CLIENTS)
+        .map(|t| {
+            let svc = svc.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut rng = Lcg(0xC0FFEE ^ ((t as u64) << 7));
+                let obs = vec![t as f32; 4];
+                let mut completed = 0u64;
+                while !stop.load(Relaxed) {
+                    let Ok(session) = svc.connect() else {
+                        std::thread::sleep(Duration::from_millis(1));
+                        continue;
+                    };
+                    let len = 5 + (rng.next() % 25) as usize;
+                    let fate = rng.next() % 10;
+                    let mut alive = true;
+                    for step in 0..len {
+                        if session.request_action(&obs).is_err() {
+                            alive = false;
+                            break;
+                        }
+                        let _ = session.log_reward(1.0);
+                        if fate == 0 && step == len / 2 {
+                            // Stall past the idle deadline; the
+                            // session may be reaped under us.
+                            std::thread::sleep(Duration::from_millis(
+                                80,
+                            ));
+                        }
+                    }
+                    if fate == 1 {
+                        drop(session); // abandon without end()
+                    } else if alive && session.end(Some(&obs)).is_ok() {
+                        completed += 1;
+                    }
+                }
+                completed
+            })
+        })
+        .collect();
+
+    // Chaos: retire/grow the pool and force-kill live shards while the
+    // swarm runs; killed shards restart under a generous budget.
+    let chaos = {
+        let svc = svc.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let restart = RestartPolicy {
+                max_restarts: 10_000,
+                backoff_base: Duration::from_millis(1),
+                backoff_cap: Duration::from_millis(5),
+                reset_after: Duration::from_millis(50),
+            };
+            let sizes = [1usize, 3, 2];
+            let mut cycle = 0usize;
+            while !stop.load(Relaxed) {
+                std::thread::sleep(Duration::from_millis(100));
+                let _ = svc.scale_to(sizes[cycle % sizes.len()]);
+                if cycle % 3 == 2 {
+                    let live = svc.registry().live_indices();
+                    if let Some(&slot) = live.first() {
+                        if let Some((h, _)) = svc.registry().get_live(slot)
+                        {
+                            h.kill();
+                        }
+                    }
+                }
+                let _ = svc.restart_dead_with_policy(&restart);
+                cycle += 1;
+            }
+            // Leave the pool healthy for the post-soak check.
+            let _ = svc.restart_dead_with_policy(&restart);
+            let _ = svc.scale_to(2);
+        })
+    };
+
+    std::thread::sleep(SOAK);
+    stop.store(true, Relaxed);
+    let completed: u64 =
+        clients.into_iter().map(|h| h.join().unwrap()).sum();
+    chaos.join().unwrap();
+
+    assert!(
+        completed > 0,
+        "no client episode survived the soak: {:?}",
+        svc.backlog_stats()
+    );
+    assert!(svc.num_live_shards() >= 1);
+
+    // The tier must still serve a full clean episode.
+    let obs = [0.5f32; 4];
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        if let Ok(session) = svc.connect() {
+            let mut ok = true;
+            for _ in 0..10 {
+                if session.request_action(&obs).is_err() {
+                    ok = false;
+                    break;
+                }
+            }
+            if ok && session.end(Some(&obs)).is_ok() {
+                break;
+            }
+        }
+        assert!(
+            Instant::now() < deadline,
+            "service cannot serve a clean episode after the soak"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let stats = svc.backlog_stats();
+    println!(
+        "soak: completed={completed} started={} shed={} reaped={} \
+         lost={} ticks={} max_fill={}",
+        stats.started,
+        stats.shed,
+        stats.reaped,
+        svc.counters().sessions_lost.load(Relaxed),
+        stats.ticks,
+        stats.max_batch_fill
+    );
+}

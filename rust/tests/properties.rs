@@ -5,8 +5,10 @@
 //! instances with the failing seed printed for reproduction.
 
 use flowrl::actor::spawn_group;
+use flowrl::env::{CartPole, DummyEnv, Env, MountainCar, TaskCartPole};
 use flowrl::iter::{concurrently, LocalIter, ParIter, UnionMode};
 use flowrl::ops::concat_batches;
+use flowrl::policy::{DummyPolicy, Policy};
 use flowrl::replay::{PrioritizedReplayBuffer, SumTree};
 use flowrl::sample_batch::{compute_gae, SampleBatch, SampleBatchBuilder};
 use flowrl::util::Rng;
@@ -342,6 +344,103 @@ fn prop_sum_tree_matches_naive_prefix_sums() {
                 }
                 assert_eq!(got, want, "mass={mass} naive={naive:?}");
             }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// Buffer-first Env/Policy API: the `*_into` forms are canonical and
+// the allocating wrappers must be behaviorally identical twins — same
+// seed, same action sequence, bit-identical observations/rewards/dones.
+// ---------------------------------------------------------------------
+
+fn check_env_into_twins(
+    name: &str,
+    make: impl Fn(u64) -> Box<dyn Env>,
+) {
+    check(name, 10, |rng| {
+        let seed = rng.next_u64();
+        let mut a = make(seed); // drives reset_into / step_into
+        let mut b = make(seed); // drives the allocating wrappers
+        let obs_dim = a.obs_dim();
+        let num_actions = a.num_actions();
+        let mut buf = vec![0.0f32; obs_dim];
+
+        a.reset_into(&mut buf);
+        assert_eq!(buf, b.reset());
+        for _ in 0..20 + rng.below(180) {
+            let action = rng.below(num_actions) as i32;
+            let (r_a, done_a) = a.step_into(action, &mut buf);
+            let (obs_b, r_b, done_b) = b.step(action);
+            assert_eq!(buf, obs_b);
+            assert_eq!(r_a, r_b);
+            assert_eq!(done_a, done_b);
+            if done_a {
+                if rng.chance(0.3) {
+                    a.sample_task();
+                    b.sample_task();
+                }
+                a.reset_into(&mut buf);
+                assert_eq!(buf, b.reset());
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_cartpole_into_forms_match_allocating_twins() {
+    check_env_into_twins("cartpole into twins", |seed| {
+        Box::new(CartPole::new(seed))
+    });
+}
+
+#[test]
+fn prop_task_cartpole_into_forms_match_allocating_twins() {
+    check_env_into_twins("task cartpole into twins", |seed| {
+        Box::new(TaskCartPole::new(seed))
+    });
+}
+
+#[test]
+fn prop_mountain_car_into_forms_match_allocating_twins() {
+    check_env_into_twins("mountain car into twins", |seed| {
+        Box::new(MountainCar::new(seed))
+    });
+}
+
+#[test]
+fn prop_dummy_env_into_forms_match_allocating_twins() {
+    check_env_into_twins("dummy env into twins", |seed| {
+        Box::new(DummyEnv::new(2 + (seed % 5) as usize, 25))
+    });
+}
+
+#[test]
+fn prop_policy_into_forms_match_allocating_twins() {
+    check("policy into twins", 15, |rng| {
+        // Twin policies share the construction seed, so their internal
+        // action streams advance in lockstep across the two APIs.
+        let mut a = DummyPolicy::new(0.01);
+        let mut b = DummyPolicy::new(0.01);
+        let obs_dim = 1 + rng.below(6);
+        let mut actions = Vec::new();
+        let mut values = Vec::new();
+        for _ in 0..1 + rng.below(6) {
+            let n = 1 + rng.below(16);
+            let obs: Vec<f32> = (0..n * obs_dim)
+                .map(|_| rng.uniform_range(-1.0, 1.0))
+                .collect();
+            a.compute_actions_into(&obs, n, &mut actions);
+            let twin = b.compute_actions(&obs, n);
+            assert_eq!(actions.len(), n);
+            assert_eq!(twin.len(), n);
+            for (x, y) in actions.iter().zip(&twin) {
+                assert_eq!(x.action, y.action);
+                assert_eq!(x.logp, y.logp);
+                assert_eq!(x.value, y.value);
+            }
+            a.values_into(&obs, n, &mut values);
+            assert_eq!(values, b.values(&obs, n));
         }
     });
 }

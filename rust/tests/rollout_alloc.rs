@@ -105,3 +105,77 @@ fn rollout_hot_loop_is_allocation_free_per_step() {
         );
     }
 }
+
+/// Spy policy pinning the GAE bootstrap's call shape: `sample()` must
+/// take the buffer-writing [`flowrl::policy::Policy::values_into`]
+/// (once per fragment, all envs in one batched forward), never the
+/// allocating `values` wrapper.
+struct BootstrapSpy {
+    inner: DummyPolicy,
+    values_into_calls: std::rc::Rc<Cell<u64>>,
+}
+
+impl flowrl::policy::Policy for BootstrapSpy {
+    fn compute_actions_into(
+        &mut self,
+        obs: &[f32],
+        n: usize,
+        out: &mut Vec<flowrl::policy::ActionOutput>,
+    ) {
+        self.inner.compute_actions_into(obs, n, out);
+    }
+
+    fn compute_gradients(
+        &mut self,
+        batch: &flowrl::SampleBatch,
+    ) -> flowrl::policy::Gradients {
+        self.inner.compute_gradients(batch)
+    }
+
+    fn apply_gradients(&mut self, grads: &flowrl::policy::Gradients) {
+        self.inner.apply_gradients(grads);
+    }
+
+    fn values_into(&mut self, obs: &[f32], n: usize, out: &mut Vec<f32>) {
+        assert_eq!(n, N_ENVS, "bootstrap must batch all envs at once");
+        assert_eq!(obs.len(), N_ENVS * OBS_DIM);
+        self.values_into_calls.set(self.values_into_calls.get() + 1);
+        out.clear();
+        out.resize(n, 0.0);
+    }
+
+    fn values(&mut self, _obs: &[f32], _n: usize) -> Vec<f32> {
+        panic!("GAE bootstrap went through the allocating values()");
+    }
+
+    fn get_weights(&self) -> Vec<f32> {
+        self.inner.get_weights()
+    }
+
+    fn set_weights(&mut self, weights: &[f32]) {
+        self.inner.set_weights(weights);
+    }
+}
+
+#[test]
+fn gae_bootstrap_uses_batched_values_into() {
+    let calls = std::rc::Rc::new(Cell::new(0u64));
+    let envs: Vec<Box<dyn Env>> = (0..N_ENVS)
+        .map(|_| Box::new(DummyEnv::new(OBS_DIM, usize::MAX)) as Box<dyn Env>)
+        .collect();
+    let spy = BootstrapSpy {
+        inner: DummyPolicy::new(0.1),
+        values_into_calls: calls.clone(),
+    };
+    let mut w =
+        RolloutWorker::new(envs, Box::new(spy), 16, CollectMode::OnPolicy);
+    for round in 1..=3u64 {
+        let b = w.sample();
+        assert_eq!(b.len(), 16 * N_ENVS);
+        assert_eq!(
+            calls.get(),
+            round,
+            "expected exactly one batched values_into per fragment"
+        );
+    }
+}

@@ -145,14 +145,14 @@ fn gather_sync_admits_scale_up_at_round_boundary() {
 /// `TrainResult::scale` / `pipeline_summary()`.
 #[test]
 fn train_plan_streams_across_scaling_and_reports_events() {
-    use flowrl::ops::{standard_metrics_reporting, train_one_step};
+    use flowrl::ops::{train_one_step, Reporting};
 
     let set = worker_set(2);
     let mut train = train_one_step(&set);
     let train_op = parallel_rollouts_from(&set)
         .gather_async(1)
         .for_each(move |b| train(b));
-    let mut reports = standard_metrics_reporting(train_op, &set, 2);
+    let mut reports = Reporting::new(train_op, &set, 2).build();
 
     assert!(reports.next().is_some());
     set.scale_to(4).unwrap();

@@ -21,7 +21,11 @@
 #                         # scripted delay/drop/crash/hang mix under
 #                         # deadline supervision + RestartPolicy, plus
 #                         # rotating replay-shard kills under live
-#                         # store+replay traffic)
+#                         # store+replay traffic), and the gateway churn
+#                         # soak (rust/tests/gateway.rs, #[ignore]d
+#                         # client connect/disconnect/timeout-mid-
+#                         # episode swarm under live shard
+#                         # kill/grow/retire)
 #
 # Every step prints its own wall-clock seconds (==> ... [Ns]) so a slow
 # gate names the stage that slowed down.
@@ -80,6 +84,9 @@ if [ "$chaos" -eq 1 ]; then
     --ignored --nocapture
   step "fault-matrix soaks: delay/drop/crash/hang + replay-shard kills" \
     timeout 120 cargo test --release --test faults -- \
+    --ignored --nocapture
+  step "gateway churn soak: client swarm under shard kill/grow/retire" \
+    timeout 120 cargo test --release --test gateway -- \
     --ignored --nocapture
   echo "CI OK (chaos) [$((SECONDS - ci_start))s]"
   exit 0

@@ -27,7 +27,12 @@ Rules enforced per file:
     schema rust/benches/fault_detection.rs emits;
   * BENCH_replay_shard.json must allowlist (and, once results are
     recorded, cover) "add_throughput" and "sample_throughput" — the
-    per-shard-count sweep rust/benches/replay_shard.rs emits.
+    per-shard-count sweep rust/benches/replay_shard.rs emits;
+  * BENCH_gateway.json must allowlist (and, once results are recorded,
+    cover) "sessions_held" and "p99_action_latency" — the client-swarm
+    sweep rust/benches/gateway.rs emits ("count" rows are peak
+    concurrent sessions, "us_per_op" rows the p99 submit-to-serve
+    wait).
 
 Exit code 0 = all files pass; 1 = any violation (listed on stderr).
 
@@ -46,6 +51,7 @@ KNOWN_UNITS = {
     "steps_per_s",
     "items_per_s",
     "percent",
+    "count",
 }
 REQUIRED_KEYS = ("bench", "units", "how_to_regenerate", "results")
 
@@ -56,6 +62,7 @@ REQUIRED_OPS = {
     "autoscale": ("time_to_converge", "steady_utilization"),
     "faults": ("hang_detection_latency", "disarmed_overhead"),
     "replay_shard": ("add_throughput", "sample_throughput"),
+    "gateway": ("sessions_held", "p99_action_latency"),
 }
 
 
