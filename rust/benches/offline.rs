@@ -1,0 +1,190 @@
+//! Offline dataflow bench: log-decode throughput and end-to-end
+//! train-from-logs rate.
+//!
+//! Two reported ops:
+//!
+//! * `reader_frames_per_s` — a `LogStreamReader` draining a recorded
+//!   multi-segment stream (64-row CartPole-shaped frames, rotation
+//!   every 1 MiB): frames decoded per second, CRC checked.  This is
+//!   the ceiling on offline ingest.
+//! * `offline_dqn_steps_per_s` — `offline_dqn_plan` (dummy policy, no
+//!   artifacts) training from the same logs: env steps trained per
+//!   second through the logs → replay → learner dataflow.
+//!
+//! Runs entirely against temp files + the dummy policy, so it always
+//! executes (including under `tools/ci.sh --smoke`).
+//!
+//! Run: `cargo bench --bench offline`
+//! Smoke: `cargo bench --bench offline -- --smoke`
+//! Record: `cargo bench --bench offline -- --write`
+//!         (rewrites BENCH_offline.json at the repo root)
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use flowrl::algorithms::{
+    offline_dqn_plan, DqnConfig, EnvKind, OfflineDqnConfig, TrainerConfig,
+};
+use flowrl::offline::{
+    EpisodeLogWriter, LogStreamReader, OfflineCounters, WriterConfig,
+};
+use flowrl::sample_batch::SampleBatchBuilder;
+use flowrl::SampleBatch;
+
+const OBS_DIM: usize = 4;
+const ROWS_PER_FRAME: usize = 64;
+
+fn frame(i: usize) -> SampleBatch {
+    let mut b = SampleBatchBuilder::new(OBS_DIM);
+    let obs = [i as f32, 0.1, 0.2, 0.3];
+    for r in 0..ROWS_PER_FRAME {
+        b.add_transition_with_logp(
+            &obs,
+            (r % 2) as i32,
+            1.0,
+            &obs,
+            r % 16 == 15,
+            -0.69,
+        );
+    }
+    b.build()
+}
+
+fn record_logs(dir: &PathBuf, frames: usize) {
+    let mut w = EpisodeLogWriter::create(
+        dir,
+        "bench",
+        WriterConfig { segment_bytes: 1 << 20 },
+    )
+    .expect("create log writer");
+    for i in 0..frames {
+        w.append(&frame(i)).expect("append");
+    }
+}
+
+fn bench_reader(dir: &PathBuf, frames: usize) -> f64 {
+    let counters = OfflineCounters::new();
+    let mut r = LogStreamReader::follow(dir, "bench", counters.clone());
+    let t0 = Instant::now();
+    let mut n = 0usize;
+    while n < frames {
+        if r.poll().is_some() {
+            n += 1;
+        }
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let stats = counters.snapshot();
+    assert_eq!(stats.frames as usize, frames);
+    assert_eq!(stats.corrupt_frames, 0);
+    frames as f64 / elapsed
+}
+
+fn bench_offline_dqn(dir: &PathBuf, window: Duration) -> f64 {
+    let config = TrainerConfig {
+        env: EnvKind::Dummy,
+        min_replay_shards: 1,
+        ..TrainerConfig::default()
+    };
+    let dqn = DqnConfig {
+        buffer_capacity: 65_536,
+        learning_starts: 256,
+        target_update_every: 512,
+        weight_sync_every: 5,
+    };
+    let offline = OfflineDqnConfig {
+        log_dir: dir.clone(),
+        obs_dim: OBS_DIM,
+        ..OfflineDqnConfig::default()
+    };
+    let mut plan = offline_dqn_plan(&config, &dqn, &offline);
+    // Warm-up: first trained report means the buffer passed
+    // learning-starts and the pipeline is in steady state.
+    let mut report = plan.next().expect("plan is infinite");
+    while report.num_env_steps_trained == 0 {
+        report = plan.next().expect("plan is infinite");
+    }
+    let t0 = Instant::now();
+    let mut trained = 0u64;
+    while t0.elapsed() < window {
+        trained += plan.next().expect("plan is infinite").num_env_steps_trained;
+    }
+    trained as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn json_report(frames_per_s: f64, steps_per_s: f64, frames: usize) -> String {
+    let mut out = String::new();
+    out.push_str("{\n  \"bench\": \"offline\",\n");
+    out.push_str("  \"units\": \"mixed\",\n");
+    out.push_str(
+        "  \"how_to_regenerate\": \"cd rust && cargo bench --bench \
+         offline -- --write\",\n",
+    );
+    out.push_str(
+        "  \"note\": \"Offline dataflow: reader_frames_per_s = \
+         LogStreamReader draining a recorded multi-segment stream \
+         (64-row obs_dim-4 frames, CRC checked, 1 MiB rotation); \
+         offline_dqn_steps_per_s = env steps trained per second by \
+         offline_dqn_plan (dummy policy) over the same logs through \
+         the logs -> replay -> learner dataflow.\",\n",
+    );
+    out.push_str(
+        "  \"acceptance_targets\": {\n    \"reader_frames_per_s\": \
+         \"well above any realistic rollout production rate (the log \
+         source must never be the training bottleneck)\",\n    \
+         \"offline_dqn_steps_per_s\": \"same order as the online \
+         dqn_plan trained-step rate (the source swap is free)\"\n  },\n",
+    );
+    out.push_str(
+        "  \"ops\": [\"reader_frames_per_s\", \
+         \"offline_dqn_steps_per_s\"],\n",
+    );
+    out.push_str("  \"results\": [\n");
+    out.push_str(&format!(
+        "    {{\"op\": \"reader_frames_per_s\", \"units\": \
+         \"items_per_s\", \"items_per_s\": {frames_per_s:.0}, \
+         \"frames\": {frames}, \"rows_per_frame\": {ROWS_PER_FRAME}}},\n",
+    ));
+    out.push_str(&format!(
+        "    {{\"op\": \"offline_dqn_steps_per_s\", \"units\": \
+         \"steps_per_s\", \"steps_per_s\": {steps_per_s:.0}, \
+         \"rows_per_frame\": {ROWS_PER_FRAME}}}\n",
+    ));
+    out.push_str("  ]\n}\n");
+    out
+}
+
+fn main() {
+    let write = std::env::args().any(|a| a == "--write");
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let frames = if smoke { 500 } else { 5_000 };
+    let window =
+        if smoke { Duration::from_millis(500) } else { Duration::from_secs(3) };
+
+    let dir = std::env::temp_dir()
+        .join(format!("flowrl_bench_offline_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    record_logs(&dir, frames);
+
+    let frames_per_s = bench_reader(&dir, frames);
+    let steps_per_s = bench_offline_dqn(&dir, window);
+    let _ = std::fs::remove_dir_all(&dir);
+
+    println!("# offline bench — log ingest + train-from-logs");
+    println!("| op | rate |");
+    println!("|----|------|");
+    println!("| reader_frames_per_s | {frames_per_s:.0} |");
+    println!("| offline_dqn_steps_per_s | {steps_per_s:.0} |");
+
+    assert!(frames_per_s.is_finite() && frames_per_s > 0.0);
+    assert!(steps_per_s.is_finite() && steps_per_s > 0.0);
+
+    let json = json_report(frames_per_s, steps_per_s, frames);
+    if write {
+        let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("../BENCH_offline.json");
+        std::fs::write(&path, &json).expect("write BENCH_offline.json");
+        println!("\nwrote {}", path.display());
+    } else {
+        println!("\n{json}");
+    }
+}

@@ -14,6 +14,7 @@ pub mod gateway;
 pub mod impala;
 pub mod maml;
 pub mod multi_agent;
+pub mod offline;
 pub mod ppo;
 
 pub use a2c::a2c_plan;
@@ -27,6 +28,7 @@ pub use multi_agent::{
     ma_sync_protocol, ma_worker_set, multi_agent_plan, multi_agent_plan_on,
     MultiAgentConfig,
 };
+pub use offline::{offline_dqn_plan, OfflineDqnConfig, OfflineLearner};
 pub use ppo::{ppo_plan, ppo_plan_with_epochs};
 
 use std::path::PathBuf;

@@ -27,9 +27,7 @@
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
-use crate::actor::{
-    ActorHandle, Autoscaler, WeightCaster, DEFAULT_CAST_WATERMARK,
-};
+use crate::actor::{ActorHandle, WeightCaster, DEFAULT_CAST_WATERMARK};
 use crate::env::MultiAgentCartPole;
 use crate::iter::{concurrently, LocalIter, UnionMode};
 use crate::metrics::TrainResult;
@@ -317,27 +315,4 @@ fn prefix_stats(
         .into_iter()
         .map(|(k, v)| (format!("{prefix}/{k}"), v))
         .collect()
-}
-
-/// Deprecated shim over [`ops::Reporting`](crate::ops::Reporting),
-/// which is generic over the worker type and reports a multi-agent
-/// [`WorkerSet`] through the exact same tail as a single-agent one
-/// (per-policy caster sets attach no `weight_casts` section — a sole
-/// `WeightCastStats` would misattribute independent lanes — so a
-/// controller's shed gauge stays idle, as before).
-#[deprecated(
-    since = "0.8.0",
-    note = "use ops::Reporting::new(inner, set, 1) (+ .autoscale(..)) \
-            .build()"
-)]
-pub fn ma_metrics_reporting(
-    inner: LocalIter<TrainItem>,
-    set: &WorkerSet<MultiAgentRolloutWorker>,
-    autoscaler: Option<Autoscaler>,
-) -> LocalIter<TrainResult> {
-    let mut r = Reporting::new(inner, set, 1);
-    if let Some(a) = autoscaler {
-        r = r.autoscale(a);
-    }
-    r.build()
 }

@@ -6,7 +6,9 @@
 //! positions) is discarded.  This is why the programming model can skip
 //! state serialization and logging on the hot path.
 //!
-//! Format (version-tagged, little-endian):
+//! Format (version-tagged, little-endian; all integer/tensor packing
+//! goes through the crate's shared codec, [`crate::sample_batch::wire`],
+//! which the episode-log frame format also builds on):
 //! ```text
 //! magic "FLRLCKPT" | u32 version | u64 steps_sampled | u64 steps_trained
 //! | u32 n_policies | n x { u32 name_len | name | u32 len | f32[len] }
@@ -16,6 +18,7 @@ use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::path::Path;
 
+use crate::sample_batch::wire;
 use crate::util::error::{Context, Result};
 use crate::{anyhow, bail};
 
@@ -61,17 +64,12 @@ impl Checkpoint {
             // byte-slice (little-endian f32s assembled in a reused
             // buffer) instead of one write_all per element — a learner
             // checkpoint is a single buffered write per policy.
-            let mut bytes: Vec<u8> = Vec::new();
+            let mut scratch: Vec<u8> = Vec::new();
             for (name, w) in &self.weights {
                 f.write_all(&(name.len() as u32).to_le_bytes())?;
                 f.write_all(name.as_bytes())?;
                 f.write_all(&(w.len() as u32).to_le_bytes())?;
-                bytes.clear();
-                bytes.reserve(w.len() * 4);
-                for v in w {
-                    bytes.extend_from_slice(&v.to_le_bytes());
-                }
-                f.write_all(&bytes)?;
+                wire::write_f32s(&mut f, w, &mut scratch)?;
             }
         }
         std::fs::rename(&tmp, path)
@@ -90,44 +88,27 @@ impl Checkpoint {
         if &magic != MAGIC {
             bail!("not a flowrl checkpoint (bad magic)");
         }
-        let version = read_u32(&mut f)?;
+        let version = wire::read_u32(&mut f)?;
         if version != VERSION {
             bail!("unsupported checkpoint version {version}");
         }
-        let steps_sampled = read_u64(&mut f)?;
-        let steps_trained = read_u64(&mut f)?;
-        let n = read_u32(&mut f)? as usize;
+        let steps_sampled = wire::read_u64(&mut f)?;
+        let steps_trained = wire::read_u64(&mut f)?;
+        let n = wire::read_u32(&mut f)? as usize;
         let mut weights = BTreeMap::new();
         for _ in 0..n {
-            let name_len = read_u32(&mut f)? as usize;
+            let name_len = wire::read_u32(&mut f)? as usize;
             if name_len > 4096 {
                 bail!("implausible policy-name length {name_len}");
             }
             let mut name = vec![0u8; name_len];
             f.read_exact(&mut name)?;
-            let len = read_u32(&mut f)? as usize;
-            let mut buf = vec![0u8; len * 4];
-            f.read_exact(&mut buf)?;
-            let w = buf
-                .chunks_exact(4)
-                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                .collect();
+            let len = wire::read_u32(&mut f)? as usize;
+            let w = wire::read_f32s(&mut f, len)?;
             weights.insert(String::from_utf8(name)?, w);
         }
         Ok(Checkpoint { steps_sampled, steps_trained, weights })
     }
-}
-
-fn read_u32(r: &mut impl Read) -> Result<u32> {
-    let mut b = [0u8; 4];
-    r.read_exact(&mut b)?;
-    Ok(u32::from_le_bytes(b))
-}
-
-fn read_u64(r: &mut impl Read) -> Result<u64> {
-    let mut b = [0u8; 8];
-    r.read_exact(&mut b)?;
-    Ok(u64::from_le_bytes(b))
 }
 
 /// Checkpoint the single-policy learner of a `WorkerSet`.

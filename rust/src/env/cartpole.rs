@@ -51,6 +51,7 @@ impl CartPole {
     }
 
     pub fn with_params(params: CartPoleParams, seed: u64) -> Self {
+        super::note_env_constructed();
         let mut env = CartPole {
             params,
             state: [0.0; 4],

@@ -13,6 +13,7 @@ pub struct DummyEnv {
 
 impl DummyEnv {
     pub fn new(obs_dim: usize, episode_len: usize) -> Self {
+        super::note_env_constructed();
         DummyEnv { obs_dim, episode_len, steps: 0 }
     }
 }

@@ -30,6 +30,24 @@ pub use external::{
 pub use mountain_car::MountainCar;
 pub use multi_agent::MultiAgentCartPole;
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-global count of env instances ever constructed.  Offline
+/// plans advertise "train with zero envs"; this makes that claim
+/// checkable (`tests/offline.rs` asserts the counter does not move
+/// while `offline_dqn_plan` runs) instead of rhetorical.
+static ENV_CONSTRUCTIONS: AtomicU64 = AtomicU64::new(0);
+
+/// Called by every concrete env constructor.
+pub(crate) fn note_env_constructed() {
+    ENV_CONSTRUCTIONS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Lifetime count of env instances constructed in this process.
+pub fn constructed_count() -> u64 {
+    ENV_CONSTRUCTIONS.load(Ordering::Relaxed)
+}
+
 /// A single-agent episodic environment with f32 vector observations and
 /// discrete actions.
 ///

@@ -25,6 +25,7 @@ const GRAVITY: f32 = 0.0025;
 
 impl MountainCar {
     pub fn new(seed: u64) -> Self {
+        super::note_env_constructed();
         let mut env = MountainCar {
             position: 0.0,
             velocity: 0.0,

@@ -94,6 +94,16 @@
 //!   controller decides *when* — sampling the telemetry each report
 //!   and driving `scale_to` with deadband/confirmation/cooldown
 //!   hysteresis (`ops::Reporting::autoscale`, `tests/autoscale.rs`).
+//! * Experience is **durable on demand**: [`offline::EpisodeLogWriter`]
+//!   taps rollout workers and gateway shards to persist fragments as
+//!   CRC-framed binary segments (one shared codec,
+//!   [`sample_batch::wire`], under checkpoints and logs alike), and
+//!   [`offline::LogStreamReader`] tail-follows them as just another
+//!   dataflow source — `ops::read_from_logs` feeds the replay service
+//!   from historic logs, `algorithms::offline_dqn_plan` trains with
+//!   zero envs constructed, and `ops::ope_estimate` scores policies
+//!   against recorded traffic by importance sampling (`docs/offline.md`,
+//!   `tests/offline.rs`).
 //! * The env boundary is **invertible**: [`env::EpisodeGateway`] +
 //!   [`ops::GatewayService`] serve policies to *client-owned* envs —
 //!   concurrent external episodes live in elastic session-table shards
@@ -116,6 +126,7 @@ pub mod checkpoint;
 pub mod env;
 pub mod iter;
 pub mod metrics;
+pub mod offline;
 pub mod ops;
 pub mod policy;
 pub mod replay;

@@ -7,6 +7,7 @@ use crate::actor::{
     ActorStatsSnapshot, AutoscaleStats, FaultStats, WeightCastStats,
 };
 use crate::env::GatewayBacklogStats;
+use crate::offline::OfflineLogStats;
 use crate::replay::ReplayBacklogStats;
 use crate::rollout::ScaleStats;
 use crate::util::MovingStat;
@@ -83,6 +84,7 @@ impl MetricsHub {
             replay_autoscale: None,
             gateway: None,
             gateway_autoscale: None,
+            offline: None,
         }
     }
 }
@@ -147,6 +149,13 @@ pub struct TrainResult {
     /// **gateway-shard pool**.  `None` when gateway shards are
     /// manually scaled.
     pub gateway_autoscale: Option<AutoscaleStats>,
+    /// Offline log-ingestion telemetry (streams followed, frames/
+    /// transitions/bytes decoded, corrupt + truncated frames, reader
+    /// lag, interval decode rate) — filled by
+    /// `ops::Reporting::offline` from the plan's shared
+    /// `offline::OfflineCounters`.  `None` on plans without a log
+    /// source.
+    pub offline: Option<OfflineLogStats>,
 }
 
 impl TrainResult {
@@ -255,6 +264,18 @@ impl TrainResult {
                 a.decisions_down,
                 a.held_deadband + a.held_confirm + a.held_cooldown,
                 a.failed,
+            ));
+        }
+        if let Some(o) = &self.offline {
+            out.push_str(&format!(
+                " offline={}streams(frames={} @{:.0}/s lag={}B corrupt={} \
+                 torn={})",
+                o.streams,
+                o.frames,
+                o.frames_per_s,
+                o.lag_bytes,
+                o.corrupt_frames,
+                o.truncated_tails,
             ));
         }
         out
@@ -422,6 +443,25 @@ mod tests {
         );
         assert!(
             s.contains("gateway_autoscale=t2(up=2 down=0 hold=4 fail=0)"),
+            "{s}"
+        );
+        // Offline log-ingestion section.
+        assert!(!s.contains("offline="), "no offline section without stats");
+        r.offline = Some(OfflineLogStats {
+            streams: 2,
+            frames: 120,
+            frames_per_s: 35.0,
+            lag_bytes: 4096,
+            corrupt_frames: 1,
+            truncated_tails: 2,
+            ..Default::default()
+        });
+        let s = r.pipeline_summary();
+        assert!(
+            s.contains(
+                "offline=2streams(frames=120 @35/s lag=4096B corrupt=1 \
+                 torn=2)"
+            ),
             "{s}"
         );
     }

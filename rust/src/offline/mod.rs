@@ -1,0 +1,143 @@
+//! Offline RL dataflow — durable experience as just another edge.
+//!
+//! The source paper's argument is that RL workloads decompose into
+//! dataflow operators over experience streams; RLlib's other pitch is
+//! training "purely from offline (historic) datasets".  This module
+//! supplies the durable half of that story:
+//!
+//! * [`EpisodeLogWriter`] — a sink that appends [`SampleBatch`]
+//!   fragments to an on-disk stream of segment files as
+//!   length-prefixed, CRC-framed binary records
+//!   (`crate::sample_batch::wire` frames), rotating segments at a size
+//!   threshold.  `RolloutWorker::set_log_sink` and the episode
+//!   gateway's pump tap it so live traffic can be persisted without
+//!   touching the hot loop's allocation behavior.
+//! * [`LogStreamReader`] — an incremental tail-follower over those
+//!   segments: bounded parser state (one segment position + one frame
+//!   scratch buffer), tolerant of a truncated in-progress tail frame
+//!   (waits, never double-reads), skips corrupt-CRC frames (counted),
+//!   and resumes across segment rotation.  `ops::read_from_logs` lifts
+//!   it into a dataflow source feeding the sharded replay service
+//!   exactly like `store_to_replay_buffer` feeds it from live rollouts.
+//! * [`OfflineCounters`] / [`OfflineLogStats`] — shared telemetry
+//!   (frames, transitions, bytes, corruption, reader lag) surfaced on
+//!   `TrainResult::offline` through the `ops::Reporting` builder.
+//!
+//! On top of these, `algorithms::offline_dqn_plan` trains with **zero
+//! envs constructed** (reader → replay → learner) and
+//! `ops::ope_estimate` scores a target policy against the logged
+//! behavior policy by importance sampling.  `docs/offline.md` documents
+//! the frame format and the reader's resume protocol.
+
+mod reader;
+mod writer;
+
+pub use reader::{discover_streams, LogStreamReader};
+pub use writer::{EpisodeLogWriter, WriterConfig};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// File extension of log segments (`{stream}.{seq:06}.flog`).
+pub const SEGMENT_EXT: &str = "flog";
+
+/// Shared offline-path telemetry.  The reader(s) bump these; the
+/// metrics op snapshots them per report.  One `Arc` is shared across
+/// every reader of a plan so multi-stream ingestion aggregates.
+#[derive(Debug, Default)]
+pub struct OfflineCounters {
+    /// Frames decoded and emitted downstream.
+    pub frames: AtomicU64,
+    /// Transitions (batch rows) across emitted frames.
+    pub transitions: AtomicU64,
+    /// Bytes consumed as complete frames (header + payload).
+    pub bytes: AtomicU64,
+    /// Frames dropped for CRC mismatch or undecodable payload.
+    pub corrupt: AtomicU64,
+    /// Torn tails abandoned at segment rotation (a writer died
+    /// mid-frame; the partial frame is unrecoverable by design).
+    pub truncated: AtomicU64,
+    /// Idle polls (no complete frame available anywhere).
+    pub waits: AtomicU64,
+    /// Gauge: bytes on disk not yet consumed (reader lag), summed over
+    /// readers sharing these counters.
+    pub lag_bytes: AtomicU64,
+    /// Gauge: streams being followed.
+    pub streams: AtomicU64,
+}
+
+impl OfflineCounters {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    /// Point-in-time snapshot (rates are filled in by the metrics op,
+    /// which owns the report clock).
+    pub fn snapshot(&self) -> OfflineLogStats {
+        OfflineLogStats {
+            streams: self.streams.load(Ordering::Relaxed),
+            frames: self.frames.load(Ordering::Relaxed),
+            transitions: self.transitions.load(Ordering::Relaxed),
+            bytes: self.bytes.load(Ordering::Relaxed),
+            corrupt_frames: self.corrupt.load(Ordering::Relaxed),
+            truncated_tails: self.truncated.load(Ordering::Relaxed),
+            lag_bytes: self.lag_bytes.load(Ordering::Relaxed),
+            frames_per_s: 0.0,
+        }
+    }
+}
+
+/// Offline-ingestion section of `TrainResult` (mirrors
+/// `replay::ReplayBacklogStats`: a plain snapshot struct the metrics
+/// layer can embed without holding the live counters).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct OfflineLogStats {
+    /// Streams being followed.
+    pub streams: u64,
+    /// Cumulative frames decoded.
+    pub frames: u64,
+    /// Cumulative transitions ingested.
+    pub transitions: u64,
+    /// Cumulative frame bytes consumed.
+    pub bytes: u64,
+    /// Frames dropped on CRC/decode failure.
+    pub corrupt_frames: u64,
+    /// Torn tail frames abandoned at rotation.
+    pub truncated_tails: u64,
+    /// Reader lag gauge: on-disk bytes not yet consumed.
+    pub lag_bytes: u64,
+    /// Decode rate over the last report interval (filled by the
+    /// reporting op from consecutive snapshots).
+    pub frames_per_s: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_snapshot_reads_all_fields() {
+        let c = OfflineCounters::new();
+        c.frames.store(3, Ordering::Relaxed);
+        c.transitions.store(96, Ordering::Relaxed);
+        c.bytes.store(4096, Ordering::Relaxed);
+        c.corrupt.store(1, Ordering::Relaxed);
+        c.truncated.store(2, Ordering::Relaxed);
+        c.lag_bytes.store(7, Ordering::Relaxed);
+        c.streams.store(4, Ordering::Relaxed);
+        let s = c.snapshot();
+        assert_eq!(
+            s,
+            OfflineLogStats {
+                streams: 4,
+                frames: 3,
+                transitions: 96,
+                bytes: 4096,
+                corrupt_frames: 1,
+                truncated_tails: 2,
+                lag_bytes: 7,
+                frames_per_s: 0.0,
+            }
+        );
+    }
+}

@@ -1,0 +1,299 @@
+//! The episode-log sink: durable `SampleBatch` frames with segment
+//! rotation.
+//!
+//! Layout on disk: a *stream* is a directory of segment files named
+//! `{stream}.{seq:06}.flog`, each a concatenation of wire frames
+//! (`u32 len | u32 crc | payload`, see [`crate::sample_batch::wire`]).
+//! The writer appends to the highest-seq segment it created and rotates
+//! to `seq + 1` before any append that would push the current segment
+//! past `segment_bytes`.  A re-created writer (crash restart) never
+//! appends to an existing segment — the old tail might be torn — it
+//! starts a fresh one, which is exactly the rotation event the reader
+//! already knows how to resume across.
+
+use std::fs::{File, OpenOptions};
+use std::io::{self, BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+use super::SEGMENT_EXT;
+use crate::sample_batch::wire;
+use crate::SampleBatch;
+
+/// Default rotation threshold — small enough that a training run
+/// produces several segments (rotation is the recovery boundary), large
+/// enough that the directory stays short.
+pub const DEFAULT_SEGMENT_BYTES: u64 = 8 * 1024 * 1024;
+
+#[derive(Debug, Clone, Copy)]
+pub struct WriterConfig {
+    /// Rotate to a new segment before an append would push the current
+    /// one past this many bytes.
+    pub segment_bytes: u64,
+}
+
+impl Default for WriterConfig {
+    fn default() -> Self {
+        WriterConfig { segment_bytes: DEFAULT_SEGMENT_BYTES }
+    }
+}
+
+/// Appends CRC-framed `SampleBatch` records to a rotating segment
+/// stream.  One writer owns one stream; it is `Send` (a rollout worker
+/// or gateway shard carries its own).
+#[derive(Debug)]
+pub struct EpisodeLogWriter {
+    dir: PathBuf,
+    stream: String,
+    config: WriterConfig,
+    seq: u64,
+    file: BufWriter<File>,
+    segment_len: u64,
+    payload_scratch: Vec<u8>,
+    frame_scratch: Vec<u8>,
+    frames: u64,
+    bytes: u64,
+    write_errors: u64,
+}
+
+/// `{stream}.{seq:06}.flog` under `dir`.
+pub(super) fn segment_path(dir: &Path, stream: &str, seq: u64) -> PathBuf {
+    dir.join(format!("{stream}.{seq:06}.{SEGMENT_EXT}"))
+}
+
+/// Parse `(stream, seq)` out of a segment file name; `None` for
+/// non-segment files.
+pub(super) fn parse_segment_name(name: &str) -> Option<(&str, u64)> {
+    let rest = name.strip_suffix(&format!(".{SEGMENT_EXT}"))?;
+    let (stream, seq) = rest.rsplit_once('.')?;
+    if stream.is_empty() {
+        return None;
+    }
+    Some((stream, seq.parse().ok()?))
+}
+
+/// Highest existing segment seq of `stream` in `dir`, if any.
+fn max_existing_seq(dir: &Path, stream: &str) -> io::Result<Option<u64>> {
+    let mut max = None;
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        if let Some((s, seq)) = parse_segment_name(name) {
+            if s == stream && max.map_or(true, |m| seq > m) {
+                max = Some(seq);
+            }
+        }
+    }
+    Ok(max)
+}
+
+impl EpisodeLogWriter {
+    /// Open a stream for appending.  Creates `dir` if needed and starts
+    /// a new segment *after* any existing ones (crash-restart safe: a
+    /// possibly-torn old tail is left for the reader to skip at
+    /// rotation, never appended to).
+    pub fn create(
+        dir: impl Into<PathBuf>,
+        stream: impl Into<String>,
+        config: WriterConfig,
+    ) -> io::Result<Self> {
+        let dir = dir.into();
+        let stream = stream.into();
+        assert!(
+            !stream.contains('.') && !stream.contains('/'),
+            "stream name {stream:?} must not contain '.' or '/'"
+        );
+        std::fs::create_dir_all(&dir)?;
+        let seq = max_existing_seq(&dir, &stream)?.map_or(0, |m| m + 1);
+        let file = open_segment(&dir, &stream, seq)?;
+        Ok(EpisodeLogWriter {
+            dir,
+            stream,
+            config,
+            seq,
+            file,
+            segment_len: 0,
+            payload_scratch: Vec::new(),
+            frame_scratch: Vec::new(),
+            frames: 0,
+            bytes: 0,
+            write_errors: 0,
+        })
+    }
+
+    /// Append one fragment as a single frame, rotating first if the
+    /// current segment is non-empty and would overflow.  The frame is
+    /// assembled in reused scratch buffers and written+flushed as one
+    /// contiguous slice, so a crash tears at most the *tail* frame —
+    /// everything flushed before it is intact.
+    pub fn append(&mut self, batch: &SampleBatch) -> io::Result<()> {
+        self.payload_scratch.clear();
+        wire::encode_batch(batch, &mut self.payload_scratch);
+        self.frame_scratch.clear();
+        wire::encode_frame(&self.payload_scratch, &mut self.frame_scratch);
+        let frame_len = self.frame_scratch.len() as u64;
+        if self.segment_len > 0
+            && self.segment_len + frame_len > self.config.segment_bytes
+        {
+            self.rotate()?;
+        }
+        let res = self
+            .file
+            .write_all(&self.frame_scratch)
+            .and_then(|()| self.file.flush());
+        if let Err(e) = res {
+            self.write_errors += 1;
+            return Err(e);
+        }
+        self.segment_len += frame_len;
+        self.frames += 1;
+        self.bytes += frame_len;
+        Ok(())
+    }
+
+    fn rotate(&mut self) -> io::Result<()> {
+        self.file.flush()?;
+        self.seq += 1;
+        self.file = open_segment(&self.dir, &self.stream, self.seq)?;
+        self.segment_len = 0;
+        Ok(())
+    }
+
+    /// Stream name this writer appends to.
+    pub fn stream(&self) -> &str {
+        &self.stream
+    }
+
+    /// Directory holding the segments.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Seq of the segment currently being appended to.
+    pub fn current_seq(&self) -> u64 {
+        self.seq
+    }
+
+    /// (frames appended, frame bytes written, failed appends).
+    pub fn counters(&self) -> (u64, u64, u64) {
+        (self.frames, self.bytes, self.write_errors)
+    }
+}
+
+fn open_segment(dir: &Path, stream: &str, seq: u64) -> io::Result<BufWriter<File>> {
+    let path = segment_path(dir, stream, seq);
+    // create_new: a seq collision means two writers own one stream —
+    // refuse instead of interleaving frames.
+    let file = OpenOptions::new().write(true).create_new(true).open(&path)?;
+    Ok(BufWriter::new(file))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sample_batch::SampleBatchBuilder;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("flowrl_logw_{}_{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn batch(n: usize) -> SampleBatch {
+        let mut b = SampleBatchBuilder::new(2);
+        for i in 0..n {
+            b.add_transition_with_logp(
+                &[i as f32, 0.5],
+                1,
+                1.0,
+                &[i as f32 + 1.0, 0.5],
+                false,
+                -0.69,
+            );
+        }
+        b.build()
+    }
+
+    #[test]
+    fn parse_segment_name_roundtrip() {
+        let p = segment_path(Path::new("/x"), "rollout", 7);
+        let name = p.file_name().unwrap().to_str().unwrap();
+        assert_eq!(parse_segment_name(name), Some(("rollout", 7)));
+        assert_eq!(parse_segment_name("rollout.000007.flog"), Some(("rollout", 7)));
+        assert_eq!(parse_segment_name("nodot.flog"), None);
+        assert_eq!(parse_segment_name("a.notanumber.flog"), None);
+        assert_eq!(parse_segment_name("a.7.other"), None);
+        assert_eq!(parse_segment_name(".7.flog"), None);
+    }
+
+    #[test]
+    fn appends_rotate_at_threshold() {
+        let dir = tmp_dir("rotate");
+        let mut w = EpisodeLogWriter::create(
+            &dir,
+            "s",
+            WriterConfig { segment_bytes: 256 },
+        )
+        .unwrap();
+        assert_eq!(w.current_seq(), 0);
+        for _ in 0..10 {
+            w.append(&batch(4)).unwrap();
+        }
+        assert!(w.current_seq() > 0, "no rotation after 10 oversized appends");
+        let (frames, bytes, errors) = w.counters();
+        assert_eq!(frames, 10);
+        assert!(bytes > 0);
+        assert_eq!(errors, 0);
+        // Every segment up to current_seq exists on disk.
+        for seq in 0..=w.current_seq() {
+            assert!(segment_path(&dir, "s", seq).exists(), "segment {seq} missing");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn oversized_single_frame_still_written() {
+        // A frame larger than segment_bytes must not rotate forever:
+        // rotation only happens when the current segment is non-empty.
+        let dir = tmp_dir("oversize");
+        let mut w = EpisodeLogWriter::create(
+            &dir,
+            "s",
+            WriterConfig { segment_bytes: 8 },
+        )
+        .unwrap();
+        w.append(&batch(16)).unwrap();
+        w.append(&batch(16)).unwrap();
+        assert_eq!(w.current_seq(), 1); // one rotation, one frame per segment
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn recreated_writer_starts_fresh_segment() {
+        let dir = tmp_dir("restart");
+        let mut w =
+            EpisodeLogWriter::create(&dir, "s", WriterConfig::default()).unwrap();
+        w.append(&batch(2)).unwrap();
+        drop(w);
+        let w2 =
+            EpisodeLogWriter::create(&dir, "s", WriterConfig::default()).unwrap();
+        assert_eq!(w2.current_seq(), 1, "restart must not reuse segment 0");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn two_writers_one_stream_refused() {
+        let dir = tmp_dir("collide");
+        let _w =
+            EpisodeLogWriter::create(&dir, "s", WriterConfig::default()).unwrap();
+        // Manually force the same seq: create() itself always advances,
+        // so collide by pre-creating the next segment file.
+        std::fs::write(segment_path(&dir, "t", 0), b"").unwrap();
+        let mut w =
+            EpisodeLogWriter::create(&dir, "t", WriterConfig::default()).unwrap();
+        assert_eq!(w.current_seq(), 1);
+        w.append(&batch(1)).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -86,6 +86,9 @@ pub struct GatewayActorState {
     last_reap_ns: u64,
     /// Actions served since the last metrics drain.
     steps_served: usize,
+    /// Optional episode-log sink: every pumped experience fragment is
+    /// also appended as one durable frame (`offline` subsystem).
+    log_sink: Option<crate::offline::EpisodeLogWriter>,
 }
 
 impl GatewayActorState {
@@ -101,7 +104,18 @@ impl GatewayActorState {
             start: Instant::now(),
             last_reap_ns: 0,
             steps_served: 0,
+            log_sink: None,
         }
+    }
+
+    /// Tap this shard's pumped fragments into an episode-log stream
+    /// (or detach with `None`).  Append failures are counted on the
+    /// writer and never stall the serving path.
+    pub fn set_log_sink(
+        &mut self,
+        sink: Option<crate::offline::EpisodeLogWriter>,
+    ) {
+        self.log_sink = sink;
     }
 
     fn now_ns(&self) -> u64 {
@@ -186,6 +200,11 @@ impl GatewayActorState {
     pub fn pump_fragment(&mut self) -> Option<SampleBatch> {
         self.maintain();
         let frag = self.gateway.drain_fragment();
+        if let (Some(sink), Some(batch)) =
+            (self.log_sink.as_mut(), frag.as_ref())
+        {
+            let _ = sink.append(batch);
+        }
         self.publish();
         frag
     }

@@ -9,14 +9,18 @@
 //! the training stream and the worker set, then opt sections in —
 //! [`Reporting::autoscale`] closes the sampler elasticity loop,
 //! [`Reporting::replay`] attaches (and optionally autoscales) a replay
-//! tier, [`Reporting::gateway`] an external-episode gateway tier.  The
-//! four historical free functions (`standard_metrics_reporting`,
-//! `autoscaled_metrics_reporting`, `replay_metrics_reporting`, and
-//! `algorithms::ma_metrics_reporting`) are deprecated shims over it.
+//! tier, [`Reporting::gateway`] an external-episode gateway tier,
+//! [`Reporting::offline`] a log-ingestion tier.  (The four historical
+//! free-function entry points that predated the builder were deprecated
+//! in 0.8.0 and are gone.)
+
+use std::sync::Arc;
+use std::time::Instant;
 
 use crate::actor::{ActorHandle, Autoscaler};
 use crate::iter::LocalIter;
 use crate::metrics::{EpisodeRecord, MetricsHub, TrainResult};
+use crate::offline::OfflineCounters;
 use crate::rollout::{RolloutWorker, WorkerMetrics, WorkerSet};
 
 use super::gateway_ops::GatewayService;
@@ -112,6 +116,7 @@ pub struct Reporting<W: 'static = RolloutWorker> {
     autoscaler: Option<Autoscaler>,
     replay: Option<(ReplayService, Option<Autoscaler>)>,
     gateway: Option<(GatewayService, Option<Autoscaler>)>,
+    offline: Option<Arc<OfflineCounters>>,
 }
 
 impl<W: WorkerMetrics + 'static> Reporting<W> {
@@ -128,6 +133,7 @@ impl<W: WorkerMetrics + 'static> Reporting<W> {
             autoscaler: None,
             replay: None,
             gateway: None,
+            offline: None,
         }
     }
 
@@ -181,6 +187,17 @@ impl<W: WorkerMetrics + 'static> Reporting<W> {
         self
     }
 
+    /// Attach an offline log-ingestion tier: every report snapshots the
+    /// shared [`OfflineCounters`] the plan's `ops::read_from_logs`
+    /// readers bump (frames/transitions/bytes ingested, corrupt and
+    /// truncated frames, reader lag) into `TrainResult::offline`, with
+    /// a decode rate (`frames_per_s`) computed over the report
+    /// interval.
+    pub fn offline(mut self, counters: Arc<OfflineCounters>) -> Self {
+        self.offline = Some(counters);
+        self
+    }
+
     /// Finish the plan: the terminal `TrainResult` stream.
     pub fn build(self) -> LocalIter<TrainResult> {
         let Reporting {
@@ -190,6 +207,7 @@ impl<W: WorkerMetrics + 'static> Reporting<W> {
             mut autoscaler,
             mut replay,
             mut gateway,
+            offline,
         } = self;
         let mut hub = MetricsHub::new(100);
         let local = workers.local.clone();
@@ -197,6 +215,9 @@ impl<W: WorkerMetrics + 'static> Reporting<W> {
         let scale = workers.scale_counters();
         let fault_counters = workers.fault_counters();
         let set = workers;
+        // (cumulative frames, when) at the previous report — the
+        // interval base for the offline decode rate.
+        let mut last_offline: Option<(u64, Instant)> = None;
         LocalIter::from_fn(move || {
             for _ in 0..items_per_report {
                 let item = inner.next()?;
@@ -241,64 +262,26 @@ impl<W: WorkerMetrics + 'static> Reporting<W> {
                     snap.gateway_autoscale = Some(a.stats());
                 }
             }
+            if let Some(counters) = offline.as_ref() {
+                let mut stats = counters.snapshot();
+                let now = Instant::now();
+                if let Some((prev_frames, prev_at)) = last_offline {
+                    let dt = now.duration_since(prev_at).as_secs_f64();
+                    if dt > 0.0 {
+                        stats.frames_per_s =
+                            stats.frames.saturating_sub(prev_frames) as f64
+                                / dt;
+                    }
+                }
+                last_offline = Some((stats.frames, now));
+                snap.offline = Some(stats);
+            }
             snap.scale =
                 Some(scale.stats(registry.num_live(), registry.len()));
             snap.faults = Some(fault_counters.snapshot());
             Some(snap)
         })
     }
-}
-
-/// Deprecated shim over [`Reporting`].
-#[deprecated(
-    since = "0.8.0",
-    note = "use ops::Reporting::new(inner, workers, items_per_report)\
-            .build()"
-)]
-pub fn standard_metrics_reporting(
-    inner: LocalIter<TrainItem>,
-    workers: &WorkerSet,
-    items_per_report: usize,
-) -> LocalIter<TrainResult> {
-    Reporting::new(inner, workers, items_per_report).build()
-}
-
-/// Deprecated shim over [`Reporting`].
-#[deprecated(
-    since = "0.8.0",
-    note = "use ops::Reporting::new(..).autoscale(controller).build()"
-)]
-pub fn autoscaled_metrics_reporting(
-    inner: LocalIter<TrainItem>,
-    workers: &WorkerSet,
-    items_per_report: usize,
-    autoscaler: Autoscaler,
-) -> LocalIter<TrainResult> {
-    Reporting::new(inner, workers, items_per_report)
-        .autoscale(autoscaler)
-        .build()
-}
-
-/// Deprecated shim over [`Reporting`].
-#[deprecated(
-    since = "0.8.0",
-    note = "use ops::Reporting::new(..).replay(service, controller)\
-            .build(), with .autoscale(..) for the sampler loop"
-)]
-pub fn replay_metrics_reporting(
-    inner: LocalIter<TrainItem>,
-    workers: &WorkerSet,
-    items_per_report: usize,
-    sampler_autoscaler: Option<Autoscaler>,
-    replay: &ReplayService,
-    replay_autoscaler: Option<Autoscaler>,
-) -> LocalIter<TrainResult> {
-    let mut r = Reporting::new(inner, workers, items_per_report)
-        .replay(replay, replay_autoscaler);
-    if let Some(a) = sampler_autoscaler {
-        r = r.autoscale(a);
-    }
-    r.build()
 }
 
 #[cfg(test)]
@@ -427,6 +410,38 @@ mod tests {
         let r = reports.next().unwrap();
         assert_eq!(r.replay_autoscale.unwrap().decisions_down, 1);
         assert_eq!(service.num_live_shards(), 1);
+    }
+
+    #[test]
+    fn offline_reports_attach_counters_and_interval_rate() {
+        use std::sync::atomic::Ordering::Relaxed;
+
+        let workers = worker_set(1);
+        let counters = OfflineCounters::new();
+        counters.frames.store(10, Relaxed);
+        counters.transitions.store(320, Relaxed);
+        counters.lag_bytes.store(512, Relaxed);
+        let mut train = train_one_step(&workers);
+        let train_op = parallel_rollouts_from(&workers)
+            .gather_async(1)
+            .for_each(move |b| train(b));
+        let mut reports = Reporting::new(train_op, &workers, 1)
+            .offline(counters.clone())
+            .build();
+        let r = reports.next().unwrap();
+        let o = r.offline.expect("offline stats attached");
+        assert_eq!(o.frames, 10);
+        assert_eq!(o.transitions, 320);
+        assert_eq!(o.lag_bytes, 512);
+        assert_eq!(o.frames_per_s, 0.0); // no interval base yet
+        assert!(r.pipeline_summary().contains("offline="), "{r:?}");
+        // Second report: 30 more frames over a measurable interval.
+        counters.frames.fetch_add(30, Relaxed);
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let r = reports.next().unwrap();
+        let o = r.offline.unwrap();
+        assert_eq!(o.frames, 40);
+        assert!(o.frames_per_s > 0.0, "{o:?}");
     }
 
     #[test]

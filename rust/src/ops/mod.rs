@@ -9,6 +9,7 @@
 
 mod gateway_ops;
 mod metrics_ops;
+mod offline_ops;
 mod replay_ops;
 mod rollout_ops;
 mod train_ops;
@@ -23,12 +24,11 @@ pub use gateway_ops::{
     DEFAULT_GATEWAY_POLL_BACKOFF_BASE, DEFAULT_GATEWAY_POLL_BACKOFF_CAP,
 };
 pub use metrics_ops::Reporting;
-#[allow(deprecated)]
-pub use metrics_ops::{
-    autoscaled_metrics_reporting, replay_metrics_reporting,
-    standard_metrics_reporting,
-};
 pub(crate) use metrics_ops::{drain_and_snapshot, drive_autoscaler};
+pub use offline_ops::{
+    log_frames, ope_estimate, read_from_logs, read_from_logs_with_backoff,
+    OpeReport, DEFAULT_LOG_BACKOFF_BASE, DEFAULT_LOG_BACKOFF_CAP,
+};
 pub use replay_ops::{
     create_replay_actors, create_replay_shards, replay, replay_with_backoff,
     store_to_replay_buffer, ReplayActor, ReplayCounters, ReplayLease,
@@ -43,7 +43,7 @@ pub use train_ops::{
 };
 
 /// The item type flowing between training operators: stats plus step
-/// counters (feeds `StandardMetricsReporting`).
+/// counters (feeds the [`Reporting`] tail).
 #[derive(Debug, Clone, Default)]
 pub struct TrainItem {
     pub stats: BTreeMap<String, f64>,

@@ -1,0 +1,338 @@
+//! Offline dataflow operators: the log-backed experience source and
+//! off-policy evaluation.
+//!
+//! `read_from_logs` is the offline twin of `store_to_replay_buffer`'s
+//! producer side: it tail-follows episode-log streams
+//! ([`crate::offline::LogStreamReader`]) and routes every decoded frame
+//! into the sharded [`ReplayService`], so an offline plan's replay →
+//! learn stage is *identical* to the online one — the only difference
+//! is which source op feeds the buffer.  `ope_estimate` consumes the
+//! same frames directly and scores a target policy against the logged
+//! behavior policy by importance sampling.
+
+use std::path::Path;
+use std::time::Duration;
+
+use super::replay_ops::{store_to_replay_buffer, ReplayService};
+use crate::iter::LocalIter;
+use crate::offline::{discover_streams, LogStreamReader, OfflineCounters};
+use crate::util::Backoff;
+use crate::SampleBatch;
+
+/// Idle-poll backoff for the log source (same shape as the replay and
+/// gateway sources: spin fast while frames flow, back off to a bounded
+/// sleep when fully caught up with the writers).
+pub const DEFAULT_LOG_BACKOFF_BASE: Duration = Duration::from_micros(200);
+pub const DEFAULT_LOG_BACKOFF_CAP: Duration = Duration::from_millis(20);
+
+/// A dataflow source that tail-follows `readers` round-robin and stores
+/// every decoded frame into the replay service (pass-through, exactly
+/// like `store_to_replay_buffer`).  Yields `Some(batch)` per frame and
+/// `None` on idle cycles — it never blocks and never ends, so it
+/// composes under `union`/`concurrently` with the replay→learn stage
+/// surfaced.
+pub fn read_from_logs(
+    readers: Vec<LogStreamReader>,
+    service: &ReplayService,
+) -> LocalIter<Option<SampleBatch>> {
+    read_from_logs_with_backoff(
+        readers,
+        service,
+        DEFAULT_LOG_BACKOFF_BASE,
+        DEFAULT_LOG_BACKOFF_CAP,
+    )
+}
+
+/// [`read_from_logs`] with an explicit idle backoff.
+pub fn read_from_logs_with_backoff(
+    mut readers: Vec<LogStreamReader>,
+    service: &ReplayService,
+    backoff_base: Duration,
+    backoff_cap: Duration,
+) -> LocalIter<Option<SampleBatch>> {
+    let mut store = store_to_replay_buffer(service);
+    let mut backoff = Backoff::new(backoff_base, backoff_cap);
+    let mut next_idx = 0usize;
+    LocalIter::from_fn(move || {
+        if readers.is_empty() {
+            std::thread::sleep(backoff.next_delay());
+            return Some(None);
+        }
+        // One round-robin sweep starting after the last productive
+        // reader, so a chatty stream cannot starve the others.
+        for probe in 0..readers.len() {
+            let i = (next_idx + probe) % readers.len();
+            if let Some(batch) = readers[i].poll() {
+                next_idx = i + 1;
+                backoff.reset();
+                return Some(Some(store(batch)));
+            }
+        }
+        std::thread::sleep(backoff.next_delay());
+        Some(None)
+    })
+}
+
+/// A *finite* frame stream over the logs currently in `dir`: every
+/// stream is discovered and drained until all readers report idle, then
+/// the iterator ends.  This is the input shape `ope_estimate` wants —
+/// evaluation runs over a static recorded dataset, not a live tail.
+pub fn log_frames(dir: impl AsRef<Path>) -> LocalIter<SampleBatch> {
+    let dir = dir.as_ref().to_path_buf();
+    let counters = OfflineCounters::new();
+    let mut readers: Vec<LogStreamReader> = discover_streams(&dir)
+        .into_iter()
+        .map(|s| LogStreamReader::follow(&dir, s, counters.clone()))
+        .collect();
+    let mut next_idx = 0usize;
+    LocalIter::from_fn(move || {
+        for probe in 0..readers.len() {
+            let i = (next_idx + probe) % readers.len();
+            if let Some(batch) = readers[i].poll() {
+                next_idx = i + 1;
+                return Some(batch);
+            }
+        }
+        None // every stream idle: static logs are exhausted
+    })
+}
+
+/// Off-policy evaluation result: importance-sampling estimates of the
+/// *target* policy's per-episode return from trajectories collected by
+/// the logged *behavior* policy.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct OpeReport {
+    /// Complete episodes scored.
+    pub episodes: usize,
+    /// Transitions inside those episodes.
+    pub steps: usize,
+    /// Transitions dropped: trailing partial episodes (no terminal
+    /// `done` in the logs) and rows without a recorded behavior logp.
+    pub dropped_steps: usize,
+    /// Mean logged (behavior-policy) episode return — the baseline the
+    /// IS estimators correct.
+    pub behavior_mean_return: f64,
+    /// Ordinary importance sampling: `mean(w_i · G_i)` — unbiased,
+    /// high variance (weights clamped at `exp(±50)` against overflow).
+    pub ordinary_is: f64,
+    /// Weighted importance sampling: `Σ w_i G_i / Σ w_i` — biased,
+    /// much lower variance; the default ranking estimator.
+    pub weighted_is: f64,
+}
+
+/// Score a target policy on logged trajectories without an env.
+///
+/// `target_logp(obs_row, action)` returns the target policy's
+/// log-probability of the logged action; the behavior logp comes from
+/// the `action_logp` column the log writer recorded.  Per-episode
+/// importance weights are accumulated in log space
+/// (`Σ_t target_logp − behavior_logp`) and applied to the discounted
+/// logged return `G = Σ_t γ^t r_t`.
+///
+/// Episode boundaries are the `done` flags in the stream, which assumes
+/// frames arrive in collection order per stream — true for logs written
+/// by a single-env worker or gateway session stream.  Trailing steps
+/// with no terminal flag, and rows missing a behavior logp, are dropped
+/// and counted rather than silently skewing the estimate.
+pub fn ope_estimate(
+    mut frames: LocalIter<SampleBatch>,
+    mut target_logp: impl FnMut(&[f32], i32) -> f64,
+    gamma: f64,
+) -> OpeReport {
+    let mut report = OpeReport::default();
+    // Per-episode accumulators (bounded state, episode at a time).
+    let mut ep_logw = 0.0f64;
+    let mut ep_return = 0.0f64;
+    let mut ep_steps = 0usize;
+    let mut discount = 1.0f64;
+    // Completed episodes: (log importance weight, discounted return).
+    let mut episodes: Vec<(f64, f64)> = Vec::new();
+    while let Some(batch) = frames.next() {
+        let has_logp = batch.action_logp.len() == batch.len();
+        for i in 0..batch.len() {
+            if !has_logp {
+                report.dropped_steps += 1;
+                continue;
+            }
+            let behavior = f64::from(batch.action_logp[i]);
+            let target = target_logp(batch.obs_row(i), batch.actions[i]);
+            ep_logw += target - behavior;
+            ep_return += discount * f64::from(batch.rewards[i]);
+            discount *= gamma;
+            ep_steps += 1;
+            if batch.dones[i] != 0.0 {
+                episodes.push((ep_logw, ep_return));
+                report.steps += ep_steps;
+                ep_logw = 0.0;
+                ep_return = 0.0;
+                ep_steps = 0;
+                discount = 1.0;
+            }
+        }
+    }
+    report.dropped_steps += ep_steps; // trailing partial episode
+    report.episodes = episodes.len();
+    if episodes.is_empty() {
+        return report;
+    }
+    let n = episodes.len() as f64;
+    report.behavior_mean_return =
+        episodes.iter().map(|&(_, g)| g).sum::<f64>() / n;
+    // Ordinary IS, clamped against exp overflow on long episodes.
+    report.ordinary_is = episodes
+        .iter()
+        .map(|&(logw, g)| logw.clamp(-50.0, 50.0).exp() * g)
+        .sum::<f64>()
+        / n;
+    // Weighted IS: shift by the max log-weight so the normalizer is
+    // computed at a representable scale.
+    let max_logw = episodes
+        .iter()
+        .map(|&(logw, _)| logw)
+        .fold(f64::NEG_INFINITY, f64::max);
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for &(logw, g) in &episodes {
+        let w = (logw - max_logw).exp();
+        num += w * g;
+        den += w;
+    }
+    report.weighted_is = num / den;
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::replay_ops::create_replay_shards;
+    use super::*;
+    use crate::offline::{EpisodeLogWriter, WriterConfig};
+    use crate::sample_batch::SampleBatchBuilder;
+    use std::path::PathBuf;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("flowrl_offops_{}_{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    /// One episode of `n` steps with constant reward and logp.
+    fn episode(n: usize, reward: f32, logp: f32) -> SampleBatch {
+        let mut b = SampleBatchBuilder::new(1);
+        for i in 0..n {
+            b.add_transition_with_logp(
+                &[i as f32],
+                (i % 2) as i32,
+                reward,
+                &[i as f32 + 1.0],
+                i + 1 == n,
+                logp,
+            );
+        }
+        b.build()
+    }
+
+    #[test]
+    fn read_from_logs_feeds_replay_service() {
+        let dir = tmp_dir("feeds");
+        let mut w =
+            EpisodeLogWriter::create(&dir, "s", WriterConfig::default()).unwrap();
+        for _ in 0..4 {
+            w.append(&episode(8, 1.0, -0.69)).unwrap();
+        }
+        let counters = OfflineCounters::new();
+        let reader = LogStreamReader::follow(&dir, "s", counters.clone());
+        let service = create_replay_shards(2, 1, 128, 4, 8);
+        let mut source = read_from_logs(vec![reader], &service);
+        let mut frames = 0;
+        for _ in 0..16 {
+            if let Some(Some(_)) = source.next() {
+                frames += 1;
+            }
+        }
+        assert_eq!(frames, 4);
+        assert_eq!(service.backlog_stats().added, 32);
+        assert_eq!(counters.snapshot().transitions, 32);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn log_frames_is_finite_over_static_logs() {
+        let dir = tmp_dir("finite");
+        for stream in ["a", "b"] {
+            let mut w =
+                EpisodeLogWriter::create(&dir, stream, WriterConfig::default())
+                    .unwrap();
+            w.append(&episode(3, 1.0, -0.1)).unwrap();
+            w.append(&episode(3, 2.0, -0.1)).unwrap();
+        }
+        let got = log_frames(&dir).collect();
+        assert_eq!(got.len(), 4);
+        assert!(log_frames(tmp_dir("empty")).next().is_none());
+    }
+
+    #[test]
+    fn ope_identical_policies_recover_behavior_return() {
+        // target == behavior → all weights 1 → OIS = WIS = mean return.
+        let frames = LocalIter::from_items(vec![
+            episode(5, 1.0, -0.5),
+            episode(10, 1.0, -0.5),
+        ]);
+        let report = ope_estimate(frames, |_, _| -0.5, 1.0);
+        assert_eq!(report.episodes, 2);
+        assert_eq!(report.steps, 15);
+        assert_eq!(report.dropped_steps, 0);
+        assert!((report.behavior_mean_return - 7.5).abs() < 1e-9);
+        assert!((report.ordinary_is - 7.5).abs() < 1e-9);
+        assert!((report.weighted_is - 7.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ope_upweights_episodes_the_target_prefers() {
+        // Short low-return episode vs long high-return episode; a
+        // target that assigns higher likelihood to the long episode's
+        // actions must estimate above the behavior mean.
+        let mut frames = vec![episode(2, 0.0, -0.7)];
+        frames.push(episode(8, 1.0, -0.7));
+        let report = ope_estimate(
+            LocalIter::from_items(frames),
+            // Target "recognizes" the high-reward episode by its obs
+            // range (longer episode reaches obs >= 2).
+            |obs, _| if obs[0] >= 2.0 { -0.1 } else { -1.5 },
+            1.0,
+        );
+        assert!(
+            report.weighted_is > report.behavior_mean_return,
+            "WIS {} should exceed behavior mean {}",
+            report.weighted_is,
+            report.behavior_mean_return
+        );
+        assert!(report.ordinary_is > report.behavior_mean_return);
+    }
+
+    #[test]
+    fn ope_discounts_and_drops_partials() {
+        // One complete 2-step episode (γ=0.5: G = 1 + 0.5·1 = 1.5) and
+        // one trailing partial (never done) that must be dropped.
+        let mut partial = SampleBatchBuilder::new(1);
+        partial.add_transition_with_logp(&[0.0], 0, 99.0, &[1.0], false, -0.5);
+        let frames =
+            LocalIter::from_items(vec![episode(2, 1.0, -0.5), partial.build()]);
+        let report = ope_estimate(frames, |_, _| -0.5, 0.5);
+        assert_eq!(report.episodes, 1);
+        assert_eq!(report.steps, 2);
+        assert_eq!(report.dropped_steps, 1);
+        assert!((report.weighted_is - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ope_counts_rows_without_behavior_logp() {
+        // add_transition (no logp column) → every row dropped.
+        let mut b = SampleBatchBuilder::new(1);
+        b.add_transition(&[0.0], 0, 1.0, &[1.0], true);
+        let report =
+            ope_estimate(LocalIter::from_items(vec![b.build()]), |_, _| 0.0, 1.0);
+        assert_eq!(report.episodes, 0);
+        assert_eq!(report.dropped_steps, 1);
+    }
+}

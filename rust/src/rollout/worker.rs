@@ -24,6 +24,10 @@ pub enum CollectMode {
     OnPolicyWithNextObs,
     /// Raw (s, a, r, s', done) transitions for replay (DQN/Ape-X).
     Transitions,
+    /// Transitions plus the behavior policy's action logp — the schema
+    /// episode logging records so `ops::ope_estimate` can importance-
+    /// weight against the logged behavior policy.
+    TransitionsWithLogp,
 }
 
 /// A rollout worker: a vectorized set of env instances stepped in
@@ -51,6 +55,9 @@ pub struct RolloutWorker {
     actions_scratch: Vec<ActionOutput>,
     /// Reused output buffer for the per-fragment GAE bootstrap forward.
     values_scratch: Vec<f32>,
+    /// Optional episode-log sink: every sampled fragment is also
+    /// appended as one durable CRC-framed record (`offline` subsystem).
+    log_sink: Option<crate::offline::EpisodeLogWriter>,
 }
 
 impl RolloutWorker {
@@ -84,7 +91,16 @@ impl RolloutWorker {
             next_obs_scratch: vec![0.0; obs_dim],
             actions_scratch: Vec::with_capacity(n),
             values_scratch: Vec::with_capacity(n),
+            log_sink: None,
         }
+    }
+
+    /// Tap this worker's sampled fragments into an episode-log stream:
+    /// every `sample()` return value is also appended to `sink` as one
+    /// durable frame.  A write failure is counted on the writer, never
+    /// surfaced into the sampling path — logging is a tap, not a gate.
+    pub fn set_log_sink(&mut self, sink: crate::offline::EpisodeLogWriter) {
+        self.log_sink = Some(sink);
     }
 
     pub fn num_envs(&self) -> usize {
@@ -128,6 +144,11 @@ impl RolloutWorker {
                             cur, a.action, reward, &self.next_obs_scratch,
                             done,
                         ),
+                    CollectMode::TransitionsWithLogp => self.builders[e]
+                        .add_transition_with_logp(
+                            cur, a.action, reward, &self.next_obs_scratch,
+                            done, a.logp,
+                        ),
                 }
                 self.ep_reward[e] += reward as f64;
                 self.ep_len[e] += 1;
@@ -159,7 +180,13 @@ impl RolloutWorker {
             segments.push(seg);
         }
         self.values_scratch = last_values;
-        SampleBatch::concat_all(&segments)
+        let batch = SampleBatch::concat_all(&segments);
+        if let Some(sink) = self.log_sink.as_mut() {
+            // Failed appends are counted on the writer; sampling never
+            // stalls on the log tap.
+            let _ = sink.append(&batch);
+        }
+        batch
     }
 
     /// The paper's `worker.compute_gradients(worker.sample.remote())`

@@ -135,6 +135,23 @@ impl SampleBatchBuilder {
         self.dones.push(if done { 1.0 } else { 0.0 });
     }
 
+    /// Append an off-policy transition *with* the behavior policy's
+    /// action log-probability — the schema episode logging wants:
+    /// DQN-shaped rows (next_obs, no vf columns) that still carry the
+    /// logp off-policy evaluation needs (`ops::ope_estimate`).
+    pub fn add_transition_with_logp(
+        &mut self,
+        obs: &[f32],
+        action: i32,
+        reward: f32,
+        next_obs: &[f32],
+        done: bool,
+        action_logp: f32,
+    ) {
+        self.add_transition(obs, action, reward, next_obs, done);
+        self.action_logp.push(action_logp);
+    }
+
     pub fn len(&self) -> usize {
         if self.obs_dim == 0 {
             0

@@ -15,6 +15,7 @@ mod builder;
 mod column;
 mod gae;
 mod multi_agent;
+pub mod wire;
 
 pub use batch::SampleBatch;
 pub use builder::SampleBatchBuilder;

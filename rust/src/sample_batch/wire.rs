@@ -1,0 +1,432 @@
+//! `sample_batch::wire` — the crate's ONE binary codec substrate.
+//!
+//! Two durable byte formats exist in the crate: learner checkpoints
+//! (`crate::checkpoint`) and episode-log frames (`crate::offline`).
+//! Both are built from the helpers here — little-endian fixed-width
+//! integers, packed LE `f32`/`i32` slices, CRC-32 (IEEE) framing — so
+//! endianness, framing, and integrity checking cannot drift between
+//! them.
+//!
+//! Layouts:
+//!
+//! * **Frame** (the episode-log record): `u32 payload_len | u32
+//!   crc32(payload) | payload` — length-prefixed so a reader can skip a
+//!   corrupt payload without losing framing, CRC'd so corruption is
+//!   *detected* rather than decoded.
+//! * **Batch payload** ([`encode_batch`]/[`decode_batch`]): `u32
+//!   obs_dim`, then the ten [`SampleBatch`] columns in fixed schema
+//!   order, each as `u32 count | packed LE values` (`count == 0` ⇒ the
+//!   column is absent, mirroring the in-memory empty-column
+//!   convention).  Column order: obs, actions (i32), rewards, dones,
+//!   action_logp, vf_preds, advantages, value_targets, next_obs,
+//!   weights.
+//! * **Checkpoint** (v1, unchanged bytes): see `crate::checkpoint` —
+//!   its reads/writes go through [`read_u32`]/[`read_u64`]/
+//!   [`read_f32s`]/[`write_f32s`] here.
+
+use std::io::{self, Read, Write};
+
+use super::batch::SampleBatch;
+use super::column::{FCol, ICol};
+
+/// Bytes of the `len | crc` frame header.
+pub const FRAME_HEADER_BYTES: usize = 8;
+
+/// Upper bound on a sane frame payload (a fragment batch is KBs; 64 MiB
+/// of claimed payload means the length word is garbage, not data).
+pub const MAX_FRAME_BYTES: u32 = 64 * 1024 * 1024;
+
+// ---------------------------------------------------------------------
+// CRC-32 (IEEE 802.3, reflected, init/xorout 0xFFFFFFFF) — the zlib
+// polynomial, table-driven, built once.
+// ---------------------------------------------------------------------
+
+fn crc_table() -> &'static [u32; 256] {
+    static TABLE: std::sync::OnceLock<[u32; 256]> = std::sync::OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut table = [0u32; 256];
+        for (i, slot) in table.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *slot = c;
+        }
+        table
+    })
+}
+
+/// CRC-32 (IEEE) of `data` — the integrity check under every log frame.
+pub fn crc32(data: &[u8]) -> u32 {
+    let table = crc_table();
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = table[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+// ---------------------------------------------------------------------
+// Buffer-building primitives (encoder side).
+// ---------------------------------------------------------------------
+
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append `count | packed LE f32s`.
+pub fn put_f32_col(out: &mut Vec<u8>, vals: &[f32]) {
+    put_u32(out, vals.len() as u32);
+    out.reserve(vals.len() * 4);
+    for v in vals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Append `count | packed LE i32s`.
+pub fn put_i32_col(out: &mut Vec<u8>, vals: &[i32]) {
+    put_u32(out, vals.len() as u32);
+    out.reserve(vals.len() * 4);
+    for v in vals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+// ---------------------------------------------------------------------
+// Stream primitives (shared with the checkpoint format).
+// ---------------------------------------------------------------------
+
+pub fn read_u32(r: &mut impl Read) -> io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+pub fn read_u64(r: &mut impl Read) -> io::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+/// Read `n` packed LE f32s.
+pub fn read_f32s(r: &mut impl Read, n: usize) -> io::Result<Vec<f32>> {
+    let mut buf = vec![0u8; n * 4];
+    r.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Read `n` packed LE i32s.
+pub fn read_i32s(r: &mut impl Read, n: usize) -> io::Result<Vec<i32>> {
+    let mut buf = vec![0u8; n * 4];
+    r.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Write one tensor as a single contiguous packed-LE-f32 slice,
+/// assembled in a caller-reused scratch buffer — the checkpoint path's
+/// one-buffered-write-per-policy idiom, shared so the log writer's
+/// framing uses identical byte packing.
+pub fn write_f32s(
+    w: &mut impl Write,
+    vals: &[f32],
+    scratch: &mut Vec<u8>,
+) -> io::Result<()> {
+    scratch.clear();
+    scratch.reserve(vals.len() * 4);
+    for v in vals {
+        scratch.extend_from_slice(&v.to_le_bytes());
+    }
+    w.write_all(scratch)
+}
+
+fn bad(msg: impl Into<String>) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.into())
+}
+
+// ---------------------------------------------------------------------
+// The batch payload codec.
+// ---------------------------------------------------------------------
+
+/// Encode `batch` into the wire payload layout (appended to `out`,
+/// which callers reuse across frames — steady-state logging allocates
+/// only on capacity growth).
+pub fn encode_batch(batch: &SampleBatch, out: &mut Vec<u8>) {
+    put_u32(out, batch.obs_dim as u32);
+    put_f32_col(out, &batch.obs);
+    put_i32_col(out, &batch.actions);
+    put_f32_col(out, &batch.rewards);
+    put_f32_col(out, &batch.dones);
+    put_f32_col(out, &batch.action_logp);
+    put_f32_col(out, &batch.vf_preds);
+    put_f32_col(out, &batch.advantages);
+    put_f32_col(out, &batch.value_targets);
+    put_f32_col(out, &batch.next_obs);
+    put_f32_col(out, &batch.weights);
+}
+
+fn read_f32_col(r: &mut impl Read, max: usize) -> io::Result<Vec<f32>> {
+    let n = read_u32(r)? as usize;
+    if n > max {
+        return Err(bad(format!("implausible column length {n}")));
+    }
+    read_f32s(r, n)
+}
+
+/// Decode one batch payload (the inverse of [`encode_batch`]).  Every
+/// length word is bounds-checked against the payload size before
+/// allocation, so a corrupt-but-CRC-colliding payload errors instead of
+/// OOMing the reader.
+pub fn decode_batch(payload: &[u8]) -> io::Result<SampleBatch> {
+    let max = payload.len() / 4 + 1;
+    let r = &mut &payload[..];
+    let obs_dim = read_u32(r)? as usize;
+    let obs = read_f32_col(r, max)?;
+    let n_actions = read_u32(r)? as usize;
+    if n_actions > max {
+        return Err(bad(format!("implausible column length {n_actions}")));
+    }
+    let actions = read_i32s(r, n_actions)?;
+    let rewards = read_f32_col(r, max)?;
+    let dones = read_f32_col(r, max)?;
+    let action_logp = read_f32_col(r, max)?;
+    let vf_preds = read_f32_col(r, max)?;
+    let advantages = read_f32_col(r, max)?;
+    let value_targets = read_f32_col(r, max)?;
+    let next_obs = read_f32_col(r, max)?;
+    let weights = read_f32_col(r, max)?;
+    if !r.is_empty() {
+        return Err(bad(format!("{} trailing payload bytes", r.len())));
+    }
+    if obs_dim == 0 && !obs.is_empty() {
+        return Err(bad("obs present with obs_dim 0"));
+    }
+    if obs_dim != 0 && obs.len() % obs_dim != 0 {
+        return Err(bad(format!(
+            "obs length {} not a multiple of obs_dim {obs_dim}",
+            obs.len()
+        )));
+    }
+    Ok(SampleBatch {
+        obs: FCol::from_vec(obs),
+        obs_dim,
+        actions: ICol::from_vec(actions),
+        rewards: FCol::from_vec(rewards),
+        dones: FCol::from_vec(dones),
+        action_logp: FCol::from_vec(action_logp),
+        vf_preds: FCol::from_vec(vf_preds),
+        advantages: FCol::from_vec(advantages),
+        value_targets: FCol::from_vec(value_targets),
+        next_obs: FCol::from_vec(next_obs),
+        weights: FCol::from_vec(weights),
+    })
+}
+
+// ---------------------------------------------------------------------
+// The frame codec (length-prefixed + CRC).
+// ---------------------------------------------------------------------
+
+/// Wrap `payload` into one log frame: `len | crc | payload`, appended
+/// to `out`.
+pub fn encode_frame(payload: &[u8], out: &mut Vec<u8>) {
+    put_u32(out, payload.len() as u32);
+    put_u32(out, crc32(payload));
+    out.extend_from_slice(payload);
+}
+
+/// What [`try_decode_frame`] saw at a buffer position.
+#[derive(Debug, PartialEq)]
+pub enum FrameStatus {
+    /// A complete, CRC-clean frame: (payload range start, end, total
+    /// frame bytes consumed).
+    Ok { payload_start: usize, payload_end: usize, consumed: usize },
+    /// Not enough bytes yet for the header or the claimed payload —
+    /// the writer may still be appending; re-try with more bytes.
+    Incomplete,
+    /// Header present but the CRC does not match the payload: skip
+    /// `consumed` bytes (framing is intact — the length word passed the
+    /// plausibility bound).
+    BadCrc { consumed: usize },
+    /// The length word itself is implausible (> [`MAX_FRAME_BYTES`]):
+    /// framing is lost and the rest of this segment cannot be trusted.
+    BadLength,
+}
+
+/// Inspect `buf` for one frame starting at offset 0 without copying.
+pub fn try_decode_frame(buf: &[u8]) -> FrameStatus {
+    if buf.len() < FRAME_HEADER_BYTES {
+        return FrameStatus::Incomplete;
+    }
+    let len = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]);
+    if len > MAX_FRAME_BYTES {
+        return FrameStatus::BadLength;
+    }
+    let crc = u32::from_le_bytes([buf[4], buf[5], buf[6], buf[7]]);
+    let end = FRAME_HEADER_BYTES + len as usize;
+    if buf.len() < end {
+        return FrameStatus::Incomplete;
+    }
+    let payload = &buf[FRAME_HEADER_BYTES..end];
+    if crc32(payload) != crc {
+        return FrameStatus::BadCrc { consumed: end };
+    }
+    FrameStatus::Ok {
+        payload_start: FRAME_HEADER_BYTES,
+        payload_end: end,
+        consumed: end,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sample_batch::SampleBatchBuilder;
+
+    #[test]
+    fn crc32_matches_ieee_check_value() {
+        // The canonical CRC-32/ISO-HDLC check vector.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    fn transitions_batch(n: usize) -> SampleBatch {
+        let mut b = SampleBatchBuilder::new(3);
+        for i in 0..n {
+            b.add_transition(
+                &[i as f32, 1.0, -2.0],
+                (i % 2) as i32,
+                0.5 * i as f32,
+                &[i as f32 + 1.0, 1.0, -2.0],
+                i == n - 1,
+            );
+        }
+        b.build()
+    }
+
+    #[test]
+    fn batch_roundtrip_transitions_schema() {
+        let batch = transitions_batch(5);
+        let mut payload = Vec::new();
+        encode_batch(&batch, &mut payload);
+        let back = decode_batch(&payload).unwrap();
+        assert_eq!(back, batch);
+        // Optional columns absent on both sides.
+        assert!(back.action_logp.is_empty());
+        assert!(back.advantages.is_empty());
+    }
+
+    #[test]
+    fn batch_roundtrip_all_columns() {
+        let mut b = SampleBatchBuilder::new(2);
+        b.add_step_with_next(&[0.0, 1.0], 1, 1.0, &[1.0, 2.0], false, -0.7, 0.3);
+        b.add_step_with_next(&[1.0, 2.0], 0, 0.0, &[2.0, 3.0], true, -0.1, 0.9);
+        let mut batch = b.build();
+        batch.advantages = vec![0.25, -0.5].into();
+        batch.value_targets = vec![1.0, 2.0].into();
+        batch.weights = vec![0.5, 2.0].into();
+        let mut payload = Vec::new();
+        encode_batch(&batch, &mut payload);
+        assert_eq!(decode_batch(&payload).unwrap(), batch);
+    }
+
+    #[test]
+    fn empty_batch_roundtrip() {
+        let batch = SampleBatch::new(4);
+        let mut payload = Vec::new();
+        encode_batch(&batch, &mut payload);
+        let back = decode_batch(&payload).unwrap();
+        assert_eq!(back, batch);
+        assert_eq!(back.len(), 0);
+    }
+
+    #[test]
+    fn decode_rejects_truncation_and_trailing_garbage() {
+        let mut payload = Vec::new();
+        encode_batch(&transitions_batch(3), &mut payload);
+        assert!(decode_batch(&payload[..payload.len() - 1]).is_err());
+        assert!(decode_batch(&payload[..5]).is_err());
+        let mut extra = payload.clone();
+        extra.push(0xAB);
+        assert!(decode_batch(&extra).is_err());
+    }
+
+    #[test]
+    fn decode_rejects_implausible_column_length() {
+        // A length word far beyond the payload must error before
+        // allocating.
+        let mut payload = Vec::new();
+        put_u32(&mut payload, 4); // obs_dim
+        put_u32(&mut payload, u32::MAX); // obs count: garbage
+        assert!(decode_batch(&payload).is_err());
+    }
+
+    #[test]
+    fn decode_rejects_ragged_obs() {
+        let mut payload = Vec::new();
+        put_u32(&mut payload, 4); // obs_dim
+        put_f32_col(&mut payload, &[0.0; 6]); // 6 % 4 != 0
+        for _ in 0..9 {
+            put_u32(&mut payload, 0); // remaining columns empty
+        }
+        assert!(decode_batch(&payload).is_err());
+    }
+
+    #[test]
+    fn frame_roundtrip_and_corruption_detection() {
+        let mut payload = Vec::new();
+        encode_batch(&transitions_batch(4), &mut payload);
+        let mut frame = Vec::new();
+        encode_frame(&payload, &mut frame);
+        match try_decode_frame(&frame) {
+            FrameStatus::Ok { payload_start, payload_end, consumed } => {
+                assert_eq!(consumed, frame.len());
+                assert_eq!(&frame[payload_start..payload_end], &payload[..]);
+            }
+            other => panic!("expected Ok, got {other:?}"),
+        }
+        // Truncated tail: incomplete, not an error.
+        assert_eq!(
+            try_decode_frame(&frame[..frame.len() - 3]),
+            FrameStatus::Incomplete
+        );
+        assert_eq!(try_decode_frame(&frame[..4]), FrameStatus::Incomplete);
+        // One flipped payload byte: BadCrc with intact framing.
+        let mut corrupt = frame.clone();
+        let n = corrupt.len();
+        corrupt[n - 1] ^= 0x40;
+        assert_eq!(
+            try_decode_frame(&corrupt),
+            FrameStatus::BadCrc { consumed: frame.len() }
+        );
+        // Garbage length word: framing lost.
+        let mut torn = frame;
+        torn[3] = 0xFF;
+        assert_eq!(try_decode_frame(&torn), FrameStatus::BadLength);
+    }
+
+    #[test]
+    fn stream_helpers_roundtrip() {
+        let mut buf = Vec::new();
+        put_u32(&mut buf, 0xDEAD_BEEF);
+        put_u64(&mut buf, u64::MAX - 7);
+        let mut scratch = Vec::new();
+        write_f32s(&mut buf, &[1.5, -2.25, 1e9], &mut scratch).unwrap();
+        put_i32_col(&mut buf, &[-1, 0, i32::MAX]);
+        let r = &mut &buf[..];
+        assert_eq!(read_u32(r).unwrap(), 0xDEAD_BEEF);
+        assert_eq!(read_u64(r).unwrap(), u64::MAX - 7);
+        assert_eq!(read_f32s(r, 3).unwrap(), vec![1.5, -2.25, 1e9]);
+        let n = read_u32(r).unwrap() as usize;
+        assert_eq!(read_i32s(r, n).unwrap(), vec![-1, 0, i32::MAX]);
+        assert!(r.is_empty());
+    }
+}

@@ -1,0 +1,444 @@
+//! Offline dataflow e2e — log durability (rotation, torn tails, corrupt
+//! frames) and the full record → train-from-logs → off-policy-evaluate
+//! loop, including the plan's "zero envs constructed" guarantee.
+//! The `--ignored` soak kill-restarts a writer mid-frame repeatedly
+//! under a live tailing reader (the torn-log chaos case wired into
+//! `tools/ci.sh --chaos`).
+
+use std::collections::BTreeMap;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use flowrl::algorithms::{
+    offline_dqn_plan, DqnConfig, EnvKind, OfflineDqnConfig, TrainerConfig,
+};
+use flowrl::env::{CartPole, Env};
+use flowrl::offline::{
+    EpisodeLogWriter, LogStreamReader, OfflineCounters, WriterConfig,
+};
+use flowrl::ops::{log_frames, ope_estimate};
+use flowrl::policy::{ActionOutput, Gradients, Policy};
+use flowrl::rollout::{CollectMode, RolloutWorker};
+use flowrl::sample_batch::{wire, SampleBatchBuilder};
+use flowrl::SampleBatch;
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("flowrl_offline_{}_{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn segment_path(dir: &Path, stream: &str, seq: u64) -> PathBuf {
+    dir.join(format!("{stream}.{seq:06}.flog"))
+}
+
+/// A frame whose rewards[0] carries `marker` — lets the durability tests
+/// assert exactly-once, in-order delivery by value.
+fn marked_batch(marker: f32, rows: usize) -> SampleBatch {
+    let mut b = SampleBatchBuilder::new(3);
+    for i in 0..rows {
+        b.add_transition_with_logp(
+            &[marker, i as f32, 0.5],
+            (i % 2) as i32,
+            if i == 0 { marker } else { 0.0 },
+            &[marker, i as f32 + 1.0, 0.5],
+            i + 1 == rows,
+            -0.69,
+        );
+    }
+    b.build()
+}
+
+/// Drain every currently-readable frame from `reader`.
+fn drain(reader: &mut LogStreamReader) -> Vec<SampleBatch> {
+    let mut out = Vec::new();
+    while let Some(b) = reader.poll() {
+        out.push(b);
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Durability
+// ---------------------------------------------------------------------
+
+/// Frames written across many rotated segments come back byte-exact and
+/// in order through a reader that followed the stream live.
+#[test]
+fn roundtrip_across_rotation_is_exact_and_ordered() {
+    let dir = tmp_dir("rotation");
+    // Tiny segments: every couple of appends rotates.
+    let mut w = EpisodeLogWriter::create(
+        &dir,
+        "rot",
+        WriterConfig { segment_bytes: 512 },
+    )
+    .unwrap();
+    let counters = OfflineCounters::new();
+    let mut r = LogStreamReader::follow(&dir, "rot", counters.clone());
+
+    let mut written = Vec::new();
+    let mut read = Vec::new();
+    for i in 0..30 {
+        let b = marked_batch(i as f32, 6);
+        w.append(&b).unwrap();
+        written.push(b);
+        // Interleave reads with writes: the reader crosses segment
+        // boundaries while the writer is still appending.
+        read.extend(drain(&mut r));
+    }
+    assert!(w.current_seq() >= 2, "segment_bytes=512 never rotated");
+    read.extend(drain(&mut r));
+
+    assert_eq!(read, written, "frames lost, reordered, or altered");
+    let stats = counters.snapshot();
+    assert_eq!(stats.frames, 30);
+    assert_eq!(stats.corrupt_frames, 0);
+    assert_eq!(stats.truncated_tails, 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A crash mid-write leaves a truncated frame at the tail.  The reader
+/// must wait on it (it could still be completed), never panic, never
+/// re-deliver earlier frames — and once a restarted writer opens the
+/// next segment, skip the torn tail exactly once and move on.
+#[test]
+fn torn_tail_waits_then_skips_on_rotation() {
+    let dir = tmp_dir("torn");
+    let seq0 = {
+        let mut w = EpisodeLogWriter::create(
+            &dir,
+            "t",
+            WriterConfig::default(),
+        )
+        .unwrap();
+        w.append(&marked_batch(0.0, 4)).unwrap();
+        w.append(&marked_batch(1.0, 4)).unwrap();
+        w.current_seq()
+    };
+    // Simulate the crash: append half a frame to the closed segment.
+    let mut frame = Vec::new();
+    let mut payload = Vec::new();
+    wire::encode_batch(&marked_batch(2.0, 4), &mut payload);
+    wire::encode_frame(&payload, &mut frame);
+    let torn = &frame[..frame.len() / 2];
+    let mut f = std::fs::OpenOptions::new()
+        .append(true)
+        .open(segment_path(&dir, "t", seq0))
+        .unwrap();
+    f.write_all(torn).unwrap();
+    f.sync_all().unwrap();
+    drop(f);
+
+    let counters = OfflineCounters::new();
+    let mut r = LogStreamReader::follow(&dir, "t", counters.clone());
+    let before = drain(&mut r);
+    assert_eq!(before.len(), 2, "complete frames before the tear");
+    // The torn tail is indistinguishable from an in-progress write:
+    // repeated polls wait (None) without advancing or re-reading.
+    for _ in 0..5 {
+        assert!(r.poll().is_none());
+    }
+    assert_eq!(counters.snapshot().truncated_tails, 0);
+
+    // Writer restart: a fresh writer never appends to a possibly-torn
+    // tail — it opens the next segment, which is the reader's signal
+    // that the tail will never complete.
+    let mut w2 =
+        EpisodeLogWriter::create(&dir, "t", WriterConfig::default()).unwrap();
+    assert!(w2.current_seq() > seq0);
+    w2.append(&marked_batch(3.0, 4)).unwrap();
+
+    let after = drain(&mut r);
+    assert_eq!(after.len(), 1);
+    assert_eq!(after[0].rewards[0], 3.0, "frame after the tear");
+    let stats = counters.snapshot();
+    assert_eq!(stats.truncated_tails, 1, "torn tail counted once");
+    assert_eq!(stats.frames, 3);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A frame whose payload rotted on disk fails its CRC: it is counted,
+/// skipped in place (framing survives — the length word is intact), and
+/// every other frame is still delivered.
+#[test]
+fn corrupt_crc_frame_is_counted_and_skipped() {
+    let dir = tmp_dir("crc");
+    let seq0 = {
+        let mut w = EpisodeLogWriter::create(
+            &dir,
+            "c",
+            WriterConfig::default(),
+        )
+        .unwrap();
+        for i in 0..3 {
+            w.append(&marked_batch(i as f32, 4)).unwrap();
+        }
+        w.current_seq()
+    };
+    // Flip one payload byte inside the middle frame.
+    let path = segment_path(&dir, "c", seq0);
+    let mut bytes = std::fs::read(&path).unwrap();
+    let frame0_len = {
+        let mut payload = Vec::new();
+        wire::encode_batch(&marked_batch(0.0, 4), &mut payload);
+        payload.len() + wire::FRAME_HEADER_BYTES
+    };
+    let target = frame0_len + wire::FRAME_HEADER_BYTES + 10;
+    bytes[target] ^= 0xFF;
+    std::fs::write(&path, &bytes).unwrap();
+
+    let counters = OfflineCounters::new();
+    let mut r = LogStreamReader::follow(&dir, "c", counters.clone());
+    let frames = drain(&mut r);
+    assert_eq!(frames.len(), 2);
+    assert_eq!(frames[0].rewards[0], 0.0);
+    assert_eq!(frames[1].rewards[0], 2.0, "frame past the rot delivered");
+    let stats = counters.snapshot();
+    assert_eq!(stats.corrupt_frames, 1);
+    assert_eq!(stats.frames, 2);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// Record → offline-train → OPE
+// ---------------------------------------------------------------------
+
+/// Uniform-random behavior policy over 2 actions, with honest logps —
+/// what a data-collection run with an untrained policy looks like.
+struct UniformPolicy {
+    rng: u64,
+}
+
+const LN_HALF: f32 = -std::f32::consts::LN_2;
+
+impl UniformPolicy {
+    fn next_bit(&mut self) -> i32 {
+        self.rng = self
+            .rng
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        ((self.rng >> 33) & 1) as i32
+    }
+}
+
+impl Policy for UniformPolicy {
+    fn compute_actions_into(
+        &mut self,
+        _obs: &[f32],
+        n: usize,
+        out: &mut Vec<ActionOutput>,
+    ) {
+        out.clear();
+        for _ in 0..n {
+            out.push(ActionOutput {
+                action: self.next_bit(),
+                logp: LN_HALF,
+                value: 0.0,
+            });
+        }
+    }
+
+    fn compute_gradients(&mut self, _batch: &SampleBatch) -> Gradients {
+        Gradients { flat: Vec::new(), stats: BTreeMap::new(), count: 0 }
+    }
+
+    fn apply_gradients(&mut self, _grads: &Gradients) {}
+
+    fn get_weights(&self) -> Vec<f32> {
+        Vec::new()
+    }
+
+    fn set_weights(&mut self, _weights: &[f32]) {}
+}
+
+/// The acceptance loop: record CartPole experience under a logged
+/// uniform behavior policy, train offline DQN from the logs with zero
+/// env instances constructed, and check off-policy evaluation ranks a
+/// known-better target policy above a uniform one on the same logs.
+#[test]
+fn record_train_zero_envs_and_ope_ranks_policies() {
+    let dir = tmp_dir("e2e");
+
+    // (1) Record: a live rollout worker with a log sink tapped in.
+    {
+        let envs: Vec<Box<dyn Env>> =
+            (0..4).map(|i| Box::new(CartPole::new(i)) as Box<dyn Env>).collect();
+        let mut worker = RolloutWorker::new(
+            envs,
+            Box::new(UniformPolicy { rng: 7 }),
+            64,
+            CollectMode::TransitionsWithLogp,
+        );
+        worker.set_log_sink(
+            EpisodeLogWriter::create(&dir, "cartpole", WriterConfig::default())
+                .unwrap(),
+        );
+        for _ in 0..24 {
+            worker.sample();
+        }
+    }
+
+    // (2) Train from the logs alone.  EnvKind::Dummy selects the dummy
+    // policy (no XLA artifacts in CI) — what matters here is the
+    // dataflow: logs → replay → learner, no env anywhere.
+    let envs_before = flowrl::env::constructed_count();
+    let config = TrainerConfig {
+        env: EnvKind::Dummy,
+        min_replay_shards: 1,
+        ..TrainerConfig::default()
+    };
+    let dqn = DqnConfig {
+        buffer_capacity: 8192,
+        learning_starts: 128,
+        target_update_every: 256,
+        weight_sync_every: 5,
+    };
+    let offline = OfflineDqnConfig {
+        log_dir: dir.clone(),
+        obs_dim: 4,
+        ..OfflineDqnConfig::default()
+    };
+    {
+        let mut plan = offline_dqn_plan(&config, &dqn, &offline);
+        let deadline = Instant::now() + Duration::from_secs(30);
+        let mut trained = 0u64;
+        let mut ingested = 0u64;
+        while (trained == 0 || ingested == 0) && Instant::now() < deadline {
+            let report = plan.next().expect("plan is infinite");
+            trained += report.num_env_steps_trained;
+            if let Some(stats) = report.offline {
+                ingested = stats.transitions;
+                assert_eq!(stats.corrupt_frames, 0);
+            }
+        }
+        assert!(trained > 0, "offline plan never trained");
+        assert!(ingested > 0, "offline plan never ingested log frames");
+    }
+    assert_eq!(
+        flowrl::env::constructed_count(),
+        envs_before,
+        "offline training constructed an environment"
+    );
+
+    // (3) OPE over the same logs: a heuristic balancing controller
+    // (push toward the pole's fall) must out-rank a uniform target —
+    // both scored against the logged uniform behavior policy.
+    let heuristic = |obs: &[f32], action: i32| -> f64 {
+        let prefer = if obs[2] + obs[3] > 0.0 { 1 } else { 0 };
+        if action == prefer { 0.98f64.ln() } else { 0.02f64.ln() }
+    };
+    let uniform = |_obs: &[f32], _action: i32| -> f64 { 0.5f64.ln() };
+
+    let good = ope_estimate(log_frames(&dir), heuristic, 1.0);
+    let base = ope_estimate(log_frames(&dir), uniform, 1.0);
+    assert!(good.episodes > 20, "too few episodes: {}", good.episodes);
+    assert_eq!(good.episodes, base.episodes);
+    // Uniform target == behavior: WIS must recover the logged return.
+    assert!(
+        (base.weighted_is - base.behavior_mean_return).abs()
+            < 1e-6 * base.behavior_mean_return.abs().max(1.0),
+        "uniform-target WIS {} != behavior mean {}",
+        base.weighted_is,
+        base.behavior_mean_return
+    );
+    assert!(
+        good.weighted_is > base.weighted_is,
+        "heuristic target not ranked above uniform: {} vs {}",
+        good.weighted_is,
+        base.weighted_is
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// Chaos soak (tools/ci.sh --chaos)
+// ---------------------------------------------------------------------
+
+/// Kill-restart a writer mid-frame over many cycles while a live reader
+/// tails the stream: every completed frame is delivered exactly once in
+/// order, every torn tail is skipped exactly once, nothing panics.
+#[test]
+#[ignore]
+fn chaos_torn_log_kill_restart_soak() {
+    const CYCLES: usize = 25;
+    const FRAMES_PER_CYCLE: usize = 8;
+    let dir = tmp_dir("chaos");
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let counters = OfflineCounters::new();
+    let total = CYCLES * FRAMES_PER_CYCLE + 1;
+    let reader_counters = counters.clone();
+    let reader_dir = dir.clone();
+    let reader = std::thread::spawn(move || {
+        let mut r = LogStreamReader::follow(
+            &reader_dir,
+            "chaos",
+            reader_counters,
+        );
+        let mut markers = Vec::with_capacity(total);
+        let deadline = Instant::now() + Duration::from_secs(60);
+        while markers.len() < total {
+            match r.poll() {
+                Some(b) => markers.push(b.rewards[0]),
+                None => {
+                    assert!(
+                        Instant::now() < deadline,
+                        "reader stalled at {}/{total} frames",
+                        markers.len()
+                    );
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+            }
+        }
+        markers
+    });
+
+    let mut marker = 0u32;
+    for _ in 0..CYCLES {
+        let (seq, torn) = {
+            let mut w = EpisodeLogWriter::create(
+                &dir,
+                "chaos",
+                WriterConfig::default(),
+            )
+            .unwrap();
+            for _ in 0..FRAMES_PER_CYCLE {
+                w.append(&marked_batch(marker as f32, 4)).unwrap();
+                marker += 1;
+            }
+            // The frame the "crash" interrupts: never counted.
+            let mut payload = Vec::new();
+            wire::encode_batch(&marked_batch(9999.0, 4), &mut payload);
+            let mut frame = Vec::new();
+            wire::encode_frame(&payload, &mut frame);
+            let cut = 1 + (marker as usize * 7) % (frame.len() - 2);
+            frame.truncate(cut);
+            (w.current_seq(), frame)
+        };
+        let mut f = std::fs::OpenOptions::new()
+            .append(true)
+            .open(segment_path(&dir, "chaos", seq))
+            .unwrap();
+        f.write_all(&torn).unwrap();
+        drop(f);
+    }
+    // A final clean frame so the last torn tail resolves via rotation.
+    EpisodeLogWriter::create(&dir, "chaos", WriterConfig::default())
+        .unwrap()
+        .append(&marked_batch(marker as f32, 4))
+        .unwrap();
+
+    let markers = reader.join().expect("reader thread panicked");
+    let expect: Vec<f32> = (0..total).map(|i| i as f32).collect();
+    assert_eq!(markers, expect, "frames lost, duplicated, or reordered");
+    let stats = counters.snapshot();
+    assert_eq!(
+        stats.truncated_tails, CYCLES as u64,
+        "every torn tail skipped exactly once"
+    );
+    assert_eq!(stats.corrupt_frames, 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}

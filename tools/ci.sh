@@ -25,7 +25,10 @@
 #                         # soak (rust/tests/gateway.rs, #[ignore]d
 #                         # client connect/disconnect/timeout-mid-
 #                         # episode swarm under live shard
-#                         # kill/grow/retire)
+#                         # kill/grow/retire), and the torn-log soak
+#                         # (rust/tests/offline.rs, #[ignore]d writer
+#                         # kill-restart mid-frame under a live tailing
+#                         # reader: exactly-once in-order delivery)
 #
 # Every step prints its own wall-clock seconds (==> ... [Ns]) so a slow
 # gate names the stage that slowed down.
@@ -87,6 +90,9 @@ if [ "$chaos" -eq 1 ]; then
     --ignored --nocapture
   step "gateway churn soak: client swarm under shard kill/grow/retire" \
     timeout 120 cargo test --release --test gateway -- \
+    --ignored --nocapture
+  step "torn-log soak: writer kill-restart mid-frame under live reader" \
+    timeout 120 cargo test --release --test offline -- \
     --ignored --nocapture
   echo "CI OK (chaos) [$((SECONDS - ci_start))s]"
   exit 0

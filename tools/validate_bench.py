@@ -32,7 +32,10 @@ Rules enforced per file:
     cover) "sessions_held" and "p99_action_latency" — the client-swarm
     sweep rust/benches/gateway.rs emits ("count" rows are peak
     concurrent sessions, "us_per_op" rows the p99 submit-to-serve
-    wait).
+    wait);
+  * BENCH_offline.json must allowlist (and, once results are recorded,
+    cover) "reader_frames_per_s" and "offline_dqn_steps_per_s" — the
+    log-ingest + train-from-logs schema rust/benches/offline.rs emits.
 
 Exit code 0 = all files pass; 1 = any violation (listed on stderr).
 
@@ -63,6 +66,7 @@ REQUIRED_OPS = {
     "faults": ("hang_detection_latency", "disarmed_overhead"),
     "replay_shard": ("add_throughput", "sample_throughput"),
     "gateway": ("sessions_held", "p99_action_latency"),
+    "offline": ("reader_frames_per_s", "offline_dqn_steps_per_s"),
 }
 
 
