@@ -55,13 +55,20 @@ use crate::util::Rng;
 // Site names
 // ---------------------------------------------------------------------
 
-/// `ActorHandle::cast` / `try_cast`, evaluated on the sending thread
-/// before the envelope reaches the ring.
+/// `ActorHandle::cast`, evaluated on the sending thread before the
+/// envelope reaches the ring.
 pub const SITE_CAST: &str = "mailbox::cast";
+/// `ActorHandle::try_cast`, sending side (`Drop` loses the message as
+/// `Ok`, `FullMailbox` surfaces as `TryCastError::Full`).
+pub const SITE_TRY_CAST: &str = "mailbox::try_cast";
 /// `ActorHandle::call` / `call_deferred`, sending side.
 pub const SITE_CALL: &str = "mailbox::call";
 /// `ActorHandle::try_call_deferred`, sending side.
 pub const SITE_TRY_CALL_DEFERRED: &str = "mailbox::try_call_deferred";
+/// `ActorHandle::call_into`, sending side; an injected fault surfaces
+/// as a [`Completion::Dropped`](super::Completion) death notice on the
+/// target queue — the loss is visible, never silent.
+pub const SITE_CALL_INTO: &str = "mailbox::call_into";
 /// The supervised actor loop, on the actor thread, once per message,
 /// *inside* the supervision `catch_unwind` (a `PanicOnce` here poisons
 /// the actor exactly like a panicking message body).
@@ -432,7 +439,10 @@ fn hang(id: u64, killed: Option<Arc<AtomicBool>>) {
             return; // released: resume as if the site never fired
         }
         if let Some(k) = &killed {
-            if k.load(Ordering::Relaxed) {
+            // SeqCst to pair with `Shared::request_kill`'s store: a
+            // kill must be observed on the next poll, not whenever the
+            // cache line happens to migrate.
+            if k.load(Ordering::SeqCst) {
                 panic!("flowrl fault plane: hung actor killed (rule {id})");
             }
         }
@@ -725,7 +735,7 @@ mod tests {
         });
         std::thread::sleep(Duration::from_millis(20));
         assert!(!t.is_finished());
-        killed.store(true, Ordering::Relaxed);
+        killed.store(true, Ordering::SeqCst);
         t.join().unwrap();
         clear(id);
     }

@@ -65,6 +65,7 @@ unsafe fn drop_boxed<A>(p: *mut u8) {
 }
 
 impl<A> Envelope<A> {
+    // flowlint: hot-path (closures <= INLINE_PAYLOAD write straight into the slot)
     pub(crate) fn new<F>(f: F) -> Self
     where
         F: FnOnce(&mut A) + Send + 'static,
@@ -84,6 +85,7 @@ impl<A> Envelope<A> {
                 payload,
             }
         } else {
+            // flowlint: allow(hot-path-alloc) -- cold fallback for oversized closures; steady-state messages fit inline
             let boxed: BoxedMsg<A> = Box::new(f);
             unsafe { std::ptr::write(base as *mut BoxedMsg<A>, boxed) };
             Envelope {
@@ -227,6 +229,7 @@ impl<A> Shared<A> {
     /// Blocking send: parks while the ring is full.  `Err` returns the
     /// envelope (actor poisoned) so the caller decides how to dispose of
     /// it — dropping it fires its guards.
+    // flowlint: hot-path (ring slot write under the mailbox lock)
     pub(crate) fn send(&self, env: Envelope<A>) -> Result<(), Envelope<A>> {
         let mut ring = self.ring.lock().unwrap();
         loop {
@@ -246,6 +249,7 @@ impl<A> Shared<A> {
     }
 
     /// Non-blocking send.
+    // flowlint: hot-path (ring slot write under the mailbox lock)
     pub(crate) fn try_send(
         &self,
         env: Envelope<A>,

@@ -40,6 +40,7 @@ pub mod faults;
 mod mailbox;
 mod queue;
 mod registry;
+pub mod tags;
 mod telemetry;
 
 pub use autoscaler::{
@@ -51,8 +52,9 @@ pub use mailbox::{TryCastError, DEFAULT_MAILBOX_CAPACITY};
 pub use queue::{Completion, CompletionQueue};
 pub use registry::{
     RegistryFull, ShardRegistry, WeightCastStats, WeightCaster,
-    DEFAULT_CAST_WATERMARK, DEFAULT_STALE_VERSIONS, MAX_SHARDS,
+    DEFAULT_CAST_WATERMARK, DEFAULT_STALE_VERSIONS,
 };
+pub use tags::MAX_SHARDS;
 pub use telemetry::{all_actor_stats, ActorStatsSnapshot, ActorTelemetry};
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -330,6 +332,7 @@ impl<A: 'static> ActorHandle<A> {
     /// this stack frame — no allocation on the steady-state path (the
     /// [`faults::SITE_CALL`] failpoint is one relaxed load when
     /// disarmed).
+    // flowlint: hot-path (stack reply cell; pinned by tests/actor_alloc.rs)
     pub fn call<R, F>(&self, f: F) -> Result<R, ActorDied>
     where
         R: Send + 'static,
@@ -443,18 +446,27 @@ impl<A: 'static> ActorHandle<A> {
     /// or a [`Completion::Dropped`] death notice if the actor dies
     /// before (or while) executing it.  The delivery push respects the
     /// queue's bound, so a slow consumer backpressures the actor.
+    // flowlint: hot-path (per-dispatch gather primitive; pinned by tests/actor_alloc.rs)
     pub fn call_into<R, F>(&self, tag: usize, out: &CompletionQueue<R>, f: F)
     where
         R: Send + 'static,
         F: FnOnce(&mut A) -> R + Send + 'static,
     {
+        let fault =
+            faults::send_failpoint(faults::SITE_CALL_INTO, &self.name);
+        // flowlint: allow(hot-path-alloc) -- CompletionQueue clone is an Arc refcount bump
         let guard = CqGuard::new(out.clone(), tag);
         let env = Envelope::new(move |state: &mut A| {
             let guard = guard;
             let r = f(state);
             guard.complete(r);
         });
-        if let Err(env) = self.shared.send(env) {
+        if fault.is_some() {
+            // Injected loss (either flavor): dropping the envelope
+            // fires the guard, so the submission still resolves to its
+            // Dropped death notice instead of wedging the gather.
+            drop(env);
+        } else if let Err(env) = self.shared.send(env) {
             drop(env); // fires the guard -> Dropped notice
         }
     }
@@ -464,6 +476,7 @@ impl<A: 'static> ActorHandle<A> {
     /// is dead (the [`faults::SITE_CAST`] failpoint is one relaxed load
     /// when disarmed; an injected Drop/FullMailbox loses the message
     /// silently — exactly what a lost cast looks like).
+    // flowlint: hot-path (inline envelope write; pinned by tests/actor_alloc.rs)
     pub fn cast<F>(&self, f: F)
     where
         F: FnOnce(&mut A) + Send + 'static,
@@ -480,10 +493,24 @@ impl<A: 'static> ActorHandle<A> {
     /// Non-blocking fire-and-forget.  On `Err` the message is dropped:
     /// [`TryCastError::Full`] is the backpressure signal, `Dead` means
     /// the actor is poisoned.
+    // flowlint: hot-path (inline envelope write; pinned by tests/actor_alloc.rs)
     pub fn try_cast<F>(&self, f: F) -> Result<(), TryCastError>
     where
         F: FnOnce(&mut A) + Send + 'static,
     {
+        match faults::send_failpoint(faults::SITE_TRY_CAST, &self.name) {
+            Some(faults::SendFault::Full) => {
+                // Injected backpressure: the caller sees the same
+                // signal a genuinely full ring would produce.
+                drop(f);
+                return Err(TryCastError::Full);
+            }
+            Some(faults::SendFault::Drop) => {
+                drop(f); // injected silent loss, like a cast to a dead actor
+                return Ok(());
+            }
+            None => {}
+        }
         match self.shared.try_send(Envelope::new(f)) {
             Ok(()) => Ok(()),
             Err((env, e)) => {
@@ -964,6 +991,60 @@ mod tests {
         h.cast(|c| c.value += 10); // lost
         h.cast(|c| c.value += 1); // delivered
         assert_eq!(h.call(|c| c.value).unwrap(), 1);
+        faults::clear(id);
+    }
+
+    #[test]
+    fn injected_try_cast_faults_surface_like_real_ones() {
+        let h = ActorHandle::spawn("trycastflt-w", || Counter { value: 0 });
+        // FullMailbox -> the caller sees the backpressure signal.
+        let id = faults::inject_with(
+            faults::SITE_TRY_CAST,
+            Some("trycastflt-w"),
+            FaultAction::FullMailbox,
+            1.0,
+            None,
+            Some(1),
+        );
+        assert_eq!(
+            h.try_cast(|c| c.value += 10).err(),
+            Some(TryCastError::Full)
+        );
+        faults::clear(id);
+        // DropReply -> silent loss, like a cast to a dead actor.
+        let id = faults::inject_with(
+            faults::SITE_TRY_CAST,
+            Some("trycastflt-w"),
+            FaultAction::DropReply,
+            1.0,
+            None,
+            Some(1),
+        );
+        assert!(h.try_cast(|c| c.value += 100).is_ok()); // lost
+        assert!(h.try_cast(|c| c.value += 1).is_ok()); // delivered
+        assert_eq!(h.call(|c| c.value).unwrap(), 1);
+        faults::clear(id);
+    }
+
+    #[test]
+    fn injected_call_into_loss_yields_a_dropped_notice() {
+        let h = ActorHandle::spawn("cqflt-w", || Counter { value: 7 });
+        let q: CompletionQueue<i32> = CompletionQueue::bounded(4);
+        let id = faults::inject_with(
+            faults::SITE_CALL_INTO,
+            Some("cqflt-w"),
+            FaultAction::DropReply,
+            1.0,
+            None,
+            Some(1),
+        );
+        // The lost submission must still resolve — as a death notice,
+        // never a wedged gather.
+        h.call_into(11, &q, |c| c.value);
+        assert_eq!(q.pop(), Completion::Dropped { tag: 11 });
+        // Budget spent: the next submission completes normally.
+        h.call_into(12, &q, |c| c.value);
+        assert_eq!(q.pop(), Completion::Item { tag: 12, value: 7 });
         faults::clear(id);
     }
 }

@@ -50,10 +50,10 @@ use super::{faults, ActorHandle, Reply};
 // ---------------------------------------------------------------------
 
 /// Hard bound on registry size: gather completion tags pack the shard
-/// index into 16 bits (`(epoch << 16) | shard`), so index `MAX_SHARDS`
-/// would alias epoch bits and corrupt completion attribution.
-/// [`ShardRegistry::grow`] refuses to cross it.
-pub const MAX_SHARDS: usize = 1 << 16;
+/// index into the low bits (see [`crate::actor::tags`]), so index
+/// `MAX_SHARDS` would alias epoch bits and corrupt completion
+/// attribution.  [`ShardRegistry::grow`] refuses to cross it.
+pub use super::tags::MAX_SHARDS;
 
 /// The error [`ShardRegistry::grow`] returns at the tag-space bound.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -489,7 +489,11 @@ impl<A: 'static> WeightCaster<A> {
 
     pub fn stats(&self) -> WeightCastStats {
         WeightCastStats {
-            version: self.version.load(Ordering::Relaxed),
+            // SeqCst to pair with `publish_version`'s fetch_add: a
+            // caller that observed a broadcast return must read a
+            // version at least that new here (the autoscaler and the
+            // sync_weights barrier both compare against it).
+            version: self.version.load(Ordering::SeqCst),
             enqueued: self.enqueued.load(Ordering::Relaxed),
             coalesced: self.coalesced.load(Ordering::Relaxed),
             shed: self.shed.load(Ordering::Relaxed),
@@ -666,6 +670,7 @@ impl<A: 'static> WeightCaster<A> {
             if stale || handle.queue_len() > threshold {
                 // Overloaded, stale, or full mailbox: never block the
                 // learner on it.
+                // flowlint: allow(lock-discipline) -- lane lock serializes broadcasters only; non-blocking send, and apply envelopes never take the lane lock
                 match handle.try_cast(body) {
                     Ok(()) => {
                         self.enqueued.fetch_add(1, Ordering::Relaxed);
@@ -683,6 +688,7 @@ impl<A: 'static> WeightCaster<A> {
                 // the barrier plans' send-order guarantee.  Blocks at
                 // most other broadcasters of this same lane, never the
                 // recipient (applies don't take the lane lock).
+                // flowlint: allow(lock-discipline) -- below-watermark cast; can only block other broadcasters of this lane, and applies never take the lane lock
                 handle.cast(body);
                 self.enqueued.fetch_add(1, Ordering::Relaxed);
             }
@@ -763,6 +769,7 @@ impl<A: 'static> WeightCaster<A> {
                         self.coalesced.fetch_add(1, Ordering::Relaxed);
                     } else {
                         let body = self.apply_closure(&cells);
+                        // flowlint: allow(lock-discipline) -- non-blocking fallback under the lane lock, same discipline as broadcast's shed path
                         match handle.try_cast(body) {
                             Ok(()) => {
                                 self.enqueued
@@ -974,6 +981,45 @@ mod tests {
         // The next broadcast heals the lane.
         caster.broadcast_sync(vec![2.0].into());
         assert_eq!(h1.call(|w| w.weights.clone()).unwrap(), vec![2.0]);
+    }
+
+    #[test]
+    fn stats_version_joins_the_publish_total_order() {
+        // Regression for a Relaxed `stats()` read of `version`: the
+        // counter is published with a SeqCst fetch_add, and readers
+        // (autoscaler, staleness gates) rely on it being monotone in
+        // the same total order — it must never appear to run backwards
+        // under racing broadcasts, and a caller that observed
+        // `broadcast` return `v` must read at least `v`.
+        let reg = ShardRegistry::new(group(1));
+        let caster = Arc::new(WeightCaster::new(
+            reg,
+            DEFAULT_CAST_WATERMARK,
+            |w: &mut W, p| {
+                w.weights.clear();
+                w.weights.extend_from_slice(p);
+                w.applies += 1;
+            },
+        ));
+        let c = caster.clone();
+        let t = std::thread::spawn(move || {
+            for _ in 0..64 {
+                c.broadcast(vec![1.0].into());
+            }
+        });
+        let mut last = 0;
+        loop {
+            let v = caster.stats().version;
+            assert!(v >= last, "stats().version ran backwards: {v} < {last}");
+            last = v;
+            if v >= 64 {
+                break;
+            }
+            std::thread::yield_now();
+        }
+        t.join().unwrap();
+        let v = caster.broadcast(vec![2.0].into());
+        assert!(caster.stats().version >= v);
     }
 
     #[test]

@@ -1,0 +1,74 @@
+//! Completion-tag encoding — the one place tag arithmetic lives.
+//!
+//! Gather dispatches identify themselves to the [`CompletionQueue`]
+//! with a `usize` tag packing `(epoch << EPOCH_SHIFT) | shard_idx`: a
+//! death notice carries only the tag, and the epoch half lets the
+//! gather distinguish a completion from the current incarnation of a
+//! shard from a stale one raced by a restart.  16 bits of shard index
+//! bounds a registry at [`MAX_SHARDS`] shards
+//! ([`ShardRegistry::grow`](super::ShardRegistry) enforces it); the
+//! remaining bits hold ~2^47 incarnations per shard on 64-bit targets.
+//!
+//! flowlint's `epoch-tag` rule flags shift-by-16 arithmetic everywhere
+//! *except* this file, so every encoder/decoder in the tree routes
+//! through [`encode_tag`]/[`decode_tag`] and the layout can never fork.
+//!
+//! [`CompletionQueue`]: super::CompletionQueue
+
+/// Bit position where the epoch half of a completion tag begins.
+pub const EPOCH_SHIFT: u32 = 16;
+
+/// Mask selecting the shard-index half of a completion tag.
+pub const SHARD_MASK: usize = (1 << EPOCH_SHIFT) - 1;
+
+/// Hard bound on registry size: shard index `MAX_SHARDS` would alias
+/// epoch bits and corrupt completion attribution, so
+/// [`ShardRegistry::grow`](super::ShardRegistry) refuses to cross it.
+pub const MAX_SHARDS: usize = SHARD_MASK + 1;
+
+/// Pack shard index `idx` and incarnation `epoch` into one tag.
+#[inline]
+pub fn encode_tag(idx: usize, epoch: u64) -> usize {
+    debug_assert!(idx <= SHARD_MASK);
+    ((epoch as usize) << EPOCH_SHIFT) | idx
+}
+
+/// Split a tag back into `(shard_idx, epoch)`.
+#[inline]
+pub fn decode_tag(tag: usize) -> (usize, u64) {
+    (tag & SHARD_MASK, (tag >> EPOCH_SHIFT) as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrips_across_the_layout() {
+        for &(idx, epoch) in &[
+            (0usize, 0u64),
+            (1, 1),
+            (SHARD_MASK, 1),
+            (7, u32::MAX as u64),
+            (MAX_SHARDS - 1, (1u64 << 40) + 3),
+        ] {
+            let tag = encode_tag(idx, epoch);
+            assert_eq!(decode_tag(tag), (idx, epoch));
+        }
+    }
+
+    #[test]
+    fn shard_half_is_exactly_sixteen_bits() {
+        assert_eq!(MAX_SHARDS, 65536);
+        assert_eq!(encode_tag(0, 1), MAX_SHARDS);
+        // Epoch 0, max shard: the tag stays inside the mask.
+        assert_eq!(encode_tag(SHARD_MASK, 0), SHARD_MASK);
+    }
+
+    #[test]
+    fn epochs_of_the_same_shard_never_collide() {
+        let (a, b) = (encode_tag(5, 1), encode_tag(5, 2));
+        assert_ne!(a, b);
+        assert_eq!(decode_tag(a).0, decode_tag(b).0);
+    }
+}

@@ -100,6 +100,7 @@ impl TrainerConfig {
             .map(|e| {
                 let seed = self
                     .seed
+                    // flowlint: allow(epoch-tag) -- rng seed spreading across workers, not a completion tag
                     .wrapping_add((worker_idx as u64) << 16)
                     .wrapping_add(e as u64);
                 match self.env {

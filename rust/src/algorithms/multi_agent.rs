@@ -122,6 +122,7 @@ pub fn ma_worker_set(
                     * (include_dqn as usize + include_ppo as usize);
                 let env = MultiAgentCartPole::new(
                     num_agents,
+                    // flowlint: allow(epoch-tag) -- rng seed spreading across workers, not a completion tag
                     config.seed.wrapping_add((i as u64) << 16),
                     move |agent| {
                         if !include_dqn {

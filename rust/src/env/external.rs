@@ -390,6 +390,7 @@ impl EpisodeGateway {
     /// queued observations into one flat `[N, obs_dim]` buffer, call
     /// `compute_actions_into` once, and mark each session's action
     /// ready.  Returns the batch fill (0 = nothing pending).
+    // flowlint: hot-path (scratch buffers reused across ticks; pinned by tests/gateway_alloc.rs)
     pub fn tick(&mut self, policy: &mut dyn Policy, _now_ns: u64) -> usize {
         if self.pending.is_empty() {
             return 0;

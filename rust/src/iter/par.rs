@@ -41,33 +41,14 @@ use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::actor::tags::{decode_tag, encode_tag, MAX_SHARDS};
 use crate::actor::{
     ActorHandle, Completion, CompletionQueue, FaultCounters, ShardRegistry,
-    MAX_SHARDS,
 };
 
 use super::LocalIter;
 
 type PlanFn<W, T> = Arc<dyn Fn(&mut W) -> Option<T> + Send + Sync>;
-
-/// Completion tags pack `(epoch << EPOCH_SHIFT) | shard_idx` so a death
-/// notice (which carries only the tag) still identifies the incarnation
-/// it belongs to.  16 bits of shard index bounds a registry at 65536
-/// shards (`actor::MAX_SHARDS` — `ShardRegistry::grow` enforces it);
-/// the remaining bits hold ~2^47 incarnations per shard.
-const EPOCH_SHIFT: u32 = 16;
-const SHARD_MASK: usize = (1 << EPOCH_SHIFT) - 1;
-// The registry's growth guard and the tag encoding must agree.
-const _: () = assert!(SHARD_MASK + 1 == MAX_SHARDS);
-
-fn encode_tag(idx: usize, epoch: u64) -> usize {
-    debug_assert!(idx <= SHARD_MASK);
-    ((epoch as usize) << EPOCH_SHIFT) | idx
-}
-
-fn decode_tag(tag: usize) -> (usize, u64) {
-    (tag & SHARD_MASK, (tag >> EPOCH_SHIFT) as u64)
-}
 
 /// Deadline supervision for the gathers: a per-dispatch liveness bound.
 ///
@@ -171,7 +152,7 @@ impl<W: 'static, T: Send + 'static> ParIter<W, T> {
     ) -> Self {
         assert!(!registry.is_empty(), "ParIter needs at least one shard");
         assert!(
-            registry.len() <= SHARD_MASK + 1,
+            registry.len() <= MAX_SHARDS,
             "shard index must fit the tag encoding"
         );
         ParIter { registry, plan: Arc::new(source) }
@@ -888,7 +869,7 @@ mod tests {
 
     #[test]
     fn tag_roundtrip() {
-        for (idx, ep) in [(0usize, 0u64), (17, 3), (SHARD_MASK, 1 << 40)] {
+        for (idx, ep) in [(0usize, 0u64), (17, 3), (MAX_SHARDS - 1, 1 << 40)] {
             assert_eq!(decode_tag(encode_tag(idx, ep)), (idx, ep));
         }
     }

@@ -126,6 +126,7 @@ impl EpisodeLogWriter {
     /// assembled in reused scratch buffers and written+flushed as one
     /// contiguous slice, so a crash tears at most the *tail* frame —
     /// everything flushed before it is intact.
+    // flowlint: hot-path (steady-state append reuses scratch; pinned by tests/offline_alloc.rs; rotate() is the cold path)
     pub fn append(&mut self, batch: &SampleBatch) -> io::Result<()> {
         self.payload_scratch.clear();
         wire::encode_batch(batch, &mut self.payload_scratch);

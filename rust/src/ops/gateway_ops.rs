@@ -97,7 +97,7 @@ impl GatewayActorState {
         policy: Box<dyn Policy>,
         gauge: Arc<GatewayShardGauge>,
     ) -> Self {
-        GatewayActorState {
+        let mut state = GatewayActorState {
             gateway: EpisodeGateway::new(cfg),
             policy,
             gauge,
@@ -105,7 +105,14 @@ impl GatewayActorState {
             last_reap_ns: 0,
             steps_served: 0,
             log_sink: None,
-        }
+        };
+        // Publish the fresh (empty) table immediately: the gauge is
+        // re-attached across restarts, and until the first request
+        // lands it would otherwise keep reporting the dead
+        // incarnation's sessions/pending — ghost backlog the
+        // autoscaler and connect admission would act on.
+        state.publish();
+        state
     }
 
     /// Tap this shard's pumped fragments into an episode-log stream
@@ -673,6 +680,46 @@ mod tests {
             },
             |_slot| Box::new(DummyPolicy::new(0.1)),
         )
+    }
+
+    #[test]
+    fn restarted_shard_resets_its_reattached_gauge() {
+        // Regression: the gauge is re-attached across shard restarts,
+        // and `GatewayActorState::new` must publish the fresh (empty)
+        // table immediately — otherwise the gauge keeps reporting the
+        // dead incarnation's sessions/pending until the first request
+        // lands, and admission/autoscaling act on ghost backlog.
+        let cfg = GatewayConfig {
+            obs_dim: 4,
+            max_sessions: 8,
+            idle_deadline_ns: 200_000_000,
+            forgiveness: 1,
+            fragment: 4,
+        };
+        let gauge = Arc::new(GatewayShardGauge::default());
+        let mut shard = GatewayActorState::new(
+            cfg.clone(),
+            Box::new(DummyPolicy::new(0.1)),
+            gauge.clone(),
+        );
+        let id = shard.start_episode().unwrap();
+        shard.submit_obs(id, &[0.25; 4]);
+        let _ = shard.poll(id);
+        assert_eq!(gauge.sessions.load(Relaxed), 1);
+        // Simulate the restart path: the slot spawns a fresh
+        // incarnation and re-attaches the same gauge.
+        drop(shard);
+        let _fresh = GatewayActorState::new(
+            cfg,
+            Box::new(DummyPolicy::new(0.1)),
+            gauge.clone(),
+        );
+        assert_eq!(
+            gauge.sessions.load(Relaxed),
+            0,
+            "fresh incarnation must not inherit ghost sessions"
+        );
+        assert_eq!(gauge.pending.load(Relaxed), 0);
     }
 
     #[test]

@@ -114,6 +114,7 @@ impl RolloutWorker {
     /// Collect one fragment: `fragment` steps from every env, post-
     /// processed per env segment (GAE bootstrap from the policy's value
     /// of the trailing observation).  The paper's `worker.sample()`.
+    // flowlint: hot-path (allocs amortize to zero per sample; pinned by tests/rollout_alloc.rs)
     pub fn sample(&mut self) -> SampleBatch {
         faults::failpoint(faults::SITE_ROLLOUT_SAMPLE);
         let n_envs = self.envs.len();
@@ -128,6 +129,7 @@ impl RolloutWorker {
                 let row = e * obs_dim..(e + 1) * obs_dim;
                 let (reward, done) = self.envs[e]
                     .step_into(a.action, &mut self.next_obs_scratch);
+                // flowlint: allow(hot-path-alloc) -- Range clone is a stack copy, not a heap allocation
                 let cur = &self.obs[row.clone()];
                 match self.mode {
                     CollectMode::OnPolicy => self.builders[e].add_step(

@@ -104,10 +104,28 @@ fn steady_state_control_plane_is_allocation_free() {
     }
     let call_into_allocs = allocs_here() - before;
 
+    // try_cast: the non-blocking send takes the same inline-envelope
+    // path as cast (its `// flowlint: hot-path` mark).  A `call`
+    // barrier after each 4-message batch keeps the mailbox drained so
+    // the measured sends never observe Full; call itself is asserted
+    // allocation-free above, so it cannot mask a try_cast allocation.
+    let before = allocs_here();
+    for _ in 0..(N / 4) {
+        for i in 0..4u64 {
+            h.try_cast(move |s| *s += i).expect("drained mailbox is Full");
+        }
+        h.call(|s| *s).unwrap();
+    }
+    let try_cast_allocs = allocs_here() - before;
+
     assert_eq!(cast_allocs, 0, "cast allocated {cast_allocs}x per {N} msgs");
     assert_eq!(call_allocs, 0, "call allocated {call_allocs}x per {N} msgs");
     assert_eq!(
         call_into_allocs, 0,
         "call_into allocated {call_into_allocs}x per {N} msgs"
+    );
+    assert_eq!(
+        try_cast_allocs, 0,
+        "try_cast allocated {try_cast_allocs}x per {N} msgs"
     );
 }

@@ -1,0 +1,142 @@
+//! Allocation-freedom test for the external-episode gateway's serving
+//! cycle (acceptance criterion of the flowlint PR's hot-path satellite):
+//! once a shard's session table and scratch buffers are warm, a full
+//! `submit_obs -> tick -> take_action` round over every live session
+//! performs **zero** heap allocations.
+//!
+//! `EpisodeGateway::tick` carries a `// flowlint: hot-path` mark, so the
+//! static lint denies obvious allocation tokens in its body; this test
+//! pins the property at runtime, including the paths the lexer cannot
+//! see (Vec growth inside `extend_from_slice`, the policy's
+//! `compute_actions_into`, the fragment builder's column pushes).
+//!
+//! The warmup is sized to leave the fragment builder's columns with
+//! ample doubling headroom: measured transitions are an order of
+//! magnitude fewer than warmup transitions, so no column crosses a
+//! growth boundary inside the measured region.  Fragments are *not*
+//! drained during measurement — `SampleBatchBuilder::build` allocates
+//! the batch it hands out, which is the (amortized, per-fragment) cost
+//! the differential test in `tests/rollout_alloc.rs` already covers.
+//!
+//! The counting allocator counts per-thread (a thread-local counter),
+//! so the gateway is driven directly on the test thread — not through
+//! `ops::gateway_ops` — and this file holds a single test for the same
+//! reason `tests/actor_alloc.rs` does.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use flowrl::env::{EpisodeGateway, GatewayConfig, SessionId};
+use flowrl::policy::DummyPolicy;
+
+struct CountingAlloc;
+
+thread_local! {
+    static TL_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let _ = TL_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        let _ = TL_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn allocs_here() -> u64 {
+    TL_ALLOCS.with(|c| c.get())
+}
+
+const OBS_DIM: usize = 8;
+const SESSIONS: usize = 4;
+/// Warmup serving rounds: enough transitions (~4 * 300) that every
+/// builder column sits well inside a doubling boundary before the
+/// measured rounds add ~4 * 32 more.
+const WARMUP_ROUNDS: usize = 300;
+const MEASURED_ROUNDS: usize = 32;
+
+/// One full serving round: every session submits an observation, one
+/// tick batches them through a single forward, every session takes its
+/// action and logs a reward.
+fn round(
+    g: &mut EpisodeGateway,
+    p: &mut DummyPolicy,
+    ids: &[SessionId],
+    now: u64,
+) {
+    let obs = [0.25f32; OBS_DIM];
+    for &id in ids {
+        g.submit_obs(id, &obs, now).unwrap();
+    }
+    let fill = g.tick(p, now + 1);
+    assert_eq!(fill, ids.len(), "one tick must serve every pending request");
+    for &id in ids {
+        let out = g.take_action(id, now + 2).unwrap();
+        assert!(out.is_some(), "action must be ready after the tick");
+        g.log_reward(id, 1.0, now + 3).unwrap();
+    }
+}
+
+#[test]
+fn warm_gateway_serving_cycle_is_allocation_free() {
+    let mut g = EpisodeGateway::new(GatewayConfig {
+        obs_dim: OBS_DIM,
+        max_sessions: SESSIONS,
+        idle_deadline_ns: u64::MAX,
+        forgiveness: 1,
+        // Larger than every transition this test produces, so the
+        // builder's preallocated columns never grow past it and
+        // `drain_fragment` (which allocates) never has work to do.
+        fragment: 4096,
+    });
+    let mut p = DummyPolicy::new(0.1);
+    let ids: Vec<SessionId> =
+        (0..SESSIONS).map(|_| g.start_episode(0).unwrap()).collect();
+
+    for r in 0..WARMUP_ROUNDS {
+        round(&mut g, &mut p, &ids, 10 + r as u64 * 10);
+    }
+
+    let before = allocs_here();
+    for r in 0..MEASURED_ROUNDS {
+        round(&mut g, &mut p, &ids, 1_000_000 + r as u64 * 10);
+    }
+    let allocs = allocs_here() - before;
+
+    assert_eq!(
+        allocs, 0,
+        "gateway serving cycle allocated {allocs}x over {MEASURED_ROUNDS} \
+         rounds of {SESSIONS} sessions — tick/submit/take grew a buffer"
+    );
+
+    // The measurement exercised what it claims to: every round batched
+    // all sessions through one forward and recorded a transition per
+    // session (minus each session's first submit, which has no
+    // predecessor to complete).
+    let stats = g.stats();
+    let rounds = (WARMUP_ROUNDS + MEASURED_ROUNDS) as u64;
+    assert_eq!(stats.ticks, rounds);
+    assert_eq!(stats.batched_rows, rounds * SESSIONS as u64);
+    assert_eq!(
+        stats.transitions,
+        (rounds - 1) * SESSIONS as u64,
+        "every post-first submit must complete a transition"
+    );
+    assert_eq!(g.pending_requests(), 0);
+}

@@ -1,0 +1,121 @@
+//! Allocation-freedom test for the episode-log sink's append path
+//! (acceptance criterion of the flowlint PR's hot-path satellite): once
+//! the writer's scratch buffers are warm, `EpisodeLogWriter::append`
+//! performs **zero** heap allocations per frame.
+//!
+//! `append` carries a `// flowlint: hot-path` mark, so the static lint
+//! denies obvious allocation tokens in its body; this test pins the
+//! property at runtime, including what the lexer cannot see (growth
+//! inside `wire::encode_batch`/`encode_frame`, `BufWriter` internals).
+//! Rotation is the designed cold path (it formats a segment file name
+//! and opens a file), so the config's `segment_bytes` is set high
+//! enough that the measured appends never rotate.
+//!
+//! The counting allocator counts per-thread (a thread-local counter),
+//! and this file holds a single test for the same reason
+//! `tests/actor_alloc.rs` does.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::path::PathBuf;
+
+use flowrl::offline::{EpisodeLogWriter, WriterConfig};
+use flowrl::sample_batch::SampleBatchBuilder;
+use flowrl::SampleBatch;
+
+struct CountingAlloc;
+
+thread_local! {
+    static TL_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let _ = TL_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        let _ = TL_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn allocs_here() -> u64 {
+    TL_ALLOCS.with(|c| c.get())
+}
+
+const OBS_DIM: usize = 8;
+const ROWS: usize = 64;
+const WARMUP: usize = 8;
+const MEASURED: usize = 64;
+
+fn batch() -> SampleBatch {
+    let mut b = SampleBatchBuilder::new(OBS_DIM);
+    for i in 0..ROWS {
+        b.add_transition_with_logp(
+            &[i as f32; OBS_DIM],
+            (i % 2) as i32,
+            1.0,
+            &[i as f32 + 1.0; OBS_DIM],
+            i == ROWS - 1,
+            -0.69,
+        );
+    }
+    b.build()
+}
+
+#[test]
+fn warm_episode_log_append_is_allocation_free() {
+    let dir: PathBuf = std::env::temp_dir()
+        .join(format!("flowrl_alloc_log_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let mut w = EpisodeLogWriter::create(
+        &dir,
+        "alloc",
+        // Far beyond anything this test writes: the measured appends
+        // must never hit the (allocating, by design) rotation path.
+        WriterConfig { segment_bytes: u64::MAX },
+    )
+    .unwrap();
+    let b = batch();
+
+    // Warm the payload/frame scratch buffers: the batch is identical
+    // every append, so after the first few frames both scratches hold
+    // their steady-state capacity.
+    for _ in 0..WARMUP {
+        w.append(&b).unwrap();
+    }
+
+    let before = allocs_here();
+    for _ in 0..MEASURED {
+        w.append(&b).unwrap();
+    }
+    let allocs = allocs_here() - before;
+
+    assert_eq!(
+        allocs, 0,
+        "append allocated {allocs}x over {MEASURED} frames — the encode \
+         scratch or the buffered writer grew on the hot path"
+    );
+    assert_eq!(w.current_seq(), 0, "measured appends must not rotate");
+    let (frames, bytes, errors) = w.counters();
+    assert_eq!(frames, (WARMUP + MEASURED) as u64);
+    assert!(bytes > 0);
+    assert_eq!(errors, 0);
+
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -10,6 +10,23 @@
 #                         # fast as the crate grows.
 #   tools/ci.sh --smoke   # also *execute* every bench binary with tiny
 #                         # iteration counts (implied by the full run)
+#   tools/ci.sh --lint    # run ONLY the flowlint invariant scan (plus
+#                         # the linter's own fixture tests when cargo is
+#                         # available): atomics-ordering, lock-discipline,
+#                         # hot-path-alloc, failpoint-coverage, epoch-tag
+#                         # over rust/src.  Non-zero exit on any
+#                         # violation.  Falls back to the dependency-free
+#                         # python mirror (tools/flowlint/mirror.py) on
+#                         # machines without a rust toolchain, so the
+#                         # gate is runnable everywhere.
+#   tools/ci.sh --sanitize# run ONLY the sanitizer pass: ThreadSanitizer
+#                         # and Miri over the actor/, offline/, and iter/
+#                         # test suites.  Both need a nightly toolchain
+#                         # (TSan additionally rust-src, Miri the miri
+#                         # component); the script skips each leg cleanly
+#                         # — exit 0 with a message — when its
+#                         # prerequisite is missing, so the pass is safe
+#                         # to wire into any environment.
 #   tools/ci.sh --chaos   # run ONLY the chaos soaks in release mode
 #                         # under hard timeouts: the elastic scale-out
 #                         # soak (rust/tests/scale_out.rs, #[ignore]d
@@ -48,17 +65,23 @@ cd rust
 quick=0
 smoke=0
 chaos=0
+lint=0
+sanitize=0
 for arg in "$@"; do
   case "$arg" in
     --quick) quick=1 ;;
     --smoke) smoke=1 ;;
     --chaos) chaos=1 ;;
+    --lint) lint=1 ;;
+    --sanitize) sanitize=1 ;;
     *) echo "unknown argument: $arg" >&2; exit 2 ;;
   esac
 done
-# The default full run includes the smoke pass.
-if [ "$quick" -eq 0 ] && [ "$chaos" -eq 0 ]; then
+# The default full run includes the smoke pass and the lint scan.
+if [ "$quick" -eq 0 ] && [ "$chaos" -eq 0 ] && [ "$lint" -eq 0 ] \
+  && [ "$sanitize" -eq 0 ]; then
   smoke=1
+  lint=1
 fi
 
 ci_start=$SECONDS
@@ -72,6 +95,78 @@ step() {
   "$@"
   echo "==> $label [$((SECONDS - t0))s]"
 }
+
+# The flowlint stage: project-invariant static analysis over rust/src
+# (atomics-ordering, lock-discipline, hot-path-alloc, failpoint-coverage,
+# epoch-tag — see docs/static_analysis.md).  The canonical linter is the
+# dependency-free rust binary in tools/flowlint; its line-for-line
+# python mirror keeps the gate runnable on machines without cargo.
+lint_stage() {
+  if command -v cargo >/dev/null 2>&1; then
+    step "flowlint: linter unit + fixture tests" \
+      cargo test --quiet \
+      --manifest-path "$repo_root/tools/flowlint/Cargo.toml"
+    step "flowlint: invariant scan over rust/src" \
+      cargo run --quiet \
+      --manifest-path "$repo_root/tools/flowlint/Cargo.toml" -- \
+      "$repo_root/rust/src"
+  else
+    step "flowlint (python mirror): invariant scan over rust/src" \
+      python3 "$repo_root/tools/flowlint/mirror.py" "$repo_root/rust/src"
+  fi
+}
+
+if [ "$lint" -eq 1 ] && [ "$quick" -eq 0 ] && [ "$smoke" -eq 0 ] \
+  && [ "$chaos" -eq 0 ] && [ "$sanitize" -eq 0 ]; then
+  # --lint alone: run just the scan (no cargo fmt/clippy/test), so the
+  # gate works even where the rust toolchain is absent.
+  lint_stage
+  echo "CI OK (lint) [$((SECONDS - ci_start))s]"
+  exit 0
+fi
+
+if [ "$sanitize" -eq 1 ]; then
+  # The sanitizer pass is nightly-only by construction (TSan is
+  # -Zsanitizer, Miri is a rustup component).  Each leg checks its own
+  # prerequisite and skips with a message instead of failing, so this
+  # mode is safe to invoke from any environment or cron job.
+  if ! cargo +nightly -V >/dev/null 2>&1; then
+    echo "sanitize: no nightly toolchain; skipping (install with:" \
+      "rustup toolchain install nightly --component miri rust-src)"
+    exit 0
+  fi
+  host="$(rustc +nightly -vV | sed -n 's/^host: //p')"
+  if rustup component list --toolchain nightly 2>/dev/null \
+    | grep -q '^rust-src.*(installed)'; then
+    # -Zbuild-std so std itself is instrumented — without it TSan
+    # reports races it cannot see into.  Scoped to the concurrency
+    # suites: the mailbox/registry/caster/fault plane (actor::), the
+    # log writer/reader pair (offline::), and the gather operators
+    # (iter::).
+    step "TSan (nightly): actor:: offline:: iter:: unit tests" \
+      env RUSTFLAGS="-Zsanitizer=thread" \
+      cargo +nightly test -Zbuild-std --target "$host" --lib -- \
+      actor:: offline:: iter::
+  else
+    echo "sanitize: rust-src not installed for nightly; skipping TSan"
+  fi
+  if cargo +nightly miri --version >/dev/null 2>&1; then
+    # Miri interprets every instruction, so the threaded tests (the
+    # mailbox soaks, iter::par, iter::union) are too slow for it; this
+    # slice covers the single-threaded core — the tag codec, the log
+    # writer/reader with its wire framing, the local iterator algebra —
+    # where UB would hide from TSan too.
+    # -Zmiri-disable-isolation: the offline tests touch real tempdirs.
+    step "Miri (nightly): actor::tags:: offline:: iter::local:: tests" \
+      env MIRIFLAGS="-Zmiri-disable-isolation" \
+      cargo +nightly miri test --lib -- \
+      actor::tags:: offline:: iter::local::
+  else
+    echo "sanitize: miri not installed for nightly; skipping Miri"
+  fi
+  echo "CI OK (sanitize) [$((SECONDS - ci_start))s]"
+  exit 0
+fi
 
 if [ "$chaos" -eq 1 ]; then
   # The chaos gate: build untimed (cache-dependent), then run the
@@ -102,6 +197,10 @@ step "cargo fmt --check" cargo fmt --check
 
 step "cargo clippy (warnings are errors)" \
   cargo clippy --all-targets -- -D warnings
+
+if [ "$lint" -eq 1 ]; then
+  lint_stage
+fi
 
 if [ "$quick" -eq 0 ]; then
   step "cargo build --release" cargo build --release

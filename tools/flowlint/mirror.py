@@ -1,0 +1,663 @@
+#!/usr/bin/env python3
+"""flowlint mirror: a line-for-line Python port of tools/flowlint.
+
+The Rust binary (src/lib.rs) is canonical; this mirror exists so the
+lint gate still runs in environments with no Rust toolchain
+(tools/ci.sh --lint falls back to it and says so).  Keep the two in
+lockstep: every rule, token pattern, and allow-grammar decision here
+mirrors a named function in src/lib.rs, and the fixture expectations in
+tests/rules.rs pin both implementations to the same diagnostics.
+
+Usage: mirror.py [--json] [ROOT]   (default ROOT: rust/src)
+Exit codes: 0 clean, 1 violations, 2 usage/IO error.
+"""
+
+import json
+import os
+import sys
+
+RULE_ATOMICS = "atomics-ordering"
+RULE_LOCK = "lock-discipline"
+RULE_HOT_PATH = "hot-path-alloc"
+RULE_FAILPOINT = "failpoint-coverage"
+RULE_EPOCH_TAG = "epoch-tag"
+RULE_ALLOW_SYNTAX = "allow-syntax"
+RULES = [RULE_ATOMICS, RULE_LOCK, RULE_HOT_PATH, RULE_FAILPOINT,
+         RULE_EPOCH_TAG]
+TAGS_FILE = "actor/tags.rs"
+
+IDENT, NUM, PUNCT = "ident", "num", "punct"
+
+
+def is_ident_start(c):
+    return c.isascii() and (c.isalpha() or c == "_")
+
+
+def is_ident_continue(c):
+    return c.isascii() and (c.isalnum() or c == "_")
+
+
+def lex(src):
+    """Mirror of lex(): (tokens, comments).
+
+    tokens: list of (line, kind, text); comments: (line, standalone,
+    text)."""
+    chars = src
+    n = len(chars)
+    tokens, comments = [], []
+    i, line = 0, 1
+    line_has_code = False
+    while i < n:
+        c = chars[i]
+        if c == "\n":
+            line += 1
+            line_has_code = False
+            i += 1
+            continue
+        if c.isspace():
+            i += 1
+            continue
+        if c == "/" and i + 1 < n and chars[i + 1] == "/":
+            j = i + 2
+            while j < n and chars[j] != "\n":
+                j += 1
+            comments.append((line, not line_has_code, chars[i + 2:j]))
+            i = j
+            continue
+        if c == "/" and i + 1 < n and chars[i + 1] == "*":
+            depth, j = 1, i + 2
+            while j < n and depth > 0:
+                if chars[j] == "\n":
+                    line += 1
+                    line_has_code = False
+                elif chars[j] == "/" and j + 1 < n and chars[j + 1] == "*":
+                    depth += 1
+                    j += 1
+                elif chars[j] == "*" and j + 1 < n and chars[j + 1] == "/":
+                    depth -= 1
+                    j += 1
+                j += 1
+            i = j
+            continue
+        if c == '"':
+            i, line = skip_string(chars, i, line)
+            line_has_code = True
+            continue
+        if c == "'":
+            line_has_code = True
+            nxt = chars[i + 1] if i + 1 < n else ""
+            after = chars[i + 2] if i + 2 < n else ""
+            if nxt and is_ident_start(nxt) and after != "'":
+                j = i + 1
+                while j < n and is_ident_continue(chars[j]):
+                    j += 1
+                i = j
+            else:
+                j = i + 1
+                while j < n and chars[j] != "'":
+                    if chars[j] == "\\":
+                        j += 1
+                    j += 1
+                i = j + 1
+            continue
+        if is_ident_start(c):
+            line_has_code = True
+            j = i
+            while j < n and is_ident_continue(chars[j]):
+                j += 1
+            ident = chars[i:j]
+            if ident in ("r", "b", "br") and j < n and chars[j] in '"#':
+                i, line = skip_raw_string(chars, j, line)
+                continue
+            tokens.append((line, IDENT, ident))
+            i = j
+            continue
+        if c.isdigit():
+            line_has_code = True
+            j = i
+            while j < n:
+                d = chars[j]
+                if is_ident_continue(d):
+                    j += 1
+                elif (d == "." and j + 1 < n and chars[j + 1].isdigit()):
+                    j += 1
+                else:
+                    break
+            tokens.append((line, NUM, chars[i:j]))
+            i = j
+            continue
+        line_has_code = True
+        tokens.append((line, PUNCT, c))
+        i += 1
+    return tokens, comments
+
+
+def skip_string(chars, i, line):
+    n = len(chars)
+    j = i + 1
+    while j < n:
+        if chars[j] == "\\":
+            # A `\`-continued string escapes the newline itself; it
+            # still ends a source line.
+            if j + 1 < n and chars[j + 1] == "\n":
+                line += 1
+            j += 2
+        elif chars[j] == '"':
+            return j + 1, line
+        else:
+            if chars[j] == "\n":
+                line += 1
+            j += 1
+    return j, line
+
+
+def skip_raw_string(chars, i, line):
+    n = len(chars)
+    hashes, j = 0, i
+    while j < n and chars[j] == "#":
+        hashes += 1
+        j += 1
+    if j >= n or chars[j] != '"':
+        return j, line
+    if hashes == 0:
+        return skip_string(chars, j, line)
+    j += 1
+    while j < n:
+        if chars[j] == "\n":
+            line += 1
+            j += 1
+            continue
+        if chars[j] == '"' and chars[j + 1:j + 1 + hashes] == "#" * hashes:
+            return j + 1 + hashes, line
+        j += 1
+    return j, line
+
+
+def parse_directives(file, tokens, comments):
+    """Mirror of parse_directives()."""
+    allows, hot_markers, errors = [], [], []
+    for (cline, standalone, text) in comments:
+        pos = text.find("flowlint:")
+        if pos < 0:
+            continue
+        body = text[pos + len("flowlint:"):].strip()
+        if body == "hot-path" or body.startswith("hot-path "):
+            hot_markers.append(cline)
+            continue
+        if body.startswith("allow("):
+            rest = body[len("allow("):]
+            close = rest.find(")")
+            if close < 0:
+                errors.append(diag(file, cline, RULE_ALLOW_SYNTAX,
+                                   "unterminated flowlint allow(...)"))
+                continue
+            rule = rest[:close].strip()
+            if rule not in RULES:
+                errors.append(diag(file, cline, RULE_ALLOW_SYNTAX,
+                                   f'unknown rule "{rule}" in allow'))
+                continue
+            tail = rest[close + 1:].strip()
+            has_why = tail.startswith("--") and bool(tail[2:].strip())
+            if not has_why:
+                errors.append(diag(
+                    file, cline, RULE_ALLOW_SYNTAX,
+                    f"allow({rule}) needs a `-- <justification>`"))
+            targets = [cline]
+            if standalone:
+                nxt = next((t[0] for t in tokens if t[0] > cline), None)
+                if nxt is not None:
+                    targets.append(nxt)
+            allows.append((rule, has_why, targets))
+            continue
+        word = body.split()[0] if body.split() else ""
+        errors.append(diag(file, cline, RULE_ALLOW_SYNTAX,
+                           f'unrecognized flowlint directive: "{word}"'))
+    return allows, hot_markers, errors
+
+
+def allowed(allows, rule, line):
+    return any(r == rule and has_why and line in targets
+               for (r, has_why, targets) in allows)
+
+
+def diag(file, line, rule, message):
+    return {"file": file, "line": line, "rule": rule, "message": message}
+
+
+def match_brace(tokens, open_idx):
+    depth = 0
+    for j in range(open_idx, len(tokens)):
+        t = tokens[j]
+        if t[1] == PUNCT and t[2] == "{":
+            depth += 1
+        elif t[1] == PUNCT and t[2] == "}":
+            depth -= 1
+            if depth == 0:
+                return j
+    return len(tokens) - 1
+
+
+def fn_spans(tokens):
+    """Mirror of fn_spans(): [(sig_line, body_start, body_end)]."""
+    spans = []
+    i = 0
+    while i < len(tokens):
+        if tokens[i][1] == IDENT and tokens[i][2] == "fn":
+            sig_line = tokens[i][0]
+            j, paren, body = i + 1, 0, None
+            while j < len(tokens):
+                k, txt = tokens[j][1], tokens[j][2]
+                if k == PUNCT and txt in "([":
+                    paren += 1
+                elif k == PUNCT and txt in ")]":
+                    paren -= 1
+                elif k == PUNCT and txt == "{" and paren == 0:
+                    body = j
+                    break
+                elif k == PUNCT and txt == ";" and paren == 0:
+                    break
+                j += 1
+            if body is not None:
+                spans.append((sig_line, body, match_brace(tokens, body)))
+            i = max(j, i + 1)
+            continue
+        i += 1
+    return spans
+
+
+def test_mod_spans(tokens):
+    """Mirror of test_mod_spans()."""
+    spans = []
+    i = 0
+    n = len(tokens)
+
+    def tok(k):
+        return (tokens[k][1], tokens[k][2]) if k < n else (None, None)
+
+    while i + 6 < n:
+        if (tok(i) == (PUNCT, "#") and tok(i + 1) == (PUNCT, "[")
+                and tok(i + 2) == (IDENT, "cfg")
+                and tok(i + 3) == (PUNCT, "(")
+                and tok(i + 4) == (IDENT, "test")
+                and tok(i + 5) == (PUNCT, ")")
+                and tok(i + 6) == (PUNCT, "]")):
+            j = i + 7
+            while j < n and tok(j) == (PUNCT, "#"):
+                if tok(j + 1) == (PUNCT, "["):
+                    depth = 0
+                    while j < n:
+                        if tok(j) == (PUNCT, "["):
+                            depth += 1
+                        elif tok(j) == (PUNCT, "]"):
+                            depth -= 1
+                            if depth == 0:
+                                break
+                        j += 1
+                    j += 1
+                else:
+                    break
+            if tok(j) == (IDENT, "mod"):
+                k = j + 1
+                while k < n and tok(k) not in ((PUNCT, "{"), (PUNCT, ";")):
+                    k += 1
+                if k < n and tok(k) == (PUNCT, "{"):
+                    end = match_brace(tokens, k)
+                    spans.append((k, end))
+                    i = k + 1
+                    continue
+        i += 1
+    return spans
+
+
+def in_spans(spans, idx):
+    return any(a <= idx <= b for (a, b) in spans)
+
+
+ATOMIC_OPS = {"load", "store", "swap", "fetch_add", "fetch_sub",
+              "fetch_and", "fetch_or", "fetch_xor", "fetch_max",
+              "fetch_min", "fetch_nand", "fetch_update",
+              "compare_exchange", "compare_exchange_weak"}
+ORDERINGS = {"Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"}
+
+
+def atomic_sites(tokens):
+    """Mirror of atomic_sites()."""
+    sites = []
+    i = 1
+    n = len(tokens)
+    while i + 1 < n:
+        is_op = (tokens[i - 1][1] == PUNCT and tokens[i - 1][2] == "."
+                 and tokens[i][1] == IDENT and tokens[i][2] in ATOMIC_OPS
+                 and tokens[i + 1][1] == PUNCT and tokens[i + 1][2] == "(")
+        if not is_op:
+            i += 1
+            continue
+        field = None
+        if i >= 2 and tokens[i - 2][1] in (IDENT, NUM):
+            field = tokens[i - 2][2]
+        depth, j, orderings = 0, i + 1, []
+        while j < n:
+            k, txt = tokens[j][1], tokens[j][2]
+            if k == PUNCT and txt == "(":
+                depth += 1
+            elif k == PUNCT and txt == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            elif k == IDENT and txt in ORDERINGS:
+                orderings.append(txt)
+            j += 1
+        if field is not None and orderings:
+            sites.append((tokens[i][0], field, orderings))
+        i = max(j, i + 1)
+    return sites
+
+
+def check_atomics(file, tokens, allows, out):
+    by_field = {}
+    for (line, field, orderings) in atomic_sites(tokens):
+        by_field.setdefault(field, []).append((line, orderings))
+    for field in sorted(by_field):
+        group = by_field[field]
+        strongest = sorted({o for (_, os) in group for o in os
+                            if o != "Relaxed"})
+        if not strongest:
+            continue
+        for (line, orderings) in group:
+            if not all(o == "Relaxed" for o in orderings):
+                continue
+            if allowed(allows, RULE_ATOMICS, line):
+                continue
+            out.append(diag(
+                file, line, RULE_ATOMICS,
+                f"Ordering::Relaxed on `{field}` conflicts with "
+                f"{'/'.join(strongest)} used on the same field in this "
+                f"file"))
+
+
+SEND_METHODS = {"cast", "try_cast", "call", "call_deferred",
+                "try_call_deferred", "call_into", "broadcast",
+                "broadcast_sync", "pop_timeout"}
+
+
+def let_binding_name(tokens, let_idx):
+    name = None
+    for j in range(let_idx + 1, len(tokens)):
+        k, txt = tokens[j][1], tokens[j][2]
+        if k == PUNCT and txt == "=":
+            return name
+        if k == PUNCT and txt in ";{":
+            return None
+        if k == IDENT and txt not in ("mut", "ref", "else"):
+            name = txt
+    return None
+
+
+def parse_let_lock(tokens, let_idx, depth):
+    name = let_binding_name(tokens, let_idx)
+    if name is None:
+        return None
+    j = let_idx + 1
+    while j < len(tokens) and not (tokens[j][1] == PUNCT
+                                   and tokens[j][2] == "="):
+        if tokens[j][1] == PUNCT and tokens[j][2] in ";{":
+            return None
+        j += 1
+    nest, has_lock, if_let = 0, False, False
+    k = j + 1
+    while k < len(tokens):
+        kind, txt = tokens[k][1], tokens[k][2]
+        if kind == PUNCT and txt in "([":
+            nest += 1
+        elif kind == PUNCT and txt in ")]":
+            nest -= 1
+        elif kind == PUNCT and txt == ";" and nest == 0:
+            break
+        elif kind == PUNCT and txt == "{" and nest == 0:
+            if_let = True
+            break
+        elif (kind == IDENT and txt == "lock" and k > 0
+              and tokens[k - 1][1] == PUNCT and tokens[k - 1][2] == "."
+              and k + 1 < len(tokens) and tokens[k + 1][1] == PUNCT
+              and tokens[k + 1][2] == "("):
+            has_lock = True
+        k += 1
+    if not has_lock:
+        return None
+    guard_depth = depth + 1 if if_let else depth
+    return (name, guard_depth, tokens[let_idx][0]), k
+
+
+def check_lock_discipline(file, tokens, allows, out):
+    guards = []  # (name, depth, line)
+    depth = 0
+    i = 0
+    n = len(tokens)
+    while i < n:
+        kind, txt = tokens[i][1], tokens[i][2]
+        if kind == PUNCT and txt == "{":
+            depth += 1
+        elif kind == PUNCT and txt == "}":
+            depth -= 1
+            guards = [g for g in guards if g[1] <= depth]
+        elif kind == IDENT and txt == "let":
+            r = parse_let_lock(tokens, i, depth)
+            if r is not None:
+                guard, nxt = r
+                guards = [g for g in guards if g[0] != guard[0]]
+                guards.append(guard)
+                i = nxt
+                continue
+            name = let_binding_name(tokens, i)
+            if name is not None:
+                guards = [g for g in guards if g[0] != name]
+        elif kind == IDENT and txt == "drop":
+            if (i + 3 < n and tokens[i + 1][1] == PUNCT
+                    and tokens[i + 1][2] == "("
+                    and tokens[i + 2][1] == IDENT
+                    and tokens[i + 3][1] == PUNCT
+                    and tokens[i + 3][2] == ")"):
+                guards = [g for g in guards if g[0] != tokens[i + 2][2]]
+        elif (kind == IDENT and txt in SEND_METHODS and i > 0
+              and tokens[i - 1][1] == PUNCT and tokens[i - 1][2] == "."
+              and i + 1 < n and tokens[i + 1][1] == PUNCT
+              and tokens[i + 1][2] == "("):
+            if guards:
+                line = tokens[i][0]
+                if not allowed(allows, RULE_LOCK, line):
+                    held = ", ".join(f"`{g[0]}` (line {g[2]})"
+                                     for g in guards)
+                    out.append(diag(
+                        file, line, RULE_LOCK,
+                        f".{txt}() with lock guard {held} still live"))
+        i += 1
+
+
+def check_hot_path(file, tokens, allows, hot_markers, out):
+    if not hot_markers:
+        return
+    spans = fn_spans(tokens)
+    for marker in hot_markers:
+        candidates = [s for s in spans if s[0] >= marker]
+        if not candidates:
+            out.append(diag(file, marker, RULE_HOT_PATH,
+                            "hot-path marker with no following fn"))
+            continue
+        span = min(candidates, key=lambda s: s[0])
+        scan_alloc_tokens(file, tokens, span, allows, out)
+
+
+def scan_alloc_tokens(file, tokens, span, allows, out):
+    _, body_start, body_end = span
+    toks = tokens[body_start:min(body_end, len(tokens) - 1) + 1]
+    n = len(toks)
+
+    def report(line, what):
+        if not allowed(allows, RULE_HOT_PATH, line):
+            out.append(diag(
+                file, line, RULE_HOT_PATH,
+                f"{what} inside a `// flowlint: hot-path` function"))
+
+    i = 0
+    while i < n:
+        line, kind, txt = toks[i]
+        if kind == IDENT and txt in ("Vec", "Box", "String"):
+            if (i + 3 < n and toks[i + 1][1:] == (PUNCT, ":")
+                    and toks[i + 2][1:] == (PUNCT, ":")
+                    and toks[i + 3][1] == IDENT):
+                m = toks[i + 3][2]
+                if m == "new" or (txt == "String" and m == "from"):
+                    report(line, f"{txt}::{m}")
+                    i += 4
+                    continue
+        elif kind == IDENT and txt in ("vec", "format"):
+            if i + 1 < n and toks[i + 1][1:] == (PUNCT, "!"):
+                report(line, f"{txt}!")
+                i += 2
+                continue
+        elif (kind == IDENT and txt in ("to_vec", "to_string", "clone")
+              and i > 0 and toks[i - 1][1:] == (PUNCT, ".")
+              and i + 1 < n and toks[i + 1][1:] == (PUNCT, "(")):
+            if txt == "clone":
+                flag = i + 2 < n and toks[i + 2][1:] == (PUNCT, ")")
+            else:
+                flag = True
+            if flag:
+                report(line, f".{txt}()")
+        i += 1
+
+
+RAW_SEND_METHODS = {"send", "try_send", "cast", "try_cast"}
+
+
+def check_failpoint_coverage(file, tokens, allows, out):
+    base = file.rsplit("/", 1)[-1]
+    in_actor = file.startswith("actor/") or file == "actor.rs"
+    if not in_actor or base in ("mailbox.rs", "faults.rs"):
+        return
+    spans = fn_spans(tokens)
+    tests = test_mod_spans(tokens)
+    n = len(tokens)
+    for i in range(1, n):
+        is_send = (tokens[i - 1][1] == PUNCT and tokens[i - 1][2] == "."
+                   and tokens[i][1] == IDENT
+                   and tokens[i][2] in RAW_SEND_METHODS
+                   and i + 1 < n and tokens[i + 1][1] == PUNCT
+                   and tokens[i + 1][2] == "(")
+        if not is_send or in_spans(tests, i):
+            continue
+        enclosing = [s for s in spans if s[1] <= i <= s[2]]
+        if not enclosing:
+            continue
+        span = min(enclosing, key=lambda s: s[2] - s[1])
+        gated = any(
+            tokens[j][1] == IDENT and tokens[j][2] == "faults"
+            and j + 2 < n and tokens[j + 1][1] == PUNCT
+            and tokens[j + 1][2] == ":" and tokens[j + 2][1] == PUNCT
+            and tokens[j + 2][2] == ":"
+            for j in range(span[1], i))
+        if gated:
+            continue
+        line = tokens[i][0]
+        if allowed(allows, RULE_FAILPOINT, line):
+            continue
+        out.append(diag(
+            file, line, RULE_FAILPOINT,
+            f".{tokens[i][2]}() send site without a faults:: failpoint "
+            f"in the same function"))
+
+
+def check_epoch_tag(file, tokens, allows, out):
+    if file == TAGS_FILE:
+        return
+    for i in range(2, len(tokens)):
+        a, b = tokens[i - 2], tokens[i - 1]
+        shift = (a[1] == PUNCT and b[1] == PUNCT
+                 and ((a[2] == "<" and b[2] == "<")
+                      or (a[2] == ">" and b[2] == ">")))
+        if not shift:
+            continue
+        kind, txt = tokens[i][1], tokens[i][2]
+        if kind == NUM and txt == "16":
+            operand = "16"
+        elif kind == IDENT and txt == "EPOCH_SHIFT":
+            operand = "EPOCH_SHIFT"
+        else:
+            continue
+        line = tokens[i][0]
+        if allowed(allows, RULE_EPOCH_TAG, line):
+            continue
+        out.append(diag(
+            file, line, RULE_EPOCH_TAG,
+            f"manual tag arithmetic (shift by {operand}); use "
+            f"actor::tags::{{encode_tag, decode_tag}}"))
+
+
+def lint_file_content(rel_path, src):
+    """Mirror of lint_file_content()."""
+    rel = rel_path.replace("\\", "/")
+    tokens, comments = lex(src)
+    allows, hot_markers, errors = parse_directives(rel, tokens, comments)
+    out = list(errors)
+    check_atomics(rel, tokens, allows, out)
+    check_lock_discipline(rel, tokens, allows, out)
+    check_hot_path(rel, tokens, allows, hot_markers, out)
+    check_failpoint_coverage(rel, tokens, allows, out)
+    check_epoch_tag(rel, tokens, allows, out)
+    out.sort(key=lambda d: (d["line"], d["rule"]))
+    return out
+
+
+def lint_tree(root):
+    files = []
+    for dirpath, _dirnames, filenames in os.walk(root):
+        for f in filenames:
+            if f.endswith(".rs"):
+                files.append(os.path.join(dirpath, f))
+    files.sort()
+    out = []
+    for f in files:
+        rel = os.path.relpath(f, root).replace(os.sep, "/")
+        with open(f, encoding="utf-8") as fh:
+            out.extend(lint_file_content(rel, fh.read()))
+    return out
+
+
+def main(argv):
+    json_mode = False
+    root = None
+    for a in argv[1:]:
+        if a == "--json":
+            json_mode = True
+        elif a in ("--help", "-h"):
+            print("usage: mirror.py [--json] [ROOT]", file=sys.stderr)
+            return 0
+        elif a.startswith("-"):
+            print(f"flowlint-mirror: unknown flag {a!r}", file=sys.stderr)
+            return 2
+        elif root is None:
+            root = a
+        else:
+            print("flowlint-mirror: more than one ROOT", file=sys.stderr)
+            return 2
+    root = root or "rust/src"
+    if not os.path.isdir(root):
+        print(f"flowlint-mirror: {root} is not a directory",
+              file=sys.stderr)
+        return 2
+    diags = lint_tree(root)
+    if json_mode:
+        print(json.dumps(diags, indent=2))
+    else:
+        for d in diags:
+            print(f"{d['file']}:{d['line']}: {d['rule']}: {d['message']}")
+        if diags:
+            print(f"flowlint-mirror: {len(diags)} violation(s)",
+                  file=sys.stderr)
+        else:
+            print(f"flowlint-mirror: clean ({root})", file=sys.stderr)
+    return 1 if diags else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

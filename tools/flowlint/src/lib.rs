@@ -1,0 +1,1223 @@
+//! flowlint: project-invariant static analysis for the flowrl tree.
+//!
+//! Five rules, each encoding an invariant the hand-rolled concurrency
+//! layer depends on (see `docs/static_analysis.md` for the catalog and
+//! the rationale behind each):
+//!
+//! * `atomics-ordering` — every `Ordering::Relaxed` site must either
+//!   carry an allow justification or pair consistently with the other
+//!   orderings used on the same named atomic field in the same file
+//!   (all-`Relaxed` counter fields pass; a `Relaxed` load of a field
+//!   that is stored `Release`/`SeqCst` elsewhere is flagged).
+//! * `lock-discipline` — no lock guard may be live across an actor
+//!   send (`cast`/`call`/`call_deferred`/`try_call_deferred`/
+//!   `call_into`/`try_cast`/`broadcast`/`broadcast_sync`) or a
+//!   `pop_timeout` wait — the PR 5 `broadcast_sync` deadlock shape.
+//! * `hot-path-alloc` — functions marked `// flowlint: hot-path` must
+//!   not contain allocation tokens (`Vec::new`, `vec!`, `Box::new`,
+//!   `format!`, `String::new`, `.to_vec()`, `.to_string()`,
+//!   `.clone()`).
+//! * `failpoint-coverage` — mailbox/caster send sites in `actor/`
+//!   must sit behind a `faults::` failpoint in the same function.
+//! * `epoch-tag` — completion tags are built by `actor/tags.rs` only;
+//!   manual `<< 16` / `>> 16` / `<< EPOCH_SHIFT` arithmetic anywhere
+//!   else is flagged.
+//!
+//! The escape hatch is an inline comment:
+//!
+//! ```text
+//! // flowlint: allow(<rule-id>) -- <justification>
+//! ```
+//!
+//! which suppresses the named rule on its own line and, when the
+//! comment stands alone on its line, on the next code line.  An allow
+//! without a `--` justification is itself a violation
+//! (`allow-syntax`), so the waiver ledger stays self-documenting.
+//!
+//! The analysis is a hand-rolled lexer over token streams — no `syn`,
+//! no dependencies — deliberately conservative: it skips comments,
+//! strings, chars, and lifetimes, and matches structural token
+//! patterns rather than parsing full Rust.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+// ---------------------------------------------------------------------
+// Diagnostics
+// ---------------------------------------------------------------------
+
+/// One lint finding, pre-allow-filtering already applied.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// Path relative to the lint root (e.g. `actor/registry.rs`).
+    pub file: String,
+    /// 1-based source line.
+    pub line: usize,
+    /// Stable rule id (`atomics-ordering`, `lock-discipline`, ...).
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: {}: {}",
+            self.file, self.line, self.rule, self.message
+        )
+    }
+}
+
+pub const RULE_ATOMICS: &str = "atomics-ordering";
+pub const RULE_LOCK: &str = "lock-discipline";
+pub const RULE_HOT_PATH: &str = "hot-path-alloc";
+pub const RULE_FAILPOINT: &str = "failpoint-coverage";
+pub const RULE_EPOCH_TAG: &str = "epoch-tag";
+pub const RULE_ALLOW_SYNTAX: &str = "allow-syntax";
+
+/// Every enforceable rule id (`allow-syntax` guards the grammar itself
+/// and cannot be allowed away).
+pub const RULES: &[&str] = &[
+    RULE_ATOMICS,
+    RULE_LOCK,
+    RULE_HOT_PATH,
+    RULE_FAILPOINT,
+    RULE_EPOCH_TAG,
+];
+
+// ---------------------------------------------------------------------
+// Lexer
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum Tok {
+    Ident(String),
+    Num(String),
+    Punct(char),
+}
+
+#[derive(Debug, Clone)]
+struct Token {
+    line: usize,
+    tok: Tok,
+}
+
+#[derive(Debug, Clone)]
+struct Comment {
+    line: usize,
+    /// True when nothing but whitespace precedes the `//` on its line.
+    standalone: bool,
+    text: String,
+}
+
+struct Lexed {
+    tokens: Vec<Token>,
+    comments: Vec<Comment>,
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_ascii_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Tokenize Rust source: idents, numbers, and single-char puncts, with
+/// comments captured separately and strings/chars/lifetimes skipped.
+fn lex(src: &str) -> Lexed {
+    let chars: Vec<char> = src.chars().collect();
+    let mut tokens = Vec::new();
+    let mut comments = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    let mut line_has_code = false;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            line_has_code = false;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment.
+        if c == '/' && i + 1 < chars.len() && chars[i + 1] == '/' {
+            let start = i + 2;
+            let mut j = start;
+            while j < chars.len() && chars[j] != '\n' {
+                j += 1;
+            }
+            comments.push(Comment {
+                line,
+                standalone: !line_has_code,
+                text: chars[start..j].iter().collect(),
+            });
+            i = j;
+            continue;
+        }
+        // Block comment (nests in Rust).
+        if c == '/' && i + 1 < chars.len() && chars[i + 1] == '*' {
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < chars.len() && depth > 0 {
+                if chars[j] == '\n' {
+                    line += 1;
+                    line_has_code = false;
+                } else if chars[j] == '/'
+                    && j + 1 < chars.len()
+                    && chars[j + 1] == '*'
+                {
+                    depth += 1;
+                    j += 1;
+                } else if chars[j] == '*'
+                    && j + 1 < chars.len()
+                    && chars[j + 1] == '/'
+                {
+                    depth -= 1;
+                    j += 1;
+                }
+                j += 1;
+            }
+            i = j;
+            continue;
+        }
+        // String literal.
+        if c == '"' {
+            i = skip_string(&chars, i, &mut line);
+            line_has_code = true;
+            continue;
+        }
+        // Lifetime or char literal.
+        if c == '\'' {
+            line_has_code = true;
+            let next = chars.get(i + 1).copied();
+            let after = chars.get(i + 2).copied();
+            let is_lifetime = matches!(next, Some(n) if is_ident_start(n))
+                && after != Some('\'');
+            if is_lifetime {
+                let mut j = i + 1;
+                while j < chars.len() && is_ident_continue(chars[j]) {
+                    j += 1;
+                }
+                i = j;
+            } else {
+                // Char literal: handle escapes; never spans lines.
+                let mut j = i + 1;
+                while j < chars.len() && chars[j] != '\'' {
+                    if chars[j] == '\\' {
+                        j += 1;
+                    }
+                    j += 1;
+                }
+                i = j + 1;
+            }
+            continue;
+        }
+        // Identifier (with raw/byte-string prefixes).
+        if is_ident_start(c) {
+            line_has_code = true;
+            let mut j = i;
+            while j < chars.len() && is_ident_continue(chars[j]) {
+                j += 1;
+            }
+            let ident: String = chars[i..j].iter().collect();
+            // r"...", r#"..."#, b"...", br#"..."# — string follows the
+            // prefix directly.
+            if matches!(ident.as_str(), "r" | "b" | "br")
+                && matches!(chars.get(j), Some('"') | Some('#'))
+            {
+                i = skip_raw_string(&chars, j, &mut line);
+                continue;
+            }
+            tokens.push(Token { line, tok: Tok::Ident(ident) });
+            i = j;
+            continue;
+        }
+        // Number.
+        if c.is_ascii_digit() {
+            line_has_code = true;
+            let mut j = i;
+            while j < chars.len() {
+                let d = chars[j];
+                if is_ident_continue(d) {
+                    j += 1;
+                } else if d == '.'
+                    && matches!(chars.get(j + 1), Some(n) if n.is_ascii_digit())
+                {
+                    j += 1;
+                } else {
+                    break;
+                }
+            }
+            tokens.push(Token {
+                line,
+                tok: Tok::Num(chars[i..j].iter().collect()),
+            });
+            i = j;
+            continue;
+        }
+        line_has_code = true;
+        tokens.push(Token { line, tok: Tok::Punct(c) });
+        i += 1;
+    }
+    Lexed { tokens, comments }
+}
+
+/// Skip a `"..."` literal starting at `i` (the opening quote); returns
+/// the index just past the closing quote.
+fn skip_string(chars: &[char], i: usize, line: &mut usize) -> usize {
+    let mut j = i + 1;
+    while j < chars.len() {
+        match chars[j] {
+            // `\`-continued strings escape the newline itself; it still
+            // ends a source line.
+            '\\' => {
+                if chars.get(j + 1) == Some(&'\n') {
+                    *line += 1;
+                }
+                j += 2;
+            }
+            '"' => return j + 1,
+            c => {
+                if c == '\n' {
+                    *line += 1;
+                }
+                j += 1;
+            }
+        }
+    }
+    j
+}
+
+/// Skip a raw/byte string whose hashes-or-quote start at `i`; returns
+/// the index just past the closing delimiter.
+fn skip_raw_string(chars: &[char], i: usize, line: &mut usize) -> usize {
+    let mut hashes = 0usize;
+    let mut j = i;
+    while j < chars.len() && chars[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) != Some(&'"') {
+        // Not actually a raw string (e.g. `r#ident`); resume after the
+        // hashes without consuming anything further.
+        return j;
+    }
+    if hashes == 0 {
+        return skip_string(chars, j, line);
+    }
+    j += 1;
+    while j < chars.len() {
+        if chars[j] == '\n' {
+            *line += 1;
+            j += 1;
+            continue;
+        }
+        if chars[j] == '"' {
+            let mut k = 0usize;
+            while k < hashes && chars.get(j + 1 + k) == Some(&'#') {
+                k += 1;
+            }
+            if k == hashes {
+                return j + 1 + hashes;
+            }
+        }
+        j += 1;
+    }
+    j
+}
+
+// ---------------------------------------------------------------------
+// Directives (allow comments, hot-path markers)
+// ---------------------------------------------------------------------
+
+#[derive(Debug)]
+struct AllowDirective {
+    line: usize,
+    /// Lines this allow covers (its own + the next code line when the
+    /// comment stands alone).
+    targets: Vec<usize>,
+    rule: String,
+    has_why: bool,
+}
+
+#[derive(Debug)]
+struct Directives {
+    allows: Vec<AllowDirective>,
+    /// Lines carrying a `// flowlint: hot-path` marker.
+    hot_path_markers: Vec<usize>,
+    syntax_errors: Vec<Diagnostic>,
+}
+
+fn parse_directives(file: &str, lexed: &Lexed) -> Directives {
+    let mut allows = Vec::new();
+    let mut hot_path_markers = Vec::new();
+    let mut syntax_errors = Vec::new();
+    for c in &lexed.comments {
+        let Some(pos) = c.text.find("flowlint:") else { continue };
+        let body = c.text[pos + "flowlint:".len()..].trim();
+        if body == "hot-path" || body.starts_with("hot-path ") {
+            hot_path_markers.push(c.line);
+            continue;
+        }
+        if let Some(rest) = body.strip_prefix("allow(") {
+            let Some(close) = rest.find(')') else {
+                syntax_errors.push(Diagnostic {
+                    file: file.to_string(),
+                    line: c.line,
+                    rule: RULE_ALLOW_SYNTAX,
+                    message: "unterminated flowlint allow(...)".to_string(),
+                });
+                continue;
+            };
+            let rule = rest[..close].trim().to_string();
+            if !RULES.contains(&rule.as_str()) {
+                syntax_errors.push(Diagnostic {
+                    file: file.to_string(),
+                    line: c.line,
+                    rule: RULE_ALLOW_SYNTAX,
+                    message: format!("unknown rule {rule:?} in allow"),
+                });
+                continue;
+            }
+            let tail = rest[close + 1..].trim();
+            let has_why = match tail.strip_prefix("--") {
+                Some(why) => !why.trim().is_empty(),
+                None => false,
+            };
+            if !has_why {
+                syntax_errors.push(Diagnostic {
+                    file: file.to_string(),
+                    line: c.line,
+                    rule: RULE_ALLOW_SYNTAX,
+                    message: format!(
+                        "allow({rule}) needs a `-- <justification>`"
+                    ),
+                });
+            }
+            let mut targets = vec![c.line];
+            if c.standalone {
+                // Covers the next code line (first token past the
+                // comment line).
+                if let Some(t) =
+                    lexed.tokens.iter().find(|t| t.line > c.line)
+                {
+                    targets.push(t.line);
+                }
+            }
+            allows.push(AllowDirective {
+                line: c.line,
+                targets,
+                rule,
+                has_why,
+            });
+            continue;
+        }
+        syntax_errors.push(Diagnostic {
+            file: file.to_string(),
+            line: c.line,
+            rule: RULE_ALLOW_SYNTAX,
+            message: format!(
+                "unrecognized flowlint directive: {:?}",
+                body.split_whitespace().next().unwrap_or("")
+            ),
+        });
+    }
+    Directives { allows, hot_path_markers, syntax_errors }
+}
+
+impl Directives {
+    /// True when `rule` is allowed (with justification) on `line`.
+    fn allowed(&self, rule: &str, line: usize) -> bool {
+        self.allows.iter().any(|a| {
+            a.has_why && a.rule == rule && a.targets.contains(&line)
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Structure passes: fn spans, #[cfg(test)] mod regions
+// ---------------------------------------------------------------------
+
+#[derive(Debug)]
+struct FnSpan {
+    /// Line of the `fn` keyword.
+    sig_line: usize,
+    /// Token index of the body's opening `{`.
+    body_start: usize,
+    /// Token index of the matching `}`.
+    body_end: usize,
+}
+
+/// Every `fn` with its body token span (brace-matched).
+fn fn_spans(tokens: &[Token]) -> Vec<FnSpan> {
+    let mut spans = Vec::new();
+    let mut i = 0usize;
+    while i < tokens.len() {
+        if tokens[i].tok == Tok::Ident("fn".to_string()) {
+            let sig_line = tokens[i].line;
+            // Find the body's `{`: first `{` after the signature's
+            // parameter list closes (paren/bracket/angle depth 0).
+            let mut j = i + 1;
+            let mut paren = 0i64;
+            let mut body = None;
+            while j < tokens.len() {
+                match tokens[j].tok {
+                    Tok::Punct('(') | Tok::Punct('[') => paren += 1,
+                    Tok::Punct(')') | Tok::Punct(']') => paren -= 1,
+                    Tok::Punct('{') if paren == 0 => {
+                        body = Some(j);
+                        break;
+                    }
+                    // A `;` at depth 0 ends a bodyless fn (trait
+                    // method declaration, extern).
+                    Tok::Punct(';') if paren == 0 => break,
+                    _ => {}
+                }
+                j += 1;
+            }
+            if let Some(start) = body {
+                let end = match_brace(tokens, start);
+                spans.push(FnSpan { sig_line, body_start: start, body_end: end });
+            }
+            i = j.max(i + 1);
+            continue;
+        }
+        i += 1;
+    }
+    spans
+}
+
+/// Index of the `}` matching the `{` at `open` (last token if
+/// unbalanced).
+fn match_brace(tokens: &[Token], open: usize) -> usize {
+    let mut depth = 0i64;
+    for (j, t) in tokens.iter().enumerate().skip(open) {
+        match t.tok {
+            Tok::Punct('{') => depth += 1,
+            Tok::Punct('}') => {
+                depth -= 1;
+                if depth == 0 {
+                    return j;
+                }
+            }
+            _ => {}
+        }
+    }
+    tokens.len().saturating_sub(1)
+}
+
+/// Token ranges of `#[cfg(test)] mod <name> { ... }` bodies.
+fn test_mod_spans(tokens: &[Token]) -> Vec<(usize, usize)> {
+    let mut spans = Vec::new();
+    let mut i = 0usize;
+    while i + 6 < tokens.len() {
+        let is_cfg_test = tokens[i].tok == Tok::Punct('#')
+            && tokens[i + 1].tok == Tok::Punct('[')
+            && tokens[i + 2].tok == Tok::Ident("cfg".to_string())
+            && tokens[i + 3].tok == Tok::Punct('(')
+            && tokens[i + 4].tok == Tok::Ident("test".to_string())
+            && tokens[i + 5].tok == Tok::Punct(')')
+            && tokens[i + 6].tok == Tok::Punct(']');
+        if is_cfg_test {
+            // Allow further attributes between the cfg and the item.
+            let mut j = i + 7;
+            while j < tokens.len() && tokens[j].tok == Tok::Punct('#') {
+                if tokens.get(j + 1).map(|t| &t.tok) == Some(&Tok::Punct('['))
+                {
+                    let mut depth = 0i64;
+                    while j < tokens.len() {
+                        match tokens[j].tok {
+                            Tok::Punct('[') => depth += 1,
+                            Tok::Punct(']') => {
+                                depth -= 1;
+                                if depth == 0 {
+                                    break;
+                                }
+                            }
+                            _ => {}
+                        }
+                        j += 1;
+                    }
+                    j += 1;
+                } else {
+                    break;
+                }
+            }
+            if matches!(&tokens.get(j).map(|t| &t.tok), Some(Tok::Ident(k)) if k == "mod")
+            {
+                // mod <name> { ... }
+                let mut k = j + 1;
+                while k < tokens.len()
+                    && tokens[k].tok != Tok::Punct('{')
+                    && tokens[k].tok != Tok::Punct(';')
+                {
+                    k += 1;
+                }
+                if k < tokens.len() && tokens[k].tok == Tok::Punct('{') {
+                    let end = match_brace(tokens, k);
+                    spans.push((k, end));
+                    i = k + 1;
+                    continue;
+                }
+            }
+        }
+        i += 1;
+    }
+    spans
+}
+
+fn in_spans(spans: &[(usize, usize)], idx: usize) -> bool {
+    spans.iter().any(|&(a, b)| idx >= a && idx <= b)
+}
+
+// ---------------------------------------------------------------------
+// Rule: atomics-ordering
+// ---------------------------------------------------------------------
+
+const ATOMIC_OPS: &[&str] = &[
+    "load",
+    "store",
+    "swap",
+    "fetch_add",
+    "fetch_sub",
+    "fetch_and",
+    "fetch_or",
+    "fetch_xor",
+    "fetch_max",
+    "fetch_min",
+    "fetch_nand",
+    "fetch_update",
+    "compare_exchange",
+    "compare_exchange_weak",
+];
+
+const ORDERINGS: &[&str] =
+    &["Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"];
+
+struct AtomicSite {
+    line: usize,
+    field: String,
+    orderings: Vec<String>,
+}
+
+fn atomic_sites(tokens: &[Token]) -> Vec<AtomicSite> {
+    let mut sites = Vec::new();
+    let mut i = 1usize;
+    while i + 1 < tokens.len() {
+        let is_op = tokens[i - 1].tok == Tok::Punct('.')
+            && matches!(&tokens[i].tok, Tok::Ident(n) if ATOMIC_OPS.contains(&n.as_str()))
+            && tokens[i + 1].tok == Tok::Punct('(');
+        if !is_op {
+            i += 1;
+            continue;
+        }
+        // Receiver: the token before the `.` — a field name, a static,
+        // or a tuple index.  Method chains / index expressions ending
+        // in `)` / `]` give an anonymous receiver; those sites cannot
+        // be grouped and are skipped.
+        let field = match tokens.get(i.wrapping_sub(2)).map(|t| &t.tok) {
+            Some(Tok::Ident(n)) => Some(n.clone()),
+            Some(Tok::Num(n)) => Some(n.clone()),
+            _ => None,
+        };
+        // Collect ordering idents inside the argument list.
+        let mut depth = 0i64;
+        let mut j = i + 1;
+        let mut orderings = Vec::new();
+        while j < tokens.len() {
+            match &tokens[j].tok {
+                Tok::Punct('(') => depth += 1,
+                Tok::Punct(')') => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                Tok::Ident(n) if ORDERINGS.contains(&n.as_str()) => {
+                    orderings.push(n.clone());
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        if let Some(field) = field {
+            if !orderings.is_empty() {
+                sites.push(AtomicSite {
+                    line: tokens[i].line,
+                    field,
+                    orderings,
+                });
+            }
+        }
+        i = j.max(i + 1);
+    }
+    sites
+}
+
+fn check_atomics(
+    file: &str,
+    tokens: &[Token],
+    directives: &Directives,
+    out: &mut Vec<Diagnostic>,
+) {
+    let sites = atomic_sites(tokens);
+    let mut by_field: BTreeMap<&str, Vec<&AtomicSite>> = BTreeMap::new();
+    for s in &sites {
+        by_field.entry(s.field.as_str()).or_default().push(s);
+    }
+    for (field, group) in by_field {
+        let strongest: Vec<&str> = {
+            let mut v: Vec<&str> = group
+                .iter()
+                .flat_map(|s| s.orderings.iter())
+                .filter(|o| o.as_str() != "Relaxed")
+                .map(|o| o.as_str())
+                .collect();
+            v.sort_unstable();
+            v.dedup();
+            v
+        };
+        if strongest.is_empty() {
+            continue; // all-Relaxed field: consistent by construction
+        }
+        for site in group {
+            let relaxed_only =
+                site.orderings.iter().all(|o| o == "Relaxed");
+            if !relaxed_only {
+                continue;
+            }
+            if directives.allowed(RULE_ATOMICS, site.line) {
+                continue;
+            }
+            out.push(Diagnostic {
+                file: file.to_string(),
+                line: site.line,
+                rule: RULE_ATOMICS,
+                message: format!(
+                    "Ordering::Relaxed on `{field}` conflicts with \
+                     {} used on the same field in this file",
+                    strongest.join("/")
+                ),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Rule: lock-discipline
+// ---------------------------------------------------------------------
+
+/// Methods a live guard must never span: actor/caster sends and the
+/// completion-queue timed wait.
+const SEND_METHODS: &[&str] = &[
+    "cast",
+    "try_cast",
+    "call",
+    "call_deferred",
+    "try_call_deferred",
+    "call_into",
+    "broadcast",
+    "broadcast_sync",
+    "pop_timeout",
+];
+
+#[derive(Debug)]
+struct LiveGuard {
+    name: String,
+    /// Brace depth the guard's scope lives at; it dies when the walk
+    /// drops below this depth.
+    depth: i64,
+    line: usize,
+}
+
+fn check_lock_discipline(
+    file: &str,
+    tokens: &[Token],
+    directives: &Directives,
+    out: &mut Vec<Diagnostic>,
+) {
+    let mut guards: Vec<LiveGuard> = Vec::new();
+    let mut depth = 0i64;
+    let mut i = 0usize;
+    while i < tokens.len() {
+        match &tokens[i].tok {
+            Tok::Punct('{') => depth += 1,
+            Tok::Punct('}') => {
+                depth -= 1;
+                guards.retain(|g| g.depth <= depth);
+            }
+            Tok::Ident(kw) if kw == "let" => {
+                if let Some((guard, next)) =
+                    parse_let_lock(tokens, i, depth)
+                {
+                    // Shadowing rebind kills the old guard.
+                    guards.retain(|g| g.name != guard.name);
+                    guards.push(guard);
+                    i = next;
+                    continue;
+                }
+                // A plain `let` rebinding a guard name releases it.
+                if let Some(name) = let_binding_name(tokens, i) {
+                    guards.retain(|g| g.name != name);
+                }
+            }
+            Tok::Ident(kw) if kw == "drop" => {
+                // drop(name)
+                if tokens.get(i + 1).map(|t| &t.tok)
+                    == Some(&Tok::Punct('('))
+                {
+                    if let Some(Tok::Ident(name)) =
+                        tokens.get(i + 2).map(|t| &t.tok)
+                    {
+                        if tokens.get(i + 3).map(|t| &t.tok)
+                            == Some(&Tok::Punct(')'))
+                        {
+                            guards.retain(|g| &g.name != name);
+                        }
+                    }
+                }
+            }
+            Tok::Ident(m)
+                if SEND_METHODS.contains(&m.as_str())
+                    && i > 0
+                    && tokens[i - 1].tok == Tok::Punct('.')
+                    && tokens.get(i + 1).map(|t| &t.tok)
+                        == Some(&Tok::Punct('(')) =>
+            {
+                if !guards.is_empty() {
+                    let line = tokens[i].line;
+                    if !directives.allowed(RULE_LOCK, line) {
+                        let held: Vec<String> = guards
+                            .iter()
+                            .map(|g| {
+                                format!("`{}` (line {})", g.name, g.line)
+                            })
+                            .collect();
+                        out.push(Diagnostic {
+                            file: file.to_string(),
+                            line,
+                            rule: RULE_LOCK,
+                            message: format!(
+                                ".{m}() with lock guard {} still live",
+                                held.join(", ")
+                            ),
+                        });
+                    }
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+}
+
+/// Last plain ident of the binding pattern between `let` and `=`
+/// (`let mut cells` -> `cells`, `if let Ok(mut g)` is entered at its
+/// `let`).  `None` when no `=` closes the pattern nearby.
+fn let_binding_name(tokens: &[Token], let_idx: usize) -> Option<String> {
+    let mut name = None;
+    let mut j = let_idx + 1;
+    while j < tokens.len() {
+        match &tokens[j].tok {
+            Tok::Punct('=') => return name,
+            Tok::Punct(';') | Tok::Punct('{') => return None,
+            Tok::Ident(n)
+                if n != "mut" && n != "ref" && n != "else" =>
+            {
+                name = Some(n.clone());
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    None
+}
+
+/// Parse `let <pat> = <expr-with-.lock(>` starting at `let_idx`.
+/// Returns the guard plus the token index to resume at (the statement
+/// terminator), or `None` when the initializer takes no lock.
+fn parse_let_lock(
+    tokens: &[Token],
+    let_idx: usize,
+    depth: i64,
+) -> Option<(LiveGuard, usize)> {
+    let name = let_binding_name(tokens, let_idx)?;
+    // Find the `=`.
+    let mut j = let_idx + 1;
+    while j < tokens.len() && tokens[j].tok != Tok::Punct('=') {
+        if matches!(tokens[j].tok, Tok::Punct(';') | Tok::Punct('{')) {
+            return None;
+        }
+        j += 1;
+    }
+    // Scan the initializer to its terminator: `;` at nesting 0 for a
+    // plain let, `{` at nesting 0 for `if/while let`.
+    let mut nest = 0i64;
+    let mut has_lock = false;
+    let mut k = j + 1;
+    let mut if_let = false;
+    while k < tokens.len() {
+        match &tokens[k].tok {
+            Tok::Punct('(') | Tok::Punct('[') => nest += 1,
+            Tok::Punct(')') | Tok::Punct(']') => nest -= 1,
+            Tok::Punct(';') if nest == 0 => break,
+            Tok::Punct('{') if nest == 0 => {
+                if_let = true;
+                break;
+            }
+            Tok::Ident(m)
+                if m == "lock"
+                    && k > 0
+                    && tokens[k - 1].tok == Tok::Punct('.')
+                    && tokens.get(k + 1).map(|t| &t.tok)
+                        == Some(&Tok::Punct('(')) =>
+            {
+                has_lock = true;
+            }
+            _ => {}
+        }
+        k += 1;
+    }
+    if !has_lock {
+        return None;
+    }
+    // An `if let`'s guard lives inside the following block only.
+    let guard_depth = if if_let { depth + 1 } else { depth };
+    Some((
+        LiveGuard { name, depth: guard_depth, line: tokens[let_idx].line },
+        k,
+    ))
+}
+
+// ---------------------------------------------------------------------
+// Rule: hot-path-alloc
+// ---------------------------------------------------------------------
+
+fn check_hot_path(
+    file: &str,
+    tokens: &[Token],
+    directives: &Directives,
+    out: &mut Vec<Diagnostic>,
+) {
+    if directives.hot_path_markers.is_empty() {
+        return;
+    }
+    let spans = fn_spans(tokens);
+    for &marker in &directives.hot_path_markers {
+        // The marked fn: first fn signature at or past the marker line.
+        let Some(span) = spans
+            .iter()
+            .filter(|s| s.sig_line >= marker)
+            .min_by_key(|s| s.sig_line)
+        else {
+            out.push(Diagnostic {
+                file: file.to_string(),
+                line: marker,
+                rule: RULE_HOT_PATH,
+                message: "hot-path marker with no following fn"
+                    .to_string(),
+            });
+            continue;
+        };
+        scan_alloc_tokens(file, tokens, span, directives, out);
+    }
+}
+
+fn scan_alloc_tokens(
+    file: &str,
+    tokens: &[Token],
+    span: &FnSpan,
+    directives: &Directives,
+    out: &mut Vec<Diagnostic>,
+) {
+    let mut report = |line: usize, what: &str| {
+        if !directives.allowed(RULE_HOT_PATH, line) {
+            out.push(Diagnostic {
+                file: file.to_string(),
+                line,
+                rule: RULE_HOT_PATH,
+                message: format!(
+                    "{what} inside a `// flowlint: hot-path` function"
+                ),
+            });
+        }
+    };
+    let toks = &tokens[span.body_start..=span.body_end.min(tokens.len() - 1)];
+    let mut i = 0usize;
+    while i < toks.len() {
+        let line = toks[i].line;
+        match &toks[i].tok {
+            Tok::Ident(n) if n == "Vec" || n == "Box" || n == "String" => {
+                // Vec::new / Box::new / String::new / String::from
+                if toks.get(i + 1).map(|t| &t.tok) == Some(&Tok::Punct(':'))
+                    && toks.get(i + 2).map(|t| &t.tok)
+                        == Some(&Tok::Punct(':'))
+                {
+                    if let Some(Tok::Ident(m)) =
+                        toks.get(i + 3).map(|t| &t.tok)
+                    {
+                        if m == "new" || (n == "String" && m == "from") {
+                            report(line, &format!("{n}::{m}"));
+                            i += 4;
+                            continue;
+                        }
+                    }
+                }
+            }
+            Tok::Ident(n) if n == "vec" || n == "format" => {
+                if toks.get(i + 1).map(|t| &t.tok) == Some(&Tok::Punct('!'))
+                {
+                    report(line, &format!("{n}!"));
+                    i += 2;
+                    continue;
+                }
+            }
+            Tok::Ident(n)
+                if (n == "to_vec" || n == "to_string" || n == "clone")
+                    && i > 0
+                    && toks[i - 1].tok == Tok::Punct('.')
+                    && toks.get(i + 1).map(|t| &t.tok)
+                        == Some(&Tok::Punct('(')) =>
+            {
+                // `.clone()` only with an empty argument list; to_vec /
+                // to_string always.
+                let flag = if n == "clone" {
+                    toks.get(i + 2).map(|t| &t.tok)
+                        == Some(&Tok::Punct(')'))
+                } else {
+                    true
+                };
+                if flag {
+                    report(line, &format!(".{n}()"));
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+}
+
+// ---------------------------------------------------------------------
+// Rule: failpoint-coverage
+// ---------------------------------------------------------------------
+
+/// Send tokens that must sit behind a `faults::` failpoint when they
+/// appear in `actor/` (outside the fault plane and the mailbox
+/// primitive itself).
+const RAW_SEND_METHODS: &[&str] =
+    &["send", "try_send", "cast", "try_cast"];
+
+fn check_failpoint_coverage(
+    file: &str,
+    tokens: &[Token],
+    directives: &Directives,
+    out: &mut Vec<Diagnostic>,
+) {
+    let base = file.rsplit('/').next().unwrap_or(file);
+    let in_actor = file.starts_with("actor/") || file == "actor.rs";
+    // mailbox.rs implements the send primitive; faults.rs is the
+    // plane itself; tags.rs holds no sends.
+    if !in_actor || base == "mailbox.rs" || base == "faults.rs" {
+        return;
+    }
+    let spans = fn_spans(tokens);
+    let tests = test_mod_spans(tokens);
+    for i in 1..tokens.len() {
+        let is_send = tokens[i - 1].tok == Tok::Punct('.')
+            && matches!(&tokens[i].tok, Tok::Ident(n) if RAW_SEND_METHODS.contains(&n.as_str()))
+            && tokens.get(i + 1).map(|t| &t.tok) == Some(&Tok::Punct('('));
+        if !is_send || in_spans(&tests, i) {
+            continue;
+        }
+        // Innermost enclosing fn.
+        let Some(span) = spans
+            .iter()
+            .filter(|s| s.body_start <= i && i <= s.body_end)
+            .min_by_key(|s| s.body_end - s.body_start)
+        else {
+            continue;
+        };
+        // A `faults::` path anywhere earlier in the same fn counts as
+        // the gate (the failpoint precedes the send on every path the
+        // runtime uses; finer flow analysis is not worth a parser).
+        let gated = (span.body_start..i).any(|j| {
+            matches!(&tokens[j].tok, Tok::Ident(n) if n == "faults")
+                && tokens.get(j + 1).map(|t| &t.tok)
+                    == Some(&Tok::Punct(':'))
+                && tokens.get(j + 2).map(|t| &t.tok)
+                    == Some(&Tok::Punct(':'))
+        });
+        if gated {
+            continue;
+        }
+        let line = tokens[i].line;
+        if directives.allowed(RULE_FAILPOINT, line) {
+            continue;
+        }
+        let m = match &tokens[i].tok {
+            Tok::Ident(n) => n.clone(),
+            _ => unreachable!(),
+        };
+        out.push(Diagnostic {
+            file: file.to_string(),
+            line,
+            rule: RULE_FAILPOINT,
+            message: format!(
+                ".{m}() send site without a faults:: failpoint in the \
+                 same function"
+            ),
+        });
+    }
+}
+
+// ---------------------------------------------------------------------
+// Rule: epoch-tag
+// ---------------------------------------------------------------------
+
+/// The one file allowed to do tag-shift arithmetic.
+pub const TAGS_FILE: &str = "actor/tags.rs";
+
+fn check_epoch_tag(
+    file: &str,
+    tokens: &[Token],
+    directives: &Directives,
+    out: &mut Vec<Diagnostic>,
+) {
+    if file == TAGS_FILE {
+        return;
+    }
+    for i in 2..tokens.len() {
+        let shift = (tokens[i - 2].tok == Tok::Punct('<')
+            && tokens[i - 1].tok == Tok::Punct('<'))
+            || (tokens[i - 2].tok == Tok::Punct('>')
+                && tokens[i - 1].tok == Tok::Punct('>'));
+        if !shift {
+            continue;
+        }
+        let operand = match &tokens[i].tok {
+            Tok::Num(n) if n == "16" => "16",
+            Tok::Ident(n) if n == "EPOCH_SHIFT" => "EPOCH_SHIFT",
+            _ => continue,
+        };
+        let line = tokens[i].line;
+        if directives.allowed(RULE_EPOCH_TAG, line) {
+            continue;
+        }
+        out.push(Diagnostic {
+            file: file.to_string(),
+            line,
+            rule: RULE_EPOCH_TAG,
+            message: format!(
+                "manual tag arithmetic (shift by {operand}); use \
+                 actor::tags::{{encode_tag, decode_tag}}"
+            ),
+        });
+    }
+}
+
+// ---------------------------------------------------------------------
+// Entry points
+// ---------------------------------------------------------------------
+
+/// Lint one file's source.  `rel_path` is the path relative to the
+/// lint root (e.g. `actor/registry.rs`) — it selects the per-file rule
+/// scoping (failpoint coverage in `actor/`, the tags-file exemption).
+pub fn lint_file_content(rel_path: &str, src: &str) -> Vec<Diagnostic> {
+    let rel = rel_path.replace('\\', "/");
+    let lexed = lex(src);
+    let directives = parse_directives(&rel, &lexed);
+    let mut out = Vec::new();
+    out.extend(directives.syntax_errors.iter().cloned());
+    check_atomics(&rel, &lexed.tokens, &directives, &mut out);
+    check_lock_discipline(&rel, &lexed.tokens, &directives, &mut out);
+    check_hot_path(&rel, &lexed.tokens, &directives, &mut out);
+    check_failpoint_coverage(&rel, &lexed.tokens, &directives, &mut out);
+    check_epoch_tag(&rel, &lexed.tokens, &directives, &mut out);
+    out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    out
+}
+
+/// Recursively lint every `.rs` file under `root`, returning
+/// diagnostics with root-relative paths.
+pub fn lint_tree(
+    root: &std::path::Path,
+) -> std::io::Result<Vec<Diagnostic>> {
+    let mut files = Vec::new();
+    collect_rs_files(root, &mut files)?;
+    files.sort();
+    let mut out = Vec::new();
+    for f in files {
+        let rel = f
+            .strip_prefix(root)
+            .unwrap_or(&f)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = std::fs::read_to_string(&f)?;
+        out.extend(lint_file_content(&rel, &src));
+    }
+    Ok(out)
+}
+
+fn collect_rs_files(
+    dir: &std::path::Path,
+    out: &mut Vec<std::path::PathBuf>,
+) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Render diagnostics as a JSON array (machine-readable `--json` mode;
+/// hand-rolled — no serde in an offline build).
+pub fn to_json(diags: &[Diagnostic]) -> String {
+    let mut s = String::from("[");
+    for (i, d) in diags.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!(
+            "\n  {{\"file\": {}, \"line\": {}, \"rule\": {}, \
+             \"message\": {}}}",
+            json_str(&d.file),
+            d.line,
+            json_str(d.rule),
+            json_str(&d.message)
+        ));
+    }
+    if !diags.is_empty() {
+        s.push('\n');
+    }
+    s.push(']');
+    s
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32))
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}

@@ -1,0 +1,66 @@
+//! flowlint CLI.
+//!
+//! ```text
+//! flowlint [--json] [ROOT]
+//! ```
+//!
+//! Lints every `.rs` file under ROOT (default: `rust/src`, resolved
+//! against the current directory).  Exit codes: 0 = clean, 1 = at
+//! least one non-allowed violation, 2 = usage or I/O error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut json = false;
+    let mut root: Option<PathBuf> = None;
+    for arg in std::env::args().skip(1) {
+        match arg.as_str() {
+            "--json" => json = true,
+            "--help" | "-h" => {
+                eprintln!("usage: flowlint [--json] [ROOT]");
+                return ExitCode::from(0);
+            }
+            a if a.starts_with('-') => {
+                eprintln!("flowlint: unknown flag {a:?}");
+                return ExitCode::from(2);
+            }
+            a => {
+                if root.is_some() {
+                    eprintln!("flowlint: more than one ROOT given");
+                    return ExitCode::from(2);
+                }
+                root = Some(PathBuf::from(a));
+            }
+        }
+    }
+    let root = root.unwrap_or_else(|| PathBuf::from("rust/src"));
+    if !root.is_dir() {
+        eprintln!("flowlint: {} is not a directory", root.display());
+        return ExitCode::from(2);
+    }
+    let diags = match flowlint::lint_tree(&root) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("flowlint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    if json {
+        println!("{}", flowlint::to_json(&diags));
+    } else {
+        for d in &diags {
+            println!("{d}");
+        }
+        if diags.is_empty() {
+            eprintln!("flowlint: clean ({})", root.display());
+        } else {
+            eprintln!("flowlint: {} violation(s)", diags.len());
+        }
+    }
+    if diags.is_empty() {
+        ExitCode::from(0)
+    } else {
+        ExitCode::from(1)
+    }
+}

@@ -1,0 +1,10 @@
+// Fixture: malformed flowlint directives are themselves violations.
+
+// flowlint: allow(atomics-ordering)
+pub fn missing_why() {}
+
+// flowlint: allow(no-such-rule) -- whatever
+pub fn unknown_rule() {}
+
+// flowlint: allwo(epoch-tag) -- typo
+pub fn typo_directive() {}

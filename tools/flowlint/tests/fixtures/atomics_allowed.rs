@@ -1,0 +1,18 @@
+// Fixture: the Relaxed site carries a justified allow, so the mixed
+// group lints clean.
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub struct Registry {
+    version: AtomicU64,
+}
+
+impl Registry {
+    pub fn publish(&self) {
+        self.version.fetch_add(1, Ordering::SeqCst);
+    }
+
+    pub fn stats(&self) -> u64 {
+        // flowlint: allow(atomics-ordering) -- monotonic gauge read; staleness is acceptable
+        self.version.load(Ordering::Relaxed)
+    }
+}

@@ -1,0 +1,17 @@
+// Fixture: an all-Relaxed counter field is self-consistent and needs
+// no annotation.
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub struct Counters {
+    hits: AtomicU64,
+}
+
+impl Counters {
+    pub fn bump(&self) {
+        self.hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+}

@@ -1,0 +1,16 @@
+// Fixture: mixed orderings on the same field without an allow.
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub struct Registry {
+    version: AtomicU64,
+}
+
+impl Registry {
+    pub fn publish(&self) {
+        self.version.fetch_add(1, Ordering::SeqCst);
+    }
+
+    pub fn stats(&self) -> u64 {
+        self.version.load(Ordering::Relaxed)
+    }
+}

@@ -1,0 +1,5 @@
+// Fixture: a shift by 16 that is not a completion tag, justified.
+pub fn spread(seed: u64, i: u64) -> u64 {
+    // flowlint: allow(epoch-tag) -- rng seed spreading, not a completion tag
+    seed.wrapping_add(i << 16)
+}

@@ -1,0 +1,8 @@
+// Fixture: manual completion-tag arithmetic outside actor/tags.rs.
+pub fn tag(epoch: u64, shard: u64) -> u64 {
+    (epoch << 16) | shard
+}
+
+pub fn untag(tag: u64) -> u64 {
+    tag >> EPOCH_SHIFT
+}

@@ -1,0 +1,9 @@
+// Fixture: a raw send in actor/ without a faults:: gate (linted under
+// the rel path `actor/failpoint_violation.rs`).
+impl Handle {
+    pub fn cast_unguarded(&self, msg: u32) {
+        if let Err(e) = self.shared.try_send(msg) {
+            drop(e);
+        }
+    }
+}

@@ -1,0 +1,8 @@
+// Fixture: a justified allocation-shaped token inside a hot-path fn.
+
+// flowlint: hot-path
+pub fn forward(handle: &Handle) {
+    // flowlint: allow(hot-path-alloc) -- Arc clone is a refcount bump, not a heap allocation
+    let h = handle.clone();
+    h.poke();
+}

@@ -1,0 +1,14 @@
+// Fixture: allocation tokens inside a hot-path function.
+
+// flowlint: hot-path
+pub fn tick(xs: &[u32]) -> Vec<u32> {
+    let mut out = Vec::new();
+    let label = format!("{}", xs.len());
+    drop(label);
+    out.extend_from_slice(xs);
+    out
+}
+
+pub fn cold(xs: &[u32]) -> Vec<u32> {
+    xs.to_vec()
+}

@@ -1,0 +1,15 @@
+// Fixture: guard scoped out (or explicitly dropped) before the send.
+pub fn publish(state: &std::sync::Mutex<Vec<u32>>, handle: &Handle) {
+    let len = {
+        let guard = state.lock().unwrap();
+        guard.len()
+    };
+    handle.cast(len);
+}
+
+pub fn publish_dropped(state: &std::sync::Mutex<u32>, handle: &Handle) {
+    let guard = state.lock().unwrap();
+    let v = *guard;
+    drop(guard);
+    handle.cast(v);
+}

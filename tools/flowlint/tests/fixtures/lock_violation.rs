@@ -1,0 +1,11 @@
+// Fixture: a MutexGuard live across an actor send.
+pub fn publish(state: &std::sync::Mutex<Vec<u32>>, handle: &Handle) {
+    let guard = state.lock().unwrap();
+    handle.cast(guard.len());
+}
+
+pub fn wait_under_lock(state: &std::sync::Mutex<u32>, cq: &Queue) {
+    let mut g = state.lock().unwrap();
+    let done = cq.pop_timeout(100);
+    *g += done;
+}

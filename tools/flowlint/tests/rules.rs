@@ -1,0 +1,210 @@
+//! Fixture-based pinning tests: each rule's true-positive lines, its
+//! clean counterpart, and its allow-comment behavior.  The Python
+//! mirror (`mirror.py`) is held to the same expectations by
+//! `tools/ci.sh --lint`, which runs whichever implementation the
+//! environment can execute.
+
+use flowlint::{lint_file_content, Diagnostic};
+
+fn fixture(name: &str) -> String {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures")
+        .join(name);
+    std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("read {}: {e}", path.display()))
+}
+
+/// Lint a fixture under an explicit root-relative path (the path
+/// selects per-file scoping: `actor/` for failpoint coverage).
+fn lint(rel: &str, name: &str) -> Vec<Diagnostic> {
+    lint_file_content(rel, &fixture(name))
+}
+
+fn rule_lines(diags: &[Diagnostic]) -> Vec<(&'static str, usize)> {
+    diags.iter().map(|d| (d.rule, d.line)).collect()
+}
+
+// ---------------------------------------------------------------- atomics
+
+#[test]
+fn atomics_mixed_ordering_is_flagged_at_the_relaxed_site() {
+    let diags = lint("atomics_violation.rs", "atomics_violation.rs");
+    assert_eq!(rule_lines(&diags), vec![("atomics-ordering", 14)]);
+    assert!(
+        diags[0].message.contains("`version`")
+            && diags[0].message.contains("SeqCst"),
+        "message names the field and the conflicting ordering: {}",
+        diags[0].message
+    );
+}
+
+#[test]
+fn atomics_allow_with_justification_suppresses() {
+    assert_eq!(lint("atomics_allowed.rs", "atomics_allowed.rs"), vec![]);
+}
+
+#[test]
+fn atomics_all_relaxed_counter_group_is_clean() {
+    assert_eq!(lint("atomics_clean.rs", "atomics_clean.rs"), vec![]);
+}
+
+// ------------------------------------------------------------------- lock
+
+#[test]
+fn lock_guard_across_send_and_pop_timeout_is_flagged() {
+    let diags = lint("lock_violation.rs", "lock_violation.rs");
+    assert_eq!(
+        rule_lines(&diags),
+        vec![("lock-discipline", 4), ("lock-discipline", 9)]
+    );
+    assert!(diags[0].message.contains("`guard` (line 3)"));
+    assert!(diags[1].message.contains(".pop_timeout()"));
+}
+
+#[test]
+fn lock_guard_scoped_out_or_dropped_is_clean() {
+    assert_eq!(lint("lock_clean.rs", "lock_clean.rs"), vec![]);
+}
+
+// --------------------------------------------------------------- hot-path
+
+#[test]
+fn hot_path_alloc_tokens_are_flagged_only_in_marked_fn() {
+    let diags = lint("hotpath_violation.rs", "hotpath_violation.rs");
+    // `cold()` below the marked fn uses .to_vec() freely.
+    assert_eq!(
+        rule_lines(&diags),
+        vec![("hot-path-alloc", 5), ("hot-path-alloc", 6)]
+    );
+    assert!(diags[0].message.contains("Vec::new"));
+    assert!(diags[1].message.contains("format!"));
+}
+
+#[test]
+fn hot_path_allow_covers_the_next_code_line() {
+    assert_eq!(lint("hotpath_allowed.rs", "hotpath_allowed.rs"), vec![]);
+}
+
+// -------------------------------------------------------------- failpoint
+
+#[test]
+fn failpoint_ungated_send_in_actor_is_flagged() {
+    let diags =
+        lint("actor/failpoint_violation.rs", "failpoint_violation.rs");
+    assert_eq!(rule_lines(&diags), vec![("failpoint-coverage", 5)]);
+    assert!(diags[0].message.contains(".try_send()"));
+}
+
+#[test]
+fn failpoint_gated_send_and_test_mod_sends_are_clean() {
+    assert_eq!(
+        lint("actor/failpoint_clean.rs", "failpoint_clean.rs"),
+        vec![]
+    );
+}
+
+#[test]
+fn failpoint_rule_is_scoped_to_actor_paths() {
+    // The same ungated send outside actor/ is not this rule's business.
+    assert_eq!(
+        lint("ops/failpoint_violation.rs", "failpoint_violation.rs"),
+        vec![]
+    );
+}
+
+// -------------------------------------------------------------- epoch-tag
+
+#[test]
+fn epoch_manual_shifts_are_flagged() {
+    let diags = lint("epoch_violation.rs", "epoch_violation.rs");
+    assert_eq!(
+        rule_lines(&diags),
+        vec![("epoch-tag", 3), ("epoch-tag", 7)]
+    );
+    assert!(diags[0].message.contains("shift by 16"));
+    assert!(diags[1].message.contains("shift by EPOCH_SHIFT"));
+}
+
+#[test]
+fn epoch_allow_and_tags_file_exemption() {
+    assert_eq!(lint("epoch_allowed.rs", "epoch_allowed.rs"), vec![]);
+    // tags.rs itself is the one place tag arithmetic is legal.
+    assert_eq!(
+        lint(flowlint::TAGS_FILE, "epoch_violation.rs"),
+        vec![]
+    );
+}
+
+// ----------------------------------------------------------- allow-syntax
+
+#[test]
+fn malformed_directives_are_violations_themselves() {
+    let diags = lint("allow_syntax.rs", "allow_syntax.rs");
+    assert_eq!(
+        rule_lines(&diags),
+        vec![
+            ("allow-syntax", 3),
+            ("allow-syntax", 6),
+            ("allow-syntax", 9),
+        ]
+    );
+    assert!(diags[0].message.contains("needs a `-- <justification>`"));
+    assert!(diags[1].message.contains("unknown rule"));
+    assert!(diags[2].message.contains("unrecognized flowlint directive"));
+}
+
+#[test]
+fn allow_without_why_does_not_suppress() {
+    // The unjustified allow on line 3 of allow_syntax.rs must not act
+    // as a waiver: splice the same comment above a real violation.
+    let src = "\
+// flowlint: allow(epoch-tag)
+pub fn tag(e: u64) -> u64 { e << 16 }
+";
+    let diags = lint_file_content("splice.rs", src);
+    assert_eq!(
+        rule_lines(&diags),
+        vec![("allow-syntax", 1), ("epoch-tag", 2)]
+    );
+}
+
+// ------------------------------------------------------------------ lexer
+
+#[test]
+fn backslash_continued_strings_do_not_shift_line_numbers() {
+    // The `\`-escaped newline inside the string still ends a source
+    // line; the violation below it must report its true line.
+    let src = "\
+pub fn msg() -> String {
+    let s = \"spans \\
+             two lines\";
+    s.into()
+}
+
+pub fn tag(e: u64) -> u64 { e << 16 }
+";
+    let diags = flowlint::lint_file_content("splice.rs", src);
+    assert_eq!(rule_lines(&diags), vec![("epoch-tag", 7)]);
+}
+
+// ----------------------------------------------------------------- output
+
+#[test]
+fn diagnostics_render_file_line_rule_message() {
+    let diags = lint("epoch_violation.rs", "epoch_violation.rs");
+    let line = format!("{}", diags[0]);
+    assert!(
+        line.starts_with("epoch_violation.rs:3: epoch-tag: "),
+        "unexpected rendering: {line}"
+    );
+}
+
+#[test]
+fn json_mode_escapes_and_lists_all_fields() {
+    let diags = lint("atomics_violation.rs", "atomics_violation.rs");
+    let json = flowlint::to_json(&diags);
+    assert!(json.contains("\"file\": \"atomics_violation.rs\""));
+    assert!(json.contains("\"line\": 14"));
+    assert!(json.contains("\"rule\": \"atomics-ordering\""));
+    assert!(flowlint::to_json(&[]).trim() == "[]");
+}
